@@ -1,0 +1,134 @@
+//! Ablation studies — Tables 3, 4, and 5 of the paper, regenerated on
+//! the scaled-down substituted benchmark: LeNet-5-BN (3-channel) on
+//! the CIFAR-10-like synthetic set — the build box has a single CPU
+//! core, so the 11 training runs use the LeNet-scale artifacts
+//! (see DESIGN.md §5).
+//!
+//! ```sh
+//! cargo run --release --example ablations -- --study p        # Table 3
+//! cargo run --release --example ablations -- --study kt       # Table 4
+//! cargo run --release --example ablations -- --study methods  # Table 5
+//! cargo run --release --example ablations -- --study all --steps 240
+//! ```
+//!
+//! Paper values are printed alongside for shape comparison (orderings
+//! and deltas, not absolute accuracies — the workload is substituted).
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+use wino_adder::coordinator::{PSchedule, TrainConfig, TrainDriver};
+use wino_adder::data::Preset;
+use wino_adder::runtime::{Engine, Manifest};
+use wino_adder::util::cli::Args;
+use wino_adder::viz;
+
+struct Run {
+    label: &'static str,
+    paper_acc: f64,
+    model: &'static str,
+    schedule: PSchedule,
+    init: Option<&'static str>,
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let study = args.get_or("study", "all").to_string();
+    let steps = args.get_usize("steps", 240) as u64;
+    let preset = Preset::parse(args.get_or("preset", "cifar10"))
+        .ok_or_else(|| anyhow::anyhow!("bad --preset"))?;
+    let manifest = Manifest::load(&PathBuf::from(
+        args.get_or("artifacts", "artifacts")))?;
+    let engine = Engine::cpu()?;
+    let driver = TrainDriver::new(&engine, &manifest);
+
+    if study == "p" || study == "all" {
+        // Table 3: reduction method of p (paper: ResNet-18, CIFAR-10)
+        run_study(&driver, "Table 3 — reduction method of p", steps,
+                  preset, &[
+            Run { label: "training until converge", paper_acc: 89.24,
+                  model: "cifarlenet_wino_adder",
+                  schedule: PSchedule::UntilConverge { phases: 3 },
+                  init: None },
+            Run { label: "reducing during converge, p=1", paper_acc: 90.94,
+                  model: "cifarlenet_wino_adder",
+                  schedule: PSchedule::DuringConverge { events: 1 },
+                  init: None },
+            Run { label: "reducing during converge, p=35", paper_acc: 91.56,
+                  model: "cifarlenet_wino_adder",
+                  schedule: PSchedule::DuringConverge { events: 35 },
+                  init: None },
+            Run { label: "reducing during converge, p=140", paper_acc: 91.44,
+                  model: "cifarlenet_wino_adder",
+                  schedule: PSchedule::DuringConverge { events: 140 },
+                  init: None },
+        ])?;
+    }
+
+    if study == "kt" || study == "all" {
+        // Table 4: kernel-transform handling
+        run_study(&driver, "Table 4 — kernel transformation", steps,
+                  preset, &[
+            Run { label: "training w/ KT", paper_acc: 89.19,
+                  model: "cifarlenet_wino_adder_kt",
+                  schedule: PSchedule::DuringConverge { events: 35 },
+                  init: None },
+            Run { label: "init Winograd kernel", paper_acc: 91.56,
+                  model: "cifarlenet_wino_adder",
+                  schedule: PSchedule::DuringConverge { events: 35 },
+                  init: None },
+            Run { label: "init adder kernel and transform", paper_acc: 91.28,
+                  model: "cifarlenet_wino_adder",
+                  schedule: PSchedule::DuringConverge { events: 35 },
+                  init: Some("cifarlenet_wino_adder_initat") },
+        ])?;
+    }
+
+    if study == "methods" || study == "all" {
+        // Table 5: {modified A} x {l2-to-l1} (paper: CIFAR-10 column)
+        run_study(&driver, "Table 5 — proposed methods", steps,
+                  preset, &[
+            Run { label: "neither (std A, pure l1)", paper_acc: 83.87,
+                  model: "cifarlenet_wino_adder_std",
+                  schedule: PSchedule::Const(1.0),
+                  init: None },
+            Run { label: "l2-to-l1 only (std A)", paper_acc: 88.25,
+                  model: "cifarlenet_wino_adder_std",
+                  schedule: PSchedule::DuringConverge { events: 35 },
+                  init: None },
+            Run { label: "modified A only (pure l1)", paper_acc: 89.25,
+                  model: "cifarlenet_wino_adder",
+                  schedule: PSchedule::Const(1.0),
+                  init: None },
+            Run { label: "both (full method)", paper_acc: 91.56,
+                  model: "cifarlenet_wino_adder",
+                  schedule: PSchedule::DuringConverge { events: 35 },
+                  init: None },
+        ])?;
+    }
+    Ok(())
+}
+
+fn run_study(driver: &TrainDriver, title: &str, steps: u64, preset: Preset,
+             runs: &[Run]) -> Result<()> {
+    println!("\n=== {title} ({steps} steps each, {preset:?}) ===");
+    let mut rows = Vec::new();
+    for r in runs {
+        let mut cfg = TrainConfig::new(r.model, preset, steps);
+        cfg.schedule = r.schedule;
+        cfg.init_override = r.init.map(|s| s.to_string());
+        cfg.lr0 = 0.05;
+        let t0 = std::time::Instant::now();
+        let report = driver.run(&cfg, false)?;
+        println!("  {} -> test acc {:.1}% (loss {:.3}, {:.0}s)",
+                 r.label, 100.0 * report.final_test_acc,
+                 report.final_loss(), t0.elapsed().as_secs_f64());
+        rows.push(vec![
+            r.label.to_string(),
+            format!("{:.1}%", 100.0 * report.final_test_acc),
+            format!("{:.2}%", r.paper_acc),
+        ]);
+    }
+    print!("{}", viz::print_table(&["method", "ours", "paper"], &rows));
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! ```sh
+//! make artifacts          # once: AOT-compile the jax/Pallas graphs
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks through: loading the artifact manifest, running the
+//! Pallas-lowered Winograd-adder layer via PJRT, cross-checking it
+//! against the rust-native implementation, and the analytic op/energy
+//! models.
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+use wino_adder::energy::{figure1, EnergyTable};
+use wino_adder::nn::wino_adder::winograd_adder_conv2d_fast;
+use wino_adder::nn::{matrices::Variant, Tensor};
+use wino_adder::opcount::{count_model, fmt_m, resnet20, Mode};
+use wino_adder::runtime::{Engine, Manifest};
+use wino_adder::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let artifacts = PathBuf::from("artifacts");
+
+    // 1. the AOT artifact manifest (written by `make artifacts`)
+    let manifest = Manifest::load(&artifacts)?;
+    println!("manifest: {} models, {} layer artifacts",
+             manifest.models.len(), manifest.layers.len());
+
+    // 2. run the Pallas-lowered Winograd-AdderNet layer from rust
+    let engine = Engine::cpu()?;
+    let layer = engine.load_layer(manifest.layer("wino_adder_b1")?)?;
+    let mut rng = Rng::new(7);
+    let x = rng.normal_vec(16 * 28 * 28);
+    let w_hat = rng.normal_vec(16 * 16 * 4 * 4);
+    let y = layer.run(&x, &w_hat)?;
+    println!("PJRT wino-adder layer: {} outputs, y[0..4] = {:?}",
+             y.len(), &y[..4]);
+
+    // 3. cross-check against the independent rust-native implementation
+    let xt = Tensor::from_vec(x, [1, 16, 28, 28]);
+    let wt = Tensor::from_vec(w_hat, [16, 16, 4, 4]);
+    let native = winograd_adder_conv2d_fast(&xt, &wt, 1, Variant::Balanced(0));
+    let max_err = y.iter().zip(&native.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!("PJRT vs rust-native max |err| = {max_err:.2e}");
+    assert!(max_err < 1e-2);
+
+    // 4. the analytic models behind Table 1 and Figure 1
+    let layers = resnet20();
+    println!("\nResNet-20 op counts (paper Table 1):");
+    for mode in Mode::ALL {
+        let c = count_model(&layers, mode);
+        println!("  {:<18} #Mul {:>7}  #Add {:>7}",
+                 mode.name(), fmt_m(c.muls), fmt_m(c.adds));
+    }
+    let bars = figure1(&layers, &EnergyTable::fpga_calibrated());
+    println!("\nrelative power (Figure 1): {}",
+             bars.iter()
+                 .map(|b| format!("{} {:.2}", b.mode.name(), b.relative))
+                 .collect::<Vec<_>>()
+                 .join(" | "));
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Serving scenario: batched Winograd-adder inference under an open-loop
+//! load generator, reporting latency percentiles and throughput per
+//! batching policy — the workload the paper's FPGA deployment targets,
+//! served from the AOT Pallas artifacts on CPU PJRT.
+//!
+//! ```sh
+//! cargo run --release --example serve_inference -- --requests 512
+//! ```
+
+use anyhow::Result;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use wino_adder::coordinator::batcher::BatchPolicy;
+use wino_adder::coordinator::server::Server;
+use wino_adder::util::cli::Args;
+use wino_adder::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let n = args.get_usize("requests", 512);
+    let clients = args.get_usize("clients", 8);
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let sample = 16 * 28 * 28;
+
+    println!("=== serving scenario: {n} requests, {clients} concurrent \
+              clients ===\n");
+    let mut results = Vec::new();
+    for (label, policy) in [
+        ("no batching (bucket 1 only)",
+         BatchPolicy { buckets: vec![1], max_wait_us: 0 }),
+        ("dynamic batching 1/4/16, 2ms max wait",
+         BatchPolicy { buckets: vec![1, 4, 16], max_wait_us: 2_000 }),
+        ("dynamic batching 1/4/16, 10ms max wait",
+         BatchPolicy { buckets: vec![1, 4, 16], max_wait_us: 10_000 }),
+    ] {
+        let (handle, join) = Server::start(artifacts.clone(), policy)?;
+        // warmup: compile-and-run every bucket once
+        for _ in 0..4 {
+            let mut rng = Rng::new(99);
+            handle.infer(rng.normal_vec(sample))?;
+        }
+        let t0 = Instant::now();
+        let mut threads = Vec::new();
+        for c in 0..clients {
+            let h = handle.clone();
+            let mut rng = Rng::new(c as u64);
+            let xs: Vec<Vec<f32>> =
+                (0..n / clients).map(|_| rng.normal_vec(sample)).collect();
+            threads.push(std::thread::spawn(move || {
+                for x in xs {
+                    h.infer(x).expect("infer");
+                }
+            }));
+        }
+        for t in threads {
+            t.join().map_err(|_| anyhow::anyhow!("client panicked"))?;
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let stats = handle.stop()?;
+        join.join().map_err(|_| anyhow::anyhow!("engine panicked"))?;
+        let served = (n / clients * clients) as f64;
+        println!("{label}:");
+        println!("  {:.0} req/s | {} | per-bucket {:?}",
+                 served / elapsed, stats.latency_summary,
+                 stats.per_bucket);
+        results.push((label, served / elapsed, stats.p50_us));
+    }
+
+    println!("\n=== summary ===");
+    for (label, rps, p50) in &results {
+        println!("  {label}: {rps:.0} req/s, p50 {p50}us");
+    }
+    let no_batch = results[0].1;
+    let batched = results[1].1.max(results[2].1);
+    println!("\nbatching speedup: {:.2}x", batched / no_batch);
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! End-to-end validation driver (DESIGN.md §3, Figure 2 analogue).
+//!
+//! Trains a real model through the full three-layer stack — rust
+//! coordinator -> AOT HLO train-step (jax custom-vjp adder gradients)
+//! -> PJRT CPU — on a synthetic dataset, logging the loss/accuracy
+//! curve, the l2-to-l1 exponent, and the adder-weight norm trajectory
+//! (Figure 5's statistic). Results land in `results/`.
+//!
+//! ```sh
+//! cargo run --release --example train_end_to_end            # mnist preset
+//! cargo run --release --example train_end_to_end -- --preset imagenet-lite \
+//!     --model resnet20_wino_adder --steps 400
+//! ```
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+use wino_adder::coordinator::{PSchedule, TrainConfig, TrainDriver};
+use wino_adder::data::Preset;
+use wino_adder::runtime::{Engine, Manifest};
+use wino_adder::util::cli::Args;
+use wino_adder::util::io;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let preset_name = args.get_or("preset", "mnist");
+    let preset = Preset::parse(preset_name)
+        .ok_or_else(|| anyhow::anyhow!("bad --preset"))?;
+    let default_model = match preset {
+        Preset::MnistLike => "lenet_wino_adder",
+        Preset::ImagenetLite => "cifarlenet_wino_adder",
+        _ => "cifarlenet_wino_adder",
+    };
+    let model = args.get_or("model", default_model).to_string();
+    let steps = args.get_usize("steps", 400) as u64;
+
+    let manifest = Manifest::load(&PathBuf::from(
+        args.get_or("artifacts", "artifacts")))?;
+    let engine = Engine::cpu()?;
+    let driver = TrainDriver::new(&engine, &manifest);
+
+    let mut cfg = TrainConfig::new(&model, preset, steps);
+    cfg.lr0 = args.get_f64("lr", 0.05) as f32;
+    cfg.schedule = PSchedule::DuringConverge { events: 35 };
+    cfg.eval_every = (steps / 4).max(1);
+
+    println!("=== end-to-end training: {model} on {preset_name} for \
+              {steps} steps ===");
+    let t0 = std::time::Instant::now();
+    let report = driver.run(&cfg, true)?;
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    std::fs::create_dir_all("results")?;
+    let curve: Vec<Vec<f64>> = report.history.iter()
+        .map(|r| vec![r.step as f64, r.p as f64, r.lr as f64,
+                      r.loss as f64, r.acc as f64])
+        .collect();
+    let curve_path = format!("results/e2e_{model}_{preset_name}.csv");
+    io::write_csv(&PathBuf::from(&curve_path),
+                  &["step", "p", "lr", "loss", "acc"], &curve)?;
+    let wcurve: Vec<Vec<f64>> = report.weights.iter()
+        .map(|r| vec![r.step as f64, r.mean_abs_adder_w as f64])
+        .collect();
+    let w_path = format!("results/e2e_{model}_{preset_name}_weights.csv");
+    io::write_csv(&PathBuf::from(&w_path),
+                  &["step", "mean_abs_adder_w"], &wcurve)?;
+
+    let first = report.history.first().unwrap();
+    let last = report.history.last().unwrap();
+    println!("\n=== summary ===");
+    println!("steps/s: {:.2} ({elapsed:.0}s total)",
+             steps as f64 / elapsed);
+    println!("loss: {:.4} -> {:.4} (smoothed {:.4})",
+             first.loss, last.loss, report.final_loss());
+    println!("train acc: {:.3} -> {:.3}", first.acc, last.acc);
+    println!("test acc: {:.3}", report.final_test_acc);
+    println!("p: {:.2} -> {:.2}", first.p, last.p);
+    println!("eval history: {:?}",
+             report.evals.iter()
+                 .map(|(s, a)| format!("{s}:{a:.3}"))
+                 .collect::<Vec<_>>());
+    println!("curves: {curve_path}, {w_path}");
+
+    anyhow::ensure!(report.final_loss() < first.loss * 0.8,
+                    "training did not reduce the loss");
+    anyhow::ensure!(report.final_test_acc > 0.2,
+                    "test accuracy below sanity threshold");
+    println!("\ne2e OK — all three layers compose");
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Figures 3 & 4: t-SNE of last-adder-layer features (Winograd vs
+//! original AdderNet) and the grid-artifact heatmaps (std vs balanced A).
+//!
+//! ```sh
+//! cargo run --release --example visualize              # both figures
+//! cargo run --release --example visualize -- --figure 3
+//! cargo run --release --example visualize -- --figure 4
+//! ```
+//! CSV outputs land in `results/` for external plotting.
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+use wino_adder::coordinator::{TrainConfig, TrainDriver};
+use wino_adder::data::{Dataset, Preset, Split};
+use wino_adder::nn::wino_adder::winograd_adder_conv2d_fast;
+use wino_adder::nn::{matrices::Variant, Tensor};
+use wino_adder::runtime::{Engine, Manifest};
+use wino_adder::util::cli::Args;
+use wino_adder::util::{io, rng::Rng};
+use wino_adder::{tsne, viz};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let figure = args.get_or("figure", "all").to_string();
+    std::fs::create_dir_all("results")?;
+    if figure == "3" || figure == "all" {
+        figure3(&args)?;
+    }
+    if figure == "4" || figure == "all" {
+        figure4(&args)?;
+    }
+    Ok(())
+}
+
+/// Figure 3: t-SNE embeddings of LeNet features, Winograd-adder vs
+/// original adder — the claim is the two clouds look alike (the
+/// Winograd form learns equivalent features).
+fn figure3(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&PathBuf::from(
+        args.get_or("artifacts", "artifacts")))?;
+    let engine = Engine::cpu()?;
+    println!("=== Figure 3: t-SNE of last-adder-layer features ===\n");
+    let mut ratios = Vec::new();
+    let driver = TrainDriver::new(&engine, &manifest);
+    for model in ["lenet_wino_adder", "lenet_adder"] {
+        // Figure 3 embeds *trained* features: train briefly first
+        let steps = args.get_usize("train-steps", 250) as u64;
+        let cfg = TrainConfig::new(model, Preset::MnistLike, steps);
+        let (report, rt) = driver.run_returning_runtime(&cfg, false)?;
+        println!("{model}: trained {steps} steps, test acc {:.3}",
+                 report.final_test_acc);
+        let ds = Dataset::new(Preset::MnistLike,
+                              rt.entry.config.image_size, 5);
+        let batch = ds.batch(Split::Test, 0, rt.entry.eval_batch);
+        let (_, feats) = rt.eval(&batch.images)?;
+        let d = feats.len() / batch.n;
+        let cfg = tsne::TsneConfig {
+            iters: args.get_usize("iters", 300),
+            ..Default::default()
+        };
+        let (y, kl) = tsne::tsne(&feats, batch.n, d, &cfg);
+        let ratio = tsne::cluster_ratio(&y, &batch.labels);
+        ratios.push(ratio);
+        println!("{model}: KL {kl:.3}, cluster ratio {ratio:.3}");
+        print!("{}", viz::ascii_scatter(&y, &batch.labels, 22, 64));
+        let rows: Vec<Vec<f64>> = (0..batch.n)
+            .map(|i| vec![y[i * 2] as f64, y[i * 2 + 1] as f64,
+                          batch.labels[i] as f64])
+            .collect();
+        io::write_csv(&PathBuf::from(format!("results/tsne_{model}.csv")),
+                      &["x", "y", "label"], &rows)?;
+        println!();
+    }
+    println!("paper claim: the two embeddings are structurally similar \
+              (cluster ratios: {:.3} vs {:.3})\n",
+             ratios[0], ratios[1]);
+    Ok(())
+}
+
+/// Figure 4: per-phase output magnitudes, std A vs balanced A_0 —
+/// the std matrix shows a 2x2 grid artifact, the modified one doesn't.
+fn figure4(args: &Args) -> Result<()> {
+    println!("=== Figure 4: grid artifact, std A vs balanced A0 ===\n");
+    let hw = args.get_usize("hw", 28);
+    let cin = args.get_usize("cin", 16);
+    let mut rng = Rng::new(3);
+    let x = Tensor::randn(&mut rng, [1, cin, hw, hw]);
+    let w_hat = Tensor::randn(&mut rng, [1, cin, 4, 4]);
+    let mut rows = Vec::new();
+    for (label, variant) in [("original A (std)", Variant::Std),
+                             ("modified A (A0)", Variant::Balanced(0))] {
+        let y = winograd_adder_conv2d_fast(&x, &w_hat, 1, variant);
+        let map = &y.data[..hw * hw];
+        let score = viz::grid_artifact_score(map, hw, hw);
+        let phases = viz::phase_means(map, hw, hw);
+        println!("{label}: grid score {score:.3}");
+        print!("{}", viz::ascii_heatmap(map, hw, hw));
+        println!();
+        rows.push(vec![
+            if matches!(variant, Variant::Std) { 0.0 } else { 1.0 },
+            score, phases[0], phases[1], phases[2], phases[3],
+        ]);
+    }
+    io::write_csv(&PathBuf::from("results/fig4_grid_scores.csv"),
+                  &["balanced", "score", "p00", "p01", "p10", "p11"],
+                  &rows)?;
+    println!("score ~1.0 = balanced output magnitudes (paper Fig. 4 a/b); \
+              >> 1 = the grid of Fig. 4(c)");
+    Ok(())
+}
+

@@ -1,0 +1,309 @@
+"""AOT compiler: lower every model/kernel graph to HLO text artifacts.
+
+This is the ONLY place Python runs in the system — at build time.
+``make artifacts`` invokes it once; afterwards the rust binary is fully
+self-contained: it loads ``artifacts/*.hlo.txt`` via PJRT, reads
+``artifacts/manifest.json`` for parameter order/shapes, and seeds model
+state from ``artifacts/*.params.bin``.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Artifact kinds:
+  train  — (params..., mom..., x, y, p, lr) -> (params'..., mom'..., loss, acc)
+  eval   — (params..., x) -> (logits, features)
+  layer  — single Winograd-adder / adder layer forward, Pallas-backed,
+           compiled per batch-size bucket for the serving router.
+
+Plus per-model ``<name>.params.bin`` (raw little-endian f32, leaves
+concatenated in jax tree-flatten order) and golden in/out files for the
+rust integration tests.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as model_lib
+from compile import train as train_lib
+from compile.kernels import ref
+from compile.kernels.adder_conv import adder_conv2d
+from compile.kernels.winograd_adder import winograd_adder_conv2d
+
+TRAIN_BATCH = 64
+EVAL_BATCH = 256
+ETA = 0.1  # paper's adaptive-LR hyperparameter (CIFAR setting)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe path).
+
+    Two print-option gotchas, both fatal for the rust loader:
+      * ``print_large_constants=True`` — the default printer elides any
+        constant with >= 16 elements as ``constant({...})``, which the
+        0.5.1 text parser silently reads back as zeros (every Winograd
+        transform matrix is a baked constant!).
+      * ``print_metadata=False`` — jax >= 0.7 emits ``source_end_line``
+        metadata fields the old parser rejects.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def _spec(name, arr):
+    return {"name": name, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+
+
+def _flat(params):
+    return jax.tree_util.tree_leaves(params)
+
+
+def save_params_bin(path: pathlib.Path, params) -> None:
+    """Raw little-endian f32, leaves concatenated in tree-flatten order."""
+    buf = np.concatenate(
+        [np.asarray(v, dtype=np.float32).reshape(-1) for v in _flat(params)])
+    buf.astype("<f4").tofile(path)
+
+
+# ---------------------------------------------------------------------------
+# model artifacts
+# ---------------------------------------------------------------------------
+
+MODEL_PRESETS = {
+    # MNIST protocol (Sec. 4.1): LeNet-5-BN with 3x3 layers
+    "lenet_adder": model_lib.ModelConfig(
+        arch="lenet", mode="adder", in_channels=1),
+    "lenet_wino_adder": model_lib.ModelConfig(
+        arch="lenet", mode="wino_adder", in_channels=1),
+    # CIFAR protocol (Table 1 / Tables 3-5): ResNet-20-lite, 3-channel
+    "resnet20_conv": model_lib.ModelConfig(
+        arch="resnet20", mode="conv", in_channels=3),
+    "resnet20_wino_conv": model_lib.ModelConfig(
+        arch="resnet20", mode="wino_conv", in_channels=3),
+    "resnet20_adder": model_lib.ModelConfig(
+        arch="resnet20", mode="adder", in_channels=3),
+    "resnet20_wino_adder": model_lib.ModelConfig(
+        arch="resnet20", mode="wino_adder", in_channels=3),
+    # ablations
+    "resnet20_wino_adder_std": model_lib.ModelConfig(
+        arch="resnet20", mode="wino_adder", variant="std", in_channels=3),
+    "resnet20_wino_adder_kt": model_lib.ModelConfig(
+        arch="resnet20", mode="wino_adder", weight_mode="kt", in_channels=3),
+    "resnet20_adder_l2ht": model_lib.ModelConfig(
+        arch="resnet20", mode="adder", grads="l2ht", in_channels=3),
+    # LeNet-scale 3-channel models: the ablation workhorses — the build
+    # box has a single CPU core, so Tables 3/4/5's 11 training runs use
+    # these (~0.2 s/step) instead of ResNet-20-lite (~8 s/step); the
+    # ResNet graphs above remain for the end-to-end driver.
+    "cifarlenet_conv": model_lib.ModelConfig(
+        arch="lenet", mode="conv", in_channels=3),
+    "cifarlenet_wino_conv": model_lib.ModelConfig(
+        arch="lenet", mode="wino_conv", in_channels=3),
+    "cifarlenet_adder": model_lib.ModelConfig(
+        arch="lenet", mode="adder", in_channels=3),
+    "cifarlenet_adder_l2ht": model_lib.ModelConfig(
+        arch="lenet", mode="adder", grads="l2ht", in_channels=3),
+    "cifarlenet_wino_adder": model_lib.ModelConfig(
+        arch="lenet", mode="wino_adder", in_channels=3),
+    "cifarlenet_wino_adder_std": model_lib.ModelConfig(
+        arch="lenet", mode="wino_adder", variant="std", in_channels=3),
+    "cifarlenet_wino_adder_kt": model_lib.ModelConfig(
+        arch="lenet", mode="wino_adder", weight_mode="kt", in_channels=3),
+}
+
+# extra init files (same graph, different initialization — Table 4 row 3)
+EXTRA_INITS = {
+    "resnet20_wino_adder_initat": (
+        "resnet20_wino_adder",
+        model_lib.ModelConfig(arch="resnet20", mode="wino_adder",
+                              weight_mode="init_adder_transform",
+                              in_channels=3)),
+    "cifarlenet_wino_adder_initat": (
+        "cifarlenet_wino_adder",
+        model_lib.ModelConfig(arch="lenet", mode="wino_adder",
+                              weight_mode="init_adder_transform",
+                              in_channels=3)),
+}
+
+
+def emit_model(name: str, cfg: model_lib.ModelConfig, out: pathlib.Path,
+               manifest: dict) -> None:
+    rng = jax.random.PRNGKey(0)
+    params = model_lib.init(rng, cfg)
+    mom = train_lib.init_momentum(params)
+    bsz = TRAIN_BATCH
+    x = jax.ShapeDtypeStruct((bsz, cfg.in_channels, cfg.image_size,
+                              cfg.image_size), jnp.float32)
+    y = jax.ShapeDtypeStruct((bsz,), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    train_step = train_lib.make_train_step(cfg, eta=ETA)
+    lowered = jax.jit(train_step, keep_unused=True).lower(
+        params, mom, x, y, scalar, scalar)
+    (out / f"{name}.train.hlo.txt").write_text(to_hlo_text(lowered))
+
+    ex = jax.ShapeDtypeStruct((EVAL_BATCH, cfg.in_channels, cfg.image_size,
+                               cfg.image_size), jnp.float32)
+    eval_step = train_lib.make_eval_step(cfg)
+    lowered_e = jax.jit(eval_step, keep_unused=True).lower(params, ex)
+    (out / f"{name}.eval.hlo.txt").write_text(to_hlo_text(lowered_e))
+
+    save_params_bin(out / f"{name}.params.bin", params)
+
+    paths = train_lib.param_paths(params)
+    manifest["models"][name] = {
+        "train_hlo": f"{name}.train.hlo.txt",
+        "eval_hlo": f"{name}.eval.hlo.txt",
+        "params_bin": f"{name}.params.bin",
+        "config": {
+            "arch": cfg.arch, "mode": cfg.mode, "variant": cfg.variant,
+            "grads": cfg.grads, "weight_mode": cfg.weight_mode,
+            "num_classes": cfg.num_classes, "in_channels": cfg.in_channels,
+            "image_size": cfg.image_size, "width_mult": cfg.width_mult,
+        },
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "params": [{"name": n, "shape": list(s), "dtype": d}
+                   for n, s, d in paths],
+        "num_param_leaves": len(paths),
+        "num_param_scalars": int(sum(np.prod(s) for _, s, _ in paths)),
+        # train inputs: params..P, mom..P, x, y, p, lr
+        # train outputs: params'..P, mom'..P, loss, acc
+        # eval inputs: params..P, x; outputs: logits, features
+    }
+    print(f"  model {name}: {len(paths)} leaves, "
+          f"{manifest['models'][name]['num_param_scalars']} scalars")
+
+
+def emit_golden(out: pathlib.Path, manifest: dict) -> None:
+    """Golden train-step + eval outputs for rust integration tests."""
+    name = "lenet_wino_adder"
+    cfg = MODEL_PRESETS[name]
+    rng = jax.random.PRNGKey(0)
+    params = model_lib.init(rng, cfg)
+    mom = train_lib.init_momentum(params)
+    kx, ky = jax.random.split(jax.random.PRNGKey(7))
+    x = jax.random.normal(kx, (TRAIN_BATCH, 1, 16, 16), jnp.float32)
+    y = jax.random.randint(ky, (TRAIN_BATCH,), 0, 10)
+    step = jax.jit(train_lib.make_train_step(cfg, eta=ETA))
+    p2, m2, loss, acc = step(params, mom, x, y,
+                             jnp.float32(2.0), jnp.float32(0.05))
+    np.asarray(x, "<f4").tofile(out / "golden.x.bin")
+    np.asarray(y, "<i4").tofile(out / "golden.y.bin")
+    save_params_bin(out / "golden.params_out.bin", p2)
+    ex = jax.random.normal(kx, (EVAL_BATCH, 1, 16, 16), jnp.float32)
+    logits, feats = jax.jit(train_lib.make_eval_step(cfg))(params, ex)
+    np.asarray(ex, "<f4").tofile(out / "golden.eval_x.bin")
+    np.asarray(logits, "<f4").tofile(out / "golden.logits.bin")
+    manifest["golden"] = {
+        "model": name, "p": 2.0, "lr": 0.05,
+        "loss": float(loss), "acc": float(acc),
+        "x": "golden.x.bin", "y": "golden.y.bin",
+        "params_out": "golden.params_out.bin",
+        "eval_x": "golden.eval_x.bin", "logits": "golden.logits.bin",
+        "logits_shape": list(logits.shape),
+    }
+    print(f"  golden: loss={float(loss):.6f} acc={float(acc):.4f}")
+
+
+# ---------------------------------------------------------------------------
+# layer artifacts (Pallas-backed, for the serving router)
+# ---------------------------------------------------------------------------
+
+# the paper's FPGA benchmark layer: (1,16,28,28) x (16,16,3,3)
+LAYER_C = 16
+LAYER_HW = 28
+LAYER_BATCHES = (1, 4, 16)
+
+
+def emit_layers(out: pathlib.Path, manifest: dict) -> None:
+    w_hat_spec = jax.ShapeDtypeStruct((LAYER_C, LAYER_C, 4, 4), jnp.float32)
+    w_spec = jax.ShapeDtypeStruct((LAYER_C, LAYER_C, 3, 3), jnp.float32)
+    manifest["layers"] = {}
+    for b in LAYER_BATCHES:
+        x_spec = jax.ShapeDtypeStruct((b, LAYER_C, LAYER_HW, LAYER_HW),
+                                      jnp.float32)
+        fn = lambda x, w: winograd_adder_conv2d(x, w, variant="A0")
+        lowered = jax.jit(fn).lower(x_spec, w_hat_spec)
+        fname = f"layer_wino_adder_b{b}.hlo.txt"
+        (out / fname).write_text(to_hlo_text(lowered))
+        manifest["layers"][f"wino_adder_b{b}"] = {
+            "hlo": fname, "batch": b,
+            "x": _spec("x", x_spec), "w": _spec("w_hat", w_hat_spec),
+            "out_shape": [b, LAYER_C, LAYER_HW, LAYER_HW],
+        }
+        print(f"  layer wino_adder b={b}")
+    b = 4
+    x_spec = jax.ShapeDtypeStruct((b, LAYER_C, LAYER_HW, LAYER_HW),
+                                  jnp.float32)
+    fn = lambda x, w: adder_conv2d(x, w)
+    lowered = jax.jit(fn).lower(x_spec, w_spec)
+    (out / "layer_adder_b4.hlo.txt").write_text(to_hlo_text(lowered))
+    manifest["layers"]["adder_b4"] = {
+        "hlo": "layer_adder_b4.hlo.txt", "batch": b,
+        "x": _spec("x", x_spec), "w": _spec("w", w_spec),
+        "out_shape": [b, LAYER_C, LAYER_HW, LAYER_HW],
+    }
+    # layer weights + golden output for integration tests
+    kw, kx = jax.random.split(jax.random.PRNGKey(3))
+    w_hat = jax.random.normal(kw, (LAYER_C, LAYER_C, 4, 4), jnp.float32)
+    x1 = jax.random.normal(kx, (1, LAYER_C, LAYER_HW, LAYER_HW), jnp.float32)
+    y1 = ref.winograd_adder_conv2d_ref(x1, w_hat, variant="A0")
+    np.asarray(w_hat, "<f4").tofile(out / "layer.w_hat.bin")
+    np.asarray(x1, "<f4").tofile(out / "layer.golden_x.bin")
+    np.asarray(y1, "<f4").tofile(out / "layer.golden_y.bin")
+    manifest["layers"]["golden"] = {
+        "w_hat": "layer.w_hat.bin", "x": "layer.golden_x.bin",
+        "y": "layer.golden_y.bin",
+    }
+    print("  layer adder b=4 + golden")
+
+
+def emit_extra_inits(out: pathlib.Path, manifest: dict) -> None:
+    for name, (base, cfg) in EXTRA_INITS.items():
+        params = model_lib.init(jax.random.PRNGKey(0), cfg)
+        save_params_bin(out / f"{name}.params.bin", params)
+        manifest["extra_inits"][name] = {
+            "base_model": base, "params_bin": f"{name}.params.bin"}
+        print(f"  extra init {name} (graph: {base})")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on model names")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"models": {}, "extra_inits": {},
+                "train_batch": TRAIN_BATCH, "eval_batch": EVAL_BATCH,
+                "eta": ETA}
+    print("emitting model artifacts:")
+    for name, cfg in MODEL_PRESETS.items():
+        if args.only and args.only not in name:
+            continue
+        emit_model(name, cfg, out, manifest)
+    if not args.only:
+        emit_extra_inits(out, manifest)
+        emit_layers(out, manifest)
+        emit_golden(out, manifest)
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {out / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

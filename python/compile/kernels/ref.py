@@ -1,0 +1,201 @@
+"""Pure-jnp reference oracles for every kernel in this repo.
+
+These are the ground truth the Pallas kernels (and the rust-native
+implementations in rust/src/nn/) are tested against. Everything is NCHW,
+stride 1, 3x3 filters, F(2x2, 3x3) Winograd tiling.
+
+Shapes glossary:
+  x       (N, Cin, H, W)        input features
+  w       (Cout, Cin, 3, 3)     spatial filters
+  w_hat   (Cout, Cin, 4, 4)     Winograd-domain filters
+  tiles   (N, Cin, th, tw, 4, 4) overlapping 4x4 input tiles, stride 2
+  d_hat   (T, Cin, 16)          transformed tiles, T = N*th*tw
+  y       (N, Cout, Ho, Wo)     output features
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import transforms
+
+
+def pad_same(x, pad=1):
+    """Zero-pad H and W by ``pad`` on each side (paper uses pad=1)."""
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+
+
+def extract_patches(x):
+    """im2col for 3x3/stride-1: (N,C,H,W) -> (N, (H-2)*(W-2), C*9)."""
+    n, c, h, w = x.shape
+    ho, wo = h - 2, w - 2
+    cols = []
+    for i in range(3):
+        for j in range(3):
+            cols.append(x[:, :, i:i + ho, j:j + wo])
+    # (N, C, 9, ho, wo) -> (N, ho*wo, C*9) with k-index = c*9 + (i*3+j)
+    p = jnp.stack(cols, axis=2)
+    p = p.reshape(n, c * 9, ho * wo)
+    return p.transpose(0, 2, 1)
+
+
+def conv2d_ref(x, w, pad=1):
+    """Plain correlation (CNN conv), the multiplication baseline."""
+    x = pad_same(x, pad)
+    n, cin, h, wd = x.shape
+    cout = w.shape[0]
+    ho, wo = h - 2, wd - 2
+    patches = extract_patches(x)  # (N, T, Cin*9)
+    out = jnp.einsum("ntk,ok->not", patches, w.reshape(cout, -1))
+    return out.reshape(n, cout, ho, wo)
+
+
+def adder_conv2d_ref(x, w, pad=1, p=1.0):
+    """AdderNet convolution, paper Eq. 1 (p=1) and Eq. 23 (general p).
+
+    Y(m,n,t) = -sum_{i,j,k} |F(i,j,k,t) - X(m+i,n+j,k)|^p
+    """
+    x = pad_same(x, pad)
+    n, cin, h, wd = x.shape
+    cout = w.shape[0]
+    ho, wo = h - 2, wd - 2
+    patches = extract_patches(x)  # (N, T, K)
+    wf = w.reshape(cout, -1)  # (O, K)
+    diff = wf[None, None, :, :] - patches[:, :, None, :]  # (N,T,O,K)
+    out = -jnp.sum(jnp.abs(diff) ** p, axis=-1)
+    return out.transpose(0, 2, 1).reshape(n, cout, ho, wo)
+
+
+# ---------------------------------------------------------------------------
+# Winograd machinery
+# ---------------------------------------------------------------------------
+
+def extract_tiles(x):
+    """Overlapping 4x4 tiles with stride 2.
+
+    (N, C, H, W) with H, W even -> (N, C, (H-2)/2, (W-2)/2, 4, 4).
+    Tile (ti, tj) covers rows [2ti, 2ti+4) x cols [2tj, 2tj+4); adjacent
+    tiles overlap by 2 and each produces a 2x2 output patch.
+    """
+    n, c, h, w = x.shape
+    th, tw = (h - 2) // 2, (w - 2) // 2
+    rows = []
+    for k in range(4):
+        cols = []
+        for l in range(4):
+            cols.append(x[:, :, k:k + 2 * th:2, l:l + 2 * tw:2])
+        rows.append(jnp.stack(cols, axis=-1))
+    return jnp.stack(rows, axis=-2)  # (N, C, th, tw, 4, 4)
+
+
+def input_transform(tiles, variant="A0"):
+    """d_hat = B^T d B per tile. (..., 4, 4) -> (..., 4, 4)."""
+    _, _, B = transforms.matrices(variant)
+    B = jnp.asarray(B, tiles.dtype)
+    return jnp.einsum("ki,...kl,lj->...ij", B, tiles, B)
+
+
+def kernel_transform(w, variant="A0"):
+    """w_hat = G g G^T. (O, C, 3, 3) -> (O, C, 4, 4)."""
+    _, G, _ = transforms.matrices(variant)
+    G = jnp.asarray(G, w.dtype)
+    return jnp.einsum("ik,ockl,jl->ocij", G, w, G)
+
+
+def output_transform(m, variant="A0"):
+    """Y = A^T M A. (..., 4, 4) -> (..., 2, 2)."""
+    A, _, _ = transforms.matrices(variant)
+    A = jnp.asarray(A, m.dtype)
+    return jnp.einsum("ki,...kl,lj->...ij", A, m, A)
+
+
+def untile(y_tiles):
+    """(N, O, th, tw, 2, 2) -> (N, O, 2*th, 2*tw)."""
+    n, o, th, tw, _, _ = y_tiles.shape
+    return y_tiles.transpose(0, 1, 2, 4, 3, 5).reshape(n, o, 2 * th, 2 * tw)
+
+
+def winograd_conv2d_ref(x, w, pad=1, variant="A0"):
+    """Standard Winograd F(2x2,3x3) convolution (paper Eq. 6/8).
+
+    Numerically equal (up to float associativity) to conv2d_ref for any
+    variant whose matrices satisfy the Winograd identity — including the
+    balanced Theorem-2 families.
+    """
+    x = pad_same(x, pad)
+    tiles = extract_tiles(x)  # (N,C,th,tw,4,4)
+    d_hat = input_transform(tiles, variant)
+    w_hat = kernel_transform(w, variant)
+    # accumulate over input channels in the transform domain
+    m = jnp.einsum("ncxykl,ockl->noxykl", d_hat, w_hat)
+    y = output_transform(m, variant)
+    return untile(y)
+
+
+def winograd_adder_conv2d_ref(x, w_hat, pad=1, variant="A0", p=1.0):
+    """Winograd AdderNet forward, paper Eq. 9 (+ the lp generalization).
+
+    Args:
+      x: (N, Cin, H, W) input.
+      w_hat: (Cout, Cin, 4, 4) *Winograd-domain* weights. The paper trains
+        these directly (Table 4, "init Winograd kernel"); use
+        kernel_transform(w) to derive them from spatial weights.
+      variant: transform family — "std" reproduces the unbalanced Eq. 9,
+        "A0".."A3" the balanced Theorem-2 matrices.
+      p: elementwise exponent (1.0 = paper Eq. 9; 2.0 = the l2 end of the
+        l2-to-l1 schedule, Sec. 3.3).
+
+    Returns (N, Cout, Ho, Wo).
+    """
+    x = pad_same(x, pad)
+    tiles = extract_tiles(x)
+    d_hat = input_transform(tiles, variant)  # (N,C,th,tw,4,4)
+    diff = w_hat[None, :, :, None, None] - d_hat[:, None]  # (N,O,C,th,tw,4,4)
+    m = -jnp.sum(jnp.abs(diff) ** p, axis=2)  # (N,O,th,tw,4,4)
+    y = output_transform(m, variant)
+    return untile(y)
+
+
+def winograd_adder_from_dhat_ref(d_hat, w_hat, p=1.0):
+    """The kernel hot path in flat form, for 1:1 Pallas comparison.
+
+    d_hat (T, C, 16), w_hat (O, C, 16) -> m (T, O, 16)
+    m[t,o,:] = -sum_c |w_hat[o,c,:] - d_hat[t,c,:]|^p
+    """
+    diff = w_hat[None] - d_hat[:, None]  # (T,O,C,16)
+    return -jnp.sum(jnp.abs(diff) ** p, axis=2)
+
+
+def winograd_mul_from_dhat_ref(d_hat, w_hat):
+    """Winograd CNN hot path: m[t,o,:] = sum_c w_hat[o,c,:]*d_hat[t,c,:]."""
+    return jnp.einsum("tcp,ocp->top", d_hat, w_hat)
+
+
+def adder_from_patches_ref(patches, w, p=1.0):
+    """Direct adder hot path: (T,K),(O,K) -> (T,O)."""
+    diff = w[None] - patches[:, None]
+    return -jnp.sum(jnp.abs(diff) ** p, axis=2)
+
+
+def output_transform_matrix(variant="A0"):
+    """S (16, 4): flat output transform, y_flat = m_flat @ S.
+
+    S[p, q] = A[k, i] * A[l, j] with p = 4k + l, q = 2i + j, so that
+    (A^T M A).flatten() = M.flatten() @ S.
+    """
+    A, _, _ = transforms.matrices(variant)
+    S = np.einsum("ki,lj->klij", A, A).reshape(16, 4)
+    return S
+
+
+def input_transform_matrix(variant="A0"):
+    """R (16, 16): flat input transform, d_hat_flat = d_flat @ R.
+
+    R[p, q] = B[k, i] * B[l, j] with p = 4k + l, q = 4i + j, so that
+    (B^T d B).flatten() = d.flatten() @ R.
+    """
+    _, _, B = transforms.matrices(variant)
+    R = np.einsum("ki,lj->klij", B, B).reshape(16, 16)
+    return R

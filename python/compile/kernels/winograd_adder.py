@@ -1,0 +1,120 @@
+"""Layer-1 Pallas kernel: Winograd AdderNet forward (paper Eq. 9).
+
+The hot path — per output tile t and output channel o,
+    m[t, o, :] = -sum_c |w_hat[o, c, :] - d_hat[t, c, :]|      (16 lanes)
+    y[t, o, :] = m[t, o, :] @ S                                 (S = A (x) A)
+— fused into one Pallas kernel. Input/kernel transforms (B^T d B, G g G^T)
+are tiny 4x4 matmuls done in plain jnp by the wrapper; the O(T*O*C*16)
+elementwise-accumulate dominates and lives here.
+
+TPU mapping (DESIGN.md §4): tiles on the sublane axis, the 16
+Winograd-domain positions on the lane axis, C_in chunked through VMEM —
+the analogue of the paper's 16x16 channel-parallel FPGA adder array.
+Lowered with interpret=True so the AOT HLO runs on the CPU PJRT client;
+on a real TPU the same BlockSpec schedule drives the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels import ref
+
+# Block sizes: one grid step touches
+#   d_hat  (T_BLK, C, 16)  +  w_hat (O_BLK, C, 16)  +  acc (T_BLK, O_BLK, 16)
+# For C = 256: (64*256*16 + 16*256*16 + 64*16*16) * 4B ≈ 1.3 MB « 16 MB VMEM.
+T_BLK = 64
+O_BLK = 16
+
+
+def _wino_adder_kernel(d_ref, w_ref, s_ref, y_ref, *, c_chunk):
+    """One (tile-block, outchannel-block) grid step.
+
+    d_ref (T_BLK, C, 16), w_ref (O_BLK, C, 16), s_ref (16, 4),
+    y_ref (T_BLK, O_BLK, 4).
+    """
+    c_total = d_ref.shape[1]
+    acc = jnp.zeros((d_ref.shape[0], w_ref.shape[0], 16), dtype=jnp.float32)
+
+    def body(ci, acc):
+        d = jax.lax.dynamic_slice_in_dim(d_ref[...], ci * c_chunk, c_chunk, 1)
+        w = jax.lax.dynamic_slice_in_dim(w_ref[...], ci * c_chunk, c_chunk, 1)
+        # (T, 1, cc, 16) - (1, O, cc, 16) -> reduce cc
+        diff = jnp.abs(w[None, :, :, :] - d[:, None, :, :])
+        return acc - jnp.sum(diff, axis=2)
+
+    n_chunks = c_total // c_chunk
+    acc = jax.lax.fori_loop(0, n_chunks, body, acc)
+    rem = c_total - n_chunks * c_chunk
+    if rem:  # static remainder
+        d = d_ref[:, n_chunks * c_chunk:, :]
+        w = w_ref[:, n_chunks * c_chunk:, :]
+        acc = acc - jnp.sum(jnp.abs(w[None] - d[:, None]), axis=2)
+    # fused output transform: (T*O, 16) @ (16, 4)
+    t, o, _ = acc.shape
+    y_ref[...] = (acc.reshape(t * o, 16) @ s_ref[...]).reshape(t, o, 4)
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x, n
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads), n
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "c_chunk"))
+def wino_adder_tiles(d_hat, w_hat, variant="A0", c_chunk=32):
+    """Pallas hot path: (T, C, 16) x (O, C, 16) -> y tiles (T, O, 4).
+
+    Equivalent to
+    ``winograd_adder_from_dhat_ref(d_hat, w_hat) @ output_transform_matrix``.
+    """
+    s = jnp.asarray(ref.output_transform_matrix(variant), jnp.float32)
+    d_hat, t_real = _pad_to(d_hat.astype(jnp.float32), 0, T_BLK)
+    w_hat, o_real = _pad_to(w_hat.astype(jnp.float32), 0, O_BLK)
+    t_pad, c, _ = d_hat.shape
+    o_pad = w_hat.shape[0]
+    c_chunk = min(c_chunk, c)
+
+    grid = (t_pad // T_BLK, o_pad // O_BLK)
+    y = pl.pallas_call(
+        functools.partial(_wino_adder_kernel, c_chunk=c_chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((T_BLK, c, 16), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((O_BLK, c, 16), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((16, 4), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((T_BLK, O_BLK, 4), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_pad, o_pad, 4), jnp.float32),
+        interpret=True,
+    )(d_hat, w_hat, s)
+    return y[:t_real, :o_real]
+
+
+def winograd_adder_conv2d(x, w_hat, pad=1, variant="A0", impl="pallas"):
+    """Full Winograd-AdderNet conv layer (inference), Pallas-backed.
+
+    Args mirror ref.winograd_adder_conv2d_ref (p fixed at 1 — inference is
+    always the l1 end of the schedule).
+    """
+    if impl == "ref":
+        return ref.winograd_adder_conv2d_ref(x, w_hat, pad=pad,
+                                             variant=variant, p=1.0)
+    n, cin, _, _ = x.shape
+    cout = w_hat.shape[0]
+    xp = ref.pad_same(x, pad)
+    tiles = ref.extract_tiles(xp)  # (N,C,th,tw,4,4)
+    _, _, th, tw, _, _ = tiles.shape
+    d_hat = ref.input_transform(tiles, variant)
+    d_flat = d_hat.transpose(0, 2, 3, 1, 4, 5).reshape(n * th * tw, cin, 16)
+    w_flat = w_hat.reshape(cout, cin, 16)
+    y = wino_adder_tiles(d_flat, w_flat, variant=variant)  # (T, O, 4)
+    y = y.reshape(n, th, tw, cout, 2, 2).transpose(0, 3, 1, 4, 2, 5)
+    return y.reshape(n, cout, 2 * th, 2 * tw)

@@ -1,0 +1,75 @@
+"""Layer-1 Pallas kernel: standard Winograd F(2x2,3x3) convolution.
+
+The multiplication baseline ("Winograd CNN" rows of Table 1 / Figure 1).
+Per tile t and output channel o,
+    m[t, o, :] = sum_c w_hat[o, c, :] * d_hat[t, c, :]
+    y[t, o, :] = m[t, o, :] @ S.
+
+Unlike the adder variant, the channel contraction here *is* a batched
+matmul over the 16 Winograd positions, so on a real TPU it feeds the MXU;
+the Pallas body expresses it as an einsum the Mosaic lowering maps there.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels import ref
+from compile.kernels.winograd_adder import _pad_to, T_BLK, O_BLK
+
+
+def _wino_conv_kernel(d_ref, w_ref, s_ref, y_ref):
+    """d_ref (T_BLK, C, 16), w_ref (O_BLK, C, 16) -> y_ref (T_BLK, O_BLK, 4)."""
+    m = jnp.einsum("tcp,ocp->top", d_ref[...], w_ref[...],
+                   preferred_element_type=jnp.float32)
+    t, o, _ = m.shape
+    y_ref[...] = (m.reshape(t * o, 16) @ s_ref[...]).reshape(t, o, 4)
+
+
+@functools.partial(jax.jit, static_argnames=("variant",))
+def wino_conv_tiles(d_hat, w_hat, variant="A0"):
+    """Pallas hot path: (T, C, 16) x (O, C, 16) -> y tiles (T, O, 4)."""
+    s = jnp.asarray(ref.output_transform_matrix(variant), jnp.float32)
+    d_hat, t_real = _pad_to(d_hat.astype(jnp.float32), 0, T_BLK)
+    w_hat, o_real = _pad_to(w_hat.astype(jnp.float32), 0, O_BLK)
+    t_pad, c, _ = d_hat.shape
+    o_pad = w_hat.shape[0]
+
+    y = pl.pallas_call(
+        _wino_conv_kernel,
+        grid=(t_pad // T_BLK, o_pad // O_BLK),
+        in_specs=[
+            pl.BlockSpec((T_BLK, c, 16), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((O_BLK, c, 16), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((16, 4), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((T_BLK, O_BLK, 4), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_pad, o_pad, 4), jnp.float32),
+        interpret=True,
+    )(d_hat, w_hat, s)
+    return y[:t_real, :o_real]
+
+
+def winograd_conv2d(x, w, pad=1, variant="A0", impl="pallas"):
+    """Full Winograd CNN conv layer (inference), Pallas-backed.
+
+    Takes *spatial* weights (O, C, 3, 3); the kernel transform
+    G g G^T is folded at call time (in deployment it is precomputed —
+    paper Eq. 8).
+    """
+    if impl == "ref":
+        return ref.winograd_conv2d_ref(x, w, pad=pad, variant=variant)
+    n, cin, _, _ = x.shape
+    cout = w.shape[0]
+    xp = ref.pad_same(x, pad)
+    tiles = ref.extract_tiles(xp)
+    _, _, th, tw, _, _ = tiles.shape
+    d_hat = ref.input_transform(tiles, variant)
+    d_flat = d_hat.transpose(0, 2, 3, 1, 4, 5).reshape(n * th * tw, cin, 16)
+    w_hat = ref.kernel_transform(w, variant).reshape(cout, cin, 16)
+    y = wino_conv_tiles(d_flat, w_hat, variant=variant)
+    y = y.reshape(n, th, tw, cout, 2, 2).transpose(0, 3, 1, 4, 2, 5)
+    return y.reshape(n, cout, 2 * th, 2 * tw)

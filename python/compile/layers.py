@@ -1,0 +1,236 @@
+"""Layer-2 building blocks: adder layers with the paper's custom gradients.
+
+Three differentiable primitives, all custom_vjp:
+
+  * ``lp_adder(patches, w, p)``        — direct adder, lp forward (Eq. 23)
+      with the sign gradients of Eq. 24-25 (the l2-to-l1 strategy; at p=2
+      this *is* the smooth l2 form, at p=1 it degenerates to Eq. 26-28).
+  * ``adder_l2ht(patches, w)``         — original-AdderNet baseline
+      gradients: l2-style for F (Eq. 2) and HardTanh for X (Eq. 3).
+  * ``wino_lp_adder(d_hat, w_hat, p)`` — the Winograd-domain adder
+      elementwise stage with lp forward/backward; the linear input/output
+      transforms around it are plain jnp and differentiate exactly.
+
+plus batchnorm, pooling and the layer-level wrappers used by model.py.
+
+``p`` is a *traced scalar* everywhere so the AOT train-step artifact takes
+the current exponent as a runtime input — the rust coordinator owns the
+l2-to-l1 schedule (rust/src/coordinator/p_schedule.rs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# lp adder (direct): patches (..., T, K), w (O, K) -> (..., T, O)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def lp_adder(patches, w, p):
+    """Y[t,o] = -sum_k |w[o,k] - patches[t,k]|^p  (paper Eq. 23)."""
+    t = w[None] - patches[..., :, None, :]
+    return -jnp.sum(jnp.abs(t) ** p, axis=-1)
+
+
+def _lp_adder_fwd(patches, w, p):
+    return lp_adder(patches, w, p), (patches, w, p)
+
+
+def _lp_adder_bwd(res, g):
+    patches, w, p = res
+    t = w[None] - patches[..., :, None, :]  # (..., T, O, K)
+    # dY/dX = p*|t|^{p-1}*sign(t)  (Eq. 24);  dY/dF = -dY/dX (Eq. 25)
+    grad = p * jnp.abs(t) ** (p - 1.0) * jnp.sign(t)
+    gx = jnp.einsum("...to,...tok->...tk", g, grad)
+    gw = -jnp.einsum("...to,...tok->ok", g, grad)
+    return gx, gw, jnp.zeros_like(p)
+
+
+lp_adder.defvjp(_lp_adder_fwd, _lp_adder_bwd)
+
+
+# ---------------------------------------------------------------------------
+# original AdderNet gradients (baseline): l2 for F, HardTanh for X
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def adder_l2ht(patches, w):
+    """Y[t,o] = -sum_k |w[o,k] - patches[t,k]|  with Eq. 2-3 gradients."""
+    t = w[None] - patches[..., :, None, :]
+    return -jnp.sum(jnp.abs(t), axis=-1)
+
+
+def _adder_l2ht_fwd(patches, w):
+    return adder_l2ht(patches, w), (patches, w)
+
+
+def _adder_l2ht_bwd(res, g):
+    patches, w = res
+    t = w[None] - patches[..., :, None, :]  # t = F - X
+    # Eq. 3: dY/dX = HT(F - X);  Eq. 2: dY/dF = X - F = -t
+    gx = jnp.einsum("...to,...tok->...tk", g, jnp.clip(t, -1.0, 1.0))
+    gw = jnp.einsum("...to,...tok->ok", g, -t)
+    return gx, gw
+
+
+adder_l2ht.defvjp(_adder_l2ht_fwd, _adder_l2ht_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Winograd-domain lp adder: d_hat (..., T, C, 16), w_hat (O, C, 16)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def wino_lp_adder(d_hat, w_hat, p):
+    """m[t,o,:] = -sum_c |w_hat[o,c,:] - d_hat[t,c,:]|^p."""
+    t = w_hat[None] - d_hat[..., :, None, :, :]  # (..., T, O, C, 16)
+    return -jnp.sum(jnp.abs(t) ** p, axis=-2)
+
+
+def _wino_lp_fwd(d_hat, w_hat, p):
+    return wino_lp_adder(d_hat, w_hat, p), (d_hat, w_hat, p)
+
+
+def _wino_lp_bwd(res, g):
+    d_hat, w_hat, p = res
+    t = w_hat[None] - d_hat[..., :, None, :, :]
+    grad = p * jnp.abs(t) ** (p - 1.0) * jnp.sign(t)  # (...,T,O,C,16)
+    gd = jnp.einsum("...toq,...tocq->...tcq", g, grad)
+    gw = -jnp.einsum("...toq,...tocq->ocq", g, grad)
+    return gd, gw, jnp.zeros_like(p)
+
+
+wino_lp_adder.defvjp(_wino_lp_fwd, _wino_lp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# layer-level wrappers (NCHW in, NCHW out)
+# ---------------------------------------------------------------------------
+
+def conv3x3(x, w, stride=1, pad=1):
+    """Full-precision conv (first/last layers per the paper's protocol)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def adder3x3(x, w, p, stride=1, pad=1, grads="lp"):
+    """Direct adder conv layer, stride 1 or 2.
+
+    grads: "lp" -> lp_adder (l2-to-l1 strategy), "l2ht" -> original
+    AdderNet gradients (baseline reproductions).
+    """
+    n, cin, _, _ = x.shape
+    cout = w.shape[0]
+    xp = ref.pad_same(x, pad)
+    ho, wo = xp.shape[2] - 2, xp.shape[3] - 2
+    patches = ref.extract_patches(xp)  # (N, T, K)
+    if stride > 1:
+        idx_h = jnp.arange(0, ho, stride)
+        idx_w = jnp.arange(0, wo, stride)
+        patches = patches.reshape(n, ho, wo, cin * 9)
+        patches = patches[:, idx_h][:, :, idx_w]
+        ho, wo = patches.shape[1], patches.shape[2]
+        patches = patches.reshape(n, ho * wo, cin * 9)
+    wf = w.reshape(cout, -1)
+    if grads == "lp":
+        y = lp_adder(patches, wf, p)
+    else:
+        y = adder_l2ht(patches, wf)
+    return y.transpose(0, 2, 1).reshape(n, cout, ho, wo)
+
+
+def wino_adder3x3(x, w_hat, p, pad=1, variant="A0"):
+    """Winograd adder conv layer (stride 1 only — F(2x2,3x3) constraint).
+
+    w_hat (O, C, 4, 4) Winograd-domain weights (trained directly).
+    """
+    n, cin, _, _ = x.shape
+    cout = w_hat.shape[0]
+    xp = ref.pad_same(x, pad)
+    tiles = ref.extract_tiles(xp)
+    _, _, th, tw, _, _ = tiles.shape
+    d_hat = ref.input_transform(tiles, variant)
+    d_flat = d_hat.transpose(0, 2, 3, 1, 4, 5).reshape(n, th * tw, cin, 16)
+    w_flat = w_hat.reshape(cout, cin, 16)
+    m = wino_lp_adder(d_flat, w_flat, p)  # (N, T, O, 16)
+    s = jnp.asarray(ref.output_transform_matrix(variant), x.dtype)
+    y = m @ s  # (N, T, O, 4)
+    y = y.reshape(n, th, tw, cout, 2, 2).transpose(0, 3, 1, 4, 2, 5)
+    return y.reshape(n, cout, 2 * th, 2 * tw)
+
+
+def wino_conv3x3(x, w_hat, pad=1, variant="A0"):
+    """Winograd CNN layer from transform-domain weights (baseline)."""
+    n, cin, _, _ = x.shape
+    cout = w_hat.shape[0]
+    xp = ref.pad_same(x, pad)
+    tiles = ref.extract_tiles(xp)
+    _, _, th, tw, _, _ = tiles.shape
+    d_hat = ref.input_transform(tiles, variant)
+    m = jnp.einsum("ncxykl,ockl->noxykl",
+                   d_hat, w_hat.reshape(cout, cin, 4, 4))
+    y = ref.output_transform(m, variant)
+    return ref.untile(y)
+
+
+# ---------------------------------------------------------------------------
+# batchnorm / pooling / misc
+# ---------------------------------------------------------------------------
+
+def batchnorm_init(c):
+    return {"gamma": jnp.ones((c,)), "beta": jnp.zeros((c,)),
+            "mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def batchnorm(params, x, train, momentum=0.9, eps=1e-5):
+    """BN over NCHW. Returns (y, updated_params).
+
+    In train mode normalizes with batch statistics and updates the
+    running estimates; in eval mode uses the running estimates. The
+    paper's AdderNet protocol depends on BN to rescale the (all-negative,
+    large-magnitude) adder outputs — this is what makes the feature
+    balance of Theorem 2 matter.
+    """
+    if train:
+        mu = x.mean(axis=(0, 2, 3))
+        var = x.var(axis=(0, 2, 3))
+        new = dict(params)
+        new["mean"] = momentum * params["mean"] + (1 - momentum) * mu
+        new["var"] = momentum * params["var"] + (1 - momentum) * var
+    else:
+        mu, var = params["mean"], params["var"]
+        new = params
+    inv = jax.lax.rsqrt(var + eps)
+    y = (x - mu[None, :, None, None]) * inv[None, :, None, None]
+    return y * params["gamma"][None, :, None, None] + \
+        params["beta"][None, :, None, None], new
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def avgpool2(x):
+    n, c, h, w = x.shape
+    return x.reshape(n, c, h // 2, 2, w // 2, 2).mean(axis=(3, 5))
+
+
+def maxpool2(x):
+    n, c, h, w = x.shape
+    return x.reshape(n, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))
+
+
+def global_avgpool(x):
+    return x.mean(axis=(2, 3))
+
+
+def dense(x, w, b):
+    return x @ w + b

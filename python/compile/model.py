@@ -1,0 +1,245 @@
+"""Layer-2 models: LeNet-5-BN (3x3 variant) and ResNet-20/32(-lite).
+
+Functional, pytree-parameterized models whose every 3x3 body layer can be
+one of four modes (the rows of Table 1 / Table 5):
+
+  conv        — full-precision convolution (CNN baseline)
+  wino_conv   — Winograd CNN (multiplication, transform-domain weights)
+  adder       — direct AdderNet (Eq. 1), lp or l2ht gradients
+  wino_adder  — Winograd AdderNet (Eq. 9), the paper's contribution
+
+Protocol notes (paper Sec. 4.1): the first conv and the final classifier
+stay full-precision in *all* modes; Winograd applies to stride-1 3x3
+layers only (an F(2x2,3x3) constraint), stride-2 layers fall back to the
+direct form of the same arithmetic family.
+
+Weight handling for Winograd-adder layers (Table 4):
+  init_wino            — train (O,C,4,4) Winograd-domain weights directly
+  init_adder_transform — init (O,C,3,3), transform once (G g G^T) at init,
+                         then train the 4x4 weights
+  kt                   — keep (O,C,3,3) weights and apply the kernel
+                         transform inside every forward pass
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile import layers
+from compile.kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static (hashable) model configuration — safe as a jit static arg."""
+    arch: str = "lenet"            # "lenet" | "resnet20" | "resnet32"
+    mode: str = "wino_adder"       # conv | wino_conv | adder | wino_adder
+    variant: str = "A0"            # transform family: "std" or "A0".."A3"
+    grads: str = "lp"              # lp | l2ht   (adder family only)
+    weight_mode: str = "init_wino"  # init_wino | init_adder_transform | kt
+    num_classes: int = 10
+    in_channels: int = 1
+    image_size: int = 16
+    width_mult: float = 0.25       # resnet channel scale (1.0 = paper)
+
+    @property
+    def is_adder(self) -> bool:
+        return self.mode in ("adder", "wino_adder")
+
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# body-layer dispatch
+# ---------------------------------------------------------------------------
+
+def _body_init(rng, cfg: ModelConfig, cin: int, cout: int, stride: int):
+    """Init one 3x3 body layer's weight for the configured mode."""
+    std = (2.0 / (cin * 9)) ** 0.5
+    w3 = jax.random.normal(rng, (cout, cin, 3, 3)) * std
+    wino = cfg.mode in ("wino_conv", "wino_adder") and stride == 1
+    if not wino or cfg.weight_mode == "kt":
+        return {"w": w3}
+    if cfg.weight_mode == "init_adder_transform" or cfg.mode == "wino_conv":
+        return {"w": ref.kernel_transform(w3, cfg.variant)}
+    # init_wino: normal init directly in the Winograd domain
+    w4 = jax.random.normal(rng, (cout, cin, 4, 4)) * std
+    return {"w": w4}
+
+
+def _body_apply(p: Params, x, pexp, cfg: ModelConfig, stride: int):
+    """Apply one 3x3 body layer (stride 1 or 2) for the configured mode."""
+    w = p["w"]
+    if cfg.mode == "conv":
+        return layers.conv3x3(x, w, stride=stride)
+    if cfg.mode == "wino_conv":
+        if stride != 1:
+            # transform-domain weights only exist for stride-1; stride-2
+            # layers of the wino_conv model keep spatial weights
+            return layers.conv3x3(x, w, stride=stride)
+        return layers.wino_conv3x3(x, w, variant=cfg.variant)
+    if cfg.mode == "adder" or stride != 1:
+        return layers.adder3x3(x, w, pexp, stride=stride, grads=cfg.grads)
+    # wino_adder, stride 1
+    if cfg.weight_mode == "kt":
+        w = ref.kernel_transform(w, cfg.variant)  # differentiable KT
+    return layers.wino_adder3x3(x, w, pexp, variant=cfg.variant)
+
+
+# ---------------------------------------------------------------------------
+# LeNet-5-BN (3x3 variant, paper Sec. 4.1 MNIST protocol)
+# ---------------------------------------------------------------------------
+
+_LENET_CH = (8, 16, 16)
+
+
+def lenet_init(rng, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(rng, 8)
+    c1, c2, c3 = _LENET_CH
+    cin = cfg.in_channels
+    s = cfg.image_size // 4  # two 2x2 pools
+    feat = c3 * s * s
+    std = (2.0 / (cin * 9)) ** 0.5
+    return {
+        "conv1": {"w": jax.random.normal(ks[0], (c1, cin, 3, 3)) * std},
+        "bn1": layers.batchnorm_init(c1),
+        "l2": _body_init(ks[1], cfg, c1, c2, 1),
+        "bn2": layers.batchnorm_init(c2),
+        "l3": _body_init(ks[2], cfg, c2, c3, 1),
+        "bn3": layers.batchnorm_init(c3),
+        "fc1": {"w": jax.random.normal(ks[3], (feat, 64)) * (2.0 / feat) ** 0.5,
+                "b": jnp.zeros((64,))},
+        "fc2": {"w": jax.random.normal(ks[4], (64, cfg.num_classes))
+                * (2.0 / 64) ** 0.5,
+                "b": jnp.zeros((cfg.num_classes,))},
+    }
+
+
+def lenet_apply(params: Params, x, pexp, cfg: ModelConfig, train: bool
+                ) -> Tuple[jnp.ndarray, Params, jnp.ndarray]:
+    """Returns (logits, params-with-updated-bn-state, tsne_features)."""
+    new = dict(params)
+    h = layers.conv3x3(x, params["conv1"]["w"])  # full-precision first layer
+    h, new["bn1"] = layers.batchnorm(params["bn1"], h, train)
+    h = layers.relu(h)
+    h = layers.maxpool2(h)
+    h = _body_apply(params["l2"], h, pexp, cfg, 1)
+    h, new["bn2"] = layers.batchnorm(params["bn2"], h, train)
+    h = layers.relu(h)
+    h = layers.maxpool2(h)
+    h = _body_apply(params["l3"], h, pexp, cfg, 1)
+    h, new["bn3"] = layers.batchnorm(params["bn3"], h, train)
+    h = layers.relu(h)
+    feats = h.reshape(h.shape[0], -1)  # last adder-layer features (Fig. 3)
+    h = layers.relu(layers.dense(feats, params["fc1"]["w"], params["fc1"]["b"]))
+    logits = layers.dense(h, params["fc2"]["w"], params["fc2"]["b"])
+    return logits, new, feats
+
+
+# ---------------------------------------------------------------------------
+# ResNet-20/32 (CIFAR topology; width_mult scales channels)
+# ---------------------------------------------------------------------------
+
+def _resnet_blocks(arch: str) -> int:
+    return {"resnet20": 3, "resnet32": 5}[arch]
+
+
+def _resnet_widths(cfg: ModelConfig):
+    return tuple(max(4, int(w * cfg.width_mult)) for w in (16, 32, 64))
+
+
+def resnet_init(rng, cfg: ModelConfig) -> Params:
+    nb = _resnet_blocks(cfg.arch)
+    w1, w2, w3 = _resnet_widths(cfg)
+    ks = iter(jax.random.split(rng, 3 + 6 * nb * 3 + 2))
+    cin = cfg.in_channels
+    std = (2.0 / (cin * 9)) ** 0.5
+    params: Params = {
+        "conv1": {"w": jax.random.normal(next(ks), (w1, cin, 3, 3)) * std},
+        "bn1": layers.batchnorm_init(w1),
+    }
+    chans = [w1, w2, w3]
+    c_prev = w1
+    for s, c in enumerate(chans):
+        for b in range(nb):
+            stride = 2 if (s > 0 and b == 0) else 1
+            blk = {
+                "c1": _body_init(next(ks), cfg, c_prev, c, stride),
+                "bn1": layers.batchnorm_init(c),
+                "c2": _body_init(next(ks), cfg, c, c, 1),
+                "bn2": layers.batchnorm_init(c),
+            }
+            params[f"s{s}b{b}"] = blk
+            c_prev = c
+    params["fc"] = {
+        "w": jax.random.normal(next(ks), (w3, cfg.num_classes))
+        * (2.0 / w3) ** 0.5,
+        "b": jnp.zeros((cfg.num_classes,)),
+    }
+    return params
+
+
+def _shortcut(x, cout, stride):
+    """Parameter-free option-A shortcut: stride + zero-pad channels."""
+    if stride != 1:
+        x = x[:, :, ::stride, ::stride]
+    cin = x.shape[1]
+    if cin != cout:
+        x = jnp.pad(x, ((0, 0), (0, cout - cin), (0, 0), (0, 0)))
+    return x
+
+
+def resnet_apply(params: Params, x, pexp, cfg: ModelConfig, train: bool
+                 ) -> Tuple[jnp.ndarray, Params, jnp.ndarray]:
+    nb = _resnet_blocks(cfg.arch)
+    widths = _resnet_widths(cfg)
+    new = dict(params)
+    h = layers.conv3x3(x, params["conv1"]["w"])
+    h, new["bn1"] = layers.batchnorm(params["bn1"], h, train)
+    h = layers.relu(h)
+    for s, c in enumerate(widths):
+        for b in range(nb):
+            stride = 2 if (s > 0 and b == 0) else 1
+            blk = params[f"s{s}b{b}"]
+            nblk = dict(blk)
+            r = _body_apply(blk["c1"], h, pexp, cfg, stride)
+            r, nblk["bn1"] = layers.batchnorm(blk["bn1"], r, train)
+            r = layers.relu(r)
+            r = _body_apply(blk["c2"], r, pexp, cfg, 1)
+            r, nblk["bn2"] = layers.batchnorm(blk["bn2"], r, train)
+            h = layers.relu(r + _shortcut(h, c, stride))
+            new[f"s{s}b{b}"] = nblk
+    feats = layers.global_avgpool(h)
+    logits = layers.dense(feats, params["fc"]["w"], params["fc"]["b"])
+    return logits, new, feats
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def init(rng, cfg: ModelConfig) -> Params:
+    if cfg.arch == "lenet":
+        return lenet_init(rng, cfg)
+    if cfg.arch in ("resnet20", "resnet32"):
+        return resnet_init(rng, cfg)
+    raise ValueError(f"unknown arch {cfg.arch!r}")
+
+
+def apply(params: Params, x, pexp, cfg: ModelConfig, train: bool):
+    if cfg.arch == "lenet":
+        return lenet_apply(params, x, pexp, cfg, train)
+    return resnet_apply(params, x, pexp, cfg, train)
+
+
+def is_adder_weight(path: str, cfg: ModelConfig) -> bool:
+    """Adaptive-LR targeting (Eq. 5): adder-family body weights only."""
+    if not cfg.is_adder:
+        return False
+    leaf_is_body = (".l2." in path or ".l3." in path or
+                    (".s" in path and (".c1." in path or ".c2." in path)))
+    return leaf_is_body and path.endswith(".w")

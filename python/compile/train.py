@@ -1,0 +1,135 @@
+"""Layer-2 training graphs: loss, optimizer, train/eval steps for AOT.
+
+The rust coordinator (rust/src/coordinator/train_driver.rs) owns all
+*schedules* — cosine learning rate, the l2-to-l1 exponent p, weight decay
+— and feeds them as scalar runtime inputs; this module owns the math:
+
+  * cross-entropy + accuracy
+  * SGD with momentum and per-adder-layer adaptive LR (paper Eq. 4-5):
+        alpha_l = eta * sqrt(k) / ||grad_l||_2
+    applied to adder-family body weights only (full-precision first/last
+    layers take the plain global LR).
+  * train_step(params, mom, x, y, p, lr) -> (params', mom', loss, acc)
+  * eval_step(params, x) -> (logits, features)
+
+Everything is a pure jit-able function of explicit state so it lowers to
+a single HLO module per (config, batch) pair.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as model_lib
+
+Params = Dict[str, Any]
+
+WEIGHT_DECAY = 1e-4
+MOMENTUM = 0.9
+ADAPTIVE_EPS = 1e-12
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def accuracy(logits, labels):
+    return (jnp.argmax(logits, axis=1) == labels).mean()
+
+
+def _path_str(path) -> str:
+    return "." + ".".join(str(getattr(k, "key", k)) for k in path)
+
+
+def _is_bn_state(path: str) -> bool:
+    return path.endswith(".mean") or path.endswith(".var")
+
+
+def init_momentum(params: Params) -> Params:
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def sgd_update(params: Params, mom: Params, grads: Params, lr, eta,
+               cfg: model_lib.ModelConfig) -> Tuple[Params, Params]:
+    """Momentum SGD with the paper's adaptive per-layer LR (Eq. 4-5).
+
+    For an adder body weight F_l with k elements:
+        delta = lr * eta * sqrt(k) / ||g_l||_2 * (mom-smoothed g_l)
+    BN running stats (mean/var) are state, not optimized: their "grad"
+    slot carries the *new value* and is copied through.
+    """
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    flat_m = jax.tree_util.tree_leaves(mom)
+    flat_g = jax.tree_util.tree_leaves(grads)
+
+    new_p, new_m = [], []
+    for (path, pv), mv, gv in zip(flat_p, flat_m, flat_g):
+        ps = _path_str(path)
+        if _is_bn_state(ps):
+            new_p.append(gv)  # grads slot holds the updated running stat
+            new_m.append(mv)
+            continue
+        g = gv + WEIGHT_DECAY * pv
+        m = MOMENTUM * mv + g
+        if model_lib.is_adder_weight(ps, cfg):
+            k = float(pv.size)
+            scale = eta * jnp.sqrt(k) / (jnp.linalg.norm(m) + ADAPTIVE_EPS)
+            step = lr * scale * m
+        else:
+            step = lr * m
+        new_p.append(pv - step)
+        new_m.append(m)
+    return (jax.tree_util.tree_unflatten(treedef, new_p),
+            jax.tree_util.tree_unflatten(treedef, new_m))
+
+
+def make_train_step(cfg: model_lib.ModelConfig, eta: float = 0.1):
+    """Build the jit-able train step for one model config."""
+
+    def loss_fn(params, x, y, pexp):
+        logits, new_params, _ = model_lib.apply(params, x, pexp, cfg, True)
+        loss = cross_entropy(logits, y)
+        return loss, (new_params, logits)
+
+    def train_step(params, mom, x, y, pexp, lr):
+        (loss, (new_params, logits)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, x, y, pexp)
+        # stash updated BN running stats into the grads pytree so
+        # sgd_update can copy them through in one pass
+        grads = _merge_bn_state(grads, new_params)
+        params, mom = sgd_update(params, mom, grads, lr, eta, cfg)
+        acc = accuracy(logits, y)
+        return params, mom, loss, acc
+
+    return train_step
+
+
+def _merge_bn_state(grads: Params, new_params: Params) -> Params:
+    flat_g = jax.tree_util.tree_flatten_with_path(grads)[0]
+    treedef = jax.tree_util.tree_structure(grads)
+    flat_n = jax.tree_util.tree_leaves(new_params)
+    out = []
+    for (path, gv), nv in zip(flat_g, flat_n):
+        out.append(nv if _is_bn_state(_path_str(path)) else gv)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def make_eval_step(cfg: model_lib.ModelConfig):
+    def eval_step(params, x):
+        logits, _, feats = model_lib.apply(
+            params, x, jnp.float32(1.0), cfg, False)
+        return logits, feats
+
+    return eval_step
+
+
+def param_paths(params: Params):
+    """Flat (path, shape, dtype) in jax tree-flatten order — the exact
+    positional order the AOT HLO expects its parameter literals in."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    return [(_path_str(p), tuple(v.shape), str(v.dtype)) for p, v in flat]

@@ -1,0 +1,206 @@
+"""Winograd F(2,3) / F(2x2,3x3) transform-matrix machinery.
+
+Implements:
+  * the standard Lavin-Gray matrices (paper Eq. 7),
+  * the *general solution* of Theorem 1 (parameterized by the
+    interpolation points c0,c1,c2 and the row scales alpha/beta/gamma/delta),
+  * the four *balanced* output-transform matrices A_0..A_3 of Theorem 2
+    (every column of A has the same number of +1 and -1 entries), together
+    with their matching G_i and B matrices.
+
+All matrices are plain numpy float32/float64; they are baked into jax
+graphs as constants and into the rust side (rust/src/nn/matrices.rs,
+kept in sync by tests/test_transforms.py golden values).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Standard F(2,3) matrices (paper Eq. 7).
+# Conventions: Y = A^T [ (G g G^T) . (B^T d B) ] A  with
+#   A: 4x2, G: 4x3, B: 4x4,  g: 3x3 filter, d: 4x4 input tile, Y: 2x2.
+# ---------------------------------------------------------------------------
+
+A_STD = np.array(
+    [[1, 0],
+     [1, 1],
+     [1, -1],
+     [0, -1]], dtype=np.float64)
+
+G_STD = np.array(
+    [[1, 0, 0],
+     [0.5, 0.5, 0.5],
+     [0.5, -0.5, 0.5],
+     [0, 0, 1]], dtype=np.float64)
+
+B_STD = np.array(
+    [[1, 0, 0, 0],
+     [0, 1, -1, 1],
+     [-1, 1, 1, 0],
+     [0, 0, 0, -1]], dtype=np.float64)
+
+
+def general_f23(c, scales=None):
+    """General solution of Theorem 1 for F(2,3).
+
+    Args:
+      c: three distinct rational interpolation points ``(c0, c1, c2)``.
+      scales: optional ``(a0, a1, b0, b1, g0, g1, d0, d1)`` — the paper's
+        alpha_i, beta_i, gamma_i, delta_i (i = 0, 1) free row scales.
+        Defaults to all ones.
+
+    Returns:
+      (A, G, B): numpy float64 matrices of shapes (4,2), (4,3), (4,4)
+      satisfying the Winograd identity
+      ``y = A^T[(G g) . (B^T d)]`` for 1-D F(2,3).
+    """
+    c0, c1, c2 = (float(x) for x in c)
+    if len({c0, c1, c2}) != 3:
+        raise ValueError("interpolation points must be distinct")
+    if scales is None:
+        scales = (1.0,) * 8
+    a0, a1, b0, b1, g0, g1, d0, d1 = (float(s) for s in scales)
+    for s in (a0, a1, b0, b1, g0, g1, d0, d1):
+        if s == 0.0:
+            raise ValueError("row scales must be non-zero")
+
+    A = np.array(
+        [[a0, -a0 * c0],
+         [b0, -b0 * c1],
+         [g0, -g0 * c2],
+         [0.0, d0]], dtype=np.float64)
+
+    G = np.array(
+        [[a1, -a1 * c0, a1 * c0 ** 2],
+         [b1, -b1 * c1, b1 * c1 ** 2],
+         [g1, -g1 * c2, g1 * c2 ** 2],
+         [0.0, 0.0, d1]], dtype=np.float64)
+    G[0] /= (c1 - c0) * (c2 - c0)
+    G[1] /= (c0 - c1) * (c2 - c1)
+    G[2] /= (c0 - c2) * (c1 - c2)
+
+    B = np.array(
+        [[c1 * c2 / (a0 * a1), c0 * c2 / (b0 * b1),
+          c0 * c1 / (g0 * g1), c0 * c1 * c2 / (d0 * d1)],
+         [(c1 + c2) / (a0 * a1), (c0 + c2) / (b0 * b1),
+          (c0 + c1) / (g0 * g1),
+          (c0 * c1 + c0 * c2 + c1 * c2) / (d0 * d1)],
+         [1.0 / (a0 * a1), 1.0 / (b0 * b1), 1.0 / (g0 * g1),
+          (c0 + c1 + c2) / (d0 * d1)],
+         [0.0, 0.0, 0.0, 1.0 / (d0 * d1)]], dtype=np.float64)
+    # Sanity: at the canonical point c=(0,-1,1) with alpha1=-1, delta0=-1
+    # and all other scales 1 this reproduces (A_STD, G_STD, B_STD)
+    # exactly; tests/test_transforms.py pins both that equality and the
+    # Winograd identity at random points/scales.
+    return A, G, B
+
+
+# ---------------------------------------------------------------------------
+# Balanced matrices (Theorem 2): each column of A has the same number of
+# +1 and -1 (p_i identical across columns), removing the per-position
+# magnitude imbalance of the accumulated -|.| features (paper Sec. 3.2).
+# These are exactly the four A_i the paper lists, with G_i derived from
+# the general solution by choosing the row scales that realize them.
+# ---------------------------------------------------------------------------
+
+A0 = np.array(
+    [[-1, 0],
+     [1, 1],
+     [1, -1],
+     [0, 1]], dtype=np.float64)
+
+A1 = np.array(
+    [[-1, 0],
+     [-1, -1],
+     [1, -1],
+     [0, 1]], dtype=np.float64)
+
+A2 = np.array(
+    [[1, 0],
+     [-1, -1],
+     [-1, 1],
+     [0, -1]], dtype=np.float64)
+
+A3 = np.array(
+    [[1, 0],
+     [1, 1],
+     [-1, 1],
+     [0, -1]], dtype=np.float64)
+
+BALANCED_A = (A0, A1, A2, A3)
+
+
+def _derive_balanced(A):
+    """Derive (G, B) matching a balanced A via the Theorem-1 free scales.
+
+    Standard point set (c0, c1, c2) = (0, -1, 1). A general-solution A is
+      [[a0, 0], [b0, b0], [g0, -g0], [0, d0]].
+    Matching a target A fixes (a0, b0, g0, d0); choosing a1=b1=g1=d1 so
+    that a_i0*a_i1 reproduces the standard products keeps B integer and
+    cheap. We then verify the Winograd identity numerically.
+    """
+    c = (0.0, -1.0, 1.0)
+    a0 = A[0, 0]
+    b0 = A[1, 0]
+    g0 = A[2, 0]
+    d0 = A[3, 1]
+    # Keep the products a0*a1 equal to the standard solution's products so
+    # that B stays the standard (integer) B: standard has a0=1, b0=1,
+    # g0=1, d0=-1 with a1=-1 (paper sets alpha_1=-1, delta_0=-1).
+    a1 = -1.0 / a0
+    b1 = 1.0 / b0
+    g1 = 1.0 / g0
+    d1 = -1.0 / d0
+    _, G, B = general_f23(c, scales=(a0, a1, b0, b1, g0, g1, d0, d1))
+    return G, B
+
+
+_G_B = [_derive_balanced(a) for a in BALANCED_A]
+G0, B0 = _G_B[0]
+G1, B1 = _G_B[1]
+G2, B2 = _G_B[2]
+G3, B3 = _G_B[3]
+BALANCED_G = (G0, G1, G2, G3)
+BALANCED_B = (B0, B1, B2, B3)
+
+
+def matrices(variant="A0"):
+    """Return (A, G, B) for a named variant.
+
+    Variants: "std" (paper Eq. 7) or "A0".."A3" (Theorem 2 balanced).
+    """
+    if variant == "std":
+        return A_STD, G_STD, B_STD
+    if variant.startswith("A") and variant[1:] in "0123" and len(variant) == 2:
+        i = int(variant[1])
+        return BALANCED_A[i], BALANCED_G[i], BALANCED_B[i]
+    raise ValueError(f"unknown transform variant: {variant!r}")
+
+
+def column_balance(A):
+    """Return per-column (num(+1), num(-1)) of a 4x2 output transform."""
+    out = []
+    for j in range(A.shape[1]):
+        col = A[:, j]
+        out.append((int((col == 1).sum()), int((col == -1).sum())))
+    return out
+
+
+def is_balanced(A):
+    """Theorem 2 criterion: all columns share the same p_i (#+1)."""
+    bal = column_balance(A)
+    ks = {p + m for p, m in bal}
+    ps = {p for p, _ in bal}
+    return len(ks) == 1 and len(ps) == 1
+
+
+def output_position_signs(A):
+    """Sign pattern of A^T X A per output position.
+
+    Returns a (2, 2, 4, 4) array S with Y[i,j] = sum_kl S[i,j,k,l]*X[k,l];
+    used by tests and by the Fig.-4 grid-artifact analysis to show the
+    add/minus imbalance of the standard A.
+    """
+    S = np.einsum("ki,lj->ijkl", A, A)
+    return S

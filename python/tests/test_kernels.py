@@ -1,0 +1,165 @@
+"""L1 Pallas kernels vs the pure-jnp oracles (hypothesis shape sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.adder_conv import adder_conv2d, adder_patches
+from compile.kernels.winograd_adder import (winograd_adder_conv2d,
+                                            wino_adder_tiles)
+from compile.kernels.winograd_conv import winograd_conv2d, wino_conv_tiles
+
+RNG = np.random.default_rng(42)
+
+
+def rand(*shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+# shape strategies: small but non-trivial, even H/W (F(2x2,3x3) tiling)
+sizes = st.tuples(
+    st.integers(1, 3),                       # N
+    st.integers(1, 9),                       # Cin
+    st.sampled_from([4, 6, 8, 10, 14]),      # H == W (even)
+    st.integers(1, 9),                       # Cout
+)
+
+
+class TestReferenceOracles:
+    """The oracles agree with each other where math says they must."""
+
+    @given(sizes)
+    @settings(max_examples=25, deadline=None)
+    def test_winograd_conv_equals_conv(self, dims):
+        n, cin, hw, cout = dims
+        x, w = rand(n, cin, hw, hw), rand(cout, cin, 3, 3)
+        for variant in ("std", "A0", "A2"):
+            np.testing.assert_allclose(
+                ref.winograd_conv2d_ref(x, w, variant=variant),
+                ref.conv2d_ref(x, w), rtol=1e-4, atol=1e-4)
+
+    @given(sizes)
+    @settings(max_examples=25, deadline=None)
+    def test_adder_matches_bruteforce(self, dims):
+        n, cin, hw, cout = dims
+        x, w = rand(n, cin, hw, hw), rand(cout, cin, 3, 3)
+        got = np.asarray(ref.adder_conv2d_ref(x, w, pad=1))
+        xp = np.asarray(ref.pad_same(x, 1))
+        want = np.zeros_like(got)
+        for b in range(n):
+            for o in range(cout):
+                for i in range(hw):
+                    for j in range(hw):
+                        patch = xp[b, :, i:i + 3, j:j + 3]
+                        want[b, o, i, j] = -np.abs(
+                            np.asarray(w)[o] - patch).sum()
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_winograd_adder_differs_from_adder(self):
+        """Eq. 9 is NOT equal to Eq. 1 (no distributive law for l1) —
+        the whole reason the paper needs Sec. 3.2/3.3."""
+        x, w = rand(1, 4, 8, 8), rand(4, 4, 3, 3)
+        w_hat = ref.kernel_transform(w, "A0")
+        ya = ref.adder_conv2d_ref(x, w)
+        yw = ref.winograd_adder_conv2d_ref(x, w_hat, variant="A0")
+        assert float(jnp.abs(ya - yw).max()) > 1e-2
+
+    def test_wino_adder_p2_is_smooth_l2(self):
+        """At p=2 the elementwise stage is the l2 form of Sec. 3.3."""
+        d_hat, w_hat = rand(6, 3, 16), rand(4, 3, 16)
+        got = ref.winograd_adder_from_dhat_ref(d_hat, w_hat, p=2.0)
+        want = -((w_hat[None] - d_hat[:, None]) ** 2).sum(axis=2)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_flat_transform_matrices(self):
+        """S and R reproduce the einsum transforms exactly."""
+        m = rand(5, 4, 4)
+        S = jnp.asarray(ref.output_transform_matrix("A0"), jnp.float32)
+        got = (m.reshape(5, 16) @ S).reshape(5, 2, 2)
+        np.testing.assert_allclose(got, ref.output_transform(m, "A0"),
+                                   rtol=1e-5, atol=1e-5)
+        d = rand(5, 4, 4)
+        R = jnp.asarray(ref.input_transform_matrix("A0"), jnp.float32)
+        got = (d.reshape(5, 16) @ R).reshape(5, 4, 4)
+        np.testing.assert_allclose(got, ref.input_transform(d, "A0"),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_tile_untile_roundtrip(self):
+        x = rand(2, 3, 8, 8)
+        tiles = ref.extract_tiles(x)
+        assert tiles.shape == (2, 3, 3, 3, 4, 4)
+        # tile (0,0) is the top-left 4x4 window
+        np.testing.assert_allclose(tiles[0, 0, 0, 0], x[0, 0, :4, :4])
+        # tile (1,1) starts at (2,2)
+        np.testing.assert_allclose(tiles[0, 0, 1, 1], x[0, 0, 2:6, 2:6])
+
+
+class TestPallasKernels:
+    @given(sizes)
+    @settings(max_examples=12, deadline=None)
+    def test_winograd_adder_full_layer(self, dims):
+        n, cin, hw, cout = dims
+        x = rand(n, cin, hw, hw)
+        w_hat = rand(cout, cin, 4, 4)
+        got = winograd_adder_conv2d(x, w_hat, variant="A0")
+        want = ref.winograd_adder_conv2d_ref(x, w_hat, variant="A0")
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @given(sizes)
+    @settings(max_examples=12, deadline=None)
+    def test_adder_full_layer(self, dims):
+        n, cin, hw, cout = dims
+        x, w = rand(n, cin, hw, hw), rand(cout, cin, 3, 3)
+        np.testing.assert_allclose(
+            adder_conv2d(x, w), ref.adder_conv2d_ref(x, w),
+            rtol=1e-4, atol=1e-4)
+
+    @given(sizes)
+    @settings(max_examples=12, deadline=None)
+    def test_winograd_conv_full_layer(self, dims):
+        n, cin, hw, cout = dims
+        x, w = rand(n, cin, hw, hw), rand(cout, cin, 3, 3)
+        np.testing.assert_allclose(
+            winograd_conv2d(x, w, variant="A0"), ref.conv2d_ref(x, w),
+            rtol=1e-3, atol=1e-3)
+
+    @given(st.integers(1, 200), st.integers(1, 40), st.integers(1, 40))
+    @settings(max_examples=15, deadline=None)
+    def test_wino_adder_tiles_odd_shapes(self, t, c, o):
+        """Padding logic: arbitrary (non-multiple-of-block) T, C, O."""
+        d_hat, w_hat = rand(t, c, 16), rand(o, c, 16)
+        got = wino_adder_tiles(d_hat, w_hat, variant="A0")
+        m = ref.winograd_adder_from_dhat_ref(d_hat, w_hat)
+        S = jnp.asarray(ref.output_transform_matrix("A0"), jnp.float32)
+        want = m @ S
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @given(st.integers(1, 200), st.integers(1, 300))
+    @settings(max_examples=15, deadline=None)
+    def test_adder_patches_odd_shapes(self, t, k):
+        patches, w = rand(t, k), rand(5, k)
+        np.testing.assert_allclose(
+            adder_patches(patches, w),
+            ref.adder_from_patches_ref(patches, w), rtol=1e-4, atol=1e-4)
+
+    def test_wino_conv_tiles(self):
+        d_hat, w_hat = rand(70, 9, 16), rand(11, 9, 16)
+        got = wino_conv_tiles(d_hat, w_hat, variant="A0")
+        m = ref.winograd_mul_from_dhat_ref(d_hat, w_hat)
+        S = jnp.asarray(ref.output_transform_matrix("A0"), jnp.float32)
+        np.testing.assert_allclose(got, m @ S, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("variant", ["std", "A0", "A1", "A2", "A3"])
+    def test_all_variants(self, variant):
+        x, w_hat = rand(1, 3, 8, 8), rand(5, 3, 4, 4)
+        got = winograd_adder_conv2d(x, w_hat, variant=variant)
+        want = ref.winograd_adder_conv2d_ref(x, w_hat, variant=variant)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_impl_ref_dispatch(self):
+        x, w_hat = rand(1, 3, 8, 8), rand(5, 3, 4, 4)
+        np.testing.assert_allclose(
+            winograd_adder_conv2d(x, w_hat, impl="ref"),
+            ref.winograd_adder_conv2d_ref(x, w_hat), rtol=1e-6)

@@ -1,0 +1,187 @@
+"""custom_vjp gradient correctness (Eq. 2-3, 24-28) + layer wrappers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def rand(*shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+def numeric_grad(f, x, eps=1e-3):
+    x = np.asarray(x, np.float64)
+    g = np.zeros_like(x)
+    it = np.nditer(x, flags=["multi_index"])
+    while not it.finished:
+        idx = it.multi_index
+        xp, xm = x.copy(), x.copy()
+        xp[idx] += eps
+        xm[idx] -= eps
+        g[idx] = (float(f(jnp.asarray(xp, jnp.float32)))
+                  - float(f(jnp.asarray(xm, jnp.float32)))) / (2 * eps)
+        it.iternext()
+    return g
+
+
+class TestLpAdderGradients:
+    @pytest.mark.parametrize("p", [2.0, 1.7, 1.3])
+    def test_grad_x_matches_finite_diff(self, p):
+        """For p > 1 the lp forward is differentiable a.e. and the custom
+        vjp (Eq. 24) must equal the numeric gradient."""
+        patches, w = rand(3, 5), rand(2, 5)
+        pj = jnp.float32(p)
+
+        def loss_x(x):
+            return layers.lp_adder(x, w, pj).sum()
+
+        gx = jax.grad(loss_x)(patches)
+        np.testing.assert_allclose(gx, numeric_grad(loss_x, patches),
+                                   rtol=2e-2, atol=2e-2)
+
+    @pytest.mark.parametrize("p", [2.0, 1.5])
+    def test_grad_w_matches_finite_diff(self, p):
+        patches, w = rand(3, 5), rand(2, 5)
+        pj = jnp.float32(p)
+
+        def loss_w(wv):
+            return layers.lp_adder(patches, wv, pj).sum()
+
+        gw = jax.grad(loss_w)(w)
+        np.testing.assert_allclose(gw, numeric_grad(loss_w, w),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_p1_gives_sign_gradients(self):
+        """At p=1 the backward degenerates to Eq. 27-28 (pure signs)."""
+        patches, w = rand(4, 6), rand(3, 6)
+        g = jax.grad(lambda x: layers.lp_adder(x, w, jnp.float32(1.0)).sum())(
+            patches)
+        t = np.asarray(w)[None] - np.asarray(patches)[:, None]  # (T,O,K)
+        want = np.sign(t).sum(axis=1)  # summed over O by the .sum() loss
+        np.testing.assert_allclose(g, want, atol=1e-5)
+
+    def test_p2_forward_is_negative_sq_l2(self):
+        patches, w = rand(4, 6), rand(3, 6)
+        y = layers.lp_adder(patches, w, jnp.float32(2.0))
+        want = -((np.asarray(w)[None] - np.asarray(patches)[:, None]) ** 2
+                 ).sum(-1)
+        np.testing.assert_allclose(y, want, rtol=1e-5, atol=1e-5)
+
+    def test_p_receives_zero_cotangent(self):
+        patches, w = rand(2, 3), rand(2, 3)
+        gp = jax.grad(
+            lambda p: layers.lp_adder(patches, w, p).sum())(jnp.float32(1.5))
+        assert float(gp) == 0.0
+
+
+class TestL2HTGradients:
+    def test_forward_is_l1(self):
+        patches, w = rand(4, 6), rand(3, 6)
+        np.testing.assert_allclose(
+            layers.adder_l2ht(patches, w),
+            ref.adder_from_patches_ref(patches, w), rtol=1e-5, atol=1e-5)
+
+    def test_grad_w_is_l2_style(self):
+        """Eq. 2: dY/dF = X - F (full-precision difference, not sign)."""
+        patches, w = rand(4, 6), rand(3, 6)
+        gw = jax.grad(lambda wv: layers.adder_l2ht(patches, wv).sum())(w)
+        t = np.asarray(w)[None] - np.asarray(patches)[:, None]
+        want = (-t).sum(axis=0)  # sum over T from the .sum() loss
+        np.testing.assert_allclose(gw, want, rtol=1e-4, atol=1e-4)
+
+    def test_grad_x_is_hardtanh(self):
+        """Eq. 3: dY/dX = HT(F - X), clipped to [-1, 1]."""
+        patches = rand(4, 6) * 3.0  # ensure some |t| > 1
+        w = rand(3, 6) * 3.0
+        gx = jax.grad(lambda x: layers.adder_l2ht(x, w).sum())(patches)
+        t = np.asarray(w)[None] - np.asarray(patches)[:, None]
+        want = np.clip(t, -1, 1).sum(axis=1)
+        np.testing.assert_allclose(gx, want, rtol=1e-4, atol=1e-4)
+        assert (np.abs(t) > 1).any()  # clipping actually exercised
+
+
+class TestWinoLpAdder:
+    def test_forward_matches_ref(self):
+        d_hat, w_hat = rand(5, 3, 16), rand(4, 3, 16)
+        for p in (1.0, 1.5, 2.0):
+            np.testing.assert_allclose(
+                layers.wino_lp_adder(d_hat, w_hat, jnp.float32(p)),
+                ref.winograd_adder_from_dhat_ref(d_hat, w_hat, p=p),
+                rtol=1e-4, atol=1e-4)
+
+    def test_grad_matches_finite_diff(self):
+        d_hat, w_hat = rand(2, 2, 16), rand(2, 2, 16)
+        pj = jnp.float32(1.8)
+
+        def loss_d(d):
+            return layers.wino_lp_adder(d, w_hat, pj).sum()
+
+        gd = jax.grad(loss_d)(d_hat)
+        np.testing.assert_allclose(gd, numeric_grad(loss_d, d_hat),
+                                   rtol=3e-2, atol=3e-2)
+
+
+class TestLayerWrappers:
+    def test_adder3x3_matches_ref(self):
+        x, w = rand(2, 3, 8, 8), rand(4, 3, 3, 3)
+        y = layers.adder3x3(x, w, jnp.float32(1.0))
+        np.testing.assert_allclose(y, ref.adder_conv2d_ref(x, w),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_adder3x3_stride2(self):
+        x, w = rand(2, 3, 8, 8), rand(4, 3, 3, 3)
+        y = layers.adder3x3(x, w, jnp.float32(1.0), stride=2)
+        full = ref.adder_conv2d_ref(x, w)
+        np.testing.assert_allclose(y, full[:, :, ::2, ::2],
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_wino_adder3x3_matches_ref(self):
+        x, w_hat = rand(2, 3, 8, 8), rand(4, 3, 4, 4)
+        y = layers.wino_adder3x3(x, w_hat, jnp.float32(1.0), variant="A0")
+        np.testing.assert_allclose(
+            y, ref.winograd_adder_conv2d_ref(x, w_hat, variant="A0"),
+            rtol=1e-4, atol=1e-4)
+
+    def test_wino_conv3x3_matches_conv(self):
+        x, w = rand(2, 3, 8, 8), rand(4, 3, 3, 3)
+        w_hat = ref.kernel_transform(w, "A0")
+        y = layers.wino_conv3x3(x, w_hat, variant="A0")
+        np.testing.assert_allclose(y, ref.conv2d_ref(x, w),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_conv3x3_stride(self):
+        x, w = rand(2, 3, 8, 8), rand(4, 3, 3, 3)
+        np.testing.assert_allclose(
+            layers.conv3x3(x, w, stride=2),
+            ref.conv2d_ref(x, w)[:, :, ::2, ::2], rtol=1e-4, atol=1e-4)
+
+    def test_batchnorm_train_normalizes(self):
+        x = rand(8, 4, 6, 6) * 5 + 3
+        p = layers.batchnorm_init(4)
+        y, newp = layers.batchnorm(p, x, train=True)
+        np.testing.assert_allclose(np.asarray(y).mean(axis=(0, 2, 3)),
+                                   np.zeros(4), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(y).var(axis=(0, 2, 3)),
+                                   np.ones(4), atol=1e-2)
+        # running stats moved toward batch stats
+        assert not np.allclose(newp["mean"], p["mean"])
+
+    def test_batchnorm_eval_uses_running(self):
+        x = rand(8, 4, 6, 6)
+        p = layers.batchnorm_init(4)
+        y, newp = layers.batchnorm(p, x, train=False)
+        np.testing.assert_allclose(y, x, rtol=1e-4, atol=1e-4)
+        assert newp is p
+
+    def test_pools(self):
+        x = rand(2, 3, 8, 8)
+        assert layers.maxpool2(x).shape == (2, 3, 4, 4)
+        assert layers.avgpool2(x).shape == (2, 3, 4, 4)
+        np.testing.assert_allclose(layers.global_avgpool(x),
+                                   np.asarray(x).mean(axis=(2, 3)),
+                                   rtol=1e-5, atol=1e-6)

@@ -1,0 +1,181 @@
+"""L2 model shapes, training dynamics, and AOT manifest consistency."""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train as T
+
+RNG = np.random.default_rng(11)
+
+ALL_MODES = ["conv", "wino_conv", "adder", "wino_adder"]
+
+
+def batch(cfg, n=4):
+    x = jnp.asarray(RNG.normal(size=(n, cfg.in_channels, cfg.image_size,
+                                     cfg.image_size)), jnp.float32)
+    y = jnp.asarray(RNG.integers(0, cfg.num_classes, n))
+    return x, y
+
+
+class TestModelShapes:
+    @pytest.mark.parametrize("mode", ALL_MODES)
+    def test_lenet_shapes(self, mode):
+        cfg = M.ModelConfig(arch="lenet", mode=mode)
+        params = M.init(jax.random.PRNGKey(0), cfg)
+        x, _ = batch(cfg)
+        logits, newp, feats = M.apply(params, x, jnp.float32(1.0), cfg, True)
+        assert logits.shape == (4, 10)
+        assert feats.shape[0] == 4
+
+    @pytest.mark.parametrize("mode", ALL_MODES)
+    def test_resnet20_shapes(self, mode):
+        cfg = M.ModelConfig(arch="resnet20", mode=mode, in_channels=3)
+        params = M.init(jax.random.PRNGKey(0), cfg)
+        x, _ = batch(cfg)
+        logits, _, feats = M.apply(params, x, jnp.float32(1.0), cfg, False)
+        assert logits.shape == (4, 10)
+        assert feats.shape == (4, 16)  # width_mult 0.25 -> 16 final channels
+
+    def test_resnet32_has_more_blocks(self):
+        c20 = M.ModelConfig(arch="resnet20", in_channels=3)
+        c32 = M.ModelConfig(arch="resnet32", in_channels=3)
+        p20 = M.init(jax.random.PRNGKey(0), c20)
+        p32 = M.init(jax.random.PRNGKey(0), c32)
+        assert len(p32) > len(p20)
+        x, _ = batch(c32)
+        logits, _, _ = M.apply(p32, x, jnp.float32(1.0), c32, False)
+        assert logits.shape == (4, 10)
+
+    def test_weight_modes_shapes(self):
+        for wm, last_dims in [("init_wino", (4, 4)),
+                              ("init_adder_transform", (4, 4)),
+                              ("kt", (3, 3))]:
+            cfg = M.ModelConfig(arch="lenet", mode="wino_adder",
+                                weight_mode=wm)
+            params = M.init(jax.random.PRNGKey(0), cfg)
+            assert params["l2"]["w"].shape[-2:] == last_dims
+            x, _ = batch(cfg)
+            logits, _, _ = M.apply(params, x, jnp.float32(1.0), cfg, True)
+            assert logits.shape == (4, 10)
+
+    def test_adder_outputs_nonpositive(self):
+        """Eq. 1: adder layer outputs are always <= 0 — the magnitude
+        asymmetry motivating the balanced A (Sec. 3.1)."""
+        from compile import layers
+        x = jnp.asarray(RNG.normal(size=(2, 3, 8, 8)), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(4, 3, 3, 3)), jnp.float32)
+        y = layers.adder3x3(x, w, jnp.float32(1.0))
+        assert float(y.max()) <= 0.0
+
+
+class TestTraining:
+    @pytest.mark.parametrize("mode", ALL_MODES)
+    def test_loss_decreases(self, mode):
+        cfg = M.ModelConfig(arch="lenet", mode=mode)
+        params = M.init(jax.random.PRNGKey(0), cfg)
+        mom = T.init_momentum(params)
+        x, y = batch(cfg, n=16)
+        step = jax.jit(T.make_train_step(cfg))
+        first = None
+        for i in range(15):
+            params, mom, loss, acc = step(params, mom, x, y,
+                                          jnp.float32(2.0), jnp.float32(0.05))
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first * 0.7, (first, float(loss))
+
+    def test_p_anneal_no_explosion(self):
+        """Reducing p from 2 to 1 mid-training keeps the loss finite and
+        the weights sane (the l2-to-l1 strategy of Sec. 3.3)."""
+        cfg = M.ModelConfig(arch="lenet", mode="wino_adder")
+        params = M.init(jax.random.PRNGKey(0), cfg)
+        mom = T.init_momentum(params)
+        x, y = batch(cfg, n=16)
+        step = jax.jit(T.make_train_step(cfg))
+        for i in range(20):
+            p = jnp.float32(max(1.0, 2.0 - i * 0.1))
+            params, mom, loss, acc = step(params, mom, x, y, p,
+                                          jnp.float32(0.02))
+            assert np.isfinite(float(loss)), i
+        for leaf in jax.tree_util.tree_leaves(params):
+            assert np.isfinite(np.asarray(leaf)).all()
+
+    def test_adaptive_lr_targets_adder_weights_only(self):
+        cfg = M.ModelConfig(arch="lenet", mode="wino_adder")
+        assert M.is_adder_weight(".l2.w", cfg)
+        assert M.is_adder_weight(".l3.w", cfg)
+        assert not M.is_adder_weight(".conv1.w", cfg)
+        assert not M.is_adder_weight(".fc1.w", cfg)
+        assert not M.is_adder_weight(".bn2.gamma", cfg)
+        conv_cfg = M.ModelConfig(arch="lenet", mode="conv")
+        assert not M.is_adder_weight(".l2.w", conv_cfg)
+
+    def test_bn_running_stats_update_through_train_step(self):
+        cfg = M.ModelConfig(arch="lenet", mode="adder")
+        params = M.init(jax.random.PRNGKey(0), cfg)
+        mom = T.init_momentum(params)
+        x, y = batch(cfg, n=16)
+        step = jax.jit(T.make_train_step(cfg))
+        p2, _, _, _ = step(params, mom, x, y, jnp.float32(2.0),
+                           jnp.float32(0.05))
+        assert not np.allclose(p2["bn1"]["mean"], params["bn1"]["mean"])
+
+    def test_eval_step_deterministic(self):
+        cfg = M.ModelConfig(arch="lenet", mode="wino_adder")
+        params = M.init(jax.random.PRNGKey(0), cfg)
+        x, _ = batch(cfg, n=8)
+        ev = jax.jit(T.make_eval_step(cfg))
+        l1, f1 = ev(params, x)
+        l2, f2 = ev(params, x)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+    def test_cross_entropy_and_accuracy(self):
+        logits = jnp.asarray([[10.0, 0.0], [0.0, 10.0], [10.0, 0.0]])
+        labels = jnp.asarray([0, 1, 1])
+        assert float(T.cross_entropy(logits, labels)) > 0
+        np.testing.assert_allclose(float(T.accuracy(logits, labels)),
+                                   2 / 3, rtol=1e-6)
+
+
+class TestManifest:
+    """AOT artifact consistency (runs only if artifacts were built)."""
+
+    @pytest.fixture()
+    def manifest(self):
+        path = pathlib.Path(__file__).parents[2] / "artifacts/manifest.json"
+        if not path.exists():
+            pytest.skip("artifacts not built")
+        return json.loads(path.read_text()), path.parent
+
+    def test_param_order_matches_tree_flatten(self, manifest):
+        man, _ = manifest
+        entry = man["models"]["lenet_wino_adder"]
+        cfg = M.ModelConfig(**entry["config"])
+        params = M.init(jax.random.PRNGKey(0), cfg)
+        paths = T.param_paths(params)
+        assert len(paths) == entry["num_param_leaves"]
+        for (n, s, d), spec in zip(paths, entry["params"]):
+            assert n == spec["name"]
+            assert list(s) == spec["shape"]
+
+    def test_params_bin_roundtrip(self, manifest):
+        man, root = manifest
+        entry = man["models"]["lenet_wino_adder"]
+        cfg = M.ModelConfig(**entry["config"])
+        params = M.init(jax.random.PRNGKey(0), cfg)
+        want = np.concatenate([np.asarray(v, np.float32).reshape(-1)
+                               for v in jax.tree_util.tree_leaves(params)])
+        got = np.fromfile(root / entry["params_bin"], "<f4")
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+    def test_every_model_hlo_exists(self, manifest):
+        man, root = manifest
+        for name, entry in man["models"].items():
+            assert (root / entry["train_hlo"]).exists(), name
+            assert (root / entry["eval_hlo"]).exists(), name
+            assert (root / entry["params_bin"]).exists(), name

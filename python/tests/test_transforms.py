@@ -1,0 +1,153 @@
+"""Transform-matrix machinery: Theorems 1 & 2, exact identities."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import transforms as T
+
+RNG = np.random.default_rng(0)
+
+
+def conv1d_f23(d, g):
+    """Correlation F(2,3): y_i = sum_j d[i+j] g[j]."""
+    return np.array([np.dot(d[i:i + 3], g) for i in range(2)])
+
+
+def conv2d_f23(d, g):
+    out = np.zeros((2, 2))
+    for i in range(2):
+        for j in range(2):
+            out[i, j] = (d[i:i + 3, j:j + 3] * g).sum()
+    return out
+
+
+def wino1d(A, G, B, d, g):
+    return A.T @ ((G @ g) * (B.T @ d))
+
+
+def wino2d(A, G, B, d, g):
+    return A.T @ ((G @ g @ G.T) * (B.T @ d @ B)) @ A
+
+
+class TestStandardMatrices:
+    def test_shapes(self):
+        assert T.A_STD.shape == (4, 2)
+        assert T.G_STD.shape == (4, 3)
+        assert T.B_STD.shape == (4, 4)
+
+    def test_identity_1d(self):
+        for _ in range(50):
+            d, g = RNG.normal(size=4), RNG.normal(size=3)
+            np.testing.assert_allclose(
+                wino1d(T.A_STD, T.G_STD, T.B_STD, d, g),
+                conv1d_f23(d, g), atol=1e-12)
+
+    def test_identity_2d(self):
+        for _ in range(20):
+            d, g = RNG.normal(size=(4, 4)), RNG.normal(size=(3, 3))
+            np.testing.assert_allclose(
+                wino2d(T.A_STD, T.G_STD, T.B_STD, d, g),
+                conv2d_f23(d, g), atol=1e-12)
+
+    def test_std_A_is_unbalanced(self):
+        # the motivation for Theorem 2: standard A columns have p=3 vs p=1
+        assert not T.is_balanced(T.A_STD)
+        bal = T.column_balance(T.A_STD)
+        assert bal[0] == (3, 0) and bal[1] == (1, 2)
+
+
+class TestTheorem1:
+    def test_canonical_point_reproduces_standard(self):
+        A, G, B = T.general_f23((0, -1, 1),
+                                scales=(1, -1, 1, 1, 1, 1, -1, 1))
+        np.testing.assert_allclose(A, T.A_STD, atol=1e-12)
+        np.testing.assert_allclose(G, T.G_STD, atol=1e-12)
+        np.testing.assert_allclose(B, T.B_STD, atol=1e-12)
+
+    @given(st.tuples(
+        st.integers(-3, 3), st.integers(-3, 3), st.integers(-3, 3)))
+    @settings(max_examples=60, deadline=None)
+    def test_identity_any_distinct_points(self, c):
+        if len(set(c)) != 3:
+            return
+        A, G, B = T.general_f23(c)
+        d, g = RNG.normal(size=4), RNG.normal(size=3)
+        np.testing.assert_allclose(wino1d(A, G, B, d, g),
+                                   conv1d_f23(d, g), atol=1e-8)
+
+    @given(st.lists(st.floats(min_value=-4, max_value=4), min_size=8,
+                    max_size=8))
+    @settings(max_examples=60, deadline=None)
+    def test_identity_any_scales(self, scales):
+        if any(abs(s) < 0.05 for s in scales):
+            return
+        A, G, B = T.general_f23((0, -1, 1), scales=scales)
+        d, g = RNG.normal(size=4), RNG.normal(size=3)
+        np.testing.assert_allclose(wino1d(A, G, B, d, g),
+                                   conv1d_f23(d, g), atol=1e-7)
+
+    def test_rejects_degenerate(self):
+        with pytest.raises(ValueError):
+            T.general_f23((0, 0, 1))
+        with pytest.raises(ValueError):
+            T.general_f23((0, -1, 1), scales=(0,) * 8)
+
+
+class TestTheorem2:
+    def test_all_four_balanced(self):
+        for A in T.BALANCED_A:
+            assert T.is_balanced(A)
+
+    def test_match_paper_transposes(self):
+        # the A_i^T listed in Sec. 3.2
+        a0t = np.array([[-1, 1, 1, 0], [0, 1, -1, 1]])
+        a1t = np.array([[-1, -1, 1, 0], [0, -1, -1, 1]])
+        a2t = np.array([[1, -1, -1, 0], [0, -1, 1, -1]])
+        a3t = np.array([[1, 1, -1, 0], [0, 1, 1, -1]])
+        for A, At in zip(T.BALANCED_A, (a0t, a1t, a2t, a3t)):
+            np.testing.assert_array_equal(A.T, At)
+
+    def test_balanced_identity_2d(self):
+        """Requirement 2 of Sec. 3.2: modified matrices stay a valid
+        Winograd algorithm for multiplication-based convolution."""
+        for A, G, B in zip(T.BALANCED_A, T.BALANCED_G, T.BALANCED_B):
+            for _ in range(10):
+                d = RNG.normal(size=(4, 4))
+                g = RNG.normal(size=(3, 3))
+                np.testing.assert_allclose(wino2d(A, G, B, d, g),
+                                           conv2d_f23(d, g), atol=1e-10)
+
+    def test_balanced_B_is_standard(self):
+        # our derivation keeps B integer (= standard B): zero extra cost
+        for B in T.BALANCED_B:
+            np.testing.assert_allclose(B, T.B_STD, atol=1e-12)
+
+    def test_entries_are_signed_units(self):
+        for A in T.BALANCED_A:
+            assert set(np.unique(A)).issubset({-1.0, 0.0, 1.0})
+
+    def test_output_sign_balance(self):
+        """Theorem 2's payoff: with balanced A every output position of
+        A^T X A has the same number of + and - contributions; with the
+        standard A they differ (the Fig. 4 grid artifact)."""
+        def pm_counts(A):
+            S = T.output_position_signs(A)
+            return [(int((S[i, j] > 0).sum()), int((S[i, j] < 0).sum()))
+                    for i in range(2) for j in range(2)]
+
+        for A in T.BALANCED_A:
+            counts = pm_counts(A)
+            assert len(set(counts)) == 1, counts
+        std_counts = pm_counts(T.A_STD)
+        assert len(set(std_counts)) > 1
+
+
+class TestMatricesAPI:
+    def test_variants(self):
+        for v in ("std", "A0", "A1", "A2", "A3"):
+            A, G, B = T.matrices(v)
+            assert A.shape == (4, 2) and G.shape == (4, 3) and B.shape == (4, 4)
+
+    def test_unknown_variant(self):
+        with pytest.raises(ValueError):
+            T.matrices("A9")

@@ -1,0 +1,52 @@
+//! Shared timing kit for the `harness = false` benches (criterion is
+//! unavailable offline). Adaptive iteration count, warmup, median +
+//! min/max over repeats.
+
+use std::time::Instant;
+
+/// Measure `f`, printing `name: median time/iter (min..max, n iters)`.
+/// Returns the median seconds/iter.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> f64 {
+    // warmup + calibrate iteration count to ~0.2s per repeat
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((0.2 / once) as usize).clamp(1, 1_000_000);
+    let repeats = 5;
+    let mut samples = Vec::with_capacity(repeats);
+    for _ in 0..repeats {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t.elapsed().as_secs_f64() / iters as f64);
+    }
+    samples.sort_by(f64::total_cmp);
+    let median = samples[repeats / 2];
+    println!(
+        "  {name}: {} / iter  (min {}, max {}, {iters} iters x {repeats})",
+        fmt_time(median),
+        fmt_time(samples[0]),
+        fmt_time(samples[repeats - 1])
+    );
+    median
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}us", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+/// Giga-ops/s helper for throughput reporting.
+#[allow(dead_code)]
+pub fn gops(ops_per_iter: f64, secs_per_iter: f64) -> f64 {
+    ops_per_iter / secs_per_iter / 1e9
+}
+

@@ -1,0 +1,47 @@
+//! Figure 1 regeneration: relative power of {CNN, Winograd CNN,
+//! AdderNet, Winograd AdderNet} under the op-level energy model,
+//! for ResNet-20/32 (CIFAR) and ResNet-18 (ImageNet).
+//!
+//! Run: `cargo bench --bench fig1_energy`
+
+use wino_adder::energy::{figure1, paper_figure1, EnergyTable};
+use wino_adder::opcount::{resnet18_imagenet, resnet20, resnet32};
+
+fn main() {
+    println!("=== Figure 1 — relative power (normalized to Winograd \
+              AdderNet) ===\n");
+    for (model, layers) in [("ResNet-20", resnet20()),
+                            ("ResNet-32", resnet32()),
+                            ("ResNet-18/ImageNet", resnet18_imagenet())] {
+        println!("{model}:");
+        for table in [EnergyTable::fpga_calibrated(),
+                      EnergyTable::horowitz()] {
+            let bars = figure1(&layers, &table);
+            let line: Vec<String> = bars
+                .iter()
+                .map(|b| format!("{} {:.2}", b.mode.name(), b.relative))
+                .collect();
+            println!("  [{}] {}", table.name, line.join(" | "));
+            // invariant: the paper's ordering must hold
+            assert!(bars[0].relative > bars[1].relative);
+            assert!(bars[1].relative > bars[2].relative);
+            assert!(bars[2].relative > bars[3].relative);
+        }
+    }
+    println!("\npaper (ResNet-20 class, measured):");
+    let line: Vec<String> = paper_figure1()
+        .iter()
+        .map(|(m, v)| format!("{} {v:.2}", m.name()))
+        .collect();
+    println!("  {}", line.join(" | "));
+
+    // residuals vs paper for the calibrated table (reported in
+    // EXPERIMENTS.md §Fig1)
+    let bars = figure1(&resnet20(), &EnergyTable::fpga_calibrated());
+    println!("\nresiduals vs paper (fpga-calibrated):");
+    for (bar, (_, want)) in bars.iter().zip(paper_figure1()) {
+        println!("  {:<18} ours {:.2}  paper {want:.2}  err {:+.1}%",
+                 bar.mode.name(), bar.relative,
+                 100.0 * (bar.relative - want) / want);
+    }
+}

@@ -1,0 +1,106 @@
+//! Hot-path performance benches (EXPERIMENTS.md §Perf).
+//!
+//! Layers measured:
+//!  * L3-native: the rust wino-adder/adder kernels (serving fallback) —
+//!    Gadds/s on the paper's FPGA benchmark layer.
+//!  * L1/L2 via PJRT: the AOT Pallas layer artifacts end-to-end
+//!    (load -> execute), per batch bucket.
+//!  * transforms: input-tile extraction + B^T d B throughput.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+#[path = "benchkit.rs"]
+mod benchkit;
+use benchkit::{bench, gops};
+
+use std::path::PathBuf;
+use wino_adder::nn::adder::{adder_conv2d_fast, l1_distance_matrix};
+use wino_adder::nn::wino_adder::{input_tiles, wino_adder_tiles,
+                                 winograd_adder_conv2d_fast};
+use wino_adder::nn::quant::{quantize_wino_weights, requantize_pair,
+                            winograd_adder_conv2d_i8};
+use wino_adder::nn::{matrices, Tensor};
+use wino_adder::runtime::{Engine, Manifest};
+use wino_adder::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(42);
+    // the paper's FPGA benchmark layer: (1,16,28,28) x (16,16,3,3)
+    let x = Tensor::randn(&mut rng, [1, 16, 28, 28]);
+    let w3 = Tensor::randn(&mut rng, [16, 16, 3, 3]);
+    let w_hat = Tensor::randn(&mut rng, [16, 16, 4, 4]);
+    // op counts for Gadds/s: direct 2*MAC, wino ~ tiles*O*C*32
+    let direct_adds = 2.0 * (16 * 16 * 9 * 28 * 28) as f64;
+    let tiles = (14 * 14) as f64;
+    let wino_adds = tiles * (16.0 * 16.0 * 32.0);
+
+    println!("=== L3-native kernels (paper layer, f32) ===");
+    let t = bench("direct adder conv (fast)", || {
+        std::hint::black_box(adder_conv2d_fast(&x, &w3, 1));
+    });
+    println!("    -> {:.2} Gadd/s", gops(direct_adds, t));
+    let t = bench("winograd adder conv (fast)", || {
+        std::hint::black_box(winograd_adder_conv2d_fast(
+            &x, &w_hat, 1, matrices::Variant::Balanced(0)));
+    });
+    println!("    -> {:.2} Gadd/s (effective: {:.2} direct-equiv)",
+             gops(wino_adds, t), gops(direct_adds, t));
+
+    println!("\n=== L3-native kernels (int8 datapath) ===");
+    let (qx, _) = requantize_pair(&x, &x);
+    let wq = quantize_wino_weights(&w_hat, qx.qp.scale);
+    let t = bench("winograd adder conv (i8/i32)", || {
+        std::hint::black_box(winograd_adder_conv2d_i8(
+            &qx, &wq, w_hat.dims, 1, matrices::Variant::Balanced(0)));
+    });
+    println!("    -> {:.2} Gadd/s", gops(wino_adds, t));
+
+    println!("\n=== hot-loop microbenches ===");
+    let (d_hat, n, th, tw) = input_tiles(&x.pad_same(1),
+                                         matrices::Variant::Balanced(0));
+    let t_count = n * th * tw;
+    let s = matrices::output_transform_flat(matrices::Variant::Balanced(0));
+    let mut y = vec![0f32; t_count * 16 * 4];
+    let wflat = w_hat.data.clone();
+    let t = bench("wino_adder_tiles (elementwise core)", || {
+        wino_adder_tiles(&d_hat, &wflat, t_count, 16, 16, &s, &mut y);
+        std::hint::black_box(&y);
+    });
+    println!("    -> {:.2} Gadd/s", gops(wino_adds, t));
+    let t = bench("input_tiles (B^T d B)", || {
+        std::hint::black_box(input_tiles(&x.pad_same(1),
+                                         matrices::Variant::Balanced(0)));
+    });
+    println!("    -> {:.3} Melem/s",
+             (t_count * 16 * 16) as f64 / t / 1e6);
+
+    let patches = rng.normal_vec(784 * 144);
+    let wrows = rng.normal_vec(16 * 144);
+    let mut out = vec![0f32; 784 * 16];
+    let t = bench("l1_distance_matrix 784x16x144", || {
+        l1_distance_matrix(&patches, &wrows, 784, 16, 144, &mut out);
+        std::hint::black_box(&out);
+    });
+    println!("    -> {:.2} Gadd/s", gops(2.0 * 784.0 * 16.0 * 144.0, t));
+
+    println!("\n=== PJRT layer artifacts (AOT Pallas, end-to-end) ===");
+    let artifacts = PathBuf::from("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("  (skipped: run `make artifacts` first)");
+        return;
+    }
+    let manifest = Manifest::load(&artifacts).expect("manifest");
+    let engine = Engine::cpu().expect("engine");
+    let w_flat = rng.normal_vec(16 * 16 * 16);
+    for bucket in [1usize, 4, 16] {
+        let name = format!("wino_adder_b{bucket}");
+        let Ok(entry) = manifest.layer(&name) else { continue };
+        let exec = engine.load_layer(entry).expect("compile");
+        let xb = rng.normal_vec(bucket * 16 * 28 * 28);
+        let t = bench(&format!("PJRT wino_adder layer b={bucket}"), || {
+            std::hint::black_box(exec.run(&xb, &w_flat).expect("run"));
+        });
+        println!("    -> {:.0} img/s, {:.2} Gadd/s",
+                 bucket as f64 / t, gops(wino_adds * bucket as f64, t));
+    }
+}

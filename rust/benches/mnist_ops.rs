@@ -1,0 +1,43 @@
+//! MNIST protocol (paper Sec. 4.1): addition counts for the LeNet-5-BN
+//! 3x3 model, AdderNet vs Winograd AdderNet.
+//!
+//! The paper reports 746.8M vs 401.1M additions (ratio 53.7%) for its
+//! supplement LeNet on 28x28 MNIST; the exact architecture is not
+//! published, so we report OUR LeNet at both 28x28 (paper scale) and
+//! 16x16 (our AOT scale) and compare the *ratio*, which is
+//! architecture-robust (it only depends on the stride-1 3x3 share).
+//!
+//! Run: `cargo bench --bench mnist_ops`
+
+use wino_adder::opcount::{count_model, fmt_m, lenet_3x3, Mode};
+use wino_adder::viz;
+
+fn main() {
+    println!("=== MNIST protocol — LeNet-5-BN (3x3) addition counts ===\n");
+    let mut rows = Vec::new();
+    for (label, image) in [("28x28 (paper scale)", 28usize),
+                           ("16x16 (our AOT scale)", 16)] {
+        let layers = lenet_3x3(image);
+        let a = count_model(&layers, Mode::AdderNet);
+        let w = count_model(&layers, Mode::WinogradAdderNet);
+        let ratio = w.adds as f64 / a.adds as f64;
+        rows.push(vec![label.to_string(), fmt_m(a.adds), fmt_m(w.adds),
+                       format!("{:.1}%", 100.0 * ratio)]);
+    }
+    rows.push(vec!["paper (supplement LeNet)".into(), "746.80M".into(),
+                   "401.10M".into(), "53.7%".into()]);
+    print!("{}", viz::print_table(
+        &["config", "AdderNet #Add", "WinoAdder #Add", "ratio"], &rows));
+
+    // our per-image ratio (both scales) — all body layers stride-1 so
+    // the ratio approaches Eq. 10/Eq. 12 with transform overhead
+    let layers = lenet_3x3(28);
+    let a = count_model(&layers, Mode::AdderNet).adds as f64;
+    let w = count_model(&layers, Mode::WinogradAdderNet).adds as f64;
+    let r = w / a;
+    println!("\nour ratio {:.3} vs Eq. 11/12 bound 0.444 + transform \
+              overhead; the paper's 0.537 sits in the same band — the \
+              residual gap is the (unpublished) supplement \
+              architecture's layer mix.", r);
+    assert!(r > 0.4 && r < 0.6, "ratio out of plausible band: {r}");
+}

@@ -1,0 +1,85 @@
+//! Table 2 regeneration: FPGA cycle/resource/energy simulation at the
+//! paper's design point, asserted exact, plus parallelism/layer sweeps
+//! (the design-space exploration the paper's Sec. 4.4 motivates).
+//!
+//! Run: `cargo bench --bench table2_fpga`
+
+use wino_adder::fpga::{table2, LayerShape, Parallelism};
+use wino_adder::opcount::fmt_m;
+use wino_adder::viz;
+
+fn main() {
+    println!("=== Table 2 — FPGA simulation ===\n");
+    let (orig, wino) = table2(LayerShape::paper(), Parallelism::paper());
+
+    let mut rows = vec![vec![
+        "original AdderNet".to_string(), "total".to_string(),
+        orig.modules[0].cycles.to_string(),
+        orig.modules[0].resource.to_string(),
+        fmt_m(orig.total_energy()),
+    ]];
+    for m in &wino.modules {
+        rows.push(vec!["Winograd AdderNet".into(), m.name.into(),
+                       m.cycles.to_string(), m.resource.to_string(),
+                       fmt_m(m.energy())]);
+    }
+    rows.push(vec!["Winograd AdderNet".into(), "total".into(), "-".into(),
+                   wino.total_resource().to_string(),
+                   fmt_m(wino.total_energy())]);
+    print!("{}", viz::print_table(
+        &["method", "module", "#cycle", "resource", "energy"], &rows));
+
+    // paper-exact assertions
+    assert_eq!(orig.modules[0].cycles, 7062);
+    assert_eq!(orig.modules[0].resource, 7130);
+    assert_eq!(wino.total_resource(), 7673);
+    let ratio = wino.total_energy() as f64 / orig.total_energy() as f64;
+    println!("\nenergy ratio: {:.1}% (paper: 47.6%)", ratio * 100.0);
+    assert!((ratio - 0.476).abs() < 0.005);
+    println!("pipelined latency: {} vs {} cycles ({:.0}% reduction; \
+              paper estimate ~50%)",
+             wino.pipelined_latency, orig.pipelined_latency,
+             100.0 * (1.0 - wino.pipelined_latency as f64
+                      / orig.pipelined_latency as f64));
+
+    // --- sweeps ---------------------------------------------------------
+    println!("\n=== parallelism sweep (layer fixed at paper shape) ===");
+    let mut rows = Vec::new();
+    for p in [4usize, 8, 16, 32] {
+        let par = Parallelism { pci: p, pco: p };
+        let (o, w) = table2(LayerShape::paper(), par);
+        rows.push(vec![
+            format!("{}x{} = {}", p, p, par.pes()),
+            o.modules[0].cycles.to_string(),
+            w.pipelined_latency.to_string(),
+            format!("{:.1}%",
+                    100.0 * w.total_energy() as f64
+                    / o.total_energy() as f64),
+        ]);
+    }
+    print!("{}", viz::print_table(
+        &["parallelism", "direct cycles", "wino latency",
+          "energy ratio"], &rows));
+
+    println!("\n=== layer sweep (parallelism fixed at 256) ===");
+    let mut rows = Vec::new();
+    for (cin, cout, hw) in [(16, 16, 14), (16, 16, 28), (32, 32, 28),
+                            (64, 64, 14), (16, 32, 28)] {
+        let shape = LayerShape { n: 1, cin, h: hw, w: hw, cout };
+        let (o, w) = table2(shape, Parallelism::paper());
+        rows.push(vec![
+            format!("({cin},{hw},{hw}) -> {cout}"),
+            o.modules[0].cycles.to_string(),
+            w.pipelined_latency.to_string(),
+            format!("{:.1}%",
+                    100.0 * w.total_energy() as f64
+                    / o.total_energy() as f64),
+        ]);
+    }
+    print!("{}", viz::print_table(
+        &["layer", "direct cycles", "wino latency", "energy ratio"],
+        &rows));
+    println!("\nthe ~47% energy ratio is stable across the sweep — the \
+              win comes from the 9->4 arithmetic reduction, not a \
+              layer-size artifact.");
+}

@@ -1,0 +1,120 @@
+//! Serving/training metrics: latency percentiles and throughput.
+
+use std::time::{Duration, Instant};
+
+/// Latency recorder with percentile queries.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> LatencyStats {
+        LatencyStats::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        self.samples_us.push(us);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    /// Percentile in [0, 100] (nearest-rank); None if empty.
+    pub fn percentile(&self, pct: f64) -> Option<u64> {
+        if self.samples_us.is_empty() {
+            return None;
+        }
+        let mut sorted = self.samples_us.clone();
+        sorted.sort_unstable();
+        let rank = ((pct / 100.0) * (sorted.len() as f64 - 1.0)).round()
+            as usize;
+        Some(sorted[rank.min(sorted.len() - 1)])
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64
+            / self.samples_us.len() as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0}us p50={}us p95={}us p99={}us",
+            self.count(),
+            self.mean_us(),
+            self.percentile(50.0).unwrap_or(0),
+            self.percentile(95.0).unwrap_or(0),
+            self.percentile(99.0).unwrap_or(0),
+        )
+    }
+}
+
+/// Wall-clock throughput meter.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    pub items: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Throughput {
+        Throughput { start: Instant::now(), items: 0 }
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.items += n;
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64().max(1e-9);
+        self.items as f64 / secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut l = LatencyStats::new();
+        for us in 1..=100 {
+            l.record_us(us);
+        }
+        assert_eq!(l.percentile(0.0), Some(1));
+        assert_eq!(l.percentile(100.0), Some(100));
+        let p50 = l.percentile(50.0).unwrap();
+        assert!((50..=51).contains(&p50), "{p50}");
+        assert!(l.mean_us() > 49.0 && l.mean_us() < 52.0);
+    }
+
+    #[test]
+    fn empty_is_none() {
+        let l = LatencyStats::new();
+        assert_eq!(l.percentile(50.0), None);
+        assert_eq!(l.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.add(10);
+        t.add(5);
+        assert_eq!(t.items, 15);
+        assert!(t.per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,24 @@
+//! Layer-3 coordinator — the runtime brain of the system.
+//!
+//! * [`p_schedule`] — the l2-to-l1 exponent schedules of Sec. 3.3
+//!   (Table 3's ablation axis), owned by rust and fed to the AOT
+//!   train-step graph as a runtime scalar.
+//! * [`train_driver`] — the training loop: batches from `data`, cosine
+//!   LR, p-annealing, metric/weight-norm logging (Figures 2 & 5).
+//! * [`batcher`] — dynamic request batcher with bucketed batch sizes
+//!   (the AOT layer artifacts are compiled per batch bucket).
+//! * [`router`] — request router across executor lanes.
+//! * [`server`] — the serving loop: engine thread owning the PJRT
+//!   executables (they are not `Send`), mpsc request/response plumbing.
+//! * [`metrics`] — latency/throughput instrumentation.
+
+pub mod batcher;
+pub mod metrics;
+pub mod p_schedule;
+pub mod router;
+pub mod server;
+pub mod train_driver;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use p_schedule::PSchedule;
+pub use train_driver::{TrainConfig, TrainDriver, TrainReport};

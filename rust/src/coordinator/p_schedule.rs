@@ -1,0 +1,190 @@
+//! The l2-to-l1 exponent schedules (paper Sec. 3.3, Table 3).
+//!
+//! The paper trains with forward `-sum |t|^p` and reduces p from 2 to 1:
+//!
+//! * **Training until converge** — run a full cosine cycle at each p,
+//!   reducing p between restarts ("Train network ... until the learning
+//!   rate close to 0. Then reduce p with a certain step s and restart").
+//! * **Reducing during converge** — reduce p every k epochs within one
+//!   run; "with p = N" in Table 3 means N reduction events across
+//!   training (step s = 1/N of the p range per event).
+//!
+//! The schedule is pure state owned by rust; the AOT train graph takes
+//! the current p as a scalar input every step.
+
+/// Exponent schedule over a fixed training horizon.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PSchedule {
+    /// Fixed exponent (p=1 reproduces "without l2-to-l1" in Table 5;
+    /// p=2 is the pure-l2 reference curve of Fig. 5).
+    Const(f32),
+    /// Reduce-during-converge with `events` reduction events
+    /// (Table 3: events = 1, 35, 140).
+    DuringConverge { events: u32 },
+    /// Train-until-converge: `phases` sequential cosine cycles, p
+    /// stepping 2 -> 1 across them; the LR restarts each phase.
+    UntilConverge { phases: u32 },
+}
+
+impl PSchedule {
+    pub const P_START: f32 = 2.0;
+    pub const P_END: f32 = 1.0;
+
+    pub fn parse(s: &str) -> Option<PSchedule> {
+        if let Some(v) = s.strip_prefix("const:") {
+            return v.parse().ok().map(PSchedule::Const);
+        }
+        if let Some(v) = s.strip_prefix("during:") {
+            return v.parse().ok()
+                .map(|events| PSchedule::DuringConverge { events });
+        }
+        if let Some(v) = s.strip_prefix("until:") {
+            return v.parse().ok()
+                .map(|phases| PSchedule::UntilConverge { phases });
+        }
+        None
+    }
+
+    /// Exponent at `step` of `total` steps.
+    pub fn p(&self, step: u64, total: u64) -> f32 {
+        let total = total.max(1);
+        let frac = (step as f64 / total as f64).min(1.0);
+        match *self {
+            PSchedule::Const(p) => p,
+            PSchedule::DuringConverge { events } => {
+                let events = events.max(1) as f64;
+                // event e fires at frac e/(events+1); p steps down by
+                // range/events at each event, reaching P_END after the
+                // last one
+                let fired = (frac * (events + 1.0)).floor().min(events);
+                let range = (Self::P_START - Self::P_END) as f64;
+                (Self::P_START as f64 - range * fired / events) as f32
+            }
+            PSchedule::UntilConverge { phases } => {
+                let phases = phases.max(2) as f64;
+                let phase = (frac * phases).floor().min(phases - 1.0);
+                let range = (Self::P_START - Self::P_END) as f64;
+                (Self::P_START as f64 - range * phase / (phases - 1.0)) as f32
+            }
+        }
+    }
+
+    /// Cosine learning rate at `step`, restarting per phase for the
+    /// until-converge schedule.
+    pub fn lr(&self, step: u64, total: u64, lr0: f32) -> f32 {
+        let total = total.max(1);
+        match *self {
+            PSchedule::UntilConverge { phases } => {
+                let phases = phases.max(2) as u64;
+                let span = (total / phases).max(1);
+                let in_phase = (step % span) as f64 / span as f64;
+                lr0 * 0.5
+                    * (1.0 + (std::f64::consts::PI * in_phase).cos()) as f32
+            }
+            _ => {
+                let frac = step as f64 / total as f64;
+                lr0 * 0.5
+                    * (1.0 + (std::f64::consts::PI * frac.min(1.0)).cos())
+                        as f32
+            }
+        }
+    }
+
+    /// Table-3 row label.
+    pub fn label(&self) -> String {
+        match *self {
+            PSchedule::Const(p) => format!("const p={p}"),
+            PSchedule::DuringConverge { events } => {
+                format!("reducing during converge, p={events}")
+            }
+            PSchedule::UntilConverge { phases } => {
+                format!("training until converge ({phases} phases)")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::property;
+
+    #[test]
+    fn starts_at_2_ends_at_1() {
+        for sched in [PSchedule::DuringConverge { events: 35 },
+                      PSchedule::UntilConverge { phases: 4 }] {
+            assert_eq!(sched.p(0, 1000), 2.0, "{sched:?}");
+            assert!((sched.p(999, 1000) - 1.0).abs() < 1e-4, "{sched:?}");
+        }
+    }
+
+    #[test]
+    fn monotone_nonincreasing_property() {
+        property(60, |g| {
+            let sched = *g.choose(&[
+                PSchedule::Const(1.5),
+                PSchedule::DuringConverge { events: 1 },
+                PSchedule::DuringConverge { events: 35 },
+                PSchedule::DuringConverge { events: 140 },
+                PSchedule::UntilConverge { phases: 3 },
+            ]);
+            let total = g.usize_in(10, 2000) as u64;
+            let mut prev = f32::MAX;
+            for step in 0..total {
+                let p = sched.p(step, total);
+                if !(1.0 - 1e-6..=2.0 + 1e-6).contains(&p) {
+                    return Err(format!("p out of range: {p}"));
+                }
+                if p > prev + 1e-6 {
+                    return Err(format!("p increased at {step}"));
+                }
+                prev = p;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn event_counts() {
+        // DuringConverge{events} must produce exactly events+1 distinct
+        // p values over a long horizon
+        for events in [1u32, 35, 140] {
+            let sched = PSchedule::DuringConverge { events };
+            let total = 10_000u64;
+            let mut values: Vec<f32> =
+                (0..total).map(|s| sched.p(s, total)).collect();
+            values.dedup();
+            assert_eq!(values.len() as u32, events + 1, "events={events}");
+        }
+    }
+
+    #[test]
+    fn cosine_lr_decays_to_zero() {
+        let s = PSchedule::DuringConverge { events: 35 };
+        assert!((s.lr(0, 100, 0.1) - 0.1).abs() < 1e-6);
+        assert!(s.lr(100, 100, 0.1) < 1e-6);
+        let mid = s.lr(50, 100, 0.1);
+        assert!((mid - 0.05).abs() < 1e-3);
+    }
+
+    #[test]
+    fn until_converge_lr_restarts() {
+        let s = PSchedule::UntilConverge { phases: 2 };
+        // LR near the end of phase 1 is small; at the start of phase 2
+        // it restarts near lr0
+        let end_p1 = s.lr(49, 100, 0.1);
+        let start_p2 = s.lr(50, 100, 0.1);
+        assert!(end_p1 < 0.01, "{end_p1}");
+        assert!(start_p2 > 0.09, "{start_p2}");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(PSchedule::parse("const:1"), Some(PSchedule::Const(1.0)));
+        assert_eq!(PSchedule::parse("during:35"),
+                   Some(PSchedule::DuringConverge { events: 35 }));
+        assert_eq!(PSchedule::parse("until:3"),
+                   Some(PSchedule::UntilConverge { phases: 3 }));
+        assert_eq!(PSchedule::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,172 @@
+//! Request router: assigns batches to executor lanes.
+//!
+//! The serving engine owns one compiled executable per batch bucket
+//! ("lane"); the router picks the lane for each batch and tracks
+//! in-flight work for least-loaded tie-breaking when several lanes can
+//! serve the same bucket (replicas).
+//!
+//! Invariants (property-tested): conservation (every batch routed to
+//! exactly one lane), bucket affinity (lane bucket == batch size), and
+//! bounded imbalance across replicas of the same bucket.
+
+use std::collections::BTreeMap;
+
+/// One executor lane.
+#[derive(Debug, Clone)]
+pub struct Lane {
+    pub id: usize,
+    pub bucket: usize,
+    pub in_flight: u64,
+    pub completed: u64,
+}
+
+/// Least-loaded router over bucket-affine lanes.
+#[derive(Debug, Default)]
+pub struct Router {
+    lanes: Vec<Lane>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router { lanes: Vec::new() }
+    }
+
+    /// Register a lane serving a bucket; returns the lane id.
+    pub fn add_lane(&mut self, bucket: usize) -> usize {
+        let id = self.lanes.len();
+        self.lanes.push(Lane { id, bucket, in_flight: 0, completed: 0 });
+        id
+    }
+
+    pub fn lanes(&self) -> &[Lane] {
+        &self.lanes
+    }
+
+    /// Route a batch of `size`: least-loaded lane with that bucket.
+    pub fn route(&mut self, size: usize) -> Option<usize> {
+        let lane = self
+            .lanes
+            .iter_mut()
+            .filter(|l| l.bucket == size)
+            .min_by_key(|l| l.in_flight)?;
+        lane.in_flight += 1;
+        Some(lane.id)
+    }
+
+    /// Mark a routed batch finished.
+    pub fn complete(&mut self, lane_id: usize) {
+        let lane = &mut self.lanes[lane_id];
+        assert!(lane.in_flight > 0, "complete without route");
+        lane.in_flight -= 1;
+        lane.completed += 1;
+    }
+
+    /// Buckets with at least one lane, ascending.
+    pub fn buckets(&self) -> Vec<usize> {
+        let mut set: Vec<usize> =
+            self.lanes.iter().map(|l| l.bucket).collect();
+        set.sort();
+        set.dedup();
+        set
+    }
+
+    /// Total completed across lanes.
+    pub fn total_completed(&self) -> u64 {
+        self.lanes.iter().map(|l| l.completed).sum()
+    }
+}
+
+/// Per-bucket lane stats for reports.
+pub fn per_bucket_completed(router: &Router) -> BTreeMap<usize, u64> {
+    let mut out = BTreeMap::new();
+    for l in router.lanes() {
+        *out.entry(l.bucket).or_insert(0) += l.completed;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::property;
+
+    #[test]
+    fn routes_to_matching_bucket() {
+        let mut r = Router::new();
+        let l1 = r.add_lane(1);
+        let l4 = r.add_lane(4);
+        assert_eq!(r.route(4), Some(l4));
+        assert_eq!(r.route(1), Some(l1));
+        assert_eq!(r.route(16), None, "no lane for 16");
+    }
+
+    #[test]
+    fn least_loaded_wins() {
+        let mut r = Router::new();
+        let a = r.add_lane(4);
+        let b = r.add_lane(4);
+        let first = r.route(4).unwrap();
+        let second = r.route(4).unwrap();
+        assert_ne!(first, second, "spread across replicas");
+        r.complete(a.max(b).min(first.max(second)));
+        // after one completes, it becomes least-loaded again
+        let third = r.route(4).unwrap();
+        assert!(third == a || third == b);
+    }
+
+    #[test]
+    #[should_panic(expected = "complete without route")]
+    fn complete_requires_route() {
+        let mut r = Router::new();
+        let l = r.add_lane(1);
+        r.complete(l);
+    }
+
+    #[test]
+    fn conservation_and_balance_property() {
+        property(60, |g| {
+            let mut r = Router::new();
+            let replicas = g.usize_in(1, 4);
+            for _ in 0..replicas {
+                r.add_lane(4);
+            }
+            r.add_lane(1);
+            let n = g.usize_in(1, 300);
+            let mut outstanding = Vec::new();
+            for _ in 0..n {
+                let size = if g.bool() { 4 } else { 1 };
+                let lane = r.route(size)
+                    .ok_or("route failed".to_string())?;
+                if r.lanes()[lane].bucket != size {
+                    return Err("bucket affinity violated".into());
+                }
+                outstanding.push(lane);
+                // randomly complete some
+                if g.bool() && !outstanding.is_empty() {
+                    let idx = g.usize_in(0, outstanding.len() - 1);
+                    r.complete(outstanding.swap_remove(idx));
+                }
+            }
+            for lane in outstanding.drain(..) {
+                r.complete(lane);
+            }
+            if r.total_completed() != n as u64 {
+                return Err(format!("conservation: {} vs {n}",
+                                   r.total_completed()));
+            }
+            // balance: replicas of bucket 4 within a factor given random
+            // completion, bound loosely
+            let counts: Vec<u64> = r.lanes().iter()
+                .filter(|l| l.bucket == 4)
+                .map(|l| l.completed).collect();
+            if counts.len() > 1 {
+                let max = *counts.iter().max().unwrap() as f64;
+                let min = *counts.iter().min().unwrap() as f64;
+                if max > 10.0 && min / max < 0.2 {
+                    return Err(format!("imbalance: {counts:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,221 @@
+//! The inference server: a single engine thread owning the PJRT
+//! executables (they are not `Send`), fed by an mpsc request channel
+//! through the dynamic [`Batcher`] and bucket [`Router`].
+//!
+//! Request path (all rust, no Python):
+//!   client -> mpsc -> batcher (bucket selection) -> router (lane)
+//!          -> PJRT execute (AOT wino-adder layer) -> per-request reply.
+
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::LatencyStats;
+use super::router::Router;
+use crate::runtime::{Engine, Manifest};
+use crate::util::io;
+
+/// One inference request: a single image (C*H*W flat) in, logits-like
+/// feature map out.
+struct InferMsg {
+    x: Vec<f32>,
+    resp: mpsc::Sender<Result<Vec<f32>, String>>,
+    submitted: Instant,
+}
+
+enum Msg {
+    Infer(InferMsg),
+    Stop(mpsc::Sender<ServerStats>),
+}
+
+/// Server statistics snapshot returned at shutdown.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    pub served: u64,
+    pub batches: u64,
+    pub per_bucket: Vec<(usize, u64)>,
+    pub latency_summary: String,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+/// Handle used by clients; cheap to clone.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Msg>,
+    sample_len: usize,
+}
+
+impl ServerHandle {
+    /// Blocking single-image inference.
+    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        if x.len() != self.sample_len {
+            return Err(anyhow!("expected {} values, got {}",
+                               self.sample_len, x.len()));
+        }
+        let (resp_tx, resp_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Infer(InferMsg {
+                x,
+                resp: resp_tx,
+                submitted: Instant::now(),
+            }))
+            .map_err(|_| anyhow!("server stopped"))?;
+        resp_rx
+            .recv()
+            .map_err(|_| anyhow!("server dropped request"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Stop the server and collect stats.
+    pub fn stop(self) -> Result<ServerStats> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Stop(tx))
+            .map_err(|_| anyhow!("server already stopped"))?;
+        rx.recv().map_err(|_| anyhow!("server did not report stats"))
+    }
+}
+
+/// The Winograd-adder layer server over the AOT `layer_wino_adder_b*`
+/// artifacts.
+pub struct Server;
+
+impl Server {
+    /// Start the engine thread. `artifacts` is the artifacts directory.
+    pub fn start(artifacts: PathBuf, policy: BatchPolicy)
+                 -> Result<(ServerHandle, thread::JoinHandle<()>)> {
+        let manifest = Manifest::load(&artifacts)?;
+        // sample length from the b=1 layer artifact
+        let l1 = manifest.layer("wino_adder_b1")?;
+        let sample_len: usize = l1.x_shape.iter().product();
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let handle = ServerHandle { tx, sample_len };
+
+        let join = thread::Builder::new()
+            .name("wino-adder-engine".into())
+            .spawn(move || {
+                if let Err(e) = engine_loop(&artifacts, policy, rx) {
+                    eprintln!("engine thread error: {e:#}");
+                }
+            })
+            .map_err(|e| anyhow!("spawning engine thread: {e}"))?;
+        Ok((handle, join))
+    }
+}
+
+fn engine_loop(artifacts: &PathBuf, policy: BatchPolicy,
+               rx: mpsc::Receiver<Msg>) -> Result<()> {
+    let manifest = Manifest::load(artifacts)?;
+    let engine = Engine::cpu()?;
+    // layer weights shipped with the artifacts
+    let w = io::read_f32(&artifacts.join("layer.w_hat.bin"))?;
+
+    // one lane per available bucket artifact
+    let mut router = Router::new();
+    let mut lanes = Vec::new();
+    for bucket in &policy.buckets {
+        let name = format!("wino_adder_b{bucket}");
+        let entry = manifest.layer(&name)?;
+        let exec = engine.load_layer(entry)?;
+        let lane = router.add_lane(*bucket);
+        debug_assert_eq!(lane, lanes.len());
+        lanes.push(exec);
+    }
+
+    let mut batcher: Batcher<InferMsg> = Batcher::new(policy);
+    let start = Instant::now();
+    let now_us = |s: &Instant| s.elapsed().as_micros() as u64;
+    let mut latency = LatencyStats::new();
+    let mut batches = 0u64;
+    let mut stop_reply: Option<mpsc::Sender<ServerStats>> = None;
+
+    'outer: loop {
+        // drain or wait for messages
+        let timeout = Duration::from_micros(200);
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Infer(m)) => {
+                batcher.submit(m, now_us(&start));
+                // opportunistically drain without blocking
+                while let Ok(msg) = rx.try_recv() {
+                    match msg {
+                        Msg::Infer(m) => {
+                            batcher.submit(m, now_us(&start));
+                        }
+                        Msg::Stop(s) => {
+                            stop_reply = Some(s);
+                            break;
+                        }
+                    }
+                }
+            }
+            Ok(Msg::Stop(s)) => {
+                stop_reply = Some(s);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break 'outer,
+        }
+
+        // dispatch ready batches
+        let drain = stop_reply.is_some();
+        loop {
+            let batch = if drain {
+                batcher.flush().into_iter().next()
+            } else {
+                batcher.poll(now_us(&start))
+            };
+            let Some(batch) = batch else { break };
+            let size = batch.len();
+            let lane_id = router
+                .route(size)
+                .ok_or_else(|| anyhow!("no lane for bucket {size}"))?;
+            let exec = &lanes[lane_id];
+            let mut x = Vec::with_capacity(size * batch[0].payload.x.len());
+            for r in &batch {
+                x.extend_from_slice(&r.payload.x);
+            }
+            let per_sample: usize =
+                exec.entry.out_shape.iter().product::<usize>()
+                    / exec.entry.batch;
+            let result = exec.run(&x, &w);
+            router.complete(lane_id);
+            batches += 1;
+            match result {
+                Ok(y) => {
+                    for (i, r) in batch.into_iter().enumerate() {
+                        let piece =
+                            y[i * per_sample..(i + 1) * per_sample].to_vec();
+                        latency.record(r.payload.submitted.elapsed());
+                        let _ = r.payload.resp.send(Ok(piece));
+                    }
+                }
+                Err(e) => {
+                    for r in batch {
+                        let _ = r.payload.resp.send(Err(format!("{e:#}")));
+                    }
+                }
+            }
+        }
+
+        if let Some(s) = stop_reply.take() {
+            let per_bucket: Vec<(usize, u64)> =
+                super::router::per_bucket_completed(&router)
+                    .into_iter()
+                    .collect();
+            let stats = ServerStats {
+                served: batcher.dispatched,
+                batches,
+                per_bucket,
+                latency_summary: latency.summary(),
+                p50_us: latency.percentile(50.0).unwrap_or(0),
+                p99_us: latency.percentile(99.0).unwrap_or(0),
+            };
+            let _ = s.send(stats);
+            break 'outer;
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,217 @@
+//! The training coordinator: drives the AOT train-step executable with
+//! synthetic data batches, owning every schedule the paper describes —
+//! cosine LR, the l2-to-l1 exponent p, periodic eval — and logging the
+//! curves Figures 2 & 5 plot (loss, accuracy, adder-weight mean |w|).
+
+use anyhow::Result;
+
+use super::p_schedule::PSchedule;
+use crate::data::{Dataset, Preset, Split};
+use crate::runtime::{Engine, Manifest, ModelRuntime};
+
+/// One training run's configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: String,
+    pub preset: Preset,
+    pub steps: u64,
+    pub lr0: f32,
+    pub schedule: PSchedule,
+    pub seed: u64,
+    /// evaluate every N steps (0 = only at the end)
+    pub eval_every: u64,
+    /// optional extra-init name (Table 4's init_adder_transform)
+    pub init_override: Option<String>,
+}
+
+impl TrainConfig {
+    pub fn new(model: &str, preset: Preset, steps: u64) -> TrainConfig {
+        TrainConfig {
+            model: model.to_string(),
+            preset,
+            steps,
+            lr0: 0.05,
+            schedule: PSchedule::DuringConverge { events: 35 },
+            seed: 0,
+            eval_every: 0,
+            init_override: None,
+        }
+    }
+}
+
+/// One logged step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: u64,
+    pub p: f32,
+    pub lr: f32,
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// Periodic weight statistics (Figure 5's |w| curves).
+#[derive(Debug, Clone, Copy)]
+pub struct WeightRecord {
+    pub step: u64,
+    /// mean |w| over adder-family body weights
+    pub mean_abs_adder_w: f32,
+}
+
+/// Full training run output.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub config_label: String,
+    pub history: Vec<StepRecord>,
+    pub weights: Vec<WeightRecord>,
+    pub evals: Vec<(u64, f64)>,
+    pub final_test_acc: f64,
+}
+
+impl TrainReport {
+    /// Smoothed final training loss (mean of last 10 steps).
+    pub fn final_loss(&self) -> f32 {
+        let tail = &self.history[self.history.len().saturating_sub(10)..];
+        tail.iter().map(|r| r.loss).sum::<f32>() / tail.len().max(1) as f32
+    }
+}
+
+/// The driver itself.
+pub struct TrainDriver<'a> {
+    engine: &'a Engine,
+    manifest: &'a Manifest,
+}
+
+impl<'a> TrainDriver<'a> {
+    pub fn new(engine: &'a Engine, manifest: &'a Manifest)
+               -> TrainDriver<'a> {
+        TrainDriver { engine, manifest }
+    }
+
+    /// Run one full training configuration.
+    pub fn run(&self, cfg: &TrainConfig, verbose: bool)
+               -> Result<TrainReport> {
+        let (report, _rt) = self.run_returning_runtime(cfg, verbose)?;
+        Ok(report)
+    }
+
+    /// Like [`TrainDriver::run`] but hands back the trained
+    /// [`ModelRuntime`] (e.g. for feature extraction — Figure 3).
+    pub fn run_returning_runtime(&self, cfg: &TrainConfig, verbose: bool)
+                                 -> Result<(TrainReport, ModelRuntime)> {
+        let entry = self.manifest.model(&cfg.model)?;
+        let mut rt = self.engine.load_model(entry)?;
+        if let Some(init) = &cfg.init_override {
+            let (base, path) = self
+                .manifest
+                .extra_inits
+                .get(init)
+                .ok_or_else(|| anyhow::anyhow!("no extra init {init:?}"))?;
+            anyhow::ensure!(base == &cfg.model,
+                            "init {init:?} is for model {base:?}");
+            let flat = crate::util::io::read_f32(path)?;
+            rt.set_params_flat(&flat)?;
+        }
+        let ds = Dataset::new(cfg.preset, entry.config.image_size as usize,
+                              cfg.seed);
+        let mut report = TrainReport {
+            config_label: format!("{} [{}]", cfg.model, cfg.schedule.label()),
+            history: Vec::with_capacity(cfg.steps as usize),
+            weights: Vec::new(),
+            evals: Vec::new(),
+            final_test_acc: 0.0,
+        };
+
+        let weight_log_every = (cfg.steps / 24).max(1);
+        for step in 0..cfg.steps {
+            let p = cfg.schedule.p(step, cfg.steps);
+            let lr = cfg.schedule.lr(step, cfg.steps, cfg.lr0);
+            let batch = ds.batch(Split::Train, step, entry.train_batch);
+            let stats = rt.train_step(&batch.images, &batch.labels, p, lr)?;
+            report.history.push(StepRecord {
+                step, p, lr, loss: stats.loss, acc: stats.acc,
+            });
+            if step % weight_log_every == 0 || step + 1 == cfg.steps {
+                report.weights.push(WeightRecord {
+                    step,
+                    mean_abs_adder_w: mean_abs_adder_weights(&rt)?,
+                });
+            }
+            if cfg.eval_every > 0 && step > 0 && step % cfg.eval_every == 0 {
+                let acc = self.test_accuracy(&rt, &ds)?;
+                report.evals.push((step, acc));
+                if verbose {
+                    println!("  step {step:>5}  p={p:.3} lr={lr:.4} \
+                              loss={:.4} train_acc={:.3} test_acc={acc:.3}",
+                             stats.loss, stats.acc);
+                }
+            } else if verbose && step % 50 == 0 {
+                println!("  step {step:>5}  p={p:.3} lr={lr:.4} \
+                          loss={:.4} train_acc={:.3}",
+                         stats.loss, stats.acc);
+            }
+        }
+        report.final_test_acc = self.test_accuracy(&rt, &ds)?;
+        Ok((report, rt))
+    }
+
+    /// Accuracy over 4 eval batches of the test split.
+    fn test_accuracy(&self, rt: &ModelRuntime, ds: &Dataset) -> Result<f64> {
+        let classes = rt.entry.config.num_classes;
+        let mut acc_sum = 0.0;
+        let n_batches = 4;
+        for b in 0..n_batches {
+            let batch = ds.batch(Split::Test, b, rt.entry.eval_batch);
+            let (logits, _) = rt.eval(&batch.images)?;
+            acc_sum += ModelRuntime::accuracy(&logits, &batch.labels,
+                                              classes);
+        }
+        Ok(acc_sum / n_batches as f64)
+    }
+}
+
+/// Mean |w| over adder-family body weights (Figure 5's statistic).
+fn mean_abs_adder_weights(rt: &ModelRuntime) -> Result<f32> {
+    let mut sum = 0f64;
+    let mut count = 0u64;
+    for (spec, lit) in rt.entry.params.iter().zip(&rt.params) {
+        if !is_adder_body_weight(&spec.name) {
+            continue;
+        }
+        let v = lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("weight readback: {e}"))?;
+        sum += v.iter().map(|x| x.abs() as f64).sum::<f64>();
+        count += v.len() as u64;
+    }
+    Ok(if count == 0 { 0.0 } else { (sum / count as f64) as f32 })
+}
+
+/// Mirrors `model.is_adder_weight` on the Python side.
+fn is_adder_body_weight(path: &str) -> bool {
+    let body = path.contains(".l2.") || path.contains(".l3.")
+        || (path.contains(".s") && (path.contains(".c1.")
+                                    || path.contains(".c2.")));
+    body && path.ends_with(".w")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adder_weight_detection() {
+        assert!(is_adder_body_weight(".l2.w"));
+        assert!(is_adder_body_weight(".s0b1.c1.w"));
+        assert!(!is_adder_body_weight(".conv1.w"));
+        assert!(!is_adder_body_weight(".fc1.w"));
+        assert!(!is_adder_body_weight(".bn1.gamma"));
+        assert!(!is_adder_body_weight(".s0b1.bn1.mean"));
+    }
+
+    #[test]
+    fn config_builder() {
+        let c = TrainConfig::new("lenet_wino_adder", Preset::MnistLike, 100);
+        assert_eq!(c.steps, 100);
+        assert_eq!(c.schedule, PSchedule::DuringConverge { events: 35 });
+    }
+}

@@ -1,0 +1,128 @@
+//! Op-level energy model — reproduces Figure 1 (relative power).
+//!
+//! Energy = #muls * E_mul + #adds * E_add, with per-op energies from a
+//! cost table. Two built-in tables:
+//!
+//! * [`EnergyTable::horowitz`] — the textbook 45nm numbers from
+//!   Horowitz/Dally (the paper's own "8-bit addition is 7x cheaper than
+//!   8-bit multiplication" claim corresponds to this table's 6.7x).
+//! * [`EnergyTable::fpga_calibrated`] — E_mul/E_add = 4.7, the ratio
+//!   implied by the paper's measured Figure-1 bars (their CNN bar wants
+//!   4.92, their Winograd-CNN bar wants 4.46; 4.7 is the least-squares
+//!   compromise — see EXPERIMENTS.md §Fig1 for the residuals).
+//!
+//! Figure 1's bars are *relative* power: everything is normalized to the
+//! Winograd-AdderNet energy of the same model.
+
+use crate::opcount::{count_model, LayerSpec, Mode};
+
+/// Per-operation energies in picojoules.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyTable {
+    pub add_pj: f64,
+    pub mul_pj: f64,
+    pub name: &'static str,
+}
+
+impl EnergyTable {
+    /// 8-bit integer ops, 45nm (Horowitz ISSCC'14 / Dally NIPS'15).
+    pub fn horowitz() -> EnergyTable {
+        EnergyTable { add_pj: 0.03, mul_pj: 0.2, name: "horowitz-8bit" }
+    }
+
+    /// 32-bit integer ops for comparison (the paper's "100x" remark).
+    pub fn horowitz_32bit() -> EnergyTable {
+        EnergyTable { add_pj: 0.1, mul_pj: 3.1, name: "horowitz-32bit" }
+    }
+
+    /// mul/add ratio calibrated to the paper's measured Figure-1 bars.
+    pub fn fpga_calibrated() -> EnergyTable {
+        EnergyTable { add_pj: 0.03, mul_pj: 0.141, name: "fpga-calibrated" }
+    }
+
+    pub fn energy_pj(&self, muls: u64, adds: u64) -> f64 {
+        muls as f64 * self.mul_pj + adds as f64 * self.add_pj
+    }
+}
+
+/// One bar of Figure 1.
+#[derive(Debug, Clone)]
+pub struct PowerBar {
+    pub mode: Mode,
+    pub energy_pj: f64,
+    pub relative: f64,
+}
+
+/// Compute all four Figure-1 bars for a model, normalized to
+/// Winograd-AdderNet (= 1.0, as in the paper).
+pub fn figure1(layers: &[LayerSpec], table: &EnergyTable) -> Vec<PowerBar> {
+    let base = {
+        let c = count_model(layers, Mode::WinogradAdderNet);
+        table.energy_pj(c.muls, c.adds)
+    };
+    Mode::ALL
+        .iter()
+        .map(|&mode| {
+            let c = count_model(layers, mode);
+            let e = table.energy_pj(c.muls, c.adds);
+            PowerBar { mode, energy_pj: e, relative: e / base }
+        })
+        .collect()
+}
+
+/// The paper's reported Figure-1 bars, for side-by-side reporting.
+pub fn paper_figure1() -> [(Mode, f64); 4] {
+    [
+        (Mode::Cnn, 6.09),
+        (Mode::WinogradCnn, 2.71),
+        (Mode::AdderNet, 2.1),
+        (Mode::WinogradAdderNet, 1.0),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opcount::resnet20;
+
+    #[test]
+    fn ordering_matches_paper() {
+        // CNN > Winograd CNN > AdderNet > Winograd AdderNet
+        for table in [EnergyTable::horowitz(), EnergyTable::fpga_calibrated()]
+        {
+            let bars = figure1(&resnet20(), &table);
+            assert!(bars[0].relative > bars[1].relative, "{}", table.name);
+            assert!(bars[1].relative > bars[2].relative, "{}", table.name);
+            assert!(bars[2].relative > bars[3].relative, "{}", table.name);
+            assert!((bars[3].relative - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn calibrated_table_close_to_paper() {
+        let bars = figure1(&resnet20(), &EnergyTable::fpga_calibrated());
+        for (bar, (mode, want)) in bars.iter().zip(paper_figure1()) {
+            assert_eq!(bar.mode, mode);
+            let rel_err = (bar.relative - want).abs() / want;
+            assert!(rel_err < 0.06,
+                    "{}: got {:.2}, paper {want} (err {rel_err:.3})",
+                    mode.name(), bar.relative);
+        }
+    }
+
+    #[test]
+    fn adder_bar_is_close_to_2_1_for_any_table() {
+        // AdderNet / WinoAdder uses adds only -> table-independent ratio
+        let bars = figure1(&resnet20(), &EnergyTable::horowitz());
+        let adder = bars.iter().find(|b| b.mode == Mode::AdderNet).unwrap();
+        assert!((adder.relative - 2.058).abs() < 0.01, "{}", adder.relative);
+    }
+
+    #[test]
+    fn table_energies_positive_and_mul_heavier() {
+        for t in [EnergyTable::horowitz(), EnergyTable::horowitz_32bit(),
+                  EnergyTable::fpga_calibrated()] {
+            assert!(t.add_pj > 0.0 && t.mul_pj > t.add_pj);
+        }
+    }
+}

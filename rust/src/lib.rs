@@ -1,0 +1,36 @@
+//! # wino-adder — Winograd Algorithm for AdderNet (ICML 2021)
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of the paper's system:
+//!
+//! * **Layer 1/2 (build-time Python)** — Pallas kernels and JAX training
+//!   graphs, AOT-lowered to HLO text under `artifacts/` by
+//!   `python/compile/aot.py`.
+//! * **Layer 3 (this crate)** — the runtime and every substrate the
+//!   paper's evaluation depends on:
+//!   - [`runtime`]: PJRT client wrapper that loads + executes artifacts,
+//!   - [`coordinator`]: inference router/batcher and the training driver
+//!     that owns the l2-to-l1 exponent and learning-rate schedules,
+//!   - [`nn`]: rust-native f32 + int8 adder/Winograd convolutions
+//!     (baselines, property tests, serving fallback),
+//!   - [`opcount`]: the analytical #Add/#Mul model (paper Eq. 10-12),
+//!   - [`energy`]: op-level energy model behind Figure 1,
+//!   - [`fpga`]: cycle-level simulator of the paper's FPGA accelerator
+//!     (Table 2),
+//!   - [`data`]: procedural dataset generators (MNIST-/CIFAR-like),
+//!   - [`tsne`], [`viz`]: the Figure 3/4/5 visualisation tooling,
+//!   - [`util`]: offline-environment substitutes (JSON, CLI, testkit).
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! Python invocation, after which the `wino-adder` binary is
+//! self-contained.
+
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod fpga;
+pub mod nn;
+pub mod opcount;
+pub mod runtime;
+pub mod tsne;
+pub mod util;
+pub mod viz;

@@ -1,0 +1,331 @@
+//! `wino-adder` — the Layer-3 coordinator binary.
+//!
+//! Subcommands (see `--help`):
+//!   train     drive the AOT train-step graph (schedules owned here)
+//!   serve     batched Winograd-adder layer inference server demo
+//!   energy    Figure-1 relative-power report
+//!   opcount   Table-1 operation counts (exact, analytic)
+//!   fpga-sim  Table-2 FPGA cycle/resource/energy simulation
+//!   tsne      Figure-3 feature embedding (eval features -> t-SNE)
+//!   heatmap   Figure-4 grid-artifact comparison (std vs balanced A)
+//!   golden    integration check vs Python-pinned golden outputs
+
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+
+use wino_adder::coordinator::batcher::BatchPolicy;
+use wino_adder::coordinator::server::Server;
+use wino_adder::coordinator::{PSchedule, TrainConfig, TrainDriver};
+use wino_adder::data::{Dataset, Preset, Split};
+use wino_adder::energy::{figure1, paper_figure1, EnergyTable};
+use wino_adder::nn::{matrices, wino_adder as nn_wino, Tensor};
+use wino_adder::opcount::{self, count_model, fmt_m, Mode};
+use wino_adder::runtime::{Engine, Manifest};
+use wino_adder::util::cli::Args;
+use wino_adder::util::{io, rng::Rng};
+use wino_adder::{fpga, tsne, viz};
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("energy") => cmd_energy(&args),
+        Some("opcount") => cmd_opcount(&args),
+        Some("fpga-sim") => cmd_fpga(&args),
+        Some("tsne") => cmd_tsne(&args),
+        Some("heatmap") => cmd_heatmap(&args),
+        Some("golden") => cmd_golden(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "wino-adder — Winograd Algorithm for AdderNet (ICML 2021) \
+         reproduction\n\n\
+         USAGE: wino-adder <subcommand> [--flag value]\n\n\
+         SUBCOMMANDS\n\
+         \x20 train    --model NAME --preset mnist|cifar10|cifar100|imagenet-lite\n\
+         \x20          --steps N --lr F --schedule const:P|during:N|until:N\n\
+         \x20          [--eval-every N] [--csv PATH] [--init NAME]\n\
+         \x20 serve    [--requests N] [--max-wait-us N]\n\
+         \x20 energy   [--model resnet20|resnet32|resnet18]\n\
+         \x20 opcount  [--model resnet20|resnet32|resnet18|lenet|resnet20-lite]\n\
+         \x20 fpga-sim [--cin N --cout N --hw N --par N]\n\
+         \x20 tsne     [--model lenet_wino_adder] [--csv PATH]\n\
+         \x20 heatmap  [--hw N --cin N]\n\
+         \x20 golden\n\n\
+         Common: --artifacts DIR (default ./artifacts)"
+    );
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "lenet_wino_adder").to_string();
+    let preset = Preset::parse(args.get_or("preset", "mnist"))
+        .ok_or_else(|| anyhow!("bad --preset"))?;
+    let steps = args.get_usize("steps", 300) as u64;
+    let schedule = PSchedule::parse(args.get_or("schedule", "during:35"))
+        .ok_or_else(|| anyhow!("bad --schedule"))?;
+    let mut cfg = TrainConfig::new(&model, preset, steps);
+    cfg.lr0 = args.get_f64("lr", 0.05) as f32;
+    cfg.schedule = schedule;
+    cfg.eval_every = args.get_usize("eval-every", 100) as u64;
+    cfg.seed = args.get_usize("seed", 0) as u64;
+    cfg.init_override = args.get("init").map(|s| s.to_string());
+
+    let manifest = Manifest::load(&artifacts_dir(args))?;
+    let engine = Engine::cpu()?;
+    println!("training {model} on {preset:?} for {steps} steps \
+              [{}] (platform: {})",
+             cfg.schedule.label(), engine.platform());
+    let driver = TrainDriver::new(&engine, &manifest);
+    let t0 = std::time::Instant::now();
+    let report = driver.run(&cfg, true)?;
+    println!(
+        "done in {:.1}s: final loss {:.4}, test acc {:.3}",
+        t0.elapsed().as_secs_f64(),
+        report.final_loss(),
+        report.final_test_acc
+    );
+    if let Some(csv) = args.get("csv") {
+        let rows: Vec<Vec<f64>> = report
+            .history
+            .iter()
+            .map(|r| vec![r.step as f64, r.p as f64, r.lr as f64,
+                          r.loss as f64, r.acc as f64])
+            .collect();
+        io::write_csv(&PathBuf::from(csv),
+                      &["step", "p", "lr", "loss", "acc"], &rows)?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n = args.get_usize("requests", 256);
+    let policy = BatchPolicy {
+        buckets: vec![1, 4, 16],
+        max_wait_us: args.get_usize("max-wait-us", 2000) as u64,
+    };
+    let (handle, join) = Server::start(artifacts_dir(args), policy)?;
+    println!("server up; sending {n} requests");
+    let mut rng = Rng::new(1);
+    let sample = 16 * 28 * 28;
+    let t0 = std::time::Instant::now();
+    let mut threads = Vec::new();
+    for _ in 0..4 {
+        let h = handle.clone();
+        let xs: Vec<Vec<f32>> =
+            (0..n / 4).map(|_| rng.normal_vec(sample)).collect();
+        threads.push(std::thread::spawn(move || {
+            for x in xs {
+                h.infer(x).expect("infer");
+            }
+        }));
+    }
+    for t in threads {
+        t.join().map_err(|_| anyhow!("client thread panicked"))?;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let stats = handle.stop()?;
+    join.join().map_err(|_| anyhow!("engine thread panicked"))?;
+    println!("served {} requests in {} batches over {elapsed:.2}s \
+              ({:.0} req/s)",
+             stats.served, stats.batches,
+             stats.served as f64 / elapsed);
+    println!("latency: {}", stats.latency_summary);
+    println!("per-bucket batches: {:?}", stats.per_bucket);
+    Ok(())
+}
+
+fn cmd_energy(args: &Args) -> Result<()> {
+    let layers = model_layers(args.get_or("model", "resnet20"))?;
+    println!("Figure 1 — relative power (normalized to Winograd AdderNet)\n");
+    for table in [EnergyTable::fpga_calibrated(), EnergyTable::horowitz()] {
+        let bars = figure1(&layers, &table);
+        let paper = paper_figure1();
+        let rows: Vec<Vec<String>> = bars
+            .iter()
+            .zip(paper)
+            .map(|(b, (_, pv))| {
+                vec![
+                    b.mode.name().to_string(),
+                    format!("{:.2}", b.relative),
+                    format!("{pv:.2}"),
+                    format!("{:.3} mJ", b.energy_pj / 1e9),
+                ]
+            })
+            .collect();
+        println!("energy table: {}", table.name);
+        print!("{}", viz::print_table(
+            &["method", "ours", "paper", "abs energy"], &rows));
+        println!();
+    }
+    Ok(())
+}
+
+fn model_layers(name: &str) -> Result<Vec<opcount::LayerSpec>> {
+    Ok(match name {
+        "resnet20" => opcount::resnet20(),
+        "resnet32" => opcount::resnet32(),
+        "resnet18" => opcount::resnet18_imagenet(),
+        "lenet" => opcount::lenet_3x3(16),
+        "resnet20-lite" => opcount::resnet20_lite(),
+        _ => return Err(anyhow!("unknown model {name:?}")),
+    })
+}
+
+fn cmd_opcount(args: &Args) -> Result<()> {
+    let name = args.get_or("model", "resnet20");
+    let layers = model_layers(name)?;
+    println!("operation counts — {name} (adder part only, paper Sec. 3.1)\n");
+    let rows: Vec<Vec<String>> = Mode::ALL
+        .iter()
+        .map(|&m| {
+            let c = count_model(&layers, m);
+            vec![m.name().to_string(), fmt_m(c.muls), fmt_m(c.adds)]
+        })
+        .collect();
+    print!("{}", viz::print_table(&["method", "#Mul", "#Add"], &rows));
+    Ok(())
+}
+
+fn cmd_fpga(args: &Args) -> Result<()> {
+    let shape = fpga::LayerShape {
+        n: 1,
+        cin: args.get_usize("cin", 16),
+        h: args.get_usize("hw", 28),
+        w: args.get_usize("hw", 28),
+        cout: args.get_usize("cout", 16),
+    };
+    let p = args.get_usize("par", 16);
+    let par = fpga::Parallelism { pci: p, pco: p };
+    let (orig, wino) = fpga::table2(shape, par);
+    println!("Table 2 — FPGA simulation, layer (1,{},{},{}) x ({},{},3,3), \
+              parallelism {}\n",
+             shape.cin, shape.h, shape.w, shape.cout, shape.cin,
+             par.pes());
+    let mut rows = Vec::new();
+    rows.push(vec!["original AdderNet".into(), "total".into(),
+                   orig.modules[0].cycles.to_string(),
+                   orig.modules[0].resource.to_string(),
+                   fmt_m(orig.total_energy())]);
+    for m in &wino.modules {
+        rows.push(vec!["Winograd AdderNet".into(), m.name.into(),
+                       m.cycles.to_string(), m.resource.to_string(),
+                       fmt_m(m.energy())]);
+    }
+    rows.push(vec!["Winograd AdderNet".into(), "total".into(),
+                   "-".into(), wino.total_resource().to_string(),
+                   fmt_m(wino.total_energy())]);
+    print!("{}", viz::print_table(
+        &["method", "module", "#cycle", "resource", "energy (equiv)"],
+        &rows));
+    println!(
+        "\nenergy ratio {:.1}% (paper: 47.6%); pipelined latency {} vs {} \
+         cycles ({:.0}% reduction; paper estimate: ~50%)",
+        100.0 * wino.total_energy() as f64 / orig.total_energy() as f64,
+        wino.pipelined_latency, orig.pipelined_latency,
+        100.0 * (1.0 - wino.pipelined_latency as f64
+                 / orig.pipelined_latency as f64));
+    Ok(())
+}
+
+fn cmd_tsne(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "lenet_wino_adder");
+    let manifest = Manifest::load(&artifacts_dir(args))?;
+    let engine = Engine::cpu()?;
+    let rt = engine.load_model(manifest.model(model)?)?;
+    let ds = Dataset::new(Preset::MnistLike,
+                          rt.entry.config.image_size, 5);
+    let batch = ds.batch(Split::Test, 0, rt.entry.eval_batch);
+    let (_, feats) = rt.eval(&batch.images)?;
+    let d = feats.len() / batch.n;
+    println!("embedding {} features of dim {d} (model {model})",
+             batch.n);
+    let cfg = tsne::TsneConfig::default();
+    let (y, kl) = tsne::tsne(&feats, batch.n, d, &cfg);
+    let ratio = tsne::cluster_ratio(&y, &batch.labels);
+    println!("KL divergence {kl:.3}, cluster ratio {ratio:.3} \
+              (lower = better separated)\n");
+    print!("{}", viz::ascii_scatter(&y, &batch.labels, 28, 72));
+    if let Some(csv) = args.get("csv") {
+        let rows: Vec<Vec<f64>> = (0..batch.n)
+            .map(|i| vec![y[i * 2] as f64, y[i * 2 + 1] as f64,
+                          batch.labels[i] as f64])
+            .collect();
+        io::write_csv(&PathBuf::from(csv), &["x", "y", "label"], &rows)?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_heatmap(args: &Args) -> Result<()> {
+    let hw = args.get_usize("hw", 28);
+    let cin = args.get_usize("cin", 8);
+    let mut rng = Rng::new(3);
+    let x = Tensor::randn(&mut rng, [1, cin, hw, hw]);
+    let w_hat = Tensor::randn(&mut rng, [1, cin, 4, 4]);
+    println!("Figure 4 — output heatmaps, Winograd-adder layer \
+              ({cin} ch, {hw}x{hw})\n");
+    for (label, variant) in [("original A (std)", matrices::Variant::Std),
+                             ("modified A (A0)",
+                              matrices::Variant::Balanced(0))] {
+        let y = nn_wino::winograd_adder_conv2d_fast(&x, &w_hat, 1, variant);
+        let map = &y.data[..hw * hw];
+        let score = viz::grid_artifact_score(map, hw, hw);
+        let phases = viz::phase_means(map, hw, hw);
+        println!("{label}: grid-artifact score {score:.3} \
+                  (phase means {:.1} {:.1} {:.1} {:.1})",
+                 phases[0], phases[1], phases[2], phases[3]);
+        print!("{}", viz::ascii_heatmap(map, hw, hw));
+        println!();
+    }
+    println!("score 1.0 = balanced; the std matrix shows the grid the \
+              paper's Figure 4(c) reports.");
+    Ok(())
+}
+
+fn cmd_golden(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&artifacts_dir(args))?;
+    let golden = manifest
+        .golden
+        .clone()
+        .ok_or_else(|| anyhow!("no golden section in manifest"))?;
+    let engine = Engine::cpu()?;
+    let mut rt = engine.load_model(manifest.model(&golden.model)?)?;
+
+    let x = io::read_f32(&golden.x)?;
+    let y = io::read_i32(&golden.y)?;
+    let stats = rt.train_step(&x, &y, golden.p, golden.lr)?;
+    let dl = (stats.loss - golden.loss).abs();
+    println!("train step: loss {:.6} (python {:.6}, delta {dl:.2e}), \
+              acc {:.4} (python {:.4})",
+             stats.loss, golden.loss, stats.acc, golden.acc);
+    anyhow::ensure!(dl < 1e-3, "loss mismatch vs python");
+
+    let params = rt.params_flat()?;
+    let want = io::read_f32(&golden.params_out)?;
+    let max_err = params
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!("updated params max |delta| vs python: {max_err:.2e}");
+    anyhow::ensure!(max_err < 5e-3, "params mismatch vs python");
+    println!("golden check OK — rust PJRT path reproduces the jax \
+              train step bit-for-bit (within float tolerance)");
+    Ok(())
+}

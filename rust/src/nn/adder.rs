@@ -1,0 +1,137 @@
+//! Direct AdderNet convolution (paper Eq. 1), f32.
+//!
+//! `Y(m,n,t) = -sum_{i,j,k} |F(i,j,k,t) - X(m+i,n+j,k)|`
+//!
+//! Two implementations: a readable naive loop (oracle) and a blocked,
+//! im2col-based hot path (`adder_conv2d_fast`) used by the serving
+//! fallback and the native benches.
+
+use super::{conv::im2col, Tensor};
+
+/// Naive oracle, direct from Eq. 1.
+pub fn adder_conv2d(x: &Tensor, w: &Tensor, pad: usize) -> Tensor {
+    let xp = x.pad_same(pad);
+    let [n, c, h, wd] = xp.dims;
+    let o = w.dims[0];
+    assert_eq!(w.dims[1], c, "channel mismatch");
+    let (ho, wo) = (h - 2, wd - 2);
+    let mut out = Tensor::zeros([n, o, ho, wo]);
+    for in_ in 0..n {
+        for oc in 0..o {
+            for i in 0..ho {
+                for j in 0..wo {
+                    let mut s = 0.0;
+                    for ic in 0..c {
+                        for ki in 0..3 {
+                            for kj in 0..3 {
+                                s += (w.at(oc, ic, ki, kj)
+                                    - xp.at(in_, ic, i + ki, j + kj))
+                                    .abs();
+                            }
+                        }
+                    }
+                    *out.at_mut(in_, oc, i, j) = -s;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Blocked im2col hot path; identical output to [`adder_conv2d`].
+///
+/// Layout mirrors a blocked GEMM: patches (T, K) x weights (O, K) with
+/// the inner K loop kept contiguous for auto-vectorization of the
+/// |a-b| accumulation.
+pub fn adder_conv2d_fast(x: &Tensor, w: &Tensor, pad: usize) -> Tensor {
+    let xp = x.pad_same(pad);
+    let [n, _c, h, wd] = xp.dims;
+    let o = w.dims[0];
+    let (ho, wo) = (h - 2, wd - 2);
+    let (cols, rows, k) = im2col(&xp);
+    debug_assert_eq!(rows, n * ho * wo);
+    let mut out_rows = vec![0f32; rows * o];
+    l1_distance_matrix(&cols, &w.data, rows, o, k, &mut out_rows);
+    // (N*Ho*Wo, O) -> (N, O, Ho, Wo)
+    let mut out = Tensor::zeros([n, o, ho, wo]);
+    for in_ in 0..n {
+        for i in 0..ho {
+            for j in 0..wo {
+                let row = (in_ * ho + i) * wo + j;
+                for oc in 0..o {
+                    *out.at_mut(in_, oc, i, j) = out_rows[row * o + oc];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `out[t, o] = -sum_k |w[o*k..] - x[t*k..]|` — the shared hot loop.
+///
+/// Row-blocked so a block of patch rows stays in L1/L2 while streaming
+/// the weight rows (the FPGA adder-array analogue on CPU).
+pub fn l1_distance_matrix(x: &[f32], w: &[f32], t: usize, o: usize, k: usize,
+                          out: &mut [f32]) {
+    assert_eq!(x.len(), t * k);
+    assert_eq!(w.len(), o * k);
+    assert_eq!(out.len(), t * o);
+    const TB: usize = 32;
+    for t0 in (0..t).step_by(TB) {
+        let t1 = (t0 + TB).min(t);
+        for oc in 0..o {
+            let wrow = &w[oc * k..(oc + 1) * k];
+            for ti in t0..t1 {
+                let xrow = &x[ti * k..(ti + 1) * k];
+                let mut s = 0f32;
+                for kk in 0..k {
+                    s += (wrow[kk] - xrow[kk]).abs();
+                }
+                out[ti * o + oc] = -s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::property;
+
+    #[test]
+    fn outputs_nonpositive() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&mut rng, [1, 3, 6, 6]);
+        let w = Tensor::randn(&mut rng, [4, 3, 3, 3]);
+        let y = adder_conv2d(&x, &w, 1);
+        assert!(y.data.iter().all(|&v| v <= 0.0));
+    }
+
+    #[test]
+    fn equal_weights_patch_zero() {
+        // if the patch equals the filter, that output position is 0
+        let w = Tensor::from_vec((0..9).map(|i| i as f32).collect(),
+                                 [1, 1, 3, 3]);
+        let x = Tensor::from_vec((0..9).map(|i| i as f32).collect(),
+                                 [1, 1, 3, 3]);
+        let y = adder_conv2d(&x, &w, 0);
+        assert_eq!(y.data, vec![0.0]);
+    }
+
+    #[test]
+    fn fast_matches_naive_property() {
+        property(25, |g| {
+            let n = g.usize_in(1, 2);
+            let c = g.usize_in(1, 5);
+            let hw = 2 * g.usize_in(2, 5);
+            let o = g.usize_in(1, 6);
+            let mut rng = crate::util::rng::Rng::new(g.usize_in(0, 1 << 30) as u64);
+            let x = Tensor::randn(&mut rng, [n, c, hw, hw]);
+            let w = Tensor::randn(&mut rng, [o, c, 3, 3]);
+            let a = adder_conv2d(&x, &w, 1);
+            let b = adder_conv2d_fast(&x, &w, 1);
+            crate::util::testkit::all_close(&a.data, &b.data, 1e-4, 1e-4)
+        });
+    }
+}

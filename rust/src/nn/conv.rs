@@ -1,0 +1,102 @@
+//! Plain f32 convolution (correlation) — the CNN baseline and the
+//! ground truth for the Winograd identity tests.
+
+use super::Tensor;
+
+/// 3x3, stride-1 correlation with `pad` zero-padding.
+/// `x (N,C,H,W)`, `w (O,C,3,3)` -> `(N,O,H+2p-2,W+2p-2)`.
+pub fn conv2d(x: &Tensor, w: &Tensor, pad: usize) -> Tensor {
+    let xp = x.pad_same(pad);
+    let [n, c, h, wd] = xp.dims;
+    let o = w.dims[0];
+    assert_eq!(w.dims[1], c, "channel mismatch");
+    assert_eq!((w.dims[2], w.dims[3]), (3, 3), "3x3 only");
+    let (ho, wo) = (h - 2, wd - 2);
+    let mut out = Tensor::zeros([n, o, ho, wo]);
+    for in_ in 0..n {
+        for oc in 0..o {
+            for ic in 0..c {
+                for i in 0..ho {
+                    for j in 0..wo {
+                        let mut s = 0.0;
+                        for ki in 0..3 {
+                            for kj in 0..3 {
+                                s += xp.at(in_, ic, i + ki, j + kj)
+                                    * w.at(oc, ic, ki, kj);
+                            }
+                        }
+                        *out.at_mut(in_, oc, i, j) += s;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// im2col: `(N,C,H,W)` (already padded) -> row-major `(N*(H-2)*(W-2), C*9)`
+/// with k-index `c*9 + ki*3 + kj` — same layout as the Python side.
+pub fn im2col(x: &Tensor) -> (Vec<f32>, usize, usize) {
+    let [n, c, h, w] = x.dims;
+    let (ho, wo) = (h - 2, w - 2);
+    let rows = n * ho * wo;
+    let k = c * 9;
+    let mut out = vec![0f32; rows * k];
+    for in_ in 0..n {
+        for i in 0..ho {
+            for j in 0..wo {
+                let row = (in_ * ho + i) * wo + j;
+                for ic in 0..c {
+                    for ki in 0..3 {
+                        for kj in 0..3 {
+                            out[row * k + ic * 9 + ki * 3 + kj] =
+                                x.at(in_, ic, i + ki, j + kj);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, rows, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_kernel_is_identity() {
+        let mut rng = Rng::new(0);
+        let x = Tensor::randn(&mut rng, [1, 1, 5, 5]);
+        let mut w = Tensor::zeros([1, 1, 3, 3]);
+        *w.at_mut(0, 0, 1, 1) = 1.0; // delta kernel
+        let y = conv2d(&x, &w, 1);
+        assert_eq!(y.dims, x.dims);
+        for i in 0..5 {
+            for j in 0..5 {
+                assert!((y.at(0, 0, i, j) - x.at(0, 0, i, j)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn sums_channels() {
+        let x = Tensor::from_vec(vec![1.0; 2 * 9], [1, 2, 3, 3]);
+        let w = Tensor::from_vec(vec![1.0; 2 * 9], [1, 2, 3, 3]);
+        let y = conv2d(&x, &w, 0);
+        assert_eq!(y.dims, [1, 1, 1, 1]);
+        assert_eq!(y.data[0], 18.0);
+    }
+
+    #[test]
+    fn im2col_layout() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&mut rng, [1, 2, 4, 4]);
+        let (cols, rows, k) = im2col(&x);
+        assert_eq!((rows, k), (4, 18));
+        // row 3 = output pixel (1,1): patch starts at (1,1)
+        assert_eq!(cols[3 * k + 0], x.at(0, 0, 1, 1));
+        assert_eq!(cols[3 * k + 9 + 4], x.at(0, 1, 2, 2));
+    }
+}

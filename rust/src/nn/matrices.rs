@@ -1,0 +1,289 @@
+//! Winograd F(2x2,3x3) transform matrices — rust mirror of
+//! `python/compile/transforms.py` (kept in sync by golden tests).
+//!
+//! Conventions: `Y = A^T [(G g G^T) . (B^T d B)] A` with A 4x2, G 4x3,
+//! B 4x4. The *balanced* variants A0..A3 are the Theorem-2 matrices whose
+//! columns all contain the same number of +1/-1 entries, fixing the
+//! per-position magnitude imbalance of the accumulated `-|.|` features.
+
+/// Transform family selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Paper Eq. 7 (Lavin-Gray) — the *unbalanced* baseline.
+    Std,
+    /// Theorem-2 balanced matrices A_i/G_i, i = 0..3.
+    Balanced(usize),
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "std" => Some(Variant::Std),
+            "A0" => Some(Variant::Balanced(0)),
+            "A1" => Some(Variant::Balanced(1)),
+            "A2" => Some(Variant::Balanced(2)),
+            "A3" => Some(Variant::Balanced(3)),
+            _ => None,
+        }
+    }
+}
+
+pub const A_STD: [[f32; 2]; 4] = [[1., 0.], [1., 1.], [1., -1.], [0., -1.]];
+pub const G_STD: [[f32; 3]; 4] =
+    [[1., 0., 0.], [0.5, 0.5, 0.5], [0.5, -0.5, 0.5], [0., 0., 1.]];
+pub const B_STD: [[f32; 4]; 4] = [
+    [1., 0., 0., 0.],
+    [0., 1., -1., 1.],
+    [-1., 1., 1., 0.],
+    [0., 0., 0., -1.],
+];
+
+/// The four balanced output transforms of Theorem 2 (paper Sec. 3.2).
+pub const A_BAL: [[[f32; 2]; 4]; 4] = [
+    [[-1., 0.], [1., 1.], [1., -1.], [0., 1.]],
+    [[-1., 0.], [-1., -1.], [1., -1.], [0., 1.]],
+    [[1., 0.], [-1., -1.], [-1., 1.], [0., -1.]],
+    [[1., 0.], [1., 1.], [-1., 1.], [0., -1.]],
+];
+
+/// Row-sign fixups turning G_STD into the matching balanced G_i
+/// (derived from Theorem 1 with B held at the standard integer B;
+/// sign[i][r] multiplies row r of G_STD).
+const G_BAL_SIGNS: [[f32; 4]; 4] = [
+    [-1., 1., 1., -1.],
+    [-1., -1., 1., -1.],
+    [1., -1., -1., 1.],
+    [1., 1., -1., 1.],
+];
+
+pub fn a(variant: Variant) -> [[f32; 2]; 4] {
+    match variant {
+        Variant::Std => A_STD,
+        Variant::Balanced(i) => A_BAL[i],
+    }
+}
+
+pub fn g(variant: Variant) -> [[f32; 3]; 4] {
+    match variant {
+        Variant::Std => G_STD,
+        Variant::Balanced(i) => {
+            let mut out = G_STD;
+            for r in 0..4 {
+                for c in 0..3 {
+                    out[r][c] *= G_BAL_SIGNS[i][r];
+                }
+            }
+            out
+        }
+    }
+}
+
+pub fn b(_variant: Variant) -> [[f32; 4]; 4] {
+    // all balanced variants share the standard integer B by construction
+    B_STD
+}
+
+/// `d_hat = B^T d B` for a flat 4x4 tile.
+pub fn input_transform(d: &[f32; 16], variant: Variant) -> [f32; 16] {
+    let bm = b(variant);
+    let mut tmp = [0f32; 16]; // B^T d
+    for i in 0..4 {
+        for j in 0..4 {
+            let mut s = 0.0;
+            for k in 0..4 {
+                s += bm[k][i] * d[k * 4 + j];
+            }
+            tmp[i * 4 + j] = s;
+        }
+    }
+    let mut out = [0f32; 16]; // (B^T d) B
+    for i in 0..4 {
+        for j in 0..4 {
+            let mut s = 0.0;
+            for l in 0..4 {
+                s += tmp[i * 4 + l] * bm[l][j];
+            }
+            out[i * 4 + j] = s;
+        }
+    }
+    out
+}
+
+/// `w_hat = G g G^T` for a flat 3x3 filter.
+pub fn kernel_transform(gf: &[f32; 9], variant: Variant) -> [f32; 16] {
+    let gm = g(variant);
+    let mut tmp = [0f32; 12]; // G g : 4x3
+    for i in 0..4 {
+        for j in 0..3 {
+            let mut s = 0.0;
+            for k in 0..3 {
+                s += gm[i][k] * gf[k * 3 + j];
+            }
+            tmp[i * 3 + j] = s;
+        }
+    }
+    let mut out = [0f32; 16]; // (G g) G^T : 4x4
+    for i in 0..4 {
+        for j in 0..4 {
+            let mut s = 0.0;
+            for l in 0..3 {
+                s += tmp[i * 3 + l] * gm[j][l];
+            }
+            out[i * 4 + j] = s;
+        }
+    }
+    out
+}
+
+/// `y = A^T m A` for a flat 4x4 transform-domain tile -> 2x2 output.
+pub fn output_transform(m: &[f32; 16], variant: Variant) -> [f32; 4] {
+    let am = a(variant);
+    let mut tmp = [0f32; 8]; // A^T m : 2x4
+    for i in 0..2 {
+        for j in 0..4 {
+            let mut s = 0.0;
+            for k in 0..4 {
+                s += am[k][i] * m[k * 4 + j];
+            }
+            tmp[i * 4 + j] = s;
+        }
+    }
+    let mut out = [0f32; 4]; // (A^T m) A : 2x2
+    for i in 0..2 {
+        for j in 0..2 {
+            let mut s = 0.0;
+            for l in 0..4 {
+                s += tmp[i * 4 + l] * am[l][j];
+            }
+            out[i * 2 + j] = s;
+        }
+    }
+    out
+}
+
+/// Flat output-transform matrix S (16x4): `y_flat = m_flat * S`
+/// (mirrors `ref.output_transform_matrix`). Used by the vectorized
+/// wino-adder hot path so the 2x2 transform becomes one 16x4 matmul.
+pub fn output_transform_flat(variant: Variant) -> [[f32; 4]; 16] {
+    let am = a(variant);
+    let mut s = [[0f32; 4]; 16];
+    for k in 0..4 {
+        for l in 0..4 {
+            for i in 0..2 {
+                for j in 0..2 {
+                    s[k * 4 + l][i * 2 + j] = am[k][i] * am[l][j];
+                }
+            }
+        }
+    }
+    s
+}
+
+/// Theorem-2 balance predicate on a 4x2 output transform.
+pub fn is_balanced(a: &[[f32; 2]; 4]) -> bool {
+    let count = |col: usize, v: f32| -> usize {
+        (0..4).filter(|&r| a[r][col] == v).count()
+    };
+    let p0 = count(0, 1.0);
+    let m0 = count(0, -1.0);
+    let p1 = count(1, 1.0);
+    let m1 = count(1, -1.0);
+    p0 == p1 && m0 == m1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv2d_f23(d: &[f32; 16], gf: &[f32; 9]) -> [f32; 4] {
+        let mut out = [0f32; 4];
+        for i in 0..2 {
+            for j in 0..2 {
+                let mut s = 0.0;
+                for ki in 0..3 {
+                    for kj in 0..3 {
+                        s += d[(i + ki) * 4 + j + kj] * gf[ki * 3 + kj];
+                    }
+                }
+                out[i * 2 + j] = s;
+            }
+        }
+        out
+    }
+
+    fn variants() -> Vec<Variant> {
+        vec![Variant::Std, Variant::Balanced(0), Variant::Balanced(1),
+             Variant::Balanced(2), Variant::Balanced(3)]
+    }
+
+    #[test]
+    fn winograd_identity_all_variants() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        for v in variants() {
+            for _ in 0..20 {
+                let mut d = [0f32; 16];
+                let mut gf = [0f32; 9];
+                d.iter_mut().for_each(|x| *x = rng.normal());
+                gf.iter_mut().for_each(|x| *x = rng.normal());
+                let w_hat = kernel_transform(&gf, v);
+                let d_hat = input_transform(&d, v);
+                let mut m = [0f32; 16];
+                for i in 0..16 {
+                    m[i] = w_hat[i] * d_hat[i];
+                }
+                let y = output_transform(&m, v);
+                let want = conv2d_f23(&d, &gf);
+                for i in 0..4 {
+                    assert!((y[i] - want[i]).abs() < 1e-4,
+                            "{v:?} pos {i}: {} vs {}", y[i], want[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_predicate() {
+        assert!(!is_balanced(&A_STD));
+        for i in 0..4 {
+            assert!(is_balanced(&A_BAL[i]), "A{i}");
+        }
+    }
+
+    #[test]
+    fn flat_output_transform_matches() {
+        let mut rng = crate::util::rng::Rng::new(10);
+        for v in variants() {
+            let s = output_transform_flat(v);
+            let mut m = [0f32; 16];
+            m.iter_mut().for_each(|x| *x = rng.normal());
+            let direct = output_transform(&m, v);
+            let mut flat = [0f32; 4];
+            for q in 0..4 {
+                for p in 0..16 {
+                    flat[q] += m[p] * s[p][q];
+                }
+            }
+            for i in 0..4 {
+                assert!((direct[i] - flat[i]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn parse_variants() {
+        assert_eq!(Variant::parse("std"), Some(Variant::Std));
+        assert_eq!(Variant::parse("A2"), Some(Variant::Balanced(2)));
+        assert_eq!(Variant::parse("A7"), None);
+    }
+
+    #[test]
+    fn matches_python_transposes() {
+        // the A_i^T rows listed in paper Sec. 3.2
+        let a0t: [[f32; 4]; 2] = [[-1., 1., 1., 0.], [0., 1., -1., 1.]];
+        for (r, row) in a0t.iter().enumerate() {
+            for c in 0..4 {
+                assert_eq!(A_BAL[0][c][r], row[c]);
+            }
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Rust-native neural-net kernels: f32 + int8 adder / Winograd convs.
+//!
+//! These serve three roles:
+//! 1. **Independent oracles** — property tests cross-check them against
+//!    the HLO artifacts produced by the Python layer (two independent
+//!    implementations of the paper's math).
+//! 2. **The int8 fixed-point path** — the paper's energy story (Fig. 1,
+//!    Table 2) is about 8-bit arithmetic; [`quant`] implements it.
+//! 3. **Optimized hot path** — the serving fallback and the native
+//!    benches iterate on these (EXPERIMENTS.md §Perf).
+
+pub mod adder;
+pub mod conv;
+pub mod matrices;
+pub mod quant;
+pub mod wino_adder;
+
+/// Simple owned NCHW tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    /// `[n, c, h, w]`
+    pub dims: [usize; 4],
+}
+
+impl Tensor {
+    pub fn zeros(dims: [usize; 4]) -> Tensor {
+        Tensor { data: vec![0.0; dims.iter().product()], dims }
+    }
+
+    pub fn from_vec(data: Vec<f32>, dims: [usize; 4]) -> Tensor {
+        assert_eq!(data.len(), dims.iter().product::<usize>(),
+                   "data/dims mismatch");
+        Tensor { data, dims }
+    }
+
+    pub fn randn(rng: &mut crate::util::rng::Rng, dims: [usize; 4]) -> Tensor {
+        Tensor { data: rng.normal_vec(dims.iter().product()), dims }
+    }
+
+    #[inline]
+    pub fn at(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        let [_, cc, hh, ww] = self.dims;
+        self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, n: usize, c: usize, h: usize, w: usize)
+                  -> &mut f32 {
+        let [_, cc, hh, ww] = self.dims;
+        &mut self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Zero-pad H and W by `pad` on each side.
+    pub fn pad_same(&self, pad: usize) -> Tensor {
+        if pad == 0 {
+            return self.clone();
+        }
+        let [n, c, h, w] = self.dims;
+        let mut out = Tensor::zeros([n, c, h + 2 * pad, w + 2 * pad]);
+        for in_ in 0..n {
+            for ic in 0..c {
+                for ih in 0..h {
+                    for iw in 0..w {
+                        *out.at_mut(in_, ic, ih + pad, iw + pad) =
+                            self.at(in_, ic, ih, iw);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn indexing_roundtrip() {
+        let mut t = Tensor::zeros([2, 3, 4, 5]);
+        *t.at_mut(1, 2, 3, 4) = 7.5;
+        assert_eq!(t.at(1, 2, 3, 4), 7.5);
+        assert_eq!(t.data[t.data.len() - 1], 7.5);
+    }
+
+    #[test]
+    fn pad_preserves_interior() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::randn(&mut rng, [1, 2, 3, 3]);
+        let p = t.pad_same(1);
+        assert_eq!(p.dims, [1, 2, 5, 5]);
+        assert_eq!(p.at(0, 1, 1, 1), t.at(0, 1, 0, 0));
+        assert_eq!(p.at(0, 0, 0, 0), 0.0);
+        assert_eq!(p.at(0, 1, 4, 4), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn from_vec_checks_len() {
+        Tensor::from_vec(vec![0.0; 3], [1, 1, 2, 2]);
+    }
+}

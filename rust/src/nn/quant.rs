@@ -1,0 +1,363 @@
+//! int8 fixed-point inference path — the paper's deployment regime.
+//!
+//! All of Figure 1 / Table 2's energy numbers assume 8-bit operands
+//! ("All data is achieved under 8-bit fixed-point number"). This module
+//! implements symmetric per-tensor quantization and the int8 variants of
+//! the direct adder and Winograd-adder convolutions with i32
+//! accumulators — the arithmetic the FPGA simulator (crate::fpga) costs
+//! out cycle by cycle.
+//!
+//! Note the Winograd-adder int8 subtlety: the input transform B^T d B
+//! sums four int8 values, so the transform-domain tile needs 10 bits;
+//! we keep d_hat in i16 (as the paper's FPGA does with its widened
+//! input-transform datapath) and the |w_hat - d_hat| accumulation in i32.
+
+use super::matrices::{self, Variant};
+use super::Tensor;
+
+/// Symmetric per-tensor quantization parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct QParams {
+    pub scale: f32,
+}
+
+impl QParams {
+    /// Fit a scale so max |x| maps to 127.
+    pub fn fit(data: &[f32]) -> QParams {
+        let max = data.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        QParams { scale: if max == 0.0 { 1.0 } else { max / 127.0 } }
+    }
+
+    pub fn quantize(&self, x: f32) -> i8 {
+        (x / self.scale).round().clamp(-127.0, 127.0) as i8
+    }
+
+    pub fn dequantize(&self, q: i32) -> f32 {
+        q as f32 * self.scale
+    }
+}
+
+/// Quantized NCHW tensor.
+#[derive(Debug, Clone)]
+pub struct QTensor {
+    pub data: Vec<i8>,
+    pub dims: [usize; 4],
+    pub qp: QParams,
+}
+
+impl QTensor {
+    pub fn from_f32(t: &Tensor) -> QTensor {
+        let qp = QParams::fit(&t.data);
+        QTensor {
+            data: t.data.iter().map(|&v| qp.quantize(v)).collect(),
+            dims: t.dims,
+            qp,
+        }
+    }
+
+    pub fn to_f32(&self) -> Tensor {
+        Tensor {
+            data: self.data.iter().map(|&q| self.qp.dequantize(q as i32))
+                .collect(),
+            dims: self.dims,
+        }
+    }
+
+    #[inline]
+    fn at(&self, n: usize, c: usize, h: usize, w: usize) -> i8 {
+        let [_, cc, hh, ww] = self.dims;
+        self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+}
+
+/// int8 direct adder conv. Weights and activations must share a scale
+/// for |w - x| to be meaningful; callers rescale to the joint max.
+///
+/// Returns i32 accumulators `(N, O, Ho, Wo)` plus the shared scale.
+pub fn adder_conv2d_i8(x: &QTensor, w: &QTensor, pad: usize)
+                       -> (Vec<i32>, [usize; 4], f32) {
+    assert!((x.qp.scale - w.qp.scale).abs() < 1e-9,
+            "adder arithmetic needs a shared scale; use requantize_pair");
+    let scale = x.qp.scale;
+    let [n, c, h, wd] = x.dims;
+    let o = w.dims[0];
+    let (hp, wp) = (h + 2 * pad, wd + 2 * pad);
+    let (ho, wo) = (hp - 2, wp - 2);
+    let mut out = vec![0i32; n * o * ho * wo];
+    let get = |in_: usize, ic: usize, i: isize, j: isize| -> i8 {
+        let (i, j) = (i - pad as isize, j - pad as isize);
+        if i < 0 || j < 0 || i >= h as isize || j >= wd as isize {
+            0
+        } else {
+            x.at(in_, ic, i as usize, j as usize)
+        }
+    };
+    for in_ in 0..n {
+        for oc in 0..o {
+            for i in 0..ho {
+                for j in 0..wo {
+                    let mut s = 0i32;
+                    for ic in 0..c {
+                        for ki in 0..3 {
+                            for kj in 0..3 {
+                                let wv = w.at(oc, ic, ki, kj) as i32;
+                                let xv = get(in_, ic, (i + ki) as isize,
+                                             (j + kj) as isize)
+                                    as i32;
+                                s += (wv - xv).abs();
+                            }
+                        }
+                    }
+                    out[((in_ * o + oc) * ho + i) * wo + j] = -s;
+                }
+            }
+        }
+    }
+    (out, [n, o, ho, wo], scale)
+}
+
+/// Requantize a (weights, activations) pair to a shared scale — adder
+/// arithmetic compares magnitudes across the two tensors.
+pub fn requantize_pair(x: &Tensor, w: &Tensor) -> (QTensor, QTensor) {
+    let max = x.data.iter().chain(&w.data)
+        .fold(0f32, |m, &v| m.max(v.abs()));
+    let qp = QParams { scale: if max == 0.0 { 1.0 } else { max / 127.0 } };
+    let q = |t: &Tensor| QTensor {
+        data: t.data.iter().map(|&v| qp.quantize(v)).collect(),
+        dims: t.dims,
+        qp,
+    };
+    (q(x), q(w))
+}
+
+/// int8 Winograd-adder conv: int8 inputs/weights, i16 transform domain,
+/// i32 accumulation (the FPGA datapath of Table 2).
+pub fn winograd_adder_conv2d_i8(x: &QTensor, w_hat_q: &[i16],
+                                w_dims: [usize; 4], pad: usize,
+                                variant: Variant)
+                                -> (Vec<i32>, [usize; 4], f32) {
+    let [n, c, h, wd] = x.dims;
+    let o = w_dims[0];
+    assert_eq!(w_dims[1], c);
+    let (hp, wp) = (h + 2 * pad, wd + 2 * pad);
+    assert!((hp - 2) % 2 == 0 && (wp - 2) % 2 == 0);
+    let (th, tw) = ((hp - 2) / 2, (wp - 2) / 2);
+    let bm = matrices::b(variant);
+    let am = matrices::a(variant);
+    let get = |in_: usize, ic: usize, i: isize, j: isize| -> i32 {
+        let (i, j) = (i - pad as isize, j - pad as isize);
+        if i < 0 || j < 0 || i >= h as isize || j >= wd as isize {
+            0
+        } else {
+            x.at(in_, ic, i as usize, j as usize) as i32
+        }
+    };
+    let mut out = vec![0i32; n * o * th * tw * 4];
+    let mut d = [0i32; 16];
+    // per-tile transformed channels (i16 = the FPGA's widened datapath);
+    // hoisted out of the output-channel loop — perf pass iteration 1,
+    // see EXPERIMENTS.md §Perf (the transform is per (tile, cin), not
+    // per (tile, cin, cout))
+    let mut dh_all = vec![0i16; c * 16];
+    for in_ in 0..n {
+        for ti in 0..th {
+            for tj in 0..tw {
+                for ic in 0..c {
+                    for ki in 0..4 {
+                        for kj in 0..4 {
+                            d[ki * 4 + kj] = get(
+                                in_, ic,
+                                (2 * ti + ki) as isize,
+                                (2 * tj + kj) as isize);
+                        }
+                    }
+                    // integer B^T d B (B entries are 0/±1 -> exact)
+                    let mut tmp = [0i32; 16];
+                    for i in 0..4 {
+                        for j in 0..4 {
+                            let mut s = 0i32;
+                            for kk in 0..4 {
+                                s += (bm[kk][i] as i32) * d[kk * 4 + j];
+                            }
+                            tmp[i * 4 + j] = s;
+                        }
+                    }
+                    for i in 0..4 {
+                        for j in 0..4 {
+                            let mut s = 0i32;
+                            for l in 0..4 {
+                                s += tmp[i * 4 + l] * (bm[l][j] as i32);
+                            }
+                            // fits in 10 bits
+                            dh_all[ic * 16 + i * 4 + j] = s as i16;
+                        }
+                    }
+                }
+                for oc in 0..o {
+                    let mut m = [0i32; 16];
+                    for ic in 0..c {
+                        let dh = &dh_all[ic * 16..ic * 16 + 16];
+                        let wrow = &w_hat_q[(oc * c + ic) * 16..][..16];
+                        for p in 0..16 {
+                            m[p] -= ((wrow[p] as i32) - (dh[p] as i32)).abs();
+                        }
+                    }
+                    // integer A^T m A (A entries are 0/±1 -> exact)
+                    for i in 0..2 {
+                        for j in 0..2 {
+                            let mut s = 0i32;
+                            for kk in 0..4 {
+                                for l in 0..4 {
+                                    s += (am[kk][i] as i32)
+                                        * m[kk * 4 + l]
+                                        * (am[l][j] as i32);
+                                }
+                            }
+                            // NCHW scatter: (n, oc, 2*ti+i, 2*tj+j)
+                            let idx = ((in_ * o + oc) * (2 * th)
+                                + (2 * ti + i)) * (2 * tw)
+                                + (2 * tj + j);
+                            out[idx] = s;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, [n, o, 2 * th, 2 * tw], x.qp.scale)
+}
+
+/// Quantize Winograd-domain f32 weights to i16 on the activation scale
+/// (transform-domain weights exceed int8 range for the std G due to the
+/// 1/2 rows; i16 keeps the comparison exact on FPGA-width datapaths).
+pub fn quantize_wino_weights(w_hat: &Tensor, scale: f32) -> Vec<i16> {
+    w_hat.data.iter()
+        .map(|&v| (v / scale).round().clamp(i16::MIN as f32,
+                                            i16::MAX as f32) as i16)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{adder, wino_adder};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qparams_roundtrip_small_error() {
+        let mut rng = Rng::new(6);
+        let data = rng.normal_vec(100);
+        let qp = QParams::fit(&data);
+        for &v in &data {
+            let err = (qp.dequantize(qp.quantize(v) as i32) - v).abs();
+            assert!(err <= qp.scale * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn i8_adder_close_to_f32() {
+        let mut rng = Rng::new(7);
+        let x = Tensor::randn(&mut rng, [1, 4, 6, 6]);
+        let w = Tensor::randn(&mut rng, [3, 4, 3, 3]);
+        let (qx, qw) = requantize_pair(&x, &w);
+        let (qy, dims, scale) = adder_conv2d_i8(&qx, &qw, 1);
+        let want = adder::adder_conv2d(&x, &w, 1);
+        assert_eq!(dims, want.dims);
+        // quantization error bound: 36 adds of values with step `scale`
+        let tol = scale * 4.0 * 9.0; // K * (0.5 step per operand pair) * 2
+        for (q, f) in qy.iter().zip(&want.data) {
+            let got = q * 1; // i32
+            let got_f = got as f32 * scale;
+            assert!((got_f - f).abs() < tol, "{got_f} vs {f}");
+        }
+    }
+
+    #[test]
+    fn i8_wino_adder_exact_on_dequantized_operands() {
+        // All transform matrices are 0/±1 and |.| commutes with the
+        // shared scale, so the integer path must match the f32 path run
+        // on the *dequantized* operands exactly (up to f32 rounding).
+        let mut rng = Rng::new(8);
+        let x = Tensor::randn(&mut rng, [1, 4, 6, 6]);
+        let w_hat = Tensor::randn(&mut rng, [3, 4, 4, 4]);
+        let (qx, _) = requantize_pair(&x, &x);
+        let wq = quantize_wino_weights(&w_hat, qx.qp.scale);
+        let (qy, dims, scale) = winograd_adder_conv2d_i8(
+            &qx, &wq, w_hat.dims, 1, Variant::Balanced(0));
+        let xd = qx.to_f32();
+        let wd = Tensor {
+            data: wq.iter().map(|&q| q as f32 * scale).collect(),
+            dims: w_hat.dims,
+        };
+        let want = wino_adder::winograd_adder_conv2d(
+            &xd, &wd, 1, Variant::Balanced(0));
+        assert_eq!(dims, want.dims);
+        for (q, f) in qy.iter().zip(&want.data) {
+            let got_f = *q as f32 * scale;
+            assert!((got_f - f).abs() < 1e-3 * f.abs().max(1.0),
+                    "{got_f} vs {f}");
+        }
+    }
+
+    #[test]
+    fn i8_wino_adder_quantization_error_bounded() {
+        // vs the unquantized f32 reference: error bounded by the
+        // propagated quantization noise (~90 * scale worst case for
+        // C=4; allow 2x slack).
+        let mut rng = Rng::new(8);
+        let x = Tensor::randn(&mut rng, [1, 4, 6, 6]);
+        let w_hat = Tensor::randn(&mut rng, [3, 4, 4, 4]);
+        let (qx, _) = requantize_pair(&x, &x);
+        let wq = quantize_wino_weights(&w_hat, qx.qp.scale);
+        let (qy, _, scale) = winograd_adder_conv2d_i8(
+            &qx, &wq, w_hat.dims, 1, Variant::Balanced(0));
+        let want = wino_adder::winograd_adder_conv2d(
+            &x, &w_hat, 1, Variant::Balanced(0));
+        let tol = 180.0 * scale;
+        for (q, f) in qy.iter().zip(&want.data) {
+            let got_f = *q as f32 * scale;
+            assert!((got_f - f).abs() < tol, "{got_f} vs {f} (tol {tol})");
+        }
+    }
+
+    #[test]
+    fn shared_scale_enforced() {
+        let mut rng = Rng::new(9);
+        let x = QTensor::from_f32(&Tensor::randn(&mut rng, [1, 1, 4, 4]));
+        let mut w = QTensor::from_f32(&Tensor::randn(&mut rng, [1, 1, 3, 3]));
+        w.qp.scale *= 2.0;
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| adder_conv2d_i8(&x, &w, 1)));
+        assert!(result.is_err());
+    }
+}
+
+#[cfg(test)]
+mod layout_regression_tests {
+    use super::*;
+    use crate::nn::{wino_adder, Tensor};
+
+    #[test]
+    fn single_tile_exact() {
+        // 1x1x4x4 input, pad 0 -> exactly one tile; 1 out channel
+        let x = Tensor::from_vec((0..16).map(|i| i as f32).collect(), [1,1,4,4]);
+        let w_hat = Tensor::from_vec((0..16).map(|i| (i%5) as f32 - 2.0).collect(), [1,1,4,4]);
+        let qx = QTensor { data: x.data.iter().map(|&v| v as i8).collect(), dims: x.dims, qp: QParams{scale: 1.0} };
+        let wq = quantize_wino_weights(&w_hat, 1.0);
+        let (qy, _dims, _) = winograd_adder_conv2d_i8(&qx, &wq, w_hat.dims, 0, Variant::Balanced(0));
+        let want = wino_adder::winograd_adder_conv2d(&x, &w_hat, 0, Variant::Balanced(0));
+        assert_eq!(qy.iter().map(|&v| v as f32).collect::<Vec<_>>(), want.data);
+    }
+
+    #[test]
+    fn padded_layout_nchw() {
+        let x = Tensor::from_vec((0..16).map(|i| (i%7) as f32 - 3.0).collect(), [1,1,4,4]);
+        let w_hat = Tensor::from_vec((0..16).map(|i| (i%5) as f32 - 2.0).collect(), [1,1,4,4]);
+        let qx = QTensor { data: x.data.iter().map(|&v| v as i8).collect(), dims: x.dims, qp: QParams{scale: 1.0} };
+        let wq = quantize_wino_weights(&w_hat, 1.0);
+        let (qy, dims, _) = winograd_adder_conv2d_i8(&qx, &wq, w_hat.dims, 1, Variant::Balanced(0));
+        let want = wino_adder::winograd_adder_conv2d(&x, &w_hat, 1, Variant::Balanced(0));
+        assert_eq!(dims, want.dims);
+        assert_eq!(qy.iter().map(|&v| v as f32).collect::<Vec<_>>(), want.data);
+    }
+}

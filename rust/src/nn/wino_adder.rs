@@ -1,0 +1,266 @@
+//! Winograd convolutions, f32: the standard (multiplication) form and
+//! the paper's adder form (Eq. 9), plus the blocked hot path.
+//!
+//! Shared pipeline per 4x4 input tile (stride 2):
+//!   d_hat = B^T d B
+//!   m     = { w_hat .* d_hat          (Winograd CNN)
+//!           { -sum_c |w_hat - d_hat|  (Winograd AdderNet)
+//!   y     = A^T m A  (2x2 output patch)
+
+use super::matrices::{self, Variant};
+use super::Tensor;
+
+/// Extract + transform all tiles: returns `d_hat` as `(T, C, 16)`
+/// row-major with `T = N * th * tw`, plus `(n, th, tw)`.
+pub fn input_tiles(xp: &Tensor, variant: Variant)
+                   -> (Vec<f32>, usize, usize, usize) {
+    let [n, c, h, w] = xp.dims;
+    assert!(h >= 4 && w >= 4 && (h - 2) % 2 == 0 && (w - 2) % 2 == 0,
+            "H, W must be even and >= 4 after padding");
+    let th = (h - 2) / 2;
+    let tw = (w - 2) / 2;
+    let t = n * th * tw;
+    let mut out = vec![0f32; t * c * 16];
+    let mut tile = [0f32; 16];
+    for in_ in 0..n {
+        for ti in 0..th {
+            for tj in 0..tw {
+                let trow = (in_ * th + ti) * tw + tj;
+                for ic in 0..c {
+                    for ki in 0..4 {
+                        for kj in 0..4 {
+                            tile[ki * 4 + kj] =
+                                xp.at(in_, ic, 2 * ti + ki, 2 * tj + kj);
+                        }
+                    }
+                    let d_hat = matrices::input_transform(&tile, variant);
+                    out[(trow * c + ic) * 16..(trow * c + ic) * 16 + 16]
+                        .copy_from_slice(&d_hat);
+                }
+            }
+        }
+    }
+    (out, n, th, tw)
+}
+
+/// Transform spatial weights `(O,C,3,3)` -> flat `(O, C, 16)`.
+pub fn transform_weights(w: &Tensor, variant: Variant) -> Vec<f32> {
+    let [o, c, kh, kw] = w.dims;
+    assert_eq!((kh, kw), (3, 3));
+    let mut out = vec![0f32; o * c * 16];
+    let mut g = [0f32; 9];
+    for oc in 0..o {
+        for ic in 0..c {
+            for i in 0..9 {
+                g[i] = w.data[(oc * c + ic) * 9 + i];
+            }
+            let w_hat = matrices::kernel_transform(&g, variant);
+            out[(oc * c + ic) * 16..(oc * c + ic) * 16 + 16]
+                .copy_from_slice(&w_hat);
+        }
+    }
+    out
+}
+
+/// Scatter `(T, O, 4)` output patches back to `(N, O, 2*th, 2*tw)`.
+fn untile(y: &[f32], n: usize, o: usize, th: usize, tw: usize) -> Tensor {
+    let mut out = Tensor::zeros([n, o, 2 * th, 2 * tw]);
+    for in_ in 0..n {
+        for ti in 0..th {
+            for tj in 0..tw {
+                let trow = (in_ * th + ti) * tw + tj;
+                for oc in 0..o {
+                    let base = (trow * o + oc) * 4;
+                    for i in 0..2 {
+                        for j in 0..2 {
+                            *out.at_mut(in_, oc, 2 * ti + i, 2 * tj + j) =
+                                y[base + i * 2 + j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Standard Winograd F(2x2,3x3) convolution — equals `conv::conv2d`.
+pub fn winograd_conv2d(x: &Tensor, w: &Tensor, pad: usize, variant: Variant)
+                       -> Tensor {
+    let xp = x.pad_same(pad);
+    let c = xp.dims[1];
+    let o = w.dims[0];
+    let (d_hat, n, th, tw) = input_tiles(&xp, variant);
+    let w_hat = transform_weights(w, variant);
+    let t = n * th * tw;
+    let mut y = vec![0f32; t * o * 4];
+    for trow in 0..t {
+        for oc in 0..o {
+            let mut m = [0f32; 16];
+            for ic in 0..c {
+                let d = &d_hat[(trow * c + ic) * 16..][..16];
+                let wv = &w_hat[(oc * c + ic) * 16..][..16];
+                for p in 0..16 {
+                    m[p] += wv[p] * d[p];
+                }
+            }
+            let out = matrices::output_transform(&m, variant);
+            y[(trow * o + oc) * 4..][..4].copy_from_slice(&out);
+        }
+    }
+    untile(&y, n, o, th, tw)
+}
+
+/// Winograd AdderNet forward (paper Eq. 9) from Winograd-domain weights
+/// `w_hat (O, C, 4, 4)` — naive oracle.
+pub fn winograd_adder_conv2d(x: &Tensor, w_hat: &Tensor, pad: usize,
+                             variant: Variant) -> Tensor {
+    let xp = x.pad_same(pad);
+    let c = xp.dims[1];
+    let o = w_hat.dims[0];
+    assert_eq!(w_hat.dims[1], c);
+    assert_eq!((w_hat.dims[2], w_hat.dims[3]), (4, 4));
+    let (d_hat, n, th, tw) = input_tiles(&xp, variant);
+    let t = n * th * tw;
+    let mut y = vec![0f32; t * o * 4];
+    for trow in 0..t {
+        for oc in 0..o {
+            let mut m = [0f32; 16];
+            for ic in 0..c {
+                let d = &d_hat[(trow * c + ic) * 16..][..16];
+                let wv = &w_hat.data[(oc * c + ic) * 16..][..16];
+                for p in 0..16 {
+                    m[p] -= (wv[p] - d[p]).abs();
+                }
+            }
+            let out = matrices::output_transform(&m, variant);
+            y[(trow * o + oc) * 4..][..4].copy_from_slice(&out);
+        }
+    }
+    untile(&y, n, o, th, tw)
+}
+
+/// Blocked hot path for the Winograd-adder elementwise stage:
+/// `m[t,o,p] = -sum_c |w_hat[o,c,p] - d_hat[t,c,p]|`, then the flat
+/// output transform `y = m @ S`. Identical to [`winograd_adder_conv2d`].
+///
+/// This is the rust analogue of the Pallas kernel's schedule: a block of
+/// tiles stays hot while weight rows stream; the 16 transform-domain
+/// positions form the contiguous vector axis.
+pub fn winograd_adder_conv2d_fast(x: &Tensor, w_hat: &Tensor, pad: usize,
+                                  variant: Variant) -> Tensor {
+    let xp = x.pad_same(pad);
+    let c = xp.dims[1];
+    let o = w_hat.dims[0];
+    let (d_hat, n, th, tw) = input_tiles(&xp, variant);
+    let t = n * th * tw;
+    let s = matrices::output_transform_flat(variant);
+    let mut y = vec![0f32; t * o * 4];
+    wino_adder_tiles(&d_hat, &w_hat.data, t, o, c, &s, &mut y);
+    untile(&y, n, o, th, tw)
+}
+
+/// The shared hot loop (also benched standalone in benches/hotpath.rs).
+pub fn wino_adder_tiles(d_hat: &[f32], w_hat: &[f32], t: usize, o: usize,
+                        c: usize, s: &[[f32; 4]; 16], y: &mut [f32]) {
+    assert_eq!(d_hat.len(), t * c * 16);
+    assert_eq!(w_hat.len(), o * c * 16);
+    assert_eq!(y.len(), t * o * 4);
+    const TB: usize = 16;
+    let mut m = vec![0f32; TB * 16];
+    for t0 in (0..t).step_by(TB) {
+        let t1 = (t0 + TB).min(t);
+        for oc in 0..o {
+            let wrow = &w_hat[oc * c * 16..(oc + 1) * c * 16];
+            for chunk in m.iter_mut() {
+                *chunk = 0.0;
+            }
+            for ti in t0..t1 {
+                let mrow = &mut m[(ti - t0) * 16..(ti - t0) * 16 + 16];
+                let drow = &d_hat[ti * c * 16..(ti + 1) * c * 16];
+                for ic in 0..c {
+                    let d = &drow[ic * 16..ic * 16 + 16];
+                    let wv = &wrow[ic * 16..ic * 16 + 16];
+                    for p in 0..16 {
+                        mrow[p] -= (wv[p] - d[p]).abs();
+                    }
+                }
+            }
+            for ti in t0..t1 {
+                let mrow = &m[(ti - t0) * 16..(ti - t0) * 16 + 16];
+                let yrow = &mut y[(ti * o + oc) * 4..(ti * o + oc) * 4 + 4];
+                for q in 0..4 {
+                    let mut acc = 0f32;
+                    for p in 0..16 {
+                        acc += mrow[p] * s[p][q];
+                    }
+                    yrow[q] = acc;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::conv::conv2d;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::{all_close, property};
+
+    #[test]
+    fn winograd_equals_conv_all_variants() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&mut rng, [2, 3, 8, 8]);
+        let w = Tensor::randn(&mut rng, [4, 3, 3, 3]);
+        let want = conv2d(&x, &w, 1);
+        for v in [Variant::Std, Variant::Balanced(0), Variant::Balanced(3)] {
+            let got = winograd_conv2d(&x, &w, 1, v);
+            all_close(&got.data, &want.data, 1e-4, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn wino_adder_fast_matches_naive_property() {
+        property(20, |g| {
+            let n = g.usize_in(1, 2);
+            let c = g.usize_in(1, 6);
+            let hw = 2 * g.usize_in(2, 5);
+            let o = g.usize_in(1, 6);
+            let seed = g.usize_in(0, 1 << 30) as u64;
+            let mut rng = Rng::new(seed);
+            let x = Tensor::randn(&mut rng, [n, c, hw, hw]);
+            let w_hat = Tensor::randn(&mut rng, [o, c, 4, 4]);
+            let v = *g.choose(&[Variant::Std, Variant::Balanced(0),
+                                Variant::Balanced(2)]);
+            let a = winograd_adder_conv2d(&x, &w_hat, 1, v);
+            let b = winograd_adder_conv2d_fast(&x, &w_hat, 1, v);
+            all_close(&a.data, &b.data, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn wino_adder_differs_from_direct_adder() {
+        // no distributive law for l1: Eq. 9 != Eq. 1
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&mut rng, [1, 4, 8, 8]);
+        let w = Tensor::randn(&mut rng, [4, 4, 3, 3]);
+        let w_hat_flat = transform_weights(&w, Variant::Balanced(0));
+        let w_hat = Tensor::from_vec(w_hat_flat, [4, 4, 4, 4]);
+        let ya = crate::nn::adder::adder_conv2d(&x, &w, 1);
+        let yw = winograd_adder_conv2d(&x, &w_hat, 1, Variant::Balanced(0));
+        let max_diff = ya.data.iter().zip(&yw.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff > 1e-2, "expected inequality, max diff {max_diff}");
+    }
+
+    #[test]
+    fn tile_extraction_positions() {
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(&mut rng, [1, 1, 6, 6]);
+        let (d_hat, n, th, tw) = input_tiles(&x, Variant::Std);
+        assert_eq!((n, th, tw), (1, 2, 2));
+        assert_eq!(d_hat.len(), 4 * 16);
+    }
+}

@@ -1,0 +1,309 @@
+//! The PJRT execution engine: compile HLO text once, run from the hot
+//! path with `Literal` state kept resident between steps.
+//!
+//! Train-step calling convention (set by `aot.py`):
+//!   inputs  = [params x P, momentum x P, x, y, p, lr]
+//!   outputs = (params' x P, momentum' x P, loss, acc)   — one flat tuple
+//! Eval:
+//!   inputs  = [params x P, x]      outputs = (logits, features)
+//! Layer:
+//!   inputs  = [x, w]               outputs = (y,)
+
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{LayerEntry, ModelEntry};
+use crate::util::io;
+
+/// Shared PJRT CPU client + compile cache.
+pub struct Engine {
+    client: PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client =
+            PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO-text file.
+    pub fn compile(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))
+    }
+
+    /// Build the full runtime for one model entry.
+    pub fn load_model(&self, entry: &ModelEntry) -> Result<ModelRuntime> {
+        let train = self.compile(&entry.train_hlo)?;
+        let eval = self.compile(&entry.eval_hlo)?;
+        let flat = io::read_f32(&entry.params_bin)?;
+        let params = split_params(entry, &flat)?;
+        let momentum = entry
+            .params
+            .iter()
+            .map(|p| literal_f32(&vec![0f32; p.numel()], &p.shape))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelRuntime {
+            entry: entry.clone(),
+            train,
+            eval,
+            params,
+            momentum,
+            steps: 0,
+        })
+    }
+
+    /// Compile a single-layer artifact (serving path).
+    pub fn load_layer(&self, entry: &LayerEntry) -> Result<LayerExec> {
+        Ok(LayerExec { entry: entry.clone(), exe: self.compile(&entry.hlo)? })
+    }
+}
+
+/// f32 literal from a slice + shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let numel: usize = shape.iter().product();
+    if numel != data.len() {
+        return Err(anyhow!("literal: {} values for shape {shape:?}",
+                           data.len()));
+    }
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, shape,
+                                                bytes)
+        .map_err(|e| anyhow!("creating f32 literal: {e}"))
+}
+
+/// i32 literal from a slice + shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, shape,
+                                                bytes)
+        .map_err(|e| anyhow!("creating i32 literal: {e}"))
+}
+
+/// Split a flat f32 buffer into per-leaf literals (tree-flatten order).
+pub fn split_params(entry: &ModelEntry, flat: &[f32])
+                    -> Result<Vec<Literal>> {
+    if flat.len() != entry.num_param_scalars {
+        return Err(anyhow!(
+            "{}: params bin has {} scalars, manifest says {}",
+            entry.name, flat.len(), entry.num_param_scalars));
+    }
+    let mut out = Vec::with_capacity(entry.params.len());
+    let mut off = 0;
+    for p in &entry.params {
+        let n = p.numel();
+        out.push(literal_f32(&flat[off..off + n], &p.shape)?);
+        off += n;
+    }
+    Ok(out)
+}
+
+/// Metrics of one training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// One model's live training/eval state: compiled graphs + resident
+/// parameter and momentum literals.
+pub struct ModelRuntime {
+    pub entry: ModelEntry,
+    train: PjRtLoadedExecutable,
+    eval: PjRtLoadedExecutable,
+    pub params: Vec<Literal>,
+    pub momentum: Vec<Literal>,
+    pub steps: u64,
+}
+
+impl ModelRuntime {
+    /// Run one SGD step; updates resident params/momentum in place.
+    pub fn train_step(&mut self, x: &[f32], y: &[i32], p: f32, lr: f32)
+                      -> Result<StepStats> {
+        let b = self.entry.train_batch;
+        let c = self.entry.config.in_channels;
+        let s = self.entry.config.image_size;
+        if x.len() != b * c * s * s || y.len() != b {
+            return Err(anyhow!("train_step: bad batch shapes"));
+        }
+        let np = self.params.len();
+        let mut inputs: Vec<&Literal> =
+            Vec::with_capacity(2 * np + 4);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.momentum.iter());
+        let xl = literal_f32(x, &[b, c, s, s])?;
+        let yl = literal_i32(y, &[b])?;
+        let pl = Literal::scalar(p);
+        let lrl = Literal::scalar(lr);
+        inputs.push(&xl);
+        inputs.push(&yl);
+        inputs.push(&pl);
+        inputs.push(&lrl);
+
+        let result = self
+            .train
+            .execute::<&Literal>(&inputs)
+            .map_err(|e| anyhow!("train execute: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching train outputs: {e}"))?;
+        let mut outs = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing train outputs: {e}"))?;
+        if outs.len() != 2 * np + 2 {
+            return Err(anyhow!("train outputs: got {} leaves, want {}",
+                               outs.len(), 2 * np + 2));
+        }
+        let acc = outs
+            .pop()
+            .unwrap()
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("acc: {e}"))?;
+        let loss = outs
+            .pop()
+            .unwrap()
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss: {e}"))?;
+        let mom_new = outs.split_off(np);
+        self.params = outs;
+        self.momentum = mom_new;
+        self.steps += 1;
+        Ok(StepStats { loss, acc })
+    }
+
+    /// Run the eval graph: returns (logits, features) as flat f32.
+    pub fn eval(&self, x: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let b = self.entry.eval_batch;
+        let c = self.entry.config.in_channels;
+        let s = self.entry.config.image_size;
+        if x.len() != b * c * s * s {
+            return Err(anyhow!("eval: bad batch shape ({} vs {})",
+                               x.len(), b * c * s * s));
+        }
+        let mut inputs: Vec<&Literal> = self.params.iter().collect();
+        let xl = literal_f32(x, &[b, c, s, s])?;
+        inputs.push(&xl);
+        let result = self
+            .eval
+            .execute::<&Literal>(&inputs)
+            .map_err(|e| anyhow!("eval execute: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching eval outputs: {e}"))?;
+        let (logits, feats) = tuple
+            .to_tuple2()
+            .map_err(|e| anyhow!("decomposing eval outputs: {e}"))?;
+        Ok((
+            logits.to_vec::<f32>().map_err(|e| anyhow!("logits: {e}"))?,
+            feats.to_vec::<f32>().map_err(|e| anyhow!("features: {e}"))?,
+        ))
+    }
+
+    /// Classification accuracy of logits vs labels.
+    pub fn accuracy(logits: &[f32], labels: &[i32], classes: usize) -> f64 {
+        let n = labels.len();
+        let mut correct = 0;
+        for i in 0..n {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let mut best = 0;
+            for k in 1..classes {
+                if row[k] > row[best] {
+                    best = k;
+                }
+            }
+            if best as i32 == labels[i] {
+                correct += 1;
+            }
+        }
+        correct as f64 / n as f64
+    }
+
+    /// Replace resident parameters from a flat buffer (e.g. the
+    /// `init_adder_transform` extra-init of Table 4).
+    pub fn set_params_flat(&mut self, flat: &[f32]) -> Result<()> {
+        self.params = split_params(&self.entry, flat)?;
+        for (m, p) in self.momentum.iter_mut().zip(&self.entry.params) {
+            *m = literal_f32(&vec![0f32; p.numel()], &p.shape)?;
+        }
+        self.steps = 0;
+        Ok(())
+    }
+
+    /// Copy resident parameters back to a flat buffer (checkpointing).
+    pub fn params_flat(&self) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(self.entry.num_param_scalars);
+        for l in &self.params {
+            out.extend(l.to_vec::<f32>()
+                .map_err(|e| anyhow!("param readback: {e}"))?);
+        }
+        Ok(out)
+    }
+}
+
+/// A compiled single-layer executable (the serving hot path).
+pub struct LayerExec {
+    pub entry: LayerEntry,
+    exe: PjRtLoadedExecutable,
+}
+
+impl LayerExec {
+    /// Execute y = layer(x, w).
+    pub fn run(&self, x: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+        let xl = literal_f32(x, &self.entry.x_shape)?;
+        let wl = literal_f32(w, &self.entry.w_shape)?;
+        let result = self
+            .exe
+            .execute::<Literal>(&[xl, wl])
+            .map_err(|e| anyhow!("layer execute: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("layer output: {e}"))?;
+        let y = tuple
+            .to_tuple1()
+            .map_err(|e| anyhow!("layer tuple: {e}"))?;
+        y.to_vec::<f32>().map_err(|e| anyhow!("layer to_vec: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let l = literal_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), data);
+        let li = literal_i32(&[7, 8], &[2]).unwrap();
+        assert_eq!(li.to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn accuracy_helper() {
+        let logits = [1.0f32, 0.0, 0.0, 5.0];
+        assert_eq!(ModelRuntime::accuracy(&logits, &[0, 1], 2), 1.0);
+        assert_eq!(ModelRuntime::accuracy(&logits, &[1, 0], 2), 0.0);
+    }
+}

@@ -1,0 +1,288 @@
+//! `artifacts/manifest.json` schema + loader.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One model parameter leaf (jax tree-flatten order).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Static model configuration mirrored from `ModelConfig` in Python.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub arch: String,
+    pub mode: String,
+    pub variant: String,
+    pub grads: String,
+    pub weight_mode: String,
+    pub num_classes: usize,
+    pub in_channels: usize,
+    pub image_size: usize,
+}
+
+/// One AOT-compiled model (train + eval graphs + initial params).
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub train_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+    pub params_bin: PathBuf,
+    pub config: ModelConfig,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub params: Vec<ParamSpec>,
+    pub num_param_scalars: usize,
+}
+
+/// One AOT-compiled single layer (serving path, Pallas-backed).
+#[derive(Debug, Clone)]
+pub struct LayerEntry {
+    pub name: String,
+    pub hlo: PathBuf,
+    pub batch: usize,
+    pub x_shape: Vec<usize>,
+    pub w_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+}
+
+/// Golden train-step/eval values pinned from Python for integration tests.
+#[derive(Debug, Clone)]
+pub struct GoldenSpec {
+    pub model: String,
+    pub p: f32,
+    pub lr: f32,
+    pub loss: f32,
+    pub acc: f32,
+    pub x: PathBuf,
+    pub y: PathBuf,
+    pub params_out: PathBuf,
+    pub eval_x: PathBuf,
+    pub logits: PathBuf,
+    pub logits_shape: Vec<usize>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub layers: BTreeMap<String, LayerEntry>,
+    /// extra init files: name -> (base model, params path)
+    pub extra_inits: BTreeMap<String, (String, PathBuf)>,
+    pub golden: Option<GoldenSpec>,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub eta: f64,
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest: missing models"))?
+        {
+            models.insert(name.clone(), parse_model(root, name, m)?);
+        }
+
+        let mut layers = BTreeMap::new();
+        if let Some(ls) = j.get("layers").and_then(Json::as_obj) {
+            for (name, l) in ls {
+                if name == "golden" {
+                    continue;
+                }
+                layers.insert(name.clone(), parse_layer(root, name, l)?);
+            }
+        }
+
+        let mut extra_inits = BTreeMap::new();
+        if let Some(eis) = j.get("extra_inits").and_then(Json::as_obj) {
+            for (name, e) in eis {
+                let base = field_str(e, "base_model")?;
+                let bin = field_str(e, "params_bin")?;
+                extra_inits.insert(name.clone(), (base, root.join(bin)));
+            }
+        }
+
+        let golden = match j.get("golden") {
+            Some(g) => Some(parse_golden(root, g)?),
+            None => None,
+        };
+
+        Ok(Manifest {
+            root: root.to_path_buf(),
+            models,
+            layers,
+            extra_inits,
+            golden,
+            train_batch: field_usize(&j, "train_batch")?,
+            eval_batch: field_usize(&j, "eval_batch")?,
+            eta: j.get("eta").and_then(Json::as_f64).unwrap_or(0.1),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest \
+                                    (have: {:?})",
+                                   self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn layer(&self, name: &str) -> Result<&LayerEntry> {
+        self.layers
+            .get(name)
+            .ok_or_else(|| anyhow!("layer {name:?} not in manifest"))
+    }
+}
+
+fn field_str(j: &Json, k: &str) -> Result<String> {
+    j.get(k)
+        .and_then(Json::as_str)
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow!("manifest: missing string field {k:?}"))
+}
+
+fn field_usize(j: &Json, k: &str) -> Result<usize> {
+    j.get(k)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("manifest: missing numeric field {k:?}"))
+}
+
+fn parse_model(root: &Path, name: &str, m: &Json) -> Result<ModelEntry> {
+    let cfg = m
+        .get("config")
+        .ok_or_else(|| anyhow!("model {name}: missing config"))?;
+    let params = m
+        .get("params")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("model {name}: missing params"))?
+        .iter()
+        .map(|p| -> Result<ParamSpec> {
+            Ok(ParamSpec {
+                name: field_str(p, "name")?,
+                shape: p
+                    .get("shape")
+                    .and_then(Json::as_usize_vec)
+                    .ok_or_else(|| anyhow!("model {name}: bad shape"))?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ModelEntry {
+        name: name.to_string(),
+        train_hlo: root.join(field_str(m, "train_hlo")?),
+        eval_hlo: root.join(field_str(m, "eval_hlo")?),
+        params_bin: root.join(field_str(m, "params_bin")?),
+        config: ModelConfig {
+            arch: field_str(cfg, "arch")?,
+            mode: field_str(cfg, "mode")?,
+            variant: field_str(cfg, "variant")?,
+            grads: field_str(cfg, "grads")?,
+            weight_mode: field_str(cfg, "weight_mode")?,
+            num_classes: field_usize(cfg, "num_classes")?,
+            in_channels: field_usize(cfg, "in_channels")?,
+            image_size: field_usize(cfg, "image_size")?,
+        },
+        train_batch: field_usize(m, "train_batch")?,
+        eval_batch: field_usize(m, "eval_batch")?,
+        params,
+        num_param_scalars: field_usize(m, "num_param_scalars")?,
+    })
+}
+
+fn parse_layer(root: &Path, name: &str, l: &Json) -> Result<LayerEntry> {
+    let shape_of = |k: &str| -> Result<Vec<usize>> {
+        l.get(k)
+            .and_then(|s| s.get("shape"))
+            .and_then(Json::as_usize_vec)
+            .ok_or_else(|| anyhow!("layer {name}: missing {k}.shape"))
+    };
+    Ok(LayerEntry {
+        name: name.to_string(),
+        hlo: root.join(field_str(l, "hlo")?),
+        batch: field_usize(l, "batch")?,
+        x_shape: shape_of("x")?,
+        w_shape: shape_of("w")?,
+        out_shape: l
+            .get("out_shape")
+            .and_then(Json::as_usize_vec)
+            .ok_or_else(|| anyhow!("layer {name}: missing out_shape"))?,
+    })
+}
+
+fn parse_golden(root: &Path, g: &Json) -> Result<GoldenSpec> {
+    Ok(GoldenSpec {
+        model: field_str(g, "model")?,
+        p: g.get("p").and_then(Json::as_f64).unwrap_or(2.0) as f32,
+        lr: g.get("lr").and_then(Json::as_f64).unwrap_or(0.05) as f32,
+        loss: g.get("loss").and_then(Json::as_f64).unwrap_or(f64::NAN) as f32,
+        acc: g.get("acc").and_then(Json::as_f64).unwrap_or(f64::NAN) as f32,
+        x: root.join(field_str(g, "x")?),
+        y: root.join(field_str(g, "y")?),
+        params_out: root.join(field_str(g, "params_out")?),
+        eval_x: root.join(field_str(g, "eval_x")?),
+        logits: root.join(field_str(g, "logits")?),
+        logits_shape: g
+            .get("logits_shape")
+            .and_then(Json::as_usize_vec)
+            .unwrap_or_default(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let root = artifacts_root();
+        if !root.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&root).unwrap();
+        assert!(m.models.contains_key("lenet_wino_adder"));
+        assert!(m.models.contains_key("resnet20_wino_adder"));
+        let entry = m.model("lenet_wino_adder").unwrap();
+        assert!(entry.train_hlo.exists());
+        assert_eq!(
+            entry.params.iter().map(ParamSpec::numel).sum::<usize>(),
+            entry.num_param_scalars
+        );
+        assert!(!m.layers.is_empty());
+        assert!(m.golden.is_some());
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        let root = artifacts_root();
+        if !root.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&root).unwrap();
+        assert!(m.model("no_such_model").is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT HLO artifacts, compile once, execute many.
+//!
+//! [`manifest`] parses `artifacts/manifest.json` (shapes, dtypes, flat
+//! parameter order); [`engine`] wraps the `xla` crate's PJRT CPU client
+//! and exposes typed train/eval/layer executions. Interchange is HLO
+//! *text* — see `python/compile/aot.py` for why.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, LayerExec, ModelRuntime};
+pub use manifest::{GoldenSpec, LayerEntry, Manifest, ModelEntry, ParamSpec};

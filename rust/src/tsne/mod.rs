@@ -1,0 +1,253 @@
+//! Exact t-SNE (van der Maaten & Hinton 2008) — Figure 3's
+//! dimensionality reduction of last-adder-layer features.
+//!
+//! O(n^2) implementation with perplexity calibration by bisection,
+//! early exaggeration, and momentum gradient descent. Plenty for the
+//! ~1k-point feature clouds Figure 3 visualizes.
+
+use crate::util::rng::Rng;
+
+/// t-SNE hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TsneConfig {
+    pub perplexity: f64,
+    pub iters: usize,
+    pub learning_rate: f64,
+    pub early_exaggeration: f64,
+    pub exaggeration_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for TsneConfig {
+    fn default() -> Self {
+        TsneConfig {
+            perplexity: 30.0,
+            iters: 400,
+            learning_rate: 100.0,
+            early_exaggeration: 4.0,
+            exaggeration_iters: 80,
+            seed: 0,
+        }
+    }
+}
+
+/// Embed `n` points of dimension `d` (row-major `x`) into 2-D.
+/// Returns `(embedding [n*2], final KL divergence)`.
+pub fn tsne(x: &[f32], n: usize, d: usize, cfg: &TsneConfig)
+            -> (Vec<f32>, f64) {
+    assert_eq!(x.len(), n * d);
+    assert!(n >= 5, "need at least 5 points");
+    let p = joint_probabilities(x, n, d, cfg.perplexity);
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut y: Vec<f64> =
+        (0..n * 2).map(|_| rng.normal() as f64 * 1e-2).collect();
+    let mut vel = vec![0f64; n * 2];
+    let mut grad = vec![0f64; n * 2];
+    let mut q = vec![0f64; n * n];
+    let mut kl = f64::NAN;
+
+    for it in 0..cfg.iters {
+        let exagg = if it < cfg.exaggeration_iters {
+            cfg.early_exaggeration
+        } else {
+            1.0
+        };
+        // student-t affinities
+        let mut qsum = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let dy0 = y[i * 2] - y[j * 2];
+                let dy1 = y[i * 2 + 1] - y[j * 2 + 1];
+                let w = 1.0 / (1.0 + dy0 * dy0 + dy1 * dy1);
+                q[i * n + j] = w;
+                q[j * n + i] = w;
+                qsum += 2.0 * w;
+            }
+        }
+        // gradient: 4 * sum_j (exagg*p_ij - q_ij) w_ij (y_i - y_j)
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        kl = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let pij = exagg * p[i * n + j];
+                let w = q[i * n + j];
+                let qij = (w / qsum).max(1e-12);
+                let coef = 4.0 * (pij - qij) * w;
+                grad[i * 2] += coef * (y[i * 2] - y[j * 2]);
+                grad[i * 2 + 1] += coef * (y[i * 2 + 1] - y[j * 2 + 1]);
+                if it + 1 == cfg.iters && p[i * n + j] > 0.0 {
+                    kl += p[i * n + j]
+                        * (p[i * n + j] / qij).ln();
+                }
+            }
+        }
+        let momentum = if it < 150 { 0.5 } else { 0.8 };
+        for k in 0..n * 2 {
+            vel[k] = momentum * vel[k] - cfg.learning_rate * grad[k];
+            y[k] += vel[k];
+        }
+        // re-centre
+        for dim in 0..2 {
+            let mean: f64 =
+                (0..n).map(|i| y[i * 2 + dim]).sum::<f64>() / n as f64;
+            for i in 0..n {
+                y[i * 2 + dim] -= mean;
+            }
+        }
+    }
+    (y.iter().map(|&v| v as f32).collect(), kl)
+}
+
+/// Symmetrized high-dimensional affinities with per-point bandwidth
+/// calibrated to the target perplexity (bisection on beta).
+fn joint_probabilities(x: &[f32], n: usize, d: usize, perplexity: f64)
+                       -> Vec<f64> {
+    let mut d2 = vec![0f64; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let mut s = 0f64;
+            for k in 0..d {
+                let diff = (x[i * d + k] - x[j * d + k]) as f64;
+                s += diff * diff;
+            }
+            d2[i * n + j] = s;
+            d2[j * n + i] = s;
+        }
+    }
+    let target_h = perplexity.ln();
+    let mut p = vec![0f64; n * n];
+    let mut row = vec![0f64; n];
+    for i in 0..n {
+        let (mut lo, mut hi) = (1e-20f64, 1e20f64);
+        let mut beta = 1.0f64;
+        for _ in 0..60 {
+            let mut sum = 0.0;
+            for j in 0..n {
+                row[j] = if j == i {
+                    0.0
+                } else {
+                    (-beta * d2[i * n + j]).exp()
+                };
+                sum += row[j];
+            }
+            let sum = sum.max(1e-300);
+            // entropy H = ln(sum) + beta * <d2>
+            let mut h = 0.0;
+            for j in 0..n {
+                if row[j] > 0.0 {
+                    let pj = row[j] / sum;
+                    h -= pj * pj.ln();
+                }
+            }
+            if (h - target_h).abs() < 1e-5 {
+                break;
+            }
+            if h > target_h {
+                lo = beta;
+                beta = if hi >= 1e20 { beta * 2.0 } else { (beta + hi) / 2.0 };
+            } else {
+                hi = beta;
+                beta = if lo <= 1e-20 { beta / 2.0 } else { (beta + lo) / 2.0 };
+            }
+        }
+        let mut sum = 0.0;
+        for j in 0..n {
+            row[j] = if j == i { 0.0 } else { (-beta * d2[i * n + j]).exp() };
+            sum += row[j];
+        }
+        let sum = sum.max(1e-300);
+        for j in 0..n {
+            p[i * n + j] = row[j] / sum;
+        }
+    }
+    // symmetrize + normalize
+    let mut out = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            out[i * n + j] =
+                ((p[i * n + j] + p[j * n + i]) / (2.0 * n as f64)).max(0.0);
+        }
+    }
+    out
+}
+
+/// Cluster-quality score for tests/reports: mean same-label pairwise
+/// distance over mean cross-label distance (lower = better separated).
+pub fn cluster_ratio(y: &[f32], labels: &[i32]) -> f64 {
+    let n = labels.len();
+    let (mut same, mut cross) = ((0.0, 0u64), (0.0, 0u64));
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dx = (y[i * 2] - y[j * 2]) as f64;
+            let dy = (y[i * 2 + 1] - y[j * 2 + 1]) as f64;
+            let dist = (dx * dx + dy * dy).sqrt();
+            if labels[i] == labels[j] {
+                same.0 += dist;
+                same.1 += 1;
+            } else {
+                cross.0 += dist;
+                cross.1 += 1;
+            }
+        }
+    }
+    (same.0 / same.1.max(1) as f64) / (cross.0 / cross.1.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn three_blobs(n_per: usize) -> (Vec<f32>, Vec<i32>, usize) {
+        let mut rng = Rng::new(11);
+        let centers = [[0f32, 0., 0., 0.], [8., 8., 0., 0.], [0., 0., 8., 8.]];
+        let mut x = Vec::new();
+        let mut labels = Vec::new();
+        for (l, c) in centers.iter().enumerate() {
+            for _ in 0..n_per {
+                for k in 0..4 {
+                    x.push(c[k] + rng.normal() * 0.3);
+                }
+                labels.push(l as i32);
+            }
+        }
+        (x, labels, 4)
+    }
+
+    #[test]
+    fn separates_blobs() {
+        let (x, labels, d) = three_blobs(30);
+        let cfg = TsneConfig { perplexity: 10.0, iters: 250,
+                               ..Default::default() };
+        let (y, _) = tsne(&x, labels.len(), d, &cfg);
+        let r = cluster_ratio(&y, &labels);
+        assert!(r < 0.35, "cluster ratio {r} (want well-separated)");
+    }
+
+    #[test]
+    fn kl_is_finite_and_small() {
+        let (x, labels, d) = three_blobs(20);
+        let cfg = TsneConfig { perplexity: 8.0, iters: 200,
+                               ..Default::default() };
+        let (_, kl) = tsne(&x, labels.len(), d, &cfg);
+        assert!(kl.is_finite() && kl >= 0.0 && kl < 3.0, "kl {kl}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, labels, d) = three_blobs(10);
+        let cfg = TsneConfig { iters: 50, ..Default::default() };
+        let (a, _) = tsne(&x, labels.len(), d, &cfg);
+        let (b, _) = tsne(&x, labels.len(), d, &cfg);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 5")]
+    fn rejects_tiny_inputs() {
+        tsne(&[0.0; 8], 4, 2, &TsneConfig::default());
+    }
+}

@@ -1,0 +1,95 @@
+//! Tiny flag parser for the `wino-adder` binary (offline clap stand-in).
+//!
+//! Grammar: `wino-adder <subcommand> [--flag value | --switch] ...`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + `--key value` flags + bare switches.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (after argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        out.flags.insert(name.to_string(), it.next().unwrap());
+                    }
+                    _ => out.switches.push(name.to_string()),
+                }
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --steps 100 --preset mnist --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert_eq!(a.get("preset"), Some("mnist"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("energy");
+        assert_eq!(a.get_or("model", "resnet20"), "resnet20");
+        assert_eq!(a.get_f64("lr", 0.1), 0.1);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.has("help"));
+    }
+}

@@ -1,0 +1,96 @@
+//! Raw tensor file I/O — the `*.bin` interchange with `aot.py`.
+//!
+//! Format: raw little-endian scalars, no header; shapes come from
+//! `manifest.json`. f32 for parameters/features, i32 for labels.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Read a little-endian f32 file.
+pub fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.display(),
+              bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read a little-endian i32 file.
+pub fn read_i32(path: &Path) -> Result<Vec<i32>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.display(),
+              bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write little-endian f32s.
+pub fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes)
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Write a CSV file (header + rows) — the Figure 2/5 curve outputs.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<f64>])
+                 -> Result<()> {
+    let mut s = String::new();
+    s.push_str(&header.join(","));
+    s.push('\n');
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        s.push_str(&cells.join(","));
+        s.push('\n');
+    }
+    std::fs::write(path, s)
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let dir = std::env::temp_dir().join("wino_adder_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        let data = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
+        write_f32(&p, &data).unwrap();
+        assert_eq!(read_f32(&p).unwrap(), data);
+    }
+
+    #[test]
+    fn rejects_misaligned() {
+        let dir = std::env::temp_dir().join("wino_adder_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, [0u8; 5]).unwrap();
+        assert!(read_f32(&p).is_err());
+        assert!(read_i32(&p).is_err());
+    }
+
+    #[test]
+    fn csv_output() {
+        let dir = std::env::temp_dir().join("wino_adder_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.csv");
+        write_csv(&p, &["step", "loss"], &[vec![0.0, 2.5], vec![1.0, 1.25]])
+            .unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("step,loss\n0,2.5\n1,1.25\n"));
+    }
+}

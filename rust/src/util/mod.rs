@@ -1,0 +1,12 @@
+//! Offline-environment substitutes for common ecosystem crates.
+//!
+//! The build environment ships only the `xla` crate closure, so this
+//! module provides the small pieces we would otherwise pull in:
+//! [`json`] (serde_json), [`cli`] (clap), [`testkit`] (proptest),
+//! [`rng`] (rand), and [`io`] (raw tensor file I/O).
+
+pub mod cli;
+pub mod io;
+pub mod json;
+pub mod rng;
+pub mod testkit;

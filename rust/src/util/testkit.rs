@@ -1,0 +1,133 @@
+//! RNG-driven property-testing harness (offline stand-in for proptest).
+//!
+//! Usage:
+//! ```ignore
+//! property(100, |g| {
+//!     let n = g.usize_in(1, 64);
+//!     let xs = g.f32_vec(n, -10.0, 10.0);
+//!     // ... assert invariant, or return Err(msg) ...
+//!     Ok(())
+//! });
+//! ```
+//! On failure the case index and seed are printed so the exact failing
+//! case can be replayed with [`property_seeded`].
+
+use super::rng::Rng;
+
+/// Per-case generator handed to the property body.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn f32_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        self.rng.normal_vec(n)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `body`; panics with seed info on failure.
+pub fn property<F>(cases: u64, body: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    property_base(0xda7a_5eed, cases, body)
+}
+
+/// Replay a specific failing seed printed by [`property`].
+pub fn property_seeded<F>(seed: u64, body: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen { rng: Rng::new(seed) };
+    if let Err(msg) = body(&mut g) {
+        panic!("property failed for seed {seed}: {msg}");
+    }
+}
+
+fn property_base<F>(base_seed: u64, cases: u64, body: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9e37_79b9));
+        let mut g = Gen { rng: Rng::new(seed) };
+        if let Err(msg) = body(&mut g) {
+            panic!(
+                "property failed at case {case}/{cases} (replay with \
+                 property_seeded({seed}, ..)): {msg}"
+            );
+        }
+    }
+}
+
+/// Approximate float comparison helper for property bodies.
+pub fn close(a: f32, b: f32, rtol: f32, atol: f32) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// Slice version of [`close`]; returns the first offending index.
+pub fn all_close(a: &[f32], b: &[f32], rtol: f32, atol: f32)
+                 -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if !close(*x, *y, rtol, atol) {
+            return Err(format!("mismatch at {i}: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially() {
+        property(50, |g| {
+            let n = g.usize_in(1, 10);
+            if n >= 1 && n <= 10 { Ok(()) } else { Err("range".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure() {
+        property(50, |g| {
+            if g.usize_in(0, 100) < 95 { Ok(()) } else { Err("big".into()) }
+        });
+    }
+
+    #[test]
+    fn close_behaviour() {
+        assert!(close(1.0, 1.0 + 1e-7, 1e-5, 1e-6));
+        assert!(!close(1.0, 1.1, 1e-5, 1e-6));
+        assert!(all_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 1e-6).is_ok());
+        assert!(all_close(&[1.0], &[1.0, 2.0], 1e-6, 1e-6).is_err());
+    }
+}

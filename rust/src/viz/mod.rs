@@ -1,0 +1,173 @@
+//! Terminal/CSV visualisation — Figures 2, 4, 5 outputs.
+//!
+//! * [`ascii_heatmap`] — feature-map heatmaps (Figure 4's grid artifact)
+//! * [`grid_artifact_score`] — quantifies the 2x2-phase imbalance that
+//!   the modified matrix A removes
+//! * [`ascii_scatter`] — t-SNE scatter (Figure 3) in the terminal
+//! * curves go to CSV via `util::io::write_csv` (Figures 2/5)
+
+/// Render a (h, w) map as an ASCII heatmap (row-major data).
+pub fn ascii_heatmap(data: &[f32], h: usize, w: usize) -> String {
+    assert_eq!(data.len(), h * w);
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let (mut lo, mut hi) = (f32::MAX, f32::MIN);
+    for &v in data {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let span = (hi - lo).max(1e-12);
+    let mut out = String::with_capacity(h * (w + 1));
+    for i in 0..h {
+        for j in 0..w {
+            let t = (data[i * w + j] - lo) / span;
+            let idx = ((t * (RAMP.len() - 1) as f32).round() as usize)
+                .min(RAMP.len() - 1);
+            out.push(RAMP[idx] as char);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Figure-4 statistic: per-phase mean |activation| over the 2x2 Winograd
+/// output phase grid. Returns `[p00, p01, p10, p11]` — with the standard
+/// (unbalanced) A these diverge (a visible grid); with the Theorem-2
+/// matrices they agree.
+pub fn phase_means(map: &[f32], h: usize, w: usize) -> [f64; 4] {
+    assert_eq!(map.len(), h * w);
+    let mut sums = [0f64; 4];
+    let mut counts = [0u64; 4];
+    for i in 0..h {
+        for j in 0..w {
+            let phase = (i % 2) * 2 + (j % 2);
+            sums[phase] += map[i * w + j].abs() as f64;
+            counts[phase] += 1;
+        }
+    }
+    let mut out = [0f64; 4];
+    for p in 0..4 {
+        out[p] = sums[p] / counts[p].max(1) as f64;
+    }
+    out
+}
+
+/// Grid-artifact score: max/min ratio of the four phase means.
+/// 1.0 = perfectly balanced; the unbalanced A scores well above 1.
+pub fn grid_artifact_score(map: &[f32], h: usize, w: usize) -> f64 {
+    let m = phase_means(map, h, w);
+    let lo = m.iter().cloned().fold(f64::MAX, f64::min).max(1e-12);
+    let hi = m.iter().cloned().fold(f64::MIN, f64::max);
+    hi / lo
+}
+
+/// ASCII scatter of 2-D points with one glyph per label (Figure 3).
+pub fn ascii_scatter(points: &[f32], labels: &[i32], rows: usize,
+                     cols: usize) -> String {
+    assert_eq!(points.len(), labels.len() * 2);
+    const GLYPHS: &[u8] = b"0123456789abcdefghij";
+    let n = labels.len();
+    let (mut x0, mut x1, mut y0, mut y1) =
+        (f32::MAX, f32::MIN, f32::MAX, f32::MIN);
+    for i in 0..n {
+        x0 = x0.min(points[i * 2]);
+        x1 = x1.max(points[i * 2]);
+        y0 = y0.min(points[i * 2 + 1]);
+        y1 = y1.max(points[i * 2 + 1]);
+    }
+    let (sx, sy) = ((x1 - x0).max(1e-9), (y1 - y0).max(1e-9));
+    let mut grid = vec![b' '; rows * cols];
+    for i in 0..n {
+        let c = (((points[i * 2] - x0) / sx) * (cols - 1) as f32) as usize;
+        let r = (((points[i * 2 + 1] - y0) / sy) * (rows - 1) as f32) as usize;
+        grid[r * cols + c] =
+            GLYPHS[(labels[i] as usize) % GLYPHS.len()];
+    }
+    let mut out = String::with_capacity(rows * (cols + 1));
+    for r in 0..rows {
+        out.push_str(
+            std::str::from_utf8(&grid[r * cols..(r + 1) * cols]).unwrap());
+        out.push('\n');
+    }
+    out
+}
+
+/// Fixed-width table printer for the bench harnesses (Table 1/2 rows).
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> =
+        headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (c, w) in cells.iter().zip(widths) {
+            line.push_str(&format!(" {c:<w$} |"));
+        }
+        line.push('\n');
+        line
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths));
+    let mut sep = String::from("|");
+    for w in &widths {
+        sep.push_str(&"-".repeat(w + 2));
+        sep.push('|');
+    }
+    sep.push('\n');
+    out.push_str(&sep);
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heatmap_shape() {
+        let m = ascii_heatmap(&[0.0, 0.5, 1.0, 0.25], 2, 2);
+        let lines: Vec<&str> = m.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].len(), 2);
+        assert_eq!(lines[0].chars().next(), Some(' ')); // min -> blank
+        assert_eq!(lines[1].chars().next(), Some('@')); // max -> densest
+    }
+
+    #[test]
+    fn phase_means_detect_grid() {
+        // construct a map with a strong 2x2 phase imbalance
+        let (h, w) = (8, 8);
+        let mut map = vec![1.0f32; h * w];
+        for i in (0..h).step_by(2) {
+            for j in (0..w).step_by(2) {
+                map[i * w + j] = 5.0;
+            }
+        }
+        let score = grid_artifact_score(&map, h, w);
+        assert!(score > 4.0, "{score}");
+        // uniform map scores ~1
+        let flat = vec![2.0f32; h * w];
+        assert!((grid_artifact_score(&flat, h, w) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scatter_places_points() {
+        let pts = [0.0f32, 0.0, 10.0, 10.0];
+        let s = ascii_scatter(&pts, &[0, 1], 5, 5);
+        assert!(s.contains('0') && s.contains('1'));
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = print_table(&["a", "bb"],
+                            &[vec!["1".into(), "22222".into()]]);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+}

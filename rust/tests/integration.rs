@@ -1,0 +1,125 @@
+//! Integration tests: rust PJRT path vs Python-pinned golden values.
+//!
+//! These run only when `artifacts/` has been built (`make artifacts`);
+//! otherwise they skip so `cargo test` stays green on a fresh checkout.
+
+use std::path::PathBuf;
+
+use wino_adder::nn::wino_adder as nn_wino;
+use wino_adder::nn::{matrices::Variant, Tensor};
+use wino_adder::runtime::{Engine, Manifest, ModelRuntime};
+use wino_adder::util::io;
+
+fn artifacts() -> Option<Manifest> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Manifest::load(&root).expect("manifest"))
+}
+
+/// The Pallas-lowered wino-adder layer, executed from rust, must match
+/// (a) the python golden output and (b) the rust-native implementation.
+#[test]
+fn layer_artifact_matches_golden_and_native() {
+    let Some(man) = artifacts() else { return };
+    let engine = Engine::cpu().expect("engine");
+    let layer = engine
+        .load_layer(man.layer("wino_adder_b1").expect("layer entry"))
+        .expect("compile layer");
+
+    let x = io::read_f32(&man.root.join("layer.golden_x.bin")).unwrap();
+    let w = io::read_f32(&man.root.join("layer.w_hat.bin")).unwrap();
+    let want = io::read_f32(&man.root.join("layer.golden_y.bin")).unwrap();
+
+    let got = layer.run(&x, &w).expect("layer run");
+    assert_eq!(got.len(), want.len());
+    let max_err = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-3, "PJRT vs python golden: max err {max_err}");
+
+    // cross-check against the independent rust-native implementation
+    let xt = Tensor::from_vec(x, [1, 16, 28, 28]);
+    let wt = Tensor::from_vec(w, [16, 16, 4, 4]);
+    let native =
+        nn_wino::winograd_adder_conv2d_fast(&xt, &wt, 1,
+                                            Variant::Balanced(0));
+    let max_err2 = got
+        .iter()
+        .zip(&native.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err2 < 1e-2, "PJRT vs rust-native: max err {max_err2}");
+}
+
+/// One train step through the AOT graph must reproduce the python loss,
+/// accuracy, and updated parameters.
+#[test]
+fn train_step_matches_golden() {
+    let Some(man) = artifacts() else { return };
+    let golden = man.golden.clone().expect("golden section");
+    let engine = Engine::cpu().expect("engine");
+    let mut rt = engine
+        .load_model(man.model(&golden.model).expect("model"))
+        .expect("load model");
+
+    let x = io::read_f32(&golden.x).unwrap();
+    let y = io::read_i32(&golden.y).unwrap();
+    let stats = rt.train_step(&x, &y, golden.p, golden.lr).expect("step");
+    assert!(
+        (stats.loss - golden.loss).abs() < 1e-3,
+        "loss {} vs python {}", stats.loss, golden.loss
+    );
+    assert!((stats.acc - golden.acc).abs() < 1e-6);
+
+    let params = rt.params_flat().expect("params");
+    let want = io::read_f32(&golden.params_out).unwrap();
+    let max_err = params
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    // tolerance: the 0.5.1 CPU backend fuses differently from jaxlib's,
+    // and the adaptive-LR gradient-norm division amplifies rounding
+    assert!(max_err < 5e-3, "params max err {max_err}");
+}
+
+/// The eval graph must reproduce python logits on the golden batch.
+#[test]
+fn eval_matches_golden_logits() {
+    let Some(man) = artifacts() else { return };
+    let golden = man.golden.clone().expect("golden section");
+    let engine = Engine::cpu().expect("engine");
+    let rt = engine
+        .load_model(man.model(&golden.model).expect("model"))
+        .expect("load model");
+    let x = io::read_f32(&golden.eval_x).unwrap();
+    let (logits, feats) = rt.eval(&x).expect("eval");
+    let want = io::read_f32(&golden.logits).unwrap();
+    assert_eq!(logits.len(), want.len());
+    let max_err = logits
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-3, "logits max err {max_err}");
+    assert!(!feats.is_empty());
+    assert_eq!(feats.len() % rt.entry.eval_batch, 0);
+}
+
+/// Accuracy helper sanity on real logits.
+#[test]
+fn accuracy_on_golden_logits() {
+    let Some(man) = artifacts() else { return };
+    let golden = man.golden.clone().expect("golden");
+    let logits = io::read_f32(&golden.logits).unwrap();
+    let classes = golden.logits_shape[1];
+    let n = golden.logits_shape[0];
+    let labels = vec![0i32; n];
+    let acc = ModelRuntime::accuracy(&logits, &labels, classes);
+    assert!((0.0..=1.0).contains(&acc));
+}
