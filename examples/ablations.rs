@@ -14,7 +14,7 @@
 //! Paper values are printed alongside for shape comparison (orderings
 //! and deltas, not absolute accuracies — the workload is substituted).
 
-use anyhow::Result;
+use wino_adder::util::error::{anyhow, Result};
 use std::path::PathBuf;
 
 use wino_adder::coordinator::{PSchedule, TrainConfig, TrainDriver};
@@ -36,7 +36,7 @@ fn main() -> Result<()> {
     let study = args.get_or("study", "all").to_string();
     let steps = args.get_usize("steps", 240) as u64;
     let preset = Preset::parse(args.get_or("preset", "cifar10"))
-        .ok_or_else(|| anyhow::anyhow!("bad --preset"))?;
+        .ok_or_else(|| anyhow!("bad --preset"))?;
     let manifest = Manifest::load(&PathBuf::from(
         args.get_or("artifacts", "artifacts")))?;
     let engine = Engine::cpu()?;

@@ -1,30 +1,46 @@
-//! Serving scenario: batched Winograd-adder inference under an open-loop
-//! load generator, reporting latency percentiles and throughput per
-//! batching policy — the workload the paper's FPGA deployment targets,
-//! served from the AOT Pallas artifacts on CPU PJRT.
+//! Serving scenario: batched Winograd-adder inference under an
+//! open-loop load generator, reporting latency percentiles and
+//! throughput per batching policy and per CPU backend — the workload
+//! the paper's FPGA deployment targets, served from the rust-native
+//! multi-threaded backends (add `--backend pjrt` on a `pjrt` build to
+//! serve the AOT Pallas artifacts instead).
 //!
 //! ```sh
 //! cargo run --release --example serve_inference -- --requests 512
+//! cargo run --release --example serve_inference -- --backend scalar
+//! cargo run --release --example serve_inference -- --threads 2
 //! ```
 
-use anyhow::Result;
-use std::path::PathBuf;
 use std::time::Instant;
 
 use wino_adder::coordinator::batcher::BatchPolicy;
-use wino_adder::coordinator::server::Server;
+use wino_adder::coordinator::server::{NativeConfig, Server,
+                                      ServerHandle};
+use wino_adder::nn::backend::BackendKind;
 use wino_adder::util::cli::Args;
+use wino_adder::util::error::{anyhow, Result};
 use wino_adder::util::rng::Rng;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
     let n = args.get_usize("requests", 512);
     let clients = args.get_usize("clients", 8);
-    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    let sample = 16 * 28 * 28;
+    if args.get("backend") == Some("pjrt") {
+        return pjrt_scenario(&args, n, clients);
+    }
+    let (kind, threads) = BackendKind::from_args(&args).ok_or_else(|| {
+        anyhow!("bad --backend (scalar|parallel|parallel-int8|pjrt)")
+    })?;
+    let cfg = NativeConfig {
+        backend: kind,
+        threads,
+        ..NativeConfig::default()
+    };
+    let sample = cfg.sample_len();
 
     println!("=== serving scenario: {n} requests, {clients} concurrent \
-              clients ===\n");
+              clients, backend {} x{threads} threads ===\n",
+             kind.name());
     let mut results = Vec::new();
     for (label, policy) in [
         ("no batching (bucket 1 only)",
@@ -34,45 +50,85 @@ fn main() -> Result<()> {
         ("dynamic batching 1/4/16, 10ms max wait",
          BatchPolicy { buckets: vec![1, 4, 16], max_wait_us: 10_000 }),
     ] {
-        let (handle, join) = Server::start(artifacts.clone(), policy)?;
-        // warmup: compile-and-run every bucket once
-        for _ in 0..4 {
-            let mut rng = Rng::new(99);
-            handle.infer(rng.normal_vec(sample))?;
-        }
-        let t0 = Instant::now();
-        let mut threads = Vec::new();
-        for c in 0..clients {
-            let h = handle.clone();
-            let mut rng = Rng::new(c as u64);
-            let xs: Vec<Vec<f32>> =
-                (0..n / clients).map(|_| rng.normal_vec(sample)).collect();
-            threads.push(std::thread::spawn(move || {
-                for x in xs {
-                    h.infer(x).expect("infer");
-                }
-            }));
-        }
-        for t in threads {
-            t.join().map_err(|_| anyhow::anyhow!("client panicked"))?;
-        }
-        let elapsed = t0.elapsed().as_secs_f64();
-        let stats = handle.stop()?;
-        join.join().map_err(|_| anyhow::anyhow!("engine panicked"))?;
-        let served = (n / clients * clients) as f64;
-        println!("{label}:");
-        println!("  {:.0} req/s | {} | per-bucket {:?}",
-                 served / elapsed, stats.latency_summary,
-                 stats.per_bucket);
-        results.push((label, served / elapsed, stats.p50_us));
+        let (handle, join) = Server::start_native(cfg.clone(), policy)?;
+        let (rps, p50) = drive(handle, n, clients, sample, label)?;
+        join.join().map_err(|_| anyhow!("engine panicked"))?;
+        results.push((label, rps, p50));
     }
+    summarize(&results);
+    Ok(())
+}
 
+/// Open-loop load: `clients` threads, `n / clients` requests each.
+fn drive(handle: ServerHandle, n: usize, clients: usize, sample: usize,
+         label: &str) -> Result<(f64, u64)> {
+    // warmup so thread-pool spin-up stays out of the measurement
+    for _ in 0..4 {
+        let mut rng = Rng::new(99);
+        handle.infer(rng.normal_vec(sample))?;
+    }
+    let t0 = Instant::now();
+    let mut threads = Vec::new();
+    for c in 0..clients {
+        let h = handle.clone();
+        let mut rng = Rng::new(c as u64);
+        let xs: Vec<Vec<f32>> =
+            (0..n / clients).map(|_| rng.normal_vec(sample)).collect();
+        threads.push(std::thread::spawn(move || {
+            for x in xs {
+                h.infer(x).expect("infer");
+            }
+        }));
+    }
+    for t in threads {
+        t.join().map_err(|_| anyhow!("client panicked"))?;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let stats = handle.stop()?;
+    let served = (n / clients * clients) as f64;
+    println!("{label}:");
+    println!("  {:.0} req/s | {} | per-bucket {:?}",
+             served / elapsed, stats.latency_summary, stats.per_bucket);
+    Ok((served / elapsed, stats.p50_us))
+}
+
+fn summarize(results: &[(&str, f64, u64)]) {
     println!("\n=== summary ===");
-    for (label, rps, p50) in &results {
+    for (label, rps, p50) in results {
         println!("  {label}: {rps:.0} req/s, p50 {p50}us");
     }
     let no_batch = results[0].1;
     let batched = results[1].1.max(results[2].1);
     println!("\nbatching speedup: {:.2}x", batched / no_batch);
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_scenario(args: &Args, n: usize, clients: usize) -> Result<()> {
+    use std::path::PathBuf;
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let sample = 16 * 28 * 28;
+    println!("=== PJRT serving scenario: {n} requests, {clients} \
+              clients ===\n");
+    let mut results = Vec::new();
+    for (label, policy) in [
+        ("no batching (bucket 1 only)",
+         BatchPolicy { buckets: vec![1], max_wait_us: 0 }),
+        ("dynamic batching 1/4/16, 2ms max wait",
+         BatchPolicy { buckets: vec![1, 4, 16], max_wait_us: 2_000 }),
+    ] {
+        let (handle, join) = Server::start(artifacts.clone(), policy)?;
+        let (rps, p50) = drive(handle, n, clients, sample, label)?;
+        join.join().map_err(|_| anyhow!("engine panicked"))?;
+        results.push((label, rps, p50));
+    }
+    println!("\n=== summary ===");
+    for (label, rps, p50) in &results {
+        println!("  {label}: {rps:.0} req/s, p50 {p50}us");
+    }
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_scenario(_args: &Args, _n: usize, _clients: usize) -> Result<()> {
+    Err(anyhow!("--backend pjrt needs a build with --features pjrt"))
 }

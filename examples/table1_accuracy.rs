@@ -10,7 +10,7 @@
 //! cargo run --release --example table1_accuracy -- --steps 240
 //! ```
 
-use anyhow::Result;
+use wino_adder::util::error::Result;
 use std::path::PathBuf;
 
 use wino_adder::coordinator::{PSchedule, TrainConfig, TrainDriver};

@@ -12,7 +12,7 @@
 //!     --model resnet20_wino_adder --steps 400
 //! ```
 
-use anyhow::Result;
+use wino_adder::util::error::{anyhow, ensure, Result};
 use std::path::PathBuf;
 
 use wino_adder::coordinator::{PSchedule, TrainConfig, TrainDriver};
@@ -25,7 +25,7 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     let preset_name = args.get_or("preset", "mnist");
     let preset = Preset::parse(preset_name)
-        .ok_or_else(|| anyhow::anyhow!("bad --preset"))?;
+        .ok_or_else(|| anyhow!("bad --preset"))?;
     let default_model = match preset {
         Preset::MnistLike => "lenet_wino_adder",
         Preset::ImagenetLite => "cifarlenet_wino_adder",
@@ -81,9 +81,9 @@ fn main() -> Result<()> {
                  .collect::<Vec<_>>());
     println!("curves: {curve_path}, {w_path}");
 
-    anyhow::ensure!(report.final_loss() < first.loss * 0.8,
+    ensure!(report.final_loss() < first.loss * 0.8,
                     "training did not reduce the loss");
-    anyhow::ensure!(report.final_test_acc > 0.2,
+    ensure!(report.final_test_acc > 0.2,
                     "test accuracy below sanity threshold");
     println!("\ne2e OK — all three layers compose");
     Ok(())

@@ -1,5 +1,5 @@
-//! Figures 3 & 4: t-SNE of last-adder-layer features (Winograd vs
-//! original AdderNet) and the grid-artifact heatmaps (std vs balanced A).
+//! Figures 3 & 4: t-SNE of adder-layer features and the grid-artifact
+//! heatmaps (std vs balanced A).
 //!
 //! ```sh
 //! cargo run --release --example visualize              # both figures
@@ -7,16 +7,18 @@
 //! cargo run --release --example visualize -- --figure 4
 //! ```
 //! CSV outputs land in `results/` for external plotting.
+//!
+//! Figure 3 embeds *trained* model features when built with
+//! `--features pjrt` (and artifacts present); the default offline
+//! build embeds serving-backend features instead (`BackendEval`), the
+//! same pipeline the `tsne` subcommand uses.
 
-use anyhow::Result;
 use std::path::PathBuf;
 
-use wino_adder::coordinator::{TrainConfig, TrainDriver};
-use wino_adder::data::{Dataset, Preset, Split};
 use wino_adder::nn::wino_adder::winograd_adder_conv2d_fast;
 use wino_adder::nn::{matrices::Variant, Tensor};
-use wino_adder::runtime::{Engine, Manifest};
 use wino_adder::util::cli::Args;
+use wino_adder::util::error::Result;
 use wino_adder::util::{io, rng::Rng};
 use wino_adder::{tsne, viz};
 
@@ -33,10 +35,15 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-/// Figure 3: t-SNE embeddings of LeNet features, Winograd-adder vs
-/// original adder — the claim is the two clouds look alike (the
+/// Figure 3 (pjrt): t-SNE embeddings of LeNet features, Winograd-adder
+/// vs original adder — the claim is the two clouds look alike (the
 /// Winograd form learns equivalent features).
+#[cfg(feature = "pjrt")]
 fn figure3(args: &Args) -> Result<()> {
+    use wino_adder::coordinator::{TrainConfig, TrainDriver};
+    use wino_adder::data::{Dataset, Preset, Split};
+    use wino_adder::runtime::{Engine, Manifest};
+
     let manifest = Manifest::load(&PathBuf::from(
         args.get_or("artifacts", "artifacts")))?;
     let engine = Engine::cpu()?;
@@ -78,6 +85,55 @@ fn figure3(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Figure 3 (offline): the same embedding pipeline over serving-backend
+/// features — std vs balanced output transforms of the same layer.
+#[cfg(not(feature = "pjrt"))]
+fn figure3(args: &Args) -> Result<()> {
+    use wino_adder::coordinator::BackendEval;
+    use wino_adder::data::{Dataset, Preset, Split};
+    use wino_adder::nn::backend::{default_threads, BackendKind};
+
+    println!("=== Figure 3 (offline): t-SNE of serving-backend \
+              features ===\n");
+    let preset = Preset::MnistLike;
+    let hw = 16;
+    let ds = Dataset::new(preset, hw, 5);
+    let batch = ds.batch(Split::Test, 0, args.get_usize("batch", 64));
+    let mut ratios = Vec::new();
+    for (label, variant) in [("balanced A0", Variant::Balanced(0)),
+                             ("std A", Variant::Std)] {
+        let ev = BackendEval::new(BackendKind::Parallel,
+                                  default_threads(),
+                                  args.get_usize("features", 8),
+                                  preset.channels(), 11, variant);
+        let (feats, d) =
+            ev.features(&batch.images, batch.n, preset.channels(), hw);
+        let cfg = tsne::TsneConfig {
+            iters: args.get_usize("iters", 300),
+            ..Default::default()
+        };
+        let (y, kl) = tsne::tsne(&feats, batch.n, d, &cfg);
+        let ratio = tsne::cluster_ratio(&y, &batch.labels);
+        ratios.push(ratio);
+        println!("{label} ({}): KL {kl:.3}, cluster ratio {ratio:.3}",
+                 ev.backend_name());
+        print!("{}", viz::ascii_scatter(&y, &batch.labels, 22, 64));
+        let name = label.replace(' ', "_");
+        let rows: Vec<Vec<f64>> = (0..batch.n)
+            .map(|i| vec![y[i * 2] as f64, y[i * 2 + 1] as f64,
+                          batch.labels[i] as f64])
+            .collect();
+        io::write_csv(&PathBuf::from(format!("results/tsne_{name}.csv")),
+                      &["x", "y", "label"], &rows)?;
+        println!();
+    }
+    println!("both transforms preserve the class structure \
+              (cluster ratios: {:.3} vs {:.3}); trained-feature \
+              embeddings need --features pjrt\n",
+             ratios[0], ratios[1]);
+    Ok(())
+}
+
 /// Figure 4: per-phase output magnitudes, std A vs balanced A_0 —
 /// the std matrix shows a 2x2 grid artifact, the modified one doesn't.
 fn figure4(args: &Args) -> Result<()> {
@@ -109,4 +165,3 @@ fn figure4(args: &Args) -> Result<()> {
               >> 1 = the grid of Fig. 4(c)");
     Ok(())
 }
-

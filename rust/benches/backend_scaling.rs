@@ -1,0 +1,137 @@
+//! Backend scaling bench — the tentpole's acceptance measurement.
+//!
+//! Sweeps thread counts over the parallel f32 and int8 backends on the
+//! elementwise hot stage at the acceptance shape (t=256, c=64, o=64,
+//! i.e. a 64->64-channel layer at 32x32), reporting Gadd/s and speedup
+//! vs the scalar `wino_adder_tiles` baseline, then cross-checks the
+//! full forward path against the naive `winograd_adder_conv2d` oracle
+//! (must agree within 1e-4; the run aborts otherwise).
+//!
+//! Run: `cargo bench --bench backend_scaling`
+//! Flags (after `--`): `--t N --c N --o N` to change the shape.
+
+#[path = "benchkit.rs"]
+mod benchkit;
+use benchkit::bench;
+
+use std::sync::Arc;
+
+use wino_adder::nn::backend::{default_threads, kernel, Backend,
+                              ParallelBackend, ParallelInt8Backend};
+use wino_adder::nn::matrices::{self, Variant};
+use wino_adder::nn::wino_adder::{winograd_adder_conv2d,
+                                 wino_adder_tiles};
+use wino_adder::nn::Tensor;
+use wino_adder::util::cli::Args;
+use wino_adder::util::rng::Rng;
+use wino_adder::util::testkit::all_close;
+
+fn main() {
+    let args = Args::from_env();
+    let t = args.get_usize("t", 256);
+    let c = args.get_usize("c", 64);
+    let o = args.get_usize("o", 64);
+    let v = Variant::Balanced(0);
+    let adds = (t * o * c * 32) as f64;
+    let cores = default_threads();
+
+    let mut rng = Rng::new(42);
+    let d_hat = rng.normal_vec(t * c * 16);
+    let w_hat = rng.normal_vec(o * c * 16);
+    let s = matrices::output_transform_flat(v);
+
+    println!("=== backend scaling — elementwise stage \
+              (t={t}, c={c}, o={o}; host cores: {cores}) ===");
+    let mut y0 = vec![0f32; t * o * 4];
+    let t_scalar = bench("scalar wino_adder_tiles (baseline)", || {
+        wino_adder_tiles(&d_hat, &w_hat, t, o, c, &s, &mut y0);
+        std::hint::black_box(&y0);
+    });
+    println!("    -> {:.2} Gadd/s", adds / t_scalar / 1e9);
+
+    let mut sweep: Vec<usize> = [1, 2, 4, 8]
+        .into_iter()
+        .filter(|&n| n <= (2 * cores).max(4))
+        .collect();
+    if !sweep.contains(&cores) {
+        sweep.push(cores);
+    }
+
+    println!("\n--- parallel f32 backend, thread sweep ---");
+    let d_arc: Arc<[f32]> = d_hat.clone().into();
+    let w_arc: Arc<[f32]> = w_hat.clone().into();
+    let mut speedup_at_4 = 0.0;
+    for &threads in &sweep {
+        let be = ParallelBackend::new(threads);
+        let mut y = vec![0f32; t * o * 4];
+        let t_par =
+            bench(&format!("parallel[{threads}t] run_tiles"), || {
+                be.run_tiles(&d_arc, &w_arc, t, o, c, s, &mut y);
+                std::hint::black_box(&y);
+            });
+        all_close(&y, &y0, 1e-4, 1e-4)
+            .expect("parallel f32 diverged from scalar baseline");
+        let speedup = t_scalar / t_par;
+        if threads == 4 {
+            speedup_at_4 = speedup;
+        }
+        println!("    -> {:.2} Gadd/s, {speedup:.2}x vs scalar",
+                 adds / t_par / 1e9);
+    }
+
+    println!("\n--- parallel int8 backend, thread sweep ---");
+    let mut irng = Rng::new(7);
+    let mut ivec = |len: usize| -> Arc<[i16]> {
+        (0..len)
+            .map(|_| (irng.below(1024) as i32 - 512) as i16)
+            .collect::<Vec<i16>>()
+            .into()
+    };
+    let d16 = ivec(t * c * 16);
+    let w16 = ivec(o * c * 16);
+    let si = kernel::output_transform_flat_i32(v);
+    let mut yi0 = vec![0i32; t * o * 4];
+    let be1 = ParallelInt8Backend::new(1);
+    let t_i8 = bench("parallel-int8[1t] run_tiles (int8 baseline)", || {
+        be1.run_tiles(&d16, &w16, t, o, c, si, &mut yi0);
+        std::hint::black_box(&yi0);
+    });
+    println!("    -> {:.2} Gadd/s", adds / t_i8 / 1e9);
+    for &threads in sweep.iter().filter(|&&n| n > 1) {
+        let be = ParallelInt8Backend::new(threads);
+        let mut yi = vec![0i32; t * o * 4];
+        let t_par =
+            bench(&format!("parallel-int8[{threads}t] run_tiles"), || {
+                be.run_tiles(&d16, &w16, t, o, c, si, &mut yi);
+                std::hint::black_box(&yi);
+            });
+        assert_eq!(yi, yi0, "int8 sharding changed exact results");
+        println!("    -> {:.2} Gadd/s, {:.2}x vs int8[1t], \
+                  {:.2}x vs f32 scalar",
+                 adds / t_par / 1e9, t_i8 / t_par, t_scalar / t_par);
+    }
+
+    // ---- correctness vs the naive oracle, full forward path --------
+    // (1, c, 32, 32) with pad=1 -> th=tw=16 -> exactly t=256 tiles
+    println!("\n--- oracle check (full forward, {c}ch 32x32) ---");
+    let x = Tensor::randn(&mut rng, [1, c, 32, 32]);
+    let wt = Tensor::from_vec(w_hat.clone(), [o, c, 4, 4]);
+    let want = winograd_adder_conv2d(&x, &wt, 1, v);
+    let be = ParallelBackend::new(cores);
+    let got = be.forward(&x, &wt, 1, v);
+    let max_err = got
+        .data
+        .iter()
+        .zip(&want.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    all_close(&got.data, &want.data, 1e-4, 1e-4)
+        .expect("parallel forward diverged from naive oracle");
+    println!("  parallel[{cores}t] vs naive oracle: max |err| = \
+              {max_err:.2e}  (within 1e-4: OK)");
+
+    if speedup_at_4 > 0.0 {
+        println!("\nacceptance: parallel[4t] speedup vs scalar = \
+                  {speedup_at_4:.2}x (target >= 3x on 4 cores)");
+    }
+}

@@ -13,14 +13,12 @@
 mod benchkit;
 use benchkit::{bench, gops};
 
-use std::path::PathBuf;
 use wino_adder::nn::adder::{adder_conv2d_fast, l1_distance_matrix};
 use wino_adder::nn::wino_adder::{input_tiles, wino_adder_tiles,
                                  winograd_adder_conv2d_fast};
 use wino_adder::nn::quant::{quantize_wino_weights, requantize_pair,
                             winograd_adder_conv2d_i8};
 use wino_adder::nn::{matrices, Tensor};
-use wino_adder::runtime::{Engine, Manifest};
 use wino_adder::util::rng::Rng;
 
 fn main() {
@@ -83,6 +81,14 @@ fn main() {
     });
     println!("    -> {:.2} Gadd/s", gops(2.0 * 784.0 * 16.0 * 144.0, t));
 
+    pjrt_section(&mut rng, wino_adds);
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_section(rng: &mut Rng, wino_adds: f64) {
+    use std::path::PathBuf;
+    use wino_adder::runtime::{Engine, Manifest};
+
     println!("\n=== PJRT layer artifacts (AOT Pallas, end-to-end) ===");
     let artifacts = PathBuf::from("artifacts");
     if !artifacts.join("manifest.json").exists() {
@@ -103,4 +109,10 @@ fn main() {
         println!("    -> {:.0} img/s, {:.2} Gadd/s",
                  bucket as f64 / t, gops(wino_adds * bucket as f64, t));
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_section(_rng: &mut Rng, _wino_adds: f64) {
+    println!("\n=== PJRT layer artifacts ===\n  (skipped: build with \
+              --features pjrt and link the real xla crate)");
 }

@@ -3,13 +3,16 @@
 //! * [`p_schedule`] — the l2-to-l1 exponent schedules of Sec. 3.3
 //!   (Table 3's ablation axis), owned by rust and fed to the AOT
 //!   train-step graph as a runtime scalar.
-//! * [`train_driver`] — the training loop: batches from `data`, cosine
-//!   LR, p-annealing, metric/weight-norm logging (Figures 2 & 5).
-//! * [`batcher`] — dynamic request batcher with bucketed batch sizes
-//!   (the AOT layer artifacts are compiled per batch bucket).
+//! * [`train_driver`] — the training loop (feature `pjrt`): batches
+//!   from `data`, cosine LR, p-annealing, metric/weight-norm logging
+//!   (Figures 2 & 5); plus the always-available backend-dispatched
+//!   [`train_driver::BackendEval`] feature-extraction path.
+//! * [`batcher`] — dynamic request batcher with bucketed batch sizes.
 //! * [`router`] — request router across executor lanes.
-//! * [`server`] — the serving loop: engine thread owning the PJRT
-//!   executables (they are not `Send`), mpsc request/response plumbing.
+//! * [`server`] — the serving loop: an engine thread running either the
+//!   rust-native `nn::backend` CPU backends (default, offline) or the
+//!   PJRT executables (feature `pjrt`; they are not `Send`, hence the
+//!   single engine thread), mpsc request/response plumbing.
 //! * [`metrics`] — latency/throughput instrumentation.
 
 pub mod batcher;
@@ -21,4 +24,7 @@ pub mod train_driver;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use p_schedule::PSchedule;
-pub use train_driver::{TrainConfig, TrainDriver, TrainReport};
+pub use train_driver::{BackendEval, TrainConfig, TrainReport};
+
+#[cfg(feature = "pjrt")]
+pub use train_driver::TrainDriver;

@@ -1,13 +1,20 @@
-//! The inference server: a single engine thread owning the PJRT
-//! executables (they are not `Send`), fed by an mpsc request channel
-//! through the dynamic [`Batcher`] and bucket [`Router`].
+//! The inference server: a single engine thread fed by an mpsc request
+//! channel through the dynamic [`Batcher`] and bucket [`Router`].
 //!
 //! Request path (all rust, no Python):
 //!   client -> mpsc -> batcher (bucket selection) -> router (lane)
-//!          -> PJRT execute (AOT wino-adder layer) -> per-request reply.
+//!          -> batch execution -> per-request reply.
+//!
+//! Two execution substrates plug into the same serving loop:
+//!
+//! * **native** ([`Server::start_native`], always available) — the
+//!   multi-threaded [`nn::backend`](crate::nn::backend) CPU backends
+//!   (`scalar` / `parallel` / `parallel-int8`), selected by
+//!   [`NativeConfig`]; this is the serving fallback and the default.
+//! * **PJRT** ([`Server::start`], feature `pjrt`) — the AOT
+//!   `layer_wino_adder_b*` artifacts executed by the engine thread
+//!   (PJRT executables are not `Send`, hence the single-thread loop).
 
-use anyhow::{anyhow, Result};
-use std::path::PathBuf;
 use std::sync::mpsc;
 use std::thread;
 use std::time::{Duration, Instant};
@@ -15,8 +22,18 @@ use std::time::{Duration, Instant};
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::LatencyStats;
 use super::router::Router;
-use crate::runtime::{Engine, Manifest};
+use crate::nn::backend::{default_threads, Backend, BackendKind};
+use crate::nn::matrices::Variant;
+use crate::nn::Tensor;
+use crate::util::error::{anyhow, ensure, Result};
+use crate::util::rng::Rng;
+
+#[cfg(feature = "pjrt")]
+use crate::runtime::{Engine, LayerExec, Manifest};
+#[cfg(feature = "pjrt")]
 use crate::util::io;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
 
 /// One inference request: a single image (C*H*W flat) in, logits-like
 /// feature map out.
@@ -80,12 +97,83 @@ impl ServerHandle {
     }
 }
 
-/// The Winograd-adder layer server over the AOT `layer_wino_adder_b*`
-/// artifacts.
+/// Configuration of the rust-native serving engine: which backend runs
+/// the Winograd-adder layer, and the layer's shape. Weights are
+/// synthetic (seeded) — the demo serves the paper's FPGA benchmark
+/// layer (16 -> 16 channels at 28x28) by default.
+#[derive(Debug, Clone)]
+pub struct NativeConfig {
+    pub backend: BackendKind,
+    pub threads: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub hw: usize,
+    pub variant: Variant,
+    pub seed: u64,
+}
+
+impl Default for NativeConfig {
+    fn default() -> NativeConfig {
+        NativeConfig {
+            backend: BackendKind::Parallel,
+            threads: default_threads(),
+            cin: 16,
+            cout: 16,
+            hw: 28,
+            variant: Variant::Balanced(0),
+            seed: 7,
+        }
+    }
+}
+
+impl NativeConfig {
+    pub fn sample_len(&self) -> usize {
+        self.cin * self.hw * self.hw
+    }
+}
+
+/// The Winograd-adder layer server.
 pub struct Server;
 
 impl Server {
-    /// Start the engine thread. `artifacts` is the artifacts directory.
+    /// Start the engine thread on the rust-native backend (no
+    /// artifacts required — the offline serving fallback).
+    pub fn start_native(cfg: NativeConfig, policy: BatchPolicy)
+                        -> Result<(ServerHandle, thread::JoinHandle<()>)> {
+        // validate up front: a bad shape must be a CLI error, not an
+        // assert panic inside the engine thread
+        ensure!(cfg.cin >= 1 && cfg.cout >= 1,
+                "cin/cout must be >= 1 (got {}/{})", cfg.cin, cfg.cout);
+        ensure!(cfg.hw >= 2 && cfg.hw % 2 == 0,
+                "hw must be even and >= 2 for the stride-2 F(2x2,3x3) \
+                 tiling after pad=1 (got {})", cfg.hw);
+        let sample_len = cfg.sample_len();
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let handle = ServerHandle { tx, sample_len };
+        let join = thread::Builder::new()
+            .name("wino-adder-native-engine".into())
+            .spawn(move || {
+                let mut rng = Rng::new(cfg.seed);
+                let w_hat = Tensor::randn(&mut rng,
+                                          [cfg.cout, cfg.cin, 4, 4]);
+                let exec = NativeExec {
+                    backend: cfg.backend.build(cfg.threads),
+                    w_hat,
+                    cin: cfg.cin,
+                    hw: cfg.hw,
+                    variant: cfg.variant,
+                };
+                if let Err(e) = serve_loop(policy, rx, exec) {
+                    eprintln!("engine thread error: {e:?}");
+                }
+            })
+            .map_err(|e| anyhow!("spawning engine thread: {e}"))?;
+        Ok((handle, join))
+    }
+
+    /// Start the engine thread on the PJRT `layer_wino_adder_b*`
+    /// artifacts under `artifacts/`.
+    #[cfg(feature = "pjrt")]
     pub fn start(artifacts: PathBuf, policy: BatchPolicy)
                  -> Result<(ServerHandle, thread::JoinHandle<()>)> {
         let manifest = Manifest::load(&artifacts)?;
@@ -95,11 +183,24 @@ impl Server {
         let (tx, rx) = mpsc::channel::<Msg>();
         let handle = ServerHandle { tx, sample_len };
 
+        let buckets = policy.buckets.clone();
         let join = thread::Builder::new()
             .name("wino-adder-engine".into())
             .spawn(move || {
-                if let Err(e) = engine_loop(&artifacts, policy, rx) {
-                    eprintln!("engine thread error: {e:#}");
+                let run = || -> Result<()> {
+                    let engine = Engine::cpu()?;
+                    let w =
+                        io::read_f32(&artifacts.join("layer.w_hat.bin"))?;
+                    let mut lanes = Vec::new();
+                    for bucket in &buckets {
+                        let name = format!("wino_adder_b{bucket}");
+                        let entry = manifest.layer(&name)?;
+                        lanes.push((*bucket, engine.load_layer(entry)?));
+                    }
+                    serve_loop(policy, rx, PjrtExec { lanes, w })
+                };
+                if let Err(e) = run() {
+                    eprintln!("engine thread error: {e:?}");
                 }
             })
             .map_err(|e| anyhow!("spawning engine thread: {e}"))?;
@@ -107,25 +208,80 @@ impl Server {
     }
 }
 
-fn engine_loop(artifacts: &PathBuf, policy: BatchPolicy,
-               rx: mpsc::Receiver<Msg>) -> Result<()> {
-    let manifest = Manifest::load(artifacts)?;
-    let engine = Engine::cpu()?;
-    // layer weights shipped with the artifacts
-    let w = io::read_f32(&artifacts.join("layer.w_hat.bin"))?;
+/// One batch-execution substrate pluggable into [`serve_loop`].
+trait BatchExec {
+    /// Flat output length per sample for a batch of `bucket` samples.
+    fn per_sample_out(&self, bucket: usize) -> usize;
+    /// Execute a batch: `x` is `bucket * sample_len` flat values.
+    fn run(&mut self, bucket: usize, x: &[f32]) -> Result<Vec<f32>>;
+}
 
-    // one lane per available bucket artifact
-    let mut router = Router::new();
-    let mut lanes = Vec::new();
-    for bucket in &policy.buckets {
-        let name = format!("wino_adder_b{bucket}");
-        let entry = manifest.layer(&name)?;
-        let exec = engine.load_layer(entry)?;
-        let lane = router.add_lane(*bucket);
-        debug_assert_eq!(lane, lanes.len());
-        lanes.push(exec);
+/// Native substrate: one `nn::backend` instance serves every bucket.
+struct NativeExec {
+    backend: Box<dyn Backend>,
+    w_hat: Tensor,
+    cin: usize,
+    hw: usize,
+    variant: Variant,
+}
+
+impl BatchExec for NativeExec {
+    fn per_sample_out(&self, _bucket: usize) -> usize {
+        // pad=1 keeps the spatial extent: (cout, hw, hw) per sample
+        self.w_hat.dims[0] * self.hw * self.hw
     }
 
+    fn run(&mut self, bucket: usize, x: &[f32]) -> Result<Vec<f32>> {
+        let xt = Tensor::from_vec(x.to_vec(),
+                                  [bucket, self.cin, self.hw, self.hw]);
+        let y = self.backend.forward(&xt, &self.w_hat, 1, self.variant);
+        Ok(y.data)
+    }
+}
+
+/// PJRT substrate: one shape-specialized executable per bucket.
+#[cfg(feature = "pjrt")]
+struct PjrtExec {
+    lanes: Vec<(usize, LayerExec)>,
+    w: Vec<f32>,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtExec {
+    fn lane(&self, bucket: usize) -> Result<&LayerExec> {
+        self.lanes
+            .iter()
+            .find(|(b, _)| *b == bucket)
+            .map(|(_, e)| e)
+            .ok_or_else(|| anyhow!("no executable for bucket {bucket}"))
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl BatchExec for PjrtExec {
+    fn per_sample_out(&self, bucket: usize) -> usize {
+        self.lane(bucket)
+            .map(|exec| {
+                exec.entry.out_shape.iter().product::<usize>()
+                    / exec.entry.batch
+            })
+            .unwrap_or(0)
+    }
+
+    fn run(&mut self, bucket: usize, x: &[f32]) -> Result<Vec<f32>> {
+        self.lane(bucket)?.run(x, &self.w)
+    }
+}
+
+/// The serving loop shared by every substrate: drain requests, batch,
+/// route to a bucket lane, execute, reply, and report stats on stop.
+fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
+                            mut exec: E) -> Result<()> {
+    // one lane per available bucket
+    let mut router = Router::new();
+    for bucket in &policy.buckets {
+        router.add_lane(*bucket);
+    }
     let mut batcher: Batcher<InferMsg> = Batcher::new(policy);
     let start = Instant::now();
     let now_us = |s: &Instant| s.elapsed().as_micros() as u64;
@@ -159,11 +315,18 @@ fn engine_loop(artifacts: &PathBuf, policy: BatchPolicy,
             Err(mpsc::RecvTimeoutError::Disconnected) => break 'outer,
         }
 
-        // dispatch ready batches
+        // dispatch ready batches; on stop, flush the whole queue (the
+        // seed took only the first flushed batch, dropping the rest)
         let drain = stop_reply.is_some();
+        let mut flushed = if drain {
+            batcher.flush()
+        } else {
+            Vec::new()
+        }
+        .into_iter();
         loop {
             let batch = if drain {
-                batcher.flush().into_iter().next()
+                flushed.next()
             } else {
                 batcher.poll(now_us(&start))
             };
@@ -172,15 +335,13 @@ fn engine_loop(artifacts: &PathBuf, policy: BatchPolicy,
             let lane_id = router
                 .route(size)
                 .ok_or_else(|| anyhow!("no lane for bucket {size}"))?;
-            let exec = &lanes[lane_id];
-            let mut x = Vec::with_capacity(size * batch[0].payload.x.len());
+            let mut x =
+                Vec::with_capacity(size * batch[0].payload.x.len());
             for r in &batch {
                 x.extend_from_slice(&r.payload.x);
             }
-            let per_sample: usize =
-                exec.entry.out_shape.iter().product::<usize>()
-                    / exec.entry.batch;
-            let result = exec.run(&x, &w);
+            let per_sample = exec.per_sample_out(size);
+            let result = exec.run(size, &x);
             router.complete(lane_id);
             batches += 1;
             match result {
@@ -194,7 +355,7 @@ fn engine_loop(artifacts: &PathBuf, policy: BatchPolicy,
                 }
                 Err(e) => {
                     for r in batch {
-                        let _ = r.payload.resp.send(Err(format!("{e:#}")));
+                        let _ = r.payload.resp.send(Err(format!("{e}")));
                     }
                 }
             }
@@ -218,4 +379,111 @@ fn engine_loop(artifacts: &PathBuf, policy: BatchPolicy,
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::wino_adder::winograd_adder_conv2d_fast;
+    use crate::util::testkit::all_close;
+
+    fn tiny_cfg(kind: BackendKind) -> NativeConfig {
+        NativeConfig {
+            backend: kind,
+            threads: 2,
+            cin: 2,
+            cout: 3,
+            hw: 8,
+            variant: Variant::Balanced(0),
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn native_server_serves_and_reports_stats() {
+        let policy = BatchPolicy { buckets: vec![1, 4],
+                                   max_wait_us: 500 };
+        let (handle, join) =
+            Server::start_native(tiny_cfg(BackendKind::Parallel), policy)
+                .unwrap();
+        let sample = 2 * 8 * 8;
+        let mut rng = Rng::new(1);
+        let mut threads = Vec::new();
+        for _ in 0..4 {
+            let h = handle.clone();
+            let xs: Vec<Vec<f32>> =
+                (0..8).map(|_| rng.normal_vec(sample)).collect();
+            threads.push(thread::spawn(move || {
+                for x in xs {
+                    let y = h.infer(x).expect("infer");
+                    assert_eq!(y.len(), 3 * 8 * 8);
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        let stats = handle.stop().unwrap();
+        join.join().unwrap();
+        assert_eq!(stats.served, 32);
+        assert!(stats.batches >= 2, "batched: {}", stats.batches);
+        let routed: u64 =
+            stats.per_bucket.iter().map(|(_, n)| n).sum();
+        assert_eq!(routed, stats.batches);
+    }
+
+    #[test]
+    fn native_server_output_matches_direct_forward() {
+        let cfg = tiny_cfg(BackendKind::Scalar);
+        let policy = BatchPolicy { buckets: vec![1], max_wait_us: 0 };
+        let (handle, join) =
+            Server::start_native(cfg.clone(), policy).unwrap();
+        let mut rng = Rng::new(9);
+        let x = rng.normal_vec(cfg.sample_len());
+        let got = handle.infer(x.clone()).unwrap();
+        handle.stop().unwrap();
+        join.join().unwrap();
+        // recompute with the same seeded weights
+        let mut wrng = Rng::new(cfg.seed);
+        let w_hat = Tensor::randn(&mut wrng, [cfg.cout, cfg.cin, 4, 4]);
+        let xt = Tensor::from_vec(x, [1, cfg.cin, cfg.hw, cfg.hw]);
+        let want =
+            winograd_adder_conv2d_fast(&xt, &w_hat, 1, cfg.variant);
+        all_close(&got, &want.data, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn odd_hw_is_a_config_error_not_a_panic() {
+        let mut cfg = tiny_cfg(BackendKind::Scalar);
+        cfg.hw = 27;
+        let err = Server::start_native(
+            cfg, BatchPolicy { buckets: vec![1], max_wait_us: 0 })
+            .unwrap_err();
+        assert!(format!("{err}").contains("hw"), "{err}");
+    }
+
+    #[test]
+    fn wrong_sample_len_is_rejected() {
+        let (handle, join) = Server::start_native(
+            tiny_cfg(BackendKind::Scalar),
+            BatchPolicy { buckets: vec![1], max_wait_us: 0 }).unwrap();
+        assert!(handle.infer(vec![0.0; 3]).is_err());
+        handle.stop().unwrap();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn int8_backend_serves() {
+        let (handle, join) = Server::start_native(
+            tiny_cfg(BackendKind::ParallelInt8),
+            BatchPolicy { buckets: vec![1, 2], max_wait_us: 200 })
+            .unwrap();
+        let mut rng = Rng::new(3);
+        for _ in 0..4 {
+            let y = handle.infer(rng.normal_vec(2 * 8 * 8)).unwrap();
+            assert_eq!(y.len(), 3 * 8 * 8);
+        }
+        handle.stop().unwrap();
+        join.join().unwrap();
+    }
 }

@@ -2,12 +2,25 @@
 //! synthetic data batches, owning every schedule the paper describes —
 //! cosine LR, the l2-to-l1 exponent p, periodic eval — and logging the
 //! curves Figures 2 & 5 plot (loss, accuracy, adder-weight mean |w|).
-
-use anyhow::Result;
+//!
+//! The PJRT-backed [`TrainDriver`] needs the `pjrt` feature; the
+//! backend-dispatched [`BackendEval`] feature-extraction path (the
+//! offline analogue of `ModelRuntime::eval`) is always available and
+//! runs on any [`nn::backend::Backend`](crate::nn::backend::Backend).
 
 use super::p_schedule::PSchedule;
-use crate::data::{Dataset, Preset, Split};
+use crate::data::Preset;
+use crate::nn::backend::{Backend, BackendKind};
+use crate::nn::matrices::Variant;
+use crate::nn::Tensor;
+use crate::util::rng::Rng;
+
+#[cfg(feature = "pjrt")]
+use crate::data::{Dataset, Split};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, Manifest, ModelRuntime};
+#[cfg(feature = "pjrt")]
+use crate::util::error::{anyhow, ensure, Result};
 
 /// One training run's configuration.
 #[derive(Debug, Clone)]
@@ -75,12 +88,60 @@ impl TrainReport {
     }
 }
 
-/// The driver itself.
+/// Backend-dispatched eval path: a fixed, seeded Winograd-adder layer
+/// used as feature extractor over data batches — serving-side feature
+/// extraction (Figure 3's input) without a PJRT runtime. The compute
+/// goes through whichever [`Backend`] the CLI selected, so `tsne` and
+/// the eval smoke paths exercise the exact serving kernels.
+pub struct BackendEval {
+    backend: Box<dyn Backend>,
+    w_hat: Tensor,
+    variant: Variant,
+}
+
+impl BackendEval {
+    /// `cout x cin` Winograd-domain weights drawn from `seed`.
+    pub fn new(kind: BackendKind, threads: usize, cout: usize,
+               cin: usize, seed: u64, variant: Variant) -> BackendEval {
+        let mut rng = Rng::new(seed);
+        BackendEval {
+            backend: kind.build(threads),
+            w_hat: Tensor::randn(&mut rng, [cout, cin, 4, 4]),
+            variant,
+        }
+    }
+
+    pub fn backend_name(&self) -> String {
+        self.backend.name()
+    }
+
+    pub fn out_channels(&self) -> usize {
+        self.w_hat.dims[0]
+    }
+
+    /// Extract features for a flat image batch `(b, channels, hw, hw)`:
+    /// returns the flattened `(b, d)` feature rows and `d`.
+    pub fn features(&self, images: &[f32], b: usize, channels: usize,
+                    hw: usize) -> (Vec<f32>, usize) {
+        assert_eq!(images.len(), b * channels * hw * hw,
+                   "batch shape mismatch");
+        assert_eq!(channels, self.w_hat.dims[1], "channel mismatch");
+        let x = Tensor::from_vec(images.to_vec(),
+                                 [b, channels, hw, hw]);
+        let y = self.backend.forward(&x, &self.w_hat, 1, self.variant);
+        let d = y.data.len() / b;
+        (y.data, d)
+    }
+}
+
+/// The driver itself (PJRT execution path).
+#[cfg(feature = "pjrt")]
 pub struct TrainDriver<'a> {
     engine: &'a Engine,
     manifest: &'a Manifest,
 }
 
+#[cfg(feature = "pjrt")]
 impl<'a> TrainDriver<'a> {
     pub fn new(engine: &'a Engine, manifest: &'a Manifest)
                -> TrainDriver<'a> {
@@ -105,13 +166,13 @@ impl<'a> TrainDriver<'a> {
                 .manifest
                 .extra_inits
                 .get(init)
-                .ok_or_else(|| anyhow::anyhow!("no extra init {init:?}"))?;
-            anyhow::ensure!(base == &cfg.model,
-                            "init {init:?} is for model {base:?}");
+                .ok_or_else(|| anyhow!("no extra init {init:?}"))?;
+            ensure!(base == &cfg.model,
+                    "init {init:?} is for model {base:?}");
             let flat = crate::util::io::read_f32(path)?;
             rt.set_params_flat(&flat)?;
         }
-        let ds = Dataset::new(cfg.preset, entry.config.image_size as usize,
+        let ds = Dataset::new(cfg.preset, entry.config.image_size,
                               cfg.seed);
         let mut report = TrainReport {
             config_label: format!("{} [{}]", cfg.model, cfg.schedule.label()),
@@ -170,6 +231,7 @@ impl<'a> TrainDriver<'a> {
 }
 
 /// Mean |w| over adder-family body weights (Figure 5's statistic).
+#[cfg(feature = "pjrt")]
 fn mean_abs_adder_weights(rt: &ModelRuntime) -> Result<f32> {
     let mut sum = 0f64;
     let mut count = 0u64;
@@ -179,7 +241,7 @@ fn mean_abs_adder_weights(rt: &ModelRuntime) -> Result<f32> {
         }
         let v = lit
             .to_vec::<f32>()
-            .map_err(|e| anyhow::anyhow!("weight readback: {e}"))?;
+            .map_err(|e| anyhow!("weight readback: {e}"))?;
         sum += v.iter().map(|x| x.abs() as f64).sum::<f64>();
         count += v.len() as u64;
     }
@@ -213,5 +275,33 @@ mod tests {
         let c = TrainConfig::new("lenet_wino_adder", Preset::MnistLike, 100);
         assert_eq!(c.steps, 100);
         assert_eq!(c.schedule, PSchedule::DuringConverge { events: 35 });
+    }
+
+    #[test]
+    fn backend_eval_extracts_features() {
+        use crate::data::{Dataset, Split};
+        let ds = Dataset::new(Preset::MnistLike, 16, 3);
+        let batch = ds.batch(Split::Test, 0, 4);
+        let ev = BackendEval::new(BackendKind::Parallel, 2, 6, 1, 9,
+                                  Variant::Balanced(0));
+        let (feats, d) = ev.features(&batch.images, 4, 1, 16);
+        assert_eq!(d, 6 * 16 * 16);
+        assert_eq!(feats.len(), 4 * d);
+        assert!(feats.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn backend_eval_scalar_and_parallel_agree() {
+        use crate::data::{Dataset, Split};
+        use crate::util::testkit::all_close;
+        let ds = Dataset::new(Preset::Cifar10Like, 16, 4);
+        let batch = ds.batch(Split::Train, 1, 2);
+        let mk = |kind| BackendEval::new(kind, 4, 5, 3, 7,
+                                         Variant::Balanced(1));
+        let (a, _) = mk(BackendKind::Scalar)
+            .features(&batch.images, 2, 3, 16);
+        let (b, _) = mk(BackendKind::Parallel)
+            .features(&batch.images, 2, 3, 16);
+        all_close(&a, &b, 1e-4, 1e-4).unwrap();
     }
 }

@@ -7,18 +7,35 @@
 //!   `python/compile/aot.py`.
 //! * **Layer 3 (this crate)** — the runtime and every substrate the
 //!   paper's evaluation depends on:
-//!   - [`runtime`]: PJRT client wrapper that loads + executes artifacts,
-//!   - [`coordinator`]: inference router/batcher and the training driver
-//!     that owns the l2-to-l1 exponent and learning-rate schedules,
+//!   - [`runtime`] (feature `pjrt`): PJRT client wrapper that loads +
+//!     executes artifacts,
+//!   - [`coordinator`]: inference router/batcher, the serving loop, and
+//!     the training driver that owns the l2-to-l1 exponent and
+//!     learning-rate schedules,
 //!   - [`nn`]: rust-native f32 + int8 adder/Winograd convolutions
-//!     (baselines, property tests, serving fallback),
+//!     (baselines, property tests, serving fallback), including
+//!     [`nn::backend`] — the multi-threaded CPU serving backends,
 //!   - [`opcount`]: the analytical #Add/#Mul model (paper Eq. 10-12),
 //!   - [`energy`]: op-level energy model behind Figure 1,
 //!   - [`fpga`]: cycle-level simulator of the paper's FPGA accelerator
 //!     (Table 2),
 //!   - [`data`]: procedural dataset generators (MNIST-/CIFAR-like),
 //!   - [`tsne`], [`viz`]: the Figure 3/4/5 visualisation tooling,
-//!   - [`util`]: offline-environment substitutes (JSON, CLI, testkit).
+//!   - [`util`]: offline-environment substitutes (JSON, CLI, testkit,
+//!     error handling).
+//!
+//! ## Build modes
+//!
+//! * **Default (offline-clean)** — `cargo build` needs no network and
+//!   no external crates. The serving path runs on the rust-native
+//!   [`nn::backend`] CPU backends (`scalar`, `parallel`,
+//!   `parallel-int8`), selected with `--backend`/`--threads` on the
+//!   `wino-adder serve` subcommand.
+//! * **`--features pjrt`** — additionally compiles [`runtime`], the
+//!   PJRT engine that executes the AOT HLO artifacts. Offline it links
+//!   a vendored API stub (`rust/vendor/xla`) that type-checks but
+//!   reports "unavailable" at client construction; swap in the real
+//!   `xla` crate in `rust/Cargo.toml` to execute artifacts.
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! Python invocation, after which the `wino-adder` binary is
@@ -30,6 +47,7 @@ pub mod energy;
 pub mod fpga;
 pub mod nn;
 pub mod opcount;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tsne;
 pub mod util;

@@ -1,29 +1,32 @@
 //! `wino-adder` — the Layer-3 coordinator binary.
 //!
 //! Subcommands (see `--help`):
-//!   train     drive the AOT train-step graph (schedules owned here)
-//!   serve     batched Winograd-adder layer inference server demo
+//!   train     drive the AOT train-step graph (needs --features pjrt)
+//!   serve     batched Winograd-adder inference server demo; runs on
+//!             the rust-native nn::backend CPU backends by default,
+//!             or on PJRT artifacts with --backend pjrt (pjrt build)
 //!   energy    Figure-1 relative-power report
 //!   opcount   Table-1 operation counts (exact, analytic)
 //!   fpga-sim  Table-2 FPGA cycle/resource/energy simulation
-//!   tsne      Figure-3 feature embedding (eval features -> t-SNE)
+//!   tsne      Figure-3 feature embedding (backend features -> t-SNE;
+//!             trained-model features with --features pjrt)
 //!   heatmap   Figure-4 grid-artifact comparison (std vs balanced A)
 //!   golden    integration check vs Python-pinned golden outputs
+//!             (needs --features pjrt)
 
-use anyhow::{anyhow, Result};
 use std::path::PathBuf;
 
 use wino_adder::coordinator::batcher::BatchPolicy;
-use wino_adder::coordinator::server::Server;
-use wino_adder::coordinator::{PSchedule, TrainConfig, TrainDriver};
-use wino_adder::data::{Dataset, Preset, Split};
+use wino_adder::coordinator::server::{NativeConfig, Server, ServerHandle};
+use wino_adder::data::Preset;
 use wino_adder::energy::{figure1, paper_figure1, EnergyTable};
+use wino_adder::nn::backend::BackendKind;
 use wino_adder::nn::{matrices, wino_adder as nn_wino, Tensor};
 use wino_adder::opcount::{self, count_model, fmt_m, Mode};
-use wino_adder::runtime::{Engine, Manifest};
 use wino_adder::util::cli::Args;
+use wino_adder::util::error::{anyhow, Result};
 use wino_adder::util::{io, rng::Rng};
-use wino_adder::{fpga, tsne, viz};
+use wino_adder::{fpga, viz};
 
 fn main() {
     let args = Args::from_env();
@@ -55,23 +58,40 @@ fn print_help() {
          SUBCOMMANDS\n\
          \x20 train    --model NAME --preset mnist|cifar10|cifar100|imagenet-lite\n\
          \x20          --steps N --lr F --schedule const:P|during:N|until:N\n\
-         \x20          [--eval-every N] [--csv PATH] [--init NAME]\n\
+         \x20          [--eval-every N] [--csv PATH] [--init NAME]   (pjrt)\n\
          \x20 serve    [--requests N] [--max-wait-us N]\n\
+         \x20          [--backend scalar|parallel|parallel-int8|pjrt]\n\
+         \x20          [--threads N] [--cin N] [--cout N] [--hw N]\n\
+         \x20          [--variant std|A0..A3]\n\
          \x20 energy   [--model resnet20|resnet32|resnet18]\n\
          \x20 opcount  [--model resnet20|resnet32|resnet18|lenet|resnet20-lite]\n\
          \x20 fpga-sim [--cin N --cout N --hw N --par N]\n\
-         \x20 tsne     [--model lenet_wino_adder] [--csv PATH]\n\
+         \x20 tsne     [--backend ...] [--features N] [--csv PATH]\n\
          \x20 heatmap  [--hw N --cin N]\n\
-         \x20 golden\n\n\
-         Common: --artifacts DIR (default ./artifacts)"
+         \x20 golden                                                 (pjrt)\n\n\
+         Common: --artifacts DIR (default ./artifacts)\n\
+         Default build serves on the rust-native CPU backends; build \
+         with --features pjrt for the AOT artifact runtime."
     );
 }
 
+#[cfg(feature = "pjrt")]
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("artifacts", "artifacts"))
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_unavailable(cmd: &str) -> wino_adder::util::error::Error {
+    anyhow!("`{cmd}` drives the PJRT runtime; rebuild with \
+             `cargo build --features pjrt` (and link the real `xla` \
+             crate — see README)")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
+    use wino_adder::coordinator::{PSchedule, TrainConfig, TrainDriver};
+    use wino_adder::runtime::{Engine, Manifest};
+
     let model = args.get_or("model", "lenet_wino_adder").to_string();
     let preset = Preset::parse(args.get_or("preset", "mnist"))
         .ok_or_else(|| anyhow!("bad --preset"))?;
@@ -81,8 +101,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut cfg = TrainConfig::new(&model, preset, steps);
     cfg.lr0 = args.get_f64("lr", 0.05) as f32;
     cfg.schedule = schedule;
-    cfg.eval_every = args.get_usize("eval-every", 100) as u64;
-    cfg.seed = args.get_usize("seed", 0) as u64;
+    cfg.eval_every = args.get_u64("eval-every", 100);
+    cfg.seed = args.get_u64("seed", 0);
     cfg.init_override = args.get("init").map(|s| s.to_string());
 
     let manifest = Manifest::load(&artifacts_dir(args))?;
@@ -113,16 +133,62 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> Result<()> {
+    Err(pjrt_unavailable("train"))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 256);
     let policy = BatchPolicy {
         buckets: vec![1, 4, 16],
         max_wait_us: args.get_usize("max-wait-us", 2000) as u64,
     };
+    if args.get("backend") == Some("pjrt") {
+        return serve_pjrt(args, n, policy);
+    }
+    let (kind, threads) = BackendKind::from_args(args).ok_or_else(|| {
+        anyhow!("bad --backend (scalar|parallel|parallel-int8|pjrt)")
+    })?;
+    let variant = matrices::Variant::parse(args.get_or("variant", "A0"))
+        .ok_or_else(|| anyhow!("bad --variant (std|A0..A3)"))?;
+    let cfg = NativeConfig {
+        backend: kind,
+        threads,
+        cin: args.get_usize("cin", 16),
+        cout: args.get_usize("cout", 16),
+        hw: args.get_usize("hw", 28),
+        variant,
+        seed: args.get_u64("seed", 7),
+    };
+    let sample = cfg.sample_len();
+    println!("native serving: backend {} x{} threads, layer \
+              ({} -> {} ch, {}x{})",
+             kind.name(), threads, cfg.cin, cfg.cout, cfg.hw, cfg.hw);
+    let (handle, join) = Server::start_native(cfg, policy)?;
+    drive_clients(handle, join, n, sample)
+}
+
+#[cfg(feature = "pjrt")]
+fn serve_pjrt(args: &Args, n: usize, policy: BatchPolicy) -> Result<()> {
     let (handle, join) = Server::start(artifacts_dir(args), policy)?;
+    println!("PJRT serving from {:?}", artifacts_dir(args));
+    drive_clients(handle, join, n, 16 * 28 * 28)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve_pjrt(_args: &Args, _n: usize, _policy: BatchPolicy)
+              -> Result<()> {
+    Err(pjrt_unavailable("serve --backend pjrt"))
+}
+
+/// Shared open-loop client driver for `serve`: 4 client threads, n/4
+/// requests each, then stop + stats report.
+fn drive_clients(handle: ServerHandle,
+                 join: std::thread::JoinHandle<()>, n: usize,
+                 sample: usize) -> Result<()> {
     println!("server up; sending {n} requests");
     let mut rng = Rng::new(1);
-    let sample = 16 * 28 * 28;
     let t0 = std::time::Instant::now();
     let mut threads = Vec::new();
     for _ in 0..4 {
@@ -243,7 +309,12 @@ fn cmd_fpga(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_tsne(args: &Args) -> Result<()> {
+    use wino_adder::data::{Dataset, Split};
+    use wino_adder::runtime::{Engine, Manifest};
+    use wino_adder::tsne;
+
     let model = args.get_or("model", "lenet_wino_adder");
     let manifest = Manifest::load(&artifacts_dir(args))?;
     let engine = Engine::cpu()?;
@@ -255,6 +326,46 @@ fn cmd_tsne(args: &Args) -> Result<()> {
     let d = feats.len() / batch.n;
     println!("embedding {} features of dim {d} (model {model})",
              batch.n);
+    let cfg = tsne::TsneConfig::default();
+    let (y, kl) = tsne::tsne(&feats, batch.n, d, &cfg);
+    let ratio = tsne::cluster_ratio(&y, &batch.labels);
+    println!("KL divergence {kl:.3}, cluster ratio {ratio:.3} \
+              (lower = better separated)\n");
+    print!("{}", viz::ascii_scatter(&y, &batch.labels, 28, 72));
+    if let Some(csv) = args.get("csv") {
+        let rows: Vec<Vec<f64>> = (0..batch.n)
+            .map(|i| vec![y[i * 2] as f64, y[i * 2 + 1] as f64,
+                          batch.labels[i] as f64])
+            .collect();
+        io::write_csv(&PathBuf::from(csv), &["x", "y", "label"], &rows)?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+/// Offline tsne: features come from the serving backend (a fixed
+/// seeded Winograd-adder layer over the test split) instead of a
+/// trained model — same embedding pipeline, backend-dispatched.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_tsne(args: &Args) -> Result<()> {
+    use wino_adder::coordinator::BackendEval;
+    use wino_adder::data::{Dataset, Split};
+    use wino_adder::tsne;
+
+    let (kind, threads) = BackendKind::from_args(args).ok_or_else(|| {
+        anyhow!("bad --backend (scalar|parallel|parallel-int8)")
+    })?;
+    let preset = Preset::MnistLike;
+    let hw = 16;
+    let cout = args.get_usize("features", 8);
+    let ev = BackendEval::new(kind, threads, cout, preset.channels(),
+                              11, matrices::Variant::Balanced(0));
+    let ds = Dataset::new(preset, hw, 5);
+    let batch = ds.batch(Split::Test, 0, args.get_usize("batch", 64));
+    let (feats, d) =
+        ev.features(&batch.images, batch.n, preset.channels(), hw);
+    println!("embedding {} backend features of dim {d} (backend {})",
+             batch.n, ev.backend_name());
     let cfg = tsne::TsneConfig::default();
     let (y, kl) = tsne::tsne(&feats, batch.n, d, &cfg);
     let ratio = tsne::cluster_ratio(&y, &batch.labels);
@@ -298,7 +409,11 @@ fn cmd_heatmap(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_golden(args: &Args) -> Result<()> {
+    use wino_adder::runtime::{Engine, Manifest};
+    use wino_adder::util::error::ensure;
+
     let manifest = Manifest::load(&artifacts_dir(args))?;
     let golden = manifest
         .golden
@@ -314,7 +429,7 @@ fn cmd_golden(args: &Args) -> Result<()> {
     println!("train step: loss {:.6} (python {:.6}, delta {dl:.2e}), \
               acc {:.4} (python {:.4})",
              stats.loss, golden.loss, stats.acc, golden.acc);
-    anyhow::ensure!(dl < 1e-3, "loss mismatch vs python");
+    ensure!(dl < 1e-3, "loss mismatch vs python");
 
     let params = rt.params_flat()?;
     let want = io::read_f32(&golden.params_out)?;
@@ -324,8 +439,13 @@ fn cmd_golden(args: &Args) -> Result<()> {
         .map(|(a, b)| (a - b).abs())
         .fold(0f32, f32::max);
     println!("updated params max |delta| vs python: {max_err:.2e}");
-    anyhow::ensure!(max_err < 5e-3, "params mismatch vs python");
+    ensure!(max_err < 5e-3, "params mismatch vs python");
     println!("golden check OK — rust PJRT path reproduces the jax \
               train step bit-for-bit (within float tolerance)");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_golden(_args: &Args) -> Result<()> {
+    Err(pjrt_unavailable("golden"))
 }

@@ -1,0 +1,131 @@
+//! The multi-threaded int8 fixed-point backend — the paper's 8-bit
+//! deployment regime (Figure 1 / Table 2), parallelized like
+//! [`super::ParallelBackend`].
+
+use std::sync::Arc;
+
+use super::pool::ThreadPool;
+use super::{kernel, Backend, Variant};
+use crate::nn::quant::{self, QTensor};
+use crate::nn::Tensor;
+
+/// Parallel int8 backend: symmetric per-tensor quantization on the
+/// activation scale (`nn::quant` conventions), i16 transform domain,
+/// i32 accumulation, sharded over the tile axis.
+///
+/// The integer pipeline is bit-exact vs
+/// [`quant::winograd_adder_conv2d_i8`] — parallelism cannot change
+/// exact integer sums — so the only error vs the f32 oracle is the
+/// quantization noise itself. Outputs are dequantized (`q * scale`) so
+/// callers see the same f32 `Tensor` API as every other backend.
+pub struct ParallelInt8Backend {
+    pool: ThreadPool,
+}
+
+impl ParallelInt8Backend {
+    pub fn new(threads: usize) -> ParallelInt8Backend {
+        ParallelInt8Backend { pool: ThreadPool::new(threads) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Sharded integer elementwise stage (see
+    /// [`super::ParallelBackend::run_tiles`]); exposed for the scaling
+    /// bench.
+    pub fn run_tiles(&self, d_hat: &Arc<[i16]>, w_hat: &Arc<[i16]>,
+                     t: usize, o: usize, c: usize, s: [[i32; 4]; 16],
+                     y: &mut [i32]) {
+        let d = Arc::clone(d_hat);
+        let w = Arc::clone(w_hat);
+        self.pool.scatter_ranges(t, o * 4, y, move |a, b| {
+            let mut out = vec![0i32; (b - a) * o * 4];
+            kernel::wino_adder_tiles_range_i8(&d, &w, a, b, o, c, &s,
+                                              &mut out);
+            out
+        });
+    }
+
+    /// Integer forward from an already-quantized input: returns the
+    /// raw i32 accumulators plus output dims (the shape
+    /// `quant::winograd_adder_conv2d_i8` returns).
+    pub fn forward_i8(&self, qx: &QTensor, w_hat_q: &[i16],
+                      w_dims: [usize; 4], pad: usize, variant: Variant)
+                      -> (Vec<i32>, [usize; 4]) {
+        let o = w_dims[0];
+        let c = qx.dims[1];
+        assert_eq!(w_dims[1], c, "channel mismatch");
+        let (d_hat, n, th, tw) = quant::input_tiles_i16(qx, pad, variant);
+        let t = n * th * tw;
+        let s = kernel::output_transform_flat_i32(variant);
+        let d: Arc<[i16]> = d_hat.into();
+        let w: Arc<[i16]> = w_hat_q.to_vec().into();
+        let mut y = vec![0i32; t * o * 4];
+        self.run_tiles(&d, &w, t, o, c, s, &mut y);
+        let out = kernel::untile_i32(&y, n, o, th, tw);
+        (out, [n, o, 2 * th, 2 * tw])
+    }
+}
+
+impl Backend for ParallelInt8Backend {
+    fn name(&self) -> String {
+        format!("parallel-int8[{}t]", self.pool.size())
+    }
+
+    fn forward(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
+               variant: Variant) -> Tensor {
+        let qx = QTensor::from_f32(x);
+        let scale = qx.qp.scale;
+        let wq = quant::quantize_wino_weights(w_hat, scale);
+        let (yi, dims) =
+            self.forward_i8(&qx, &wq, w_hat.dims, pad, variant);
+        Tensor {
+            data: yi.iter().map(|&q| q as f32 * scale).collect(),
+            dims,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The parallel integer path must reproduce the sequential quant
+    /// reference bit-for-bit (integer sums are exact).
+    #[test]
+    fn matches_quant_reference_exactly() {
+        let mut rng = Rng::new(31);
+        let x = Tensor::randn(&mut rng, [1, 4, 6, 6]);
+        let w_hat = Tensor::randn(&mut rng, [3, 4, 4, 4]);
+        let qx = QTensor::from_f32(&x);
+        let wq = quant::quantize_wino_weights(&w_hat, qx.qp.scale);
+        let (want, want_dims, _) = quant::winograd_adder_conv2d_i8(
+            &qx, &wq, w_hat.dims, 1, Variant::Balanced(0));
+        for threads in [1, 3, 8] {
+            let be = ParallelInt8Backend::new(threads);
+            let (got, dims) = be.forward_i8(&qx, &wq, w_hat.dims, 1,
+                                            Variant::Balanced(0));
+            assert_eq!(dims, want_dims);
+            assert_eq!(got, want, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn dequantized_forward_matches_reference_dequant() {
+        let mut rng = Rng::new(32);
+        let x = Tensor::randn(&mut rng, [2, 3, 8, 8]);
+        let w_hat = Tensor::randn(&mut rng, [4, 3, 4, 4]);
+        let qx = QTensor::from_f32(&x);
+        let wq = quant::quantize_wino_weights(&w_hat, qx.qp.scale);
+        let (ref_i, dims, scale) = quant::winograd_adder_conv2d_i8(
+            &qx, &wq, w_hat.dims, 1, Variant::Balanced(1));
+        let be = ParallelInt8Backend::new(4);
+        let got = be.forward(&x, &w_hat, 1, Variant::Balanced(1));
+        assert_eq!(got.dims, dims);
+        let want: Vec<f32> =
+            ref_i.iter().map(|&q| q as f32 * scale).collect();
+        assert_eq!(got.data, want);
+    }
+}

@@ -1,0 +1,159 @@
+//! Multi-threaded CPU serving backends for the Winograd-adder forward
+//! path — the crate's answer to "as fast as the hardware allows" when
+//! no PJRT plugin is linked.
+//!
+//! A [`Backend`] maps `(x, w_hat) -> y` through paper Eq. 9. Three
+//! implementations ship:
+//!
+//! * [`ScalarBackend`] — the single-threaded baseline, delegating to
+//!   [`crate::nn::wino_adder::winograd_adder_conv2d_fast`]; the
+//!   reference the others are property-tested against.
+//! * [`ParallelBackend`] — shards the tile axis over a persistent
+//!   [`pool::ThreadPool`] and runs the cache-blocked, branchless
+//!   [`kernel::wino_adder_tiles_range`] per shard.
+//! * [`ParallelInt8Backend`] — the same sharding over the int8/i32
+//!   fixed-point datapath (`nn::quant`), the paper's 8-bit energy
+//!   regime; outputs are dequantized f32 so the serving API is uniform.
+//!
+//! Selection is wired through `--backend {scalar|parallel|
+//! parallel-int8}` and `--threads N` (see [`BackendKind::from_args`]),
+//! used by `wino-adder serve`, the serving fallback in
+//! `coordinator::server`, and `benches/backend_scaling.rs`.
+
+pub mod kernel;
+pub mod pool;
+
+mod int8;
+mod parallel;
+mod scalar;
+
+pub use int8::ParallelInt8Backend;
+pub use parallel::ParallelBackend;
+pub use scalar::ScalarBackend;
+
+use super::matrices::Variant;
+use super::Tensor;
+use crate::util::cli::Args;
+
+/// A Winograd-adder forward executor.
+///
+/// `Send` (but not necessarily `Sync`): a backend is owned and driven
+/// by one engine thread, which is how `coordinator::server` uses it.
+pub trait Backend: Send {
+    /// Human-readable name (includes thread count where relevant).
+    fn name(&self) -> String;
+
+    /// Forward one layer: `x (N,C,H,W)`, Winograd-domain weights
+    /// `w_hat (O,C,4,4)`, zero padding `pad` -> `(N,O,H',W')` with
+    /// `H' = H + 2*pad - 2` (stride-2 F(2x2,3x3) tiling).
+    fn forward(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
+               variant: Variant) -> Tensor;
+}
+
+/// Backend selector (CLI-facing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Scalar,
+    Parallel,
+    ParallelInt8,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 3] =
+        [BackendKind::Scalar, BackendKind::Parallel,
+         BackendKind::ParallelInt8];
+
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "scalar" => Some(BackendKind::Scalar),
+            "parallel" => Some(BackendKind::Parallel),
+            "parallel-int8" => Some(BackendKind::ParallelInt8),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Scalar => "scalar",
+            BackendKind::Parallel => "parallel",
+            BackendKind::ParallelInt8 => "parallel-int8",
+        }
+    }
+
+    /// Instantiate the backend (`threads` is ignored by `scalar`).
+    pub fn build(self, threads: usize) -> Box<dyn Backend> {
+        match self {
+            BackendKind::Scalar => Box::new(ScalarBackend),
+            BackendKind::Parallel =>
+                Box::new(ParallelBackend::new(threads)),
+            BackendKind::ParallelInt8 =>
+                Box::new(ParallelInt8Backend::new(threads)),
+        }
+    }
+
+    /// Read `--backend NAME` (default `parallel`) and `--threads N`
+    /// (default: all cores) from parsed CLI args. `None` means the
+    /// `--backend` value was not recognised.
+    pub fn from_args(args: &Args) -> Option<(BackendKind, usize)> {
+        let kind = match args.get("backend") {
+            Some(s) => BackendKind::parse(s)?,
+            None => BackendKind::Parallel,
+        };
+        Some((kind, args.get_usize("threads", default_threads())))
+    }
+}
+
+/// Number of hardware threads (1 if unknown).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(BackendKind::parse("pjrt"), None);
+        assert_eq!(BackendKind::parse(""), None);
+    }
+
+    #[test]
+    fn from_args_defaults_to_parallel() {
+        let args = Args::parse(Vec::<String>::new());
+        let (kind, threads) = BackendKind::from_args(&args).unwrap();
+        assert_eq!(kind, BackendKind::Parallel);
+        assert!(threads >= 1);
+    }
+
+    #[test]
+    fn from_args_rejects_unknown() {
+        let args = Args::parse(
+            ["serve", "--backend", "gpu"].map(String::from));
+        assert!(BackendKind::from_args(&args).is_none());
+    }
+
+    #[test]
+    fn from_args_reads_threads() {
+        let args = Args::parse(
+            ["serve", "--backend", "scalar", "--threads", "3"]
+                .map(String::from));
+        assert_eq!(BackendKind::from_args(&args),
+                   Some((BackendKind::Scalar, 3)));
+    }
+
+    #[test]
+    fn build_names_mention_kind() {
+        for kind in BackendKind::ALL {
+            let b = kind.build(2);
+            assert!(b.name().contains(kind.name().split('-').next()
+                                      .unwrap()),
+                    "{} vs {}", b.name(), kind.name());
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! The multi-threaded f32 backend: tile-axis sharding over the thread
+//! pool + the cache-blocked branchless kernel.
+
+use std::sync::Arc;
+
+use super::pool::ThreadPool;
+use super::{kernel, Backend, Variant};
+use crate::nn::matrices;
+use crate::nn::wino_adder;
+use crate::nn::Tensor;
+
+/// Work-stealing-free parallel f32 backend.
+///
+/// `forward` extracts + transforms input tiles once (shared, read-only
+/// behind an `Arc`), splits the tile axis into one near-equal
+/// contiguous range per worker, and runs
+/// [`kernel::wino_adder_tiles_range`] per range. Because the `(T, O,
+/// 4)` output is tile-major, each shard owns a contiguous output slice
+/// — workers return their slice over the result channel and the caller
+/// stitches by `copy_from_slice`, so the whole path is safe code with
+/// zero shared mutable state.
+pub struct ParallelBackend {
+    pool: ThreadPool,
+}
+
+impl ParallelBackend {
+    pub fn new(threads: usize) -> ParallelBackend {
+        ParallelBackend { pool: ThreadPool::new(threads) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// The sharded elementwise stage: `d_hat (T, C, 16)`, `w_hat (O,
+    /// C, 16)` -> `y (T, O, 4)`. Exposed so the scaling bench can
+    /// measure the hot loop without tile extraction in the timing.
+    pub fn run_tiles(&self, d_hat: &Arc<[f32]>, w_hat: &Arc<[f32]>,
+                     t: usize, o: usize, c: usize, s: [[f32; 4]; 16],
+                     y: &mut [f32]) {
+        let d = Arc::clone(d_hat);
+        let w = Arc::clone(w_hat);
+        self.pool.scatter_ranges(t, o * 4, y, move |a, b| {
+            let mut out = vec![0f32; (b - a) * o * 4];
+            kernel::wino_adder_tiles_range(&d, &w, a, b, o, c, &s,
+                                           &mut out);
+            out
+        });
+    }
+}
+
+impl Backend for ParallelBackend {
+    fn name(&self) -> String {
+        format!("parallel[{}t]", self.pool.size())
+    }
+
+    fn forward(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
+               variant: Variant) -> Tensor {
+        let xp = x.pad_same(pad);
+        let c = xp.dims[1];
+        let o = w_hat.dims[0];
+        assert_eq!(w_hat.dims[1], c, "channel mismatch");
+        assert_eq!((w_hat.dims[2], w_hat.dims[3]), (4, 4),
+                   "w_hat must be Winograd-domain (O,C,4,4)");
+        let (d_hat, n, th, tw) = wino_adder::input_tiles(&xp, variant);
+        let t = n * th * tw;
+        let s = matrices::output_transform_flat(variant);
+        let d: Arc<[f32]> = d_hat.into();
+        let w: Arc<[f32]> = w_hat.data.clone().into();
+        let mut y = vec![0f32; t * o * 4];
+        self.run_tiles(&d, &w, t, o, c, s, &mut y);
+        wino_adder::untile(&y, n, o, th, tw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::wino_adder::winograd_adder_conv2d;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::all_close;
+
+    #[test]
+    fn forward_matches_naive_across_thread_counts() {
+        let mut rng = Rng::new(21);
+        let x = Tensor::randn(&mut rng, [2, 5, 8, 8]);
+        let w_hat = Tensor::randn(&mut rng, [3, 5, 4, 4]);
+        let want = winograd_adder_conv2d(&x, &w_hat, 1,
+                                         Variant::Balanced(2));
+        for threads in [1, 2, 5] {
+            let be = ParallelBackend::new(threads);
+            let got = be.forward(&x, &w_hat, 1, Variant::Balanced(2));
+            assert_eq!(got.dims, want.dims);
+            all_close(&got.data, &want.data, 1e-4, 1e-4)
+                .unwrap_or_else(|e| panic!("{threads} threads: {e}"));
+        }
+    }
+
+    #[test]
+    fn more_threads_than_tiles_is_fine() {
+        let mut rng = Rng::new(22);
+        // hw=4, pad=0 -> a single tile; 8 workers, 1 shard
+        let x = Tensor::randn(&mut rng, [1, 2, 4, 4]);
+        let w_hat = Tensor::randn(&mut rng, [2, 2, 4, 4]);
+        let want = winograd_adder_conv2d(&x, &w_hat, 0, Variant::Std);
+        let be = ParallelBackend::new(8);
+        let got = be.forward(&x, &w_hat, 0, Variant::Std);
+        all_close(&got.data, &want.data, 1e-4, 1e-4).unwrap();
+    }
+}

@@ -1,0 +1,224 @@
+//! A small, work-stealing-free thread pool: std::thread + channels,
+//! no external dependencies.
+//!
+//! Design: one mpsc channel per worker, jobs dispatched round-robin by
+//! [`ThreadPool::scatter`]. The backends shard the tile axis into
+//! near-equal contiguous ranges, so round-robin *is* the load balance —
+//! stealing would only add synchronization to the hot path. Workers are
+//! persistent (spawned once per backend, not per forward call) and exit
+//! when their channel disconnects on drop.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Persistent worker pool; see module docs.
+pub struct ThreadPool {
+    senders: Vec<Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `threads` persistent workers (clamped to at least 1).
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let mut senders = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
+            let handle = thread::Builder::new()
+                .name(format!("wino-backend-{i}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                })
+                .expect("spawning backend worker thread");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        ThreadPool { senders, handles }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Run `jobs` across the workers (round-robin) and block until all
+    /// complete; results come back in job order.
+    ///
+    /// Panics if a worker died (i.e. a job panicked), poisoning the
+    /// pool is deliberately not supported — backends treat a panicked
+    /// kernel as a bug, not a recoverable state.
+    pub fn scatter<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let (done_tx, done_rx) = channel::<(usize, T)>();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let tx = done_tx.clone();
+            let wrapped: Job = Box::new(move || {
+                let out = job();
+                let _ = tx.send((i, out));
+            });
+            self.senders[i % self.senders.len()]
+                .send(wrapped)
+                .expect("backend worker channel closed");
+        }
+        drop(done_tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, out) = done_rx
+                .recv()
+                .expect("backend worker panicked mid-job");
+            slots[i] = Some(out);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("duplicate shard result"))
+            .collect()
+    }
+
+    /// Shard `0..n` into one contiguous range per worker, run
+    /// `f(start, end)` per shard (returning the range-local results),
+    /// and stitch them into `y` at `stride` items per index. A single
+    /// shard runs on the calling thread, skipping the channel
+    /// round-trip. This is the shared scatter/stitch spine of the f32
+    /// and int8 backends.
+    pub fn scatter_ranges<T, F>(&self, n: usize, stride: usize,
+                                y: &mut [T], f: F)
+    where
+        T: Copy + Send + 'static,
+        F: Fn(usize, usize) -> Vec<T> + Send + Clone + 'static,
+    {
+        assert_eq!(y.len(), n * stride);
+        let shards = shard_ranges(n, self.size());
+        if shards.len() <= 1 {
+            if n > 0 {
+                let out = f(0, n);
+                y.copy_from_slice(&out);
+            }
+            return;
+        }
+        let jobs: Vec<_> = shards
+            .into_iter()
+            .map(|(a, b)| {
+                let g = f.clone();
+                move || (a, g(a, b))
+            })
+            .collect();
+        for (a, chunk) in self.scatter(jobs) {
+            y[a * stride..a * stride + chunk.len()]
+                .copy_from_slice(&chunk);
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // disconnect every worker's channel, then reap the threads
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Split `0..n` into up to `parts` contiguous near-equal ranges
+/// (sizes differ by at most 1; empty ranges are omitted).
+pub fn shard_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.max(1);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::new();
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        if len == 0 {
+            continue;
+        }
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scatter_returns_in_job_order() {
+        let pool = ThreadPool::new(4);
+        let jobs: Vec<_> = (0..32usize)
+            .map(|i| move || i * i)
+            .collect();
+        let got = pool.scatter(jobs);
+        let want: Vec<usize> = (0..32).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_calls() {
+        let pool = ThreadPool::new(2);
+        for round in 0..5usize {
+            let jobs: Vec<_> = (0..3).map(|i| move || round + i).collect();
+            assert_eq!(pool.scatter(jobs), vec![round, round + 1, round + 2]);
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.size(), 1);
+        assert_eq!(pool.scatter(vec![|| 7u32]), vec![7]);
+    }
+
+    #[test]
+    fn zero_requested_threads_clamps_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+    }
+
+    #[test]
+    fn scatter_ranges_stitches_in_order() {
+        let pool = ThreadPool::new(3);
+        for n in [0usize, 1, 2, 7, 64] {
+            let stride = 4;
+            let mut y = vec![0usize; n * stride];
+            pool.scatter_ranges(n, stride, &mut y, move |a, b| {
+                (a * stride..b * stride).collect()
+            });
+            let want: Vec<usize> = (0..n * stride).collect();
+            assert_eq!(y, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly() {
+        for n in [0usize, 1, 2, 7, 16, 255, 256, 1000] {
+            for parts in [1usize, 2, 3, 4, 8, 300] {
+                let shards = shard_ranges(n, parts);
+                let mut expect = 0;
+                for &(a, b) in &shards {
+                    assert_eq!(a, expect, "contiguous");
+                    assert!(b > a, "non-empty");
+                    expect = b;
+                }
+                assert_eq!(expect, n, "covers 0..{n} with {parts} parts");
+                assert!(shards.len() <= parts.max(1));
+                if !shards.is_empty() {
+                    let sizes: Vec<usize> =
+                        shards.iter().map(|&(a, b)| b - a).collect();
+                    let max = *sizes.iter().max().unwrap();
+                    let min = *sizes.iter().min().unwrap();
+                    assert!(max - min <= 1, "balanced: {sizes:?}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Single-threaded baseline backend.
+
+use super::{Backend, Variant};
+use crate::nn::wino_adder;
+use crate::nn::Tensor;
+
+/// Delegates to the scalar hot path
+/// [`wino_adder::winograd_adder_conv2d_fast`]; the reference
+/// implementation the parallel backends are benchmarked and
+/// property-tested against.
+pub struct ScalarBackend;
+
+impl Backend for ScalarBackend {
+    fn name(&self) -> String {
+        "scalar".to_string()
+    }
+
+    fn forward(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
+               variant: Variant) -> Tensor {
+        wino_adder::winograd_adder_conv2d_fast(x, w_hat, pad, variant)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::wino_adder::winograd_adder_conv2d;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::all_close;
+
+    #[test]
+    fn matches_naive_oracle() {
+        let mut rng = Rng::new(11);
+        let x = Tensor::randn(&mut rng, [1, 3, 6, 6]);
+        let w_hat = Tensor::randn(&mut rng, [2, 3, 4, 4]);
+        let want = winograd_adder_conv2d(&x, &w_hat, 1,
+                                         Variant::Balanced(0));
+        let got = ScalarBackend.forward(&x, &w_hat, 1,
+                                        Variant::Balanced(0));
+        assert_eq!(got.dims, want.dims);
+        all_close(&got.data, &want.data, 1e-4, 1e-4).unwrap();
+    }
+}

@@ -6,10 +6,12 @@
 //!    implementations of the paper's math).
 //! 2. **The int8 fixed-point path** — the paper's energy story (Fig. 1,
 //!    Table 2) is about 8-bit arithmetic; [`quant`] implements it.
-//! 3. **Optimized hot path** — the serving fallback and the native
-//!    benches iterate on these (EXPERIMENTS.md §Perf).
+//! 3. **Optimized hot path** — the serving fallback runs on
+//!    [`backend`]'s multi-threaded CPU backends; the native benches
+//!    iterate on these (EXPERIMENTS.md §Perf).
 
 pub mod adder;
+pub mod backend;
 pub mod conv;
 pub mod matrices;
 pub mod quant;

@@ -64,7 +64,7 @@ impl QTensor {
     }
 
     #[inline]
-    fn at(&self, n: usize, c: usize, h: usize, w: usize) -> i8 {
+    pub fn at(&self, n: usize, c: usize, h: usize, w: usize) -> i8 {
         let [_, cc, hh, ww] = self.dims;
         self.data[((n * cc + c) * hh + h) * ww + w]
     }
@@ -227,6 +227,73 @@ pub fn winograd_adder_conv2d_i8(x: &QTensor, w_hat_q: &[i16],
     (out, [n, o, 2 * th, 2 * tw], x.qp.scale)
 }
 
+/// Extract + integer-transform all tiles of a quantized input with
+/// implicit zero padding: returns `d_hat` as `(T, C, 16)` i16 (10-bit
+/// values on the FPGA's widened datapath) plus `(n, th, tw)` — the
+/// int8 twin of `wino_adder::input_tiles`, bit-exact vs the fused
+/// transform inside [`winograd_adder_conv2d_i8`]. Factored out so
+/// `nn::backend` can shard the elementwise stage across threads.
+pub fn input_tiles_i16(x: &QTensor, pad: usize, variant: Variant)
+                       -> (Vec<i16>, usize, usize, usize) {
+    let [n, c, h, wd] = x.dims;
+    let (hp, wp) = (h + 2 * pad, wd + 2 * pad);
+    assert!(hp >= 4 && wp >= 4 && (hp - 2) % 2 == 0 && (wp - 2) % 2 == 0,
+            "padded H, W must be even and >= 4");
+    let (th, tw) = ((hp - 2) / 2, (wp - 2) / 2);
+    let t = n * th * tw;
+    let bm = matrices::b(variant);
+    let get = |in_: usize, ic: usize, i: isize, j: isize| -> i32 {
+        let (i, j) = (i - pad as isize, j - pad as isize);
+        if i < 0 || j < 0 || i >= h as isize || j >= wd as isize {
+            0
+        } else {
+            x.at(in_, ic, i as usize, j as usize) as i32
+        }
+    };
+    let mut out = vec![0i16; t * c * 16];
+    let mut d = [0i32; 16];
+    for in_ in 0..n {
+        for ti in 0..th {
+            for tj in 0..tw {
+                let trow = (in_ * th + ti) * tw + tj;
+                for ic in 0..c {
+                    for ki in 0..4 {
+                        for kj in 0..4 {
+                            d[ki * 4 + kj] = get(
+                                in_, ic,
+                                (2 * ti + ki) as isize,
+                                (2 * tj + kj) as isize);
+                        }
+                    }
+                    // integer B^T d B (B entries are 0/±1 -> exact)
+                    let mut tmp = [0i32; 16];
+                    for i in 0..4 {
+                        for j in 0..4 {
+                            let mut s = 0i32;
+                            for kk in 0..4 {
+                                s += (bm[kk][i] as i32) * d[kk * 4 + j];
+                            }
+                            tmp[i * 4 + j] = s;
+                        }
+                    }
+                    let base = (trow * c + ic) * 16;
+                    for i in 0..4 {
+                        for j in 0..4 {
+                            let mut s = 0i32;
+                            for l in 0..4 {
+                                s += tmp[i * 4 + l] * (bm[l][j] as i32);
+                            }
+                            // fits in 10 bits
+                            out[base + i * 4 + j] = s as i16;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, n, th, tw)
+}
+
 /// Quantize Winograd-domain f32 weights to i16 on the activation scale
 /// (transform-domain weights exceed int8 range for the std G due to the
 /// 1/2 rows; i16 keeps the comparison exact on FPGA-width datapaths).
@@ -317,6 +384,32 @@ mod tests {
         for (q, f) in qy.iter().zip(&want.data) {
             let got_f = *q as f32 * scale;
             assert!((got_f - f).abs() < tol, "{got_f} vs {f} (tol {tol})");
+        }
+    }
+
+    #[test]
+    fn integer_tiles_match_f32_tiles_on_integer_data() {
+        // with scale 1 and integral values, the integer B^T d B must
+        // equal the f32 transform exactly (all ops are exact)
+        let mut rng = Rng::new(12);
+        let dims = [2usize, 3, 6, 6];
+        let data: Vec<i8> = (0..dims.iter().product::<usize>())
+            .map(|_| (rng.below(255) as i32 - 127) as i8)
+            .collect();
+        let qx = QTensor {
+            data: data.clone(),
+            dims,
+            qp: QParams { scale: 1.0 },
+        };
+        let (ti16, n, th, tw) =
+            input_tiles_i16(&qx, 1, Variant::Balanced(0));
+        let xf = qx.to_f32();
+        let (tf32, n2, th2, tw2) = wino_adder::input_tiles(
+            &xf.pad_same(1), Variant::Balanced(0));
+        assert_eq!((n, th, tw), (n2, th2, tw2));
+        assert_eq!(ti16.len(), tf32.len());
+        for (a, b) in ti16.iter().zip(&tf32) {
+            assert_eq!(*a as f32, *b);
         }
     }
 

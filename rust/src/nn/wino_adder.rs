@@ -62,8 +62,10 @@ pub fn transform_weights(w: &Tensor, variant: Variant) -> Vec<f32> {
     out
 }
 
-/// Scatter `(T, O, 4)` output patches back to `(N, O, 2*th, 2*tw)`.
-fn untile(y: &[f32], n: usize, o: usize, th: usize, tw: usize) -> Tensor {
+/// Scatter `(T, O, 4)` output patches back to `(N, O, 2*th, 2*tw)`
+/// (public so `nn::backend` can reuse the exact same layout).
+pub fn untile(y: &[f32], n: usize, o: usize, th: usize, tw: usize)
+              -> Tensor {
     let mut out = Tensor::zeros([n, o, 2 * th, 2 * tw]);
     for in_ in 0..n {
         for ti in 0..th {

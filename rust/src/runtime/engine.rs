@@ -9,7 +9,7 @@
 //! Layer:
 //!   inputs  = [x, w]               outputs = (y,)
 
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 use std::path::Path;
 
 use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
@@ -70,30 +70,31 @@ impl Engine {
     }
 }
 
-/// f32 literal from a slice + shape.
+/// f32 literal from a slice + shape (safe little-endian serialization;
+/// XLA literals are little-endian on every supported host).
 pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
     let numel: usize = shape.iter().product();
     if numel != data.len() {
         return Err(anyhow!("literal: {} values for shape {shape:?}",
                            data.len()));
     }
-    let bytes: &[u8] = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8,
-                                   data.len() * 4)
-    };
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
     Literal::create_from_shape_and_untyped_data(ElementType::F32, shape,
-                                                bytes)
+                                                &bytes)
         .map_err(|e| anyhow!("creating f32 literal: {e}"))
 }
 
-/// i32 literal from a slice + shape.
+/// i32 literal from a slice + shape (safe little-endian serialization).
 pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
-    let bytes: &[u8] = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8,
-                                   data.len() * 4)
-    };
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
     Literal::create_from_shape_and_untyped_data(ElementType::S32, shape,
-                                                bytes)
+                                                &bytes)
         .map_err(|e| anyhow!("creating i32 literal: {e}"))
 }
 

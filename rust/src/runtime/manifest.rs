@@ -1,6 +1,6 @@
 //! `artifacts/manifest.json` schema + loader.
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 

@@ -1,6 +1,11 @@
 //! Tiny flag parser for the `wino-adder` binary (offline clap stand-in).
 //!
 //! Grammar: `wino-adder <subcommand> [--flag value | --switch] ...`.
+//!
+//! Backend selection convention (shared by `serve`, `tsne`, and the
+//! scaling bench): `--backend scalar|parallel|parallel-int8` plus
+//! `--threads N`, parsed into a typed selector by
+//! [`crate::nn::backend::BackendKind::from_args`].
 
 use std::collections::BTreeMap;
 
@@ -51,6 +56,10 @@ impl Args {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
@@ -74,6 +83,8 @@ mod tests {
         assert_eq!(a.subcommand.as_deref(), Some("train"));
         assert_eq!(a.get("steps"), Some("100"));
         assert_eq!(a.get_usize("steps", 0), 100);
+        assert_eq!(a.get_u64("steps", 0), 100);
+        assert_eq!(a.get_u64("missing", 9), 9);
         assert_eq!(a.get("preset"), Some("mnist"));
         assert!(a.has("verbose"));
         assert!(!a.has("quiet"));

@@ -1,0 +1,207 @@
+//! Zero-dependency error handling — the offline stand-in for `anyhow`.
+//!
+//! The default build must compile with no registry access, so the crate
+//! carries its own minimal `anyhow` surface: an opaque [`Error`] with
+//! context chaining, the [`anyhow!`]/[`bail!`]/[`ensure!`] macros, a
+//! [`Context`] extension trait, and a [`Result`] alias. Semantics match
+//! the subset of `anyhow` this codebase used before the dependency was
+//! dropped (PR 1): contexts display outermost-first, separated by ": ".
+//!
+//! [`anyhow!`]: crate::anyhow
+//! [`bail!`]: crate::bail
+//! [`ensure!`]: crate::ensure
+
+use std::fmt;
+
+/// Opaque error: a message plus outermost-first context frames.
+///
+/// Like `anyhow::Error`, this deliberately does **not** implement
+/// `std::error::Error`, so the blanket `From<E: std::error::Error>`
+/// impl (which makes `?` work on `io::Error` etc.) stays coherent.
+pub struct Error {
+    /// context frames, outermost first, then the root message last
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Push an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, ctx: C) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The root (innermost) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// Debug delegates to Display so `{e:?}` and `unwrap()` read naturally.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+/// `?` conversion from any std error (io, fmt, join errors, ...).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result alias (drop-in for `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context()` / `.with_context()` to results
+/// and options, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+                                                       -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(
+            ::std::fmt::format(::std::format_args!($msg)))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(
+            ::std::fmt::format(::std::format_args!($fmt, $($arg)*)))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+// Make `use crate::util::error::{anyhow, bail, ensure}` work like the
+// old `use anyhow::{anyhow, bail, ensure}` imports.
+pub use crate::{anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("root {}", 42)
+    }
+
+    #[test]
+    fn macro_forms() {
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let e = anyhow!("fmt {} {x}", 1, x = 2);
+        assert_eq!(format!("{e}"), "fmt 1 2");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(format!("{e}"), "owned");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        assert_eq!(format!("{}", fails().unwrap_err()), "root 42");
+        let check = |v: usize| -> Result<usize> {
+            ensure!(v < 10, "v too big: {v}");
+            Ok(v)
+        };
+        assert!(check(5).is_ok());
+        assert_eq!(format!("{}", check(11).unwrap_err()), "v too big: 11");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: std::result::Result<(), std::fmt::Error> =
+            Err(std::fmt::Error);
+        let e = r
+            .context("inner op")
+            .map_err(|e| e.context("outer op"))
+            .unwrap_err();
+        assert_eq!(format!("{e}"),
+                   "outer op: inner op: an error occurred when formatting \
+                    an argument");
+        assert_eq!(e.root_cause(),
+                   "an error occurred when formatting an argument");
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        fn read_missing() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        let e = read_missing().unwrap_err();
+        assert!(!format!("{e}").is_empty());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(format!("{e}"), "missing field");
+        assert_eq!(Some(3u8).with_context(|| "never").unwrap(), 3);
+    }
+
+    #[test]
+    fn debug_is_display() {
+        let e = anyhow!("shown");
+        assert_eq!(format!("{e:?}"), "shown");
+    }
+}

@@ -3,7 +3,7 @@
 //! Format: raw little-endian scalars, no header; shapes come from
 //! `manifest.json`. f32 for parameters/features, i32 for labels.
 
-use anyhow::{bail, Context, Result};
+use super::error::{bail, Context, Result};
 use std::path::Path;
 
 /// Read a little-endian f32 file.

@@ -1,11 +1,13 @@
 //! Offline-environment substitutes for common ecosystem crates.
 //!
-//! The build environment ships only the `xla` crate closure, so this
+//! The default build ships with **zero** external dependencies, so this
 //! module provides the small pieces we would otherwise pull in:
 //! [`json`] (serde_json), [`cli`] (clap), [`testkit`] (proptest),
-//! [`rng`] (rand), and [`io`] (raw tensor file I/O).
+//! [`rng`] (rand), [`io`] (raw tensor file I/O), and [`error`]
+//! (anyhow: `Error`, `Result`, `anyhow!`/`bail!`/`ensure!`, `Context`).
 
 pub mod cli;
+pub mod error;
 pub mod io;
 pub mod json;
 pub mod rng;

@@ -1,0 +1,142 @@
+//! Property tests for the `nn::backend` serving backends: every
+//! backend must agree with the naive oracles for random shapes,
+//! variants, and thread counts (1, 2, and 8 — fewer shards than
+//! threads, equal, and more).
+
+use wino_adder::nn::backend::{
+    Backend, BackendKind, ParallelBackend, ParallelInt8Backend,
+    ScalarBackend,
+};
+use wino_adder::nn::matrices::Variant;
+use wino_adder::nn::quant::{
+    quantize_wino_weights, winograd_adder_conv2d_i8, QTensor,
+};
+use wino_adder::nn::wino_adder::winograd_adder_conv2d;
+use wino_adder::nn::Tensor;
+use wino_adder::util::rng::Rng;
+use wino_adder::util::testkit::{all_close, property};
+
+fn random_case(g: &mut wino_adder::util::testkit::Gen)
+               -> (Tensor, Tensor, Variant) {
+    let n = g.usize_in(1, 2);
+    let c = g.usize_in(1, 8);
+    let hw = 2 * g.usize_in(2, 6);
+    let o = g.usize_in(1, 8);
+    let seed = g.usize_in(0, 1 << 30) as u64;
+    let mut rng = Rng::new(seed);
+    let x = Tensor::randn(&mut rng, [n, c, hw, hw]);
+    let w_hat = Tensor::randn(&mut rng, [o, c, 4, 4]);
+    let v = *g.choose(&[Variant::Std, Variant::Balanced(0),
+                        Variant::Balanced(1), Variant::Balanced(2),
+                        Variant::Balanced(3)]);
+    (x, w_hat, v)
+}
+
+/// `Parallel` must match the naive `winograd_adder_conv2d` oracle
+/// within 1e-4 for random shapes across 1, 2, and 8 threads.
+#[test]
+fn parallel_matches_naive_oracle_property() {
+    for threads in [1usize, 2, 8] {
+        let be = ParallelBackend::new(threads);
+        property(12, |g| {
+            let (x, w_hat, v) = random_case(g);
+            let want = winograd_adder_conv2d(&x, &w_hat, 1, v);
+            let got = be.forward(&x, &w_hat, 1, v);
+            if got.dims != want.dims {
+                return Err(format!("dims {:?} vs {:?}", got.dims,
+                                   want.dims));
+            }
+            all_close(&got.data, &want.data, 1e-4, 1e-4)
+                .map_err(|e| format!("{threads} threads: {e}"))
+        });
+    }
+}
+
+/// `ParallelInt8` must match `quant`'s existing int8 reference
+/// (`winograd_adder_conv2d_i8`) exactly — integer sums are exact, so
+/// parallel sharding must not change a single accumulator.
+#[test]
+fn parallel_int8_matches_quant_reference_property() {
+    for threads in [1usize, 2, 8] {
+        let be = ParallelInt8Backend::new(threads);
+        property(12, |g| {
+            let (x, w_hat, v) = random_case(g);
+            let qx = QTensor::from_f32(&x);
+            let wq = quantize_wino_weights(&w_hat, qx.qp.scale);
+            let (want_i, want_dims, scale) =
+                winograd_adder_conv2d_i8(&qx, &wq, w_hat.dims, 1, v);
+            let (got_i, dims) =
+                be.forward_i8(&qx, &wq, w_hat.dims, 1, v);
+            if dims != want_dims {
+                return Err(format!("dims {dims:?} vs {want_dims:?}"));
+            }
+            if got_i != want_i {
+                let bad = got_i.iter().zip(&want_i)
+                    .position(|(a, b)| a != b);
+                return Err(format!(
+                    "{threads} threads: int mismatch at {bad:?}"));
+            }
+            // the Backend-trait f32 view dequantizes identically
+            let got_f = be.forward(&x, &w_hat, 1, v);
+            let want_f: Vec<f32> =
+                want_i.iter().map(|&q| q as f32 * scale).collect();
+            if got_f.data != want_f {
+                return Err("dequantized view diverged".into());
+            }
+            Ok(())
+        });
+    }
+}
+
+/// The scalar backend is literally the fast kernel; pin it to the
+/// naive oracle too so backend selection can never change semantics.
+#[test]
+fn scalar_matches_naive_oracle_property() {
+    let be = ScalarBackend;
+    property(15, |g| {
+        let (x, w_hat, v) = random_case(g);
+        let want = winograd_adder_conv2d(&x, &w_hat, 1, v);
+        let got = be.forward(&x, &w_hat, 1, v);
+        all_close(&got.data, &want.data, 1e-4, 1e-4)
+    });
+}
+
+/// All three kinds constructed through the CLI-facing selector agree
+/// with each other (int8 within its quantization-noise bound).
+#[test]
+fn backend_kinds_agree_through_selector() {
+    let mut rng = Rng::new(99);
+    let x = Tensor::randn(&mut rng, [1, 6, 10, 10]);
+    let w_hat = Tensor::randn(&mut rng, [4, 6, 4, 4]);
+    let outs: Vec<Tensor> = BackendKind::ALL
+        .iter()
+        .map(|k| k.build(3).forward(&x, &w_hat, 1, Variant::Balanced(0)))
+        .collect();
+    assert_eq!(outs[0].dims, outs[1].dims);
+    assert_eq!(outs[0].dims, outs[2].dims);
+    all_close(&outs[0].data, &outs[1].data, 1e-4, 1e-4).unwrap();
+    // int8: bounded by propagated quantization noise (see quant tests)
+    let scale = x.data.iter().chain(&w_hat.data)
+        .fold(0f32, |m, &v| m.max(v.abs())) / 127.0;
+    let tol = 300.0 * scale;
+    for (a, b) in outs[0].data.iter().zip(&outs[2].data) {
+        assert!((a - b).abs() < tol, "{a} vs {b} (tol {tol})");
+    }
+}
+
+/// Thread count is a pure performance knob: identical bits out for the
+/// f32 backend regardless of sharding, on a fixed case.
+#[test]
+fn thread_count_does_not_change_f32_results() {
+    let mut rng = Rng::new(123);
+    let x = Tensor::randn(&mut rng, [2, 7, 12, 12]);
+    let w_hat = Tensor::randn(&mut rng, [5, 7, 4, 4]);
+    let base =
+        ParallelBackend::new(1).forward(&x, &w_hat, 1, Variant::Std);
+    for threads in [2usize, 3, 8] {
+        let got = ParallelBackend::new(threads)
+            .forward(&x, &w_hat, 1, Variant::Std);
+        assert_eq!(got.data, base.data,
+                   "sharding changed f32 bits at {threads} threads");
+    }
+}

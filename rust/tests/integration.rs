@@ -1,7 +1,9 @@
 //! Integration tests: rust PJRT path vs Python-pinned golden values.
 //!
-//! These run only when `artifacts/` has been built (`make artifacts`);
+//! These need the `pjrt` feature (the whole file is a no-op otherwise)
+//! and run only when `artifacts/` has been built (`make artifacts`);
 //! otherwise they skip so `cargo test` stays green on a fresh checkout.
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 

@@ -1,0 +1,282 @@
+//! Offline API stub of the `xla` crate (PJRT bindings).
+//!
+//! The build container has no network and no prebuilt PJRT plugin, so
+//! this vendored crate mirrors exactly the API surface that
+//! `wino_adder::runtime::engine` consumes, letting the `pjrt` feature
+//! type-check (and the host-side `Literal` plumbing actually run)
+//! without libxla. Client construction and HLO compilation return
+//! [`Error::Unavailable`] at runtime.
+//!
+//! To execute real artifacts, replace this path dependency with the
+//! real `xla` crate in `rust/Cargo.toml` (same API) — no source change
+//! in `wino_adder` is required.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: either a host-side literal error or "PJRT not linked".
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(&'static str),
+    Literal(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: built against the vendored xla API stub; link \
+                 the real `xla` crate (rust/Cargo.toml) for PJRT execution"
+            ),
+            Error::Literal(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes used by the wino-adder artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn byte_width(&self) -> usize {
+        4
+    }
+}
+
+/// Scalar types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn to_le(self) -> [u8; 4];
+    fn from_le(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_le(bytes: [u8; 4]) -> Self {
+        f32::from_le_bytes(bytes)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_le(bytes: [u8; 4]) -> Self {
+        i32::from_le_bytes(bytes)
+    }
+}
+
+/// Host-side tensor value. Fully functional in the stub (the engine's
+/// literal round-trip tests exercise it); only device transfer needs
+/// the real crate.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let numel: usize = dims.iter().product();
+        if numel * ty.byte_width() != data.len() {
+            return Err(Error::Literal(format!(
+                "shape {dims:?} needs {} bytes, got {}",
+                numel * ty.byte_width(),
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.to_vec(),
+            bytes: data.to_vec(),
+            tuple: None,
+        })
+    }
+
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal {
+            ty: T::TY,
+            dims: Vec::new(),
+            bytes: v.to_le().to_vec(),
+            tuple: None,
+        }
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(Error::Literal(format!(
+                "dtype mismatch: literal is {:?}",
+                self.ty
+            )));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error::Literal("empty literal".into()))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        self.tuple
+            .ok_or_else(|| Error::Literal("literal is not a tuple".into()))
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        let mut t = self.to_tuple()?;
+        if t.len() != 1 {
+            return Err(Error::Literal(format!("tuple arity {}", t.len())));
+        }
+        Ok(t.pop().unwrap())
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        let mut t = self.to_tuple()?;
+        if t.len() != 2 {
+            return Err(Error::Literal(format!("tuple arity {}", t.len())));
+        }
+        let b = t.pop().unwrap();
+        let a = t.pop().unwrap();
+        Ok((a, b))
+    }
+}
+
+/// Parsed HLO module text (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error::Literal(format!("{e}")))?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+/// An XLA computation (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _proto: proto.clone() }
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] fails in the stub.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L])
+                                       -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> =
+            data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let l = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), data);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32, &[2], &[0u8; 4]).is_err());
+    }
+
+    #[test]
+    fn client_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err}").contains("stub"));
+    }
+
+    #[test]
+    fn dtype_checked() {
+        let l = Literal::scalar(1.5f32);
+        assert!(l.to_vec::<i32>().is_err());
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.5]);
+    }
+}
