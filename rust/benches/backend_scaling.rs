@@ -7,22 +7,36 @@
 //! full forward path against the naive `winograd_adder_conv2d` oracle
 //! (must agree within 1e-4; the run aborts otherwise).
 //!
+//! Finishes with a **multi-layer serving sweep** (model depth x engine
+//! threads) through the planned executor (`Server::start_native` with
+//! a `ModelSpec::stack`), writing requests/sec and p50/p99 latency
+//! (from `coordinator::metrics` via `ServerStats`) to
+//! `BENCH_serving.json`.
+//!
 //! Run: `cargo bench --bench backend_scaling`
-//! Flags (after `--`): `--t N --c N --o N` to change the shape.
+//! Flags (after `--`): `--t N --c N --o N` to change the hot-stage
+//! shape; `--serve-requests N` (default 96) for the serving sweep.
 
 #[path = "benchkit.rs"]
 mod benchkit;
 use benchkit::bench;
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Instant;
 
+use wino_adder::coordinator::batcher::BatchPolicy;
+use wino_adder::coordinator::server::{NativeConfig, Server};
 use wino_adder::nn::backend::{default_threads, kernel, Backend,
-                              ParallelBackend, ParallelInt8Backend};
+                              BackendKind, ParallelBackend,
+                              ParallelInt8Backend};
 use wino_adder::nn::matrices::{self, Variant};
+use wino_adder::nn::model::ModelSpec;
 use wino_adder::nn::wino_adder::{winograd_adder_conv2d,
                                  wino_adder_tiles};
 use wino_adder::nn::Tensor;
 use wino_adder::util::cli::Args;
+use wino_adder::util::json::Json;
 use wino_adder::util::rng::Rng;
 use wino_adder::util::testkit::all_close;
 
@@ -134,4 +148,94 @@ fn main() {
         println!("\nacceptance: parallel[4t] speedup vs scalar = \
                   {speedup_at_4:.2}x (target >= 3x on 4 cores)");
     }
+
+    serving_sweep(&args, cores);
+}
+
+/// Depth x threads serving sweep through the planned executor; writes
+/// `BENCH_serving.json` with requests/sec and p50/p99 latency.
+fn serving_sweep(args: &Args, cores: usize) {
+    let requests = args.get_usize("serve-requests", 96);
+    let clients = 4usize;
+    let (cin, cout, hw) = (8usize, 8usize, 16usize);
+    let variant = Variant::Balanced(0);
+    let depths = [1usize, 3, 6];
+    let mut threads_sweep = vec![1usize];
+    if cores > 1 {
+        threads_sweep.push(cores);
+    }
+    println!("\n--- multi-layer serving sweep (depth x threads, \
+              {cin}->{cout} ch at {hw}x{hw}, {requests} requests) ---");
+    let mut rows = Vec::new();
+    for &depth in &depths {
+        for &threads in &threads_sweep {
+            let cfg = NativeConfig {
+                backend: BackendKind::Parallel,
+                threads,
+                cin,
+                cout,
+                hw,
+                variant,
+                seed: 7,
+                model: Some(ModelSpec::stack(depth, cin, cout, hw,
+                                             variant)),
+            };
+            let sample = cfg.sample_len();
+            let policy = BatchPolicy { buckets: vec![1, 4, 16],
+                                       max_wait_us: 500 };
+            let (handle, join) =
+                Server::start_native(cfg, policy).expect("server");
+            let t0 = Instant::now();
+            let mut workers = Vec::new();
+            for c in 0..clients {
+                let h = handle.clone();
+                let mut crng = Rng::new(c as u64);
+                let xs: Vec<Vec<f32>> = (0..requests / clients)
+                    .map(|_| crng.normal_vec(sample))
+                    .collect();
+                workers.push(std::thread::spawn(move || {
+                    for x in xs {
+                        h.infer(x).expect("infer");
+                    }
+                }));
+            }
+            for w in workers {
+                w.join().expect("client thread");
+            }
+            let elapsed = t0.elapsed().as_secs_f64();
+            let stats = handle.stop().expect("stats");
+            join.join().expect("engine thread");
+            let rps = stats.served as f64 / elapsed;
+            println!("  depth {depth} x {threads}t: {rps:7.0} req/s, \
+                      p50 {}us, p99 {}us, {} batches",
+                     stats.p50_us, stats.p99_us, stats.batches);
+            let mut row = BTreeMap::new();
+            row.insert("depth".into(), Json::Num(depth as f64));
+            row.insert("threads".into(), Json::Num(threads as f64));
+            row.insert("requests".into(),
+                       Json::Num(stats.served as f64));
+            row.insert("batches".into(),
+                       Json::Num(stats.batches as f64));
+            row.insert("req_per_s".into(), Json::Num(rps));
+            row.insert("p50_us".into(),
+                       Json::Num(stats.p50_us as f64));
+            row.insert("p99_us".into(),
+                       Json::Num(stats.p99_us as f64));
+            rows.push(Json::Obj(row));
+        }
+    }
+    let mut shape = BTreeMap::new();
+    shape.insert("cin".into(), Json::Num(cin as f64));
+    shape.insert("cout".into(), Json::Num(cout as f64));
+    shape.insert("hw".into(), Json::Num(hw as f64));
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(),
+                Json::Str("serving_depth_sweep".into()));
+    root.insert("backend".into(), Json::Str("parallel".into()));
+    root.insert("host_cores".into(), Json::Num(cores as f64));
+    root.insert("shape".into(), Json::Obj(shape));
+    root.insert("sweep".into(), Json::Arr(rows));
+    std::fs::write("BENCH_serving.json", Json::Obj(root).dump())
+        .expect("writing BENCH_serving.json");
+    println!("wrote BENCH_serving.json");
 }

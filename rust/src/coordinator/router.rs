@@ -18,6 +18,9 @@ pub struct Lane {
     pub bucket: usize,
     pub in_flight: u64,
     pub completed: u64,
+    /// individual requests served (`completed * bucket` — lanes are
+    /// bucket-affine, every completed batch carries `bucket` samples)
+    pub samples: u64,
 }
 
 /// Least-loaded router over bucket-affine lanes.
@@ -34,7 +37,9 @@ impl Router {
     /// Register a lane serving a bucket; returns the lane id.
     pub fn add_lane(&mut self, bucket: usize) -> usize {
         let id = self.lanes.len();
-        self.lanes.push(Lane { id, bucket, in_flight: 0, completed: 0 });
+        self.lanes.push(Lane {
+            id, bucket, in_flight: 0, completed: 0, samples: 0,
+        });
         id
     }
 
@@ -53,12 +58,14 @@ impl Router {
         Some(lane.id)
     }
 
-    /// Mark a routed batch finished.
+    /// Mark a routed batch finished (the batch size equals the lane's
+    /// bucket — bucket affinity is a routing invariant).
     pub fn complete(&mut self, lane_id: usize) {
         let lane = &mut self.lanes[lane_id];
         assert!(lane.in_flight > 0, "complete without route");
         lane.in_flight -= 1;
         lane.completed += 1;
+        lane.samples += lane.bucket as u64;
     }
 
     /// Buckets with at least one lane, ascending.
@@ -76,11 +83,21 @@ impl Router {
     }
 }
 
-/// Per-bucket lane stats for reports.
+/// Per-bucket **batch** counts for reports.
 pub fn per_bucket_completed(router: &Router) -> BTreeMap<usize, u64> {
     let mut out = BTreeMap::new();
     for l in router.lanes() {
         *out.entry(l.bucket).or_insert(0) += l.completed;
+    }
+    out
+}
+
+/// Per-bucket **request** (sample) counts — the real traffic split the
+/// server reports in `ServerStats::per_bucket_requests`.
+pub fn per_bucket_samples(router: &Router) -> BTreeMap<usize, u64> {
+    let mut out = BTreeMap::new();
+    for l in router.lanes() {
+        *out.entry(l.bucket).or_insert(0) += l.samples;
     }
     out
 }
@@ -153,6 +170,16 @@ mod tests {
             if r.total_completed() != n as u64 {
                 return Err(format!("conservation: {} vs {n}",
                                    r.total_completed()));
+            }
+            // sample conservation: every routed request is counted
+            // once in per-bucket samples
+            let by_samples: u64 =
+                per_bucket_samples(&r).values().sum();
+            let routed: u64 = r.lanes().iter()
+                .map(|l| l.completed * l.bucket as u64).sum();
+            if by_samples != routed {
+                return Err(format!("sample accounting: {by_samples} \
+                                    vs {routed}"));
             }
             // balance: replicas of bucket 4 within a factor given random
             // completion, bound loosely

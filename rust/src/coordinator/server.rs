@@ -24,9 +24,9 @@ use super::metrics::LatencyStats;
 use super::router::Router;
 use crate::nn::backend::{default_threads, Backend, BackendKind};
 use crate::nn::matrices::Variant;
-use crate::nn::Tensor;
-use crate::util::error::{anyhow, ensure, Result};
-use crate::util::rng::Rng;
+use crate::nn::model::{ModelSpec, ModelWeights};
+use crate::nn::plan::ModelPlan;
+use crate::util::error::{anyhow, Context, Result};
 
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, LayerExec, Manifest};
@@ -53,7 +53,11 @@ enum Msg {
 pub struct ServerStats {
     pub served: u64,
     pub batches: u64,
+    /// per-bucket **batch** counts (router lane completions)
     pub per_bucket: Vec<(usize, u64)>,
+    /// per-bucket **request** counts — the real traffic split
+    /// (sums to `served`)
+    pub per_bucket_requests: Vec<(usize, u64)>,
     pub latency_summary: String,
     pub p50_us: u64,
     pub p99_us: u64,
@@ -98,9 +102,11 @@ impl ServerHandle {
 }
 
 /// Configuration of the rust-native serving engine: which backend runs
-/// the Winograd-adder layer, and the layer's shape. Weights are
-/// synthetic (seeded) — the demo serves the paper's FPGA benchmark
-/// layer (16 -> 16 channels at 28x28) by default.
+/// the model, and what model. `model: None` serves the classic
+/// single-Winograd-adder-layer demo built from `cin`/`cout`/`hw`
+/// (the paper's FPGA benchmark layer, 16 -> 16 channels at 28x28, by
+/// default); `model: Some(spec)` serves a whole planned stack.
+/// Weights are synthetic (seeded from `seed`) either way.
 #[derive(Debug, Clone)]
 pub struct NativeConfig {
     pub backend: BackendKind,
@@ -110,6 +116,8 @@ pub struct NativeConfig {
     pub hw: usize,
     pub variant: Variant,
     pub seed: u64,
+    /// multi-layer model spec; `None` = single-layer fallback
+    pub model: Option<ModelSpec>,
 }
 
 impl Default for NativeConfig {
@@ -122,13 +130,23 @@ impl Default for NativeConfig {
             hw: 28,
             variant: Variant::Balanced(0),
             seed: 7,
+            model: None,
         }
     }
 }
 
 impl NativeConfig {
+    /// The model this config serves (single-layer spec when `model`
+    /// is not set).
+    pub fn spec(&self) -> ModelSpec {
+        self.model.clone().unwrap_or_else(|| {
+            ModelSpec::single_layer(self.cin, self.cout, self.hw,
+                                    self.variant)
+        })
+    }
+
     pub fn sample_len(&self) -> usize {
-        self.cin * self.hw * self.hw
+        self.spec().sample_len()
     }
 }
 
@@ -137,31 +155,30 @@ pub struct Server;
 
 impl Server {
     /// Start the engine thread on the rust-native backend (no
-    /// artifacts required — the offline serving fallback).
+    /// artifacts required — the offline serving fallback). The spec
+    /// (single layer or multi-layer `cfg.model`) is compiled into one
+    /// [`ModelPlan`] per batcher bucket, so steady-state serving does
+    /// zero heap allocation in the forward hot loop.
     pub fn start_native(cfg: NativeConfig, policy: BatchPolicy)
                         -> Result<(ServerHandle, thread::JoinHandle<()>)> {
-        // validate up front: a bad shape must be a CLI error, not an
-        // assert panic inside the engine thread
-        ensure!(cfg.cin >= 1 && cfg.cout >= 1,
-                "cin/cout must be >= 1 (got {}/{})", cfg.cin, cfg.cout);
-        ensure!(cfg.hw >= 2 && cfg.hw % 2 == 0,
-                "hw must be even and >= 2 for the stride-2 F(2x2,3x3) \
-                 tiling after pad=1 (got {})", cfg.hw);
-        let sample_len = cfg.sample_len();
+        // validate + compile up front: a bad shape must be a CLI
+        // error, not an assert panic inside the engine thread
+        let spec = cfg.spec();
+        spec.validate().context("invalid serving model")?;
+        let weights = ModelWeights::init(&spec, cfg.seed);
+        // one plan per bucket; steps (and weights) are Arc-shared
+        let plans =
+            ModelPlan::compile_buckets(&spec, &weights,
+                                       &policy.buckets)?;
+        let sample_len = spec.sample_len();
         let (tx, rx) = mpsc::channel::<Msg>();
         let handle = ServerHandle { tx, sample_len };
         let join = thread::Builder::new()
             .name("wino-adder-native-engine".into())
             .spawn(move || {
-                let mut rng = Rng::new(cfg.seed);
-                let w_hat = Tensor::randn(&mut rng,
-                                          [cfg.cout, cfg.cin, 4, 4]);
-                let exec = NativeExec {
+                let exec = PlannedExec {
                     backend: cfg.backend.build(cfg.threads),
-                    w_hat,
-                    cin: cfg.cin,
-                    hw: cfg.hw,
-                    variant: cfg.variant,
+                    plans,
                 };
                 if let Err(e) = serve_loop(policy, rx, exec) {
                     eprintln!("engine thread error: {e:?}");
@@ -197,7 +214,8 @@ impl Server {
                         let entry = manifest.layer(&name)?;
                         lanes.push((*bucket, engine.load_layer(entry)?));
                     }
-                    serve_loop(policy, rx, PjrtExec { lanes, w })
+                    serve_loop(policy, rx,
+                               PjrtExec { lanes, w, out: Vec::new() })
                 };
                 if let Err(e) = run() {
                     eprintln!("engine thread error: {e:?}");
@@ -209,33 +227,42 @@ impl Server {
 }
 
 /// One batch-execution substrate pluggable into [`serve_loop`].
+///
+/// `run` returns a **borrowed** slice into substrate-owned buffers so
+/// the serving loop never copies or allocates a full-batch output;
+/// only the per-request reply slices are materialized (the mpsc reply
+/// channel needs owned values).
 trait BatchExec {
     /// Flat output length per sample for a batch of `bucket` samples.
     fn per_sample_out(&self, bucket: usize) -> usize;
     /// Execute a batch: `x` is `bucket * sample_len` flat values.
-    fn run(&mut self, bucket: usize, x: &[f32]) -> Result<Vec<f32>>;
+    fn run(&mut self, bucket: usize, x: &[f32]) -> Result<&[f32]>;
 }
 
-/// Native substrate: one `nn::backend` instance serves every bucket.
-struct NativeExec {
+/// Native substrate: one [`ModelPlan`] per bucket, all driven by one
+/// `nn::backend` instance. Replaces the old single-`w_hat`
+/// `NativeExec` — the plan owns weights, workspace, and activation
+/// buffers, so per-request work is pure compute (no `Tensor::from_vec`
+/// copy, no fresh tile buffers).
+struct PlannedExec {
     backend: Box<dyn Backend>,
-    w_hat: Tensor,
-    cin: usize,
-    hw: usize,
-    variant: Variant,
+    plans: Vec<(usize, ModelPlan)>,
 }
 
-impl BatchExec for NativeExec {
-    fn per_sample_out(&self, _bucket: usize) -> usize {
-        // pad=1 keeps the spatial extent: (cout, hw, hw) per sample
-        self.w_hat.dims[0] * self.hw * self.hw
+impl BatchExec for PlannedExec {
+    fn per_sample_out(&self, bucket: usize) -> usize {
+        self.plans.iter()
+            .find(|(b, _)| *b == bucket)
+            .map(|(_, p)| p.out_sample_len())
+            .unwrap_or(0)
     }
 
-    fn run(&mut self, bucket: usize, x: &[f32]) -> Result<Vec<f32>> {
-        let xt = Tensor::from_vec(x.to_vec(),
-                                  [bucket, self.cin, self.hw, self.hw]);
-        let y = self.backend.forward(&xt, &self.w_hat, 1, self.variant);
-        Ok(y.data)
+    fn run(&mut self, bucket: usize, x: &[f32]) -> Result<&[f32]> {
+        let plan = self.plans.iter_mut()
+            .find(|(b, _)| *b == bucket)
+            .map(|(_, p)| p)
+            .ok_or_else(|| anyhow!("no plan for bucket {bucket}"))?;
+        Ok(plan.forward(self.backend.as_ref(), x))
     }
 }
 
@@ -244,6 +271,9 @@ impl BatchExec for NativeExec {
 struct PjrtExec {
     lanes: Vec<(usize, LayerExec)>,
     w: Vec<f32>,
+    /// last batch output (the PJRT API returns owned vectors; keeping
+    /// the latest here satisfies `BatchExec::run`'s borrowed return)
+    out: Vec<f32>,
 }
 
 #[cfg(feature = "pjrt")]
@@ -268,8 +298,10 @@ impl BatchExec for PjrtExec {
             .unwrap_or(0)
     }
 
-    fn run(&mut self, bucket: usize, x: &[f32]) -> Result<Vec<f32>> {
-        self.lane(bucket)?.run(x, &self.w)
+    fn run(&mut self, bucket: usize, x: &[f32]) -> Result<&[f32]> {
+        let y = self.lane(bucket)?.run(x, &self.w)?;
+        self.out = y;
+        Ok(&self.out)
     }
 }
 
@@ -288,6 +320,8 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
     let mut latency = LatencyStats::new();
     let mut batches = 0u64;
     let mut stop_reply: Option<mpsc::Sender<ServerStats>> = None;
+    // batch staging buffer, reused across batches (grown once)
+    let mut xbuf: Vec<f32> = Vec::new();
 
     'outer: loop {
         // drain or wait for messages
@@ -335,13 +369,12 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
             let lane_id = router
                 .route(size)
                 .ok_or_else(|| anyhow!("no lane for bucket {size}"))?;
-            let mut x =
-                Vec::with_capacity(size * batch[0].payload.x.len());
+            xbuf.clear();
             for r in &batch {
-                x.extend_from_slice(&r.payload.x);
+                xbuf.extend_from_slice(&r.payload.x);
             }
             let per_sample = exec.per_sample_out(size);
-            let result = exec.run(size, &x);
+            let result = exec.run(size, &xbuf);
             router.complete(lane_id);
             batches += 1;
             match result {
@@ -366,10 +399,15 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
                 super::router::per_bucket_completed(&router)
                     .into_iter()
                     .collect();
+            let per_bucket_requests: Vec<(usize, u64)> =
+                super::router::per_bucket_samples(&router)
+                    .into_iter()
+                    .collect();
             let stats = ServerStats {
                 served: batcher.dispatched,
                 batches,
                 per_bucket,
+                per_bucket_requests,
                 latency_summary: latency.summary(),
                 p50_us: latency.percentile(50.0).unwrap_or(0),
                 p99_us: latency.percentile(99.0).unwrap_or(0),
@@ -385,6 +423,8 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
 mod tests {
     use super::*;
     use crate::nn::wino_adder::winograd_adder_conv2d_fast;
+    use crate::nn::Tensor;
+    use crate::util::rng::Rng;
     use crate::util::testkit::all_close;
 
     fn tiny_cfg(kind: BackendKind) -> NativeConfig {
@@ -396,6 +436,7 @@ mod tests {
             hw: 8,
             variant: Variant::Balanced(0),
             seed: 7,
+            model: None,
         }
     }
 
@@ -430,6 +471,97 @@ mod tests {
         let routed: u64 =
             stats.per_bucket.iter().map(|(_, n)| n).sum();
         assert_eq!(routed, stats.batches);
+        // the router's sample accounting covers the real traffic
+        let requests: u64 =
+            stats.per_bucket_requests.iter().map(|(_, n)| n).sum();
+        assert_eq!(requests, stats.served);
+    }
+
+    #[test]
+    fn multi_layer_model_serves_on_every_backend() {
+        // a 3-wino-layer stack with scale/shift + relu end-to-end
+        // through the planned executor, all buckets exercised
+        let spec = ModelSpec::lenetish(2, 8, Variant::Balanced(0));
+        let out_len = spec.out_sample_len().unwrap();
+        for kind in BackendKind::ALL {
+            let cfg = NativeConfig {
+                model: Some(spec.clone()),
+                ..tiny_cfg(kind)
+            };
+            let policy = BatchPolicy { buckets: vec![1, 4],
+                                       max_wait_us: 300 };
+            let (handle, join) =
+                Server::start_native(cfg, policy).unwrap();
+            let mut rng = Rng::new(2);
+            let mut threads = Vec::new();
+            for _ in 0..2 {
+                let h = handle.clone();
+                let xs: Vec<Vec<f32>> =
+                    (0..6).map(|_| rng.normal_vec(2 * 8 * 8)).collect();
+                threads.push(thread::spawn(move || {
+                    for x in xs {
+                        let y = h.infer(x).expect("infer");
+                        assert_eq!(y.len(), 16 * 8 * 8);
+                    }
+                }));
+            }
+            for t in threads {
+                t.join().unwrap();
+            }
+            let stats = handle.stop().unwrap();
+            join.join().unwrap();
+            assert_eq!(stats.served, 12, "{}", kind.name());
+            assert_eq!(out_len, 16 * 8 * 8);
+        }
+    }
+
+    #[test]
+    fn served_model_output_is_deterministic_across_buckets() {
+        // the same requests through the bucket-1 plan (sequential,
+        // no batching) and through a *driven* bucket-4 batch must
+        // produce identical results (same weights, same math)
+        let spec = ModelSpec::stack(2, 2, 3, 8, Variant::Balanced(1));
+        let cfg = NativeConfig {
+            model: Some(spec),
+            ..tiny_cfg(BackendKind::Scalar)
+        };
+        let mut rng = Rng::new(4);
+        let xs: Vec<Vec<f32>> =
+            (0..4).map(|_| rng.normal_vec(2 * 8 * 8)).collect();
+
+        // bucket-1 reference: one request at a time
+        let policy = BatchPolicy { buckets: vec![1], max_wait_us: 0 };
+        let (handle, join) =
+            Server::start_native(cfg.clone(), policy).unwrap();
+        let singles: Vec<Vec<f32>> =
+            xs.iter().map(|x| handle.infer(x.clone()).unwrap())
+                .collect();
+        handle.stop().unwrap();
+        join.join().unwrap();
+
+        // bucket-4: four concurrent clients + a generous batching
+        // window so the batcher assembles a full bucket-4 batch
+        let policy = BatchPolicy { buckets: vec![1, 4],
+                                   max_wait_us: 200_000 };
+        let (handle, join) =
+            Server::start_native(cfg, policy).unwrap();
+        let mut workers = Vec::new();
+        for x in xs {
+            let h = handle.clone();
+            workers.push(thread::spawn(move || h.infer(x).unwrap()));
+        }
+        let batched: Vec<Vec<f32>> =
+            workers.into_iter().map(|w| w.join().unwrap()).collect();
+        let stats = handle.stop().unwrap();
+        join.join().unwrap();
+        assert!(stats.per_bucket.iter().any(|&(b, n)| b == 4 && n > 0),
+                "bucket-4 plan was never driven: {:?}",
+                stats.per_bucket);
+        // worker i sent xs[i] and returned its own reply, so the two
+        // runs line up index-by-index
+        for (single, batch) in singles.iter().zip(&batched) {
+            all_close(single, batch, 1e-6, 1e-6).unwrap();
+        }
     }
 
     #[test]

@@ -21,6 +21,7 @@ use wino_adder::coordinator::server::{NativeConfig, Server, ServerHandle};
 use wino_adder::data::Preset;
 use wino_adder::energy::{figure1, paper_figure1, EnergyTable};
 use wino_adder::nn::backend::BackendKind;
+use wino_adder::nn::model::ModelSpec;
 use wino_adder::nn::{matrices, wino_adder as nn_wino, Tensor};
 use wino_adder::opcount::{self, count_model, fmt_m, Mode};
 use wino_adder::util::cli::Args;
@@ -63,6 +64,7 @@ fn print_help() {
          \x20          [--backend scalar|parallel|parallel-int8|pjrt]\n\
          \x20          [--threads N] [--cin N] [--cout N] [--hw N]\n\
          \x20          [--variant std|A0..A3]\n\
+         \x20          [--model single|stack|lenet|resnet20] [--depth N]\n\
          \x20 energy   [--model resnet20|resnet32|resnet18]\n\
          \x20 opcount  [--model resnet20|resnet32|resnet18|lenet|resnet20-lite]\n\
          \x20 fpga-sim [--cin N --cout N --hw N --par N]\n\
@@ -138,6 +140,38 @@ fn cmd_train(_args: &Args) -> Result<()> {
     Err(pjrt_unavailable("train"))
 }
 
+/// Resolve `--model NAME` / `--depth N` into a serving spec.
+/// `None` = the classic single-layer demo built from `--cin`/`--cout`/
+/// `--hw`.
+fn serve_model(args: &Args, variant: matrices::Variant)
+               -> Result<Option<ModelSpec>> {
+    let cin = args.get_usize("cin", 16);
+    let cout = args.get_usize("cout", 16);
+    let hw = args.get_usize("hw", 28);
+    let depth = args.get_usize("depth", 0);
+    Ok(match args.get("model") {
+        // bare --depth N (any N >= 1) promotes to a stack; an explicit
+        // `--model single` always means the single-layer demo
+        None => {
+            if depth >= 1 {
+                Some(ModelSpec::stack(depth, cin, cout, hw, variant))
+            } else {
+                None
+            }
+        }
+        Some("single") => None,
+        Some("stack") => {
+            Some(ModelSpec::stack(depth.max(1), cin, cout, hw, variant))
+        }
+        Some("lenet") => Some(ModelSpec::lenetish(cin, hw, variant)),
+        Some("resnet20") => Some(ModelSpec::resnet20ish(hw, variant)),
+        Some(other) => {
+            return Err(anyhow!("unknown --model {other:?} \
+                                (single|stack|lenet|resnet20)"))
+        }
+    })
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 256);
     let policy = BatchPolicy {
@@ -160,11 +194,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         hw: args.get_usize("hw", 28),
         variant,
         seed: args.get_u64("seed", 7),
+        model: serve_model(args, variant)?,
     };
+    let spec = cfg.spec();
     let sample = cfg.sample_len();
-    println!("native serving: backend {} x{} threads, layer \
-              ({} -> {} ch, {}x{})",
-             kind.name(), threads, cfg.cin, cfg.cout, cfg.hw, cfg.hw);
+    println!("native serving: backend {} x{} threads, model {} \
+              ({} layers, {} wino, {} ch in, {}x{})",
+             kind.name(), threads, spec.name, spec.layers.len(),
+             spec.wino_layers(), spec.in_channels, spec.hw, spec.hw);
     let (handle, join) = Server::start_native(cfg, policy)?;
     drive_clients(handle, join, n, sample)
 }
@@ -213,6 +250,7 @@ fn drive_clients(handle: ServerHandle,
              stats.served as f64 / elapsed);
     println!("latency: {}", stats.latency_summary);
     println!("per-bucket batches: {:?}", stats.per_bucket);
+    println!("per-bucket requests: {:?}", stats.per_bucket_requests);
     Ok(())
 }
 

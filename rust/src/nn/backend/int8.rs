@@ -6,7 +6,9 @@ use std::sync::Arc;
 
 use super::pool::ThreadPool;
 use super::{kernel, Backend, Variant};
-use crate::nn::quant::{self, QTensor};
+use crate::nn::plan::{self, Workspace};
+use crate::nn::quant::{self, QParams, QTensor};
+use crate::nn::wino_adder;
 use crate::nn::Tensor;
 
 /// Parallel int8 backend: symmetric per-tensor quantization on the
@@ -34,6 +36,7 @@ impl ParallelInt8Backend {
     /// Sharded integer elementwise stage (see
     /// [`super::ParallelBackend::run_tiles`]); exposed for the scaling
     /// bench.
+    #[allow(clippy::too_many_arguments)] // mirrors the kernel ABI
     pub fn run_tiles(&self, d_hat: &Arc<[i16]>, w_hat: &Arc<[i16]>,
                      t: usize, o: usize, c: usize, s: [[i32; 4]; 16],
                      y: &mut [i32]) {
@@ -85,6 +88,49 @@ impl Backend for ParallelInt8Backend {
             dims,
         }
     }
+
+    /// Same integer pipeline as [`Backend::forward`], but every buffer
+    /// (quantized input, i16 tiles/weights, i32 accumulators, shard
+    /// results) comes from the workspace — bit-exact vs `forward`,
+    /// allocation-free in steady state.
+    fn forward_into(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
+                    variant: Variant, ws: &mut Workspace,
+                    out: &mut Tensor) {
+        let c = x.dims[1];
+        let o = w_hat.dims[0];
+        assert_eq!(w_hat.dims[1], c, "channel mismatch");
+        assert_eq!((w_hat.dims[2], w_hat.dims[3]), (4, 4),
+                   "w_hat must be Winograd-domain (O,C,4,4)");
+        let (n, th, tw) = wino_adder::tile_geometry(x.dims, pad);
+        let t = n * th * tw;
+        let qp = QParams::fit(&x.data);
+        let scale = qp.scale;
+        ws.qx.clear();
+        ws.qx.extend(x.data.iter().map(|&v| qp.quantize(v)));
+        {
+            let d = plan::arc_vec_mut(&mut ws.d_hat_i16);
+            d.resize(t * c * 16, 0);
+            quant::input_tiles_i16_into(&ws.qx, x.dims, pad, variant,
+                                        d);
+            quant::quantize_wino_weights_into(
+                &w_hat.data, scale, plan::arc_vec_mut(&mut ws.w_i16));
+        }
+        let s = kernel::output_transform_flat_i32(variant);
+        ws.y_tiles_i32.resize(t * o * 4, 0);
+        let d = Arc::clone(&ws.d_hat_i16);
+        let w = Arc::clone(&ws.w_i16);
+        self.pool.scatter_ranges_into(
+            t, o * 4, &mut ws.y_tiles_i32, &mut ws.shard_i32,
+            move |a, b, buf| {
+                buf.resize((b - a) * o * 4, 0);
+                kernel::wino_adder_tiles_range_i8(&d, &w, a, b, o, c,
+                                                  &s, buf);
+            });
+        out.dims = [n, o, 2 * th, 2 * tw];
+        out.data.resize(t * o * 4, 0.0);
+        kernel::untile_i32_scaled_into(&ws.y_tiles_i32, n, o, th, tw,
+                                       scale, &mut out.data);
+    }
 }
 
 #[cfg(test)]
@@ -109,6 +155,26 @@ mod tests {
                                             Variant::Balanced(0));
             assert_eq!(dims, want_dims);
             assert_eq!(got, want, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn forward_into_is_bit_exact_vs_forward() {
+        let mut rng = Rng::new(33);
+        let x = Tensor::randn(&mut rng, [2, 3, 8, 8]);
+        let w_hat = Tensor::randn(&mut rng, [4, 3, 4, 4]);
+        for threads in [1usize, 4] {
+            let be = ParallelInt8Backend::new(threads);
+            let want = be.forward(&x, &w_hat, 1, Variant::Balanced(0));
+            let mut ws = Workspace::new();
+            let mut out = Tensor::zeros([1, 1, 1, 1]);
+            for _ in 0..2 {
+                be.forward_into(&x, &w_hat, 1, Variant::Balanced(0),
+                                &mut ws, &mut out);
+                assert_eq!(out.dims, want.dims);
+                assert_eq!(out.data, want.data,
+                           "{threads} threads diverged");
+            }
         }
     }
 

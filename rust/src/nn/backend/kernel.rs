@@ -39,6 +39,7 @@ pub fn abs_branchless(x: f32) -> f32 {
 ///
 /// `d_hat` is the full `(T, C, 16)` buffer, `w_hat` is `(O, C, 16)`,
 /// and `y` is the **range-local** output `(t1 - t0, O, 4)`.
+#[allow(clippy::too_many_arguments)] // kernel ABI: flat scalars + slices
 pub fn wino_adder_tiles_range(d_hat: &[f32], w_hat: &[f32], t0: usize,
                               t1: usize, o: usize, c: usize,
                               s: &[[f32; 4]; 16], y: &mut [f32]) {
@@ -93,6 +94,7 @@ pub fn wino_adder_tiles_range(d_hat: &[f32], w_hat: &[f32], t0: usize,
 /// Blocked int8-datapath elementwise stage over the tile range
 /// `[t0, t1)`: i16 transform-domain operands (the FPGA's widened
 /// datapath), i32 accumulators. Layouts mirror the f32 version.
+#[allow(clippy::too_many_arguments)] // kernel ABI: flat scalars + slices
 pub fn wino_adder_tiles_range_i8(d_hat: &[i16], w_hat: &[i16], t0: usize,
                                  t1: usize, o: usize, c: usize,
                                  s: &[[i32; 4]; 16], y: &mut [i32]) {
@@ -160,29 +162,24 @@ pub fn output_transform_flat_i32(variant: Variant) -> [[i32; 4]; 16] {
 }
 
 /// Scatter i32 `(T, O, 4)` output patches back to `(N, O, 2th, 2tw)`
-/// NCHW order (integer twin of `wino_adder::untile`).
+/// NCHW order (integer twin of `wino_adder::untile`; shares its index
+/// math via `wino_adder::untile_map_into`).
 pub fn untile_i32(y: &[i32], n: usize, o: usize, th: usize, tw: usize)
                   -> Vec<i32> {
-    assert_eq!(y.len(), n * th * tw * o * 4);
-    let (ho, wo) = (2 * th, 2 * tw);
-    let mut out = vec![0i32; n * o * ho * wo];
-    for in_ in 0..n {
-        for ti in 0..th {
-            for tj in 0..tw {
-                let trow = (in_ * th + ti) * tw + tj;
-                for oc in 0..o {
-                    let base = (trow * o + oc) * 4;
-                    for i in 0..2 {
-                        for j in 0..2 {
-                            out[((in_ * o + oc) * ho + 2 * ti + i) * wo
-                                + 2 * tj + j] = y[base + i * 2 + j];
-                        }
-                    }
-                }
-            }
-        }
-    }
+    let mut out = vec![0i32; n * o * 4 * th * tw];
+    crate::nn::wino_adder::untile_map_into(y, n, o, th, tw, &mut out,
+                                           |v| v);
     out
+}
+
+/// Allocation-free scatter + dequantize: i32 `(T, O, 4)` patches into a
+/// caller-provided f32 `(N, O, 2th, 2tw)` NCHW slice, multiplying by
+/// `scale` (the int8 backend's output stage on the planned path). Every
+/// element is written, so the slice need not be zeroed.
+pub fn untile_i32_scaled_into(y: &[i32], n: usize, o: usize, th: usize,
+                              tw: usize, scale: f32, out: &mut [f32]) {
+    crate::nn::wino_adder::untile_map_into(y, n, o, th, tw, out,
+                                           |q| q as f32 * scale);
 }
 
 #[cfg(test)]
@@ -248,6 +245,18 @@ mod tests {
         assert_eq!(out[1], y[1]);
         assert_eq!(out[2 * tw], y[2]);
         assert_eq!(out[2 * tw + 1], y[3]);
+    }
+
+    #[test]
+    fn scaled_untile_matches_untile_i32() {
+        let (n, o, th, tw) = (2usize, 3usize, 2usize, 2usize);
+        let t = n * th * tw;
+        let y: Vec<i32> = (0..t * o * 4).map(|i| i as i32 - 20).collect();
+        let want: Vec<f32> = untile_i32(&y, n, o, th, tw)
+            .iter().map(|&q| q as f32 * 0.25).collect();
+        let mut got = vec![f32::NAN; want.len()];
+        untile_i32_scaled_into(&y, n, o, th, tw, 0.25, &mut got);
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub use parallel::ParallelBackend;
 pub use scalar::ScalarBackend;
 
 use super::matrices::Variant;
+use super::plan::Workspace;
 use super::Tensor;
 use crate::util::cli::Args;
 
@@ -48,6 +49,25 @@ pub trait Backend: Send {
     /// `H' = H + 2*pad - 2` (stride-2 F(2x2,3x3) tiling).
     fn forward(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
                variant: Variant) -> Tensor;
+
+    /// Allocation-free forward for the planned executor
+    /// ([`crate::nn::plan::ModelPlan`]): same math as [`forward`],
+    /// but tile/accumulator scratch comes from `ws` and the result is
+    /// written into `out` (dims set, data resized in place) — steady
+    /// state reuses every buffer. The default implementation falls
+    /// back to [`forward`] and copies, so external `Backend` impls
+    /// keep compiling (and stay correct, just not allocation-free).
+    ///
+    /// [`forward`]: Backend::forward
+    fn forward_into(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
+                    variant: Variant, ws: &mut Workspace,
+                    out: &mut Tensor) {
+        let _ = ws;
+        let y = self.forward(x, w_hat, pad, variant);
+        out.dims = y.dims;
+        out.data.clear();
+        out.data.extend_from_slice(&y.data);
+    }
 }
 
 /// Backend selector (CLI-facing).

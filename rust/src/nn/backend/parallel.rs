@@ -6,6 +6,7 @@ use std::sync::Arc;
 use super::pool::ThreadPool;
 use super::{kernel, Backend, Variant};
 use crate::nn::matrices;
+use crate::nn::plan::{self, Workspace};
 use crate::nn::wino_adder;
 use crate::nn::Tensor;
 
@@ -35,6 +36,7 @@ impl ParallelBackend {
     /// The sharded elementwise stage: `d_hat (T, C, 16)`, `w_hat (O,
     /// C, 16)` -> `y (T, O, 4)`. Exposed so the scaling bench can
     /// measure the hot loop without tile extraction in the timing.
+    #[allow(clippy::too_many_arguments)] // mirrors the kernel ABI
     pub fn run_tiles(&self, d_hat: &Arc<[f32]>, w_hat: &Arc<[f32]>,
                      t: usize, o: usize, c: usize, s: [[f32; 4]; 16],
                      y: &mut [f32]) {
@@ -71,6 +73,49 @@ impl Backend for ParallelBackend {
         self.run_tiles(&d, &w, t, o, c, s, &mut y);
         wino_adder::untile(&y, n, o, th, tw)
     }
+
+    fn forward_into(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
+                    variant: Variant, ws: &mut Workspace,
+                    out: &mut Tensor) {
+        let c = x.dims[1];
+        let o = w_hat.dims[0];
+        assert_eq!(w_hat.dims[1], c, "channel mismatch");
+        assert_eq!((w_hat.dims[2], w_hat.dims[3]), (4, 4),
+                   "w_hat must be Winograd-domain (O,C,4,4)");
+        let (n, th, tw) = wino_adder::tile_geometry(x.dims, pad);
+        let t = n * th * tw;
+        {
+            let d = plan::arc_vec_mut(&mut ws.d_hat);
+            d.resize(t * c * 16, 0.0);
+            wino_adder::input_tiles_into(x, pad, variant, d);
+        }
+        // shareable weights: the planned path hands us shared
+        // ownership of the very tensor behind `w_hat` (zero-copy);
+        // plain callers fall back to one clone per call
+        let w: Arc<Tensor> = match ws.w_shared.take() {
+            Some(arc) => {
+                debug_assert!(std::ptr::eq(arc.as_ref(), w_hat),
+                              "ws.w_shared must alias the w_hat \
+                               argument");
+                arc
+            }
+            None => Arc::new(w_hat.clone()),
+        };
+        let s = matrices::output_transform_flat(variant);
+        ws.y_tiles.resize(t * o * 4, 0.0);
+        let d = Arc::clone(&ws.d_hat);
+        self.pool.scatter_ranges_into(
+            t, o * 4, &mut ws.y_tiles, &mut ws.shard_f32,
+            move |a, b, buf| {
+                buf.resize((b - a) * o * 4, 0.0);
+                kernel::wino_adder_tiles_range(&d, &w.data, a, b, o, c,
+                                               &s, buf);
+            });
+        out.dims = [n, o, 2 * th, 2 * tw];
+        out.data.resize(t * o * 4, 0.0);
+        wino_adder::untile_into(&ws.y_tiles, n, o, th, tw,
+                                &mut out.data);
+    }
 }
 
 #[cfg(test)]
@@ -93,6 +138,50 @@ mod tests {
             assert_eq!(got.dims, want.dims);
             all_close(&got.data, &want.data, 1e-4, 1e-4)
                 .unwrap_or_else(|e| panic!("{threads} threads: {e}"));
+        }
+    }
+
+    #[test]
+    fn forward_into_consumes_shared_weight_handle() {
+        let mut rng = Rng::new(29);
+        let x = Tensor::randn(&mut rng, [1, 3, 8, 8]);
+        let w_hat = Arc::new(Tensor::randn(&mut rng, [2, 3, 4, 4]));
+        let be = ParallelBackend::new(3);
+        let want = be.forward(&x, &w_hat, 1, Variant::Std);
+        let mut ws = Workspace::new();
+        let mut out = Tensor::zeros([1, 1, 1, 1]);
+        for _ in 0..2 {
+            ws.w_shared = Some(Arc::clone(&w_hat));
+            be.forward_into(&x, &w_hat, 1, Variant::Std, &mut ws,
+                            &mut out);
+            assert_eq!(out.data, want.data);
+            assert!(ws.w_shared.is_none(),
+                    "backend must consume the handle");
+            // the workers have dropped their clones: sole ownership
+            // is restored between requests (no weight copies linger)
+            assert_eq!(Arc::strong_count(&w_hat), 1);
+        }
+    }
+
+    #[test]
+    fn forward_into_matches_forward_across_threads() {
+        let mut rng = Rng::new(23);
+        let x = Tensor::randn(&mut rng, [2, 4, 10, 10]);
+        let w_hat = Tensor::randn(&mut rng, [3, 4, 4, 4]);
+        for threads in [1usize, 2, 6] {
+            let be = ParallelBackend::new(threads);
+            let want = be.forward(&x, &w_hat, 1, Variant::Balanced(1));
+            let mut ws = Workspace::new();
+            let mut out = Tensor::zeros([1, 1, 1, 1]);
+            // run twice through the same workspace: reuse must not
+            // change results
+            for _ in 0..2 {
+                be.forward_into(&x, &w_hat, 1, Variant::Balanced(1),
+                                &mut ws, &mut out);
+                assert_eq!(out.dims, want.dims);
+                assert_eq!(out.data, want.data,
+                           "{threads} threads diverged");
+            }
         }
     }
 

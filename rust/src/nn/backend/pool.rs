@@ -116,6 +116,56 @@ impl ThreadPool {
                 .copy_from_slice(&chunk);
         }
     }
+
+    /// [`ThreadPool::scatter_ranges`] with **reused** per-shard result
+    /// buffers: each shard's output `Vec` is taken from `bufs`, filled
+    /// by `f(start, end, buf)` (which must resize it to
+    /// `(end - start) * stride`), stitched into `y`, and put back — so
+    /// steady-state calls allocate nothing for shard results. This is
+    /// the spine of `Backend::forward_into` on the parallel backends.
+    pub fn scatter_ranges_into<T, F>(&self, n: usize, stride: usize,
+                                     y: &mut [T],
+                                     bufs: &mut Vec<Vec<T>>, f: F)
+    where
+        T: Copy + Send + 'static,
+        F: Fn(usize, usize, &mut Vec<T>) + Send + Clone + 'static,
+    {
+        assert_eq!(y.len(), n * stride);
+        let shards = shard_ranges(n, self.size());
+        if bufs.len() < shards.len().max(1) {
+            bufs.resize_with(shards.len().max(1), Vec::new);
+        }
+        if shards.len() <= 1 {
+            if n > 0 {
+                let mut buf = std::mem::take(&mut bufs[0]);
+                f(0, n, &mut buf);
+                y.copy_from_slice(&buf);
+                bufs[0] = buf;
+            }
+            return;
+        }
+        let taken: Vec<Vec<T>> = bufs[..shards.len()]
+            .iter_mut()
+            .map(std::mem::take)
+            .collect();
+        let jobs: Vec<_> = shards
+            .into_iter()
+            .zip(taken)
+            .map(|((a, b), mut buf)| {
+                let g = f.clone();
+                move || {
+                    g(a, b, &mut buf);
+                    (a, buf)
+                }
+            })
+            .collect();
+        for (i, (a, chunk)) in self.scatter(jobs).into_iter().enumerate()
+        {
+            y[a * stride..a * stride + chunk.len()]
+                .copy_from_slice(&chunk);
+            bufs[i] = chunk;
+        }
+    }
 }
 
 impl Drop for ThreadPool {
@@ -196,6 +246,34 @@ mod tests {
             let want: Vec<usize> = (0..n * stride).collect();
             assert_eq!(y, want, "n={n}");
         }
+    }
+
+    #[test]
+    fn scatter_ranges_into_stitches_and_reuses_buffers() {
+        let pool = ThreadPool::new(3);
+        let mut bufs: Vec<Vec<usize>> = Vec::new();
+        for n in [0usize, 1, 2, 7, 64] {
+            let stride = 4;
+            let mut y = vec![0usize; n * stride];
+            pool.scatter_ranges_into(n, stride, &mut y, &mut bufs,
+                                     move |a, b, buf| {
+                buf.clear();
+                buf.extend(a * stride..b * stride);
+            });
+            let want: Vec<usize> = (0..n * stride).collect();
+            assert_eq!(y, want, "n={n}");
+        }
+        // buffers came back with capacity: a second identical run must
+        // not need to grow them
+        let caps: Vec<usize> = bufs.iter().map(Vec::capacity).collect();
+        let mut y = vec![0usize; 64 * 4];
+        pool.scatter_ranges_into(64, 4, &mut y, &mut bufs,
+                                 move |a, b, buf| {
+            buf.clear();
+            buf.extend(a * 4..b * 4);
+        });
+        let caps2: Vec<usize> = bufs.iter().map(Vec::capacity).collect();
+        assert_eq!(caps, caps2, "shard buffers were reallocated");
     }
 
     #[test]

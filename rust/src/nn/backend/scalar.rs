@@ -1,13 +1,16 @@
 //! Single-threaded baseline backend.
 
-use super::{Backend, Variant};
+use super::{kernel, Backend, Variant};
+use crate::nn::matrices;
+use crate::nn::plan::{self, Workspace};
 use crate::nn::wino_adder;
 use crate::nn::Tensor;
 
 /// Delegates to the scalar hot path
 /// [`wino_adder::winograd_adder_conv2d_fast`]; the reference
 /// implementation the parallel backends are benchmarked and
-/// property-tested against.
+/// property-tested against. `forward_into` runs the same math through
+/// the blocked kernel with workspace-owned buffers (zero allocation).
 pub struct ScalarBackend;
 
 impl Backend for ScalarBackend {
@@ -18,6 +21,29 @@ impl Backend for ScalarBackend {
     fn forward(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
                variant: Variant) -> Tensor {
         wino_adder::winograd_adder_conv2d_fast(x, w_hat, pad, variant)
+    }
+
+    fn forward_into(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
+                    variant: Variant, ws: &mut Workspace,
+                    out: &mut Tensor) {
+        let c = x.dims[1];
+        let o = w_hat.dims[0];
+        assert_eq!(w_hat.dims[1], c, "channel mismatch");
+        assert_eq!((w_hat.dims[2], w_hat.dims[3]), (4, 4),
+                   "w_hat must be Winograd-domain (O,C,4,4)");
+        let (n, th, tw) = wino_adder::tile_geometry(x.dims, pad);
+        let t = n * th * tw;
+        let d = plan::arc_vec_mut(&mut ws.d_hat);
+        d.resize(t * c * 16, 0.0);
+        wino_adder::input_tiles_into(x, pad, variant, d);
+        let s = matrices::output_transform_flat(variant);
+        ws.y_tiles.resize(t * o * 4, 0.0);
+        kernel::wino_adder_tiles_range(d, &w_hat.data, 0, t, o, c, &s,
+                                       &mut ws.y_tiles);
+        out.dims = [n, o, 2 * th, 2 * tw];
+        out.data.resize(t * o * 4, 0.0);
+        wino_adder::untile_into(&ws.y_tiles, n, o, th, tw,
+                                &mut out.data);
     }
 }
 
@@ -39,5 +65,19 @@ mod tests {
                                         Variant::Balanced(0));
         assert_eq!(got.dims, want.dims);
         all_close(&got.data, &want.data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn forward_into_matches_forward() {
+        let mut rng = Rng::new(12);
+        let x = Tensor::randn(&mut rng, [2, 3, 8, 8]);
+        let w_hat = Tensor::randn(&mut rng, [4, 3, 4, 4]);
+        let want = ScalarBackend.forward(&x, &w_hat, 1, Variant::Std);
+        let mut ws = Workspace::new();
+        let mut out = Tensor::zeros([1, 1, 1, 1]);
+        ScalarBackend.forward_into(&x, &w_hat, 1, Variant::Std,
+                                   &mut ws, &mut out);
+        assert_eq!(out.dims, want.dims);
+        all_close(&out.data, &want.data, 1e-5, 1e-5).unwrap();
     }
 }

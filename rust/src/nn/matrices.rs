@@ -26,6 +26,30 @@ impl Variant {
             _ => None,
         }
     }
+
+    /// CLI/serialization name; inverse of [`Variant::parse`] (used by
+    /// `nn::model`'s spec files and the `--variant` flag docs).
+    /// Panics on `Balanced(n)` with `n > 3` — the same contract as
+    /// [`a`]/[`g`], which index `A_BAL`/`G_BAL_SIGNS`; use
+    /// [`Variant::is_valid`] to check first.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Std => "std",
+            Variant::Balanced(0) => "A0",
+            Variant::Balanced(1) => "A1",
+            Variant::Balanced(2) => "A2",
+            Variant::Balanced(3) => "A3",
+            Variant::Balanced(i) => {
+                panic!("Balanced({i}) out of range (A0..A3)")
+            }
+        }
+    }
+
+    /// Whether this variant indexes a real transform family
+    /// (`Balanced` carries a public `usize`; only 0..=3 exist).
+    pub fn is_valid(&self) -> bool {
+        matches!(self, Variant::Std | Variant::Balanced(0..=3))
+    }
 }
 
 pub const A_STD: [[f32; 2]; 4] = [[1., 0.], [1., 1.], [1., -1.], [0., -1.]];

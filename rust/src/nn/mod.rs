@@ -9,11 +9,18 @@
 //! 3. **Optimized hot path** — the serving fallback runs on
 //!    [`backend`]'s multi-threaded CPU backends; the native benches
 //!    iterate on these (EXPERIMENTS.md §Perf).
+//! 4. **Planned multi-layer execution** — [`model`] describes whole
+//!    AdderNet stacks (Winograd-adder 3x3 bodies + direct-adder 1x1
+//!    shortcuts + scale/shift + relu) and [`plan`] compiles them into
+//!    allocation-free per-batch-bucket executors the serving engine
+//!    runs.
 
 pub mod adder;
 pub mod backend;
 pub mod conv;
 pub mod matrices;
+pub mod model;
+pub mod plan;
 pub mod quant;
 pub mod wino_adder;
 

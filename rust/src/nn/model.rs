@@ -1,0 +1,681 @@
+//! Multi-layer model specifications for the planned executor.
+//!
+//! A [`ModelSpec`] is an ordered stack of the layer kinds the paper's
+//! AdderNets are built from: Winograd-adder 3x3 body layers (Eq. 9),
+//! direct-adder 1x1 projection shortcuts (Eq. 1 with k=1 — not
+//! Winograd-eligible, see `opcount`), per-channel scale/shift (the
+//! BN-fold that follows every adder layer), and ReLU. The spec is pure
+//! metadata; [`ModelWeights`] carries the parameters, and
+//! [`crate::nn::plan::ModelPlan`] compiles spec + weights into an
+//! allocation-free executable per batch-size bucket.
+//!
+//! The spec vocabulary deliberately exports to
+//! [`crate::opcount::LayerSpec`] (see [`ModelSpec::layer_specs`]) so
+//! the same stack that serves can be costed by the Table-1 op model.
+//!
+//! **Geometry note:** every layer here preserves the spatial extent
+//! (`pad=1` Winograd keeps `hw`, 1x1 and elementwise layers trivially
+//! do). The paper's stride-2 stage transitions are represented as
+//! spatial-size-preserving 1x1 projections — the serving executor has
+//! no strided path yet, so `resnet20ish` is the paper's channel
+//! schedule at constant `hw`.
+//!
+//! On disk a model is `model.json` + `model.params.bin`, with the
+//! manifest-compatible field names the PJRT path uses
+//! (`config.in_channels` / `config.image_size`, `params` name+shape
+//! list, `params_bin`, `num_param_scalars` — see `runtime::manifest`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::matrices::Variant;
+use crate::opcount::LayerSpec;
+use crate::util::error::{anyhow, bail, ensure, Context, Result};
+use crate::util::io;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One layer of a [`ModelSpec`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// Winograd-adder 3x3 (paper Eq. 9), stride-2 F(2x2,3x3) tiling;
+    /// weights live in the Winograd domain as `(cout, cin, 4, 4)`.
+    WinoAdder3x3 {
+        cin: usize,
+        cout: usize,
+        pad: usize,
+        variant: Variant,
+    },
+    /// Direct-adder 1x1 projection shortcut (Eq. 1, k=1): weights
+    /// `(cout, cin)`, spatial extent preserved.
+    DirectAdder1x1 { cin: usize, cout: usize },
+    /// Per-channel `y = x * scale[c] + shift[c]` (folded BN); params
+    /// stored as `(2, channels)` — scale row then shift row.
+    ScaleShift { channels: usize },
+    /// Elementwise `max(0, x)`; no parameters.
+    Relu,
+}
+
+impl LayerKind {
+    /// Serialization tag (stable — part of the model.json format).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            LayerKind::WinoAdder3x3 { .. } => "wino_adder_3x3",
+            LayerKind::DirectAdder1x1 { .. } => "direct_adder_1x1",
+            LayerKind::ScaleShift { .. } => "scale_shift",
+            LayerKind::Relu => "relu",
+        }
+    }
+
+    /// Parameter tensor shape ([] for parameterless layers).
+    pub fn param_shape(&self) -> Vec<usize> {
+        match *self {
+            LayerKind::WinoAdder3x3 { cin, cout, .. } => {
+                vec![cout, cin, 4, 4]
+            }
+            LayerKind::DirectAdder1x1 { cin, cout } => vec![cout, cin],
+            LayerKind::ScaleShift { channels } => vec![2, channels],
+            LayerKind::Relu => Vec::new(),
+        }
+    }
+
+    /// Apply this layer's geometry to `(channels, hw)`, validating the
+    /// input channel count.
+    pub fn apply_geom(&self, c: usize, hw: usize)
+                      -> Result<(usize, usize)> {
+        match *self {
+            LayerKind::WinoAdder3x3 { cin, cout, pad, variant } => {
+                ensure!(cin == c, "wino_adder_3x3 expects {cin} input \
+                                   channels, stack carries {c}");
+                ensure!(cout >= 1, "wino_adder_3x3 cout must be >= 1");
+                ensure!(pad <= 1, "pad must be 0 or 1 (got {pad})");
+                ensure!(variant.is_valid(),
+                        "unknown transform variant {variant:?} \
+                         (std or A0..A3)");
+                let hp = hw + 2 * pad;
+                ensure!(hp >= 4 && (hp - 2) % 2 == 0,
+                        "wino_adder_3x3 needs even padded hw >= 4 \
+                         (hw {hw}, pad {pad})");
+                Ok((cout, hp - 2))
+            }
+            LayerKind::DirectAdder1x1 { cin, cout } => {
+                ensure!(cin == c, "direct_adder_1x1 expects {cin} input \
+                                   channels, stack carries {c}");
+                ensure!(cout >= 1, "direct_adder_1x1 cout must be >= 1");
+                Ok((cout, hw))
+            }
+            LayerKind::ScaleShift { channels } => {
+                ensure!(channels == c, "scale_shift over {channels} \
+                                        channels, stack carries {c}");
+                Ok((c, hw))
+            }
+            LayerKind::Relu => Ok((c, hw)),
+        }
+    }
+}
+
+/// An ordered stack of layers plus the input geometry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub in_channels: usize,
+    /// input spatial extent (H == W, CIFAR-style)
+    pub hw: usize,
+    pub layers: Vec<LayerKind>,
+}
+
+impl ModelSpec {
+    /// Walk the stack, checking channel/geometry consistency; returns
+    /// the output `(channels, hw)`.
+    pub fn validate(&self) -> Result<(usize, usize)> {
+        ensure!(!self.layers.is_empty(), "model {:?} has no layers",
+                self.name);
+        ensure!(self.in_channels >= 1, "in_channels must be >= 1");
+        let mut c = self.in_channels;
+        let mut hw = self.hw;
+        for (i, l) in self.layers.iter().enumerate() {
+            let (nc, nhw) = l.apply_geom(c, hw)
+                .with_context(|| format!("model {:?} layer {i}",
+                                         self.name))?;
+            c = nc;
+            hw = nhw;
+        }
+        Ok((c, hw))
+    }
+
+    /// Flat per-sample input length (`in_channels * hw * hw`).
+    pub fn sample_len(&self) -> usize {
+        self.in_channels * self.hw * self.hw
+    }
+
+    /// Flat per-sample output length (validated stack required).
+    pub fn out_sample_len(&self) -> Result<usize> {
+        let (c, hw) = self.validate()?;
+        Ok(c * hw * hw)
+    }
+
+    /// Number of Winograd-adder body layers (plan/report helper).
+    pub fn wino_layers(&self) -> usize {
+        self.layers.iter()
+            .filter(|l| matches!(l, LayerKind::WinoAdder3x3 { .. }))
+            .count()
+    }
+
+    /// The single-layer stack the pre-plan server served: one
+    /// Winograd-adder layer, `pad=1`.
+    pub fn single_layer(cin: usize, cout: usize, hw: usize,
+                        variant: Variant) -> ModelSpec {
+        ModelSpec {
+            name: "single".into(),
+            in_channels: cin,
+            hw,
+            layers: vec![LayerKind::WinoAdder3x3 {
+                cin, cout, pad: 1, variant,
+            }],
+        }
+    }
+
+    /// A uniform depth-N body: `depth` x [wino 3x3, scale/shift, relu]
+    /// (no trailing relu) from `cin` into `cout` channels — the
+    /// `--depth N` serving stack and the bench sweep's axis.
+    pub fn stack(depth: usize, cin: usize, cout: usize, hw: usize,
+                 variant: Variant) -> ModelSpec {
+        let mut layers = Vec::new();
+        let mut c = cin;
+        for i in 0..depth.max(1) {
+            layers.push(LayerKind::WinoAdder3x3 {
+                cin: c, cout, pad: 1, variant,
+            });
+            layers.push(LayerKind::ScaleShift { channels: cout });
+            if i + 1 < depth.max(1) {
+                layers.push(LayerKind::Relu);
+            }
+            c = cout;
+        }
+        ModelSpec {
+            name: format!("stack{}", depth.max(1)),
+            in_channels: cin,
+            hw,
+            layers,
+        }
+    }
+
+    /// Small LeNet-ish MNIST stack: three Winograd-adder body layers
+    /// (`in_channels -> 8 -> 16 -> 16`) with scale/shift + relu between
+    /// them (cf. `opcount::lenet_3x3`).
+    pub fn lenetish(in_channels: usize, hw: usize, variant: Variant)
+                    -> ModelSpec {
+        let mut layers = Vec::new();
+        let mut c = in_channels;
+        for (i, &cout) in [8usize, 16, 16].iter().enumerate() {
+            layers.push(LayerKind::WinoAdder3x3 {
+                cin: c, cout, pad: 1, variant,
+            });
+            layers.push(LayerKind::ScaleShift { channels: cout });
+            if i < 2 {
+                layers.push(LayerKind::Relu);
+            }
+            c = cout;
+        }
+        ModelSpec {
+            name: "lenetish".into(),
+            in_channels,
+            hw,
+            layers,
+        }
+    }
+
+    /// The paper's CIFAR ResNet-20-ish adder body: 3 stages x 3 blocks
+    /// x 2 Winograd-adder 3x3 layers over the 16/32/64 channel
+    /// schedule, with direct-adder 1x1 projections at stage
+    /// transitions (`opcount::resnet20`'s counted stack, served at
+    /// constant spatial extent — see the module geometry note).
+    pub fn resnet20ish(hw: usize, variant: Variant) -> ModelSpec {
+        let mut layers = Vec::new();
+        let mut cprev = 16usize;
+        for (s, &c) in [16usize, 32, 64].iter().enumerate() {
+            for b in 0..3 {
+                if s > 0 && b == 0 {
+                    // stage transition: 1x1 projection shortcut
+                    layers.push(LayerKind::DirectAdder1x1 {
+                        cin: cprev, cout: c,
+                    });
+                    layers.push(LayerKind::ScaleShift { channels: c });
+                    layers.push(LayerKind::Relu);
+                }
+                for _conv in 0..2 {
+                    layers.push(LayerKind::WinoAdder3x3 {
+                        cin: c, cout: c, pad: 1, variant,
+                    });
+                    layers.push(LayerKind::ScaleShift { channels: c });
+                    layers.push(LayerKind::Relu);
+                }
+                cprev = c;
+            }
+        }
+        layers.pop(); // features stay signed after the last body layer
+        ModelSpec {
+            name: "resnet20ish".into(),
+            in_channels: 16,
+            hw,
+            layers,
+        }
+    }
+
+    /// Export to the Table-1 op-count vocabulary: one
+    /// [`opcount::LayerSpec`](LayerSpec) per counted (adder) layer;
+    /// scale/shift and relu are not counted, matching the paper's
+    /// "adder part only" convention.
+    pub fn layer_specs(&self) -> Vec<LayerSpec> {
+        let mut out = Vec::new();
+        let mut hw = self.hw;
+        for (i, l) in self.layers.iter().enumerate() {
+            match *l {
+                LayerKind::WinoAdder3x3 { cin, cout, pad, .. } => {
+                    let out_hw = hw + 2 * pad - 2;
+                    out.push(LayerSpec {
+                        name: format!("layer{i}"),
+                        cin, cout, out_hw, k: 3, stride: 1,
+                    });
+                    hw = out_hw;
+                }
+                LayerKind::DirectAdder1x1 { cin, cout } => {
+                    out.push(LayerSpec {
+                        name: format!("layer{i}"),
+                        cin, cout, out_hw: hw, k: 1, stride: 1,
+                    });
+                }
+                LayerKind::ScaleShift { .. } | LayerKind::Relu => {}
+            }
+        }
+        out
+    }
+}
+
+/// Per-layer parameter tensor (flat data + shape, manifest-style).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerParams {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// The parameters of a [`ModelSpec`], one entry per layer
+/// (parameterless layers get an empty entry so indices line up).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelWeights {
+    pub params: Vec<LayerParams>,
+}
+
+impl ModelWeights {
+    /// Seeded synthetic init, deterministic in `seed`. Winograd-domain
+    /// and 1x1 weights are standard normal (a single-layer spec
+    /// reproduces the pre-plan server's `Tensor::randn` weights
+    /// exactly); scale/shift draws a **negative** scale so the adder's
+    /// non-positive outputs land mostly positive before relu — the
+    /// role BN plays in the paper's networks.
+    pub fn init(spec: &ModelSpec, seed: u64) -> ModelWeights {
+        let mut rng = Rng::new(seed);
+        let params = spec.layers.iter().enumerate().map(|(i, l)| {
+            let shape = l.param_shape();
+            let numel: usize = shape.iter().product();
+            let data = match l {
+                LayerKind::WinoAdder3x3 { .. }
+                | LayerKind::DirectAdder1x1 { .. } => {
+                    rng.normal_vec(numel)
+                }
+                LayerKind::ScaleShift { channels } => {
+                    let mut d = Vec::with_capacity(2 * channels);
+                    for _ in 0..*channels {
+                        d.push(-(0.05 + 0.02 * rng.normal().abs()));
+                    }
+                    for _ in 0..*channels {
+                        d.push(0.1 * rng.normal());
+                    }
+                    d
+                }
+                LayerKind::Relu => Vec::new(),
+            };
+            LayerParams {
+                name: format!("layer{i}.{}", param_leaf(l)),
+                shape: if numel == 0 { Vec::new() } else { shape },
+                data,
+            }
+        }).collect();
+        ModelWeights { params }
+    }
+
+    /// Total parameter scalars across the stack.
+    pub fn num_scalars(&self) -> usize {
+        self.params.iter().map(|p| p.data.len()).sum()
+    }
+
+    /// Shape-check against a spec (load-time integrity).
+    pub fn check(&self, spec: &ModelSpec) -> Result<()> {
+        ensure!(self.params.len() == spec.layers.len(),
+                "weights carry {} layers, spec has {}",
+                self.params.len(), spec.layers.len());
+        for (i, (p, l)) in
+            self.params.iter().zip(&spec.layers).enumerate()
+        {
+            let want: usize = l.param_shape().iter().product();
+            ensure!(p.data.len() == want,
+                    "layer {i}: {} scalars, spec wants {want}",
+                    p.data.len());
+        }
+        Ok(())
+    }
+}
+
+fn param_leaf(l: &LayerKind) -> &'static str {
+    match l {
+        LayerKind::WinoAdder3x3 { .. } => "w_hat",
+        LayerKind::DirectAdder1x1 { .. } => "w",
+        LayerKind::ScaleShift { .. } => "scale_shift",
+        LayerKind::Relu => "none",
+    }
+}
+
+/// Save `spec` + `weights` under `dir` as `model.json` +
+/// `model.params.bin` (raw little-endian f32, params in layer order —
+/// the `aot.py` interchange conventions).
+pub fn save(dir: &Path, spec: &ModelSpec, weights: &ModelWeights)
+            -> Result<()> {
+    spec.validate()?; // e.g. an out-of-range Balanced(n) must not
+                      // silently serialize as a different variant
+    weights.check(spec)?;
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let mut layers = Vec::new();
+    for l in &spec.layers {
+        let mut m = BTreeMap::new();
+        m.insert("kind".into(), Json::Str(l.tag().into()));
+        match *l {
+            LayerKind::WinoAdder3x3 { cin, cout, pad, variant } => {
+                m.insert("cin".into(), Json::Num(cin as f64));
+                m.insert("cout".into(), Json::Num(cout as f64));
+                m.insert("pad".into(), Json::Num(pad as f64));
+                m.insert("variant".into(),
+                         Json::Str(variant.name().into()));
+            }
+            LayerKind::DirectAdder1x1 { cin, cout } => {
+                m.insert("cin".into(), Json::Num(cin as f64));
+                m.insert("cout".into(), Json::Num(cout as f64));
+            }
+            LayerKind::ScaleShift { channels } => {
+                m.insert("channels".into(), Json::Num(channels as f64));
+            }
+            LayerKind::Relu => {}
+        }
+        layers.push(Json::Obj(m));
+    }
+    let params: Vec<Json> = weights.params.iter()
+        .filter(|p| !p.data.is_empty())
+        .map(|p| {
+            let mut m = BTreeMap::new();
+            m.insert("name".into(), Json::Str(p.name.clone()));
+            m.insert("shape".into(), Json::Arr(
+                p.shape.iter().map(|&d| Json::Num(d as f64)).collect()));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut config = BTreeMap::new();
+    config.insert("arch".into(), Json::Str(spec.name.clone()));
+    config.insert("in_channels".into(),
+                  Json::Num(spec.in_channels as f64));
+    config.insert("image_size".into(), Json::Num(spec.hw as f64));
+    let mut root = BTreeMap::new();
+    root.insert("config".into(), Json::Obj(config));
+    root.insert("layers".into(), Json::Arr(layers));
+    root.insert("params".into(), Json::Arr(params));
+    root.insert("params_bin".into(),
+                Json::Str("model.params.bin".into()));
+    root.insert("num_param_scalars".into(),
+                Json::Num(weights.num_scalars() as f64));
+    std::fs::write(dir.join("model.json"), Json::Obj(root).dump())
+        .with_context(|| format!("writing {}",
+                                 dir.join("model.json").display()))?;
+    let flat: Vec<f32> = weights.params.iter()
+        .flat_map(|p| p.data.iter().copied())
+        .collect();
+    io::write_f32(&dir.join("model.params.bin"), &flat)
+}
+
+/// Load a model saved by [`save`].
+pub fn load(dir: &Path) -> Result<(ModelSpec, ModelWeights)> {
+    let path = dir.join("model.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+    let config = j.get("config")
+        .ok_or_else(|| anyhow!("model.json: missing config"))?;
+    let field_usize = |v: &Json, k: &str| -> Result<usize> {
+        v.get(k).and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("model.json: missing field {k:?}"))
+    };
+    let mut layers = Vec::new();
+    for (i, l) in j.get("layers").and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("model.json: missing layers"))?
+        .iter().enumerate()
+    {
+        let kind = l.get("kind").and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("layer {i}: missing kind"))?;
+        layers.push(match kind {
+            "wino_adder_3x3" => {
+                let variant = l.get("variant").and_then(Json::as_str)
+                    .and_then(Variant::parse)
+                    .ok_or_else(|| anyhow!("layer {i}: bad variant"))?;
+                LayerKind::WinoAdder3x3 {
+                    cin: field_usize(l, "cin")?,
+                    cout: field_usize(l, "cout")?,
+                    pad: field_usize(l, "pad")?,
+                    variant,
+                }
+            }
+            "direct_adder_1x1" => LayerKind::DirectAdder1x1 {
+                cin: field_usize(l, "cin")?,
+                cout: field_usize(l, "cout")?,
+            },
+            "scale_shift" => LayerKind::ScaleShift {
+                channels: field_usize(l, "channels")?,
+            },
+            "relu" => LayerKind::Relu,
+            other => bail!("layer {i}: unknown kind {other:?}"),
+        });
+    }
+    let spec = ModelSpec {
+        name: config.get("arch").and_then(Json::as_str)
+            .unwrap_or("loaded").to_string(),
+        in_channels: field_usize(config, "in_channels")?,
+        hw: field_usize(config, "image_size")?,
+        layers,
+    };
+    spec.validate()?;
+    let bin = j.get("params_bin").and_then(Json::as_str)
+        .unwrap_or("model.params.bin");
+    let flat = io::read_f32(&dir.join(bin))?;
+    let want: usize = j.get("num_param_scalars").and_then(Json::as_usize)
+        .unwrap_or(flat.len());
+    ensure!(flat.len() == want,
+            "params bin has {} scalars, manifest says {want}",
+            flat.len());
+    let mut off = 0usize;
+    let mut params = Vec::new();
+    for (i, l) in spec.layers.iter().enumerate() {
+        let shape = l.param_shape();
+        let numel: usize = shape.iter().product();
+        ensure!(off + numel <= flat.len(),
+                "params bin truncated at layer {i}");
+        params.push(LayerParams {
+            name: format!("layer{i}.{}", param_leaf(l)),
+            shape: if numel == 0 { Vec::new() } else { shape },
+            data: flat[off..off + numel].to_vec(),
+        });
+        off += numel;
+    }
+    ensure!(off == flat.len(),
+            "params bin has {} trailing scalars", flat.len() - off);
+    let weights = ModelWeights { params };
+    weights.check(&spec)?;
+    Ok((spec, weights))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opcount::{count_model, Mode};
+
+    #[test]
+    fn constructors_validate() {
+        for spec in [
+            ModelSpec::single_layer(3, 5, 8, Variant::Balanced(0)),
+            ModelSpec::stack(4, 2, 6, 10, Variant::Std),
+            ModelSpec::lenetish(1, 16, Variant::Balanced(1)),
+            ModelSpec::resnet20ish(32, Variant::Balanced(0)),
+        ] {
+            let (c, hw) = spec.validate()
+                .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+            assert!(c >= 1 && hw >= 2, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn resnet20ish_counts_like_the_paper_stack() {
+        // 18 wino body layers + 2 projection shortcuts, like
+        // opcount::resnet20's counted stack
+        let spec = ModelSpec::resnet20ish(32, Variant::Balanced(0));
+        assert_eq!(spec.wino_layers(), 18);
+        let specs = spec.layer_specs();
+        assert_eq!(specs.len(), 20);
+        assert_eq!(specs.iter().filter(|l| l.k == 1).count(), 2);
+        // every exported body layer is Winograd-eligible
+        assert!(specs.iter().filter(|l| l.k == 3)
+                .all(|l| l.winogradable()));
+        // and the op model sees real savings on the stack
+        let adder = count_model(&specs, Mode::AdderNet);
+        let wino = count_model(&specs, Mode::WinogradAdderNet);
+        assert!(wino.adds < adder.adds);
+        assert_eq!(wino.muls, 0);
+    }
+
+    #[test]
+    fn bad_channel_chain_is_rejected() {
+        let spec = ModelSpec {
+            name: "broken".into(),
+            in_channels: 3,
+            hw: 8,
+            layers: vec![
+                LayerKind::WinoAdder3x3 {
+                    cin: 3, cout: 4, pad: 1,
+                    variant: Variant::Balanced(0),
+                },
+                LayerKind::ScaleShift { channels: 5 }, // wrong
+            ],
+        };
+        let err = spec.validate().unwrap_err();
+        assert!(format!("{err}").contains("channels"), "{err}");
+    }
+
+    #[test]
+    fn odd_hw_is_rejected() {
+        let spec = ModelSpec::single_layer(2, 2, 7, Variant::Std);
+        let err = spec.validate().unwrap_err();
+        assert!(format!("{err}").contains("hw"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_variant_is_rejected() {
+        let spec =
+            ModelSpec::single_layer(2, 2, 8, Variant::Balanced(4));
+        let err = spec.validate().unwrap_err();
+        assert!(format!("{err}").contains("variant"), "{err}");
+        // and save refuses rather than silently writing "std"
+        let dir = std::env::temp_dir().join("wino_adder_model_badvar");
+        let weights = ModelWeights::init(&spec, 1);
+        assert!(save(&dir, &spec, &weights).is_err());
+    }
+
+    #[test]
+    fn zero_cout_is_rejected() {
+        // the pre-plan server rejected --cout 0 as a CLI error; the
+        // spec validator must too
+        let spec = ModelSpec::single_layer(2, 0, 8, Variant::Std);
+        let err = spec.validate().unwrap_err();
+        assert!(format!("{err}").contains("cout"), "{err}");
+        let spec = ModelSpec {
+            name: "p0".into(),
+            in_channels: 2,
+            hw: 8,
+            layers: vec![LayerKind::DirectAdder1x1 { cin: 2, cout: 0 }],
+        };
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn init_is_deterministic_and_shaped() {
+        let spec = ModelSpec::lenetish(2, 8, Variant::Balanced(0));
+        let a = ModelWeights::init(&spec, 5);
+        let b = ModelWeights::init(&spec, 5);
+        assert_eq!(a, b);
+        a.check(&spec).unwrap();
+        assert!(a.num_scalars() > 0);
+        let c = ModelWeights::init(&spec, 6);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn single_layer_init_matches_tensor_randn() {
+        // the pre-plan server drew Tensor::randn(Rng::new(seed),
+        // [cout, cin, 4, 4]); a single-layer spec must reproduce it
+        let spec = ModelSpec::single_layer(3, 2, 8, Variant::Std);
+        let w = ModelWeights::init(&spec, 7);
+        let mut rng = Rng::new(7);
+        assert_eq!(w.params[0].data, rng.normal_vec(2 * 3 * 16));
+    }
+
+    #[test]
+    fn scale_shift_init_flips_sign() {
+        let spec = ModelSpec::stack(1, 2, 3, 8, Variant::Std);
+        let w = ModelWeights::init(&spec, 9);
+        let ss = &w.params[1];
+        assert_eq!(ss.shape, vec![2, 3]);
+        assert!(ss.data[..3].iter().all(|&s| s < 0.0),
+                "scales must be negative: {:?}", &ss.data[..3]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("wino_adder_model_test");
+        let spec = ModelSpec {
+            name: "round".into(),
+            in_channels: 2,
+            hw: 8,
+            layers: vec![
+                LayerKind::WinoAdder3x3 {
+                    cin: 2, cout: 4, pad: 1,
+                    variant: Variant::Balanced(2),
+                },
+                LayerKind::ScaleShift { channels: 4 },
+                LayerKind::Relu,
+                LayerKind::DirectAdder1x1 { cin: 4, cout: 3 },
+            ],
+        };
+        let weights = ModelWeights::init(&spec, 11);
+        save(&dir, &spec, &weights).unwrap();
+        let (spec2, weights2) = load(&dir).unwrap();
+        assert_eq!(spec, spec2);
+        assert_eq!(weights, weights2);
+    }
+
+    #[test]
+    fn load_rejects_truncated_bin() {
+        let dir = std::env::temp_dir().join("wino_adder_model_trunc");
+        let spec = ModelSpec::single_layer(2, 2, 8, Variant::Std);
+        let weights = ModelWeights::init(&spec, 1);
+        save(&dir, &spec, &weights).unwrap();
+        io::write_f32(&dir.join("model.params.bin"), &[0.0; 3])
+            .unwrap();
+        assert!(load(&dir).is_err());
+    }
+}

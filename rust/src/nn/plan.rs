@@ -1,0 +1,501 @@
+//! Compiled multi-layer execution plans with preallocated workspaces.
+//!
+//! A [`ModelPlan`] is a [`ModelSpec`](super::model::ModelSpec) +
+//! [`ModelWeights`](super::model::ModelWeights) compiled for one fixed
+//! batch size (the serving engine keeps one plan per batcher bucket).
+//! Compilation precomputes the tile geometry `(t, th, tw)` of every
+//! Winograd layer, materializes per-layer weights, and pre-sizes:
+//!
+//! * a [`Workspace`] — input-tile, weight, and tile-domain-output
+//!   buffers (f32 **and** the int8 datapath's i16/i32 twins) plus the
+//!   per-shard stitch buffers of the parallel backends;
+//! * two ping-pong activation tensors sized to the largest layer
+//!   boundary.
+//!
+//! [`ModelPlan::forward`] then runs the whole stack through a
+//! [`Backend`](super::backend::Backend)'s `forward_into` with **zero
+//! steady-state heap allocation**: every buffer is reused across
+//! requests (`Vec::resize`/`clear` within reserved capacity), verified
+//! by [`ModelPlan::workspace_footprint`] staying constant across runs.
+//!
+//! Shared read-only buffers live behind `Arc` so the thread-pool
+//! backends can hand clones to workers: input tiles in the
+//! workspace's `Arc<Vec<_>>` (between requests the engine thread is
+//! the only holder, so [`arc_vec_mut`] recovers `&mut` access without
+//! copying), and layer weights as `Arc<Tensor>`s inside the step
+//! list — which is itself shared across every bucket's plan, so a
+//! model's weights exist exactly once no matter how many buckets
+//! serve it (the plan passes the backend shared ownership via
+//! [`Workspace::w_shared`], making the parallel f32 weight path
+//! copy-free).
+
+use std::sync::Arc;
+
+use super::backend::Backend;
+use super::matrices::Variant;
+use super::model::{LayerKind, ModelSpec, ModelWeights};
+use super::wino_adder;
+use super::Tensor;
+use crate::util::error::{Context, Result};
+
+/// Reusable scratch buffers for `Backend::forward_into`.
+///
+/// All fields are plain buffers the backends resize within capacity;
+/// `Arc`-wrapped ones are shared read-only with pool workers during a
+/// call and recovered via [`arc_vec_mut`] afterwards.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// f32 input tiles `(T, C, 16)`.
+    pub d_hat: Arc<Vec<f32>>,
+    /// Shared-ownership handle for the **same** tensor passed as
+    /// `w_hat`, set by the planned executor before each Winograd step
+    /// (the plan owns its weights in `Arc`s, so handing one over is
+    /// free). A pool-backed backend `take()`s it to ship weights to
+    /// workers with zero copying; when `None` (plain `forward_into`
+    /// callers) the parallel backend falls back to cloning `w_hat`
+    /// once per call. The int8 path ignores it — its quantized
+    /// weights depend on each request's activation scale and are
+    /// rebuilt into `w_i16` every call.
+    pub w_shared: Option<Arc<Tensor>>,
+    /// f32 tile-domain output `(T, O, 4)`.
+    pub y_tiles: Vec<f32>,
+    /// per-shard stitch buffers (parallel f32 backend).
+    pub shard_f32: Vec<Vec<f32>>,
+    /// quantized input activations (int8 backend).
+    pub qx: Vec<i8>,
+    /// i16 input tiles `(T, C, 16)` (int8 datapath).
+    pub d_hat_i16: Arc<Vec<i16>>,
+    /// i16 quantized weights `(O, C, 16)`.
+    pub w_i16: Arc<Vec<i16>>,
+    /// i32 tile-domain accumulators `(T, O, 4)`.
+    pub y_tiles_i32: Vec<i32>,
+    /// per-shard stitch buffers (int8 backend).
+    pub shard_i32: Vec<Vec<i32>>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Total reserved bytes across all buffers — constant across
+    /// steady-state forwards (the zero-allocation invariant's
+    /// observable).
+    pub fn footprint_bytes(&self) -> usize {
+        // w_shared is excluded: it's a borrowed view of plan-owned
+        // weights, not workspace storage
+        self.d_hat.capacity() * 4
+            + self.y_tiles.capacity() * 4
+            + self.shard_f32.iter().map(|b| b.capacity() * 4)
+                .sum::<usize>()
+            + self.qx.capacity()
+            + self.d_hat_i16.capacity() * 2
+            + self.w_i16.capacity() * 2
+            + self.y_tiles_i32.capacity() * 4
+            + self.shard_i32.iter().map(|b| b.capacity() * 4)
+                .sum::<usize>()
+    }
+}
+
+/// Recover `&mut` access to an `Arc`-shared buffer once the engine
+/// thread is the only holder again (always true between requests — the
+/// pool workers drop their clones before a scatter returns). Falls
+/// back to a fresh buffer if a clone somehow leaked, so this never
+/// blocks or panics.
+pub fn arc_vec_mut<T>(arc: &mut Arc<Vec<T>>) -> &mut Vec<T> {
+    if Arc::get_mut(arc).is_none() {
+        *arc = Arc::new(Vec::new());
+    }
+    Arc::get_mut(arc).expect("arc unique after reset")
+}
+
+/// One compiled layer: resolved weights + precomputed geometry.
+/// Weights live in `Arc`s and the whole step list is itself
+/// `Arc`-shared across every batch bucket's plan
+/// ([`ModelPlan::compile_buckets`]), so a model's weights exist
+/// exactly once in memory no matter how many buckets serve it.
+enum PlanStep {
+    Wino {
+        w_hat: Arc<Tensor>,
+        pad: usize,
+        variant: Variant,
+        /// per-sample tile grid (batch-independent; a batch-`b` plan
+        /// runs `b * th * tw` tiles through this layer)
+        th: usize,
+        tw: usize,
+    },
+    Direct1x1 {
+        /// `(cout, cin)` row-major
+        w: Vec<f32>,
+        cout: usize,
+    },
+    ScaleShift {
+        scale: Vec<f32>,
+        shift: Vec<f32>,
+    },
+    Relu,
+}
+
+/// Batch-independent buffer maxima gathered while building steps;
+/// multiplied by the bucket's batch size when a plan is instantiated.
+struct StepMaxima {
+    /// max over wino layers of `th * tw * cin * 16` (d_hat floats)
+    d_per: usize,
+    /// max over wino layers of `th * tw * cout * 4` (tile-out floats)
+    y_per: usize,
+    /// max over layer boundaries (input included) of `c * hw * hw`
+    act_per: usize,
+    /// final (channels, hw)
+    out_c: usize,
+    out_hw: usize,
+}
+
+/// A model compiled for one batch size; owns its workspace and
+/// activation ping-pong buffers. See the module docs.
+pub struct ModelPlan {
+    batch: usize,
+    in_dims: [usize; 4],
+    out_dims: [usize; 4],
+    /// shared across every bucket's plan for the same model
+    steps: Arc<Vec<PlanStep>>,
+    ws: Workspace,
+    act_a: Tensor,
+    act_b: Tensor,
+}
+
+impl ModelPlan {
+    /// Compile `spec` + `weights` for a fixed `batch`. Validates the
+    /// stack, precomputes per-layer tile geometry, and pre-reserves
+    /// the tile/accumulator workspace and both activation buffers.
+    /// (Per-shard stitch buffers and the int8 twins are sized by the
+    /// first request; after that warmup, forwards allocate nothing.)
+    pub fn compile(spec: &ModelSpec, weights: &ModelWeights,
+                   batch: usize) -> Result<ModelPlan> {
+        let mut plans = Self::compile_buckets(spec, weights, &[batch])?;
+        Ok(plans.pop().expect("one bucket compiled").1)
+    }
+
+    /// Compile one plan per batch bucket. The step list — and with it
+    /// every weight tensor — is built once and `Arc`-shared across
+    /// the returned plans; only the workspaces and activation buffers
+    /// are per-bucket.
+    pub fn compile_buckets(spec: &ModelSpec, weights: &ModelWeights,
+                           buckets: &[usize])
+                           -> Result<Vec<(usize, ModelPlan)>> {
+        spec.validate()
+            .with_context(|| format!("compiling {:?}", spec.name))?;
+        weights.check(spec)?;
+        assert!(!buckets.is_empty() && buckets.iter().all(|&b| b >= 1),
+                "buckets must be non-empty, all >= 1");
+        let (steps, m) = build_steps(spec, weights)?;
+        let steps = Arc::new(steps);
+        Ok(buckets.iter().map(|&batch| {
+            let mut ws = Workspace::new();
+            arc_vec_mut(&mut ws.d_hat).reserve(batch * m.d_per);
+            ws.y_tiles.reserve(batch * m.y_per);
+            let act = |cap: usize| Tensor {
+                data: Vec::with_capacity(cap),
+                dims: [0, 0, 0, 0],
+            };
+            let max_act = batch * m.act_per;
+            (batch, ModelPlan {
+                batch,
+                in_dims: [batch, spec.in_channels, spec.hw, spec.hw],
+                out_dims: [batch, m.out_c, m.out_hw, m.out_hw],
+                steps: Arc::clone(&steps),
+                ws,
+                act_a: act(max_act),
+                act_b: act(max_act),
+            })
+        }).collect())
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Flat input length (`batch * cin * hw * hw`).
+    pub fn in_len(&self) -> usize {
+        self.in_dims.iter().product()
+    }
+
+    /// Flat output length for the whole batch.
+    pub fn out_len(&self) -> usize {
+        self.out_dims.iter().product()
+    }
+
+    /// Flat output length per sample.
+    pub fn out_sample_len(&self) -> usize {
+        self.out_len() / self.batch
+    }
+
+    /// Total reserved buffer bytes (workspace + activations); constant
+    /// across steady-state forwards.
+    pub fn workspace_footprint(&self) -> usize {
+        self.ws.footprint_bytes()
+            + self.act_a.data.capacity() * 4
+            + self.act_b.data.capacity() * 4
+    }
+
+    /// One-line plan description for serve logs.
+    pub fn summary(&self) -> String {
+        let wino: Vec<&PlanStep> = self.steps.iter()
+            .filter(|s| matches!(s, PlanStep::Wino { .. }))
+            .collect();
+        let max_t = wino.iter().map(|s| match s {
+            PlanStep::Wino { th, tw, .. } => self.batch * th * tw,
+            _ => 0,
+        }).max().unwrap_or(0);
+        let (th, tw) = wino.first().map(|s| match s {
+            PlanStep::Wino { th, tw, .. } => (*th, *tw),
+            _ => (0, 0),
+        }).unwrap_or((0, 0));
+        format!("b{}: {} steps ({} wino, {}x{} tiles, max t={}), \
+                 buffers {:.1} KiB",
+                self.batch, self.steps.len(), wino.len(), th, tw,
+                max_t, self.workspace_footprint() as f64 / 1024.0)
+    }
+
+    /// Run the whole stack on `x` (flat `batch * cin * hw * hw`
+    /// values), returning the flat output activations. Steady state
+    /// performs zero heap allocation: activations ping-pong between
+    /// two preallocated tensors and `backend.forward_into` reuses the
+    /// plan's [`Workspace`].
+    pub fn forward(&mut self, backend: &dyn Backend, x: &[f32])
+                   -> &[f32] {
+        assert_eq!(x.len(), self.in_dims.iter().product::<usize>(),
+                   "input length");
+        self.act_a.dims = self.in_dims;
+        self.act_a.data.clear();
+        self.act_a.data.extend_from_slice(x);
+        for step in self.steps.iter() {
+            match step {
+                PlanStep::Wino { w_hat, pad, variant, .. } => {
+                    // hand the backend shared ownership of the very
+                    // tensor passed as `w_hat`, so pool-backed
+                    // backends ship weights to workers without a copy
+                    self.ws.w_shared = Some(Arc::clone(w_hat));
+                    backend.forward_into(&self.act_a, w_hat, *pad,
+                                         *variant, &mut self.ws,
+                                         &mut self.act_b);
+                    std::mem::swap(&mut self.act_a, &mut self.act_b);
+                }
+                PlanStep::Direct1x1 { w, cout } => {
+                    direct_adder_1x1_into(&self.act_a, w, *cout,
+                                          &mut self.act_b);
+                    std::mem::swap(&mut self.act_a, &mut self.act_b);
+                }
+                PlanStep::ScaleShift { scale, shift } => {
+                    scale_shift_inplace(&mut self.act_a, scale, shift);
+                }
+                PlanStep::Relu => relu_inplace(&mut self.act_a),
+            }
+        }
+        debug_assert_eq!(self.act_a.dims, self.out_dims);
+        &self.act_a.data
+    }
+}
+
+/// Resolve spec + weights into executable steps (weights in `Arc`s)
+/// plus the batch-independent buffer maxima. Called once per model by
+/// [`ModelPlan::compile_buckets`]; the result is shared by every
+/// bucket's plan.
+fn build_steps(spec: &ModelSpec, weights: &ModelWeights)
+               -> Result<(Vec<PlanStep>, StepMaxima)> {
+    let mut steps = Vec::with_capacity(spec.layers.len());
+    let (mut c, mut hw) = (spec.in_channels, spec.hw);
+    let mut m = StepMaxima {
+        d_per: 0,
+        y_per: 0,
+        act_per: c * hw * hw,
+        out_c: c,
+        out_hw: hw,
+    };
+    for (i, l) in spec.layers.iter().enumerate() {
+        let p = &weights.params[i];
+        match *l {
+            LayerKind::WinoAdder3x3 { cin, cout, pad, variant } => {
+                let (_, th, tw) =
+                    wino_adder::tile_geometry([1, cin, hw, hw], pad);
+                m.d_per = m.d_per.max(th * tw * cin * 16);
+                m.y_per = m.y_per.max(th * tw * cout * 4);
+                steps.push(PlanStep::Wino {
+                    w_hat: Arc::new(Tensor::from_vec(
+                        p.data.clone(), [cout, cin, 4, 4])),
+                    pad, variant, th, tw,
+                });
+            }
+            LayerKind::DirectAdder1x1 { cout, .. } => {
+                steps.push(PlanStep::Direct1x1 {
+                    w: p.data.clone(),
+                    cout,
+                });
+            }
+            LayerKind::ScaleShift { channels } => {
+                steps.push(PlanStep::ScaleShift {
+                    scale: p.data[..channels].to_vec(),
+                    shift: p.data[channels..].to_vec(),
+                });
+            }
+            LayerKind::Relu => steps.push(PlanStep::Relu),
+        }
+        let (nc, nhw) = l.apply_geom(c, hw)?;
+        c = nc;
+        hw = nhw;
+        m.act_per = m.act_per.max(c * hw * hw);
+    }
+    m.out_c = c;
+    m.out_hw = hw;
+    Ok((steps, m))
+}
+
+/// Direct-adder 1x1 projection (Eq. 1 with k=1) into a caller buffer:
+/// `out[n,o,h,w] = -sum_c |w[o,c] - x[n,c,h,w]|`. Spatial extent is
+/// preserved; `out.data` is resized in place (no allocation once
+/// capacity suffices).
+pub fn direct_adder_1x1_into(x: &Tensor, w: &[f32], cout: usize,
+                             out: &mut Tensor) {
+    let [n, c, h, wd] = x.dims;
+    assert_eq!(w.len(), cout * c, "1x1 weight length");
+    let hw = h * wd;
+    out.dims = [n, cout, h, wd];
+    out.data.resize(n * cout * hw, 0.0);
+    for in_ in 0..n {
+        for oc in 0..cout {
+            let orow =
+                &mut out.data[(in_ * cout + oc) * hw..][..hw];
+            orow.fill(0.0);
+            for ic in 0..c {
+                let wv = w[oc * c + ic];
+                let xrow = &x.data[(in_ * c + ic) * hw..][..hw];
+                for (o, &xv) in orow.iter_mut().zip(xrow) {
+                    *o -= (wv - xv).abs();
+                }
+            }
+        }
+    }
+}
+
+/// Per-channel `x = x * scale[c] + shift[c]` in place (folded BN).
+pub fn scale_shift_inplace(x: &mut Tensor, scale: &[f32],
+                           shift: &[f32]) {
+    let [n, c, h, w] = x.dims;
+    assert_eq!(scale.len(), c, "scale length");
+    assert_eq!(shift.len(), c, "shift length");
+    let hw = h * w;
+    for in_ in 0..n {
+        for ic in 0..c {
+            let (sc, sh) = (scale[ic], shift[ic]);
+            for v in &mut x.data[(in_ * c + ic) * hw..][..hw] {
+                *v = *v * sc + sh;
+            }
+        }
+    }
+}
+
+/// Elementwise `max(0, x)` in place.
+pub fn relu_inplace(x: &mut Tensor) {
+    for v in &mut x.data {
+        *v = v.max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::backend::ScalarBackend;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::all_close;
+
+    #[test]
+    fn direct_1x1_matches_hand_reference() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&mut rng, [2, 3, 4, 4]);
+        let w = rng.normal_vec(5 * 3);
+        let mut out = Tensor::zeros([1, 1, 1, 1]);
+        direct_adder_1x1_into(&x, &w, 5, &mut out);
+        assert_eq!(out.dims, [2, 5, 4, 4]);
+        for in_ in 0..2 {
+            for oc in 0..5 {
+                for i in 0..4 {
+                    for j in 0..4 {
+                        let mut s = 0.0f32;
+                        for ic in 0..3 {
+                            s += (w[oc * 3 + ic] - x.at(in_, ic, i, j))
+                                .abs();
+                        }
+                        let got = out.at(in_, oc, i, j);
+                        assert!((got + s).abs() < 1e-5,
+                                "{got} vs {}", -s);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scale_shift_and_relu() {
+        let mut x = Tensor::from_vec(vec![-2.0, 1.0, 4.0, -1.0],
+                                     [1, 2, 1, 2]);
+        scale_shift_inplace(&mut x, &[2.0, -1.0], &[1.0, 0.5]);
+        assert_eq!(x.data, vec![-3.0, 3.0, -3.5, 1.5]);
+        relu_inplace(&mut x);
+        assert_eq!(x.data, vec![0.0, 3.0, 0.0, 1.5]);
+    }
+
+    #[test]
+    fn plan_matches_manual_composition_scalar() {
+        use crate::nn::model::ModelSpec;
+        use crate::nn::model::ModelWeights;
+        let spec = ModelSpec::stack(2, 2, 3, 8, Variant::Balanced(0));
+        let weights = ModelWeights::init(&spec, 21);
+        let mut plan = ModelPlan::compile(&spec, &weights, 2).unwrap();
+        let mut rng = Rng::new(5);
+        let x = rng.normal_vec(plan.in_len());
+        let be = ScalarBackend;
+        let got = plan.forward(&be, &x).to_vec();
+
+        // manual composition through the public single-layer APIs
+        let mut cur = Tensor::from_vec(x, [2, 2, 8, 8]);
+        for (i, l) in spec.layers.iter().enumerate() {
+            let p = &weights.params[i];
+            match *l {
+                LayerKind::WinoAdder3x3 { cin, cout, pad, variant } => {
+                    let w_hat = Tensor::from_vec(p.data.clone(),
+                                                 [cout, cin, 4, 4]);
+                    cur = be.forward(&cur, &w_hat, pad, variant);
+                }
+                LayerKind::ScaleShift { channels } => {
+                    scale_shift_inplace(&mut cur, &p.data[..channels],
+                                        &p.data[channels..]);
+                }
+                LayerKind::Relu => relu_inplace(&mut cur),
+                LayerKind::DirectAdder1x1 { cout, .. } => {
+                    let mut t = Tensor::zeros([1, 1, 1, 1]);
+                    direct_adder_1x1_into(&cur, &p.data, cout, &mut t);
+                    cur = t;
+                }
+            }
+        }
+        all_close(&got, &cur.data, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn footprint_is_stable_across_forwards() {
+        use crate::nn::model::{ModelSpec, ModelWeights};
+        let spec = ModelSpec::lenetish(2, 8, Variant::Balanced(1));
+        let weights = ModelWeights::init(&spec, 2);
+        let mut plan = ModelPlan::compile(&spec, &weights, 4).unwrap();
+        let be = ScalarBackend;
+        let mut rng = Rng::new(9);
+        let x = rng.normal_vec(plan.in_len());
+        let first = plan.forward(&be, &x).to_vec();
+        let fp = plan.workspace_footprint();
+        for _ in 0..5 {
+            let again = plan.forward(&be, &x).to_vec();
+            assert_eq!(again, first, "plan is not pure");
+            assert_eq!(plan.workspace_footprint(), fp,
+                       "workspace grew after warmup");
+        }
+    }
+}

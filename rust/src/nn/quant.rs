@@ -241,16 +241,36 @@ pub fn input_tiles_i16(x: &QTensor, pad: usize, variant: Variant)
             "padded H, W must be even and >= 4");
     let (th, tw) = ((hp - 2) / 2, (wp - 2) / 2);
     let t = n * th * tw;
+    let mut out = vec![0i16; t * c * 16];
+    input_tiles_i16_into(&x.data, x.dims, pad, variant, &mut out);
+    (out, n, th, tw)
+}
+
+/// Allocation-free twin of [`input_tiles_i16`] over raw int8 data:
+/// writes `d_hat (T, C, 16)` into the caller's slice (exactly
+/// `T * C * 16` long) and returns `(n, th, tw)`. The planned executor
+/// (`nn::plan`) reuses one workspace slice across requests.
+pub fn input_tiles_i16_into(data: &[i8], dims: [usize; 4], pad: usize,
+                            variant: Variant, out: &mut [i16])
+                            -> (usize, usize, usize) {
+    let [n, c, h, wd] = dims;
+    assert_eq!(data.len(), n * c * h * wd, "data/dims mismatch");
+    let (hp, wp) = (h + 2 * pad, wd + 2 * pad);
+    assert!(hp >= 4 && wp >= 4 && (hp - 2) % 2 == 0 && (wp - 2) % 2 == 0,
+            "padded H, W must be even and >= 4");
+    let (th, tw) = ((hp - 2) / 2, (wp - 2) / 2);
+    let t = n * th * tw;
+    assert_eq!(out.len(), t * c * 16, "d_hat slice length");
     let bm = matrices::b(variant);
     let get = |in_: usize, ic: usize, i: isize, j: isize| -> i32 {
         let (i, j) = (i - pad as isize, j - pad as isize);
         if i < 0 || j < 0 || i >= h as isize || j >= wd as isize {
             0
         } else {
-            x.at(in_, ic, i as usize, j as usize) as i32
+            data[((in_ * c + ic) * h + i as usize) * wd + j as usize]
+                as i32
         }
     };
-    let mut out = vec![0i16; t * c * 16];
     let mut d = [0i32; 16];
     for in_ in 0..n {
         for ti in 0..th {
@@ -291,17 +311,29 @@ pub fn input_tiles_i16(x: &QTensor, pad: usize, variant: Variant)
             }
         }
     }
-    (out, n, th, tw)
+    (n, th, tw)
 }
 
 /// Quantize Winograd-domain f32 weights to i16 on the activation scale
 /// (transform-domain weights exceed int8 range for the std G due to the
 /// 1/2 rows; i16 keeps the comparison exact on FPGA-width datapaths).
 pub fn quantize_wino_weights(w_hat: &Tensor, scale: f32) -> Vec<i16> {
-    w_hat.data.iter()
-        .map(|&v| (v / scale).round().clamp(i16::MIN as f32,
-                                            i16::MAX as f32) as i16)
-        .collect()
+    let mut out = Vec::new();
+    quantize_wino_weights_into(&w_hat.data, scale, &mut out);
+    out
+}
+
+/// Buffer-reusing twin of [`quantize_wino_weights`] — the single home
+/// of the weight-quantization formula, shared by the sequential
+/// reference and the int8 backend's `forward`/`forward_into` paths
+/// (which must stay bit-identical).
+pub fn quantize_wino_weights_into(w_hat: &[f32], scale: f32,
+                                  out: &mut Vec<i16>) {
+    out.clear();
+    out.extend(w_hat.iter().map(|&v| {
+        (v / scale).round().clamp(i16::MIN as f32, i16::MAX as f32)
+            as i16
+    }));
 }
 
 #[cfg(test)]

@@ -10,17 +10,46 @@
 use super::matrices::{self, Variant};
 use super::Tensor;
 
+/// Tile geometry for an `(N, C, H, W)` input under implicit zero
+/// padding `pad`: `(n, th, tw)` with `th = (H + 2*pad - 2) / 2`.
+/// Panics (with a message naming the offending extent) unless the
+/// padded extents are even and >= 4 — the caller-facing contract of
+/// every stride-2 F(2x2,3x3) tiler in this module.
+pub fn tile_geometry(dims: [usize; 4], pad: usize)
+                     -> (usize, usize, usize) {
+    let [n, _, h, w] = dims;
+    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+    assert!(hp >= 4 && wp >= 4 && (hp - 2) % 2 == 0 && (wp - 2) % 2 == 0,
+            "H, W must be even and >= 4 after padding (got {h}x{w}, \
+             pad {pad})");
+    (n, (hp - 2) / 2, (wp - 2) / 2)
+}
+
 /// Extract + transform all tiles: returns `d_hat` as `(T, C, 16)`
 /// row-major with `T = N * th * tw`, plus `(n, th, tw)`.
 pub fn input_tiles(xp: &Tensor, variant: Variant)
                    -> (Vec<f32>, usize, usize, usize) {
-    let [n, c, h, w] = xp.dims;
-    assert!(h >= 4 && w >= 4 && (h - 2) % 2 == 0 && (w - 2) % 2 == 0,
-            "H, W must be even and >= 4 after padding");
-    let th = (h - 2) / 2;
-    let tw = (w - 2) / 2;
+    let [n, c, _, _] = xp.dims;
+    let (_, th, tw) = tile_geometry(xp.dims, 0);
+    let mut out = vec![0f32; n * th * tw * c * 16];
+    input_tiles_into(xp, 0, variant, &mut out);
+    (out, n, th, tw)
+}
+
+/// Allocation-free twin of [`input_tiles`]: extract + transform all
+/// tiles of an **unpadded** input with implicit zero padding `pad`,
+/// writing `d_hat (T, C, 16)` into the caller's slice (which must be
+/// exactly `T * C * 16` long). Returns `(n, th, tw)`.
+///
+/// This is the planned-executor hot path (`nn::plan`): no `pad_same`
+/// copy, no tile-buffer allocation — the workspace slice is reused
+/// across requests.
+pub fn input_tiles_into(x: &Tensor, pad: usize, variant: Variant,
+                        out: &mut [f32]) -> (usize, usize, usize) {
+    let [n, c, h, w] = x.dims;
+    let (_, th, tw) = tile_geometry(x.dims, pad);
     let t = n * th * tw;
-    let mut out = vec![0f32; t * c * 16];
+    assert_eq!(out.len(), t * c * 16, "d_hat slice length");
     let mut tile = [0f32; 16];
     for in_ in 0..n {
         for ti in 0..th {
@@ -29,8 +58,14 @@ pub fn input_tiles(xp: &Tensor, variant: Variant)
                 for ic in 0..c {
                     for ki in 0..4 {
                         for kj in 0..4 {
-                            tile[ki * 4 + kj] =
-                                xp.at(in_, ic, 2 * ti + ki, 2 * tj + kj);
+                            let i = (2 * ti + ki) as isize - pad as isize;
+                            let j = (2 * tj + kj) as isize - pad as isize;
+                            tile[ki * 4 + kj] = if i < 0 || j < 0
+                                || i >= h as isize || j >= w as isize {
+                                0.0
+                            } else {
+                                x.at(in_, ic, i as usize, j as usize)
+                            };
                         }
                     }
                     let d_hat = matrices::input_transform(&tile, variant);
@@ -40,7 +75,7 @@ pub fn input_tiles(xp: &Tensor, variant: Variant)
             }
         }
     }
-    (out, n, th, tw)
+    (n, th, tw)
 }
 
 /// Transform spatial weights `(O,C,3,3)` -> flat `(O, C, 16)`.
@@ -67,6 +102,35 @@ pub fn transform_weights(w: &Tensor, variant: Variant) -> Vec<f32> {
 pub fn untile(y: &[f32], n: usize, o: usize, th: usize, tw: usize)
               -> Tensor {
     let mut out = Tensor::zeros([n, o, 2 * th, 2 * tw]);
+    untile_into(y, n, o, th, tw, &mut out.data);
+    out
+}
+
+/// Allocation-free twin of [`untile`]: scatter `(T, O, 4)` patches into
+/// the caller's `(N, O, 2*th, 2*tw)` NCHW slice. Every output element
+/// is written (the 2x2 patches tile the output exactly), so the slice
+/// need not be zeroed first.
+pub fn untile_into(y: &[f32], n: usize, o: usize, th: usize, tw: usize,
+                   out: &mut [f32]) {
+    untile_map_into(y, n, o, th, tw, out, |v| v);
+}
+
+/// The single home of the untile index math: scatter `(T, O, 4)`
+/// patches into an `(N, O, 2*th, 2*tw)` NCHW slice, mapping each
+/// element through `f`. [`untile_into`], the integer
+/// `kernel::untile_i32`, and the dequantizing
+/// `kernel::untile_i32_scaled_into` are all thin wrappers, so a fix to
+/// the scatter indexing lands everywhere at once. Every output element
+/// is written.
+pub fn untile_map_into<T, U, F>(y: &[T], n: usize, o: usize, th: usize,
+                                tw: usize, out: &mut [U], f: F)
+where
+    T: Copy,
+    F: Fn(T) -> U,
+{
+    let (ho, wo) = (2 * th, 2 * tw);
+    assert_eq!(y.len(), n * th * tw * o * 4, "tile-domain length");
+    assert_eq!(out.len(), n * o * ho * wo, "output slice length");
     for in_ in 0..n {
         for ti in 0..th {
             for tj in 0..tw {
@@ -75,15 +139,14 @@ pub fn untile(y: &[f32], n: usize, o: usize, th: usize, tw: usize)
                     let base = (trow * o + oc) * 4;
                     for i in 0..2 {
                         for j in 0..2 {
-                            *out.at_mut(in_, oc, 2 * ti + i, 2 * tj + j) =
-                                y[base + i * 2 + j];
+                            out[((in_ * o + oc) * ho + 2 * ti + i) * wo
+                                + 2 * tj + j] = f(y[base + i * 2 + j]);
                         }
                     }
                 }
             }
         }
     }
-    out
 }
 
 /// Standard Winograd F(2x2,3x3) convolution — equals `conv::conv2d`.
@@ -255,6 +318,39 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0f32, f32::max);
         assert!(max_diff > 1e-2, "expected inequality, max diff {max_diff}");
+    }
+
+    #[test]
+    fn input_tiles_into_matches_explicit_padding() {
+        property(15, |g| {
+            let n = g.usize_in(1, 2);
+            let c = g.usize_in(1, 4);
+            let hw = 2 * g.usize_in(2, 5);
+            let pad = g.usize_in(0, 1);
+            let seed = g.usize_in(0, 1 << 30) as u64;
+            let mut rng = Rng::new(seed);
+            let x = Tensor::randn(&mut rng, [n, c, hw, hw]);
+            let v = *g.choose(&[Variant::Std, Variant::Balanced(1)]);
+            let (want, wn, wth, wtw) = input_tiles(&x.pad_same(pad), v);
+            let mut got = vec![0f32; want.len()];
+            let (gn, gth, gtw) = input_tiles_into(&x, pad, v, &mut got);
+            if (gn, gth, gtw) != (wn, wth, wtw) {
+                return Err(format!("geometry {gn},{gth},{gtw} vs \
+                                    {wn},{wth},{wtw}"));
+            }
+            all_close(&got, &want, 0.0, 0.0)
+        });
+    }
+
+    #[test]
+    fn untile_into_matches_untile() {
+        let mut rng = Rng::new(17);
+        let (n, o, th, tw) = (2usize, 3usize, 2usize, 3usize);
+        let y = rng.normal_vec(n * th * tw * o * 4);
+        let want = untile(&y, n, o, th, tw);
+        let mut got = vec![f32::NAN; want.data.len()];
+        untile_into(&y, n, o, th, tw, &mut got);
+        assert_eq!(got, want.data);
     }
 
     #[test]

@@ -6,6 +6,12 @@
 //! scaling bench): `--backend scalar|parallel|parallel-int8` plus
 //! `--threads N`, parsed into a typed selector by
 //! [`crate::nn::backend::BackendKind::from_args`].
+//!
+//! Model selection convention (`serve` and the serving bench):
+//! `--model single|stack|lenet|resnet20` plus `--depth N` (a bare
+//! `--depth N` implies `--model stack`), resolved into a
+//! `nn::model::ModelSpec` that the server compiles into per-bucket
+//! `nn::plan::ModelPlan`s.
 
 use std::collections::BTreeMap;
 

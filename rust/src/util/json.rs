@@ -91,6 +91,71 @@ impl Json {
         self.as_arr()
             .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
     }
+
+    /// Serialize back to compact JSON text (inverse of [`Json::parse`]:
+    /// `parse(dump(v)) == v` for any value this module can represent).
+    /// Non-finite numbers become `null` — JSON has no NaN/inf. Used by
+    /// `nn::model`'s spec files and the bench JSON reports.
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_json_string(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_json_string(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_json_string(s: &str, out: &mut String) {
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -306,6 +371,29 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn dump_parse_roundtrip() {
+        let text = r#"{"a": [1, 2.5, {"b": "x\ny \"q\""}], "c": {},
+                       "d": true, "e": null, "f": -3}"#;
+        let v = Json::parse(text).unwrap();
+        let dumped = v.dump();
+        assert_eq!(Json::parse(&dumped).unwrap(), v);
+        // dumping is stable: dump(parse(dump(v))) == dump(v)
+        assert_eq!(Json::parse(&dumped).unwrap().dump(), dumped);
+    }
+
+    #[test]
+    fn dump_escapes_and_nonfinite() {
+        let v = Json::Arr(vec![
+            Json::Str("tab\there".into()),
+            Json::Num(f64::NAN),
+            Json::Num(1.0),
+        ]);
+        let dumped = v.dump();
+        assert_eq!(dumped, "[\"tab\\there\",null,1]");
+        assert!(Json::parse(&dumped).is_ok());
     }
 
     #[test]

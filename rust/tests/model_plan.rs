@@ -1,0 +1,197 @@
+//! Integration tests for the planned multi-layer executor: a
+//! [`ModelPlan`] forward must equal naively composing
+//! `Backend::forward` layer-by-layer (with independently reimplemented
+//! scale/shift, relu, and 1x1-adder references), across all three
+//! backends and the serving buckets {1, 4, 16}; and workspace reuse
+//! must be observable (stable footprint, identical outputs across
+//! consecutive runs on one plan).
+
+use wino_adder::nn::backend::{Backend, BackendKind};
+use wino_adder::nn::matrices::Variant;
+use wino_adder::nn::model::{LayerKind, ModelSpec, ModelWeights};
+use wino_adder::nn::plan::ModelPlan;
+use wino_adder::nn::Tensor;
+use wino_adder::util::rng::Rng;
+use wino_adder::util::testkit::{all_close, property};
+
+/// Test-local naive composition: run the spec layer-by-layer through
+/// `Backend::forward` for Winograd layers and hand-written elementwise
+/// references for the rest (deliberately NOT the plan's helpers).
+fn compose_naive(spec: &ModelSpec, weights: &ModelWeights,
+                 backend: &dyn Backend, x: Tensor) -> Tensor {
+    let mut cur = x;
+    for (i, l) in spec.layers.iter().enumerate() {
+        let p = &weights.params[i];
+        match *l {
+            LayerKind::WinoAdder3x3 { cin, cout, pad, variant } => {
+                let w_hat = Tensor::from_vec(p.data.clone(),
+                                             [cout, cin, 4, 4]);
+                cur = backend.forward(&cur, &w_hat, pad, variant);
+            }
+            LayerKind::DirectAdder1x1 { cin, cout } => {
+                let [n, c, h, w] = cur.dims;
+                assert_eq!(c, cin);
+                let mut out = Tensor::zeros([n, cout, h, w]);
+                for in_ in 0..n {
+                    for oc in 0..cout {
+                        for ih in 0..h {
+                            for iw in 0..w {
+                                let mut s = 0.0f32;
+                                for ic in 0..c {
+                                    s += (p.data[oc * c + ic]
+                                        - cur.at(in_, ic, ih, iw))
+                                        .abs();
+                                }
+                                *out.at_mut(in_, oc, ih, iw) = -s;
+                            }
+                        }
+                    }
+                }
+                cur = out;
+            }
+            LayerKind::ScaleShift { channels } => {
+                let [n, c, h, w] = cur.dims;
+                assert_eq!(c, channels);
+                for in_ in 0..n {
+                    for ic in 0..c {
+                        for ih in 0..h {
+                            for iw in 0..w {
+                                let v = cur.at(in_, ic, ih, iw);
+                                *cur.at_mut(in_, ic, ih, iw) =
+                                    v * p.data[ic]
+                                    + p.data[channels + ic];
+                            }
+                        }
+                    }
+                }
+            }
+            LayerKind::Relu => {
+                for v in &mut cur.data {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+    }
+    cur
+}
+
+/// A 3-wino-layer stack with scale/shift, relu, and a 1x1 projection
+/// in the middle — every layer kind exercised.
+fn three_layer_spec(cin: usize, hw: usize, v: Variant) -> ModelSpec {
+    ModelSpec {
+        name: "test3".into(),
+        in_channels: cin,
+        hw,
+        layers: vec![
+            LayerKind::WinoAdder3x3 { cin, cout: 4, pad: 1, variant: v },
+            LayerKind::ScaleShift { channels: 4 },
+            LayerKind::Relu,
+            LayerKind::DirectAdder1x1 { cin: 4, cout: 5 },
+            LayerKind::WinoAdder3x3 {
+                cin: 5, cout: 3, pad: 1, variant: v,
+            },
+            LayerKind::ScaleShift { channels: 3 },
+            LayerKind::WinoAdder3x3 {
+                cin: 3, cout: 2, pad: 1, variant: v,
+            },
+        ],
+    }
+}
+
+/// The acceptance property: plan forward == naive layer-by-layer
+/// composition, on every backend, for buckets {1, 4, 16}.
+#[test]
+fn plan_matches_naive_composition_all_backends_and_buckets() {
+    for kind in BackendKind::ALL {
+        let backend = kind.build(3);
+        property(4, |g| {
+            let cin = g.usize_in(1, 3);
+            let hw = 2 * g.usize_in(2, 4);
+            let v = *g.choose(&[Variant::Std, Variant::Balanced(0),
+                                Variant::Balanced(3)]);
+            let seed = g.usize_in(0, 1 << 30) as u64;
+            let spec = three_layer_spec(cin, hw, v);
+            let weights = ModelWeights::init(&spec, seed);
+            for bucket in [1usize, 4, 16] {
+                let mut plan =
+                    ModelPlan::compile(&spec, &weights, bucket)
+                        .map_err(|e| format!("compile b{bucket}: {e}"))?;
+                let mut rng = Rng::new(seed ^ 0x5eed);
+                let x = rng.normal_vec(bucket * cin * hw * hw);
+                let got =
+                    plan.forward(backend.as_ref(), &x).to_vec();
+                let want = compose_naive(
+                    &spec, &weights, backend.as_ref(),
+                    Tensor::from_vec(x, [bucket, cin, hw, hw]));
+                if got.len() != want.data.len() {
+                    return Err(format!(
+                        "{} b{bucket}: len {} vs {}", kind.name(),
+                        got.len(), want.data.len()));
+                }
+                all_close(&got, &want.data, 1e-4, 1e-4).map_err(
+                    |e| format!("{} b{bucket}: {e}", kind.name()))?;
+            }
+            Ok(())
+        });
+    }
+}
+
+/// Workspace reuse: two consecutive runs on the same plan return the
+/// same output, an interleaved different request does not perturb a
+/// repeat of the first, and the buffer footprint is frozen after
+/// warmup — the observable for "zero steady-state allocation".
+#[test]
+fn workspace_reuse_is_pure_and_footprint_stable() {
+    for kind in BackendKind::ALL {
+        let backend = kind.build(2);
+        let spec = three_layer_spec(2, 8, Variant::Balanced(1));
+        let weights = ModelWeights::init(&spec, 77);
+        let mut plan = ModelPlan::compile(&spec, &weights, 4).unwrap();
+        let mut rng = Rng::new(8);
+        let xa = rng.normal_vec(plan.in_len());
+        let xb = rng.normal_vec(plan.in_len());
+        let ya1 = plan.forward(backend.as_ref(), &xa).to_vec();
+        let fp = plan.workspace_footprint();
+        assert!(fp > 0);
+        let ya2 = plan.forward(backend.as_ref(), &xa).to_vec();
+        assert_eq!(ya1, ya2,
+                   "{}: second run diverged", kind.name());
+        let _yb = plan.forward(backend.as_ref(), &xb).to_vec();
+        let ya3 = plan.forward(backend.as_ref(), &xa).to_vec();
+        assert_eq!(ya1, ya3,
+                   "{}: state leaked across requests", kind.name());
+        assert_eq!(plan.workspace_footprint(), fp,
+                   "{}: workspace grew after warmup", kind.name());
+    }
+}
+
+/// Buckets are performance sugar, not semantics: the same sample
+/// through plans of different batch sizes yields the same result.
+#[test]
+fn per_bucket_plans_agree_on_shared_samples() {
+    let spec = ModelSpec::lenetish(2, 8, Variant::Balanced(0));
+    let weights = ModelWeights::init(&spec, 13);
+    let backend = BackendKind::Parallel.build(4);
+    let mut rng = Rng::new(1);
+    let sample = spec.sample_len();
+    let xs: Vec<Vec<f32>> =
+        (0..4).map(|_| rng.normal_vec(sample)).collect();
+    // bucket-1 reference, one sample at a time
+    let mut p1 = ModelPlan::compile(&spec, &weights, 1).unwrap();
+    let singles: Vec<Vec<f32>> = xs.iter()
+        .map(|x| p1.forward(backend.as_ref(), x).to_vec())
+        .collect();
+    // bucket-4 batch
+    let mut p4 = ModelPlan::compile(&spec, &weights, 4).unwrap();
+    let flat: Vec<f32> =
+        xs.iter().flat_map(|x| x.iter().copied()).collect();
+    let batched = p4.forward(backend.as_ref(), &flat).to_vec();
+    let out_len = p4.out_sample_len();
+    for (i, single) in singles.iter().enumerate() {
+        all_close(&batched[i * out_len..(i + 1) * out_len], single,
+                  1e-4, 1e-4)
+            .unwrap_or_else(|e| panic!("sample {i}: {e}"));
+    }
+}
