@@ -1,5 +1,8 @@
-//! Serving/training metrics: latency percentiles and throughput.
+//! Serving/training metrics: latency percentiles, throughput, and the
+//! network front-end counters ([`NetCounters`] / [`NetSummary`]) that
+//! `coordinator::net` merges into `ServerStats`.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 /// Latency recorder with percentile queries.
@@ -45,6 +48,12 @@ impl LatencyStats {
             / self.samples_us.len() as f64
     }
 
+    /// Fold another recorder's samples into this one (the load
+    /// generator merges per-client-thread recorders before reporting).
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "n={} mean={:.0}us p50={}us p95={}us p99={}us",
@@ -53,6 +62,70 @@ impl LatencyStats {
             self.percentile(50.0).unwrap_or(0),
             self.percentile(95.0).unwrap_or(0),
             self.percentile(99.0).unwrap_or(0),
+        )
+    }
+}
+
+/// Aggregate counters of the TCP serving front-end, bumped lock-free
+/// from the acceptor / per-connection threads of
+/// [`crate::coordinator::net::NetServer`]. Snapshot with
+/// [`NetCounters::snapshot`].
+#[derive(Debug, Default)]
+pub struct NetCounters {
+    /// accepted connections
+    pub connections: AtomicU64,
+    /// decoded `Infer` frames
+    pub requests: AtomicU64,
+    /// `Output` frames successfully produced
+    pub responses: AtomicU64,
+    /// requests shed with a `Busy` frame (in-flight cap hit)
+    pub busy: AtomicU64,
+    /// protocol/engine/transport failures surfaced as `Error` frames
+    /// or dropped connections
+    pub errors: AtomicU64,
+    /// wire bytes decoded from clients (headers + payloads)
+    pub bytes_in: AtomicU64,
+    /// wire bytes written to clients (headers + payloads)
+    pub bytes_out: AtomicU64,
+}
+
+impl NetCounters {
+    pub fn new() -> NetCounters {
+        NetCounters::default()
+    }
+
+    pub fn snapshot(&self) -> NetSummary {
+        NetSummary {
+            connections: self.connections.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            busy: self.busy.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain snapshot of [`NetCounters`]; carried on
+/// `ServerStats::net` once the front-end drains.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NetSummary {
+    pub connections: u64,
+    pub requests: u64,
+    pub responses: u64,
+    pub busy: u64,
+    pub errors: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+impl NetSummary {
+    pub fn summary(&self) -> String {
+        format!(
+            "conns={} reqs={} ok={} busy={} errs={} in={}B out={}B",
+            self.connections, self.requests, self.responses, self.busy,
+            self.errors, self.bytes_in, self.bytes_out,
         )
     }
 }
@@ -107,6 +180,93 @@ mod tests {
         let l = LatencyStats::new();
         assert_eq!(l.percentile(50.0), None);
         assert_eq!(l.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let mut l = LatencyStats::new();
+        l.record_us(500);
+        assert_eq!(l.count(), 1);
+        for pct in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(l.percentile(pct), Some(500), "pct {pct}");
+        }
+        assert_eq!(l.mean_us(), 500.0);
+        assert!(l.summary().contains("n=1"));
+    }
+
+    #[test]
+    fn record_duration_matches_record_us() {
+        let mut a = LatencyStats::new();
+        let mut b = LatencyStats::new();
+        a.record(Duration::from_micros(1234));
+        b.record_us(1234);
+        assert_eq!(a.percentile(50.0), b.percentile(50.0));
+    }
+
+    #[test]
+    fn p99_on_tiny_counts_is_nearest_rank() {
+        // n=2: p99 rank = round(0.99 * 1) = 1 -> the max; p50 rounds
+        // up to the max too (nearest-rank, ties away from zero)
+        let mut l = LatencyStats::new();
+        l.record_us(10);
+        l.record_us(20);
+        assert_eq!(l.percentile(99.0), Some(20));
+        assert_eq!(l.percentile(50.0), Some(20));
+        assert_eq!(l.percentile(0.0), Some(10));
+        // n=3: p50 lands exactly on the middle sample
+        l.record_us(30);
+        assert_eq!(l.percentile(50.0), Some(20));
+        assert_eq!(l.percentile(99.0), Some(30));
+        // out-of-range pct must not index out of bounds
+        assert_eq!(l.percentile(100.0), Some(30));
+    }
+
+    #[test]
+    fn unsorted_input_sorts_before_ranking() {
+        let mut l = LatencyStats::new();
+        for us in [50u64, 10, 40, 30, 20] {
+            l.record_us(us);
+        }
+        assert_eq!(l.percentile(0.0), Some(10));
+        assert_eq!(l.percentile(50.0), Some(30));
+        assert_eq!(l.percentile(100.0), Some(50));
+    }
+
+    #[test]
+    fn merge_folds_samples() {
+        let mut a = LatencyStats::new();
+        a.record_us(10);
+        let mut b = LatencyStats::new();
+        b.record_us(30);
+        b.record_us(20);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.percentile(100.0), Some(30));
+        // merging an empty recorder is a no-op
+        a.merge(&LatencyStats::new());
+        assert_eq!(a.count(), 3);
+        // merging into an empty recorder copies
+        let mut c = LatencyStats::new();
+        c.merge(&a);
+        assert_eq!(c.count(), 3);
+    }
+
+    #[test]
+    fn net_counters_snapshot() {
+        let c = NetCounters::new();
+        c.connections.fetch_add(2, Ordering::Relaxed);
+        c.requests.fetch_add(10, Ordering::Relaxed);
+        c.responses.fetch_add(7, Ordering::Relaxed);
+        c.busy.fetch_add(3, Ordering::Relaxed);
+        c.bytes_in.fetch_add(100, Ordering::Relaxed);
+        let s = c.snapshot();
+        assert_eq!(s.connections, 2);
+        assert_eq!(s.requests, 10);
+        assert_eq!(s.responses, 7);
+        assert_eq!(s.busy, 3);
+        assert_eq!(s.errors, 0);
+        assert_eq!(s.requests, s.responses + s.busy);
+        assert!(s.summary().contains("busy=3"), "{}", s.summary());
     }
 
     #[test]

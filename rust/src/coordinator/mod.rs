@@ -13,10 +13,15 @@
 //!   rust-native `nn::backend` CPU backends (default, offline) or the
 //!   PJRT executables (feature `pjrt`; they are not `Send`, hence the
 //!   single engine thread), mpsc request/response plumbing.
-//! * [`metrics`] — latency/throughput instrumentation.
+//! * [`net`] — the TCP front-end: framed wire protocol, bounded
+//!   admission with load-shedding `Busy` replies, and the blocking
+//!   [`net::NetClient`] the load generator drives.
+//! * [`metrics`] — latency/throughput instrumentation and the network
+//!   front-end counters.
 
 pub mod batcher;
 pub mod metrics;
+pub mod net;
 pub mod p_schedule;
 pub mod router;
 pub mod server;

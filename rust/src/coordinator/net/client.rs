@@ -1,0 +1,231 @@
+//! Blocking client for the framed TCP serving protocol — the library
+//! side of `wino-adder serve --listen` and the workhorse of the
+//! `bench-serve` load generator.
+//!
+//! One [`NetClient`] owns one connection (dialed lazily, re-dialed
+//! transparently after a transport error) and supports two call
+//! shapes: single-request [`NetClient::call`] / [`NetClient::infer`],
+//! and explicit pipelining via [`NetClient::pipeline`] — write a whole
+//! window of requests, then read the whole window of replies (the
+//! server answers each connection's requests in order).
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+
+use super::proto::{self, Frame};
+use crate::util::error::{anyhow, bail, ensure, Context, Result};
+
+/// One server reply to an inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetReply {
+    /// the computed flat feature map
+    Output(Vec<f32>),
+    /// load shed: the server's in-flight cap was hit — retry later
+    Busy,
+    /// server-side failure (bad input length, engine error, ...)
+    Error(String),
+}
+
+struct Conn {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+}
+
+/// Blocking TCP client with transparent reconnect.
+pub struct NetClient {
+    addr: String,
+    conn: Option<Conn>,
+    next_id: u64,
+    /// times a stale connection was re-dialed (transport-error retries)
+    pub reconnects: u64,
+}
+
+impl NetClient {
+    /// Dial `addr` (e.g. `127.0.0.1:4100`). Fails fast if the server
+    /// is unreachable.
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let mut c = NetClient {
+            addr: addr.to_string(),
+            conn: None,
+            next_id: 1,
+            reconnects: 0,
+        };
+        c.ensure_conn()?;
+        Ok(c)
+    }
+
+    fn dial(addr: &str) -> Result<Conn> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let r = BufReader::new(
+            stream.try_clone().context("cloning stream")?);
+        Ok(Conn { r, w: BufWriter::new(stream) })
+    }
+
+    fn ensure_conn(&mut self) -> Result<&mut Conn> {
+        if self.conn.is_none() {
+            self.conn = Some(Self::dial(&self.addr)?);
+        }
+        Ok(self.conn.as_mut().unwrap())
+    }
+
+    /// Drop the pooled connection; the next call dials afresh.
+    pub fn disconnect(&mut self) {
+        self.conn = None;
+    }
+
+    /// Break the underlying socket *without* forgetting it, so the next
+    /// call hits a transport error and exercises the reconnect path.
+    /// Test hook.
+    #[doc(hidden)]
+    pub fn sever(&mut self) {
+        if let Some(c) = &self.conn {
+            let _ = c.w.get_ref().shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// One request/reply exchange on the current connection; any
+    /// transport failure poisons the connection.
+    fn round_trip(&mut self, req: &Frame) -> Result<Frame> {
+        let conn = self.ensure_conn()?;
+        let res = exchange(conn, req);
+        if res.is_err() {
+            self.conn = None;
+        }
+        res
+    }
+
+    /// Like [`round_trip`](NetClient::round_trip) but encodes the
+    /// infer payload straight off the borrowed slice (no copy).
+    fn round_trip_infer(&mut self, id: u64, x: &[f32]) -> Result<Frame> {
+        let conn = self.ensure_conn()?;
+        let res = exchange_infer(conn, id, x);
+        if res.is_err() {
+            self.conn = None;
+        }
+        res
+    }
+
+    /// Single blocking request. Retries exactly once over a fresh
+    /// connection if a *pooled* connection failed at the transport
+    /// level (stale keep-alive); never retries server-reported
+    /// `Busy`/`Error` replies, and never retries when the first dial
+    /// itself fails.
+    pub fn call(&mut self, x: &[f32]) -> Result<NetReply> {
+        let id = self.fresh_id();
+        let had_conn = self.conn.is_some();
+        let frame = match self.round_trip_infer(id, x) {
+            Ok(f) => f,
+            Err(_) if had_conn => {
+                self.reconnects += 1;
+                self.round_trip_infer(id, x)?
+            }
+            Err(e) => return Err(e),
+        };
+        self.reply_for(id, frame)
+    }
+
+    /// Blocking inference; `Busy` and server errors surface as `Err`.
+    pub fn infer(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        match self.call(x)? {
+            NetReply::Output(y) => Ok(y),
+            NetReply::Busy => Err(anyhow!("server busy (load shed)")),
+            NetReply::Error(m) => Err(anyhow!(m)),
+        }
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        let id = self.fresh_id();
+        match self.round_trip(&Frame::Ping { id })? {
+            Frame::Pong { id: got } if got == id => Ok(()),
+            other => {
+                self.conn = None;
+                Err(anyhow!("expected pong {id}, got {} (id {})",
+                            other.kind_name(), other.id()))
+            }
+        }
+    }
+
+    /// Pipelined window: write every request, flush once, then read
+    /// every reply. Replies are returned in request order (the server
+    /// guarantees per-connection ordering). No automatic retry — a
+    /// transport error fails the whole window.
+    pub fn pipeline(&mut self, xs: &[Vec<f32>]) -> Result<Vec<NetReply>> {
+        let ids: Vec<u64> = xs.iter().map(|_| self.fresh_id()).collect();
+        let conn = self.ensure_conn()?;
+        let res = pipeline_on(conn, &ids, xs);
+        if res.is_err() {
+            self.conn = None;
+        }
+        res
+    }
+
+    /// Match a reply frame to its request, poisoning the connection on
+    /// an id mismatch (the stream is no longer trustworthy).
+    fn reply_for(&mut self, id: u64, frame: Frame) -> Result<NetReply> {
+        if frame.id() != id {
+            self.conn = None;
+            bail!("response id {} does not match request id {id}",
+                  frame.id());
+        }
+        match frame {
+            Frame::Output { y, .. } => Ok(NetReply::Output(y)),
+            Frame::Busy { .. } => Ok(NetReply::Busy),
+            Frame::Error { msg, .. } => Ok(NetReply::Error(msg)),
+            other => {
+                self.conn = None;
+                Err(anyhow!("unexpected {} frame from server",
+                            other.kind_name()))
+            }
+        }
+    }
+}
+
+/// The transport half of one exchange (kept out of `NetClient` so the
+/// borrow of `conn` ends before the poisoning check).
+fn exchange(conn: &mut Conn, req: &Frame) -> Result<Frame> {
+    proto::write_frame(&mut conn.w, req)?;
+    conn.w.flush()?;
+    proto::read_frame(&mut conn.r)?
+        .ok_or_else(|| anyhow!("server closed the connection"))
+}
+
+fn exchange_infer(conn: &mut Conn, id: u64, x: &[f32]) -> Result<Frame> {
+    proto::write_infer(&mut conn.w, id, x)?;
+    conn.w.flush()?;
+    proto::read_frame(&mut conn.r)?
+        .ok_or_else(|| anyhow!("server closed the connection"))
+}
+
+fn pipeline_on(conn: &mut Conn, ids: &[u64], xs: &[Vec<f32>])
+               -> Result<Vec<NetReply>> {
+    for (id, x) in ids.iter().zip(xs) {
+        proto::write_infer(&mut conn.w, *id, x)?;
+    }
+    conn.w.flush()?;
+    let mut out = Vec::with_capacity(xs.len());
+    for id in ids {
+        let frame = proto::read_frame(&mut conn.r)?
+            .ok_or_else(|| anyhow!("server closed mid-pipeline \
+                                    (reply {}/{})",
+                                   out.len(), xs.len()))?;
+        ensure!(frame.id() == *id,
+                "response id {} != request id {id}", frame.id());
+        out.push(match frame {
+            Frame::Output { y, .. } => NetReply::Output(y),
+            Frame::Busy { .. } => NetReply::Busy,
+            Frame::Error { msg, .. } => NetReply::Error(msg),
+            other => bail!("unexpected {} frame from server",
+                           other.kind_name()),
+        });
+    }
+    Ok(out)
+}

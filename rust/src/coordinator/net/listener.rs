@@ -1,0 +1,370 @@
+//! TCP acceptor: thread-per-connection bridge from the framed wire
+//! protocol ([`super::proto`]) into the in-process serving path
+//! ([`ServerHandle`]).
+//!
+//! Each connection gets two threads:
+//!
+//! * a **reader** that decodes frames and — after passing the bounded
+//!   in-flight admission gate — forwards `Infer` payloads through
+//!   [`ServerHandle::infer_async`] into the engine's batcher/router
+//!   mpsc path;
+//! * a **writer** that answers in request order, blocking on each
+//!   admitted request's [`PendingInfer`] and interleaving the
+//!   immediately-ready replies (`Busy`, `Pong`, `Error`) that the
+//!   reader queued behind it.
+//!
+//! **Load shedding**: at most `max_in_flight` admitted inferences may
+//! be outstanding across all connections. Beyond the cap a request is
+//! answered with an immediate `Busy` frame instead of queueing
+//! unboundedly — the wire equivalent of HTTP 503, leaving retry policy
+//! to the client.
+//!
+//! **Graceful drain** ([`NetServer::stop`]): stop accepting, shut down
+//! the read half of every connection (no new requests; requests
+//! written by a client but not yet decoded are dropped and show up to
+//! that client as a hangup after the last reply), let every admitted
+//! request finish and its reply flush, then join all threads.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+use super::proto::{self, Frame};
+use crate::coordinator::metrics::{NetCounters, NetSummary};
+use crate::coordinator::server::{PendingInfer, ServerHandle};
+use crate::util::error::{anyhow, Context, Result};
+
+/// Per-connection bound on queued-but-unwritten replies: past this the
+/// reader blocks on `send`, so a client that writes requests without
+/// reading replies gets TCP backpressure instead of growing server
+/// memory (Pending replies are additionally bounded by the global
+/// in-flight cap; this bounds the shed/ping traffic too).
+const REPLY_QUEUE_DEPTH: usize = 256;
+
+/// A write stalled this long with zero progress means the peer is gone
+/// or wedged; the writer errors out so drain/cleanup can't hang on it.
+const WRITE_STALL_TIMEOUT: std::time::Duration =
+    std::time::Duration::from_secs(10);
+
+/// What the per-connection writer sends next, in request order.
+enum Reply {
+    /// already materialized (`Busy`, `Pong`, `Error`)
+    Ready(Frame),
+    /// an admitted inference: resolves to `Output` or `Error` when the
+    /// engine replies
+    Pending { id: u64, pending: PendingInfer },
+}
+
+#[derive(Default)]
+struct Registry {
+    next_id: u64,
+    /// live connection streams, for shutdown of the read halves
+    streams: HashMap<u64, TcpStream>,
+    /// reader + writer join handles of live connections (finished
+    /// handles are reaped as new connections arrive)
+    joins: Vec<thread::JoinHandle<()>>,
+}
+
+/// The network front-end: owns the listener, the acceptor thread, and
+/// every per-connection thread pair. Created with [`NetServer::start`],
+/// torn down with [`NetServer::stop`].
+pub struct NetServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    counters: Arc<NetCounters>,
+    acceptor: Option<thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Registry>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (use port 0 for an ephemeral port, then
+    /// [`local_addr`](NetServer::local_addr)) and start accepting.
+    /// `max_in_flight` bounds admitted-but-unanswered inferences
+    /// across all connections; `0` sheds everything (useful in tests).
+    pub fn start(handle: ServerHandle, addr: &str,
+                 max_in_flight: usize) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr().context("local_addr")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let counters = Arc::new(NetCounters::new());
+        let conns: Arc<Mutex<Registry>> = Arc::default();
+        let in_flight = Arc::new(AtomicUsize::new(0));
+
+        let acceptor = {
+            let shutdown = Arc::clone(&shutdown);
+            let counters = Arc::clone(&counters);
+            let conns = Arc::clone(&conns);
+            thread::Builder::new()
+                .name("wino-net-acceptor".into())
+                .spawn(move || {
+                    for stream in listener.incoming() {
+                        // checked after every accept; `stop` wakes a
+                        // blocked accept with a throwaway connection
+                        if shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let stream = match stream {
+                            Ok(s) => s,
+                            Err(_) => {
+                                // e.g. fd exhaustion: count it and
+                                // back off instead of spinning
+                                counters.errors
+                                    .fetch_add(1, Ordering::Relaxed);
+                                thread::sleep(
+                                    std::time::Duration::from_millis(10));
+                                continue;
+                            }
+                        };
+                        counters.connections
+                            .fetch_add(1, Ordering::Relaxed);
+                        spawn_connection(stream, handle.clone(), &conns,
+                                         &counters, &in_flight,
+                                         max_in_flight);
+                    }
+                })
+                .map_err(|e| anyhow!("spawning acceptor: {e}"))?
+        };
+        Ok(NetServer {
+            addr: local,
+            shutdown,
+            counters,
+            acceptor: Some(acceptor),
+            conns,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live snapshot of the aggregate counters.
+    pub fn counters(&self) -> NetSummary {
+        self.counters.snapshot()
+    }
+
+    /// Graceful drain: stop accepting, refuse new requests, flush every
+    /// admitted request's reply, join all threads, and return the final
+    /// counters (merge into `ServerStats::net` before stopping the
+    /// engine — the drain needs the engine alive to answer).
+    pub fn stop(mut self) -> NetSummary {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // wake a blocked `accept` so the acceptor observes the flag;
+        // an unspecified bind address (0.0.0.0/::) is not connectable,
+        // so dial loopback on the bound port instead, and bound the
+        // dial so a firewalled self-connect cannot wedge shutdown
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                std::net::IpAddr::V4(_) => {
+                    std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                }
+                std::net::IpAddr::V6(_) => {
+                    std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                }
+            });
+        }
+        let _ = TcpStream::connect_timeout(
+            &wake, std::time::Duration::from_millis(500));
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        // no new connections can appear now: close all read halves and
+        // wait for the connection threads to drain their replies
+        let joins = {
+            let mut reg = self.conns.lock().unwrap();
+            for stream in reg.streams.values() {
+                let _ = stream.shutdown(Shutdown::Read);
+            }
+            std::mem::take(&mut reg.joins)
+        };
+        for j in joins {
+            let _ = j.join();
+        }
+        self.counters.snapshot()
+    }
+}
+
+fn spawn_connection(stream: TcpStream, handle: ServerHandle,
+                    conns: &Arc<Mutex<Registry>>,
+                    counters: &Arc<NetCounters>,
+                    in_flight: &Arc<AtomicUsize>, cap: usize) {
+    stream.set_nodelay(true).ok();
+    stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT)).ok();
+    let Ok(read_half) = stream.try_clone() else { return };
+    let Ok(registered) = stream.try_clone() else { return };
+    let conn_id = {
+        let mut reg = conns.lock().unwrap();
+        let id = reg.next_id;
+        reg.next_id += 1;
+        reg.streams.insert(id, registered);
+        id
+    };
+    let (reply_tx, reply_rx) =
+        mpsc::sync_channel::<Reply>(REPLY_QUEUE_DEPTH);
+
+    let writer = {
+        let counters = Arc::clone(counters);
+        let in_flight = Arc::clone(in_flight);
+        thread::spawn(move || {
+            writer_loop(stream, reply_rx, &counters, &in_flight);
+        })
+    };
+    let reader = {
+        let counters = Arc::clone(counters);
+        let in_flight = Arc::clone(in_flight);
+        let conns = Arc::clone(conns);
+        thread::spawn(move || {
+            reader_loop(read_half, &handle, &reply_tx, &counters,
+                        &in_flight, cap);
+            drop(reply_tx); // lets the writer drain and exit
+            conns.lock().unwrap().streams.remove(&conn_id);
+        })
+    };
+    let mut reg = conns.lock().unwrap();
+    // reap handles of connections that already finished, so a
+    // long-running `serve --listen` doesn't accumulate one pair per
+    // connection ever accepted (dropping a finished handle detaches it)
+    reg.joins.retain(|j| !j.is_finished());
+    reg.joins.push(reader);
+    reg.joins.push(writer);
+}
+
+fn reader_loop(stream: TcpStream, handle: &ServerHandle,
+               reply: &mpsc::SyncSender<Reply>, counters: &NetCounters,
+               in_flight: &AtomicUsize, cap: usize) {
+    let mut r = BufReader::new(stream);
+    loop {
+        let frame = match proto::read_frame(&mut r) {
+            Ok(Some(f)) => f,
+            // clean close, or the drain path shutting down read halves
+            Ok(None) => break,
+            Err(e) => {
+                // framing is lost — report once and hang up
+                counters.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(Reply::Ready(Frame::Error {
+                    id: 0,
+                    msg: format!("protocol error: {e}"),
+                }));
+                break;
+            }
+        };
+        counters.bytes_in
+            .fetch_add(frame.wire_len() as u64, Ordering::Relaxed);
+        match frame {
+            Frame::Ping { id } => {
+                let _ = reply.send(Reply::Ready(Frame::Pong { id }));
+            }
+            Frame::Infer { id, x } => {
+                counters.requests.fetch_add(1, Ordering::Relaxed);
+                // bounded admission: take a slot or shed
+                let admitted = in_flight
+                    .fetch_update(Ordering::SeqCst, Ordering::SeqCst,
+                                  |n| (n < cap).then_some(n + 1))
+                    .is_ok();
+                if !admitted {
+                    counters.busy.fetch_add(1, Ordering::Relaxed);
+                    let _ = reply.send(Reply::Ready(Frame::Busy { id }));
+                    continue;
+                }
+                match handle.infer_async(x) {
+                    Ok(pending) => {
+                        let _ = reply.send(Reply::Pending { id, pending });
+                    }
+                    Err(e) => {
+                        in_flight.fetch_sub(1, Ordering::SeqCst);
+                        counters.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = reply.send(Reply::Ready(Frame::Error {
+                            id,
+                            msg: format!("{e}"),
+                        }));
+                    }
+                }
+            }
+            other => {
+                // clients may only send Infer and Ping
+                counters.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(Reply::Ready(Frame::Error {
+                    id: other.id(),
+                    msg: format!("unexpected {} frame from client",
+                                 other.kind_name()),
+                }));
+                break;
+            }
+        }
+    }
+}
+
+fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<Reply>,
+               counters: &NetCounters, in_flight: &AtomicUsize) {
+    let mut w = BufWriter::new(stream);
+    let mut broken = false;
+    'serve: while let Ok(first) = rx.recv() {
+        // write everything already queued, then flush once
+        let mut next = Some(first);
+        while let Some(reply) = next {
+            if write_reply(&mut w, reply, counters, in_flight).is_err() {
+                broken = true;
+                break 'serve;
+            }
+            next = rx.try_recv().ok();
+        }
+        if std::io::Write::flush(&mut w).is_err() {
+            broken = true;
+            break;
+        }
+    }
+    if broken {
+        counters.errors.fetch_add(1, Ordering::Relaxed);
+        // kick the reader off the dead connection, then release the
+        // in-flight slots of replies that can no longer be delivered
+        let _ = w.get_ref().shutdown(Shutdown::Both);
+        for reply in rx.iter() {
+            if let Reply::Pending { pending, .. } = reply {
+                let _ = pending.wait();
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    } else {
+        let _ = std::io::Write::flush(&mut w);
+    }
+}
+
+fn write_reply(w: &mut BufWriter<TcpStream>, reply: Reply,
+               counters: &NetCounters, in_flight: &AtomicUsize)
+               -> Result<()> {
+    let frame = match reply {
+        Reply::Ready(f) => f,
+        Reply::Pending { id, pending } => {
+            // flush already-encoded replies before blocking on the
+            // engine, so incrementally-pipelining clients aren't stalled
+            if let Err(e) = std::io::Write::flush(w) {
+                // the connection is dead, but this admitted request
+                // still owns a global in-flight slot — release it or
+                // the server's capacity shrinks permanently
+                let _ = pending.wait();
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+                return Err(e.into());
+            }
+            let res = pending.wait();
+            in_flight.fetch_sub(1, Ordering::SeqCst);
+            match res {
+                Ok(y) => {
+                    counters.responses.fetch_add(1, Ordering::Relaxed);
+                    Frame::Output { id, y }
+                }
+                Err(e) => {
+                    counters.errors.fetch_add(1, Ordering::Relaxed);
+                    Frame::Error { id, msg: format!("{e}") }
+                }
+            }
+        }
+    };
+    counters.bytes_out
+        .fetch_add(frame.wire_len() as u64, Ordering::Relaxed);
+    proto::write_frame(w, &frame)
+}

@@ -1,0 +1,26 @@
+//! Network serving front-end: the existing in-process serving loop
+//! ([`crate::coordinator::server`]) exposed over TCP.
+//!
+//! * [`proto`] — the length-prefixed binary wire protocol (magic +
+//!   version header, request ids, f32 payloads, error and `Busy`
+//!   frames).
+//! * [`listener`] — [`NetServer`]: thread-per-connection acceptor that
+//!   decodes frames, applies bounded in-flight admission with explicit
+//!   load-shedding (`Busy`) replies, forwards admitted requests into
+//!   the engine's batcher/router mpsc path, and drains gracefully on
+//!   [`NetServer::stop`].
+//! * [`client`] — [`NetClient`]: blocking client with transparent
+//!   reconnect and explicit pipelining.
+//!
+//! Wired through `wino-adder serve --listen ADDR` (server side) and
+//! `wino-adder bench-serve` (server + closed-loop load generator over
+//! localhost, reporting into `BENCH_net.json`). Aggregate counters
+//! ([`crate::coordinator::metrics::NetSummary`]) merge into
+//! `ServerStats::net` at shutdown.
+
+pub mod client;
+pub mod listener;
+pub mod proto;
+
+pub use client::{NetClient, NetReply};
+pub use listener::NetServer;

@@ -1,0 +1,403 @@
+//! The framed binary wire protocol of the TCP serving front-end.
+//!
+//! Every message is one length-prefixed frame; integers are
+//! little-endian. The 20-byte header:
+//!
+//! | offset | size | field                                  |
+//! |--------|------|----------------------------------------|
+//! | 0      | 4    | magic `b"WADR"`                        |
+//! | 4      | 2    | protocol version ([`VERSION`])         |
+//! | 6      | 1    | frame kind                             |
+//! | 7      | 1    | reserved (0)                           |
+//! | 8      | 8    | request id                             |
+//! | 16     | 4    | payload byte length                    |
+//!
+//! Kinds: `1` Infer (f32 payload, client→server), `2` Output (f32,
+//! server→client), `3` Error (utf-8 message), `4` Busy (empty — the
+//! load-shed reply, the protocol's HTTP-503), `5` Ping / `6` Pong
+//! (empty, liveness).
+//!
+//! Decoding is strict: wrong magic, unknown version/kind, oversized
+//! or mis-sized payloads, and non-utf-8 error messages are all
+//! rejected with a [`crate::util::error::Error`] — a decode failure
+//! means framing is lost and the connection must be dropped.
+
+use std::io::{Read, Write};
+
+use crate::util::error::{anyhow, bail, ensure, Result};
+
+/// First four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"WADR";
+/// Current protocol version.
+pub const VERSION: u16 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 20;
+/// Hard cap on a single frame's payload (64 MiB) — bounds the
+/// allocation an adversarial or corrupt header can trigger.
+pub const MAX_PAYLOAD_BYTES: usize = 64 << 20;
+
+/// One decoded wire frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// client→server: run inference on a flat f32 sample
+    Infer { id: u64, x: Vec<f32> },
+    /// server→client: the computed flat f32 feature map
+    Output { id: u64, y: Vec<f32> },
+    /// server→client: request failed (message is human-readable)
+    Error { id: u64, msg: String },
+    /// server→client: load shed — the in-flight cap is hit, retry
+    Busy { id: u64 },
+    /// client→server: liveness probe
+    Ping { id: u64 },
+    /// server→client: liveness reply
+    Pong { id: u64 },
+}
+
+impl Frame {
+    /// The request id this frame refers to.
+    pub fn id(&self) -> u64 {
+        match self {
+            Frame::Infer { id, .. }
+            | Frame::Output { id, .. }
+            | Frame::Error { id, .. }
+            | Frame::Busy { id }
+            | Frame::Ping { id }
+            | Frame::Pong { id } => *id,
+        }
+    }
+
+    /// Wire kind code (header byte 6).
+    pub fn kind(&self) -> u8 {
+        match self {
+            Frame::Infer { .. } => 1,
+            Frame::Output { .. } => 2,
+            Frame::Error { .. } => 3,
+            Frame::Busy { .. } => 4,
+            Frame::Ping { .. } => 5,
+            Frame::Pong { .. } => 6,
+        }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Frame::Infer { .. } => "infer",
+            Frame::Output { .. } => "output",
+            Frame::Error { .. } => "error",
+            Frame::Busy { .. } => "busy",
+            Frame::Ping { .. } => "ping",
+            Frame::Pong { .. } => "pong",
+        }
+    }
+
+    fn payload_len(&self) -> usize {
+        match self {
+            Frame::Infer { x, .. } => x.len() * 4,
+            Frame::Output { y, .. } => y.len() * 4,
+            Frame::Error { msg, .. } => msg.len(),
+            Frame::Busy { .. } | Frame::Ping { .. }
+            | Frame::Pong { .. } => 0,
+        }
+    }
+
+    /// Total encoded size (header + payload) — the byte accounting
+    /// behind `NetCounters::bytes_in`/`bytes_out`.
+    pub fn wire_len(&self) -> usize {
+        HEADER_LEN + self.payload_len()
+    }
+}
+
+fn write_header<W: Write>(w: &mut W, kind: u8, id: u64, plen: usize)
+                          -> Result<()> {
+    ensure!(plen <= MAX_PAYLOAD_BYTES,
+            "frame payload too large: {plen} bytes (cap {MAX_PAYLOAD_BYTES})");
+    let mut header = [0u8; HEADER_LEN];
+    header[0..4].copy_from_slice(&MAGIC);
+    header[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    header[6] = kind;
+    header[8..16].copy_from_slice(&id.to_le_bytes());
+    header[16..20].copy_from_slice(&(plen as u32).to_le_bytes());
+    w.write_all(&header)?;
+    Ok(())
+}
+
+/// Encode one frame onto a writer (no flush).
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
+    write_header(w, frame.kind(), frame.id(), frame.payload_len())?;
+    match frame {
+        Frame::Infer { x, .. } => write_f32s(w, x)?,
+        Frame::Output { y, .. } => write_f32s(w, y)?,
+        Frame::Error { msg, .. } => w.write_all(msg.as_bytes())?,
+        Frame::Busy { .. } | Frame::Ping { .. } | Frame::Pong { .. } => {}
+    }
+    Ok(())
+}
+
+/// Encode an `Infer` frame straight from a borrowed payload — the
+/// client's hot path, sparing the `Frame`-building copy per request.
+/// Wire-identical to `write_frame(&Frame::Infer { id, x })`.
+pub fn write_infer<W: Write>(w: &mut W, id: u64, x: &[f32])
+                             -> Result<()> {
+    write_header(w, 1, id, x.len() * 4)?;
+    write_f32s(w, x)
+}
+
+/// Encode to an owned buffer (testing / single-shot writes).
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut out = Vec::with_capacity(frame.wire_len());
+    write_frame(&mut out, frame).expect("encoding to a Vec cannot fail");
+    out
+}
+
+/// Decode the next frame from a reader. `Ok(None)` means the peer
+/// closed the connection cleanly at a frame boundary; every malformed
+/// input is an `Err`.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        let n = match r.read(&mut header[got..]) {
+            Ok(n) => n,
+            // EINTR is not a protocol error (read_exact below
+            // retries it internally; this manual loop must too)
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        };
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            bail!("connection closed mid-header \
+                   ({got}/{HEADER_LEN} bytes)");
+        }
+        got += n;
+    }
+    ensure!(header[0..4] == MAGIC,
+            "bad magic {:02x?} (not a wino-adder frame)", &header[0..4]);
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    ensure!(version == VERSION,
+            "unsupported protocol version {version} (want {VERSION})");
+    let kind = header[6];
+    let id = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let plen =
+        u32::from_le_bytes(header[16..20].try_into().unwrap()) as usize;
+    ensure!(plen <= MAX_PAYLOAD_BYTES,
+            "payload length {plen} exceeds cap {MAX_PAYLOAD_BYTES}");
+    match kind {
+        1 | 2 => {
+            ensure!(plen % 4 == 0,
+                    "f32 payload length {plen} is not a multiple of 4");
+            let xs = read_f32s(r, plen / 4)?;
+            Ok(Some(if kind == 1 {
+                Frame::Infer { id, x: xs }
+            } else {
+                Frame::Output { id, y: xs }
+            }))
+        }
+        3 => {
+            let mut buf = vec![0u8; plen];
+            r.read_exact(&mut buf)?;
+            let msg = String::from_utf8(buf)
+                .map_err(|_| anyhow!("error frame is not valid utf-8"))?;
+            Ok(Some(Frame::Error { id, msg }))
+        }
+        4 | 5 | 6 => {
+            ensure!(plen == 0,
+                    "kind-{kind} frame must be empty, got {plen} bytes");
+            Ok(Some(match kind {
+                4 => Frame::Busy { id },
+                5 => Frame::Ping { id },
+                _ => Frame::Pong { id },
+            }))
+        }
+        k => bail!("unknown frame kind {k}"),
+    }
+}
+
+/// Stream f32s as little-endian bytes through a fixed staging buffer
+/// (no full-payload copy).
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+    let mut buf = [0u8; 8192];
+    let mut i = 0usize;
+    while i < xs.len() {
+        let n = (xs.len() - i).min(buf.len() / 4);
+        for (j, v) in xs[i..i + n].iter().enumerate() {
+            buf[j * 4..j * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&buf[..n * 4])?;
+        i += n;
+    }
+    Ok(())
+}
+
+fn read_f32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(n);
+    let mut buf = [0u8; 8192];
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(buf.len() / 4);
+        r.read_exact(&mut buf[..take * 4])?;
+        for c in buf[..take * 4].chunks_exact(4) {
+            out.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        left -= take;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(f: &Frame) {
+        let bytes = encode(f);
+        assert_eq!(bytes.len(), f.wire_len());
+        let mut r = &bytes[..];
+        let got = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(&got, f);
+        assert!(r.is_empty(), "decoder left trailing bytes");
+    }
+
+    #[test]
+    fn all_kinds_roundtrip() {
+        roundtrip(&Frame::Infer { id: 1, x: vec![1.0, -2.5, 0.0] });
+        roundtrip(&Frame::Infer { id: 2, x: vec![] });
+        roundtrip(&Frame::Output { id: 3, y: vec![f32::MIN, f32::MAX] });
+        roundtrip(&Frame::Error { id: 4, msg: "boom: Δ≠0".into() });
+        roundtrip(&Frame::Error { id: 5, msg: String::new() });
+        roundtrip(&Frame::Busy { id: u64::MAX });
+        roundtrip(&Frame::Ping { id: 7 });
+        roundtrip(&Frame::Pong { id: 8 });
+    }
+
+    #[test]
+    fn write_infer_is_wire_identical_to_write_frame() {
+        let x = vec![1.0f32, -2.5, 0.25];
+        let mut direct = Vec::new();
+        write_infer(&mut direct, 42, &x).unwrap();
+        assert_eq!(direct, encode(&Frame::Infer { id: 42, x }));
+    }
+
+    #[test]
+    fn f32_payload_is_bit_exact() {
+        // NaNs and subnormals must survive the wire untouched
+        let x = vec![f32::NAN, f32::INFINITY, -0.0, 1e-42, 3.14159];
+        let bytes = encode(&Frame::Infer { id: 9, x: x.clone() });
+        match read_frame(&mut &bytes[..]).unwrap().unwrap() {
+            Frame::Infer { x: got, .. } => {
+                assert_eq!(got.len(), x.len());
+                for (a, b) in got.iter().zip(&x) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn back_to_back_frames_decode_in_order() {
+        let frames = [
+            Frame::Infer { id: 1, x: vec![1.0; 300] },
+            Frame::Busy { id: 2 },
+            Frame::Output { id: 1, y: vec![2.0; 5] },
+        ];
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut r = &buf[..];
+        for f in &frames {
+            assert_eq!(&read_frame(&mut r).unwrap().unwrap(), f);
+        }
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        assert!(read_frame(&mut &[][..]).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_header_is_an_error() {
+        let bytes = encode(&Frame::Ping { id: 1 });
+        for cut in 1..HEADER_LEN {
+            let mut r = &bytes[..cut];
+            assert!(read_frame(&mut r).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn truncated_payload_is_an_error() {
+        let bytes = encode(&Frame::Infer { id: 1, x: vec![1.0, 2.0] });
+        let mut r = &bytes[..bytes.len() - 3];
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn malformed_frames_are_rejected() {
+        let good = encode(&Frame::Infer { id: 1, x: vec![1.0] });
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        assert!(read_frame(&mut &bad_magic[..]).is_err());
+
+        let mut bad_version = good.clone();
+        bad_version[4] = 99;
+        assert!(read_frame(&mut &bad_version[..]).is_err());
+
+        let mut bad_kind = good.clone();
+        bad_kind[6] = 42;
+        assert!(read_frame(&mut &bad_kind[..]).is_err());
+
+        // payload length claims 3 bytes for an f32 frame
+        let mut bad_len = good.clone();
+        bad_len[16..20].copy_from_slice(&3u32.to_le_bytes());
+        assert!(read_frame(&mut &bad_len[..]).is_err());
+
+        // oversized payload claim must be rejected before allocating
+        let mut huge = good.clone();
+        huge[16..20]
+            .copy_from_slice(&(MAX_PAYLOAD_BYTES as u32 + 4).to_le_bytes());
+        assert!(read_frame(&mut &huge[..]).is_err());
+
+        // busy frames must be empty
+        let mut fat_busy = encode(&Frame::Busy { id: 1 });
+        fat_busy[16..20].copy_from_slice(&4u32.to_le_bytes());
+        fat_busy.extend_from_slice(&[0, 0, 0, 0]);
+        assert!(read_frame(&mut &fat_busy[..]).is_err());
+
+        // error frames must be utf-8
+        let mut bad_utf8 = encode(&Frame::Error { id: 1, msg: "ab".into() });
+        let n = bad_utf8.len();
+        bad_utf8[n - 2] = 0xff;
+        bad_utf8[n - 1] = 0xfe;
+        assert!(read_frame(&mut &bad_utf8[..]).is_err());
+    }
+
+    /// Fuzz-ish: random byte soup and random single-byte corruptions of
+    /// a valid frame must never panic, and anything that does decode
+    /// must re-encode to a decodable frame.
+    #[test]
+    fn random_bytes_never_panic() {
+        let mut rng = Rng::new(0xf00d);
+        for _ in 0..200 {
+            let len = rng.below(96);
+            let bytes: Vec<u8> =
+                (0..len).map(|_| rng.below(256) as u8).collect();
+            if let Ok(Some(f)) = read_frame(&mut &bytes[..]) {
+                roundtrip(&f);
+            }
+        }
+        let good = encode(&Frame::Infer { id: 3, x: vec![1.0, 2.0, 3.0] });
+        for _ in 0..300 {
+            let mut mutated = good.clone();
+            let at = rng.below(mutated.len());
+            mutated[at] ^= 1 << rng.below(8);
+            if let Ok(Some(f)) = read_frame(&mut &mutated[..]) {
+                roundtrip(&f);
+            }
+        }
+    }
+}

@@ -20,7 +20,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, Batcher};
-use super::metrics::LatencyStats;
+use super::metrics::{LatencyStats, NetSummary};
 use super::router::Router;
 use crate::nn::backend::{default_threads, Backend, BackendKind};
 use crate::nn::matrices::Variant;
@@ -61,6 +61,10 @@ pub struct ServerStats {
     pub latency_summary: String,
     pub p50_us: u64,
     pub p99_us: u64,
+    /// TCP front-end counters, merged in by the caller after
+    /// [`crate::coordinator::net::NetServer::stop`]; `None` when the
+    /// server was only driven in-process.
+    pub net: Option<NetSummary>,
 }
 
 /// Handle used by clients; cheap to clone.
@@ -70,9 +74,35 @@ pub struct ServerHandle {
     sample_len: usize,
 }
 
+/// An admitted, not-yet-answered inference returned by
+/// [`ServerHandle::infer_async`]; the engine's reply arrives on a
+/// private channel and [`PendingInfer::wait`] blocks for it. Dropping
+/// it abandons the reply (the engine still computes the batch).
+pub struct PendingInfer {
+    rx: mpsc::Receiver<Result<Vec<f32>, String>>,
+}
+
+impl PendingInfer {
+    /// Block until the engine replies.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("server dropped request"))?
+            .map_err(|e| anyhow!(e))
+    }
+}
+
 impl ServerHandle {
-    /// Blocking single-image inference.
-    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+    /// Flat input length the served model expects per request.
+    pub fn sample_len(&self) -> usize {
+        self.sample_len
+    }
+
+    /// Submit a request without blocking for the reply — the
+    /// pipelining primitive the TCP front-end
+    /// ([`crate::coordinator::net`]) builds on. Validation errors
+    /// (wrong input length, stopped server) surface immediately.
+    pub fn infer_async(&self, x: Vec<f32>) -> Result<PendingInfer> {
         if x.len() != self.sample_len {
             return Err(anyhow!("expected {} values, got {}",
                                self.sample_len, x.len()));
@@ -85,10 +115,13 @@ impl ServerHandle {
                 submitted: Instant::now(),
             }))
             .map_err(|_| anyhow!("server stopped"))?;
-        resp_rx
-            .recv()
-            .map_err(|_| anyhow!("server dropped request"))?
-            .map_err(|e| anyhow!(e))
+        Ok(PendingInfer { rx: resp_rx })
+    }
+
+    /// Blocking single-image inference
+    /// ([`infer_async`](ServerHandle::infer_async) + wait).
+    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        self.infer_async(x)?.wait()
     }
 
     /// Stop the server and collect stats.
@@ -411,6 +444,7 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
                 latency_summary: latency.summary(),
                 p50_us: latency.percentile(50.0).unwrap_or(0),
                 p99_us: latency.percentile(99.0).unwrap_or(0),
+                net: None,
             };
             let _ = s.send(stats);
             break 'outer;

@@ -9,9 +9,11 @@
 //!   paper's evaluation depends on:
 //!   - [`runtime`] (feature `pjrt`): PJRT client wrapper that loads +
 //!     executes artifacts,
-//!   - [`coordinator`]: inference router/batcher, the serving loop, and
-//!     the training driver that owns the l2-to-l1 exponent and
-//!     learning-rate schedules,
+//!   - [`coordinator`]: inference router/batcher, the serving loop, the
+//!     TCP front-end ([`coordinator::net`]: framed wire protocol,
+//!     load-shedding admission, blocking client), and the training
+//!     driver that owns the l2-to-l1 exponent and learning-rate
+//!     schedules,
 //!   - [`nn`]: rust-native f32 + int8 adder/Winograd convolutions
 //!     (baselines, property tests, serving fallback), including
 //!     [`nn::backend`] — the multi-threaded CPU serving backends,

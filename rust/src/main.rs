@@ -4,7 +4,11 @@
 //!   train     drive the AOT train-step graph (needs --features pjrt)
 //!   serve     batched Winograd-adder inference server demo; runs on
 //!             the rust-native nn::backend CPU backends by default,
-//!             or on PJRT artifacts with --backend pjrt (pjrt build)
+//!             or on PJRT artifacts with --backend pjrt (pjrt build);
+//!             --listen ADDR exposes it over TCP (framed protocol)
+//!   bench-serve  TCP serving benchmark: spawns the server plus N
+//!             closed-loop NetClient threads over localhost and writes
+//!             req/s + p50/p99 to BENCH_net.json (--smoke for CI)
 //!   energy    Figure-1 relative-power report
 //!   opcount   Table-1 operation counts (exact, analytic)
 //!   fpga-sim  Table-2 FPGA cycle/resource/energy simulation
@@ -15,8 +19,11 @@
 //!             (needs --features pjrt)
 
 use std::path::PathBuf;
+use std::time::Duration;
 
 use wino_adder::coordinator::batcher::BatchPolicy;
+use wino_adder::coordinator::metrics::LatencyStats;
+use wino_adder::coordinator::net::{proto, NetClient, NetReply, NetServer};
 use wino_adder::coordinator::server::{NativeConfig, Server, ServerHandle};
 use wino_adder::data::Preset;
 use wino_adder::energy::{figure1, paper_figure1, EnergyTable};
@@ -34,6 +41,7 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("serve") => cmd_serve(&args),
+        Some("bench-serve") => cmd_bench_serve(&args),
         Some("energy") => cmd_energy(&args),
         Some("opcount") => cmd_opcount(&args),
         Some("fpga-sim") => cmd_fpga(&args),
@@ -65,6 +73,11 @@ fn print_help() {
          \x20          [--threads N] [--cin N] [--cout N] [--hw N]\n\
          \x20          [--variant std|A0..A3]\n\
          \x20          [--model single|stack|lenet|resnet20] [--depth N]\n\
+         \x20          [--listen ADDR] [--max-in-flight N] [--duration-s N]\n\
+         \x20 bench-serve [--smoke] [--clients N] [--requests N]\n\
+         \x20          [--pipeline D] [--max-in-flight N] [--out PATH]\n\
+         \x20          [--backend ...] [--threads N] [--model ...]\n\
+         \x20          [--cin N] [--cout N] [--hw N] [--max-wait-us N]\n\
          \x20 energy   [--model resnet20|resnet32|resnet18]\n\
          \x20 opcount  [--model resnet20|resnet32|resnet18|lenet|resnet20-lite]\n\
          \x20 fpga-sim [--cin N --cout N --hw N --par N]\n\
@@ -142,12 +155,11 @@ fn cmd_train(_args: &Args) -> Result<()> {
 
 /// Resolve `--model NAME` / `--depth N` into a serving spec.
 /// `None` = the classic single-layer demo built from `--cin`/`--cout`/
-/// `--hw`.
-fn serve_model(args: &Args, variant: matrices::Variant)
-               -> Result<Option<ModelSpec>> {
-    let cin = args.get_usize("cin", 16);
-    let cout = args.get_usize("cout", 16);
-    let hw = args.get_usize("hw", 28);
+/// `--hw`. The caller passes its already-resolved dimensions so
+/// context-specific defaults (e.g. `bench-serve --smoke`'s shrunken
+/// shape) apply to named models too.
+fn serve_model(args: &Args, variant: matrices::Variant, cin: usize,
+               cout: usize, hw: usize) -> Result<Option<ModelSpec>> {
     let depth = args.get_usize("depth", 0);
     Ok(match args.get("model") {
         // bare --depth N (any N >= 1) promotes to a stack; an explicit
@@ -186,15 +198,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     })?;
     let variant = matrices::Variant::parse(args.get_or("variant", "A0"))
         .ok_or_else(|| anyhow!("bad --variant (std|A0..A3)"))?;
+    let cin = args.get_usize("cin", 16);
+    let cout = args.get_usize("cout", 16);
+    let hw = args.get_usize("hw", 28);
     let cfg = NativeConfig {
         backend: kind,
         threads,
-        cin: args.get_usize("cin", 16),
-        cout: args.get_usize("cout", 16),
-        hw: args.get_usize("hw", 28),
+        cin,
+        cout,
+        hw,
         variant,
         seed: args.get_u64("seed", 7),
-        model: serve_model(args, variant)?,
+        model: serve_model(args, variant, cin, cout, hw)?,
     };
     let spec = cfg.spec();
     let sample = cfg.sample_len();
@@ -203,7 +218,248 @@ fn cmd_serve(args: &Args) -> Result<()> {
              kind.name(), threads, spec.name, spec.layers.len(),
              spec.wino_layers(), spec.in_channels, spec.hw, spec.hw);
     let (handle, join) = Server::start_native(cfg, policy)?;
+    if let Some(listen) = args.get("listen") {
+        let listen = listen.to_string();
+        return serve_listen(handle, join, &listen, args);
+    }
     drive_clients(handle, join, n, sample)
+}
+
+/// `serve --listen ADDR`: expose the engine over TCP instead of
+/// driving it with in-process demo clients. Runs until killed, or for
+/// `--duration-s N` seconds (then drains and reports stats).
+fn serve_listen(handle: ServerHandle,
+                join: std::thread::JoinHandle<()>, listen: &str,
+                args: &Args) -> Result<()> {
+    let max_in_flight = args.get_usize("max-in-flight", 256);
+    let net = NetServer::start(handle.clone(), listen, max_in_flight)?;
+    println!("listening on {} (wire protocol v{}, max {} in-flight; \
+              connect with coordinator::net::NetClient or \
+              `wino-adder bench-serve`)",
+             net.local_addr(), proto::VERSION, max_in_flight);
+    let secs = args.get_usize("duration-s", 0);
+    if secs == 0 {
+        println!("serving until killed (pass --duration-s N for a \
+                  timed run)");
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(secs as u64));
+    let summary = net.stop();
+    let mut stats = handle.stop()?;
+    stats.net = Some(summary);
+    join.join().map_err(|_| anyhow!("engine thread panicked"))?;
+    println!("served {} requests in {} batches; latency {}",
+             stats.served, stats.batches, stats.latency_summary);
+    println!("net: {}", stats.net.as_ref().unwrap().summary());
+    Ok(())
+}
+
+/// `bench-serve`: spawn the native server + TCP front-end, then drive
+/// it with N closed-loop `NetClient` threads over localhost. Reports
+/// req/s and client-side p50/p99 into `BENCH_net.json`; `--smoke`
+/// shrinks the model and request count so CI can run it end-to-end.
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    use std::collections::BTreeMap;
+    use std::time::Instant;
+    use wino_adder::util::json::Json;
+
+    let smoke = args.has("smoke");
+    let clients = args.get_usize("clients", if smoke { 3 } else { 4 })
+        .max(1);
+    let total = args.get_usize("requests", if smoke { 48 } else { 256 })
+        .max(1);
+    let window = args.get_usize("pipeline", 1).max(1);
+    let max_in_flight = args.get_usize("max-in-flight", 4 * clients);
+
+    let (kind, threads) = BackendKind::from_args(args).ok_or_else(|| {
+        anyhow!("bad --backend (scalar|parallel|parallel-int8)")
+    })?;
+    let threads = if smoke && args.get("threads").is_none() {
+        2
+    } else {
+        threads
+    };
+    let variant = matrices::Variant::parse(args.get_or("variant", "A0"))
+        .ok_or_else(|| anyhow!("bad --variant (std|A0..A3)"))?;
+    let dim = |name, full| {
+        args.get_usize(name, if smoke { 4 } else { full })
+    };
+    let (cin, cout) = (dim("cin", 16), dim("cout", 16));
+    let hw = args.get_usize("hw", if smoke { 8 } else { 28 });
+    let cfg = NativeConfig {
+        backend: kind,
+        threads,
+        cin,
+        cout,
+        hw,
+        variant,
+        seed: args.get_u64("seed", 7),
+        model: serve_model(args, variant, cin, cout, hw)?,
+    };
+    let policy = BatchPolicy {
+        buckets: vec![1, 4, 16],
+        max_wait_us: args
+            .get_usize("max-wait-us", if smoke { 500 } else { 2000 })
+            as u64,
+    };
+    let sample = cfg.sample_len();
+    let spec = cfg.spec();
+    let (handle, join) = Server::start_native(cfg, policy)?;
+    let net = NetServer::start(handle.clone(),
+                               args.get_or("listen", "127.0.0.1:0"),
+                               max_in_flight)?;
+    let addr = net.local_addr();
+    println!("bench-serve: {total} closed-loop requests across \
+              {clients} clients (pipeline {window}) -> {addr}");
+    println!("  backend {} x{threads} threads, model {} ({} layers), \
+              max {max_in_flight} in-flight",
+             kind.name(), spec.name, spec.layers.len());
+
+    let t0 = Instant::now();
+    let mut workers = Vec::new();
+    for c in 0..clients {
+        // distribute --requests exactly: the first `total % clients`
+        // clients take one extra request
+        let per_client = total / clients
+            + usize::from(c < total % clients);
+        if per_client == 0 {
+            continue;
+        }
+        let addr = addr.to_string();
+        let mut crng = Rng::new(0xbec0 + c as u64);
+        let xs: Vec<Vec<f32>> = (0..per_client)
+            .map(|_| crng.normal_vec(sample))
+            .collect();
+        workers.push(std::thread::spawn(
+            move || -> Result<(LatencyStats, u64, u64)> {
+                let mut client = NetClient::connect(&addr)?;
+                let mut lat = LatencyStats::new();
+                let mut busy = 0u64;
+                for chunk in xs.chunks(window) {
+                    let t = Instant::now();
+                    let mut left: Vec<Vec<f32>> = chunk.to_vec();
+                    // closed loop with bounded retry: shed requests
+                    // back off briefly and go again
+                    let mut tries = 0;
+                    while !left.is_empty() {
+                        tries += 1;
+                        if tries > 10_000 {
+                            return Err(anyhow!("server persistently \
+                                                busy: retry budget \
+                                                exhausted"));
+                        }
+                        let replies = client.pipeline(&left)?;
+                        let mut retry = Vec::new();
+                        for (x, reply) in left.into_iter().zip(replies) {
+                            match reply {
+                                NetReply::Output(_) => {
+                                    lat.record(t.elapsed());
+                                }
+                                NetReply::Busy => {
+                                    busy += 1;
+                                    retry.push(x);
+                                }
+                                NetReply::Error(e) => {
+                                    return Err(anyhow!(e));
+                                }
+                            }
+                        }
+                        left = retry;
+                        if !left.is_empty() {
+                            std::thread::sleep(
+                                Duration::from_micros(200));
+                        }
+                    }
+                }
+                Ok((lat, busy, client.reconnects))
+            },
+        ));
+    }
+    let mut lat = LatencyStats::new();
+    let mut busy_total = 0u64;
+    let mut reconnects = 0u64;
+    for w in workers {
+        let (l, b, r) = w
+            .join()
+            .map_err(|_| anyhow!("client thread panicked"))??;
+        lat.merge(&l);
+        busy_total += b;
+        reconnects += r;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let net_summary = net.stop();
+    let mut stats = handle.stop()?;
+    join.join().map_err(|_| anyhow!("engine thread panicked"))?;
+    stats.net = Some(net_summary.clone());
+
+    let served = lat.count();
+    let rps = served as f64 / elapsed.max(1e-9);
+    let (p50, p99) = (lat.percentile(50.0).unwrap_or(0),
+                      lat.percentile(99.0).unwrap_or(0));
+    println!("served {served} requests over TCP in {elapsed:.2}s \
+              ({rps:.0} req/s), {} engine batches",
+             stats.batches);
+    println!("client latency: {}", lat.summary());
+    println!("shed (busy) {busy_total}, reconnects {reconnects}");
+    println!("net: {}", net_summary.summary());
+
+    let mut shape = BTreeMap::new();
+    shape.insert("cin".into(), Json::Num(cin as f64));
+    shape.insert("cout".into(), Json::Num(cout as f64));
+    shape.insert("hw".into(), Json::Num(hw as f64));
+    let mut netj = BTreeMap::new();
+    netj.insert("connections".into(),
+                Json::Num(net_summary.connections as f64));
+    netj.insert("requests".into(),
+                Json::Num(net_summary.requests as f64));
+    netj.insert("responses".into(),
+                Json::Num(net_summary.responses as f64));
+    netj.insert("busy".into(), Json::Num(net_summary.busy as f64));
+    netj.insert("errors".into(), Json::Num(net_summary.errors as f64));
+    netj.insert("bytes_in".into(),
+                Json::Num(net_summary.bytes_in as f64));
+    netj.insert("bytes_out".into(),
+                Json::Num(net_summary.bytes_out as f64));
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("net_serving".into()));
+    root.insert("smoke".into(), Json::Bool(smoke));
+    root.insert("backend".into(), Json::Str(kind.name().into()));
+    root.insert("threads".into(), Json::Num(threads as f64));
+    root.insert("model".into(), Json::Str(spec.name.clone()));
+    root.insert("shape".into(), Json::Obj(shape));
+    root.insert("clients".into(), Json::Num(clients as f64));
+    root.insert("pipeline".into(), Json::Num(window as f64));
+    root.insert("max_in_flight".into(),
+                Json::Num(max_in_flight as f64));
+    root.insert("requests".into(), Json::Num(served as f64));
+    root.insert("elapsed_s".into(), Json::Num(elapsed));
+    root.insert("req_per_s".into(), Json::Num(rps));
+    root.insert("p50_us".into(), Json::Num(p50 as f64));
+    root.insert("p99_us".into(), Json::Num(p99 as f64));
+    root.insert("mean_us".into(), Json::Num(lat.mean_us()));
+    // with --pipeline D > 1 every request in a window is stamped with
+    // the window's completion time (incl. Busy-retry backoff), so the
+    // percentiles measure window latency, not per-request latency
+    root.insert("latency_mode".into(),
+                Json::Str(if window > 1 {
+                    "window_completion".into()
+                } else {
+                    "per_request".into()
+                }));
+    root.insert("busy".into(), Json::Num(busy_total as f64));
+    root.insert("reconnects".into(), Json::Num(reconnects as f64));
+    root.insert("engine_batches".into(),
+                Json::Num(stats.batches as f64));
+    root.insert("engine_p50_us".into(), Json::Num(stats.p50_us as f64));
+    root.insert("engine_p99_us".into(), Json::Num(stats.p99_us as f64));
+    root.insert("net".into(), Json::Obj(netj));
+    let out_path = args.get_or("out", "BENCH_net.json");
+    std::fs::write(out_path, Json::Obj(root).dump())
+        .map_err(|e| anyhow!("writing {out_path}: {e}"))?;
+    println!("wrote {out_path}");
+    Ok(())
 }
 
 #[cfg(feature = "pjrt")]

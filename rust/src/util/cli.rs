@@ -7,11 +7,17 @@
 //! `--threads N`, parsed into a typed selector by
 //! [`crate::nn::backend::BackendKind::from_args`].
 //!
-//! Model selection convention (`serve` and the serving bench):
+//! Model selection convention (`serve` and the serving benches):
 //! `--model single|stack|lenet|resnet20` plus `--depth N` (a bare
 //! `--depth N` implies `--model stack`), resolved into a
 //! `nn::model::ModelSpec` that the server compiles into per-bucket
 //! `nn::plan::ModelPlan`s.
+//!
+//! Network serving convention (`serve --listen` and `bench-serve`):
+//! `--listen ADDR` (port 0 = ephemeral) and `--max-in-flight N` (the
+//! load-shedding admission cap of `coordinator::net`); `bench-serve`
+//! adds `--clients N`, `--pipeline D`, `--smoke` (CI-sized run), and
+//! `--out PATH` for the `BENCH_net.json` report.
 
 use std::collections::BTreeMap;
 

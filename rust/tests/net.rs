@@ -1,0 +1,271 @@
+//! End-to-end tests of the TCP serving front-end: wire outputs must be
+//! bit-identical to the in-process path, pipelining preserves order,
+//! the in-flight cap sheds with `Busy`, clients reconnect, malformed
+//! bytes get a protocol error, and `stop` drains in-flight replies.
+
+use std::io::Write;
+use std::thread;
+use std::time::Duration;
+
+use wino_adder::coordinator::batcher::BatchPolicy;
+use wino_adder::coordinator::net::proto::{self, Frame};
+use wino_adder::coordinator::net::{NetClient, NetReply, NetServer};
+use wino_adder::coordinator::server::{NativeConfig, Server};
+use wino_adder::nn::backend::BackendKind;
+use wino_adder::nn::matrices::Variant;
+use wino_adder::util::rng::Rng;
+
+const SAMPLE: usize = 2 * 8 * 8;
+
+fn tiny_cfg() -> NativeConfig {
+    NativeConfig {
+        backend: BackendKind::Scalar,
+        threads: 1,
+        cin: 2,
+        cout: 3,
+        hw: 8,
+        variant: Variant::Balanced(0),
+        seed: 7,
+        model: None,
+    }
+}
+
+fn inputs(seed: u64, n: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal_vec(SAMPLE)).collect()
+}
+
+#[test]
+fn net_path_matches_in_process_bit_for_bit() {
+    let policy = BatchPolicy { buckets: vec![1], max_wait_us: 0 };
+    let (handle, join) =
+        Server::start_native(tiny_cfg(), policy).unwrap();
+    let xs = inputs(11, 5);
+    let want: Vec<Vec<f32>> = xs
+        .iter()
+        .map(|x| handle.infer(x.clone()).unwrap())
+        .collect();
+
+    let net = NetServer::start(handle.clone(), "127.0.0.1:0", 64)
+        .unwrap();
+    let mut client =
+        NetClient::connect(&net.local_addr().to_string()).unwrap();
+    client.ping().unwrap();
+    for (x, w) in xs.iter().zip(&want) {
+        let y = client.infer(x).unwrap();
+        assert_eq!(&y, w, "net output differs from in-process output");
+    }
+    let summary = net.stop();
+    assert_eq!(summary.connections, 1);
+    assert_eq!(summary.requests, 5);
+    assert_eq!(summary.responses, 5);
+    assert_eq!(summary.busy, 0);
+    assert_eq!(summary.errors, 0);
+    assert!(summary.bytes_out > 5 * SAMPLE as u64,
+            "byte accounting looks wrong: {}", summary.bytes_out);
+
+    let mut stats = handle.stop().unwrap();
+    join.join().unwrap();
+    stats.net = Some(summary);
+    assert_eq!(stats.served, 10); // 5 in-process + 5 over the wire
+    assert_eq!(stats.net.as_ref().unwrap().responses, 5);
+}
+
+#[test]
+fn pipelined_window_completes_in_request_order() {
+    let policy = BatchPolicy { buckets: vec![1, 4], max_wait_us: 500 };
+    let (handle, join) =
+        Server::start_native(tiny_cfg(), policy).unwrap();
+    let xs = inputs(22, 8);
+    let want: Vec<Vec<f32>> = xs
+        .iter()
+        .map(|x| handle.infer(x.clone()).unwrap())
+        .collect();
+
+    let net = NetServer::start(handle.clone(), "127.0.0.1:0", 64)
+        .unwrap();
+    let mut client =
+        NetClient::connect(&net.local_addr().to_string()).unwrap();
+    let replies = client.pipeline(&xs).unwrap();
+    assert_eq!(replies.len(), xs.len());
+    for (i, (reply, w)) in replies.iter().zip(&want).enumerate() {
+        match reply {
+            NetReply::Output(y) => {
+                assert_eq!(y, w, "request {i} got another \
+                                  request's output");
+            }
+            other => panic!("request {i}: {other:?}"),
+        }
+    }
+    net.stop();
+    handle.stop().unwrap();
+    join.join().unwrap();
+}
+
+#[test]
+fn in_flight_cap_sheds_with_busy_frames() {
+    // bucket {1, 16} and a long batching window park the first
+    // admitted request inside the engine's batcher, so the rest of the
+    // pipelined window hits the cap deterministically
+    let policy =
+        BatchPolicy { buckets: vec![1, 16], max_wait_us: 400_000 };
+    let (handle, join) =
+        Server::start_native(tiny_cfg(), policy).unwrap();
+    let net = NetServer::start(handle.clone(), "127.0.0.1:0", 1)
+        .unwrap();
+    let mut client =
+        NetClient::connect(&net.local_addr().to_string()).unwrap();
+    let xs = inputs(3, 4);
+    let replies = client.pipeline(&xs).unwrap();
+    assert!(matches!(replies[0], NetReply::Output(_)),
+            "first admitted request must complete: {:?}", replies[0]);
+    for (i, r) in replies[1..].iter().enumerate() {
+        assert_eq!(*r, NetReply::Busy, "request {}", i + 1);
+    }
+    // the slot freed once the reply flushed: a fresh request succeeds
+    assert!(client.infer(&xs[0]).is_ok());
+
+    let summary = net.stop();
+    assert_eq!(summary.requests, 5);
+    assert_eq!(summary.busy, 3);
+    assert_eq!(summary.responses, 2);
+    handle.stop().unwrap();
+    join.join().unwrap();
+}
+
+#[test]
+fn client_reconnects_after_transport_error() {
+    let policy = BatchPolicy { buckets: vec![1], max_wait_us: 0 };
+    let (handle, join) =
+        Server::start_native(tiny_cfg(), policy).unwrap();
+    let net = NetServer::start(handle.clone(), "127.0.0.1:0", 8)
+        .unwrap();
+    let addr = net.local_addr().to_string();
+    let xs = inputs(4, 1);
+
+    let mut client = NetClient::connect(&addr).unwrap();
+    assert!(client.infer(&xs[0]).is_ok());
+    // break the socket under the client: the next call must
+    // transparently re-dial and retry
+    client.sever();
+    assert!(client.infer(&xs[0]).is_ok());
+    assert_eq!(client.reconnects, 1);
+    // a clean disconnect re-dials without counting as a reconnect
+    client.disconnect();
+    assert!(client.infer(&xs[0]).is_ok());
+    assert_eq!(client.reconnects, 1);
+
+    let summary = net.stop();
+    assert_eq!(summary.connections, 3);
+    assert_eq!(summary.responses, 3);
+    handle.stop().unwrap();
+    join.join().unwrap();
+}
+
+#[test]
+fn wrong_sample_len_gets_an_error_frame() {
+    let policy = BatchPolicy { buckets: vec![1], max_wait_us: 0 };
+    let (handle, join) =
+        Server::start_native(tiny_cfg(), policy).unwrap();
+    let net = NetServer::start(handle.clone(), "127.0.0.1:0", 8)
+        .unwrap();
+    let mut client =
+        NetClient::connect(&net.local_addr().to_string()).unwrap();
+    match client.call(&[0.0; 3]).unwrap() {
+        NetReply::Error(msg) => {
+            assert!(msg.contains("expected"), "{msg}");
+        }
+        other => panic!("want an error reply, got {other:?}"),
+    }
+    // the connection survives an application-level error
+    assert!(client.infer(&inputs(5, 1)[0]).is_ok());
+    let summary = net.stop();
+    assert_eq!(summary.errors, 1);
+    assert_eq!(summary.responses, 1);
+    handle.stop().unwrap();
+    join.join().unwrap();
+}
+
+#[test]
+fn malformed_bytes_get_protocol_error_then_hangup() {
+    let policy = BatchPolicy { buckets: vec![1], max_wait_us: 0 };
+    let (handle, join) =
+        Server::start_native(tiny_cfg(), policy).unwrap();
+    let net = NetServer::start(handle.clone(), "127.0.0.1:0", 8)
+        .unwrap();
+    let mut raw =
+        std::net::TcpStream::connect(net.local_addr()).unwrap();
+    raw.write_all(b"GET / HTTP/1.1\r\nHost: nope\r\n\r\n").unwrap();
+    raw.flush().unwrap();
+    match proto::read_frame(&mut raw).unwrap() {
+        Some(Frame::Error { id, msg }) => {
+            assert_eq!(id, 0);
+            assert!(msg.contains("protocol error"), "{msg}");
+        }
+        other => panic!("want an error frame, got {other:?}"),
+    }
+    // after a framing error the server hangs up
+    assert!(proto::read_frame(&mut raw).unwrap().is_none());
+    let summary = net.stop();
+    assert_eq!(summary.errors, 1);
+    handle.stop().unwrap();
+    join.join().unwrap();
+}
+
+#[test]
+fn stop_drains_in_flight_replies() {
+    // a large batching window keeps admitted requests parked in the
+    // engine when stop() lands; the drain must still deliver them
+    let policy =
+        BatchPolicy { buckets: vec![1, 4], max_wait_us: 300_000 };
+    let (handle, join) =
+        Server::start_native(tiny_cfg(), policy).unwrap();
+    let net = NetServer::start(handle.clone(), "127.0.0.1:0", 16)
+        .unwrap();
+    let addr = net.local_addr().to_string();
+    let client_thread = thread::spawn(move || {
+        let mut client = NetClient::connect(&addr).unwrap();
+        client.pipeline(&inputs(6, 3)).unwrap()
+    });
+    // let the requests reach the engine's batcher, then drain
+    thread::sleep(Duration::from_millis(150));
+    let summary = net.stop();
+    let replies = client_thread.join().unwrap();
+    assert_eq!(replies.len(), 3);
+    assert!(replies.iter().all(|r| matches!(r, NetReply::Output(_))),
+            "drain dropped an admitted reply: {replies:?}");
+    assert_eq!(summary.responses, 3);
+    handle.stop().unwrap();
+    join.join().unwrap();
+}
+
+#[test]
+fn serves_concurrent_connections() {
+    let policy = BatchPolicy { buckets: vec![1, 4], max_wait_us: 300 };
+    let (handle, join) =
+        Server::start_native(tiny_cfg(), policy).unwrap();
+    let net = NetServer::start(handle.clone(), "127.0.0.1:0", 64)
+        .unwrap();
+    let addr = net.local_addr().to_string();
+    let mut workers = Vec::new();
+    for c in 0..4u64 {
+        let addr = addr.clone();
+        workers.push(thread::spawn(move || {
+            let mut client = NetClient::connect(&addr).unwrap();
+            for x in inputs(100 + c, 6) {
+                let y = client.infer(&x).unwrap();
+                assert_eq!(y.len(), 3 * 8 * 8);
+            }
+        }));
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+    let summary = net.stop();
+    assert_eq!(summary.connections, 4);
+    assert_eq!(summary.responses, 24);
+    assert_eq!(summary.requests, 24);
+    let stats = handle.stop().unwrap();
+    join.join().unwrap();
+    assert_eq!(stats.served, 24);
+}
