@@ -28,12 +28,15 @@ fn main() -> Result<()> {
     if args.get("backend") == Some("pjrt") {
         return pjrt_scenario(&args, n, clients);
     }
-    let (kind, threads) = BackendKind::from_args(&args).ok_or_else(|| {
-        anyhow!("bad --backend (scalar|parallel|parallel-int8|pjrt)")
-    })?;
+    let (kind, threads, kernel) = BackendKind::from_args(&args)
+        .ok_or_else(|| {
+            anyhow!("bad --backend (scalar|parallel|parallel-int8|\
+                     pjrt) or --kernel (legacy|pointmajor)")
+        })?;
     let cfg = NativeConfig {
         backend: kind,
         threads,
+        kernel,
         ..NativeConfig::default()
     };
     let sample = cfg.sample_len();

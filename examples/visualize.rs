@@ -91,7 +91,8 @@ fn figure3(args: &Args) -> Result<()> {
 fn figure3(args: &Args) -> Result<()> {
     use wino_adder::coordinator::BackendEval;
     use wino_adder::data::{Dataset, Preset, Split};
-    use wino_adder::nn::backend::{default_threads, BackendKind};
+    use wino_adder::nn::backend::{default_threads, BackendKind,
+                                  KernelKind};
 
     println!("=== Figure 3 (offline): t-SNE of serving-backend \
               features ===\n");
@@ -104,6 +105,7 @@ fn figure3(args: &Args) -> Result<()> {
                              ("std A", Variant::Std)] {
         let ev = BackendEval::new(BackendKind::Parallel,
                                   default_threads(),
+                                  KernelKind::default(),
                                   args.get_usize("features", 8),
                                   preset.channels(), 11, variant);
         let (feats, d) =

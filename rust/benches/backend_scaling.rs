@@ -28,11 +28,12 @@ use std::time::Instant;
 use wino_adder::coordinator::batcher::BatchPolicy;
 use wino_adder::coordinator::server::{NativeConfig, Server};
 use wino_adder::nn::backend::{default_threads, kernel, Backend,
-                              BackendKind, ParallelBackend,
-                              ParallelInt8Backend};
+                              BackendKind, KernelKind,
+                              ParallelBackend, ParallelInt8Backend};
 use wino_adder::nn::matrices::{self, Variant};
 use wino_adder::nn::model::ModelSpec;
-use wino_adder::nn::wino_adder::{winograd_adder_conv2d,
+use wino_adder::nn::wino_adder::{repack_weights_pm, tiles_to_pm,
+                                 winograd_adder_conv2d,
                                  wino_adder_tiles};
 use wino_adder::nn::Tensor;
 use wino_adder::util::cli::Args;
@@ -71,12 +72,14 @@ fn main() {
         sweep.push(cores);
     }
 
-    println!("\n--- parallel f32 backend, thread sweep ---");
+    println!("\n--- parallel f32 backend, thread sweep (legacy \
+              tile-major kernels) ---");
     let d_arc: Arc<[f32]> = d_hat.clone().into();
     let w_arc: Arc<[f32]> = w_hat.clone().into();
     let mut speedup_at_4 = 0.0;
     for &threads in &sweep {
-        let be = ParallelBackend::new(threads);
+        let be = ParallelBackend::with_kernel(threads,
+                                              KernelKind::Legacy);
         let mut y = vec![0f32; t * o * 4];
         let t_par =
             bench(&format!("parallel[{threads}t] run_tiles"), || {
@@ -91,6 +94,28 @@ fn main() {
         }
         println!("    -> {:.2} Gadd/s, {speedup:.2}x vs scalar",
                  adds / t_par / 1e9);
+    }
+
+    println!("\n--- parallel f32 backend, thread sweep (point-major \
+              SAD-GEMM kernels) ---");
+    let d_pm_arc: Arc<[f32]> = tiles_to_pm(&d_hat, t, c).into();
+    let mut w_pm = Vec::new();
+    repack_weights_pm(&w_hat, o, c, &mut w_pm);
+    let w_pm_arc: Arc<[f32]> = w_pm.into();
+    for &threads in &sweep {
+        let be = ParallelBackend::new(threads);
+        let mut y = vec![0f32; t * o * 4];
+        let mut bufs = Vec::new();
+        let t_par =
+            bench(&format!("parallel[{threads}t] run_tiles_pm"), || {
+                be.run_tiles_pm(&d_pm_arc, &w_pm_arc, t, o, c, s,
+                                &mut y, &mut bufs);
+                std::hint::black_box(&y);
+            });
+        all_close(&y, &y0, 1e-4, 1e-4)
+            .expect("point-major f32 diverged from scalar baseline");
+        println!("    -> {:.2} Gadd/s, {:.2}x vs scalar",
+                 adds / t_par / 1e9, t_scalar / t_par);
     }
 
     println!("\n--- parallel int8 backend, thread sweep ---");
@@ -172,6 +197,7 @@ fn serving_sweep(args: &Args, cores: usize) {
             let cfg = NativeConfig {
                 backend: BackendKind::Parallel,
                 threads,
+                kernel: KernelKind::default(),
                 cin,
                 cout,
                 hw,

@@ -6,13 +6,22 @@ use std::time::Instant;
 
 /// Measure `f`, printing `name: median time/iter (min..max, n iters)`.
 /// Returns the median seconds/iter.
-pub fn bench<F: FnMut()>(name: &str, mut f: F) -> f64 {
-    // warmup + calibrate iteration count to ~0.2s per repeat
+#[allow(dead_code)] // each bench binary uses its own subset
+pub fn bench<F: FnMut()>(name: &str, f: F) -> f64 {
+    bench_cfg(name, 0.2, 5, f)
+}
+
+/// [`bench`] with an explicit per-repeat time target and repeat count
+/// — CI smoke runs shrink both to keep wall-clock bounded.
+#[allow(dead_code)] // each bench binary uses its own subset
+pub fn bench_cfg<F: FnMut()>(name: &str, target_secs: f64,
+                             repeats: usize, mut f: F) -> f64 {
+    // warmup + calibrate iteration count to ~target_secs per repeat
     let t0 = Instant::now();
     f();
     let once = t0.elapsed().as_secs_f64().max(1e-9);
-    let iters = ((0.2 / once) as usize).clamp(1, 1_000_000);
-    let repeats = 5;
+    let iters = ((target_secs / once) as usize).clamp(1, 1_000_000);
+    let repeats = repeats.max(1);
     let mut samples = Vec::with_capacity(repeats);
     for _ in 0..repeats {
         let t = Instant::now();

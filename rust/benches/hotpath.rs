@@ -2,86 +2,265 @@
 //!
 //! Layers measured:
 //!  * L3-native: the rust wino-adder/adder kernels (serving fallback) —
-//!    Gadds/s on the paper's FPGA benchmark layer.
+//!    Gadd/s on the paper's FPGA benchmark layer `(1,16,28,28) x
+//!    (16,16,3,3)`, legacy tile-major vs point-major SAD-GEMM.
+//!  * kernel regression matrix: {legacy, pointmajor} x {f32, int8} x
+//!    {1, 4} threads on the elementwise stage alone; `--json` writes
+//!    it to `BENCH_kernel.json` (CI's `perf-smoke` artifact).
 //!  * L1/L2 via PJRT: the AOT Pallas layer artifacts end-to-end
 //!    (load -> execute), per batch bucket.
 //!  * transforms: input-tile extraction + B^T d B throughput.
 //!
+//! Operation counts come from `opcount::LayerSpec` (paper Eq. 10), so
+//! conv-level Gadd/s includes the input/output transform adds the old
+//! hand-rolled `tiles*O*C*32` figure omitted; the kernel-stage rows
+//! count only what the kernel actually executes (elementwise stage +
+//! folded output transform), keeping legacy-vs-pointmajor directly
+//! comparable.
+//!
 //! Run: `cargo bench --bench hotpath`
+//! Flags (after `--`): `--json [--out PATH]` for the machine-readable
+//! report; `--smoke` for a CI-sized shape and shorter timings.
 
 #[path = "benchkit.rs"]
 mod benchkit;
-use benchkit::{bench, gops};
+use benchkit::{bench_cfg, gops};
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use wino_adder::nn::adder::{adder_conv2d_fast, l1_distance_matrix};
-use wino_adder::nn::wino_adder::{input_tiles, wino_adder_tiles,
-                                 winograd_adder_conv2d_fast};
-use wino_adder::nn::quant::{quantize_wino_weights, requantize_pair,
-                            winograd_adder_conv2d_i8};
+use wino_adder::nn::backend::{kernel, simd, ParallelBackend,
+                              ParallelInt8Backend};
+use wino_adder::nn::quant::{input_tiles_i16, quantize_wino_weights,
+                            repack_wino_weights_pm, requantize_pair};
+use wino_adder::nn::wino_adder::{input_tiles, repack_weights_pm,
+                                 tiles_to_pm,
+                                 winograd_adder_conv2d_fast,
+                                 winograd_adder_conv2d_pm,
+                                 wino_adder_tiles};
 use wino_adder::nn::{matrices, Tensor};
+use wino_adder::opcount::{count_layer, LayerSpec, Mode};
+use wino_adder::util::cli::Args;
+use wino_adder::util::json::Json;
 use wino_adder::util::rng::Rng;
 
-fn main() {
-    let mut rng = Rng::new(42);
-    // the paper's FPGA benchmark layer: (1,16,28,28) x (16,16,3,3)
-    let x = Tensor::randn(&mut rng, [1, 16, 28, 28]);
-    let w3 = Tensor::randn(&mut rng, [16, 16, 3, 3]);
-    let w_hat = Tensor::randn(&mut rng, [16, 16, 4, 4]);
-    // op counts for Gadds/s: direct 2*MAC, wino ~ tiles*O*C*32
-    let direct_adds = 2.0 * (16 * 16 * 9 * 28 * 28) as f64;
-    let tiles = (14 * 14) as f64;
-    let wino_adds = tiles * (16.0 * 16.0 * 32.0);
+/// One kernel-stage measurement for the regression matrix.
+struct KernelRow {
+    kernel: &'static str,
+    dtype: &'static str,
+    threads: usize,
+    secs: f64,
+    gadds: f64,
+}
 
-    println!("=== L3-native kernels (paper layer, f32) ===");
-    let t = bench("direct adder conv (fast)", || {
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has("smoke");
+    let json_mode = args.has("json");
+    // bench() targets, shrunk for CI smoke runs
+    let (target, reps) = if smoke { (0.02, 3) } else { (0.2, 5) };
+    let bench = |name: &str, f: &mut dyn FnMut()| -> f64 {
+        bench_cfg(name, target, reps, f)
+    };
+
+    // the paper's FPGA benchmark layer (1,16,28,28) x (16,16,3,3);
+    // --smoke shrinks it so CI finishes in seconds
+    let (cin, cout, hw) = if smoke { (4, 4, 8) } else { (16, 16, 28) };
+    let v = matrices::Variant::Balanced(0);
+    let mut rng = Rng::new(42);
+    let x = Tensor::randn(&mut rng, [1, cin, hw, hw]);
+    let w3 = Tensor::randn(&mut rng, [cout, cin, 3, 3]);
+    let w_hat = Tensor::randn(&mut rng, [cout, cin, 4, 4]);
+
+    // op counts from the Table-1 model (fixes the old hand-rolled
+    // `tiles*O*C*32`, which omitted the transform adds)
+    let layer = LayerSpec {
+        name: "bench".into(),
+        cin,
+        cout,
+        out_hw: hw,
+        k: 3,
+        stride: 1,
+    };
+    let direct_adds = count_layer(&layer, Mode::AdderNet).adds as f64;
+    let conv_adds =
+        count_layer(&layer, Mode::WinogradAdderNet).adds as f64;
+    let tiles = (hw.div_ceil(2) * hw.div_ceil(2)) as f64;
+    // what the elementwise-stage kernels execute: the SAD core
+    // (2 adds per (t, o, c, p)) plus the folded flat output transform
+    let kernel_adds = tiles * (cout * cin * 32 + cout * 8) as f64;
+
+    println!("=== L3-native conv (layer ({cin},{hw},{hw}) x \
+              ({cout},{cin},3,3), f32; simd: {}) ===",
+             simd::level());
+    let t = bench("direct adder conv (fast)", &mut || {
         std::hint::black_box(adder_conv2d_fast(&x, &w3, 1));
     });
     println!("    -> {:.2} Gadd/s", gops(direct_adds, t));
-    let t = bench("winograd adder conv (fast)", || {
-        std::hint::black_box(winograd_adder_conv2d_fast(
-            &x, &w_hat, 1, matrices::Variant::Balanced(0)));
+    let t = bench("winograd adder conv (legacy tile-major)", &mut || {
+        std::hint::black_box(winograd_adder_conv2d_fast(&x, &w_hat, 1,
+                                                        v));
     });
     println!("    -> {:.2} Gadd/s (effective: {:.2} direct-equiv)",
-             gops(wino_adds, t), gops(direct_adds, t));
+             gops(conv_adds, t), gops(direct_adds, t));
+    let t = bench("winograd adder conv (point-major)", &mut || {
+        std::hint::black_box(winograd_adder_conv2d_pm(&x, &w_hat, 1,
+                                                      v));
+    });
+    println!("    -> {:.2} Gadd/s (effective: {:.2} direct-equiv)",
+             gops(conv_adds, t), gops(direct_adds, t));
 
-    println!("\n=== L3-native kernels (int8 datapath) ===");
+    // ---- kernel-stage regression matrix ---------------------------
+    // prepared operand buffers (tile extraction excluded from timing)
+    let (d_hat, n, th, tw) = input_tiles(&x.pad_same(1), v);
+    let t_count = n * th * tw;
+    let s = matrices::output_transform_flat(v);
+    let si = kernel::output_transform_flat_i32(v);
+    let d_arc: Arc<[f32]> = d_hat.clone().into();
+    let w_arc: Arc<[f32]> = w_hat.data.clone().into();
+    let d_pm: Arc<[f32]> = tiles_to_pm(&d_hat, t_count, cin).into();
+    let mut w_pm_v = Vec::new();
+    repack_weights_pm(&w_hat.data, cout, cin, &mut w_pm_v);
+    let w_pm: Arc<[f32]> = w_pm_v.into();
     let (qx, _) = requantize_pair(&x, &x);
     let wq = quantize_wino_weights(&w_hat, qx.qp.scale);
-    let t = bench("winograd adder conv (i8/i32)", || {
-        std::hint::black_box(winograd_adder_conv2d_i8(
-            &qx, &wq, w_hat.dims, 1, matrices::Variant::Balanced(0)));
-    });
-    println!("    -> {:.2} Gadd/s", gops(wino_adds, t));
+    let (d16_tiles, ..) = input_tiles_i16(&qx, 1, v);
+    let d16: Arc<[i16]> = d16_tiles.clone().into();
+    let w16: Arc<[i16]> = wq.clone().into();
+    let d16_pm: Arc<[i16]> =
+        tiles_to_pm(&d16_tiles, t_count, cin).into();
+    let mut w16_pm_v = Vec::new();
+    repack_wino_weights_pm(&wq, cout, cin, &mut w16_pm_v);
+    let w16_pm: Arc<[i16]> = w16_pm_v.into();
+
+    println!("\n=== kernel-stage matrix (elementwise + folded output \
+              transform, t={t_count}) ===");
+    let mut rows: Vec<KernelRow> = Vec::new();
+    let mut yf = vec![0f32; t_count * cout * 4];
+    let mut yi = vec![0i32; t_count * cout * 4];
+    for threads in [1usize, 4] {
+        let bef = ParallelBackend::new(threads);
+        let bei = ParallelInt8Backend::new(threads);
+        let mut bufs_f: Vec<Vec<f32>> = Vec::new();
+        let mut bufs_i: Vec<Vec<i32>> = Vec::new();
+        let secs = bench(
+            &format!("f32 legacy    x{threads}t"), &mut || {
+                bef.run_tiles(&d_arc, &w_arc, t_count, cout, cin, s,
+                              &mut yf);
+                std::hint::black_box(&yf);
+            });
+        rows.push(KernelRow { kernel: "legacy", dtype: "f32", threads,
+                              secs, gadds: gops(kernel_adds, secs) });
+        let secs = bench(
+            &format!("f32 pointmajor x{threads}t"), &mut || {
+                bef.run_tiles_pm(&d_pm, &w_pm, t_count, cout, cin, s,
+                                 &mut yf, &mut bufs_f);
+                std::hint::black_box(&yf);
+            });
+        rows.push(KernelRow { kernel: "pointmajor", dtype: "f32",
+                              threads, secs,
+                              gadds: gops(kernel_adds, secs) });
+        let secs = bench(
+            &format!("int8 legacy    x{threads}t"), &mut || {
+                bei.run_tiles(&d16, &w16, t_count, cout, cin, si,
+                              &mut yi);
+                std::hint::black_box(&yi);
+            });
+        rows.push(KernelRow { kernel: "legacy", dtype: "int8",
+                              threads, secs,
+                              gadds: gops(kernel_adds, secs) });
+        let secs = bench(
+            &format!("int8 pointmajor x{threads}t"), &mut || {
+                bei.run_tiles_pm(&d16_pm, &w16_pm, t_count, cout, cin,
+                                 si, &mut yi, &mut bufs_i);
+                std::hint::black_box(&yi);
+            });
+        rows.push(KernelRow { kernel: "pointmajor", dtype: "int8",
+                              threads, secs,
+                              gadds: gops(kernel_adds, secs) });
+    }
+    for r in &rows {
+        println!("  {:>10} {:>4} x{}t: {:8.2} Gadd/s",
+                 r.kernel, r.dtype, r.threads, r.gadds);
+    }
+    let speedup = |dtype: &str| -> f64 {
+        let find = |k: &str| {
+            rows.iter()
+                .find(|r| r.kernel == k && r.dtype == dtype
+                      && r.threads == 1)
+                .map(|r| r.secs)
+                .unwrap_or(f64::NAN)
+        };
+        find("legacy") / find("pointmajor")
+    };
+    println!("  single-thread point-major speedup: f32 {:.2}x, \
+              int8 {:.2}x (target >= 2x on the paper layer)",
+             speedup("f32"), speedup("int8"));
+
+    if json_mode {
+        let mut shape = BTreeMap::new();
+        shape.insert("cin".into(), Json::Num(cin as f64));
+        shape.insert("cout".into(), Json::Num(cout as f64));
+        shape.insert("hw".into(), Json::Num(hw as f64));
+        let jrows: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                let mut row = BTreeMap::new();
+                row.insert("kernel".into(), Json::Str(r.kernel.into()));
+                row.insert("dtype".into(), Json::Str(r.dtype.into()));
+                row.insert("threads".into(),
+                           Json::Num(r.threads as f64));
+                row.insert("secs_per_iter".into(), Json::Num(r.secs));
+                row.insert("gadds_per_s".into(), Json::Num(r.gadds));
+                Json::Obj(row)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("bench".into(), Json::Str("kernel".into()));
+        root.insert("smoke".into(), Json::Bool(smoke));
+        root.insert("simd".into(), Json::Str(simd::level().into()));
+        root.insert("variant".into(), Json::Str(v.name().into()));
+        root.insert("shape".into(), Json::Obj(shape));
+        root.insert("tiles".into(), Json::Num(t_count as f64));
+        root.insert("kernel_adds".into(), Json::Num(kernel_adds));
+        root.insert("conv_adds".into(), Json::Num(conv_adds));
+        root.insert("speedup_f32_1t".into(),
+                    Json::Num(speedup("f32")));
+        root.insert("speedup_int8_1t".into(),
+                    Json::Num(speedup("int8")));
+        root.insert("results".into(), Json::Arr(jrows));
+        let out_path = args.get_or("out", "BENCH_kernel.json");
+        std::fs::write(out_path, Json::Obj(root).dump())
+            .expect("writing BENCH_kernel.json");
+        println!("wrote {out_path}");
+    }
 
     println!("\n=== hot-loop microbenches ===");
-    let (d_hat, n, th, tw) = input_tiles(&x.pad_same(1),
-                                         matrices::Variant::Balanced(0));
-    let t_count = n * th * tw;
-    let s = matrices::output_transform_flat(matrices::Variant::Balanced(0));
-    let mut y = vec![0f32; t_count * 16 * 4];
-    let wflat = w_hat.data.clone();
-    let t = bench("wino_adder_tiles (elementwise core)", || {
-        wino_adder_tiles(&d_hat, &wflat, t_count, 16, 16, &s, &mut y);
+    let mut y = vec![0f32; t_count * cout * 4];
+    let t = bench("wino_adder_tiles (legacy elementwise core)",
+                  &mut || {
+        wino_adder_tiles(&d_hat, &w_hat.data, t_count, cout, cin, &s,
+                         &mut y);
         std::hint::black_box(&y);
     });
-    println!("    -> {:.2} Gadd/s", gops(wino_adds, t));
-    let t = bench("input_tiles (B^T d B)", || {
-        std::hint::black_box(input_tiles(&x.pad_same(1),
-                                         matrices::Variant::Balanced(0)));
+    println!("    -> {:.2} Gadd/s", gops(kernel_adds, t));
+    let t = bench("input_tiles (B^T d B)", &mut || {
+        std::hint::black_box(input_tiles(&x.pad_same(1), v));
     });
     println!("    -> {:.3} Melem/s",
-             (t_count * 16 * 16) as f64 / t / 1e6);
+             (t_count * cin * 16) as f64 / t / 1e6);
 
     let patches = rng.normal_vec(784 * 144);
     let wrows = rng.normal_vec(16 * 144);
     let mut out = vec![0f32; 784 * 16];
-    let t = bench("l1_distance_matrix 784x16x144", || {
+    let t = bench("l1_distance_matrix 784x16x144", &mut || {
         l1_distance_matrix(&patches, &wrows, 784, 16, 144, &mut out);
         std::hint::black_box(&out);
     });
     println!("    -> {:.2} Gadd/s", gops(2.0 * 784.0 * 16.0 * 144.0, t));
 
-    pjrt_section(&mut rng, wino_adds);
+    pjrt_section(&mut rng, conv_adds);
 }
 
 #[cfg(feature = "pjrt")]
@@ -103,9 +282,11 @@ fn pjrt_section(rng: &mut Rng, wino_adds: f64) {
         let Ok(entry) = manifest.layer(&name) else { continue };
         let exec = engine.load_layer(entry).expect("compile");
         let xb = rng.normal_vec(bucket * 16 * 28 * 28);
-        let t = bench(&format!("PJRT wino_adder layer b={bucket}"), || {
-            std::hint::black_box(exec.run(&xb, &w_flat).expect("run"));
-        });
+        let t = benchkit::bench(
+            &format!("PJRT wino_adder layer b={bucket}"), || {
+                std::hint::black_box(exec.run(&xb, &w_flat)
+                                     .expect("run"));
+            });
         println!("    -> {:.0} img/s, {:.2} Gadd/s",
                  bucket as f64 / t, gops(wino_adds * bucket as f64, t));
     }

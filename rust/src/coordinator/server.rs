@@ -22,7 +22,8 @@ use std::time::{Duration, Instant};
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::{LatencyStats, NetSummary};
 use super::router::Router;
-use crate::nn::backend::{default_threads, Backend, BackendKind};
+use crate::nn::backend::{default_threads, Backend, BackendKind,
+                         KernelKind};
 use crate::nn::matrices::Variant;
 use crate::nn::model::{ModelSpec, ModelWeights};
 use crate::nn::plan::ModelPlan;
@@ -144,6 +145,9 @@ impl ServerHandle {
 pub struct NativeConfig {
     pub backend: BackendKind,
     pub threads: usize,
+    /// kernel family (`--kernel legacy|pointmajor`; the A/B escape
+    /// hatch — point-major is the default)
+    pub kernel: KernelKind,
     pub cin: usize,
     pub cout: usize,
     pub hw: usize,
@@ -158,6 +162,7 @@ impl Default for NativeConfig {
         NativeConfig {
             backend: BackendKind::Parallel,
             threads: default_threads(),
+            kernel: KernelKind::default(),
             cin: 16,
             cout: 16,
             hw: 28,
@@ -210,7 +215,8 @@ impl Server {
             .name("wino-adder-native-engine".into())
             .spawn(move || {
                 let exec = PlannedExec {
-                    backend: cfg.backend.build(cfg.threads),
+                    backend: cfg.backend.build_with(cfg.threads,
+                                                    cfg.kernel),
                     plans,
                 };
                 if let Err(e) = serve_loop(policy, rx, exec) {
@@ -465,6 +471,7 @@ mod tests {
         NativeConfig {
             backend: kind,
             threads: 2,
+            kernel: KernelKind::default(),
             cin: 2,
             cout: 3,
             hw: 8,

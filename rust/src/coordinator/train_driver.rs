@@ -10,7 +10,7 @@
 
 use super::p_schedule::PSchedule;
 use crate::data::Preset;
-use crate::nn::backend::{Backend, BackendKind};
+use crate::nn::backend::{Backend, BackendKind, KernelKind};
 use crate::nn::matrices::Variant;
 use crate::nn::Tensor;
 use crate::util::rng::Rng;
@@ -100,12 +100,14 @@ pub struct BackendEval {
 }
 
 impl BackendEval {
-    /// `cout x cin` Winograd-domain weights drawn from `seed`.
-    pub fn new(kind: BackendKind, threads: usize, cout: usize,
-               cin: usize, seed: u64, variant: Variant) -> BackendEval {
+    /// `cout x cin` Winograd-domain weights drawn from `seed`, run on
+    /// `kernel` (pass [`KernelKind::default`] unless A/B-comparing).
+    pub fn new(kind: BackendKind, threads: usize, kernel: KernelKind,
+               cout: usize, cin: usize, seed: u64, variant: Variant)
+               -> BackendEval {
         let mut rng = Rng::new(seed);
         BackendEval {
-            backend: kind.build(threads),
+            backend: kind.build_with(threads, kernel),
             w_hat: Tensor::randn(&mut rng, [cout, cin, 4, 4]),
             variant,
         }
@@ -282,7 +284,8 @@ mod tests {
         use crate::data::{Dataset, Split};
         let ds = Dataset::new(Preset::MnistLike, 16, 3);
         let batch = ds.batch(Split::Test, 0, 4);
-        let ev = BackendEval::new(BackendKind::Parallel, 2, 6, 1, 9,
+        let ev = BackendEval::new(BackendKind::Parallel, 2,
+                                  KernelKind::default(), 6, 1, 9,
                                   Variant::Balanced(0));
         let (feats, d) = ev.features(&batch.images, 4, 1, 16);
         assert_eq!(d, 6 * 16 * 16);
@@ -296,8 +299,9 @@ mod tests {
         use crate::util::testkit::all_close;
         let ds = Dataset::new(Preset::Cifar10Like, 16, 4);
         let batch = ds.batch(Split::Train, 1, 2);
-        let mk = |kind| BackendEval::new(kind, 4, 5, 3, 7,
-                                         Variant::Balanced(1));
+        let mk = |kind| BackendEval::new(kind, 4,
+                                         KernelKind::default(), 5, 3,
+                                         7, Variant::Balanced(1));
         let (a, _) = mk(BackendKind::Scalar)
             .features(&batch.images, 2, 3, 16);
         let (b, _) = mk(BackendKind::Parallel)

@@ -70,14 +70,16 @@ fn print_help() {
          \x20          [--eval-every N] [--csv PATH] [--init NAME]   (pjrt)\n\
          \x20 serve    [--requests N] [--max-wait-us N]\n\
          \x20          [--backend scalar|parallel|parallel-int8|pjrt]\n\
-         \x20          [--threads N] [--cin N] [--cout N] [--hw N]\n\
+         \x20          [--kernel legacy|pointmajor] [--threads N]\n\
+         \x20          [--cin N] [--cout N] [--hw N]\n\
          \x20          [--variant std|A0..A3]\n\
          \x20          [--model single|stack|lenet|resnet20] [--depth N]\n\
          \x20          [--listen ADDR] [--max-in-flight N] [--duration-s N]\n\
          \x20 bench-serve [--smoke] [--clients N] [--requests N]\n\
          \x20          [--pipeline D] [--max-in-flight N] [--out PATH]\n\
-         \x20          [--backend ...] [--threads N] [--model ...]\n\
-         \x20          [--cin N] [--cout N] [--hw N] [--max-wait-us N]\n\
+         \x20          [--backend ...] [--kernel ...] [--threads N]\n\
+         \x20          [--model ...] [--cin N] [--cout N] [--hw N]\n\
+         \x20          [--max-wait-us N]\n\
          \x20 energy   [--model resnet20|resnet32|resnet18]\n\
          \x20 opcount  [--model resnet20|resnet32|resnet18|lenet|resnet20-lite]\n\
          \x20 fpga-sim [--cin N --cout N --hw N --par N]\n\
@@ -193,9 +195,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.get("backend") == Some("pjrt") {
         return serve_pjrt(args, n, policy);
     }
-    let (kind, threads) = BackendKind::from_args(args).ok_or_else(|| {
-        anyhow!("bad --backend (scalar|parallel|parallel-int8|pjrt)")
-    })?;
+    let (kind, threads, kernel) = BackendKind::from_args(args)
+        .ok_or_else(|| {
+            anyhow!("bad --backend (scalar|parallel|parallel-int8|\
+                     pjrt) or --kernel (legacy|pointmajor)")
+        })?;
     let variant = matrices::Variant::parse(args.get_or("variant", "A0"))
         .ok_or_else(|| anyhow!("bad --variant (std|A0..A3)"))?;
     let cin = args.get_usize("cin", 16);
@@ -204,6 +208,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = NativeConfig {
         backend: kind,
         threads,
+        kernel,
         cin,
         cout,
         hw,
@@ -213,10 +218,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let spec = cfg.spec();
     let sample = cfg.sample_len();
-    println!("native serving: backend {} x{} threads, model {} \
-              ({} layers, {} wino, {} ch in, {}x{})",
-             kind.name(), threads, spec.name, spec.layers.len(),
-             spec.wino_layers(), spec.in_channels, spec.hw, spec.hw);
+    println!("native serving: backend {} x{} threads ({} kernels), \
+              model {} ({} layers, {} wino, {} ch in, {}x{})",
+             kind.name(), threads, kernel.name(), spec.name,
+             spec.layers.len(), spec.wino_layers(), spec.in_channels,
+             spec.hw, spec.hw);
     let (handle, join) = Server::start_native(cfg, policy)?;
     if let Some(listen) = args.get("listen") {
         let listen = listen.to_string();
@@ -273,9 +279,11 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let window = args.get_usize("pipeline", 1).max(1);
     let max_in_flight = args.get_usize("max-in-flight", 4 * clients);
 
-    let (kind, threads) = BackendKind::from_args(args).ok_or_else(|| {
-        anyhow!("bad --backend (scalar|parallel|parallel-int8)")
-    })?;
+    let (kind, threads, kernel) = BackendKind::from_args(args)
+        .ok_or_else(|| {
+            anyhow!("bad --backend (scalar|parallel|parallel-int8) or \
+                     --kernel (legacy|pointmajor)")
+        })?;
     let threads = if smoke && args.get("threads").is_none() {
         2
     } else {
@@ -291,6 +299,7 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let cfg = NativeConfig {
         backend: kind,
         threads,
+        kernel,
         cin,
         cout,
         hw,
@@ -313,9 +322,10 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let addr = net.local_addr();
     println!("bench-serve: {total} closed-loop requests across \
               {clients} clients (pipeline {window}) -> {addr}");
-    println!("  backend {} x{threads} threads, model {} ({} layers), \
-              max {max_in_flight} in-flight",
-             kind.name(), spec.name, spec.layers.len());
+    println!("  backend {} x{threads} threads ({} kernels), model {} \
+              ({} layers), max {max_in_flight} in-flight",
+             kind.name(), kernel.name(), spec.name,
+             spec.layers.len());
 
     let t0 = Instant::now();
     let mut workers = Vec::new();
@@ -426,6 +436,7 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     root.insert("bench".into(), Json::Str("net_serving".into()));
     root.insert("smoke".into(), Json::Bool(smoke));
     root.insert("backend".into(), Json::Str(kind.name().into()));
+    root.insert("kernel".into(), Json::Str(kernel.name().into()));
     root.insert("threads".into(), Json::Num(threads as f64));
     root.insert("model".into(), Json::Str(spec.name.clone()));
     root.insert("shape".into(), Json::Obj(shape));
@@ -646,14 +657,17 @@ fn cmd_tsne(args: &Args) -> Result<()> {
     use wino_adder::data::{Dataset, Split};
     use wino_adder::tsne;
 
-    let (kind, threads) = BackendKind::from_args(args).ok_or_else(|| {
-        anyhow!("bad --backend (scalar|parallel|parallel-int8)")
-    })?;
+    let (kind, threads, kernel) = BackendKind::from_args(args)
+        .ok_or_else(|| {
+            anyhow!("bad --backend (scalar|parallel|parallel-int8) or \
+                     --kernel (legacy|pointmajor)")
+        })?;
     let preset = Preset::MnistLike;
     let hw = 16;
     let cout = args.get_usize("features", 8);
-    let ev = BackendEval::new(kind, threads, cout, preset.channels(),
-                              11, matrices::Variant::Balanced(0));
+    let ev = BackendEval::new(kind, threads, kernel, cout,
+                              preset.channels(), 11,
+                              matrices::Variant::Balanced(0));
     let ds = Dataset::new(preset, hw, 5);
     let batch = ds.batch(Split::Test, 0, args.get_usize("batch", 64));
     let (feats, d) =

@@ -5,7 +5,7 @@
 use std::sync::Arc;
 
 use super::pool::ThreadPool;
-use super::{kernel, Backend, Variant};
+use super::{kernel, simd, Backend, KernelKind, Variant};
 use crate::nn::plan::{self, Workspace};
 use crate::nn::quant::{self, QParams, QTensor};
 use crate::nn::wino_adder;
@@ -13,29 +13,41 @@ use crate::nn::Tensor;
 
 /// Parallel int8 backend: symmetric per-tensor quantization on the
 /// activation scale (`nn::quant` conventions), i16 transform domain,
-/// i32 accumulation, sharded over the tile axis.
+/// i32 accumulation, sharded over the tile axis (legacy kernels) or
+/// the `(point, tile-range)` grid (point-major kernels).
 ///
 /// The integer pipeline is bit-exact vs
-/// [`quant::winograd_adder_conv2d_i8`] — parallelism cannot change
-/// exact integer sums — so the only error vs the f32 oracle is the
+/// [`quant::winograd_adder_conv2d_i8`] regardless of [`KernelKind`],
+/// thread count, or SIMD level — integer sums are exact under any
+/// re-association — so the only error vs the f32 oracle is the
 /// quantization noise itself. Outputs are dequantized (`q * scale`) so
 /// callers see the same f32 `Tensor` API as every other backend.
 pub struct ParallelInt8Backend {
     pool: ThreadPool,
+    kernel: KernelKind,
 }
 
 impl ParallelInt8Backend {
+    /// Default (point-major) kernels.
     pub fn new(threads: usize) -> ParallelInt8Backend {
-        ParallelInt8Backend { pool: ThreadPool::new(threads) }
+        ParallelInt8Backend::with_kernel(threads, KernelKind::default())
+    }
+
+    pub fn with_kernel(threads: usize, kernel: KernelKind)
+                       -> ParallelInt8Backend {
+        ParallelInt8Backend { pool: ThreadPool::new(threads), kernel }
     }
 
     pub fn threads(&self) -> usize {
         self.pool.size()
     }
 
-    /// Sharded integer elementwise stage (see
-    /// [`super::ParallelBackend::run_tiles`]); exposed for the scaling
-    /// bench.
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
+    }
+
+    /// Sharded **legacy** integer elementwise stage (see
+    /// [`super::ParallelBackend::run_tiles`]); exposed for the benches.
     #[allow(clippy::too_many_arguments)] // mirrors the kernel ABI
     pub fn run_tiles(&self, d_hat: &Arc<[i16]>, w_hat: &Arc<[i16]>,
                      t: usize, o: usize, c: usize, s: [[i32; 4]; 16],
@@ -50,6 +62,25 @@ impl ParallelInt8Backend {
         });
     }
 
+    /// Sharded **point-major** integer elementwise stage (see
+    /// [`super::ParallelBackend::run_tiles_pm`]); exposed for the
+    /// benches.
+    #[allow(clippy::too_many_arguments)] // mirrors the kernel ABI
+    pub fn run_tiles_pm(&self, d_pm: &Arc<[i16]>, w_pm: &Arc<[i16]>,
+                        t: usize, o: usize, c: usize,
+                        s: [[i32; 4]; 16], y: &mut [i32],
+                        bufs: &mut Vec<Vec<i32>>) {
+        let d = Arc::clone(d_pm);
+        let w = Arc::clone(w_pm);
+        self.pool.scatter_grid_into(
+            16, t, o * 4, y, bufs, move |p0, p1, t0, t1, buf| {
+                buf.clear();
+                buf.resize((t1 - t0) * o * 4, 0);
+                simd::sad_gemm_pm_i8(&d, &w, t, t0, t1, p0, p1, o, c,
+                                     &s, buf);
+            });
+    }
+
     /// Integer forward from an already-quantized input: returns the
     /// raw i32 accumulators plus output dims (the shape
     /// `quant::winograd_adder_conv2d_i8` returns).
@@ -59,13 +90,30 @@ impl ParallelInt8Backend {
         let o = w_dims[0];
         let c = qx.dims[1];
         assert_eq!(w_dims[1], c, "channel mismatch");
-        let (d_hat, n, th, tw) = quant::input_tiles_i16(qx, pad, variant);
-        let t = n * th * tw;
         let s = kernel::output_transform_flat_i32(variant);
-        let d: Arc<[i16]> = d_hat.into();
-        let w: Arc<[i16]> = w_hat_q.to_vec().into();
+        let (n, th, tw) = wino_adder::tile_geometry(qx.dims, pad);
+        let t = n * th * tw;
         let mut y = vec![0i32; t * o * 4];
-        self.run_tiles(&d, &w, t, o, c, s, &mut y);
+        match self.kernel {
+            KernelKind::PointMajor => {
+                let mut d_pm = vec![0i16; 16 * c * t];
+                quant::input_tiles_i16_pm_into(&qx.data, qx.dims, pad,
+                                               variant, &mut d_pm);
+                let mut w_pm = Vec::new();
+                quant::repack_wino_weights_pm(w_hat_q, o, c, &mut w_pm);
+                let d: Arc<[i16]> = d_pm.into();
+                let w: Arc<[i16]> = w_pm.into();
+                self.run_tiles_pm(&d, &w, t, o, c, s, &mut y,
+                                  &mut Vec::new());
+            }
+            KernelKind::Legacy => {
+                let (d_hat, ..) =
+                    quant::input_tiles_i16(qx, pad, variant);
+                let d: Arc<[i16]> = d_hat.into();
+                let w: Arc<[i16]> = w_hat_q.to_vec().into();
+                self.run_tiles(&d, &w, t, o, c, s, &mut y);
+            }
+        }
         let out = kernel::untile_i32(&y, n, o, th, tw);
         (out, [n, o, 2 * th, 2 * tw])
     }
@@ -73,7 +121,12 @@ impl ParallelInt8Backend {
 
 impl Backend for ParallelInt8Backend {
     fn name(&self) -> String {
-        format!("parallel-int8[{}t]", self.pool.size())
+        match self.kernel {
+            KernelKind::PointMajor =>
+                format!("parallel-int8[{}t]", self.pool.size()),
+            KernelKind::Legacy =>
+                format!("parallel-int8[{}t,legacy]", self.pool.size()),
+        }
     }
 
     fn forward(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
@@ -107,25 +160,52 @@ impl Backend for ParallelInt8Backend {
         let scale = qp.scale;
         ws.qx.clear();
         ws.qx.extend(x.data.iter().map(|&v| qp.quantize(v)));
-        {
-            let d = plan::arc_vec_mut(&mut ws.d_hat_i16);
-            d.resize(t * c * 16, 0);
-            quant::input_tiles_i16_into(&ws.qx, x.dims, pad, variant,
-                                        d);
-            quant::quantize_wino_weights_into(
-                &w_hat.data, scale, plan::arc_vec_mut(&mut ws.w_i16));
-        }
         let s = kernel::output_transform_flat_i32(variant);
         ws.y_tiles_i32.resize(t * o * 4, 0);
-        let d = Arc::clone(&ws.d_hat_i16);
-        let w = Arc::clone(&ws.w_i16);
-        self.pool.scatter_ranges_into(
-            t, o * 4, &mut ws.y_tiles_i32, &mut ws.shard_i32,
-            move |a, b, buf| {
-                buf.resize((b - a) * o * 4, 0);
-                kernel::wino_adder_tiles_range_i8(&d, &w, a, b, o, c,
-                                                  &s, buf);
-            });
+        match self.kernel {
+            KernelKind::PointMajor => {
+                {
+                    let d = plan::arc_vec_mut(&mut ws.d_hat_i16);
+                    d.resize(16 * c * t, 0);
+                    quant::input_tiles_i16_pm_into(&ws.qx, x.dims, pad,
+                                                   variant, d);
+                    quant::quantize_wino_weights_pm_into(
+                        &w_hat.data, scale, o, c,
+                        plan::arc_vec_mut(&mut ws.w_i16));
+                }
+                let d = Arc::clone(&ws.d_hat_i16);
+                let w = Arc::clone(&ws.w_i16);
+                self.pool.scatter_grid_into(
+                    16, t, o * 4, &mut ws.y_tiles_i32,
+                    &mut ws.shard_i32, move |p0, p1, t0, t1, buf| {
+                        buf.clear();
+                        buf.resize((t1 - t0) * o * 4, 0);
+                        simd::sad_gemm_pm_i8(&d, &w, t, t0, t1, p0, p1,
+                                             o, c, &s, buf);
+                    });
+            }
+            KernelKind::Legacy => {
+                {
+                    let d = plan::arc_vec_mut(&mut ws.d_hat_i16);
+                    d.resize(t * c * 16, 0);
+                    quant::input_tiles_i16_into(&ws.qx, x.dims, pad,
+                                                variant, d);
+                    quant::quantize_wino_weights_into(
+                        &w_hat.data, scale,
+                        plan::arc_vec_mut(&mut ws.w_i16));
+                }
+                let d = Arc::clone(&ws.d_hat_i16);
+                let w = Arc::clone(&ws.w_i16);
+                self.pool.scatter_ranges_into(
+                    t, o * 4, &mut ws.y_tiles_i32, &mut ws.shard_i32,
+                    move |a, b, buf| {
+                        buf.resize((b - a) * o * 4, 0);
+                        kernel::wino_adder_tiles_range_i8(&d, &w, a, b,
+                                                          o, c, &s,
+                                                          buf);
+                    });
+            }
+        }
         out.dims = [n, o, 2 * th, 2 * tw];
         out.data.resize(t * o * 4, 0.0);
         kernel::untile_i32_scaled_into(&ws.y_tiles_i32, n, o, th, tw,
@@ -139,7 +219,8 @@ mod tests {
     use crate::util::rng::Rng;
 
     /// The parallel integer path must reproduce the sequential quant
-    /// reference bit-for-bit (integer sums are exact).
+    /// reference bit-for-bit (integer sums are exact) — with either
+    /// kernel family.
     #[test]
     fn matches_quant_reference_exactly() {
         let mut rng = Rng::new(31);
@@ -149,12 +230,15 @@ mod tests {
         let wq = quant::quantize_wino_weights(&w_hat, qx.qp.scale);
         let (want, want_dims, _) = quant::winograd_adder_conv2d_i8(
             &qx, &wq, w_hat.dims, 1, Variant::Balanced(0));
-        for threads in [1, 3, 8] {
-            let be = ParallelInt8Backend::new(threads);
-            let (got, dims) = be.forward_i8(&qx, &wq, w_hat.dims, 1,
-                                            Variant::Balanced(0));
-            assert_eq!(dims, want_dims);
-            assert_eq!(got, want, "{threads} threads");
+        for kernel in KernelKind::ALL {
+            for threads in [1, 3, 8] {
+                let be =
+                    ParallelInt8Backend::with_kernel(threads, kernel);
+                let (got, dims) = be.forward_i8(&qx, &wq, w_hat.dims,
+                                                1, Variant::Balanced(0));
+                assert_eq!(dims, want_dims);
+                assert_eq!(got, want, "{} x{threads}", kernel.name());
+            }
         }
     }
 
@@ -163,17 +247,21 @@ mod tests {
         let mut rng = Rng::new(33);
         let x = Tensor::randn(&mut rng, [2, 3, 8, 8]);
         let w_hat = Tensor::randn(&mut rng, [4, 3, 4, 4]);
-        for threads in [1usize, 4] {
-            let be = ParallelInt8Backend::new(threads);
-            let want = be.forward(&x, &w_hat, 1, Variant::Balanced(0));
-            let mut ws = Workspace::new();
-            let mut out = Tensor::zeros([1, 1, 1, 1]);
-            for _ in 0..2 {
-                be.forward_into(&x, &w_hat, 1, Variant::Balanced(0),
-                                &mut ws, &mut out);
-                assert_eq!(out.dims, want.dims);
-                assert_eq!(out.data, want.data,
-                           "{threads} threads diverged");
+        for kernel in KernelKind::ALL {
+            for threads in [1usize, 4] {
+                let be =
+                    ParallelInt8Backend::with_kernel(threads, kernel);
+                let want =
+                    be.forward(&x, &w_hat, 1, Variant::Balanced(0));
+                let mut ws = Workspace::new();
+                let mut out = Tensor::zeros([1, 1, 1, 1]);
+                for _ in 0..2 {
+                    be.forward_into(&x, &w_hat, 1, Variant::Balanced(0),
+                                    &mut ws, &mut out);
+                    assert_eq!(out.dims, want.dims);
+                    assert_eq!(out.data, want.data,
+                               "{} x{threads} diverged", kernel.name());
+                }
             }
         }
     }
@@ -187,11 +275,13 @@ mod tests {
         let wq = quant::quantize_wino_weights(&w_hat, qx.qp.scale);
         let (ref_i, dims, scale) = quant::winograd_adder_conv2d_i8(
             &qx, &wq, w_hat.dims, 1, Variant::Balanced(1));
-        let be = ParallelInt8Backend::new(4);
-        let got = be.forward(&x, &w_hat, 1, Variant::Balanced(1));
-        assert_eq!(got.dims, dims);
         let want: Vec<f32> =
             ref_i.iter().map(|&q| q as f32 * scale).collect();
-        assert_eq!(got.data, want);
+        for kernel in KernelKind::ALL {
+            let be = ParallelInt8Backend::with_kernel(4, kernel);
+            let got = be.forward(&x, &w_hat, 1, Variant::Balanced(1));
+            assert_eq!(got.dims, dims);
+            assert_eq!(got.data, want, "{}", kernel.name());
+        }
     }
 }

@@ -1,5 +1,9 @@
-//! Cache-blocked, autovectorizable kernels for the Winograd-adder
-//! elementwise stage, in f32 and int8/i32 fixed-point.
+//! Cache-blocked, autovectorizable **legacy (tile-major)** kernels for
+//! the Winograd-adder elementwise stage, in f32 and int8/i32
+//! fixed-point. The serving default is the point-major SAD-GEMM family
+//! in [`super::simd`]; these survive as the `--kernel legacy` escape
+//! hatch and as the oracles the point-major kernels are
+//! differential-tested against.
 //!
 //! The stage computes `m[t,o,p] = -sum_c |w_hat[o,c,p] - d_hat[t,c,p]|`
 //! followed by the flat output transform `y = m @ S` (S is 16x4 with
@@ -207,7 +211,10 @@ mod tests {
             let mut rng = Rng::new(seed);
             let d_hat = rng.normal_vec(t * c * 16);
             let w_hat = rng.normal_vec(o * c * 16);
-            let v = *g.choose(&[Variant::Std, Variant::Balanced(1)]);
+            let v = *g.choose(&[Variant::Std, Variant::Balanced(0),
+                                Variant::Balanced(1),
+                                Variant::Balanced(2),
+                                Variant::Balanced(3)]);
             let s = matrices::output_transform_flat(v);
             let mut want = vec![0f32; t * o * 4];
             wino_adder_tiles(&d_hat, &w_hat, t, o, c, &s, &mut want);
@@ -227,6 +234,53 @@ mod tests {
             let stitched: Vec<f32> =
                 lo.into_iter().chain(hi).collect();
             all_close(&stitched, &want, 1e-5, 1e-5)
+        });
+    }
+
+    /// The i16/i32 twin of the split-range property: computing
+    /// `[0, mid)` and `[mid, t)` separately must tile the full-range
+    /// output exactly (integer sums leave no rounding slack), for
+    /// every transform variant.
+    #[test]
+    fn i8_split_ranges_stitch_bit_exactly_property() {
+        property(25, |g| {
+            let t = g.usize_in(1, 40);
+            let o = g.usize_in(1, 12);
+            let c = g.usize_in(1, 6);
+            let seed = g.usize_in(0, 1 << 30) as u64;
+            let mut rng = Rng::new(seed);
+            // 10-bit transform-domain inputs, i16-range weights (the
+            // datapath quant::input_tiles_i16 / quantize_wino_weights
+            // produce)
+            let d_hat: Vec<i16> = (0..t * c * 16)
+                .map(|_| (rng.below(2033) as i32 - 1016) as i16)
+                .collect();
+            let w_hat: Vec<i16> = (0..o * c * 16)
+                .map(|_| (rng.below(4001) as i32 - 2000) as i16)
+                .collect();
+            let v = *g.choose(&[Variant::Std, Variant::Balanced(0),
+                                Variant::Balanced(1),
+                                Variant::Balanced(2),
+                                Variant::Balanced(3)]);
+            let s = output_transform_flat_i32(v);
+            let mut want = vec![0i32; t * o * 4];
+            wino_adder_tiles_range_i8(&d_hat, &w_hat, 0, t, o, c, &s,
+                                      &mut want);
+            let mid = g.usize_in(0, t);
+            let mut lo = vec![0i32; mid * o * 4];
+            let mut hi = vec![0i32; (t - mid) * o * 4];
+            wino_adder_tiles_range_i8(&d_hat, &w_hat, 0, mid, o, c, &s,
+                                      &mut lo);
+            wino_adder_tiles_range_i8(&d_hat, &w_hat, mid, t, o, c, &s,
+                                      &mut hi);
+            let stitched: Vec<i32> =
+                lo.into_iter().chain(hi).collect();
+            if stitched != want {
+                let bad = stitched.iter().zip(&want)
+                    .position(|(a, b)| a != b);
+                return Err(format!("mid={mid}: mismatch at {bad:?}"));
+            }
+            Ok(())
         });
     }
 

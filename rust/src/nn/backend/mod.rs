@@ -5,23 +5,34 @@
 //! A [`Backend`] maps `(x, w_hat) -> y` through paper Eq. 9. Three
 //! implementations ship:
 //!
-//! * [`ScalarBackend`] — the single-threaded baseline, delegating to
-//!   [`crate::nn::wino_adder::winograd_adder_conv2d_fast`]; the
-//!   reference the others are property-tested against.
-//! * [`ParallelBackend`] — shards the tile axis over a persistent
-//!   [`pool::ThreadPool`] and runs the cache-blocked, branchless
-//!   [`kernel::wino_adder_tiles_range`] per shard.
+//! * [`ScalarBackend`] — the single-threaded baseline; the reference
+//!   the others are property-tested against.
+//! * [`ParallelBackend`] — shards the elementwise stage over a
+//!   persistent [`pool::ThreadPool`].
 //! * [`ParallelInt8Backend`] — the same sharding over the int8/i32
 //!   fixed-point datapath (`nn::quant`), the paper's 8-bit energy
 //!   regime; outputs are dequantized f32 so the serving API is uniform.
 //!
+//! Each backend runs one of two kernel families, selected by
+//! [`KernelKind`] (`--kernel legacy|pointmajor`):
+//!
+//! * **point-major** (default) — the [`simd`] SAD-GEMM kernels:
+//!   `d_hat (16, C, T)` / `w_hat (16, O, C)`, one long-vector GEMM per
+//!   transform point, runtime-dispatched AVX2, sharded as
+//!   `(point, tile-range)` work items
+//!   ([`pool::ThreadPool::scatter_grid_into`]);
+//! * **legacy** — the tile-major `(T, C, 16)` kernels of [`kernel`],
+//!   the A/B escape hatch and test oracle.
+//!
 //! Selection is wired through `--backend {scalar|parallel|
-//! parallel-int8}` and `--threads N` (see [`BackendKind::from_args`]),
-//! used by `wino-adder serve`, the serving fallback in
-//! `coordinator::server`, and `benches/backend_scaling.rs`.
+//! parallel-int8}`, `--threads N`, and `--kernel` (see
+//! [`BackendKind::from_args`]), used by `wino-adder serve`,
+//! `bench-serve`, the serving fallback in `coordinator::server`, and
+//! the benches.
 
 pub mod kernel;
 pub mod pool;
+pub mod simd;
 
 mod int8;
 mod parallel;
@@ -70,6 +81,44 @@ pub trait Backend: Send {
     }
 }
 
+/// Which elementwise-stage kernel family a backend runs (CLI-facing:
+/// `--kernel legacy|pointmajor`).
+///
+/// * [`KernelKind::PointMajor`] (default) — the `(16, C, T)` /
+///   `(16, O, C)` SAD-GEMM kernels of [`simd`]: vectorized along the
+///   tile axis, runtime-dispatched AVX2, output transform folded into
+///   the epilogue.
+/// * [`KernelKind::Legacy`] — the original tile-major `(T, C, 16)`
+///   kernels of [`kernel`], kept as the A/B-comparison and bisection
+///   escape hatch (and as the test oracle the point-major path is
+///   verified against).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelKind {
+    Legacy,
+    #[default]
+    PointMajor,
+}
+
+impl KernelKind {
+    pub const ALL: [KernelKind; 2] =
+        [KernelKind::Legacy, KernelKind::PointMajor];
+
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s {
+            "legacy" => Some(KernelKind::Legacy),
+            "pointmajor" => Some(KernelKind::PointMajor),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Legacy => "legacy",
+            KernelKind::PointMajor => "pointmajor",
+        }
+    }
+}
+
 /// Backend selector (CLI-facing).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
@@ -100,26 +149,40 @@ impl BackendKind {
         }
     }
 
-    /// Instantiate the backend (`threads` is ignored by `scalar`).
+    /// Instantiate the backend with the default (point-major) kernels
+    /// (`threads` is ignored by `scalar`).
     pub fn build(self, threads: usize) -> Box<dyn Backend> {
+        self.build_with(threads, KernelKind::default())
+    }
+
+    /// Instantiate the backend with an explicit [`KernelKind`].
+    pub fn build_with(self, threads: usize, kernel: KernelKind)
+                      -> Box<dyn Backend> {
         match self {
-            BackendKind::Scalar => Box::new(ScalarBackend),
+            BackendKind::Scalar => Box::new(ScalarBackend::new(kernel)),
             BackendKind::Parallel =>
-                Box::new(ParallelBackend::new(threads)),
-            BackendKind::ParallelInt8 =>
-                Box::new(ParallelInt8Backend::new(threads)),
+                Box::new(ParallelBackend::with_kernel(threads, kernel)),
+            BackendKind::ParallelInt8 => Box::new(
+                ParallelInt8Backend::with_kernel(threads, kernel)),
         }
     }
 
-    /// Read `--backend NAME` (default `parallel`) and `--threads N`
-    /// (default: all cores) from parsed CLI args. `None` means the
-    /// `--backend` value was not recognised.
-    pub fn from_args(args: &Args) -> Option<(BackendKind, usize)> {
+    /// Read `--backend NAME` (default `parallel`), `--threads N`
+    /// (default: all cores), and `--kernel NAME` (default
+    /// `pointmajor`) from parsed CLI args. `None` means the
+    /// `--backend` or `--kernel` value was not recognised.
+    pub fn from_args(args: &Args)
+                     -> Option<(BackendKind, usize, KernelKind)> {
         let kind = match args.get("backend") {
             Some(s) => BackendKind::parse(s)?,
             None => BackendKind::Parallel,
         };
-        Some((kind, args.get_usize("threads", default_threads())))
+        let kernel = match args.get("kernel") {
+            Some(s) => KernelKind::parse(s)?,
+            None => KernelKind::default(),
+        };
+        Some((kind, args.get_usize("threads", default_threads()),
+              kernel))
     }
 }
 
@@ -144,10 +207,12 @@ mod tests {
     }
 
     #[test]
-    fn from_args_defaults_to_parallel() {
+    fn from_args_defaults_to_parallel_pointmajor() {
         let args = Args::parse(Vec::<String>::new());
-        let (kind, threads) = BackendKind::from_args(&args).unwrap();
+        let (kind, threads, kernel) =
+            BackendKind::from_args(&args).unwrap();
         assert_eq!(kind, BackendKind::Parallel);
+        assert_eq!(kernel, KernelKind::PointMajor);
         assert!(threads >= 1);
     }
 
@@ -156,24 +221,42 @@ mod tests {
         let args = Args::parse(
             ["serve", "--backend", "gpu"].map(String::from));
         assert!(BackendKind::from_args(&args).is_none());
+        let args = Args::parse(
+            ["serve", "--kernel", "blocked"].map(String::from));
+        assert!(BackendKind::from_args(&args).is_none());
     }
 
     #[test]
-    fn from_args_reads_threads() {
+    fn from_args_reads_threads_and_kernel() {
         let args = Args::parse(
-            ["serve", "--backend", "scalar", "--threads", "3"]
-                .map(String::from));
+            ["serve", "--backend", "scalar", "--threads", "3",
+             "--kernel", "legacy"].map(String::from));
         assert_eq!(BackendKind::from_args(&args),
-                   Some((BackendKind::Scalar, 3)));
+                   Some((BackendKind::Scalar, 3, KernelKind::Legacy)));
+    }
+
+    #[test]
+    fn kernel_kind_parse_roundtrip() {
+        for k in KernelKind::ALL {
+            assert_eq!(KernelKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(KernelKind::parse("tile-major"), None);
+        assert_eq!(KernelKind::default(), KernelKind::PointMajor);
     }
 
     #[test]
     fn build_names_mention_kind() {
         for kind in BackendKind::ALL {
-            let b = kind.build(2);
-            assert!(b.name().contains(kind.name().split('-').next()
-                                      .unwrap()),
-                    "{} vs {}", b.name(), kind.name());
+            for kernel in KernelKind::ALL {
+                let b = kind.build_with(2, kernel);
+                assert!(b.name().contains(kind.name().split('-').next()
+                                          .unwrap()),
+                        "{} vs {}", b.name(), kind.name());
+                assert_eq!(b.name().contains("legacy"),
+                           kernel == KernelKind::Legacy,
+                           "{} should flag the legacy kernel",
+                           b.name());
+            }
         }
     }
 }

@@ -1,10 +1,10 @@
-//! The multi-threaded f32 backend: tile-axis sharding over the thread
-//! pool + the cache-blocked branchless kernel.
+//! The multi-threaded f32 backend: the elementwise stage sharded over
+//! the thread pool, running either kernel family.
 
 use std::sync::Arc;
 
 use super::pool::ThreadPool;
-use super::{kernel, Backend, Variant};
+use super::{kernel, simd, Backend, KernelKind, Variant};
 use crate::nn::matrices;
 use crate::nn::plan::{self, Workspace};
 use crate::nn::wino_adder;
@@ -12,29 +12,41 @@ use crate::nn::Tensor;
 
 /// Work-stealing-free parallel f32 backend.
 ///
-/// `forward` extracts + transforms input tiles once (shared, read-only
-/// behind an `Arc`), splits the tile axis into one near-equal
-/// contiguous range per worker, and runs
-/// [`kernel::wino_adder_tiles_range`] per range. Because the `(T, O,
-/// 4)` output is tile-major, each shard owns a contiguous output slice
-/// — workers return their slice over the result channel and the caller
-/// stitches by `copy_from_slice`, so the whole path is safe code with
-/// zero shared mutable state.
+/// With the default point-major kernels ([`KernelKind::PointMajor`])
+/// the `(point, tile-range)` grid is sharded over a persistent
+/// [`ThreadPool`] ([`ThreadPool::scatter_grid_into`]) and each shard
+/// runs the SIMD-dispatched [`simd::sad_gemm_pm_f32`]. The legacy
+/// tile-major path shards the tile axis and runs
+/// [`kernel::wino_adder_tiles_range`] per shard. Either way each shard
+/// owns a contiguous output slice — workers return their slice over
+/// the result channel and the caller stitches, so the whole path is
+/// safe code with zero shared mutable state.
 pub struct ParallelBackend {
     pool: ThreadPool,
+    kernel: KernelKind,
 }
 
 impl ParallelBackend {
+    /// Default (point-major) kernels.
     pub fn new(threads: usize) -> ParallelBackend {
-        ParallelBackend { pool: ThreadPool::new(threads) }
+        ParallelBackend::with_kernel(threads, KernelKind::default())
+    }
+
+    pub fn with_kernel(threads: usize, kernel: KernelKind)
+                       -> ParallelBackend {
+        ParallelBackend { pool: ThreadPool::new(threads), kernel }
     }
 
     pub fn threads(&self) -> usize {
         self.pool.size()
     }
 
-    /// The sharded elementwise stage: `d_hat (T, C, 16)`, `w_hat (O,
-    /// C, 16)` -> `y (T, O, 4)`. Exposed so the scaling bench can
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
+    }
+
+    /// The sharded **legacy** elementwise stage: `d_hat (T, C, 16)`,
+    /// `w_hat (O, C, 16)` -> `y (T, O, 4)`. Exposed so the benches can
     /// measure the hot loop without tile extraction in the timing.
     #[allow(clippy::too_many_arguments)] // mirrors the kernel ABI
     pub fn run_tiles(&self, d_hat: &Arc<[f32]>, w_hat: &Arc<[f32]>,
@@ -49,28 +61,73 @@ impl ParallelBackend {
             out
         });
     }
+
+    /// The sharded **point-major** elementwise stage:
+    /// `d_pm (16, C, T)`, `w_pm (16, O, C)` -> `y (T, O, 4)`, split
+    /// into `(point, tile-range)` work items. `bufs` holds the reused
+    /// per-shard partial buffers (pass an empty `Vec` for one-shot
+    /// use). Exposed for the benches, like [`run_tiles`].
+    ///
+    /// [`run_tiles`]: ParallelBackend::run_tiles
+    #[allow(clippy::too_many_arguments)] // mirrors the kernel ABI
+    pub fn run_tiles_pm(&self, d_pm: &Arc<[f32]>, w_pm: &Arc<[f32]>,
+                        t: usize, o: usize, c: usize,
+                        s: [[f32; 4]; 16], y: &mut [f32],
+                        bufs: &mut Vec<Vec<f32>>) {
+        let d = Arc::clone(d_pm);
+        let w = Arc::clone(w_pm);
+        self.pool.scatter_grid_into(
+            16, t, o * 4, y, bufs, move |p0, p1, t0, t1, buf| {
+                buf.clear();
+                buf.resize((t1 - t0) * o * 4, 0.0);
+                simd::sad_gemm_pm_f32(&d, &w, t, t0, t1, p0, p1, o, c,
+                                      &s, buf);
+            });
+    }
 }
 
 impl Backend for ParallelBackend {
     fn name(&self) -> String {
-        format!("parallel[{}t]", self.pool.size())
+        match self.kernel {
+            KernelKind::PointMajor =>
+                format!("parallel[{}t]", self.pool.size()),
+            KernelKind::Legacy =>
+                format!("parallel[{}t,legacy]", self.pool.size()),
+        }
     }
 
     fn forward(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
                variant: Variant) -> Tensor {
-        let xp = x.pad_same(pad);
-        let c = xp.dims[1];
+        let c = x.dims[1];
         let o = w_hat.dims[0];
         assert_eq!(w_hat.dims[1], c, "channel mismatch");
         assert_eq!((w_hat.dims[2], w_hat.dims[3]), (4, 4),
                    "w_hat must be Winograd-domain (O,C,4,4)");
-        let (d_hat, n, th, tw) = wino_adder::input_tiles(&xp, variant);
-        let t = n * th * tw;
         let s = matrices::output_transform_flat(variant);
-        let d: Arc<[f32]> = d_hat.into();
-        let w: Arc<[f32]> = w_hat.data.clone().into();
+        let (n, th, tw) = wino_adder::tile_geometry(x.dims, pad);
+        let t = n * th * tw;
         let mut y = vec![0f32; t * o * 4];
-        self.run_tiles(&d, &w, t, o, c, s, &mut y);
+        match self.kernel {
+            KernelKind::PointMajor => {
+                let mut d_pm = vec![0f32; 16 * c * t];
+                wino_adder::input_tiles_pm_into(x, pad, variant,
+                                                &mut d_pm);
+                let mut w_pm = Vec::new();
+                wino_adder::repack_weights_pm(&w_hat.data, o, c,
+                                              &mut w_pm);
+                let d: Arc<[f32]> = d_pm.into();
+                let w: Arc<[f32]> = w_pm.into();
+                self.run_tiles_pm(&d, &w, t, o, c, s, &mut y,
+                                  &mut Vec::new());
+            }
+            KernelKind::Legacy => {
+                let xp = x.pad_same(pad);
+                let (d_hat, ..) = wino_adder::input_tiles(&xp, variant);
+                let d: Arc<[f32]> = d_hat.into();
+                let w: Arc<[f32]> = w_hat.data.clone().into();
+                self.run_tiles(&d, &w, t, o, c, s, &mut y);
+            }
+        }
         wino_adder::untile(&y, n, o, th, tw)
     }
 
@@ -84,33 +141,60 @@ impl Backend for ParallelBackend {
                    "w_hat must be Winograd-domain (O,C,4,4)");
         let (n, th, tw) = wino_adder::tile_geometry(x.dims, pad);
         let t = n * th * tw;
-        {
-            let d = plan::arc_vec_mut(&mut ws.d_hat);
-            d.resize(t * c * 16, 0.0);
-            wino_adder::input_tiles_into(x, pad, variant, d);
-        }
+        let s = matrices::output_transform_flat(variant);
         // shareable weights: the planned path hands us shared
         // ownership of the very tensor behind `w_hat` (zero-copy);
         // plain callers fall back to one clone per call
-        let w: Arc<Tensor> = match ws.w_shared.take() {
-            Some(arc) => {
-                debug_assert!(std::ptr::eq(arc.as_ref(), w_hat),
-                              "ws.w_shared must alias the w_hat \
-                               argument");
-                arc
-            }
-            None => Arc::new(w_hat.clone()),
-        };
-        let s = matrices::output_transform_flat(variant);
+        let w_shared: Option<Arc<Tensor>> = ws.w_shared.take();
+        if let Some(arc) = &w_shared {
+            debug_assert!(std::ptr::eq(arc.as_ref(), w_hat),
+                          "ws.w_shared must alias the w_hat argument");
+        }
         ws.y_tiles.resize(t * o * 4, 0.0);
-        let d = Arc::clone(&ws.d_hat);
-        self.pool.scatter_ranges_into(
-            t, o * 4, &mut ws.y_tiles, &mut ws.shard_f32,
-            move |a, b, buf| {
-                buf.resize((b - a) * o * 4, 0.0);
-                kernel::wino_adder_tiles_range(&d, &w.data, a, b, o, c,
-                                               &s, buf);
-            });
+        match self.kernel {
+            KernelKind::PointMajor => {
+                {
+                    let d = plan::arc_vec_mut(&mut ws.d_hat);
+                    d.resize(16 * c * t, 0.0);
+                    wino_adder::input_tiles_pm_into(x, pad, variant, d);
+                    // the repack is O(O*C*16) — noise next to the
+                    // kernel's O(T*O*C*16) — so the point-major path
+                    // repacks per call instead of consuming w_shared
+                    wino_adder::repack_weights_pm(
+                        &w_hat.data, o, c,
+                        plan::arc_vec_mut(&mut ws.w_pm));
+                }
+                drop(w_shared);
+                let d = Arc::clone(&ws.d_hat);
+                let w = Arc::clone(&ws.w_pm);
+                self.pool.scatter_grid_into(
+                    16, t, o * 4, &mut ws.y_tiles, &mut ws.shard_f32,
+                    move |p0, p1, t0, t1, buf| {
+                        buf.clear();
+                        buf.resize((t1 - t0) * o * 4, 0.0);
+                        simd::sad_gemm_pm_f32(&d, &w, t, t0, t1, p0,
+                                              p1, o, c, &s, buf);
+                    });
+            }
+            KernelKind::Legacy => {
+                {
+                    let d = plan::arc_vec_mut(&mut ws.d_hat);
+                    d.resize(t * c * 16, 0.0);
+                    wino_adder::input_tiles_into(x, pad, variant, d);
+                }
+                let w: Arc<Tensor> = w_shared
+                    .unwrap_or_else(|| Arc::new(w_hat.clone()));
+                let d = Arc::clone(&ws.d_hat);
+                self.pool.scatter_ranges_into(
+                    t, o * 4, &mut ws.y_tiles, &mut ws.shard_f32,
+                    move |a, b, buf| {
+                        buf.resize((b - a) * o * 4, 0.0);
+                        kernel::wino_adder_tiles_range(&d, &w.data, a,
+                                                       b, o, c, &s,
+                                                       buf);
+                    });
+            }
+        }
         out.dims = [n, o, 2 * th, 2 * tw];
         out.data.resize(t * o * 4, 0.0);
         wino_adder::untile_into(&ws.y_tiles, n, o, th, tw,
@@ -126,18 +210,22 @@ mod tests {
     use crate::util::testkit::all_close;
 
     #[test]
-    fn forward_matches_naive_across_thread_counts() {
+    fn forward_matches_naive_across_thread_counts_and_kernels() {
         let mut rng = Rng::new(21);
         let x = Tensor::randn(&mut rng, [2, 5, 8, 8]);
         let w_hat = Tensor::randn(&mut rng, [3, 5, 4, 4]);
         let want = winograd_adder_conv2d(&x, &w_hat, 1,
                                          Variant::Balanced(2));
-        for threads in [1, 2, 5] {
-            let be = ParallelBackend::new(threads);
-            let got = be.forward(&x, &w_hat, 1, Variant::Balanced(2));
-            assert_eq!(got.dims, want.dims);
-            all_close(&got.data, &want.data, 1e-4, 1e-4)
-                .unwrap_or_else(|e| panic!("{threads} threads: {e}"));
+        for kernel in KernelKind::ALL {
+            for threads in [1, 2, 5] {
+                let be = ParallelBackend::with_kernel(threads, kernel);
+                let got =
+                    be.forward(&x, &w_hat, 1, Variant::Balanced(2));
+                assert_eq!(got.dims, want.dims);
+                all_close(&got.data, &want.data, 1e-4, 1e-4)
+                    .unwrap_or_else(|e| panic!(
+                        "{} x{threads}: {e}", kernel.name()));
+            }
         }
     }
 
@@ -146,41 +234,47 @@ mod tests {
         let mut rng = Rng::new(29);
         let x = Tensor::randn(&mut rng, [1, 3, 8, 8]);
         let w_hat = Arc::new(Tensor::randn(&mut rng, [2, 3, 4, 4]));
-        let be = ParallelBackend::new(3);
-        let want = be.forward(&x, &w_hat, 1, Variant::Std);
-        let mut ws = Workspace::new();
-        let mut out = Tensor::zeros([1, 1, 1, 1]);
-        for _ in 0..2 {
-            ws.w_shared = Some(Arc::clone(&w_hat));
-            be.forward_into(&x, &w_hat, 1, Variant::Std, &mut ws,
-                            &mut out);
-            assert_eq!(out.data, want.data);
-            assert!(ws.w_shared.is_none(),
-                    "backend must consume the handle");
-            // the workers have dropped their clones: sole ownership
-            // is restored between requests (no weight copies linger)
-            assert_eq!(Arc::strong_count(&w_hat), 1);
+        for kernel in KernelKind::ALL {
+            let be = ParallelBackend::with_kernel(3, kernel);
+            let want = be.forward(&x, &w_hat, 1, Variant::Std);
+            let mut ws = Workspace::new();
+            let mut out = Tensor::zeros([1, 1, 1, 1]);
+            for _ in 0..2 {
+                ws.w_shared = Some(Arc::clone(&w_hat));
+                be.forward_into(&x, &w_hat, 1, Variant::Std, &mut ws,
+                                &mut out);
+                all_close(&out.data, &want.data, 1e-5, 1e-5).unwrap();
+                assert!(ws.w_shared.is_none(),
+                        "backend must consume the handle");
+                // the workers have dropped their clones: sole
+                // ownership is restored between requests (no weight
+                // copies linger)
+                assert_eq!(Arc::strong_count(&w_hat), 1);
+            }
         }
     }
 
     #[test]
-    fn forward_into_matches_forward_across_threads() {
+    fn forward_into_matches_forward_across_threads_and_kernels() {
         let mut rng = Rng::new(23);
         let x = Tensor::randn(&mut rng, [2, 4, 10, 10]);
         let w_hat = Tensor::randn(&mut rng, [3, 4, 4, 4]);
-        for threads in [1usize, 2, 6] {
-            let be = ParallelBackend::new(threads);
-            let want = be.forward(&x, &w_hat, 1, Variant::Balanced(1));
-            let mut ws = Workspace::new();
-            let mut out = Tensor::zeros([1, 1, 1, 1]);
-            // run twice through the same workspace: reuse must not
-            // change results
-            for _ in 0..2 {
-                be.forward_into(&x, &w_hat, 1, Variant::Balanced(1),
-                                &mut ws, &mut out);
-                assert_eq!(out.dims, want.dims);
-                assert_eq!(out.data, want.data,
-                           "{threads} threads diverged");
+        for kernel in KernelKind::ALL {
+            for threads in [1usize, 2, 6] {
+                let be = ParallelBackend::with_kernel(threads, kernel);
+                let want =
+                    be.forward(&x, &w_hat, 1, Variant::Balanced(1));
+                let mut ws = Workspace::new();
+                let mut out = Tensor::zeros([1, 1, 1, 1]);
+                // run twice through the same workspace: reuse must not
+                // change results
+                for _ in 0..2 {
+                    be.forward_into(&x, &w_hat, 1, Variant::Balanced(1),
+                                    &mut ws, &mut out);
+                    assert_eq!(out.dims, want.dims);
+                    assert_eq!(out.data, want.data,
+                               "{} x{threads} diverged", kernel.name());
+                }
             }
         }
     }
@@ -188,12 +282,16 @@ mod tests {
     #[test]
     fn more_threads_than_tiles_is_fine() {
         let mut rng = Rng::new(22);
-        // hw=4, pad=0 -> a single tile; 8 workers, 1 shard
+        // hw=4, pad=0 -> a single tile; 8 workers exercise the
+        // point-split path of shard_grid on the pm kernel
         let x = Tensor::randn(&mut rng, [1, 2, 4, 4]);
         let w_hat = Tensor::randn(&mut rng, [2, 2, 4, 4]);
         let want = winograd_adder_conv2d(&x, &w_hat, 0, Variant::Std);
-        let be = ParallelBackend::new(8);
-        let got = be.forward(&x, &w_hat, 0, Variant::Std);
-        all_close(&got.data, &want.data, 1e-4, 1e-4).unwrap();
+        for kernel in KernelKind::ALL {
+            let be = ParallelBackend::with_kernel(8, kernel);
+            let got = be.forward(&x, &w_hat, 0, Variant::Std);
+            all_close(&got.data, &want.data, 1e-4, 1e-4)
+                .unwrap_or_else(|e| panic!("{}: {e}", kernel.name()));
+        }
     }
 }

@@ -117,6 +117,81 @@ impl ThreadPool {
         }
     }
 
+    /// Shard the `(point, tile)` grid of the point-major kernels into
+    /// one work item per shard of [`shard_grid`], run
+    /// `f(p0, p1, t0, t1, buf)` per item (each filling its reused
+    /// buffer with a range-local `(t1 - t0) * stride` **partial**
+    /// accumulated over points `[p0, p1)`), and stitch into `y`.
+    ///
+    /// Tile ranges partition the output rows, so when each item covers
+    /// the full point range the partials are complete and stitching is
+    /// a plain copy (identical to [`ThreadPool::scatter_ranges_into`],
+    /// bit-for-bit equal to a single-threaded run). Only when
+    /// [`shard_grid`] splits the point axis (more workers than tiles)
+    /// is `y` zeroed and the partials **summed**, in ascending-point
+    /// order per tile range — exact for integer kernels; for f32 it
+    /// reassociates one addition per split (within kernel tolerance).
+    #[allow(clippy::too_many_arguments)] // mirrors the kernel ABI
+    pub fn scatter_grid_into<T, F>(&self, points: usize, n: usize,
+                                   stride: usize, y: &mut [T],
+                                   bufs: &mut Vec<Vec<T>>, f: F)
+    where
+        T: Copy + Default + std::ops::AddAssign + Send + 'static,
+        F: Fn(usize, usize, usize, usize, &mut Vec<T>)
+            + Send + Clone + 'static,
+    {
+        assert_eq!(y.len(), n * stride);
+        let items = shard_grid(points, n, self.size());
+        if bufs.len() < items.len().max(1) {
+            bufs.resize_with(items.len().max(1), Vec::new);
+        }
+        if items.len() <= 1 {
+            if let Some(&(p0, p1, t0, t1)) = items.first() {
+                let mut buf = std::mem::take(&mut bufs[0]);
+                f(p0, p1, t0, t1, &mut buf);
+                y.copy_from_slice(&buf);
+                bufs[0] = buf;
+            }
+            return;
+        }
+        let split_points =
+            items.iter().any(|&(p0, p1, _, _)| p1 - p0 != points);
+        let taken: Vec<Vec<T>> = bufs[..items.len()]
+            .iter_mut()
+            .map(std::mem::take)
+            .collect();
+        let jobs: Vec<_> = items
+            .into_iter()
+            .zip(taken)
+            .map(|((p0, p1, t0, t1), mut buf)| {
+                let g = f.clone();
+                move || {
+                    g(p0, p1, t0, t1, &mut buf);
+                    (t0, buf)
+                }
+            })
+            .collect();
+        if split_points {
+            for v in y.iter_mut() {
+                *v = T::default();
+            }
+        }
+        // results arrive in job order = (tile range, ascending point
+        // range) order, so the sum-stitch is deterministic
+        for (i, (t0, chunk)) in self.scatter(jobs).into_iter().enumerate()
+        {
+            let dst = &mut y[t0 * stride..t0 * stride + chunk.len()];
+            if split_points {
+                for (d, &s) in dst.iter_mut().zip(&chunk) {
+                    *d += s;
+                }
+            } else {
+                dst.copy_from_slice(&chunk);
+            }
+            bufs[i] = chunk;
+        }
+    }
+
     /// [`ThreadPool::scatter_ranges`] with **reused** per-shard result
     /// buffers: each shard's output `Vec` is taken from `bufs`, filled
     /// by `f(start, end, buf)` (which must resize it to
@@ -176,6 +251,39 @@ impl Drop for ThreadPool {
             let _ = h.join();
         }
     }
+}
+
+/// Split the `(point, tile)` iteration grid of the point-major kernels
+/// into up to `parts` work items `(p0, p1, t0, t1)`.
+///
+/// The tile axis is the long, cheap-to-split dimension, so it is
+/// sharded first (one near-equal contiguous range per worker). Only
+/// when there are more workers than tiles — small batch-1 layers on
+/// many-core hosts — is the point axis split too, so the extra workers
+/// get `(point sub-range, tile range)` items instead of idling. Items
+/// are ordered tile-range-major with ascending point ranges inside, the
+/// order `ThreadPool::scatter_grid_into` stitches in.
+pub fn shard_grid(points: usize, n: usize, parts: usize)
+                  -> Vec<(usize, usize, usize, usize)> {
+    let parts = parts.max(1);
+    if n == 0 || points == 0 {
+        return Vec::new();
+    }
+    let tile_parts = parts.min(n);
+    let point_parts = if tile_parts < parts && points > 1 {
+        (parts / tile_parts).min(points)
+    } else {
+        1
+    };
+    let tiles = shard_ranges(n, tile_parts);
+    let pts = shard_ranges(points, point_parts);
+    let mut out = Vec::with_capacity(tiles.len() * pts.len());
+    for &(t0, t1) in &tiles {
+        for &(p0, p1) in &pts {
+            out.push((p0, p1, t0, t1));
+        }
+    }
+    out
 }
 
 /// Split `0..n` into up to `parts` contiguous near-equal ranges
@@ -274,6 +382,97 @@ mod tests {
         });
         let caps2: Vec<usize> = bufs.iter().map(Vec::capacity).collect();
         assert_eq!(caps, caps2, "shard buffers were reallocated");
+    }
+
+    #[test]
+    fn shard_grid_covers_the_grid_exactly() {
+        for n in [0usize, 1, 2, 7, 16, 196, 1000] {
+            for parts in [1usize, 2, 4, 8, 48] {
+                let items = shard_grid(16, n, parts);
+                if n == 0 {
+                    assert!(items.is_empty());
+                    continue;
+                }
+                // every (p, t) cell is covered exactly once
+                let mut cover = vec![0u32; 16 * n];
+                for &(p0, p1, t0, t1) in &items {
+                    assert!(p0 < p1 && p1 <= 16);
+                    assert!(t0 < t1 && t1 <= n);
+                    for p in p0..p1 {
+                        for t in t0..t1 {
+                            cover[p * n + t] += 1;
+                        }
+                    }
+                }
+                assert!(cover.iter().all(|&c| c == 1),
+                        "n={n} parts={parts}");
+                // never splits points while tile shards can still
+                // absorb all the workers
+                if parts <= n {
+                    assert!(items.iter()
+                            .all(|&(p0, p1, _, _)| (p0, p1) == (0, 16)),
+                            "n={n} parts={parts} split points early");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_grid_into_copy_path_matches_ranges() {
+        // plenty of tiles: no point splitting, stitch is a copy
+        let pool = ThreadPool::new(3);
+        let (points, n, stride) = (16usize, 20usize, 4usize);
+        let mut y = vec![0usize; n * stride];
+        let mut bufs = Vec::new();
+        pool.scatter_grid_into(points, n, stride, &mut y, &mut bufs,
+                               move |p0, p1, t0, t1, buf| {
+            buf.clear();
+            buf.resize((t1 - t0) * stride, 0);
+            for (i, v) in buf.iter_mut().enumerate() {
+                // encodes the covered point range; complete partials
+                // carry (0, 16)
+                *v = (t0 * stride + i) * 100 + (p1 - p0);
+            }
+        });
+        let want: Vec<usize> =
+            (0..n * stride).map(|i| i * 100 + points).collect();
+        assert_eq!(y, want);
+    }
+
+    #[test]
+    fn scatter_grid_into_sums_point_partials() {
+        // 2 tiles, 8 workers -> the point axis must split; the stitch
+        // sums each tile range's partials exactly once
+        let pool = ThreadPool::new(8);
+        let (points, n, stride) = (16usize, 2usize, 3usize);
+        let mut y = vec![7usize; n * stride]; // stale values must die
+        let mut bufs = Vec::new();
+        pool.scatter_grid_into(points, n, stride, &mut y, &mut bufs,
+                               move |p0, p1, t0, t1, buf| {
+            buf.clear();
+            buf.resize((t1 - t0) * stride, 0);
+            for v in buf.iter_mut() {
+                *v += p1 - p0; // partial = its point-range length
+            }
+        });
+        // the per-cell sum over any disjoint cover of 0..16 is 16
+        assert_eq!(y, vec![points; n * stride]);
+        // buffers are retained for reuse
+        assert!(bufs.iter().any(|b| b.capacity() > 0));
+    }
+
+    #[test]
+    fn scatter_grid_into_single_worker_fast_path() {
+        let pool = ThreadPool::new(1);
+        let mut y = vec![0i32; 5 * 2];
+        let mut bufs = Vec::new();
+        pool.scatter_grid_into(16, 5, 2, &mut y, &mut bufs,
+                               move |p0, p1, t0, t1, buf| {
+            assert_eq!((p0, p1, t0, t1), (0, 16, 0, 5));
+            buf.clear();
+            buf.resize((t1 - t0) * 2, 9);
+        });
+        assert_eq!(y, vec![9i32; 10]);
     }
 
     #[test]

@@ -1,26 +1,46 @@
 //! Single-threaded baseline backend.
 
-use super::{kernel, Backend, Variant};
+use super::{kernel, simd, Backend, KernelKind, Variant};
 use crate::nn::matrices;
 use crate::nn::plan::{self, Workspace};
 use crate::nn::wino_adder;
 use crate::nn::Tensor;
 
-/// Delegates to the scalar hot path
-/// [`wino_adder::winograd_adder_conv2d_fast`]; the reference
+/// The single-threaded backend, running either kernel family
+/// ([`KernelKind`]): point-major SAD-GEMM by default, the legacy
+/// tile-major blocked kernel as the escape hatch. The reference
 /// implementation the parallel backends are benchmarked and
-/// property-tested against. `forward_into` runs the same math through
-/// the blocked kernel with workspace-owned buffers (zero allocation).
-pub struct ScalarBackend;
+/// property-tested against. `forward_into` runs the same math with
+/// workspace-owned buffers (zero allocation).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScalarBackend {
+    pub kernel: KernelKind,
+}
+
+impl ScalarBackend {
+    pub fn new(kernel: KernelKind) -> ScalarBackend {
+        ScalarBackend { kernel }
+    }
+}
 
 impl Backend for ScalarBackend {
     fn name(&self) -> String {
-        "scalar".to_string()
+        match self.kernel {
+            KernelKind::PointMajor => "scalar".to_string(),
+            KernelKind::Legacy => "scalar[legacy]".to_string(),
+        }
     }
 
     fn forward(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
                variant: Variant) -> Tensor {
-        wino_adder::winograd_adder_conv2d_fast(x, w_hat, pad, variant)
+        match self.kernel {
+            KernelKind::PointMajor =>
+                wino_adder::winograd_adder_conv2d_pm(x, w_hat, pad,
+                                                     variant),
+            KernelKind::Legacy =>
+                wino_adder::winograd_adder_conv2d_fast(x, w_hat, pad,
+                                                       variant),
+        }
     }
 
     fn forward_into(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
@@ -33,13 +53,29 @@ impl Backend for ScalarBackend {
                    "w_hat must be Winograd-domain (O,C,4,4)");
         let (n, th, tw) = wino_adder::tile_geometry(x.dims, pad);
         let t = n * th * tw;
-        let d = plan::arc_vec_mut(&mut ws.d_hat);
-        d.resize(t * c * 16, 0.0);
-        wino_adder::input_tiles_into(x, pad, variant, d);
         let s = matrices::output_transform_flat(variant);
-        ws.y_tiles.resize(t * o * 4, 0.0);
-        kernel::wino_adder_tiles_range(d, &w_hat.data, 0, t, o, c, &s,
-                                       &mut ws.y_tiles);
+        match self.kernel {
+            KernelKind::PointMajor => {
+                let d = plan::arc_vec_mut(&mut ws.d_hat);
+                d.resize(16 * c * t, 0.0);
+                wino_adder::input_tiles_pm_into(x, pad, variant, d);
+                let wp = plan::arc_vec_mut(&mut ws.w_pm);
+                wino_adder::repack_weights_pm(&w_hat.data, o, c, wp);
+                // the point-major kernel accumulates: start from zero
+                ws.y_tiles.clear();
+                ws.y_tiles.resize(t * o * 4, 0.0);
+                simd::sad_gemm_pm_f32(d, wp, t, 0, t, 0, 16, o, c, &s,
+                                      &mut ws.y_tiles);
+            }
+            KernelKind::Legacy => {
+                let d = plan::arc_vec_mut(&mut ws.d_hat);
+                d.resize(t * c * 16, 0.0);
+                wino_adder::input_tiles_into(x, pad, variant, d);
+                ws.y_tiles.resize(t * o * 4, 0.0);
+                kernel::wino_adder_tiles_range(d, &w_hat.data, 0, t, o,
+                                               c, &s, &mut ws.y_tiles);
+            }
+        }
         out.dims = [n, o, 2 * th, 2 * tw];
         out.data.resize(t * o * 4, 0.0);
         wino_adder::untile_into(&ws.y_tiles, n, o, th, tw,
@@ -55,29 +91,42 @@ mod tests {
     use crate::util::testkit::all_close;
 
     #[test]
-    fn matches_naive_oracle() {
+    fn matches_naive_oracle_both_kernels() {
         let mut rng = Rng::new(11);
         let x = Tensor::randn(&mut rng, [1, 3, 6, 6]);
         let w_hat = Tensor::randn(&mut rng, [2, 3, 4, 4]);
         let want = winograd_adder_conv2d(&x, &w_hat, 1,
                                          Variant::Balanced(0));
-        let got = ScalarBackend.forward(&x, &w_hat, 1,
-                                        Variant::Balanced(0));
-        assert_eq!(got.dims, want.dims);
-        all_close(&got.data, &want.data, 1e-4, 1e-4).unwrap();
+        for kernel in KernelKind::ALL {
+            let got = ScalarBackend::new(kernel)
+                .forward(&x, &w_hat, 1, Variant::Balanced(0));
+            assert_eq!(got.dims, want.dims);
+            all_close(&got.data, &want.data, 1e-4, 1e-4)
+                .unwrap_or_else(|e| panic!("{}: {e}", kernel.name()));
+        }
     }
 
     #[test]
-    fn forward_into_matches_forward() {
+    fn forward_into_matches_forward_both_kernels() {
         let mut rng = Rng::new(12);
         let x = Tensor::randn(&mut rng, [2, 3, 8, 8]);
         let w_hat = Tensor::randn(&mut rng, [4, 3, 4, 4]);
-        let want = ScalarBackend.forward(&x, &w_hat, 1, Variant::Std);
-        let mut ws = Workspace::new();
-        let mut out = Tensor::zeros([1, 1, 1, 1]);
-        ScalarBackend.forward_into(&x, &w_hat, 1, Variant::Std,
-                                   &mut ws, &mut out);
-        assert_eq!(out.dims, want.dims);
-        all_close(&out.data, &want.data, 1e-5, 1e-5).unwrap();
+        for kernel in KernelKind::ALL {
+            let be = ScalarBackend::new(kernel);
+            let want = be.forward(&x, &w_hat, 1, Variant::Std);
+            let mut ws = Workspace::new();
+            let mut out = Tensor::zeros([1, 1, 1, 1]);
+            // run twice through the same workspace: reuse must not
+            // change results (the pm path must re-zero y_tiles)
+            for _ in 0..2 {
+                be.forward_into(&x, &w_hat, 1, Variant::Std, &mut ws,
+                                &mut out);
+                assert_eq!(out.dims, want.dims);
+                all_close(&out.data, &want.data, 1e-5, 1e-5)
+                    .unwrap_or_else(|e| {
+                        panic!("{}: {e}", kernel.name())
+                    });
+            }
+        }
     }
 }

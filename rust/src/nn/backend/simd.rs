@@ -1,0 +1,547 @@
+//! Point-major SAD-GEMM kernels with runtime-dispatched SIMD — the
+//! Winograd-adder elementwise stage restructured the way classic
+//! Winograd implementations restructure their multiply stage: one
+//! independent GEMM per transform point.
+//!
+//! # Layout contract (point-major)
+//!
+//! * `d_pm` — input tiles as `(16, C, T)`: `d_pm[(p*C + c)*T + t]`,
+//!   written by [`crate::nn::wino_adder::input_tiles_pm_into`] /
+//!   [`crate::nn::quant::input_tiles_i16_pm_into`].
+//! * `w_pm` — weights as `(16, O, C)`: `w_pm[(p*O + o)*C + c]`, from
+//!   [`crate::nn::wino_adder::repack_weights_pm`] /
+//!   [`crate::nn::quant::quantize_wino_weights_pm_into`].
+//! * `y` — range-local `(t1-t0, O, 4)` tile-domain output patches,
+//!   **accumulated** (callers zero it first; see below).
+//!
+//! For each transform point `p` the stage is a sum-of-absolute-
+//! differences GEMM `M_p[t,o] = -sum_c |W_p[o,c] - D_p[t,c]|` whose
+//! innermost axis is the tile count `T` — the long, contiguous,
+//! shardable dimension — instead of the fixed 16-wide transform axis
+//! the legacy `(T, C, 16)` kernels vectorize over. The flat output
+//! transform `y = m @ S` is folded into the register-block epilogue:
+//! `y[t,o,q] += M_p[t,o] * S[p][q]` accumulates across points, so the
+//! `(T, O, 16)` intermediate `m` never round-trips through memory.
+//! This is why the kernels *accumulate* into `y`: a `(p0, p1)`
+//! sub-range computes a partial sum, and summing the partials over a
+//! disjoint cover of `0..16` reproduces the full result (exactly for
+//! the integer twin; up to one extra f32 rounding reassociation per
+//! split for the float kernel).
+//!
+//! # SIMD dispatch
+//!
+//! | target | f32 | int8 datapath |
+//! |---|---|---|
+//! | x86/x86_64 with AVX2 (runtime-detected) | `_mm256_sub_ps` + `_mm256_andnot_ps` sign-clear | widened SAD: `_mm256_cvtepi16_epi32`, `_mm256_sub_epi32`, `_mm256_abs_epi32` |
+//! | everything else | portable register-blocked kernel (autovectorizes) | portable register-blocked kernel |
+//!
+//! Detection goes through `is_x86_feature_detected!` once per call
+//! (the macro caches in an atomic). The AVX2 f32 path is **bit-exact**
+//! vs the portable kernel: tile lanes are independent (no horizontal
+//! reductions), so every output element sees the same scalar operation
+//! sequence. The int8 path widens both operands to i32 *before* the
+//! subtract — the `_mm256_sub_epi16`/`_mm256_abs_epi16` shortcut can
+//! wrap for adversarial weight scales (quantized weights may use the
+//! full i16 range) — which costs nothing extra because the widened
+//! `d` registers are shared across the whole output-channel block.
+//! Both integer paths are therefore exact, matching the scalar oracle
+//! bit-for-bit.
+
+use crate::nn::backend::kernel::abs_branchless;
+
+/// Output channels per register block (micro-kernel rows).
+pub const PM_OC_BLOCK: usize = 4;
+/// Tiles per register block (micro-kernel columns; 2 AVX2 f32 vectors).
+pub const PM_TILE_BLOCK: usize = 16;
+
+/// Human-readable active SIMD level: `"avx2"` or `"portable"`.
+pub fn level() -> &'static str {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return "avx2";
+        }
+    }
+    "portable"
+}
+
+/// Point-major f32 SAD-GEMM over tiles `[t0, t1)` and transform points
+/// `[p0, p1)`, dispatched to the best available SIMD path.
+///
+/// `d_pm` is `(16, C, T)` with `T = t`, `w_pm` is `(16, O, C)`, and
+/// `y` is the **range-local** output `(t1 - t0, O, 4)`, accumulated
+/// in ascending-`p` order (zero it before the first call).
+#[allow(clippy::too_many_arguments)] // kernel ABI: flat scalars + slices
+pub fn sad_gemm_pm_f32(d_pm: &[f32], w_pm: &[f32], t: usize, t0: usize,
+                       t1: usize, p0: usize, p1: usize, o: usize,
+                       c: usize, s: &[[f32; 4]; 16], y: &mut [f32]) {
+    check_pm(d_pm.len(), w_pm.len(), t, t0, t1, p0, p1, o, c, y.len());
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 presence was just checked; bounds were
+            // checked by `check_pm` above.
+            unsafe {
+                avx2::sad_gemm_pm_f32(d_pm, w_pm, t, t0, t1, p0, p1, o,
+                                      c, s, y);
+            }
+            return;
+        }
+    }
+    sad_gemm_pm_f32_portable(d_pm, w_pm, t, t0, t1, p0, p1, o, c, s, y);
+}
+
+/// Point-major i16 -> i32 SAD-GEMM (the int8 datapath's widened
+/// transform-domain operands), dispatched like [`sad_gemm_pm_f32`].
+/// Exact for the full i16 operand range; bit-identical across SIMD
+/// levels, thread counts, and point splits.
+#[allow(clippy::too_many_arguments)] // kernel ABI: flat scalars + slices
+pub fn sad_gemm_pm_i8(d_pm: &[i16], w_pm: &[i16], t: usize, t0: usize,
+                      t1: usize, p0: usize, p1: usize, o: usize,
+                      c: usize, s: &[[i32; 4]; 16], y: &mut [i32]) {
+    check_pm(d_pm.len(), w_pm.len(), t, t0, t1, p0, p1, o, c, y.len());
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 presence was just checked; bounds were
+            // checked by `check_pm` above.
+            unsafe {
+                avx2::sad_gemm_pm_i8(d_pm, w_pm, t, t0, t1, p0, p1, o,
+                                     c, s, y);
+            }
+            return;
+        }
+    }
+    sad_gemm_pm_i8_portable(d_pm, w_pm, t, t0, t1, p0, p1, o, c, s, y);
+}
+
+/// Shared bounds contract of every point-major kernel.
+#[allow(clippy::too_many_arguments)] // mirrors the kernel ABI
+fn check_pm(d_len: usize, w_len: usize, t: usize, t0: usize, t1: usize,
+            p0: usize, p1: usize, o: usize, c: usize, y_len: usize) {
+    assert!(t0 <= t1 && t1 <= t, "tile range [{t0}, {t1}) out of 0..{t}");
+    assert!(p0 <= p1 && p1 <= 16, "point range [{p0}, {p1}) out of 0..16");
+    assert_eq!(d_len, 16 * c * t, "d_pm must be (16, C, T)");
+    assert_eq!(w_len, 16 * o * c, "w_pm must be (16, O, C)");
+    assert_eq!(y_len, (t1 - t0) * o * 4, "y must be (t1-t0, O, 4)");
+}
+
+/// Portable register-blocked f32 micro-kernel — the dispatch fallback
+/// and the shape LLVM autovectorizes on non-x86 targets. Public so the
+/// SIMD paths can be differential-tested against it.
+#[allow(clippy::too_many_arguments)] // kernel ABI: flat scalars + slices
+pub fn sad_gemm_pm_f32_portable(d_pm: &[f32], w_pm: &[f32], t: usize,
+                                t0: usize, t1: usize, p0: usize,
+                                p1: usize, o: usize, c: usize,
+                                s: &[[f32; 4]; 16], y: &mut [f32]) {
+    check_pm(d_pm.len(), w_pm.len(), t, t0, t1, p0, p1, o, c, y.len());
+    for p in p0..p1 {
+        let dp = &d_pm[p * c * t..(p + 1) * c * t];
+        let wp = &w_pm[p * o * c..(p + 1) * o * c];
+        let sp = &s[p];
+        for tb in (t0..t1).step_by(PM_TILE_BLOCK) {
+            let te = (tb + PM_TILE_BLOCK).min(t1);
+            let nt = te - tb;
+            for ob in (0..o).step_by(PM_OC_BLOCK) {
+                let no = (ob + PM_OC_BLOCK).min(o) - ob;
+                // the register block: `m` for PM_OC_BLOCK output
+                // channels x PM_TILE_BLOCK tiles lives in registers /
+                // L1 stack only
+                let mut acc = [[0f32; PM_TILE_BLOCK]; PM_OC_BLOCK];
+                for ic in 0..c {
+                    let drow = &dp[ic * t + tb..ic * t + te];
+                    for (r, accr) in acc[..no].iter_mut().enumerate() {
+                        let wv = wp[(ob + r) * c + ic];
+                        for (a, &dv) in
+                            accr[..nt].iter_mut().zip(drow)
+                        {
+                            *a -= abs_branchless(wv - dv);
+                        }
+                    }
+                }
+                // epilogue: fold the flat output transform row S[p]
+                // into the accumulation (y += m_p * S[p])
+                for (r, accr) in acc[..no].iter().enumerate() {
+                    for (j, &m) in accr[..nt].iter().enumerate() {
+                        let yb = ((tb - t0 + j) * o + ob + r) * 4;
+                        y[yb] += m * sp[0];
+                        y[yb + 1] += m * sp[1];
+                        y[yb + 2] += m * sp[2];
+                        y[yb + 3] += m * sp[3];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Portable register-blocked i16 -> i32 micro-kernel (exact integer
+/// sums; blocking mirrors [`sad_gemm_pm_f32_portable`]).
+#[allow(clippy::too_many_arguments)] // kernel ABI: flat scalars + slices
+pub fn sad_gemm_pm_i8_portable(d_pm: &[i16], w_pm: &[i16], t: usize,
+                               t0: usize, t1: usize, p0: usize,
+                               p1: usize, o: usize, c: usize,
+                               s: &[[i32; 4]; 16], y: &mut [i32]) {
+    check_pm(d_pm.len(), w_pm.len(), t, t0, t1, p0, p1, o, c, y.len());
+    for p in p0..p1 {
+        let dp = &d_pm[p * c * t..(p + 1) * c * t];
+        let wp = &w_pm[p * o * c..(p + 1) * o * c];
+        let sp = &s[p];
+        for tb in (t0..t1).step_by(PM_TILE_BLOCK) {
+            let te = (tb + PM_TILE_BLOCK).min(t1);
+            let nt = te - tb;
+            for ob in (0..o).step_by(PM_OC_BLOCK) {
+                let no = (ob + PM_OC_BLOCK).min(o) - ob;
+                let mut acc = [[0i32; PM_TILE_BLOCK]; PM_OC_BLOCK];
+                for ic in 0..c {
+                    let drow = &dp[ic * t + tb..ic * t + te];
+                    for (r, accr) in acc[..no].iter_mut().enumerate() {
+                        let wv = wp[(ob + r) * c + ic] as i32;
+                        for (a, &dv) in
+                            accr[..nt].iter_mut().zip(drow)
+                        {
+                            *a -= (wv - dv as i32).abs();
+                        }
+                    }
+                }
+                for (r, accr) in acc[..no].iter().enumerate() {
+                    for (j, &m) in accr[..nt].iter().enumerate() {
+                        let yb = ((tb - t0 + j) * o + ob + r) * 4;
+                        y[yb] += m * sp[0];
+                        y[yb + 1] += m * sp[1];
+                        y[yb + 2] += m * sp[2];
+                        y[yb + 3] += m * sp[3];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Explicit AVX2 micro-kernels. Kept private: callers go through the
+/// dispatching entry points, which check the feature bit and the
+/// slice bounds before any `unsafe` is reached.
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+mod avx2 {
+    #[cfg(target_arch = "x86")]
+    use std::arch::x86::*;
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+
+    use super::{PM_OC_BLOCK, PM_TILE_BLOCK};
+
+    /// AVX2 f32 path: 2 x `__m256` tile vectors x [`PM_OC_BLOCK`]
+    /// broadcast weight rows; `|a - b|` via `_mm256_andnot_ps` with
+    /// the sign mask — the same sign-clear `abs_branchless` performs,
+    /// so results are bit-identical to the portable kernel.
+    ///
+    /// SAFETY: caller must ensure AVX2 is available and slice bounds
+    /// were validated (see `check_pm`).
+    #[allow(clippy::too_many_arguments)] // kernel ABI
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sad_gemm_pm_f32(d_pm: &[f32], w_pm: &[f32], t: usize,
+                                  t0: usize, t1: usize, p0: usize,
+                                  p1: usize, o: usize, c: usize,
+                                  s: &[[f32; 4]; 16], y: &mut [f32]) {
+        let sign = _mm256_set1_ps(-0.0);
+        for p in p0..p1 {
+            let dp = &d_pm[p * c * t..(p + 1) * c * t];
+            let wp = &w_pm[p * o * c..(p + 1) * o * c];
+            let sp = &s[p];
+            let mut tb = t0;
+            while tb + PM_TILE_BLOCK <= t1 {
+                for ob in (0..o).step_by(PM_OC_BLOCK) {
+                    let no = (ob + PM_OC_BLOCK).min(o) - ob;
+                    let mut acc = [_mm256_setzero_ps(); 2 * PM_OC_BLOCK];
+                    for ic in 0..c {
+                        let dptr = dp.as_ptr().add(ic * t + tb);
+                        let d0 = _mm256_loadu_ps(dptr);
+                        let d1 = _mm256_loadu_ps(dptr.add(8));
+                        for r in 0..no {
+                            let wv = _mm256_set1_ps(
+                                *wp.get_unchecked((ob + r) * c + ic));
+                            let a0 = _mm256_andnot_ps(
+                                sign, _mm256_sub_ps(wv, d0));
+                            let a1 = _mm256_andnot_ps(
+                                sign, _mm256_sub_ps(wv, d1));
+                            acc[2 * r] = _mm256_sub_ps(acc[2 * r], a0);
+                            acc[2 * r + 1] =
+                                _mm256_sub_ps(acc[2 * r + 1], a1);
+                        }
+                    }
+                    let mut m = [0f32; PM_TILE_BLOCK];
+                    for r in 0..no {
+                        _mm256_storeu_ps(m.as_mut_ptr(), acc[2 * r]);
+                        _mm256_storeu_ps(m.as_mut_ptr().add(8),
+                                         acc[2 * r + 1]);
+                        for (j, &mv) in m.iter().enumerate() {
+                            let yb = ((tb - t0 + j) * o + ob + r) * 4;
+                            y[yb] += mv * sp[0];
+                            y[yb + 1] += mv * sp[1];
+                            y[yb + 2] += mv * sp[2];
+                            y[yb + 3] += mv * sp[3];
+                        }
+                    }
+                }
+                tb += PM_TILE_BLOCK;
+            }
+            if tb < t1 {
+                // sub-PM_TILE_BLOCK tail: the portable kernel on the
+                // remaining tiles of this point (same element-wise
+                // operation order, so still bit-identical)
+                super::sad_gemm_pm_f32_portable(
+                    d_pm, w_pm, t, tb, t1, p, p + 1, o, c, s,
+                    &mut y[(tb - t0) * o * 4..]);
+            }
+        }
+    }
+
+    /// AVX2 int8-datapath path: one 16-lane i16 tile load per input
+    /// channel, widened once to 2 x `__m256i` i32 vectors and shared
+    /// across the [`PM_OC_BLOCK`] weight rows; subtract/abs run in
+    /// epi32 so no operand combination can wrap.
+    ///
+    /// SAFETY: caller must ensure AVX2 is available and slice bounds
+    /// were validated (see `check_pm`).
+    #[allow(clippy::too_many_arguments)] // kernel ABI
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sad_gemm_pm_i8(d_pm: &[i16], w_pm: &[i16], t: usize,
+                                 t0: usize, t1: usize, p0: usize,
+                                 p1: usize, o: usize, c: usize,
+                                 s: &[[i32; 4]; 16], y: &mut [i32]) {
+        for p in p0..p1 {
+            let dp = &d_pm[p * c * t..(p + 1) * c * t];
+            let wp = &w_pm[p * o * c..(p + 1) * o * c];
+            let sp = &s[p];
+            let mut tb = t0;
+            while tb + PM_TILE_BLOCK <= t1 {
+                for ob in (0..o).step_by(PM_OC_BLOCK) {
+                    let no = (ob + PM_OC_BLOCK).min(o) - ob;
+                    let mut acc =
+                        [_mm256_setzero_si256(); 2 * PM_OC_BLOCK];
+                    for ic in 0..c {
+                        let dptr = dp.as_ptr().add(ic * t + tb);
+                        let dv = _mm256_loadu_si256(
+                            dptr as *const __m256i);
+                        let dlo = _mm256_cvtepi16_epi32(
+                            _mm256_castsi256_si128(dv));
+                        let dhi = _mm256_cvtepi16_epi32(
+                            _mm256_extracti128_si256(dv, 1));
+                        for r in 0..no {
+                            let wv = _mm256_set1_epi32(
+                                *wp.get_unchecked((ob + r) * c + ic)
+                                    as i32);
+                            let a0 = _mm256_abs_epi32(
+                                _mm256_sub_epi32(wv, dlo));
+                            let a1 = _mm256_abs_epi32(
+                                _mm256_sub_epi32(wv, dhi));
+                            acc[2 * r] =
+                                _mm256_sub_epi32(acc[2 * r], a0);
+                            acc[2 * r + 1] =
+                                _mm256_sub_epi32(acc[2 * r + 1], a1);
+                        }
+                    }
+                    let mut m = [0i32; PM_TILE_BLOCK];
+                    for r in 0..no {
+                        _mm256_storeu_si256(
+                            m.as_mut_ptr() as *mut __m256i, acc[2 * r]);
+                        _mm256_storeu_si256(
+                            m.as_mut_ptr().add(8) as *mut __m256i,
+                            acc[2 * r + 1]);
+                        for (j, &mv) in m.iter().enumerate() {
+                            let yb = ((tb - t0 + j) * o + ob + r) * 4;
+                            y[yb] += mv * sp[0];
+                            y[yb + 1] += mv * sp[1];
+                            y[yb + 2] += mv * sp[2];
+                            y[yb + 3] += mv * sp[3];
+                        }
+                    }
+                }
+                tb += PM_TILE_BLOCK;
+            }
+            if tb < t1 {
+                super::sad_gemm_pm_i8_portable(
+                    d_pm, w_pm, t, tb, t1, p, p + 1, o, c, s,
+                    &mut y[(tb - t0) * o * 4..]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::backend::kernel::{self, output_transform_flat_i32};
+    use crate::nn::matrices::{self, Variant};
+    use crate::nn::wino_adder::{pm_repack, tiles_to_pm,
+                                wino_adder_tiles};
+    use crate::util::rng::Rng;
+    use crate::util::testkit::{all_close, property};
+
+    fn all_variants() -> [Variant; 5] {
+        [Variant::Std, Variant::Balanced(0), Variant::Balanced(1),
+         Variant::Balanced(2), Variant::Balanced(3)]
+    }
+
+    #[test]
+    fn pm_f32_matches_legacy_kernel_property() {
+        property(25, |g| {
+            let t = g.usize_in(1, 50);
+            let o = g.usize_in(1, 10);
+            let c = g.usize_in(1, 6);
+            let seed = g.usize_in(0, 1 << 30) as u64;
+            let mut rng = Rng::new(seed);
+            let d_hat = rng.normal_vec(t * c * 16);
+            let w_hat = rng.normal_vec(o * c * 16);
+            let v = *g.choose(&all_variants());
+            let s = matrices::output_transform_flat(v);
+            let mut want = vec![0f32; t * o * 4];
+            wino_adder_tiles(&d_hat, &w_hat, t, o, c, &s, &mut want);
+            let d_pm = tiles_to_pm(&d_hat, t, c);
+            let mut w_pm = Vec::new();
+            pm_repack(&w_hat, o, c, &mut w_pm);
+            let mut got = vec![0f32; t * o * 4];
+            sad_gemm_pm_f32(&d_pm, &w_pm, t, 0, t, 0, 16, o, c, &s,
+                            &mut got);
+            all_close(&got, &want, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn pm_f32_split_tile_and_point_ranges_stitch() {
+        property(20, |g| {
+            let t = g.usize_in(2, 40);
+            let o = g.usize_in(1, 8);
+            let c = g.usize_in(1, 5);
+            let seed = g.usize_in(0, 1 << 30) as u64;
+            let mut rng = Rng::new(seed);
+            let d_hat = rng.normal_vec(t * c * 16);
+            let w_hat = rng.normal_vec(o * c * 16);
+            let v = *g.choose(&all_variants());
+            let s = matrices::output_transform_flat(v);
+            let d_pm = tiles_to_pm(&d_hat, t, c);
+            let mut w_pm = Vec::new();
+            pm_repack(&w_hat, o, c, &mut w_pm);
+            let mut want = vec![0f32; t * o * 4];
+            sad_gemm_pm_f32(&d_pm, &w_pm, t, 0, t, 0, 16, o, c, &s,
+                            &mut want);
+            // tile split [0, mid) + [mid, t) tiles the output rows
+            let mid = g.usize_in(1, t - 1);
+            let mut lo = vec![0f32; mid * o * 4];
+            let mut hi = vec![0f32; (t - mid) * o * 4];
+            sad_gemm_pm_f32(&d_pm, &w_pm, t, 0, mid, 0, 16, o, c, &s,
+                            &mut lo);
+            sad_gemm_pm_f32(&d_pm, &w_pm, t, mid, t, 0, 16, o, c, &s,
+                            &mut hi);
+            let stitched: Vec<f32> = lo.into_iter().chain(hi).collect();
+            all_close(&stitched, &want, 1e-5, 1e-5)?;
+            // point split: accumulating [0, pmid) then [pmid, 16) into
+            // the same buffer reproduces the full sum (one extra f32
+            // reassociation -> tolerance, not bit-equality)
+            let pmid = g.usize_in(1, 15);
+            let mut accum = vec![0f32; t * o * 4];
+            sad_gemm_pm_f32(&d_pm, &w_pm, t, 0, t, 0, pmid, o, c, &s,
+                            &mut accum);
+            sad_gemm_pm_f32(&d_pm, &w_pm, t, 0, t, pmid, 16, o, c, &s,
+                            &mut accum);
+            all_close(&accum, &want, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn pm_i8_matches_legacy_i8_kernel_bit_exact_property() {
+        property(25, |g| {
+            let t = g.usize_in(1, 50);
+            let o = g.usize_in(1, 10);
+            let c = g.usize_in(1, 6);
+            let seed = g.usize_in(0, 1 << 30) as u64;
+            let mut rng = Rng::new(seed);
+            let d_hat: Vec<i16> = (0..t * c * 16)
+                .map(|_| (rng.below(2033) as i32 - 1016) as i16)
+                .collect();
+            let w_hat: Vec<i16> = (0..o * c * 16)
+                .map(|_| (rng.below(4001) as i32 - 2000) as i16)
+                .collect();
+            let v = *g.choose(&all_variants());
+            let s = output_transform_flat_i32(v);
+            let mut want = vec![0i32; t * o * 4];
+            kernel::wino_adder_tiles_range_i8(&d_hat, &w_hat, 0, t, o,
+                                              c, &s, &mut want);
+            let d_pm = tiles_to_pm(&d_hat, t, c);
+            let mut w_pm = Vec::new();
+            pm_repack(&w_hat, o, c, &mut w_pm);
+            let mut got = vec![0i32; t * o * 4];
+            sad_gemm_pm_i8(&d_pm, &w_pm, t, 0, t, 0, 16, o, c, &s,
+                           &mut got);
+            if got != want {
+                let bad =
+                    got.iter().zip(&want).position(|(a, b)| a != b);
+                return Err(format!("i32 mismatch at {bad:?}"));
+            }
+            // split point ranges must stitch bit-exactly (integers)
+            let pmid = g.usize_in(1, 15);
+            let mut accum = vec![0i32; t * o * 4];
+            sad_gemm_pm_i8(&d_pm, &w_pm, t, 0, t, 0, pmid, o, c, &s,
+                           &mut accum);
+            sad_gemm_pm_i8(&d_pm, &w_pm, t, 0, t, pmid, 16, o, c, &s,
+                           &mut accum);
+            if accum != want {
+                return Err("point-split stitching diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// Extreme i16 operands (full range, including `i16::MIN`): the
+    /// widened SAD must not wrap where the 16-bit shortcut would.
+    #[test]
+    fn pm_i8_is_exact_at_i16_extremes() {
+        let (t, o, c) = (17usize, 2usize, 1usize);
+        let mut d_hat = vec![0i16; t * c * 16];
+        let mut w_hat = vec![0i16; o * c * 16];
+        let extremes = [i16::MIN, -1016, -1, 0, 1, 1016, i16::MAX];
+        for (i, v) in d_hat.iter_mut().enumerate() {
+            *v = extremes[i % extremes.len()];
+        }
+        for (i, v) in w_hat.iter_mut().enumerate() {
+            *v = extremes[(i + 3) % extremes.len()];
+        }
+        let s = output_transform_flat_i32(Variant::Balanced(0));
+        let mut want = vec![0i32; t * o * 4];
+        kernel::wino_adder_tiles_range_i8(&d_hat, &w_hat, 0, t, o, c,
+                                          &s, &mut want);
+        let d_pm = tiles_to_pm(&d_hat, t, c);
+        let mut w_pm = Vec::new();
+        pm_repack(&w_hat, o, c, &mut w_pm);
+        let mut got = vec![0i32; t * o * 4];
+        sad_gemm_pm_i8(&d_pm, &w_pm, t, 0, t, 0, 16, o, c, &s,
+                       &mut got);
+        assert_eq!(got, want);
+    }
+
+    /// When AVX2 is available, the dispatched f32 path must be
+    /// bit-identical to the portable kernel (tile lanes are
+    /// independent; no reassociation happens).
+    #[test]
+    fn dispatched_f32_is_bit_identical_to_portable() {
+        let mut rng = Rng::new(77);
+        // deliberately awkward extents: tile tail (37 % 16 != 0) and
+        // an output-channel tail (o % PM_OC_BLOCK != 0)
+        let (t, o, c) = (37usize, 6usize, 5usize);
+        let d_pm = rng.normal_vec(16 * c * t);
+        let w_pm = rng.normal_vec(16 * o * c);
+        let s = matrices::output_transform_flat(Variant::Balanced(2));
+        let mut a = vec![0f32; t * o * 4];
+        let mut b = vec![0f32; t * o * 4];
+        sad_gemm_pm_f32(&d_pm, &w_pm, t, 0, t, 0, 16, o, c, &s, &mut a);
+        sad_gemm_pm_f32_portable(&d_pm, &w_pm, t, 0, t, 0, 16, o, c,
+                                 &s, &mut b);
+        assert_eq!(a, b, "SIMD level {} diverged from portable",
+                   level());
+    }
+
+    #[test]
+    fn level_is_a_known_name() {
+        assert!(matches!(level(), "avx2" | "portable"));
+    }
+}

@@ -26,8 +26,10 @@
 //! list — which is itself shared across every bucket's plan, so a
 //! model's weights exist exactly once no matter how many buckets
 //! serve it (the plan passes the backend shared ownership via
-//! [`Workspace::w_shared`], making the parallel f32 weight path
-//! copy-free).
+//! [`Workspace::w_shared`]; the legacy parallel f32 path ships it to
+//! workers copy-free, while the default point-major path repacks into
+//! the reused [`Workspace::w_pm`] buffer — an `O(O*C*16)` transpose,
+//! noise next to the `O(T*O*C*16)` kernel).
 
 use std::sync::Arc;
 
@@ -45,17 +47,26 @@ use crate::util::error::{Context, Result};
 /// call and recovered via [`arc_vec_mut`] afterwards.
 #[derive(Debug, Default)]
 pub struct Workspace {
-    /// f32 input tiles `(T, C, 16)`.
+    /// f32 input tiles: `(16, C, T)` point-major under the default
+    /// kernels, `(T, C, 16)` tile-major under
+    /// [`KernelKind::Legacy`](super::backend::KernelKind) — same
+    /// length either way; the owning backend call defines the layout.
     pub d_hat: Arc<Vec<f32>>,
+    /// f32 weights repacked point-major `(16, O, C)` (rebuilt per
+    /// Winograd step by the point-major f32 backends; unused by the
+    /// legacy kernels, which read the plan's `(O, C, 16)` tensors
+    /// directly via [`Workspace::w_shared`]).
+    pub w_pm: Arc<Vec<f32>>,
     /// Shared-ownership handle for the **same** tensor passed as
     /// `w_hat`, set by the planned executor before each Winograd step
     /// (the plan owns its weights in `Arc`s, so handing one over is
-    /// free). A pool-backed backend `take()`s it to ship weights to
-    /// workers with zero copying; when `None` (plain `forward_into`
-    /// callers) the parallel backend falls back to cloning `w_hat`
-    /// once per call. The int8 path ignores it — its quantized
-    /// weights depend on each request's activation scale and are
-    /// rebuilt into `w_i16` every call.
+    /// free). The **legacy** parallel f32 path `take()`s it to ship
+    /// `(O, C, 16)` weights to workers with zero copying (falling
+    /// back to one `w_hat` clone per call when `None`). The
+    /// point-major f32 path consumes-and-drops it — it repacks into
+    /// [`Workspace::w_pm`] instead — and the int8 path ignores it:
+    /// its quantized weights depend on each request's activation
+    /// scale and are rebuilt into `w_i16` every call.
     pub w_shared: Option<Arc<Tensor>>,
     /// f32 tile-domain output `(T, O, 4)`.
     pub y_tiles: Vec<f32>,
@@ -63,9 +74,12 @@ pub struct Workspace {
     pub shard_f32: Vec<Vec<f32>>,
     /// quantized input activations (int8 backend).
     pub qx: Vec<i8>,
-    /// i16 input tiles `(T, C, 16)` (int8 datapath).
+    /// i16 input tiles (int8 datapath; point-major `(16, C, T)` or
+    /// legacy `(T, C, 16)`, like [`Workspace::d_hat`]).
     pub d_hat_i16: Arc<Vec<i16>>,
-    /// i16 quantized weights `(O, C, 16)`.
+    /// i16 quantized weights (`(16, O, C)` point-major or `(O, C, 16)`
+    /// legacy; rebuilt every call either way — they depend on each
+    /// request's activation scale).
     pub w_i16: Arc<Vec<i16>>,
     /// i32 tile-domain accumulators `(T, O, 4)`.
     pub y_tiles_i32: Vec<i32>,
@@ -85,6 +99,7 @@ impl Workspace {
         // w_shared is excluded: it's a borrowed view of plan-owned
         // weights, not workspace storage
         self.d_hat.capacity() * 4
+            + self.w_pm.capacity() * 4
             + self.y_tiles.capacity() * 4
             + self.shard_f32.iter().map(|b| b.capacity() * 4)
                 .sum::<usize>()
@@ -143,6 +158,9 @@ struct StepMaxima {
     d_per: usize,
     /// max over wino layers of `th * tw * cout * 4` (tile-out floats)
     y_per: usize,
+    /// max over wino layers of `cout * cin * 16` (point-major weight
+    /// floats; batch-independent)
+    w_per: usize,
     /// max over layer boundaries (input included) of `c * hw * hw`
     act_per: usize,
     /// final (channels, hw)
@@ -192,6 +210,7 @@ impl ModelPlan {
         Ok(buckets.iter().map(|&batch| {
             let mut ws = Workspace::new();
             arc_vec_mut(&mut ws.d_hat).reserve(batch * m.d_per);
+            arc_vec_mut(&mut ws.w_pm).reserve(m.w_per);
             ws.y_tiles.reserve(batch * m.y_per);
             let act = |cap: usize| Tensor {
                 data: Vec::with_capacity(cap),
@@ -307,6 +326,7 @@ fn build_steps(spec: &ModelSpec, weights: &ModelWeights)
     let mut m = StepMaxima {
         d_per: 0,
         y_per: 0,
+        w_per: 0,
         act_per: c * hw * hw,
         out_c: c,
         out_hw: hw,
@@ -319,6 +339,7 @@ fn build_steps(spec: &ModelSpec, weights: &ModelWeights)
                     wino_adder::tile_geometry([1, cin, hw, hw], pad);
                 m.d_per = m.d_per.max(th * tw * cin * 16);
                 m.y_per = m.y_per.max(th * tw * cout * 4);
+                m.w_per = m.w_per.max(cout * cin * 16);
                 steps.push(PlanStep::Wino {
                     w_hat: Arc::new(Tensor::from_vec(
                         p.data.clone(), [cout, cin, 4, 4])),
@@ -452,7 +473,7 @@ mod tests {
         let mut plan = ModelPlan::compile(&spec, &weights, 2).unwrap();
         let mut rng = Rng::new(5);
         let x = rng.normal_vec(plan.in_len());
-        let be = ScalarBackend;
+        let be = ScalarBackend::default();
         let got = plan.forward(&be, &x).to_vec();
 
         // manual composition through the public single-layer APIs
@@ -486,7 +507,7 @@ mod tests {
         let spec = ModelSpec::lenetish(2, 8, Variant::Balanced(1));
         let weights = ModelWeights::init(&spec, 2);
         let mut plan = ModelPlan::compile(&spec, &weights, 4).unwrap();
-        let be = ScalarBackend;
+        let be = ScalarBackend::default();
         let mut rng = Rng::new(9);
         let x = rng.normal_vec(plan.in_len());
         let first = plan.forward(&be, &x).to_vec();

@@ -253,14 +253,35 @@ pub fn input_tiles_i16(x: &QTensor, pad: usize, variant: Variant)
 pub fn input_tiles_i16_into(data: &[i8], dims: [usize; 4], pad: usize,
                             variant: Variant, out: &mut [i16])
                             -> (usize, usize, usize) {
+    let [n, c, _, _] = dims;
+    let (_, th, tw) = crate::nn::wino_adder::tile_geometry(dims, pad);
+    assert_eq!(out.len(), n * th * tw * c * 16, "d_hat slice length");
+    for_each_tile_transform_i16(
+        data, dims, pad, variant, |trow, ic, d_hat| {
+            out[(trow * c + ic) * 16..(trow * c + ic) * 16 + 16]
+                .copy_from_slice(d_hat);
+        })
+}
+
+/// The single home of int8 tile extraction + the integer `B^T d B`
+/// (exact: B entries are 0/±1; results fit in 10 bits — the FPGA's
+/// widened datapath): visit every `(tile row, input channel)` pair's
+/// transformed i16 16-vector. [`input_tiles_i16_into`] (tile-major)
+/// and [`input_tiles_i16_pm_into`] (point-major) are thin layout
+/// adapters, mirroring `wino_adder`'s f32 pair.
+fn for_each_tile_transform_i16<F>(data: &[i8], dims: [usize; 4],
+                                  pad: usize, variant: Variant,
+                                  mut write: F)
+                                  -> (usize, usize, usize)
+where
+    F: FnMut(usize, usize, &[i16; 16]),
+{
     let [n, c, h, wd] = dims;
     assert_eq!(data.len(), n * c * h * wd, "data/dims mismatch");
     let (hp, wp) = (h + 2 * pad, wd + 2 * pad);
     assert!(hp >= 4 && wp >= 4 && (hp - 2) % 2 == 0 && (wp - 2) % 2 == 0,
             "padded H, W must be even and >= 4");
     let (th, tw) = ((hp - 2) / 2, (wp - 2) / 2);
-    let t = n * th * tw;
-    assert_eq!(out.len(), t * c * 16, "d_hat slice length");
     let bm = matrices::b(variant);
     let get = |in_: usize, ic: usize, i: isize, j: isize| -> i32 {
         let (i, j) = (i - pad as isize, j - pad as isize);
@@ -272,6 +293,7 @@ pub fn input_tiles_i16_into(data: &[i8], dims: [usize; 4], pad: usize,
         }
     };
     let mut d = [0i32; 16];
+    let mut d_hat = [0i16; 16];
     for in_ in 0..n {
         for ti in 0..th {
             for tj in 0..tw {
@@ -296,7 +318,6 @@ pub fn input_tiles_i16_into(data: &[i8], dims: [usize; 4], pad: usize,
                             tmp[i * 4 + j] = s;
                         }
                     }
-                    let base = (trow * c + ic) * 16;
                     for i in 0..4 {
                         for j in 0..4 {
                             let mut s = 0i32;
@@ -304,14 +325,39 @@ pub fn input_tiles_i16_into(data: &[i8], dims: [usize; 4], pad: usize,
                                 s += tmp[i * 4 + l] * (bm[l][j] as i32);
                             }
                             // fits in 10 bits
-                            out[base + i * 4 + j] = s as i16;
+                            d_hat[i * 4 + j] = s as i16;
                         }
                     }
+                    write(trow, ic, &d_hat);
                 }
             }
         }
     }
     (n, th, tw)
+}
+
+/// Point-major twin of [`input_tiles_i16_into`]: writes `d_hat` as
+/// `(16, C, T)` — the layout the point-major SAD-GEMM kernels
+/// ([`crate::nn::backend::simd`]) consume — into the caller's slice
+/// (exactly `16 * T * C` long) and returns `(n, th, tw)`. Values are
+/// identical to the tile-major twin element-for-element (integer
+/// transforms are exact); only the memory order differs.
+pub fn input_tiles_i16_pm_into(data: &[i8], dims: [usize; 4],
+                               pad: usize, variant: Variant,
+                               out: &mut [i16])
+                               -> (usize, usize, usize) {
+    let [n, c, _, _] = dims;
+    let (_, th, tw) = crate::nn::wino_adder::tile_geometry(dims, pad);
+    let t = n * th * tw;
+    assert_eq!(out.len(), 16 * t * c, "d_pm slice length");
+    for_each_tile_transform_i16(
+        data, dims, pad, variant, |trow, ic, d_hat| {
+            // scatter across the 16 (C, T) point planes, contiguous
+            // along tiles
+            for (p, &v) in d_hat.iter().enumerate() {
+                out[(p * c + ic) * t + trow] = v;
+            }
+        })
 }
 
 /// Quantize Winograd-domain f32 weights to i16 on the activation scale
@@ -323,17 +369,40 @@ pub fn quantize_wino_weights(w_hat: &Tensor, scale: f32) -> Vec<i16> {
     out
 }
 
-/// Buffer-reusing twin of [`quantize_wino_weights`] — the single home
-/// of the weight-quantization formula, shared by the sequential
-/// reference and the int8 backend's `forward`/`forward_into` paths
-/// (which must stay bit-identical).
+/// The single home of the int8-datapath weight-quantization formula —
+/// every i16 weight on every path (sequential reference, legacy and
+/// point-major backends) goes through this, so they stay bit-identical.
+#[inline]
+fn quantize_w(v: f32, scale: f32) -> i16 {
+    (v / scale).round().clamp(i16::MIN as f32, i16::MAX as f32) as i16
+}
+
+/// Buffer-reusing twin of [`quantize_wino_weights`]: flat `(O, C, 16)`
+/// order, quantized via the shared formula.
 pub fn quantize_wino_weights_into(w_hat: &[f32], scale: f32,
                                   out: &mut Vec<i16>) {
     out.clear();
-    out.extend(w_hat.iter().map(|&v| {
-        (v / scale).round().clamp(i16::MIN as f32, i16::MAX as f32)
-            as i16
-    }));
+    out.extend(w_hat.iter().map(|&v| quantize_w(v, scale)));
+}
+
+/// Point-major twin of [`quantize_wino_weights_into`]: quantize flat
+/// `(O, C, 16)` Winograd-domain weights straight into the
+/// `(16, O, C)` layout of the point-major kernels — the shared
+/// `pm_repack_map` index walk fused with the shared quantization
+/// formula, so element values are bit-identical to the tile-major
+/// path and the layout lives in one place.
+pub fn quantize_wino_weights_pm_into(w_hat: &[f32], scale: f32,
+                                     o: usize, c: usize,
+                                     out: &mut Vec<i16>) {
+    crate::nn::wino_adder::pm_repack_map(w_hat, o, c, out,
+                                         |v| quantize_w(v, scale));
+}
+
+/// Repack already-quantized i16 weights `(O, C, 16)` into point-major
+/// `(16, O, C)` (shares the index map with the f32 repack).
+pub fn repack_wino_weights_pm(wq: &[i16], o: usize, c: usize,
+                              out: &mut Vec<i16>) {
+    crate::nn::wino_adder::pm_repack(wq, o, c, out);
 }
 
 #[cfg(test)]
@@ -443,6 +512,55 @@ mod tests {
         for (a, b) in ti16.iter().zip(&tf32) {
             assert_eq!(*a as f32, *b);
         }
+    }
+
+    #[test]
+    fn pm_i16_tiles_are_a_permutation_of_tile_major() {
+        let mut rng = Rng::new(14);
+        let dims = [2usize, 3, 6, 6];
+        let data: Vec<i8> = (0..dims.iter().product::<usize>())
+            .map(|_| (rng.below(255) as i32 - 127) as i8)
+            .collect();
+        for pad in [0usize, 1] {
+            let (want, n, th, tw) = {
+                let qx = QTensor {
+                    data: data.clone(),
+                    dims,
+                    qp: QParams { scale: 1.0 },
+                };
+                input_tiles_i16(&qx, pad, Variant::Balanced(2))
+            };
+            let t = n * th * tw;
+            let c = dims[1];
+            let mut pm = vec![0i16; want.len()];
+            let geom = input_tiles_i16_pm_into(
+                &data, dims, pad, Variant::Balanced(2), &mut pm);
+            assert_eq!(geom, (n, th, tw));
+            for ti in 0..t {
+                for ic in 0..c {
+                    for p in 0..16 {
+                        assert_eq!(pm[(p * c + ic) * t + ti],
+                                   want[(ti * c + ic) * 16 + p],
+                                   "({ti},{ic},{p})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pm_weight_quantization_matches_tile_major() {
+        let mut rng = Rng::new(15);
+        let (o, c) = (3usize, 4usize);
+        let w_hat = rng.normal_vec(o * c * 16);
+        let scale = 0.037f32;
+        let mut flat = Vec::new();
+        quantize_wino_weights_into(&w_hat, scale, &mut flat);
+        let mut pm = Vec::new();
+        quantize_wino_weights_pm_into(&w_hat, scale, o, c, &mut pm);
+        let mut want = Vec::new();
+        repack_wino_weights_pm(&flat, o, c, &mut want);
+        assert_eq!(pm, want);
     }
 
     #[test]

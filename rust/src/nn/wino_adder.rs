@@ -46,10 +46,29 @@ pub fn input_tiles(xp: &Tensor, variant: Variant)
 /// across requests.
 pub fn input_tiles_into(x: &Tensor, pad: usize, variant: Variant,
                         out: &mut [f32]) -> (usize, usize, usize) {
-    let [n, c, h, w] = x.dims;
+    let [n, c, _, _] = x.dims;
     let (_, th, tw) = tile_geometry(x.dims, pad);
     let t = n * th * tw;
     assert_eq!(out.len(), t * c * 16, "d_hat slice length");
+    for_each_tile_transform(x, pad, variant, |trow, ic, d_hat| {
+        out[(trow * c + ic) * 16..(trow * c + ic) * 16 + 16]
+            .copy_from_slice(d_hat);
+    })
+}
+
+/// The single home of f32 tile extraction + `B^T d B`: visit every
+/// `(tile row, input channel)` pair's transformed 16-vector under
+/// implicit zero padding. [`input_tiles_into`] (tile-major) and
+/// [`input_tiles_pm_into`] (point-major) are thin layout adapters, so
+/// a fix to the extraction or transform logic lands in both layouts
+/// at once (cf. [`untile_map_into`], the untile-side analogue).
+fn for_each_tile_transform<F>(x: &Tensor, pad: usize, variant: Variant,
+                              mut write: F) -> (usize, usize, usize)
+where
+    F: FnMut(usize, usize, &[f32; 16]),
+{
+    let [n, c, h, w] = x.dims;
+    let (_, th, tw) = tile_geometry(x.dims, pad);
     let mut tile = [0f32; 16];
     for in_ in 0..n {
         for ti in 0..th {
@@ -69,13 +88,94 @@ pub fn input_tiles_into(x: &Tensor, pad: usize, variant: Variant,
                         }
                     }
                     let d_hat = matrices::input_transform(&tile, variant);
-                    out[(trow * c + ic) * 16..(trow * c + ic) * 16 + 16]
-                        .copy_from_slice(&d_hat);
+                    write(trow, ic, &d_hat);
                 }
             }
         }
     }
     (n, th, tw)
+}
+
+/// Point-major twin of [`input_tiles_into`]: extract + transform all
+/// tiles of an **unpadded** input with implicit zero padding `pad`,
+/// writing `d_hat` as `(16, C, T)` — transform point outermost, tile
+/// index innermost — into the caller's slice (exactly `16 * C * T`
+/// long). Returns `(n, th, tw)`.
+///
+/// This is the layout contract of the point-major SAD-GEMM kernels
+/// ([`crate::nn::backend::simd`]): each transform point owns a
+/// contiguous `(C, T)` plane whose rows are contiguous along the tile
+/// axis, the long vectorizable dimension.
+pub fn input_tiles_pm_into(x: &Tensor, pad: usize, variant: Variant,
+                           out: &mut [f32]) -> (usize, usize, usize) {
+    let [n, c, _, _] = x.dims;
+    let (_, th, tw) = tile_geometry(x.dims, pad);
+    let t = n * th * tw;
+    assert_eq!(out.len(), 16 * c * t, "d_pm slice length");
+    for_each_tile_transform(x, pad, variant, |trow, ic, d_hat| {
+        // scatter the 16 transform values across the 16 (C, T)
+        // planes; consecutive `trow` values land on consecutive
+        // addresses within each plane
+        for (p, &v) in d_hat.iter().enumerate() {
+            out[(p * c + ic) * t + trow] = v;
+        }
+    })
+}
+
+/// The single home of the `(O, C, 16) -> (16, O, C)` weight repack:
+/// `out[(p*O + o)*C + c] = f(w_hat[(o*C + c)*16 + p])`. Behind every
+/// point-major weight producer — the f32 [`repack_weights_pm`], the
+/// int8 [`crate::nn::quant::repack_wino_weights_pm`], and the fused
+/// quantize-while-repacking
+/// [`crate::nn::quant::quantize_wino_weights_pm_into`] — so the
+/// layout exists in exactly one place.
+pub fn pm_repack_map<T, U, F>(w_hat: &[T], o: usize, c: usize,
+                              out: &mut Vec<U>, f: F)
+where
+    T: Copy,
+    F: Fn(T) -> U,
+{
+    assert_eq!(w_hat.len(), o * c * 16, "w_hat must be (O, C, 16)");
+    out.clear();
+    out.reserve(o * c * 16);
+    for p in 0..16 {
+        for oc in 0..o {
+            for ic in 0..c {
+                out.push(f(w_hat[(oc * c + ic) * 16 + p]));
+            }
+        }
+    }
+}
+
+/// [`pm_repack_map`] with the identity map.
+pub fn pm_repack<T: Copy>(w_hat: &[T], o: usize, c: usize,
+                          out: &mut Vec<T>) {
+    pm_repack_map(w_hat, o, c, out, |v| v);
+}
+
+/// Repack flat Winograd-domain weights `(O, C, 16)` into the
+/// point-major `(16, O, C)` layout the SAD-GEMM kernels consume.
+pub fn repack_weights_pm(w_hat: &[f32], o: usize, c: usize,
+                         out: &mut Vec<f32>) {
+    pm_repack(w_hat, o, c, out);
+}
+
+/// Repack tile-major input tiles `(T, C, 16)` into the point-major
+/// `(16, C, T)` layout: `out[(p*C + c)*T + t] = d[(t*C + c)*16 + p]`.
+/// The hot paths write point-major directly ([`input_tiles_pm_into`]);
+/// this exists for benches and differential tests that already hold
+/// tile-major data.
+pub fn tiles_to_pm<T: Copy>(d: &[T], t: usize, c: usize) -> Vec<T> {
+    assert_eq!(d.len(), t * c * 16, "tiles must be (T, C, 16)");
+    let mut out = Vec::with_capacity(d.len());
+    for p in 0..16 {
+        for ic in 0..c {
+            for ti in 0..t {
+                out.push(d[(ti * c + ic) * 16 + p]);
+            }
+        }
+    }
+    out
 }
 
 /// Transform spatial weights `(O,C,3,3)` -> flat `(O, C, 16)`.
@@ -225,6 +325,31 @@ pub fn winograd_adder_conv2d_fast(x: &Tensor, w_hat: &Tensor, pad: usize,
     untile(&y, n, o, th, tw)
 }
 
+/// Winograd AdderNet forward through the **point-major** SAD-GEMM
+/// kernels ([`crate::nn::backend::simd`]): `d_hat` laid out
+/// `(16, C, T)`, weights repacked `(16, O, C)`, the flat output
+/// transform folded into the kernel epilogue. Same math as
+/// [`winograd_adder_conv2d`] (1e-4-close; the single-threaded
+/// reference path of the point-major backends).
+pub fn winograd_adder_conv2d_pm(x: &Tensor, w_hat: &Tensor, pad: usize,
+                                variant: Variant) -> Tensor {
+    let c = x.dims[1];
+    let o = w_hat.dims[0];
+    assert_eq!(w_hat.dims[1], c);
+    assert_eq!((w_hat.dims[2], w_hat.dims[3]), (4, 4));
+    let (n, th, tw) = tile_geometry(x.dims, pad);
+    let t = n * th * tw;
+    let mut d_pm = vec![0f32; 16 * c * t];
+    input_tiles_pm_into(x, pad, variant, &mut d_pm);
+    let mut w_pm = Vec::new();
+    repack_weights_pm(&w_hat.data, o, c, &mut w_pm);
+    let s = matrices::output_transform_flat(variant);
+    let mut y = vec![0f32; t * o * 4];
+    crate::nn::backend::simd::sad_gemm_pm_f32(&d_pm, &w_pm, t, 0, t, 0,
+                                              16, o, c, &s, &mut y);
+    untile(&y, n, o, th, tw)
+}
+
 /// The shared hot loop (also benched standalone in benches/hotpath.rs).
 pub fn wino_adder_tiles(d_hat: &[f32], w_hat: &[f32], t: usize, o: usize,
                         c: usize, s: &[[f32; 4]; 16], y: &mut [f32]) {
@@ -339,6 +464,83 @@ mod tests {
                                     {wn},{wth},{wtw}"));
             }
             all_close(&got, &want, 0.0, 0.0)
+        });
+    }
+
+    #[test]
+    fn pm_tiles_are_a_permutation_of_tile_major() {
+        property(15, |g| {
+            let n = g.usize_in(1, 2);
+            let c = g.usize_in(1, 4);
+            let hw = 2 * g.usize_in(2, 5);
+            let pad = g.usize_in(0, 1);
+            let seed = g.usize_in(0, 1 << 30) as u64;
+            let mut rng = Rng::new(seed);
+            let x = Tensor::randn(&mut rng, [n, c, hw, hw]);
+            let v = *g.choose(&[Variant::Std, Variant::Balanced(0),
+                                Variant::Balanced(3)]);
+            let (want, wn, wth, wtw) = input_tiles(&x.pad_same(pad), v);
+            let t = wn * wth * wtw;
+            let mut pm = vec![f32::NAN; want.len()];
+            let (gn, gth, gtw) = input_tiles_pm_into(&x, pad, v, &mut pm);
+            if (gn, gth, gtw) != (wn, wth, wtw) {
+                return Err(format!("geometry {gn},{gth},{gtw} vs \
+                                    {wn},{wth},{wtw}"));
+            }
+            for ti in 0..t {
+                for ic in 0..c {
+                    for p in 0..16 {
+                        let a = pm[(p * c + ic) * t + ti];
+                        let b = want[(ti * c + ic) * 16 + p];
+                        if a != b {
+                            return Err(format!(
+                                "({ti},{ic},{p}): {a} vs {b}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pm_weight_repack_is_the_transpose() {
+        let (o, c) = (3usize, 2usize);
+        let flat: Vec<f32> = (0..o * c * 16).map(|i| i as f32).collect();
+        let mut pm = Vec::new();
+        repack_weights_pm(&flat, o, c, &mut pm);
+        assert_eq!(pm.len(), flat.len());
+        for p in 0..16 {
+            for oc in 0..o {
+                for ic in 0..c {
+                    assert_eq!(pm[(p * o + oc) * c + ic],
+                               flat[(oc * c + ic) * 16 + p]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pm_forward_matches_naive_property() {
+        property(20, |g| {
+            let n = g.usize_in(1, 2);
+            let c = g.usize_in(1, 6);
+            let hw = 2 * g.usize_in(2, 5);
+            let o = g.usize_in(1, 6);
+            let seed = g.usize_in(0, 1 << 30) as u64;
+            let mut rng = Rng::new(seed);
+            let x = Tensor::randn(&mut rng, [n, c, hw, hw]);
+            let w_hat = Tensor::randn(&mut rng, [o, c, 4, 4]);
+            let v = *g.choose(&[Variant::Std, Variant::Balanced(0),
+                                Variant::Balanced(1),
+                                Variant::Balanced(2),
+                                Variant::Balanced(3)]);
+            let a = winograd_adder_conv2d(&x, &w_hat, 1, v);
+            let b = winograd_adder_conv2d_pm(&x, &w_hat, 1, v);
+            if a.dims != b.dims {
+                return Err(format!("dims {:?} vs {:?}", b.dims, a.dims));
+            }
+            all_close(&b.data, &a.data, 1e-4, 1e-4)
         });
     }
 

@@ -1,11 +1,12 @@
 //! Property tests for the `nn::backend` serving backends: every
 //! backend must agree with the naive oracles for random shapes,
-//! variants, and thread counts (1, 2, and 8 — fewer shards than
-//! threads, equal, and more).
+//! variants, thread counts (1, 2, and 8 — fewer shards than threads,
+//! equal, and more), and both kernel families (`legacy` tile-major
+//! and the default `pointmajor` SAD-GEMM).
 
 use wino_adder::nn::backend::{
-    Backend, BackendKind, ParallelBackend, ParallelInt8Backend,
-    ScalarBackend,
+    Backend, BackendKind, KernelKind, ParallelBackend,
+    ParallelInt8Backend, ScalarBackend,
 };
 use wino_adder::nn::matrices::Variant;
 use wino_adder::nn::quant::{
@@ -33,110 +34,189 @@ fn random_case(g: &mut wino_adder::util::testkit::Gen)
 }
 
 /// `Parallel` must match the naive `winograd_adder_conv2d` oracle
-/// within 1e-4 for random shapes across 1, 2, and 8 threads.
+/// within 1e-4 for random shapes across 1, 2, and 8 threads — with
+/// both kernel families.
 #[test]
 fn parallel_matches_naive_oracle_property() {
-    for threads in [1usize, 2, 8] {
-        let be = ParallelBackend::new(threads);
-        property(12, |g| {
-            let (x, w_hat, v) = random_case(g);
-            let want = winograd_adder_conv2d(&x, &w_hat, 1, v);
-            let got = be.forward(&x, &w_hat, 1, v);
-            if got.dims != want.dims {
-                return Err(format!("dims {:?} vs {:?}", got.dims,
-                                   want.dims));
-            }
-            all_close(&got.data, &want.data, 1e-4, 1e-4)
-                .map_err(|e| format!("{threads} threads: {e}"))
-        });
+    for kernel in KernelKind::ALL {
+        for threads in [1usize, 2, 8] {
+            let be = ParallelBackend::with_kernel(threads, kernel);
+            property(12, |g| {
+                let (x, w_hat, v) = random_case(g);
+                let want = winograd_adder_conv2d(&x, &w_hat, 1, v);
+                let got = be.forward(&x, &w_hat, 1, v);
+                if got.dims != want.dims {
+                    return Err(format!("dims {:?} vs {:?}", got.dims,
+                                       want.dims));
+                }
+                all_close(&got.data, &want.data, 1e-4, 1e-4)
+                    .map_err(|e| format!("{} x{threads}: {e}",
+                                         kernel.name()))
+            });
+        }
     }
 }
 
 /// `ParallelInt8` must match `quant`'s existing int8 reference
 /// (`winograd_adder_conv2d_i8`) exactly — integer sums are exact, so
-/// parallel sharding must not change a single accumulator.
+/// neither sharding nor the kernel family may change a single
+/// accumulator.
 #[test]
 fn parallel_int8_matches_quant_reference_property() {
-    for threads in [1usize, 2, 8] {
-        let be = ParallelInt8Backend::new(threads);
-        property(12, |g| {
+    for kernel in KernelKind::ALL {
+        for threads in [1usize, 2, 8] {
+            let be = ParallelInt8Backend::with_kernel(threads, kernel);
+            property(12, |g| {
+                let (x, w_hat, v) = random_case(g);
+                let qx = QTensor::from_f32(&x);
+                let wq = quantize_wino_weights(&w_hat, qx.qp.scale);
+                let (want_i, want_dims, scale) =
+                    winograd_adder_conv2d_i8(&qx, &wq, w_hat.dims, 1,
+                                             v);
+                let (got_i, dims) =
+                    be.forward_i8(&qx, &wq, w_hat.dims, 1, v);
+                if dims != want_dims {
+                    return Err(format!("dims {dims:?} vs \
+                                        {want_dims:?}"));
+                }
+                if got_i != want_i {
+                    let bad = got_i.iter().zip(&want_i)
+                        .position(|(a, b)| a != b);
+                    return Err(format!(
+                        "{} x{threads}: int mismatch at {bad:?}",
+                        kernel.name()));
+                }
+                // the Backend-trait f32 view dequantizes identically
+                let got_f = be.forward(&x, &w_hat, 1, v);
+                let want_f: Vec<f32> =
+                    want_i.iter().map(|&q| q as f32 * scale).collect();
+                if got_f.data != want_f {
+                    return Err("dequantized view diverged".into());
+                }
+                Ok(())
+            });
+        }
+    }
+}
+
+/// The scalar backend is the single-threaded reference for both kernel
+/// families; pin both to the naive oracle so backend or kernel
+/// selection can never change semantics.
+#[test]
+fn scalar_matches_naive_oracle_property() {
+    for kernel in KernelKind::ALL {
+        let be = ScalarBackend::new(kernel);
+        property(15, |g| {
             let (x, w_hat, v) = random_case(g);
-            let qx = QTensor::from_f32(&x);
-            let wq = quantize_wino_weights(&w_hat, qx.qp.scale);
-            let (want_i, want_dims, scale) =
-                winograd_adder_conv2d_i8(&qx, &wq, w_hat.dims, 1, v);
-            let (got_i, dims) =
-                be.forward_i8(&qx, &wq, w_hat.dims, 1, v);
-            if dims != want_dims {
-                return Err(format!("dims {dims:?} vs {want_dims:?}"));
-            }
-            if got_i != want_i {
-                let bad = got_i.iter().zip(&want_i)
-                    .position(|(a, b)| a != b);
-                return Err(format!(
-                    "{threads} threads: int mismatch at {bad:?}"));
-            }
-            // the Backend-trait f32 view dequantizes identically
-            let got_f = be.forward(&x, &w_hat, 1, v);
-            let want_f: Vec<f32> =
-                want_i.iter().map(|&q| q as f32 * scale).collect();
-            if got_f.data != want_f {
-                return Err("dequantized view diverged".into());
-            }
-            Ok(())
+            let want = winograd_adder_conv2d(&x, &w_hat, 1, v);
+            let got = be.forward(&x, &w_hat, 1, v);
+            all_close(&got.data, &want.data, 1e-4, 1e-4)
+                .map_err(|e| format!("{}: {e}", kernel.name()))
         });
     }
 }
 
-/// The scalar backend is literally the fast kernel; pin it to the
-/// naive oracle too so backend selection can never change semantics.
+/// All backends and both kernel families agree with the oracle at
+/// every serving batch bucket {1, 4, 16} — the batcher's real shapes.
 #[test]
-fn scalar_matches_naive_oracle_property() {
-    let be = ScalarBackend;
-    property(15, |g| {
-        let (x, w_hat, v) = random_case(g);
-        let want = winograd_adder_conv2d(&x, &w_hat, 1, v);
-        let got = be.forward(&x, &w_hat, 1, v);
-        all_close(&got.data, &want.data, 1e-4, 1e-4)
-    });
-}
-
-/// All three kinds constructed through the CLI-facing selector agree
-/// with each other (int8 within its quantization-noise bound).
-#[test]
-fn backend_kinds_agree_through_selector() {
-    let mut rng = Rng::new(99);
-    let x = Tensor::randn(&mut rng, [1, 6, 10, 10]);
-    let w_hat = Tensor::randn(&mut rng, [4, 6, 4, 4]);
-    let outs: Vec<Tensor> = BackendKind::ALL
-        .iter()
-        .map(|k| k.build(3).forward(&x, &w_hat, 1, Variant::Balanced(0)))
-        .collect();
-    assert_eq!(outs[0].dims, outs[1].dims);
-    assert_eq!(outs[0].dims, outs[2].dims);
-    all_close(&outs[0].data, &outs[1].data, 1e-4, 1e-4).unwrap();
-    // int8: bounded by propagated quantization noise (see quant tests)
-    let scale = x.data.iter().chain(&w_hat.data)
-        .fold(0f32, |m, &v| m.max(v.abs())) / 127.0;
-    let tol = 300.0 * scale;
-    for (a, b) in outs[0].data.iter().zip(&outs[2].data) {
-        assert!((a - b).abs() < tol, "{a} vs {b} (tol {tol})");
+fn all_backends_match_oracle_across_buckets() {
+    let mut rng = Rng::new(57);
+    let (c, o, hw) = (3usize, 4usize, 8usize);
+    let w_hat = Tensor::randn(&mut rng, [o, c, 4, 4]);
+    for bucket in [1usize, 4, 16] {
+        let x = Tensor::randn(&mut rng, [bucket, c, hw, hw]);
+        let want = winograd_adder_conv2d(&x, &w_hat, 1,
+                                         Variant::Balanced(0));
+        let scale = {
+            let qx = QTensor::from_f32(&x);
+            let wq = quantize_wino_weights(&w_hat, qx.qp.scale);
+            let (_, _, scale) = winograd_adder_conv2d_i8(
+                &qx, &wq, w_hat.dims, 1, Variant::Balanced(0));
+            scale
+        };
+        for kind in BackendKind::ALL {
+            for kernel in KernelKind::ALL {
+                let be = kind.build_with(3, kernel);
+                let got =
+                    be.forward(&x, &w_hat, 1, Variant::Balanced(0));
+                assert_eq!(got.dims, want.dims, "b{bucket} {} {}",
+                           kind.name(), kernel.name());
+                let tol = if kind == BackendKind::ParallelInt8 {
+                    // bounded by propagated quantization noise
+                    300.0 * scale
+                } else {
+                    1e-3
+                };
+                for (a, b) in got.data.iter().zip(&want.data) {
+                    assert!((a - b).abs() < tol,
+                            "b{bucket} {} {}: {a} vs {b} (tol {tol})",
+                            kind.name(), kernel.name());
+                }
+            }
+        }
     }
 }
 
+/// Legacy and point-major int8 paths are **bit-identical** (both are
+/// exact integer pipelines over the same operands).
+#[test]
+fn int8_kernel_families_are_bit_identical() {
+    let mut rng = Rng::new(61);
+    let x = Tensor::randn(&mut rng, [2, 5, 12, 12]);
+    let w_hat = Tensor::randn(&mut rng, [4, 5, 4, 4]);
+    let qx = QTensor::from_f32(&x);
+    let wq = quantize_wino_weights(&w_hat, qx.qp.scale);
+    let legacy = ParallelInt8Backend::with_kernel(3, KernelKind::Legacy)
+        .forward_i8(&qx, &wq, w_hat.dims, 1, Variant::Balanced(3));
+    let pm =
+        ParallelInt8Backend::with_kernel(3, KernelKind::PointMajor)
+            .forward_i8(&qx, &wq, w_hat.dims, 1, Variant::Balanced(3));
+    assert_eq!(legacy, pm);
+}
+
 /// Thread count is a pure performance knob: identical bits out for the
-/// f32 backend regardless of sharding, on a fixed case.
+/// f32 backend regardless of sharding, on a fixed case with more tiles
+/// than workers (tile-only sharding; the grid scatter only reassociates
+/// f32 sums when workers outnumber tiles).
 #[test]
 fn thread_count_does_not_change_f32_results() {
     let mut rng = Rng::new(123);
     let x = Tensor::randn(&mut rng, [2, 7, 12, 12]);
     let w_hat = Tensor::randn(&mut rng, [5, 7, 4, 4]);
-    let base =
-        ParallelBackend::new(1).forward(&x, &w_hat, 1, Variant::Std);
-    for threads in [2usize, 3, 8] {
-        let got = ParallelBackend::new(threads)
+    for kernel in KernelKind::ALL {
+        let base = ParallelBackend::with_kernel(1, kernel)
             .forward(&x, &w_hat, 1, Variant::Std);
-        assert_eq!(got.data, base.data,
-                   "sharding changed f32 bits at {threads} threads");
+        for threads in [2usize, 3, 8] {
+            let got = ParallelBackend::with_kernel(threads, kernel)
+                .forward(&x, &w_hat, 1, Variant::Std);
+            assert_eq!(got.data, base.data,
+                       "{} sharding changed f32 bits at {threads} \
+                        threads",
+                       kernel.name());
+        }
     }
+}
+
+/// More workers than tiles: the point-major grid splits the transform-
+/// point axis. f32 results stay within kernel tolerance of the oracle
+/// and the int8 path stays bit-exact.
+#[test]
+fn point_axis_splitting_is_correct() {
+    let mut rng = Rng::new(131);
+    // hw=6, pad=0, n=1 -> 4 tiles; 16 workers force point splitting
+    let x = Tensor::randn(&mut rng, [1, 3, 6, 6]);
+    let w_hat = Tensor::randn(&mut rng, [3, 3, 4, 4]);
+    let want = winograd_adder_conv2d(&x, &w_hat, 0,
+                                     Variant::Balanced(1));
+    let got = ParallelBackend::new(16)
+        .forward(&x, &w_hat, 0, Variant::Balanced(1));
+    all_close(&got.data, &want.data, 1e-4, 1e-4).unwrap();
+
+    let qx = QTensor::from_f32(&x);
+    let wq = quantize_wino_weights(&w_hat, qx.qp.scale);
+    let (want_i, ..) = winograd_adder_conv2d_i8(
+        &qx, &wq, w_hat.dims, 0, Variant::Balanced(1));
+    let (got_i, _) = ParallelInt8Backend::new(16)
+        .forward_i8(&qx, &wq, w_hat.dims, 0, Variant::Balanced(1));
+    assert_eq!(got_i, want_i, "int8 point splitting must stay exact");
 }

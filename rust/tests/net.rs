@@ -21,6 +21,7 @@ fn tiny_cfg() -> NativeConfig {
     NativeConfig {
         backend: BackendKind::Scalar,
         threads: 1,
+        kernel: Default::default(),
         cin: 2,
         cout: 3,
         hw: 8,
