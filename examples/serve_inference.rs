@@ -14,9 +14,10 @@
 use std::time::Instant;
 
 use wino_adder::coordinator::batcher::BatchPolicy;
-use wino_adder::coordinator::server::{NativeConfig, Server,
-                                      ServerHandle};
-use wino_adder::nn::backend::BackendKind;
+use wino_adder::coordinator::server::ServerHandle;
+use wino_adder::engine::{Engine, EngineBuilder};
+use wino_adder::nn::matrices::Variant;
+use wino_adder::nn::model::ModelSpec;
 use wino_adder::util::cli::Args;
 use wino_adder::util::error::{anyhow, Result};
 use wino_adder::util::rng::Rng;
@@ -28,22 +29,14 @@ fn main() -> Result<()> {
     if args.get("backend") == Some("pjrt") {
         return pjrt_scenario(&args, n, clients);
     }
-    let (kind, threads, kernel) = BackendKind::from_args(&args)
-        .ok_or_else(|| {
-            anyhow!("bad --backend (scalar|parallel|parallel-int8|\
-                     pjrt) or --kernel (legacy|pointmajor)")
-        })?;
-    let cfg = NativeConfig {
-        backend: kind,
-        threads,
-        kernel,
-        ..NativeConfig::default()
-    };
-    let sample = cfg.sample_len();
+    let base = EngineBuilder::from_args(&args)?;
+    // the classic paper FPGA layer: 16 -> 16 channels at 28x28
+    let spec = ModelSpec::single_layer(16, 16, 28,
+                                       Variant::Balanced(0));
 
     println!("=== serving scenario: {n} requests, {clients} concurrent \
-              clients, backend {} x{threads} threads ===\n",
-             kind.name());
+              clients, backend {} x{} threads ===\n",
+             base.backend_kind().name(), base.thread_count());
     let mut results = Vec::new();
     for (label, policy) in [
         ("no batching (bucket 1 only)",
@@ -53,18 +46,24 @@ fn main() -> Result<()> {
         ("dynamic batching 1/4/16, 10ms max wait",
          BatchPolicy { buckets: vec![1, 4, 16], max_wait_us: 10_000 }),
     ] {
-        let (handle, join) = Server::start_native(cfg.clone(), policy)?;
-        let (rps, p50) = drive(handle, n, clients, sample, label)?;
-        join.join().map_err(|_| anyhow!("engine panicked"))?;
+        let engine = base
+            .clone()
+            .model("default", spec.clone())
+            .batch(policy)
+            .build()?;
+        let (rps, p50) = drive(engine, n, clients, label)?;
         results.push((label, rps, p50));
     }
     summarize(&results);
     Ok(())
 }
 
-/// Open-loop load: `clients` threads, `n / clients` requests each.
-fn drive(handle: ServerHandle, n: usize, clients: usize, sample: usize,
-         label: &str) -> Result<(f64, u64)> {
+/// The shared load loop: warm up, then `clients` threads firing
+/// `n / clients` requests each against the handle's default model;
+/// returns elapsed seconds for the timed portion.
+fn blast(handle: &ServerHandle, n: usize, clients: usize)
+         -> Result<f64> {
+    let sample = handle.sample_len();
     // warmup so thread-pool spin-up stays out of the measurement
     for _ in 0..4 {
         let mut rng = Rng::new(99);
@@ -86,8 +85,14 @@ fn drive(handle: ServerHandle, n: usize, clients: usize, sample: usize,
     for t in threads {
         t.join().map_err(|_| anyhow!("client panicked"))?;
     }
-    let elapsed = t0.elapsed().as_secs_f64();
-    let stats = handle.stop()?;
+    Ok(t0.elapsed().as_secs_f64())
+}
+
+/// Open-loop load: `clients` threads, `n / clients` requests each.
+fn drive(engine: Engine, n: usize, clients: usize, label: &str)
+         -> Result<(f64, u64)> {
+    let elapsed = blast(engine.handle(), n, clients)?;
+    let stats = engine.stop()?;
     let served = (n / clients * clients) as f64;
     println!("{label}:");
     println!("  {:.0} req/s | {} | per-bucket {:?}",
@@ -108,8 +113,8 @@ fn summarize(results: &[(&str, f64, u64)]) {
 #[cfg(feature = "pjrt")]
 fn pjrt_scenario(args: &Args, n: usize, clients: usize) -> Result<()> {
     use std::path::PathBuf;
+    use wino_adder::coordinator::server::Server;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    let sample = 16 * 28 * 28;
     println!("=== PJRT serving scenario: {n} requests, {clients} \
               clients ===\n");
     let mut results = Vec::new();
@@ -120,9 +125,15 @@ fn pjrt_scenario(args: &Args, n: usize, clients: usize) -> Result<()> {
          BatchPolicy { buckets: vec![1, 4, 16], max_wait_us: 2_000 }),
     ] {
         let (handle, join) = Server::start(artifacts.clone(), policy)?;
-        let (rps, p50) = drive(handle, n, clients, sample, label)?;
+        let elapsed = blast(&handle, n, clients)?;
+        let stats = handle.stop()?;
         join.join().map_err(|_| anyhow!("engine panicked"))?;
-        results.push((label, rps, p50));
+        let served = (n / clients * clients) as f64;
+        println!("{label}:");
+        println!("  {:.0} req/s | {} | per-bucket {:?}",
+                 served / elapsed, stats.latency_summary,
+                 stats.per_bucket);
+        results.push((label, served / elapsed, stats.p50_us));
     }
     println!("\n=== summary ===");
     for (label, rps, p50) in &results {

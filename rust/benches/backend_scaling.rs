@@ -8,9 +8,9 @@
 //! (must agree within 1e-4; the run aborts otherwise).
 //!
 //! Finishes with a **multi-layer serving sweep** (model depth x engine
-//! threads) through the planned executor (`Server::start_native` with
-//! a `ModelSpec::stack`), writing requests/sec and p50/p99 latency
-//! (from `coordinator::metrics` via `ServerStats`) to
+//! threads) through the planned executor (an `engine::EngineBuilder`
+//! hosting a `ModelSpec::stack`), writing requests/sec and p50/p99
+//! latency (from `coordinator::metrics` via `ServerStats`) to
 //! `BENCH_serving.json`.
 //!
 //! Run: `cargo bench --bench backend_scaling`
@@ -26,10 +26,10 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use wino_adder::coordinator::batcher::BatchPolicy;
-use wino_adder::coordinator::server::{NativeConfig, Server};
+use wino_adder::engine::Engine;
 use wino_adder::nn::backend::{default_threads, kernel, Backend,
-                              BackendKind, KernelKind,
-                              ParallelBackend, ParallelInt8Backend};
+                              KernelKind, ParallelBackend,
+                              ParallelInt8Backend, StageDims};
 use wino_adder::nn::matrices::{self, Variant};
 use wino_adder::nn::model::ModelSpec;
 use wino_adder::nn::wino_adder::{repack_weights_pm, tiles_to_pm,
@@ -74,6 +74,7 @@ fn main() {
 
     println!("\n--- parallel f32 backend, thread sweep (legacy \
               tile-major kernels) ---");
+    let dims = StageDims::new(t, o, c);
     let d_arc: Arc<[f32]> = d_hat.clone().into();
     let w_arc: Arc<[f32]> = w_hat.clone().into();
     let mut speedup_at_4 = 0.0;
@@ -83,7 +84,7 @@ fn main() {
         let mut y = vec![0f32; t * o * 4];
         let t_par =
             bench(&format!("parallel[{threads}t] run_tiles"), || {
-                be.run_tiles(&d_arc, &w_arc, t, o, c, s, &mut y);
+                be.run_tiles(&d_arc, &w_arc, dims, s, &mut y);
                 std::hint::black_box(&y);
             });
         all_close(&y, &y0, 1e-4, 1e-4)
@@ -108,8 +109,8 @@ fn main() {
         let mut bufs = Vec::new();
         let t_par =
             bench(&format!("parallel[{threads}t] run_tiles_pm"), || {
-                be.run_tiles_pm(&d_pm_arc, &w_pm_arc, t, o, c, s,
-                                &mut y, &mut bufs);
+                be.run_tiles_pm(&d_pm_arc, &w_pm_arc, dims, s, &mut y,
+                                &mut bufs);
                 std::hint::black_box(&y);
             });
         all_close(&y, &y0, 1e-4, 1e-4)
@@ -132,7 +133,7 @@ fn main() {
     let mut yi0 = vec![0i32; t * o * 4];
     let be1 = ParallelInt8Backend::new(1);
     let t_i8 = bench("parallel-int8[1t] run_tiles (int8 baseline)", || {
-        be1.run_tiles(&d16, &w16, t, o, c, si, &mut yi0);
+        be1.run_tiles(&d16, &w16, dims, si, &mut yi0);
         std::hint::black_box(&yi0);
     });
     println!("    -> {:.2} Gadd/s", adds / t_i8 / 1e9);
@@ -141,7 +142,7 @@ fn main() {
         let mut yi = vec![0i32; t * o * 4];
         let t_par =
             bench(&format!("parallel-int8[{threads}t] run_tiles"), || {
-                be.run_tiles(&d16, &w16, t, o, c, si, &mut yi);
+                be.run_tiles(&d16, &w16, dims, si, &mut yi);
                 std::hint::black_box(&yi);
             });
         assert_eq!(yi, yi0, "int8 sharding changed exact results");
@@ -194,23 +195,17 @@ fn serving_sweep(args: &Args, cores: usize) {
     let mut rows = Vec::new();
     for &depth in &depths {
         for &threads in &threads_sweep {
-            let cfg = NativeConfig {
-                backend: BackendKind::Parallel,
-                threads,
-                kernel: KernelKind::default(),
-                cin,
-                cout,
-                hw,
-                variant,
-                seed: 7,
-                model: Some(ModelSpec::stack(depth, cin, cout, hw,
-                                             variant)),
-            };
-            let sample = cfg.sample_len();
             let policy = BatchPolicy { buckets: vec![1, 4, 16],
                                        max_wait_us: 500 };
-            let (handle, join) =
-                Server::start_native(cfg, policy).expect("server");
+            let engine = Engine::builder()
+                .model("default",
+                       ModelSpec::stack(depth, cin, cout, hw, variant))
+                .threads(threads)
+                .batch(policy)
+                .build()
+                .expect("engine");
+            let sample = engine.models()[0].sample_len();
+            let handle = engine.handle().clone();
             let t0 = Instant::now();
             let mut workers = Vec::new();
             for c in 0..clients {
@@ -229,8 +224,7 @@ fn serving_sweep(args: &Args, cores: usize) {
                 w.join().expect("client thread");
             }
             let elapsed = t0.elapsed().as_secs_f64();
-            let stats = handle.stop().expect("stats");
-            join.join().expect("engine thread");
+            let stats = engine.stop().expect("stats");
             let rps = stats.served as f64 / elapsed;
             println!("  depth {depth} x {threads}t: {rps:7.0} req/s, \
                       p50 {}us, p99 {}us, {} batches",

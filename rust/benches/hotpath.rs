@@ -31,7 +31,7 @@ use std::sync::Arc;
 
 use wino_adder::nn::adder::{adder_conv2d_fast, l1_distance_matrix};
 use wino_adder::nn::backend::{kernel, simd, ParallelBackend,
-                              ParallelInt8Backend};
+                              ParallelInt8Backend, StageDims};
 use wino_adder::nn::quant::{input_tiles_i16, quantize_wino_weights,
                             repack_wino_weights_pm, requantize_pair};
 use wino_adder::nn::wino_adder::{input_tiles, repack_weights_pm,
@@ -139,6 +139,7 @@ fn main() {
     let mut rows: Vec<KernelRow> = Vec::new();
     let mut yf = vec![0f32; t_count * cout * 4];
     let mut yi = vec![0i32; t_count * cout * 4];
+    let dims = StageDims::new(t_count, cout, cin);
     for threads in [1usize, 4] {
         let bef = ParallelBackend::new(threads);
         let bei = ParallelInt8Backend::new(threads);
@@ -146,16 +147,15 @@ fn main() {
         let mut bufs_i: Vec<Vec<i32>> = Vec::new();
         let secs = bench(
             &format!("f32 legacy    x{threads}t"), &mut || {
-                bef.run_tiles(&d_arc, &w_arc, t_count, cout, cin, s,
-                              &mut yf);
+                bef.run_tiles(&d_arc, &w_arc, dims, s, &mut yf);
                 std::hint::black_box(&yf);
             });
         rows.push(KernelRow { kernel: "legacy", dtype: "f32", threads,
                               secs, gadds: gops(kernel_adds, secs) });
         let secs = bench(
             &format!("f32 pointmajor x{threads}t"), &mut || {
-                bef.run_tiles_pm(&d_pm, &w_pm, t_count, cout, cin, s,
-                                 &mut yf, &mut bufs_f);
+                bef.run_tiles_pm(&d_pm, &w_pm, dims, s, &mut yf,
+                                 &mut bufs_f);
                 std::hint::black_box(&yf);
             });
         rows.push(KernelRow { kernel: "pointmajor", dtype: "f32",
@@ -163,8 +163,7 @@ fn main() {
                               gadds: gops(kernel_adds, secs) });
         let secs = bench(
             &format!("int8 legacy    x{threads}t"), &mut || {
-                bei.run_tiles(&d16, &w16, t_count, cout, cin, si,
-                              &mut yi);
+                bei.run_tiles(&d16, &w16, dims, si, &mut yi);
                 std::hint::black_box(&yi);
             });
         rows.push(KernelRow { kernel: "legacy", dtype: "int8",
@@ -172,8 +171,8 @@ fn main() {
                               gadds: gops(kernel_adds, secs) });
         let secs = bench(
             &format!("int8 pointmajor x{threads}t"), &mut || {
-                bei.run_tiles_pm(&d16_pm, &w16_pm, t_count, cout, cin,
-                                 si, &mut yi, &mut bufs_i);
+                bei.run_tiles_pm(&d16_pm, &w16_pm, dims, si, &mut yi,
+                                 &mut bufs_i);
                 std::hint::black_box(&yi);
             });
         rows.push(KernelRow { kernel: "pointmajor", dtype: "int8",

@@ -1,18 +1,25 @@
-//! Blocking client for the framed TCP serving protocol — the library
+//! Blocking clients for the framed TCP serving protocol — the library
 //! side of `wino-adder serve --listen` and the workhorse of the
 //! `bench-serve` load generator.
 //!
-//! One [`NetClient`] owns one connection (dialed lazily, re-dialed
-//! transparently after a transport error) and supports two call
-//! shapes: single-request [`NetClient::call`] / [`NetClient::infer`],
-//! and explicit pipelining via [`NetClient::pipeline`] — write a whole
-//! window of requests, then read the whole window of replies (the
-//! server answers each connection's requests in order).
+//! * [`NetClient`] — the **v1** client: f32 payloads against the
+//!   server's default model, wire bytes unchanged since protocol v1.
+//! * [`NetClientV2`] — the **v2** session client: negotiates
+//!   `Hello`/`HelloAck` (model name, shape, dtype) on connect, then
+//!   sends f32 `Infer` or quantized `InferI8` payloads.
+//!
+//! Each client owns one connection (dialed lazily, re-dialed — and
+//! for v2, re-negotiated — transparently after a transport error).
+//! [`NetClient`] additionally supports explicit pipelining via
+//! [`NetClient::pipeline`] — write a whole window of requests, then
+//! read the whole window of replies (the server answers each
+//! connection's requests in order).
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
 
 use super::proto::{self, Frame};
+use crate::engine::Dtype;
 use crate::util::error::{anyhow, bail, ensure, Context, Result};
 
 /// One server reply to an inference request.
@@ -54,18 +61,9 @@ impl NetClient {
         Ok(c)
     }
 
-    fn dial(addr: &str) -> Result<Conn> {
-        let stream = TcpStream::connect(addr)
-            .with_context(|| format!("connecting {addr}"))?;
-        stream.set_nodelay(true).ok();
-        let r = BufReader::new(
-            stream.try_clone().context("cloning stream")?);
-        Ok(Conn { r, w: BufWriter::new(stream) })
-    }
-
     fn ensure_conn(&mut self) -> Result<&mut Conn> {
         if self.conn.is_none() {
-            self.conn = Some(Self::dial(&self.addr)?);
+            self.conn = Some(dial(&self.addr)?);
         }
         Ok(self.conn.as_mut().unwrap())
     }
@@ -187,6 +185,214 @@ impl NetClient {
             }
         }
     }
+}
+
+/// Blocking **v2 session** client: one connection bound to a named
+/// model by `Hello`/`HelloAck` negotiation, re-dialed *and
+/// re-negotiated* transparently after a transport error. With
+/// `dtype: int8` the quantized call path ships 1-byte payloads
+/// (`x ≈ q * scale`), 4x smaller requests than f32 on the wire.
+pub struct NetClientV2 {
+    addr: String,
+    model: String,
+    shape: [usize; 3],
+    dtype: Dtype,
+    conn: Option<Conn>,
+    out_shape: [usize; 3],
+    next_id: u64,
+    /// times a stale connection was re-dialed (transport-error retries)
+    pub reconnects: u64,
+}
+
+impl NetClientV2 {
+    /// Dial `addr` and negotiate a session for `model` with the given
+    /// per-sample input `shape` and payload `dtype`. Fails fast if
+    /// the server is unreachable or rejects the negotiation (unknown
+    /// model, shape mismatch).
+    pub fn connect(addr: &str, model: &str, shape: [usize; 3],
+                   dtype: Dtype) -> Result<NetClientV2> {
+        let mut c = NetClientV2 {
+            addr: addr.to_string(),
+            model: model.to_string(),
+            shape,
+            dtype,
+            conn: None,
+            out_shape: [0; 3],
+            next_id: 1,
+            reconnects: 0,
+        };
+        c.ensure_conn()?;
+        Ok(c)
+    }
+
+    /// The negotiated per-sample output shape from the server's
+    /// `HelloAck`.
+    pub fn out_shape(&self) -> [usize; 3] {
+        self.out_shape
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Dial + handshake if there is no pooled connection.
+    fn ensure_conn(&mut self) -> Result<()> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        let mut conn = dial(&self.addr)?;
+        let id = self.fresh_id();
+        proto::write_frame(&mut conn.w, &Frame::Hello {
+            id,
+            model: self.model.clone(),
+            shape: self.shape,
+            dtype: self.dtype,
+        })?;
+        conn.w.flush()?;
+        match proto::read_frame(&mut conn.r)?
+            .ok_or_else(|| anyhow!("server closed during hello"))?
+        {
+            Frame::HelloAck { id: got, shape, .. } if got == id => {
+                self.out_shape = shape;
+            }
+            Frame::Error { msg, .. } => {
+                bail!("hello rejected: {msg}");
+            }
+            other => {
+                bail!("expected hello-ack, got {} (id {})",
+                      other.kind_name(), other.id());
+            }
+        }
+        self.conn = Some(conn);
+        Ok(())
+    }
+
+    /// One request/reply exchange; transport failures poison the
+    /// pooled (negotiated) connection.
+    fn round_trip_with<F>(&mut self, write: F) -> Result<Frame>
+    where
+        F: Fn(&mut Conn) -> Result<()>,
+    {
+        self.ensure_conn()?;
+        let conn = self.conn.as_mut().expect("ensured above");
+        let res = exchange_with(conn, &write);
+        if res.is_err() {
+            self.conn = None;
+        }
+        res
+    }
+
+    /// Retry-once wrapper mirroring [`NetClient::call`]: a transport
+    /// error on a *pooled* session re-dials (and re-negotiates) a
+    /// fresh one; server-reported replies are never retried.
+    fn call_with<F>(&mut self, id: u64, write: F) -> Result<NetReply>
+    where
+        F: Fn(&mut Conn) -> Result<()>,
+    {
+        let had_conn = self.conn.is_some();
+        let frame = match self.round_trip_with(&write) {
+            Ok(f) => f,
+            Err(_) if had_conn => {
+                self.reconnects += 1;
+                self.round_trip_with(&write)?
+            }
+            Err(e) => return Err(e),
+        };
+        if frame.id() != id {
+            self.conn = None;
+            bail!("response id {} does not match request id {id}",
+                  frame.id());
+        }
+        match frame {
+            Frame::Output { y, .. } => Ok(NetReply::Output(y)),
+            Frame::Busy { .. } => Ok(NetReply::Busy),
+            Frame::Error { msg, .. } => Ok(NetReply::Error(msg)),
+            other => {
+                self.conn = None;
+                Err(anyhow!("unexpected {} frame from server",
+                            other.kind_name()))
+            }
+        }
+    }
+
+    /// Single blocking f32 request on the negotiated model. The
+    /// payload is encoded straight off the borrowed slice (no copy),
+    /// like the v1 client's hot path.
+    pub fn call(&mut self, x: &[f32]) -> Result<NetReply> {
+        let id = self.fresh_id();
+        self.call_with(id,
+                       |conn| proto::write_infer(&mut conn.w, id, x))
+    }
+
+    /// Single blocking int8 request (`x ≈ q * scale`); requires a
+    /// session negotiated with [`Dtype::Int8`]. Payload encoded off
+    /// the borrowed slice, like [`call`](NetClientV2::call).
+    pub fn call_i8(&mut self, q: &[i8], scale: f32)
+                   -> Result<NetReply> {
+        ensure!(self.dtype == Dtype::Int8,
+                "session was negotiated as {}, not int8",
+                self.dtype.name());
+        let id = self.fresh_id();
+        self.call_with(id, |conn| {
+            proto::write_infer_i8(&mut conn.w, id, scale, q)
+        })
+    }
+
+    /// Blocking f32 inference; `Busy` and server errors surface as
+    /// `Err`.
+    pub fn infer(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        reply_to_result(self.call(x)?)
+    }
+
+    /// Blocking int8 inference; `Busy` and server errors surface as
+    /// `Err`.
+    pub fn infer_i8(&mut self, q: &[i8], scale: f32)
+                    -> Result<Vec<f32>> {
+        reply_to_result(self.call_i8(q, scale)?)
+    }
+
+    /// Break the underlying socket *without* forgetting it, so the
+    /// next call hits a transport error and exercises the
+    /// reconnect-and-renegotiate path. Test hook.
+    #[doc(hidden)]
+    pub fn sever(&mut self) {
+        if let Some(c) = &self.conn {
+            let _ = c.w.get_ref().shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+fn reply_to_result(reply: NetReply) -> Result<Vec<f32>> {
+    match reply {
+        NetReply::Output(y) => Ok(y),
+        NetReply::Busy => Err(anyhow!("server busy (load shed)")),
+        NetReply::Error(m) => Err(anyhow!(m)),
+    }
+}
+
+/// The transport half of one v2 exchange: run the caller's frame
+/// writer, flush, read the reply (kept out of `NetClientV2` so the
+/// borrow of `conn` ends before the poisoning check).
+fn exchange_with<F>(conn: &mut Conn, write: &F) -> Result<Frame>
+where
+    F: Fn(&mut Conn) -> Result<()>,
+{
+    write(conn)?;
+    conn.w.flush()?;
+    proto::read_frame(&mut conn.r)?
+        .ok_or_else(|| anyhow!("server closed the connection"))
+}
+
+/// Dial one framed-protocol connection (shared by both clients).
+fn dial(addr: &str) -> Result<Conn> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let r = BufReader::new(
+        stream.try_clone().context("cloning stream")?);
+    Ok(Conn { r, w: BufWriter::new(stream) })
 }
 
 /// The transport half of one exchange (kept out of `NetClient` so the

@@ -5,13 +5,25 @@
 //! Each connection gets two threads:
 //!
 //! * a **reader** that decodes frames and — after passing the bounded
-//!   in-flight admission gate — forwards `Infer` payloads through
-//!   [`ServerHandle::infer_async`] into the engine's batcher/router
-//!   mpsc path;
+//!   in-flight admission gate — forwards inference payloads through
+//!   [`ServerHandle::infer_async_for`] into the engine's
+//!   batcher/router mpsc path;
 //! * a **writer** that answers in request order, blocking on each
 //!   admitted request's [`PendingInfer`] and interleaving the
-//!   immediately-ready replies (`Busy`, `Pong`, `Error`) that the
-//!   reader queued behind it.
+//!   immediately-ready replies (`Busy`, `Pong`, `Error`,
+//!   `HelloAck`) that the reader queued behind it.
+//!
+//! **Sessions (protocol v2)**: a connection starts as a v1 session
+//! bound to the default model (registry index 0) with f32 payloads —
+//! exactly the pre-v2 behavior, bit-identical on the wire. A `Hello`
+//! frame re-binds the connection to a named model, validating the
+//! claimed shape against the registry and answering `HelloAck` with
+//! the output shape; with `dtype: int8` negotiated, the client may
+//! send `InferI8` frames whose payloads are dequantized
+//! (`q * scale`) at admission. A later `Hello` renegotiates the same
+//! connection (model switching without re-dialing). Failed
+//! negotiation (unknown model, shape mismatch) answers an `Error`
+//! frame and leaves the previous session binding untouched.
 //!
 //! **Load shedding**: at most `max_in_flight` admitted inferences may
 //! be outstanding across all connections. Beyond the cap a request is
@@ -35,6 +47,7 @@ use std::thread;
 use super::proto::{self, Frame};
 use crate::coordinator::metrics::{NetCounters, NetSummary};
 use crate::coordinator::server::{PendingInfer, ServerHandle};
+use crate::engine::{Dtype, Payload};
 use crate::util::error::{anyhow, Context, Result};
 
 /// Per-connection bound on queued-but-unwritten replies: past this the
@@ -234,10 +247,63 @@ fn spawn_connection(stream: TcpStream, handle: ServerHandle,
     reg.joins.push(writer);
 }
 
+/// The negotiated state of one connection: which model its inference
+/// frames route to, and whether `InferI8` payloads are allowed.
+/// Connections start bound to the default model with f32 payloads —
+/// the v1-compatible binding.
+struct Session {
+    model: usize,
+    dtype: Dtype,
+}
+
+/// The shared admission state a reader applies per request (grouped
+/// so the submit helper stays within a civilized arity).
+struct Gate<'a> {
+    counters: &'a NetCounters,
+    in_flight: &'a AtomicUsize,
+    cap: usize,
+}
+
+/// Bounded admission + engine submit for one decoded inference
+/// payload: take an in-flight slot or shed with `Busy`, then validate
+/// against the session's model via
+/// [`ServerHandle::infer_async_for`] (rejections surface as `Error`
+/// frames and release the slot).
+fn admit_and_submit(gate: &Gate<'_>, handle: &ServerHandle,
+                    reply: &mpsc::SyncSender<Reply>, id: u64,
+                    model: usize, x: Vec<f32>) {
+    gate.counters.requests.fetch_add(1, Ordering::Relaxed);
+    let admitted = gate.in_flight
+        .fetch_update(Ordering::SeqCst, Ordering::SeqCst,
+                      |n| (n < gate.cap).then_some(n + 1))
+        .is_ok();
+    if !admitted {
+        gate.counters.busy.fetch_add(1, Ordering::Relaxed);
+        let _ = reply.send(Reply::Ready(Frame::Busy { id }));
+        return;
+    }
+    match handle.infer_async_for(model, x) {
+        Ok(pending) => {
+            let _ = reply.send(Reply::Pending { id, pending });
+        }
+        Err(e) => {
+            gate.in_flight.fetch_sub(1, Ordering::SeqCst);
+            gate.counters.errors.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(Reply::Ready(Frame::Error {
+                id,
+                msg: format!("{e}"),
+            }));
+        }
+    }
+}
+
 fn reader_loop(stream: TcpStream, handle: &ServerHandle,
                reply: &mpsc::SyncSender<Reply>, counters: &NetCounters,
                in_flight: &AtomicUsize, cap: usize) {
     let mut r = BufReader::new(stream);
+    let gate = Gate { counters, in_flight, cap };
+    // v1-compatible default binding until a Hello renegotiates
+    let mut session = Session { model: 0, dtype: Dtype::F32 };
     loop {
         let frame = match proto::read_frame(&mut r) {
             Ok(Some(f)) => f,
@@ -259,34 +325,63 @@ fn reader_loop(stream: TcpStream, handle: &ServerHandle,
             Frame::Ping { id } => {
                 let _ = reply.send(Reply::Ready(Frame::Pong { id }));
             }
-            Frame::Infer { id, x } => {
-                counters.requests.fetch_add(1, Ordering::Relaxed);
-                // bounded admission: take a slot or shed
-                let admitted = in_flight
-                    .fetch_update(Ordering::SeqCst, Ordering::SeqCst,
-                                  |n| (n < cap).then_some(n + 1))
-                    .is_ok();
-                if !admitted {
-                    counters.busy.fetch_add(1, Ordering::Relaxed);
-                    let _ = reply.send(Reply::Ready(Frame::Busy { id }));
-                    continue;
-                }
-                match handle.infer_async(x) {
-                    Ok(pending) => {
-                        let _ = reply.send(Reply::Pending { id, pending });
+            Frame::Hello { id, model, shape, dtype } => {
+                match handle.resolve(&model) {
+                    Some((idx, info)) if shape == info.in_shape => {
+                        session = Session { model: idx, dtype };
+                        let _ = reply.send(Reply::Ready(
+                            Frame::HelloAck {
+                                id,
+                                shape: info.out_shape,
+                                dtype,
+                            }));
                     }
-                    Err(e) => {
-                        in_flight.fetch_sub(1, Ordering::SeqCst);
+                    Some((_, info)) => {
                         counters.errors.fetch_add(1, Ordering::Relaxed);
                         let _ = reply.send(Reply::Ready(Frame::Error {
                             id,
-                            msg: format!("{e}"),
+                            msg: format!(
+                                "model {model:?} expects input shape \
+                                 {:?}, hello claims {shape:?}",
+                                info.in_shape),
+                        }));
+                    }
+                    None => {
+                        counters.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = reply.send(Reply::Ready(Frame::Error {
+                            id,
+                            msg: format!("unknown model {model:?}"),
                         }));
                     }
                 }
             }
+            Frame::Infer { id, x } => {
+                admit_and_submit(&gate, handle, reply, id,
+                                 session.model, x);
+            }
+            Frame::InferI8 { id, scale, data } => {
+                if session.dtype != Dtype::Int8 {
+                    // still an inference frame received: count it like
+                    // every other rejected request so errors/requests
+                    // ratios stay meaningful
+                    counters.requests.fetch_add(1, Ordering::Relaxed);
+                    counters.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = reply.send(Reply::Ready(Frame::Error {
+                        id,
+                        msg: "int8 payloads need an int8 session \
+                              (send Hello with dtype int8 first)"
+                            .into(),
+                    }));
+                    continue;
+                }
+                // the one admission-time dequant lives in the typed
+                // payload, shared with in-process int8 requests
+                let x = Payload::Int8 { data, scale }.into_f32();
+                admit_and_submit(&gate, handle, reply, id,
+                                 session.model, x);
+            }
             other => {
-                // clients may only send Infer and Ping
+                // clients may only send Infer, InferI8, Hello, Ping
                 counters.errors.fetch_add(1, Ordering::Relaxed);
                 let _ = reply.send(Reply::Ready(Frame::Error {
                     id: other.id(),

@@ -9,8 +9,11 @@
 //!   load-shedding (`Busy`) replies, forwards admitted requests into
 //!   the engine's batcher/router mpsc path, and drains gracefully on
 //!   [`NetServer::stop`].
-//! * [`client`] — [`NetClient`]: blocking client with transparent
-//!   reconnect and explicit pipelining.
+//! * [`client`] — [`NetClient`]: the blocking v1 (f32, default-model)
+//!   client with transparent reconnect and explicit pipelining; and
+//!   [`NetClientV2`]: the session client that negotiates
+//!   `Hello`/`HelloAck` (model name, shape, dtype) and can ship int8
+//!   payloads.
 //!
 //! Wired through `wino-adder serve --listen ADDR` (server side) and
 //! `wino-adder bench-serve` (server + closed-loop load generator over
@@ -22,5 +25,5 @@ pub mod client;
 pub mod listener;
 pub mod proto;
 
-pub use client::{NetClient, NetReply};
+pub use client::{NetClient, NetClientV2, NetReply};
 pub use listener::NetServer;

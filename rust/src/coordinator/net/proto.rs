@@ -12,29 +12,49 @@
 //! | 8      | 8    | request id                             |
 //! | 16     | 4    | payload byte length                    |
 //!
-//! Kinds: `1` Infer (f32 payload, client→server), `2` Output (f32,
-//! server→client), `3` Error (utf-8 message), `4` Busy (empty — the
-//! load-shed reply, the protocol's HTTP-503), `5` Ping / `6` Pong
-//! (empty, liveness).
+//! **v1 kinds** (version field = 1): `1` Infer (f32 payload,
+//! client→server), `2` Output (f32, server→client), `3` Error (utf-8
+//! message), `4` Busy (empty — the load-shed reply, the protocol's
+//! HTTP-503), `5` Ping / `6` Pong (empty, liveness).
 //!
-//! Decoding is strict: wrong magic, unknown version/kind, oversized
-//! or mis-sized payloads, and non-utf-8 error messages are all
+//! **v2 kinds** (version field = 2) add session negotiation and the
+//! int8 datapath: `7` Hello (client→server: dtype byte + `(c, h, w)`
+//! as u32s + utf-8 model name), `8` HelloAck (server→client: dtype
+//! byte + output `(c, h, w)`), `9` InferI8 (client→server: f32 scale
+//! + i8 payload, `x ≈ q * scale` — 4x smaller requests). A v2 session
+//! still exchanges f32 `Infer`/`Output`/`Error`/`Busy` frames in
+//! their v1 encoding, which is why v1 clients keep working
+//! **bit-identically**: the server writes the exact same bytes to
+//! both.
+//!
+//! Decoding is **version-dispatched** and strict: the version field
+//! selects which kinds are legal (v1 headers may only carry kinds
+//! 1-6, v2 headers only 7-9); wrong magic, unknown version/kind,
+//! oversized or mis-sized payloads, and non-utf-8 strings are all
 //! rejected with a [`crate::util::error::Error`] — a decode failure
 //! means framing is lost and the connection must be dropped.
 
 use std::io::{Read, Write};
 
+use crate::engine::Dtype;
 use crate::util::error::{anyhow, bail, ensure, Result};
 
 /// First four bytes of every frame.
 pub const MAGIC: [u8; 4] = *b"WADR";
-/// Current protocol version.
-pub const VERSION: u16 = 1;
+/// The original (f32, single-model) protocol version.
+pub const V1: u16 = 1;
+/// The session protocol version (Hello/HelloAck + int8 payloads).
+pub const V2: u16 = 2;
+/// Newest protocol version this build speaks (v1 stays accepted).
+pub const VERSION: u16 = V2;
 /// Fixed header size in bytes.
 pub const HEADER_LEN: usize = 20;
 /// Hard cap on a single frame's payload (64 MiB) — bounds the
 /// allocation an adversarial or corrupt header can trigger.
 pub const MAX_PAYLOAD_BYTES: usize = 64 << 20;
+/// Fixed prefix of a `Hello`/`HelloAck` payload: dtype byte + three
+/// u32 shape fields.
+const HELLO_FIXED: usize = 13;
 
 /// One decoded wire frame.
 #[derive(Debug, Clone, PartialEq)]
@@ -51,6 +71,16 @@ pub enum Frame {
     Ping { id: u64 },
     /// server→client: liveness reply
     Pong { id: u64 },
+    /// client→server (v2): open/renegotiate a session — target model,
+    /// claimed per-sample input shape, and the payload dtype the
+    /// client will send
+    Hello { id: u64, model: String, shape: [usize; 3], dtype: Dtype },
+    /// server→client (v2): session accepted — echoes the dtype and
+    /// announces the per-sample output shape
+    HelloAck { id: u64, shape: [usize; 3], dtype: Dtype },
+    /// client→server (v2): run inference on a symmetric-quantized
+    /// int8 sample (`x ≈ q * scale`)
+    InferI8 { id: u64, scale: f32, data: Vec<i8> },
 }
 
 impl Frame {
@@ -62,7 +92,10 @@ impl Frame {
             | Frame::Error { id, .. }
             | Frame::Busy { id }
             | Frame::Ping { id }
-            | Frame::Pong { id } => *id,
+            | Frame::Pong { id }
+            | Frame::Hello { id, .. }
+            | Frame::HelloAck { id, .. }
+            | Frame::InferI8 { id, .. } => *id,
         }
     }
 
@@ -75,6 +108,19 @@ impl Frame {
             Frame::Busy { .. } => 4,
             Frame::Ping { .. } => 5,
             Frame::Pong { .. } => 6,
+            Frame::Hello { .. } => 7,
+            Frame::HelloAck { .. } => 8,
+            Frame::InferI8 { .. } => 9,
+        }
+    }
+
+    /// Wire version this frame's kind belongs to. v1 kinds keep their
+    /// original header bytes — the bit-compatibility guarantee for v1
+    /// clients.
+    pub fn version(&self) -> u16 {
+        match self.kind() {
+            1..=6 => V1,
+            _ => V2,
         }
     }
 
@@ -86,6 +132,9 @@ impl Frame {
             Frame::Busy { .. } => "busy",
             Frame::Ping { .. } => "ping",
             Frame::Pong { .. } => "pong",
+            Frame::Hello { .. } => "hello",
+            Frame::HelloAck { .. } => "hello-ack",
+            Frame::InferI8 { .. } => "infer-i8",
         }
     }
 
@@ -96,6 +145,9 @@ impl Frame {
             Frame::Error { msg, .. } => msg.len(),
             Frame::Busy { .. } | Frame::Ping { .. }
             | Frame::Pong { .. } => 0,
+            Frame::Hello { model, .. } => HELLO_FIXED + model.len(),
+            Frame::HelloAck { .. } => HELLO_FIXED,
+            Frame::InferI8 { data, .. } => 4 + data.len(),
         }
     }
 
@@ -106,13 +158,13 @@ impl Frame {
     }
 }
 
-fn write_header<W: Write>(w: &mut W, kind: u8, id: u64, plen: usize)
-                          -> Result<()> {
+fn write_header<W: Write>(w: &mut W, version: u16, kind: u8, id: u64,
+                          plen: usize) -> Result<()> {
     ensure!(plen <= MAX_PAYLOAD_BYTES,
             "frame payload too large: {plen} bytes (cap {MAX_PAYLOAD_BYTES})");
     let mut header = [0u8; HEADER_LEN];
     header[0..4].copy_from_slice(&MAGIC);
-    header[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    header[4..6].copy_from_slice(&version.to_le_bytes());
     header[6] = kind;
     header[8..16].copy_from_slice(&id.to_le_bytes());
     header[16..20].copy_from_slice(&(plen as u32).to_le_bytes());
@@ -120,14 +172,54 @@ fn write_header<W: Write>(w: &mut W, kind: u8, id: u64, plen: usize)
     Ok(())
 }
 
-/// Encode one frame onto a writer (no flush).
+/// The `[dtype u8][c u32][h u32][w u32]` prefix of Hello/HelloAck.
+fn write_hello_fixed<W: Write>(w: &mut W, dtype: Dtype,
+                               shape: [usize; 3]) -> Result<()> {
+    let mut buf = [0u8; HELLO_FIXED];
+    buf[0] = dtype.code();
+    for (i, &d) in shape.iter().enumerate() {
+        ensure!(d <= u32::MAX as usize,
+                "shape dimension {d} does not fit the wire format");
+        buf[1 + i * 4..5 + i * 4]
+            .copy_from_slice(&(d as u32).to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_hello_fixed(buf: &[u8]) -> Result<(Dtype, [usize; 3])> {
+    let dtype = Dtype::from_code(buf[0])
+        .ok_or_else(|| anyhow!("unknown dtype code {}", buf[0]))?;
+    let mut shape = [0usize; 3];
+    for (i, d) in shape.iter_mut().enumerate() {
+        *d = u32::from_le_bytes(
+            buf[1 + i * 4..5 + i * 4].try_into().unwrap()) as usize;
+    }
+    Ok((dtype, shape))
+}
+
+/// Encode one frame onto a writer (no flush). The header's version
+/// field follows the frame kind ([`Frame::version`]), so v1 frames
+/// stay byte-for-byte what they always were.
 pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
-    write_header(w, frame.kind(), frame.id(), frame.payload_len())?;
+    write_header(w, frame.version(), frame.kind(), frame.id(),
+                 frame.payload_len())?;
     match frame {
         Frame::Infer { x, .. } => write_f32s(w, x)?,
         Frame::Output { y, .. } => write_f32s(w, y)?,
         Frame::Error { msg, .. } => w.write_all(msg.as_bytes())?,
         Frame::Busy { .. } | Frame::Ping { .. } | Frame::Pong { .. } => {}
+        Frame::Hello { model, shape, dtype, .. } => {
+            write_hello_fixed(w, *dtype, *shape)?;
+            w.write_all(model.as_bytes())?;
+        }
+        Frame::HelloAck { shape, dtype, .. } => {
+            write_hello_fixed(w, *dtype, *shape)?;
+        }
+        Frame::InferI8 { scale, data, .. } => {
+            w.write_all(&scale.to_le_bytes())?;
+            write_i8s(w, data)?;
+        }
     }
     Ok(())
 }
@@ -137,8 +229,18 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
 /// Wire-identical to `write_frame(&Frame::Infer { id, x })`.
 pub fn write_infer<W: Write>(w: &mut W, id: u64, x: &[f32])
                              -> Result<()> {
-    write_header(w, 1, id, x.len() * 4)?;
+    write_header(w, V1, 1, id, x.len() * 4)?;
     write_f32s(w, x)
+}
+
+/// Encode an `InferI8` frame straight from a borrowed payload (the v2
+/// int8 client's hot path). Wire-identical to
+/// `write_frame(&Frame::InferI8 { id, scale, data })`.
+pub fn write_infer_i8<W: Write>(w: &mut W, id: u64, scale: f32,
+                                data: &[i8]) -> Result<()> {
+    write_header(w, V2, 9, id, 4 + data.len())?;
+    w.write_all(&scale.to_le_bytes())?;
+    write_i8s(w, data)
 }
 
 /// Encode to an owned buffer (testing / single-shot writes).
@@ -176,16 +278,20 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
     ensure!(header[0..4] == MAGIC,
             "bad magic {:02x?} (not a wino-adder frame)", &header[0..4]);
     let version = u16::from_le_bytes([header[4], header[5]]);
-    ensure!(version == VERSION,
-            "unsupported protocol version {version} (want {VERSION})");
+    ensure!(version == V1 || version == V2,
+            "unsupported protocol version {version} \
+             (this build speaks 1..={VERSION})");
     let kind = header[6];
     let id = u64::from_le_bytes(header[8..16].try_into().unwrap());
     let plen =
         u32::from_le_bytes(header[16..20].try_into().unwrap()) as usize;
     ensure!(plen <= MAX_PAYLOAD_BYTES,
             "payload length {plen} exceeds cap {MAX_PAYLOAD_BYTES}");
-    match kind {
-        1 | 2 => {
+    // version-dispatched kinds: v1 headers carry the original f32
+    // frames, v2 headers carry the session/int8 frames — a kind under
+    // the wrong version is a framing error, not a silent accept
+    match (version, kind) {
+        (V1, 1) | (V1, 2) => {
             ensure!(plen % 4 == 0,
                     "f32 payload length {plen} is not a multiple of 4");
             let xs = read_f32s(r, plen / 4)?;
@@ -195,14 +301,14 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
                 Frame::Output { id, y: xs }
             }))
         }
-        3 => {
+        (V1, 3) => {
             let mut buf = vec![0u8; plen];
             r.read_exact(&mut buf)?;
             let msg = String::from_utf8(buf)
                 .map_err(|_| anyhow!("error frame is not valid utf-8"))?;
             Ok(Some(Frame::Error { id, msg }))
         }
-        4 | 5 | 6 => {
+        (V1, 4) | (V1, 5) | (V1, 6) => {
             ensure!(plen == 0,
                     "kind-{kind} frame must be empty, got {plen} bytes");
             Ok(Some(match kind {
@@ -211,7 +317,37 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
                 _ => Frame::Pong { id },
             }))
         }
-        k => bail!("unknown frame kind {k}"),
+        (V2, 7) => {
+            ensure!(plen >= HELLO_FIXED,
+                    "hello payload too short: {plen} bytes");
+            let mut buf = vec![0u8; plen];
+            r.read_exact(&mut buf)?;
+            let (dtype, shape) = read_hello_fixed(&buf)?;
+            let model = String::from_utf8(buf[HELLO_FIXED..].to_vec())
+                .map_err(|_| {
+                    anyhow!("hello model name is not valid utf-8")
+                })?;
+            Ok(Some(Frame::Hello { id, model, shape, dtype }))
+        }
+        (V2, 8) => {
+            ensure!(plen == HELLO_FIXED,
+                    "hello-ack payload must be {HELLO_FIXED} bytes, \
+                     got {plen}");
+            let mut buf = [0u8; HELLO_FIXED];
+            r.read_exact(&mut buf)?;
+            let (dtype, shape) = read_hello_fixed(&buf)?;
+            Ok(Some(Frame::HelloAck { id, shape, dtype }))
+        }
+        (V2, 9) => {
+            ensure!(plen >= 4,
+                    "infer-i8 payload too short: {plen} bytes");
+            let mut sbuf = [0u8; 4];
+            r.read_exact(&mut sbuf)?;
+            let scale = f32::from_le_bytes(sbuf);
+            let data = read_i8s(r, plen - 4)?;
+            Ok(Some(Frame::InferI8 { id, scale, data }))
+        }
+        (v, k) => bail!("unknown frame kind {k} for version {v}"),
     }
 }
 
@@ -229,6 +365,34 @@ fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
         i += n;
     }
     Ok(())
+}
+
+/// Stream i8s as raw bytes through a fixed staging buffer.
+fn write_i8s<W: Write>(w: &mut W, xs: &[i8]) -> Result<()> {
+    let mut buf = [0u8; 8192];
+    let mut i = 0usize;
+    while i < xs.len() {
+        let n = (xs.len() - i).min(buf.len());
+        for (b, &v) in buf[..n].iter_mut().zip(&xs[i..i + n]) {
+            *b = v as u8;
+        }
+        w.write_all(&buf[..n])?;
+        i += n;
+    }
+    Ok(())
+}
+
+fn read_i8s<R: Read>(r: &mut R, n: usize) -> Result<Vec<i8>> {
+    let mut out = Vec::with_capacity(n);
+    let mut buf = [0u8; 8192];
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(buf.len());
+        r.read_exact(&mut buf[..take])?;
+        out.extend(buf[..take].iter().map(|&b| b as i8));
+        left -= take;
+    }
+    Ok(out)
 }
 
 fn read_f32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
@@ -270,6 +434,96 @@ mod tests {
         roundtrip(&Frame::Busy { id: u64::MAX });
         roundtrip(&Frame::Ping { id: 7 });
         roundtrip(&Frame::Pong { id: 8 });
+        // v2 frames
+        roundtrip(&Frame::Hello { id: 9, model: "lenet-α".into(),
+                                  shape: [2, 8, 8],
+                                  dtype: Dtype::Int8 });
+        roundtrip(&Frame::Hello { id: 10, model: String::new(),
+                                  shape: [0, 0, 0],
+                                  dtype: Dtype::F32 });
+        roundtrip(&Frame::HelloAck { id: 11, shape: [16, 8, 8],
+                                     dtype: Dtype::F32 });
+        roundtrip(&Frame::InferI8 { id: 12, scale: 0.03125,
+                                    data: vec![-128, -1, 0, 1, 127] });
+        roundtrip(&Frame::InferI8 { id: 13, scale: 1.0, data: vec![] });
+    }
+
+    #[test]
+    fn v1_frames_keep_version_1_on_the_wire() {
+        // the bit-compatibility contract: every v1 kind still stamps
+        // version 1 in header bytes 4..6, so a v1 client sees byte-
+        // identical replies from a v2-capable server
+        for f in [Frame::Infer { id: 1, x: vec![1.0] },
+                  Frame::Output { id: 2, y: vec![2.0] },
+                  Frame::Error { id: 3, msg: "m".into() },
+                  Frame::Busy { id: 4 },
+                  Frame::Ping { id: 5 },
+                  Frame::Pong { id: 6 }] {
+            let bytes = encode(&f);
+            assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), V1,
+                       "{} must stay v1", f.kind_name());
+        }
+        for f in [Frame::Hello { id: 7, model: "m".into(),
+                                 shape: [1, 2, 2],
+                                 dtype: Dtype::F32 },
+                  Frame::HelloAck { id: 8, shape: [1, 2, 2],
+                                    dtype: Dtype::Int8 },
+                  Frame::InferI8 { id: 9, scale: 0.5,
+                                   data: vec![1, 2] }] {
+            let bytes = encode(&f);
+            assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), V2,
+                       "{} must be v2", f.kind_name());
+        }
+    }
+
+    #[test]
+    fn version_kind_dispatch_is_strict() {
+        // a v2 kind under a v1 header (and vice versa) is a framing
+        // error — decoding is version-dispatched
+        let mut v2_kind_v1_header =
+            encode(&Frame::Hello { id: 1, model: "m".into(),
+                                   shape: [1, 2, 2],
+                                   dtype: Dtype::F32 });
+        v2_kind_v1_header[4..6].copy_from_slice(&V1.to_le_bytes());
+        assert!(read_frame(&mut &v2_kind_v1_header[..]).is_err());
+
+        let mut v1_kind_v2_header =
+            encode(&Frame::Infer { id: 1, x: vec![1.0] });
+        v1_kind_v2_header[4..6].copy_from_slice(&V2.to_le_bytes());
+        assert!(read_frame(&mut &v1_kind_v2_header[..]).is_err());
+    }
+
+    #[test]
+    fn malformed_v2_frames_are_rejected() {
+        // hello payload shorter than the fixed prefix
+        let mut short = encode(&Frame::HelloAck {
+            id: 1, shape: [1, 1, 1], dtype: Dtype::F32 });
+        short[16..20].copy_from_slice(&4u32.to_le_bytes());
+        short.truncate(HEADER_LEN + 4);
+        assert!(read_frame(&mut &short[..]).is_err());
+
+        // unknown dtype code
+        let mut bad_dtype = encode(&Frame::Hello {
+            id: 1, model: "m".into(), shape: [1, 1, 1],
+            dtype: Dtype::Int8 });
+        bad_dtype[HEADER_LEN] = 9;
+        assert!(read_frame(&mut &bad_dtype[..]).is_err());
+
+        // non-utf8 model name
+        let mut bad_name = encode(&Frame::Hello {
+            id: 1, model: "ab".into(), shape: [1, 1, 1],
+            dtype: Dtype::F32 });
+        let n = bad_name.len();
+        bad_name[n - 2] = 0xff;
+        bad_name[n - 1] = 0xfe;
+        assert!(read_frame(&mut &bad_name[..]).is_err());
+
+        // infer-i8 payload shorter than its scale field
+        let mut no_scale = encode(&Frame::InferI8 {
+            id: 1, scale: 1.0, data: vec![] });
+        no_scale[16..20].copy_from_slice(&2u32.to_le_bytes());
+        no_scale.extend_from_slice(&[0, 0]);
+        assert!(read_frame(&mut &no_scale[..]).is_err());
     }
 
     #[test]
@@ -278,6 +532,15 @@ mod tests {
         let mut direct = Vec::new();
         write_infer(&mut direct, 42, &x).unwrap();
         assert_eq!(direct, encode(&Frame::Infer { id: 42, x }));
+    }
+
+    #[test]
+    fn write_infer_i8_is_wire_identical_to_write_frame() {
+        let q: Vec<i8> = vec![-128, -3, 0, 3, 127];
+        let mut direct = Vec::new();
+        write_infer_i8(&mut direct, 43, 0.25, &q).unwrap();
+        assert_eq!(direct, encode(&Frame::InferI8 {
+            id: 43, scale: 0.25, data: q }));
     }
 
     #[test]

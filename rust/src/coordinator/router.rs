@@ -1,13 +1,15 @@
 //! Request router: assigns batches to executor lanes.
 //!
-//! The serving engine owns one compiled executable per batch bucket
-//! ("lane"); the router picks the lane for each batch and tracks
-//! in-flight work for least-loaded tie-breaking when several lanes can
-//! serve the same bucket (replicas).
+//! The serving engine owns one compiled plan per **(model, batch
+//! bucket)** pair ("lane"); the router picks the lane for each batch
+//! and tracks in-flight work for least-loaded tie-breaking when
+//! several lanes can serve the same `(model, bucket)` (replicas).
+//! Single-model callers use the `model = 0` convenience methods
+//! ([`Router::add_lane`] / [`Router::route`]).
 //!
 //! Invariants (property-tested): conservation (every batch routed to
-//! exactly one lane), bucket affinity (lane bucket == batch size), and
-//! bounded imbalance across replicas of the same bucket.
+//! exactly one lane), lane affinity (lane bucket == batch size, lane
+//! model == batch model), and bounded imbalance across replicas.
 
 use std::collections::BTreeMap;
 
@@ -15,6 +17,8 @@ use std::collections::BTreeMap;
 #[derive(Debug, Clone)]
 pub struct Lane {
     pub id: usize,
+    /// dense model index this lane serves (0 for single-model servers)
+    pub model: usize,
     pub bucket: usize,
     pub in_flight: u64,
     pub completed: u64,
@@ -34,11 +38,18 @@ impl Router {
         Router { lanes: Vec::new() }
     }
 
-    /// Register a lane serving a bucket; returns the lane id.
+    /// Register a lane serving model 0's `bucket`; returns the lane
+    /// id (single-model convenience for [`Router::add_lane_for`]).
     pub fn add_lane(&mut self, bucket: usize) -> usize {
+        self.add_lane_for(0, bucket)
+    }
+
+    /// Register a lane serving `(model, bucket)`; returns the lane id.
+    pub fn add_lane_for(&mut self, model: usize, bucket: usize)
+                        -> usize {
         let id = self.lanes.len();
         self.lanes.push(Lane {
-            id, bucket, in_flight: 0, completed: 0, samples: 0,
+            id, model, bucket, in_flight: 0, completed: 0, samples: 0,
         });
         id
     }
@@ -47,12 +58,20 @@ impl Router {
         &self.lanes
     }
 
-    /// Route a batch of `size`: least-loaded lane with that bucket.
+    /// Route a model-0 batch of `size` (single-model convenience for
+    /// [`Router::route_for`]).
     pub fn route(&mut self, size: usize) -> Option<usize> {
+        self.route_for(0, size)
+    }
+
+    /// Route a batch of `size` for `model`: least-loaded lane keyed
+    /// by that `(model, bucket)` pair.
+    pub fn route_for(&mut self, model: usize, size: usize)
+                     -> Option<usize> {
         let lane = self
             .lanes
             .iter_mut()
-            .filter(|l| l.bucket == size)
+            .filter(|l| l.model == model && l.bucket == size)
             .min_by_key(|l| l.in_flight)?;
         lane.in_flight += 1;
         Some(lane.id)
@@ -93,11 +112,23 @@ pub fn per_bucket_completed(router: &Router) -> BTreeMap<usize, u64> {
 }
 
 /// Per-bucket **request** (sample) counts — the real traffic split the
-/// server reports in `ServerStats::per_bucket_requests`.
+/// server reports in `ServerStats::per_bucket_requests` (aggregated
+/// across models).
 pub fn per_bucket_samples(router: &Router) -> BTreeMap<usize, u64> {
     let mut out = BTreeMap::new();
     for l in router.lanes() {
         *out.entry(l.bucket).or_insert(0) += l.samples;
+    }
+    out
+}
+
+/// Per-model **request** (sample) counts, keyed by dense model index —
+/// the multi-model traffic split behind
+/// `ServerStats::per_model_requests`.
+pub fn per_model_samples(router: &Router) -> BTreeMap<usize, u64> {
+    let mut out = BTreeMap::new();
+    for l in router.lanes() {
+        *out.entry(l.model).or_insert(0) += l.samples;
     }
     out
 }
@@ -129,6 +160,29 @@ mod tests {
         // after one completes, it becomes least-loaded again
         let third = r.route(4).unwrap();
         assert!(third == a || third == b);
+    }
+
+    #[test]
+    fn lanes_are_model_keyed() {
+        let mut r = Router::new();
+        let a1 = r.add_lane_for(0, 1);
+        let b1 = r.add_lane_for(1, 1);
+        let b4 = r.add_lane_for(1, 4);
+        // same bucket, different models -> different lanes
+        assert_eq!(r.route_for(0, 1), Some(a1));
+        assert_eq!(r.route_for(1, 1), Some(b1));
+        assert_eq!(r.route_for(1, 4), Some(b4));
+        // no lane for (model 0, bucket 4)
+        assert_eq!(r.route_for(0, 4), None);
+        r.complete(a1);
+        r.complete(b1);
+        r.complete(b4);
+        let by_model = per_model_samples(&r);
+        assert_eq!(by_model.get(&0), Some(&1));
+        assert_eq!(by_model.get(&1), Some(&5));
+        // bucket aggregation spans models
+        let by_bucket = per_bucket_samples(&r);
+        assert_eq!(by_bucket.get(&1), Some(&2));
     }
 
     #[test]

@@ -1,27 +1,35 @@
 //! The inference server: a single engine thread fed by an mpsc request
-//! channel through the dynamic [`Batcher`] and bucket [`Router`].
+//! channel through per-model dynamic [`Batcher`]s and a
+//! `(model, bucket)`-keyed [`Router`].
 //!
 //! Request path (all rust, no Python):
-//!   client -> mpsc -> batcher (bucket selection) -> router (lane)
+//!   client -> typed validation (engine facade) -> mpsc
+//!          -> per-model batcher (bucket selection)
+//!          -> router lane keyed (model, bucket)
 //!          -> batch execution -> per-request reply.
 //!
-//! Two execution substrates plug into the same serving loop:
+//! The public construction path is [`crate::engine::EngineBuilder`];
+//! this module hosts the machinery ([`Server::start_hosted`] — a
+//! **registry of named models**, each compiled into one
+//! [`ModelPlan`] per batch bucket, all driven by one shared backend)
+//! plus two shims:
 //!
-//! * **native** ([`Server::start_native`], always available) — the
-//!   multi-threaded [`nn::backend`](crate::nn::backend) CPU backends
-//!   (`scalar` / `parallel` / `parallel-int8`), selected by
-//!   [`NativeConfig`]; this is the serving fallback and the default.
+//! * **native single-model** ([`Server::start_native`], deprecated) —
+//!   the pre-engine `NativeConfig` surface, now a thin wrapper that
+//!   registers one model named `"default"`.
 //! * **PJRT** ([`Server::start`], feature `pjrt`) — the AOT
 //!   `layer_wino_adder_b*` artifacts executed by the engine thread
 //!   (PJRT executables are not `Send`, hence the single-thread loop).
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::{LatencyStats, NetSummary};
 use super::router::Router;
+use crate::engine::ModelInfo;
 use crate::nn::backend::{default_threads, Backend, BackendKind,
                          KernelKind};
 use crate::nn::matrices::Variant;
@@ -36,9 +44,11 @@ use crate::util::io;
 #[cfg(feature = "pjrt")]
 use std::path::PathBuf;
 
-/// One inference request: a single image (C*H*W flat) in, logits-like
-/// feature map out.
+/// One inference request: a single image (C*H*W flat, already
+/// validated and dequantized) in, logits-like feature map out.
 struct InferMsg {
+    /// dense registry index of the target model
+    model: usize,
     x: Vec<f32>,
     resp: mpsc::Sender<Result<Vec<f32>, String>>,
     submitted: Instant,
@@ -54,11 +64,15 @@ enum Msg {
 pub struct ServerStats {
     pub served: u64,
     pub batches: u64,
-    /// per-bucket **batch** counts (router lane completions)
+    /// per-bucket **batch** counts (router lane completions,
+    /// aggregated across models)
     pub per_bucket: Vec<(usize, u64)>,
     /// per-bucket **request** counts — the real traffic split
     /// (sums to `served`)
     pub per_bucket_requests: Vec<(usize, u64)>,
+    /// per-model **request** counts, in registry order (sums to
+    /// `served`; one entry per hosted model)
+    pub per_model_requests: Vec<(String, u64)>,
     pub latency_summary: String,
     pub p50_us: u64,
     pub p99_us: u64,
@@ -68,11 +82,13 @@ pub struct ServerStats {
     pub net: Option<NetSummary>,
 }
 
-/// Handle used by clients; cheap to clone.
+/// Handle used by clients; cheap to clone. Carries the model registry
+/// so every request is validated against its target model **before**
+/// it is enqueued — a malformed request can never reach a batch lane.
 #[derive(Clone)]
 pub struct ServerHandle {
     tx: mpsc::Sender<Msg>,
-    sample_len: usize,
+    models: Arc<Vec<ModelInfo>>,
 }
 
 /// An admitted, not-yet-answered inference returned by
@@ -94,23 +110,46 @@ impl PendingInfer {
 }
 
 impl ServerHandle {
-    /// Flat input length the served model expects per request.
-    pub fn sample_len(&self) -> usize {
-        self.sample_len
+    /// The hosted model registry, in registration order (index 0 is
+    /// the default model for v1 clients).
+    pub fn models(&self) -> &[ModelInfo] {
+        &self.models
     }
 
-    /// Submit a request without blocking for the reply — the
-    /// pipelining primitive the TCP front-end
-    /// ([`crate::coordinator::net`]) builds on. Validation errors
-    /// (wrong input length, stopped server) surface immediately.
-    pub fn infer_async(&self, x: Vec<f32>) -> Result<PendingInfer> {
-        if x.len() != self.sample_len {
+    /// Look up a model by name: `(dense index, geometry)`.
+    pub fn resolve(&self, name: &str) -> Option<(usize, &ModelInfo)> {
+        self.models
+            .iter()
+            .enumerate()
+            .find(|(_, m)| m.name == name)
+    }
+
+    /// Flat input length the **default** (first-registered) model
+    /// expects per request.
+    pub fn sample_len(&self) -> usize {
+        self.models[0].sample_len()
+    }
+
+    /// Submit a request for model `model` (dense index) without
+    /// blocking for the reply — the pipelining primitive the TCP
+    /// front-end builds on. Validation (model index in range, payload
+    /// length against that model's `sample_len`) happens here, before
+    /// the request is enqueued, so the batcher and router only ever
+    /// see well-formed work.
+    pub fn infer_async_for(&self, model: usize, x: Vec<f32>)
+                           -> Result<PendingInfer> {
+        let info = self.models.get(model).ok_or_else(|| {
+            anyhow!("model index {model} out of range ({} hosted)",
+                    self.models.len())
+        })?;
+        if x.len() != info.sample_len() {
             return Err(anyhow!("expected {} values, got {}",
-                               self.sample_len, x.len()));
+                               info.sample_len(), x.len()));
         }
         let (resp_tx, resp_rx) = mpsc::channel();
         self.tx
             .send(Msg::Infer(InferMsg {
+                model,
                 x,
                 resp: resp_tx,
                 submitted: Instant::now(),
@@ -119,10 +158,22 @@ impl ServerHandle {
         Ok(PendingInfer { rx: resp_rx })
     }
 
-    /// Blocking single-image inference
-    /// ([`infer_async`](ServerHandle::infer_async) + wait).
+    /// [`infer_async_for`](ServerHandle::infer_async_for) on the
+    /// default model (v1-compatible surface).
+    pub fn infer_async(&self, x: Vec<f32>) -> Result<PendingInfer> {
+        self.infer_async_for(0, x)
+    }
+
+    /// Blocking single-image inference on the default model.
     pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
         self.infer_async(x)?.wait()
+    }
+
+    /// Blocking single-image inference on model `model` (dense
+    /// index).
+    pub fn infer_for(&self, model: usize, x: Vec<f32>)
+                     -> Result<Vec<f32>> {
+        self.infer_async_for(model, x)?.wait()
     }
 
     /// Stop the server and collect stats.
@@ -135,12 +186,26 @@ impl ServerHandle {
     }
 }
 
+/// One named model to host: registry name, spec, and weights. The
+/// engine builder resolves its registrations into these.
+#[derive(Debug, Clone)]
+pub struct HostedModel {
+    pub name: String,
+    pub spec: ModelSpec,
+    pub weights: ModelWeights,
+}
+
 /// Configuration of the rust-native serving engine: which backend runs
 /// the model, and what model. `model: None` serves the classic
 /// single-Winograd-adder-layer demo built from `cin`/`cout`/`hw`
 /// (the paper's FPGA benchmark layer, 16 -> 16 channels at 28x28, by
 /// default); `model: Some(spec)` serves a whole planned stack.
 /// Weights are synthetic (seeded from `seed`) either way.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `engine::EngineBuilder` (see the README migration \
+            table); this shim hosts one model named \"default\""
+)]
 #[derive(Debug, Clone)]
 pub struct NativeConfig {
     pub backend: BackendKind,
@@ -157,6 +222,7 @@ pub struct NativeConfig {
     pub model: Option<ModelSpec>,
 }
 
+#[allow(deprecated)]
 impl Default for NativeConfig {
     fn default() -> NativeConfig {
         NativeConfig {
@@ -173,6 +239,7 @@ impl Default for NativeConfig {
     }
 }
 
+#[allow(deprecated)]
 impl NativeConfig {
     /// The model this config serves (single-layer spec when `model`
     /// is not set).
@@ -188,38 +255,54 @@ impl NativeConfig {
     }
 }
 
-/// The Winograd-adder layer server.
+/// The Winograd-adder model server.
 pub struct Server;
 
 impl Server {
-    /// Start the engine thread on the rust-native backend (no
-    /// artifacts required — the offline serving fallback). The spec
-    /// (single layer or multi-layer `cfg.model`) is compiled into one
-    /// [`ModelPlan`] per batcher bucket, so steady-state serving does
-    /// zero heap allocation in the forward hot loop.
-    pub fn start_native(cfg: NativeConfig, policy: BatchPolicy)
-                        -> Result<(ServerHandle, thread::JoinHandle<()>)> {
-        // validate + compile up front: a bad shape must be a CLI
-        // error, not an assert panic inside the engine thread
-        let spec = cfg.spec();
-        spec.validate().context("invalid serving model")?;
-        let weights = ModelWeights::init(&spec, cfg.seed);
-        // one plan per bucket; steps (and weights) are Arc-shared
-        let plans =
-            ModelPlan::compile_buckets(&spec, &weights,
-                                       &policy.buckets)?;
-        let sample_len = spec.sample_len();
+    /// Start the engine thread hosting a **registry of named models**
+    /// on the rust-native backends. Every spec is validated and
+    /// compiled into one [`ModelPlan`] per batcher bucket up front (a
+    /// bad shape is a construction error, not an engine-thread
+    /// panic), weights are checked against their specs, and the one
+    /// backend instance is shared by every model's plans.
+    ///
+    /// This is the engine facade's substrate — construct through
+    /// [`crate::engine::EngineBuilder`] unless you are the facade.
+    pub fn start_hosted(models: Vec<HostedModel>, backend: BackendKind,
+                        threads: usize, kernel: KernelKind,
+                        policy: BatchPolicy)
+                        -> Result<(ServerHandle,
+                                   thread::JoinHandle<()>)> {
+        if models.is_empty() {
+            return Err(anyhow!("no models to host"));
+        }
+        let mut infos = Vec::with_capacity(models.len());
+        let mut compiled = Vec::with_capacity(models.len());
+        for m in &models {
+            let (out_c, out_hw) = m.spec.validate().with_context(
+                || format!("invalid serving model {:?}", m.name))?;
+            m.weights.check(&m.spec).with_context(
+                || format!("weights for model {:?}", m.name))?;
+            infos.push(ModelInfo {
+                name: m.name.clone(),
+                in_shape: [m.spec.in_channels, m.spec.hw, m.spec.hw],
+                out_shape: [out_c, out_hw, out_hw],
+            });
+            compiled.push(ModelPlan::compile_buckets(
+                &m.spec, &m.weights, &policy.buckets)?);
+        }
+        let models_arc = Arc::new(infos);
         let (tx, rx) = mpsc::channel::<Msg>();
-        let handle = ServerHandle { tx, sample_len };
+        let handle = ServerHandle { tx, models: Arc::clone(&models_arc) };
         let join = thread::Builder::new()
             .name("wino-adder-native-engine".into())
             .spawn(move || {
                 let exec = PlannedExec {
-                    backend: cfg.backend.build_with(cfg.threads,
-                                                    cfg.kernel),
-                    plans,
+                    backend: backend.build_with(threads, kernel),
+                    models: compiled,
                 };
-                if let Err(e) = serve_loop(policy, rx, exec) {
+                if let Err(e) = serve_loop(policy, rx, exec, models_arc)
+                {
                     eprintln!("engine thread error: {e:?}");
                 }
             })
@@ -227,17 +310,38 @@ impl Server {
         Ok((handle, join))
     }
 
+    /// Start the engine thread on one model described by the legacy
+    /// [`NativeConfig`] (hosted under the name `"default"`).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `engine::EngineBuilder::model(...).build()`"
+    )]
+    #[allow(deprecated)]
+    pub fn start_native(cfg: NativeConfig, policy: BatchPolicy)
+                        -> Result<(ServerHandle, thread::JoinHandle<()>)> {
+        let spec = cfg.spec();
+        let weights = ModelWeights::init(&spec, cfg.seed);
+        Server::start_hosted(
+            vec![HostedModel { name: "default".into(), spec, weights }],
+            cfg.backend, cfg.threads, cfg.kernel, policy)
+    }
+
     /// Start the engine thread on the PJRT `layer_wino_adder_b*`
-    /// artifacts under `artifacts/`.
+    /// artifacts under `artifacts/` (single anonymous model, hosted
+    /// as `"default"`).
     #[cfg(feature = "pjrt")]
     pub fn start(artifacts: PathBuf, policy: BatchPolicy)
                  -> Result<(ServerHandle, thread::JoinHandle<()>)> {
         let manifest = Manifest::load(&artifacts)?;
-        // sample length from the b=1 layer artifact
+        // geometry from the b=1 layer artifact
         let l1 = manifest.layer("wino_adder_b1")?;
-        let sample_len: usize = l1.x_shape.iter().product();
+        let models_arc = Arc::new(vec![ModelInfo {
+            name: "default".into(),
+            in_shape: shape3(&l1.x_shape),
+            out_shape: shape3(&l1.out_shape),
+        }]);
         let (tx, rx) = mpsc::channel::<Msg>();
-        let handle = ServerHandle { tx, sample_len };
+        let handle = ServerHandle { tx, models: Arc::clone(&models_arc) };
 
         let buckets = policy.buckets.clone();
         let join = thread::Builder::new()
@@ -254,7 +358,8 @@ impl Server {
                         lanes.push((*bucket, engine.load_layer(entry)?));
                     }
                     serve_loop(policy, rx,
-                               PjrtExec { lanes, w, out: Vec::new() })
+                               PjrtExec { lanes, w, out: Vec::new() },
+                               models_arc)
                 };
                 if let Err(e) = run() {
                     eprintln!("engine thread error: {e:?}");
@@ -265,6 +370,17 @@ impl Server {
     }
 }
 
+/// Per-sample `(c, h, w)` from an artifact shape (leading batch dim
+/// dropped; degenerate shapes collapse to a flat channel axis).
+#[cfg(feature = "pjrt")]
+fn shape3(dims: &[usize]) -> [usize; 3] {
+    match dims {
+        [_, c, h, w] => [*c, *h, *w],
+        [c, h, w] => [*c, *h, *w],
+        other => [other.iter().product(), 1, 1],
+    }
+}
+
 /// One batch-execution substrate pluggable into [`serve_loop`].
 ///
 /// `run` returns a **borrowed** slice into substrate-owned buffers so
@@ -272,40 +388,53 @@ impl Server {
 /// only the per-request reply slices are materialized (the mpsc reply
 /// channel needs owned values).
 trait BatchExec {
-    /// Flat output length per sample for a batch of `bucket` samples.
-    fn per_sample_out(&self, bucket: usize) -> usize;
-    /// Execute a batch: `x` is `bucket * sample_len` flat values.
-    fn run(&mut self, bucket: usize, x: &[f32]) -> Result<&[f32]>;
+    /// Flat output length per sample for `model` at batch `bucket`.
+    fn per_sample_out(&self, model: usize, bucket: usize) -> usize;
+    /// Execute a batch for `model`: `x` is `bucket * sample_len` flat
+    /// values.
+    fn run(&mut self, model: usize, bucket: usize, x: &[f32])
+           -> Result<&[f32]>;
 }
 
-/// Native substrate: one [`ModelPlan`] per bucket, all driven by one
-/// `nn::backend` instance. Replaces the old single-`w_hat`
-/// `NativeExec` — the plan owns weights, workspace, and activation
-/// buffers, so per-request work is pure compute (no `Tensor::from_vec`
-/// copy, no fresh tile buffers).
+/// Native substrate: per model, one [`ModelPlan`] per bucket — the
+/// plan cache — all driven by one shared `nn::backend` instance. Each
+/// plan owns its weights (Arc-shared across its buckets), workspace,
+/// and activation buffers, so per-request work is pure compute.
 struct PlannedExec {
     backend: Box<dyn Backend>,
-    plans: Vec<(usize, ModelPlan)>,
+    /// outer index: dense model index; inner: (bucket, plan)
+    models: Vec<Vec<(usize, ModelPlan)>>,
 }
 
 impl BatchExec for PlannedExec {
-    fn per_sample_out(&self, bucket: usize) -> usize {
-        self.plans.iter()
-            .find(|(b, _)| *b == bucket)
+    fn per_sample_out(&self, model: usize, bucket: usize) -> usize {
+        self.models
+            .get(model)
+            .and_then(|plans| {
+                plans.iter().find(|(b, _)| *b == bucket)
+            })
             .map(|(_, p)| p.out_sample_len())
             .unwrap_or(0)
     }
 
-    fn run(&mut self, bucket: usize, x: &[f32]) -> Result<&[f32]> {
-        let plan = self.plans.iter_mut()
+    fn run(&mut self, model: usize, bucket: usize, x: &[f32])
+           -> Result<&[f32]> {
+        let plan = self
+            .models
+            .get_mut(model)
+            .ok_or_else(|| anyhow!("no plans for model {model}"))?
+            .iter_mut()
             .find(|(b, _)| *b == bucket)
             .map(|(_, p)| p)
-            .ok_or_else(|| anyhow!("no plan for bucket {bucket}"))?;
+            .ok_or_else(|| {
+                anyhow!("no plan for model {model} bucket {bucket}")
+            })?;
         Ok(plan.forward(self.backend.as_ref(), x))
     }
 }
 
-/// PJRT substrate: one shape-specialized executable per bucket.
+/// PJRT substrate: one shape-specialized executable per bucket
+/// (single model; the model index is ignored).
 #[cfg(feature = "pjrt")]
 struct PjrtExec {
     lanes: Vec<(usize, LayerExec)>,
@@ -328,7 +457,7 @@ impl PjrtExec {
 
 #[cfg(feature = "pjrt")]
 impl BatchExec for PjrtExec {
-    fn per_sample_out(&self, bucket: usize) -> usize {
+    fn per_sample_out(&self, _model: usize, bucket: usize) -> usize {
         self.lane(bucket)
             .map(|exec| {
                 exec.entry.out_shape.iter().product::<usize>()
@@ -337,23 +466,32 @@ impl BatchExec for PjrtExec {
             .unwrap_or(0)
     }
 
-    fn run(&mut self, bucket: usize, x: &[f32]) -> Result<&[f32]> {
+    fn run(&mut self, _model: usize, bucket: usize, x: &[f32])
+           -> Result<&[f32]> {
         let y = self.lane(bucket)?.run(x, &self.w)?;
         self.out = y;
         Ok(&self.out)
     }
 }
 
-/// The serving loop shared by every substrate: drain requests, batch,
-/// route to a bucket lane, execute, reply, and report stats on stop.
+/// The serving loop shared by every substrate: drain requests, batch
+/// per model, route to a `(model, bucket)` lane, execute, reply, and
+/// report stats on stop.
 fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
-                            mut exec: E) -> Result<()> {
-    // one lane per available bucket
+                            mut exec: E, models: Arc<Vec<ModelInfo>>)
+                            -> Result<()> {
+    // one lane per (model, bucket) pair
     let mut router = Router::new();
-    for bucket in &policy.buckets {
-        router.add_lane(*bucket);
+    for midx in 0..models.len() {
+        for bucket in &policy.buckets {
+            router.add_lane_for(midx, *bucket);
+        }
     }
-    let mut batcher: Batcher<InferMsg> = Batcher::new(policy);
+    // one batching queue per model: batches are model-homogeneous
+    let mut batchers: Vec<Batcher<InferMsg>> = models
+        .iter()
+        .map(|_| Batcher::new(policy.clone()))
+        .collect();
     let start = Instant::now();
     let now_us = |s: &Instant| s.elapsed().as_micros() as u64;
     let mut latency = LatencyStats::new();
@@ -367,12 +505,14 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
         let timeout = Duration::from_micros(200);
         match rx.recv_timeout(timeout) {
             Ok(Msg::Infer(m)) => {
-                batcher.submit(m, now_us(&start));
+                let midx = m.model;
+                batchers[midx].submit(m, now_us(&start));
                 // opportunistically drain without blocking
                 while let Ok(msg) = rx.try_recv() {
                     match msg {
                         Msg::Infer(m) => {
-                            batcher.submit(m, now_us(&start));
+                            let midx = m.model;
+                            batchers[midx].submit(m, now_us(&start));
                         }
                         Msg::Stop(s) => {
                             stop_reply = Some(s);
@@ -388,46 +528,52 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
             Err(mpsc::RecvTimeoutError::Disconnected) => break 'outer,
         }
 
-        // dispatch ready batches; on stop, flush the whole queue (the
-        // seed took only the first flushed batch, dropping the rest)
+        // dispatch ready batches per model; on stop, flush every
+        // model's whole queue (the seed took only the first flushed
+        // batch, dropping the rest)
         let drain = stop_reply.is_some();
-        let mut flushed = if drain {
-            batcher.flush()
-        } else {
-            Vec::new()
-        }
-        .into_iter();
-        loop {
-            let batch = if drain {
-                flushed.next()
+        for midx in 0..batchers.len() {
+            let mut flushed = if drain {
+                batchers[midx].flush()
             } else {
-                batcher.poll(now_us(&start))
-            };
-            let Some(batch) = batch else { break };
-            let size = batch.len();
-            let lane_id = router
-                .route(size)
-                .ok_or_else(|| anyhow!("no lane for bucket {size}"))?;
-            xbuf.clear();
-            for r in &batch {
-                xbuf.extend_from_slice(&r.payload.x);
+                Vec::new()
             }
-            let per_sample = exec.per_sample_out(size);
-            let result = exec.run(size, &xbuf);
-            router.complete(lane_id);
-            batches += 1;
-            match result {
-                Ok(y) => {
-                    for (i, r) in batch.into_iter().enumerate() {
-                        let piece =
-                            y[i * per_sample..(i + 1) * per_sample].to_vec();
-                        latency.record(r.payload.submitted.elapsed());
-                        let _ = r.payload.resp.send(Ok(piece));
-                    }
+            .into_iter();
+            loop {
+                let batch = if drain {
+                    flushed.next()
+                } else {
+                    batchers[midx].poll(now_us(&start))
+                };
+                let Some(batch) = batch else { break };
+                let size = batch.len();
+                let lane_id =
+                    router.route_for(midx, size).ok_or_else(|| {
+                        anyhow!("no lane for model {midx} bucket {size}")
+                    })?;
+                xbuf.clear();
+                for r in &batch {
+                    xbuf.extend_from_slice(&r.payload.x);
                 }
-                Err(e) => {
-                    for r in batch {
-                        let _ = r.payload.resp.send(Err(format!("{e}")));
+                let per_sample = exec.per_sample_out(midx, size);
+                let result = exec.run(midx, size, &xbuf);
+                router.complete(lane_id);
+                batches += 1;
+                match result {
+                    Ok(y) => {
+                        for (i, r) in batch.into_iter().enumerate() {
+                            let piece = y[i * per_sample
+                                          ..(i + 1) * per_sample]
+                                .to_vec();
+                            latency.record(r.payload.submitted.elapsed());
+                            let _ = r.payload.resp.send(Ok(piece));
+                        }
+                    }
+                    Err(e) => {
+                        for r in batch {
+                            let _ =
+                                r.payload.resp.send(Err(format!("{e}")));
+                        }
                     }
                 }
             }
@@ -442,11 +588,19 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
                 super::router::per_bucket_samples(&router)
                     .into_iter()
                     .collect();
+            let by_model = super::router::per_model_samples(&router);
+            let per_model_requests: Vec<(String, u64)> = models
+                .iter()
+                .enumerate()
+                .map(|(i, m)| (m.name.clone(),
+                               by_model.get(&i).copied().unwrap_or(0)))
+                .collect();
             let stats = ServerStats {
-                served: batcher.dispatched,
+                served: batchers.iter().map(|b| b.dispatched).sum(),
                 batches,
                 per_bucket,
                 per_bucket_requests,
+                per_model_requests,
                 latency_summary: latency.summary(),
                 p50_us: latency.percentile(50.0).unwrap_or(0),
                 p99_us: latency.percentile(99.0).unwrap_or(0),
@@ -467,18 +621,19 @@ mod tests {
     use crate::util::rng::Rng;
     use crate::util::testkit::all_close;
 
-    fn tiny_cfg(kind: BackendKind) -> NativeConfig {
-        NativeConfig {
-            backend: kind,
-            threads: 2,
-            kernel: KernelKind::default(),
-            cin: 2,
-            cout: 3,
-            hw: 8,
-            variant: Variant::Balanced(0),
-            seed: 7,
-            model: None,
-        }
+    /// The classic tiny single-layer model: 2 -> 3 channels at 8x8.
+    fn tiny_model() -> HostedModel {
+        let spec =
+            ModelSpec::single_layer(2, 3, 8, Variant::Balanced(0));
+        let weights = ModelWeights::init(&spec, 7);
+        HostedModel { name: "default".into(), spec, weights }
+    }
+
+    fn start_tiny(kind: BackendKind, policy: BatchPolicy)
+                  -> (ServerHandle, thread::JoinHandle<()>) {
+        Server::start_hosted(vec![tiny_model()], kind, 2,
+                             KernelKind::default(), policy)
+            .unwrap()
     }
 
     #[test]
@@ -486,8 +641,7 @@ mod tests {
         let policy = BatchPolicy { buckets: vec![1, 4],
                                    max_wait_us: 500 };
         let (handle, join) =
-            Server::start_native(tiny_cfg(BackendKind::Parallel), policy)
-                .unwrap();
+            start_tiny(BackendKind::Parallel, policy);
         let sample = 2 * 8 * 8;
         let mut rng = Rng::new(1);
         let mut threads = Vec::new();
@@ -516,6 +670,9 @@ mod tests {
         let requests: u64 =
             stats.per_bucket_requests.iter().map(|(_, n)| n).sum();
         assert_eq!(requests, stats.served);
+        // single-model registry: all traffic attributed to "default"
+        assert_eq!(stats.per_model_requests,
+                   vec![("default".to_string(), 32)]);
     }
 
     #[test]
@@ -525,14 +682,15 @@ mod tests {
         let spec = ModelSpec::lenetish(2, 8, Variant::Balanced(0));
         let out_len = spec.out_sample_len().unwrap();
         for kind in BackendKind::ALL {
-            let cfg = NativeConfig {
-                model: Some(spec.clone()),
-                ..tiny_cfg(kind)
-            };
+            let weights = ModelWeights::init(&spec, 7);
+            let hosted = HostedModel { name: "lenet".into(),
+                                       spec: spec.clone(), weights };
             let policy = BatchPolicy { buckets: vec![1, 4],
                                        max_wait_us: 300 };
             let (handle, join) =
-                Server::start_native(cfg, policy).unwrap();
+                Server::start_hosted(vec![hosted], kind, 2,
+                                     KernelKind::default(), policy)
+                    .unwrap();
             let mut rng = Rng::new(2);
             let mut threads = Vec::new();
             for _ in 0..2 {
@@ -562,9 +720,10 @@ mod tests {
         // no batching) and through a *driven* bucket-4 batch must
         // produce identical results (same weights, same math)
         let spec = ModelSpec::stack(2, 2, 3, 8, Variant::Balanced(1));
-        let cfg = NativeConfig {
-            model: Some(spec),
-            ..tiny_cfg(BackendKind::Scalar)
+        let hosted = || HostedModel {
+            name: "stack".into(),
+            spec: spec.clone(),
+            weights: ModelWeights::init(&spec, 7),
         };
         let mut rng = Rng::new(4);
         let xs: Vec<Vec<f32>> =
@@ -573,7 +732,9 @@ mod tests {
         // bucket-1 reference: one request at a time
         let policy = BatchPolicy { buckets: vec![1], max_wait_us: 0 };
         let (handle, join) =
-            Server::start_native(cfg.clone(), policy).unwrap();
+            Server::start_hosted(vec![hosted()], BackendKind::Scalar,
+                                 2, KernelKind::default(), policy)
+                .unwrap();
         let singles: Vec<Vec<f32>> =
             xs.iter().map(|x| handle.infer(x.clone()).unwrap())
                 .collect();
@@ -585,7 +746,9 @@ mod tests {
         let policy = BatchPolicy { buckets: vec![1, 4],
                                    max_wait_us: 200_000 };
         let (handle, join) =
-            Server::start_native(cfg, policy).unwrap();
+            Server::start_hosted(vec![hosted()], BackendKind::Scalar,
+                                 2, KernelKind::default(), policy)
+                .unwrap();
         let mut workers = Vec::new();
         for x in xs {
             let h = handle.clone();
@@ -607,55 +770,125 @@ mod tests {
 
     #[test]
     fn native_server_output_matches_direct_forward() {
-        let cfg = tiny_cfg(BackendKind::Scalar);
         let policy = BatchPolicy { buckets: vec![1], max_wait_us: 0 };
-        let (handle, join) =
-            Server::start_native(cfg.clone(), policy).unwrap();
+        let (handle, join) = start_tiny(BackendKind::Scalar, policy);
         let mut rng = Rng::new(9);
-        let x = rng.normal_vec(cfg.sample_len());
+        let x = rng.normal_vec(2 * 8 * 8);
         let got = handle.infer(x.clone()).unwrap();
         handle.stop().unwrap();
         join.join().unwrap();
-        // recompute with the same seeded weights
-        let mut wrng = Rng::new(cfg.seed);
-        let w_hat = Tensor::randn(&mut wrng, [cfg.cout, cfg.cin, 4, 4]);
-        let xt = Tensor::from_vec(x, [1, cfg.cin, cfg.hw, cfg.hw]);
-        let want =
-            winograd_adder_conv2d_fast(&xt, &w_hat, 1, cfg.variant);
+        // recompute with the same seeded weights (seed 7, like
+        // tiny_model)
+        let mut wrng = Rng::new(7);
+        let w_hat = Tensor::randn(&mut wrng, [3, 2, 4, 4]);
+        let xt = Tensor::from_vec(x, [1, 2, 8, 8]);
+        let want = winograd_adder_conv2d_fast(&xt, &w_hat, 1,
+                                              Variant::Balanced(0));
         all_close(&got, &want.data, 1e-5, 1e-5).unwrap();
     }
 
     #[test]
     fn odd_hw_is_a_config_error_not_a_panic() {
-        let mut cfg = tiny_cfg(BackendKind::Scalar);
-        cfg.hw = 27;
-        let err = Server::start_native(
-            cfg, BatchPolicy { buckets: vec![1], max_wait_us: 0 })
+        let spec = ModelSpec::single_layer(2, 3, 27, Variant::Std);
+        let weights = ModelWeights::init(&spec, 7);
+        let err = Server::start_hosted(
+            vec![HostedModel { name: "odd".into(), spec, weights }],
+            BackendKind::Scalar, 1, KernelKind::default(),
+            BatchPolicy { buckets: vec![1], max_wait_us: 0 })
             .unwrap_err();
         assert!(format!("{err}").contains("hw"), "{err}");
     }
 
     #[test]
-    fn wrong_sample_len_is_rejected() {
-        let (handle, join) = Server::start_native(
-            tiny_cfg(BackendKind::Scalar),
-            BatchPolicy { buckets: vec![1], max_wait_us: 0 }).unwrap();
+    fn wrong_sample_len_is_rejected_before_enqueue() {
+        let (handle, join) = start_tiny(
+            BackendKind::Scalar,
+            BatchPolicy { buckets: vec![1], max_wait_us: 0 });
+        // regression: a short buffer must be refused at the handle —
+        // never submitted — so it cannot poison a batch lane
         assert!(handle.infer(vec![0.0; 3]).is_err());
-        handle.stop().unwrap();
+        assert!(handle.infer_for(0, vec![0.0; 3]).is_err());
+        assert!(handle.infer_for(9, vec![0.0; 2 * 8 * 8]).is_err(),
+                "out-of-range model index must be rejected");
+        // well-formed traffic still flows afterwards
+        let mut rng = Rng::new(5);
+        let y = handle.infer(rng.normal_vec(2 * 8 * 8)).unwrap();
+        assert_eq!(y.len(), 3 * 8 * 8);
+        let stats = handle.stop().unwrap();
         join.join().unwrap();
+        assert_eq!(stats.served, 1,
+                   "rejected requests must never be enqueued");
     }
 
     #[test]
     fn int8_backend_serves() {
-        let (handle, join) = Server::start_native(
-            tiny_cfg(BackendKind::ParallelInt8),
-            BatchPolicy { buckets: vec![1, 2], max_wait_us: 200 })
-            .unwrap();
+        let (handle, join) = start_tiny(
+            BackendKind::ParallelInt8,
+            BatchPolicy { buckets: vec![1, 2], max_wait_us: 200 });
         let mut rng = Rng::new(3);
         for _ in 0..4 {
             let y = handle.infer(rng.normal_vec(2 * 8 * 8)).unwrap();
             assert_eq!(y.len(), 3 * 8 * 8);
         }
+        handle.stop().unwrap();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn two_models_share_one_engine_thread() {
+        let spec_a =
+            ModelSpec::single_layer(2, 3, 8, Variant::Balanced(0));
+        let spec_b = ModelSpec::stack(2, 2, 4, 8, Variant::Balanced(1));
+        let hosted = vec![
+            HostedModel { name: "a".into(), spec: spec_a.clone(),
+                          weights: ModelWeights::init(&spec_a, 7) },
+            HostedModel { name: "b".into(), spec: spec_b.clone(),
+                          weights: ModelWeights::init(&spec_b, 7) },
+        ];
+        let policy = BatchPolicy { buckets: vec![1, 4],
+                                   max_wait_us: 300 };
+        let (handle, join) = Server::start_hosted(
+            hosted, BackendKind::Scalar, 1, KernelKind::default(),
+            policy).unwrap();
+        assert_eq!(handle.resolve("a").unwrap().0, 0);
+        assert_eq!(handle.resolve("b").unwrap().0, 1);
+        assert!(handle.resolve("c").is_none());
+        let mut rng = Rng::new(11);
+        for _ in 0..3 {
+            let ya =
+                handle.infer_for(0, rng.normal_vec(2 * 8 * 8)).unwrap();
+            assert_eq!(ya.len(), 3 * 8 * 8);
+            let yb =
+                handle.infer_for(1, rng.normal_vec(2 * 8 * 8)).unwrap();
+            assert_eq!(yb.len(), 4 * 8 * 8);
+        }
+        let stats = handle.stop().unwrap();
+        join.join().unwrap();
+        assert_eq!(stats.served, 6);
+        assert_eq!(stats.per_model_requests,
+                   vec![("a".to_string(), 3), ("b".to_string(), 3)]);
+    }
+
+    /// The deprecated `NativeConfig` shim must keep serving until it
+    /// is removed (it now routes through `start_hosted`).
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_native_config_shim_still_serves() {
+        let cfg = NativeConfig {
+            backend: BackendKind::Scalar,
+            threads: 1,
+            cin: 2,
+            cout: 3,
+            hw: 8,
+            ..NativeConfig::default()
+        };
+        let sample = cfg.sample_len();
+        let (handle, join) = Server::start_native(
+            cfg, BatchPolicy { buckets: vec![1], max_wait_us: 0 })
+            .unwrap();
+        let mut rng = Rng::new(9);
+        let y = handle.infer(rng.normal_vec(sample)).unwrap();
+        assert_eq!(y.len(), 3 * 8 * 8);
         handle.stop().unwrap();
         join.join().unwrap();
     }

@@ -1,0 +1,302 @@
+//! [`EngineBuilder`] — the validated construction path of the engine.
+//!
+//! Everything the scattered pre-engine surface configured positionally
+//! (`NativeConfig` literals, `BackendKind::from_args` tuples) is a
+//! named builder method here, and **all** validation happens at
+//! [`EngineBuilder::build`] with a typed [`EngineError`] — the engine
+//! thread never sees a spec it could panic on, and the hot path never
+//! parses strings.
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::server::{HostedModel, Server};
+use crate::nn::backend::{default_threads, BackendKind, KernelKind};
+use crate::nn::matrices::Variant;
+use crate::nn::model::{ModelSpec, ModelWeights};
+use crate::util::cli::Args;
+
+use super::error::EngineError;
+use super::Engine;
+
+/// Builder for [`Engine`]; see the module docs for a quickstart.
+#[derive(Debug, Clone)]
+pub struct EngineBuilder {
+    models: Vec<(String, ModelSpec, Option<ModelWeights>)>,
+    backend: BackendKind,
+    threads: usize,
+    kernel: KernelKind,
+    policy: BatchPolicy,
+    seed: u64,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> EngineBuilder {
+        EngineBuilder {
+            models: Vec::new(),
+            backend: BackendKind::Parallel,
+            threads: default_threads(),
+            kernel: KernelKind::default(),
+            policy: BatchPolicy::default(),
+            seed: 7,
+        }
+    }
+}
+
+impl EngineBuilder {
+    /// A builder with the serving defaults: `parallel` backend on all
+    /// cores, point-major kernels, buckets `{1, 4, 16}` at 2 ms max
+    /// wait, seed 7 — and no models yet.
+    pub fn new() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// Read `--backend`, `--threads`, and `--kernel` into a builder —
+    /// the typed replacement for the deprecated
+    /// `BackendKind::from_args` tuple.
+    pub fn from_args(args: &Args) -> Result<EngineBuilder, EngineError> {
+        let mut b = EngineBuilder::new();
+        if let Some(s) = args.get("backend") {
+            b.backend = BackendKind::parse(s).ok_or_else(|| {
+                EngineError::BadOption { option: "backend".into(),
+                                         value: s.into() }
+            })?;
+        }
+        if let Some(s) = args.get("kernel") {
+            b.kernel = KernelKind::parse(s).ok_or_else(|| {
+                EngineError::BadOption { option: "kernel".into(),
+                                         value: s.into() }
+            })?;
+        }
+        // numeric flags are typed too: a typo must not silently fall
+        // back to the default
+        if let Some(s) = args.get("threads") {
+            b.threads = s.parse().map_err(|_| {
+                EngineError::BadOption { option: "threads".into(),
+                                         value: s.into() }
+            })?;
+        }
+        if let Some(s) = args.get("seed") {
+            b.seed = s.parse().map_err(|_| {
+                EngineError::BadOption { option: "seed".into(),
+                                         value: s.into() }
+            })?;
+        }
+        Ok(b)
+    }
+
+    /// Register a named model with seeded synthetic weights
+    /// (deterministic in the builder's seed). Names must be unique.
+    pub fn model(mut self, name: impl Into<String>, spec: ModelSpec)
+                 -> EngineBuilder {
+        self.models.push((name.into(), spec, None));
+        self
+    }
+
+    /// Register a named model with explicit weights (e.g. loaded via
+    /// [`crate::nn::model::load`]).
+    pub fn model_with_weights(mut self, name: impl Into<String>,
+                              spec: ModelSpec, weights: ModelWeights)
+                              -> EngineBuilder {
+        self.models.push((name.into(), spec, Some(weights)));
+        self
+    }
+
+    /// Select the compute backend (default: `parallel`).
+    pub fn backend(mut self, kind: BackendKind) -> EngineBuilder {
+        self.backend = kind;
+        self
+    }
+
+    /// Select the kernel family (default: point-major).
+    pub fn kernel(mut self, kernel: KernelKind) -> EngineBuilder {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Worker thread count (default: all cores). Zero is a build
+    /// error, not a silent clamp.
+    pub fn threads(mut self, n: usize) -> EngineBuilder {
+        self.threads = n;
+        self
+    }
+
+    /// Batching policy: bucket sizes and the max partial-batch wait.
+    pub fn batch(mut self, policy: BatchPolicy) -> EngineBuilder {
+        self.policy = policy;
+        self
+    }
+
+    /// Seed for synthetic weight initialization (default 7).
+    pub fn seed(mut self, seed: u64) -> EngineBuilder {
+        self.seed = seed;
+        self
+    }
+
+    /// The currently-selected backend (for callers that only need the
+    /// parsed selection, e.g. the offline `tsne` feature extractor).
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend
+    }
+
+    /// The currently-selected thread count.
+    pub fn thread_count(&self) -> usize {
+        self.threads
+    }
+
+    /// The currently-selected kernel family.
+    pub fn kernel_kind(&self) -> KernelKind {
+        self.kernel
+    }
+
+    /// Validate everything and start the engine thread.
+    ///
+    /// Checks, in order: at least one model, unique names, every spec
+    /// valid (and matching its explicit weights, when given), threads
+    /// >= 1, and a usable batch policy. All failures are typed
+    /// [`EngineError`]s — nothing panics later in the engine thread.
+    pub fn build(self) -> Result<Engine, EngineError> {
+        if self.models.is_empty() {
+            return Err(EngineError::NoModels);
+        }
+        for (i, (name, ..)) in self.models.iter().enumerate() {
+            if self.models[..i].iter().any(|(n, ..)| n == name) {
+                return Err(EngineError::DuplicateModel(name.clone()));
+            }
+        }
+        if self.threads == 0 {
+            return Err(EngineError::ZeroThreads);
+        }
+        validate_policy(&self.policy)?;
+        let mut hosted = Vec::with_capacity(self.models.len());
+        for (name, spec, weights) in self.models {
+            spec.validate().map_err(|e| EngineError::InvalidSpec {
+                model: name.clone(),
+                reason: format!("{e}"),
+            })?;
+            let weights = match weights {
+                Some(w) => {
+                    w.check(&spec).map_err(|e| {
+                        EngineError::InvalidSpec {
+                            model: name.clone(),
+                            reason: format!("{e}"),
+                        }
+                    })?;
+                    w
+                }
+                None => ModelWeights::init(&spec, self.seed),
+            };
+            hosted.push(HostedModel { name, spec, weights });
+        }
+        let (handle, join) =
+            Server::start_hosted(hosted, self.backend, self.threads,
+                                 self.kernel, self.policy)
+                .map_err(|e| EngineError::Internal(format!("{e}")))?;
+        Ok(Engine::from_parts(handle, join))
+    }
+}
+
+fn validate_policy(policy: &BatchPolicy)
+                   -> Result<(), EngineError> {
+    if policy.buckets.is_empty() {
+        return Err(EngineError::BadBatchPolicy(
+            "no buckets".into()));
+    }
+    if !policy.buckets.contains(&1) {
+        return Err(EngineError::BadBatchPolicy(
+            "bucket 1 required so any queue can drain".into()));
+    }
+    if !policy.buckets.windows(2).all(|w| w[0] < w[1]) {
+        return Err(EngineError::BadBatchPolicy(
+            format!("buckets must be strictly ascending: {:?}",
+                    policy.buckets)));
+    }
+    Ok(())
+}
+
+/// Resolve one `--models` token (the part after `name=`) into a
+/// [`ModelSpec`] over the shared `--cin`/`--cout`/`--hw`/`--variant`
+/// dimensions. Accepted: `single`, `stack` (depth 2), `stackN`,
+/// `lenet`, `resnet20`.
+pub fn parse_model_spec(name: &str, token: &str, cin: usize,
+                        cout: usize, hw: usize, variant: Variant)
+                        -> Result<ModelSpec, EngineError> {
+    let bad = || EngineError::BadOption {
+        option: "models".into(),
+        value: format!("{name}={token}"),
+    };
+    match token {
+        "single" => Ok(ModelSpec::single_layer(cin, cout, hw, variant)),
+        "lenet" => Ok(ModelSpec::lenetish(cin, hw, variant)),
+        "resnet20" => Ok(ModelSpec::resnet20ish(hw, variant)),
+        other => match other.strip_prefix("stack") {
+            Some("") => Ok(ModelSpec::stack(2, cin, cout, hw, variant)),
+            Some(depth) => {
+                let depth: usize =
+                    depth.parse().map_err(|_| bad())?;
+                if depth == 0 {
+                    return Err(bad());
+                }
+                Ok(ModelSpec::stack(depth, cin, cout, hw, variant))
+            }
+            None => Err(bad()),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_args_defaults_and_flags() {
+        let args = Args::parse(Vec::<String>::new());
+        let b = EngineBuilder::from_args(&args).unwrap();
+        assert_eq!(b.backend, BackendKind::Parallel);
+        assert_eq!(b.kernel, KernelKind::PointMajor);
+        assert!(b.threads >= 1);
+
+        let args = Args::parse(
+            ["serve", "--backend", "scalar", "--threads", "3",
+             "--kernel", "legacy", "--seed", "9"].map(String::from));
+        let b = EngineBuilder::from_args(&args).unwrap();
+        assert_eq!((b.backend, b.threads, b.kernel, b.seed),
+                   (BackendKind::Scalar, 3, KernelKind::Legacy, 9));
+    }
+
+    #[test]
+    fn from_args_rejects_unknown_values() {
+        let args = Args::parse(
+            ["serve", "--backend", "gpu"].map(String::from));
+        assert_eq!(EngineBuilder::from_args(&args).unwrap_err(),
+                   EngineError::BadOption { option: "backend".into(),
+                                            value: "gpu".into() });
+        let args = Args::parse(
+            ["serve", "--kernel", "blocked"].map(String::from));
+        assert!(matches!(EngineBuilder::from_args(&args),
+                         Err(EngineError::BadOption { .. })));
+        // numeric typos must error, not silently fall back
+        let args = Args::parse(
+            ["serve", "--threads", "abc"].map(String::from));
+        assert!(matches!(EngineBuilder::from_args(&args),
+                         Err(EngineError::BadOption { .. })));
+        let args = Args::parse(
+            ["serve", "--seed", "1x"].map(String::from));
+        assert!(matches!(EngineBuilder::from_args(&args),
+                         Err(EngineError::BadOption { .. })));
+    }
+
+    #[test]
+    fn model_token_grammar() {
+        let v = Variant::Balanced(0);
+        let spec =
+            parse_model_spec("a", "single", 2, 3, 8, v).unwrap();
+        assert_eq!(spec.layers.len(), 1);
+        let spec = parse_model_spec("a", "stack3", 2, 3, 8, v).unwrap();
+        assert_eq!(spec.wino_layers(), 3);
+        let spec = parse_model_spec("a", "stack", 2, 3, 8, v).unwrap();
+        assert_eq!(spec.wino_layers(), 2);
+        let spec = parse_model_spec("a", "lenet", 2, 3, 8, v).unwrap();
+        assert_eq!(spec.wino_layers(), 3);
+        assert!(parse_model_spec("a", "stack0", 2, 3, 8, v).is_err());
+        assert!(parse_model_spec("a", "vgg", 2, 3, 8, v).is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! The typed error surface of the Engine API.
+//!
+//! [`EngineError`] replaces the stringly mini-anyhow errors of the
+//! pre-engine config surface on every path a caller can hit
+//! programmatically: builder validation and per-request admission.
+//! It implements [`std::error::Error`], so `?` still converts into
+//! the crate-wide [`crate::util::error::Error`] at CLI boundaries.
+
+use std::fmt;
+
+/// Everything the engine can reject, as data instead of strings.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineError {
+    /// `build()` was called with no registered models.
+    NoModels,
+    /// Two models were registered under the same name.
+    DuplicateModel(String),
+    /// A request named a model the registry does not host.
+    UnknownModel(String),
+    /// A registered `ModelSpec` failed validation.
+    InvalidSpec {
+        /// the offending model's registry name
+        model: String,
+        /// the spec validator's message
+        reason: String,
+    },
+    /// `threads(0)` was requested explicitly.
+    ZeroThreads,
+    /// A CLI option value was not recognised (builder `from_args` and
+    /// the `--models` grammar).
+    BadOption {
+        /// the flag, e.g. `backend`
+        option: String,
+        /// the rejected value
+        value: String,
+    },
+    /// The batch policy is unusable (no buckets, missing bucket 1, or
+    /// non-ascending buckets).
+    BadBatchPolicy(String),
+    /// A request's claimed shape differs from the model's input shape.
+    ShapeMismatch {
+        /// target model
+        model: String,
+        /// the model's input shape
+        want: [usize; 3],
+        /// the request's claimed shape
+        got: [usize; 3],
+    },
+    /// A request's payload length differs from the model's flat
+    /// sample length (caught before the batcher ever sees it).
+    LengthMismatch {
+        /// target model
+        model: String,
+        /// expected element count
+        want: usize,
+        /// the payload's element count
+        got: usize,
+    },
+    /// The engine thread has stopped; no further requests are served.
+    Stopped,
+    /// An engine-side failure that is not a caller error (propagated
+    /// with its message).
+    Internal(String),
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::NoModels => {
+                write!(f, "engine needs at least one model \
+                           (EngineBuilder::model)")
+            }
+            EngineError::DuplicateModel(name) => {
+                write!(f, "model {name:?} registered twice")
+            }
+            EngineError::UnknownModel(name) => {
+                write!(f, "unknown model {name:?}")
+            }
+            EngineError::InvalidSpec { model, reason } => {
+                write!(f, "invalid spec for model {model:?}: {reason}")
+            }
+            EngineError::ZeroThreads => {
+                write!(f, "threads must be >= 1")
+            }
+            EngineError::BadOption { option, value } => {
+                // keep the CLI discoverable: name the accepted values
+                let hint = match option.as_str() {
+                    "backend" => " (scalar|parallel|parallel-int8)",
+                    "kernel" => " (legacy|pointmajor)",
+                    "models" => {
+                        " (name=single|stackN|lenet|resnet20)"
+                    }
+                    "threads" | "seed" => " (expects a number)",
+                    _ => "",
+                };
+                write!(f,
+                       "unrecognised --{option} value {value:?}{hint}")
+            }
+            EngineError::BadBatchPolicy(reason) => {
+                write!(f, "bad batch policy: {reason}")
+            }
+            EngineError::ShapeMismatch { model, want, got } => {
+                write!(f, "model {model:?} expects input shape \
+                           {want:?}, request claims {got:?}")
+            }
+            EngineError::LengthMismatch { model, want, got } => {
+                write!(f, "model {model:?} expects {want} values, \
+                           got {got}")
+            }
+            EngineError::Stopped => write!(f, "engine stopped"),
+            EngineError::Internal(msg) => {
+                write!(f, "engine internal error: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_are_specific() {
+        let cases: Vec<(EngineError, &str)> = vec![
+            (EngineError::NoModels, "at least one model"),
+            (EngineError::DuplicateModel("a".into()), "twice"),
+            (EngineError::UnknownModel("b".into()), "unknown model"),
+            (EngineError::InvalidSpec { model: "c".into(),
+                                        reason: "odd hw".into() },
+             "odd hw"),
+            (EngineError::ZeroThreads, ">= 1"),
+            (EngineError::BadOption { option: "backend".into(),
+                                      value: "gpu".into() },
+             "--backend"),
+            (EngineError::BadBatchPolicy("no bucket 1".into()),
+             "no bucket 1"),
+            (EngineError::ShapeMismatch { model: "d".into(),
+                                          want: [1, 2, 2],
+                                          got: [2, 2, 2] },
+             "claims"),
+            (EngineError::LengthMismatch { model: "e".into(),
+                                           want: 4, got: 3 },
+             "4 values"),
+            (EngineError::Stopped, "stopped"),
+            (EngineError::Internal("boom".into()), "boom"),
+        ];
+        for (e, needle) in cases {
+            let s = format!("{e}");
+            assert!(s.contains(needle), "{s:?} missing {needle:?}");
+        }
+    }
+
+    #[test]
+    fn converts_into_crate_error() {
+        // the blanket `From<E: std::error::Error>` makes `?` work at
+        // CLI boundaries
+        let e: crate::util::error::Error = EngineError::Stopped.into();
+        assert!(format!("{e}").contains("stopped"));
+    }
+}

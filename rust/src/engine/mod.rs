@@ -1,0 +1,194 @@
+//! # Engine API v1 — the typed, multi-model inference facade.
+//!
+//! This module is **the one way in**: in-process callers and the TCP
+//! front-end both construct the system through [`EngineBuilder`] and
+//! talk to it with typed [`InferRequest`]/[`InferResponse`] values.
+//! It replaces the scattered pre-engine surface — hand-filled
+//! `NativeConfig` literals, `BackendKind::from_args` tuple returns,
+//! and shape-blind `Vec<f32>` buffers — which survives only as
+//! deprecated shims (see the README migration table).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use wino_adder::engine::{Engine, InferRequest};
+//! use wino_adder::nn::matrices::Variant;
+//! use wino_adder::nn::model::ModelSpec;
+//!
+//! let engine = Engine::builder()
+//!     .model("mnist", ModelSpec::lenetish(1, 16, Variant::Balanced(0)))
+//!     .model("tiny", ModelSpec::single_layer(2, 3, 8, Variant::Std))
+//!     .threads(4)
+//!     .build()
+//!     .expect("valid config");
+//! let shape = engine.model("tiny").unwrap().in_shape;
+//! let y = engine
+//!     .infer(InferRequest::f32("tiny", shape, vec![0.0; 2 * 8 * 8]))
+//!     .expect("serve");
+//! assert_eq!(y.data.len(), 3 * 8 * 8);
+//! ```
+//!
+//! ## Architecture
+//!
+//! An [`Engine`] hosts a **registry of named models** on one shared
+//! engine thread: each model gets its own batching queue and its own
+//! plan cache (one compiled `ModelPlan` per batch bucket), and the
+//! router keys its lanes by `(model, bucket)`. Requests are validated
+//! against the registry — model name, shape, dtype, payload length —
+//! **before** they are enqueued, with typed [`EngineError`]s, so a
+//! malformed request can never poison a batch lane.
+//!
+//! Over the network the same registry speaks protocol v2
+//! (`Hello`/`HelloAck` session negotiation with model name, shape and
+//! dtype, plus int8 payload frames) while v1 f32 clients keep working
+//! bit-identically against the default model — see
+//! [`crate::coordinator::net`].
+
+#![deny(missing_docs)]
+
+mod builder;
+mod error;
+mod types;
+
+pub use builder::{parse_model_spec, EngineBuilder};
+pub use error::EngineError;
+pub use types::{Dtype, InferRequest, InferResponse, ModelInfo,
+                Payload};
+
+use std::thread;
+
+use crate::coordinator::net::NetServer;
+use crate::coordinator::server::{PendingInfer, ServerHandle,
+                                 ServerStats};
+
+/// A running inference engine hosting a registry of named models.
+///
+/// Construct with [`Engine::builder`]; submit typed requests with
+/// [`Engine::infer`] / [`Engine::infer_async`]; expose over TCP with
+/// [`Engine::listen`]; shut down with [`Engine::stop`]. Dropping an
+/// `Engine` without `stop()` ends the engine thread without a stats
+/// report.
+pub struct Engine {
+    handle: ServerHandle,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Start configuring an engine.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    pub(crate) fn from_parts(handle: ServerHandle,
+                             join: thread::JoinHandle<()>) -> Engine {
+        Engine { handle, join: Some(join) }
+    }
+
+    /// The hosted models, in registration order (index 0 is the
+    /// default model v1 network clients are routed to).
+    pub fn models(&self) -> &[ModelInfo] {
+        self.handle.models()
+    }
+
+    /// Look up one model's geometry by name.
+    pub fn model(&self, name: &str) -> Option<&ModelInfo> {
+        self.handle.resolve(name).map(|(_, info)| info)
+    }
+
+    /// The underlying serving handle (cheap to clone; what
+    /// [`NetServer`] and the benches drive).
+    pub fn handle(&self) -> &ServerHandle {
+        &self.handle
+    }
+
+    /// Validate and submit a request without blocking for the reply.
+    ///
+    /// Validation order: model name, claimed shape, payload length —
+    /// all against the registry, all **before** the batcher sees the
+    /// request. Int8 payloads are dequantized (`q * scale`) at
+    /// admission.
+    pub fn infer_async(&self, req: InferRequest)
+                       -> Result<PendingResponse, EngineError> {
+        let (idx, info) = self
+            .handle
+            .resolve(&req.model)
+            .ok_or_else(|| {
+                EngineError::UnknownModel(req.model.clone())
+            })?;
+        if req.shape != info.in_shape {
+            return Err(EngineError::ShapeMismatch {
+                model: req.model,
+                want: info.in_shape,
+                got: req.shape,
+            });
+        }
+        if req.data.len() != info.sample_len() {
+            return Err(EngineError::LengthMismatch {
+                model: req.model,
+                want: info.sample_len(),
+                got: req.data.len(),
+            });
+        }
+        let out_shape = info.out_shape;
+        let x = req.data.into_f32();
+        let pending = self
+            .handle
+            .infer_async_for(idx, x)
+            .map_err(|e| EngineError::Internal(format!("{e}")))?;
+        Ok(PendingResponse { inner: pending, model: req.model,
+                             shape: out_shape })
+    }
+
+    /// Blocking typed inference ([`infer_async`](Engine::infer_async)
+    /// + wait).
+    pub fn infer(&self, req: InferRequest)
+                 -> Result<InferResponse, EngineError> {
+        self.infer_async(req)?.wait()
+    }
+
+    /// Expose this engine over TCP (see
+    /// [`crate::coordinator::net::NetServer::start`]). `addr` with
+    /// port 0 binds an ephemeral port; `max_in_flight` is the
+    /// load-shedding admission cap.
+    pub fn listen(&self, addr: &str, max_in_flight: usize)
+                  -> Result<NetServer, EngineError> {
+        NetServer::start(self.handle.clone(), addr, max_in_flight)
+            .map_err(|e| EngineError::Internal(format!("{e}")))
+    }
+
+    /// Stop the engine thread and collect its statistics.
+    pub fn stop(mut self) -> Result<ServerStats, EngineError> {
+        let stats = self
+            .handle
+            .clone()
+            .stop()
+            .map_err(|_| EngineError::Stopped)?;
+        if let Some(join) = self.join.take() {
+            join.join().map_err(|_| {
+                EngineError::Internal("engine thread panicked".into())
+            })?;
+        }
+        Ok(stats)
+    }
+}
+
+/// An admitted, not-yet-answered typed inference (the engine-level
+/// twin of [`PendingInfer`]). [`PendingResponse::wait`] blocks for the
+/// engine's reply and wraps it in an [`InferResponse`].
+pub struct PendingResponse {
+    inner: PendingInfer,
+    model: String,
+    shape: [usize; 3],
+}
+
+impl PendingResponse {
+    /// Block until the engine replies.
+    pub fn wait(self) -> Result<InferResponse, EngineError> {
+        let data = self
+            .inner
+            .wait()
+            .map_err(|e| EngineError::Internal(format!("{e}")))?;
+        Ok(InferResponse { model: self.model, shape: self.shape,
+                           data })
+    }
+}

@@ -1,0 +1,226 @@
+//! The typed vocabulary of the Engine API: dtypes, model geometry,
+//! and the request/response pair that replaces bare `Vec<f32>`s on
+//! every serving path (in-process and over the wire).
+
+/// Element type of an inference payload.
+///
+/// * [`Dtype::F32`] — IEEE-754 single precision, the v1 wire format
+///   and the backends' native activation type.
+/// * [`Dtype::Int8`] — symmetric per-tensor quantized bytes plus an
+///   f32 scale (`x ≈ q * scale`), the paper's 8-bit deployment regime;
+///   4x smaller request payloads over the wire. Responses are always
+///   dequantized f32 (the backends' uniform output convention).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    /// 4-byte IEEE-754 floats.
+    F32,
+    /// 1-byte symmetric-quantized integers with an f32 scale.
+    Int8,
+}
+
+impl Dtype {
+    /// Both dtypes, for sweeps.
+    pub const ALL: [Dtype; 2] = [Dtype::F32, Dtype::Int8];
+
+    /// Stable wire code (protocol v2 `Hello` frames).
+    pub fn code(self) -> u8 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::Int8 => 1,
+        }
+    }
+
+    /// Inverse of [`Dtype::code`].
+    pub fn from_code(code: u8) -> Option<Dtype> {
+        match code {
+            0 => Some(Dtype::F32),
+            1 => Some(Dtype::Int8),
+            _ => None,
+        }
+    }
+
+    /// Parse a CLI name (`f32` | `int8`).
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" => Some(Dtype::F32),
+            "int8" => Some(Dtype::Int8),
+            _ => None,
+        }
+    }
+
+    /// CLI/report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::Int8 => "int8",
+        }
+    }
+}
+
+/// A served model's public geometry: its registry name plus per-sample
+/// input and output shapes as `(channels, height, width)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelInfo {
+    /// Registry name (`InferRequest::model` routes on this).
+    pub name: String,
+    /// Per-sample input shape `(c, h, w)`.
+    pub in_shape: [usize; 3],
+    /// Per-sample output shape `(c, h, w)`.
+    pub out_shape: [usize; 3],
+}
+
+impl ModelInfo {
+    /// Flat per-sample input length (`c * h * w`).
+    pub fn sample_len(&self) -> usize {
+        self.in_shape.iter().product()
+    }
+
+    /// Flat per-sample output length.
+    pub fn out_len(&self) -> usize {
+        self.out_shape.iter().product()
+    }
+}
+
+/// A typed inference payload: the data plus its dtype, replacing the
+/// shape- and type-blind `Vec<f32>` of the pre-engine API.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// f32 activations, NCHW-flat.
+    F32(Vec<f32>),
+    /// Symmetric-quantized activations (`x ≈ q * scale`), NCHW-flat.
+    Int8 {
+        /// quantized values
+        data: Vec<i8>,
+        /// dequantization scale
+        scale: f32,
+    },
+}
+
+impl Payload {
+    /// The payload's dtype.
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Payload::F32(_) => Dtype::F32,
+            Payload::Int8 { .. } => Dtype::Int8,
+        }
+    }
+
+    /// Number of elements (not bytes).
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len(),
+            Payload::Int8 { data, .. } => data.len(),
+        }
+    }
+
+    /// True when the payload holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resolve to f32 activations (dequantizing int8 as `q * scale` —
+    /// the engine's single admission-time conversion; the int8
+    /// *datapath* inside `parallel-int8` re-quantizes on its own
+    /// per-request scale as before).
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            Payload::F32(v) => v,
+            Payload::Int8 { data, scale } => {
+                data.into_iter().map(|q| q as f32 * scale).collect()
+            }
+        }
+    }
+}
+
+/// A typed inference request: which model, what shape the caller
+/// believes it is sending, and the payload. The engine validates all
+/// three against the registry **before** enqueueing, so a malformed
+/// request can never reach a batch lane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferRequest {
+    /// Target model (a name registered on the `EngineBuilder`).
+    pub model: String,
+    /// Per-sample input shape `(c, h, w)` the payload claims.
+    pub shape: [usize; 3],
+    /// The activations.
+    pub data: Payload,
+}
+
+impl InferRequest {
+    /// An f32 request.
+    pub fn f32(model: impl Into<String>, shape: [usize; 3],
+               data: Vec<f32>) -> InferRequest {
+        InferRequest { model: model.into(), shape,
+                       data: Payload::F32(data) }
+    }
+
+    /// An int8 request (`x ≈ q * scale`).
+    pub fn int8(model: impl Into<String>, shape: [usize; 3],
+                data: Vec<i8>, scale: f32) -> InferRequest {
+        InferRequest { model: model.into(), shape,
+                       data: Payload::Int8 { data, scale } }
+    }
+
+    /// The payload's dtype.
+    pub fn dtype(&self) -> Dtype {
+        self.data.dtype()
+    }
+}
+
+/// A typed inference response: the model that produced it, the
+/// per-sample output shape, and dequantized f32 activations (uniform
+/// across backends and request dtypes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferResponse {
+    /// The model that served the request.
+    pub model: String,
+    /// Per-sample output shape `(c, h, w)`.
+    pub shape: [usize; 3],
+    /// NCHW-flat f32 output activations.
+    pub data: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_codes_roundtrip() {
+        for d in Dtype::ALL {
+            assert_eq!(Dtype::from_code(d.code()), Some(d));
+            assert_eq!(Dtype::parse(d.name()), Some(d));
+        }
+        assert_eq!(Dtype::from_code(7), None);
+        assert_eq!(Dtype::parse("f16"), None);
+    }
+
+    #[test]
+    fn payload_len_and_dtype() {
+        let f = Payload::F32(vec![1.0, 2.0]);
+        assert_eq!((f.dtype(), f.len(), f.is_empty()),
+                   (Dtype::F32, 2, false));
+        let q = Payload::Int8 { data: vec![1, -2, 3], scale: 0.5 };
+        assert_eq!((q.dtype(), q.len()), (Dtype::Int8, 3));
+        assert_eq!(q.into_f32(), vec![0.5, -1.0, 1.5]);
+    }
+
+    #[test]
+    fn model_info_lengths() {
+        let m = ModelInfo {
+            name: "m".into(),
+            in_shape: [2, 8, 8],
+            out_shape: [3, 8, 8],
+        };
+        assert_eq!(m.sample_len(), 128);
+        assert_eq!(m.out_len(), 192);
+    }
+
+    #[test]
+    fn request_constructors() {
+        let r = InferRequest::f32("a", [1, 2, 2], vec![0.0; 4]);
+        assert_eq!(r.dtype(), Dtype::F32);
+        let r = InferRequest::int8("a", [1, 2, 2], vec![0; 4], 0.1);
+        assert_eq!(r.dtype(), Dtype::Int8);
+        assert_eq!(r.data.len(), 4);
+    }
+}

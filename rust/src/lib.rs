@@ -7,6 +7,10 @@
 //!   `python/compile/aot.py`.
 //! * **Layer 3 (this crate)** — the runtime and every substrate the
 //!   paper's evaluation depends on:
+//!   - [`engine`]: **Engine API v1** — the typed, multi-model
+//!     inference facade ([`engine::EngineBuilder`] /
+//!     [`engine::InferRequest`]); the one construction path for
+//!     in-process and network serving,
 //!   - [`runtime`] (feature `pjrt`): PJRT client wrapper that loads +
 //!     executes artifacts,
 //!   - [`coordinator`]: inference router/batcher, the serving loop, the
@@ -45,6 +49,7 @@
 
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod energy;
 pub mod fpga;
 pub mod nn;

@@ -23,11 +23,13 @@ use std::time::Duration;
 
 use wino_adder::coordinator::batcher::BatchPolicy;
 use wino_adder::coordinator::metrics::LatencyStats;
-use wino_adder::coordinator::net::{proto, NetClient, NetReply, NetServer};
-use wino_adder::coordinator::server::{NativeConfig, Server, ServerHandle};
+use wino_adder::coordinator::net::{proto, NetClient, NetClientV2,
+                                   NetReply};
+use wino_adder::coordinator::server::ServerHandle;
 use wino_adder::data::Preset;
 use wino_adder::energy::{figure1, paper_figure1, EnergyTable};
-use wino_adder::nn::backend::BackendKind;
+use wino_adder::engine::{parse_model_spec, Dtype, Engine,
+                         EngineBuilder};
 use wino_adder::nn::model::ModelSpec;
 use wino_adder::nn::{matrices, wino_adder as nn_wino, Tensor};
 use wino_adder::opcount::{self, count_model, fmt_m, Mode};
@@ -74,9 +76,12 @@ fn print_help() {
          \x20          [--cin N] [--cout N] [--hw N]\n\
          \x20          [--variant std|A0..A3]\n\
          \x20          [--model single|stack|lenet|resnet20] [--depth N]\n\
+         \x20          [--models name=spec,...  spec: single|stackN|\n\
+         \x20           lenet|resnet20  (multi-model registry)]\n\
          \x20          [--listen ADDR] [--max-in-flight N] [--duration-s N]\n\
          \x20 bench-serve [--smoke] [--clients N] [--requests N]\n\
          \x20          [--pipeline D] [--max-in-flight N] [--out PATH]\n\
+         \x20          [--proto v1|v2] [--dtype f32|int8]\n\
          \x20          [--backend ...] [--kernel ...] [--threads N]\n\
          \x20          [--model ...] [--cin N] [--cout N] [--hw N]\n\
          \x20          [--max-wait-us N]\n\
@@ -186,6 +191,33 @@ fn serve_model(args: &Args, variant: matrices::Variant, cin: usize,
     })
 }
 
+/// Finish a CLI-parsed builder into the serving engine: either the
+/// multi-model registry grammar (`--models name=spec,...`) or the
+/// single-model flags (`--model`/`--depth`, hosted as `"default"`).
+fn engine_from_args(args: &Args, builder: EngineBuilder,
+                    policy: BatchPolicy, cin: usize, cout: usize,
+                    hw: usize, variant: matrices::Variant)
+                    -> Result<Engine> {
+    let mut builder = builder.batch(policy);
+    if let Some(models) = args.get("models") {
+        for tok in models.split(',') {
+            let (name, spec_tok) = tok.split_once('=').ok_or_else(
+                || anyhow!("--models entries are name=spec \
+                            (e.g. a=lenet,b=stack3), got {tok:?}"))?;
+            let spec = parse_model_spec(name, spec_tok, cin, cout, hw,
+                                        variant)?;
+            builder = builder.model(name, spec);
+        }
+    } else {
+        let spec = serve_model(args, variant, cin, cout, hw)?
+            .unwrap_or_else(|| {
+                ModelSpec::single_layer(cin, cout, hw, variant)
+            });
+        builder = builder.model("default", spec);
+    }
+    Ok(builder.build()?)
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 256);
     let policy = BatchPolicy {
@@ -195,52 +227,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.get("backend") == Some("pjrt") {
         return serve_pjrt(args, n, policy);
     }
-    let (kind, threads, kernel) = BackendKind::from_args(args)
-        .ok_or_else(|| {
-            anyhow!("bad --backend (scalar|parallel|parallel-int8|\
-                     pjrt) or --kernel (legacy|pointmajor)")
-        })?;
     let variant = matrices::Variant::parse(args.get_or("variant", "A0"))
         .ok_or_else(|| anyhow!("bad --variant (std|A0..A3)"))?;
     let cin = args.get_usize("cin", 16);
     let cout = args.get_usize("cout", 16);
     let hw = args.get_usize("hw", 28);
-    let cfg = NativeConfig {
-        backend: kind,
-        threads,
-        kernel,
-        cin,
-        cout,
-        hw,
-        variant,
-        seed: args.get_u64("seed", 7),
-        model: serve_model(args, variant, cin, cout, hw)?,
-    };
-    let spec = cfg.spec();
-    let sample = cfg.sample_len();
-    println!("native serving: backend {} x{} threads ({} kernels), \
-              model {} ({} layers, {} wino, {} ch in, {}x{})",
-             kind.name(), threads, kernel.name(), spec.name,
-             spec.layers.len(), spec.wino_layers(), spec.in_channels,
-             spec.hw, spec.hw);
-    let (handle, join) = Server::start_native(cfg, policy)?;
+    let builder = EngineBuilder::from_args(args)?;
+    println!("native serving: backend {} x{} threads ({} kernels)",
+             builder.backend_kind().name(), builder.thread_count(),
+             builder.kernel_kind().name());
+    let engine = engine_from_args(args, builder, policy, cin, cout,
+                                  hw, variant)?;
+    for m in engine.models() {
+        println!("  model {:?}: in {:?} -> out {:?}",
+                 m.name, m.in_shape, m.out_shape);
+    }
     if let Some(listen) = args.get("listen") {
         let listen = listen.to_string();
-        return serve_listen(handle, join, &listen, args);
+        return serve_listen(engine, &listen, args);
     }
-    drive_clients(handle, join, n, sample)
+    let sample = engine.models()[0].sample_len();
+    let elapsed = send_load(engine.handle(), n, sample)?;
+    let stats = engine.stop()?;
+    print_serve_stats(&stats, elapsed);
+    Ok(())
 }
 
 /// `serve --listen ADDR`: expose the engine over TCP instead of
 /// driving it with in-process demo clients. Runs until killed, or for
 /// `--duration-s N` seconds (then drains and reports stats).
-fn serve_listen(handle: ServerHandle,
-                join: std::thread::JoinHandle<()>, listen: &str,
-                args: &Args) -> Result<()> {
+fn serve_listen(engine: Engine, listen: &str, args: &Args)
+                -> Result<()> {
     let max_in_flight = args.get_usize("max-in-flight", 256);
-    let net = NetServer::start(handle.clone(), listen, max_in_flight)?;
-    println!("listening on {} (wire protocol v{}, max {} in-flight; \
-              connect with coordinator::net::NetClient or \
+    let net = engine.listen(listen, max_in_flight)?;
+    println!("listening on {} (wire protocol v{} — v1 clients get the \
+              default model, v2 clients negotiate model/dtype; max \
+              {} in-flight; connect with coordinator::net clients or \
               `wino-adder bench-serve`)",
              net.local_addr(), proto::VERSION, max_in_flight);
     let secs = args.get_usize("duration-s", 0);
@@ -253,11 +275,11 @@ fn serve_listen(handle: ServerHandle,
     }
     std::thread::sleep(Duration::from_secs(secs as u64));
     let summary = net.stop();
-    let mut stats = handle.stop()?;
+    let mut stats = engine.stop()?;
     stats.net = Some(summary);
-    join.join().map_err(|_| anyhow!("engine thread panicked"))?;
     println!("served {} requests in {} batches; latency {}",
              stats.served, stats.batches, stats.latency_summary);
+    println!("per-model requests: {:?}", stats.per_model_requests);
     println!("net: {}", stats.net.as_ref().unwrap().summary());
     Ok(())
 }
@@ -276,19 +298,26 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         .max(1);
     let total = args.get_usize("requests", if smoke { 48 } else { 256 })
         .max(1);
-    let window = args.get_usize("pipeline", 1).max(1);
     let max_in_flight = args.get_usize("max-in-flight", 4 * clients);
-
-    let (kind, threads, kernel) = BackendKind::from_args(args)
-        .ok_or_else(|| {
-            anyhow!("bad --backend (scalar|parallel|parallel-int8) or \
-                     --kernel (legacy|pointmajor)")
-        })?;
-    let threads = if smoke && args.get("threads").is_none() {
-        2
-    } else {
-        threads
+    let dtype = Dtype::parse(args.get_or("dtype", "f32"))
+        .ok_or_else(|| anyhow!("bad --dtype (f32|int8)"))?;
+    let proto_v2 = match args.get_or("proto", "v1") {
+        "v1" => dtype == Dtype::Int8, // int8 implies the v2 protocol
+        "v2" => true,
+        other => return Err(anyhow!("bad --proto {other:?} (v1|v2)")),
     };
+    // the v2 session client is strictly one-request-at-a-time, so the
+    // recorded window must say 1 or the JSON misdescribes the run
+    let window = if proto_v2 {
+        if args.get_usize("pipeline", 1) > 1 {
+            println!("note: --pipeline is a v1-client feature; \
+                      proto v2 runs unpipelined");
+        }
+        1
+    } else {
+        args.get_usize("pipeline", 1).max(1)
+    };
+
     let variant = matrices::Variant::parse(args.get_or("variant", "A0"))
         .ok_or_else(|| anyhow!("bad --variant (std|A0..A3)"))?;
     let dim = |name, full| {
@@ -296,36 +325,40 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     };
     let (cin, cout) = (dim("cin", 16), dim("cout", 16));
     let hw = args.get_usize("hw", if smoke { 8 } else { 28 });
-    let cfg = NativeConfig {
-        backend: kind,
-        threads,
-        kernel,
-        cin,
-        cout,
-        hw,
-        variant,
-        seed: args.get_u64("seed", 7),
-        model: serve_model(args, variant, cin, cout, hw)?,
-    };
     let policy = BatchPolicy {
         buckets: vec![1, 4, 16],
         max_wait_us: args
             .get_usize("max-wait-us", if smoke { 500 } else { 2000 })
             as u64,
     };
-    let sample = cfg.sample_len();
-    let spec = cfg.spec();
-    let (handle, join) = Server::start_native(cfg, policy)?;
-    let net = NetServer::start(handle.clone(),
-                               args.get_or("listen", "127.0.0.1:0"),
-                               max_in_flight)?;
+    let mut builder = EngineBuilder::from_args(args)?;
+    if smoke && args.get("threads").is_none() {
+        builder = builder.threads(2);
+    }
+    let (kind, threads, kernel) =
+        (builder.backend_kind(), builder.thread_count(),
+         builder.kernel_kind());
+    let spec = serve_model(args, variant, cin, cout, hw)?
+        .unwrap_or_else(|| {
+            ModelSpec::single_layer(cin, cout, hw, variant)
+        });
+    let model_name = spec.name.clone();
+    let model_layers = spec.layers.len();
+    let engine =
+        builder.batch(policy).model("default", spec).build()?;
+    let info = engine.models()[0].clone();
+    let sample = info.sample_len();
+    let net = engine.listen(args.get_or("listen", "127.0.0.1:0"),
+                            max_in_flight)?;
     let addr = net.local_addr();
     println!("bench-serve: {total} closed-loop requests across \
-              {clients} clients (pipeline {window}) -> {addr}");
-    println!("  backend {} x{threads} threads ({} kernels), model {} \
-              ({} layers), max {max_in_flight} in-flight",
-             kind.name(), kernel.name(), spec.name,
-             spec.layers.len());
+              {clients} clients (pipeline {window}, proto {}, dtype \
+              {}) -> {addr}",
+             if proto_v2 { "v2" } else { "v1" }, dtype.name());
+    println!("  backend {} x{threads} threads ({} kernels), model \
+              {model_name} ({model_layers} layers), max \
+              {max_in_flight} in-flight",
+             kind.name(), kernel.name());
 
     let t0 = Instant::now();
     let mut workers = Vec::new();
@@ -338,52 +371,18 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             continue;
         }
         let addr = addr.to_string();
+        let in_shape = info.in_shape;
         let mut crng = Rng::new(0xbec0 + c as u64);
         let xs: Vec<Vec<f32>> = (0..per_client)
             .map(|_| crng.normal_vec(sample))
             .collect();
         workers.push(std::thread::spawn(
             move || -> Result<(LatencyStats, u64, u64)> {
-                let mut client = NetClient::connect(&addr)?;
-                let mut lat = LatencyStats::new();
-                let mut busy = 0u64;
-                for chunk in xs.chunks(window) {
-                    let t = Instant::now();
-                    let mut left: Vec<Vec<f32>> = chunk.to_vec();
-                    // closed loop with bounded retry: shed requests
-                    // back off briefly and go again
-                    let mut tries = 0;
-                    while !left.is_empty() {
-                        tries += 1;
-                        if tries > 10_000 {
-                            return Err(anyhow!("server persistently \
-                                                busy: retry budget \
-                                                exhausted"));
-                        }
-                        let replies = client.pipeline(&left)?;
-                        let mut retry = Vec::new();
-                        for (x, reply) in left.into_iter().zip(replies) {
-                            match reply {
-                                NetReply::Output(_) => {
-                                    lat.record(t.elapsed());
-                                }
-                                NetReply::Busy => {
-                                    busy += 1;
-                                    retry.push(x);
-                                }
-                                NetReply::Error(e) => {
-                                    return Err(anyhow!(e));
-                                }
-                            }
-                        }
-                        left = retry;
-                        if !left.is_empty() {
-                            std::thread::sleep(
-                                Duration::from_micros(200));
-                        }
-                    }
+                if proto_v2 {
+                    bench_client_v2(&addr, in_shape, dtype, &xs)
+                } else {
+                    bench_client_v1(&addr, window, &xs)
                 }
-                Ok((lat, busy, client.reconnects))
             },
         ));
     }
@@ -400,8 +399,7 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     }
     let elapsed = t0.elapsed().as_secs_f64();
     let net_summary = net.stop();
-    let mut stats = handle.stop()?;
-    join.join().map_err(|_| anyhow!("engine thread panicked"))?;
+    let mut stats = engine.stop()?;
     stats.net = Some(net_summary.clone());
 
     let served = lat.count();
@@ -435,10 +433,13 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let mut root = BTreeMap::new();
     root.insert("bench".into(), Json::Str("net_serving".into()));
     root.insert("smoke".into(), Json::Bool(smoke));
+    root.insert("proto".into(),
+                Json::Str(if proto_v2 { "v2" } else { "v1" }.into()));
+    root.insert("dtype".into(), Json::Str(dtype.name().into()));
     root.insert("backend".into(), Json::Str(kind.name().into()));
     root.insert("kernel".into(), Json::Str(kernel.name().into()));
     root.insert("threads".into(), Json::Num(threads as f64));
-    root.insert("model".into(), Json::Str(spec.name.clone()));
+    root.insert("model".into(), Json::Str(model_name.clone()));
     root.insert("shape".into(), Json::Obj(shape));
     root.insert("clients".into(), Json::Num(clients as f64));
     root.insert("pipeline".into(), Json::Num(window as f64));
@@ -473,11 +474,106 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One v1 closed-loop bench client: pipelined windows with bounded
+/// Busy-retry.
+fn bench_client_v1(addr: &str, window: usize, xs: &[Vec<f32>])
+                   -> Result<(LatencyStats, u64, u64)> {
+    use std::time::Instant;
+    let mut client = NetClient::connect(addr)?;
+    let mut lat = LatencyStats::new();
+    let mut busy = 0u64;
+    for chunk in xs.chunks(window) {
+        let t = Instant::now();
+        let mut left: Vec<Vec<f32>> = chunk.to_vec();
+        // closed loop with bounded retry: shed requests back off
+        // briefly and go again
+        let mut tries = 0;
+        while !left.is_empty() {
+            tries += 1;
+            if tries > 10_000 {
+                return Err(anyhow!("server persistently busy: retry \
+                                    budget exhausted"));
+            }
+            let replies = client.pipeline(&left)?;
+            let mut retry = Vec::new();
+            for (x, reply) in left.into_iter().zip(replies) {
+                match reply {
+                    NetReply::Output(_) => {
+                        lat.record(t.elapsed());
+                    }
+                    NetReply::Busy => {
+                        busy += 1;
+                        retry.push(x);
+                    }
+                    NetReply::Error(e) => {
+                        return Err(anyhow!(e));
+                    }
+                }
+            }
+            left = retry;
+            if !left.is_empty() {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+    }
+    Ok((lat, busy, client.reconnects))
+}
+
+/// One v2 closed-loop bench client: negotiated session against the
+/// default model; int8 sessions quantize client-side and ship 1-byte
+/// payloads.
+fn bench_client_v2(addr: &str, in_shape: [usize; 3], dtype: Dtype,
+                   xs: &[Vec<f32>]) -> Result<(LatencyStats, u64, u64)> {
+    use std::time::Instant;
+    use wino_adder::nn::quant::QParams;
+    let mut client =
+        NetClientV2::connect(addr, "default", in_shape, dtype)?;
+    let mut lat = LatencyStats::new();
+    let mut busy = 0u64;
+    for x in xs {
+        let t = Instant::now();
+        let mut tries = 0;
+        loop {
+            tries += 1;
+            if tries > 10_000 {
+                return Err(anyhow!("server persistently busy: retry \
+                                    budget exhausted"));
+            }
+            let reply = match dtype {
+                Dtype::F32 => client.call(x)?,
+                Dtype::Int8 => {
+                    let qp = QParams::fit(x);
+                    let q: Vec<i8> =
+                        x.iter().map(|&v| qp.quantize(v)).collect();
+                    client.call_i8(&q, qp.scale)?
+                }
+            };
+            match reply {
+                NetReply::Output(_) => {
+                    lat.record(t.elapsed());
+                    break;
+                }
+                NetReply::Busy => {
+                    busy += 1;
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                NetReply::Error(e) => return Err(anyhow!(e)),
+            }
+        }
+    }
+    Ok((lat, busy, client.reconnects))
+}
+
 #[cfg(feature = "pjrt")]
 fn serve_pjrt(args: &Args, n: usize, policy: BatchPolicy) -> Result<()> {
+    use wino_adder::coordinator::server::Server;
     let (handle, join) = Server::start(artifacts_dir(args), policy)?;
     println!("PJRT serving from {:?}", artifacts_dir(args));
-    drive_clients(handle, join, n, 16 * 28 * 28)
+    let elapsed = send_load(&handle, n, handle.sample_len())?;
+    let stats = handle.stop()?;
+    join.join().map_err(|_| anyhow!("engine thread panicked"))?;
+    print_serve_stats(&stats, elapsed);
+    Ok(())
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -486,11 +582,10 @@ fn serve_pjrt(_args: &Args, _n: usize, _policy: BatchPolicy)
     Err(pjrt_unavailable("serve --backend pjrt"))
 }
 
-/// Shared open-loop client driver for `serve`: 4 client threads, n/4
-/// requests each, then stop + stats report.
-fn drive_clients(handle: ServerHandle,
-                 join: std::thread::JoinHandle<()>, n: usize,
-                 sample: usize) -> Result<()> {
+/// Shared open-loop demo load for `serve`: 4 client threads, n/4
+/// requests each against the default model; returns elapsed seconds.
+fn send_load(handle: &ServerHandle, n: usize, sample: usize)
+             -> Result<f64> {
     println!("server up; sending {n} requests");
     let mut rng = Rng::new(1);
     let t0 = std::time::Instant::now();
@@ -508,17 +603,19 @@ fn drive_clients(handle: ServerHandle,
     for t in threads {
         t.join().map_err(|_| anyhow!("client thread panicked"))?;
     }
-    let elapsed = t0.elapsed().as_secs_f64();
-    let stats = handle.stop()?;
-    join.join().map_err(|_| anyhow!("engine thread panicked"))?;
+    Ok(t0.elapsed().as_secs_f64())
+}
+
+fn print_serve_stats(stats: &wino_adder::coordinator::server::ServerStats,
+                     elapsed: f64) {
     println!("served {} requests in {} batches over {elapsed:.2}s \
               ({:.0} req/s)",
              stats.served, stats.batches,
-             stats.served as f64 / elapsed);
+             stats.served as f64 / elapsed.max(1e-9));
     println!("latency: {}", stats.latency_summary);
     println!("per-bucket batches: {:?}", stats.per_bucket);
     println!("per-bucket requests: {:?}", stats.per_bucket_requests);
-    Ok(())
+    println!("per-model requests: {:?}", stats.per_model_requests);
 }
 
 fn cmd_energy(args: &Args) -> Result<()> {
@@ -657,15 +754,13 @@ fn cmd_tsne(args: &Args) -> Result<()> {
     use wino_adder::data::{Dataset, Split};
     use wino_adder::tsne;
 
-    let (kind, threads, kernel) = BackendKind::from_args(args)
-        .ok_or_else(|| {
-            anyhow!("bad --backend (scalar|parallel|parallel-int8) or \
-                     --kernel (legacy|pointmajor)")
-        })?;
+    let builder = EngineBuilder::from_args(args)?;
     let preset = Preset::MnistLike;
     let hw = 16;
     let cout = args.get_usize("features", 8);
-    let ev = BackendEval::new(kind, threads, kernel, cout,
+    let ev = BackendEval::new(builder.backend_kind(),
+                              builder.thread_count(),
+                              builder.kernel_kind(), cout,
                               preset.channels(), 11,
                               matrices::Variant::Balanced(0));
     let ds = Dataset::new(preset, hw, 5);

@@ -5,7 +5,9 @@
 use std::sync::Arc;
 
 use super::pool::ThreadPool;
-use super::{kernel, simd, Backend, KernelKind, Variant};
+use super::simd::PmSpan;
+use super::{kernel, simd, Backend, ForwardArgs, KernelKind, StageDims,
+            Variant};
 use crate::nn::plan::{self, Workspace};
 use crate::nn::quant::{self, QParams, QTensor};
 use crate::nn::wino_adder;
@@ -48,15 +50,15 @@ impl ParallelInt8Backend {
 
     /// Sharded **legacy** integer elementwise stage (see
     /// [`super::ParallelBackend::run_tiles`]); exposed for the benches.
-    #[allow(clippy::too_many_arguments)] // mirrors the kernel ABI
     pub fn run_tiles(&self, d_hat: &Arc<[i16]>, w_hat: &Arc<[i16]>,
-                     t: usize, o: usize, c: usize, s: [[i32; 4]; 16],
+                     dims: StageDims, s: [[i32; 4]; 16],
                      y: &mut [i32]) {
         let d = Arc::clone(d_hat);
         let w = Arc::clone(w_hat);
-        self.pool.scatter_ranges(t, o * 4, y, move |a, b| {
+        let o = dims.o;
+        self.pool.scatter_ranges(dims.t, o * 4, y, move |a, b| {
             let mut out = vec![0i32; (b - a) * o * 4];
-            kernel::wino_adder_tiles_range_i8(&d, &w, a, b, o, c, &s,
+            kernel::wino_adder_tiles_range_i8(&d, &w, a, b, dims, &s,
                                               &mut out);
             out
         });
@@ -65,19 +67,19 @@ impl ParallelInt8Backend {
     /// Sharded **point-major** integer elementwise stage (see
     /// [`super::ParallelBackend::run_tiles_pm`]); exposed for the
     /// benches.
-    #[allow(clippy::too_many_arguments)] // mirrors the kernel ABI
     pub fn run_tiles_pm(&self, d_pm: &Arc<[i16]>, w_pm: &Arc<[i16]>,
-                        t: usize, o: usize, c: usize,
-                        s: [[i32; 4]; 16], y: &mut [i32],
-                        bufs: &mut Vec<Vec<i32>>) {
+                        dims: StageDims, s: [[i32; 4]; 16],
+                        y: &mut [i32], bufs: &mut Vec<Vec<i32>>) {
         let d = Arc::clone(d_pm);
         let w = Arc::clone(w_pm);
+        let o = dims.o;
         self.pool.scatter_grid_into(
-            16, t, o * 4, y, bufs, move |p0, p1, t0, t1, buf| {
+            16, dims.t, o * 4, y, bufs, move |p0, p1, t0, t1, buf| {
                 buf.clear();
                 buf.resize((t1 - t0) * o * 4, 0);
-                simd::sad_gemm_pm_i8(&d, &w, t, t0, t1, p0, p1, o, c,
-                                     &s, buf);
+                simd::sad_gemm_pm_i8(&d, &w, dims,
+                                     PmSpan::new(t0, t1, p0, p1), &s,
+                                     buf);
             });
     }
 
@@ -93,6 +95,7 @@ impl ParallelInt8Backend {
         let s = kernel::output_transform_flat_i32(variant);
         let (n, th, tw) = wino_adder::tile_geometry(qx.dims, pad);
         let t = n * th * tw;
+        let dims = StageDims::new(t, o, c);
         let mut y = vec![0i32; t * o * 4];
         match self.kernel {
             KernelKind::PointMajor => {
@@ -103,7 +106,7 @@ impl ParallelInt8Backend {
                 quant::repack_wino_weights_pm(w_hat_q, o, c, &mut w_pm);
                 let d: Arc<[i16]> = d_pm.into();
                 let w: Arc<[i16]> = w_pm.into();
-                self.run_tiles_pm(&d, &w, t, o, c, s, &mut y,
+                self.run_tiles_pm(&d, &w, dims, s, &mut y,
                                   &mut Vec::new());
             }
             KernelKind::Legacy => {
@@ -111,7 +114,7 @@ impl ParallelInt8Backend {
                     quant::input_tiles_i16(qx, pad, variant);
                 let d: Arc<[i16]> = d_hat.into();
                 let w: Arc<[i16]> = w_hat_q.to_vec().into();
-                self.run_tiles(&d, &w, t, o, c, s, &mut y);
+                self.run_tiles(&d, &w, dims, s, &mut y);
             }
         }
         let out = kernel::untile_i32(&y, n, o, th, tw);
@@ -146,9 +149,9 @@ impl Backend for ParallelInt8Backend {
     /// (quantized input, i16 tiles/weights, i32 accumulators, shard
     /// results) comes from the workspace — bit-exact vs `forward`,
     /// allocation-free in steady state.
-    fn forward_into(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
-                    variant: Variant, ws: &mut Workspace,
+    fn forward_into(&self, args: ForwardArgs<'_>, ws: &mut Workspace,
                     out: &mut Tensor) {
+        let ForwardArgs { x, w_hat, pad, variant } = args;
         let c = x.dims[1];
         let o = w_hat.dims[0];
         assert_eq!(w_hat.dims[1], c, "channel mismatch");
@@ -156,6 +159,7 @@ impl Backend for ParallelInt8Backend {
                    "w_hat must be Winograd-domain (O,C,4,4)");
         let (n, th, tw) = wino_adder::tile_geometry(x.dims, pad);
         let t = n * th * tw;
+        let dims = StageDims::new(t, o, c);
         let qp = QParams::fit(&x.data);
         let scale = qp.scale;
         ws.qx.clear();
@@ -180,8 +184,9 @@ impl Backend for ParallelInt8Backend {
                     &mut ws.shard_i32, move |p0, p1, t0, t1, buf| {
                         buf.clear();
                         buf.resize((t1 - t0) * o * 4, 0);
-                        simd::sad_gemm_pm_i8(&d, &w, t, t0, t1, p0, p1,
-                                             o, c, &s, buf);
+                        simd::sad_gemm_pm_i8(
+                            &d, &w, dims, PmSpan::new(t0, t1, p0, p1),
+                            &s, buf);
                     });
             }
             KernelKind::Legacy => {
@@ -201,7 +206,7 @@ impl Backend for ParallelInt8Backend {
                     move |a, b, buf| {
                         buf.resize((b - a) * o * 4, 0);
                         kernel::wino_adder_tiles_range_i8(&d, &w, a, b,
-                                                          o, c, &s,
+                                                          dims, &s,
                                                           buf);
                     });
             }
@@ -256,8 +261,10 @@ mod tests {
                 let mut ws = Workspace::new();
                 let mut out = Tensor::zeros([1, 1, 1, 1]);
                 for _ in 0..2 {
-                    be.forward_into(&x, &w_hat, 1, Variant::Balanced(0),
-                                    &mut ws, &mut out);
+                    be.forward_into(
+                        ForwardArgs::new(&x, &w_hat, 1,
+                                         Variant::Balanced(0)),
+                        &mut ws, &mut out);
                     assert_eq!(out.dims, want.dims);
                     assert_eq!(out.data, want.data,
                                "{} x{threads} diverged", kernel.name());

@@ -26,6 +26,7 @@
 //! (`winograd_adder_conv2d`), so f32 results agree to rounding, and the
 //! integer kernel is bit-exact vs `quant::winograd_adder_conv2d_i8`.
 
+use super::StageDims;
 use crate::nn::matrices::{self, Variant};
 
 /// Tiles kept hot per accumulator block.
@@ -41,13 +42,14 @@ pub fn abs_branchless(x: f32) -> f32 {
 
 /// Blocked f32 elementwise stage over the tile range `[t0, t1)`.
 ///
-/// `d_hat` is the full `(T, C, 16)` buffer, `w_hat` is `(O, C, 16)`,
-/// and `y` is the **range-local** output `(t1 - t0, O, 4)`.
-#[allow(clippy::too_many_arguments)] // kernel ABI: flat scalars + slices
+/// `d_hat` is the full `(dims.t, C, 16)` buffer, `w_hat` is
+/// `(O, C, 16)`, and `y` is the **range-local** output
+/// `(t1 - t0, O, 4)`.
 pub fn wino_adder_tiles_range(d_hat: &[f32], w_hat: &[f32], t0: usize,
-                              t1: usize, o: usize, c: usize,
+                              t1: usize, dims: StageDims,
                               s: &[[f32; 4]; 16], y: &mut [f32]) {
-    assert!(t0 <= t1 && t1 * c * 16 <= d_hat.len());
+    let StageDims { o, c, .. } = dims;
+    assert!(t0 <= t1 && t1 <= dims.t && t1 * c * 16 <= d_hat.len());
     assert_eq!(w_hat.len(), o * c * 16);
     assert_eq!(y.len(), (t1 - t0) * o * 4);
     let mut m = [0f32; TILE_BLOCK * OC_BLOCK * 16];
@@ -98,11 +100,11 @@ pub fn wino_adder_tiles_range(d_hat: &[f32], w_hat: &[f32], t0: usize,
 /// Blocked int8-datapath elementwise stage over the tile range
 /// `[t0, t1)`: i16 transform-domain operands (the FPGA's widened
 /// datapath), i32 accumulators. Layouts mirror the f32 version.
-#[allow(clippy::too_many_arguments)] // kernel ABI: flat scalars + slices
 pub fn wino_adder_tiles_range_i8(d_hat: &[i16], w_hat: &[i16], t0: usize,
-                                 t1: usize, o: usize, c: usize,
+                                 t1: usize, dims: StageDims,
                                  s: &[[i32; 4]; 16], y: &mut [i32]) {
-    assert!(t0 <= t1 && t1 * c * 16 <= d_hat.len());
+    let StageDims { o, c, .. } = dims;
+    assert!(t0 <= t1 && t1 <= dims.t && t1 * c * 16 <= d_hat.len());
     assert_eq!(w_hat.len(), o * c * 16);
     assert_eq!(y.len(), (t1 - t0) * o * 4);
     let mut m = [0i32; TILE_BLOCK * OC_BLOCK * 16];
@@ -216,20 +218,21 @@ mod tests {
                                 Variant::Balanced(2),
                                 Variant::Balanced(3)]);
             let s = matrices::output_transform_flat(v);
+            let dims = StageDims::new(t, o, c);
             let mut want = vec![0f32; t * o * 4];
             wino_adder_tiles(&d_hat, &w_hat, t, o, c, &s, &mut want);
             // full range
             let mut got = vec![0f32; t * o * 4];
-            wino_adder_tiles_range(&d_hat, &w_hat, 0, t, o, c, &s,
+            wino_adder_tiles_range(&d_hat, &w_hat, 0, t, dims, &s,
                                    &mut got);
             all_close(&got, &want, 1e-5, 1e-5)?;
             // split range: [0, mid) + [mid, t) must tile the output
             let mid = g.usize_in(0, t);
             let mut lo = vec![0f32; mid * o * 4];
             let mut hi = vec![0f32; (t - mid) * o * 4];
-            wino_adder_tiles_range(&d_hat, &w_hat, 0, mid, o, c, &s,
+            wino_adder_tiles_range(&d_hat, &w_hat, 0, mid, dims, &s,
                                    &mut lo);
-            wino_adder_tiles_range(&d_hat, &w_hat, mid, t, o, c, &s,
+            wino_adder_tiles_range(&d_hat, &w_hat, mid, t, dims, &s,
                                    &mut hi);
             let stitched: Vec<f32> =
                 lo.into_iter().chain(hi).collect();
@@ -263,15 +266,16 @@ mod tests {
                                 Variant::Balanced(2),
                                 Variant::Balanced(3)]);
             let s = output_transform_flat_i32(v);
+            let dims = StageDims::new(t, o, c);
             let mut want = vec![0i32; t * o * 4];
-            wino_adder_tiles_range_i8(&d_hat, &w_hat, 0, t, o, c, &s,
+            wino_adder_tiles_range_i8(&d_hat, &w_hat, 0, t, dims, &s,
                                       &mut want);
             let mid = g.usize_in(0, t);
             let mut lo = vec![0i32; mid * o * 4];
             let mut hi = vec![0i32; (t - mid) * o * 4];
-            wino_adder_tiles_range_i8(&d_hat, &w_hat, 0, mid, o, c, &s,
+            wino_adder_tiles_range_i8(&d_hat, &w_hat, 0, mid, dims, &s,
                                       &mut lo);
-            wino_adder_tiles_range_i8(&d_hat, &w_hat, mid, t, o, c, &s,
+            wino_adder_tiles_range_i8(&d_hat, &w_hat, mid, t, dims, &s,
                                       &mut hi);
             let stitched: Vec<i32> =
                 lo.into_iter().chain(hi).collect();

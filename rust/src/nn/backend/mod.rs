@@ -47,6 +47,51 @@ use super::plan::Workspace;
 use super::Tensor;
 use crate::util::cli::Args;
 
+/// Borrowed argument bundle for [`Backend::forward_into`]: one layer's
+/// input activations, Winograd-domain weights, padding, and transform
+/// variant, grouped so the trait method (and the kernel entry points
+/// below it) stay within a civilized arity.
+#[derive(Debug, Clone, Copy)]
+pub struct ForwardArgs<'a> {
+    /// input activations, `(N, C, H, W)`
+    pub x: &'a Tensor,
+    /// Winograd-domain weights, `(O, C, 4, 4)`
+    pub w_hat: &'a Tensor,
+    /// zero padding (0 or 1)
+    pub pad: usize,
+    /// transform variant (std or balanced A0..A3)
+    pub variant: Variant,
+}
+
+impl<'a> ForwardArgs<'a> {
+    /// Bundle one forward call's borrowed arguments.
+    pub fn new(x: &'a Tensor, w_hat: &'a Tensor, pad: usize,
+               variant: Variant) -> ForwardArgs<'a> {
+        ForwardArgs { x, w_hat, pad, variant }
+    }
+}
+
+/// Flat problem shape of one elementwise-stage kernel call: `t` tiles,
+/// `o` output channels, `c` input channels. Groups the scalar
+/// dimensions the kernel ABIs used to take loose (the source of the
+/// retired `clippy::too_many_arguments` allows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageDims {
+    /// total tile count `T` of the operand buffers
+    pub t: usize,
+    /// output channels `O`
+    pub o: usize,
+    /// input channels `C`
+    pub c: usize,
+}
+
+impl StageDims {
+    /// Bundle a `(t, o, c)` kernel shape.
+    pub fn new(t: usize, o: usize, c: usize) -> StageDims {
+        StageDims { t, o, c }
+    }
+}
+
 /// A Winograd-adder forward executor.
 ///
 /// `Send` (but not necessarily `Sync`): a backend is owned and driven
@@ -70,11 +115,10 @@ pub trait Backend: Send {
     /// keep compiling (and stay correct, just not allocation-free).
     ///
     /// [`forward`]: Backend::forward
-    fn forward_into(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
-                    variant: Variant, ws: &mut Workspace,
+    fn forward_into(&self, args: ForwardArgs<'_>, ws: &mut Workspace,
                     out: &mut Tensor) {
         let _ = ws;
-        let y = self.forward(x, w_hat, pad, variant);
+        let y = self.forward(args.x, args.w_hat, args.pad, args.variant);
         out.dims = y.dims;
         out.data.clear();
         out.data.extend_from_slice(&y.data);
@@ -171,6 +215,11 @@ impl BackendKind {
     /// (default: all cores), and `--kernel NAME` (default
     /// `pointmajor`) from parsed CLI args. `None` means the
     /// `--backend` or `--kernel` value was not recognised.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `engine::EngineBuilder::from_args`, which returns \
+                a typed `EngineError` instead of a bare Option"
+    )]
     pub fn from_args(args: &Args)
                      -> Option<(BackendKind, usize, KernelKind)> {
         let kind = match args.get("backend") {
@@ -206,7 +255,10 @@ mod tests {
         assert_eq!(BackendKind::parse(""), None);
     }
 
+    // the deprecated shim must keep its documented behavior until it
+    // is removed — the engine builder's `from_args` is the replacement
     #[test]
+    #[allow(deprecated)]
     fn from_args_defaults_to_parallel_pointmajor() {
         let args = Args::parse(Vec::<String>::new());
         let (kind, threads, kernel) =
@@ -217,6 +269,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn from_args_rejects_unknown() {
         let args = Args::parse(
             ["serve", "--backend", "gpu"].map(String::from));
@@ -227,6 +280,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn from_args_reads_threads_and_kernel() {
         let args = Args::parse(
             ["serve", "--backend", "scalar", "--threads", "3",

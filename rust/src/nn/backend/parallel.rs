@@ -4,7 +4,9 @@
 use std::sync::Arc;
 
 use super::pool::ThreadPool;
-use super::{kernel, simd, Backend, KernelKind, Variant};
+use super::simd::PmSpan;
+use super::{kernel, simd, Backend, ForwardArgs, KernelKind, StageDims,
+            Variant};
 use crate::nn::matrices;
 use crate::nn::plan::{self, Workspace};
 use crate::nn::wino_adder;
@@ -48,15 +50,15 @@ impl ParallelBackend {
     /// The sharded **legacy** elementwise stage: `d_hat (T, C, 16)`,
     /// `w_hat (O, C, 16)` -> `y (T, O, 4)`. Exposed so the benches can
     /// measure the hot loop without tile extraction in the timing.
-    #[allow(clippy::too_many_arguments)] // mirrors the kernel ABI
     pub fn run_tiles(&self, d_hat: &Arc<[f32]>, w_hat: &Arc<[f32]>,
-                     t: usize, o: usize, c: usize, s: [[f32; 4]; 16],
+                     dims: StageDims, s: [[f32; 4]; 16],
                      y: &mut [f32]) {
         let d = Arc::clone(d_hat);
         let w = Arc::clone(w_hat);
-        self.pool.scatter_ranges(t, o * 4, y, move |a, b| {
+        let o = dims.o;
+        self.pool.scatter_ranges(dims.t, o * 4, y, move |a, b| {
             let mut out = vec![0f32; (b - a) * o * 4];
-            kernel::wino_adder_tiles_range(&d, &w, a, b, o, c, &s,
+            kernel::wino_adder_tiles_range(&d, &w, a, b, dims, &s,
                                            &mut out);
             out
         });
@@ -69,19 +71,19 @@ impl ParallelBackend {
     /// use). Exposed for the benches, like [`run_tiles`].
     ///
     /// [`run_tiles`]: ParallelBackend::run_tiles
-    #[allow(clippy::too_many_arguments)] // mirrors the kernel ABI
     pub fn run_tiles_pm(&self, d_pm: &Arc<[f32]>, w_pm: &Arc<[f32]>,
-                        t: usize, o: usize, c: usize,
-                        s: [[f32; 4]; 16], y: &mut [f32],
-                        bufs: &mut Vec<Vec<f32>>) {
+                        dims: StageDims, s: [[f32; 4]; 16],
+                        y: &mut [f32], bufs: &mut Vec<Vec<f32>>) {
         let d = Arc::clone(d_pm);
         let w = Arc::clone(w_pm);
+        let o = dims.o;
         self.pool.scatter_grid_into(
-            16, t, o * 4, y, bufs, move |p0, p1, t0, t1, buf| {
+            16, dims.t, o * 4, y, bufs, move |p0, p1, t0, t1, buf| {
                 buf.clear();
                 buf.resize((t1 - t0) * o * 4, 0.0);
-                simd::sad_gemm_pm_f32(&d, &w, t, t0, t1, p0, p1, o, c,
-                                      &s, buf);
+                simd::sad_gemm_pm_f32(&d, &w, dims,
+                                      PmSpan::new(t0, t1, p0, p1), &s,
+                                      buf);
             });
     }
 }
@@ -106,6 +108,7 @@ impl Backend for ParallelBackend {
         let s = matrices::output_transform_flat(variant);
         let (n, th, tw) = wino_adder::tile_geometry(x.dims, pad);
         let t = n * th * tw;
+        let dims = StageDims::new(t, o, c);
         let mut y = vec![0f32; t * o * 4];
         match self.kernel {
             KernelKind::PointMajor => {
@@ -117,7 +120,7 @@ impl Backend for ParallelBackend {
                                               &mut w_pm);
                 let d: Arc<[f32]> = d_pm.into();
                 let w: Arc<[f32]> = w_pm.into();
-                self.run_tiles_pm(&d, &w, t, o, c, s, &mut y,
+                self.run_tiles_pm(&d, &w, dims, s, &mut y,
                                   &mut Vec::new());
             }
             KernelKind::Legacy => {
@@ -125,15 +128,15 @@ impl Backend for ParallelBackend {
                 let (d_hat, ..) = wino_adder::input_tiles(&xp, variant);
                 let d: Arc<[f32]> = d_hat.into();
                 let w: Arc<[f32]> = w_hat.data.clone().into();
-                self.run_tiles(&d, &w, t, o, c, s, &mut y);
+                self.run_tiles(&d, &w, dims, s, &mut y);
             }
         }
         wino_adder::untile(&y, n, o, th, tw)
     }
 
-    fn forward_into(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
-                    variant: Variant, ws: &mut Workspace,
+    fn forward_into(&self, args: ForwardArgs<'_>, ws: &mut Workspace,
                     out: &mut Tensor) {
+        let ForwardArgs { x, w_hat, pad, variant } = args;
         let c = x.dims[1];
         let o = w_hat.dims[0];
         assert_eq!(w_hat.dims[1], c, "channel mismatch");
@@ -141,6 +144,7 @@ impl Backend for ParallelBackend {
                    "w_hat must be Winograd-domain (O,C,4,4)");
         let (n, th, tw) = wino_adder::tile_geometry(x.dims, pad);
         let t = n * th * tw;
+        let dims = StageDims::new(t, o, c);
         let s = matrices::output_transform_flat(variant);
         // shareable weights: the planned path hands us shared
         // ownership of the very tensor behind `w_hat` (zero-copy);
@@ -172,8 +176,9 @@ impl Backend for ParallelBackend {
                     move |p0, p1, t0, t1, buf| {
                         buf.clear();
                         buf.resize((t1 - t0) * o * 4, 0.0);
-                        simd::sad_gemm_pm_f32(&d, &w, t, t0, t1, p0,
-                                              p1, o, c, &s, buf);
+                        simd::sad_gemm_pm_f32(
+                            &d, &w, dims, PmSpan::new(t0, t1, p0, p1),
+                            &s, buf);
                     });
             }
             KernelKind::Legacy => {
@@ -190,7 +195,7 @@ impl Backend for ParallelBackend {
                     move |a, b, buf| {
                         buf.resize((b - a) * o * 4, 0.0);
                         kernel::wino_adder_tiles_range(&d, &w.data, a,
-                                                       b, o, c, &s,
+                                                       b, dims, &s,
                                                        buf);
                     });
             }
@@ -241,8 +246,9 @@ mod tests {
             let mut out = Tensor::zeros([1, 1, 1, 1]);
             for _ in 0..2 {
                 ws.w_shared = Some(Arc::clone(&w_hat));
-                be.forward_into(&x, &w_hat, 1, Variant::Std, &mut ws,
-                                &mut out);
+                be.forward_into(ForwardArgs::new(&x, &w_hat, 1,
+                                                 Variant::Std),
+                                &mut ws, &mut out);
                 all_close(&out.data, &want.data, 1e-5, 1e-5).unwrap();
                 assert!(ws.w_shared.is_none(),
                         "backend must consume the handle");
@@ -269,8 +275,10 @@ mod tests {
                 // run twice through the same workspace: reuse must not
                 // change results
                 for _ in 0..2 {
-                    be.forward_into(&x, &w_hat, 1, Variant::Balanced(1),
-                                    &mut ws, &mut out);
+                    be.forward_into(
+                        ForwardArgs::new(&x, &w_hat, 1,
+                                         Variant::Balanced(1)),
+                        &mut ws, &mut out);
                     assert_eq!(out.dims, want.dims);
                     assert_eq!(out.data, want.data,
                                "{} x{threads} diverged", kernel.name());

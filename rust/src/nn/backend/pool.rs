@@ -131,7 +131,6 @@ impl ThreadPool {
     /// is `y` zeroed and the partials **summed**, in ascending-point
     /// order per tile range — exact for integer kernels; for f32 it
     /// reassociates one addition per split (within kernel tolerance).
-    #[allow(clippy::too_many_arguments)] // mirrors the kernel ABI
     pub fn scatter_grid_into<T, F>(&self, points: usize, n: usize,
                                    stride: usize, y: &mut [T],
                                    bufs: &mut Vec<Vec<T>>, f: F)

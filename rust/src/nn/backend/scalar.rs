@@ -1,6 +1,8 @@
 //! Single-threaded baseline backend.
 
-use super::{kernel, simd, Backend, KernelKind, Variant};
+use super::simd::PmSpan;
+use super::{kernel, simd, Backend, ForwardArgs, KernelKind, StageDims,
+            Variant};
 use crate::nn::matrices;
 use crate::nn::plan::{self, Workspace};
 use crate::nn::wino_adder;
@@ -43,9 +45,9 @@ impl Backend for ScalarBackend {
         }
     }
 
-    fn forward_into(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
-                    variant: Variant, ws: &mut Workspace,
+    fn forward_into(&self, args: ForwardArgs<'_>, ws: &mut Workspace,
                     out: &mut Tensor) {
+        let ForwardArgs { x, w_hat, pad, variant } = args;
         let c = x.dims[1];
         let o = w_hat.dims[0];
         assert_eq!(w_hat.dims[1], c, "channel mismatch");
@@ -53,6 +55,7 @@ impl Backend for ScalarBackend {
                    "w_hat must be Winograd-domain (O,C,4,4)");
         let (n, th, tw) = wino_adder::tile_geometry(x.dims, pad);
         let t = n * th * tw;
+        let dims = StageDims::new(t, o, c);
         let s = matrices::output_transform_flat(variant);
         match self.kernel {
             KernelKind::PointMajor => {
@@ -64,7 +67,7 @@ impl Backend for ScalarBackend {
                 // the point-major kernel accumulates: start from zero
                 ws.y_tiles.clear();
                 ws.y_tiles.resize(t * o * 4, 0.0);
-                simd::sad_gemm_pm_f32(d, wp, t, 0, t, 0, 16, o, c, &s,
+                simd::sad_gemm_pm_f32(d, wp, dims, PmSpan::full(t), &s,
                                       &mut ws.y_tiles);
             }
             KernelKind::Legacy => {
@@ -72,8 +75,9 @@ impl Backend for ScalarBackend {
                 d.resize(t * c * 16, 0.0);
                 wino_adder::input_tiles_into(x, pad, variant, d);
                 ws.y_tiles.resize(t * o * 4, 0.0);
-                kernel::wino_adder_tiles_range(d, &w_hat.data, 0, t, o,
-                                               c, &s, &mut ws.y_tiles);
+                kernel::wino_adder_tiles_range(d, &w_hat.data, 0, t,
+                                               dims, &s,
+                                               &mut ws.y_tiles);
             }
         }
         out.dims = [n, o, 2 * th, 2 * tw];
@@ -119,8 +123,9 @@ mod tests {
             // run twice through the same workspace: reuse must not
             // change results (the pm path must re-zero y_tiles)
             for _ in 0..2 {
-                be.forward_into(&x, &w_hat, 1, Variant::Std, &mut ws,
-                                &mut out);
+                be.forward_into(ForwardArgs::new(&x, &w_hat, 1,
+                                                 Variant::Std),
+                                &mut ws, &mut out);
                 assert_eq!(out.dims, want.dims);
                 all_close(&out.data, &want.data, 1e-5, 1e-5)
                     .unwrap_or_else(|e| {

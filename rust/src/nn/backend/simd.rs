@@ -48,11 +48,40 @@
 //! bit-for-bit.
 
 use crate::nn::backend::kernel::abs_branchless;
+use crate::nn::backend::StageDims;
 
 /// Output channels per register block (micro-kernel rows).
 pub const PM_OC_BLOCK: usize = 4;
 /// Tiles per register block (micro-kernel columns; 2 AVX2 f32 vectors).
 pub const PM_TILE_BLOCK: usize = 16;
+
+/// The `(tile, point)` sub-rectangle one point-major kernel call
+/// covers: tiles `[t0, t1)` of `0..dims.t`, transform points
+/// `[p0, p1)` of `0..16`. Work items from
+/// [`super::pool::shard_grid`] map 1:1 onto spans.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PmSpan {
+    /// first tile (inclusive)
+    pub t0: usize,
+    /// last tile (exclusive)
+    pub t1: usize,
+    /// first transform point (inclusive)
+    pub p0: usize,
+    /// last transform point (exclusive)
+    pub p1: usize,
+}
+
+impl PmSpan {
+    /// An explicit `(tile, point)` sub-rectangle.
+    pub fn new(t0: usize, t1: usize, p0: usize, p1: usize) -> PmSpan {
+        PmSpan { t0, t1, p0, p1 }
+    }
+
+    /// The whole problem: all `t` tiles, all 16 transform points.
+    pub fn full(t: usize) -> PmSpan {
+        PmSpan { t0: 0, t1: t, p0: 0, p1: 16 }
+    }
+}
 
 /// Human-readable active SIMD level: `"avx2"` or `"portable"`.
 pub fn level() -> &'static str {
@@ -65,60 +94,57 @@ pub fn level() -> &'static str {
     "portable"
 }
 
-/// Point-major f32 SAD-GEMM over tiles `[t0, t1)` and transform points
-/// `[p0, p1)`, dispatched to the best available SIMD path.
+/// Point-major f32 SAD-GEMM over the `(tile, point)` span, dispatched
+/// to the best available SIMD path.
 ///
-/// `d_pm` is `(16, C, T)` with `T = t`, `w_pm` is `(16, O, C)`, and
-/// `y` is the **range-local** output `(t1 - t0, O, 4)`, accumulated
-/// in ascending-`p` order (zero it before the first call).
-#[allow(clippy::too_many_arguments)] // kernel ABI: flat scalars + slices
-pub fn sad_gemm_pm_f32(d_pm: &[f32], w_pm: &[f32], t: usize, t0: usize,
-                       t1: usize, p0: usize, p1: usize, o: usize,
-                       c: usize, s: &[[f32; 4]; 16], y: &mut [f32]) {
-    check_pm(d_pm.len(), w_pm.len(), t, t0, t1, p0, p1, o, c, y.len());
+/// `d_pm` is `(16, C, T)` with `T = dims.t`, `w_pm` is `(16, O, C)`,
+/// and `y` is the **range-local** output `(t1 - t0, O, 4)`,
+/// accumulated in ascending-`p` order (zero it before the first call).
+pub fn sad_gemm_pm_f32(d_pm: &[f32], w_pm: &[f32], dims: StageDims,
+                       span: PmSpan, s: &[[f32; 4]; 16],
+                       y: &mut [f32]) {
+    check_pm(d_pm.len(), w_pm.len(), dims, span, y.len());
     #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
     {
         if std::arch::is_x86_feature_detected!("avx2") {
             // SAFETY: AVX2 presence was just checked; bounds were
             // checked by `check_pm` above.
             unsafe {
-                avx2::sad_gemm_pm_f32(d_pm, w_pm, t, t0, t1, p0, p1, o,
-                                      c, s, y);
+                avx2::sad_gemm_pm_f32(d_pm, w_pm, dims, span, s, y);
             }
             return;
         }
     }
-    sad_gemm_pm_f32_portable(d_pm, w_pm, t, t0, t1, p0, p1, o, c, s, y);
+    sad_gemm_pm_f32_portable(d_pm, w_pm, dims, span, s, y);
 }
 
 /// Point-major i16 -> i32 SAD-GEMM (the int8 datapath's widened
 /// transform-domain operands), dispatched like [`sad_gemm_pm_f32`].
 /// Exact for the full i16 operand range; bit-identical across SIMD
 /// levels, thread counts, and point splits.
-#[allow(clippy::too_many_arguments)] // kernel ABI: flat scalars + slices
-pub fn sad_gemm_pm_i8(d_pm: &[i16], w_pm: &[i16], t: usize, t0: usize,
-                      t1: usize, p0: usize, p1: usize, o: usize,
-                      c: usize, s: &[[i32; 4]; 16], y: &mut [i32]) {
-    check_pm(d_pm.len(), w_pm.len(), t, t0, t1, p0, p1, o, c, y.len());
+pub fn sad_gemm_pm_i8(d_pm: &[i16], w_pm: &[i16], dims: StageDims,
+                      span: PmSpan, s: &[[i32; 4]; 16],
+                      y: &mut [i32]) {
+    check_pm(d_pm.len(), w_pm.len(), dims, span, y.len());
     #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
     {
         if std::arch::is_x86_feature_detected!("avx2") {
             // SAFETY: AVX2 presence was just checked; bounds were
             // checked by `check_pm` above.
             unsafe {
-                avx2::sad_gemm_pm_i8(d_pm, w_pm, t, t0, t1, p0, p1, o,
-                                     c, s, y);
+                avx2::sad_gemm_pm_i8(d_pm, w_pm, dims, span, s, y);
             }
             return;
         }
     }
-    sad_gemm_pm_i8_portable(d_pm, w_pm, t, t0, t1, p0, p1, o, c, s, y);
+    sad_gemm_pm_i8_portable(d_pm, w_pm, dims, span, s, y);
 }
 
 /// Shared bounds contract of every point-major kernel.
-#[allow(clippy::too_many_arguments)] // mirrors the kernel ABI
-fn check_pm(d_len: usize, w_len: usize, t: usize, t0: usize, t1: usize,
-            p0: usize, p1: usize, o: usize, c: usize, y_len: usize) {
+fn check_pm(d_len: usize, w_len: usize, dims: StageDims, span: PmSpan,
+            y_len: usize) {
+    let StageDims { t, o, c } = dims;
+    let PmSpan { t0, t1, p0, p1 } = span;
     assert!(t0 <= t1 && t1 <= t, "tile range [{t0}, {t1}) out of 0..{t}");
     assert!(p0 <= p1 && p1 <= 16, "point range [{p0}, {p1}) out of 0..16");
     assert_eq!(d_len, 16 * c * t, "d_pm must be (16, C, T)");
@@ -129,12 +155,12 @@ fn check_pm(d_len: usize, w_len: usize, t: usize, t0: usize, t1: usize,
 /// Portable register-blocked f32 micro-kernel — the dispatch fallback
 /// and the shape LLVM autovectorizes on non-x86 targets. Public so the
 /// SIMD paths can be differential-tested against it.
-#[allow(clippy::too_many_arguments)] // kernel ABI: flat scalars + slices
-pub fn sad_gemm_pm_f32_portable(d_pm: &[f32], w_pm: &[f32], t: usize,
-                                t0: usize, t1: usize, p0: usize,
-                                p1: usize, o: usize, c: usize,
+pub fn sad_gemm_pm_f32_portable(d_pm: &[f32], w_pm: &[f32],
+                                dims: StageDims, span: PmSpan,
                                 s: &[[f32; 4]; 16], y: &mut [f32]) {
-    check_pm(d_pm.len(), w_pm.len(), t, t0, t1, p0, p1, o, c, y.len());
+    check_pm(d_pm.len(), w_pm.len(), dims, span, y.len());
+    let StageDims { t, o, c } = dims;
+    let PmSpan { t0, t1, p0, p1 } = span;
     for p in p0..p1 {
         let dp = &d_pm[p * c * t..(p + 1) * c * t];
         let wp = &w_pm[p * o * c..(p + 1) * o * c];
@@ -177,12 +203,12 @@ pub fn sad_gemm_pm_f32_portable(d_pm: &[f32], w_pm: &[f32], t: usize,
 
 /// Portable register-blocked i16 -> i32 micro-kernel (exact integer
 /// sums; blocking mirrors [`sad_gemm_pm_f32_portable`]).
-#[allow(clippy::too_many_arguments)] // kernel ABI: flat scalars + slices
-pub fn sad_gemm_pm_i8_portable(d_pm: &[i16], w_pm: &[i16], t: usize,
-                               t0: usize, t1: usize, p0: usize,
-                               p1: usize, o: usize, c: usize,
+pub fn sad_gemm_pm_i8_portable(d_pm: &[i16], w_pm: &[i16],
+                               dims: StageDims, span: PmSpan,
                                s: &[[i32; 4]; 16], y: &mut [i32]) {
-    check_pm(d_pm.len(), w_pm.len(), t, t0, t1, p0, p1, o, c, y.len());
+    check_pm(d_pm.len(), w_pm.len(), dims, span, y.len());
+    let StageDims { t, o, c } = dims;
+    let PmSpan { t0, t1, p0, p1 } = span;
     for p in p0..p1 {
         let dp = &d_pm[p * c * t..(p + 1) * c * t];
         let wp = &w_pm[p * o * c..(p + 1) * o * c];
@@ -228,7 +254,7 @@ mod avx2 {
     #[cfg(target_arch = "x86_64")]
     use std::arch::x86_64::*;
 
-    use super::{PM_OC_BLOCK, PM_TILE_BLOCK};
+    use super::{PmSpan, StageDims, PM_OC_BLOCK, PM_TILE_BLOCK};
 
     /// AVX2 f32 path: 2 x `__m256` tile vectors x [`PM_OC_BLOCK`]
     /// broadcast weight rows; `|a - b|` via `_mm256_andnot_ps` with
@@ -237,12 +263,12 @@ mod avx2 {
     ///
     /// SAFETY: caller must ensure AVX2 is available and slice bounds
     /// were validated (see `check_pm`).
-    #[allow(clippy::too_many_arguments)] // kernel ABI
     #[target_feature(enable = "avx2")]
-    pub unsafe fn sad_gemm_pm_f32(d_pm: &[f32], w_pm: &[f32], t: usize,
-                                  t0: usize, t1: usize, p0: usize,
-                                  p1: usize, o: usize, c: usize,
+    pub unsafe fn sad_gemm_pm_f32(d_pm: &[f32], w_pm: &[f32],
+                                  dims: StageDims, span: PmSpan,
                                   s: &[[f32; 4]; 16], y: &mut [f32]) {
+        let StageDims { t, o, c } = dims;
+        let PmSpan { t0, t1, p0, p1 } = span;
         let sign = _mm256_set1_ps(-0.0);
         for p in p0..p1 {
             let dp = &d_pm[p * c * t..(p + 1) * c * t];
@@ -290,7 +316,7 @@ mod avx2 {
                 // remaining tiles of this point (same element-wise
                 // operation order, so still bit-identical)
                 super::sad_gemm_pm_f32_portable(
-                    d_pm, w_pm, t, tb, t1, p, p + 1, o, c, s,
+                    d_pm, w_pm, dims, PmSpan::new(tb, t1, p, p + 1), s,
                     &mut y[(tb - t0) * o * 4..]);
             }
         }
@@ -303,12 +329,12 @@ mod avx2 {
     ///
     /// SAFETY: caller must ensure AVX2 is available and slice bounds
     /// were validated (see `check_pm`).
-    #[allow(clippy::too_many_arguments)] // kernel ABI
     #[target_feature(enable = "avx2")]
-    pub unsafe fn sad_gemm_pm_i8(d_pm: &[i16], w_pm: &[i16], t: usize,
-                                 t0: usize, t1: usize, p0: usize,
-                                 p1: usize, o: usize, c: usize,
+    pub unsafe fn sad_gemm_pm_i8(d_pm: &[i16], w_pm: &[i16],
+                                 dims: StageDims, span: PmSpan,
                                  s: &[[i32; 4]; 16], y: &mut [i32]) {
+        let StageDims { t, o, c } = dims;
+        let PmSpan { t0, t1, p0, p1 } = span;
         for p in p0..p1 {
             let dp = &d_pm[p * c * t..(p + 1) * c * t];
             let wp = &w_pm[p * o * c..(p + 1) * o * c];
@@ -361,7 +387,7 @@ mod avx2 {
             }
             if tb < t1 {
                 super::sad_gemm_pm_i8_portable(
-                    d_pm, w_pm, t, tb, t1, p, p + 1, o, c, s,
+                    d_pm, w_pm, dims, PmSpan::new(tb, t1, p, p + 1), s,
                     &mut y[(tb - t0) * o * 4..]);
             }
         }
@@ -401,7 +427,8 @@ mod tests {
             let mut w_pm = Vec::new();
             pm_repack(&w_hat, o, c, &mut w_pm);
             let mut got = vec![0f32; t * o * 4];
-            sad_gemm_pm_f32(&d_pm, &w_pm, t, 0, t, 0, 16, o, c, &s,
+            let dims = StageDims::new(t, o, c);
+            sad_gemm_pm_f32(&d_pm, &w_pm, dims, PmSpan::full(t), &s,
                             &mut got);
             all_close(&got, &want, 1e-4, 1e-4)
         });
@@ -422,17 +449,18 @@ mod tests {
             let d_pm = tiles_to_pm(&d_hat, t, c);
             let mut w_pm = Vec::new();
             pm_repack(&w_hat, o, c, &mut w_pm);
+            let dims = StageDims::new(t, o, c);
             let mut want = vec![0f32; t * o * 4];
-            sad_gemm_pm_f32(&d_pm, &w_pm, t, 0, t, 0, 16, o, c, &s,
+            sad_gemm_pm_f32(&d_pm, &w_pm, dims, PmSpan::full(t), &s,
                             &mut want);
             // tile split [0, mid) + [mid, t) tiles the output rows
             let mid = g.usize_in(1, t - 1);
             let mut lo = vec![0f32; mid * o * 4];
             let mut hi = vec![0f32; (t - mid) * o * 4];
-            sad_gemm_pm_f32(&d_pm, &w_pm, t, 0, mid, 0, 16, o, c, &s,
-                            &mut lo);
-            sad_gemm_pm_f32(&d_pm, &w_pm, t, mid, t, 0, 16, o, c, &s,
-                            &mut hi);
+            sad_gemm_pm_f32(&d_pm, &w_pm, dims,
+                            PmSpan::new(0, mid, 0, 16), &s, &mut lo);
+            sad_gemm_pm_f32(&d_pm, &w_pm, dims,
+                            PmSpan::new(mid, t, 0, 16), &s, &mut hi);
             let stitched: Vec<f32> = lo.into_iter().chain(hi).collect();
             all_close(&stitched, &want, 1e-5, 1e-5)?;
             // point split: accumulating [0, pmid) then [pmid, 16) into
@@ -440,9 +468,10 @@ mod tests {
             // reassociation -> tolerance, not bit-equality)
             let pmid = g.usize_in(1, 15);
             let mut accum = vec![0f32; t * o * 4];
-            sad_gemm_pm_f32(&d_pm, &w_pm, t, 0, t, 0, pmid, o, c, &s,
-                            &mut accum);
-            sad_gemm_pm_f32(&d_pm, &w_pm, t, 0, t, pmid, 16, o, c, &s,
+            sad_gemm_pm_f32(&d_pm, &w_pm, dims,
+                            PmSpan::new(0, t, 0, pmid), &s, &mut accum);
+            sad_gemm_pm_f32(&d_pm, &w_pm, dims,
+                            PmSpan::new(0, t, pmid, 16), &s,
                             &mut accum);
             all_close(&accum, &want, 1e-4, 1e-4)
         });
@@ -464,14 +493,15 @@ mod tests {
                 .collect();
             let v = *g.choose(&all_variants());
             let s = output_transform_flat_i32(v);
+            let dims = StageDims::new(t, o, c);
             let mut want = vec![0i32; t * o * 4];
-            kernel::wino_adder_tiles_range_i8(&d_hat, &w_hat, 0, t, o,
-                                              c, &s, &mut want);
+            kernel::wino_adder_tiles_range_i8(&d_hat, &w_hat, 0, t,
+                                              dims, &s, &mut want);
             let d_pm = tiles_to_pm(&d_hat, t, c);
             let mut w_pm = Vec::new();
             pm_repack(&w_hat, o, c, &mut w_pm);
             let mut got = vec![0i32; t * o * 4];
-            sad_gemm_pm_i8(&d_pm, &w_pm, t, 0, t, 0, 16, o, c, &s,
+            sad_gemm_pm_i8(&d_pm, &w_pm, dims, PmSpan::full(t), &s,
                            &mut got);
             if got != want {
                 let bad =
@@ -481,10 +511,10 @@ mod tests {
             // split point ranges must stitch bit-exactly (integers)
             let pmid = g.usize_in(1, 15);
             let mut accum = vec![0i32; t * o * 4];
-            sad_gemm_pm_i8(&d_pm, &w_pm, t, 0, t, 0, pmid, o, c, &s,
-                           &mut accum);
-            sad_gemm_pm_i8(&d_pm, &w_pm, t, 0, t, pmid, 16, o, c, &s,
-                           &mut accum);
+            sad_gemm_pm_i8(&d_pm, &w_pm, dims,
+                           PmSpan::new(0, t, 0, pmid), &s, &mut accum);
+            sad_gemm_pm_i8(&d_pm, &w_pm, dims,
+                           PmSpan::new(0, t, pmid, 16), &s, &mut accum);
             if accum != want {
                 return Err("point-split stitching diverged".into());
             }
@@ -507,14 +537,15 @@ mod tests {
             *v = extremes[(i + 3) % extremes.len()];
         }
         let s = output_transform_flat_i32(Variant::Balanced(0));
+        let dims = StageDims::new(t, o, c);
         let mut want = vec![0i32; t * o * 4];
-        kernel::wino_adder_tiles_range_i8(&d_hat, &w_hat, 0, t, o, c,
+        kernel::wino_adder_tiles_range_i8(&d_hat, &w_hat, 0, t, dims,
                                           &s, &mut want);
         let d_pm = tiles_to_pm(&d_hat, t, c);
         let mut w_pm = Vec::new();
         pm_repack(&w_hat, o, c, &mut w_pm);
         let mut got = vec![0i32; t * o * 4];
-        sad_gemm_pm_i8(&d_pm, &w_pm, t, 0, t, 0, 16, o, c, &s,
+        sad_gemm_pm_i8(&d_pm, &w_pm, dims, PmSpan::full(t), &s,
                        &mut got);
         assert_eq!(got, want);
     }
@@ -531,10 +562,12 @@ mod tests {
         let d_pm = rng.normal_vec(16 * c * t);
         let w_pm = rng.normal_vec(16 * o * c);
         let s = matrices::output_transform_flat(Variant::Balanced(2));
+        let dims = StageDims::new(t, o, c);
         let mut a = vec![0f32; t * o * 4];
         let mut b = vec![0f32; t * o * 4];
-        sad_gemm_pm_f32(&d_pm, &w_pm, t, 0, t, 0, 16, o, c, &s, &mut a);
-        sad_gemm_pm_f32_portable(&d_pm, &w_pm, t, 0, t, 0, 16, o, c,
+        sad_gemm_pm_f32(&d_pm, &w_pm, dims, PmSpan::full(t), &s,
+                        &mut a);
+        sad_gemm_pm_f32_portable(&d_pm, &w_pm, dims, PmSpan::full(t),
                                  &s, &mut b);
         assert_eq!(a, b, "SIMD level {} diverged from portable",
                    level());

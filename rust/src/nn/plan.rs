@@ -33,7 +33,7 @@
 
 use std::sync::Arc;
 
-use super::backend::Backend;
+use super::backend::{Backend, ForwardArgs};
 use super::matrices::Variant;
 use super::model::{LayerKind, ModelSpec, ModelWeights};
 use super::wino_adder;
@@ -294,9 +294,10 @@ impl ModelPlan {
                     // tensor passed as `w_hat`, so pool-backed
                     // backends ship weights to workers without a copy
                     self.ws.w_shared = Some(Arc::clone(w_hat));
-                    backend.forward_into(&self.act_a, w_hat, *pad,
-                                         *variant, &mut self.ws,
-                                         &mut self.act_b);
+                    backend.forward_into(
+                        ForwardArgs::new(&self.act_a, w_hat, *pad,
+                                         *variant),
+                        &mut self.ws, &mut self.act_b);
                     std::mem::swap(&mut self.act_a, &mut self.act_b);
                 }
                 PlanStep::Direct1x1 { w, cout } => {

@@ -345,8 +345,9 @@ pub fn winograd_adder_conv2d_pm(x: &Tensor, w_hat: &Tensor, pad: usize,
     repack_weights_pm(&w_hat.data, o, c, &mut w_pm);
     let s = matrices::output_transform_flat(variant);
     let mut y = vec![0f32; t * o * 4];
-    crate::nn::backend::simd::sad_gemm_pm_f32(&d_pm, &w_pm, t, 0, t, 0,
-                                              16, o, c, &s, &mut y);
+    crate::nn::backend::simd::sad_gemm_pm_f32(
+        &d_pm, &w_pm, crate::nn::backend::StageDims::new(t, o, c),
+        crate::nn::backend::simd::PmSpan::full(t), &s, &mut y);
     untile(&y, n, o, th, tw)
 }
 

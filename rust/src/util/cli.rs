@@ -4,8 +4,8 @@
 //!
 //! Backend selection convention (shared by `serve`, `tsne`, and the
 //! scaling bench): `--backend scalar|parallel|parallel-int8` plus
-//! `--threads N`, parsed into a typed selector by
-//! [`crate::nn::backend::BackendKind::from_args`].
+//! `--threads N` and `--kernel NAME`, parsed into a typed builder by
+//! [`crate::engine::EngineBuilder::from_args`].
 //!
 //! Model selection convention (`serve` and the serving benches):
 //! `--model single|stack|lenet|resnet20` plus `--depth N` (a bare

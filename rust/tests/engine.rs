@@ -1,0 +1,325 @@
+//! End-to-end tests of the Engine API facade: the builder rejection
+//! matrix, typed request validation (before anything reaches a batch
+//! lane), multi-model routing equivalence against single-model
+//! engines, and v1↔v2 wire interop — a v1 `NetClient` (unchanged
+//! wire bytes) and a v2 session client must both get bit-identical
+//! outputs from the same engine hosting two named models.
+
+use wino_adder::coordinator::batcher::BatchPolicy;
+use wino_adder::coordinator::net::{NetClient, NetClientV2};
+use wino_adder::engine::{Dtype, Engine, EngineError, InferRequest};
+use wino_adder::nn::backend::BackendKind;
+use wino_adder::nn::matrices::Variant;
+use wino_adder::nn::model::ModelSpec;
+use wino_adder::nn::quant::QParams;
+use wino_adder::util::rng::Rng;
+
+const SHAPE_A: [usize; 3] = [2, 8, 8];
+
+fn spec_a() -> ModelSpec {
+    ModelSpec::single_layer(2, 3, 8, Variant::Balanced(0))
+}
+
+fn spec_b() -> ModelSpec {
+    ModelSpec::lenetish(2, 8, Variant::Balanced(1))
+}
+
+/// A deterministic two-model engine: "a" (2 -> 3 ch) and "b"
+/// (lenetish, 2 -> 16 ch), scalar backend, bucket-1 policy.
+fn two_model_engine() -> Engine {
+    Engine::builder()
+        .model("a", spec_a())
+        .model("b", spec_b())
+        .backend(BackendKind::Scalar)
+        .threads(1)
+        .seed(7)
+        .batch(BatchPolicy { buckets: vec![1], max_wait_us: 0 })
+        .build()
+        .unwrap()
+}
+
+fn sample(seed: u64) -> Vec<f32> {
+    Rng::new(seed).normal_vec(2 * 8 * 8)
+}
+
+#[test]
+fn builder_rejection_matrix() {
+    // no models
+    assert_eq!(Engine::builder().build().unwrap_err(),
+               EngineError::NoModels);
+    // duplicate names
+    assert_eq!(
+        Engine::builder()
+            .model("m", spec_a())
+            .model("m", spec_b())
+            .build()
+            .unwrap_err(),
+        EngineError::DuplicateModel("m".into()));
+    // zero threads
+    assert_eq!(
+        Engine::builder().model("m", spec_a()).threads(0).build()
+            .unwrap_err(),
+        EngineError::ZeroThreads);
+    // invalid spec (odd hw) is typed, not a panic or string soup
+    let bad = ModelSpec::single_layer(2, 3, 7, Variant::Std);
+    match Engine::builder().model("odd", bad).build().unwrap_err() {
+        EngineError::InvalidSpec { model, reason } => {
+            assert_eq!(model, "odd");
+            assert!(reason.contains("hw"), "{reason}");
+        }
+        other => panic!("want InvalidSpec, got {other:?}"),
+    }
+    // batch policy without bucket 1
+    match Engine::builder()
+        .model("m", spec_a())
+        .batch(BatchPolicy { buckets: vec![4, 16], max_wait_us: 0 })
+        .build()
+        .unwrap_err()
+    {
+        EngineError::BadBatchPolicy(reason) => {
+            assert!(reason.contains("bucket 1"), "{reason}");
+        }
+        other => panic!("want BadBatchPolicy, got {other:?}"),
+    }
+    // non-ascending buckets
+    assert!(matches!(
+        Engine::builder()
+            .model("m", spec_a())
+            .batch(BatchPolicy { buckets: vec![1, 4, 4],
+                                 max_wait_us: 0 })
+            .build(),
+        Err(EngineError::BadBatchPolicy(_))));
+}
+
+#[test]
+fn request_validation_is_typed_and_pre_enqueue() {
+    let engine = two_model_engine();
+    // unknown model
+    assert_eq!(
+        engine
+            .infer(InferRequest::f32("c", SHAPE_A, sample(1)))
+            .unwrap_err(),
+        EngineError::UnknownModel("c".into()));
+    // shape mismatch (claimed shape != registry shape)
+    match engine
+        .infer(InferRequest::f32("a", [2, 4, 4], sample(1)))
+        .unwrap_err()
+    {
+        EngineError::ShapeMismatch { model, want, got } => {
+            assert_eq!((model.as_str(), want, got),
+                       ("a", SHAPE_A, [2, 4, 4]));
+        }
+        other => panic!("want ShapeMismatch, got {other:?}"),
+    }
+    // length mismatch: the short-buffer regression — this request
+    // must be refused before it can poison a batch lane
+    match engine
+        .infer(InferRequest::f32("a", SHAPE_A, vec![0.0; 3]))
+        .unwrap_err()
+    {
+        EngineError::LengthMismatch { model, want, got } => {
+            assert_eq!((model.as_str(), want, got), ("a", 128, 3));
+        }
+        other => panic!("want LengthMismatch, got {other:?}"),
+    }
+    // well-formed traffic on both models still flows afterwards
+    let ya = engine
+        .infer(InferRequest::f32("a", SHAPE_A, sample(2)))
+        .unwrap();
+    assert_eq!((ya.model.as_str(), ya.shape, ya.data.len()),
+               ("a", [3, 8, 8], 3 * 8 * 8));
+    let yb = engine
+        .infer(InferRequest::f32("b", SHAPE_A, sample(3)))
+        .unwrap();
+    assert_eq!((yb.model.as_str(), yb.data.len()), ("b", 16 * 8 * 8));
+    let stats = engine.stop().unwrap();
+    assert_eq!(stats.served, 2,
+               "rejected requests must never be enqueued");
+    assert_eq!(stats.per_model_requests,
+               vec![("a".to_string(), 1), ("b".to_string(), 1)]);
+}
+
+#[test]
+fn int8_requests_dequantize_at_admission() {
+    let engine = two_model_engine();
+    let x = sample(4);
+    let qp = QParams::fit(&x);
+    let q: Vec<i8> = x.iter().map(|&v| qp.quantize(v)).collect();
+    // the int8 request must equal an f32 request over the
+    // dequantized values, bit for bit (same engine, same model)
+    let deq: Vec<f32> =
+        q.iter().map(|&v| v as f32 * qp.scale).collect();
+    let y_q = engine
+        .infer(InferRequest::int8("a", SHAPE_A, q, qp.scale))
+        .unwrap();
+    let y_f = engine
+        .infer(InferRequest::f32("a", SHAPE_A, deq))
+        .unwrap();
+    assert_eq!(y_q.data, y_f.data);
+    engine.stop().unwrap();
+}
+
+/// Acceptance: a v1 `NetClient` (unchanged wire bytes) and a v2
+/// session client both get **bit-identical** outputs from the same
+/// engine hosting two named models.
+#[test]
+fn v1_and_v2_clients_agree_with_in_process_engine() {
+    let engine = two_model_engine();
+    let net = engine.listen("127.0.0.1:0", 64).unwrap();
+    let addr = net.local_addr().to_string();
+
+    let xs: Vec<Vec<f32>> = (0..3).map(|i| sample(100 + i)).collect();
+    // in-process references through the typed facade
+    let want_a: Vec<Vec<f32>> = xs
+        .iter()
+        .map(|x| {
+            engine
+                .infer(InferRequest::f32("a", SHAPE_A, x.clone()))
+                .unwrap()
+                .data
+        })
+        .collect();
+    let want_b: Vec<Vec<f32>> = xs
+        .iter()
+        .map(|x| {
+            engine
+                .infer(InferRequest::f32("b", SHAPE_A, x.clone()))
+                .unwrap()
+                .data
+        })
+        .collect();
+
+    // v1 client: no negotiation, routed to the default model ("a")
+    let mut v1 = NetClient::connect(&addr).unwrap();
+    for (x, want) in xs.iter().zip(&want_a) {
+        assert_eq!(&v1.infer(x).unwrap(), want,
+                   "v1 wire output differs from in-process");
+    }
+
+    // v2 f32 session against the *second* model
+    let mut v2 =
+        NetClientV2::connect(&addr, "b", SHAPE_A, Dtype::F32).unwrap();
+    assert_eq!(v2.out_shape(), [16, 8, 8]);
+    for (x, want) in xs.iter().zip(&want_b) {
+        assert_eq!(&v2.infer(x).unwrap(), want,
+                   "v2 wire output differs from in-process");
+    }
+
+    // v2 int8 session: wire bytes are quantized, the reply matches
+    // the in-process int8 request bit for bit
+    let mut v2q =
+        NetClientV2::connect(&addr, "b", SHAPE_A, Dtype::Int8)
+            .unwrap();
+    for x in &xs {
+        let qp = QParams::fit(x);
+        let q: Vec<i8> = x.iter().map(|&v| qp.quantize(v)).collect();
+        let want = engine
+            .infer(InferRequest::int8("b", SHAPE_A, q.clone(),
+                                      qp.scale))
+            .unwrap()
+            .data;
+        assert_eq!(v2q.infer_i8(&q, qp.scale).unwrap(), want,
+                   "v2 int8 wire output differs from in-process");
+    }
+
+    net.stop();
+    engine.stop().unwrap();
+}
+
+#[test]
+fn v2_hello_rejections_and_session_rules() {
+    let engine = two_model_engine();
+    let net = engine.listen("127.0.0.1:0", 64).unwrap();
+    let addr = net.local_addr().to_string();
+
+    // unknown model is rejected at negotiation
+    let err = NetClientV2::connect(&addr, "nope", SHAPE_A, Dtype::F32)
+        .unwrap_err();
+    assert!(format!("{err}").contains("unknown model"), "{err}");
+    // shape mismatch is rejected at negotiation
+    let err = NetClientV2::connect(&addr, "a", [2, 4, 4], Dtype::F32)
+        .unwrap_err();
+    assert!(format!("{err}").contains("expects input shape"), "{err}");
+    // int8 payloads need an int8 session
+    let mut f32_session =
+        NetClientV2::connect(&addr, "a", SHAPE_A, Dtype::F32).unwrap();
+    let err = f32_session.infer_i8(&[0i8; 128], 1.0).unwrap_err();
+    assert!(format!("{err}").contains("int8"), "{err}");
+    // a short buffer over a v2 session gets an Error frame and does
+    // not wedge the connection or the engine
+    let err = f32_session.infer(&[0.0; 3]).unwrap_err();
+    assert!(format!("{err}").contains("expected"), "{err}");
+    let y = f32_session.infer(&sample(5)).unwrap();
+    assert_eq!(y.len(), 3 * 8 * 8);
+
+    net.stop();
+    let stats = engine.stop().unwrap();
+    assert_eq!(stats.served, 1, "only the well-formed request ran");
+}
+
+/// Acceptance: two-model routing returns bit-identical results to two
+/// single-model engines (same specs, same seed, same backend).
+#[test]
+fn two_model_engine_matches_two_single_model_engines() {
+    let policy = || BatchPolicy { buckets: vec![1, 4],
+                                  max_wait_us: 300 };
+    let single = |name: &str, spec: ModelSpec| {
+        Engine::builder()
+            .model(name, spec)
+            .backend(BackendKind::Scalar)
+            .threads(1)
+            .seed(7)
+            .batch(policy())
+            .build()
+            .unwrap()
+    };
+    let both = Engine::builder()
+        .model("a", spec_a())
+        .model("b", spec_b())
+        .backend(BackendKind::Scalar)
+        .threads(1)
+        .seed(7)
+        .batch(policy())
+        .build()
+        .unwrap();
+    let only_a = single("a", spec_a());
+    let only_b = single("b", spec_b());
+
+    let xs: Vec<Vec<f32>> = (0..4).map(|i| sample(200 + i)).collect();
+    for x in &xs {
+        let multi_a = both
+            .infer(InferRequest::f32("a", SHAPE_A, x.clone()))
+            .unwrap();
+        let solo_a = only_a
+            .infer(InferRequest::f32("a", SHAPE_A, x.clone()))
+            .unwrap();
+        assert_eq!(multi_a.data, solo_a.data,
+                   "model a diverged between multi and single");
+        let multi_b = both
+            .infer(InferRequest::f32("b", SHAPE_A, x.clone()))
+            .unwrap();
+        let solo_b = only_b
+            .infer(InferRequest::f32("b", SHAPE_A, x.clone()))
+            .unwrap();
+        assert_eq!(multi_b.data, solo_b.data,
+                   "model b diverged between multi and single");
+    }
+    let stats = both.stop().unwrap();
+    assert_eq!(stats.per_model_requests,
+               vec![("a".to_string(), 4), ("b".to_string(), 4)]);
+    only_a.stop().unwrap();
+    only_b.stop().unwrap();
+}
+
+#[test]
+fn registry_exposes_model_geometry() {
+    let engine = two_model_engine();
+    let names: Vec<&str> =
+        engine.models().iter().map(|m| m.name.as_str()).collect();
+    assert_eq!(names, ["a", "b"]);
+    let a = engine.model("a").unwrap();
+    assert_eq!((a.in_shape, a.out_shape, a.sample_len(), a.out_len()),
+               (SHAPE_A, [3, 8, 8], 128, 192));
+    assert!(engine.model("zzz").is_none());
+    engine.stop().unwrap();
+}

@@ -10,25 +10,24 @@ use std::time::Duration;
 use wino_adder::coordinator::batcher::BatchPolicy;
 use wino_adder::coordinator::net::proto::{self, Frame};
 use wino_adder::coordinator::net::{NetClient, NetReply, NetServer};
-use wino_adder::coordinator::server::{NativeConfig, Server};
+use wino_adder::engine::Engine;
 use wino_adder::nn::backend::BackendKind;
 use wino_adder::nn::matrices::Variant;
+use wino_adder::nn::model::ModelSpec;
 use wino_adder::util::rng::Rng;
 
 const SAMPLE: usize = 2 * 8 * 8;
 
-fn tiny_cfg() -> NativeConfig {
-    NativeConfig {
-        backend: BackendKind::Scalar,
-        threads: 1,
-        kernel: Default::default(),
-        cin: 2,
-        cout: 3,
-        hw: 8,
-        variant: Variant::Balanced(0),
-        seed: 7,
-        model: None,
-    }
+fn tiny_engine(policy: BatchPolicy) -> Engine {
+    Engine::builder()
+        .model("default",
+               ModelSpec::single_layer(2, 3, 8, Variant::Balanced(0)))
+        .backend(BackendKind::Scalar)
+        .threads(1)
+        .seed(7)
+        .batch(policy)
+        .build()
+        .unwrap()
 }
 
 fn inputs(seed: u64, n: usize) -> Vec<Vec<f32>> {
@@ -39,8 +38,8 @@ fn inputs(seed: u64, n: usize) -> Vec<Vec<f32>> {
 #[test]
 fn net_path_matches_in_process_bit_for_bit() {
     let policy = BatchPolicy { buckets: vec![1], max_wait_us: 0 };
-    let (handle, join) =
-        Server::start_native(tiny_cfg(), policy).unwrap();
+    let engine = tiny_engine(policy);
+    let handle = engine.handle().clone();
     let xs = inputs(11, 5);
     let want: Vec<Vec<f32>> = xs
         .iter()
@@ -65,8 +64,7 @@ fn net_path_matches_in_process_bit_for_bit() {
     assert!(summary.bytes_out > 5 * SAMPLE as u64,
             "byte accounting looks wrong: {}", summary.bytes_out);
 
-    let mut stats = handle.stop().unwrap();
-    join.join().unwrap();
+    let mut stats = engine.stop().unwrap();
     stats.net = Some(summary);
     assert_eq!(stats.served, 10); // 5 in-process + 5 over the wire
     assert_eq!(stats.net.as_ref().unwrap().responses, 5);
@@ -75,8 +73,8 @@ fn net_path_matches_in_process_bit_for_bit() {
 #[test]
 fn pipelined_window_completes_in_request_order() {
     let policy = BatchPolicy { buckets: vec![1, 4], max_wait_us: 500 };
-    let (handle, join) =
-        Server::start_native(tiny_cfg(), policy).unwrap();
+    let engine = tiny_engine(policy);
+    let handle = engine.handle().clone();
     let xs = inputs(22, 8);
     let want: Vec<Vec<f32>> = xs
         .iter()
@@ -99,8 +97,7 @@ fn pipelined_window_completes_in_request_order() {
         }
     }
     net.stop();
-    handle.stop().unwrap();
-    join.join().unwrap();
+    engine.stop().unwrap();
 }
 
 #[test]
@@ -110,8 +107,8 @@ fn in_flight_cap_sheds_with_busy_frames() {
     // pipelined window hits the cap deterministically
     let policy =
         BatchPolicy { buckets: vec![1, 16], max_wait_us: 400_000 };
-    let (handle, join) =
-        Server::start_native(tiny_cfg(), policy).unwrap();
+    let engine = tiny_engine(policy);
+    let handle = engine.handle().clone();
     let net = NetServer::start(handle.clone(), "127.0.0.1:0", 1)
         .unwrap();
     let mut client =
@@ -130,15 +127,14 @@ fn in_flight_cap_sheds_with_busy_frames() {
     assert_eq!(summary.requests, 5);
     assert_eq!(summary.busy, 3);
     assert_eq!(summary.responses, 2);
-    handle.stop().unwrap();
-    join.join().unwrap();
+    engine.stop().unwrap();
 }
 
 #[test]
 fn client_reconnects_after_transport_error() {
     let policy = BatchPolicy { buckets: vec![1], max_wait_us: 0 };
-    let (handle, join) =
-        Server::start_native(tiny_cfg(), policy).unwrap();
+    let engine = tiny_engine(policy);
+    let handle = engine.handle().clone();
     let net = NetServer::start(handle.clone(), "127.0.0.1:0", 8)
         .unwrap();
     let addr = net.local_addr().to_string();
@@ -159,15 +155,14 @@ fn client_reconnects_after_transport_error() {
     let summary = net.stop();
     assert_eq!(summary.connections, 3);
     assert_eq!(summary.responses, 3);
-    handle.stop().unwrap();
-    join.join().unwrap();
+    engine.stop().unwrap();
 }
 
 #[test]
 fn wrong_sample_len_gets_an_error_frame() {
     let policy = BatchPolicy { buckets: vec![1], max_wait_us: 0 };
-    let (handle, join) =
-        Server::start_native(tiny_cfg(), policy).unwrap();
+    let engine = tiny_engine(policy);
+    let handle = engine.handle().clone();
     let net = NetServer::start(handle.clone(), "127.0.0.1:0", 8)
         .unwrap();
     let mut client =
@@ -183,15 +178,14 @@ fn wrong_sample_len_gets_an_error_frame() {
     let summary = net.stop();
     assert_eq!(summary.errors, 1);
     assert_eq!(summary.responses, 1);
-    handle.stop().unwrap();
-    join.join().unwrap();
+    engine.stop().unwrap();
 }
 
 #[test]
 fn malformed_bytes_get_protocol_error_then_hangup() {
     let policy = BatchPolicy { buckets: vec![1], max_wait_us: 0 };
-    let (handle, join) =
-        Server::start_native(tiny_cfg(), policy).unwrap();
+    let engine = tiny_engine(policy);
+    let handle = engine.handle().clone();
     let net = NetServer::start(handle.clone(), "127.0.0.1:0", 8)
         .unwrap();
     let mut raw =
@@ -209,8 +203,7 @@ fn malformed_bytes_get_protocol_error_then_hangup() {
     assert!(proto::read_frame(&mut raw).unwrap().is_none());
     let summary = net.stop();
     assert_eq!(summary.errors, 1);
-    handle.stop().unwrap();
-    join.join().unwrap();
+    engine.stop().unwrap();
 }
 
 #[test]
@@ -219,8 +212,8 @@ fn stop_drains_in_flight_replies() {
     // engine when stop() lands; the drain must still deliver them
     let policy =
         BatchPolicy { buckets: vec![1, 4], max_wait_us: 300_000 };
-    let (handle, join) =
-        Server::start_native(tiny_cfg(), policy).unwrap();
+    let engine = tiny_engine(policy);
+    let handle = engine.handle().clone();
     let net = NetServer::start(handle.clone(), "127.0.0.1:0", 16)
         .unwrap();
     let addr = net.local_addr().to_string();
@@ -236,15 +229,14 @@ fn stop_drains_in_flight_replies() {
     assert!(replies.iter().all(|r| matches!(r, NetReply::Output(_))),
             "drain dropped an admitted reply: {replies:?}");
     assert_eq!(summary.responses, 3);
-    handle.stop().unwrap();
-    join.join().unwrap();
+    engine.stop().unwrap();
 }
 
 #[test]
 fn serves_concurrent_connections() {
     let policy = BatchPolicy { buckets: vec![1, 4], max_wait_us: 300 };
-    let (handle, join) =
-        Server::start_native(tiny_cfg(), policy).unwrap();
+    let engine = tiny_engine(policy);
+    let handle = engine.handle().clone();
     let net = NetServer::start(handle.clone(), "127.0.0.1:0", 64)
         .unwrap();
     let addr = net.local_addr().to_string();
@@ -266,7 +258,6 @@ fn serves_concurrent_connections() {
     assert_eq!(summary.connections, 4);
     assert_eq!(summary.responses, 24);
     assert_eq!(summary.requests, 24);
-    let stats = handle.stop().unwrap();
-    join.join().unwrap();
+    let stats = engine.stop().unwrap();
     assert_eq!(stats.served, 24);
 }
