@@ -1,0 +1,370 @@
+//! A small Rust lexer for the invariant linter — just enough token
+//! structure to tell code from non-code.
+//!
+//! The rules in [`super::rules`] match token *sequences* (`Vec` `::`
+//! `new`, `.` `unwrap` `(`, ...), so the only job here is to produce
+//! those sequences without being fooled by the places denied spellings
+//! legally appear as text: line and block comments (nested), string
+//! literals (escapes, raw strings with any `#` count, byte strings),
+//! and char literals — including the classic trap `'"'`, a char
+//! literal holding a quote, which a naive scanner would read as the
+//! start of a string. Lifetimes (`'a`) are disambiguated from char
+//! literals the same way rustc's lexer does: an identifier after `'`
+//! with no closing quote is a lifetime.
+//!
+//! Every token carries its 1-based line number so findings and
+//! waivers anchor to `file:line`.
+
+/// What kind of lexeme a [`Tok`] is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`Vec`, `unsafe`, `fn`, ...).
+    Ident,
+    /// Numeric literal (`0`, `16usize`, `1e-4`, `0xff`).
+    Num,
+    /// String literal of any flavor: `"…"`, `r#"…"#`, `b"…"`.
+    /// `text` holds the *contents* (delimiters stripped).
+    Str,
+    /// Char literal (`'x'`, `'\''`, `'"'`); `text` holds the contents.
+    Char,
+    /// Lifetime (`'a`, `'static`); `text` holds the name without `'`.
+    Lifetime,
+    /// `// …` line comment (doc comments included); `text` holds the
+    /// full comment including the slashes.
+    LineComment,
+    /// `/* … */` block comment (nesting handled); `text` holds the
+    /// full comment. Anchored to the line it *starts* on.
+    BlockComment,
+    /// Any single punctuation byte (`.`, `[`, `!`, `#`, ...).
+    Punct,
+}
+
+/// One lexeme with its 1-based source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+impl Tok {
+    /// True for tokens the rules skip when matching code sequences.
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokKind::LineComment | TokKind::BlockComment)
+    }
+}
+
+/// Tokenize Rust source. Unterminated constructs (string/comment/char
+/// at EOF) are tolerated: the remainder becomes one final token, so
+/// the linter never panics on malformed input — it just stops finding
+/// things in it.
+pub fn lex(src: &str) -> Vec<Tok> {
+    Lexer { b: src.as_bytes(), i: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: usize,
+    out: Vec<Tok>,
+}
+
+impl Lexer<'_> {
+    fn run(mut self) -> Vec<Tok> {
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                c if c.is_ascii_whitespace() => self.i += 1,
+                b'/' if self.peek(1) == Some(b'/') => self.line_comment(),
+                b'/' if self.peek(1) == Some(b'*') => self.block_comment(),
+                b'"' => self.string(),
+                b'r' | b'b' => {
+                    // raw/byte string prefix, or just an identifier
+                    // that happens to start with r/b
+                    if !self.raw_or_byte_string() {
+                        self.ident();
+                    }
+                }
+                b'\'' => self.char_or_lifetime(),
+                c if c == b'_' || c.is_ascii_alphabetic() => self.ident(),
+                c if c.is_ascii_digit() => self.number(),
+                _ => {
+                    self.push_at(TokKind::Punct, (c as char).to_string(),
+                                 self.line);
+                    self.i += 1;
+                }
+            }
+        }
+        self.out
+    }
+
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.b.get(self.i + ahead).copied()
+    }
+
+    fn push_at(&mut self, kind: TokKind, text: String, line: usize) {
+        self.out.push(Tok { kind, text, line });
+    }
+
+    /// Count newlines in `b[from..self.i]` into `self.line`.
+    fn bump_lines(&mut self, from: usize) {
+        self.line += self.b[from..self.i]
+            .iter()
+            .filter(|&&c| c == b'\n')
+            .count();
+    }
+
+    fn line_comment(&mut self) {
+        let start = self.i;
+        while self.i < self.b.len() && self.b[self.i] != b'\n' {
+            self.i += 1;
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i])
+            .into_owned();
+        self.push_at(TokKind::LineComment, text, self.line);
+    }
+
+    fn block_comment(&mut self) {
+        let (start, line) = (self.i, self.line);
+        self.i += 2;
+        let mut depth = 1usize;
+        while self.i < self.b.len() && depth > 0 {
+            if self.b[self.i] == b'/' && self.peek(1) == Some(b'*') {
+                depth += 1;
+                self.i += 2;
+            } else if self.b[self.i] == b'*' && self.peek(1) == Some(b'/')
+            {
+                depth -= 1;
+                self.i += 2;
+            } else {
+                self.i += 1;
+            }
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i])
+            .into_owned();
+        self.bump_lines(start);
+        self.push_at(TokKind::BlockComment, text, line);
+    }
+
+    /// Plain `"…"` with `\`-escapes.
+    fn string(&mut self) {
+        let line = self.line;
+        self.i += 1;
+        let start = self.i;
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'\\' => self.i += 2,
+                b'"' => break,
+                _ => self.i += 1,
+            }
+        }
+        let text = String::from_utf8_lossy(
+            &self.b[start..self.i.min(self.b.len())])
+            .into_owned();
+        self.bump_lines(start);
+        if self.i < self.b.len() {
+            self.i += 1; // closing quote
+        }
+        self.push_at(TokKind::Str, text, line);
+    }
+
+    /// Handle `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#` at the current
+    /// position. Returns false (consuming nothing) if what follows is
+    /// actually an identifier like `raw` or `batch`.
+    fn raw_or_byte_string(&mut self) -> bool {
+        let mut j = self.i + 1;
+        if self.b[self.i] == b'b' && self.b.get(j) == Some(&b'r') {
+            j += 1; // br"…" / br#"…"#
+        }
+        let mut hashes = 0usize;
+        while self.b.get(j) == Some(&b'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if self.b.get(j) != Some(&b'"') {
+            return false;
+        }
+        if hashes == 0 && self.b[self.i] == b'b' && j == self.i + 1 {
+            // b"…": a plain string with a byte prefix — escapes apply
+            self.i += 1;
+            self.string();
+            return true;
+        }
+        // raw string: scan for `"` followed by `hashes` hash marks
+        let line = self.line;
+        let start = j + 1;
+        let mut k = start;
+        'scan: while k < self.b.len() {
+            if self.b[k] == b'"' {
+                let mut h = 0usize;
+                while h < hashes && self.b.get(k + 1 + h) == Some(&b'#') {
+                    h += 1;
+                }
+                if h == hashes {
+                    break 'scan;
+                }
+            }
+            k += 1;
+        }
+        let end = k.min(self.b.len());
+        let text =
+            String::from_utf8_lossy(&self.b[start..end]).into_owned();
+        self.i = (end + 1 + hashes).min(self.b.len());
+        let consumed_from = start;
+        // count lines across the whole literal
+        self.line += self.b[consumed_from..end]
+            .iter()
+            .filter(|&&c| c == b'\n')
+            .count();
+        self.push_at(TokKind::Str, text, line);
+        true
+    }
+
+    /// `'x'` / `'\n'` / `'"'` char literals vs `'a` lifetimes.
+    fn char_or_lifetime(&mut self) {
+        let line = self.line;
+        // escape: always a char literal
+        if self.peek(1) == Some(b'\\') {
+            let start = self.i + 1;
+            self.i += 2; // past '\
+            if self.i < self.b.len() {
+                self.i += 1; // the escaped char
+            }
+            // consume to closing quote (handles '\x7f', '\u{…}')
+            while self.i < self.b.len() && self.b[self.i] != b'\'' {
+                self.i += 1;
+            }
+            let text = String::from_utf8_lossy(&self.b[start..self.i])
+                .into_owned();
+            if self.i < self.b.len() {
+                self.i += 1;
+            }
+            self.push_at(TokKind::Char, text, line);
+            return;
+        }
+        // identifier-ish after the quote?
+        let is_ident_start = |c: u8| c == b'_' || c.is_ascii_alphabetic();
+        if self.peek(1).is_some_and(is_ident_start)
+            && self.peek(2) != Some(b'\'')
+        {
+            // lifetime: 'name with no closing quote one char later
+            let start = self.i + 1;
+            self.i += 1;
+            while self
+                .peek(0)
+                .is_some_and(|c| c == b'_' || c.is_ascii_alphanumeric())
+            {
+                self.i += 1;
+            }
+            let text = String::from_utf8_lossy(&self.b[start..self.i])
+                .into_owned();
+            self.push_at(TokKind::Lifetime, text, line);
+            return;
+        }
+        // char literal: any single char (including `"`) then `'`
+        let start = self.i + 1;
+        self.i += 1;
+        if self.i < self.b.len() {
+            self.i += 1; // the char itself
+        }
+        let text = String::from_utf8_lossy(
+            &self.b[start..self.i.min(self.b.len())])
+            .into_owned();
+        if self.peek(0) == Some(b'\'') {
+            self.i += 1;
+        }
+        self.push_at(TokKind::Char, text, line);
+    }
+
+    fn ident(&mut self) {
+        let start = self.i;
+        while self
+            .peek(0)
+            .is_some_and(|c| c == b'_' || c.is_ascii_alphanumeric())
+        {
+            self.i += 1;
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i])
+            .into_owned();
+        self.push_at(TokKind::Ident, text, self.line);
+    }
+
+    fn number(&mut self) {
+        let start = self.i;
+        // digits, underscores, type suffixes, hex, and float exponents
+        // all lump into one Num token — the rules never inspect the
+        // value, only that it is not an identifier
+        while self.peek(0).is_some_and(|c| {
+            c == b'_' || c == b'.' || c.is_ascii_alphanumeric()
+        }) {
+            // don't swallow a range operator `0..n` or a method call
+            // on a literal
+            if self.b[self.i] == b'.'
+                && self
+                    .peek(1)
+                    .is_some_and(|c| !c.is_ascii_digit())
+            {
+                break;
+            }
+            self.i += 1;
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i])
+            .into_owned();
+        self.push_at(TokKind::Num, text, self.line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn basic_stream() {
+        let toks = kinds("let x = v.unwrap();");
+        assert_eq!(toks[0], (TokKind::Ident, "let".into()));
+        assert_eq!(toks[3], (TokKind::Ident, "v".into()));
+        assert_eq!(toks[4], (TokKind::Punct, ".".into()));
+        assert_eq!(toks[5], (TokKind::Ident, "unwrap".into()));
+    }
+
+    #[test]
+    fn denied_spellings_in_strings_are_not_idents() {
+        let toks = kinds(r#"let s = "call .unwrap() and vec![]";"#);
+        assert!(toks
+            .iter()
+            .all(|(k, t)| *k != TokKind::Ident || t != "unwrap"));
+    }
+
+    #[test]
+    fn char_literal_holding_a_quote() {
+        // '"' must not open a string that swallows the rest
+        let toks = kinds("let q = '\"'; x.unwrap();");
+        assert!(toks.contains(&(TokKind::Char, "\"".into())));
+        assert!(toks.contains(&(TokKind::Ident, "unwrap".into())));
+    }
+
+    #[test]
+    fn lifetimes_are_not_chars() {
+        let toks = kinds("fn f<'a>(x: &'a str) -> &'static str { x }");
+        assert!(toks.contains(&(TokKind::Lifetime, "a".into())));
+        assert!(toks.contains(&(TokKind::Lifetime, "static".into())));
+        assert!(toks.iter().all(|(k, _)| *k != TokKind::Char));
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_tokens() {
+        let src = "a\n/* two\nlines */\nb";
+        let toks = lex(src);
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 2); // comment anchors to its start
+        assert_eq!(toks[2].line, 4); // b lands after the comment
+    }
+}

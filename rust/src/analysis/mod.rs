@@ -1,0 +1,260 @@
+//! In-tree invariant linter: panic-free serving, zero-alloc hot path,
+//! unsafe/SIMD hygiene, MSRV floor, and wire-protocol exhaustiveness —
+//! std-only, zero dependencies, enforced by the CI `lint-invariants`
+//! job.
+//!
+//! The repo carries three load-bearing contracts that used to exist
+//! only as convention: the steady-state hot path must not allocate
+//! (plan/workspace design), the serving tier must not panic under
+//! adversarial traffic, and the AVX2 kernels' soundness rests on
+//! `is_x86_feature_detected!` dispatch. This module turns them into
+//! machine-checked rules over a real token stream (see
+//! [`lexer`] — strings, comments, and char literals can't fool the
+//! matcher), with findings reported as `file:line: [rule] message`.
+//!
+//! # Waivers
+//!
+//! A finding can be explicitly waived in source, but only with a
+//! reason — a bare waiver is itself a finding (`waiver-syntax`):
+//!
+//! ```text
+//! // lint:allow(no-panic-serving) mutex poisoning is fatal by design
+//! // lint:allow-file(no-panic-serving) fixed-size header arithmetic
+//! ```
+//!
+//! A line waiver covers its own line and the next code line below it
+//! (so it can sit above the statement it waives, even when the waiver
+//! comment wraps); a file waiver covers the whole file.
+//! Unknown rule names and empty reasons do not suppress anything.
+//! Waivers must be plain `//` comments — doc comments (`///`, `//!`)
+//! are treated as documentation and never waive.
+//!
+//! # Entry points
+//!
+//! [`lint_source`] lints one in-memory file (fixture-testable with
+//! any path label); [`lint_tree`] walks a directory of `.rs` files.
+//! The `lint` subcommand in `main.rs` wraps `lint_tree` and exits
+//! non-zero when findings remain.
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use lexer::Tok;
+pub use rules::RULE_IDS;
+
+/// One lint violation, anchored to `path:line`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub path: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule,
+               self.message)
+    }
+}
+
+/// Parsed `lint:allow` annotations for one file.
+struct Waivers {
+    /// rule -> lines the waiver covers (the comment's line and the
+    /// one below it).
+    lines: BTreeMap<&'static str, Vec<usize>>,
+    /// Rules waived for the entire file.
+    file: Vec<&'static str>,
+    /// Malformed waivers (unknown rule / missing reason).
+    problems: Vec<Finding>,
+}
+
+/// Extract waivers from comment tokens. `lint:allow(<rule>) <reason>`
+/// and `lint:allow-file(<rule>) <reason>`; the reason is mandatory.
+fn parse_waivers(path: &str, toks: &[Tok]) -> Waivers {
+    let mut w = Waivers {
+        lines: BTreeMap::new(),
+        file: Vec::new(),
+        problems: Vec::new(),
+    };
+    for t in toks.iter().filter(|t| t.is_comment()) {
+        // waivers must be plain `//` comments: doc comments (`///`,
+        // `//!`, `/** */`) are documentation ABOUT the syntax, not
+        // annotations, and must neither waive nor misparse
+        if t.text.starts_with("///")
+            || t.text.starts_with("//!")
+            || t.text.starts_with("/**")
+            || t.text.starts_with("/*!")
+        {
+            continue;
+        }
+        let (is_file, rest) =
+            if let Some(r) = split_after(&t.text, "lint:allow-file(") {
+                (true, r)
+            } else if let Some(r) = split_after(&t.text, "lint:allow(")
+            {
+                (false, r)
+            } else {
+                continue;
+            };
+        let mut bad = |msg: String| {
+            w.problems.push(Finding {
+                path: path.to_string(),
+                line: t.line,
+                rule: "waiver-syntax",
+                message: msg,
+            });
+        };
+        let close = match rest.find(')') {
+            Some(c) => c,
+            None => {
+                bad("unterminated lint:allow(...) waiver".to_string());
+                continue;
+            }
+        };
+        let rule_name = rest.get(..close).unwrap_or("").trim();
+        let reason = rest.get(close + 1..).unwrap_or("").trim();
+        let rule = match RULE_IDS
+            .iter()
+            .find(|r| **r == rule_name)
+        {
+            Some(r) => *r,
+            None => {
+                bad(format!("waiver names unknown rule \
+                             `{rule_name}`; known rules: \
+                             {}", RULE_IDS.join(", ")));
+                continue;
+            }
+        };
+        if reason.is_empty() {
+            bad(format!("waiver for `{rule}` has no reason; a reason \
+                         is mandatory"));
+            continue;
+        }
+        if is_file {
+            w.file.push(rule);
+        } else {
+            // the waiver covers its own line and the next code line
+            // below it (so a wrapped waiver comment still reaches the
+            // statement it annotates)
+            let next_code = toks
+                .iter()
+                .find(|x| !x.is_comment() && x.line >= t.line)
+                .map(|x| x.line)
+                .unwrap_or(t.line + 1);
+            w.lines
+                .entry(rule)
+                .or_default()
+                .extend([t.line, next_code]);
+        }
+    }
+    w
+}
+
+/// The substring of `s` after the first occurrence of `pat`.
+fn split_after<'a>(s: &'a str, pat: &str) -> Option<&'a str> {
+    s.find(pat).map(|i| &s[i + pat.len()..])
+}
+
+impl Waivers {
+    fn suppresses(&self, f: &Finding) -> bool {
+        if f.rule == "waiver-syntax" {
+            return false;
+        }
+        if self.file.contains(&f.rule) {
+            return true;
+        }
+        self.lines
+            .get(f.rule)
+            .is_some_and(|ls| ls.contains(&f.line))
+    }
+}
+
+/// Lint one file's source text. `path_label` decides rule scope (see
+/// [`rules`]) and is echoed in findings — fixtures can pass any label.
+pub fn lint_source(path_label: &str, src: &str) -> Vec<Finding> {
+    let toks = lexer::lex(src);
+    let ctx = rules::Ctx::new(path_label, src, &toks);
+    let mut raw = Vec::new();
+    rules::run_all(&ctx, &mut raw);
+    let waivers = parse_waivers(path_label, &toks);
+    let mut out: Vec<Finding> = raw
+        .into_iter()
+        .filter(|f| !waivers.suppresses(f))
+        .collect();
+    out.extend(waivers.problems);
+    out.sort_by(|a, b| {
+        (a.line, a.rule, &a.message).cmp(&(b.line, b.rule, &b.message))
+    });
+    out
+}
+
+/// Walk `root` for `.rs` files (skipping `target/`, `.git/`, and
+/// `vendor/`) and lint each one. Paths in findings are relative to
+/// `root`, with `/` separators.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for file in &files {
+        let src = fs::read_to_string(file)?;
+        let rel = file
+            .strip_prefix(root)
+            .unwrap_or(file)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        out.extend(lint_source(&rel, &src));
+    }
+    Ok(out)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>)
+                    -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if name == "target" || name == ".git" || name == "vendor" {
+                continue;
+            }
+            collect_rs_files(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Render findings as the JSON document the CI job uploads.
+pub fn findings_to_json(findings: &[Finding]) -> Json {
+    let arr = findings
+        .iter()
+        .map(|f| {
+            let mut m = BTreeMap::new();
+            m.insert("file".to_string(), Json::Str(f.path.clone()));
+            m.insert("line".to_string(), Json::Num(f.line as f64));
+            m.insert("rule".to_string(),
+                     Json::Str(f.rule.to_string()));
+            m.insert("message".to_string(),
+                     Json::Str(f.message.clone()));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("findings".to_string(), Json::Arr(arr));
+    top.insert("count".to_string(),
+               Json::Num(findings.len() as f64));
+    Json::Obj(top)
+}

@@ -1,0 +1,638 @@
+//! The five invariant rules, matched over the token stream from
+//! [`super::lexer`].
+//!
+//! Each rule is a function `fn(&Ctx, &mut Vec<Finding>)`. Rules match
+//! token *sequences* (never raw text), so denied spellings inside
+//! strings and comments are invisible to them. Scope is decided per
+//! file from its path suffix (see [`Ctx::new`]); `#[cfg(test)]`
+//! regions are exempt from the alloc and panic rules because tests
+//! may allocate and unwrap freely.
+//!
+//! | rule id              | scope                                     |
+//! |----------------------|-------------------------------------------|
+//! | no-alloc-hot-path    | designated hot-path modules               |
+//! | no-panic-serving     | `src/coordinator/` and `src/engine/`      |
+//! | unsafe-hygiene       | every file                                |
+//! | msrv-guard           | every file (tests included — they compile |
+//! |                      | under the pinned MSRV too)                |
+//! | proto-exhaustiveness | `coordinator/net/proto.rs`                |
+
+use super::lexer::{Tok, TokKind};
+use super::Finding;
+
+/// Rule ids a `// lint:allow(...)` waiver may target.
+pub const RULE_IDS: [&str; 5] = [
+    "no-alloc-hot-path",
+    "no-panic-serving",
+    "unsafe-hygiene",
+    "msrv-guard",
+    "proto-exhaustiveness",
+];
+
+/// Modules whose steady-state paths must not allocate. `nn/plan.rs`
+/// mixes compile-time (alloc-heavy) and forward-path code, so it
+/// scopes the rule with `// lint:hot-path(begin)` / `(end)` markers;
+/// a listed file without markers is hot in its entirety.
+const HOT_PATH_FILES: [&str; 5] = [
+    "nn/backend/kernel.rs",
+    "nn/backend/simd.rs",
+    "nn/plan.rs",
+    "coordinator/batcher.rs",
+    "coordinator/router.rs",
+];
+
+/// std APIs stabilized after the pinned MSRV (1.73, `rust/Cargo.toml`
+/// `rust-version`). Seeded from an audit of current usage: `div_ceil`
+/// (1.73.0) is the in-tree high-water mark and is deliberately NOT
+/// listed. Matched as identifier tokens, so these names appearing in
+/// strings (like this table) never fire.
+const MSRV_DENY: [(&str, &str); 18] = [
+    ("LazyLock", "1.80.0"),
+    ("LazyCell", "1.80.0"),
+    ("unwrap_or_clone", "1.76.0"),
+    ("inspect_err", "1.76.0"),
+    ("is_none_or", "1.82.0"),
+    ("take_if", "1.80.0"),
+    ("trim_ascii", "1.80.0"),
+    ("trim_ascii_start", "1.80.0"),
+    ("trim_ascii_end", "1.80.0"),
+    ("first_chunk", "1.77.0"),
+    ("last_chunk", "1.77.0"),
+    ("split_first_chunk", "1.77.0"),
+    ("split_last_chunk", "1.77.0"),
+    ("isqrt", "1.84.0"),
+    ("byte_add", "1.75.0"),
+    ("byte_sub", "1.75.0"),
+    ("byte_offset_from", "1.75.0"),
+    ("offset_of", "1.77.0"),
+];
+
+/// Two-token-path denies (`Type::method`) that would be too generic as
+/// a bare identifier.
+const MSRV_DENY_PATHS: [(&str, &str, &str); 1] =
+    [("Error", "other", "1.74.0")];
+
+/// Keywords that, before a `[`, mean the bracket is a pattern or type,
+/// not an index expression.
+const KEYWORDS: [&str; 30] = [
+    "as", "async", "await", "box", "break", "const", "continue",
+    "crate", "dyn", "else", "enum", "fn", "for", "if", "impl", "in",
+    "let", "loop", "match", "mod", "move", "mut", "pub", "ref",
+    "return", "static", "struct", "trait", "use", "where",
+];
+
+/// Everything a rule needs about one file, precomputed once.
+pub struct Ctx<'a> {
+    pub path: &'a str,
+    /// All tokens, comments included (unsafe-hygiene reads comments).
+    pub toks: &'a [Tok],
+    /// Indices into `toks` of non-comment tokens, in order.
+    pub code: Vec<usize>,
+    /// Raw source lines (1-based access via `line_is`/`raw_line`).
+    pub lines: Vec<&'a str>,
+    /// Lines covered by a `#[cfg(test)]` item body.
+    test_lines: Vec<bool>,
+    /// For hot-path files: which lines the alloc rule covers.
+    /// `None` when the file is not a designated hot-path module.
+    hot_lines: Option<Vec<bool>>,
+}
+
+impl<'a> Ctx<'a> {
+    pub fn new(path: &'a str, src: &'a str, toks: &'a [Tok]) -> Ctx<'a> {
+        let code: Vec<usize> = toks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| !t.is_comment())
+            .map(|(i, _)| i)
+            .collect();
+        let lines: Vec<&str> = src.lines().collect();
+        let n = lines.len() + 2;
+        let test_lines = cfg_test_lines(toks, &code, n);
+        let hot_lines = hot_path_lines(path, toks, n);
+        Ctx { path, toks, code, lines, test_lines, hot_lines }
+    }
+
+    fn in_test(&self, line: usize) -> bool {
+        self.test_lines.get(line).copied().unwrap_or(false)
+    }
+
+    fn in_hot(&self, line: usize) -> bool {
+        match &self.hot_lines {
+            Some(mask) => mask.get(line).copied().unwrap_or(false),
+            None => false,
+        }
+    }
+
+    /// The code token at code-position `ci`, if any.
+    fn ct(&self, ci: usize) -> Option<&Tok> {
+        self.code.get(ci).map(|&i| &self.toks[i])
+    }
+
+    /// True if the code token at `ci` is punct `p`.
+    fn is_punct(&self, ci: usize, p: &str) -> bool {
+        self.ct(ci)
+            .is_some_and(|t| t.kind == TokKind::Punct && t.text == p)
+    }
+
+    /// True if the code token at `ci` is ident `name`.
+    fn is_ident(&self, ci: usize, name: &str) -> bool {
+        self.ct(ci)
+            .is_some_and(|t| t.kind == TokKind::Ident && t.text == name)
+    }
+}
+
+/// Mark lines inside `#[cfg(test)] <item> { ... }` bodies.
+fn cfg_test_lines(toks: &[Tok], code: &[usize], n: usize) -> Vec<bool> {
+    let mut mask = vec![false; n];
+    let tok = |ci: usize| -> Option<&Tok> {
+        code.get(ci).map(|&i| &toks[i])
+    };
+    let seq: [(TokKind, &str); 7] = [
+        (TokKind::Punct, "#"),
+        (TokKind::Punct, "["),
+        (TokKind::Ident, "cfg"),
+        (TokKind::Punct, "("),
+        (TokKind::Ident, "test"),
+        (TokKind::Punct, ")"),
+        (TokKind::Punct, "]"),
+    ];
+    let matches_at = |ci: usize| -> bool {
+        seq.iter().enumerate().all(|(k, (kind, text))| {
+            tok(ci + k)
+                .is_some_and(|t| t.kind == *kind && t.text == *text)
+        })
+    };
+    let mut ci = 0usize;
+    while ci < code.len() {
+        if !matches_at(ci) {
+            ci += 1;
+            continue;
+        }
+        // find the attributed item's body: first `{` after the attr,
+        // then its matching `}`
+        let mut j = ci + seq.len();
+        while let Some(t) = tok(j) {
+            if t.kind == TokKind::Punct && t.text == "{" {
+                break;
+            }
+            j += 1;
+        }
+        let (start_line, end_line) = brace_span(toks, code, j);
+        for line in start_line..=end_line.min(n - 1) {
+            if let Some(slot) = mask.get_mut(line) {
+                *slot = true;
+            }
+        }
+        ci = j.max(ci + 1);
+    }
+    mask
+}
+
+/// Given the code-position of a `{`, return (line of `{`, line of the
+/// matching `}`); unbalanced input closes at the last token.
+fn brace_span(toks: &[Tok], code: &[usize], open_ci: usize)
+              -> (usize, usize) {
+    let tok = |ci: usize| -> Option<&Tok> {
+        code.get(ci).map(|&i| &toks[i])
+    };
+    let start = tok(open_ci).map(|t| t.line).unwrap_or(1);
+    let mut depth = 0usize;
+    let mut ci = open_ci;
+    let mut last = start;
+    while let Some(t) = tok(ci) {
+        if t.kind == TokKind::Punct {
+            if t.text == "{" {
+                depth += 1;
+            } else if t.text == "}" {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    return (start, t.line);
+                }
+            }
+        }
+        last = t.line;
+        ci += 1;
+    }
+    (start, last)
+}
+
+/// Alloc-rule line mask for a designated hot-path file: whole file,
+/// unless `// lint:hot-path(begin)` / `(end)` markers carve regions.
+fn hot_path_lines(path: &str, toks: &[Tok], n: usize)
+                  -> Option<Vec<bool>> {
+    if !HOT_PATH_FILES.iter().any(|f| path.ends_with(f)) {
+        return None;
+    }
+    let mut mask: Option<Vec<bool>> = None;
+    let mut begin: Option<usize> = None;
+    for t in toks.iter().filter(|t| t.is_comment()) {
+        if t.text.contains("lint:hot-path(begin)") {
+            mask.get_or_insert_with(|| vec![false; n]);
+            begin = Some(t.line);
+        } else if t.text.contains("lint:hot-path(end)") {
+            if let (Some(m), Some(b)) = (mask.as_mut(), begin.take()) {
+                for line in b..=t.line.min(n - 1) {
+                    if let Some(slot) = m.get_mut(line) {
+                        *slot = true;
+                    }
+                }
+            }
+        }
+    }
+    // begin with no end: hot to EOF
+    if let (Some(m), Some(b)) = (mask.as_mut(), begin) {
+        for slot in m.iter_mut().skip(b) {
+            *slot = true;
+        }
+    }
+    // no markers at all: the whole file is hot
+    Some(mask.unwrap_or_else(|| vec![true; n]))
+}
+
+fn push(out: &mut Vec<Finding>, ctx: &Ctx, line: usize,
+        rule: &'static str, message: String) {
+    out.push(Finding {
+        path: ctx.path.to_string(),
+        line,
+        rule,
+        message,
+    });
+}
+
+/// Run every rule applicable to this file.
+pub fn run_all(ctx: &Ctx, out: &mut Vec<Finding>) {
+    no_alloc_hot_path(ctx, out);
+    no_panic_serving(ctx, out);
+    unsafe_hygiene(ctx, out);
+    msrv_guard(ctx, out);
+    proto_exhaustiveness(ctx, out);
+}
+
+/// Rule 1: no allocation in the hot path.
+/// Denied: `Vec::new`, `vec!`, `.to_vec()`, `.clone()` (method syntax
+/// — `Arc::clone(&x)` is the sanctioned refcount bump and stays
+/// legal), `Box::new`, `.collect()`.
+fn no_alloc_hot_path(ctx: &Ctx, out: &mut Vec<Finding>) {
+    if ctx.hot_lines.is_none() {
+        return;
+    }
+    for ci in 0..ctx.code.len() {
+        let t = match ctx.ct(ci) {
+            Some(t) => t,
+            None => break,
+        };
+        let line = t.line;
+        if !ctx.in_hot(line) || ctx.in_test(line) {
+            continue;
+        }
+        let hit: Option<&str> = if ctx.is_ident(ci, "Vec")
+            && ctx.is_punct(ci + 1, ":")
+            && ctx.is_punct(ci + 2, ":")
+            && ctx.is_ident(ci + 3, "new")
+        {
+            Some("Vec::new")
+        } else if ctx.is_ident(ci, "Box")
+            && ctx.is_punct(ci + 1, ":")
+            && ctx.is_punct(ci + 2, ":")
+            && ctx.is_ident(ci + 3, "new")
+        {
+            Some("Box::new")
+        } else if ctx.is_ident(ci, "vec") && ctx.is_punct(ci + 1, "!") {
+            Some("vec!")
+        } else if ctx.is_punct(ci, ".")
+            && ctx.is_punct(ci + 2, "(")
+            && ctx.is_ident(ci + 1, "to_vec")
+        {
+            Some(".to_vec()")
+        } else if ctx.is_punct(ci, ".")
+            && ctx.is_punct(ci + 2, "(")
+            && ctx.is_ident(ci + 1, "clone")
+        {
+            Some(".clone()")
+        } else if ctx.is_punct(ci, ".")
+            && ctx.is_punct(ci + 2, "(")
+            && ctx.is_ident(ci + 1, "collect")
+        {
+            Some(".collect()")
+        } else {
+            None
+        };
+        if let Some(what) = hit {
+            push(out, ctx, line, "no-alloc-hot-path",
+                 format!("`{what}` allocates in a hot-path module; \
+                          reuse a workspace buffer or move this off \
+                          the steady-state path"));
+        }
+    }
+}
+
+/// Rule 2: the serving tier must not panic.
+/// Denied in `src/coordinator/` and `src/engine/`: `.unwrap()`,
+/// `.expect(`, `panic!`, `unreachable!`, and `[idx]` index
+/// expressions (a `[` whose previous code token is a non-keyword
+/// identifier, `)`, `]`, or `?`).
+fn no_panic_serving(ctx: &Ctx, out: &mut Vec<Finding>) {
+    if !(ctx.path.contains("src/coordinator/")
+        || ctx.path.contains("src/engine/"))
+    {
+        return;
+    }
+    for ci in 0..ctx.code.len() {
+        let t = match ctx.ct(ci) {
+            Some(t) => t,
+            None => break,
+        };
+        let line = t.line;
+        if ctx.in_test(line) {
+            continue;
+        }
+        let hit: Option<(&str, &str)> = if ctx.is_punct(ci, ".")
+            && ctx.is_punct(ci + 2, "(")
+            && ctx.is_ident(ci + 1, "unwrap")
+        {
+            Some((".unwrap()", "propagate the error or handle None"))
+        } else if ctx.is_punct(ci, ".")
+            && ctx.is_punct(ci + 2, "(")
+            && ctx.is_ident(ci + 1, "expect")
+        {
+            Some((".expect(", "propagate the error instead of aborting"))
+        } else if ctx.is_ident(ci, "panic") && ctx.is_punct(ci + 1, "!")
+        {
+            Some(("panic!", "return a typed error"))
+        } else if ctx.is_ident(ci, "unreachable")
+            && ctx.is_punct(ci + 1, "!")
+        {
+            Some(("unreachable!", "return a typed error"))
+        } else if ctx.is_punct(ci, "[") && is_index_expr(ctx, ci) {
+            Some(("[idx] indexing",
+                  "use .get()/.get_mut() and handle the miss"))
+        } else {
+            None
+        };
+        if let Some((what, fix)) = hit {
+            push(out, ctx, line, "no-panic-serving",
+                 format!("`{what}` can panic in the serving tier; \
+                          {fix}"));
+        }
+    }
+}
+
+/// Is the `[` at code-position `ci` an index expression? True when the
+/// previous code token could be the end of a value expression: a
+/// non-keyword identifier, `)`, `]`, or `?`. Attribute brackets
+/// (prev `#`), `vec![` (prev `!`), slice patterns (prev `let`/`,`),
+/// and type positions (prev `:`/`&`/`<`/`(`/`=`/`>`) all miss.
+fn is_index_expr(ctx: &Ctx, ci: usize) -> bool {
+    let prev = match ci.checked_sub(1).and_then(|p| ctx.ct(p)) {
+        Some(t) => t,
+        None => return false,
+    };
+    match prev.kind {
+        TokKind::Ident => {
+            !KEYWORDS.contains(&prev.text.as_str())
+        }
+        TokKind::Punct => matches!(prev.text.as_str(), ")" | "]" | "?"),
+        _ => false,
+    }
+}
+
+/// Rule 3: unsafe hygiene. Every `unsafe` block or fn needs a
+/// `// SAFETY:` comment in its immediately preceding comment/attribute
+/// run (or on the same line); every `#[target_feature]` fn must be
+/// declared `unsafe` and the file must contain an
+/// `is_x86_feature_detected!` dispatch for the enabled feature.
+fn unsafe_hygiene(ctx: &Ctx, out: &mut Vec<Finding>) {
+    for ci in 0..ctx.code.len() {
+        if ctx.is_ident(ci, "unsafe") {
+            let line = match ctx.ct(ci) {
+                Some(t) => t.line,
+                None => break,
+            };
+            // `unsafe impl Send/Sync` and `unsafe trait` get the same
+            // treatment as blocks: a SAFETY comment above.
+            if !has_safety_comment(ctx, line) {
+                let what = if ctx.is_ident(ci + 1, "fn") {
+                    "unsafe fn"
+                } else {
+                    "unsafe block"
+                };
+                push(out, ctx, line, "unsafe-hygiene",
+                     format!("{what} without a `// SAFETY:` comment \
+                              stating why its preconditions hold"));
+            }
+        }
+        // #[target_feature(enable = "feat")]
+        if ctx.is_punct(ci, "#")
+            && ctx.is_punct(ci + 1, "[")
+            && ctx.is_ident(ci + 2, "target_feature")
+        {
+            check_target_feature(ctx, ci, out);
+        }
+    }
+}
+
+/// A SAFETY comment counts if it appears on the `unsafe` line itself
+/// or in the contiguous run of comment/attribute lines above it.
+fn has_safety_comment(ctx: &Ctx, line: usize) -> bool {
+    let same_line = ctx
+        .toks
+        .iter()
+        .any(|t| t.is_comment() && t.line == line
+             && t.text.contains("SAFETY:"));
+    if same_line {
+        return true;
+    }
+    // walk upward through doc comments, attributes, and blank lines
+    let mut l = line.saturating_sub(1);
+    while l >= 1 {
+        let raw = match ctx.lines.get(l - 1) {
+            Some(r) => r.trim(),
+            None => break,
+        };
+        let is_annotation = raw.starts_with("//")
+            || raw.starts_with("#[")
+            || raw.starts_with("#![")
+            || raw.starts_with('*')
+            || raw.starts_with("/*");
+        if !is_annotation {
+            break;
+        }
+        if raw.contains("SAFETY:") {
+            return true;
+        }
+        l -= 1;
+    }
+    false
+}
+
+/// Validate one `#[target_feature(...)]` attribute starting at the
+/// code-position of its `#`.
+fn check_target_feature(ctx: &Ctx, ci: usize, out: &mut Vec<Finding>) {
+    let line = match ctx.ct(ci) {
+        Some(t) => t.line,
+        None => return,
+    };
+    // the feature name is the first Str token inside the attribute;
+    // remember its toks-index so the dispatch search can exclude it
+    let mut feature: Option<(String, usize)> = None;
+    let mut j = ci + 3;
+    let mut close = ci + 3;
+    while let Some(&ti) = ctx.code.get(j) {
+        let t = &ctx.toks[ti];
+        if t.kind == TokKind::Str && feature.is_none() {
+            feature = Some((t.text.to_string(), ti));
+        }
+        if t.kind == TokKind::Punct && t.text == "]" {
+            close = j;
+            break;
+        }
+        j += 1;
+    }
+    // between `]` and the `fn` there must be an `unsafe` marker
+    // (other attributes and visibility may intervene)
+    let mut saw_unsafe = false;
+    let mut k = close + 1;
+    while let Some(&ti) = ctx.code.get(k) {
+        let t = &ctx.toks[ti];
+        if t.kind == TokKind::Ident && t.text == "unsafe" {
+            saw_unsafe = true;
+        }
+        if t.kind == TokKind::Ident && t.text == "fn" {
+            break;
+        }
+        k += 1;
+    }
+    if !saw_unsafe {
+        push(out, ctx, line, "unsafe-hygiene",
+             "#[target_feature] fn must be declared `unsafe`: callers \
+              must prove the CPU feature before calling"
+                 .to_string());
+    }
+    // the file must dispatch on runtime detection of this feature
+    let has_detect = ctx
+        .code
+        .iter()
+        .any(|&ti| {
+            let t = &ctx.toks[ti];
+            t.kind == TokKind::Ident
+                && t.text == "is_x86_feature_detected"
+        });
+    let feature_checked = match &feature {
+        Some((f, fi)) => ctx.toks.iter().enumerate().any(|(ti, t)| {
+            ti != *fi && t.kind == TokKind::Str && t.text == *f
+        }),
+        None => false,
+    };
+    if !has_detect || !feature_checked {
+        let f = feature
+            .as_ref()
+            .map(|(f, _)| f.as_str())
+            .unwrap_or("?");
+        push(out, ctx, line, "unsafe-hygiene",
+             format!("#[target_feature(enable = \"{f}\")] fn has no \
+                      `is_x86_feature_detected!(\"{f}\")` dispatch \
+                      call site in this file"));
+    }
+}
+
+/// Rule 4: MSRV guard — std APIs newer than the pinned 1.73 floor.
+fn msrv_guard(ctx: &Ctx, out: &mut Vec<Finding>) {
+    for ci in 0..ctx.code.len() {
+        let t = match ctx.ct(ci) {
+            Some(t) => t,
+            None => break,
+        };
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        for (name, since) in MSRV_DENY {
+            if t.text == name {
+                push(out, ctx, t.line, "msrv-guard",
+                     format!("`{name}` was stabilized in Rust {since}, \
+                              newer than the pinned 1.73 MSRV"));
+            }
+        }
+        for (ty, method, since) in MSRV_DENY_PATHS {
+            if t.text == ty
+                && ctx.is_punct(ci + 1, ":")
+                && ctx.is_punct(ci + 2, ":")
+                && ctx.is_ident(ci + 3, method)
+            {
+                push(out, ctx, t.line, "msrv-guard",
+                     format!("`{ty}::{method}` was stabilized in Rust \
+                              {since}, newer than the pinned 1.73 \
+                              MSRV"));
+            }
+        }
+    }
+}
+
+/// Rule 5: every `KIND_*` frame constant declared in
+/// `coordinator/net/proto.rs` must appear inside the `read_frame`
+/// decoder body — a new frame kind cannot be added without teaching
+/// the decoder about it.
+fn proto_exhaustiveness(ctx: &Ctx, out: &mut Vec<Finding>) {
+    if !ctx.path.ends_with("coordinator/net/proto.rs") {
+        return;
+    }
+    // collect `const KIND_X: u8 = ...` declarations
+    let mut kinds: Vec<(String, usize)> = Vec::new();
+    for ci in 0..ctx.code.len() {
+        if ctx.is_ident(ci, "const") {
+            if let Some(t) = ctx.ct(ci + 1) {
+                if t.kind == TokKind::Ident
+                    && t.text.starts_with("KIND_")
+                {
+                    kinds.push((t.text.to_string(), t.line));
+                }
+            }
+        }
+    }
+    if kinds.is_empty() {
+        push(out, ctx, 1, "proto-exhaustiveness",
+             "no `const KIND_*` frame-kind declarations found; the \
+              wire protocol must name its frame kinds"
+                 .to_string());
+        return;
+    }
+    // locate fn read_frame and its brace-matched body
+    let mut body: Option<(usize, usize)> = None;
+    for ci in 0..ctx.code.len() {
+        if ctx.is_ident(ci, "fn") && ctx.is_ident(ci + 1, "read_frame")
+        {
+            let mut j = ci + 2;
+            while let Some(t) = ctx.ct(j) {
+                if t.kind == TokKind::Punct && t.text == "{" {
+                    break;
+                }
+                j += 1;
+            }
+            body = Some(brace_span(ctx.toks, &ctx.code, j));
+            break;
+        }
+    }
+    let (lo, hi) = match body {
+        Some(span) => span,
+        None => {
+            push(out, ctx, 1, "proto-exhaustiveness",
+                 "decoder `fn read_frame` not found".to_string());
+            return;
+        }
+    };
+    for (name, decl_line) in &kinds {
+        let used = ctx.code.iter().any(|&ti| {
+            let t = &ctx.toks[ti];
+            t.kind == TokKind::Ident
+                && t.text == *name
+                && t.line >= lo
+                && t.line <= hi
+                && t.line != *decl_line
+        });
+        if !used {
+            push(out, ctx, *decl_line, "proto-exhaustiveness",
+                 format!("frame kind `{name}` is declared but never \
+                          matched inside `read_frame`; the decoder \
+                          would silently drop or misroute this frame"));
+        }
+    }
+}

@@ -27,6 +27,8 @@ pub struct BatchPolicy {
 
 impl Default for BatchPolicy {
     fn default() -> Self {
+        // lint:allow(no-alloc-hot-path) policy construction runs once
+        // at startup, never on the request path
         BatchPolicy { buckets: vec![1, 4, 16], max_wait_us: 2_000 }
     }
 }
@@ -75,8 +77,12 @@ impl<T> Batcher<T> {
     pub fn new(policy: BatchPolicy) -> Batcher<T> {
         assert!(policy.buckets.contains(&1),
                 "bucket 1 required so any queue can drain");
-        assert!(policy.buckets.windows(2).all(|w| w[0] < w[1]),
-                "buckets must be ascending");
+        let ascending = policy
+            .buckets
+            .iter()
+            .zip(policy.buckets.iter().skip(1))
+            .all(|(a, b)| a < b);
+        assert!(ascending, "buckets must be ascending");
         Batcher { policy, queue: VecDeque::new(), next_id: 0,
                   submitted: 0, dispatched: 0 }
     }
@@ -94,29 +100,60 @@ impl<T> Batcher<T> {
         self.queue.len()
     }
 
-    /// Poll: dispatch the next batch if the policy fires.
-    pub fn poll(&mut self, now_us: u64) -> Option<Vec<Request<T>>> {
+    /// Batch size the policy would dispatch right now, if any.
+    /// Allocation-free: pairs with [`Batcher::take_into`] on the serve
+    /// loop's steady-state path.
+    pub fn next_batch_size(&self, now_us: u64) -> Option<usize> {
         let oldest_wait = self
             .queue
             .front()
             .map(|r| now_us.saturating_sub(r.arrived_us))?;
-        let size = self.policy.decide(self.queue.len(), oldest_wait)?;
-        let batch: Vec<Request<T>> =
-            self.queue.drain(..size).collect();
-        self.dispatched += batch.len() as u64;
+        self.policy.decide(self.queue.len(), oldest_wait)
+    }
+
+    /// Size of the next shutdown-drain batch: the largest bucket that
+    /// fits the current queue, `None` once the queue is empty.
+    /// Allocation- and panic-free (bucket 1 is asserted at
+    /// construction, so a non-empty queue always has a fitting
+    /// bucket).
+    pub fn next_flush_size(&self) -> Option<usize> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        self.policy.largest_fitting(self.queue.len())
+    }
+
+    /// Move the next `size` requests into `out`, clearing it first —
+    /// the caller keeps one batch buffer alive across iterations, so
+    /// the steady state does not allocate once the buffer has grown to
+    /// the largest bucket.
+    pub fn take_into(&mut self, size: usize, out: &mut Vec<Request<T>>) {
+        out.clear();
+        let take = size.min(self.queue.len());
+        out.extend(self.queue.drain(..take));
+        self.dispatched += take as u64;
+    }
+
+    /// Poll: dispatch the next batch if the policy fires, as an owned
+    /// `Vec` — the test/bench convenience wrapper around
+    /// [`Batcher::next_batch_size`] + [`Batcher::take_into`].
+    pub fn poll(&mut self, now_us: u64) -> Option<Vec<Request<T>>> {
+        let size = self.next_batch_size(now_us)?;
+        // lint:allow(no-alloc-hot-path) owned-batch convenience; the
+        // serve loop reuses a buffer via take_into instead
+        let mut batch = Vec::with_capacity(size);
+        self.take_into(size, &mut batch);
         Some(batch)
     }
 
-    /// Drain everything in valid buckets (shutdown path).
+    /// Drain everything in valid buckets (shutdown path; runs once).
     pub fn flush(&mut self) -> Vec<Vec<Request<T>>> {
+        // lint:allow(no-alloc-hot-path) shutdown-only drain
         let mut out = Vec::new();
-        while !self.queue.is_empty() {
-            let size = self
-                .policy
-                .largest_fitting(self.queue.len())
-                .expect("bucket 1 exists");
-            let batch: Vec<Request<T>> = self.queue.drain(..size).collect();
-            self.dispatched += batch.len() as u64;
+        while let Some(size) = self.next_flush_size() {
+            // lint:allow(no-alloc-hot-path) shutdown-only drain
+            let mut batch = Vec::with_capacity(size);
+            self.take_into(size, &mut batch);
             out.push(batch);
         }
         out

@@ -37,7 +37,7 @@ impl LatencyStats {
         sorted.sort_unstable();
         let rank = ((pct / 100.0) * (sorted.len() as f64 - 1.0)).round()
             as usize;
-        Some(sorted[rank.min(sorted.len() - 1)])
+        sorted.get(rank.min(sorted.len() - 1)).copied()
     }
 
     pub fn mean_us(&self) -> f64 {

@@ -65,7 +65,10 @@ impl NetClient {
         if self.conn.is_none() {
             self.conn = Some(dial(&self.addr)?);
         }
-        Ok(self.conn.as_mut().unwrap())
+        self.conn
+            .as_mut()
+            .ok_or_else(|| anyhow!("connection lost immediately after \
+                                    dial to {}", self.addr))
     }
 
     /// Drop the pooled connection; the next call dials afresh.
@@ -276,7 +279,11 @@ impl NetClientV2 {
         F: Fn(&mut Conn) -> Result<()>,
     {
         self.ensure_conn()?;
-        let conn = self.conn.as_mut().expect("ensured above");
+        let conn = self
+            .conn
+            .as_mut()
+            .ok_or_else(|| anyhow!("session vanished after \
+                                    negotiation"))?;
         let res = exchange_with(conn, &write);
         if res.is_err() {
             self.conn = None;

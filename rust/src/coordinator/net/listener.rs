@@ -189,6 +189,9 @@ impl NetServer {
         // no new connections can appear now: close all read halves and
         // wait for the connection threads to drain their replies
         let joins = {
+            // lint:allow(no-panic-serving) lock poisoning means a
+            // connection thread already panicked; aborting shutdown
+            // cleanup is the only sane response
             let mut reg = self.conns.lock().unwrap();
             for stream in reg.streams.values() {
                 let _ = stream.shutdown(Shutdown::Read);
@@ -211,6 +214,9 @@ fn spawn_connection(stream: TcpStream, handle: ServerHandle,
     let Ok(read_half) = stream.try_clone() else { return };
     let Ok(registered) = stream.try_clone() else { return };
     let conn_id = {
+        // lint:allow(no-panic-serving) registry mutex poisoning is
+        // fatal by design — no thread panics while holding it short
+        // of a coordinator bug
         let mut reg = conns.lock().unwrap();
         let id = reg.next_id;
         reg.next_id += 1;
@@ -235,9 +241,13 @@ fn spawn_connection(stream: TcpStream, handle: ServerHandle,
             reader_loop(read_half, &handle, &reply_tx, &counters,
                         &in_flight, cap);
             drop(reply_tx); // lets the writer drain and exit
+            // lint:allow(no-panic-serving) poisoned registry: this
+            // reader thread is exiting anyway, propagating is fine
             conns.lock().unwrap().streams.remove(&conn_id);
         })
     };
+    // lint:allow(no-panic-serving) registry mutex poisoning is fatal
+    // by design (see above); the accept loop cannot continue without it
     let mut reg = conns.lock().unwrap();
     // reap handles of connections that already finished, so a
     // long-running `serve --listen` doesn't accumulate one pair per

@@ -35,6 +35,8 @@ pub struct Router {
 
 impl Router {
     pub fn new() -> Router {
+        // lint:allow(no-alloc-hot-path) router construction runs once
+        // at startup, not on the request path
         Router { lanes: Vec::new() }
     }
 
@@ -80,17 +82,22 @@ impl Router {
     /// Mark a routed batch finished (the batch size equals the lane's
     /// bucket — bucket affinity is a routing invariant).
     pub fn complete(&mut self, lane_id: usize) {
-        let lane = &mut self.lanes[lane_id];
-        assert!(lane.in_flight > 0, "complete without route");
-        lane.in_flight -= 1;
+        // an unknown lane id is a coordinator bug, but the serving
+        // tier degrades to a dropped stat rather than a panic
+        let lane = match self.lanes.get_mut(lane_id) {
+            Some(lane) => lane,
+            None => return,
+        };
+        debug_assert!(lane.in_flight > 0, "complete without route");
+        lane.in_flight = lane.in_flight.saturating_sub(1);
         lane.completed += 1;
         lane.samples += lane.bucket as u64;
     }
 
     /// Buckets with at least one lane, ascending.
     pub fn buckets(&self) -> Vec<usize> {
-        let mut set: Vec<usize> =
-            self.lanes.iter().map(|l| l.bucket).collect();
+        // lint:allow(no-alloc-hot-path) cold stats helper for reports
+        let mut set: Vec<_> = self.lanes.iter().map(|l| l.bucket).collect();
         set.sort();
         set.dedup();
         set

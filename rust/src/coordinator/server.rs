@@ -26,7 +26,7 @@ use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::{BatchPolicy, Batcher, Request};
 use super::metrics::{LatencyStats, NetSummary};
 use super::router::Router;
 use crate::engine::ModelInfo;
@@ -125,9 +125,10 @@ impl ServerHandle {
     }
 
     /// Flat input length the **default** (first-registered) model
-    /// expects per request.
+    /// expects per request (0 if somehow no model is registered —
+    /// construction guarantees at least one).
     pub fn sample_len(&self) -> usize {
-        self.models[0].sample_len()
+        self.models.first().map(ModelInfo::sample_len).unwrap_or(0)
     }
 
     /// Submit a request for model `model` (dense index) without
@@ -474,6 +475,23 @@ impl BatchExec for PjrtExec {
     }
 }
 
+/// Enqueue one request on its model's batcher, or reply with an error
+/// if the model index is out of range. The typed engine facade
+/// validates indices before they reach the channel, so the miss arm is
+/// a defensive reply path, not a panic.
+fn submit_or_reject(batchers: &mut [Batcher<InferMsg>], m: InferMsg,
+                    now_us: u64) {
+    match batchers.get_mut(m.model) {
+        Some(b) => {
+            b.submit(m, now_us);
+        }
+        None => {
+            let msg = format!("unknown model index {}", m.model);
+            let _ = m.resp.send(Err(msg));
+        }
+    }
+}
+
 /// The serving loop shared by every substrate: drain requests, batch
 /// per model, route to a `(model, bucket)` lane, execute, reply, and
 /// report stats on stop.
@@ -497,7 +515,9 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
     let mut latency = LatencyStats::new();
     let mut batches = 0u64;
     let mut stop_reply: Option<mpsc::Sender<ServerStats>> = None;
-    // batch staging buffer, reused across batches (grown once)
+    // batch staging buffers, reused across batches (grown once):
+    // `batch` holds the drained requests, `xbuf` their packed inputs
+    let mut batch: Vec<Request<InferMsg>> = Vec::new();
     let mut xbuf: Vec<f32> = Vec::new();
 
     'outer: loop {
@@ -505,14 +525,13 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
         let timeout = Duration::from_micros(200);
         match rx.recv_timeout(timeout) {
             Ok(Msg::Infer(m)) => {
-                let midx = m.model;
-                batchers[midx].submit(m, now_us(&start));
+                submit_or_reject(&mut batchers, m, now_us(&start));
                 // opportunistically drain without blocking
                 while let Ok(msg) = rx.try_recv() {
                     match msg {
                         Msg::Infer(m) => {
-                            let midx = m.model;
-                            batchers[midx].submit(m, now_us(&start));
+                            submit_or_reject(&mut batchers, m,
+                                             now_us(&start));
                         }
                         Msg::Stop(s) => {
                             stop_reply = Some(s);
@@ -532,20 +551,15 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
         // model's whole queue (the seed took only the first flushed
         // batch, dropping the rest)
         let drain = stop_reply.is_some();
-        for midx in 0..batchers.len() {
-            let mut flushed = if drain {
-                batchers[midx].flush()
-            } else {
-                Vec::new()
-            }
-            .into_iter();
+        for (midx, batcher) in batchers.iter_mut().enumerate() {
             loop {
-                let batch = if drain {
-                    flushed.next()
+                let size = if drain {
+                    batcher.next_flush_size()
                 } else {
-                    batchers[midx].poll(now_us(&start))
+                    batcher.next_batch_size(now_us(&start))
                 };
-                let Some(batch) = batch else { break };
+                let Some(size) = size else { break };
+                batcher.take_into(size, &mut batch);
                 let size = batch.len();
                 let lane_id =
                     router.route_for(midx, size).ok_or_else(|| {
@@ -560,17 +574,32 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
                 router.complete(lane_id);
                 batches += 1;
                 match result {
-                    Ok(y) => {
-                        for (i, r) in batch.into_iter().enumerate() {
-                            let piece = y[i * per_sample
-                                          ..(i + 1) * per_sample]
-                                .to_vec();
+                    // slice the batch output into per-request replies;
+                    // a shape mismatch becomes an error reply, never a
+                    // panic (y.chunks(0) would panic, hence the guard)
+                    Ok(y) if per_sample > 0
+                        && y.len() == per_sample * size =>
+                    {
+                        for (r, piece) in
+                            batch.drain(..).zip(y.chunks(per_sample))
+                        {
                             latency.record(r.payload.submitted.elapsed());
-                            let _ = r.payload.resp.send(Ok(piece));
+                            let _ =
+                                r.payload.resp.send(Ok(piece.to_vec()));
+                        }
+                    }
+                    Ok(y) => {
+                        let msg = format!(
+                            "output shape mismatch: {} values for \
+                             batch of {size} ({per_sample} per sample)",
+                            y.len());
+                        for r in batch.drain(..) {
+                            let _ =
+                                r.payload.resp.send(Err(msg.clone()));
                         }
                     }
                     Err(e) => {
-                        for r in batch {
+                        for r in batch.drain(..) {
                             let _ =
                                 r.payload.resp.send(Err(format!("{e}")));
                         }

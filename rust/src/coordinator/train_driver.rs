@@ -83,8 +83,15 @@ pub struct TrainReport {
 impl TrainReport {
     /// Smoothed final training loss (mean of last 10 steps).
     pub fn final_loss(&self) -> f32 {
-        let tail = &self.history[self.history.len().saturating_sub(10)..];
-        tail.iter().map(|r| r.loss).sum::<f32>() / tail.len().max(1) as f32
+        let n = self.history.len().min(10);
+        let sum: f32 = self
+            .history
+            .iter()
+            .rev()
+            .take(n)
+            .map(|r| r.loss)
+            .sum();
+        sum / n.max(1) as f32
     }
 }
 
@@ -118,6 +125,8 @@ impl BackendEval {
     }
 
     pub fn out_channels(&self) -> usize {
+        // lint:allow(no-panic-serving) constant index into the
+        // fixed-size [usize; 4] Tensor::dims array
         self.w_hat.dims[0]
     }
 
@@ -127,6 +136,8 @@ impl BackendEval {
                     hw: usize) -> (Vec<f32>, usize) {
         assert_eq!(images.len(), b * channels * hw * hw,
                    "batch shape mismatch");
+        // lint:allow(no-panic-serving) constant index into the
+        // fixed-size [usize; 4] Tensor::dims array
         assert_eq!(channels, self.w_hat.dims[1], "channel mismatch");
         let x = Tensor::from_vec(images.to_vec(),
                                  [b, channels, hw, hw]);

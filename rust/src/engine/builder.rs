@@ -158,7 +158,12 @@ impl EngineBuilder {
             return Err(EngineError::NoModels);
         }
         for (i, (name, ..)) in self.models.iter().enumerate() {
-            if self.models[..i].iter().any(|(n, ..)| n == name) {
+            let dup = self
+                .models
+                .iter()
+                .take(i)
+                .any(|(n, ..)| n == name);
+            if dup {
                 return Err(EngineError::DuplicateModel(name.clone()));
             }
         }
@@ -204,7 +209,12 @@ fn validate_policy(policy: &BatchPolicy)
         return Err(EngineError::BadBatchPolicy(
             "bucket 1 required so any queue can drain".into()));
     }
-    if !policy.buckets.windows(2).all(|w| w[0] < w[1]) {
+    let ascending = policy
+        .buckets
+        .iter()
+        .zip(policy.buckets.iter().skip(1))
+        .all(|(a, b)| a < b);
+    if !ascending {
         return Err(EngineError::BadBatchPolicy(
             format!("buckets must be strictly ascending: {:?}",
                     policy.buckets)));

@@ -28,7 +28,11 @@
 //!   - [`data`]: procedural dataset generators (MNIST-/CIFAR-like),
 //!   - [`tsne`], [`viz`]: the Figure 3/4/5 visualisation tooling,
 //!   - [`util`]: offline-environment substitutes (JSON, CLI, testkit,
-//!     error handling).
+//!     error handling),
+//!   - [`analysis`]: the in-tree invariant linter behind the `lint`
+//!     subcommand and the CI `lint-invariants` job (panic-free
+//!     serving, zero-alloc hot path, unsafe/SIMD hygiene, MSRV
+//!     floor, protocol exhaustiveness).
 //!
 //! ## Build modes
 //!
@@ -47,6 +51,7 @@
 //! Python invocation, after which the `wino-adder` binary is
 //! self-contained.
 
+pub mod analysis;
 pub mod coordinator;
 pub mod data;
 pub mod engine;

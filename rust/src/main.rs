@@ -17,6 +17,10 @@
 //!   heatmap   Figure-4 grid-artifact comparison (std vs balanced A)
 //!   golden    integration check vs Python-pinned golden outputs
 //!             (needs --features pjrt)
+//!   lint      in-tree invariant linter (analysis::lint_tree): panic-
+//!             free serving, zero-alloc hot path, unsafe hygiene,
+//!             MSRV guard, protocol exhaustiveness; non-zero exit on
+//!             findings — the CI `lint-invariants` job runs this
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -50,6 +54,7 @@ fn main() {
         Some("tsne") => cmd_tsne(&args),
         Some("heatmap") => cmd_heatmap(&args),
         Some("golden") => cmd_golden(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             print_help();
             Ok(())
@@ -90,7 +95,9 @@ fn print_help() {
          \x20 fpga-sim [--cin N --cout N --hw N --par N]\n\
          \x20 tsne     [--backend ...] [--features N] [--csv PATH]\n\
          \x20 heatmap  [--hw N --cin N]\n\
-         \x20 golden                                                 (pjrt)\n\n\
+         \x20 golden                                                 (pjrt)\n\
+         \x20 lint     [--path DIR] [--json] [--out FILE]  invariant \
+         linter\n\n\
          Common: --artifacts DIR (default ./artifacts)\n\
          Default build serves on the rust-native CPU backends; build \
          with --features pjrt for the AOT artifact runtime."
@@ -851,4 +858,38 @@ fn cmd_golden(args: &Args) -> Result<()> {
 #[cfg(not(feature = "pjrt"))]
 fn cmd_golden(_args: &Args) -> Result<()> {
     Err(pjrt_unavailable("golden"))
+}
+
+/// `lint [--path DIR] [--json] [--out FILE]` — run the in-tree
+/// invariant linter (`analysis::lint_tree`) and exit non-zero when
+/// findings remain. `--json` prints the machine-readable report to
+/// stdout; `--out FILE` writes the same report to disk regardless
+/// (the CI `lint-invariants` job uploads it as an artifact while the
+/// exit code stays blocking).
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = PathBuf::from(args.get_or("path", "."));
+    let findings = wino_adder::analysis::lint_tree(&root)
+        .map_err(|e| anyhow!("lint walk of {} failed: {e}",
+                             root.display()))?;
+    let report = wino_adder::analysis::findings_to_json(&findings)
+        .dump();
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &report)
+            .map_err(|e| anyhow!("writing {out}: {e}"))?;
+    }
+    if args.has("json") {
+        println!("{report}");
+    } else {
+        for f in &findings {
+            println!("{f}");
+        }
+    }
+    if findings.is_empty() {
+        if !args.has("json") {
+            println!("lint: clean ({} ok)", root.display());
+        }
+        Ok(())
+    } else {
+        Err(anyhow!("lint: {} finding(s)", findings.len()))
+    }
 }

@@ -172,6 +172,8 @@ pub fn output_transform_flat_i32(variant: Variant) -> [[i32; 4]; 16] {
 /// math via `wino_adder::untile_map_into`).
 pub fn untile_i32(y: &[i32], n: usize, o: usize, th: usize, tw: usize)
                   -> Vec<i32> {
+    // lint:allow(no-alloc-hot-path) legacy oracle helper kept for the
+    // property tests; the planned path uses untile_i32_scaled_into
     let mut out = vec![0i32; n * o * 4 * th * tw];
     crate::nn::wino_adder::untile_map_into(y, n, o, th, tw, &mut out,
                                            |v| v);

@@ -107,8 +107,14 @@ pub fn sad_gemm_pm_f32(d_pm: &[f32], w_pm: &[f32], dims: StageDims,
     #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
     {
         if std::arch::is_x86_feature_detected!("avx2") {
-            // SAFETY: AVX2 presence was just checked; bounds were
-            // checked by `check_pm` above.
+            // SAFETY: `is_x86_feature_detected!("avx2")` returned true
+            // on the line above, satisfying the callee's
+            // `#[target_feature(enable = "avx2")]` contract. Slice
+            // shapes were just validated by `check_pm`:
+            // d_pm.len() == 16*C*T, w_pm.len() == 16*O*C, and
+            // y.len() == (t1-t0)*O*4 with t1 <= T, so every pointer
+            // the kernel derives from these slices stays in bounds
+            // (see the kernel's own SAFETY paragraph).
             unsafe {
                 avx2::sad_gemm_pm_f32(d_pm, w_pm, dims, span, s, y);
             }
@@ -129,8 +135,14 @@ pub fn sad_gemm_pm_i8(d_pm: &[i16], w_pm: &[i16], dims: StageDims,
     #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
     {
         if std::arch::is_x86_feature_detected!("avx2") {
-            // SAFETY: AVX2 presence was just checked; bounds were
-            // checked by `check_pm` above.
+            // SAFETY: `is_x86_feature_detected!("avx2")` returned true
+            // on the line above, satisfying the callee's
+            // `#[target_feature(enable = "avx2")]` contract. Slice
+            // shapes were just validated by `check_pm`:
+            // d_pm.len() == 16*C*T, w_pm.len() == 16*O*C, and
+            // y.len() == (t1-t0)*O*4 with t1 <= T, so every pointer
+            // the kernel derives from these slices stays in bounds
+            // (see the kernel's own SAFETY paragraph).
             unsafe {
                 avx2::sad_gemm_pm_i8(d_pm, w_pm, dims, span, s, y);
             }
@@ -261,8 +273,21 @@ mod avx2 {
     /// the sign mask — the same sign-clear `abs_branchless` performs,
     /// so results are bit-identical to the portable kernel.
     ///
-    /// SAFETY: caller must ensure AVX2 is available and slice bounds
-    /// were validated (see `check_pm`).
+    /// SAFETY: callers must have observed
+    /// `is_x86_feature_detected!("avx2")` return true before the call
+    /// (the `#[target_feature]` contract) and must pass slices
+    /// satisfying `check_pm`: `d_pm.len() == 16*c*t`,
+    /// `w_pm.len() == 16*o*c`, `y.len() >= (t1-t0)*o*4`, `t1 <= t`,
+    /// `p1 <= 16`. Under those invariants every raw access is in
+    /// bounds: the two `_mm256_loadu_ps` reads start at
+    /// `dp + ic*t + tb` and cover 16 lanes ending at
+    /// `ic*t + tb + 16 <= ic*t + t1 <= c*t == dp.len()` (the `while`
+    /// guard gives `tb + PM_TILE_BLOCK <= t1`);
+    /// `wp.get_unchecked((ob+r)*c + ic)` has `ob + r < o` and
+    /// `ic < c`, so the index is `< o*c == wp.len()`; the
+    /// `_mm256_storeu_ps` pair targets the 16-element stack array `m`.
+    /// `loadu`/`storeu` impose no alignment requirement, and the
+    /// epilogue writes to `y` through ordinary checked indexing.
     #[target_feature(enable = "avx2")]
     pub unsafe fn sad_gemm_pm_f32(d_pm: &[f32], w_pm: &[f32],
                                   dims: StageDims, span: PmSpan,
@@ -327,8 +352,17 @@ mod avx2 {
     /// across the [`PM_OC_BLOCK`] weight rows; subtract/abs run in
     /// epi32 so no operand combination can wrap.
     ///
-    /// SAFETY: caller must ensure AVX2 is available and slice bounds
-    /// were validated (see `check_pm`).
+    /// SAFETY: same contract as [`sad_gemm_pm_f32`] — callers must
+    /// have observed `is_x86_feature_detected!("avx2")` return true
+    /// and must pass `check_pm`-validated slices
+    /// (`d_pm.len() == 16*c*t`, `w_pm.len() == 16*o*c`,
+    /// `y.len() >= (t1-t0)*o*4`, `t1 <= t`, `p1 <= 16`). The single
+    /// `_mm256_loadu_si256` reads 16 i16 lanes from `dp + ic*t + tb`,
+    /// ending at `ic*t + tb + 16 <= c*t == dp.len()` by the
+    /// `tb + PM_TILE_BLOCK <= t1` loop guard;
+    /// `wp.get_unchecked((ob+r)*c + ic)` is `< o*c == wp.len()`; the
+    /// `_mm256_storeu_si256` pair targets the 16-element stack array
+    /// `m`. Unaligned intrinsics only; `y` uses checked indexing.
     #[target_feature(enable = "avx2")]
     pub unsafe fn sad_gemm_pm_i8(d_pm: &[i16], w_pm: &[i16],
                                  dims: StageDims, span: PmSpan,

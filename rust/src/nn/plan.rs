@@ -112,6 +112,9 @@ impl Workspace {
     }
 }
 
+// lint:hot-path(begin) arc_vec_mut runs between requests on the
+// serving thread — part of the zero-alloc steady state
+
 /// Recover `&mut` access to an `Arc`-shared buffer once the engine
 /// thread is the only holder again (always true between requests — the
 /// pool workers drop their clones before a scatter returns). Falls
@@ -119,10 +122,14 @@ impl Workspace {
 /// blocks or panics.
 pub fn arc_vec_mut<T>(arc: &mut Arc<Vec<T>>) -> &mut Vec<T> {
     if Arc::get_mut(arc).is_none() {
+        // lint:allow(no-alloc-hot-path) cold fallback, only reached if
+        // a worker leaked an Arc clone (never in the steady state)
         *arc = Arc::new(Vec::new());
     }
     Arc::get_mut(arc).expect("arc unique after reset")
 }
+
+// lint:hot-path(end)
 
 /// One compiled layer: resolved weights + precomputed geometry.
 /// Weights live in `Arc`s and the whole step list is itself
@@ -275,6 +282,9 @@ impl ModelPlan {
                 max_t, self.workspace_footprint() as f64 / 1024.0)
     }
 
+    // lint:hot-path(begin) ModelPlan::forward is THE per-request path
+    // — the zero-steady-state-allocation contract of PR 2/4
+
     /// Run the whole stack on `x` (flat `batch * cin * hw * hw`
     /// values), returning the flat output activations. Steady state
     /// performs zero heap allocation: activations ping-pong between
@@ -314,6 +324,8 @@ impl ModelPlan {
         debug_assert_eq!(self.act_a.dims, self.out_dims);
         &self.act_a.data
     }
+
+    // lint:hot-path(end)
 }
 
 /// Resolve spec + weights into executable steps (weights in `Arc`s)
@@ -371,6 +383,8 @@ fn build_steps(spec: &ModelSpec, weights: &ModelWeights)
     Ok((steps, m))
 }
 
+// lint:hot-path(begin) the per-step kernels forward() dispatches to
+
 /// Direct-adder 1x1 projection (Eq. 1 with k=1) into a caller buffer:
 /// `out[n,o,h,w] = -sum_c |w[o,c] - x[n,c,h,w]|`. Spatial extent is
 /// preserved; `out.data` is resized in place (no allocation once
@@ -421,6 +435,8 @@ pub fn relu_inplace(x: &mut Tensor) {
         *v = v.max(0.0);
     }
 }
+
+// lint:hot-path(end)
 
 #[cfg(test)]
 mod tests {

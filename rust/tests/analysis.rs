@@ -1,0 +1,445 @@
+//! Fixture tests for the invariant linter: lexer edge cases, one
+//! positive + negative fixture per rule, waiver parsing, and the
+//! self-lint gate (the crate's own tree must be clean — the same
+//! check CI's `lint-invariants` job enforces).
+//!
+//! Fixtures go through [`lint_source`] with a synthetic path label,
+//! since rule scope is decided by path suffix/prefix. Denied
+//! spellings below live inside string literals, which the linter
+//! (correctly) never sees as code — that property is itself under
+//! test.
+
+use std::path::Path;
+
+use wino_adder::analysis::lexer::{lex, TokKind};
+use wino_adder::analysis::{findings_to_json, lint_source, lint_tree,
+                           Finding, RULE_IDS};
+
+/// Rule ids of `findings`, in reported order.
+fn rules(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------- lexer
+
+#[test]
+fn lexer_string_contents_are_not_code() {
+    let toks = lex("let s = \"x.unwrap() and vec![0]\"; s.len();");
+    // exactly one Str token holding the whole literal...
+    let strs: Vec<_> = toks
+        .iter()
+        .filter(|t| t.kind == TokKind::Str)
+        .collect();
+    assert_eq!(strs.len(), 1);
+    assert_eq!(strs[0].text, "x.unwrap() and vec![0]");
+    // ...and no `unwrap` identifier leaked out of it
+    assert!(!toks
+        .iter()
+        .any(|t| t.kind == TokKind::Ident && t.text == "unwrap"));
+}
+
+#[test]
+fn lexer_raw_strings_with_hashes_and_quotes() {
+    let toks = lex("let s = r#\"inner \"quoted\" .unwrap()\"#; go();");
+    let strs: Vec<_> = toks
+        .iter()
+        .filter(|t| t.kind == TokKind::Str)
+        .collect();
+    assert_eq!(strs.len(), 1);
+    assert_eq!(strs[0].text, "inner \"quoted\" .unwrap()");
+    // the code after the literal still lexes
+    assert!(toks
+        .iter()
+        .any(|t| t.kind == TokKind::Ident && t.text == "go"));
+    // and identifiers starting with r/b are not eaten as prefixes
+    let toks = lex("let raw = batch + 1;");
+    assert!(toks
+        .iter()
+        .any(|t| t.kind == TokKind::Ident && t.text == "raw"));
+    assert!(toks
+        .iter()
+        .any(|t| t.kind == TokKind::Ident && t.text == "batch"));
+}
+
+#[test]
+fn lexer_nested_block_comments() {
+    let toks = lex("/* outer /* inner */ still comment */ x.unwrap();");
+    let comments: Vec<_> =
+        toks.iter().filter(|t| t.is_comment()).collect();
+    assert_eq!(comments.len(), 1, "nesting must stay one token");
+    assert!(comments[0].text.contains("inner"));
+    assert!(comments[0].text.contains("still comment"));
+    // the code after the comment is real
+    assert!(toks
+        .iter()
+        .any(|t| t.kind == TokKind::Ident && t.text == "unwrap"));
+}
+
+#[test]
+fn lexer_char_literal_holding_a_quote() {
+    // the classic trap: '"' must not open a string that swallows the
+    // rest of the file
+    let toks = lex("let q = '\"'; y.unwrap();");
+    assert!(toks
+        .iter()
+        .any(|t| t.kind == TokKind::Char && t.text == "\""));
+    assert!(toks
+        .iter()
+        .any(|t| t.kind == TokKind::Ident && t.text == "unwrap"));
+}
+
+#[test]
+fn lexer_lifetimes_vs_char_literals() {
+    let toks = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+    assert!(toks
+        .iter()
+        .any(|t| t.kind == TokKind::Lifetime && t.text == "a"));
+    assert!(toks
+        .iter()
+        .any(|t| t.kind == TokKind::Char && t.text == "x"));
+}
+
+#[test]
+fn lexer_line_numbers_across_multiline_tokens() {
+    let src = "a\n\"two\nline string\"\n/* block\ncomment */\nb";
+    let toks = lex(src);
+    assert_eq!(toks[0].line, 1); // a
+    assert_eq!(toks[1].line, 2); // string anchors to its start
+    assert_eq!(toks[2].line, 4); // comment anchors to its start
+    assert_eq!(toks[3].line, 6); // b lands after both
+}
+
+// ------------------------------------------------- rule: no-alloc-hot-path
+
+#[test]
+fn alloc_rule_fires_in_hot_module() {
+    let src = "fn step(y: &mut [f32]) {\n\
+               \x20   let tmp = Vec::new();\n\
+               \x20   let v = vec![0f32; 4];\n\
+               \x20   let w = y.to_vec();\n\
+               }\n";
+    let f = lint_source("src/nn/backend/kernel.rs", src);
+    assert_eq!(rules(&f),
+               ["no-alloc-hot-path"; 3],
+               "expected Vec::new, vec!, .to_vec() to fire: {f:?}");
+    assert_eq!(f[0].line, 2);
+    assert_eq!(f[1].line, 3);
+    assert_eq!(f[2].line, 4);
+}
+
+#[test]
+fn alloc_rule_quiet_outside_hot_modules_and_for_sanctioned_forms() {
+    let src = "fn step(y: &mut [f32]) { let tmp = Vec::new(); }\n";
+    assert!(lint_source("src/util/misc.rs", src).is_empty(),
+            "non-hot module must not fire");
+    // Arc::clone (function syntax) and with_capacity are sanctioned
+    let src = "fn step(a: &Arc<V>) -> Arc<V> {\n\
+               \x20   let b = Arc::clone(a);\n\
+               \x20   b\n\
+               }\n";
+    assert!(lint_source("src/nn/backend/kernel.rs", src).is_empty());
+}
+
+#[test]
+fn alloc_rule_respects_hot_path_markers() {
+    // plan.rs-style file: compile path allocates freely, the marked
+    // forward region may not
+    let src = "fn compile(xs: &[u32]) -> Vec<u32> {\n\
+               \x20   xs.iter().copied().collect()\n\
+               }\n\
+               // lint:hot-path(begin) forward path\n\
+               fn forward() {\n\
+               \x20   let v = Vec::new();\n\
+               }\n\
+               // lint:hot-path(end)\n\
+               fn teardown() -> Vec<u32> { vec![1] }\n";
+    let f = lint_source("src/nn/plan.rs", src);
+    assert_eq!(rules(&f), ["no-alloc-hot-path"]);
+    assert_eq!(f[0].line, 6, "only the marked region fires: {f:?}");
+}
+
+#[test]
+fn alloc_rule_exempts_cfg_test() {
+    let src = "#[cfg(test)]\n\
+               mod tests {\n\
+               \x20   fn helper() -> Vec<u32> { vec![1, 2] }\n\
+               }\n";
+    assert!(lint_source("src/coordinator/batcher.rs", src).is_empty());
+}
+
+// ------------------------------------------------- rule: no-panic-serving
+
+#[test]
+fn panic_rule_fires_in_serving_tier() {
+    let src = "fn f(xs: &[u32], i: usize) -> u32 {\n\
+               \x20   let a = xs.first().unwrap();\n\
+               \x20   if i > 9 { panic!(\"too big\") }\n\
+               \x20   xs[i] + a\n\
+               }\n";
+    let f = lint_source("src/coordinator/fake.rs", src);
+    assert_eq!(rules(&f),
+               ["no-panic-serving"; 3],
+               "unwrap, panic!, [idx] must all fire: {f:?}");
+    // identical source outside the serving tier is quiet
+    assert!(lint_source("src/nn/fake.rs", src).is_empty());
+}
+
+#[test]
+fn panic_rule_index_heuristic_skips_non_index_brackets() {
+    let src = "#[derive(Debug)]\n\
+               struct S { buf: [u8; 4] }\n\
+               fn f(pair: (u32, u32)) {\n\
+               \x20   let v = vec![0u8; 2];\n\
+               \x20   let [a, b] = [pair.0, pair.1];\n\
+               \x20   drop((v, a, b));\n\
+               }\n";
+    let f = lint_source("src/engine/fake.rs", src);
+    assert!(f.is_empty(),
+            "attributes, types, vec!, and patterns are not index \
+             expressions: {f:?}");
+}
+
+#[test]
+fn panic_rule_exempts_cfg_test() {
+    let src = "#[cfg(test)]\n\
+               mod tests {\n\
+               \x20   #[test]\n\
+               \x20   fn t() { assert_eq!(go().unwrap(), 3); }\n\
+               }\n";
+    assert!(lint_source("src/coordinator/fake.rs", src).is_empty());
+}
+
+// --------------------------------------------------- rule: unsafe-hygiene
+
+#[test]
+fn unsafe_rule_fires_without_safety_comment() {
+    let src = "fn f(p: *const u8) -> u8 {\n\
+               \x20   unsafe { *p }\n\
+               }\n";
+    let f = lint_source("src/nn/backend/fake_simd.rs", src);
+    assert_eq!(rules(&f), ["unsafe-hygiene"]);
+    assert_eq!(f[0].line, 2);
+}
+
+#[test]
+fn unsafe_rule_accepts_safety_comment_above_or_on_line() {
+    let src = "fn f(p: *const u8) -> u8 {\n\
+               \x20   // SAFETY: caller guarantees p is valid\n\
+               \x20   unsafe { *p }\n\
+               }\n\
+               fn g(p: *const u8) -> u8 {\n\
+               \x20   unsafe { *p } // SAFETY: same contract as f\n\
+               }\n";
+    assert!(lint_source("src/nn/backend/fake_simd.rs", src).is_empty());
+}
+
+#[test]
+fn target_feature_requires_unsafe_and_dispatch() {
+    // neither `unsafe` nor a detected-dispatch call site: two findings
+    let src = "#[target_feature(enable = \"avx2\")]\n\
+               fn kernel(y: &mut [f32]) { y[0] = 1.0; }\n";
+    let f = lint_source("src/nn/backend/fake_simd.rs", src);
+    assert_eq!(rules(&f), ["unsafe-hygiene"; 2], "{f:?}");
+    assert!(f[0].message.contains("unsafe")
+            || f[1].message.contains("unsafe"));
+    assert!(f[0].message.contains("is_x86_feature_detected")
+            || f[1].message.contains("is_x86_feature_detected"));
+
+    // the compliant shape: unsafe fn + SAFETY + runtime dispatch
+    let src = "pub fn go(y: &mut [f32]) {\n\
+               \x20   if std::arch::is_x86_feature_detected!(\"avx2\") {\n\
+               \x20       // SAFETY: avx2 was just detected above\n\
+               \x20       unsafe { kernel(y) }\n\
+               \x20   }\n\
+               }\n\
+               // SAFETY: callers must check avx2 first (see go)\n\
+               #[target_feature(enable = \"avx2\")]\n\
+               unsafe fn kernel(y: &mut [f32]) { y[0] = 1.0; }\n";
+    let f = lint_source("src/nn/backend/fake_simd.rs", src);
+    assert!(f.is_empty(), "{f:?}");
+}
+
+// ------------------------------------------------------- rule: msrv-guard
+
+#[test]
+fn msrv_rule_fires_on_post_173_apis() {
+    let src = "fn f() {\n\
+               \x20   let l = std::sync::LazyLock::new(make);\n\
+               \x20   let e = std::io::Error::other(\"boom\");\n\
+               \x20   drop((l, e));\n\
+               }\n";
+    let f = lint_source("src/util/fake.rs", src);
+    assert_eq!(rules(&f), ["msrv-guard"; 2], "{f:?}");
+    assert!(f[0].message.contains("1.80.0"));
+    assert!(f[1].message.contains("Error::other"));
+}
+
+#[test]
+fn msrv_rule_quiet_for_pinned_floor_apis() {
+    // div_ceil (1.73.0) is the sanctioned high-water mark, and a bare
+    // `other` identifier is not `Error::other`
+    let src = "fn f(a: usize, other: usize) -> usize {\n\
+               \x20   a.div_ceil(other)\n\
+               }\n";
+    assert!(lint_source("src/util/fake.rs", src).is_empty());
+}
+
+#[test]
+fn msrv_rule_applies_inside_tests_too() {
+    // cfg(test) code still compiles under the MSRV CI leg
+    let src = "#[cfg(test)]\n\
+               mod tests {\n\
+               \x20   #[test]\n\
+               \x20   fn t() { assert_eq!(81usize.isqrt(), 9); }\n\
+               }\n";
+    let f = lint_source("src/util/fake.rs", src);
+    assert_eq!(rules(&f), ["msrv-guard"], "{f:?}");
+}
+
+// --------------------------------------------- rule: proto-exhaustiveness
+
+#[test]
+fn proto_rule_fires_on_unmatched_frame_kind() {
+    let src = "pub const KIND_A: u8 = 1;\n\
+               pub const KIND_B: u8 = 2;\n\
+               fn read_frame(k: u8) -> u8 {\n\
+               \x20   match k {\n\
+               \x20       KIND_A => 0,\n\
+               \x20       _ => 1,\n\
+               \x20   }\n\
+               }\n";
+    let f = lint_source("src/coordinator/net/proto.rs", src);
+    assert_eq!(rules(&f), ["proto-exhaustiveness"], "{f:?}");
+    assert_eq!(f[0].line, 2);
+    assert!(f[0].message.contains("KIND_B"));
+}
+
+#[test]
+fn proto_rule_quiet_when_decoder_is_exhaustive() {
+    let src = "pub const KIND_A: u8 = 1;\n\
+               pub const KIND_B: u8 = 2;\n\
+               fn read_frame(k: u8) -> u8 {\n\
+               \x20   match k {\n\
+               \x20       KIND_A => 0,\n\
+               \x20       KIND_B => 1,\n\
+               \x20       _ => 2,\n\
+               \x20   }\n\
+               }\n";
+    assert!(lint_source("src/coordinator/net/proto.rs", src).is_empty());
+    // the rule only owns proto.rs — elsewhere it never runs
+    let src = "pub const KIND_A: u8 = 1;\n";
+    assert!(lint_source("src/coordinator/net/frames.rs", src)
+        .is_empty());
+}
+
+// ----------------------------------------------------------- waivers
+
+#[test]
+fn waiver_with_reason_suppresses_next_code_line() {
+    let src = "fn f(g: G) -> u32 {\n\
+               \x20   // lint:allow(no-panic-serving) lock poisoning \
+               means a peer already panicked\n\
+               \x20   let a = g.lock().unwrap();\n\
+               \x20   let b = h.lock().unwrap();\n\
+               \x20   a + b\n\
+               }\n";
+    let f = lint_source("src/coordinator/fake.rs", src);
+    // only the SECOND unwrap survives: the waiver covers line 3
+    assert_eq!(rules(&f), ["no-panic-serving"], "{f:?}");
+    assert_eq!(f[0].line, 4);
+}
+
+#[test]
+fn waiver_without_reason_is_itself_a_finding() {
+    let src = "fn f(o: Option<u32>) -> u32 {\n\
+               \x20   // lint:allow(no-panic-serving)\n\
+               \x20   o.unwrap()\n\
+               }\n";
+    let f = lint_source("src/coordinator/fake.rs", src);
+    // the bare waiver suppresses nothing AND reports itself (the
+    // waiver-syntax finding sorts first: line 2 vs line 3)
+    assert_eq!(rules(&f), ["waiver-syntax", "no-panic-serving"],
+               "{f:?}");
+    assert!(f[0].message.contains("mandatory"));
+}
+
+#[test]
+fn waiver_naming_unknown_rule_is_rejected() {
+    let src = "fn f(o: Option<u32>) -> u32 {\n\
+               \x20   // lint:allow(no-such-rule) sounds plausible\n\
+               \x20   o.unwrap()\n\
+               }\n";
+    let f = lint_source("src/coordinator/fake.rs", src);
+    assert_eq!(rules(&f), ["waiver-syntax", "no-panic-serving"],
+               "{f:?}");
+    assert!(f[0].message.contains("no-such-rule"));
+    // the error names the valid rules so the fix is self-serve
+    for rule in RULE_IDS {
+        assert!(f[0].message.contains(rule));
+    }
+}
+
+#[test]
+fn file_level_waiver_covers_the_whole_file() {
+    let src = "// lint:allow-file(no-panic-serving) fixed-size header \
+               arithmetic, bounds pre-validated\n\
+               fn f(xs: &[u8]) -> u8 { xs[0] }\n\
+               fn g(xs: &[u8]) -> u8 { xs[1] }\n";
+    assert!(lint_source("src/coordinator/fake.rs", src).is_empty());
+}
+
+#[test]
+fn doc_comments_never_waive() {
+    // documentation ABOUT the waiver syntax must neither waive nor
+    // count as a malformed waiver
+    let src = "/// Write `lint:allow(no-panic-serving) reason` above \
+               the line.\n\
+               fn f(o: Option<u32>) -> u32 {\n\
+               \x20   o.unwrap()\n\
+               }\n";
+    let f = lint_source("src/coordinator/fake.rs", src);
+    assert_eq!(rules(&f), ["no-panic-serving"],
+               "doc comment must not suppress the unwrap: {f:?}");
+}
+
+#[test]
+fn denied_spellings_in_strings_and_comments_are_invisible() {
+    let src = "// this comment mentions .unwrap() and panic!\n\
+               fn f() -> &'static str {\n\
+               \x20   \"returns .unwrap() as text, plus xs[0]\"\n\
+               }\n";
+    assert!(lint_source("src/coordinator/fake.rs", src).is_empty());
+}
+
+// ------------------------------------------------------ output + self-lint
+
+#[test]
+fn json_report_shape() {
+    let src = "fn f(o: Option<u32>) -> u32 { o.unwrap() }\n";
+    let f = lint_source("src/engine/fake.rs", src);
+    assert_eq!(f.len(), 1);
+    let doc = findings_to_json(&f).dump();
+    assert!(doc.contains("\"count\""));
+    assert!(doc.contains("\"no-panic-serving\""));
+    assert!(doc.contains("src/engine/fake.rs"));
+    // display form is the file:line grep-able convention
+    let line = f[0].to_string();
+    assert!(line.starts_with("src/engine/fake.rs:1: "));
+    assert!(line.contains("[no-panic-serving]"));
+}
+
+/// The gate CI enforces: the crate's own tree must lint clean. Every
+/// in-tree violation has either been fixed or carries a reasoned
+/// waiver — a regression here is a real finding, not test noise.
+#[test]
+fn self_lint_the_crate_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = lint_tree(root).expect("walk crate tree");
+    assert!(findings.is_empty(),
+            "the tree must satisfy its own linter:\n{}",
+            findings
+                .iter()
+                .map(|f| f.to_string())
+                .collect::<Vec<_>>()
+                .join("\n"));
+}
