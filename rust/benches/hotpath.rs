@@ -3,20 +3,25 @@
 //! Layers measured:
 //!  * L3-native: the rust wino-adder/adder kernels (serving fallback) —
 //!    Gadd/s on the paper's FPGA benchmark layer `(1,16,28,28) x
-//!    (16,16,3,3)`, legacy tile-major vs point-major SAD-GEMM.
-//!  * kernel regression matrix: {legacy, pointmajor} x {f32, int8} x
-//!    {1, 4} threads on the elementwise stage alone; `--json` writes
-//!    it to `BENCH_kernel.json` (CI's `perf-smoke` artifact).
+//!    (16,16,3,3)`, legacy tile-major vs point-major SAD-GEMM, at both
+//!    tile sizes F(2x2,3x3) and F(4x4,3x3).
+//!  * kernel regression matrix: {f2, f4} x {legacy, pointmajor} x
+//!    {f32, int8} x {1, 4} threads on the elementwise stage alone;
+//!    `--json` writes it to `BENCH_kernel.json` (CI's `perf-smoke`
+//!    artifact).
+//!  * plan-time autotuner: the cached kernel choice and per-candidate
+//!    timings for the bench layer at both tile sizes (the `autotune`
+//!    key in the JSON report).
 //!  * L1/L2 via PJRT: the AOT Pallas layer artifacts end-to-end
 //!    (load -> execute), per batch bucket.
 //!  * transforms: input-tile extraction + B^T d B throughput.
 //!
-//! Operation counts come from `opcount::LayerSpec` (paper Eq. 10), so
-//! conv-level Gadd/s includes the input/output transform adds the old
-//! hand-rolled `tiles*O*C*32` figure omitted; the kernel-stage rows
+//! Operation counts come from `opcount::LayerSpec` (paper Eq. 10 for
+//! F2; the module-documented convention for F4), so conv-level Gadd/s
+//! includes the input/output transform adds; the kernel-stage rows
 //! count only what the kernel actually executes (elementwise stage +
-//! folded output transform), keeping legacy-vs-pointmajor directly
-//! comparable.
+//! folded output transform), keeping legacy-vs-pointmajor and f2-vs-f4
+//! directly comparable.
 //!
 //! Run: `cargo bench --bench hotpath`
 //! Flags (after `--`): `--json [--out PATH]` for the machine-readable
@@ -32,10 +37,16 @@ use std::sync::Arc;
 use wino_adder::nn::adder::{adder_conv2d_fast, l1_distance_matrix};
 use wino_adder::nn::backend::{kernel, simd, ParallelBackend,
                               ParallelInt8Backend, StageDims};
-use wino_adder::nn::quant::{input_tiles_i16, quantize_wino_weights,
+use wino_adder::nn::matrices::{TileChoice, TileSize};
+use wino_adder::nn::model::{ModelSpec, ModelWeights};
+use wino_adder::nn::plan::{ModelPlan, TuneMode};
+use wino_adder::nn::quant::{input_tiles_i16_into_for,
+                            input_tiles_i16_pm_into_for,
+                            quantize_wino_weights,
                             repack_wino_weights_pm, requantize_pair};
-use wino_adder::nn::wino_adder::{input_tiles, repack_weights_pm,
-                                 tiles_to_pm,
+use wino_adder::nn::wino_adder::{input_tiles, input_tiles_into_for,
+                                 input_tiles_pm_into_for,
+                                 repack_weights_pm, tile_geometry_for,
                                  winograd_adder_conv2d_fast,
                                  winograd_adder_conv2d_pm,
                                  wino_adder_tiles};
@@ -47,11 +58,20 @@ use wino_adder::util::rng::Rng;
 
 /// One kernel-stage measurement for the regression matrix.
 struct KernelRow {
+    tile: &'static str,
     kernel: &'static str,
     dtype: &'static str,
     threads: usize,
     secs: f64,
     gadds: f64,
+}
+
+/// Per-tile-size operand metadata carried into the JSON report.
+struct TileMeta {
+    tile: &'static str,
+    tiles: usize,
+    kernel_adds: f64,
+    conv_adds: f64,
 }
 
 fn main() {
@@ -65,31 +85,33 @@ fn main() {
     };
 
     // the paper's FPGA benchmark layer (1,16,28,28) x (16,16,3,3);
-    // --smoke shrinks it so CI finishes in seconds
+    // --smoke shrinks it so CI finishes in seconds. Both shapes keep
+    // hw + 2*pad - 2 divisible by 4, so the F4 path is admissible too.
     let (cin, cout, hw) = if smoke { (4, 4, 8) } else { (16, 16, 28) };
     let v = matrices::Variant::Balanced(0);
     let mut rng = Rng::new(42);
     let x = Tensor::randn(&mut rng, [1, cin, hw, hw]);
     let w3 = Tensor::randn(&mut rng, [cout, cin, 3, 3]);
     let w_hat = Tensor::randn(&mut rng, [cout, cin, 4, 4]);
+    let w_hat_f4 = Tensor::randn(&mut rng, [cout, cin, 6, 6]);
 
     // op counts from the Table-1 model (fixes the old hand-rolled
     // `tiles*O*C*32`, which omitted the transform adds)
-    let layer = LayerSpec {
+    let layer_f2 = LayerSpec {
         name: "bench".into(),
         cin,
         cout,
         out_hw: hw,
         k: 3,
         stride: 1,
+        tile: TileSize::F2,
     };
-    let direct_adds = count_layer(&layer, Mode::AdderNet).adds as f64;
+    let direct_adds = count_layer(&layer_f2, Mode::AdderNet).adds as f64;
     let conv_adds =
-        count_layer(&layer, Mode::WinogradAdderNet).adds as f64;
-    let tiles = (hw.div_ceil(2) * hw.div_ceil(2)) as f64;
-    // what the elementwise-stage kernels execute: the SAD core
-    // (2 adds per (t, o, c, p)) plus the folded flat output transform
-    let kernel_adds = tiles * (cout * cin * 32 + cout * 8) as f64;
+        count_layer(&layer_f2, Mode::WinogradAdderNet).adds as f64;
+    let layer_f4 = LayerSpec { tile: TileSize::F4, ..layer_f2.clone() };
+    let conv_adds_f4 =
+        count_layer(&layer_f4, Mode::WinogradAdderNet).adds as f64;
 
     println!("=== L3-native conv (layer ({cin},{hw},{hw}) x \
               ({cout},{cin},3,3), f32; simd: {}) ===",
@@ -98,104 +120,198 @@ fn main() {
         std::hint::black_box(adder_conv2d_fast(&x, &w3, 1));
     });
     println!("    -> {:.2} Gadd/s", gops(direct_adds, t));
-    let t = bench("winograd adder conv (legacy tile-major)", &mut || {
+    let t = bench("winograd adder conv f2 (legacy tile-major)",
+                  &mut || {
         std::hint::black_box(winograd_adder_conv2d_fast(&x, &w_hat, 1,
                                                         v));
     });
     println!("    -> {:.2} Gadd/s (effective: {:.2} direct-equiv)",
              gops(conv_adds, t), gops(direct_adds, t));
-    let t = bench("winograd adder conv (point-major)", &mut || {
+    let t = bench("winograd adder conv f2 (point-major)", &mut || {
         std::hint::black_box(winograd_adder_conv2d_pm(&x, &w_hat, 1,
                                                       v));
     });
     println!("    -> {:.2} Gadd/s (effective: {:.2} direct-equiv)",
              gops(conv_adds, t), gops(direct_adds, t));
+    let t = bench("winograd adder conv f4 (point-major)", &mut || {
+        std::hint::black_box(winograd_adder_conv2d_pm(&x, &w_hat_f4, 1,
+                                                      v));
+    });
+    println!("    -> {:.2} Gadd/s (effective: {:.2} direct-equiv)",
+             gops(conv_adds_f4, t), gops(direct_adds, t));
 
     // ---- kernel-stage regression matrix ---------------------------
-    // prepared operand buffers (tile extraction excluded from timing)
-    let (d_hat, n, th, tw) = input_tiles(&x.pad_same(1), v);
-    let t_count = n * th * tw;
-    let s = matrices::output_transform_flat(v);
-    let si = kernel::output_transform_flat_i32(v);
-    let d_arc: Arc<[f32]> = d_hat.clone().into();
-    let w_arc: Arc<[f32]> = w_hat.data.clone().into();
-    let d_pm: Arc<[f32]> = tiles_to_pm(&d_hat, t_count, cin).into();
-    let mut w_pm_v = Vec::new();
-    repack_weights_pm(&w_hat.data, cout, cin, &mut w_pm_v);
-    let w_pm: Arc<[f32]> = w_pm_v.into();
-    let (qx, _) = requantize_pair(&x, &x);
-    let wq = quantize_wino_weights(&w_hat, qx.qp.scale);
-    let (d16_tiles, ..) = input_tiles_i16(&qx, 1, v);
-    let d16: Arc<[i16]> = d16_tiles.clone().into();
-    let w16: Arc<[i16]> = wq.clone().into();
-    let d16_pm: Arc<[i16]> =
-        tiles_to_pm(&d16_tiles, t_count, cin).into();
-    let mut w16_pm_v = Vec::new();
-    repack_wino_weights_pm(&wq, cout, cin, &mut w16_pm_v);
-    let w16_pm: Arc<[i16]> = w16_pm_v.into();
-
-    println!("\n=== kernel-stage matrix (elementwise + folded output \
-              transform, t={t_count}) ===");
+    // per tile size: prepared operand buffers (tile extraction
+    // excluded from timing), then {legacy, pointmajor} x {f32, int8}
+    // x {1, 4} threads
     let mut rows: Vec<KernelRow> = Vec::new();
-    let mut yf = vec![0f32; t_count * cout * 4];
-    let mut yi = vec![0i32; t_count * cout * 4];
-    let dims = StageDims::new(t_count, cout, cin);
-    for threads in [1usize, 4] {
-        let bef = ParallelBackend::new(threads);
-        let bei = ParallelInt8Backend::new(threads);
-        let mut bufs_f: Vec<Vec<f32>> = Vec::new();
-        let mut bufs_i: Vec<Vec<i32>> = Vec::new();
-        let secs = bench(
-            &format!("f32 legacy    x{threads}t"), &mut || {
-                bef.run_tiles(&d_arc, &w_arc, dims, s, &mut yf);
-                std::hint::black_box(&yf);
-            });
-        rows.push(KernelRow { kernel: "legacy", dtype: "f32", threads,
-                              secs, gadds: gops(kernel_adds, secs) });
-        let secs = bench(
-            &format!("f32 pointmajor x{threads}t"), &mut || {
-                bef.run_tiles_pm(&d_pm, &w_pm, dims, s, &mut yf,
-                                 &mut bufs_f);
-                std::hint::black_box(&yf);
-            });
-        rows.push(KernelRow { kernel: "pointmajor", dtype: "f32",
-                              threads, secs,
-                              gadds: gops(kernel_adds, secs) });
-        let secs = bench(
-            &format!("int8 legacy    x{threads}t"), &mut || {
-                bei.run_tiles(&d16, &w16, dims, si, &mut yi);
-                std::hint::black_box(&yi);
-            });
-        rows.push(KernelRow { kernel: "legacy", dtype: "int8",
-                              threads, secs,
-                              gadds: gops(kernel_adds, secs) });
-        let secs = bench(
-            &format!("int8 pointmajor x{threads}t"), &mut || {
-                bei.run_tiles_pm(&d16_pm, &w16_pm, dims, si, &mut yi,
-                                 &mut bufs_i);
-                std::hint::black_box(&yi);
-            });
-        rows.push(KernelRow { kernel: "pointmajor", dtype: "int8",
-                              threads, secs,
-                              gadds: gops(kernel_adds, secs) });
+    let mut metas: Vec<TileMeta> = Vec::new();
+    for tile in TileSize::ALL {
+        let ts = tile.tile();
+        let (pts, q) = (tile.points(), tile.out_points());
+        let (n, th, tw) = tile_geometry_for(x.dims, 1, tile);
+        let t_count = n * th * tw;
+        // kernel-stage work: the SAD core (2 adds per (t, o, c, p))
+        // plus the folded flat output transform per (t, o)
+        let out_xform = match tile {
+            TileSize::F2 => 8,
+            TileSize::F4 => 140,
+        };
+        let kernel_adds =
+            (t_count * (cout * cin * 2 * pts + cout * out_xform)) as f64;
+        let conv_adds_t = match tile {
+            TileSize::F2 => conv_adds,
+            TileSize::F4 => conv_adds_f4,
+        };
+        metas.push(TileMeta { tile: tile.name(), tiles: t_count,
+                              kernel_adds, conv_adds: conv_adds_t });
+
+        let w_t = match tile {
+            TileSize::F2 => &w_hat,
+            TileSize::F4 => &w_hat_f4,
+        };
+        let mut d_v = vec![0f32; t_count * cin * pts];
+        input_tiles_into_for(&x, 1, v, tile, &mut d_v);
+        let d_arc: Arc<[f32]> = d_v.into();
+        let mut d_pm_v = vec![0f32; t_count * cin * pts];
+        input_tiles_pm_into_for(&x, 1, v, tile, &mut d_pm_v);
+        let d_pm: Arc<[f32]> = d_pm_v.into();
+        let w_arc: Arc<[f32]> = w_t.data.clone().into();
+        let mut w_pm_v = Vec::new();
+        repack_weights_pm(&w_t.data, cout, cin, &mut w_pm_v);
+        let w_pm: Arc<[f32]> = w_pm_v.into();
+
+        let (qx, _) = requantize_pair(&x, &x);
+        let wq = quantize_wino_weights(w_t, qx.qp.scale);
+        let mut d16_v = vec![0i16; t_count * cin * pts];
+        input_tiles_i16_into_for(&qx.data, qx.dims, 1, v, tile,
+                                 &mut d16_v);
+        let d16: Arc<[i16]> = d16_v.into();
+        let mut d16_pm_v = vec![0i16; t_count * cin * pts];
+        input_tiles_i16_pm_into_for(&qx.data, qx.dims, 1, v, tile,
+                                    &mut d16_pm_v);
+        let d16_pm: Arc<[i16]> = d16_pm_v.into();
+        let w16: Arc<[i16]> = wq.clone().into();
+        let mut w16_pm_v = Vec::new();
+        repack_wino_weights_pm(&wq, cout, cin, &mut w16_pm_v);
+        let w16_pm: Arc<[i16]> = w16_pm_v.into();
+
+        let s = matrices::flat_s(v, tile);
+        let si = kernel::flat_s_i32(v, tile);
+
+        println!("\n=== kernel-stage matrix F({0}x{0},3x3) \
+                  (elementwise + folded output transform, \
+                  t={t_count}) ===",
+                 ts - 2);
+        let mut yf = vec![0f32; t_count * cout * q];
+        let mut yi = vec![0i32; t_count * cout * q];
+        let dims = StageDims::new(t_count, cout, cin);
+        for threads in [1usize, 4] {
+            let bef = ParallelBackend::new(threads);
+            let bei = ParallelInt8Backend::new(threads);
+            let mut bufs_f: Vec<Vec<f32>> = Vec::new();
+            let mut bufs_i: Vec<Vec<i32>> = Vec::new();
+            let secs = bench(
+                &format!("{} f32 legacy    x{threads}t", tile.name()),
+                &mut || {
+                    bef.run_tiles(&d_arc, &w_arc, dims, s, &mut yf);
+                    std::hint::black_box(&yf);
+                });
+            rows.push(KernelRow { tile: tile.name(), kernel: "legacy",
+                                  dtype: "f32", threads, secs,
+                                  gadds: gops(kernel_adds, secs) });
+            let secs = bench(
+                &format!("{} f32 pointmajor x{threads}t", tile.name()),
+                &mut || {
+                    bef.run_tiles_pm(&d_pm, &w_pm, dims, s, &mut yf,
+                                     &mut bufs_f);
+                    std::hint::black_box(&yf);
+                });
+            rows.push(KernelRow { tile: tile.name(),
+                                  kernel: "pointmajor", dtype: "f32",
+                                  threads, secs,
+                                  gadds: gops(kernel_adds, secs) });
+            let secs = bench(
+                &format!("{} int8 legacy    x{threads}t", tile.name()),
+                &mut || {
+                    bei.run_tiles(&d16, &w16, dims, si, &mut yi);
+                    std::hint::black_box(&yi);
+                });
+            rows.push(KernelRow { tile: tile.name(), kernel: "legacy",
+                                  dtype: "int8", threads, secs,
+                                  gadds: gops(kernel_adds, secs) });
+            let secs = bench(
+                &format!("{} int8 pointmajor x{threads}t", tile.name()),
+                &mut || {
+                    bei.run_tiles_pm(&d16_pm, &w16_pm, dims, si,
+                                     &mut yi, &mut bufs_i);
+                    std::hint::black_box(&yi);
+                });
+            rows.push(KernelRow { tile: tile.name(),
+                                  kernel: "pointmajor", dtype: "int8",
+                                  threads, secs,
+                                  gadds: gops(kernel_adds, secs) });
+        }
     }
     for r in &rows {
-        println!("  {:>10} {:>4} x{}t: {:8.2} Gadd/s",
-                 r.kernel, r.dtype, r.threads, r.gadds);
+        println!("  {} {:>10} {:>4} x{}t: {:8.2} Gadd/s",
+                 r.tile, r.kernel, r.dtype, r.threads, r.gadds);
     }
-    let speedup = |dtype: &str| -> f64 {
+    let speedup = |dtype: &str, tile: &str| -> f64 {
         let find = |k: &str| {
             rows.iter()
                 .find(|r| r.kernel == k && r.dtype == dtype
-                      && r.threads == 1)
+                      && r.tile == tile && r.threads == 1)
                 .map(|r| r.secs)
                 .unwrap_or(f64::NAN)
         };
         find("legacy") / find("pointmajor")
     };
-    println!("  single-thread point-major speedup: f32 {:.2}x, \
-              int8 {:.2}x (target >= 2x on the paper layer)",
-             speedup("f32"), speedup("int8"));
+    for tile in TileSize::ALL {
+        println!("  {} single-thread point-major speedup: f32 {:.2}x, \
+                  int8 {:.2}x (target >= 2x on the paper layer)",
+                 tile.name(), speedup("f32", tile.name()),
+                 speedup("int8", tile.name()));
+    }
+
+    // ---- plan-time autotuner --------------------------------------
+    // compile the bench layer tuned at each tile size and report what
+    // the tuner cached (decisions + per-candidate timings)
+    println!("\n=== plan-time autotuner (bench layer, bucket 1) ===");
+    let tune_backend = ParallelBackend::new(4);
+    let mut tune_rows: Vec<Json> = Vec::new();
+    for tile in TileSize::ALL {
+        let spec = ModelSpec::single_layer(cin, cout, hw, v)
+            .with_tile(TileChoice::Fixed(tile));
+        let weights = ModelWeights::init(&spec, 7);
+        let plans = ModelPlan::compile_buckets_tuned(
+            &spec, &weights, &[1], TuneMode::On, &tune_backend)
+            .expect("tuned compile");
+        let (_, plan) = &plans[0];
+        for e in plan.tune_report() {
+            println!("  {} step {}: chose {} ({:.1} us/fwd)",
+                     tile.name(), e.step, e.choice.summary(),
+                     e.secs * 1e6);
+            let cands: Vec<Json> = e
+                .candidates
+                .iter()
+                .map(|(c, secs)| {
+                    let mut o = BTreeMap::new();
+                    o.insert("choice".into(),
+                             Json::Str(c.summary()));
+                    o.insert("secs".into(), Json::Num(*secs));
+                    Json::Obj(o)
+                })
+                .collect();
+            let mut o = BTreeMap::new();
+            o.insert("tile".into(), Json::Str(tile.name().into()));
+            o.insert("step".into(), Json::Num(e.step as f64));
+            o.insert("choice".into(), Json::Str(e.choice.summary()));
+            o.insert("secs".into(), Json::Num(e.secs));
+            o.insert("candidates".into(), Json::Arr(cands));
+            tune_rows.push(Json::Obj(o));
+        }
+    }
 
     if json_mode {
         let mut shape = BTreeMap::new();
@@ -206,6 +322,7 @@ fn main() {
             .iter()
             .map(|r| {
                 let mut row = BTreeMap::new();
+                row.insert("tile".into(), Json::Str(r.tile.into()));
                 row.insert("kernel".into(), Json::Str(r.kernel.into()));
                 row.insert("dtype".into(), Json::Str(r.dtype.into()));
                 row.insert("threads".into(),
@@ -219,15 +336,26 @@ fn main() {
         root.insert("bench".into(), Json::Str("kernel".into()));
         root.insert("smoke".into(), Json::Bool(smoke));
         root.insert("simd".into(), Json::Str(simd::level().into()));
-        root.insert("variant".into(), Json::Str(v.name().into()));
+        root.insert("variant".into(),
+                    Json::Str(v.name().unwrap_or("?").into()));
         root.insert("shape".into(), Json::Obj(shape));
-        root.insert("tiles".into(), Json::Num(t_count as f64));
-        root.insert("kernel_adds".into(), Json::Num(kernel_adds));
-        root.insert("conv_adds".into(), Json::Num(conv_adds));
+        for m in &metas {
+            root.insert(format!("tiles_{}", m.tile),
+                        Json::Num(m.tiles as f64));
+            root.insert(format!("kernel_adds_{}", m.tile),
+                        Json::Num(m.kernel_adds));
+            root.insert(format!("conv_adds_{}", m.tile),
+                        Json::Num(m.conv_adds));
+        }
         root.insert("speedup_f32_1t".into(),
-                    Json::Num(speedup("f32")));
+                    Json::Num(speedup("f32", "f2")));
         root.insert("speedup_int8_1t".into(),
-                    Json::Num(speedup("int8")));
+                    Json::Num(speedup("int8", "f2")));
+        root.insert("speedup_f32_1t_f4".into(),
+                    Json::Num(speedup("f32", "f4")));
+        root.insert("speedup_int8_1t_f4".into(),
+                    Json::Num(speedup("int8", "f4")));
+        root.insert("autotune".into(), Json::Arr(tune_rows));
         root.insert("results".into(), Json::Arr(jrows));
         let out_path = args.get_or("out", "BENCH_kernel.json");
         std::fs::write(out_path, Json::Obj(root).dump())
@@ -236,19 +364,24 @@ fn main() {
     }
 
     println!("\n=== hot-loop microbenches ===");
-    let mut y = vec![0f32; t_count * cout * 4];
+    let (d_hat, n2, th2, tw2) = input_tiles(&x.pad_same(1), v);
+    let t_f2 = n2 * th2 * tw2;
+    let s_legacy = matrices::output_transform_flat(v);
+    let kernel_adds_f2 =
+        (t_f2 * (cout * cin * 32 + cout * 8)) as f64;
+    let mut y = vec![0f32; t_f2 * cout * 4];
     let t = bench("wino_adder_tiles (legacy elementwise core)",
                   &mut || {
-        wino_adder_tiles(&d_hat, &w_hat.data, t_count, cout, cin, &s,
-                         &mut y);
+        wino_adder_tiles(&d_hat, &w_hat.data, t_f2, cout, cin,
+                         &s_legacy, &mut y);
         std::hint::black_box(&y);
     });
-    println!("    -> {:.2} Gadd/s", gops(kernel_adds, t));
+    println!("    -> {:.2} Gadd/s", gops(kernel_adds_f2, t));
     let t = bench("input_tiles (B^T d B)", &mut || {
         std::hint::black_box(input_tiles(&x.pad_same(1), v));
     });
     println!("    -> {:.3} Melem/s",
-             (t_count * cin * 16) as f64 / t / 1e6);
+             (t_f2 * cin * 16) as f64 / t / 1e6);
 
     let patches = rng.normal_vec(784 * 144);
     let wrows = rng.normal_vec(16 * 144);

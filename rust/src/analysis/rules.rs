@@ -29,14 +29,17 @@ pub const RULE_IDS: [&str; 5] = [
     "proto-exhaustiveness",
 ];
 
-/// Modules whose steady-state paths must not allocate. `nn/plan.rs`
-/// mixes compile-time (alloc-heavy) and forward-path code, so it
-/// scopes the rule with `// lint:hot-path(begin)` / `(end)` markers;
+/// Modules whose steady-state paths must not allocate. `nn/plan.rs`,
+/// `nn/wino_adder.rs`, and `nn/quant.rs` mix compile-time or
+/// convenience (alloc-heavy) code with forward-path kernels, so they
+/// scope the rule with `// lint:hot-path(begin)` / `(end)` markers;
 /// a listed file without markers is hot in its entirety.
-const HOT_PATH_FILES: [&str; 5] = [
+const HOT_PATH_FILES: [&str; 7] = [
     "nn/backend/kernel.rs",
     "nn/backend/simd.rs",
     "nn/plan.rs",
+    "nn/wino_adder.rs",
+    "nn/quant.rs",
     "coordinator/batcher.rs",
     "coordinator/router.rs",
 ];

@@ -34,7 +34,7 @@ use crate::nn::backend::{default_threads, Backend, BackendKind,
                          KernelKind};
 use crate::nn::matrices::Variant;
 use crate::nn::model::{ModelSpec, ModelWeights};
-use crate::nn::plan::ModelPlan;
+use crate::nn::plan::{ModelPlan, TuneMode};
 use crate::util::error::{anyhow, Context, Result};
 
 #[cfg(feature = "pjrt")]
@@ -267,16 +267,26 @@ impl Server {
     /// panic), weights are checked against their specs, and the one
     /// backend instance is shared by every model's plans.
     ///
+    /// `tune` controls plan-time kernel autotuning: under
+    /// [`TuneMode::On`] every plan micro-benchmarks its kernel
+    /// candidate grid on the backend instance that will serve it
+    /// (construction-time cost, zero request-path cost); under
+    /// [`TuneMode::Off`] plans use the deterministic per-tile fallback
+    /// table.
+    ///
     /// This is the engine facade's substrate — construct through
     /// [`crate::engine::EngineBuilder`] unless you are the facade.
     pub fn start_hosted(models: Vec<HostedModel>, backend: BackendKind,
                         threads: usize, kernel: KernelKind,
-                        policy: BatchPolicy)
+                        tune: TuneMode, policy: BatchPolicy)
                         -> Result<(ServerHandle,
                                    thread::JoinHandle<()>)> {
         if models.is_empty() {
             return Err(anyhow!("no models to host"));
         }
+        // build the backend up front: tuned compilation benchmarks on
+        // the very instance the engine thread will serve with
+        let backend = backend.build_with(threads, kernel);
         let mut infos = Vec::with_capacity(models.len());
         let mut compiled = Vec::with_capacity(models.len());
         for m in &models {
@@ -289,8 +299,9 @@ impl Server {
                 in_shape: [m.spec.in_channels, m.spec.hw, m.spec.hw],
                 out_shape: [out_c, out_hw, out_hw],
             });
-            compiled.push(ModelPlan::compile_buckets(
-                &m.spec, &m.weights, &policy.buckets)?);
+            compiled.push(ModelPlan::compile_buckets_tuned(
+                &m.spec, &m.weights, &policy.buckets, tune,
+                &*backend)?);
         }
         let models_arc = Arc::new(infos);
         let (tx, rx) = mpsc::channel::<Msg>();
@@ -298,10 +309,7 @@ impl Server {
         let join = thread::Builder::new()
             .name("wino-adder-native-engine".into())
             .spawn(move || {
-                let exec = PlannedExec {
-                    backend: backend.build_with(threads, kernel),
-                    models: compiled,
-                };
+                let exec = PlannedExec { backend, models: compiled };
                 if let Err(e) = serve_loop(policy, rx, exec, models_arc)
                 {
                     eprintln!("engine thread error: {e:?}");
@@ -324,7 +332,7 @@ impl Server {
         let weights = ModelWeights::init(&spec, cfg.seed);
         Server::start_hosted(
             vec![HostedModel { name: "default".into(), spec, weights }],
-            cfg.backend, cfg.threads, cfg.kernel, policy)
+            cfg.backend, cfg.threads, cfg.kernel, TuneMode::Off, policy)
     }
 
     /// Start the engine thread on the PJRT `layer_wino_adder_b*`
@@ -661,7 +669,8 @@ mod tests {
     fn start_tiny(kind: BackendKind, policy: BatchPolicy)
                   -> (ServerHandle, thread::JoinHandle<()>) {
         Server::start_hosted(vec![tiny_model()], kind, 2,
-                             KernelKind::default(), policy)
+                             KernelKind::default(), TuneMode::Off,
+                             policy)
             .unwrap()
     }
 
@@ -716,9 +725,12 @@ mod tests {
                                        spec: spec.clone(), weights };
             let policy = BatchPolicy { buckets: vec![1, 4],
                                        max_wait_us: 300 };
+            // TuneMode::On: tuned compilation must serve identically
+            // (the autotuner only picks kernel knobs, never math)
             let (handle, join) =
                 Server::start_hosted(vec![hosted], kind, 2,
-                                     KernelKind::default(), policy)
+                                     KernelKind::default(),
+                                     TuneMode::On, policy)
                     .unwrap();
             let mut rng = Rng::new(2);
             let mut threads = Vec::new();
@@ -762,7 +774,8 @@ mod tests {
         let policy = BatchPolicy { buckets: vec![1], max_wait_us: 0 };
         let (handle, join) =
             Server::start_hosted(vec![hosted()], BackendKind::Scalar,
-                                 2, KernelKind::default(), policy)
+                                 2, KernelKind::default(),
+                                 TuneMode::Off, policy)
                 .unwrap();
         let singles: Vec<Vec<f32>> =
             xs.iter().map(|x| handle.infer(x.clone()).unwrap())
@@ -776,7 +789,8 @@ mod tests {
                                    max_wait_us: 200_000 };
         let (handle, join) =
             Server::start_hosted(vec![hosted()], BackendKind::Scalar,
-                                 2, KernelKind::default(), policy)
+                                 2, KernelKind::default(),
+                                 TuneMode::Off, policy)
                 .unwrap();
         let mut workers = Vec::new();
         for x in xs {
@@ -823,6 +837,7 @@ mod tests {
         let err = Server::start_hosted(
             vec![HostedModel { name: "odd".into(), spec, weights }],
             BackendKind::Scalar, 1, KernelKind::default(),
+            TuneMode::Off,
             BatchPolicy { buckets: vec![1], max_wait_us: 0 })
             .unwrap_err();
         assert!(format!("{err}").contains("hw"), "{err}");
@@ -878,7 +893,7 @@ mod tests {
                                    max_wait_us: 300 };
         let (handle, join) = Server::start_hosted(
             hosted, BackendKind::Scalar, 1, KernelKind::default(),
-            policy).unwrap();
+            TuneMode::Off, policy).unwrap();
         assert_eq!(handle.resolve("a").unwrap().0, 0);
         assert_eq!(handle.resolve("b").unwrap().0, 1);
         assert!(handle.resolve("c").is_none());

@@ -10,8 +10,9 @@
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::server::{HostedModel, Server};
 use crate::nn::backend::{default_threads, BackendKind, KernelKind};
-use crate::nn::matrices::Variant;
+use crate::nn::matrices::{TileChoice, Variant};
 use crate::nn::model::{ModelSpec, ModelWeights};
+use crate::nn::plan::TuneMode;
 use crate::util::cli::Args;
 
 use super::error::EngineError;
@@ -24,6 +25,11 @@ pub struct EngineBuilder {
     backend: BackendKind,
     threads: usize,
     kernel: KernelKind,
+    /// `None` = respect each spec's per-layer tile sizes as
+    /// registered; `Some(choice)` = re-tile every registered spec via
+    /// [`ModelSpec::with_tile`] before weights are initialized.
+    tile: Option<TileChoice>,
+    tune: TuneMode,
     policy: BatchPolicy,
     seed: u64,
 }
@@ -35,6 +41,8 @@ impl Default for EngineBuilder {
             backend: BackendKind::Parallel,
             threads: default_threads(),
             kernel: KernelKind::default(),
+            tile: None,
+            tune: TuneMode::default(),
             policy: BatchPolicy::default(),
             seed: 7,
         }
@@ -49,9 +57,9 @@ impl EngineBuilder {
         EngineBuilder::default()
     }
 
-    /// Read `--backend`, `--threads`, and `--kernel` into a builder —
-    /// the typed replacement for the deprecated
-    /// `BackendKind::from_args` tuple.
+    /// Read `--backend`, `--threads`, `--kernel`, `--tile`, and
+    /// `--tune` into a builder — the typed replacement for the
+    /// deprecated `BackendKind::from_args` tuple.
     pub fn from_args(args: &Args) -> Result<EngineBuilder, EngineError> {
         let mut b = EngineBuilder::new();
         if let Some(s) = args.get("backend") {
@@ -63,6 +71,18 @@ impl EngineBuilder {
         if let Some(s) = args.get("kernel") {
             b.kernel = KernelKind::parse(s).ok_or_else(|| {
                 EngineError::BadOption { option: "kernel".into(),
+                                         value: s.into() }
+            })?;
+        }
+        if let Some(s) = args.get("tile") {
+            b.tile = Some(TileChoice::parse(s).ok_or_else(|| {
+                EngineError::BadOption { option: "tile".into(),
+                                         value: s.into() }
+            })?);
+        }
+        if let Some(s) = args.get("tune") {
+            b.tune = TuneMode::parse(s).ok_or_else(|| {
+                EngineError::BadOption { option: "tune".into(),
                                          value: s.into() }
             })?;
         }
@@ -112,6 +132,22 @@ impl EngineBuilder {
         self
     }
 
+    /// Re-tile every registered spec (`--tile auto|f2|f4`) before
+    /// weights are initialized. Default: respect each spec as
+    /// registered. Models registered with explicit weights must
+    /// already match the re-tiled shapes — a mismatch is a build
+    /// error.
+    pub fn tile(mut self, choice: TileChoice) -> EngineBuilder {
+        self.tile = Some(choice);
+        self
+    }
+
+    /// Plan-time kernel autotuning (`--tune on|off`; default off).
+    pub fn tune(mut self, tune: TuneMode) -> EngineBuilder {
+        self.tune = tune;
+        self
+    }
+
     /// Worker thread count (default: all cores). Zero is a build
     /// error, not a silent clamp.
     pub fn threads(mut self, n: usize) -> EngineBuilder {
@@ -147,6 +183,16 @@ impl EngineBuilder {
         self.kernel
     }
 
+    /// The tile override, if any (`None` = respect the specs).
+    pub fn tile_choice(&self) -> Option<TileChoice> {
+        self.tile
+    }
+
+    /// The currently-selected autotuning mode.
+    pub fn tune_mode(&self) -> TuneMode {
+        self.tune
+    }
+
     /// Validate everything and start the engine thread.
     ///
     /// Checks, in order: at least one model, unique names, every spec
@@ -173,6 +219,14 @@ impl EngineBuilder {
         validate_policy(&self.policy)?;
         let mut hosted = Vec::with_capacity(self.models.len());
         for (name, spec, weights) in self.models {
+            // re-tile before validation and weight init: tile size is
+            // a layer property, so it must be settled before weight
+            // shapes exist (and an inadmissible forced tile becomes a
+            // typed spec error here, not an engine-thread panic)
+            let spec = match self.tile {
+                Some(choice) => spec.with_tile(choice),
+                None => spec,
+            };
             spec.validate().map_err(|e| EngineError::InvalidSpec {
                 model: name.clone(),
                 reason: format!("{e}"),
@@ -193,7 +247,7 @@ impl EngineBuilder {
         }
         let (handle, join) =
             Server::start_hosted(hosted, self.backend, self.threads,
-                                 self.kernel, self.policy)
+                                 self.kernel, self.tune, self.policy)
                 .map_err(|e| EngineError::Internal(format!("{e}")))?;
         Ok(Engine::from_parts(handle, join))
     }
@@ -270,6 +324,34 @@ mod tests {
         let b = EngineBuilder::from_args(&args).unwrap();
         assert_eq!((b.backend, b.threads, b.kernel, b.seed),
                    (BackendKind::Scalar, 3, KernelKind::Legacy, 9));
+        // tile/tune default to "respect the spec" and "off"
+        assert_eq!(b.tile_choice(), None);
+        assert_eq!(b.tune_mode(), TuneMode::Off);
+    }
+
+    #[test]
+    fn from_args_parses_tile_and_tune() {
+        use crate::nn::matrices::TileSize;
+        let args = Args::parse(
+            ["serve", "--tile", "f4", "--tune", "on"]
+                .map(String::from));
+        let b = EngineBuilder::from_args(&args).unwrap();
+        assert_eq!(b.tile_choice(),
+                   Some(TileChoice::Fixed(TileSize::F4)));
+        assert_eq!(b.tune_mode(), TuneMode::On);
+        let args =
+            Args::parse(["serve", "--tile", "auto"].map(String::from));
+        let b = EngineBuilder::from_args(&args).unwrap();
+        assert_eq!(b.tile_choice(), Some(TileChoice::Auto));
+        // typos are typed errors, not silent defaults
+        let args =
+            Args::parse(["serve", "--tile", "f8"].map(String::from));
+        assert!(matches!(EngineBuilder::from_args(&args),
+                         Err(EngineError::BadOption { .. })));
+        let args =
+            Args::parse(["serve", "--tune", "yes"].map(String::from));
+        assert!(matches!(EngineBuilder::from_args(&args),
+                         Err(EngineError::BadOption { .. })));
     }
 
     #[test]

@@ -78,6 +78,7 @@ fn print_help() {
          \x20 serve    [--requests N] [--max-wait-us N]\n\
          \x20          [--backend scalar|parallel|parallel-int8|pjrt]\n\
          \x20          [--kernel legacy|pointmajor] [--threads N]\n\
+         \x20          [--tile auto|f2|f4] [--tune on|off]\n\
          \x20          [--cin N] [--cout N] [--hw N]\n\
          \x20          [--variant std|A0..A3]\n\
          \x20          [--model single|stack|lenet|resnet20] [--depth N]\n\
@@ -88,6 +89,7 @@ fn print_help() {
          \x20          [--pipeline D] [--max-in-flight N] [--out PATH]\n\
          \x20          [--proto v1|v2] [--dtype f32|int8]\n\
          \x20          [--backend ...] [--kernel ...] [--threads N]\n\
+         \x20          [--tile auto|f2|f4] [--tune on|off]\n\
          \x20          [--model ...] [--cin N] [--cout N] [--hw N]\n\
          \x20          [--max-wait-us N]\n\
          \x20 energy   [--model resnet20|resnet32|resnet18]\n\
@@ -240,9 +242,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cout = args.get_usize("cout", 16);
     let hw = args.get_usize("hw", 28);
     let builder = EngineBuilder::from_args(args)?;
-    println!("native serving: backend {} x{} threads ({} kernels)",
+    println!("native serving: backend {} x{} threads ({} kernels, \
+              tile {}, tune {})",
              builder.backend_kind().name(), builder.thread_count(),
-             builder.kernel_kind().name());
+             builder.kernel_kind().name(),
+             builder.tile_choice().map_or("spec", |t| t.name()),
+             builder.tune_mode().name());
     let engine = engine_from_args(args, builder, policy, cin, cout,
                                   hw, variant)?;
     for m in engine.models() {

@@ -4,13 +4,14 @@
 
 use std::sync::Arc;
 
-use super::pool::ThreadPool;
+use super::pool::{GridSpec, ThreadPool};
 use super::simd::PmSpan;
 use super::{kernel, simd, Backend, ForwardArgs, KernelKind, StageDims,
             Variant};
+use crate::nn::matrices::{FlatS, TileSize};
 use crate::nn::plan::{self, Workspace};
 use crate::nn::quant::{self, QParams, QTensor};
-use crate::nn::wino_adder;
+use crate::nn::wino_adder::{self, TileGrid};
 use crate::nn::Tensor;
 
 /// Parallel int8 backend: symmetric per-tensor quantization on the
@@ -20,10 +21,11 @@ use crate::nn::Tensor;
 ///
 /// The integer pipeline is bit-exact vs
 /// [`quant::winograd_adder_conv2d_i8`] regardless of [`KernelKind`],
-/// thread count, or SIMD level — integer sums are exact under any
-/// re-association — so the only error vs the f32 oracle is the
-/// quantization noise itself. Outputs are dequantized (`q * scale`) so
-/// callers see the same f32 `Tensor` API as every other backend.
+/// tile size, thread count, or SIMD level — integer sums are exact
+/// under any re-association — so the only error vs the f32 oracle is
+/// the quantization noise itself. Outputs are dequantized
+/// (`q * scale`) so callers see the same f32 `Tensor` API as every
+/// other backend.
 pub struct ParallelInt8Backend {
     pool: ThreadPool,
     kernel: KernelKind,
@@ -51,13 +53,13 @@ impl ParallelInt8Backend {
     /// Sharded **legacy** integer elementwise stage (see
     /// [`super::ParallelBackend::run_tiles`]); exposed for the benches.
     pub fn run_tiles(&self, d_hat: &Arc<[i16]>, w_hat: &Arc<[i16]>,
-                     dims: StageDims, s: [[i32; 4]; 16],
-                     y: &mut [i32]) {
+                     dims: StageDims, s: FlatS<i32>, y: &mut [i32]) {
         let d = Arc::clone(d_hat);
         let w = Arc::clone(w_hat);
         let o = dims.o;
-        self.pool.scatter_ranges(dims.t, o * 4, y, move |a, b| {
-            let mut out = vec![0i32; (b - a) * o * 4];
+        let q = s.q();
+        self.pool.scatter_ranges(dims.t, o * q, y, move |a, b| {
+            let mut out = vec![0i32; (b - a) * o * q];
             kernel::wino_adder_tiles_range_i8(&d, &w, a, b, dims, &s,
                                               &mut out);
             out
@@ -66,42 +68,55 @@ impl ParallelInt8Backend {
 
     /// Sharded **point-major** integer elementwise stage (see
     /// [`super::ParallelBackend::run_tiles_pm`]); exposed for the
-    /// benches.
+    /// benches. Runs the default register-block shape.
     pub fn run_tiles_pm(&self, d_pm: &Arc<[i16]>, w_pm: &Arc<[i16]>,
-                        dims: StageDims, s: [[i32; 4]; 16],
+                        dims: StageDims, s: FlatS<i32>,
                         y: &mut [i32], bufs: &mut Vec<Vec<i32>>) {
         let d = Arc::clone(d_pm);
         let w = Arc::clone(w_pm);
         let o = dims.o;
+        let q = s.q();
         self.pool.scatter_grid_into(
-            16, dims.t, o * 4, y, bufs, move |p0, p1, t0, t1, buf| {
+            GridSpec::new(s.points(), dims.t, o * q), y, bufs,
+            move |p0, p1, t0, t1, buf| {
                 buf.clear();
-                buf.resize((t1 - t0) * o * 4, 0);
+                buf.resize((t1 - t0) * o * q, 0);
                 simd::sad_gemm_pm_i8(&d, &w, dims,
                                      PmSpan::new(t0, t1, p0, p1), &s,
-                                     buf);
+                                     simd::PM_OC_BLOCK, buf);
             });
     }
 
     /// Integer forward from an already-quantized input: returns the
     /// raw i32 accumulators plus output dims (the shape
-    /// `quant::winograd_adder_conv2d_i8` returns).
+    /// `quant::winograd_adder_conv2d_i8` returns). The trailing dims
+    /// of `w_dims` pick the tile size, like everywhere else.
     pub fn forward_i8(&self, qx: &QTensor, w_hat_q: &[i16],
                       w_dims: [usize; 4], pad: usize, variant: Variant)
                       -> (Vec<i32>, [usize; 4]) {
         let o = w_dims[0];
         let c = qx.dims[1];
         assert_eq!(w_dims[1], c, "channel mismatch");
-        let s = kernel::output_transform_flat_i32(variant);
-        let (n, th, tw) = wino_adder::tile_geometry(qx.dims, pad);
+        let tile = match (w_dims[2], w_dims[3]) {
+            (4, 4) => TileSize::F2,
+            (6, 6) => TileSize::F4,
+            (a, b) => panic!("wino weights must be (O,C,4,4) or \
+                              (O,C,6,6), got trailing ({a}, {b})"),
+        };
+        let p = tile.points();
+        let q = tile.out_points();
+        let s = kernel::flat_s_i32(variant, tile);
+        let (n, th, tw) =
+            wino_adder::tile_geometry_for(qx.dims, pad, tile);
         let t = n * th * tw;
         let dims = StageDims::new(t, o, c);
-        let mut y = vec![0i32; t * o * 4];
+        let mut y = vec![0i32; t * o * q];
         match self.kernel {
             KernelKind::PointMajor => {
-                let mut d_pm = vec![0i16; 16 * c * t];
-                quant::input_tiles_i16_pm_into(&qx.data, qx.dims, pad,
-                                               variant, &mut d_pm);
+                let mut d_pm = vec![0i16; p * c * t];
+                quant::input_tiles_i16_pm_into_for(&qx.data, qx.dims,
+                                                   pad, variant, tile,
+                                                   &mut d_pm);
                 let mut w_pm = Vec::new();
                 quant::repack_wino_weights_pm(w_hat_q, o, c, &mut w_pm);
                 let d: Arc<[i16]> = d_pm.into();
@@ -110,15 +125,18 @@ impl ParallelInt8Backend {
                                   &mut Vec::new());
             }
             KernelKind::Legacy => {
-                let (d_hat, ..) =
-                    quant::input_tiles_i16(qx, pad, variant);
+                let mut d_hat = vec![0i16; t * c * p];
+                quant::input_tiles_i16_into_for(&qx.data, qx.dims, pad,
+                                                variant, tile,
+                                                &mut d_hat);
                 let d: Arc<[i16]> = d_hat.into();
                 let w: Arc<[i16]> = w_hat_q.to_vec().into();
                 self.run_tiles(&d, &w, dims, s, &mut y);
             }
         }
-        let out = kernel::untile_i32(&y, n, o, th, tw);
-        (out, [n, o, 2 * th, 2 * tw])
+        let g = TileGrid::new(n, o, th, tw, tile);
+        let out = kernel::untile_i32(&y, g);
+        (out, [n, o, g.r * th, g.r * tw])
     }
 }
 
@@ -151,50 +169,56 @@ impl Backend for ParallelInt8Backend {
     /// allocation-free in steady state.
     fn forward_into(&self, args: ForwardArgs<'_>, ws: &mut Workspace,
                     out: &mut Tensor) {
-        let ForwardArgs { x, w_hat, pad, variant } = args;
+        let ForwardArgs { x, w_hat, pad, variant, choice } = args;
         let c = x.dims[1];
         let o = w_hat.dims[0];
         assert_eq!(w_hat.dims[1], c, "channel mismatch");
-        assert_eq!((w_hat.dims[2], w_hat.dims[3]), (4, 4),
-                   "w_hat must be Winograd-domain (O,C,4,4)");
-        let (n, th, tw) = wino_adder::tile_geometry(x.dims, pad);
+        let tile = wino_adder::tile_size_of(w_hat);
+        let p = tile.points();
+        let q = tile.out_points();
+        let (n, th, tw) = wino_adder::tile_geometry_for(x.dims, pad,
+                                                        tile);
         let t = n * th * tw;
         let dims = StageDims::new(t, o, c);
         let qp = QParams::fit(&x.data);
         let scale = qp.scale;
         ws.qx.clear();
         ws.qx.extend(x.data.iter().map(|&v| qp.quantize(v)));
-        let s = kernel::output_transform_flat_i32(variant);
-        ws.y_tiles_i32.resize(t * o * 4, 0);
+        let s = kernel::flat_s_i32(variant, tile);
+        ws.y_tiles_i32.resize(t * o * q, 0);
         match self.kernel {
             KernelKind::PointMajor => {
                 {
                     let d = plan::arc_vec_mut(&mut ws.d_hat_i16);
-                    d.resize(16 * c * t, 0);
-                    quant::input_tiles_i16_pm_into(&ws.qx, x.dims, pad,
-                                                   variant, d);
+                    d.resize(p * c * t, 0);
+                    quant::input_tiles_i16_pm_into_for(&ws.qx, x.dims,
+                                                       pad, variant,
+                                                       tile, d);
                     quant::quantize_wino_weights_pm_into(
                         &w_hat.data, scale, o, c,
                         plan::arc_vec_mut(&mut ws.w_i16));
                 }
                 let d = Arc::clone(&ws.d_hat_i16);
                 let w = Arc::clone(&ws.w_i16);
+                let oc_block = choice.oc_block;
+                let grid = GridSpec::new(p, t, o * q).with_parts(
+                    self.pool.size() * choice.parts_mul.max(1));
                 self.pool.scatter_grid_into(
-                    16, t, o * 4, &mut ws.y_tiles_i32,
-                    &mut ws.shard_i32, move |p0, p1, t0, t1, buf| {
+                    grid, &mut ws.y_tiles_i32, &mut ws.shard_i32,
+                    move |p0, p1, t0, t1, buf| {
                         buf.clear();
-                        buf.resize((t1 - t0) * o * 4, 0);
+                        buf.resize((t1 - t0) * o * q, 0);
                         simd::sad_gemm_pm_i8(
                             &d, &w, dims, PmSpan::new(t0, t1, p0, p1),
-                            &s, buf);
+                            &s, oc_block, buf);
                     });
             }
             KernelKind::Legacy => {
                 {
                     let d = plan::arc_vec_mut(&mut ws.d_hat_i16);
-                    d.resize(t * c * 16, 0);
-                    quant::input_tiles_i16_into(&ws.qx, x.dims, pad,
-                                                variant, d);
+                    d.resize(t * c * p, 0);
+                    quant::input_tiles_i16_into_for(&ws.qx, x.dims, pad,
+                                                    variant, tile, d);
                     quant::quantize_wino_weights_into(
                         &w_hat.data, scale,
                         plan::arc_vec_mut(&mut ws.w_i16));
@@ -202,47 +226,53 @@ impl Backend for ParallelInt8Backend {
                 let d = Arc::clone(&ws.d_hat_i16);
                 let w = Arc::clone(&ws.w_i16);
                 self.pool.scatter_ranges_into(
-                    t, o * 4, &mut ws.y_tiles_i32, &mut ws.shard_i32,
+                    t, o * q, &mut ws.y_tiles_i32, &mut ws.shard_i32,
                     move |a, b, buf| {
-                        buf.resize((b - a) * o * 4, 0);
+                        buf.resize((b - a) * o * q, 0);
                         kernel::wino_adder_tiles_range_i8(&d, &w, a, b,
                                                           dims, &s,
                                                           buf);
                     });
             }
         }
-        out.dims = [n, o, 2 * th, 2 * tw];
-        out.data.resize(t * o * 4, 0.0);
-        kernel::untile_i32_scaled_into(&ws.y_tiles_i32, n, o, th, tw,
-                                       scale, &mut out.data);
+        let g = TileGrid::new(n, o, th, tw, tile);
+        out.dims = [n, o, g.r * th, g.r * tw];
+        out.data.resize(t * o * q, 0.0);
+        kernel::untile_i32_scaled_into(&ws.y_tiles_i32, g, scale,
+                                       &mut out.data);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::backend::KernelChoice;
     use crate::util::rng::Rng;
 
     /// The parallel integer path must reproduce the sequential quant
     /// reference bit-for-bit (integer sums are exact) — with either
-    /// kernel family.
+    /// kernel family and either tile size.
     #[test]
     fn matches_quant_reference_exactly() {
         let mut rng = Rng::new(31);
-        let x = Tensor::randn(&mut rng, [1, 4, 6, 6]);
-        let w_hat = Tensor::randn(&mut rng, [3, 4, 4, 4]);
-        let qx = QTensor::from_f32(&x);
-        let wq = quant::quantize_wino_weights(&w_hat, qx.qp.scale);
-        let (want, want_dims, _) = quant::winograd_adder_conv2d_i8(
-            &qx, &wq, w_hat.dims, 1, Variant::Balanced(0));
-        for kernel in KernelKind::ALL {
-            for threads in [1, 3, 8] {
-                let be =
-                    ParallelInt8Backend::with_kernel(threads, kernel);
-                let (got, dims) = be.forward_i8(&qx, &wq, w_hat.dims,
-                                                1, Variant::Balanced(0));
-                assert_eq!(dims, want_dims);
-                assert_eq!(got, want, "{} x{threads}", kernel.name());
+        let x = Tensor::randn(&mut rng, [1, 4, 8, 8]);
+        for tile in TileSize::ALL {
+            let ts = tile.tile();
+            let w_hat = Tensor::randn(&mut rng, [3, 4, ts, ts]);
+            let qx = QTensor::from_f32(&x);
+            let wq = quant::quantize_wino_weights(&w_hat, qx.qp.scale);
+            let (want, want_dims, _) = quant::winograd_adder_conv2d_i8(
+                &qx, &wq, w_hat.dims, 1, Variant::Balanced(0));
+            for kernel in KernelKind::ALL {
+                for threads in [1, 3, 8] {
+                    let be = ParallelInt8Backend::with_kernel(threads,
+                                                              kernel);
+                    let (got, dims) = be.forward_i8(
+                        &qx, &wq, w_hat.dims, 1, Variant::Balanced(0));
+                    assert_eq!(dims, want_dims);
+                    assert_eq!(got, want, "{}/{} x{threads}",
+                               kernel.name(), tile.name());
+                }
             }
         }
     }
@@ -251,24 +281,56 @@ mod tests {
     fn forward_into_is_bit_exact_vs_forward() {
         let mut rng = Rng::new(33);
         let x = Tensor::randn(&mut rng, [2, 3, 8, 8]);
-        let w_hat = Tensor::randn(&mut rng, [4, 3, 4, 4]);
-        for kernel in KernelKind::ALL {
-            for threads in [1usize, 4] {
-                let be =
-                    ParallelInt8Backend::with_kernel(threads, kernel);
-                let want =
-                    be.forward(&x, &w_hat, 1, Variant::Balanced(0));
+        for tile in TileSize::ALL {
+            let ts = tile.tile();
+            let w_hat = Tensor::randn(&mut rng, [4, 3, ts, ts]);
+            for kernel in KernelKind::ALL {
+                for threads in [1usize, 4] {
+                    let be = ParallelInt8Backend::with_kernel(threads,
+                                                              kernel);
+                    let want =
+                        be.forward(&x, &w_hat, 1, Variant::Balanced(0));
+                    let mut ws = Workspace::new();
+                    let mut out = Tensor::zeros([1, 1, 1, 1]);
+                    for _ in 0..2 {
+                        be.forward_into(
+                            ForwardArgs::new(&x, &w_hat, 1,
+                                             Variant::Balanced(0)),
+                            &mut ws, &mut out);
+                        assert_eq!(out.dims, want.dims);
+                        assert_eq!(out.data, want.data,
+                                   "{}/{} x{threads} diverged",
+                                   kernel.name(), tile.name());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_choice_knobs_are_bit_exact() {
+        // integer sums are exact under any re-association, so the
+        // autotuner candidates must not move a single bit
+        let mut rng = Rng::new(37);
+        let x = Tensor::randn(&mut rng, [1, 3, 8, 8]);
+        for tile in TileSize::ALL {
+            let ts = tile.tile();
+            let w_hat = Tensor::randn(&mut rng, [2, 3, ts, ts]);
+            let be = ParallelInt8Backend::new(2);
+            let want = be.forward(&x, &w_hat, 1, Variant::Std);
+            for (oc_block, parts_mul) in [(2usize, 1usize), (4, 2),
+                                          (1, 4)] {
+                let choice = KernelChoice { tile, oc_block, parts_mul };
                 let mut ws = Workspace::new();
                 let mut out = Tensor::zeros([1, 1, 1, 1]);
-                for _ in 0..2 {
-                    be.forward_into(
-                        ForwardArgs::new(&x, &w_hat, 1,
-                                         Variant::Balanced(0)),
-                        &mut ws, &mut out);
-                    assert_eq!(out.dims, want.dims);
-                    assert_eq!(out.data, want.data,
-                               "{} x{threads} diverged", kernel.name());
-                }
+                be.forward_into(
+                    ForwardArgs::new(&x, &w_hat, 1, Variant::Std)
+                        .with_choice(choice),
+                    &mut ws, &mut out);
+                assert_eq!(out.dims, want.dims);
+                assert_eq!(out.data, want.data,
+                           "{} oc{oc_block} x{parts_mul} diverged",
+                           tile.name());
             }
         }
     }
@@ -277,18 +339,23 @@ mod tests {
     fn dequantized_forward_matches_reference_dequant() {
         let mut rng = Rng::new(32);
         let x = Tensor::randn(&mut rng, [2, 3, 8, 8]);
-        let w_hat = Tensor::randn(&mut rng, [4, 3, 4, 4]);
-        let qx = QTensor::from_f32(&x);
-        let wq = quant::quantize_wino_weights(&w_hat, qx.qp.scale);
-        let (ref_i, dims, scale) = quant::winograd_adder_conv2d_i8(
-            &qx, &wq, w_hat.dims, 1, Variant::Balanced(1));
-        let want: Vec<f32> =
-            ref_i.iter().map(|&q| q as f32 * scale).collect();
-        for kernel in KernelKind::ALL {
-            let be = ParallelInt8Backend::with_kernel(4, kernel);
-            let got = be.forward(&x, &w_hat, 1, Variant::Balanced(1));
-            assert_eq!(got.dims, dims);
-            assert_eq!(got.data, want, "{}", kernel.name());
+        for tile in TileSize::ALL {
+            let ts = tile.tile();
+            let w_hat = Tensor::randn(&mut rng, [4, 3, ts, ts]);
+            let qx = QTensor::from_f32(&x);
+            let wq = quant::quantize_wino_weights(&w_hat, qx.qp.scale);
+            let (ref_i, dims, scale) = quant::winograd_adder_conv2d_i8(
+                &qx, &wq, w_hat.dims, 1, Variant::Balanced(1));
+            let want: Vec<f32> =
+                ref_i.iter().map(|&q| q as f32 * scale).collect();
+            for kernel in KernelKind::ALL {
+                let be = ParallelInt8Backend::with_kernel(4, kernel);
+                let got =
+                    be.forward(&x, &w_hat, 1, Variant::Balanced(1));
+                assert_eq!(got.dims, dims);
+                assert_eq!(got.data, want, "{}/{}", kernel.name(),
+                           tile.name());
+            }
         }
     }
 }

@@ -6,19 +6,20 @@
 //! differential-tested against.
 //!
 //! The stage computes `m[t,o,p] = -sum_c |w_hat[o,c,p] - d_hat[t,c,p]|`
-//! followed by the flat output transform `y = m @ S` (S is 16x4 with
-//! 0/±1 entries). Compared to the scalar baseline
-//! [`crate::nn::wino_adder::wino_adder_tiles`], this version:
+//! followed by the flat output transform `y = m @ S` (S is `P x Q` with
+//! small integer entries; `(P, Q)` is (16, 4) for F(2x2,3x3) and
+//! (36, 16) for F(4x4,3x3)). Compared to the scalar baseline
+//! [`crate::nn::wino_adder::wino_adder_tiles_flat`], this version:
 //!
 //! * blocks over **tiles x output channels** so the accumulator block
-//!   (`TILE_BLOCK * OC_BLOCK * 16` floats = 8 KiB) stays resident in L1
-//!   while `d_hat` rows stream and the weight block is reused
-//!   `TILE_BLOCK` times per input channel;
-//! * keeps the 16-wide transform-domain axis as the innermost,
-//!   fixed-trip-count loop over `&[f32; 16]` arrays, with `|a - b|`
-//!   computed branchlessly by clearing the IEEE-754 sign bit — the
-//!   shape LLVM autovectorizes to 4x f32x4 (SSE) / 1x f32x16 (AVX-512)
-//!   lanes;
+//!   (`TILE_BLOCK * OC_BLOCK * P` floats, 8 KiB at F2 / 18 KiB at F4)
+//!   stays resident in L1/L2 while `d_hat` rows stream and the weight
+//!   block is reused `TILE_BLOCK` times per input channel;
+//! * keeps the P-wide transform-domain axis as the innermost,
+//!   fixed-trip-count loop over `&[f32; P]` arrays (P is a const
+//!   generic, monomorphized per tile size), with `|a - b|` computed
+//!   branchlessly by clearing the IEEE-754 sign bit — the shape LLVM
+//!   autovectorizes to f32x4/f32x8 lanes;
 //! * works on a **tile range** `[t0, t1)` writing a range-local output
 //!   slice, which is exactly the unit the thread pool shards.
 //!
@@ -27,12 +28,17 @@
 //! integer kernel is bit-exact vs `quant::winograd_adder_conv2d_i8`.
 
 use super::StageDims;
-use crate::nn::matrices::{self, Variant};
+use crate::nn::matrices::{self, FlatS, TileSize, Variant};
+use crate::nn::wino_adder::TileGrid;
 
 /// Tiles kept hot per accumulator block.
 pub const TILE_BLOCK: usize = 16;
 /// Output channels per accumulator block.
 pub const OC_BLOCK: usize = 8;
+/// Accumulator block capacity, sized for the larger F4 tile (36
+/// points); F2 blocks use the first `TILE_BLOCK * OC_BLOCK * 16`
+/// entries.
+const M_CAP: usize = TILE_BLOCK * OC_BLOCK * 36;
 
 /// Branchless `|x|`: clear the IEEE-754 sign bit.
 #[inline(always)]
@@ -42,39 +48,53 @@ pub fn abs_branchless(x: f32) -> f32 {
 
 /// Blocked f32 elementwise stage over the tile range `[t0, t1)`.
 ///
-/// `d_hat` is the full `(dims.t, C, 16)` buffer, `w_hat` is
-/// `(O, C, 16)`, and `y` is the **range-local** output
-/// `(t1 - t0, O, 4)`.
+/// `d_hat` is the full `(dims.t, C, P)` buffer, `w_hat` is
+/// `(O, C, P)`, and `y` is the **range-local** output
+/// `(t1 - t0, O, Q)`; `(P, Q)` come from `s` and select the
+/// monomorphized body.
 pub fn wino_adder_tiles_range(d_hat: &[f32], w_hat: &[f32], t0: usize,
                               t1: usize, dims: StageDims,
-                              s: &[[f32; 4]; 16], y: &mut [f32]) {
+                              s: &FlatS<f32>, y: &mut [f32]) {
+    match s.points() {
+        16 => tiles_range_impl::<16, 4>(d_hat, w_hat, t0, t1, dims, s, y),
+        36 => tiles_range_impl::<36, 16>(d_hat, w_hat, t0, t1, dims, s,
+                                         y),
+        p => panic!("unsupported transform point count {p}"),
+    }
+}
+
+#[inline]
+fn tiles_range_impl<const P: usize, const Q: usize>(
+    d_hat: &[f32], w_hat: &[f32], t0: usize, t1: usize, dims: StageDims,
+    s: &FlatS<f32>, y: &mut [f32]) {
     let StageDims { o, c, .. } = dims;
-    assert!(t0 <= t1 && t1 <= dims.t && t1 * c * 16 <= d_hat.len());
-    assert_eq!(w_hat.len(), o * c * 16);
-    assert_eq!(y.len(), (t1 - t0) * o * 4);
-    let mut m = [0f32; TILE_BLOCK * OC_BLOCK * 16];
+    assert_eq!((s.points(), s.q()), (P, Q));
+    assert!(t0 <= t1 && t1 <= dims.t && t1 * c * P <= d_hat.len());
+    assert_eq!(w_hat.len(), o * c * P);
+    assert_eq!(y.len(), (t1 - t0) * o * Q);
+    let mut m = [0f32; M_CAP];
     for tb in (t0..t1).step_by(TILE_BLOCK) {
         let te = (tb + TILE_BLOCK).min(t1);
         let nt = te - tb;
         for ob in (0..o).step_by(OC_BLOCK) {
             let oe = (ob + OC_BLOCK).min(o);
             let no = oe - ob;
-            let mblk = &mut m[..nt * no * 16];
+            let mblk = &mut m[..nt * no * P];
             mblk.fill(0.0);
             for ic in 0..c {
                 for (ti, mt) in
-                    mblk.chunks_exact_mut(no * 16).enumerate()
+                    mblk.chunks_exact_mut(no * P).enumerate()
                 {
-                    let dbase = ((tb + ti) * c + ic) * 16;
-                    let d: &[f32; 16] =
-                        d_hat[dbase..dbase + 16].try_into().unwrap();
+                    let dbase = ((tb + ti) * c + ic) * P;
+                    let d: &[f32; P] =
+                        d_hat[dbase..dbase + P].try_into().unwrap();
                     for (oj, mrow) in
-                        mt.chunks_exact_mut(16).enumerate()
+                        mt.chunks_exact_mut(P).enumerate()
                     {
-                        let wbase = ((ob + oj) * c + ic) * 16;
-                        let wv: &[f32; 16] =
-                            w_hat[wbase..wbase + 16].try_into().unwrap();
-                        for p in 0..16 {
+                        let wbase = ((ob + oj) * c + ic) * P;
+                        let wv: &[f32; P] =
+                            w_hat[wbase..wbase + P].try_into().unwrap();
+                        for p in 0..P {
                             mrow[p] -= abs_branchless(wv[p] - d[p]);
                         }
                     }
@@ -82,12 +102,12 @@ pub fn wino_adder_tiles_range(d_hat: &[f32], w_hat: &[f32], t0: usize,
             }
             for ti in 0..nt {
                 for oj in 0..no {
-                    let mrow = &m[(ti * no + oj) * 16..][..16];
-                    let ybase = ((tb - t0 + ti) * o + ob + oj) * 4;
-                    for q in 0..4 {
+                    let mrow = &m[(ti * no + oj) * P..][..P];
+                    let ybase = ((tb - t0 + ti) * o + ob + oj) * Q;
+                    for q in 0..Q {
                         let mut acc = 0f32;
-                        for p in 0..16 {
-                            acc += mrow[p] * s[p][q];
+                        for (p, mv) in mrow.iter().enumerate() {
+                            acc += mv * s.row(p)[q];
                         }
                         y[ybase + q] = acc;
                     }
@@ -102,34 +122,48 @@ pub fn wino_adder_tiles_range(d_hat: &[f32], w_hat: &[f32], t0: usize,
 /// datapath), i32 accumulators. Layouts mirror the f32 version.
 pub fn wino_adder_tiles_range_i8(d_hat: &[i16], w_hat: &[i16], t0: usize,
                                  t1: usize, dims: StageDims,
-                                 s: &[[i32; 4]; 16], y: &mut [i32]) {
+                                 s: &FlatS<i32>, y: &mut [i32]) {
+    match s.points() {
+        16 => tiles_range_i8_impl::<16, 4>(d_hat, w_hat, t0, t1, dims, s,
+                                           y),
+        36 => tiles_range_i8_impl::<36, 16>(d_hat, w_hat, t0, t1, dims,
+                                            s, y),
+        p => panic!("unsupported transform point count {p}"),
+    }
+}
+
+#[inline]
+fn tiles_range_i8_impl<const P: usize, const Q: usize>(
+    d_hat: &[i16], w_hat: &[i16], t0: usize, t1: usize, dims: StageDims,
+    s: &FlatS<i32>, y: &mut [i32]) {
     let StageDims { o, c, .. } = dims;
-    assert!(t0 <= t1 && t1 <= dims.t && t1 * c * 16 <= d_hat.len());
-    assert_eq!(w_hat.len(), o * c * 16);
-    assert_eq!(y.len(), (t1 - t0) * o * 4);
-    let mut m = [0i32; TILE_BLOCK * OC_BLOCK * 16];
+    assert_eq!((s.points(), s.q()), (P, Q));
+    assert!(t0 <= t1 && t1 <= dims.t && t1 * c * P <= d_hat.len());
+    assert_eq!(w_hat.len(), o * c * P);
+    assert_eq!(y.len(), (t1 - t0) * o * Q);
+    let mut m = [0i32; M_CAP];
     for tb in (t0..t1).step_by(TILE_BLOCK) {
         let te = (tb + TILE_BLOCK).min(t1);
         let nt = te - tb;
         for ob in (0..o).step_by(OC_BLOCK) {
             let oe = (ob + OC_BLOCK).min(o);
             let no = oe - ob;
-            let mblk = &mut m[..nt * no * 16];
+            let mblk = &mut m[..nt * no * P];
             mblk.fill(0);
             for ic in 0..c {
                 for (ti, mt) in
-                    mblk.chunks_exact_mut(no * 16).enumerate()
+                    mblk.chunks_exact_mut(no * P).enumerate()
                 {
-                    let dbase = ((tb + ti) * c + ic) * 16;
-                    let d: &[i16; 16] =
-                        d_hat[dbase..dbase + 16].try_into().unwrap();
+                    let dbase = ((tb + ti) * c + ic) * P;
+                    let d: &[i16; P] =
+                        d_hat[dbase..dbase + P].try_into().unwrap();
                     for (oj, mrow) in
-                        mt.chunks_exact_mut(16).enumerate()
+                        mt.chunks_exact_mut(P).enumerate()
                     {
-                        let wbase = ((ob + oj) * c + ic) * 16;
-                        let wv: &[i16; 16] =
-                            w_hat[wbase..wbase + 16].try_into().unwrap();
-                        for p in 0..16 {
+                        let wbase = ((ob + oj) * c + ic) * P;
+                        let wv: &[i16; P] =
+                            w_hat[wbase..wbase + P].try_into().unwrap();
+                        for p in 0..P {
                             mrow[p] -=
                                 (wv[p] as i32 - d[p] as i32).abs();
                         }
@@ -138,12 +172,12 @@ pub fn wino_adder_tiles_range_i8(d_hat: &[i16], w_hat: &[i16], t0: usize,
             }
             for ti in 0..nt {
                 for oj in 0..no {
-                    let mrow = &m[(ti * no + oj) * 16..][..16];
-                    let ybase = ((tb - t0 + ti) * o + ob + oj) * 4;
-                    for q in 0..4 {
+                    let mrow = &m[(ti * no + oj) * P..][..P];
+                    let ybase = ((tb - t0 + ti) * o + ob + oj) * Q;
+                    for q in 0..Q {
                         let mut acc = 0i32;
-                        for p in 0..16 {
-                            acc += mrow[p] * s[p][q];
+                        for (p, mv) in mrow.iter().enumerate() {
+                            acc += mv * s.row(p)[q];
                         }
                         y[ybase + q] = acc;
                     }
@@ -153,8 +187,9 @@ pub fn wino_adder_tiles_range_i8(d_hat: &[i16], w_hat: &[i16], t0: usize,
     }
 }
 
-/// Integer flat output transform `S` (entries are exactly 0/±1 for
-/// every variant, so the cast is lossless).
+/// Integer flat output transform `S` for F(2x2,3x3) (entries are
+/// exactly 0/±1 for every variant, so the cast is lossless). The
+/// tile-size-polymorphic paths use [`flat_s_i32`] instead.
 pub fn output_transform_flat_i32(variant: Variant) -> [[i32; 4]; 16] {
     let s = matrices::output_transform_flat(variant);
     let mut out = [[0i32; 4]; 16];
@@ -167,33 +202,38 @@ pub fn output_transform_flat_i32(variant: Variant) -> [[i32; 4]; 16] {
     out
 }
 
-/// Scatter i32 `(T, O, 4)` output patches back to `(N, O, 2th, 2tw)`
+/// Integer flat output transform for (`variant`, `tile`): exact for
+/// every variant at both tile sizes (A entries are integers, so S
+/// entries are integers up to 64 in magnitude).
+pub fn flat_s_i32(variant: Variant, tile: TileSize) -> FlatS<i32> {
+    matrices::flat_s(variant, tile).to_i32()
+}
+
+/// Scatter i32 `(T, O, Q)` output patches back to `(N, O, r*th, r*tw)`
 /// NCHW order (integer twin of `wino_adder::untile`; shares its index
 /// math via `wino_adder::untile_map_into`).
-pub fn untile_i32(y: &[i32], n: usize, o: usize, th: usize, tw: usize)
-                  -> Vec<i32> {
+pub fn untile_i32(y: &[i32], g: TileGrid) -> Vec<i32> {
     // lint:allow(no-alloc-hot-path) legacy oracle helper kept for the
     // property tests; the planned path uses untile_i32_scaled_into
-    let mut out = vec![0i32; n * o * 4 * th * tw];
-    crate::nn::wino_adder::untile_map_into(y, n, o, th, tw, &mut out,
-                                           |v| v);
+    let mut out = vec![0i32; g.out_len()];
+    crate::nn::wino_adder::untile_map_into(y, g, &mut out, |v| v);
     out
 }
 
-/// Allocation-free scatter + dequantize: i32 `(T, O, 4)` patches into a
-/// caller-provided f32 `(N, O, 2th, 2tw)` NCHW slice, multiplying by
+/// Allocation-free scatter + dequantize: i32 `(T, O, Q)` patches into a
+/// caller-provided f32 `(N, O, r*th, r*tw)` NCHW slice, multiplying by
 /// `scale` (the int8 backend's output stage on the planned path). Every
 /// element is written, so the slice need not be zeroed.
-pub fn untile_i32_scaled_into(y: &[i32], n: usize, o: usize, th: usize,
-                              tw: usize, scale: f32, out: &mut [f32]) {
-    crate::nn::wino_adder::untile_map_into(y, n, o, th, tw, out,
+pub fn untile_i32_scaled_into(y: &[i32], g: TileGrid, scale: f32,
+                              out: &mut [f32]) {
+    crate::nn::wino_adder::untile_map_into(y, g, out,
                                            |q| q as f32 * scale);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::wino_adder::wino_adder_tiles;
+    use crate::nn::wino_adder::{wino_adder_tiles, wino_adder_tiles_flat};
     use crate::util::rng::Rng;
     use crate::util::testkit::{all_close, property};
 
@@ -219,10 +259,11 @@ mod tests {
                                 Variant::Balanced(1),
                                 Variant::Balanced(2),
                                 Variant::Balanced(3)]);
-            let s = matrices::output_transform_flat(v);
+            let sf = matrices::output_transform_flat(v);
+            let s = matrices::flat_s(v, TileSize::F2);
             let dims = StageDims::new(t, o, c);
             let mut want = vec![0f32; t * o * 4];
-            wino_adder_tiles(&d_hat, &w_hat, t, o, c, &s, &mut want);
+            wino_adder_tiles(&d_hat, &w_hat, t, o, c, &sf, &mut want);
             // full range
             let mut got = vec![0f32; t * o * 4];
             wino_adder_tiles_range(&d_hat, &w_hat, 0, t, dims, &s,
@@ -242,39 +283,69 @@ mod tests {
         });
     }
 
+    /// Both tile sizes against the tile-size-polymorphic scalar
+    /// baseline: the blocked range kernel must agree to rounding at F2
+    /// *and* F4 (36-point rows, 16-value output patches).
+    #[test]
+    fn blocked_range_matches_flat_baseline_both_tiles_property() {
+        property(25, |g| {
+            let t = g.usize_in(1, 40);
+            let o = g.usize_in(1, 12);
+            let c = g.usize_in(1, 6);
+            let tile = *g.choose(&[TileSize::F2, TileSize::F4]);
+            let (p, q) = (tile.points(), tile.out_points());
+            let seed = g.usize_in(0, 1 << 30) as u64;
+            let mut rng = Rng::new(seed);
+            let d_hat = rng.normal_vec(t * c * p);
+            let w_hat = rng.normal_vec(o * c * p);
+            let v = *g.choose(&[Variant::Std, Variant::Balanced(0),
+                                Variant::Balanced(3)]);
+            let s = matrices::flat_s(v, tile);
+            let dims = StageDims::new(t, o, c);
+            let mut want = vec![0f32; t * o * q];
+            wino_adder_tiles_flat(&d_hat, &w_hat, t, o, c, &s, &mut want);
+            let mut got = vec![0f32; t * o * q];
+            wino_adder_tiles_range(&d_hat, &w_hat, 0, t, dims, &s,
+                                   &mut got);
+            all_close(&got, &want, 1e-4, 1e-4)
+        });
+    }
+
     /// The i16/i32 twin of the split-range property: computing
     /// `[0, mid)` and `[mid, t)` separately must tile the full-range
     /// output exactly (integer sums leave no rounding slack), for
-    /// every transform variant.
+    /// every transform variant — at both tile sizes.
     #[test]
     fn i8_split_ranges_stitch_bit_exactly_property() {
         property(25, |g| {
             let t = g.usize_in(1, 40);
             let o = g.usize_in(1, 12);
             let c = g.usize_in(1, 6);
+            let tile = *g.choose(&[TileSize::F2, TileSize::F4]);
+            let (pp, qq) = (tile.points(), tile.out_points());
             let seed = g.usize_in(0, 1 << 30) as u64;
             let mut rng = Rng::new(seed);
-            // 10-bit transform-domain inputs, i16-range weights (the
-            // datapath quant::input_tiles_i16 / quantize_wino_weights
-            // produce)
-            let d_hat: Vec<i16> = (0..t * c * 16)
+            // transform-domain inputs within the widened i16 datapath
+            // bounds, i16-range weights (what quant::input_tiles_i16*
+            // / quantize_wino_weights produce)
+            let d_hat: Vec<i16> = (0..t * c * pp)
                 .map(|_| (rng.below(2033) as i32 - 1016) as i16)
                 .collect();
-            let w_hat: Vec<i16> = (0..o * c * 16)
+            let w_hat: Vec<i16> = (0..o * c * pp)
                 .map(|_| (rng.below(4001) as i32 - 2000) as i16)
                 .collect();
             let v = *g.choose(&[Variant::Std, Variant::Balanced(0),
                                 Variant::Balanced(1),
                                 Variant::Balanced(2),
                                 Variant::Balanced(3)]);
-            let s = output_transform_flat_i32(v);
+            let s = flat_s_i32(v, tile);
             let dims = StageDims::new(t, o, c);
-            let mut want = vec![0i32; t * o * 4];
+            let mut want = vec![0i32; t * o * qq];
             wino_adder_tiles_range_i8(&d_hat, &w_hat, 0, t, dims, &s,
                                       &mut want);
             let mid = g.usize_in(0, t);
-            let mut lo = vec![0i32; mid * o * 4];
-            let mut hi = vec![0i32; (t - mid) * o * 4];
+            let mut lo = vec![0i32; mid * o * qq];
+            let mut hi = vec![0i32; (t - mid) * o * qq];
             wino_adder_tiles_range_i8(&d_hat, &w_hat, 0, mid, dims, &s,
                                       &mut lo);
             wino_adder_tiles_range_i8(&d_hat, &w_hat, mid, t, dims, &s,
@@ -296,8 +367,9 @@ mod tests {
         // t = th*tw = 4, o = 3
         let (n, o, th, tw) = (1usize, 3usize, 2usize, 2usize);
         let t = n * th * tw;
+        let g = TileGrid::new(n, o, th, tw, TileSize::F2);
         let y: Vec<i32> = (0..t * o * 4).map(|i| i as i32).collect();
-        let out = untile_i32(&y, n, o, th, tw);
+        let out = untile_i32(&y, g);
         assert_eq!(out.len(), n * o * 4 * th * tw);
         // patch (trow=0, oc=0) lands at the top-left 2x2 of channel 0;
         // the output row stride is wo = 2*tw
@@ -308,15 +380,42 @@ mod tests {
     }
 
     #[test]
-    fn scaled_untile_matches_untile_i32() {
-        let (n, o, th, tw) = (2usize, 3usize, 2usize, 2usize);
+    fn i8_f4_untile_positions() {
+        // one F4 tile row of 2: (1, 1, 4, 8) output from 4x4 patches
+        let (n, o, th, tw) = (1usize, 1usize, 1usize, 2usize);
         let t = n * th * tw;
-        let y: Vec<i32> = (0..t * o * 4).map(|i| i as i32 - 20).collect();
-        let want: Vec<f32> = untile_i32(&y, n, o, th, tw)
-            .iter().map(|&q| q as f32 * 0.25).collect();
-        let mut got = vec![f32::NAN; want.len()];
-        untile_i32_scaled_into(&y, n, o, th, tw, 0.25, &mut got);
-        assert_eq!(got, want);
+        let g = TileGrid::new(n, o, th, tw, TileSize::F4);
+        let y: Vec<i32> = (0..t * o * 16).map(|i| i as i32).collect();
+        let out = untile_i32(&y, g);
+        assert_eq!(out.len(), n * o * 16 * th * tw);
+        // row stride is wo = 4*tw = 8; patch 0 occupies columns 0..4,
+        // patch 1 columns 4..8, both 4 rows tall
+        let wo = 4 * tw;
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(out[i * wo + j], y[(i * 4 + j)],
+                           "patch 0 ({i},{j})");
+                assert_eq!(out[i * wo + 4 + j], y[16 + i * 4 + j],
+                           "patch 1 ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_untile_matches_untile_i32() {
+        for tile in [TileSize::F2, TileSize::F4] {
+            let (n, o, th, tw) = (2usize, 3usize, 2usize, 2usize);
+            let t = n * th * tw;
+            let g = TileGrid::new(n, o, th, tw, tile);
+            let q = tile.out_points();
+            let y: Vec<i32> =
+                (0..t * o * q).map(|i| i as i32 - 20).collect();
+            let want: Vec<f32> = untile_i32(&y, g)
+                .iter().map(|&v| v as f32 * 0.25).collect();
+            let mut got = vec![f32::NAN; want.len()];
+            untile_i32_scaled_into(&y, g, 0.25, &mut got);
+            assert_eq!(got, want);
+        }
     }
 
     #[test]
@@ -328,6 +427,15 @@ mod tests {
             for p in 0..16 {
                 for q in 0..4 {
                     assert_eq!(sf[p][q], si[p][q] as f32);
+                }
+            }
+            for tile in [TileSize::F2, TileSize::F4] {
+                let sf = matrices::flat_s(v, tile);
+                let si = flat_s_i32(v, tile);
+                for p in 0..sf.points() {
+                    for q in 0..sf.q() {
+                        assert_eq!(sf.row(p)[q], si.row(p)[q] as f32);
+                    }
                 }
             }
         }

@@ -17,12 +17,17 @@
 //! [`KernelKind`] (`--kernel legacy|pointmajor`):
 //!
 //! * **point-major** (default) — the [`simd`] SAD-GEMM kernels:
-//!   `d_hat (16, C, T)` / `w_hat (16, O, C)`, one long-vector GEMM per
-//!   transform point, runtime-dispatched AVX2, sharded as
-//!   `(point, tile-range)` work items
-//!   ([`pool::ThreadPool::scatter_grid_into`]);
-//! * **legacy** — the tile-major `(T, C, 16)` kernels of [`kernel`],
+//!   `d_hat (P, C, T)` / `w_hat (P, O, C)` with `P` transform points
+//!   (16 at F2, 36 at F4), one long-vector GEMM per transform point,
+//!   runtime-dispatched AVX2, sharded as `(point, tile-range)` work
+//!   items ([`pool::ThreadPool::scatter_grid_into`]);
+//! * **legacy** — the tile-major `(T, C, P)` kernels of [`kernel`],
 //!   the A/B escape hatch and test oracle.
+//!
+//! Per-layer kernel configuration (register-block height, shard-split
+//! multiplier) rides along in a [`KernelChoice`], cached per step by
+//! the plan-time autotuner (`nn::plan`) and defaulted deterministically
+//! everywhere else.
 //!
 //! Selection is wired through `--backend {scalar|parallel|
 //! parallel-int8}`, `--threads N`, and `--kernel` (see
@@ -42,32 +47,90 @@ pub use int8::ParallelInt8Backend;
 pub use parallel::ParallelBackend;
 pub use scalar::ScalarBackend;
 
-use super::matrices::Variant;
+use super::matrices::{TileSize, Variant};
 use super::plan::Workspace;
 use super::Tensor;
 use crate::util::cli::Args;
 
+/// One layer's compiled kernel configuration — the unit the plan-time
+/// autotuner (`nn::plan`) selects per (layer geometry x thread count x
+/// backend) and caches in the compiled `ModelPlan`.
+///
+/// `tile` records which transform family the layer's weights live in
+/// (the weight tensor's trailing dims stay the source of truth at
+/// execution time); `oc_block` is the point-major register-block
+/// height ([`simd::PM_OC_BLOCK`] at most); `parts_mul` multiplies the
+/// thread pool's shard count for finer-grained work stealing on skewed
+/// layer shapes. Every field leaves results bit-identical — only
+/// throughput changes — which is what makes empirical tuning safe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelChoice {
+    /// transform tile family the layer runs in
+    pub tile: TileSize,
+    /// register-block height for the point-major kernels (1..=4)
+    pub oc_block: usize,
+    /// shard-count multiplier for the pool's grid split (>= 1)
+    pub parts_mul: usize,
+}
+
+impl Default for KernelChoice {
+    fn default() -> KernelChoice {
+        KernelChoice {
+            tile: TileSize::F2,
+            oc_block: simd::PM_OC_BLOCK,
+            parts_mul: 1,
+        }
+    }
+}
+
+impl KernelChoice {
+    /// The deterministic fallback configuration for a layer stored at
+    /// `tile` (used under `--tune off` and by the untuned paths).
+    pub fn for_tile(tile: TileSize) -> KernelChoice {
+        KernelChoice { tile, ..KernelChoice::default() }
+    }
+
+    /// Compact human-readable form, e.g. `"f4/oc4/x1"`.
+    pub fn summary(&self) -> String {
+        format!("{}/oc{}/x{}", self.tile.name(), self.oc_block,
+                self.parts_mul)
+    }
+}
+
 /// Borrowed argument bundle for [`Backend::forward_into`]: one layer's
-/// input activations, Winograd-domain weights, padding, and transform
-/// variant, grouped so the trait method (and the kernel entry points
-/// below it) stay within a civilized arity.
+/// input activations, Winograd-domain weights, padding, transform
+/// variant, and kernel configuration, grouped so the trait method (and
+/// the kernel entry points below it) stay within a civilized arity.
 #[derive(Debug, Clone, Copy)]
 pub struct ForwardArgs<'a> {
     /// input activations, `(N, C, H, W)`
     pub x: &'a Tensor,
-    /// Winograd-domain weights, `(O, C, 4, 4)`
+    /// Winograd-domain weights, `(O, C, 4, 4)` or `(O, C, 6, 6)`
     pub w_hat: &'a Tensor,
     /// zero padding (0 or 1)
     pub pad: usize,
     /// transform variant (std or balanced A0..A3)
     pub variant: Variant,
+    /// kernel configuration (register block, shard split); the tile
+    /// size in here is advisory — backends derive geometry from
+    /// `w_hat`'s trailing dims
+    pub choice: KernelChoice,
 }
 
 impl<'a> ForwardArgs<'a> {
-    /// Bundle one forward call's borrowed arguments.
+    /// Bundle one forward call's borrowed arguments with the default
+    /// kernel configuration.
     pub fn new(x: &'a Tensor, w_hat: &'a Tensor, pad: usize,
                variant: Variant) -> ForwardArgs<'a> {
-        ForwardArgs { x, w_hat, pad, variant }
+        ForwardArgs { x, w_hat, pad, variant,
+                      choice: KernelChoice::default() }
+    }
+
+    /// Same bundle with an explicit (autotuned) [`KernelChoice`].
+    pub fn with_choice(mut self, choice: KernelChoice)
+                       -> ForwardArgs<'a> {
+        self.choice = choice;
+        self
     }
 }
 
@@ -101,8 +164,9 @@ pub trait Backend: Send {
     fn name(&self) -> String;
 
     /// Forward one layer: `x (N,C,H,W)`, Winograd-domain weights
-    /// `w_hat (O,C,4,4)`, zero padding `pad` -> `(N,O,H',W')` with
-    /// `H' = H + 2*pad - 2` (stride-2 F(2x2,3x3) tiling).
+    /// `w_hat (O,C,4,4)` (F2) or `(O,C,6,6)` (F4), zero padding `pad`
+    /// -> `(N,O,H',W')` with `H' = H + 2*pad - 2` (the output extent is
+    /// tile-size independent; only the tiling stride differs).
     fn forward(&self, x: &Tensor, w_hat: &Tensor, pad: usize,
                variant: Variant) -> Tensor;
 
@@ -287,6 +351,17 @@ mod tests {
              "--kernel", "legacy"].map(String::from));
         assert_eq!(BackendKind::from_args(&args),
                    Some((BackendKind::Scalar, 3, KernelKind::Legacy)));
+    }
+
+    #[test]
+    fn kernel_choice_default_is_the_fallback_table_entry() {
+        let d = KernelChoice::default();
+        assert_eq!(d, KernelChoice::for_tile(TileSize::F2));
+        assert_eq!(d.oc_block, simd::PM_OC_BLOCK);
+        assert_eq!(d.parts_mul, 1);
+        assert_eq!(d.summary(), "f2/oc4/x1");
+        assert_eq!(KernelChoice::for_tile(TileSize::F4).summary(),
+                   "f4/oc4/x1");
     }
 
     #[test]

@@ -3,13 +3,13 @@
 
 use std::sync::Arc;
 
-use super::pool::ThreadPool;
+use super::pool::{GridSpec, ThreadPool};
 use super::simd::PmSpan;
 use super::{kernel, simd, Backend, ForwardArgs, KernelKind, StageDims,
             Variant};
-use crate::nn::matrices;
+use crate::nn::matrices::{self, FlatS};
 use crate::nn::plan::{self, Workspace};
-use crate::nn::wino_adder;
+use crate::nn::wino_adder::{self, TileGrid};
 use crate::nn::Tensor;
 
 /// Work-stealing-free parallel f32 backend.
@@ -23,6 +23,12 @@ use crate::nn::Tensor;
 /// owns a contiguous output slice — workers return their slice over
 /// the result channel and the caller stitches, so the whole path is
 /// safe code with zero shared mutable state.
+///
+/// Both tile sizes run through the same machinery: the weight
+/// tensor's trailing dims select F(2x2,3x3) or F(4x4,3x3), and the
+/// [`super::KernelChoice`] carried by [`ForwardArgs`] tunes the
+/// register-block shape (`oc_block`) and the shard-grid oversplit
+/// (`parts_mul`) without changing results.
 pub struct ParallelBackend {
     pool: ThreadPool,
     kernel: KernelKind,
@@ -47,17 +53,17 @@ impl ParallelBackend {
         self.kernel
     }
 
-    /// The sharded **legacy** elementwise stage: `d_hat (T, C, 16)`,
-    /// `w_hat (O, C, 16)` -> `y (T, O, 4)`. Exposed so the benches can
+    /// The sharded **legacy** elementwise stage: `d_hat (T, C, P)`,
+    /// `w_hat (O, C, P)` -> `y (T, O, Q)`. Exposed so the benches can
     /// measure the hot loop without tile extraction in the timing.
     pub fn run_tiles(&self, d_hat: &Arc<[f32]>, w_hat: &Arc<[f32]>,
-                     dims: StageDims, s: [[f32; 4]; 16],
-                     y: &mut [f32]) {
+                     dims: StageDims, s: FlatS<f32>, y: &mut [f32]) {
         let d = Arc::clone(d_hat);
         let w = Arc::clone(w_hat);
         let o = dims.o;
-        self.pool.scatter_ranges(dims.t, o * 4, y, move |a, b| {
-            let mut out = vec![0f32; (b - a) * o * 4];
+        let q = s.q();
+        self.pool.scatter_ranges(dims.t, o * q, y, move |a, b| {
+            let mut out = vec![0f32; (b - a) * o * q];
             kernel::wino_adder_tiles_range(&d, &w, a, b, dims, &s,
                                            &mut out);
             out
@@ -65,25 +71,28 @@ impl ParallelBackend {
     }
 
     /// The sharded **point-major** elementwise stage:
-    /// `d_pm (16, C, T)`, `w_pm (16, O, C)` -> `y (T, O, 4)`, split
+    /// `d_pm (P, C, T)`, `w_pm (P, O, C)` -> `y (T, O, Q)`, split
     /// into `(point, tile-range)` work items. `bufs` holds the reused
     /// per-shard partial buffers (pass an empty `Vec` for one-shot
-    /// use). Exposed for the benches, like [`run_tiles`].
+    /// use). Exposed for the benches, like [`run_tiles`]; runs the
+    /// default register-block shape.
     ///
     /// [`run_tiles`]: ParallelBackend::run_tiles
     pub fn run_tiles_pm(&self, d_pm: &Arc<[f32]>, w_pm: &Arc<[f32]>,
-                        dims: StageDims, s: [[f32; 4]; 16],
+                        dims: StageDims, s: FlatS<f32>,
                         y: &mut [f32], bufs: &mut Vec<Vec<f32>>) {
         let d = Arc::clone(d_pm);
         let w = Arc::clone(w_pm);
         let o = dims.o;
+        let q = s.q();
         self.pool.scatter_grid_into(
-            16, dims.t, o * 4, y, bufs, move |p0, p1, t0, t1, buf| {
+            GridSpec::new(s.points(), dims.t, o * q), y, bufs,
+            move |p0, p1, t0, t1, buf| {
                 buf.clear();
-                buf.resize((t1 - t0) * o * 4, 0.0);
+                buf.resize((t1 - t0) * o * q, 0.0);
                 simd::sad_gemm_pm_f32(&d, &w, dims,
                                       PmSpan::new(t0, t1, p0, p1), &s,
-                                      buf);
+                                      simd::PM_OC_BLOCK, buf);
             });
     }
 }
@@ -103,18 +112,20 @@ impl Backend for ParallelBackend {
         let c = x.dims[1];
         let o = w_hat.dims[0];
         assert_eq!(w_hat.dims[1], c, "channel mismatch");
-        assert_eq!((w_hat.dims[2], w_hat.dims[3]), (4, 4),
-                   "w_hat must be Winograd-domain (O,C,4,4)");
-        let s = matrices::output_transform_flat(variant);
-        let (n, th, tw) = wino_adder::tile_geometry(x.dims, pad);
+        let tile = wino_adder::tile_size_of(w_hat);
+        let p = tile.points();
+        let q = tile.out_points();
+        let s = matrices::flat_s(variant, tile);
+        let (n, th, tw) = wino_adder::tile_geometry_for(x.dims, pad,
+                                                        tile);
         let t = n * th * tw;
         let dims = StageDims::new(t, o, c);
-        let mut y = vec![0f32; t * o * 4];
+        let mut y = vec![0f32; t * o * q];
         match self.kernel {
             KernelKind::PointMajor => {
-                let mut d_pm = vec![0f32; 16 * c * t];
-                wino_adder::input_tiles_pm_into(x, pad, variant,
-                                                &mut d_pm);
+                let mut d_pm = vec![0f32; p * c * t];
+                wino_adder::input_tiles_pm_into_for(x, pad, variant,
+                                                    tile, &mut d_pm);
                 let mut w_pm = Vec::new();
                 wino_adder::repack_weights_pm(&w_hat.data, o, c,
                                               &mut w_pm);
@@ -124,28 +135,31 @@ impl Backend for ParallelBackend {
                                   &mut Vec::new());
             }
             KernelKind::Legacy => {
-                let xp = x.pad_same(pad);
-                let (d_hat, ..) = wino_adder::input_tiles(&xp, variant);
+                let mut d_hat = vec![0f32; t * c * p];
+                wino_adder::input_tiles_into_for(x, pad, variant, tile,
+                                                 &mut d_hat);
                 let d: Arc<[f32]> = d_hat.into();
                 let w: Arc<[f32]> = w_hat.data.clone().into();
                 self.run_tiles(&d, &w, dims, s, &mut y);
             }
         }
-        wino_adder::untile(&y, n, o, th, tw)
+        wino_adder::untile(&y, TileGrid::new(n, o, th, tw, tile))
     }
 
     fn forward_into(&self, args: ForwardArgs<'_>, ws: &mut Workspace,
                     out: &mut Tensor) {
-        let ForwardArgs { x, w_hat, pad, variant } = args;
+        let ForwardArgs { x, w_hat, pad, variant, choice } = args;
         let c = x.dims[1];
         let o = w_hat.dims[0];
         assert_eq!(w_hat.dims[1], c, "channel mismatch");
-        assert_eq!((w_hat.dims[2], w_hat.dims[3]), (4, 4),
-                   "w_hat must be Winograd-domain (O,C,4,4)");
-        let (n, th, tw) = wino_adder::tile_geometry(x.dims, pad);
+        let tile = wino_adder::tile_size_of(w_hat);
+        let p = tile.points();
+        let q = tile.out_points();
+        let (n, th, tw) = wino_adder::tile_geometry_for(x.dims, pad,
+                                                        tile);
         let t = n * th * tw;
         let dims = StageDims::new(t, o, c);
-        let s = matrices::output_transform_flat(variant);
+        let s = matrices::flat_s(variant, tile);
         // shareable weights: the planned path hands us shared
         // ownership of the very tensor behind `w_hat` (zero-copy);
         // plain callers fall back to one clone per call
@@ -154,15 +168,16 @@ impl Backend for ParallelBackend {
             debug_assert!(std::ptr::eq(arc.as_ref(), w_hat),
                           "ws.w_shared must alias the w_hat argument");
         }
-        ws.y_tiles.resize(t * o * 4, 0.0);
+        ws.y_tiles.resize(t * o * q, 0.0);
         match self.kernel {
             KernelKind::PointMajor => {
                 {
                     let d = plan::arc_vec_mut(&mut ws.d_hat);
-                    d.resize(16 * c * t, 0.0);
-                    wino_adder::input_tiles_pm_into(x, pad, variant, d);
-                    // the repack is O(O*C*16) — noise next to the
-                    // kernel's O(T*O*C*16) — so the point-major path
+                    d.resize(p * c * t, 0.0);
+                    wino_adder::input_tiles_pm_into_for(x, pad, variant,
+                                                        tile, d);
+                    // the repack is O(O*C*P) — noise next to the
+                    // kernel's O(T*O*C*P) — so the point-major path
                     // repacks per call instead of consuming w_shared
                     wino_adder::repack_weights_pm(
                         &w_hat.data, o, c,
@@ -171,45 +186,51 @@ impl Backend for ParallelBackend {
                 drop(w_shared);
                 let d = Arc::clone(&ws.d_hat);
                 let w = Arc::clone(&ws.w_pm);
+                let oc_block = choice.oc_block;
+                let grid = GridSpec::new(p, t, o * q).with_parts(
+                    self.pool.size() * choice.parts_mul.max(1));
                 self.pool.scatter_grid_into(
-                    16, t, o * 4, &mut ws.y_tiles, &mut ws.shard_f32,
+                    grid, &mut ws.y_tiles, &mut ws.shard_f32,
                     move |p0, p1, t0, t1, buf| {
                         buf.clear();
-                        buf.resize((t1 - t0) * o * 4, 0.0);
+                        buf.resize((t1 - t0) * o * q, 0.0);
                         simd::sad_gemm_pm_f32(
                             &d, &w, dims, PmSpan::new(t0, t1, p0, p1),
-                            &s, buf);
+                            &s, oc_block, buf);
                     });
             }
             KernelKind::Legacy => {
                 {
                     let d = plan::arc_vec_mut(&mut ws.d_hat);
-                    d.resize(t * c * 16, 0.0);
-                    wino_adder::input_tiles_into(x, pad, variant, d);
+                    d.resize(t * c * p, 0.0);
+                    wino_adder::input_tiles_into_for(x, pad, variant,
+                                                     tile, d);
                 }
                 let w: Arc<Tensor> = w_shared
                     .unwrap_or_else(|| Arc::new(w_hat.clone()));
                 let d = Arc::clone(&ws.d_hat);
                 self.pool.scatter_ranges_into(
-                    t, o * 4, &mut ws.y_tiles, &mut ws.shard_f32,
+                    t, o * q, &mut ws.y_tiles, &mut ws.shard_f32,
                     move |a, b, buf| {
-                        buf.resize((b - a) * o * 4, 0.0);
+                        buf.resize((b - a) * o * q, 0.0);
                         kernel::wino_adder_tiles_range(&d, &w.data, a,
                                                        b, dims, &s,
                                                        buf);
                     });
             }
         }
-        out.dims = [n, o, 2 * th, 2 * tw];
-        out.data.resize(t * o * 4, 0.0);
-        wino_adder::untile_into(&ws.y_tiles, n, o, th, tw,
-                                &mut out.data);
+        let g = TileGrid::new(n, o, th, tw, tile);
+        out.dims = [n, o, g.r * th, g.r * tw];
+        out.data.resize(t * o * q, 0.0);
+        wino_adder::untile_into(&ws.y_tiles, g, &mut out.data);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::backend::KernelChoice;
+    use crate::nn::matrices::TileSize;
     use crate::nn::wino_adder::winograd_adder_conv2d;
     use crate::util::rng::Rng;
     use crate::util::testkit::all_close;
@@ -218,18 +239,23 @@ mod tests {
     fn forward_matches_naive_across_thread_counts_and_kernels() {
         let mut rng = Rng::new(21);
         let x = Tensor::randn(&mut rng, [2, 5, 8, 8]);
-        let w_hat = Tensor::randn(&mut rng, [3, 5, 4, 4]);
-        let want = winograd_adder_conv2d(&x, &w_hat, 1,
-                                         Variant::Balanced(2));
-        for kernel in KernelKind::ALL {
-            for threads in [1, 2, 5] {
-                let be = ParallelBackend::with_kernel(threads, kernel);
-                let got =
-                    be.forward(&x, &w_hat, 1, Variant::Balanced(2));
-                assert_eq!(got.dims, want.dims);
-                all_close(&got.data, &want.data, 1e-4, 1e-4)
-                    .unwrap_or_else(|e| panic!(
-                        "{} x{threads}: {e}", kernel.name()));
+        for tile in TileSize::ALL {
+            let ts = tile.tile();
+            let w_hat = Tensor::randn(&mut rng, [3, 5, ts, ts]);
+            let want = winograd_adder_conv2d(&x, &w_hat, 1,
+                                             Variant::Balanced(2));
+            for kernel in KernelKind::ALL {
+                for threads in [1, 2, 5] {
+                    let be =
+                        ParallelBackend::with_kernel(threads, kernel);
+                    let got =
+                        be.forward(&x, &w_hat, 1, Variant::Balanced(2));
+                    assert_eq!(got.dims, want.dims);
+                    all_close(&got.data, &want.data, 1e-4, 1e-4)
+                        .unwrap_or_else(|e| panic!(
+                            "{}/{} x{threads}: {e}", kernel.name(),
+                            tile.name()));
+                }
             }
         }
     }
@@ -263,26 +289,61 @@ mod tests {
     #[test]
     fn forward_into_matches_forward_across_threads_and_kernels() {
         let mut rng = Rng::new(23);
-        let x = Tensor::randn(&mut rng, [2, 4, 10, 10]);
-        let w_hat = Tensor::randn(&mut rng, [3, 4, 4, 4]);
-        for kernel in KernelKind::ALL {
-            for threads in [1usize, 2, 6] {
-                let be = ParallelBackend::with_kernel(threads, kernel);
-                let want =
-                    be.forward(&x, &w_hat, 1, Variant::Balanced(1));
+        let x = Tensor::randn(&mut rng, [2, 4, 8, 8]);
+        for tile in TileSize::ALL {
+            let ts = tile.tile();
+            let w_hat = Tensor::randn(&mut rng, [3, 4, ts, ts]);
+            for kernel in KernelKind::ALL {
+                for threads in [1usize, 2, 6] {
+                    let be =
+                        ParallelBackend::with_kernel(threads, kernel);
+                    let want =
+                        be.forward(&x, &w_hat, 1, Variant::Balanced(1));
+                    let mut ws = Workspace::new();
+                    let mut out = Tensor::zeros([1, 1, 1, 1]);
+                    // run twice through the same workspace: reuse must
+                    // not change results
+                    for _ in 0..2 {
+                        be.forward_into(
+                            ForwardArgs::new(&x, &w_hat, 1,
+                                             Variant::Balanced(1)),
+                            &mut ws, &mut out);
+                        assert_eq!(out.dims, want.dims);
+                        assert_eq!(out.data, want.data,
+                                   "{}/{} x{threads} diverged",
+                                   kernel.name(), tile.name());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_choice_knobs_do_not_change_results() {
+        // every candidate the autotuner may pick must be an
+        // implementation detail: same math, same answer
+        let mut rng = Rng::new(27);
+        let x = Tensor::randn(&mut rng, [1, 4, 8, 8]);
+        for tile in TileSize::ALL {
+            let ts = tile.tile();
+            let w_hat = Tensor::randn(&mut rng, [3, 4, ts, ts]);
+            let be = ParallelBackend::new(2);
+            let want = be.forward(&x, &w_hat, 1, Variant::Std);
+            for (oc_block, parts_mul) in
+                [(4usize, 1usize), (2, 1), (4, 2), (2, 2), (1, 4)]
+            {
+                let choice = KernelChoice { tile, oc_block, parts_mul };
                 let mut ws = Workspace::new();
                 let mut out = Tensor::zeros([1, 1, 1, 1]);
-                // run twice through the same workspace: reuse must not
-                // change results
-                for _ in 0..2 {
-                    be.forward_into(
-                        ForwardArgs::new(&x, &w_hat, 1,
-                                         Variant::Balanced(1)),
-                        &mut ws, &mut out);
-                    assert_eq!(out.dims, want.dims);
-                    assert_eq!(out.data, want.data,
-                               "{} x{threads} diverged", kernel.name());
-                }
+                be.forward_into(
+                    ForwardArgs::new(&x, &w_hat, 1, Variant::Std)
+                        .with_choice(choice),
+                    &mut ws, &mut out);
+                assert_eq!(out.dims, want.dims);
+                all_close(&out.data, &want.data, 1e-5, 1e-5)
+                    .unwrap_or_else(|e| panic!(
+                        "{} oc{oc_block} x{parts_mul}: {e}",
+                        tile.name()));
             }
         }
     }
@@ -290,16 +351,21 @@ mod tests {
     #[test]
     fn more_threads_than_tiles_is_fine() {
         let mut rng = Rng::new(22);
-        // hw=4, pad=0 -> a single tile; 8 workers exercise the
-        // point-split path of shard_grid on the pm kernel
-        let x = Tensor::randn(&mut rng, [1, 2, 4, 4]);
-        let w_hat = Tensor::randn(&mut rng, [2, 2, 4, 4]);
-        let want = winograd_adder_conv2d(&x, &w_hat, 0, Variant::Std);
-        for kernel in KernelKind::ALL {
-            let be = ParallelBackend::with_kernel(8, kernel);
-            let got = be.forward(&x, &w_hat, 0, Variant::Std);
-            all_close(&got.data, &want.data, 1e-4, 1e-4)
-                .unwrap_or_else(|e| panic!("{}: {e}", kernel.name()));
+        // hw = tile edge, pad=0 -> a single tile; 8 workers exercise
+        // the point-split path of shard_grid on the pm kernel
+        for (tile, hw) in [(TileSize::F2, 4usize), (TileSize::F4, 6)] {
+            let ts = tile.tile();
+            let x = Tensor::randn(&mut rng, [1, 2, hw, hw]);
+            let w_hat = Tensor::randn(&mut rng, [2, 2, ts, ts]);
+            let want =
+                winograd_adder_conv2d(&x, &w_hat, 0, Variant::Std);
+            for kernel in KernelKind::ALL {
+                let be = ParallelBackend::with_kernel(8, kernel);
+                let got = be.forward(&x, &w_hat, 0, Variant::Std);
+                all_close(&got.data, &want.data, 1e-4, 1e-4)
+                    .unwrap_or_else(|e| panic!(
+                        "{}/{}: {e}", kernel.name(), tile.name()));
+            }
         }
     }
 }

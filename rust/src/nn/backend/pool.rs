@@ -120,7 +120,7 @@ impl ThreadPool {
     /// Shard the `(point, tile)` grid of the point-major kernels into
     /// one work item per shard of [`shard_grid`], run
     /// `f(p0, p1, t0, t1, buf)` per item (each filling its reused
-    /// buffer with a range-local `(t1 - t0) * stride` **partial**
+    /// buffer with a range-local `(t1 - t0) * g.stride` **partial**
     /// accumulated over points `[p0, p1)`), and stitch into `y`.
     ///
     /// Tile ranges partition the output rows, so when each item covers
@@ -131,16 +131,23 @@ impl ThreadPool {
     /// is `y` zeroed and the partials **summed**, in ascending-point
     /// order per tile range — exact for integer kernels; for f32 it
     /// reassociates one addition per split (within kernel tolerance).
-    pub fn scatter_grid_into<T, F>(&self, points: usize, n: usize,
-                                   stride: usize, y: &mut [T],
+    ///
+    /// `g.parts` controls the split granularity (0 = one item per
+    /// worker); the autotuner raises it via
+    /// `KernelChoice::parts_mul` for finer work items on skewed
+    /// shapes. Results are identical for every `parts` that yields the
+    /// same point-axis split, and within kernel tolerance otherwise.
+    pub fn scatter_grid_into<T, F>(&self, g: GridSpec, y: &mut [T],
                                    bufs: &mut Vec<Vec<T>>, f: F)
     where
         T: Copy + Default + std::ops::AddAssign + Send + 'static,
         F: Fn(usize, usize, usize, usize, &mut Vec<T>)
             + Send + Clone + 'static,
     {
+        let GridSpec { points, n, stride, parts } = g;
         assert_eq!(y.len(), n * stride);
-        let items = shard_grid(points, n, self.size());
+        let parts = if parts == 0 { self.size() } else { parts };
+        let items = shard_grid(points, n, parts);
         if bufs.len() < items.len().max(1) {
             bufs.resize_with(items.len().max(1), Vec::new);
         }
@@ -239,6 +246,37 @@ impl ThreadPool {
                 .copy_from_slice(&chunk);
             bufs[i] = chunk;
         }
+    }
+}
+
+/// Shape of one [`ThreadPool::scatter_grid_into`] call: the
+/// `(points, n)` grid, the per-tile output `stride`, and the number of
+/// work items `parts` to split into (`0` = one per worker, the
+/// default). Bundled so the call signature stays within clippy's arity
+/// bound as tuning knobs accrete.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GridSpec {
+    /// transform points (16 at F2, 36 at F4)
+    pub points: usize,
+    /// tiles — the long, shardable axis
+    pub n: usize,
+    /// output items per tile (`O * Q`)
+    pub stride: usize,
+    /// work-item count; 0 means "pool size"
+    pub parts: usize,
+}
+
+impl GridSpec {
+    /// A grid split one-item-per-worker (`parts = 0`).
+    pub fn new(points: usize, n: usize, stride: usize) -> GridSpec {
+        GridSpec { points, n, stride, parts: 0 }
+    }
+
+    /// Override the work-item count (the autotuner's
+    /// `parts_mul` knob lands here).
+    pub fn with_parts(mut self, parts: usize) -> GridSpec {
+        self.parts = parts;
+        self
     }
 }
 
@@ -423,7 +461,8 @@ mod tests {
         let (points, n, stride) = (16usize, 20usize, 4usize);
         let mut y = vec![0usize; n * stride];
         let mut bufs = Vec::new();
-        pool.scatter_grid_into(points, n, stride, &mut y, &mut bufs,
+        pool.scatter_grid_into(GridSpec::new(points, n, stride), &mut y,
+                               &mut bufs,
                                move |p0, p1, t0, t1, buf| {
             buf.clear();
             buf.resize((t1 - t0) * stride, 0);
@@ -446,7 +485,8 @@ mod tests {
         let (points, n, stride) = (16usize, 2usize, 3usize);
         let mut y = vec![7usize; n * stride]; // stale values must die
         let mut bufs = Vec::new();
-        pool.scatter_grid_into(points, n, stride, &mut y, &mut bufs,
+        pool.scatter_grid_into(GridSpec::new(points, n, stride), &mut y,
+                               &mut bufs,
                                move |p0, p1, t0, t1, buf| {
             buf.clear();
             buf.resize((t1 - t0) * stride, 0);
@@ -465,13 +505,34 @@ mod tests {
         let pool = ThreadPool::new(1);
         let mut y = vec![0i32; 5 * 2];
         let mut bufs = Vec::new();
-        pool.scatter_grid_into(16, 5, 2, &mut y, &mut bufs,
+        pool.scatter_grid_into(GridSpec::new(16, 5, 2), &mut y,
+                               &mut bufs,
                                move |p0, p1, t0, t1, buf| {
             assert_eq!((p0, p1, t0, t1), (0, 16, 0, 5));
             buf.clear();
             buf.resize((t1 - t0) * 2, 9);
         });
         assert_eq!(y, vec![9i32; 10]);
+    }
+
+    #[test]
+    fn scatter_grid_into_parts_override_still_sums_to_cover() {
+        // parts = size * 4: finer split, same covered grid -> same sum
+        let pool = ThreadPool::new(2);
+        let (points, n, stride) = (36usize, 3usize, 2usize);
+        let mut y = vec![1usize; n * stride];
+        let mut bufs = Vec::new();
+        let spec =
+            GridSpec::new(points, n, stride).with_parts(pool.size() * 4);
+        pool.scatter_grid_into(spec, &mut y, &mut bufs,
+                               move |p0, p1, t0, t1, buf| {
+            buf.clear();
+            buf.resize((t1 - t0) * stride, 0);
+            for v in buf.iter_mut() {
+                *v += p1 - p0;
+            }
+        });
+        assert_eq!(y, vec![points; n * stride]);
     }
 
     #[test]

@@ -5,7 +5,7 @@ use super::{kernel, simd, Backend, ForwardArgs, KernelKind, StageDims,
             Variant};
 use crate::nn::matrices;
 use crate::nn::plan::{self, Workspace};
-use crate::nn::wino_adder;
+use crate::nn::wino_adder::{self, TileGrid};
 use crate::nn::Tensor;
 
 /// The single-threaded backend, running either kernel family
@@ -13,7 +13,8 @@ use crate::nn::Tensor;
 /// tile-major blocked kernel as the escape hatch. The reference
 /// implementation the parallel backends are benchmarked and
 /// property-tested against. `forward_into` runs the same math with
-/// workspace-owned buffers (zero allocation).
+/// workspace-owned buffers (zero allocation), for either tile size —
+/// the weight tensor's trailing dims pick F(2x2,3x3) or F(4x4,3x3).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ScalarBackend {
     pub kernel: KernelKind,
@@ -47,49 +48,55 @@ impl Backend for ScalarBackend {
 
     fn forward_into(&self, args: ForwardArgs<'_>, ws: &mut Workspace,
                     out: &mut Tensor) {
-        let ForwardArgs { x, w_hat, pad, variant } = args;
+        let ForwardArgs { x, w_hat, pad, variant, choice } = args;
         let c = x.dims[1];
         let o = w_hat.dims[0];
         assert_eq!(w_hat.dims[1], c, "channel mismatch");
-        assert_eq!((w_hat.dims[2], w_hat.dims[3]), (4, 4),
-                   "w_hat must be Winograd-domain (O,C,4,4)");
-        let (n, th, tw) = wino_adder::tile_geometry(x.dims, pad);
+        let tile = wino_adder::tile_size_of(w_hat);
+        let p = tile.points();
+        let q = tile.out_points();
+        let (n, th, tw) = wino_adder::tile_geometry_for(x.dims, pad,
+                                                        tile);
         let t = n * th * tw;
         let dims = StageDims::new(t, o, c);
-        let s = matrices::output_transform_flat(variant);
+        let s = matrices::flat_s(variant, tile);
         match self.kernel {
             KernelKind::PointMajor => {
                 let d = plan::arc_vec_mut(&mut ws.d_hat);
-                d.resize(16 * c * t, 0.0);
-                wino_adder::input_tiles_pm_into(x, pad, variant, d);
+                d.resize(p * c * t, 0.0);
+                wino_adder::input_tiles_pm_into_for(x, pad, variant,
+                                                    tile, d);
                 let wp = plan::arc_vec_mut(&mut ws.w_pm);
                 wino_adder::repack_weights_pm(&w_hat.data, o, c, wp);
                 // the point-major kernel accumulates: start from zero
                 ws.y_tiles.clear();
-                ws.y_tiles.resize(t * o * 4, 0.0);
-                simd::sad_gemm_pm_f32(d, wp, dims, PmSpan::full(t), &s,
+                ws.y_tiles.resize(t * o * q, 0.0);
+                simd::sad_gemm_pm_f32(d, wp, dims, PmSpan::full(t, p),
+                                      &s, choice.oc_block,
                                       &mut ws.y_tiles);
             }
             KernelKind::Legacy => {
                 let d = plan::arc_vec_mut(&mut ws.d_hat);
-                d.resize(t * c * 16, 0.0);
-                wino_adder::input_tiles_into(x, pad, variant, d);
-                ws.y_tiles.resize(t * o * 4, 0.0);
+                d.resize(t * c * p, 0.0);
+                wino_adder::input_tiles_into_for(x, pad, variant, tile,
+                                                 d);
+                ws.y_tiles.resize(t * o * q, 0.0);
                 kernel::wino_adder_tiles_range(d, &w_hat.data, 0, t,
                                                dims, &s,
                                                &mut ws.y_tiles);
             }
         }
-        out.dims = [n, o, 2 * th, 2 * tw];
-        out.data.resize(t * o * 4, 0.0);
-        wino_adder::untile_into(&ws.y_tiles, n, o, th, tw,
-                                &mut out.data);
+        let g = TileGrid::new(n, o, th, tw, tile);
+        out.dims = [n, o, g.r * th, g.r * tw];
+        out.data.resize(t * o * q, 0.0);
+        wino_adder::untile_into(&ws.y_tiles, g, &mut out.data);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::matrices::TileSize;
     use crate::nn::wino_adder::winograd_adder_conv2d;
     use crate::util::rng::Rng;
     use crate::util::testkit::all_close;
@@ -97,40 +104,46 @@ mod tests {
     #[test]
     fn matches_naive_oracle_both_kernels() {
         let mut rng = Rng::new(11);
-        let x = Tensor::randn(&mut rng, [1, 3, 6, 6]);
-        let w_hat = Tensor::randn(&mut rng, [2, 3, 4, 4]);
-        let want = winograd_adder_conv2d(&x, &w_hat, 1,
-                                         Variant::Balanced(0));
-        for kernel in KernelKind::ALL {
-            let got = ScalarBackend::new(kernel)
-                .forward(&x, &w_hat, 1, Variant::Balanced(0));
-            assert_eq!(got.dims, want.dims);
-            all_close(&got.data, &want.data, 1e-4, 1e-4)
-                .unwrap_or_else(|e| panic!("{}: {e}", kernel.name()));
+        let x = Tensor::randn(&mut rng, [1, 3, 8, 8]);
+        for tile in TileSize::ALL {
+            let ts = tile.tile();
+            let w_hat = Tensor::randn(&mut rng, [2, 3, ts, ts]);
+            let want = winograd_adder_conv2d(&x, &w_hat, 1,
+                                             Variant::Balanced(0));
+            for kernel in KernelKind::ALL {
+                let got = ScalarBackend::new(kernel)
+                    .forward(&x, &w_hat, 1, Variant::Balanced(0));
+                assert_eq!(got.dims, want.dims);
+                all_close(&got.data, &want.data, 1e-4, 1e-4)
+                    .unwrap_or_else(|e| panic!(
+                        "{}/{}: {e}", kernel.name(), tile.name()));
+            }
         }
     }
 
     #[test]
-    fn forward_into_matches_forward_both_kernels() {
+    fn forward_into_matches_forward_both_kernels_and_tiles() {
         let mut rng = Rng::new(12);
         let x = Tensor::randn(&mut rng, [2, 3, 8, 8]);
-        let w_hat = Tensor::randn(&mut rng, [4, 3, 4, 4]);
-        for kernel in KernelKind::ALL {
-            let be = ScalarBackend::new(kernel);
-            let want = be.forward(&x, &w_hat, 1, Variant::Std);
-            let mut ws = Workspace::new();
-            let mut out = Tensor::zeros([1, 1, 1, 1]);
-            // run twice through the same workspace: reuse must not
-            // change results (the pm path must re-zero y_tiles)
-            for _ in 0..2 {
-                be.forward_into(ForwardArgs::new(&x, &w_hat, 1,
-                                                 Variant::Std),
-                                &mut ws, &mut out);
-                assert_eq!(out.dims, want.dims);
-                all_close(&out.data, &want.data, 1e-5, 1e-5)
-                    .unwrap_or_else(|e| {
-                        panic!("{}: {e}", kernel.name())
-                    });
+        for tile in TileSize::ALL {
+            let ts = tile.tile();
+            let w_hat = Tensor::randn(&mut rng, [4, 3, ts, ts]);
+            for kernel in KernelKind::ALL {
+                let be = ScalarBackend::new(kernel);
+                let want = be.forward(&x, &w_hat, 1, Variant::Std);
+                let mut ws = Workspace::new();
+                let mut out = Tensor::zeros([1, 1, 1, 1]);
+                // run twice through the same workspace: reuse must not
+                // change results (the pm path must re-zero y_tiles)
+                for _ in 0..2 {
+                    be.forward_into(ForwardArgs::new(&x, &w_hat, 1,
+                                                     Variant::Std),
+                                    &mut ws, &mut out);
+                    assert_eq!(out.dims, want.dims);
+                    all_close(&out.data, &want.data, 1e-5, 1e-5)
+                        .unwrap_or_else(|e| panic!(
+                            "{}/{}: {e}", kernel.name(), tile.name()));
+                }
             }
         }
     }

@@ -5,28 +5,41 @@
 //!
 //! # Layout contract (point-major)
 //!
-//! * `d_pm` — input tiles as `(16, C, T)`: `d_pm[(p*C + c)*T + t]`,
-//!   written by [`crate::nn::wino_adder::input_tiles_pm_into`] /
-//!   [`crate::nn::quant::input_tiles_i16_pm_into`].
-//! * `w_pm` — weights as `(16, O, C)`: `w_pm[(p*O + o)*C + c]`, from
+//! `P` is the transform point count (16 for F(2x2,3x3), 36 for
+//! F(4x4,3x3)) and `Q` the output values per tile (4 or 16); both come
+//! from the [`FlatS`] argument.
+//!
+//! * `d_pm` — input tiles as `(P, C, T)`: `d_pm[(p*C + c)*T + t]`,
+//!   written by [`crate::nn::wino_adder::input_tiles_pm_into_for`] /
+//!   [`crate::nn::quant::input_tiles_i16_pm_into_for`].
+//! * `w_pm` — weights as `(P, O, C)`: `w_pm[(p*O + o)*C + c]`, from
 //!   [`crate::nn::wino_adder::repack_weights_pm`] /
 //!   [`crate::nn::quant::quantize_wino_weights_pm_into`].
-//! * `y` — range-local `(t1-t0, O, 4)` tile-domain output patches,
+//! * `y` — range-local `(t1-t0, O, Q)` tile-domain output patches,
 //!   **accumulated** (callers zero it first; see below).
 //!
 //! For each transform point `p` the stage is a sum-of-absolute-
 //! differences GEMM `M_p[t,o] = -sum_c |W_p[o,c] - D_p[t,c]|` whose
 //! innermost axis is the tile count `T` — the long, contiguous,
-//! shardable dimension — instead of the fixed 16-wide transform axis
-//! the legacy `(T, C, 16)` kernels vectorize over. The flat output
+//! shardable dimension — instead of the fixed P-wide transform axis
+//! the legacy `(T, C, P)` kernels vectorize over. The flat output
 //! transform `y = m @ S` is folded into the register-block epilogue:
 //! `y[t,o,q] += M_p[t,o] * S[p][q]` accumulates across points, so the
-//! `(T, O, 16)` intermediate `m` never round-trips through memory.
+//! `(T, O, P)` intermediate `m` never round-trips through memory.
 //! This is why the kernels *accumulate* into `y`: a `(p0, p1)`
 //! sub-range computes a partial sum, and summing the partials over a
-//! disjoint cover of `0..16` reproduces the full result (exactly for
+//! disjoint cover of `0..P` reproduces the full result (exactly for
 //! the integer twin; up to one extra f32 rounding reassociation per
 //! split for the float kernel).
+//!
+//! # Register-block shape
+//!
+//! The output-channel block height is a runtime parameter `oc_block`
+//! (clamped to `1..=PM_OC_BLOCK`) so the plan-time autotuner
+//! (`nn::plan`) can trade accumulator registers against weight-row
+//! reuse per layer geometry. Results are **bit-identical across
+//! `oc_block` values** — blocking only reorders which output elements
+//! are computed when, never the per-element accumulation order.
 //!
 //! # SIMD dispatch
 //!
@@ -49,15 +62,17 @@
 
 use crate::nn::backend::kernel::abs_branchless;
 use crate::nn::backend::StageDims;
+use crate::nn::matrices::FlatS;
 
-/// Output channels per register block (micro-kernel rows).
+/// Output channels per register block (micro-kernel rows; the maximum
+/// the `oc_block` tuning knob can request).
 pub const PM_OC_BLOCK: usize = 4;
 /// Tiles per register block (micro-kernel columns; 2 AVX2 f32 vectors).
 pub const PM_TILE_BLOCK: usize = 16;
 
 /// The `(tile, point)` sub-rectangle one point-major kernel call
 /// covers: tiles `[t0, t1)` of `0..dims.t`, transform points
-/// `[p0, p1)` of `0..16`. Work items from
+/// `[p0, p1)` of `0..P`. Work items from
 /// [`super::pool::shard_grid`] map 1:1 onto spans.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PmSpan {
@@ -77,9 +92,10 @@ impl PmSpan {
         PmSpan { t0, t1, p0, p1 }
     }
 
-    /// The whole problem: all `t` tiles, all 16 transform points.
-    pub fn full(t: usize) -> PmSpan {
-        PmSpan { t0: 0, t1: t, p0: 0, p1: 16 }
+    /// The whole problem: all `t` tiles, all `points` transform points
+    /// (16 at F2, 36 at F4).
+    pub fn full(t: usize, points: usize) -> PmSpan {
+        PmSpan { t0: 0, t1: t, p0: 0, p1: points }
     }
 }
 
@@ -97,13 +113,16 @@ pub fn level() -> &'static str {
 /// Point-major f32 SAD-GEMM over the `(tile, point)` span, dispatched
 /// to the best available SIMD path.
 ///
-/// `d_pm` is `(16, C, T)` with `T = dims.t`, `w_pm` is `(16, O, C)`,
-/// and `y` is the **range-local** output `(t1 - t0, O, 4)`,
+/// `d_pm` is `(P, C, T)` with `T = dims.t`, `w_pm` is `(P, O, C)`,
+/// and `y` is the **range-local** output `(t1 - t0, O, Q)`,
 /// accumulated in ascending-`p` order (zero it before the first call).
+/// `oc_block` picks the register-block height (autotuner knob;
+/// clamped to `1..=PM_OC_BLOCK`, bit-identical across values).
 pub fn sad_gemm_pm_f32(d_pm: &[f32], w_pm: &[f32], dims: StageDims,
-                       span: PmSpan, s: &[[f32; 4]; 16],
+                       span: PmSpan, s: &FlatS<f32>, oc_block: usize,
                        y: &mut [f32]) {
-    check_pm(d_pm.len(), w_pm.len(), dims, span, y.len());
+    check_pm(d_pm.len(), w_pm.len(), dims, span, (s.points(), s.q()),
+             y.len());
     #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
     {
         if std::arch::is_x86_feature_detected!("avx2") {
@@ -111,27 +130,29 @@ pub fn sad_gemm_pm_f32(d_pm: &[f32], w_pm: &[f32], dims: StageDims,
             // on the line above, satisfying the callee's
             // `#[target_feature(enable = "avx2")]` contract. Slice
             // shapes were just validated by `check_pm`:
-            // d_pm.len() == 16*C*T, w_pm.len() == 16*O*C, and
-            // y.len() == (t1-t0)*O*4 with t1 <= T, so every pointer
-            // the kernel derives from these slices stays in bounds
-            // (see the kernel's own SAFETY paragraph).
+            // d_pm.len() == P*C*T, w_pm.len() == P*O*C, and
+            // y.len() == (t1-t0)*O*Q with t1 <= T and p1 <= P, so every
+            // pointer the kernel derives from these slices stays in
+            // bounds (see the kernel's own SAFETY paragraph).
             unsafe {
-                avx2::sad_gemm_pm_f32(d_pm, w_pm, dims, span, s, y);
+                avx2::sad_gemm_pm_f32(d_pm, w_pm, dims, span, s,
+                                      oc_block, y);
             }
             return;
         }
     }
-    sad_gemm_pm_f32_portable(d_pm, w_pm, dims, span, s, y);
+    sad_gemm_pm_f32_portable(d_pm, w_pm, dims, span, s, oc_block, y);
 }
 
 /// Point-major i16 -> i32 SAD-GEMM (the int8 datapath's widened
 /// transform-domain operands), dispatched like [`sad_gemm_pm_f32`].
 /// Exact for the full i16 operand range; bit-identical across SIMD
-/// levels, thread counts, and point splits.
+/// levels, thread counts, register-block heights, and point splits.
 pub fn sad_gemm_pm_i8(d_pm: &[i16], w_pm: &[i16], dims: StageDims,
-                      span: PmSpan, s: &[[i32; 4]; 16],
+                      span: PmSpan, s: &FlatS<i32>, oc_block: usize,
                       y: &mut [i32]) {
-    check_pm(d_pm.len(), w_pm.len(), dims, span, y.len());
+    check_pm(d_pm.len(), w_pm.len(), dims, span, (s.points(), s.q()),
+             y.len());
     #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
     {
         if std::arch::is_x86_feature_detected!("avx2") {
@@ -139,29 +160,33 @@ pub fn sad_gemm_pm_i8(d_pm: &[i16], w_pm: &[i16], dims: StageDims,
             // on the line above, satisfying the callee's
             // `#[target_feature(enable = "avx2")]` contract. Slice
             // shapes were just validated by `check_pm`:
-            // d_pm.len() == 16*C*T, w_pm.len() == 16*O*C, and
-            // y.len() == (t1-t0)*O*4 with t1 <= T, so every pointer
-            // the kernel derives from these slices stays in bounds
-            // (see the kernel's own SAFETY paragraph).
+            // d_pm.len() == P*C*T, w_pm.len() == P*O*C, and
+            // y.len() == (t1-t0)*O*Q with t1 <= T and p1 <= P, so every
+            // pointer the kernel derives from these slices stays in
+            // bounds (see the kernel's own SAFETY paragraph).
             unsafe {
-                avx2::sad_gemm_pm_i8(d_pm, w_pm, dims, span, s, y);
+                avx2::sad_gemm_pm_i8(d_pm, w_pm, dims, span, s,
+                                     oc_block, y);
             }
             return;
         }
     }
-    sad_gemm_pm_i8_portable(d_pm, w_pm, dims, span, s, y);
+    sad_gemm_pm_i8_portable(d_pm, w_pm, dims, span, s, oc_block, y);
 }
 
-/// Shared bounds contract of every point-major kernel.
+/// Shared bounds contract of every point-major kernel; `pq` is the
+/// `(points, q)` pair from the flat transform.
 fn check_pm(d_len: usize, w_len: usize, dims: StageDims, span: PmSpan,
-            y_len: usize) {
+            pq: (usize, usize), y_len: usize) {
     let StageDims { t, o, c } = dims;
     let PmSpan { t0, t1, p0, p1 } = span;
+    let (points, q) = pq;
     assert!(t0 <= t1 && t1 <= t, "tile range [{t0}, {t1}) out of 0..{t}");
-    assert!(p0 <= p1 && p1 <= 16, "point range [{p0}, {p1}) out of 0..16");
-    assert_eq!(d_len, 16 * c * t, "d_pm must be (16, C, T)");
-    assert_eq!(w_len, 16 * o * c, "w_pm must be (16, O, C)");
-    assert_eq!(y_len, (t1 - t0) * o * 4, "y must be (t1-t0, O, 4)");
+    assert!(p0 <= p1 && p1 <= points,
+            "point range [{p0}, {p1}) out of 0..{points}");
+    assert_eq!(d_len, points * c * t, "d_pm must be (P, C, T)");
+    assert_eq!(w_len, points * o * c, "w_pm must be (P, O, C)");
+    assert_eq!(y_len, (t1 - t0) * o * q, "y must be (t1-t0, O, Q)");
 }
 
 /// Portable register-blocked f32 micro-kernel — the dispatch fallback
@@ -169,20 +194,24 @@ fn check_pm(d_len: usize, w_len: usize, dims: StageDims, span: PmSpan,
 /// SIMD paths can be differential-tested against it.
 pub fn sad_gemm_pm_f32_portable(d_pm: &[f32], w_pm: &[f32],
                                 dims: StageDims, span: PmSpan,
-                                s: &[[f32; 4]; 16], y: &mut [f32]) {
-    check_pm(d_pm.len(), w_pm.len(), dims, span, y.len());
+                                s: &FlatS<f32>, oc_block: usize,
+                                y: &mut [f32]) {
+    check_pm(d_pm.len(), w_pm.len(), dims, span, (s.points(), s.q()),
+             y.len());
     let StageDims { t, o, c } = dims;
     let PmSpan { t0, t1, p0, p1 } = span;
+    let q = s.q();
+    let ob_step = oc_block.clamp(1, PM_OC_BLOCK);
     for p in p0..p1 {
         let dp = &d_pm[p * c * t..(p + 1) * c * t];
         let wp = &w_pm[p * o * c..(p + 1) * o * c];
-        let sp = &s[p];
+        let sp = s.row(p);
         for tb in (t0..t1).step_by(PM_TILE_BLOCK) {
             let te = (tb + PM_TILE_BLOCK).min(t1);
             let nt = te - tb;
-            for ob in (0..o).step_by(PM_OC_BLOCK) {
-                let no = (ob + PM_OC_BLOCK).min(o) - ob;
-                // the register block: `m` for PM_OC_BLOCK output
+            for ob in (0..o).step_by(ob_step) {
+                let no = (ob + ob_step).min(o) - ob;
+                // the register block: `m` for oc_block output
                 // channels x PM_TILE_BLOCK tiles lives in registers /
                 // L1 stack only
                 let mut acc = [[0f32; PM_TILE_BLOCK]; PM_OC_BLOCK];
@@ -201,11 +230,10 @@ pub fn sad_gemm_pm_f32_portable(d_pm: &[f32], w_pm: &[f32],
                 // into the accumulation (y += m_p * S[p])
                 for (r, accr) in acc[..no].iter().enumerate() {
                     for (j, &m) in accr[..nt].iter().enumerate() {
-                        let yb = ((tb - t0 + j) * o + ob + r) * 4;
-                        y[yb] += m * sp[0];
-                        y[yb + 1] += m * sp[1];
-                        y[yb + 2] += m * sp[2];
-                        y[yb + 3] += m * sp[3];
+                        let yb = ((tb - t0 + j) * o + ob + r) * q;
+                        for (qi, &sv) in sp.iter().enumerate() {
+                            y[yb + qi] += m * sv;
+                        }
                     }
                 }
             }
@@ -217,19 +245,23 @@ pub fn sad_gemm_pm_f32_portable(d_pm: &[f32], w_pm: &[f32],
 /// sums; blocking mirrors [`sad_gemm_pm_f32_portable`]).
 pub fn sad_gemm_pm_i8_portable(d_pm: &[i16], w_pm: &[i16],
                                dims: StageDims, span: PmSpan,
-                               s: &[[i32; 4]; 16], y: &mut [i32]) {
-    check_pm(d_pm.len(), w_pm.len(), dims, span, y.len());
+                               s: &FlatS<i32>, oc_block: usize,
+                               y: &mut [i32]) {
+    check_pm(d_pm.len(), w_pm.len(), dims, span, (s.points(), s.q()),
+             y.len());
     let StageDims { t, o, c } = dims;
     let PmSpan { t0, t1, p0, p1 } = span;
+    let q = s.q();
+    let ob_step = oc_block.clamp(1, PM_OC_BLOCK);
     for p in p0..p1 {
         let dp = &d_pm[p * c * t..(p + 1) * c * t];
         let wp = &w_pm[p * o * c..(p + 1) * o * c];
-        let sp = &s[p];
+        let sp = s.row(p);
         for tb in (t0..t1).step_by(PM_TILE_BLOCK) {
             let te = (tb + PM_TILE_BLOCK).min(t1);
             let nt = te - tb;
-            for ob in (0..o).step_by(PM_OC_BLOCK) {
-                let no = (ob + PM_OC_BLOCK).min(o) - ob;
+            for ob in (0..o).step_by(ob_step) {
+                let no = (ob + ob_step).min(o) - ob;
                 let mut acc = [[0i32; PM_TILE_BLOCK]; PM_OC_BLOCK];
                 for ic in 0..c {
                     let drow = &dp[ic * t + tb..ic * t + te];
@@ -244,11 +276,10 @@ pub fn sad_gemm_pm_i8_portable(d_pm: &[i16], w_pm: &[i16],
                 }
                 for (r, accr) in acc[..no].iter().enumerate() {
                     for (j, &m) in accr[..nt].iter().enumerate() {
-                        let yb = ((tb - t0 + j) * o + ob + r) * 4;
-                        y[yb] += m * sp[0];
-                        y[yb + 1] += m * sp[1];
-                        y[yb + 2] += m * sp[2];
-                        y[yb + 3] += m * sp[3];
+                        let yb = ((tb - t0 + j) * o + ob + r) * q;
+                        for (qi, &sv) in sp.iter().enumerate() {
+                            y[yb + qi] += m * sv;
+                        }
                     }
                 }
             }
@@ -266,23 +297,24 @@ mod avx2 {
     #[cfg(target_arch = "x86_64")]
     use std::arch::x86_64::*;
 
-    use super::{PmSpan, StageDims, PM_OC_BLOCK, PM_TILE_BLOCK};
+    use super::{FlatS, PmSpan, StageDims, PM_OC_BLOCK, PM_TILE_BLOCK};
 
-    /// AVX2 f32 path: 2 x `__m256` tile vectors x [`PM_OC_BLOCK`]
-    /// broadcast weight rows; `|a - b|` via `_mm256_andnot_ps` with
-    /// the sign mask — the same sign-clear `abs_branchless` performs,
-    /// so results are bit-identical to the portable kernel.
+    /// AVX2 f32 path: 2 x `__m256` tile vectors x up to
+    /// [`PM_OC_BLOCK`] broadcast weight rows; `|a - b|` via
+    /// `_mm256_andnot_ps` with the sign mask — the same sign-clear
+    /// `abs_branchless` performs, so results are bit-identical to the
+    /// portable kernel at every `oc_block`.
     ///
     /// SAFETY: callers must have observed
     /// `is_x86_feature_detected!("avx2")` return true before the call
     /// (the `#[target_feature]` contract) and must pass slices
-    /// satisfying `check_pm`: `d_pm.len() == 16*c*t`,
-    /// `w_pm.len() == 16*o*c`, `y.len() >= (t1-t0)*o*4`, `t1 <= t`,
-    /// `p1 <= 16`. Under those invariants every raw access is in
-    /// bounds: the two `_mm256_loadu_ps` reads start at
-    /// `dp + ic*t + tb` and cover 16 lanes ending at
-    /// `ic*t + tb + 16 <= ic*t + t1 <= c*t == dp.len()` (the `while`
-    /// guard gives `tb + PM_TILE_BLOCK <= t1`);
+    /// satisfying `check_pm`: `d_pm.len() == P*c*t`,
+    /// `w_pm.len() == P*o*c`, `y.len() >= (t1-t0)*o*q`, `t1 <= t`,
+    /// `p1 <= P` with `(P, q) = (s.points(), s.q())`. Under those
+    /// invariants every raw access is in bounds: the two
+    /// `_mm256_loadu_ps` reads start at `dp + ic*t + tb` and cover 16
+    /// lanes ending at `ic*t + tb + 16 <= ic*t + t1 <= c*t == dp.len()`
+    /// (the `while` guard gives `tb + PM_TILE_BLOCK <= t1`);
     /// `wp.get_unchecked((ob+r)*c + ic)` has `ob + r < o` and
     /// `ic < c`, so the index is `< o*c == wp.len()`; the
     /// `_mm256_storeu_ps` pair targets the 16-element stack array `m`.
@@ -291,18 +323,21 @@ mod avx2 {
     #[target_feature(enable = "avx2")]
     pub unsafe fn sad_gemm_pm_f32(d_pm: &[f32], w_pm: &[f32],
                                   dims: StageDims, span: PmSpan,
-                                  s: &[[f32; 4]; 16], y: &mut [f32]) {
+                                  s: &FlatS<f32>, oc_block: usize,
+                                  y: &mut [f32]) {
         let StageDims { t, o, c } = dims;
         let PmSpan { t0, t1, p0, p1 } = span;
+        let q = s.q();
+        let ob_step = oc_block.clamp(1, PM_OC_BLOCK);
         let sign = _mm256_set1_ps(-0.0);
         for p in p0..p1 {
             let dp = &d_pm[p * c * t..(p + 1) * c * t];
             let wp = &w_pm[p * o * c..(p + 1) * o * c];
-            let sp = &s[p];
+            let sp = s.row(p);
             let mut tb = t0;
             while tb + PM_TILE_BLOCK <= t1 {
-                for ob in (0..o).step_by(PM_OC_BLOCK) {
-                    let no = (ob + PM_OC_BLOCK).min(o) - ob;
+                for ob in (0..o).step_by(ob_step) {
+                    let no = (ob + ob_step).min(o) - ob;
                     let mut acc = [_mm256_setzero_ps(); 2 * PM_OC_BLOCK];
                     for ic in 0..c {
                         let dptr = dp.as_ptr().add(ic * t + tb);
@@ -326,11 +361,10 @@ mod avx2 {
                         _mm256_storeu_ps(m.as_mut_ptr().add(8),
                                          acc[2 * r + 1]);
                         for (j, &mv) in m.iter().enumerate() {
-                            let yb = ((tb - t0 + j) * o + ob + r) * 4;
-                            y[yb] += mv * sp[0];
-                            y[yb + 1] += mv * sp[1];
-                            y[yb + 2] += mv * sp[2];
-                            y[yb + 3] += mv * sp[3];
+                            let yb = ((tb - t0 + j) * o + ob + r) * q;
+                            for (qi, &sv) in sp.iter().enumerate() {
+                                y[yb + qi] += mv * sv;
+                            }
                         }
                     }
                 }
@@ -342,21 +376,21 @@ mod avx2 {
                 // operation order, so still bit-identical)
                 super::sad_gemm_pm_f32_portable(
                     d_pm, w_pm, dims, PmSpan::new(tb, t1, p, p + 1), s,
-                    &mut y[(tb - t0) * o * 4..]);
+                    oc_block, &mut y[(tb - t0) * o * q..]);
             }
         }
     }
 
     /// AVX2 int8-datapath path: one 16-lane i16 tile load per input
     /// channel, widened once to 2 x `__m256i` i32 vectors and shared
-    /// across the [`PM_OC_BLOCK`] weight rows; subtract/abs run in
+    /// across the whole output-channel block; subtract/abs run in
     /// epi32 so no operand combination can wrap.
     ///
     /// SAFETY: same contract as [`sad_gemm_pm_f32`] — callers must
     /// have observed `is_x86_feature_detected!("avx2")` return true
     /// and must pass `check_pm`-validated slices
-    /// (`d_pm.len() == 16*c*t`, `w_pm.len() == 16*o*c`,
-    /// `y.len() >= (t1-t0)*o*4`, `t1 <= t`, `p1 <= 16`). The single
+    /// (`d_pm.len() == P*c*t`, `w_pm.len() == P*o*c`,
+    /// `y.len() >= (t1-t0)*o*q`, `t1 <= t`, `p1 <= P`). The single
     /// `_mm256_loadu_si256` reads 16 i16 lanes from `dp + ic*t + tb`,
     /// ending at `ic*t + tb + 16 <= c*t == dp.len()` by the
     /// `tb + PM_TILE_BLOCK <= t1` loop guard;
@@ -366,17 +400,20 @@ mod avx2 {
     #[target_feature(enable = "avx2")]
     pub unsafe fn sad_gemm_pm_i8(d_pm: &[i16], w_pm: &[i16],
                                  dims: StageDims, span: PmSpan,
-                                 s: &[[i32; 4]; 16], y: &mut [i32]) {
+                                 s: &FlatS<i32>, oc_block: usize,
+                                 y: &mut [i32]) {
         let StageDims { t, o, c } = dims;
         let PmSpan { t0, t1, p0, p1 } = span;
+        let q = s.q();
+        let ob_step = oc_block.clamp(1, PM_OC_BLOCK);
         for p in p0..p1 {
             let dp = &d_pm[p * c * t..(p + 1) * c * t];
             let wp = &w_pm[p * o * c..(p + 1) * o * c];
-            let sp = &s[p];
+            let sp = s.row(p);
             let mut tb = t0;
             while tb + PM_TILE_BLOCK <= t1 {
-                for ob in (0..o).step_by(PM_OC_BLOCK) {
-                    let no = (ob + PM_OC_BLOCK).min(o) - ob;
+                for ob in (0..o).step_by(ob_step) {
+                    let no = (ob + ob_step).min(o) - ob;
                     let mut acc =
                         [_mm256_setzero_si256(); 2 * PM_OC_BLOCK];
                     for ic in 0..c {
@@ -409,11 +446,10 @@ mod avx2 {
                             m.as_mut_ptr().add(8) as *mut __m256i,
                             acc[2 * r + 1]);
                         for (j, &mv) in m.iter().enumerate() {
-                            let yb = ((tb - t0 + j) * o + ob + r) * 4;
-                            y[yb] += mv * sp[0];
-                            y[yb + 1] += mv * sp[1];
-                            y[yb + 2] += mv * sp[2];
-                            y[yb + 3] += mv * sp[3];
+                            let yb = ((tb - t0 + j) * o + ob + r) * q;
+                            for (qi, &sv) in sp.iter().enumerate() {
+                                y[yb + qi] += mv * sv;
+                            }
                         }
                     }
                 }
@@ -422,7 +458,7 @@ mod avx2 {
             if tb < t1 {
                 super::sad_gemm_pm_i8_portable(
                     d_pm, w_pm, dims, PmSpan::new(tb, t1, p, p + 1), s,
-                    &mut y[(tb - t0) * o * 4..]);
+                    oc_block, &mut y[(tb - t0) * o * q..]);
             }
         }
     }
@@ -431,10 +467,10 @@ mod avx2 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::backend::kernel::{self, output_transform_flat_i32};
-    use crate::nn::matrices::{self, Variant};
+    use crate::nn::backend::kernel::{self, flat_s_i32};
+    use crate::nn::matrices::{self, TileSize, Variant};
     use crate::nn::wino_adder::{pm_repack, tiles_to_pm,
-                                wino_adder_tiles};
+                                wino_adder_tiles, wino_adder_tiles_flat};
     use crate::util::rng::Rng;
     use crate::util::testkit::{all_close, property};
 
@@ -454,17 +490,59 @@ mod tests {
             let d_hat = rng.normal_vec(t * c * 16);
             let w_hat = rng.normal_vec(o * c * 16);
             let v = *g.choose(&all_variants());
-            let s = matrices::output_transform_flat(v);
+            let sf = matrices::output_transform_flat(v);
+            let s = matrices::flat_s(v, TileSize::F2);
             let mut want = vec![0f32; t * o * 4];
-            wino_adder_tiles(&d_hat, &w_hat, t, o, c, &s, &mut want);
+            wino_adder_tiles(&d_hat, &w_hat, t, o, c, &sf, &mut want);
             let d_pm = tiles_to_pm(&d_hat, t, c);
             let mut w_pm = Vec::new();
             pm_repack(&w_hat, o, c, &mut w_pm);
             let mut got = vec![0f32; t * o * 4];
             let dims = StageDims::new(t, o, c);
-            sad_gemm_pm_f32(&d_pm, &w_pm, dims, PmSpan::full(t), &s,
-                            &mut got);
+            sad_gemm_pm_f32(&d_pm, &w_pm, dims, PmSpan::full(t, 16), &s,
+                            PM_OC_BLOCK, &mut got);
             all_close(&got, &want, 1e-4, 1e-4)
+        });
+    }
+
+    /// Both tile sizes vs the tile-size-polymorphic scalar baseline,
+    /// and bit-identical results across every register-block height.
+    #[test]
+    fn pm_matches_flat_baseline_both_tiles_property() {
+        property(25, |g| {
+            let t = g.usize_in(1, 50);
+            let o = g.usize_in(1, 10);
+            let c = g.usize_in(1, 6);
+            let tile = *g.choose(&[TileSize::F2, TileSize::F4]);
+            let (p, q) = (tile.points(), tile.out_points());
+            let seed = g.usize_in(0, 1 << 30) as u64;
+            let mut rng = Rng::new(seed);
+            let d_hat = rng.normal_vec(t * c * p);
+            let w_hat = rng.normal_vec(o * c * p);
+            let v = *g.choose(&all_variants());
+            let s = matrices::flat_s(v, tile);
+            let mut want = vec![0f32; t * o * q];
+            wino_adder_tiles_flat(&d_hat, &w_hat, t, o, c, &s,
+                                  &mut want);
+            let d_pm = tiles_to_pm(&d_hat, t, c);
+            let mut w_pm = Vec::new();
+            pm_repack(&w_hat, o, c, &mut w_pm);
+            let dims = StageDims::new(t, o, c);
+            let mut got = vec![0f32; t * o * q];
+            sad_gemm_pm_f32(&d_pm, &w_pm, dims, PmSpan::full(t, p), &s,
+                            PM_OC_BLOCK, &mut got);
+            all_close(&got, &want, 1e-4, 1e-4)?;
+            // register-block height must not change a single bit
+            for oc_block in [1usize, 2] {
+                let mut alt = vec![0f32; t * o * q];
+                sad_gemm_pm_f32(&d_pm, &w_pm, dims, PmSpan::full(t, p),
+                                &s, oc_block, &mut alt);
+                if alt != got {
+                    return Err(format!(
+                        "oc_block={oc_block} diverged bitwise"));
+                }
+            }
+            Ok(())
         });
     }
 
@@ -474,38 +552,43 @@ mod tests {
             let t = g.usize_in(2, 40);
             let o = g.usize_in(1, 8);
             let c = g.usize_in(1, 5);
+            let tile = *g.choose(&[TileSize::F2, TileSize::F4]);
+            let (p, q) = (tile.points(), tile.out_points());
             let seed = g.usize_in(0, 1 << 30) as u64;
             let mut rng = Rng::new(seed);
-            let d_hat = rng.normal_vec(t * c * 16);
-            let w_hat = rng.normal_vec(o * c * 16);
+            let d_hat = rng.normal_vec(t * c * p);
+            let w_hat = rng.normal_vec(o * c * p);
             let v = *g.choose(&all_variants());
-            let s = matrices::output_transform_flat(v);
+            let s = matrices::flat_s(v, tile);
             let d_pm = tiles_to_pm(&d_hat, t, c);
             let mut w_pm = Vec::new();
             pm_repack(&w_hat, o, c, &mut w_pm);
             let dims = StageDims::new(t, o, c);
-            let mut want = vec![0f32; t * o * 4];
-            sad_gemm_pm_f32(&d_pm, &w_pm, dims, PmSpan::full(t), &s,
-                            &mut want);
+            let mut want = vec![0f32; t * o * q];
+            sad_gemm_pm_f32(&d_pm, &w_pm, dims, PmSpan::full(t, p), &s,
+                            PM_OC_BLOCK, &mut want);
             // tile split [0, mid) + [mid, t) tiles the output rows
             let mid = g.usize_in(1, t - 1);
-            let mut lo = vec![0f32; mid * o * 4];
-            let mut hi = vec![0f32; (t - mid) * o * 4];
+            let mut lo = vec![0f32; mid * o * q];
+            let mut hi = vec![0f32; (t - mid) * o * q];
             sad_gemm_pm_f32(&d_pm, &w_pm, dims,
-                            PmSpan::new(0, mid, 0, 16), &s, &mut lo);
+                            PmSpan::new(0, mid, 0, p), &s, PM_OC_BLOCK,
+                            &mut lo);
             sad_gemm_pm_f32(&d_pm, &w_pm, dims,
-                            PmSpan::new(mid, t, 0, 16), &s, &mut hi);
+                            PmSpan::new(mid, t, 0, p), &s, PM_OC_BLOCK,
+                            &mut hi);
             let stitched: Vec<f32> = lo.into_iter().chain(hi).collect();
             all_close(&stitched, &want, 1e-5, 1e-5)?;
-            // point split: accumulating [0, pmid) then [pmid, 16) into
+            // point split: accumulating [0, pmid) then [pmid, P) into
             // the same buffer reproduces the full sum (one extra f32
             // reassociation -> tolerance, not bit-equality)
-            let pmid = g.usize_in(1, 15);
-            let mut accum = vec![0f32; t * o * 4];
+            let pmid = g.usize_in(1, p - 1);
+            let mut accum = vec![0f32; t * o * q];
             sad_gemm_pm_f32(&d_pm, &w_pm, dims,
-                            PmSpan::new(0, t, 0, pmid), &s, &mut accum);
+                            PmSpan::new(0, t, 0, pmid), &s, PM_OC_BLOCK,
+                            &mut accum);
             sad_gemm_pm_f32(&d_pm, &w_pm, dims,
-                            PmSpan::new(0, t, pmid, 16), &s,
+                            PmSpan::new(0, t, pmid, p), &s, PM_OC_BLOCK,
                             &mut accum);
             all_close(&accum, &want, 1e-4, 1e-4)
         });
@@ -517,40 +600,51 @@ mod tests {
             let t = g.usize_in(1, 50);
             let o = g.usize_in(1, 10);
             let c = g.usize_in(1, 6);
+            let tile = *g.choose(&[TileSize::F2, TileSize::F4]);
+            let (pp, qq) = (tile.points(), tile.out_points());
             let seed = g.usize_in(0, 1 << 30) as u64;
             let mut rng = Rng::new(seed);
-            let d_hat: Vec<i16> = (0..t * c * 16)
+            let d_hat: Vec<i16> = (0..t * c * pp)
                 .map(|_| (rng.below(2033) as i32 - 1016) as i16)
                 .collect();
-            let w_hat: Vec<i16> = (0..o * c * 16)
+            let w_hat: Vec<i16> = (0..o * c * pp)
                 .map(|_| (rng.below(4001) as i32 - 2000) as i16)
                 .collect();
             let v = *g.choose(&all_variants());
-            let s = output_transform_flat_i32(v);
+            let s = flat_s_i32(v, tile);
             let dims = StageDims::new(t, o, c);
-            let mut want = vec![0i32; t * o * 4];
+            let mut want = vec![0i32; t * o * qq];
             kernel::wino_adder_tiles_range_i8(&d_hat, &w_hat, 0, t,
                                               dims, &s, &mut want);
             let d_pm = tiles_to_pm(&d_hat, t, c);
             let mut w_pm = Vec::new();
             pm_repack(&w_hat, o, c, &mut w_pm);
-            let mut got = vec![0i32; t * o * 4];
-            sad_gemm_pm_i8(&d_pm, &w_pm, dims, PmSpan::full(t), &s,
-                           &mut got);
+            let mut got = vec![0i32; t * o * qq];
+            sad_gemm_pm_i8(&d_pm, &w_pm, dims, PmSpan::full(t, pp), &s,
+                           PM_OC_BLOCK, &mut got);
             if got != want {
                 let bad =
                     got.iter().zip(&want).position(|(a, b)| a != b);
                 return Err(format!("i32 mismatch at {bad:?}"));
             }
-            // split point ranges must stitch bit-exactly (integers)
-            let pmid = g.usize_in(1, 15);
-            let mut accum = vec![0i32; t * o * 4];
+            // split point ranges must stitch bit-exactly (integers),
+            // and every register-block height must agree bit-exactly
+            let pmid = g.usize_in(1, pp - 1);
+            let mut accum = vec![0i32; t * o * qq];
             sad_gemm_pm_i8(&d_pm, &w_pm, dims,
-                           PmSpan::new(0, t, 0, pmid), &s, &mut accum);
+                           PmSpan::new(0, t, 0, pmid), &s, PM_OC_BLOCK,
+                           &mut accum);
             sad_gemm_pm_i8(&d_pm, &w_pm, dims,
-                           PmSpan::new(0, t, pmid, 16), &s, &mut accum);
+                           PmSpan::new(0, t, pmid, pp), &s, PM_OC_BLOCK,
+                           &mut accum);
             if accum != want {
                 return Err("point-split stitching diverged".into());
+            }
+            let mut alt = vec![0i32; t * o * qq];
+            sad_gemm_pm_i8(&d_pm, &w_pm, dims, PmSpan::full(t, pp), &s,
+                           2, &mut alt);
+            if alt != want {
+                return Err("oc_block=2 diverged bitwise".into());
             }
             Ok(())
         });
@@ -570,7 +664,7 @@ mod tests {
         for (i, v) in w_hat.iter_mut().enumerate() {
             *v = extremes[(i + 3) % extremes.len()];
         }
-        let s = output_transform_flat_i32(Variant::Balanced(0));
+        let s = flat_s_i32(Variant::Balanced(0), TileSize::F2);
         let dims = StageDims::new(t, o, c);
         let mut want = vec![0i32; t * o * 4];
         kernel::wino_adder_tiles_range_i8(&d_hat, &w_hat, 0, t, dims,
@@ -579,32 +673,36 @@ mod tests {
         let mut w_pm = Vec::new();
         pm_repack(&w_hat, o, c, &mut w_pm);
         let mut got = vec![0i32; t * o * 4];
-        sad_gemm_pm_i8(&d_pm, &w_pm, dims, PmSpan::full(t), &s,
-                       &mut got);
+        sad_gemm_pm_i8(&d_pm, &w_pm, dims, PmSpan::full(t, 16), &s,
+                       PM_OC_BLOCK, &mut got);
         assert_eq!(got, want);
     }
 
     /// When AVX2 is available, the dispatched f32 path must be
     /// bit-identical to the portable kernel (tile lanes are
-    /// independent; no reassociation happens).
+    /// independent; no reassociation happens) — at both tile sizes.
     #[test]
     fn dispatched_f32_is_bit_identical_to_portable() {
         let mut rng = Rng::new(77);
-        // deliberately awkward extents: tile tail (37 % 16 != 0) and
-        // an output-channel tail (o % PM_OC_BLOCK != 0)
-        let (t, o, c) = (37usize, 6usize, 5usize);
-        let d_pm = rng.normal_vec(16 * c * t);
-        let w_pm = rng.normal_vec(16 * o * c);
-        let s = matrices::output_transform_flat(Variant::Balanced(2));
-        let dims = StageDims::new(t, o, c);
-        let mut a = vec![0f32; t * o * 4];
-        let mut b = vec![0f32; t * o * 4];
-        sad_gemm_pm_f32(&d_pm, &w_pm, dims, PmSpan::full(t), &s,
-                        &mut a);
-        sad_gemm_pm_f32_portable(&d_pm, &w_pm, dims, PmSpan::full(t),
-                                 &s, &mut b);
-        assert_eq!(a, b, "SIMD level {} diverged from portable",
-                   level());
+        for tile in [TileSize::F2, TileSize::F4] {
+            let (p, q) = (tile.points(), tile.out_points());
+            // deliberately awkward extents: tile tail (37 % 16 != 0)
+            // and an output-channel tail (o % PM_OC_BLOCK != 0)
+            let (t, o, c) = (37usize, 6usize, 5usize);
+            let d_pm = rng.normal_vec(p * c * t);
+            let w_pm = rng.normal_vec(p * o * c);
+            let s = matrices::flat_s(Variant::Balanced(2), tile);
+            let dims = StageDims::new(t, o, c);
+            let mut a = vec![0f32; t * o * q];
+            let mut b = vec![0f32; t * o * q];
+            sad_gemm_pm_f32(&d_pm, &w_pm, dims, PmSpan::full(t, p), &s,
+                            PM_OC_BLOCK, &mut a);
+            sad_gemm_pm_f32_portable(&d_pm, &w_pm, dims,
+                                     PmSpan::full(t, p), &s,
+                                     PM_OC_BLOCK, &mut b);
+            assert_eq!(a, b, "SIMD level {} diverged from portable",
+                       level());
+        }
     }
 
     #[test]

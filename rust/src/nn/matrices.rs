@@ -1,10 +1,32 @@
-//! Winograd F(2x2,3x3) transform matrices — rust mirror of
-//! `python/compile/transforms.py` (kept in sync by golden tests).
+//! Winograd F(2x2,3x3) and F(4x4,3x3) transform matrices — rust mirror
+//! of `python/compile/transforms.py` (kept in sync by golden tests).
 //!
-//! Conventions: `Y = A^T [(G g G^T) . (B^T d B)] A` with A 4x2, G 4x3,
-//! B 4x4. The *balanced* variants A0..A3 are the Theorem-2 matrices whose
-//! columns all contain the same number of +1/-1 entries, fixing the
-//! per-position magnitude imbalance of the accumulated `-|.|` features.
+//! Conventions: `Y = A^T [(G g G^T) . (B^T d B)] A`. For F(2x2,3x3)
+//! A is 4x2, G 4x3, B 4x4; for F(4x4,3x3) A is 6x4, G 6x3, B 6x6.
+//! Matrices are stored *untransposed* (A, not A^T), matching how the
+//! transform helpers below consume them: `input_transform*` computes
+//! `B^T d B` by indexing `b[k][i]`, `kernel_transform*` computes
+//! `G g G^T`, `output_transform*` computes `A^T m A`.
+//!
+//! # Derivation convention
+//!
+//! The F(4x4,3x3) matrices are the Lavin–Gray/Cook–Toom construction
+//! over the interpolation points `{0, 1, -1, 2, -2, inf}`; `B` is the
+//! standard integer matrix (entries in `{0, ±1, ±2, ±4, ±5}`), the
+//! fractions live in `G` only, and `A` is integral (entries up to 8).
+//! This is the same convention the F(2x2,3x3) family uses with points
+//! `{0, 1, -1, inf}`.
+//!
+//! The F(2x2) *balanced* variants A0..A3 are the Theorem-2 matrices
+//! whose columns all contain the same number of +1/-1 entries, fixing
+//! the per-position magnitude imbalance of the accumulated `-|.|`
+//! features. For F(4x4) an exactly balanced `A` does not exist (the
+//! column sums of any sign-conjugated Lavin A are at best
+//! `(±1, 0, ∓6, ±1)`); the `Balanced(i)` variants therefore apply the
+//! best-effort row-sign fixups [`S6_BAL_SIGNS`] to `A`/`G`, which
+//! minimize the column-sum imbalance while preserving the Winograd
+//! identity exactly (row signs conjugate out of `A^T m A` because
+//! `m` picks up the same signs through `G`).
 
 /// Transform family selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -29,19 +51,17 @@ impl Variant {
 
     /// CLI/serialization name; inverse of [`Variant::parse`] (used by
     /// `nn::model`'s spec files and the `--variant` flag docs).
-    /// Panics on `Balanced(n)` with `n > 3` — the same contract as
-    /// [`a`]/[`g`], which index `A_BAL`/`G_BAL_SIGNS`; use
-    /// [`Variant::is_valid`] to check first.
-    pub fn name(&self) -> &'static str {
+    /// Returns `None` for `Balanced(n)` with `n > 3` — out-of-range
+    /// variants have no name and fail [`Variant::is_valid`]; they must
+    /// be rejected before any transform matrix is requested.
+    pub fn name(&self) -> Option<&'static str> {
         match self {
-            Variant::Std => "std",
-            Variant::Balanced(0) => "A0",
-            Variant::Balanced(1) => "A1",
-            Variant::Balanced(2) => "A2",
-            Variant::Balanced(3) => "A3",
-            Variant::Balanced(i) => {
-                panic!("Balanced({i}) out of range (A0..A3)")
-            }
+            Variant::Std => Some("std"),
+            Variant::Balanced(0) => Some("A0"),
+            Variant::Balanced(1) => Some("A1"),
+            Variant::Balanced(2) => Some("A2"),
+            Variant::Balanced(3) => Some("A3"),
+            Variant::Balanced(_) => None,
         }
     }
 
@@ -49,6 +69,104 @@ impl Variant {
     /// (`Balanced` carries a public `usize`; only 0..=3 exist).
     pub fn is_valid(&self) -> bool {
         matches!(self, Variant::Std | Variant::Balanced(0..=3))
+    }
+}
+
+/// Winograd output-tile size: F(m x m, 3x3) with m in {2, 4}.
+///
+/// The tile size is a *layer* property, not a runtime knob: wino-adder
+/// weights live in the transform domain, and the F2 and F4 transform
+/// domains are not interconvertible (the adder `-|.|` accumulation has
+/// no distributive law to re-derive one from the other). Changing the
+/// tile therefore changes the parameter shape (`[O, C, 4, 4]` vs
+/// `[O, C, 6, 6]`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TileSize {
+    /// F(2x2, 3x3): 4x4 tiles, stride 2, 16 transform points.
+    #[default]
+    F2,
+    /// F(4x4, 3x3): 6x6 tiles, stride 4, 36 transform points.
+    F4,
+}
+
+impl TileSize {
+    pub const ALL: [TileSize; 2] = [TileSize::F2, TileSize::F4];
+
+    /// Transform points per tile (`tile()^2`).
+    pub fn points(self) -> usize {
+        match self {
+            TileSize::F2 => 16,
+            TileSize::F4 => 36,
+        }
+    }
+
+    /// Input tile edge (4 or 6).
+    pub fn tile(self) -> usize {
+        match self {
+            TileSize::F2 => 4,
+            TileSize::F4 => 6,
+        }
+    }
+
+    /// Output patch edge per tile (2 or 4) — also the tiling stride.
+    pub fn out(self) -> usize {
+        match self {
+            TileSize::F2 => 2,
+            TileSize::F4 => 4,
+        }
+    }
+
+    /// Output values per tile (`out()^2`).
+    pub fn out_points(self) -> usize {
+        match self {
+            TileSize::F2 => 4,
+            TileSize::F4 => 16,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TileSize> {
+        match s {
+            "f2" => Some(TileSize::F2),
+            "f4" => Some(TileSize::F4),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TileSize::F2 => "f2",
+            TileSize::F4 => "f4",
+        }
+    }
+}
+
+/// CLI-level tile selection: a fixed [`TileSize`] or per-layer `auto`
+/// (F4 wherever the padded geometry admits it, F2 elsewhere).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileChoice {
+    Auto,
+    Fixed(TileSize),
+}
+
+impl Default for TileChoice {
+    fn default() -> TileChoice {
+        TileChoice::Fixed(TileSize::F2)
+    }
+}
+
+impl TileChoice {
+    pub fn parse(s: &str) -> Option<TileChoice> {
+        match s {
+            "auto" => Some(TileChoice::Auto),
+            _ => TileSize::parse(s).map(TileChoice::Fixed),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TileChoice::Auto => "auto",
+            TileChoice::Fixed(ts) => ts.name(),
+        }
     }
 }
 
@@ -80,6 +198,56 @@ const G_BAL_SIGNS: [[f32; 4]; 4] = [
     [1., 1., -1., 1.],
 ];
 
+/// F(4x4,3x3) output transform A (6x4), Lavin–Gray points
+/// `{0, 1, -1, 2, -2, inf}`; rows are the columns of the usual A^T.
+pub const A6_STD: [[f32; 4]; 6] = [
+    [1., 0., 0., 0.],
+    [1., 1., 1., 1.],
+    [1., -1., 1., -1.],
+    [1., 2., 4., 8.],
+    [1., -2., 4., -8.],
+    [0., 0., 0., 1.],
+];
+
+/// F(4x4,3x3) kernel transform G (6x3); the only fractional matrix of
+/// the family (denominators 4, 6, 12, 24).
+pub const G6_STD: [[f32; 3]; 6] = [
+    [1.0 / 4.0, 0.0, 0.0],
+    [-1.0 / 6.0, -1.0 / 6.0, -1.0 / 6.0],
+    [-1.0 / 6.0, 1.0 / 6.0, -1.0 / 6.0],
+    [1.0 / 24.0, 1.0 / 12.0, 1.0 / 6.0],
+    [1.0 / 24.0, -1.0 / 12.0, 1.0 / 6.0],
+    [0.0, 0.0, 1.0],
+];
+
+/// F(4x4,3x3) input transform B (6x6, integer); rows are the columns
+/// of the usual B^T, so `input_transform_f4` computes `B^T d B` with
+/// the same `b[k][i]` indexing the F2 path uses.
+pub const B6_STD: [[f32; 6]; 6] = [
+    [4., 0., 0., 0., 0., 0.],
+    [0., -4., 4., -2., 2., 4.],
+    [-5., -4., -4., -1., -1., 0.],
+    [0., 1., -1., 2., -2., -5.],
+    [1., 1., 1., 1., 1., 0.],
+    [0., 0., 0., 0., 0., 1.],
+];
+
+/// Best-effort balance row-sign fixups for the F(4x4) family:
+/// `S6_BAL_SIGNS[i][r]` multiplies row r of both `A6_STD` and
+/// `G6_STD` for `Balanced(i)`. Exact column balance is unattainable
+/// at this tile size; these four sign patterns all achieve the
+/// optimal column-sum imbalance `(1, 0, 6, 1)` (vs `(5, 0, 10, 1)`
+/// for `Std`). B is held at the standard integer `B6_STD`, so the
+/// Winograd identity is preserved exactly: the product domain picks
+/// up `sign[k] * sign[l]` through G, which cancels against the same
+/// factors in `A^T . A` since `sign^2 = 1`.
+pub const S6_BAL_SIGNS: [[f32; 6]; 4] = [
+    [1., 1., 1., -1., -1., 1.],
+    [1., 1., 1., -1., -1., -1.],
+    [-1., 1., 1., -1., -1., 1.],
+    [-1., 1., 1., -1., -1., -1.],
+];
+
 pub fn a(variant: Variant) -> [[f32; 2]; 4] {
     match variant {
         Variant::Std => A_STD,
@@ -105,6 +273,43 @@ pub fn g(variant: Variant) -> [[f32; 3]; 4] {
 pub fn b(_variant: Variant) -> [[f32; 4]; 4] {
     // all balanced variants share the standard integer B by construction
     B_STD
+}
+
+/// F(4x4) output transform for `variant` (row-sign conjugated A6).
+pub fn a6(variant: Variant) -> [[f32; 4]; 6] {
+    match variant {
+        Variant::Std => A6_STD,
+        Variant::Balanced(i) => {
+            let mut out = A6_STD;
+            for r in 0..6 {
+                for c in 0..4 {
+                    out[r][c] *= S6_BAL_SIGNS[i][r];
+                }
+            }
+            out
+        }
+    }
+}
+
+/// F(4x4) kernel transform for `variant` (row-sign conjugated G6).
+pub fn g6(variant: Variant) -> [[f32; 3]; 6] {
+    match variant {
+        Variant::Std => G6_STD,
+        Variant::Balanced(i) => {
+            let mut out = G6_STD;
+            for r in 0..6 {
+                for c in 0..3 {
+                    out[r][c] *= S6_BAL_SIGNS[i][r];
+                }
+            }
+            out
+        }
+    }
+}
+
+pub fn b6(_variant: Variant) -> [[f32; 6]; 6] {
+    // all F4 variants share the standard integer B6 (signs live in A/G)
+    B6_STD
 }
 
 /// `d_hat = B^T d B` for a flat 4x4 tile.
@@ -185,6 +390,84 @@ pub fn output_transform(m: &[f32; 16], variant: Variant) -> [f32; 4] {
     out
 }
 
+/// `d_hat = B^T d B` for a flat 6x6 tile (F(4x4,3x3)).
+pub fn input_transform_f4(d: &[f32; 36], variant: Variant) -> [f32; 36] {
+    let bm = b6(variant);
+    let mut tmp = [0f32; 36]; // B^T d
+    for i in 0..6 {
+        for j in 0..6 {
+            let mut s = 0.0;
+            for k in 0..6 {
+                s += bm[k][i] * d[k * 6 + j];
+            }
+            tmp[i * 6 + j] = s;
+        }
+    }
+    let mut out = [0f32; 36]; // (B^T d) B
+    for i in 0..6 {
+        for j in 0..6 {
+            let mut s = 0.0;
+            for l in 0..6 {
+                s += tmp[i * 6 + l] * bm[l][j];
+            }
+            out[i * 6 + j] = s;
+        }
+    }
+    out
+}
+
+/// `w_hat = G g G^T` for a flat 3x3 filter -> 6x6 (F(4x4,3x3)).
+pub fn kernel_transform_f4(gf: &[f32; 9], variant: Variant) -> [f32; 36] {
+    let gm = g6(variant);
+    let mut tmp = [0f32; 18]; // G g : 6x3
+    for i in 0..6 {
+        for j in 0..3 {
+            let mut s = 0.0;
+            for k in 0..3 {
+                s += gm[i][k] * gf[k * 3 + j];
+            }
+            tmp[i * 3 + j] = s;
+        }
+    }
+    let mut out = [0f32; 36]; // (G g) G^T : 6x6
+    for i in 0..6 {
+        for j in 0..6 {
+            let mut s = 0.0;
+            for l in 0..3 {
+                s += tmp[i * 3 + l] * gm[j][l];
+            }
+            out[i * 6 + j] = s;
+        }
+    }
+    out
+}
+
+/// `y = A^T m A` for a flat 6x6 transform-domain tile -> 4x4 output.
+pub fn output_transform_f4(m: &[f32; 36], variant: Variant) -> [f32; 16] {
+    let am = a6(variant);
+    let mut tmp = [0f32; 24]; // A^T m : 4x6
+    for i in 0..4 {
+        for j in 0..6 {
+            let mut s = 0.0;
+            for k in 0..6 {
+                s += am[k][i] * m[k * 6 + j];
+            }
+            tmp[i * 6 + j] = s;
+        }
+    }
+    let mut out = [0f32; 16]; // (A^T m) A : 4x4
+    for i in 0..4 {
+        for j in 0..4 {
+            let mut s = 0.0;
+            for l in 0..6 {
+                s += tmp[i * 6 + l] * am[l][j];
+            }
+            out[i * 4 + j] = s;
+        }
+    }
+    out
+}
+
 /// Flat output-transform matrix S (16x4): `y_flat = m_flat * S`
 /// (mirrors `ref.output_transform_matrix`). Used by the vectorized
 /// wino-adder hot path so the 2x2 transform becomes one 16x4 matmul.
@@ -201,6 +484,83 @@ pub fn output_transform_flat(variant: Variant) -> [[f32; 4]; 16] {
         }
     }
     s
+}
+
+/// Capacity of [`FlatS`]: the F4 flat transform is 36x16.
+pub const FLAT_S_MAX: usize = 36 * 16;
+
+/// Tile-size-polymorphic flat output transform: a `points x q` matrix
+/// stored row-major in a fixed-capacity array so kernels can take one
+/// argument for either tile size without allocating. `points` is 16
+/// (F2) or 36 (F4); `q` is 4 or 16 output values per tile.
+#[derive(Debug, Clone, Copy)]
+pub struct FlatS<T> {
+    points: usize,
+    q: usize,
+    data: [T; FLAT_S_MAX],
+}
+
+impl<T: Copy> FlatS<T> {
+    /// Transform points per tile (rows of S).
+    pub fn points(&self) -> usize {
+        self.points
+    }
+
+    /// Output values per tile (columns of S).
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    /// Row `p` of S: the per-point contribution to all q outputs.
+    #[inline(always)]
+    pub fn row(&self, p: usize) -> &[T] {
+        &self.data[p * self.q..(p + 1) * self.q]
+    }
+}
+
+impl FlatS<f32> {
+    /// Integer copy of the flat transform. Every variant's S is
+    /// integral (A entries are integers up to 8 in magnitude, so S
+    /// entries are integers up to 64), which the int8 epilogues rely
+    /// on for bit-exactness.
+    pub fn to_i32(&self) -> FlatS<i32> {
+        let mut data = [0i32; FLAT_S_MAX];
+        for (dst, &v) in data.iter_mut().zip(self.data.iter()) {
+            debug_assert_eq!(v, v as i32 as f32, "flat S entry not integral");
+            *dst = v as i32;
+        }
+        FlatS { points: self.points, q: self.q, data }
+    }
+}
+
+/// Flat output transform for (`variant`, `tile`): `y_flat[q] =
+/// sum_p m_flat[p] * s.row(p)[q]`, generalizing
+/// [`output_transform_flat`] to both tile sizes.
+pub fn flat_s(variant: Variant, tile: TileSize) -> FlatS<f32> {
+    let mut data = [0f32; FLAT_S_MAX];
+    match tile {
+        TileSize::F2 => {
+            let s = output_transform_flat(variant);
+            for p in 0..16 {
+                data[p * 4..p * 4 + 4].copy_from_slice(&s[p]);
+            }
+            FlatS { points: 16, q: 4, data }
+        }
+        TileSize::F4 => {
+            let am = a6(variant);
+            for k in 0..6 {
+                for l in 0..6 {
+                    for i in 0..4 {
+                        for j in 0..4 {
+                            data[(k * 6 + l) * 16 + i * 4 + j] =
+                                am[k][i] * am[l][j];
+                        }
+                    }
+                }
+            }
+            FlatS { points: 36, q: 16, data }
+        }
+    }
 }
 
 /// Theorem-2 balance predicate on a 4x2 output transform.
@@ -230,6 +590,22 @@ mod tests {
                     }
                 }
                 out[i * 2 + j] = s;
+            }
+        }
+        out
+    }
+
+    fn conv2d_f45(d: &[f32; 36], gf: &[f32; 9]) -> [f32; 16] {
+        let mut out = [0f32; 16];
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut s = 0.0;
+                for ki in 0..3 {
+                    for kj in 0..3 {
+                        s += d[(i + ki) * 6 + j + kj] * gf[ki * 3 + kj];
+                    }
+                }
+                out[i * 4 + j] = s;
             }
         }
         out
@@ -266,10 +642,56 @@ mod tests {
     }
 
     #[test]
+    fn winograd_identity_f4_all_variants() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        for v in variants() {
+            for _ in 0..20 {
+                let mut d = [0f32; 36];
+                let mut gf = [0f32; 9];
+                d.iter_mut().for_each(|x| *x = rng.normal());
+                gf.iter_mut().for_each(|x| *x = rng.normal());
+                let w_hat = kernel_transform_f4(&gf, v);
+                let d_hat = input_transform_f4(&d, v);
+                let mut m = [0f32; 36];
+                for i in 0..36 {
+                    m[i] = w_hat[i] * d_hat[i];
+                }
+                let y = output_transform_f4(&m, v);
+                let want = conv2d_f45(&d, &gf);
+                for i in 0..16 {
+                    // wider dynamic range than F2 (A entries up to 8,
+                    // B up to 5) -> looser float tolerance
+                    assert!((y[i] - want[i]).abs() < 1e-3,
+                            "{v:?} pos {i}: {} vs {}", y[i], want[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn balanced_predicate() {
         assert!(!is_balanced(&A_STD));
         for i in 0..4 {
             assert!(is_balanced(&A_BAL[i]), "A{i}");
+        }
+    }
+
+    #[test]
+    fn f4_sign_fixups_minimize_imbalance() {
+        // exact balance is unattainable at F4; the sign fixups must
+        // still strictly reduce the column-sum imbalance vs Std
+        let imbalance = |a: &[[f32; 4]; 6]| -> f32 {
+            (0..4)
+                .map(|c| (0..6).map(|r| a[r][c]).sum::<f32>().abs())
+                .sum()
+        };
+        let std_imb = imbalance(&A6_STD);
+        for i in 0..4 {
+            let bal = a6(Variant::Balanced(i));
+            let imb = imbalance(&bal);
+            assert!(imb < std_imb, "A6 variant {i}: {imb} !< {std_imb}");
+            // the known optimum: |column sums| = (1, 0, 6, 1)
+            assert_eq!(imb, 8.0, "A6 variant {i}");
         }
     }
 
@@ -294,10 +716,71 @@ mod tests {
     }
 
     #[test]
+    fn flat_s_matches_direct_both_tiles() {
+        let mut rng = crate::util::rng::Rng::new(12);
+        for v in variants() {
+            // F2
+            let s2 = flat_s(v, TileSize::F2);
+            assert_eq!((s2.points(), s2.q()), (16, 4));
+            let mut m2 = [0f32; 16];
+            m2.iter_mut().for_each(|x| *x = rng.normal());
+            let direct2 = output_transform(&m2, v);
+            for q in 0..4 {
+                let flat: f32 =
+                    (0..16).map(|p| m2[p] * s2.row(p)[q]).sum();
+                assert!((direct2[q] - flat).abs() < 1e-5);
+            }
+            // F4
+            let s4 = flat_s(v, TileSize::F4);
+            assert_eq!((s4.points(), s4.q()), (36, 16));
+            let mut m4 = [0f32; 36];
+            m4.iter_mut().for_each(|x| *x = rng.normal());
+            let direct4 = output_transform_f4(&m4, v);
+            for q in 0..16 {
+                let flat: f32 =
+                    (0..36).map(|p| m4[p] * s4.row(p)[q]).sum();
+                assert!((direct4[q] - flat).abs() < 1e-4);
+            }
+            // integer copy is lossless for both tiles
+            let i2 = s2.to_i32();
+            let i4 = s4.to_i32();
+            for p in 0..16 {
+                for q in 0..4 {
+                    assert_eq!(i2.row(p)[q] as f32, s2.row(p)[q]);
+                }
+            }
+            for p in 0..36 {
+                for q in 0..16 {
+                    assert_eq!(i4.row(p)[q] as f32, s4.row(p)[q]);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn parse_variants() {
         assert_eq!(Variant::parse("std"), Some(Variant::Std));
         assert_eq!(Variant::parse("A2"), Some(Variant::Balanced(2)));
         assert_eq!(Variant::parse("A7"), None);
+        // name() is the non-panicking inverse
+        assert_eq!(Variant::Balanced(2).name(), Some("A2"));
+        assert_eq!(Variant::Std.name(), Some("std"));
+        assert_eq!(Variant::Balanced(9).name(), None);
+    }
+
+    #[test]
+    fn parse_tiles() {
+        assert_eq!(TileSize::parse("f2"), Some(TileSize::F2));
+        assert_eq!(TileSize::parse("f4"), Some(TileSize::F4));
+        assert_eq!(TileSize::parse("f8"), None);
+        assert_eq!(TileSize::F4.name(), "f4");
+        assert_eq!(TileChoice::parse("auto"), Some(TileChoice::Auto));
+        assert_eq!(TileChoice::parse("f4"),
+                   Some(TileChoice::Fixed(TileSize::F4)));
+        assert_eq!(TileChoice::parse("nope"), None);
+        assert_eq!(TileSize::F2.points(), 16);
+        assert_eq!(TileSize::F4.points(), 36);
+        assert_eq!(TileSize::F4.out_points(), 16);
     }
 
     #[test]
@@ -307,6 +790,30 @@ mod tests {
         for (r, row) in a0t.iter().enumerate() {
             for c in 0..4 {
                 assert_eq!(A_BAL[0][c][r], row[c]);
+            }
+        }
+    }
+
+    #[test]
+    fn f4_matrices_match_lavin_gray() {
+        // spot-check the 1-D identity y = A^T ((G g) . (B^T d)) on
+        // impulses, which pins the interpolation points {0,±1,±2,inf}
+        for (gi, di, want) in [(0usize, 0usize, [1., 0., 0., 0.]),
+                               (2, 2, [1., 0., 0., 0.]),
+                               (0, 1, [0., 1., 0., 0.])] {
+            let gg: [f32; 6] = std::array::from_fn(|r| G6_STD[r][gi]);
+            // B^T column di == row di of the stored (transposed) B6
+            let bd: [f32; 6] = std::array::from_fn(|r| B6_STD[di][r]);
+            let mut y = [0f32; 4];
+            for (r, (&gv, &bv)) in gg.iter().zip(bd.iter()).enumerate() {
+                let m = gv * bv;
+                for (c, yv) in y.iter_mut().enumerate() {
+                    *yv += A6_STD[r][c] * m;
+                }
+            }
+            for c in 0..4 {
+                assert!((y[c] - want[c]).abs() < 1e-5,
+                        "g=e{gi}, d=e{di}, y[{c}] = {}", y[c]);
             }
         }
     }

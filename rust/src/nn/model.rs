@@ -28,7 +28,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use super::matrices::Variant;
+use super::matrices::{TileChoice, TileSize, Variant};
 use crate::opcount::LayerSpec;
 use crate::util::error::{anyhow, bail, ensure, Context, Result};
 use crate::util::io;
@@ -38,13 +38,18 @@ use crate::util::rng::Rng;
 /// One layer of a [`ModelSpec`].
 #[derive(Debug, Clone, PartialEq)]
 pub enum LayerKind {
-    /// Winograd-adder 3x3 (paper Eq. 9), stride-2 F(2x2,3x3) tiling;
-    /// weights live in the Winograd domain as `(cout, cin, 4, 4)`.
+    /// Winograd-adder 3x3 (paper Eq. 9) under `tile`'s output tiling
+    /// — F(2x2,3x3) or F(4x4,3x3); weights live in the Winograd
+    /// domain as `(cout, cin, 4, 4)` or `(cout, cin, 6, 6)`
+    /// accordingly. The tile size is a *layer* property: L1 has no
+    /// distributive law, so transform-domain weights for one tile
+    /// size cannot be re-tiled at run time.
     WinoAdder3x3 {
         cin: usize,
         cout: usize,
         pad: usize,
         variant: Variant,
+        tile: TileSize,
     },
     /// Direct-adder 1x1 projection shortcut (Eq. 1, k=1): weights
     /// `(cout, cin)`, spatial extent preserved.
@@ -70,8 +75,9 @@ impl LayerKind {
     /// Parameter tensor shape ([] for parameterless layers).
     pub fn param_shape(&self) -> Vec<usize> {
         match *self {
-            LayerKind::WinoAdder3x3 { cin, cout, .. } => {
-                vec![cout, cin, 4, 4]
+            LayerKind::WinoAdder3x3 { cin, cout, tile, .. } => {
+                let ts = tile.tile();
+                vec![cout, cin, ts, ts]
             }
             LayerKind::DirectAdder1x1 { cin, cout } => vec![cout, cin],
             LayerKind::ScaleShift { channels } => vec![2, channels],
@@ -84,7 +90,8 @@ impl LayerKind {
     pub fn apply_geom(&self, c: usize, hw: usize)
                       -> Result<(usize, usize)> {
         match *self {
-            LayerKind::WinoAdder3x3 { cin, cout, pad, variant } => {
+            LayerKind::WinoAdder3x3 { cin, cout, pad, variant,
+                                      tile } => {
                 ensure!(cin == c, "wino_adder_3x3 expects {cin} input \
                                    channels, stack carries {c}");
                 ensure!(cout >= 1, "wino_adder_3x3 cout must be >= 1");
@@ -93,9 +100,17 @@ impl LayerKind {
                         "unknown transform variant {variant:?} \
                          (std or A0..A3)");
                 let hp = hw + 2 * pad;
-                ensure!(hp >= 4 && (hp - 2) % 2 == 0,
-                        "wino_adder_3x3 needs even padded hw >= 4 \
-                         (hw {hw}, pad {pad})");
+                match tile {
+                    TileSize::F2 => ensure!(
+                        hp >= 4 && (hp - 2) % 2 == 0,
+                        "wino_adder_3x3 (f2) needs even padded hw >= 4 \
+                         (hw {hw}, pad {pad})"),
+                    TileSize::F4 => ensure!(
+                        hp >= 6 && (hp - 2) % 4 == 0,
+                        "wino_adder_3x3 (f4) needs padded hw >= 6 with \
+                         hw + 2*pad - 2 divisible by 4 \
+                         (hw {hw}, pad {pad})"),
+                }
                 Ok((cout, hp - 2))
             }
             LayerKind::DirectAdder1x1 { cin, cout } => {
@@ -170,9 +185,37 @@ impl ModelSpec {
             in_channels: cin,
             hw,
             layers: vec![LayerKind::WinoAdder3x3 {
-                cin, cout, pad: 1, variant,
+                cin, cout, pad: 1, variant, tile: TileSize::F2,
             }],
         }
+    }
+
+    /// Re-target every Winograd layer's tile size.
+    /// [`TileChoice::Fixed`] forces one size everywhere (`validate`
+    /// rejects geometry that cannot carry it);
+    /// [`TileChoice::Auto`] walks the stack and picks F(4x4,3x3)
+    /// wherever the padded extent admits it, falling back to
+    /// F(2x2,3x3). Must run **before** weights are initialized or
+    /// loaded — it changes the Winograd-domain parameter shapes.
+    pub fn with_tile(mut self, choice: TileChoice) -> ModelSpec {
+        let mut hw = self.hw;
+        for l in &mut self.layers {
+            if let LayerKind::WinoAdder3x3 { pad, tile, .. } = l {
+                let hp = hw + 2 * *pad;
+                *tile = match choice {
+                    TileChoice::Fixed(t) => t,
+                    TileChoice::Auto => {
+                        if hp >= 6 && (hp - 2) % 4 == 0 {
+                            TileSize::F4
+                        } else {
+                            TileSize::F2
+                        }
+                    }
+                };
+                hw = hp.saturating_sub(2);
+            }
+        }
+        self
     }
 
     /// A uniform depth-N body: `depth` x [wino 3x3, scale/shift, relu]
@@ -184,7 +227,7 @@ impl ModelSpec {
         let mut c = cin;
         for i in 0..depth.max(1) {
             layers.push(LayerKind::WinoAdder3x3 {
-                cin: c, cout, pad: 1, variant,
+                cin: c, cout, pad: 1, variant, tile: TileSize::F2,
             });
             layers.push(LayerKind::ScaleShift { channels: cout });
             if i + 1 < depth.max(1) {
@@ -209,7 +252,7 @@ impl ModelSpec {
         let mut c = in_channels;
         for (i, &cout) in [8usize, 16, 16].iter().enumerate() {
             layers.push(LayerKind::WinoAdder3x3 {
-                cin: c, cout, pad: 1, variant,
+                cin: c, cout, pad: 1, variant, tile: TileSize::F2,
             });
             layers.push(LayerKind::ScaleShift { channels: cout });
             if i < 2 {
@@ -246,6 +289,7 @@ impl ModelSpec {
                 for _conv in 0..2 {
                     layers.push(LayerKind::WinoAdder3x3 {
                         cin: c, cout: c, pad: 1, variant,
+                        tile: TileSize::F2,
                     });
                     layers.push(LayerKind::ScaleShift { channels: c });
                     layers.push(LayerKind::Relu);
@@ -271,11 +315,12 @@ impl ModelSpec {
         let mut hw = self.hw;
         for (i, l) in self.layers.iter().enumerate() {
             match *l {
-                LayerKind::WinoAdder3x3 { cin, cout, pad, .. } => {
+                LayerKind::WinoAdder3x3 { cin, cout, pad, tile,
+                                          .. } => {
                     let out_hw = hw + 2 * pad - 2;
                     out.push(LayerSpec {
                         name: format!("layer{i}"),
-                        cin, cout, out_hw, k: 3, stride: 1,
+                        cin, cout, out_hw, k: 3, stride: 1, tile,
                     });
                     hw = out_hw;
                 }
@@ -283,6 +328,7 @@ impl ModelSpec {
                     out.push(LayerSpec {
                         name: format!("layer{i}"),
                         cin, cout, out_hw: hw, k: 1, stride: 1,
+                        tile: TileSize::F2,
                     });
                 }
                 LayerKind::ScaleShift { .. } | LayerKind::Relu => {}
@@ -391,12 +437,16 @@ pub fn save(dir: &Path, spec: &ModelSpec, weights: &ModelWeights)
         let mut m = BTreeMap::new();
         m.insert("kind".into(), Json::Str(l.tag().into()));
         match *l {
-            LayerKind::WinoAdder3x3 { cin, cout, pad, variant } => {
+            LayerKind::WinoAdder3x3 { cin, cout, pad, variant,
+                                      tile } => {
                 m.insert("cin".into(), Json::Num(cin as f64));
                 m.insert("cout".into(), Json::Num(cout as f64));
                 m.insert("pad".into(), Json::Num(pad as f64));
-                m.insert("variant".into(),
-                         Json::Str(variant.name().into()));
+                m.insert("variant".into(), Json::Str(
+                    // validate() above already rejected invalid
+                    // variants, so the fallback never serializes
+                    variant.name().unwrap_or("invalid").into()));
+                m.insert("tile".into(), Json::Str(tile.name().into()));
             }
             LayerKind::DirectAdder1x1 { cin, cout } => {
                 m.insert("cin".into(), Json::Num(cin as f64));
@@ -466,11 +516,18 @@ pub fn load(dir: &Path) -> Result<(ModelSpec, ModelWeights)> {
                 let variant = l.get("variant").and_then(Json::as_str)
                     .and_then(Variant::parse)
                     .ok_or_else(|| anyhow!("layer {i}: bad variant"))?;
+                // optional for compatibility with pre-F4 model.json
+                let tile = match l.get("tile").and_then(Json::as_str) {
+                    Some(s) => TileSize::parse(s).ok_or_else(
+                        || anyhow!("layer {i}: bad tile {s:?}"))?,
+                    None => TileSize::F2,
+                };
                 LayerKind::WinoAdder3x3 {
                     cin: field_usize(l, "cin")?,
                     cout: field_usize(l, "cout")?,
                     pad: field_usize(l, "pad")?,
                     variant,
+                    tile,
                 }
             }
             "direct_adder_1x1" => LayerKind::DirectAdder1x1 {
@@ -569,6 +626,7 @@ mod tests {
                 LayerKind::WinoAdder3x3 {
                     cin: 3, cout: 4, pad: 1,
                     variant: Variant::Balanced(0),
+                    tile: TileSize::F2,
                 },
                 LayerKind::ScaleShift { channels: 5 }, // wrong
             ],
@@ -655,6 +713,7 @@ mod tests {
                 LayerKind::WinoAdder3x3 {
                     cin: 2, cout: 4, pad: 1,
                     variant: Variant::Balanced(2),
+                    tile: TileSize::F2,
                 },
                 LayerKind::ScaleShift { channels: 4 },
                 LayerKind::Relu,
@@ -666,6 +725,56 @@ mod tests {
         let (spec2, weights2) = load(&dir).unwrap();
         assert_eq!(spec, spec2);
         assert_eq!(weights, weights2);
+    }
+
+    #[test]
+    fn with_tile_auto_picks_f4_where_admissible() {
+        // hw=8, pad=1: hp=10, (10-2)%4==0 -> F4 everywhere
+        let spec = ModelSpec::stack(2, 2, 3, 8, Variant::Std)
+            .with_tile(TileChoice::Auto);
+        for l in &spec.layers {
+            if let LayerKind::WinoAdder3x3 { tile, .. } = l {
+                assert_eq!(*tile, TileSize::F4);
+            }
+        }
+        spec.validate().unwrap();
+        // param shapes follow the tile
+        let w = ModelWeights::init(&spec, 3);
+        assert_eq!(w.params[0].shape, vec![3, 2, 6, 6]);
+        // hw=10, pad=1: hp=12, (12-2)%4 != 0 -> falls back to F2
+        let spec = ModelSpec::stack(2, 2, 3, 10, Variant::Std)
+            .with_tile(TileChoice::Auto);
+        for l in &spec.layers {
+            if let LayerKind::WinoAdder3x3 { tile, .. } = l {
+                assert_eq!(*tile, TileSize::F2);
+            }
+        }
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn with_tile_fixed_f4_on_bad_geometry_is_rejected() {
+        let spec = ModelSpec::stack(1, 2, 3, 10, Variant::Std)
+            .with_tile(TileChoice::Fixed(TileSize::F4));
+        let err = spec.validate().unwrap_err();
+        assert!(format!("{err}").contains("f4"), "{err}");
+    }
+
+    #[test]
+    fn f4_save_load_roundtrip_keeps_the_tile() {
+        let dir = std::env::temp_dir().join("wino_adder_model_f4");
+        let spec = ModelSpec::stack(2, 2, 4, 8, Variant::Balanced(1))
+            .with_tile(TileChoice::Fixed(TileSize::F4));
+        let weights = ModelWeights::init(&spec, 13);
+        save(&dir, &spec, &weights).unwrap();
+        let (spec2, weights2) = load(&dir).unwrap();
+        assert_eq!(spec, spec2);
+        assert_eq!(weights, weights2);
+        assert_eq!(weights2.params[0].shape, vec![4, 2, 6, 6]);
+        // the manifest records the tile explicitly
+        let text = std::fs::read_to_string(
+            dir.join("model.json")).unwrap();
+        assert!(text.contains("\"tile\""), "{text}");
     }
 
     #[test]

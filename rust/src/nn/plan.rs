@@ -4,7 +4,9 @@
 //! [`ModelWeights`](super::model::ModelWeights) compiled for one fixed
 //! batch size (the serving engine keeps one plan per batcher bucket).
 //! Compilation precomputes the tile geometry `(t, th, tw)` of every
-//! Winograd layer, materializes per-layer weights, and pre-sizes:
+//! Winograd layer — for whichever tile size, F(2x2,3x3) or
+//! F(4x4,3x3), the layer's weights were transformed with —
+//! materializes per-layer weights, and pre-sizes:
 //!
 //! * a [`Workspace`] — input-tile, weight, and tile-domain-output
 //!   buffers (f32 **and** the int8 datapath's i16/i32 twins) plus the
@@ -18,6 +20,22 @@
 //! requests (`Vec::resize`/`clear` within reserved capacity), verified
 //! by [`ModelPlan::workspace_footprint`] staying constant across runs.
 //!
+//! # Plan-time autotuning
+//!
+//! Each compiled step carries a
+//! [`KernelChoice`](super::backend::KernelChoice) — register-block
+//! shape (`oc_block`) and shard-grid oversplit (`parts_mul`) — that
+//! the backends treat as an implementation hint: every candidate
+//! computes the same answer (bit-exact on the integer path). Under
+//! [`TuneMode::Off`] the choice comes from a deterministic fallback
+//! table; [`ModelPlan::compile_buckets_tuned`] with [`TuneMode::On`]
+//! micro-benchmarks the candidate grid per (layer geometry, batch,
+//! backend) on the plan's own preallocated buffers and caches the
+//! winner. The tile size itself is **not** part of the per-plan grid:
+//! weights are transform-domain-native, so F2 vs F4 is decided when
+//! the spec is built (`ModelSpec::with_tile`, the engine's `--tile`
+//! flag) and read back off each layer's weight shape here.
+//!
 //! Shared read-only buffers live behind `Arc` so the thread-pool
 //! backends can hand clones to workers: input tiles in the
 //! workspace's `Arc<Vec<_>>` (between requests the engine thread is
@@ -28,15 +46,16 @@
 //! serve it (the plan passes the backend shared ownership via
 //! [`Workspace::w_shared`]; the legacy parallel f32 path ships it to
 //! workers copy-free, while the default point-major path repacks into
-//! the reused [`Workspace::w_pm`] buffer — an `O(O*C*16)` transpose,
-//! noise next to the `O(T*O*C*16)` kernel).
+//! the reused [`Workspace::w_pm`] buffer — an `O(O*C*P)` transpose,
+//! noise next to the `O(T*O*C*P)` kernel).
 
 use std::sync::Arc;
+use std::time::Instant;
 
-use super::backend::{Backend, ForwardArgs};
+use super::backend::{Backend, ForwardArgs, KernelChoice};
 use super::matrices::Variant;
 use super::model::{LayerKind, ModelSpec, ModelWeights};
-use super::wino_adder;
+use super::wino_adder::{self, TileGrid};
 use super::Tensor;
 use crate::util::error::{Context, Result};
 
@@ -44,44 +63,46 @@ use crate::util::error::{Context, Result};
 ///
 /// All fields are plain buffers the backends resize within capacity;
 /// `Arc`-wrapped ones are shared read-only with pool workers during a
-/// call and recovered via [`arc_vec_mut`] afterwards.
+/// call and recovered via [`arc_vec_mut`] afterwards. `P` below is the
+/// layer's transform-point count (16 for F(2x2,3x3), 36 for
+/// F(4x4,3x3)) and `Q` its per-tile output count (4 or 16).
 #[derive(Debug, Default)]
 pub struct Workspace {
-    /// f32 input tiles: `(16, C, T)` point-major under the default
-    /// kernels, `(T, C, 16)` tile-major under
+    /// f32 input tiles: `(P, C, T)` point-major under the default
+    /// kernels, `(T, C, P)` tile-major under
     /// [`KernelKind::Legacy`](super::backend::KernelKind) — same
     /// length either way; the owning backend call defines the layout.
     pub d_hat: Arc<Vec<f32>>,
-    /// f32 weights repacked point-major `(16, O, C)` (rebuilt per
+    /// f32 weights repacked point-major `(P, O, C)` (rebuilt per
     /// Winograd step by the point-major f32 backends; unused by the
-    /// legacy kernels, which read the plan's `(O, C, 16)` tensors
+    /// legacy kernels, which read the plan's `(O, C, P)` tensors
     /// directly via [`Workspace::w_shared`]).
     pub w_pm: Arc<Vec<f32>>,
     /// Shared-ownership handle for the **same** tensor passed as
     /// `w_hat`, set by the planned executor before each Winograd step
     /// (the plan owns its weights in `Arc`s, so handing one over is
     /// free). The **legacy** parallel f32 path `take()`s it to ship
-    /// `(O, C, 16)` weights to workers with zero copying (falling
+    /// `(O, C, P)` weights to workers with zero copying (falling
     /// back to one `w_hat` clone per call when `None`). The
     /// point-major f32 path consumes-and-drops it — it repacks into
     /// [`Workspace::w_pm`] instead — and the int8 path ignores it:
     /// its quantized weights depend on each request's activation
     /// scale and are rebuilt into `w_i16` every call.
     pub w_shared: Option<Arc<Tensor>>,
-    /// f32 tile-domain output `(T, O, 4)`.
+    /// f32 tile-domain output `(T, O, Q)`.
     pub y_tiles: Vec<f32>,
     /// per-shard stitch buffers (parallel f32 backend).
     pub shard_f32: Vec<Vec<f32>>,
     /// quantized input activations (int8 backend).
     pub qx: Vec<i8>,
-    /// i16 input tiles (int8 datapath; point-major `(16, C, T)` or
-    /// legacy `(T, C, 16)`, like [`Workspace::d_hat`]).
+    /// i16 input tiles (int8 datapath; point-major `(P, C, T)` or
+    /// legacy `(T, C, P)`, like [`Workspace::d_hat`]).
     pub d_hat_i16: Arc<Vec<i16>>,
-    /// i16 quantized weights (`(16, O, C)` point-major or `(O, C, 16)`
+    /// i16 quantized weights (`(P, O, C)` point-major or `(O, C, P)`
     /// legacy; rebuilt every call either way — they depend on each
     /// request's activation scale).
     pub w_i16: Arc<Vec<i16>>,
-    /// i32 tile-domain accumulators `(T, O, 4)`.
+    /// i32 tile-domain accumulators `(T, O, Q)`.
     pub y_tiles_i32: Vec<i32>,
     /// per-shard stitch buffers (int8 backend).
     pub shard_i32: Vec<Vec<i32>>,
@@ -131,6 +152,58 @@ pub fn arc_vec_mut<T>(arc: &mut Arc<Vec<T>>) -> &mut Vec<T> {
 
 // lint:hot-path(end)
 
+/// Whether plan compilation micro-benchmarks kernel candidates
+/// ([`ModelPlan::compile_buckets_tuned`]) or takes the deterministic
+/// fallback table.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum TuneMode {
+    /// Deterministic fallback [`KernelChoice`] per step; no timing.
+    #[default]
+    Off,
+    /// Time the candidate grid per Winograd step at compile time and
+    /// cache the winner in the plan.
+    On,
+}
+
+impl TuneMode {
+    pub fn parse(s: &str) -> Option<TuneMode> {
+        match s {
+            "off" => Some(TuneMode::Off),
+            "on" => Some(TuneMode::On),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TuneMode::Off => "off",
+            TuneMode::On => "on",
+        }
+    }
+}
+
+/// One autotuned step's record: what won and what every candidate
+/// measured, kept on the plan for serve logs and the bench JSON.
+#[derive(Debug, Clone)]
+pub struct TuneEntry {
+    /// index into the plan's step list
+    pub step: usize,
+    /// the cached winner
+    pub choice: KernelChoice,
+    /// the winner's best-of-3 seconds
+    pub secs: f64,
+    /// every candidate with its best-of-3 seconds, grid order
+    pub candidates: Vec<(KernelChoice, f64)>,
+}
+
+/// The candidate grid the tuner times per Winograd step:
+/// `(oc_block, parts_mul)`. The first entry is the fallback-table
+/// default and wins ties (the tuner only switches on a strict
+/// improvement), so `--tune on` on a noise-free machine degrades to
+/// the `--tune off` table.
+const TUNE_CANDIDATES: [(usize, usize); 4] =
+    [(4, 1), (2, 1), (4, 2), (2, 2)];
+
 /// One compiled layer: resolved weights + precomputed geometry.
 /// Weights live in `Arc`s and the whole step list is itself
 /// `Arc`-shared across every batch bucket's plan
@@ -161,11 +234,11 @@ enum PlanStep {
 /// Batch-independent buffer maxima gathered while building steps;
 /// multiplied by the bucket's batch size when a plan is instantiated.
 struct StepMaxima {
-    /// max over wino layers of `th * tw * cin * 16` (d_hat floats)
+    /// max over wino layers of `th * tw * cin * P` (d_hat floats)
     d_per: usize,
-    /// max over wino layers of `th * tw * cout * 4` (tile-out floats)
+    /// max over wino layers of `th * tw * cout * Q` (tile-out floats)
     y_per: usize,
-    /// max over wino layers of `cout * cin * 16` (point-major weight
+    /// max over wino layers of `cout * cin * P` (point-major weight
     /// floats; batch-independent)
     w_per: usize,
     /// max over layer boundaries (input included) of `c * hw * hw`
@@ -175,14 +248,21 @@ struct StepMaxima {
     out_hw: usize,
 }
 
-/// A model compiled for one batch size; owns its workspace and
-/// activation ping-pong buffers. See the module docs.
+/// A model compiled for one batch size; owns its workspace,
+/// activation ping-pong buffers, and one cached [`KernelChoice`] per
+/// step. See the module docs.
 pub struct ModelPlan {
     batch: usize,
     in_dims: [usize; 4],
     out_dims: [usize; 4],
     /// shared across every bucket's plan for the same model
     steps: Arc<Vec<PlanStep>>,
+    /// one per step, parallel to `steps`; the fallback table until
+    /// [`ModelPlan::compile_buckets_tuned`] overwrites the Winograd
+    /// entries with measured winners
+    choices: Vec<KernelChoice>,
+    /// per-step tuning record; empty under [`TuneMode::Off`]
+    tune_report: Vec<TuneEntry>,
     ws: Workspace,
     act_a: Tensor,
     act_b: Tensor,
@@ -202,8 +282,10 @@ impl ModelPlan {
 
     /// Compile one plan per batch bucket. The step list — and with it
     /// every weight tensor — is built once and `Arc`-shared across
-    /// the returned plans; only the workspaces and activation buffers
-    /// are per-bucket.
+    /// the returned plans; only the workspaces, activation buffers,
+    /// and kernel choices are per-bucket. Choices come from the
+    /// deterministic fallback table (equivalent to
+    /// [`ModelPlan::compile_buckets_tuned`] with [`TuneMode::Off`]).
     pub fn compile_buckets(spec: &ModelSpec, weights: &ModelWeights,
                            buckets: &[usize])
                            -> Result<Vec<(usize, ModelPlan)>> {
@@ -214,6 +296,11 @@ impl ModelPlan {
                 "buckets must be non-empty, all >= 1");
         let (steps, m) = build_steps(spec, weights)?;
         let steps = Arc::new(steps);
+        let choices: Vec<KernelChoice> = steps.iter().map(|s| match s {
+            PlanStep::Wino { w_hat, .. } =>
+                KernelChoice::for_tile(wino_adder::tile_size_of(w_hat)),
+            _ => KernelChoice::default(),
+        }).collect();
         Ok(buckets.iter().map(|&batch| {
             let mut ws = Workspace::new();
             arc_vec_mut(&mut ws.d_hat).reserve(batch * m.d_per);
@@ -229,11 +316,96 @@ impl ModelPlan {
                 in_dims: [batch, spec.in_channels, spec.hw, spec.hw],
                 out_dims: [batch, m.out_c, m.out_hw, m.out_hw],
                 steps: Arc::clone(&steps),
+                choices: choices.clone(),
+                tune_report: Vec::new(),
                 ws,
                 act_a: act(max_act),
                 act_b: act(max_act),
             })
         }).collect())
+    }
+
+    /// [`ModelPlan::compile_buckets`], then — under [`TuneMode::On`] —
+    /// micro-benchmark [`TUNE_CANDIDATES`] per Winograd step **on the
+    /// given backend** and cache each winner in the plan. Tuning runs
+    /// on the plan's own preallocated workspace and activation
+    /// buffers, so it doubles as the warmup: the post-tune workspace
+    /// footprint is the steady-state footprint of the cached choices.
+    /// Under [`TuneMode::Off`] this is exactly `compile_buckets`
+    /// (deterministic fallback table, no timing, no warmup).
+    pub fn compile_buckets_tuned(spec: &ModelSpec,
+                                 weights: &ModelWeights,
+                                 buckets: &[usize], tune: TuneMode,
+                                 backend: &dyn Backend)
+                                 -> Result<Vec<(usize, ModelPlan)>> {
+        let mut plans = Self::compile_buckets(spec, weights, buckets)?;
+        if tune == TuneMode::On {
+            for (_, plan) in &mut plans {
+                plan.tune(backend);
+            }
+        }
+        Ok(plans)
+    }
+
+    /// Time every `(oc_block, parts_mul)` candidate for every Winograd
+    /// step (1 warmup + best of 3, synthetic activations) and cache
+    /// the winners. Cold path: runs once at plan compile time.
+    fn tune(&mut self, backend: &dyn Backend) {
+        let steps = Arc::clone(&self.steps);
+        self.tune_report.clear();
+        for (i, step) in steps.iter().enumerate() {
+            let PlanStep::Wino { w_hat, pad, variant, th, tw } = step
+            else {
+                continue;
+            };
+            let tile = wino_adder::tile_size_of(w_hat);
+            let g = TileGrid::new(1, 1, *th, *tw, tile);
+            // invert the tile geometry: both tile sizes overlap
+            // neighbors by 2, so hw_in = r*th + 2 - 2*pad
+            let hw = g.r * th + 2 - 2 * pad;
+            let cin = w_hat.dims[1];
+            self.act_a.dims = [self.batch, cin, hw, hw];
+            let n = self.batch * cin * hw * hw;
+            self.act_a.data.clear();
+            self.act_a.data.extend(
+                (0..n).map(|j| ((j % 17) as f32) * 0.25 - 2.0));
+            let mut candidates =
+                Vec::with_capacity(TUNE_CANDIDATES.len());
+            let mut best: Option<(KernelChoice, f64)> = None;
+            for (oc_block, parts_mul) in TUNE_CANDIDATES {
+                let choice = KernelChoice { tile, oc_block, parts_mul };
+                let mut secs = f64::INFINITY;
+                for rep in 0..4 {
+                    self.ws.w_shared = Some(Arc::clone(w_hat));
+                    let t0 = Instant::now();
+                    backend.forward_into(
+                        ForwardArgs::new(&self.act_a, w_hat, *pad,
+                                         *variant)
+                            .with_choice(choice),
+                        &mut self.ws, &mut self.act_b);
+                    let dt = t0.elapsed().as_secs_f64();
+                    // rep 0 is the warmup (first-touch growth of the
+                    // shard buffers at this candidate's part count)
+                    if rep > 0 {
+                        secs = secs.min(dt);
+                    }
+                }
+                candidates.push((choice, secs));
+                // strict improvement only: grid order breaks ties, so
+                // the default candidate wins when timings agree
+                if best.map_or(true, |(_, b)| secs < b) {
+                    best = Some((choice, secs));
+                }
+            }
+            let (choice, secs) = best.expect("non-empty grid");
+            self.choices[i] = choice;
+            self.tune_report.push(TuneEntry {
+                step: i,
+                choice,
+                secs,
+                candidates,
+            });
+        }
     }
 
     pub fn batch(&self) -> usize {
@@ -253,6 +425,19 @@ impl ModelPlan {
     /// Flat output length per sample.
     pub fn out_sample_len(&self) -> usize {
         self.out_len() / self.batch
+    }
+
+    /// The cached per-step kernel choices, parallel to the step list
+    /// (non-Winograd steps hold the default and ignore it).
+    pub fn kernel_choices(&self) -> &[KernelChoice] {
+        &self.choices
+    }
+
+    /// Per-step tuning measurements; empty unless the plan was
+    /// compiled via [`ModelPlan::compile_buckets_tuned`] with
+    /// [`TuneMode::On`].
+    pub fn tune_report(&self) -> &[TuneEntry] {
+        &self.tune_report
     }
 
     /// Total reserved buffer bytes (workspace + activations); constant
@@ -276,10 +461,17 @@ impl ModelPlan {
             PlanStep::Wino { th, tw, .. } => (*th, *tw),
             _ => (0, 0),
         }).unwrap_or((0, 0));
-        format!("b{}: {} steps ({} wino, {}x{} tiles, max t={}), \
-                 buffers {:.1} KiB",
+        let mut kernels: Vec<String> = self.steps.iter()
+            .zip(&self.choices)
+            .filter(|(s, _)| matches!(s, PlanStep::Wino { .. }))
+            .map(|(_, c)| c.summary())
+            .collect();
+        kernels.dedup();
+        format!("b{}: {} steps ({} wino, {}x{} tiles, max t={}, \
+                 kernels {}), buffers {:.1} KiB",
                 self.batch, self.steps.len(), wino.len(), th, tw,
-                max_t, self.workspace_footprint() as f64 / 1024.0)
+                max_t, kernels.join("+"),
+                self.workspace_footprint() as f64 / 1024.0)
     }
 
     // lint:hot-path(begin) ModelPlan::forward is THE per-request path
@@ -289,7 +481,8 @@ impl ModelPlan {
     /// values), returning the flat output activations. Steady state
     /// performs zero heap allocation: activations ping-pong between
     /// two preallocated tensors and `backend.forward_into` reuses the
-    /// plan's [`Workspace`].
+    /// plan's [`Workspace`]. Each Winograd step runs under its cached
+    /// [`KernelChoice`].
     pub fn forward(&mut self, backend: &dyn Backend, x: &[f32])
                    -> &[f32] {
         assert_eq!(x.len(), self.in_dims.iter().product::<usize>(),
@@ -297,7 +490,7 @@ impl ModelPlan {
         self.act_a.dims = self.in_dims;
         self.act_a.data.clear();
         self.act_a.data.extend_from_slice(x);
-        for step in self.steps.iter() {
+        for (step, choice) in self.steps.iter().zip(&self.choices) {
             match step {
                 PlanStep::Wino { w_hat, pad, variant, .. } => {
                     // hand the backend shared ownership of the very
@@ -306,7 +499,8 @@ impl ModelPlan {
                     self.ws.w_shared = Some(Arc::clone(w_hat));
                     backend.forward_into(
                         ForwardArgs::new(&self.act_a, w_hat, *pad,
-                                         *variant),
+                                         *variant)
+                            .with_choice(*choice),
                         &mut self.ws, &mut self.act_b);
                     std::mem::swap(&mut self.act_a, &mut self.act_b);
                 }
@@ -347,15 +541,18 @@ fn build_steps(spec: &ModelSpec, weights: &ModelWeights)
     for (i, l) in spec.layers.iter().enumerate() {
         let p = &weights.params[i];
         match *l {
-            LayerKind::WinoAdder3x3 { cin, cout, pad, variant } => {
-                let (_, th, tw) =
-                    wino_adder::tile_geometry([1, cin, hw, hw], pad);
-                m.d_per = m.d_per.max(th * tw * cin * 16);
-                m.y_per = m.y_per.max(th * tw * cout * 4);
-                m.w_per = m.w_per.max(cout * cin * 16);
+            LayerKind::WinoAdder3x3 { cin, cout, pad, variant,
+                                      tile } => {
+                let (_, th, tw) = wino_adder::tile_geometry_for(
+                    [1, cin, hw, hw], pad, tile);
+                m.d_per = m.d_per.max(th * tw * cin * tile.points());
+                m.y_per =
+                    m.y_per.max(th * tw * cout * tile.out_points());
+                m.w_per = m.w_per.max(cout * cin * tile.points());
+                let ts = tile.tile();
                 steps.push(PlanStep::Wino {
                     w_hat: Arc::new(Tensor::from_vec(
-                        p.data.clone(), [cout, cin, 4, 4])),
+                        p.data.clone(), [cout, cin, ts, ts])),
                     pad, variant, th, tw,
                 });
             }
@@ -441,7 +638,7 @@ pub fn relu_inplace(x: &mut Tensor) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::backend::ScalarBackend;
+    use crate::nn::backend::{ParallelBackend, ScalarBackend};
     use crate::util::rng::Rng;
     use crate::util::testkit::all_close;
 
@@ -498,9 +695,11 @@ mod tests {
         for (i, l) in spec.layers.iter().enumerate() {
             let p = &weights.params[i];
             match *l {
-                LayerKind::WinoAdder3x3 { cin, cout, pad, variant } => {
+                LayerKind::WinoAdder3x3 { cin, cout, pad, variant,
+                                          tile } => {
+                    let ts = tile.tile();
                     let w_hat = Tensor::from_vec(p.data.clone(),
-                                                 [cout, cin, 4, 4]);
+                                                 [cout, cin, ts, ts]);
                     cur = be.forward(&cur, &w_hat, pad, variant);
                 }
                 LayerKind::ScaleShift { channels } => {
@@ -534,6 +733,72 @@ mod tests {
             assert_eq!(again, first, "plan is not pure");
             assert_eq!(plan.workspace_footprint(), fp,
                        "workspace grew after warmup");
+        }
+    }
+
+    #[test]
+    fn tune_off_is_the_deterministic_fallback_table() {
+        use crate::nn::model::{ModelSpec, ModelWeights};
+        let spec = ModelSpec::stack(2, 2, 3, 8, Variant::Std);
+        let weights = ModelWeights::init(&spec, 7);
+        let be = ScalarBackend::default();
+        let a = ModelPlan::compile_buckets_tuned(
+            &spec, &weights, &[1, 4], TuneMode::Off, &be).unwrap();
+        let b = ModelPlan::compile_buckets_tuned(
+            &spec, &weights, &[1, 4], TuneMode::Off, &be).unwrap();
+        for ((_, pa), (_, pb)) in a.iter().zip(&b) {
+            assert_eq!(pa.kernel_choices(), pb.kernel_choices(),
+                       "--tune off must be deterministic");
+            assert!(pa.tune_report().is_empty());
+        }
+        // and the table is exactly KernelChoice::for_tile per step
+        for (_, p) in &a {
+            for (s, c) in p.steps.iter().zip(p.kernel_choices()) {
+                if let PlanStep::Wino { w_hat, .. } = s {
+                    assert_eq!(
+                        *c,
+                        KernelChoice::for_tile(
+                            wino_adder::tile_size_of(w_hat)));
+                } else {
+                    assert_eq!(*c, KernelChoice::default());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tuned_plan_computes_the_same_function() {
+        use crate::nn::model::{ModelSpec, ModelWeights};
+        let spec = ModelSpec::stack(2, 2, 3, 8, Variant::Balanced(1));
+        let weights = ModelWeights::init(&spec, 11);
+        let be = ParallelBackend::new(2);
+        let mut base =
+            ModelPlan::compile(&spec, &weights, 2).unwrap();
+        let mut tuned = ModelPlan::compile_buckets_tuned(
+            &spec, &weights, &[2], TuneMode::On, &be).unwrap()
+            .pop().unwrap().1;
+        assert_eq!(tuned.tune_report().len(),
+                   tuned.steps.iter()
+                       .filter(|s| matches!(s, PlanStep::Wino { .. }))
+                       .count(),
+                   "one tune entry per wino step");
+        for e in tuned.tune_report() {
+            assert_eq!(e.candidates.len(), TUNE_CANDIDATES.len());
+            assert!(e.secs.is_finite() && e.secs >= 0.0);
+        }
+        let mut rng = Rng::new(13);
+        let x = rng.normal_vec(base.in_len());
+        let want = base.forward(&be, &x).to_vec();
+        // tuning may pick any candidate; the answer must not move
+        let got = tuned.forward(&be, &x).to_vec();
+        all_close(&got, &want, 1e-5, 1e-5).unwrap();
+        // the cached choice freezes the workspace footprint: tuning
+        // already warmed every buffer at the winning configuration
+        let fp = tuned.workspace_footprint();
+        for _ in 0..3 {
+            tuned.forward(&be, &x);
+            assert_eq!(tuned.workspace_footprint(), fp,
+                       "workspace grew after tuned warmup");
         }
     }
 }

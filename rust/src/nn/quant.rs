@@ -8,11 +8,15 @@
 //! out cycle by cycle.
 //!
 //! Note the Winograd-adder int8 subtlety: the input transform B^T d B
-//! sums four int8 values, so the transform-domain tile needs 10 bits;
-//! we keep d_hat in i16 (as the paper's FPGA does with its widened
-//! input-transform datapath) and the |w_hat - d_hat| accumulation in i32.
+//! sums four int8 values for F(2x2,3x3), so the transform-domain tile
+//! needs 10 bits; we keep d_hat in i16 (as the paper's FPGA does with
+//! its widened input-transform datapath) and the |w_hat - d_hat|
+//! accumulation in i32. The F(4x4,3x3) B has entries up to ±5 with
+//! per-axis absolute column sums <= 10, so the 2-D transform is
+//! bounded by 10 * 10 * 127 = 12700 — still comfortably i16, and the
+//! integer transform stays exact.
 
-use super::matrices::{self, Variant};
+use super::matrices::{self, TileSize, Variant};
 use super::Tensor;
 
 /// Symmetric per-tensor quantization parameters.
@@ -131,11 +135,31 @@ pub fn requantize_pair(x: &Tensor, w: &Tensor) -> (QTensor, QTensor) {
 }
 
 /// int8 Winograd-adder conv: int8 inputs/weights, i16 transform domain,
-/// i32 accumulation (the FPGA datapath of Table 2).
+/// i32 accumulation (the FPGA datapath of Table 2). The trailing weight
+/// dims select the tile size — `(O, C, 4, 4)` runs F(2x2,3x3),
+/// `(O, C, 6, 6)` runs F(4x4,3x3) — mirroring
+/// [`crate::nn::wino_adder::tile_size_of`].
 pub fn winograd_adder_conv2d_i8(x: &QTensor, w_hat_q: &[i16],
                                 w_dims: [usize; 4], pad: usize,
                                 variant: Variant)
                                 -> (Vec<i32>, [usize; 4], f32) {
+    match (w_dims[2], w_dims[3]) {
+        (4, 4) => winograd_adder_conv2d_i8_f2(x, w_hat_q, w_dims, pad,
+                                              variant),
+        (6, 6) => winograd_adder_conv2d_i8_f4(x, w_hat_q, w_dims, pad,
+                                              variant),
+        (a, b) => panic!("wino weights must be (O,C,4,4) or (O,C,6,6), \
+                          got trailing ({a}, {b})"),
+    }
+}
+
+/// F(2x2,3x3) body of [`winograd_adder_conv2d_i8`] — the fused
+/// sequential reference the int8 backends are tested bit-exact
+/// against.
+fn winograd_adder_conv2d_i8_f2(x: &QTensor, w_hat_q: &[i16],
+                               w_dims: [usize; 4], pad: usize,
+                               variant: Variant)
+                               -> (Vec<i32>, [usize; 4], f32) {
     let [n, c, h, wd] = x.dims;
     let o = w_dims[0];
     assert_eq!(w_dims[1], c);
@@ -227,6 +251,52 @@ pub fn winograd_adder_conv2d_i8(x: &QTensor, w_hat_q: &[i16],
     (out, [n, o, 2 * th, 2 * tw], x.qp.scale)
 }
 
+/// F(4x4,3x3) body of [`winograd_adder_conv2d_i8`]: i16 transform
+/// domain via the integer B6 (exact, bounded by 12700), i32 `-|.|`
+/// accumulation, integer flat-S epilogue (A6 is integral, so the flat
+/// transform is exact in i32).
+fn winograd_adder_conv2d_i8_f4(x: &QTensor, w_hat_q: &[i16],
+                               w_dims: [usize; 4], pad: usize,
+                               variant: Variant)
+                               -> (Vec<i32>, [usize; 4], f32) {
+    let [n, c, _, _] = x.dims;
+    let o = w_dims[0];
+    assert_eq!(w_dims[1], c);
+    assert_eq!(w_hat_q.len(), o * c * 36);
+    let (_, th, tw) = crate::nn::wino_adder::tile_geometry_for(
+        x.dims, pad, TileSize::F4);
+    let t = n * th * tw;
+    let mut d_hat = vec![0i16; t * c * 36];
+    input_tiles_i16_f4_into(&x.data, x.dims, pad, variant, &mut d_hat);
+    let s = matrices::flat_s(variant, TileSize::F4).to_i32();
+    let mut y = vec![0i32; t * o * 16];
+    for ti in 0..t {
+        for oc in 0..o {
+            let mut m = [0i32; 36];
+            for ic in 0..c {
+                let dh = &d_hat[(ti * c + ic) * 36..][..36];
+                let wrow = &w_hat_q[(oc * c + ic) * 36..][..36];
+                for p in 0..36 {
+                    m[p] -= ((wrow[p] as i32) - (dh[p] as i32)).abs();
+                }
+            }
+            let yrow = &mut y[(ti * o + oc) * 16..][..16];
+            for (q, yv) in yrow.iter_mut().enumerate() {
+                let mut acc = 0i32;
+                for (p, mv) in m.iter().enumerate() {
+                    acc += mv * s.row(p)[q];
+                }
+                *yv = acc;
+            }
+        }
+    }
+    let g = crate::nn::wino_adder::TileGrid::new(n, o, th, tw,
+                                                TileSize::F4);
+    let mut out = vec![0i32; g.out_len()];
+    crate::nn::wino_adder::untile_map_into(&y, g, &mut out, |v| v);
+    (out, [n, o, 4 * th, 4 * tw], x.qp.scale)
+}
+
 /// Extract + integer-transform all tiles of a quantized input with
 /// implicit zero padding: returns `d_hat` as `(T, C, 16)` i16 (10-bit
 /// values on the FPGA's widened datapath) plus `(n, th, tw)` — the
@@ -245,6 +315,10 @@ pub fn input_tiles_i16(x: &QTensor, pad: usize, variant: Variant)
     input_tiles_i16_into(&x.data, x.dims, pad, variant, &mut out);
     (out, n, th, tw)
 }
+
+// lint:hot-path(begin) integer tile transforms + weight quantization
+// run on every int8 request inside the planned executor; workspace
+// slices are preallocated by nn::plan, so no allocation here
 
 /// Allocation-free twin of [`input_tiles_i16`] over raw int8 data:
 /// writes `d_hat (T, C, 16)` into the caller's slice (exactly
@@ -360,6 +434,142 @@ pub fn input_tiles_i16_pm_into(data: &[i8], dims: [usize; 4],
         })
 }
 
+/// F(4x4,3x3) twin of [`input_tiles_i16_into`]: `d_hat (T, C, 36)`
+/// i16 from 6x6 tiles at stride 4. The integer B6 has per-axis
+/// absolute column sums <= 10, so |d_hat| <= 10 * 10 * 127 = 12700 —
+/// exact in i16.
+pub fn input_tiles_i16_f4_into(data: &[i8], dims: [usize; 4], pad: usize,
+                               variant: Variant, out: &mut [i16])
+                               -> (usize, usize, usize) {
+    let [n, c, _, _] = dims;
+    let (_, th, tw) = crate::nn::wino_adder::tile_geometry_for(
+        dims, pad, TileSize::F4);
+    assert_eq!(out.len(), n * th * tw * c * 36, "d_hat slice length");
+    for_each_tile_transform_i16_f4(
+        data, dims, pad, variant, |trow, ic, d_hat| {
+            out[(trow * c + ic) * 36..(trow * c + ic) * 36 + 36]
+                .copy_from_slice(d_hat);
+        })
+}
+
+/// The single home of int8 F4 tile extraction + the integer
+/// `B6^T d B6` (exact; bounded by 12700, see
+/// [`input_tiles_i16_f4_into`]): the F4 twin of
+/// [`for_each_tile_transform_i16`].
+fn for_each_tile_transform_i16_f4<F>(data: &[i8], dims: [usize; 4],
+                                     pad: usize, variant: Variant,
+                                     mut write: F)
+                                     -> (usize, usize, usize)
+where
+    F: FnMut(usize, usize, &[i16; 36]),
+{
+    let [n, c, h, wd] = dims;
+    assert_eq!(data.len(), n * c * h * wd, "data/dims mismatch");
+    let (_, th, tw) = crate::nn::wino_adder::tile_geometry_for(
+        dims, pad, TileSize::F4);
+    let bm = matrices::b6(variant);
+    let get = |in_: usize, ic: usize, i: isize, j: isize| -> i32 {
+        let (i, j) = (i - pad as isize, j - pad as isize);
+        if i < 0 || j < 0 || i >= h as isize || j >= wd as isize {
+            0
+        } else {
+            data[((in_ * c + ic) * h + i as usize) * wd + j as usize]
+                as i32
+        }
+    };
+    let mut d = [0i32; 36];
+    let mut d_hat = [0i16; 36];
+    for in_ in 0..n {
+        for ti in 0..th {
+            for tj in 0..tw {
+                let trow = (in_ * th + ti) * tw + tj;
+                for ic in 0..c {
+                    for ki in 0..6 {
+                        for kj in 0..6 {
+                            d[ki * 6 + kj] = get(
+                                in_, ic,
+                                (4 * ti + ki) as isize,
+                                (4 * tj + kj) as isize);
+                        }
+                    }
+                    // integer B6^T d B6 (B6 entries are integers up to
+                    // ±5 -> exact in i32, result bounded by 12700)
+                    let mut tmp = [0i32; 36];
+                    for i in 0..6 {
+                        for j in 0..6 {
+                            let mut s = 0i32;
+                            for kk in 0..6 {
+                                s += (bm[kk][i] as i32) * d[kk * 6 + j];
+                            }
+                            tmp[i * 6 + j] = s;
+                        }
+                    }
+                    for i in 0..6 {
+                        for j in 0..6 {
+                            let mut s = 0i32;
+                            for l in 0..6 {
+                                s += tmp[i * 6 + l] * (bm[l][j] as i32);
+                            }
+                            // fits in 15 bits (<= 12700)
+                            d_hat[i * 6 + j] = s as i16;
+                        }
+                    }
+                    write(trow, ic, &d_hat);
+                }
+            }
+        }
+    }
+    (n, th, tw)
+}
+
+/// F(4x4,3x3) twin of [`input_tiles_i16_pm_into`]: `d_hat (36, C, T)`.
+pub fn input_tiles_i16_pm_f4_into(data: &[i8], dims: [usize; 4],
+                                  pad: usize, variant: Variant,
+                                  out: &mut [i16])
+                                  -> (usize, usize, usize) {
+    let [n, c, _, _] = dims;
+    let (_, th, tw) = crate::nn::wino_adder::tile_geometry_for(
+        dims, pad, TileSize::F4);
+    let t = n * th * tw;
+    assert_eq!(out.len(), 36 * t * c, "d_pm slice length");
+    for_each_tile_transform_i16_f4(
+        data, dims, pad, variant, |trow, ic, d_hat| {
+            for (p, &v) in d_hat.iter().enumerate() {
+                out[(p * c + ic) * t + trow] = v;
+            }
+        })
+}
+
+/// Tile-size dispatcher over [`input_tiles_i16_into`] /
+/// [`input_tiles_i16_f4_into`].
+pub fn input_tiles_i16_into_for(data: &[i8], dims: [usize; 4],
+                                pad: usize, variant: Variant,
+                                tile: TileSize, out: &mut [i16])
+                                -> (usize, usize, usize) {
+    match tile {
+        TileSize::F2 => input_tiles_i16_into(data, dims, pad, variant,
+                                             out),
+        TileSize::F4 => input_tiles_i16_f4_into(data, dims, pad, variant,
+                                                out),
+    }
+}
+
+/// Tile-size dispatcher over [`input_tiles_i16_pm_into`] /
+/// [`input_tiles_i16_pm_f4_into`].
+pub fn input_tiles_i16_pm_into_for(data: &[i8], dims: [usize; 4],
+                                   pad: usize, variant: Variant,
+                                   tile: TileSize, out: &mut [i16])
+                                   -> (usize, usize, usize) {
+    match tile {
+        TileSize::F2 => input_tiles_i16_pm_into(data, dims, pad, variant,
+                                                out),
+        TileSize::F4 => input_tiles_i16_pm_f4_into(data, dims, pad,
+                                                   variant, out),
+    }
+}
+
+// lint:hot-path(end)
+
 /// Quantize Winograd-domain f32 weights to i16 on the activation scale
 /// (transform-domain weights exceed int8 range for the std G due to the
 /// 1/2 rows; i16 keeps the comparison exact on FPGA-width datapaths).
@@ -369,6 +579,9 @@ pub fn quantize_wino_weights(w_hat: &Tensor, scale: f32) -> Vec<i16> {
     out
 }
 
+// lint:hot-path(begin) weight quantization + repack feed the int8
+// backend on every request; buffers are reused, no allocation
+
 /// The single home of the int8-datapath weight-quantization formula —
 /// every i16 weight on every path (sequential reference, legacy and
 /// point-major backends) goes through this, so they stay bit-identical.
@@ -377,8 +590,8 @@ fn quantize_w(v: f32, scale: f32) -> i16 {
     (v / scale).round().clamp(i16::MIN as f32, i16::MAX as f32) as i16
 }
 
-/// Buffer-reusing twin of [`quantize_wino_weights`]: flat `(O, C, 16)`
-/// order, quantized via the shared formula.
+/// Buffer-reusing twin of [`quantize_wino_weights`]: flat `(O, C, P)`
+/// order (P = 16 or 36), quantized via the shared formula.
 pub fn quantize_wino_weights_into(w_hat: &[f32], scale: f32,
                                   out: &mut Vec<i16>) {
     out.clear();
@@ -386,11 +599,12 @@ pub fn quantize_wino_weights_into(w_hat: &[f32], scale: f32,
 }
 
 /// Point-major twin of [`quantize_wino_weights_into`]: quantize flat
-/// `(O, C, 16)` Winograd-domain weights straight into the
-/// `(16, O, C)` layout of the point-major kernels — the shared
+/// `(O, C, P)` Winograd-domain weights straight into the
+/// `(P, O, C)` layout of the point-major kernels — the shared
 /// `pm_repack_map` index walk fused with the shared quantization
 /// formula, so element values are bit-identical to the tile-major
-/// path and the layout lives in one place.
+/// path and the layout lives in one place. The point count is
+/// inferred from the slice length (16 or 36).
 pub fn quantize_wino_weights_pm_into(w_hat: &[f32], scale: f32,
                                      o: usize, c: usize,
                                      out: &mut Vec<i16>) {
@@ -398,12 +612,14 @@ pub fn quantize_wino_weights_pm_into(w_hat: &[f32], scale: f32,
                                          |v| quantize_w(v, scale));
 }
 
-/// Repack already-quantized i16 weights `(O, C, 16)` into point-major
-/// `(16, O, C)` (shares the index map with the f32 repack).
+/// Repack already-quantized i16 weights `(O, C, P)` into point-major
+/// `(P, O, C)` (shares the index map with the f32 repack).
 pub fn repack_wino_weights_pm(wq: &[i16], o: usize, c: usize,
                               out: &mut Vec<i16>) {
     crate::nn::wino_adder::pm_repack(wq, o, c, out);
 }
+
+// lint:hot-path(end)
 
 #[cfg(test)]
 mod tests {
@@ -468,6 +684,35 @@ mod tests {
     }
 
     #[test]
+    fn i8_wino_adder_f4_close_on_dequantized_operands() {
+        // the F4 integer path is exact; the f32 reference run on the
+        // dequantized operands accumulates rounding over the wider
+        // F4 dynamic range, so the comparison is relative-close
+        // rather than exact
+        let mut rng = Rng::new(21);
+        let x = Tensor::randn(&mut rng, [1, 4, 8, 8]);
+        let w_hat = Tensor::randn(&mut rng, [3, 4, 6, 6]);
+        let (qx, _) = requantize_pair(&x, &x);
+        let wq = quantize_wino_weights(&w_hat, qx.qp.scale);
+        let (qy, dims, scale) = winograd_adder_conv2d_i8(
+            &qx, &wq, w_hat.dims, 1, Variant::Balanced(0));
+        let xd = qx.to_f32();
+        let wd = Tensor {
+            data: wq.iter().map(|&q| q as f32 * scale).collect(),
+            dims: w_hat.dims,
+        };
+        let want = wino_adder::winograd_adder_conv2d(
+            &xd, &wd, 1, Variant::Balanced(0));
+        assert_eq!(dims, want.dims);
+        assert_eq!(dims, [1, 3, 8, 8]);
+        for (q, f) in qy.iter().zip(&want.data) {
+            let got_f = *q as f32 * scale;
+            assert!((got_f - f).abs() < 1e-2 * f.abs().max(1.0),
+                    "{got_f} vs {f}");
+        }
+    }
+
+    #[test]
     fn i8_wino_adder_quantization_error_bounded() {
         // vs the unquantized f32 reference: error bounded by the
         // propagated quantization noise (~90 * scale worst case for
@@ -515,6 +760,37 @@ mod tests {
     }
 
     #[test]
+    fn integer_f4_tiles_match_f32_tiles_on_integer_data() {
+        // same exactness argument at F4: B6 is integral, values are
+        // bounded by 12700 << 2^24, so the f32 transform is exact too
+        let mut rng = Rng::new(13);
+        let dims = [2usize, 3, 8, 8];
+        let data: Vec<i8> = (0..dims.iter().product::<usize>())
+            .map(|_| (rng.below(255) as i32 - 127) as i8)
+            .collect();
+        let qx = QTensor {
+            data: data.clone(),
+            dims,
+            qp: QParams { scale: 1.0 },
+        };
+        let (_, th, tw) = wino_adder::tile_geometry_for(dims, 1,
+                                                        TileSize::F4);
+        let t = dims[0] * th * tw;
+        let c = dims[1];
+        let mut ti16 = vec![0i16; t * c * 36];
+        input_tiles_i16_f4_into(&data, dims, 1, Variant::Balanced(0),
+                                &mut ti16);
+        let xf = qx.to_f32();
+        let mut tf32 = vec![0f32; t * c * 36];
+        wino_adder::input_tiles_f4_into(&xf, 1, Variant::Balanced(0),
+                                        &mut tf32);
+        for (i, (a, b)) in ti16.iter().zip(&tf32).enumerate() {
+            assert_eq!(*a as f32, *b, "at {i}");
+            assert!(a.unsigned_abs() <= 12700, "bound at {i}: {a}");
+        }
+    }
+
+    #[test]
     fn pm_i16_tiles_are_a_permutation_of_tile_major() {
         let mut rng = Rng::new(14);
         let dims = [2usize, 3, 6, 6];
@@ -549,18 +825,50 @@ mod tests {
     }
 
     #[test]
+    fn pm_i16_f4_tiles_are_a_permutation_of_tile_major() {
+        let mut rng = Rng::new(16);
+        let dims = [1usize, 3, 8, 8];
+        let data: Vec<i8> = (0..dims.iter().product::<usize>())
+            .map(|_| (rng.below(255) as i32 - 127) as i8)
+            .collect();
+        let pad = 1usize;
+        let (n, th, tw) = wino_adder::tile_geometry_for(dims, pad,
+                                                        TileSize::F4);
+        let t = n * th * tw;
+        let c = dims[1];
+        let mut want = vec![0i16; t * c * 36];
+        input_tiles_i16_f4_into(&data, dims, pad, Variant::Balanced(2),
+                                &mut want);
+        let mut pm = vec![0i16; want.len()];
+        let geom = input_tiles_i16_pm_f4_into(
+            &data, dims, pad, Variant::Balanced(2), &mut pm);
+        assert_eq!(geom, (n, th, tw));
+        for ti in 0..t {
+            for ic in 0..c {
+                for p in 0..36 {
+                    assert_eq!(pm[(p * c + ic) * t + ti],
+                               want[(ti * c + ic) * 36 + p],
+                               "({ti},{ic},{p})");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn pm_weight_quantization_matches_tile_major() {
         let mut rng = Rng::new(15);
-        let (o, c) = (3usize, 4usize);
-        let w_hat = rng.normal_vec(o * c * 16);
-        let scale = 0.037f32;
-        let mut flat = Vec::new();
-        quantize_wino_weights_into(&w_hat, scale, &mut flat);
-        let mut pm = Vec::new();
-        quantize_wino_weights_pm_into(&w_hat, scale, o, c, &mut pm);
-        let mut want = Vec::new();
-        repack_wino_weights_pm(&flat, o, c, &mut want);
-        assert_eq!(pm, want);
+        for points in [16usize, 36] {
+            let (o, c) = (3usize, 4usize);
+            let w_hat = rng.normal_vec(o * c * points);
+            let scale = 0.037f32;
+            let mut flat = Vec::new();
+            quantize_wino_weights_into(&w_hat, scale, &mut flat);
+            let mut pm = Vec::new();
+            quantize_wino_weights_pm_into(&w_hat, scale, o, c, &mut pm);
+            let mut want = Vec::new();
+            repack_wino_weights_pm(&flat, o, c, &mut want);
+            assert_eq!(pm, want);
+        }
     }
 
     #[test]
@@ -589,6 +897,21 @@ mod layout_regression_tests {
         let wq = quantize_wino_weights(&w_hat, 1.0);
         let (qy, _dims, _) = winograd_adder_conv2d_i8(&qx, &wq, w_hat.dims, 0, Variant::Balanced(0));
         let want = wino_adder::winograd_adder_conv2d(&x, &w_hat, 0, Variant::Balanced(0));
+        assert_eq!(qy.iter().map(|&v| v as f32).collect::<Vec<_>>(), want.data);
+    }
+
+    #[test]
+    fn single_tile_f4_exact() {
+        // 1x1x6x6 input, pad 0 -> exactly one F4 tile; small integer
+        // operands keep the f32 oracle exact, so the comparison is
+        // bit-for-bit
+        let x = Tensor::from_vec((0..36).map(|i| i as f32).collect(), [1,1,6,6]);
+        let w_hat = Tensor::from_vec((0..36).map(|i| (i%5) as f32 - 2.0).collect(), [1,1,6,6]);
+        let qx = QTensor { data: x.data.iter().map(|&v| v as i8).collect(), dims: x.dims, qp: QParams{scale: 1.0} };
+        let wq = quantize_wino_weights(&w_hat, 1.0);
+        let (qy, dims, _) = winograd_adder_conv2d_i8(&qx, &wq, w_hat.dims, 0, Variant::Balanced(0));
+        let want = wino_adder::winograd_adder_conv2d(&x, &w_hat, 0, Variant::Balanced(0));
+        assert_eq!(dims, want.dims);
         assert_eq!(qy.iter().map(|&v| v as f32).collect::<Vec<_>>(), want.data);
     }
 

@@ -1,28 +1,92 @@
 //! Winograd convolutions, f32: the standard (multiplication) form and
 //! the paper's adder form (Eq. 9), plus the blocked hot path.
 //!
-//! Shared pipeline per 4x4 input tile (stride 2):
+//! Shared pipeline per input tile (4x4 stride 2 for F(2x2,3x3), 6x6
+//! stride 4 for F(4x4,3x3)):
 //!   d_hat = B^T d B
 //!   m     = { w_hat .* d_hat          (Winograd CNN)
 //!           { -sum_c |w_hat - d_hat|  (Winograd AdderNet)
-//!   y     = A^T m A  (2x2 output patch)
+//!   y     = A^T m A  (2x2 or 4x4 output patch)
+//!
+//! The tile size is carried by the weight tensor shape — `(O, C, 4, 4)`
+//! is F2, `(O, C, 6, 6)` is F4 (see [`tile_size_of`]) — and by the
+//! `*_for` dispatchers that take an explicit
+//! [`TileSize`](crate::nn::matrices::TileSize).
 
-use super::matrices::{self, Variant};
+use super::matrices::{self, FlatS, TileSize, Variant};
 use super::Tensor;
 
+/// Output-side tile grid: everything the untile epilogues need to
+/// scatter `(T, O, r*r)` patches back to `(N, O, r*th, r*tw)` NCHW.
+/// `r` is the output patch edge (2 for F2, 4 for F4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileGrid {
+    pub n: usize,
+    pub o: usize,
+    pub th: usize,
+    pub tw: usize,
+    pub r: usize,
+}
+
+impl TileGrid {
+    pub fn new(n: usize, o: usize, th: usize, tw: usize, tile: TileSize)
+               -> TileGrid {
+        TileGrid { n, o, th, tw, r: tile.out() }
+    }
+
+    /// Total tile count `N * th * tw`.
+    pub fn t(&self) -> usize {
+        self.n * self.th * self.tw
+    }
+
+    /// Output values per (tile, channel): `r * r`.
+    pub fn q(&self) -> usize {
+        self.r * self.r
+    }
+
+    /// Length of the scattered NCHW output slice.
+    pub fn out_len(&self) -> usize {
+        self.n * self.o * (self.r * self.th) * (self.r * self.tw)
+    }
+}
+
+/// Tile size implied by a Winograd-domain weight tensor
+/// `(O, C, ts, ts)`: 4x4 trailing dims mean F(2x2,3x3), 6x6 mean
+/// F(4x4,3x3). Panics on anything else — the weight shape is the
+/// single source of truth for a layer's transform family.
+pub fn tile_size_of(w_hat: &Tensor) -> TileSize {
+    match (w_hat.dims[2], w_hat.dims[3]) {
+        (4, 4) => TileSize::F2,
+        (6, 6) => TileSize::F4,
+        (a, b) => panic!("wino weights must be (O,C,4,4) or (O,C,6,6), \
+                          got trailing ({a}, {b})"),
+    }
+}
+
 /// Tile geometry for an `(N, C, H, W)` input under implicit zero
-/// padding `pad`: `(n, th, tw)` with `th = (H + 2*pad - 2) / 2`.
-/// Panics (with a message naming the offending extent) unless the
-/// padded extents are even and >= 4 — the caller-facing contract of
-/// every stride-2 F(2x2,3x3) tiler in this module.
-pub fn tile_geometry(dims: [usize; 4], pad: usize)
-                     -> (usize, usize, usize) {
+/// padding `pad`: `(n, th, tw)` with `th = (H + 2*pad - 2) / r` where
+/// `r` is the tiling stride (2 for F2, 4 for F4). Panics (with a
+/// message naming the offending extent) unless the padded extents
+/// satisfy `hp >= tile edge` and `(hp - 2) % r == 0` — the
+/// caller-facing contract of every tiler in this module.
+pub fn tile_geometry_for(dims: [usize; 4], pad: usize, tile: TileSize)
+                         -> (usize, usize, usize) {
     let [n, _, h, w] = dims;
     let (hp, wp) = (h + 2 * pad, w + 2 * pad);
-    assert!(hp >= 4 && wp >= 4 && (hp - 2) % 2 == 0 && (wp - 2) % 2 == 0,
-            "H, W must be even and >= 4 after padding (got {h}x{w}, \
-             pad {pad})");
-    (n, (hp - 2) / 2, (wp - 2) / 2)
+    let (edge, r) = (tile.tile(), tile.out());
+    assert!(hp >= edge && wp >= edge
+            && (hp - 2) % r == 0 && (wp - 2) % r == 0,
+            "H, W must satisfy H + 2*pad >= {edge} and \
+             (H + 2*pad - 2) % {r} == 0 for {} tiles (got {h}x{w}, \
+             pad {pad})", tile.name());
+    (n, (hp - 2) / r, (wp - 2) / r)
+}
+
+/// F(2x2,3x3) tile geometry — [`tile_geometry_for`] at
+/// [`TileSize::F2`] (the historical stride-2 contract).
+pub fn tile_geometry(dims: [usize; 4], pad: usize)
+                     -> (usize, usize, usize) {
+    tile_geometry_for(dims, pad, TileSize::F2)
 }
 
 /// Extract + transform all tiles: returns `d_hat` as `(T, C, 16)`
@@ -35,6 +99,10 @@ pub fn input_tiles(xp: &Tensor, variant: Variant)
     input_tiles_into(xp, 0, variant, &mut out);
     (out, n, th, tw)
 }
+
+// lint:hot-path(begin) tile extraction + point-major repacks run on
+// every request inside the planned executor; they must stay
+// allocation-free (the workspace slices are preallocated by nn::plan)
 
 /// Allocation-free twin of [`input_tiles`]: extract + transform all
 /// tiles of an **unpadded** input with implicit zero padding `pad`,
@@ -56,12 +124,13 @@ pub fn input_tiles_into(x: &Tensor, pad: usize, variant: Variant,
     })
 }
 
-/// The single home of f32 tile extraction + `B^T d B`: visit every
-/// `(tile row, input channel)` pair's transformed 16-vector under
-/// implicit zero padding. [`input_tiles_into`] (tile-major) and
+/// The single home of f32 tile extraction + `B^T d B` (F2): visit
+/// every `(tile row, input channel)` pair's transformed 16-vector
+/// under implicit zero padding. [`input_tiles_into`] (tile-major) and
 /// [`input_tiles_pm_into`] (point-major) are thin layout adapters, so
 /// a fix to the extraction or transform logic lands in both layouts
-/// at once (cf. [`untile_map_into`], the untile-side analogue).
+/// at once (cf. [`untile_map_into`], the untile-side analogue;
+/// [`for_each_tile_transform_f4`], the F4 twin).
 fn for_each_tile_transform<F>(x: &Tensor, pad: usize, variant: Variant,
                               mut write: F) -> (usize, usize, usize)
 where
@@ -122,10 +191,100 @@ pub fn input_tiles_pm_into(x: &Tensor, pad: usize, variant: Variant,
     })
 }
 
-/// The single home of the `(O, C, 16) -> (16, O, C)` weight repack:
-/// `out[(p*O + o)*C + c] = f(w_hat[(o*C + c)*16 + p])`. Behind every
-/// point-major weight producer — the f32 [`repack_weights_pm`], the
-/// int8 [`crate::nn::quant::repack_wino_weights_pm`], and the fused
+/// F(4x4,3x3) twin of [`input_tiles_into`]: `d_hat (T, C, 36)` from
+/// 6x6 tiles at stride 4 under implicit zero padding.
+pub fn input_tiles_f4_into(x: &Tensor, pad: usize, variant: Variant,
+                           out: &mut [f32]) -> (usize, usize, usize) {
+    let [n, c, _, _] = x.dims;
+    let (_, th, tw) = tile_geometry_for(x.dims, pad, TileSize::F4);
+    let t = n * th * tw;
+    assert_eq!(out.len(), t * c * 36, "d_hat slice length");
+    for_each_tile_transform_f4(x, pad, variant, |trow, ic, d_hat| {
+        out[(trow * c + ic) * 36..(trow * c + ic) * 36 + 36]
+            .copy_from_slice(d_hat);
+    })
+}
+
+/// The single home of F4 f32 tile extraction + `B^T d B`: 6x6 windows
+/// at stride 4, otherwise identical in contract to
+/// [`for_each_tile_transform`].
+fn for_each_tile_transform_f4<F>(x: &Tensor, pad: usize, variant: Variant,
+                                 mut write: F) -> (usize, usize, usize)
+where
+    F: FnMut(usize, usize, &[f32; 36]),
+{
+    let [n, c, h, w] = x.dims;
+    let (_, th, tw) = tile_geometry_for(x.dims, pad, TileSize::F4);
+    let mut tile = [0f32; 36];
+    for in_ in 0..n {
+        for ti in 0..th {
+            for tj in 0..tw {
+                let trow = (in_ * th + ti) * tw + tj;
+                for ic in 0..c {
+                    for ki in 0..6 {
+                        for kj in 0..6 {
+                            let i = (4 * ti + ki) as isize - pad as isize;
+                            let j = (4 * tj + kj) as isize - pad as isize;
+                            tile[ki * 6 + kj] = if i < 0 || j < 0
+                                || i >= h as isize || j >= w as isize {
+                                0.0
+                            } else {
+                                x.at(in_, ic, i as usize, j as usize)
+                            };
+                        }
+                    }
+                    let d_hat =
+                        matrices::input_transform_f4(&tile, variant);
+                    write(trow, ic, &d_hat);
+                }
+            }
+        }
+    }
+    (n, th, tw)
+}
+
+/// F(4x4,3x3) twin of [`input_tiles_pm_into`]: `d_hat (36, C, T)`.
+pub fn input_tiles_pm_f4_into(x: &Tensor, pad: usize, variant: Variant,
+                              out: &mut [f32]) -> (usize, usize, usize) {
+    let [n, c, _, _] = x.dims;
+    let (_, th, tw) = tile_geometry_for(x.dims, pad, TileSize::F4);
+    let t = n * th * tw;
+    assert_eq!(out.len(), 36 * c * t, "d_pm slice length");
+    for_each_tile_transform_f4(x, pad, variant, |trow, ic, d_hat| {
+        for (p, &v) in d_hat.iter().enumerate() {
+            out[(p * c + ic) * t + trow] = v;
+        }
+    })
+}
+
+/// Tile-size dispatcher over [`input_tiles_into`] /
+/// [`input_tiles_f4_into`].
+pub fn input_tiles_into_for(x: &Tensor, pad: usize, variant: Variant,
+                            tile: TileSize, out: &mut [f32])
+                            -> (usize, usize, usize) {
+    match tile {
+        TileSize::F2 => input_tiles_into(x, pad, variant, out),
+        TileSize::F4 => input_tiles_f4_into(x, pad, variant, out),
+    }
+}
+
+/// Tile-size dispatcher over [`input_tiles_pm_into`] /
+/// [`input_tiles_pm_f4_into`].
+pub fn input_tiles_pm_into_for(x: &Tensor, pad: usize, variant: Variant,
+                               tile: TileSize, out: &mut [f32])
+                               -> (usize, usize, usize) {
+    match tile {
+        TileSize::F2 => input_tiles_pm_into(x, pad, variant, out),
+        TileSize::F4 => input_tiles_pm_f4_into(x, pad, variant, out),
+    }
+}
+
+/// The single home of the `(O, C, P) -> (P, O, C)` weight repack:
+/// `out[(p*O + o)*C + c] = f(w_hat[(o*C + c)*P + p])`, with the point
+/// count `P` inferred from the slice length (16 for F2, 36 for F4).
+/// Behind every point-major weight producer — the f32
+/// [`repack_weights_pm`], the int8
+/// [`crate::nn::quant::repack_wino_weights_pm`], and the fused
 /// quantize-while-repacking
 /// [`crate::nn::quant::quantize_wino_weights_pm_into`] — so the
 /// layout exists in exactly one place.
@@ -135,13 +294,17 @@ where
     T: Copy,
     F: Fn(T) -> U,
 {
-    assert_eq!(w_hat.len(), o * c * 16, "w_hat must be (O, C, 16)");
+    assert!(o * c > 0 && w_hat.len() % (o * c) == 0,
+            "w_hat must be (O, C, points)");
+    let points = w_hat.len() / (o * c);
+    assert!(points == 16 || points == 36,
+            "points must be 16 (f2) or 36 (f4), got {points}");
     out.clear();
-    out.reserve(o * c * 16);
-    for p in 0..16 {
+    out.reserve(w_hat.len());
+    for p in 0..points {
         for oc in 0..o {
             for ic in 0..c {
-                out.push(f(w_hat[(oc * c + ic) * 16 + p]));
+                out.push(f(w_hat[(oc * c + ic) * points + p]));
             }
         }
     }
@@ -153,25 +316,32 @@ pub fn pm_repack<T: Copy>(w_hat: &[T], o: usize, c: usize,
     pm_repack_map(w_hat, o, c, out, |v| v);
 }
 
-/// Repack flat Winograd-domain weights `(O, C, 16)` into the
-/// point-major `(16, O, C)` layout the SAD-GEMM kernels consume.
+/// Repack flat Winograd-domain weights `(O, C, P)` into the
+/// point-major `(P, O, C)` layout the SAD-GEMM kernels consume.
 pub fn repack_weights_pm(w_hat: &[f32], o: usize, c: usize,
                          out: &mut Vec<f32>) {
     pm_repack(w_hat, o, c, out);
 }
 
-/// Repack tile-major input tiles `(T, C, 16)` into the point-major
-/// `(16, C, T)` layout: `out[(p*C + c)*T + t] = d[(t*C + c)*16 + p]`.
-/// The hot paths write point-major directly ([`input_tiles_pm_into`]);
-/// this exists for benches and differential tests that already hold
-/// tile-major data.
+// lint:hot-path(end)
+
+/// Repack tile-major input tiles `(T, C, P)` into the point-major
+/// `(P, C, T)` layout: `out[(p*C + c)*T + t] = d[(t*C + c)*P + p]`,
+/// with `P` inferred from the slice length. The hot paths write
+/// point-major directly ([`input_tiles_pm_into_for`]); this exists
+/// for benches and differential tests that already hold tile-major
+/// data.
 pub fn tiles_to_pm<T: Copy>(d: &[T], t: usize, c: usize) -> Vec<T> {
-    assert_eq!(d.len(), t * c * 16, "tiles must be (T, C, 16)");
+    assert!(t * c > 0 && d.len() % (t * c) == 0,
+            "tiles must be (T, C, points)");
+    let points = d.len() / (t * c);
+    assert!(points == 16 || points == 36,
+            "points must be 16 (f2) or 36 (f4), got {points}");
     let mut out = Vec::with_capacity(d.len());
-    for p in 0..16 {
+    for p in 0..points {
         for ic in 0..c {
             for ti in 0..t {
-                out.push(d[(ti * c + ic) * 16 + p]);
+                out.push(d[(ti * c + ic) * points + p]);
             }
         }
     }
@@ -197,50 +367,74 @@ pub fn transform_weights(w: &Tensor, variant: Variant) -> Vec<f32> {
     out
 }
 
-/// Scatter `(T, O, 4)` output patches back to `(N, O, 2*th, 2*tw)`
-/// (public so `nn::backend` can reuse the exact same layout).
-pub fn untile(y: &[f32], n: usize, o: usize, th: usize, tw: usize)
-              -> Tensor {
-    let mut out = Tensor::zeros([n, o, 2 * th, 2 * tw]);
-    untile_into(y, n, o, th, tw, &mut out.data);
+/// Transform spatial weights `(O,C,3,3)` -> flat `(O, C, 36)`
+/// (F(4x4,3x3)).
+pub fn transform_weights_f4(w: &Tensor, variant: Variant) -> Vec<f32> {
+    let [o, c, kh, kw] = w.dims;
+    assert_eq!((kh, kw), (3, 3));
+    let mut out = vec![0f32; o * c * 36];
+    let mut g = [0f32; 9];
+    for oc in 0..o {
+        for ic in 0..c {
+            for i in 0..9 {
+                g[i] = w.data[(oc * c + ic) * 9 + i];
+            }
+            let w_hat = matrices::kernel_transform_f4(&g, variant);
+            out[(oc * c + ic) * 36..(oc * c + ic) * 36 + 36]
+                .copy_from_slice(&w_hat);
+        }
+    }
     out
 }
 
-/// Allocation-free twin of [`untile`]: scatter `(T, O, 4)` patches into
-/// the caller's `(N, O, 2*th, 2*tw)` NCHW slice. Every output element
-/// is written (the 2x2 patches tile the output exactly), so the slice
-/// need not be zeroed first.
-pub fn untile_into(y: &[f32], n: usize, o: usize, th: usize, tw: usize,
-                   out: &mut [f32]) {
-    untile_map_into(y, n, o, th, tw, out, |v| v);
+/// Scatter `(T, O, r*r)` output patches back to
+/// `(N, O, r*th, r*tw)` (public so `nn::backend` can reuse the exact
+/// same layout).
+pub fn untile(y: &[f32], g: TileGrid) -> Tensor {
+    let mut out =
+        Tensor::zeros([g.n, g.o, g.r * g.th, g.r * g.tw]);
+    untile_into(y, g, &mut out.data);
+    out
 }
 
-/// The single home of the untile index math: scatter `(T, O, 4)`
-/// patches into an `(N, O, 2*th, 2*tw)` NCHW slice, mapping each
+// lint:hot-path(begin) untile epilogues run on every request inside
+// the planned executor and must stay allocation-free
+
+/// Allocation-free twin of [`untile`]: scatter `(T, O, r*r)` patches
+/// into the caller's `(N, O, r*th, r*tw)` NCHW slice. Every output
+/// element is written (the patches tile the output exactly), so the
+/// slice need not be zeroed first.
+pub fn untile_into(y: &[f32], g: TileGrid, out: &mut [f32]) {
+    untile_map_into(y, g, out, |v| v);
+}
+
+/// The single home of the untile index math: scatter `(T, O, r*r)`
+/// patches into an `(N, O, r*th, r*tw)` NCHW slice, mapping each
 /// element through `f`. [`untile_into`], the integer
 /// `kernel::untile_i32`, and the dequantizing
 /// `kernel::untile_i32_scaled_into` are all thin wrappers, so a fix to
 /// the scatter indexing lands everywhere at once. Every output element
 /// is written.
-pub fn untile_map_into<T, U, F>(y: &[T], n: usize, o: usize, th: usize,
-                                tw: usize, out: &mut [U], f: F)
+pub fn untile_map_into<T, U, F>(y: &[T], g: TileGrid, out: &mut [U], f: F)
 where
     T: Copy,
     F: Fn(T) -> U,
 {
-    let (ho, wo) = (2 * th, 2 * tw);
-    assert_eq!(y.len(), n * th * tw * o * 4, "tile-domain length");
+    let TileGrid { n, o, th, tw, r } = g;
+    let (ho, wo) = (r * th, r * tw);
+    let q = r * r;
+    assert_eq!(y.len(), n * th * tw * o * q, "tile-domain length");
     assert_eq!(out.len(), n * o * ho * wo, "output slice length");
     for in_ in 0..n {
         for ti in 0..th {
             for tj in 0..tw {
                 let trow = (in_ * th + ti) * tw + tj;
                 for oc in 0..o {
-                    let base = (trow * o + oc) * 4;
-                    for i in 0..2 {
-                        for j in 0..2 {
-                            out[((in_ * o + oc) * ho + 2 * ti + i) * wo
-                                + 2 * tj + j] = f(y[base + i * 2 + j]);
+                    let base = (trow * o + oc) * q;
+                    for i in 0..r {
+                        for j in 0..r {
+                            out[((in_ * o + oc) * ho + r * ti + i) * wo
+                                + r * tj + j] = f(y[base + i * r + j]);
                         }
                     }
                 }
@@ -248,6 +442,8 @@ where
         }
     }
 }
+
+// lint:hot-path(end)
 
 /// Standard Winograd F(2x2,3x3) convolution — equals `conv::conv2d`.
 pub fn winograd_conv2d(x: &Tensor, w: &Tensor, pad: usize, variant: Variant)
@@ -273,82 +469,104 @@ pub fn winograd_conv2d(x: &Tensor, w: &Tensor, pad: usize, variant: Variant)
             y[(trow * o + oc) * 4..][..4].copy_from_slice(&out);
         }
     }
-    untile(&y, n, o, th, tw)
+    untile(&y, TileGrid::new(n, o, th, tw, TileSize::F2))
 }
 
-/// Winograd AdderNet forward (paper Eq. 9) from Winograd-domain weights
-/// `w_hat (O, C, 4, 4)` — naive oracle.
+/// Winograd AdderNet forward (paper Eq. 9) from Winograd-domain
+/// weights `w_hat (O, C, 4, 4)` or `(O, C, 6, 6)` — naive oracle for
+/// both tile sizes (the weight shape selects the family, per
+/// [`tile_size_of`]).
 pub fn winograd_adder_conv2d(x: &Tensor, w_hat: &Tensor, pad: usize,
                              variant: Variant) -> Tensor {
-    let xp = x.pad_same(pad);
-    let c = xp.dims[1];
+    let c = x.dims[1];
     let o = w_hat.dims[0];
     assert_eq!(w_hat.dims[1], c);
-    assert_eq!((w_hat.dims[2], w_hat.dims[3]), (4, 4));
-    let (d_hat, n, th, tw) = input_tiles(&xp, variant);
+    let tile = tile_size_of(w_hat);
+    let p = tile.points();
+    let q = tile.out_points();
+    let (n, th, tw) = tile_geometry_for(x.dims, pad, tile);
     let t = n * th * tw;
-    let mut y = vec![0f32; t * o * 4];
+    let mut d_hat = vec![0f32; t * c * p];
+    input_tiles_into_for(x, pad, variant, tile, &mut d_hat);
+    let mut y = vec![0f32; t * o * q];
     for trow in 0..t {
         for oc in 0..o {
-            let mut m = [0f32; 16];
+            let mut m = [0f32; 36];
             for ic in 0..c {
-                let d = &d_hat[(trow * c + ic) * 16..][..16];
-                let wv = &w_hat.data[(oc * c + ic) * 16..][..16];
-                for p in 0..16 {
-                    m[p] -= (wv[p] - d[p]).abs();
+                let d = &d_hat[(trow * c + ic) * p..][..p];
+                let wv = &w_hat.data[(oc * c + ic) * p..][..p];
+                for k in 0..p {
+                    m[k] -= (wv[k] - d[k]).abs();
                 }
             }
-            let out = matrices::output_transform(&m, variant);
-            y[(trow * o + oc) * 4..][..4].copy_from_slice(&out);
+            match tile {
+                TileSize::F2 => {
+                    let mut m16 = [0f32; 16];
+                    m16.copy_from_slice(&m[..16]);
+                    let out = matrices::output_transform(&m16, variant);
+                    y[(trow * o + oc) * 4..][..4].copy_from_slice(&out);
+                }
+                TileSize::F4 => {
+                    let out = matrices::output_transform_f4(&m, variant);
+                    y[(trow * o + oc) * 16..][..16]
+                        .copy_from_slice(&out);
+                }
+            }
         }
     }
-    untile(&y, n, o, th, tw)
+    untile(&y, TileGrid::new(n, o, th, tw, tile))
 }
 
 /// Blocked hot path for the Winograd-adder elementwise stage:
 /// `m[t,o,p] = -sum_c |w_hat[o,c,p] - d_hat[t,c,p]|`, then the flat
-/// output transform `y = m @ S`. Identical to [`winograd_adder_conv2d`].
+/// output transform `y = m @ S`. Identical to
+/// [`winograd_adder_conv2d`] for both tile sizes.
 ///
-/// This is the rust analogue of the Pallas kernel's schedule: a block of
-/// tiles stays hot while weight rows stream; the 16 transform-domain
+/// This is the rust analogue of the Pallas kernel's schedule: a block
+/// of tiles stays hot while weight rows stream; the transform-domain
 /// positions form the contiguous vector axis.
 pub fn winograd_adder_conv2d_fast(x: &Tensor, w_hat: &Tensor, pad: usize,
                                   variant: Variant) -> Tensor {
-    let xp = x.pad_same(pad);
-    let c = xp.dims[1];
+    let c = x.dims[1];
     let o = w_hat.dims[0];
-    let (d_hat, n, th, tw) = input_tiles(&xp, variant);
+    let tile = tile_size_of(w_hat);
+    let (n, th, tw) = tile_geometry_for(x.dims, pad, tile);
     let t = n * th * tw;
-    let s = matrices::output_transform_flat(variant);
-    let mut y = vec![0f32; t * o * 4];
-    wino_adder_tiles(&d_hat, &w_hat.data, t, o, c, &s, &mut y);
-    untile(&y, n, o, th, tw)
+    let mut d_hat = vec![0f32; t * c * tile.points()];
+    input_tiles_into_for(x, pad, variant, tile, &mut d_hat);
+    let s = matrices::flat_s(variant, tile);
+    let mut y = vec![0f32; t * o * tile.out_points()];
+    wino_adder_tiles_flat(&d_hat, &w_hat.data, t, o, c, &s, &mut y);
+    untile(&y, TileGrid::new(n, o, th, tw, tile))
 }
 
 /// Winograd AdderNet forward through the **point-major** SAD-GEMM
 /// kernels ([`crate::nn::backend::simd`]): `d_hat` laid out
-/// `(16, C, T)`, weights repacked `(16, O, C)`, the flat output
+/// `(P, C, T)`, weights repacked `(P, O, C)`, the flat output
 /// transform folded into the kernel epilogue. Same math as
 /// [`winograd_adder_conv2d`] (1e-4-close; the single-threaded
-/// reference path of the point-major backends).
+/// reference path of the point-major backends). Works for both tile
+/// sizes.
 pub fn winograd_adder_conv2d_pm(x: &Tensor, w_hat: &Tensor, pad: usize,
                                 variant: Variant) -> Tensor {
     let c = x.dims[1];
     let o = w_hat.dims[0];
     assert_eq!(w_hat.dims[1], c);
-    assert_eq!((w_hat.dims[2], w_hat.dims[3]), (4, 4));
-    let (n, th, tw) = tile_geometry(x.dims, pad);
+    let tile = tile_size_of(w_hat);
+    let (n, th, tw) = tile_geometry_for(x.dims, pad, tile);
     let t = n * th * tw;
-    let mut d_pm = vec![0f32; 16 * c * t];
-    input_tiles_pm_into(x, pad, variant, &mut d_pm);
+    let p = tile.points();
+    let mut d_pm = vec![0f32; p * c * t];
+    input_tiles_pm_into_for(x, pad, variant, tile, &mut d_pm);
     let mut w_pm = Vec::new();
     repack_weights_pm(&w_hat.data, o, c, &mut w_pm);
-    let s = matrices::output_transform_flat(variant);
-    let mut y = vec![0f32; t * o * 4];
+    let s = matrices::flat_s(variant, tile);
+    let mut y = vec![0f32; t * o * tile.out_points()];
     crate::nn::backend::simd::sad_gemm_pm_f32(
         &d_pm, &w_pm, crate::nn::backend::StageDims::new(t, o, c),
-        crate::nn::backend::simd::PmSpan::full(t), &s, &mut y);
-    untile(&y, n, o, th, tw)
+        crate::nn::backend::simd::PmSpan::full(t, p), &s,
+        crate::nn::backend::simd::PM_OC_BLOCK, &mut y);
+    untile(&y, TileGrid::new(n, o, th, tw, tile))
 }
 
 /// The shared hot loop (also benched standalone in benches/hotpath.rs).
@@ -387,6 +605,41 @@ pub fn wino_adder_tiles(d_hat: &[f32], w_hat: &[f32], t: usize, o: usize,
                     }
                     yrow[q] = acc;
                 }
+            }
+        }
+    }
+}
+
+/// Tile-size-polymorphic scalar baseline of the wino-adder stage:
+/// `m[t,o,p] = -sum_c |w_hat - d_hat|` then `y = m @ S`, with the
+/// point count and output width taken from the [`FlatS`]. The simple
+/// per-(tile, channel) loop order makes it the differential oracle
+/// for the blocked and point-major kernels at both tile sizes.
+pub fn wino_adder_tiles_flat(d_hat: &[f32], w_hat: &[f32], t: usize,
+                             o: usize, c: usize, s: &FlatS<f32>,
+                             y: &mut [f32]) {
+    let p = s.points();
+    let q = s.q();
+    assert_eq!(d_hat.len(), t * c * p);
+    assert_eq!(w_hat.len(), o * c * p);
+    assert_eq!(y.len(), t * o * q);
+    for ti in 0..t {
+        for oc in 0..o {
+            let mut m = [0f32; 36];
+            for ic in 0..c {
+                let d = &d_hat[(ti * c + ic) * p..][..p];
+                let wv = &w_hat[(oc * c + ic) * p..][..p];
+                for k in 0..p {
+                    m[k] -= (wv[k] - d[k]).abs();
+                }
+            }
+            let yrow = &mut y[(ti * o + oc) * q..][..q];
+            for (j, yv) in yrow.iter_mut().enumerate() {
+                let mut acc = 0f32;
+                for (k, mv) in m[..p].iter().enumerate() {
+                    acc += mv * s.row(k)[j];
+                }
+                *yv = acc;
             }
         }
     }
@@ -431,6 +684,33 @@ mod tests {
     }
 
     #[test]
+    fn wino_adder_f4_paths_agree_property() {
+        // the F4 naive oracle, the blocked flat path, and the
+        // point-major SAD-GEMM path must agree on F4-compatible
+        // geometries (hw % 4 == 0 with pad 1)
+        property(20, |g| {
+            let n = g.usize_in(1, 2);
+            let c = g.usize_in(1, 5);
+            let hw = 4 * g.usize_in(1, 3);
+            let o = g.usize_in(1, 5);
+            let seed = g.usize_in(0, 1 << 30) as u64;
+            let mut rng = Rng::new(seed);
+            let x = Tensor::randn(&mut rng, [n, c, hw, hw]);
+            let w_hat = Tensor::randn(&mut rng, [o, c, 6, 6]);
+            let v = *g.choose(&[Variant::Std, Variant::Balanced(0),
+                                Variant::Balanced(2)]);
+            let a = winograd_adder_conv2d(&x, &w_hat, 1, v);
+            let b = winograd_adder_conv2d_fast(&x, &w_hat, 1, v);
+            let d = winograd_adder_conv2d_pm(&x, &w_hat, 1, v);
+            if a.dims != [n, o, hw, hw] {
+                return Err(format!("dims {:?}", a.dims));
+            }
+            all_close(&b.data, &a.data, 1e-4, 1e-4)?;
+            all_close(&d.data, &a.data, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
     fn wino_adder_differs_from_direct_adder() {
         // no distributive law for l1: Eq. 9 != Eq. 1
         let mut rng = Rng::new(4);
@@ -441,6 +721,27 @@ mod tests {
         let ya = crate::nn::adder::adder_conv2d(&x, &w, 1);
         let yw = winograd_adder_conv2d(&x, &w_hat, 1, Variant::Balanced(0));
         let max_diff = ya.data.iter().zip(&yw.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff > 1e-2, "expected inequality, max diff {max_diff}");
+    }
+
+    #[test]
+    fn f4_wino_adder_differs_from_f2_wino_adder() {
+        // the two transform domains are not interconvertible for the
+        // adder form: transforming the same spatial weights into each
+        // domain yields different forward functions
+        let mut rng = Rng::new(6);
+        let x = Tensor::randn(&mut rng, [1, 3, 8, 8]);
+        let w = Tensor::randn(&mut rng, [2, 3, 3, 3]);
+        let v = Variant::Balanced(0);
+        let w2 = Tensor::from_vec(transform_weights(&w, v), [2, 3, 4, 4]);
+        let w4 = Tensor::from_vec(transform_weights_f4(&w, v),
+                                  [2, 3, 6, 6]);
+        let y2 = winograd_adder_conv2d(&x, &w2, 1, v);
+        let y4 = winograd_adder_conv2d(&x, &w4, 1, v);
+        assert_eq!(y2.dims, y4.dims);
+        let max_diff = y2.data.iter().zip(&y4.data)
             .map(|(a, b)| (a - b).abs())
             .fold(0f32, f32::max);
         assert!(max_diff > 1e-2, "expected inequality, max diff {max_diff}");
@@ -505,17 +806,55 @@ mod tests {
     }
 
     #[test]
-    fn pm_weight_repack_is_the_transpose() {
-        let (o, c) = (3usize, 2usize);
-        let flat: Vec<f32> = (0..o * c * 16).map(|i| i as f32).collect();
-        let mut pm = Vec::new();
-        repack_weights_pm(&flat, o, c, &mut pm);
-        assert_eq!(pm.len(), flat.len());
-        for p in 0..16 {
-            for oc in 0..o {
+    fn pm_tiles_f4_are_a_permutation_of_tile_major() {
+        property(15, |g| {
+            let n = g.usize_in(1, 2);
+            let c = g.usize_in(1, 4);
+            let hw = 4 * g.usize_in(1, 3);
+            let pad = 1;
+            let seed = g.usize_in(0, 1 << 30) as u64;
+            let mut rng = Rng::new(seed);
+            let x = Tensor::randn(&mut rng, [n, c, hw, hw]);
+            let v = *g.choose(&[Variant::Std, Variant::Balanced(0),
+                                Variant::Balanced(3)]);
+            let (wn, wth, wtw) =
+                tile_geometry_for(x.dims, pad, TileSize::F4);
+            let t = wn * wth * wtw;
+            let mut want = vec![0f32; t * c * 36];
+            input_tiles_f4_into(&x, pad, v, &mut want);
+            let mut pm = vec![f32::NAN; want.len()];
+            input_tiles_pm_f4_into(&x, pad, v, &mut pm);
+            for ti in 0..t {
                 for ic in 0..c {
-                    assert_eq!(pm[(p * o + oc) * c + ic],
-                               flat[(oc * c + ic) * 16 + p]);
+                    for p in 0..36 {
+                        let a = pm[(p * c + ic) * t + ti];
+                        let b = want[(ti * c + ic) * 36 + p];
+                        if a != b {
+                            return Err(format!(
+                                "({ti},{ic},{p}): {a} vs {b}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pm_weight_repack_is_the_transpose() {
+        for points in [16usize, 36] {
+            let (o, c) = (3usize, 2usize);
+            let flat: Vec<f32> =
+                (0..o * c * points).map(|i| i as f32).collect();
+            let mut pm = Vec::new();
+            repack_weights_pm(&flat, o, c, &mut pm);
+            assert_eq!(pm.len(), flat.len());
+            for p in 0..points {
+                for oc in 0..o {
+                    for ic in 0..c {
+                        assert_eq!(pm[(p * o + oc) * c + ic],
+                                   flat[(oc * c + ic) * points + p]);
+                    }
                 }
             }
         }
@@ -548,12 +887,33 @@ mod tests {
     #[test]
     fn untile_into_matches_untile() {
         let mut rng = Rng::new(17);
-        let (n, o, th, tw) = (2usize, 3usize, 2usize, 3usize);
-        let y = rng.normal_vec(n * th * tw * o * 4);
-        let want = untile(&y, n, o, th, tw);
-        let mut got = vec![f32::NAN; want.data.len()];
-        untile_into(&y, n, o, th, tw, &mut got);
-        assert_eq!(got, want.data);
+        for tile in TileSize::ALL {
+            let (n, o, th, tw) = (2usize, 3usize, 2usize, 3usize);
+            let g = TileGrid::new(n, o, th, tw, tile);
+            let y = rng.normal_vec(n * th * tw * o * g.q());
+            let want = untile(&y, g);
+            assert_eq!(want.data.len(), g.out_len());
+            let mut got = vec![f32::NAN; want.data.len()];
+            untile_into(&y, g, &mut got);
+            assert_eq!(got, want.data);
+        }
+    }
+
+    #[test]
+    fn untile_f4_positions() {
+        // one sample, one channel, 1x2 tile grid at r = 4: tile 0
+        // fills columns 0..4, tile 1 fills columns 4..8
+        let g = TileGrid::new(1, 1, 1, 2, TileSize::F4);
+        let y: Vec<f32> = (0..2 * 16).map(|i| i as f32).collect();
+        let out = untile(&y, g);
+        assert_eq!(out.dims, [1, 1, 4, 8]);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(out.data[i * 8 + j], (i * 4 + j) as f32);
+                assert_eq!(out.data[i * 8 + 4 + j],
+                           (16 + i * 4 + j) as f32);
+            }
+        }
     }
 
     #[test]
@@ -563,5 +923,9 @@ mod tests {
         let (d_hat, n, th, tw) = input_tiles(&x, Variant::Std);
         assert_eq!((n, th, tw), (1, 2, 2));
         assert_eq!(d_hat.len(), 4 * 16);
+        // F4 geometry on the same input: one 6x6 tile, no padding
+        assert_eq!(tile_geometry_for(x.dims, 0, TileSize::F4), (1, 1, 1));
+        assert_eq!(tile_geometry_for([1, 1, 8, 8], 1, TileSize::F4),
+                   (1, 2, 2));
     }
 }

@@ -14,6 +14,21 @@
 //! * Winograd adder (Eq. 10): #Add = T * (Co*Ci*32 + Ci*3 + Co*8)
 //! * Winograd applies to stride-1 3x3 layers only; stride-2 3x3 and 1x1
 //!   shortcut layers fall back to the direct form of the same family.
+//!
+//! The F(4x4,3x3) rows extend the same conventions to the 6x6-point
+//! tiling (the paper's Table 1 is F(2x2,3x3) only, so these are ours,
+//! marked by [`LayerSpec::tile`]): per tile T4 = ceil(Xh/4)*ceil(Xw/4)
+//! with 36 transform points,
+//!
+//! * Winograd conv F4:  #Mul = T4 * Co*Ci*36,
+//!                      #Add = T4 * (Co*Ci*36 + Ci*192 + Co*140)
+//! * Winograd adder F4: #Add = T4 * (Co*Ci*72 + Ci*192 + Co*140)
+//!
+//! where `Ci*192` counts the 6x6 nested input transform and `Co*140`
+//! the 6x6 -> 4x4 output transform, per tile, mirroring the
+//! per-channel-plus-per-output split of the F2 terms.
+
+use crate::nn::matrices::TileSize;
 
 /// One counted layer.
 #[derive(Debug, Clone)]
@@ -27,6 +42,10 @@ pub struct LayerSpec {
     pub k: usize,
     /// stride of this layer (1 or 2)
     pub stride: usize,
+    /// Winograd tile size counted for this layer (ignored unless
+    /// [`LayerSpec::winogradable`]); Table 1 reproduction uses
+    /// [`TileSize::F2`]
+    pub tile: TileSize,
 }
 
 impl LayerSpec {
@@ -41,9 +60,10 @@ impl LayerSpec {
     }
 
     fn tiles(&self) -> u64 {
-        // F(2x2,3x3) covers the output in 2x2 patches; odd extents get a
-        // padded final tile (round up)
-        (self.out_hw.div_ceil(2) * self.out_hw.div_ceil(2)) as u64
+        // the tile covers the output in r x r patches (r = 2 or 4);
+        // ragged extents get a padded final tile (round up)
+        let r = self.tile.out();
+        (self.out_hw.div_ceil(r) * self.out_hw.div_ceil(r)) as u64
     }
 }
 
@@ -95,9 +115,15 @@ pub fn count_layer(l: &LayerSpec, mode: Mode) -> OpCount {
         Mode::AdderNet => OpCount { muls: 0, adds: 2 * mac },
         Mode::WinogradCnn => {
             if l.winogradable() {
-                OpCount {
-                    muls: t * co * ci * 16,
-                    adds: t * (co * ci * 16 + ci * 3 + co * 8),
+                match l.tile {
+                    TileSize::F2 => OpCount {
+                        muls: t * co * ci * 16,
+                        adds: t * (co * ci * 16 + ci * 3 + co * 8),
+                    },
+                    TileSize::F4 => OpCount {
+                        muls: t * co * ci * 36,
+                        adds: t * (co * ci * 36 + ci * 192 + co * 140),
+                    },
                 }
             } else {
                 OpCount { muls: mac, adds: mac }
@@ -105,9 +131,15 @@ pub fn count_layer(l: &LayerSpec, mode: Mode) -> OpCount {
         }
         Mode::WinogradAdderNet => {
             if l.winogradable() {
-                OpCount {
-                    muls: 0,
-                    adds: t * (co * ci * 32 + ci * 3 + co * 8),
+                match l.tile {
+                    TileSize::F2 => OpCount {
+                        muls: 0,
+                        adds: t * (co * ci * 32 + ci * 3 + co * 8),
+                    },
+                    TileSize::F4 => OpCount {
+                        muls: 0,
+                        adds: t * (co * ci * 72 + ci * 192 + co * 140),
+                    },
                 }
             } else {
                 OpCount { muls: 0, adds: 2 * mac }
@@ -141,15 +173,18 @@ pub fn resnet_cifar(nb: usize) -> Vec<LayerSpec> {
             out.push(LayerSpec {
                 name: format!("s{s}b{b}c1"),
                 cin: cprev, cout: c, out_hw: hw, k: 3, stride,
+                tile: TileSize::F2,
             });
             out.push(LayerSpec {
                 name: format!("s{s}b{b}c2"),
                 cin: c, cout: c, out_hw: hw, k: 3, stride: 1,
+                tile: TileSize::F2,
             });
             if stride == 2 {
                 out.push(LayerSpec {
                     name: format!("s{s}b{b}proj"),
                     cin: cprev, cout: c, out_hw: hw, k: 1, stride: 2,
+                    tile: TileSize::F2,
                 });
             }
             cprev = c;
@@ -178,15 +213,18 @@ pub fn resnet18_imagenet() -> Vec<LayerSpec> {
             out.push(LayerSpec {
                 name: format!("s{s}b{b}c1"),
                 cin: cprev, cout: c, out_hw: hw, k: 3, stride,
+                tile: TileSize::F2,
             });
             out.push(LayerSpec {
                 name: format!("s{s}b{b}c2"),
                 cin: c, cout: c, out_hw: hw, k: 3, stride: 1,
+                tile: TileSize::F2,
             });
             if stride == 2 {
                 out.push(LayerSpec {
                     name: format!("s{s}b{b}proj"),
                     cin: cprev, cout: c, out_hw: hw, k: 1, stride: 2,
+                    tile: TileSize::F2,
                 });
             }
             cprev = c;
@@ -201,9 +239,11 @@ pub fn resnet18_imagenet() -> Vec<LayerSpec> {
 pub fn lenet_3x3(image: usize) -> Vec<LayerSpec> {
     vec![
         LayerSpec { name: "l2".into(), cin: 8, cout: 16,
-                    out_hw: image / 2, k: 3, stride: 1 },
+                    out_hw: image / 2, k: 3, stride: 1,
+                    tile: TileSize::F2 },
         LayerSpec { name: "l3".into(), cin: 16, cout: 16,
-                    out_hw: image / 4, k: 3, stride: 1 },
+                    out_hw: image / 4, k: 3, stride: 1,
+                    tile: TileSize::F2 },
     ]
 }
 
@@ -219,10 +259,12 @@ pub fn resnet20_lite() -> Vec<LayerSpec> {
             out.push(LayerSpec {
                 name: format!("s{s}b{b}c1"),
                 cin: cprev, cout: c, out_hw: hw, k: 3, stride,
+                tile: TileSize::F2,
             });
             out.push(LayerSpec {
                 name: format!("s{s}b{b}c2"),
                 cin: c, cout: c, out_hw: hw, k: 3, stride: 1,
+                tile: TileSize::F2,
             });
             cprev = c;
         }
@@ -274,16 +316,40 @@ mod tests {
     fn winograd_saves_roughly_5_9ths() {
         // Eq. 11 vs Eq. 12: ratio -> 4/9 for all-stride-1 bodies
         let l = LayerSpec { name: "x".into(), cin: 64, cout: 64,
-                            out_hw: 32, k: 3, stride: 1 };
+                            out_hw: 32, k: 3, stride: 1,
+                            tile: TileSize::F2 };
         let a = count_layer(&l, Mode::AdderNet).adds as f64;
         let w = count_layer(&l, Mode::WinogradAdderNet).adds as f64;
         assert!((w / a - 4.0 / 9.0).abs() < 0.01, "{}", w / a);
     }
 
     #[test]
+    fn f4_reduces_adds_further_than_f2() {
+        let f2 = LayerSpec { name: "x".into(), cin: 64, cout: 64,
+                             out_hw: 32, k: 3, stride: 1,
+                             tile: TileSize::F2 };
+        let f4 = LayerSpec { tile: TileSize::F4, ..f2.clone() };
+        let a2 = count_layer(&f2, Mode::WinogradAdderNet);
+        let a4 = count_layer(&f4, Mode::WinogradAdderNet);
+        // the module-doc convention, spelled out: 256 vs 64 tiles
+        assert_eq!(a2.adds, 33_734_656);
+        assert_eq!(a4.adds, 20_234_240);
+        assert!(a4.adds < a2.adds);
+        assert_eq!(a4.muls, 0);
+        // the CNN F4 row trades adds for more muls per point
+        let c4 = count_layer(&f4, Mode::WinogradCnn);
+        assert_eq!(c4.muls, 64 * (64 * 64 * 36));
+        // non-winogradable layers ignore the tile entirely
+        let p4 = LayerSpec { k: 1, stride: 2, ..f4 };
+        assert_eq!(count_layer(&p4, Mode::WinogradAdderNet),
+                   count_layer(&p4, Mode::AdderNet));
+    }
+
+    #[test]
     fn non_winogradable_fall_back() {
         let l = LayerSpec { name: "p".into(), cin: 16, cout: 32,
-                            out_hw: 16, k: 1, stride: 2 };
+                            out_hw: 16, k: 1, stride: 2,
+                            tile: TileSize::F2 };
         assert!(!l.winogradable());
         assert_eq!(count_layer(&l, Mode::WinogradAdderNet),
                    count_layer(&l, Mode::AdderNet));
@@ -294,7 +360,8 @@ mod tests {
     #[test]
     fn cnn_counts_are_macs() {
         let l = LayerSpec { name: "x".into(), cin: 2, cout: 3,
-                            out_hw: 4, k: 3, stride: 1 };
+                            out_hw: 4, k: 3, stride: 1,
+                            tile: TileSize::F2 };
         let c = count_layer(&l, Mode::Cnn);
         assert_eq!(c.muls, 2 * 3 * 9 * 16);
         assert_eq!(c.adds, c.muls);

@@ -159,6 +159,28 @@ fn alloc_rule_respects_hot_path_markers() {
 }
 
 #[test]
+fn alloc_rule_covers_the_transform_and_quant_modules() {
+    // nn/wino_adder.rs and nn/quant.rs joined the hot-path list with
+    // the F4 kernel wave: their marker-scoped kernel regions must
+    // fire, their alloc-returning convenience wrappers must not
+    let src = "pub fn winograd_oracle(x: &[f32]) -> Vec<f32> {\n\
+               \x20   x.to_vec()\n\
+               }\n\
+               // lint:hot-path(begin) per-request transform kernels\n\
+               pub fn input_tiles_into(y: &mut [f32]) {\n\
+               \x20   let scratch = vec![0f32; 36];\n\
+               \x20   y[0] = scratch[0];\n\
+               }\n\
+               // lint:hot-path(end)\n";
+    for path in ["src/nn/wino_adder.rs", "src/nn/quant.rs"] {
+        let f = lint_source(path, src);
+        assert_eq!(rules(&f), ["no-alloc-hot-path"], "{path}: {f:?}");
+        assert_eq!(f[0].line, 6,
+                   "{path}: only the marked region fires: {f:?}");
+    }
+}
+
+#[test]
 fn alloc_rule_exempts_cfg_test() {
     let src = "#[cfg(test)]\n\
                mod tests {\n\

@@ -197,6 +197,182 @@ fn thread_count_does_not_change_f32_results() {
     }
 }
 
+/// Random F(4x4,3x3) case: weights carry trailing `(6, 6)` so every
+/// forward routes through the F4 kernels, and `hw` is a multiple of 4
+/// so the padded extent satisfies the F4 admissibility rule
+/// (`(hp - 2) % 4 == 0`).
+fn random_case_f4(g: &mut wino_adder::util::testkit::Gen)
+                  -> (Tensor, Tensor, Variant) {
+    let n = g.usize_in(1, 2);
+    let c = g.usize_in(1, 6);
+    let hw = 4 * g.usize_in(1, 3);
+    let o = g.usize_in(1, 6);
+    let seed = g.usize_in(0, 1 << 30) as u64;
+    let mut rng = Rng::new(seed);
+    let x = Tensor::randn(&mut rng, [n, c, hw, hw]);
+    let w_hat = Tensor::randn(&mut rng, [o, c, 6, 6]);
+    let v = *g.choose(&[Variant::Std, Variant::Balanced(0),
+                        Variant::Balanced(1), Variant::Balanced(2),
+                        Variant::Balanced(3)]);
+    (x, w_hat, v)
+}
+
+/// F4 twin of `parallel_matches_naive_oracle_property`: the 36-point
+/// kernels must match the tile-generic naive oracle for both kernel
+/// families across 1, 2, and 8 threads.
+#[test]
+fn f4_parallel_matches_naive_oracle_property() {
+    for kernel in KernelKind::ALL {
+        for threads in [1usize, 2, 8] {
+            let be = ParallelBackend::with_kernel(threads, kernel);
+            property(10, |g| {
+                let (x, w_hat, v) = random_case_f4(g);
+                let want = winograd_adder_conv2d(&x, &w_hat, 1, v);
+                let got = be.forward(&x, &w_hat, 1, v);
+                if got.dims != want.dims {
+                    return Err(format!("dims {:?} vs {:?}", got.dims,
+                                       want.dims));
+                }
+                all_close(&got.data, &want.data, 1e-4, 1e-4)
+                    .map_err(|e| format!("f4 {} x{threads}: {e}",
+                                         kernel.name()))
+            });
+        }
+    }
+}
+
+/// F4 twin of `scalar_matches_naive_oracle_property`.
+#[test]
+fn f4_scalar_matches_naive_oracle_property() {
+    for kernel in KernelKind::ALL {
+        let be = ScalarBackend::new(kernel);
+        property(12, |g| {
+            let (x, w_hat, v) = random_case_f4(g);
+            let want = winograd_adder_conv2d(&x, &w_hat, 1, v);
+            let got = be.forward(&x, &w_hat, 1, v);
+            all_close(&got.data, &want.data, 1e-4, 1e-4)
+                .map_err(|e| format!("f4 {}: {e}", kernel.name()))
+        });
+    }
+}
+
+/// F4 twin of `parallel_int8_matches_quant_reference_property`: the
+/// int8 F4 pipeline is still exact integer arithmetic, so sharding and
+/// kernel family must reproduce the sequential reference bit-for-bit.
+#[test]
+fn f4_parallel_int8_matches_quant_reference_property() {
+    for kernel in KernelKind::ALL {
+        for threads in [1usize, 2, 8] {
+            let be = ParallelInt8Backend::with_kernel(threads, kernel);
+            property(10, |g| {
+                let (x, w_hat, v) = random_case_f4(g);
+                let qx = QTensor::from_f32(&x);
+                let wq = quantize_wino_weights(&w_hat, qx.qp.scale);
+                let (want_i, want_dims, _) =
+                    winograd_adder_conv2d_i8(&qx, &wq, w_hat.dims, 1,
+                                             v);
+                let (got_i, dims) =
+                    be.forward_i8(&qx, &wq, w_hat.dims, 1, v);
+                if dims != want_dims {
+                    return Err(format!("dims {dims:?} vs \
+                                        {want_dims:?}"));
+                }
+                if got_i != want_i {
+                    let bad = got_i.iter().zip(&want_i)
+                        .position(|(a, b)| a != b);
+                    return Err(format!(
+                        "f4 {} x{threads}: int mismatch at {bad:?}",
+                        kernel.name()));
+                }
+                Ok(())
+            });
+        }
+    }
+}
+
+/// F4 across the serving buckets {1, 4, 16}: every backend and kernel
+/// family agrees with the naive F4 oracle. The int8 backend is pinned
+/// bit-exact to its dequantized sequential reference instead of an
+/// f32 tolerance — the F4 transforms amplify quantization noise too
+/// much for a tight float bound to be meaningful.
+#[test]
+fn f4_all_backends_match_oracle_across_buckets() {
+    let mut rng = Rng::new(59);
+    let (c, o, hw) = (3usize, 4usize, 8usize);
+    let w_hat = Tensor::randn(&mut rng, [o, c, 6, 6]);
+    for bucket in [1usize, 4, 16] {
+        let x = Tensor::randn(&mut rng, [bucket, c, hw, hw]);
+        let want = winograd_adder_conv2d(&x, &w_hat, 1,
+                                         Variant::Balanced(0));
+        let want_q: Vec<f32> = {
+            let qx = QTensor::from_f32(&x);
+            let wq = quantize_wino_weights(&w_hat, qx.qp.scale);
+            let (qi, _, scale) = winograd_adder_conv2d_i8(
+                &qx, &wq, w_hat.dims, 1, Variant::Balanced(0));
+            qi.iter().map(|&q| q as f32 * scale).collect()
+        };
+        for kind in BackendKind::ALL {
+            for kernel in KernelKind::ALL {
+                let be = kind.build_with(3, kernel);
+                let got =
+                    be.forward(&x, &w_hat, 1, Variant::Balanced(0));
+                assert_eq!(got.dims, want.dims, "f4 b{bucket} {} {}",
+                           kind.name(), kernel.name());
+                if kind == BackendKind::ParallelInt8 {
+                    assert_eq!(got.data, want_q,
+                               "f4 b{bucket} {} {}: int8 diverged \
+                                from dequantized reference",
+                               kind.name(), kernel.name());
+                } else {
+                    for (a, b) in got.data.iter().zip(&want.data) {
+                        assert!((a - b).abs() < 1e-3,
+                                "f4 b{bucket} {} {}: {a} vs {b}",
+                                kind.name(), kernel.name());
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// F4 twin of `int8_kernel_families_are_bit_identical`.
+#[test]
+fn f4_int8_kernel_families_are_bit_identical() {
+    let mut rng = Rng::new(67);
+    let x = Tensor::randn(&mut rng, [2, 5, 12, 12]);
+    let w_hat = Tensor::randn(&mut rng, [4, 5, 6, 6]);
+    let qx = QTensor::from_f32(&x);
+    let wq = quantize_wino_weights(&w_hat, qx.qp.scale);
+    let legacy = ParallelInt8Backend::with_kernel(3, KernelKind::Legacy)
+        .forward_i8(&qx, &wq, w_hat.dims, 1, Variant::Balanced(3));
+    let pm =
+        ParallelInt8Backend::with_kernel(3, KernelKind::PointMajor)
+            .forward_i8(&qx, &wq, w_hat.dims, 1, Variant::Balanced(3));
+    assert_eq!(legacy, pm);
+}
+
+/// F4 twin of `thread_count_does_not_change_f32_results`: hw=12 gives
+/// 3x3 tiles per image x n=2 = 18 tiles, more than any worker count
+/// below, so sharding stays tile-only and f32 bits are preserved.
+#[test]
+fn f4_thread_count_does_not_change_f32_results() {
+    let mut rng = Rng::new(127);
+    let x = Tensor::randn(&mut rng, [2, 7, 12, 12]);
+    let w_hat = Tensor::randn(&mut rng, [5, 7, 6, 6]);
+    for kernel in KernelKind::ALL {
+        let base = ParallelBackend::with_kernel(1, kernel)
+            .forward(&x, &w_hat, 1, Variant::Std);
+        for threads in [2usize, 3, 8] {
+            let got = ParallelBackend::with_kernel(threads, kernel)
+                .forward(&x, &w_hat, 1, Variant::Std);
+            assert_eq!(got.data, base.data,
+                       "f4 {} sharding changed f32 bits at {threads} \
+                        threads",
+                       kernel.name());
+        }
+    }
+}
+
 /// More workers than tiles: the point-major grid splits the transform-
 /// point axis. f32 results stay within kernel tolerance of the oracle
 /// and the int8 path stays bit-exact.

@@ -6,10 +6,10 @@
 //! must be observable (stable footprint, identical outputs across
 //! consecutive runs on one plan).
 
-use wino_adder::nn::backend::{Backend, BackendKind};
-use wino_adder::nn::matrices::Variant;
+use wino_adder::nn::backend::{Backend, BackendKind, KernelChoice};
+use wino_adder::nn::matrices::{TileChoice, TileSize, Variant};
 use wino_adder::nn::model::{LayerKind, ModelSpec, ModelWeights};
-use wino_adder::nn::plan::ModelPlan;
+use wino_adder::nn::plan::{ModelPlan, TuneMode};
 use wino_adder::nn::Tensor;
 use wino_adder::util::rng::Rng;
 use wino_adder::util::testkit::{all_close, property};
@@ -23,9 +23,11 @@ fn compose_naive(spec: &ModelSpec, weights: &ModelWeights,
     for (i, l) in spec.layers.iter().enumerate() {
         let p = &weights.params[i];
         match *l {
-            LayerKind::WinoAdder3x3 { cin, cout, pad, variant } => {
+            LayerKind::WinoAdder3x3 { cin, cout, pad, variant,
+                                      tile } => {
+                let ts = tile.tile();
                 let w_hat = Tensor::from_vec(p.data.clone(),
-                                             [cout, cin, 4, 4]);
+                                             [cout, cin, ts, ts]);
                 cur = backend.forward(&cur, &w_hat, pad, variant);
             }
             LayerKind::DirectAdder1x1 { cin, cout } => {
@@ -85,16 +87,20 @@ fn three_layer_spec(cin: usize, hw: usize, v: Variant) -> ModelSpec {
         in_channels: cin,
         hw,
         layers: vec![
-            LayerKind::WinoAdder3x3 { cin, cout: 4, pad: 1, variant: v },
+            LayerKind::WinoAdder3x3 {
+                cin, cout: 4, pad: 1, variant: v, tile: TileSize::F2,
+            },
             LayerKind::ScaleShift { channels: 4 },
             LayerKind::Relu,
             LayerKind::DirectAdder1x1 { cin: 4, cout: 5 },
             LayerKind::WinoAdder3x3 {
                 cin: 5, cout: 3, pad: 1, variant: v,
+                tile: TileSize::F2,
             },
             LayerKind::ScaleShift { channels: 3 },
             LayerKind::WinoAdder3x3 {
                 cin: 3, cout: 2, pad: 1, variant: v,
+                tile: TileSize::F2,
             },
         ],
     }
@@ -164,6 +170,111 @@ fn workspace_reuse_is_pure_and_footprint_stable() {
                    "{}: state leaked across requests", kind.name());
         assert_eq!(plan.workspace_footprint(), fp,
                    "{}: workspace grew after warmup", kind.name());
+    }
+}
+
+/// F4 twin of the acceptance property: re-tile the same stack to
+/// F(4x4,3x3) (`hw = 8` is admissible — `hp = 10`, `(hp-2) % 4 == 0`)
+/// and the plan must still equal the naive composition on every
+/// backend at every bucket.
+#[test]
+fn f4_plan_matches_naive_composition_all_backends_and_buckets() {
+    for kind in BackendKind::ALL {
+        let backend = kind.build(3);
+        for v in [Variant::Std, Variant::Balanced(2)] {
+            let spec = three_layer_spec(2, 8, v)
+                .with_tile(TileChoice::Fixed(TileSize::F4));
+            let weights = ModelWeights::init(&spec, 21);
+            for bucket in [1usize, 4, 16] {
+                let mut plan =
+                    ModelPlan::compile(&spec, &weights, bucket)
+                        .unwrap();
+                let mut rng = Rng::new(21 ^ bucket as u64);
+                let x = rng.normal_vec(plan.in_len());
+                let got =
+                    plan.forward(backend.as_ref(), &x).to_vec();
+                let want = compose_naive(
+                    &spec, &weights, backend.as_ref(),
+                    Tensor::from_vec(x, [bucket, 2, 8, 8]));
+                all_close(&got, &want.data, 1e-4, 1e-4)
+                    .unwrap_or_else(|e| panic!("f4 {} b{bucket}: {e}",
+                                               kind.name()));
+            }
+        }
+    }
+}
+
+/// `--tune off` is fully deterministic: repeated compiles produce the
+/// same kernel-choice table, every entry comes from the per-tile
+/// fallback (`KernelChoice::for_tile`) or the non-Winograd default,
+/// and no tuning report is attached.
+#[test]
+fn tune_off_choices_are_the_deterministic_fallback_table() {
+    let backend = BackendKind::Parallel.build(2);
+    for tile in TileSize::ALL {
+        let spec = three_layer_spec(2, 8, Variant::Balanced(1))
+            .with_tile(TileChoice::Fixed(tile));
+        let weights = ModelWeights::init(&spec, 5);
+        let compile = || {
+            ModelPlan::compile_buckets_tuned(
+                &spec, &weights, &[1, 4], TuneMode::Off,
+                backend.as_ref()).unwrap()
+        };
+        let a = compile();
+        let b = compile();
+        for ((ba, pa), (bb, pb)) in a.iter().zip(&b) {
+            assert_eq!(ba, bb);
+            assert_eq!(pa.kernel_choices(), pb.kernel_choices(),
+                       "tune=off recompile changed choices ({tile:?})");
+            assert!(pa.tune_report().is_empty()
+                        && pb.tune_report().is_empty(),
+                    "tune=off must not attach a tuning report");
+            assert!(pa.kernel_choices().iter().all(
+                        |c| *c == KernelChoice::default()
+                            || *c == KernelChoice::for_tile(tile)),
+                    "unexpected non-fallback choice ({tile:?})");
+        }
+    }
+}
+
+/// Tuning only picks performance knobs. A `TuneMode::On` plan still
+/// matches the naive composition, its report covers every Winograd
+/// step with the full candidate grid, and the footprint measured right
+/// after tuned compile is already steady-state — tuning doubles as the
+/// workspace warmup, so serving never grows the buffers again.
+#[test]
+fn tuned_plan_is_equivalent_and_footprint_frozen() {
+    let backend = BackendKind::Parallel.build(2);
+    for tile in TileSize::ALL {
+        let spec = three_layer_spec(2, 8, Variant::Balanced(0))
+            .with_tile(TileChoice::Fixed(tile));
+        let weights = ModelWeights::init(&spec, 11);
+        let mut plans = ModelPlan::compile_buckets_tuned(
+            &spec, &weights, &[4], TuneMode::On, backend.as_ref())
+            .unwrap();
+        let (_, plan) = &mut plans[0];
+        assert_eq!(plan.tune_report().len(), 3,
+                   "three Winograd steps must be tuned ({tile:?})");
+        for e in plan.tune_report() {
+            assert_eq!(e.candidates.len(), 4,
+                       "full candidate grid timed ({tile:?})");
+            assert_eq!(e.choice.tile, tile);
+            assert!(e.secs.is_finite() && e.secs >= 0.0);
+        }
+        let fp = plan.workspace_footprint();
+        assert!(fp > 0);
+        let mut rng = Rng::new(4);
+        let x = rng.normal_vec(plan.in_len());
+        let got = plan.forward(backend.as_ref(), &x).to_vec();
+        let want = compose_naive(&spec, &weights, backend.as_ref(),
+                                 Tensor::from_vec(x.clone(),
+                                                  [4, 2, 8, 8]));
+        all_close(&got, &want.data, 1e-4, 1e-4)
+            .unwrap_or_else(|e| panic!("tuned {tile:?}: {e}"));
+        let again = plan.forward(backend.as_ref(), &x).to_vec();
+        assert_eq!(got, again, "tuned plan must stay deterministic");
+        assert_eq!(plan.workspace_footprint(), fp,
+                   "workspace grew after tuned warmup ({tile:?})");
     }
 }
 
