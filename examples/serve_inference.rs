@@ -94,10 +94,15 @@ fn drive(engine: Engine, n: usize, clients: usize, label: &str)
     let elapsed = blast(engine.handle(), n, clients)?;
     let stats = engine.stop()?;
     let served = (n / clients * clients) as f64;
+    let buckets: Vec<(usize, u64)> = stats
+        .per_bucket
+        .iter()
+        .map(|b| (b.bucket, b.batches))
+        .collect();
     println!("{label}:");
-    println!("  {:.0} req/s | {} | per-bucket {:?}",
-             served / elapsed, stats.latency_summary, stats.per_bucket);
-    Ok((served / elapsed, stats.p50_us))
+    println!("  {:.0} req/s | {} | per-bucket batches {:?}",
+             served / elapsed, stats.latency, buckets);
+    Ok((served / elapsed, stats.latency.p50_us))
 }
 
 fn summarize(results: &[(&str, f64, u64)]) {
@@ -129,11 +134,16 @@ fn pjrt_scenario(args: &Args, n: usize, clients: usize) -> Result<()> {
         let stats = handle.stop()?;
         join.join().map_err(|_| anyhow!("engine panicked"))?;
         let served = (n / clients * clients) as f64;
+        let buckets: Vec<(usize, u64)> = stats
+            .per_bucket
+            .iter()
+            .map(|b| (b.bucket, b.batches))
+            .collect();
         println!("{label}:");
-        println!("  {:.0} req/s | {} | per-bucket {:?}",
-                 served / elapsed, stats.latency_summary,
-                 stats.per_bucket);
-        results.push((label, served / elapsed, stats.p50_us));
+        println!("  {:.0} req/s | {} | per-bucket batches {:?}",
+                 served / elapsed, stats.latency, buckets);
+        results.push((label, served / elapsed,
+                      stats.latency.p50_us));
     }
     println!("\n=== summary ===");
     for (label, rps, p50) in &results {

@@ -10,7 +10,7 @@
 //! Finishes with a **multi-layer serving sweep** (model depth x engine
 //! threads) through the planned executor (an `engine::EngineBuilder`
 //! hosting a `ModelSpec::stack`), writing requests/sec and p50/p99
-//! latency (from `coordinator::metrics` via `ServerStats`) to
+//! latency (from `coordinator::metrics` via `MetricsSnapshot`) to
 //! `BENCH_serving.json`.
 //!
 //! Run: `cargo bench --bench backend_scaling`
@@ -225,22 +225,23 @@ fn serving_sweep(args: &Args, cores: usize) {
             }
             let elapsed = t0.elapsed().as_secs_f64();
             let stats = engine.stop().expect("stats");
-            let rps = stats.served as f64 / elapsed;
+            let rps = stats.server.served as f64 / elapsed;
             println!("  depth {depth} x {threads}t: {rps:7.0} req/s, \
                       p50 {}us, p99 {}us, {} batches",
-                     stats.p50_us, stats.p99_us, stats.batches);
+                     stats.latency.p50_us, stats.latency.p99_us,
+                     stats.server.batches);
             let mut row = BTreeMap::new();
             row.insert("depth".into(), Json::Num(depth as f64));
             row.insert("threads".into(), Json::Num(threads as f64));
             row.insert("requests".into(),
-                       Json::Num(stats.served as f64));
+                       Json::Num(stats.server.served as f64));
             row.insert("batches".into(),
-                       Json::Num(stats.batches as f64));
+                       Json::Num(stats.server.batches as f64));
             row.insert("req_per_s".into(), Json::Num(rps));
             row.insert("p50_us".into(),
-                       Json::Num(stats.p50_us as f64));
+                       Json::Num(stats.latency.p50_us as f64));
             row.insert("p99_us".into(),
-                       Json::Num(stats.p99_us as f64));
+                       Json::Num(stats.latency.p99_us as f64));
             rows.push(Json::Obj(row));
         }
     }

@@ -1,0 +1,614 @@
+//! Ops-plane HTTP sidecar: `/healthz`, `/stats`, `/metrics`, and
+//! `POST /swap` on a std-only HTTP/1.0 server.
+//!
+//! The sidecar is the **observability and control** companion of the
+//! binary wire protocol ([`super::net`]): the data plane speaks
+//! framed TCP, the ops plane speaks just enough HTTP for `curl`,
+//! Prometheus, and load-balancer health checks. Endpoints:
+//!
+//! | Endpoint        | Method | Body                                 |
+//! |-----------------|--------|--------------------------------------|
+//! | `/healthz`      | GET    | `ok` while the engine answers        |
+//! | `/stats`        | GET    | [`MetricsSnapshot::to_json`]         |
+//! | `/metrics`      | GET    | [`MetricsSnapshot::to_prometheus`]   |
+//! | `/swap`         | POST   | `?model=NAME[&version=N]` hot-swap   |
+//!
+//! Both renderings come from the same typed [`MetricsSnapshot`] the
+//! engine thread reports — the sidecar holds no counters of its own
+//! and formats nothing by hand. When a TCP listener is attached
+//! ([`crate::engine::Engine::listen`]), its live [`NetCounters`] are
+//! merged into the snapshot's `net` section.
+//!
+//! The server reuses the TCP front-end's lifecycle shape
+//! ([`super::net::NetServer`]): an acceptor thread, one short-lived
+//! worker thread per connection (ops traffic is one request per
+//! connection — `Connection: close`), a registry of live streams so
+//! [`HttpServer::stop`] can unblock and join everything, and a read
+//! timeout so an idle client cannot pin a worker forever. HTTP
+//! parsing is deliberately minimal: request line + headers, no
+//! bodies, no keep-alive, no chunking — every endpoint is
+//! query-string driven.
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use super::metrics::{MetricsSnapshot, NetCounters};
+use super::server::ServerHandle;
+use crate::util::error::{anyhow, Context, Result};
+use crate::util::json::Json;
+
+/// A client that connects but never completes a request is cut off
+/// after this long, bounding worker-thread lifetime (and therefore
+/// [`HttpServer::stop`] latency).
+const IO_TIMEOUT: std::time::Duration =
+    std::time::Duration::from_secs(5);
+
+/// The `POST /swap` callback: `(model, version)` to the version now
+/// serving, or a human-readable failure. The engine installs one
+/// that closes over its swap context, so the endpoint and
+/// [`crate::engine::Engine::swap_model`] share one implementation;
+/// without a hook the endpoint answers `501 Not Implemented`.
+pub type SwapHook = Box<dyn Fn(&str, Option<u64>)
+                            -> std::result::Result<u64, String>
+                        + Send
+                        + Sync>;
+
+/// Everything a request handler can reach: the serving handle (for
+/// live snapshots), the TCP front-end counters once a listener is
+/// attached, and the optional swap hook. Shared `Arc`-style between
+/// the engine (which wires the net counters in) and the sidecar's
+/// worker threads.
+pub struct OpsState {
+    handle: ServerHandle,
+    /// live TCP front-end counters; `None` until
+    /// [`OpsState::set_net`] (no listener attached yet)
+    net: Mutex<Option<Arc<NetCounters>>>,
+    swap: Option<SwapHook>,
+}
+
+impl OpsState {
+    /// State over a serving handle, with an optional swap hook.
+    pub fn new(handle: ServerHandle, swap: Option<SwapHook>)
+               -> OpsState {
+        OpsState { handle, net: Mutex::new(None), swap }
+    }
+
+    /// Attach the TCP front-end's live counters; from now on
+    /// `/stats` and `/metrics` carry the `net` section.
+    pub fn set_net(&self, counters: Arc<NetCounters>) {
+        // lint:allow(no-panic-serving) poisoning is impossible: the
+        // critical sections here and in snapshot() cannot panic
+        *self.net.lock().unwrap() = Some(counters);
+    }
+
+    /// Live [`MetricsSnapshot`] from the engine thread, TCP
+    /// front-end counters merged in when a listener is attached.
+    pub fn snapshot(&self) -> Result<MetricsSnapshot> {
+        let mut snap = self.handle.stats()?;
+        let net = {
+            // lint:allow(no-panic-serving) poisoning is impossible:
+            // the critical sections on this mutex cannot panic
+            self.net.lock().unwrap().clone()
+        };
+        if let Some(counters) = net {
+            snap.net = Some(counters.snapshot());
+        }
+        Ok(snap)
+    }
+}
+
+/// One materialized HTTP response (status + typed body), produced by
+/// the pure [`respond`] router so dispatch is unit-testable without
+/// sockets.
+struct Response {
+    status: u16,
+    content_type: &'static str,
+    body: String,
+}
+
+impl Response {
+    fn text(status: u16, body: String) -> Response {
+        Response { status, content_type: "text/plain", body }
+    }
+
+    fn json(status: u16, value: Json) -> Response {
+        let mut body = value.dump();
+        body.push('\n');
+        Response { status, content_type: "application/json", body }
+    }
+
+    /// `{"error": msg}` with the given status.
+    fn error(status: u16, msg: &str) -> Response {
+        let mut o = BTreeMap::new();
+        o.insert("error".to_string(), Json::Str(msg.to_string()));
+        Response::json(status, Json::Obj(o))
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            500 => "Internal Server Error",
+            501 => "Not Implemented",
+            503 => "Service Unavailable",
+            _ => "Error",
+        }
+    }
+}
+
+/// `METHOD TARGET HTTP/x.y` to `(method, target)`; anything else —
+/// wrong field count, version not `HTTP/`-prefixed — is malformed
+/// (answered `400`).
+fn parse_request_line(line: &str) -> Option<(&str, &str)> {
+    let mut parts = line.split_whitespace();
+    let method = parts.next()?;
+    let target = parts.next()?;
+    let version = parts.next()?;
+    if parts.next().is_some() || !version.starts_with("HTTP/") {
+        return None;
+    }
+    Some((method, target))
+}
+
+/// First `key=value` match in an `a=1&b=2` query string. No
+/// percent-decoding: every accepted parameter value (model names,
+/// versions) is plain ASCII by construction.
+fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query.split('&').find_map(|pair| {
+        let (k, v) = pair.split_once('=')?;
+        (k == key).then_some(v)
+    })
+}
+
+/// Route one parsed request. Pure: no I/O, all state behind
+/// [`OpsState`] — the unit tests drive this directly.
+fn respond(state: &OpsState, method: &str, target: &str)
+           -> Response {
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    match (method, path) {
+        ("GET", "/healthz") => Response::text(200, "ok\n".into()),
+        ("GET", "/stats") => match state.snapshot() {
+            Ok(s) => Response::json(200, s.to_json()),
+            Err(e) => Response::error(503, &format!("{e}")),
+        },
+        ("GET", "/metrics") => match state.snapshot() {
+            Ok(s) => Response::text(200, s.to_prometheus()),
+            Err(e) => Response::error(503, &format!("{e}")),
+        },
+        ("POST", "/swap") => respond_swap(state, query),
+        (_, "/healthz" | "/stats" | "/metrics" | "/swap") => {
+            Response::error(405, "method not allowed")
+        }
+        _ => Response::error(404, "no such endpoint"),
+    }
+}
+
+/// `POST /swap?model=NAME[&version=N]` through the engine's hook.
+fn respond_swap(state: &OpsState, query: &str) -> Response {
+    let Some(hook) = state.swap.as_ref() else {
+        return Response::error(
+            501,
+            "hot-swap is not wired up (start the engine with a \
+             checkpoint store: --store / EngineBuilder::store)");
+    };
+    let Some(model) = query_param(query, "model") else {
+        return Response::error(400,
+                               "missing ?model=<name> parameter");
+    };
+    let version = match query_param(query, "version") {
+        None => None,
+        Some(raw) => match raw.parse::<u64>() {
+            Ok(v) => Some(v),
+            Err(_) => {
+                return Response::error(
+                    400, "version must be an unsigned integer");
+            }
+        },
+    };
+    match hook(model, version) {
+        Ok(v) => {
+            let mut o = BTreeMap::new();
+            o.insert("model".to_string(),
+                     Json::Str(model.to_string()));
+            o.insert("version".to_string(), Json::Num(v as f64));
+            Response::json(200, Json::Obj(o))
+        }
+        Err(e) => Response::error(500, &e),
+    }
+}
+
+/// Read one request off the stream, answer it, close. Hangups and
+/// timeouts before a complete request line go unanswered (there is
+/// nobody left to answer); a garbled request line gets a `400`.
+fn handle_connection(stream: TcpStream, state: &OpsState) {
+    stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
+    stream.set_nodelay(true).ok();
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut line = String::new();
+    let resp = match reader.read_line(&mut line) {
+        Ok(0) | Err(_) => return,
+        Ok(_) => match parse_request_line(line.trim_end()) {
+            Some((method, target)) => {
+                // drain the header block (terminated by a blank
+                // line); request bodies are ignored — every
+                // endpoint is query-string driven
+                let mut hdr = String::new();
+                loop {
+                    hdr.clear();
+                    match reader.read_line(&mut hdr) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) if hdr.trim_end().is_empty() => break,
+                        Ok(_) => {}
+                    }
+                }
+                respond(state, method, target)
+            }
+            None => Response::error(400, "malformed request line"),
+        },
+    };
+    write_response(stream, &resp);
+}
+
+/// Serialize an HTTP/1.0 response; write failures are the client's
+/// problem (it hung up), never the server's.
+fn write_response(mut stream: TcpStream, resp: &Response) {
+    let head = format!(
+        "HTTP/1.0 {} {}\r\nContent-Type: {}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status, resp.reason(), resp.content_type,
+        resp.body.len());
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(resp.body.as_bytes());
+    let _ = stream.flush();
+}
+
+#[derive(Default)]
+struct Registry {
+    next_id: u64,
+    /// live connection streams, for shutdown of blocked reads
+    streams: HashMap<u64, TcpStream>,
+    /// worker join handles (finished ones are reaped as new
+    /// connections arrive)
+    joins: Vec<thread::JoinHandle<()>>,
+}
+
+/// The running sidecar: owns the listener, the acceptor thread, and
+/// every worker. Created with [`HttpServer::start`], torn down with
+/// [`HttpServer::stop`]; the engine stops it before the engine
+/// thread so `/stats` can never race the teardown.
+pub struct HttpServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Registry>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (port 0 for ephemeral, then
+    /// [`addr`](HttpServer::addr)) and start answering.
+    pub fn start(addr: &str, state: Arc<OpsState>)
+                 -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding http {addr}"))?;
+        let local = listener.local_addr().context("local_addr")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Registry>> = Arc::default();
+        let acceptor = {
+            let shutdown = Arc::clone(&shutdown);
+            let conns = Arc::clone(&conns);
+            thread::Builder::new()
+                .name("wino-http-acceptor".into())
+                .spawn(move || {
+                    for stream in listener.incoming() {
+                        // checked after every accept; `stop` wakes a
+                        // blocked accept with a throwaway connection
+                        if shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let stream = match stream {
+                            Ok(s) => s,
+                            Err(_) => {
+                                // e.g. fd exhaustion: back off
+                                // instead of spinning
+                                thread::sleep(
+                                    std::time::Duration::from_millis(
+                                        10));
+                                continue;
+                            }
+                        };
+                        spawn_ops_connection(stream, &state, &conns);
+                    }
+                })
+                .map_err(|e| {
+                    anyhow!("spawning http acceptor: {e}")
+                })?
+        };
+        Ok(HttpServer {
+            addr: local,
+            shutdown,
+            acceptor: Some(acceptor),
+            conns,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, cut off in-flight connections, join all
+    /// threads. In-flight *responses* still flush: workers only
+    /// block on reads, and those are the halves shut down here.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // wake a blocked `accept` so the acceptor observes the flag;
+        // an unspecified bind address (0.0.0.0/::) is not
+        // connectable, so dial loopback on the bound port instead
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                std::net::IpAddr::V4(_) => {
+                    std::net::IpAddr::V4(
+                        std::net::Ipv4Addr::LOCALHOST)
+                }
+                std::net::IpAddr::V6(_) => {
+                    std::net::IpAddr::V6(
+                        std::net::Ipv6Addr::LOCALHOST)
+                }
+            });
+        }
+        let _ = TcpStream::connect_timeout(
+            &wake, std::time::Duration::from_millis(500));
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        let joins = {
+            // lint:allow(no-panic-serving) lock poisoning means a
+            // worker already panicked; aborting shutdown cleanup is
+            // the only sane response
+            let mut reg = self.conns.lock().unwrap();
+            for stream in reg.streams.values() {
+                let _ = stream.shutdown(Shutdown::Read);
+            }
+            std::mem::take(&mut reg.joins)
+        };
+        for j in joins {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Register the stream (so `stop` can cut it off) and answer it on
+/// its own worker thread, reaping finished workers in passing.
+fn spawn_ops_connection(stream: TcpStream, state: &Arc<OpsState>,
+                        conns: &Arc<Mutex<Registry>>) {
+    let Ok(registered) = stream.try_clone() else { return };
+    let conn_id = {
+        // lint:allow(no-panic-serving) registry mutex poisoning is
+        // fatal by design, matching the TCP listener's registry
+        let mut reg = conns.lock().unwrap();
+        let id = reg.next_id;
+        reg.next_id += 1;
+        reg.streams.insert(id, registered);
+        id
+    };
+    let worker = {
+        let state = Arc::clone(state);
+        let conns = Arc::clone(conns);
+        thread::spawn(move || {
+            handle_connection(stream, &state);
+            // lint:allow(no-panic-serving) poisoned registry: this
+            // worker is exiting anyway, propagating is fine
+            conns.lock().unwrap().streams.remove(&conn_id);
+        })
+    };
+    // lint:allow(no-panic-serving) registry mutex poisoning is fatal
+    // by design (see above); accepting cannot continue without it
+    let mut reg = conns.lock().unwrap();
+    reg.joins.retain(|j| !j.is_finished());
+    reg.joins.push(worker);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::server::{HostedModel, Server};
+    use crate::nn::backend::{BackendKind, KernelKind};
+    use crate::nn::matrices::Variant;
+    use crate::nn::model::{ModelSpec, ModelWeights};
+    use crate::nn::plan::TuneMode;
+    use crate::util::rng::Rng;
+
+    /// A live tiny engine with an [`OpsState`] over it.
+    fn ops_fixture(swap: Option<SwapHook>)
+                   -> (Arc<OpsState>, ServerHandle,
+                       thread::JoinHandle<()>) {
+        let spec =
+            ModelSpec::single_layer(2, 3, 8, Variant::Balanced(0));
+        let weights = ModelWeights::init(&spec, 7);
+        let (handle, join) = Server::start_hosted(
+            vec![HostedModel { name: "tiny".into(), spec, weights }],
+            BackendKind::Scalar, 1, KernelKind::default(),
+            TuneMode::Off,
+            BatchPolicy { buckets: vec![1], max_wait_us: 0 })
+            .unwrap();
+        let state = Arc::new(OpsState::new(handle.clone(), swap));
+        (state, handle, join)
+    }
+
+    fn teardown(handle: ServerHandle,
+                join: thread::JoinHandle<()>) {
+        handle.stop().unwrap();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn request_line_grammar() {
+        assert_eq!(parse_request_line("GET /healthz HTTP/1.0"),
+                   Some(("GET", "/healthz")));
+        assert_eq!(parse_request_line("POST /swap?a=b HTTP/1.1"),
+                   Some(("POST", "/swap?a=b")));
+        for bad in ["", "GET", "GET /x", "GET /x SPDY/3",
+                    "GET /x HTTP/1.0 extra"] {
+            assert_eq!(parse_request_line(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn query_param_lookup() {
+        assert_eq!(query_param("model=a&version=2", "model"),
+                   Some("a"));
+        assert_eq!(query_param("model=a&version=2", "version"),
+                   Some("2"));
+        assert_eq!(query_param("model=a", "version"), None);
+        assert_eq!(query_param("", "model"), None);
+        assert_eq!(query_param("model", "model"), None,
+                   "bare key without '=' is not a parameter");
+    }
+
+    #[test]
+    fn routes_dispatch_with_typed_statuses() {
+        let (state, handle, join) = ops_fixture(None);
+        let ok = respond(&state, "GET", "/healthz");
+        assert_eq!((ok.status, ok.body.as_str()), (200, "ok\n"));
+        assert_eq!(respond(&state, "GET", "/nope").status, 404);
+        assert_eq!(respond(&state, "POST", "/healthz").status, 405);
+        assert_eq!(respond(&state, "GET", "/swap").status, 405);
+        // no store configured: the hook is absent
+        assert_eq!(respond(&state, "POST", "/swap?model=tiny")
+                       .status,
+                   501);
+        teardown(handle, join);
+    }
+
+    #[test]
+    fn stats_and_metrics_render_the_snapshot() {
+        let (state, handle, join) = ops_fixture(None);
+        let mut rng = Rng::new(3);
+        handle.infer(rng.normal_vec(2 * 8 * 8)).unwrap();
+
+        let stats = respond(&state, "GET", "/stats");
+        assert_eq!(stats.status, 200);
+        assert_eq!(stats.content_type, "application/json");
+        let parsed = Json::parse(&stats.body).unwrap();
+        let served = parsed
+            .get("server")
+            .and_then(|s| s.get("served"))
+            .and_then(Json::as_f64);
+        assert_eq!(served, Some(1.0));
+        assert_eq!(parsed.get("net"), Some(&Json::Null),
+                   "no listener attached yet");
+
+        let prom = respond(&state, "GET", "/metrics");
+        assert_eq!(prom.status, 200);
+        assert!(prom.body.contains("wino_requests_served_total 1\n"),
+                "{}", prom.body);
+        assert!(prom.body
+                    .contains("wino_model_requests_total\
+                               {model=\"tiny\"} 1\n"),
+                "{}", prom.body);
+        teardown(handle, join);
+    }
+
+    #[test]
+    fn net_counters_merge_once_attached() {
+        let (state, handle, join) = ops_fixture(None);
+        let counters = Arc::new(NetCounters::new());
+        counters.connections.fetch_add(2, Ordering::Relaxed);
+        counters.requests.fetch_add(5, Ordering::Relaxed);
+        state.set_net(Arc::clone(&counters));
+        let snap = state.snapshot().unwrap();
+        let net = snap.net.expect("net section after set_net");
+        assert_eq!((net.connections, net.requests), (2, 5));
+        // live: later increments show up in later snapshots
+        counters.requests.fetch_add(1, Ordering::Relaxed);
+        let again = state.snapshot().unwrap().net.unwrap();
+        assert_eq!(again.requests, 6);
+        teardown(handle, join);
+    }
+
+    #[test]
+    fn swap_endpoint_drives_the_hook() {
+        let hook: SwapHook = Box::new(|model, version| {
+            if model == "tiny" {
+                Ok(version.unwrap_or(9))
+            } else {
+                Err(format!("unknown model {model:?}"))
+            }
+        });
+        let (state, handle, join) = ops_fixture(Some(hook));
+        assert_eq!(respond(&state, "POST", "/swap").status, 400);
+        assert_eq!(respond(&state, "POST",
+                           "/swap?model=tiny&version=x")
+                       .status,
+                   400);
+        let ok =
+            respond(&state, "POST", "/swap?model=tiny&version=2");
+        assert_eq!(ok.status, 200);
+        let parsed = Json::parse(&ok.body).unwrap();
+        assert_eq!(parsed.get("version").and_then(Json::as_f64),
+                   Some(2.0));
+        let latest = respond(&state, "POST", "/swap?model=tiny");
+        assert_eq!(latest.status, 200, "version is optional");
+        let err = respond(&state, "POST", "/swap?model=ghost");
+        assert_eq!(err.status, 500);
+        assert!(err.body.contains("ghost"), "{}", err.body);
+        teardown(handle, join);
+    }
+
+    #[test]
+    fn serves_over_real_sockets() {
+        use std::io::Read as _;
+        fn exchange(addr: SocketAddr, raw: &str) -> String {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(raw.as_bytes()).unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            out
+        }
+        let (state, handle, join) = ops_fixture(None);
+        let http =
+            HttpServer::start("127.0.0.1:0", Arc::clone(&state))
+                .unwrap();
+        let addr = http.addr();
+
+        let reply = exchange(
+            addr,
+            "GET /healthz HTTP/1.0\r\nHost: x\r\n\r\n");
+        assert!(reply.starts_with("HTTP/1.0 200 OK\r\n"), "{reply}");
+        assert!(reply.ends_with("\r\n\r\nok\n"), "{reply}");
+
+        let reply = exchange(addr, "bogus\r\n\r\n");
+        assert!(reply.starts_with("HTTP/1.0 400"), "{reply}");
+
+        let reply = exchange(
+            addr, "GET /metrics HTTP/1.0\r\n\r\n");
+        assert!(reply.contains("wino_requests_served_total"),
+                "{reply}");
+
+        http.stop();
+        assert!(TcpStream::connect_timeout(
+                    &addr,
+                    std::time::Duration::from_millis(200))
+                    .map(|mut s| {
+                        let _ = s.write_all(b"GET / HTTP/1.0\r\n\r\n");
+                        let mut out = String::new();
+                        s.read_to_string(&mut out).unwrap_or(0) == 0
+                    })
+                    .unwrap_or(true),
+                "stopped sidecar must not answer");
+        teardown(handle, join);
+    }
+}

@@ -1,9 +1,21 @@
-//! Serving/training metrics: latency percentiles, throughput, and the
-//! network front-end counters ([`NetCounters`] / [`NetSummary`]) that
-//! `coordinator::net` merges into `ServerStats`.
+//! Serving/training metrics: latency percentiles, throughput, the
+//! network front-end counters ([`NetCounters`] / [`NetSummary`]), and
+//! the one typed snapshot every reporting surface renders from —
+//! [`MetricsSnapshot`].
+//!
+//! The snapshot is the single formatting site: `/stats` (JSON) and
+//! `/metrics` (Prometheus text) on the HTTP sidecar, the `bench-serve`
+//! JSON report, and the CLI text summaries all call
+//! [`MetricsSnapshot::to_json`] / [`MetricsSnapshot::to_prometheus`]
+//! or `Display` on its parts ([`LatencySummary`], [`NetSummary`]).
+//! Nothing else in the tree hand-formats these numbers.
 
+use std::collections::BTreeMap;
+use std::fmt::{self, Write as _};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Latency recorder with percentile queries.
 #[derive(Debug, Default, Clone)]
@@ -54,15 +66,60 @@ impl LatencyStats {
         self.samples_us.extend_from_slice(&other.samples_us);
     }
 
+    /// Freeze the recorder into the typed summary every reporting
+    /// surface renders from.
+    pub fn summarize(&self) -> LatencySummary {
+        LatencySummary {
+            count: self.count() as u64,
+            mean_us: self.mean_us(),
+            p50_us: self.percentile(50.0).unwrap_or(0),
+            p95_us: self.percentile(95.0).unwrap_or(0),
+            p99_us: self.percentile(99.0).unwrap_or(0),
+        }
+    }
+
     pub fn summary(&self) -> String {
-        format!(
+        self.summarize().to_string()
+    }
+}
+
+/// Frozen latency percentiles; the `Display` impl is the one text
+/// rendering of latency in the tree.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LatencySummary {
+    /// recorded samples
+    pub count: u64,
+    /// arithmetic mean, microseconds
+    pub mean_us: f64,
+    /// nearest-rank median, microseconds
+    pub p50_us: u64,
+    /// nearest-rank 95th percentile, microseconds
+    pub p95_us: u64,
+    /// nearest-rank 99th percentile, microseconds
+    pub p99_us: u64,
+}
+
+impl fmt::Display for LatencySummary {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
             "n={} mean={:.0}us p50={}us p95={}us p99={}us",
-            self.count(),
-            self.mean_us(),
-            self.percentile(50.0).unwrap_or(0),
-            self.percentile(95.0).unwrap_or(0),
-            self.percentile(99.0).unwrap_or(0),
+            self.count, self.mean_us, self.p50_us, self.p95_us,
+            self.p99_us,
         )
+    }
+}
+
+impl LatencySummary {
+    /// JSON object with one key per field.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("count".to_string(), Json::Num(self.count as f64));
+        o.insert("mean_us".to_string(), Json::Num(self.mean_us));
+        o.insert("p50_us".to_string(), Json::Num(self.p50_us as f64));
+        o.insert("p95_us".to_string(), Json::Num(self.p95_us as f64));
+        o.insert("p99_us".to_string(), Json::Num(self.p99_us as f64));
+        Json::Obj(o)
     }
 }
 
@@ -108,7 +165,8 @@ impl NetCounters {
 }
 
 /// Plain snapshot of [`NetCounters`]; carried on
-/// `ServerStats::net` once the front-end drains.
+/// [`MetricsSnapshot::net`] while the front-end is up and once it
+/// drains.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct NetSummary {
     pub connections: u64,
@@ -122,12 +180,311 @@ pub struct NetSummary {
 
 impl NetSummary {
     pub fn summary(&self) -> String {
-        format!(
+        self.to_string()
+    }
+
+    /// JSON object with one key per counter.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        let pairs = [
+            ("connections", self.connections),
+            ("requests", self.requests),
+            ("responses", self.responses),
+            ("busy", self.busy),
+            ("errors", self.errors),
+            ("bytes_in", self.bytes_in),
+            ("bytes_out", self.bytes_out),
+        ];
+        for (k, v) in pairs {
+            o.insert(k.to_string(), Json::Num(v as f64));
+        }
+        Json::Obj(o)
+    }
+}
+
+impl fmt::Display for NetSummary {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
             "conns={} reqs={} ok={} busy={} errs={} in={}B out={}B",
             self.connections, self.requests, self.responses, self.busy,
             self.errors, self.bytes_in, self.bytes_out,
         )
     }
+}
+
+/// Totals owned by the engine serving thread.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct EngineSummary {
+    /// samples answered (one per queued request)
+    pub served: u64,
+    /// micro-batches executed
+    pub batches: u64,
+    /// hot-swaps applied since start
+    pub swaps: u64,
+}
+
+/// Per-model request totals plus the checkpoint version currently
+/// serving (`None` until the first hot-swap replaces the boot-time
+/// weights).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ModelStat {
+    pub model: String,
+    pub version: Option<u64>,
+    pub requests: u64,
+}
+
+/// Per-bucket request/batch totals from the router lanes.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BucketStat {
+    /// padded batch size of the lane
+    pub bucket: usize,
+    /// samples routed through the lane
+    pub requests: u64,
+    /// micro-batches the lane completed
+    pub batches: u64,
+}
+
+/// The one typed metrics snapshot. Produced live by
+/// `ServerHandle::stats` (and at shutdown by `stop`); rendered by
+/// [`MetricsSnapshot::to_json`] for `/stats` + `bench-serve` reports
+/// and [`MetricsSnapshot::to_prometheus`] for `/metrics`.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// engine-thread totals
+    pub server: EngineSummary,
+    /// TCP front-end counters, when a listener is (or was) attached
+    pub net: Option<NetSummary>,
+    /// engine-side queue-to-reply latency
+    pub latency: LatencySummary,
+    /// per-model request totals and serving versions
+    pub per_model: Vec<ModelStat>,
+    /// per-bucket router lane totals
+    pub per_bucket: Vec<BucketStat>,
+}
+
+impl MetricsSnapshot {
+    /// JSON rendering used by `/stats` and the `bench-serve` report.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        let mut server = BTreeMap::new();
+        server.insert(
+            "served".to_string(),
+            Json::Num(self.server.served as f64),
+        );
+        server.insert(
+            "batches".to_string(),
+            Json::Num(self.server.batches as f64),
+        );
+        server.insert(
+            "swaps".to_string(),
+            Json::Num(self.server.swaps as f64),
+        );
+        o.insert("server".to_string(), Json::Obj(server));
+        o.insert(
+            "net".to_string(),
+            match &self.net {
+                Some(n) => n.to_json(),
+                None => Json::Null,
+            },
+        );
+        o.insert("latency".to_string(), self.latency.to_json());
+        let models = self
+            .per_model
+            .iter()
+            .map(|m| {
+                let mut e = BTreeMap::new();
+                e.insert(
+                    "model".to_string(),
+                    Json::Str(m.model.clone()),
+                );
+                e.insert(
+                    "version".to_string(),
+                    match m.version {
+                        Some(v) => Json::Num(v as f64),
+                        None => Json::Null,
+                    },
+                );
+                e.insert(
+                    "requests".to_string(),
+                    Json::Num(m.requests as f64),
+                );
+                Json::Obj(e)
+            })
+            .collect();
+        o.insert("per_model".to_string(), Json::Arr(models));
+        let buckets = self
+            .per_bucket
+            .iter()
+            .map(|b| {
+                let mut e = BTreeMap::new();
+                e.insert(
+                    "bucket".to_string(),
+                    Json::Num(b.bucket as f64),
+                );
+                e.insert(
+                    "requests".to_string(),
+                    Json::Num(b.requests as f64),
+                );
+                e.insert(
+                    "batches".to_string(),
+                    Json::Num(b.batches as f64),
+                );
+                Json::Obj(e)
+            })
+            .collect();
+        o.insert("per_bucket".to_string(), Json::Arr(buckets));
+        Json::Obj(o)
+    }
+
+    /// Prometheus text-format rendering used by `/metrics`. Family
+    /// names carry the `wino_` prefix; label values are escaped per
+    /// the exposition format (backslash, double-quote, newline).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "# HELP wino_requests_served_total Samples answered by \
+             the engine thread."
+        );
+        let _ = writeln!(out, "# TYPE wino_requests_served_total counter");
+        let _ = writeln!(
+            out,
+            "wino_requests_served_total {}",
+            self.server.served
+        );
+        let _ = writeln!(
+            out,
+            "# HELP wino_batches_total Micro-batches executed."
+        );
+        let _ = writeln!(out, "# TYPE wino_batches_total counter");
+        let _ =
+            writeln!(out, "wino_batches_total {}", self.server.batches);
+        let _ = writeln!(
+            out,
+            "# HELP wino_model_swaps_total Hot-swaps applied."
+        );
+        let _ = writeln!(out, "# TYPE wino_model_swaps_total counter");
+        let _ =
+            writeln!(out, "wino_model_swaps_total {}", self.server.swaps);
+        let _ = writeln!(
+            out,
+            "# HELP wino_request_latency_us Engine queue-to-reply \
+             latency quantiles, microseconds."
+        );
+        let _ = writeln!(out, "# TYPE wino_request_latency_us gauge");
+        for (q, v) in [
+            ("0.5", self.latency.p50_us),
+            ("0.95", self.latency.p95_us),
+            ("0.99", self.latency.p99_us),
+        ] {
+            let _ = writeln!(
+                out,
+                "wino_request_latency_us{{quantile=\"{q}\"}} {v}"
+            );
+        }
+        let _ = writeln!(
+            out,
+            "# HELP wino_model_requests_total Samples served per model."
+        );
+        let _ = writeln!(out, "# TYPE wino_model_requests_total counter");
+        for m in &self.per_model {
+            let _ = writeln!(
+                out,
+                "wino_model_requests_total{{model=\"{}\"}} {}",
+                escape_label(&m.model),
+                m.requests
+            );
+        }
+        let _ = writeln!(
+            out,
+            "# HELP wino_model_version Checkpoint version serving \
+             (0 = boot-time weights)."
+        );
+        let _ = writeln!(out, "# TYPE wino_model_version gauge");
+        for m in &self.per_model {
+            let _ = writeln!(
+                out,
+                "wino_model_version{{model=\"{}\"}} {}",
+                escape_label(&m.model),
+                m.version.unwrap_or(0)
+            );
+        }
+        let _ = writeln!(
+            out,
+            "# HELP wino_bucket_requests_total Samples routed per \
+             batch bucket."
+        );
+        let _ =
+            writeln!(out, "# TYPE wino_bucket_requests_total counter");
+        for b in &self.per_bucket {
+            let _ = writeln!(
+                out,
+                "wino_bucket_requests_total{{bucket=\"{}\"}} {}",
+                b.bucket, b.requests
+            );
+        }
+        if let Some(n) = &self.net {
+            let _ = writeln!(
+                out,
+                "# HELP wino_net_connections_total Accepted TCP \
+                 connections."
+            );
+            let _ = writeln!(
+                out,
+                "# TYPE wino_net_connections_total counter"
+            );
+            let _ = writeln!(
+                out,
+                "wino_net_connections_total {}",
+                n.connections
+            );
+            let _ = writeln!(
+                out,
+                "# HELP wino_net_requests_total Decoded wire requests \
+                 by outcome."
+            );
+            let _ =
+                writeln!(out, "# TYPE wino_net_requests_total counter");
+            for (outcome, v) in [
+                ("ok", n.responses),
+                ("busy", n.busy),
+                ("error", n.errors),
+            ] {
+                let _ = writeln!(
+                    out,
+                    "wino_net_requests_total{{outcome=\"{outcome}\"}} {v}"
+                );
+            }
+            let _ = writeln!(
+                out,
+                "# HELP wino_net_bytes_total Wire bytes by direction."
+            );
+            let _ = writeln!(out, "# TYPE wino_net_bytes_total counter");
+            for (dir, v) in [("in", n.bytes_in), ("out", n.bytes_out)] {
+                let _ = writeln!(
+                    out,
+                    "wino_net_bytes_total{{direction=\"{dir}\"}} {v}"
+                );
+            }
+        }
+        out
+    }
+}
+
+/// Escape a Prometheus label value: backslash, double-quote, and
+/// newline must be backslash-escaped per the text exposition format.
+pub fn escape_label(raw: &str) -> String {
+    let mut out = String::with_capacity(raw.len());
+    for c in raw.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
 }
 
 /// Wall-clock throughput meter.
@@ -276,5 +633,166 @@ mod tests {
         t.add(5);
         assert_eq!(t.items, 15);
         assert!(t.per_sec() > 0.0);
+    }
+
+    fn sample_snapshot() -> MetricsSnapshot {
+        MetricsSnapshot {
+            server: EngineSummary { served: 12, batches: 4, swaps: 1 },
+            net: Some(NetSummary {
+                connections: 2,
+                requests: 12,
+                responses: 11,
+                busy: 1,
+                errors: 0,
+                bytes_in: 640,
+                bytes_out: 320,
+            }),
+            latency: LatencySummary {
+                count: 12,
+                mean_us: 85.5,
+                p50_us: 80,
+                p95_us: 120,
+                p99_us: 150,
+            },
+            per_model: vec![ModelStat {
+                model: "default".to_string(),
+                version: Some(2),
+                requests: 12,
+            }],
+            per_bucket: vec![BucketStat {
+                bucket: 1,
+                requests: 12,
+                batches: 4,
+            }],
+        }
+    }
+
+    #[test]
+    fn summarize_freezes_the_recorder() {
+        let mut l = LatencyStats::new();
+        for us in [10u64, 20, 30, 40] {
+            l.record_us(us);
+        }
+        let s = l.summarize();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.p50_us, l.percentile(50.0).unwrap());
+        assert_eq!(s.p99_us, l.percentile(99.0).unwrap());
+        // the legacy string summary is the Display of the summary —
+        // one formatting site
+        assert_eq!(l.summary(), s.to_string());
+        assert!(s.to_string().starts_with("n=4 mean=25us"));
+    }
+
+    #[test]
+    fn snapshot_json_has_all_sections() {
+        let j = sample_snapshot().to_json();
+        let text = j.dump();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(
+            back.get("server").and_then(|s| s.get("served")),
+            Some(&Json::Num(12.0))
+        );
+        assert_eq!(
+            back.get("server").and_then(|s| s.get("swaps")),
+            Some(&Json::Num(1.0))
+        );
+        assert_eq!(
+            back.get("net").and_then(|n| n.get("busy")),
+            Some(&Json::Num(1.0))
+        );
+        assert_eq!(
+            back.get("latency").and_then(|l| l.get("p99_us")),
+            Some(&Json::Num(150.0))
+        );
+        let models = back.get("per_model").and_then(|m| m.as_arr());
+        let m0 = models.and_then(|m| m.first()).unwrap();
+        assert_eq!(
+            m0.get("model").and_then(|v| v.as_str()),
+            Some("default")
+        );
+        assert_eq!(m0.get("version"), Some(&Json::Num(2.0)));
+        let buckets = back.get("per_bucket").and_then(|b| b.as_arr());
+        let b0 = buckets.and_then(|b| b.first()).unwrap();
+        assert_eq!(b0.get("bucket"), Some(&Json::Num(1.0)));
+        assert_eq!(b0.get("batches"), Some(&Json::Num(4.0)));
+    }
+
+    #[test]
+    fn snapshot_json_without_net_is_null() {
+        let mut snap = sample_snapshot();
+        snap.net = None;
+        assert_eq!(snap.to_json().get("net"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn prometheus_rendering_has_families_and_samples() {
+        let text = sample_snapshot().to_prometheus();
+        for family in [
+            "wino_requests_served_total",
+            "wino_batches_total",
+            "wino_model_swaps_total",
+            "wino_request_latency_us",
+            "wino_model_requests_total",
+            "wino_model_version",
+            "wino_bucket_requests_total",
+            "wino_net_connections_total",
+            "wino_net_requests_total",
+            "wino_net_bytes_total",
+        ] {
+            assert!(
+                text.contains(&format!("# TYPE {family}")),
+                "missing TYPE for {family}:\n{text}"
+            );
+        }
+        assert!(text.contains("wino_requests_served_total 12\n"));
+        assert!(text
+            .contains("wino_model_requests_total{model=\"default\"} 12"));
+        assert!(text.contains("wino_model_version{model=\"default\"} 2"));
+        assert!(text
+            .contains("wino_request_latency_us{quantile=\"0.99\"} 150"));
+        assert!(text.contains("wino_net_requests_total{outcome=\"busy\"} 1"));
+        // every non-comment line is `name{...} value` or `name value`
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(
+                value.parse::<f64>().is_ok(),
+                "bad sample line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn prometheus_omits_net_when_absent() {
+        let mut snap = sample_snapshot();
+        snap.net = None;
+        let text = snap.to_prometheus();
+        assert!(!text.contains("wino_net_"), "{text}");
+        assert!(text.contains("wino_requests_served_total"));
+    }
+
+    #[test]
+    fn prometheus_label_escaping() {
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\"b"), "a\\\"b");
+        assert_eq!(escape_label("a\\b"), "a\\\\b");
+        assert_eq!(escape_label("a\nb"), "a\\nb");
+        // a hostile model name renders to a single, parseable line
+        let mut snap = sample_snapshot();
+        if let Some(m) = snap.per_model.first_mut() {
+            m.model = "m\"1\\x\ny".to_string();
+        }
+        let text = snap.to_prometheus();
+        let line = text
+            .lines()
+            .find(|l| l.starts_with("wino_model_requests_total{"))
+            .unwrap();
+        assert_eq!(
+            line,
+            "wino_model_requests_total{model=\"m\\\"1\\\\x\\ny\"} 12"
+        );
     }
 }

@@ -16,10 +16,14 @@
 //! * [`net`] — the TCP front-end: framed wire protocol, bounded
 //!   admission with load-shedding `Busy` replies, and the blocking
 //!   [`net::NetClient`] the load generator drives.
-//! * [`metrics`] — latency/throughput instrumentation and the network
-//!   front-end counters.
+//! * [`http`] — the ops-plane HTTP sidecar: `/healthz`, `/stats`,
+//!   `/metrics` (Prometheus text), and `POST /swap` hot-swap.
+//! * [`metrics`] — latency/throughput instrumentation, the network
+//!   front-end counters, and the unified [`metrics::MetricsSnapshot`]
+//!   every surface renders from.
 
 pub mod batcher;
+pub mod http;
 pub mod metrics;
 pub mod net;
 pub mod p_schedule;

@@ -160,10 +160,17 @@ impl NetServer {
         self.counters.snapshot()
     }
 
+    /// The shared counter cell itself — the HTTP sidecar holds this
+    /// so `/stats` and `/metrics` can merge live front-end counters
+    /// without owning (or outliving) the listener.
+    pub fn counters_shared(&self) -> Arc<NetCounters> {
+        Arc::clone(&self.counters)
+    }
+
     /// Graceful drain: stop accepting, refuse new requests, flush every
     /// admitted request's reply, join all threads, and return the final
-    /// counters (merge into `ServerStats::net` before stopping the
-    /// engine — the drain needs the engine alive to answer).
+    /// counters (merge into `MetricsSnapshot::net` before stopping
+    /// the engine — the drain needs the engine alive to answer).
     pub fn stop(mut self) -> NetSummary {
         self.shutdown.store(true, Ordering::SeqCst);
         // wake a blocked `accept` so the acceptor observes the flag;

@@ -19,7 +19,10 @@
 //! `wino-adder bench-serve` (server + closed-loop load generator over
 //! localhost, reporting into `BENCH_net.json`). Aggregate counters
 //! ([`crate::coordinator::metrics::NetSummary`]) merge into
-//! `ServerStats::net` at shutdown.
+//! [`crate::coordinator::metrics::MetricsSnapshot::net`] at
+//! shutdown, and live into `/stats` + `/metrics` while the ops
+//! sidecar ([`crate::coordinator::http`]) holds the shared
+//! [`crate::coordinator::metrics::NetCounters`].
 
 pub mod client;
 pub mod listener;

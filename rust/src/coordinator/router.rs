@@ -118,9 +118,9 @@ pub fn per_bucket_completed(router: &Router) -> BTreeMap<usize, u64> {
     out
 }
 
-/// Per-bucket **request** (sample) counts — the real traffic split the
-/// server reports in `ServerStats::per_bucket_requests` (aggregated
-/// across models).
+/// Per-bucket **request** (sample) counts — the real traffic split
+/// behind each `MetricsSnapshot` bucket stat's `requests` field
+/// (aggregated across models).
 pub fn per_bucket_samples(router: &Router) -> BTreeMap<usize, u64> {
     let mut out = BTreeMap::new();
     for l in router.lanes() {
@@ -130,8 +130,8 @@ pub fn per_bucket_samples(router: &Router) -> BTreeMap<usize, u64> {
 }
 
 /// Per-model **request** (sample) counts, keyed by dense model index —
-/// the multi-model traffic split behind
-/// `ServerStats::per_model_requests`.
+/// the multi-model traffic split behind the `MetricsSnapshot`
+/// per-model stats.
 pub fn per_model_samples(router: &Router) -> BTreeMap<usize, u64> {
     let mut out = BTreeMap::new();
     for l in router.lanes() {

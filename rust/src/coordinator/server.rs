@@ -12,14 +12,20 @@
 //! this module hosts the machinery ([`Server::start_hosted`] — a
 //! **registry of named models**, each compiled into one
 //! [`ModelPlan`] per batch bucket, all driven by one shared backend)
-//! plus two shims:
+//! plus the PJRT substrate ([`Server::start`], feature `pjrt`): the
+//! AOT `layer_wino_adder_b*` artifacts executed by the engine thread
+//! (PJRT executables are not `Send`, hence the single-thread loop).
 //!
-//! * **native single-model** ([`Server::start_native`], deprecated) —
-//!   the pre-engine `NativeConfig` surface, now a thin wrapper that
-//!   registers one model named `"default"`.
-//! * **PJRT** ([`Server::start`], feature `pjrt`) — the AOT
-//!   `layer_wino_adder_b*` artifacts executed by the engine thread
-//!   (PJRT executables are not `Send`, hence the single-thread loop).
+//! Besides inference, the engine thread answers two control messages:
+//! live [`MetricsSnapshot`] queries ([`ServerHandle::stats`], the
+//! substrate of the HTTP sidecar's `/stats` and `/metrics`), and plan
+//! hot-swaps ([`ServerHandle::install_plans`]) that atomically replace
+//! one model's per-bucket plan cache between batches — queued requests
+//! are never dropped, and every request submitted after the swap
+//! acknowledgment runs on the new plans (mpsc channel ordering).
+//!
+//! The pre-engine `NativeConfig` / `start_native` shims (deprecated
+//! since 0.2.0) were removed in 0.3.0; see the README migration table.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -27,12 +33,11 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, Batcher, Request};
-use super::metrics::{LatencyStats, NetSummary};
+use super::metrics::{BucketStat, EngineSummary, LatencyStats,
+                     MetricsSnapshot, ModelStat};
 use super::router::Router;
 use crate::engine::ModelInfo;
-use crate::nn::backend::{default_threads, Backend, BackendKind,
-                         KernelKind};
-use crate::nn::matrices::Variant;
+use crate::nn::backend::{Backend, BackendKind, KernelKind};
 use crate::nn::model::{ModelSpec, ModelWeights};
 use crate::nn::plan::{ModelPlan, TuneMode};
 use crate::util::error::{anyhow, Context, Result};
@@ -56,30 +61,25 @@ struct InferMsg {
 
 enum Msg {
     Infer(InferMsg),
-    Stop(mpsc::Sender<ServerStats>),
+    /// live metrics query; answered between batches without pausing
+    /// the serving loop
+    Stats(mpsc::Sender<MetricsSnapshot>),
+    /// install a precompiled plan cache for one model (hot-swap)
+    Swap(SwapMsg),
+    Stop(mpsc::Sender<MetricsSnapshot>),
 }
 
-/// Server statistics snapshot returned at shutdown.
-#[derive(Debug, Clone)]
-pub struct ServerStats {
-    pub served: u64,
-    pub batches: u64,
-    /// per-bucket **batch** counts (router lane completions,
-    /// aggregated across models)
-    pub per_bucket: Vec<(usize, u64)>,
-    /// per-bucket **request** counts — the real traffic split
-    /// (sums to `served`)
-    pub per_bucket_requests: Vec<(usize, u64)>,
-    /// per-model **request** counts, in registry order (sums to
-    /// `served`; one entry per hosted model)
-    pub per_model_requests: Vec<(String, u64)>,
-    pub latency_summary: String,
-    pub p50_us: u64,
-    pub p99_us: u64,
-    /// TCP front-end counters, merged in by the caller after
-    /// [`crate::coordinator::net::NetServer::stop`]; `None` when the
-    /// server was only driven in-process.
-    pub net: Option<NetSummary>,
+/// A hot-swap request: replace the per-bucket plan cache of one
+/// hosted model with plans compiled off-thread by the caller. The
+/// engine applies it atomically between batches.
+struct SwapMsg {
+    /// dense registry index of the target model
+    model: usize,
+    /// checkpoint version tag, surfaced in metrics
+    version: u64,
+    /// `(bucket, plan)` cache; must cover exactly the serving buckets
+    plans: Vec<(usize, ModelPlan)>,
+    resp: mpsc::Sender<std::result::Result<(), String>>,
 }
 
 /// Handle used by clients; cheap to clone. Carries the model registry
@@ -177,8 +177,41 @@ impl ServerHandle {
         self.infer_async_for(model, x)?.wait()
     }
 
-    /// Stop the server and collect stats.
-    pub fn stop(self) -> Result<ServerStats> {
+    /// Live metrics snapshot: the engine thread answers between
+    /// batches, so this reflects the running totals without stopping
+    /// or pausing the serving loop. The `net` section is `None`; the
+    /// owner of the TCP front-end (engine facade / HTTP sidecar)
+    /// merges its counters in.
+    pub fn stats(&self) -> Result<MetricsSnapshot> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Stats(tx))
+            .map_err(|_| anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow!("server did not report stats"))
+    }
+
+    /// Hot-swap the per-bucket plan cache of model `model` (dense
+    /// registry index), tagging the result `version` in metrics. The
+    /// plans must be compiled by the caller (off the engine thread —
+    /// [`ModelPlan::compile_buckets_tuned`]) for exactly the serving
+    /// buckets and the registered geometry. The engine installs them
+    /// atomically between batches: queued requests drain on whichever
+    /// plans they were batched with, nothing is dropped, and every
+    /// request submitted after this returns runs on the new plans.
+    pub fn install_plans(&self, model: usize, version: u64,
+                         plans: Vec<(usize, ModelPlan)>) -> Result<()> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Swap(SwapMsg { model, version, plans,
+                                      resp: tx }))
+            .map_err(|_| anyhow!("server stopped"))?;
+        rx.recv()
+            .map_err(|_| anyhow!("server dropped swap request"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Stop the server and collect the final metrics snapshot.
+    pub fn stop(self) -> Result<MetricsSnapshot> {
         let (tx, rx) = mpsc::channel();
         self.tx
             .send(Msg::Stop(tx))
@@ -194,66 +227,6 @@ pub struct HostedModel {
     pub name: String,
     pub spec: ModelSpec,
     pub weights: ModelWeights,
-}
-
-/// Configuration of the rust-native serving engine: which backend runs
-/// the model, and what model. `model: None` serves the classic
-/// single-Winograd-adder-layer demo built from `cin`/`cout`/`hw`
-/// (the paper's FPGA benchmark layer, 16 -> 16 channels at 28x28, by
-/// default); `model: Some(spec)` serves a whole planned stack.
-/// Weights are synthetic (seeded from `seed`) either way.
-#[deprecated(
-    since = "0.2.0",
-    note = "use `engine::EngineBuilder` (see the README migration \
-            table); this shim hosts one model named \"default\""
-)]
-#[derive(Debug, Clone)]
-pub struct NativeConfig {
-    pub backend: BackendKind,
-    pub threads: usize,
-    /// kernel family (`--kernel legacy|pointmajor`; the A/B escape
-    /// hatch — point-major is the default)
-    pub kernel: KernelKind,
-    pub cin: usize,
-    pub cout: usize,
-    pub hw: usize,
-    pub variant: Variant,
-    pub seed: u64,
-    /// multi-layer model spec; `None` = single-layer fallback
-    pub model: Option<ModelSpec>,
-}
-
-#[allow(deprecated)]
-impl Default for NativeConfig {
-    fn default() -> NativeConfig {
-        NativeConfig {
-            backend: BackendKind::Parallel,
-            threads: default_threads(),
-            kernel: KernelKind::default(),
-            cin: 16,
-            cout: 16,
-            hw: 28,
-            variant: Variant::Balanced(0),
-            seed: 7,
-            model: None,
-        }
-    }
-}
-
-#[allow(deprecated)]
-impl NativeConfig {
-    /// The model this config serves (single-layer spec when `model`
-    /// is not set).
-    pub fn spec(&self) -> ModelSpec {
-        self.model.clone().unwrap_or_else(|| {
-            ModelSpec::single_layer(self.cin, self.cout, self.hw,
-                                    self.variant)
-        })
-    }
-
-    pub fn sample_len(&self) -> usize {
-        self.spec().sample_len()
-    }
 }
 
 /// The Winograd-adder model server.
@@ -317,22 +290,6 @@ impl Server {
             })
             .map_err(|e| anyhow!("spawning engine thread: {e}"))?;
         Ok((handle, join))
-    }
-
-    /// Start the engine thread on one model described by the legacy
-    /// [`NativeConfig`] (hosted under the name `"default"`).
-    #[deprecated(
-        since = "0.2.0",
-        note = "use `engine::EngineBuilder::model(...).build()`"
-    )]
-    #[allow(deprecated)]
-    pub fn start_native(cfg: NativeConfig, policy: BatchPolicy)
-                        -> Result<(ServerHandle, thread::JoinHandle<()>)> {
-        let spec = cfg.spec();
-        let weights = ModelWeights::init(&spec, cfg.seed);
-        Server::start_hosted(
-            vec![HostedModel { name: "default".into(), spec, weights }],
-            cfg.backend, cfg.threads, cfg.kernel, TuneMode::Off, policy)
     }
 
     /// Start the engine thread on the PJRT `layer_wino_adder_b*`
@@ -403,6 +360,11 @@ trait BatchExec {
     /// values.
     fn run(&mut self, model: usize, bucket: usize, x: &[f32])
            -> Result<&[f32]>;
+    /// Replace `model`'s per-bucket plan cache (hot-swap). Substrates
+    /// that cannot rebuild plans at runtime return an error; the swap
+    /// is rejected and serving continues on the old plans.
+    fn install(&mut self, model: usize,
+               plans: Vec<(usize, ModelPlan)>) -> Result<()>;
 }
 
 /// Native substrate: per model, one [`ModelPlan`] per bucket — the
@@ -439,6 +401,28 @@ impl BatchExec for PlannedExec {
                 anyhow!("no plan for model {model} bucket {bucket}")
             })?;
         Ok(plan.forward(self.backend.as_ref(), x))
+    }
+
+    fn install(&mut self, model: usize,
+               plans: Vec<(usize, ModelPlan)>) -> Result<()> {
+        let slot = self.models.get_mut(model).ok_or_else(|| {
+            anyhow!("no plan cache for model index {model}")
+        })?;
+        // the replacement must cover exactly the buckets the router
+        // routes to, or a later batch would find no plan
+        let mut want: Vec<usize> =
+            slot.iter().map(|(b, _)| *b).collect();
+        let mut got: Vec<usize> =
+            plans.iter().map(|(b, _)| *b).collect();
+        want.sort_unstable();
+        got.sort_unstable();
+        if want != got {
+            return Err(anyhow!(
+                "swap buckets {got:?} do not match serving buckets \
+                 {want:?}"));
+        }
+        *slot = plans;
+        Ok(())
     }
 }
 
@@ -481,6 +465,13 @@ impl BatchExec for PjrtExec {
         self.out = y;
         Ok(&self.out)
     }
+
+    fn install(&mut self, _model: usize,
+               _plans: Vec<(usize, ModelPlan)>) -> Result<()> {
+        Err(anyhow!(
+            "hot-swap is not supported on the pjrt substrate \
+             (executables are AOT-compiled artifacts)"))
+    }
 }
 
 /// Enqueue one request on its model's batcher, or reply with an error
@@ -500,9 +491,73 @@ fn submit_or_reject(batchers: &mut [Batcher<InferMsg>], m: InferMsg,
     }
 }
 
+/// Assemble the [`MetricsSnapshot`] from the serving loop's running
+/// state — the ONE place engine-side metrics are gathered, shared by
+/// the live `Stats` query and the final `Stop` report.
+fn build_snapshot(models: &[ModelInfo], router: &Router,
+                  batchers: &[Batcher<InferMsg>],
+                  latency: &LatencyStats, batches: u64, swaps: u64,
+                  versions: &[Option<u64>]) -> MetricsSnapshot {
+    let bucket_batches = super::router::per_bucket_completed(router);
+    let per_bucket: Vec<BucketStat> =
+        super::router::per_bucket_samples(router)
+            .into_iter()
+            .map(|(bucket, requests)| BucketStat {
+                bucket,
+                requests,
+                batches: bucket_batches
+                    .get(&bucket)
+                    .copied()
+                    .unwrap_or(0),
+            })
+            .collect();
+    let by_model = super::router::per_model_samples(router);
+    let per_model: Vec<ModelStat> = models
+        .iter()
+        .enumerate()
+        .map(|(i, m)| ModelStat {
+            model: m.name.clone(),
+            version: versions.get(i).copied().flatten(),
+            requests: by_model.get(&i).copied().unwrap_or(0),
+        })
+        .collect();
+    MetricsSnapshot {
+        server: EngineSummary {
+            served: batchers.iter().map(|b| b.dispatched).sum(),
+            batches,
+            swaps,
+        },
+        net: None,
+        latency: latency.summarize(),
+        per_model,
+        per_bucket,
+    }
+}
+
+/// Apply a hot-swap: install the new plan cache (or reject it), bump
+/// the swap counter and version tag, and acknowledge the caller.
+fn apply_swap<E: BatchExec>(exec: &mut E, sw: SwapMsg,
+                            swaps: &mut u64,
+                            versions: &mut [Option<u64>]) {
+    let SwapMsg { model, version, plans, resp } = sw;
+    match exec.install(model, plans) {
+        Ok(()) => {
+            *swaps += 1;
+            if let Some(v) = versions.get_mut(model) {
+                *v = Some(version);
+            }
+            let _ = resp.send(Ok(()));
+        }
+        Err(e) => {
+            let _ = resp.send(Err(format!("{e}")));
+        }
+    }
+}
+
 /// The serving loop shared by every substrate: drain requests, batch
-/// per model, route to a `(model, bucket)` lane, execute, reply, and
-/// report stats on stop.
+/// per model, route to a `(model, bucket)` lane, execute, reply,
+/// answer live stats/swap control messages between batches, and
+/// report the final snapshot on stop.
 fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
                             mut exec: E, models: Arc<Vec<ModelInfo>>)
                             -> Result<()> {
@@ -522,7 +577,11 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
     let now_us = |s: &Instant| s.elapsed().as_micros() as u64;
     let mut latency = LatencyStats::new();
     let mut batches = 0u64;
-    let mut stop_reply: Option<mpsc::Sender<ServerStats>> = None;
+    let mut swaps = 0u64;
+    // checkpoint version serving per model; None until a hot-swap
+    // replaces the boot-time weights
+    let mut versions: Vec<Option<u64>> = vec![None; models.len()];
+    let mut stop_reply: Option<mpsc::Sender<MetricsSnapshot>> = None;
     // batch staging buffers, reused across batches (grown once):
     // `batch` holds the drained requests, `xbuf` their packed inputs
     let mut batch: Vec<Request<InferMsg>> = Vec::new();
@@ -541,12 +600,29 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
                             submit_or_reject(&mut batchers, m,
                                              now_us(&start));
                         }
+                        Msg::Stats(s) => {
+                            let _ = s.send(build_snapshot(
+                                &models, &router, &batchers, &latency,
+                                batches, swaps, &versions));
+                        }
+                        Msg::Swap(sw) => {
+                            apply_swap(&mut exec, sw, &mut swaps,
+                                       &mut versions);
+                        }
                         Msg::Stop(s) => {
                             stop_reply = Some(s);
                             break;
                         }
                     }
                 }
+            }
+            Ok(Msg::Stats(s)) => {
+                let _ = s.send(build_snapshot(
+                    &models, &router, &batchers, &latency, batches,
+                    swaps, &versions));
+            }
+            Ok(Msg::Swap(sw)) => {
+                apply_swap(&mut exec, sw, &mut swaps, &mut versions);
             }
             Ok(Msg::Stop(s)) => {
                 stop_reply = Some(s);
@@ -617,33 +693,9 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
         }
 
         if let Some(s) = stop_reply.take() {
-            let per_bucket: Vec<(usize, u64)> =
-                super::router::per_bucket_completed(&router)
-                    .into_iter()
-                    .collect();
-            let per_bucket_requests: Vec<(usize, u64)> =
-                super::router::per_bucket_samples(&router)
-                    .into_iter()
-                    .collect();
-            let by_model = super::router::per_model_samples(&router);
-            let per_model_requests: Vec<(String, u64)> = models
-                .iter()
-                .enumerate()
-                .map(|(i, m)| (m.name.clone(),
-                               by_model.get(&i).copied().unwrap_or(0)))
-                .collect();
-            let stats = ServerStats {
-                served: batchers.iter().map(|b| b.dispatched).sum(),
-                batches,
-                per_bucket,
-                per_bucket_requests,
-                per_model_requests,
-                latency_summary: latency.summary(),
-                p50_us: latency.percentile(50.0).unwrap_or(0),
-                p99_us: latency.percentile(99.0).unwrap_or(0),
-                net: None,
-            };
-            let _ = s.send(stats);
+            let _ = s.send(build_snapshot(&models, &router, &batchers,
+                                          &latency, batches, swaps,
+                                          &versions));
             break 'outer;
         }
     }
@@ -653,6 +705,7 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::matrices::Variant;
     use crate::nn::wino_adder::winograd_adder_conv2d_fast;
     use crate::nn::Tensor;
     use crate::util::rng::Rng;
@@ -699,18 +752,24 @@ mod tests {
         }
         let stats = handle.stop().unwrap();
         join.join().unwrap();
-        assert_eq!(stats.served, 32);
-        assert!(stats.batches >= 2, "batched: {}", stats.batches);
+        assert_eq!(stats.server.served, 32);
+        assert!(stats.server.batches >= 2,
+                "batched: {}", stats.server.batches);
         let routed: u64 =
-            stats.per_bucket.iter().map(|(_, n)| n).sum();
-        assert_eq!(routed, stats.batches);
+            stats.per_bucket.iter().map(|b| b.batches).sum();
+        assert_eq!(routed, stats.server.batches);
         // the router's sample accounting covers the real traffic
         let requests: u64 =
-            stats.per_bucket_requests.iter().map(|(_, n)| n).sum();
-        assert_eq!(requests, stats.served);
-        // single-model registry: all traffic attributed to "default"
-        assert_eq!(stats.per_model_requests,
-                   vec![("default".to_string(), 32)]);
+            stats.per_bucket.iter().map(|b| b.requests).sum();
+        assert_eq!(requests, stats.server.served);
+        // single-model registry: all traffic attributed to "default",
+        // still on the boot-time weights (no swap -> no version)
+        assert_eq!(stats.per_model,
+                   vec![ModelStat { model: "default".to_string(),
+                                    version: None,
+                                    requests: 32 }]);
+        assert_eq!(stats.server.swaps, 0);
+        assert_eq!(stats.latency.count, 32);
     }
 
     #[test]
@@ -750,7 +809,7 @@ mod tests {
             }
             let stats = handle.stop().unwrap();
             join.join().unwrap();
-            assert_eq!(stats.served, 12, "{}", kind.name());
+            assert_eq!(stats.server.served, 12, "{}", kind.name());
             assert_eq!(out_len, 16 * 8 * 8);
         }
     }
@@ -801,7 +860,8 @@ mod tests {
             workers.into_iter().map(|w| w.join().unwrap()).collect();
         let stats = handle.stop().unwrap();
         join.join().unwrap();
-        assert!(stats.per_bucket.iter().any(|&(b, n)| b == 4 && n > 0),
+        assert!(stats.per_bucket.iter()
+                    .any(|b| b.bucket == 4 && b.batches > 0),
                 "bucket-4 plan was never driven: {:?}",
                 stats.per_bucket);
         // worker i sent xs[i] and returned its own reply, so the two
@@ -860,7 +920,7 @@ mod tests {
         assert_eq!(y.len(), 3 * 8 * 8);
         let stats = handle.stop().unwrap();
         join.join().unwrap();
-        assert_eq!(stats.served, 1,
+        assert_eq!(stats.server.served, 1,
                    "rejected requests must never be enqueued");
     }
 
@@ -908,32 +968,121 @@ mod tests {
         }
         let stats = handle.stop().unwrap();
         join.join().unwrap();
-        assert_eq!(stats.served, 6);
-        assert_eq!(stats.per_model_requests,
-                   vec![("a".to_string(), 3), ("b".to_string(), 3)]);
+        assert_eq!(stats.server.served, 6);
+        let by_name: Vec<(&str, u64)> = stats
+            .per_model
+            .iter()
+            .map(|m| (m.model.as_str(), m.requests))
+            .collect();
+        assert_eq!(by_name, vec![("a", 3), ("b", 3)]);
     }
 
-    /// The deprecated `NativeConfig` shim must keep serving until it
-    /// is removed (it now routes through `start_hosted`).
+    /// What the removed `NativeConfig` shim used to set up — one
+    /// synthetic-weight model hosted as `"default"` — expressed on
+    /// the surviving `start_hosted` surface.
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_native_config_shim_still_serves() {
-        let cfg = NativeConfig {
-            backend: BackendKind::Scalar,
-            threads: 1,
-            cin: 2,
-            cout: 3,
-            hw: 8,
-            ..NativeConfig::default()
-        };
-        let sample = cfg.sample_len();
-        let (handle, join) = Server::start_native(
-            cfg, BatchPolicy { buckets: vec![1], max_wait_us: 0 })
+    fn single_default_model_serves_via_start_hosted() {
+        let spec =
+            ModelSpec::single_layer(2, 3, 8, Variant::Balanced(0));
+        let sample = spec.sample_len();
+        let weights = ModelWeights::init(&spec, 7);
+        let (handle, join) = Server::start_hosted(
+            vec![HostedModel { name: "default".into(), spec, weights }],
+            BackendKind::Scalar, 1, KernelKind::default(),
+            TuneMode::Off,
+            BatchPolicy { buckets: vec![1], max_wait_us: 0 })
             .unwrap();
         let mut rng = Rng::new(9);
         let y = handle.infer(rng.normal_vec(sample)).unwrap();
         assert_eq!(y.len(), 3 * 8 * 8);
         handle.stop().unwrap();
         join.join().unwrap();
+    }
+
+    #[test]
+    fn live_stats_do_not_stop_the_server() {
+        let (handle, join) = start_tiny(
+            BackendKind::Scalar,
+            BatchPolicy { buckets: vec![1], max_wait_us: 0 });
+        let mut rng = Rng::new(6);
+        handle.infer(rng.normal_vec(2 * 8 * 8)).unwrap();
+        let live = handle.stats().unwrap();
+        assert_eq!(live.server.served, 1);
+        assert_eq!(live.latency.count, 1);
+        assert!(live.net.is_none());
+        // the server keeps serving after a live snapshot
+        handle.infer(rng.normal_vec(2 * 8 * 8)).unwrap();
+        let fin = handle.stop().unwrap();
+        join.join().unwrap();
+        assert_eq!(fin.server.served, 2);
+    }
+
+    #[test]
+    fn install_plans_hot_swaps_weights() {
+        let spec =
+            ModelSpec::single_layer(2, 3, 8, Variant::Balanced(0));
+        let buckets = vec![1usize];
+        let (handle, join) = start_tiny(
+            BackendKind::Scalar,
+            BatchPolicy { buckets: buckets.clone(), max_wait_us: 0 });
+        let mut rng = Rng::new(12);
+        let x = rng.normal_vec(2 * 8 * 8);
+        let before = handle.infer(x.clone()).unwrap();
+
+        // compile replacement plans (new seed) off-thread, on a
+        // backend of the same config as the serving one
+        let new_weights = ModelWeights::init(&spec, 1234);
+        let backend =
+            BackendKind::Scalar.build_with(2, KernelKind::default());
+        let plans = ModelPlan::compile_buckets_tuned(
+            &spec, &new_weights, &buckets, TuneMode::Off, &*backend)
+            .unwrap();
+        handle.install_plans(0, 2, plans).unwrap();
+
+        let after = handle.infer(x.clone()).unwrap();
+        assert_ne!(before, after,
+                   "new weights must change the output");
+        // bit-exact against a direct forward on the new weights
+        let mut direct = ModelPlan::compile(&spec, &new_weights, 1)
+            .unwrap();
+        let want = direct.forward(&*backend, &x).to_vec();
+        assert_eq!(after, want);
+
+        let stats = handle.stop().unwrap();
+        join.join().unwrap();
+        assert_eq!(stats.server.swaps, 1);
+        assert_eq!(stats.per_model.first().and_then(|m| m.version),
+                   Some(2));
+    }
+
+    #[test]
+    fn swap_with_wrong_buckets_is_rejected() {
+        let spec =
+            ModelSpec::single_layer(2, 3, 8, Variant::Balanced(0));
+        let (handle, join) = start_tiny(
+            BackendKind::Scalar,
+            BatchPolicy { buckets: vec![1, 4], max_wait_us: 0 });
+        let backend =
+            BackendKind::Scalar.build_with(2, KernelKind::default());
+        let weights = ModelWeights::init(&spec, 5);
+        // bucket-1 only: does not cover the serving {1, 4} set
+        let plans = ModelPlan::compile_buckets_tuned(
+            &spec, &weights, &[1], TuneMode::Off, &*backend)
+            .unwrap();
+        let err = handle.install_plans(0, 9, plans).unwrap_err();
+        assert!(format!("{err}").contains("buckets"), "{err}");
+        // model index out of range is an error reply, not a panic
+        let plans = ModelPlan::compile_buckets_tuned(
+            &spec, &weights, &[1, 4], TuneMode::Off, &*backend)
+            .unwrap();
+        assert!(handle.install_plans(7, 9, plans).is_err());
+        // the rejected swaps left the server serving and untagged
+        let mut rng = Rng::new(3);
+        handle.infer(rng.normal_vec(2 * 8 * 8)).unwrap();
+        let stats = handle.stop().unwrap();
+        join.join().unwrap();
+        assert_eq!(stats.server.swaps, 0);
+        assert_eq!(stats.per_model.first().and_then(|m| m.version),
+                   None);
     }
 }

@@ -1,106 +1,61 @@
 //! [`EngineBuilder`] — the validated construction path of the engine.
 //!
 //! Everything the scattered pre-engine surface configured positionally
-//! (`NativeConfig` literals, `BackendKind::from_args` tuples) is a
-//! named builder method here, and **all** validation happens at
-//! [`EngineBuilder::build`] with a typed [`EngineError`] — the engine
-//! thread never sees a spec it could panic on, and the hot path never
-//! parses strings.
+//! (`NativeConfig` literals, `BackendKind::from_args` tuples — both
+//! removed in 0.3.0) is a named builder method here, and **all**
+//! validation happens at [`EngineBuilder::build`] with a typed
+//! [`EngineError`] — the engine thread never sees a spec it could
+//! panic on, and the hot path never parses strings. The engine-level
+//! knobs themselves live in one typed [`EngineOptions`] struct with
+//! the one `--flag` parser every CLI verb shares.
+
+use std::path::Path;
+use std::sync::Arc;
 
 use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::http::{HttpServer, OpsState};
 use crate::coordinator::server::{HostedModel, Server};
-use crate::nn::backend::{default_threads, BackendKind, KernelKind};
+use crate::nn::backend::{BackendKind, KernelKind};
 use crate::nn::matrices::{TileChoice, Variant};
 use crate::nn::model::{ModelSpec, ModelWeights};
 use crate::nn::plan::TuneMode;
+use crate::storage::{LocalDir, Store};
 use crate::util::cli::Args;
 
 use super::error::EngineError;
-use super::Engine;
+use super::options::EngineOptions;
+use super::{Engine, SwapCtx};
 
 /// Builder for [`Engine`]; see the module docs for a quickstart.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct EngineBuilder {
     models: Vec<(String, ModelSpec, Option<ModelWeights>)>,
-    backend: BackendKind,
-    threads: usize,
-    kernel: KernelKind,
-    /// `None` = respect each spec's per-layer tile sizes as
-    /// registered; `Some(choice)` = re-tile every registered spec via
-    /// [`ModelSpec::with_tile`] before weights are initialized.
-    tile: Option<TileChoice>,
-    tune: TuneMode,
+    options: EngineOptions,
     policy: BatchPolicy,
-    seed: u64,
-}
-
-impl Default for EngineBuilder {
-    fn default() -> EngineBuilder {
-        EngineBuilder {
-            models: Vec::new(),
-            backend: BackendKind::Parallel,
-            threads: default_threads(),
-            kernel: KernelKind::default(),
-            tile: None,
-            tune: TuneMode::default(),
-            policy: BatchPolicy::default(),
-            seed: 7,
-        }
-    }
 }
 
 impl EngineBuilder {
-    /// A builder with the serving defaults: `parallel` backend on all
-    /// cores, point-major kernels, buckets `{1, 4, 16}` at 2 ms max
-    /// wait, seed 7 — and no models yet.
+    /// A builder with the serving defaults ([`EngineOptions::new`]:
+    /// `parallel` backend on all cores, point-major kernels, seed 7,
+    /// no sidecar, no store) plus buckets `{1, 4, 16}` at 2 ms max
+    /// wait — and no models yet.
     pub fn new() -> EngineBuilder {
         EngineBuilder::default()
     }
 
-    /// Read `--backend`, `--threads`, `--kernel`, `--tile`, and
-    /// `--tune` into a builder — the typed replacement for the
-    /// deprecated `BackendKind::from_args` tuple.
+    /// Read the engine flags (`--backend`, `--threads`, `--kernel`,
+    /// `--tile`, `--tune`, `--seed`, `--http`, `--store`) into a
+    /// builder via [`EngineOptions::from_args`] — the one CLI parser
+    /// for engine options.
     pub fn from_args(args: &Args) -> Result<EngineBuilder, EngineError> {
-        let mut b = EngineBuilder::new();
-        if let Some(s) = args.get("backend") {
-            b.backend = BackendKind::parse(s).ok_or_else(|| {
-                EngineError::BadOption { option: "backend".into(),
-                                         value: s.into() }
-            })?;
-        }
-        if let Some(s) = args.get("kernel") {
-            b.kernel = KernelKind::parse(s).ok_or_else(|| {
-                EngineError::BadOption { option: "kernel".into(),
-                                         value: s.into() }
-            })?;
-        }
-        if let Some(s) = args.get("tile") {
-            b.tile = Some(TileChoice::parse(s).ok_or_else(|| {
-                EngineError::BadOption { option: "tile".into(),
-                                         value: s.into() }
-            })?);
-        }
-        if let Some(s) = args.get("tune") {
-            b.tune = TuneMode::parse(s).ok_or_else(|| {
-                EngineError::BadOption { option: "tune".into(),
-                                         value: s.into() }
-            })?;
-        }
-        // numeric flags are typed too: a typo must not silently fall
-        // back to the default
-        if let Some(s) = args.get("threads") {
-            b.threads = s.parse().map_err(|_| {
-                EngineError::BadOption { option: "threads".into(),
-                                         value: s.into() }
-            })?;
-        }
-        if let Some(s) = args.get("seed") {
-            b.seed = s.parse().map_err(|_| {
-                EngineError::BadOption { option: "seed".into(),
-                                         value: s.into() }
-            })?;
-        }
-        Ok(b)
+        Ok(EngineBuilder::new()
+            .options(EngineOptions::from_args(args)?))
+    }
+
+    /// Replace the whole option set (see [`EngineOptions`]).
+    pub fn options(mut self, options: EngineOptions) -> EngineBuilder {
+        self.options = options;
+        self
     }
 
     /// Register a named model with seeded synthetic weights
@@ -122,13 +77,13 @@ impl EngineBuilder {
 
     /// Select the compute backend (default: `parallel`).
     pub fn backend(mut self, kind: BackendKind) -> EngineBuilder {
-        self.backend = kind;
+        self.options.backend = kind;
         self
     }
 
     /// Select the kernel family (default: point-major).
     pub fn kernel(mut self, kernel: KernelKind) -> EngineBuilder {
-        self.kernel = kernel;
+        self.options.kernel = kernel;
         self
     }
 
@@ -138,20 +93,20 @@ impl EngineBuilder {
     /// already match the re-tiled shapes — a mismatch is a build
     /// error.
     pub fn tile(mut self, choice: TileChoice) -> EngineBuilder {
-        self.tile = Some(choice);
+        self.options.tile = Some(choice);
         self
     }
 
     /// Plan-time kernel autotuning (`--tune on|off`; default off).
     pub fn tune(mut self, tune: TuneMode) -> EngineBuilder {
-        self.tune = tune;
+        self.options.tune = tune;
         self
     }
 
     /// Worker thread count (default: all cores). Zero is a build
     /// error, not a silent clamp.
     pub fn threads(mut self, n: usize) -> EngineBuilder {
-        self.threads = n;
+        self.options.threads = n;
         self
     }
 
@@ -163,37 +118,59 @@ impl EngineBuilder {
 
     /// Seed for synthetic weight initialization (default 7).
     pub fn seed(mut self, seed: u64) -> EngineBuilder {
-        self.seed = seed;
+        self.options.seed = seed;
         self
+    }
+
+    /// Serve the ops-plane HTTP sidecar (`/healthz`, `/stats`,
+    /// `/metrics`, `POST /swap`) on `addr` (port 0 binds an
+    /// ephemeral port). Default: no sidecar.
+    pub fn http(mut self, addr: impl Into<String>) -> EngineBuilder {
+        self.options.http = Some(addr.into());
+        self
+    }
+
+    /// Attach a [`LocalDir`] checkpoint store rooted at `dir`,
+    /// enabling [`Engine::swap_model`] and `POST /swap`. Default: no
+    /// store (swaps are rejected).
+    pub fn store(mut self, dir: impl AsRef<Path>) -> EngineBuilder {
+        self.options.store = Some(dir.as_ref().to_path_buf());
+        self
+    }
+
+    /// The full option set.
+    pub fn engine_options(&self) -> &EngineOptions {
+        &self.options
     }
 
     /// The currently-selected backend (for callers that only need the
     /// parsed selection, e.g. the offline `tsne` feature extractor).
     pub fn backend_kind(&self) -> BackendKind {
-        self.backend
+        self.options.backend
     }
 
     /// The currently-selected thread count.
     pub fn thread_count(&self) -> usize {
-        self.threads
+        self.options.threads
     }
 
     /// The currently-selected kernel family.
     pub fn kernel_kind(&self) -> KernelKind {
-        self.kernel
+        self.options.kernel
     }
 
     /// The tile override, if any (`None` = respect the specs).
     pub fn tile_choice(&self) -> Option<TileChoice> {
-        self.tile
+        self.options.tile
     }
 
     /// The currently-selected autotuning mode.
     pub fn tune_mode(&self) -> TuneMode {
-        self.tune
+        self.options.tune
     }
 
-    /// Validate everything and start the engine thread.
+    /// Validate everything and start the engine thread (plus the
+    /// HTTP sidecar, when [`EngineBuilder::http`] is set).
     ///
     /// Checks, in order: at least one model, unique names, every spec
     /// valid (and matching its explicit weights, when given), threads
@@ -213,7 +190,8 @@ impl EngineBuilder {
                 return Err(EngineError::DuplicateModel(name.clone()));
             }
         }
-        if self.threads == 0 {
+        let o = self.options;
+        if o.threads == 0 {
             return Err(EngineError::ZeroThreads);
         }
         validate_policy(&self.policy)?;
@@ -223,7 +201,7 @@ impl EngineBuilder {
             // a layer property, so it must be settled before weight
             // shapes exist (and an inadmissible forced tile becomes a
             // typed spec error here, not an engine-thread panic)
-            let spec = match self.tile {
+            let spec = match o.tile {
                 Some(choice) => spec.with_tile(choice),
                 None => spec,
             };
@@ -241,15 +219,50 @@ impl EngineBuilder {
                     })?;
                     w
                 }
-                None => ModelWeights::init(&spec, self.seed),
+                None => ModelWeights::init(&spec, o.seed),
             };
             hosted.push(HostedModel { name, spec, weights });
         }
+        let buckets = self.policy.buckets.clone();
         let (handle, join) =
-            Server::start_hosted(hosted, self.backend, self.threads,
-                                 self.kernel, self.tune, self.policy)
+            Server::start_hosted(hosted, o.backend, o.threads,
+                                 o.kernel, o.tune, self.policy)
                 .map_err(|e| EngineError::Internal(format!("{e}")))?;
-        Ok(Engine::from_parts(handle, join))
+        let store: Option<Arc<dyn Store>> = o
+            .store
+            .as_ref()
+            .map(|dir| {
+                Arc::new(LocalDir::new(dir.clone())) as Arc<dyn Store>
+            });
+        let swap = Arc::new(SwapCtx {
+            handle: handle.clone(),
+            backend: o.backend,
+            threads: o.threads,
+            kernel: o.kernel,
+            tune: o.tune,
+            buckets,
+            store,
+        });
+        let (ops, http) = match &o.http {
+            Some(addr) => {
+                let hook = {
+                    let swap = Arc::clone(&swap);
+                    Box::new(move |name: &str, version: Option<u64>| {
+                        swap.swap(name, version)
+                            .map_err(|e| format!("{e}"))
+                    }) as _
+                };
+                let state = Arc::new(OpsState::new(handle.clone(),
+                                                   Some(hook)));
+                let server =
+                    HttpServer::start(addr, Arc::clone(&state))
+                        .map_err(|e| EngineError::Internal(
+                            format!("http sidecar: {e}")))?;
+                (Some(state), Some(server))
+            }
+            None => (None, None),
+        };
+        Ok(Engine::from_parts(handle, join, swap, ops, http))
     }
 }
 
@@ -311,69 +324,61 @@ mod tests {
     use super::*;
 
     #[test]
-    fn from_args_defaults_and_flags() {
+    fn from_args_routes_through_engine_options() {
+        // the detailed flag grammar is pinned by
+        // engine::options::tests; here: the builder consumes the one
+        // parser and exposes the result through its getters
         let args = Args::parse(Vec::<String>::new());
         let b = EngineBuilder::from_args(&args).unwrap();
-        assert_eq!(b.backend, BackendKind::Parallel);
-        assert_eq!(b.kernel, KernelKind::PointMajor);
-        assert!(b.threads >= 1);
+        assert_eq!(b.backend_kind(), BackendKind::Parallel);
+        assert_eq!(b.kernel_kind(), KernelKind::PointMajor);
+        assert!(b.thread_count() >= 1);
+        assert_eq!(b.tile_choice(), None);
+        assert_eq!(b.tune_mode(), TuneMode::Off);
+        assert_eq!(b.engine_options().http, None);
 
         let args = Args::parse(
             ["serve", "--backend", "scalar", "--threads", "3",
-             "--kernel", "legacy", "--seed", "9"].map(String::from));
-        let b = EngineBuilder::from_args(&args).unwrap();
-        assert_eq!((b.backend, b.threads, b.kernel, b.seed),
-                   (BackendKind::Scalar, 3, KernelKind::Legacy, 9));
-        // tile/tune default to "respect the spec" and "off"
-        assert_eq!(b.tile_choice(), None);
-        assert_eq!(b.tune_mode(), TuneMode::Off);
-    }
-
-    #[test]
-    fn from_args_parses_tile_and_tune() {
-        use crate::nn::matrices::TileSize;
-        let args = Args::parse(
-            ["serve", "--tile", "f4", "--tune", "on"]
+             "--kernel", "legacy", "--seed", "9",
+             "--http", "127.0.0.1:0", "--store", "ckpts"]
                 .map(String::from));
         let b = EngineBuilder::from_args(&args).unwrap();
-        assert_eq!(b.tile_choice(),
-                   Some(TileChoice::Fixed(TileSize::F4)));
-        assert_eq!(b.tune_mode(), TuneMode::On);
-        let args =
-            Args::parse(["serve", "--tile", "auto"].map(String::from));
-        let b = EngineBuilder::from_args(&args).unwrap();
-        assert_eq!(b.tile_choice(), Some(TileChoice::Auto));
-        // typos are typed errors, not silent defaults
-        let args =
-            Args::parse(["serve", "--tile", "f8"].map(String::from));
-        assert!(matches!(EngineBuilder::from_args(&args),
-                         Err(EngineError::BadOption { .. })));
-        let args =
-            Args::parse(["serve", "--tune", "yes"].map(String::from));
-        assert!(matches!(EngineBuilder::from_args(&args),
-                         Err(EngineError::BadOption { .. })));
-    }
-
-    #[test]
-    fn from_args_rejects_unknown_values() {
+        assert_eq!((b.backend_kind(), b.thread_count(),
+                    b.kernel_kind()),
+                   (BackendKind::Scalar, 3, KernelKind::Legacy));
+        assert_eq!(b.engine_options().seed, 9);
+        assert_eq!(b.engine_options().http.as_deref(),
+                   Some("127.0.0.1:0"));
+        assert!(b.engine_options().store.is_some());
+        // typed errors surface unchanged through the builder
         let args = Args::parse(
             ["serve", "--backend", "gpu"].map(String::from));
         assert_eq!(EngineBuilder::from_args(&args).unwrap_err(),
                    EngineError::BadOption { option: "backend".into(),
                                             value: "gpu".into() });
-        let args = Args::parse(
-            ["serve", "--kernel", "blocked"].map(String::from));
-        assert!(matches!(EngineBuilder::from_args(&args),
-                         Err(EngineError::BadOption { .. })));
-        // numeric typos must error, not silently fall back
-        let args = Args::parse(
-            ["serve", "--threads", "abc"].map(String::from));
-        assert!(matches!(EngineBuilder::from_args(&args),
-                         Err(EngineError::BadOption { .. })));
-        let args = Args::parse(
-            ["serve", "--seed", "1x"].map(String::from));
-        assert!(matches!(EngineBuilder::from_args(&args),
-                         Err(EngineError::BadOption { .. })));
+    }
+
+    #[test]
+    fn fluent_setters_update_options() {
+        use crate::nn::matrices::TileSize;
+        let b = EngineBuilder::new()
+            .backend(BackendKind::Scalar)
+            .kernel(KernelKind::Legacy)
+            .tile(TileChoice::Fixed(TileSize::F4))
+            .tune(TuneMode::On)
+            .threads(2)
+            .seed(11)
+            .http("127.0.0.1:0")
+            .store("ckpts");
+        let o = b.engine_options();
+        assert_eq!(o.backend, BackendKind::Scalar);
+        assert_eq!(o.kernel, KernelKind::Legacy);
+        assert_eq!(o.tile, Some(TileChoice::Fixed(TileSize::F4)));
+        assert_eq!(o.tune, TuneMode::On);
+        assert_eq!((o.threads, o.seed), (2, 11));
+        assert_eq!(o.http.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(o.store.as_deref(),
+                   Some(std::path::Path::new("ckpts")));
     }
 
     #[test]

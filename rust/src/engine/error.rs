@@ -56,6 +56,15 @@ pub enum EngineError {
         /// the payload's element count
         got: usize,
     },
+    /// A hot-swap failed: no store configured, checkpoint missing or
+    /// corrupt, geometry mismatch, or install rejection. The engine
+    /// keeps serving the previous weights.
+    Swap {
+        /// target model's registry name
+        model: String,
+        /// what went wrong (store/compile/install message)
+        reason: String,
+    },
     /// The engine thread has stopped; no further requests are served.
     Stopped,
     /// An engine-side failure that is not a caller error (propagated
@@ -91,6 +100,13 @@ impl fmt::Display for EngineError {
                         " (name=single|stackN|lenet|resnet20)"
                     }
                     "threads" | "seed" => " (expects a number)",
+                    "tile" => " (auto|f2|f4)",
+                    "tune" => " (on|off)",
+                    "http" => {
+                        " (expects a bind address, e.g. \
+                         127.0.0.1:9100)"
+                    }
+                    "store" => " (expects a directory path)",
                     _ => "",
                 };
                 write!(f,
@@ -106,6 +122,10 @@ impl fmt::Display for EngineError {
             EngineError::LengthMismatch { model, want, got } => {
                 write!(f, "model {model:?} expects {want} values, \
                            got {got}")
+            }
+            EngineError::Swap { model, reason } => {
+                write!(f, "hot-swap of model {model:?} failed \
+                           (still serving the old weights): {reason}")
             }
             EngineError::Stopped => write!(f, "engine stopped"),
             EngineError::Internal(msg) => {
@@ -143,6 +163,9 @@ mod tests {
             (EngineError::LengthMismatch { model: "e".into(),
                                            want: 4, got: 3 },
              "4 values"),
+            (EngineError::Swap { model: "f".into(),
+                                 reason: "no version 3".into() },
+             "no version 3"),
             (EngineError::Stopped, "stopped"),
             (EngineError::Internal("boom".into()), "boom"),
         ];

@@ -3,10 +3,10 @@
 //! This module is **the one way in**: in-process callers and the TCP
 //! front-end both construct the system through [`EngineBuilder`] and
 //! talk to it with typed [`InferRequest`]/[`InferResponse`] values.
-//! It replaces the scattered pre-engine surface — hand-filled
+//! It replaced the scattered pre-engine surface — hand-filled
 //! `NativeConfig` literals, `BackendKind::from_args` tuple returns,
-//! and shape-blind `Vec<f32>` buffers — which survives only as
-//! deprecated shims (see the README migration table).
+//! and shape-blind `Vec<f32>` buffers — whose deprecated shims were
+//! removed in 0.3.0 (see the README migration table).
 //!
 //! ## Quickstart
 //!
@@ -43,34 +43,138 @@
 //! dtype, plus int8 payload frames) while v1 f32 clients keep working
 //! bit-identically against the default model — see
 //! [`crate::coordinator::net`].
+//!
+//! ## Ops plane
+//!
+//! [`EngineBuilder::http`] attaches the observability sidecar
+//! ([`crate::coordinator::http`]: `/healthz`, `/stats`, `/metrics`,
+//! `POST /swap`); [`EngineBuilder::store`] attaches a versioned
+//! checkpoint store ([`crate::storage`]); and
+//! [`Engine::swap_model`] hot-swaps a model's weights from that
+//! store with zero dropped requests: plans are compiled off the
+//! engine thread (autotune pass included) on a backend of the same
+//! configuration, then installed atomically between batches. Live
+//! metrics come from [`Engine::stats`] as a typed
+//! [`MetricsSnapshot`].
 
 #![deny(missing_docs)]
 
 mod builder;
 mod error;
+mod options;
 mod types;
 
 pub use builder::{parse_model_spec, EngineBuilder};
 pub use error::EngineError;
+pub use options::EngineOptions;
 pub use types::{Dtype, InferRequest, InferResponse, ModelInfo,
                 Payload};
 
+use std::net::SocketAddr;
+use std::sync::Arc;
 use std::thread;
 
+use crate::coordinator::http::HttpServer;
+use crate::coordinator::http::OpsState;
+use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::net::NetServer;
-use crate::coordinator::server::{PendingInfer, ServerHandle,
-                                 ServerStats};
+use crate::coordinator::server::{PendingInfer, ServerHandle};
+use crate::nn::backend::{BackendKind, KernelKind};
+use crate::nn::plan::{ModelPlan, TuneMode};
+use crate::storage::Store;
+
+/// Everything a hot-swap needs, bundled so [`Engine::swap_model`]
+/// and the sidecar's `POST /swap` hook share one implementation: the
+/// serving handle, the backend configuration to compile replacement
+/// plans with (same backend/threads/kernel/tune as the serving
+/// instance), the bucket set, and the checkpoint store.
+pub(crate) struct SwapCtx {
+    pub(crate) handle: ServerHandle,
+    pub(crate) backend: BackendKind,
+    pub(crate) threads: usize,
+    pub(crate) kernel: KernelKind,
+    pub(crate) tune: TuneMode,
+    pub(crate) buckets: Vec<usize>,
+    pub(crate) store: Option<Arc<dyn Store>>,
+}
+
+impl SwapCtx {
+    /// Fetch -> validate -> compile (off the engine thread) ->
+    /// install. Returns the version now serving.
+    pub(crate) fn swap(&self, name: &str, version: Option<u64>)
+                       -> Result<u64, EngineError> {
+        let fail = |reason: String| EngineError::Swap {
+            model: name.to_string(),
+            reason,
+        };
+        let store = self.store.as_ref().ok_or_else(|| {
+            fail("no checkpoint store configured (--store / \
+                  EngineBuilder::store)".into())
+        })?;
+        let (idx, info) = self
+            .handle
+            .resolve(name)
+            .ok_or_else(|| {
+                EngineError::UnknownModel(name.to_string())
+            })?;
+        let in_shape = info.in_shape;
+        let out_shape = info.out_shape;
+        let ckpt = store
+            .fetch(name, version)
+            .map_err(|e| fail(format!("{e}")))?;
+        // the registry's geometry is immutable (clients negotiated
+        // shapes against it), so the checkpoint must match it exactly
+        let (out_c, out_hw) = ckpt
+            .spec
+            .validate()
+            .map_err(|e| fail(format!("{e}")))?;
+        let ckpt_in =
+            [ckpt.spec.in_channels, ckpt.spec.hw, ckpt.spec.hw];
+        if ckpt_in != in_shape {
+            return Err(fail(format!(
+                "checkpoint input shape {ckpt_in:?} does not match \
+                 the serving registry's {in_shape:?}")));
+        }
+        let ckpt_out = [out_c, out_hw, out_hw];
+        if ckpt_out != out_shape {
+            return Err(fail(format!(
+                "checkpoint output shape {ckpt_out:?} does not \
+                 match the serving registry's {out_shape:?}")));
+        }
+        ckpt.weights
+            .check(&ckpt.spec)
+            .map_err(|e| fail(format!("{e}")))?;
+        // compile on the CALLER's thread, on a backend built with
+        // the serving configuration — the engine keeps answering
+        // traffic on the old plans throughout (autotuning included)
+        let backend =
+            self.backend.build_with(self.threads, self.kernel);
+        let plans = ModelPlan::compile_buckets_tuned(
+            &ckpt.spec, &ckpt.weights, &self.buckets, self.tune,
+            &*backend)
+            .map_err(|e| fail(format!("{e}")))?;
+        self.handle
+            .install_plans(idx, ckpt.version, plans)
+            .map_err(|e| fail(format!("{e}")))?;
+        Ok(ckpt.version)
+    }
+}
 
 /// A running inference engine hosting a registry of named models.
 ///
 /// Construct with [`Engine::builder`]; submit typed requests with
 /// [`Engine::infer`] / [`Engine::infer_async`]; expose over TCP with
-/// [`Engine::listen`]; shut down with [`Engine::stop`]. Dropping an
-/// `Engine` without `stop()` ends the engine thread without a stats
-/// report.
+/// [`Engine::listen`]; observe with [`Engine::stats`] (or the HTTP
+/// sidecar); replace weights in place with [`Engine::swap_model`];
+/// shut down with [`Engine::stop`]. Dropping an `Engine` without
+/// `stop()` ends the engine thread without a stats report.
 pub struct Engine {
     handle: ServerHandle,
     join: Option<thread::JoinHandle<()>>,
+    swap: Arc<SwapCtx>,
+    /// sidecar request state; present iff the sidecar is enabled
+    ops: Option<Arc<OpsState>>,
+    http: Option<HttpServer>,
 }
 
 impl Engine {
@@ -80,8 +184,11 @@ impl Engine {
     }
 
     pub(crate) fn from_parts(handle: ServerHandle,
-                             join: thread::JoinHandle<()>) -> Engine {
-        Engine { handle, join: Some(join) }
+                             join: thread::JoinHandle<()>,
+                             swap: Arc<SwapCtx>,
+                             ops: Option<Arc<OpsState>>,
+                             http: Option<HttpServer>) -> Engine {
+        Engine { handle, join: Some(join), swap, ops, http }
     }
 
     /// The hosted models, in registration order (index 0 is the
@@ -149,15 +256,65 @@ impl Engine {
     /// Expose this engine over TCP (see
     /// [`crate::coordinator::net::NetServer::start`]). `addr` with
     /// port 0 binds an ephemeral port; `max_in_flight` is the
-    /// load-shedding admission cap.
+    /// load-shedding admission cap. When the HTTP sidecar is
+    /// enabled, the listener's live counters are wired into
+    /// `/stats` and `/metrics`.
     pub fn listen(&self, addr: &str, max_in_flight: usize)
                   -> Result<NetServer, EngineError> {
-        NetServer::start(self.handle.clone(), addr, max_in_flight)
-            .map_err(|e| EngineError::Internal(format!("{e}")))
+        let net =
+            NetServer::start(self.handle.clone(), addr, max_in_flight)
+                .map_err(|e| EngineError::Internal(format!("{e}")))?;
+        if let Some(ops) = &self.ops {
+            ops.set_net(net.counters_shared());
+        }
+        Ok(net)
     }
 
-    /// Stop the engine thread and collect its statistics.
-    pub fn stop(mut self) -> Result<ServerStats, EngineError> {
+    /// Live [`MetricsSnapshot`] — answered by the engine thread
+    /// between batches, TCP front-end counters merged in when a
+    /// listener is attached (sidecar enabled). The serving loop is
+    /// not paused.
+    pub fn stats(&self) -> Result<MetricsSnapshot, EngineError> {
+        match &self.ops {
+            Some(ops) => ops
+                .snapshot()
+                .map_err(|_| EngineError::Stopped),
+            None => {
+                self.handle.stats().map_err(|_| EngineError::Stopped)
+            }
+        }
+    }
+
+    /// Hot-swap `name`'s weights from the checkpoint store: fetch
+    /// `version` (or the latest when `None`), compile bucket plans
+    /// off the engine thread (autotune pass included), and install
+    /// them atomically between batches. Queued requests drain on the
+    /// plans they were batched with — nothing is dropped — and every
+    /// request submitted after this returns runs on the new weights.
+    /// Returns the version now serving.
+    ///
+    /// The checkpoint's geometry must match the registered model's
+    /// (clients negotiated shapes against the registry); a mismatch
+    /// is a typed [`EngineError::Swap`] and the old weights keep
+    /// serving.
+    pub fn swap_model(&self, name: &str, version: Option<u64>)
+                      -> Result<u64, EngineError> {
+        self.swap.swap(name, version)
+    }
+
+    /// The HTTP sidecar's bound address, when enabled (useful with
+    /// port 0).
+    pub fn http_addr(&self) -> Option<SocketAddr> {
+        self.http.as_ref().map(HttpServer::addr)
+    }
+
+    /// Stop the engine: shut the HTTP sidecar down first (no more
+    /// ops requests can race the teardown), then stop the engine
+    /// thread and collect the final [`MetricsSnapshot`].
+    pub fn stop(mut self) -> Result<MetricsSnapshot, EngineError> {
+        if let Some(http) = self.http.take() {
+            http.stop();
+        }
         let stats = self
             .handle
             .clone()

@@ -1,0 +1,180 @@
+//! [`EngineOptions`] — every engine-level CLI/config knob as one
+//! typed struct, with the **single** `--flag` parser
+//! ([`EngineOptions::from_args`]) shared by `serve`, `bench-serve`,
+//! and anything else that boots an engine. Adding an engine option
+//! means adding a field here, not threading another positional
+//! through `main.rs`.
+
+use std::path::PathBuf;
+
+use crate::nn::backend::{default_threads, BackendKind, KernelKind};
+use crate::nn::matrices::TileChoice;
+use crate::nn::plan::TuneMode;
+use crate::util::cli::Args;
+
+use super::error::EngineError;
+
+/// Typed engine configuration (everything except the model registry
+/// and batch policy, which have their own grammars).
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    /// compute backend (`--backend scalar|parallel|parallel-int8`)
+    pub backend: BackendKind,
+    /// worker threads (`--threads N`; 0 is a build error)
+    pub threads: usize,
+    /// kernel family (`--kernel legacy|pointmajor`)
+    pub kernel: KernelKind,
+    /// tile override (`--tile auto|f2|f4`); `None` respects each
+    /// spec's registered per-layer tiles
+    pub tile: Option<TileChoice>,
+    /// plan-time kernel autotuning (`--tune on|off`)
+    pub tune: TuneMode,
+    /// synthetic-weight seed (`--seed N`)
+    pub seed: u64,
+    /// ops-plane HTTP sidecar bind address (`--http ADDR`); `None`
+    /// disables the sidecar
+    pub http: Option<String>,
+    /// checkpoint store root (`--store DIR`); `None` disables
+    /// hot-swap
+    pub store: Option<PathBuf>,
+}
+
+impl Default for EngineOptions {
+    fn default() -> EngineOptions {
+        EngineOptions {
+            backend: BackendKind::Parallel,
+            threads: default_threads(),
+            kernel: KernelKind::default(),
+            tile: None,
+            tune: TuneMode::default(),
+            seed: 7,
+            http: None,
+            store: None,
+        }
+    }
+}
+
+impl EngineOptions {
+    /// The serving defaults: `parallel` backend on all cores,
+    /// point-major kernels, no tile override, tuning off, seed 7, no
+    /// sidecar, no store.
+    pub fn new() -> EngineOptions {
+        EngineOptions::default()
+    }
+
+    /// Parse `--backend`, `--threads`, `--kernel`, `--tile`,
+    /// `--tune`, `--seed`, `--http`, and `--store` from `args`.
+    /// Unknown values and numeric typos are typed
+    /// [`EngineError::BadOption`]s, never silent defaults.
+    pub fn from_args(args: &Args) -> Result<EngineOptions, EngineError> {
+        let mut o = EngineOptions::new();
+        if let Some(s) = args.get("backend") {
+            o.backend = BackendKind::parse(s).ok_or_else(|| {
+                EngineError::BadOption { option: "backend".into(),
+                                         value: s.into() }
+            })?;
+        }
+        if let Some(s) = args.get("kernel") {
+            o.kernel = KernelKind::parse(s).ok_or_else(|| {
+                EngineError::BadOption { option: "kernel".into(),
+                                         value: s.into() }
+            })?;
+        }
+        if let Some(s) = args.get("tile") {
+            o.tile = Some(TileChoice::parse(s).ok_or_else(|| {
+                EngineError::BadOption { option: "tile".into(),
+                                         value: s.into() }
+            })?);
+        }
+        if let Some(s) = args.get("tune") {
+            o.tune = TuneMode::parse(s).ok_or_else(|| {
+                EngineError::BadOption { option: "tune".into(),
+                                         value: s.into() }
+            })?;
+        }
+        if let Some(s) = args.get("threads") {
+            o.threads = s.parse().map_err(|_| {
+                EngineError::BadOption { option: "threads".into(),
+                                         value: s.into() }
+            })?;
+        }
+        if let Some(s) = args.get("seed") {
+            o.seed = s.parse().map_err(|_| {
+                EngineError::BadOption { option: "seed".into(),
+                                         value: s.into() }
+            })?;
+        }
+        if let Some(s) = args.get("http") {
+            if s.is_empty() {
+                return Err(EngineError::BadOption {
+                    option: "http".into(),
+                    value: s.into(),
+                });
+            }
+            o.http = Some(s.to_string());
+        }
+        if let Some(s) = args.get("store") {
+            if s.is_empty() {
+                return Err(EngineError::BadOption {
+                    option: "store".into(),
+                    value: s.into(),
+                });
+            }
+            o.store = Some(PathBuf::from(s));
+        }
+        Ok(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults() {
+        let o = EngineOptions::from_args(
+            &Args::parse(Vec::<String>::new())).unwrap();
+        assert_eq!(o.backend, BackendKind::Parallel);
+        assert_eq!(o.kernel, KernelKind::PointMajor);
+        assert!(o.threads >= 1);
+        assert_eq!(o.tile, None);
+        assert_eq!(o.tune, TuneMode::Off);
+        assert_eq!(o.seed, 7);
+        assert_eq!(o.http, None);
+        assert_eq!(o.store, None);
+    }
+
+    #[test]
+    fn parses_every_flag() {
+        use crate::nn::matrices::TileSize;
+        let args = Args::parse(
+            ["serve", "--backend", "scalar", "--threads", "3",
+             "--kernel", "legacy", "--tile", "f4", "--tune", "on",
+             "--seed", "9", "--http", "127.0.0.1:9100",
+             "--store", "ckpts"].map(String::from));
+        let o = EngineOptions::from_args(&args).unwrap();
+        assert_eq!((o.backend, o.threads, o.kernel, o.seed),
+                   (BackendKind::Scalar, 3, KernelKind::Legacy, 9));
+        assert_eq!(o.tile, Some(TileChoice::Fixed(TileSize::F4)));
+        assert_eq!(o.tune, TuneMode::On);
+        assert_eq!(o.http.as_deref(), Some("127.0.0.1:9100"));
+        assert_eq!(o.store, Some(PathBuf::from("ckpts")));
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        for bad in [
+            ["serve", "--backend", "gpu"],
+            ["serve", "--kernel", "blocked"],
+            ["serve", "--tile", "f8"],
+            ["serve", "--tune", "yes"],
+            ["serve", "--threads", "abc"],
+            ["serve", "--seed", "1x"],
+        ] {
+            let args = Args::parse(bad.map(String::from));
+            assert!(matches!(EngineOptions::from_args(&args),
+                             Err(EngineError::BadOption { .. })),
+                    "{bad:?} must be a typed error");
+        }
+    }
+}

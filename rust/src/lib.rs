@@ -15,9 +15,12 @@
 //!     executes artifacts,
 //!   - [`coordinator`]: inference router/batcher, the serving loop, the
 //!     TCP front-end ([`coordinator::net`]: framed wire protocol,
-//!     load-shedding admission, blocking client), and the training
-//!     driver that owns the l2-to-l1 exponent and learning-rate
-//!     schedules,
+//!     load-shedding admission, blocking client), the ops-plane HTTP
+//!     sidecar ([`coordinator::http`]: `/healthz`, `/stats`,
+//!     `/metrics`, `POST /swap`), and the training driver that owns
+//!     the l2-to-l1 exponent and learning-rate schedules,
+//!   - [`storage`]: versioned checkpoint store (publish -> fetch ->
+//!     hot-swap), local-directory backend behind an S3-shaped trait,
 //!   - [`nn`]: rust-native f32 + int8 adder/Winograd convolutions
 //!     (baselines, property tests, serving fallback), including
 //!     [`nn::backend`] — the multi-threaded CPU serving backends,
@@ -61,6 +64,7 @@ pub mod nn;
 pub mod opcount;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod storage;
 pub mod tsne;
 pub mod util;
 pub mod viz;

@@ -9,6 +9,10 @@
 //!   bench-serve  TCP serving benchmark: spawns the server plus N
 //!             closed-loop NetClient threads over localhost and writes
 //!             req/s + p50/p99 to BENCH_net.json (--smoke for CI)
+//!   engine    ops-plane verbs against the checkpoint store and a
+//!             running server's HTTP sidecar: `engine publish` writes
+//!             a versioned checkpoint, `engine swap` hot-swaps a
+//!             serving model over `POST /swap`
 //!   energy    Figure-1 relative-power report
 //!   opcount   Table-1 operation counts (exact, analytic)
 //!   fpga-sim  Table-2 FPGA cycle/resource/energy simulation
@@ -26,7 +30,8 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use wino_adder::coordinator::batcher::BatchPolicy;
-use wino_adder::coordinator::metrics::LatencyStats;
+use wino_adder::coordinator::metrics::{LatencyStats,
+                                       MetricsSnapshot};
 use wino_adder::coordinator::net::{proto, NetClient, NetClientV2,
                                    NetReply};
 use wino_adder::coordinator::server::ServerHandle;
@@ -48,6 +53,7 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("serve") => cmd_serve(&args),
         Some("bench-serve") => cmd_bench_serve(&args),
+        Some("engine") => cmd_engine(&args),
         Some("energy") => cmd_energy(&args),
         Some("opcount") => cmd_opcount(&args),
         Some("fpga-sim") => cmd_fpga(&args),
@@ -85,13 +91,20 @@ fn print_help() {
          \x20          [--models name=spec,...  spec: single|stackN|\n\
          \x20           lenet|resnet20  (multi-model registry)]\n\
          \x20          [--listen ADDR] [--max-in-flight N] [--duration-s N]\n\
+         \x20          [--http ADDR  ops sidecar: /healthz /stats\n\
+         \x20           /metrics POST /swap] [--store DIR] [--seed N]\n\
          \x20 bench-serve [--smoke] [--clients N] [--requests N]\n\
          \x20          [--pipeline D] [--max-in-flight N] [--out PATH]\n\
          \x20          [--proto v1|v2] [--dtype f32|int8]\n\
          \x20          [--backend ...] [--kernel ...] [--threads N]\n\
          \x20          [--tile auto|f2|f4] [--tune on|off]\n\
          \x20          [--model ...] [--cin N] [--cout N] [--hw N]\n\
-         \x20          [--max-wait-us N]\n\
+         \x20          [--max-wait-us N] [--http ADDR] [--store DIR]\n\
+         \x20 engine   publish --store DIR [--name NAME] [--seed N]\n\
+         \x20           [--model ...] [--cin N] [--cout N] [--hw N]\n\
+         \x20           [--variant ...]   write a versioned checkpoint\n\
+         \x20 engine   swap --addr HOST:PORT --model NAME [--version N]\n\
+         \x20           hot-swap a running server via its sidecar\n\
          \x20 energy   [--model resnet20|resnet32|resnet18]\n\
          \x20 opcount  [--model resnet20|resnet32|resnet18|lenet|resnet20-lite]\n\
          \x20 fpga-sim [--cin N --cout N --hw N --par N]\n\
@@ -254,6 +267,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("  model {:?}: in {:?} -> out {:?}",
                  m.name, m.in_shape, m.out_shape);
     }
+    if let Some(ops) = engine.http_addr() {
+        println!("  ops sidecar on http://{ops}/ (/healthz /stats \
+                  /metrics, POST /swap)");
+    }
     if let Some(listen) = args.get("listen") {
         let listen = listen.to_string();
         return serve_listen(engine, &listen, args);
@@ -290,9 +307,14 @@ fn serve_listen(engine: Engine, listen: &str, args: &Args)
     let mut stats = engine.stop()?;
     stats.net = Some(summary);
     println!("served {} requests in {} batches; latency {}",
-             stats.served, stats.batches, stats.latency_summary);
-    println!("per-model requests: {:?}", stats.per_model_requests);
-    println!("net: {}", stats.net.as_ref().unwrap().summary());
+             stats.server.served, stats.server.batches,
+             stats.latency);
+    for m in &stats.per_model {
+        println!("  model {:?}: {} requests", m.model, m.requests);
+    }
+    if let Some(net) = &stats.net {
+        println!("net: {net}");
+    }
     Ok(())
 }
 
@@ -363,6 +385,9 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let net = engine.listen(args.get_or("listen", "127.0.0.1:0"),
                             max_in_flight)?;
     let addr = net.local_addr();
+    if let Some(ops) = engine.http_addr() {
+        println!("  ops sidecar on http://{ops}/");
+    }
     println!("bench-serve: {total} closed-loop requests across \
               {clients} clients (pipeline {window}, proto {}, dtype \
               {}) -> {addr}",
@@ -416,11 +441,10 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
 
     let served = lat.count();
     let rps = served as f64 / elapsed.max(1e-9);
-    let (p50, p99) = (lat.percentile(50.0).unwrap_or(0),
-                      lat.percentile(99.0).unwrap_or(0));
+    let client = lat.summarize();
     println!("served {served} requests over TCP in {elapsed:.2}s \
               ({rps:.0} req/s), {} engine batches",
-             stats.batches);
+             stats.server.batches);
     println!("client latency: {}", lat.summary());
     println!("shed (busy) {busy_total}, reconnects {reconnects}");
     println!("net: {}", net_summary.summary());
@@ -429,19 +453,6 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     shape.insert("cin".into(), Json::Num(cin as f64));
     shape.insert("cout".into(), Json::Num(cout as f64));
     shape.insert("hw".into(), Json::Num(hw as f64));
-    let mut netj = BTreeMap::new();
-    netj.insert("connections".into(),
-                Json::Num(net_summary.connections as f64));
-    netj.insert("requests".into(),
-                Json::Num(net_summary.requests as f64));
-    netj.insert("responses".into(),
-                Json::Num(net_summary.responses as f64));
-    netj.insert("busy".into(), Json::Num(net_summary.busy as f64));
-    netj.insert("errors".into(), Json::Num(net_summary.errors as f64));
-    netj.insert("bytes_in".into(),
-                Json::Num(net_summary.bytes_in as f64));
-    netj.insert("bytes_out".into(),
-                Json::Num(net_summary.bytes_out as f64));
     let mut root = BTreeMap::new();
     root.insert("bench".into(), Json::Str("net_serving".into()));
     root.insert("smoke".into(), Json::Bool(smoke));
@@ -460,9 +471,12 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     root.insert("requests".into(), Json::Num(served as f64));
     root.insert("elapsed_s".into(), Json::Num(elapsed));
     root.insert("req_per_s".into(), Json::Num(rps));
-    root.insert("p50_us".into(), Json::Num(p50 as f64));
-    root.insert("p99_us".into(), Json::Num(p99 as f64));
-    root.insert("mean_us".into(), Json::Num(lat.mean_us()));
+    root.insert("p50_us".into(), Json::Num(client.p50_us as f64));
+    root.insert("p99_us".into(), Json::Num(client.p99_us as f64));
+    root.insert("mean_us".into(), Json::Num(client.mean_us));
+    // the full client-side distribution, typed (same shape as the
+    // `latency` section of the engine snapshot below)
+    root.insert("client_latency".into(), client.to_json());
     // with --pipeline D > 1 every request in a window is stamped with
     // the window's completion time (incl. Busy-retry backoff), so the
     // percentiles measure window latency, not per-request latency
@@ -474,11 +488,10 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
                 }));
     root.insert("busy".into(), Json::Num(busy_total as f64));
     root.insert("reconnects".into(), Json::Num(reconnects as f64));
-    root.insert("engine_batches".into(),
-                Json::Num(stats.batches as f64));
-    root.insert("engine_p50_us".into(), Json::Num(stats.p50_us as f64));
-    root.insert("engine_p99_us".into(), Json::Num(stats.p99_us as f64));
-    root.insert("net".into(), Json::Obj(netj));
+    // the engine's own unified MetricsSnapshot — identical to what
+    // the HTTP sidecar's /stats endpoint serves
+    root.insert("engine".into(), stats.to_json());
+    root.insert("net".into(), net_summary.to_json());
     let out_path = args.get_or("out", "BENCH_net.json");
     std::fs::write(out_path, Json::Obj(root).dump())
         .map_err(|e| anyhow!("writing {out_path}: {e}"))?;
@@ -576,6 +589,109 @@ fn bench_client_v2(addr: &str, in_shape: [usize; 3], dtype: Dtype,
     Ok((lat, busy, client.reconnects))
 }
 
+/// `engine <verb>` — ops-plane client verbs. `publish` writes a
+/// versioned checkpoint into a store directory; `swap` asks a
+/// running server (via its `--http` sidecar) to hot-swap a model
+/// from its own store.
+fn cmd_engine(args: &Args) -> Result<()> {
+    match args.verb.as_deref() {
+        Some("publish") => engine_publish(args),
+        Some("swap") => engine_swap(args),
+        other => Err(anyhow!(
+            "engine needs a verb: publish|swap (got {other:?}; see \
+             --help)")),
+    }
+}
+
+/// `engine publish --store DIR`: build a spec from the shared model
+/// flags, init seeded weights, and append a new version to the
+/// store's manifest. The same flags and seed as a `serve` invocation
+/// reproduce the server's boot weights; a different `--seed` gives a
+/// genuinely new checkpoint to swap in.
+fn engine_publish(args: &Args) -> Result<()> {
+    use wino_adder::nn::model::ModelWeights;
+    use wino_adder::storage::{LocalDir, Store};
+    let dir = args
+        .get("store")
+        .ok_or_else(|| anyhow!("engine publish needs --store DIR"))?;
+    let variant =
+        matrices::Variant::parse(args.get_or("variant", "A0"))
+            .ok_or_else(|| anyhow!("bad --variant (std|A0..A3)"))?;
+    let cin = args.get_usize("cin", 16);
+    let cout = args.get_usize("cout", 16);
+    let hw = args.get_usize("hw", 28);
+    let spec = serve_model(args, variant, cin, cout, hw)?
+        .unwrap_or_else(|| {
+            ModelSpec::single_layer(cin, cout, hw, variant)
+        });
+    let name = args.get_or("name", "default");
+    let seed = args.get_u64("seed", 7);
+    let weights = ModelWeights::init(&spec, seed);
+    let store = LocalDir::new(dir);
+    let version = store.publish(name, &spec, &weights)?;
+    println!("published {name:?} v{version} to {dir} ({} layers, \
+              seed {seed})",
+             spec.layers.len());
+    println!("swap it in with: wino-adder engine swap \
+              --addr HOST:PORT --model {name} --version {version}");
+    Ok(())
+}
+
+/// `engine swap --addr HOST:PORT --model NAME [--version N]`:
+/// `POST /swap` against a running server's ops sidecar.
+fn engine_swap(args: &Args) -> Result<()> {
+    let addr = args.get("addr").ok_or_else(|| {
+        anyhow!("engine swap needs --addr HOST:PORT (the serving \
+                 side's --http address)")
+    })?;
+    let model = args.get_or("model", "default");
+    let target = match args.get("version") {
+        Some(raw) => {
+            let v: u64 = raw.parse().map_err(|_| {
+                anyhow!("--version must be an unsigned integer, \
+                         got {raw:?}")
+            })?;
+            format!("/swap?model={model}&version={v}")
+        }
+        None => format!("/swap?model={model}"),
+    };
+    let (status, body) = http_post(addr, &target)?;
+    if status == 200 {
+        println!("swapped: {}", body.trim_end());
+        Ok(())
+    } else {
+        Err(anyhow!("swap failed (HTTP {status}): {}",
+                    body.trim_end()))
+    }
+}
+
+/// Minimal HTTP/1.0 POST against the ops sidecar: one request per
+/// connection, reply read to EOF. Returns `(status, body)`.
+fn http_post(addr: &str, target: &str) -> Result<(u16, String)> {
+    use std::io::{Read, Write};
+    let mut stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow!("connecting {addr}: {e}"))?;
+    stream
+        .write_all(format!("POST {target} HTTP/1.0\r\n\
+                            Host: {addr}\r\n\r\n")
+                       .as_bytes())
+        .map_err(|e| anyhow!("sending request: {e}"))?;
+    let mut raw = String::new();
+    stream
+        .read_to_string(&mut raw)
+        .map_err(|e| anyhow!("reading reply: {e}"))?;
+    let status: u16 = raw
+        .strip_prefix("HTTP/1.0 ")
+        .and_then(|rest| rest.split_whitespace().next())
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed reply: {raw:?}"))?;
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok((status, body))
+}
+
 #[cfg(feature = "pjrt")]
 fn serve_pjrt(args: &Args, n: usize, policy: BatchPolicy) -> Result<()> {
     use wino_adder::coordinator::server::Server;
@@ -618,16 +734,21 @@ fn send_load(handle: &ServerHandle, n: usize, sample: usize)
     Ok(t0.elapsed().as_secs_f64())
 }
 
-fn print_serve_stats(stats: &wino_adder::coordinator::server::ServerStats,
-                     elapsed: f64) {
+/// Human rendering of the engine's final [`MetricsSnapshot`] — the
+/// same typed value `/stats` and `/metrics` serialize.
+fn print_serve_stats(stats: &MetricsSnapshot, elapsed: f64) {
     println!("served {} requests in {} batches over {elapsed:.2}s \
               ({:.0} req/s)",
-             stats.served, stats.batches,
-             stats.served as f64 / elapsed.max(1e-9));
-    println!("latency: {}", stats.latency_summary);
-    println!("per-bucket batches: {:?}", stats.per_bucket);
-    println!("per-bucket requests: {:?}", stats.per_bucket_requests);
-    println!("per-model requests: {:?}", stats.per_model_requests);
+             stats.server.served, stats.server.batches,
+             stats.server.served as f64 / elapsed.max(1e-9));
+    println!("latency: {}", stats.latency);
+    for b in &stats.per_bucket {
+        println!("  bucket {:>3}: {} requests in {} batches",
+                 b.bucket, b.requests, b.batches);
+    }
+    for m in &stats.per_model {
+        println!("  model {:?}: {} requests", m.model, m.requests);
+    }
 }
 
 fn cmd_energy(args: &Args) -> Result<()> {

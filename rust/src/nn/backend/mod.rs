@@ -30,10 +30,10 @@
 //! everywhere else.
 //!
 //! Selection is wired through `--backend {scalar|parallel|
-//! parallel-int8}`, `--threads N`, and `--kernel` (see
-//! [`BackendKind::from_args`]), used by `wino-adder serve`,
-//! `bench-serve`, the serving fallback in `coordinator::server`, and
-//! the benches.
+//! parallel-int8}`, `--threads N`, and `--kernel`, parsed by
+//! [`crate::engine::EngineOptions::from_args`] into typed values
+//! that `wino-adder serve`, `bench-serve`, the serving fallback in
+//! `coordinator::server`, and the benches all consume.
 
 pub mod kernel;
 pub mod pool;
@@ -50,7 +50,6 @@ pub use scalar::ScalarBackend;
 use super::matrices::{TileSize, Variant};
 use super::plan::Workspace;
 use super::Tensor;
-use crate::util::cli::Args;
 
 /// One layer's compiled kernel configuration — the unit the plan-time
 /// autotuner (`nn::plan`) selects per (layer geometry x thread count x
@@ -275,28 +274,6 @@ impl BackendKind {
         }
     }
 
-    /// Read `--backend NAME` (default `parallel`), `--threads N`
-    /// (default: all cores), and `--kernel NAME` (default
-    /// `pointmajor`) from parsed CLI args. `None` means the
-    /// `--backend` or `--kernel` value was not recognised.
-    #[deprecated(
-        since = "0.2.0",
-        note = "use `engine::EngineBuilder::from_args`, which returns \
-                a typed `EngineError` instead of a bare Option"
-    )]
-    pub fn from_args(args: &Args)
-                     -> Option<(BackendKind, usize, KernelKind)> {
-        let kind = match args.get("backend") {
-            Some(s) => BackendKind::parse(s)?,
-            None => BackendKind::Parallel,
-        };
-        let kernel = match args.get("kernel") {
-            Some(s) => KernelKind::parse(s)?,
-            None => KernelKind::default(),
-        };
-        Some((kind, args.get_usize("threads", default_threads()),
-              kernel))
-    }
 }
 
 /// Number of hardware threads (1 if unknown).
@@ -317,40 +294,6 @@ mod tests {
         }
         assert_eq!(BackendKind::parse("pjrt"), None);
         assert_eq!(BackendKind::parse(""), None);
-    }
-
-    // the deprecated shim must keep its documented behavior until it
-    // is removed — the engine builder's `from_args` is the replacement
-    #[test]
-    #[allow(deprecated)]
-    fn from_args_defaults_to_parallel_pointmajor() {
-        let args = Args::parse(Vec::<String>::new());
-        let (kind, threads, kernel) =
-            BackendKind::from_args(&args).unwrap();
-        assert_eq!(kind, BackendKind::Parallel);
-        assert_eq!(kernel, KernelKind::PointMajor);
-        assert!(threads >= 1);
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn from_args_rejects_unknown() {
-        let args = Args::parse(
-            ["serve", "--backend", "gpu"].map(String::from));
-        assert!(BackendKind::from_args(&args).is_none());
-        let args = Args::parse(
-            ["serve", "--kernel", "blocked"].map(String::from));
-        assert!(BackendKind::from_args(&args).is_none());
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn from_args_reads_threads_and_kernel() {
-        let args = Args::parse(
-            ["serve", "--backend", "scalar", "--threads", "3",
-             "--kernel", "legacy"].map(String::from));
-        assert_eq!(BackendKind::from_args(&args),
-                   Some((BackendKind::Scalar, 3, KernelKind::Legacy)));
     }
 
     #[test]

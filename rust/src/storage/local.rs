@@ -1,0 +1,347 @@
+//! [`LocalDir`]: the filesystem [`Store`] backend.
+//!
+//! Checkpoint payloads reuse the `nn::model` on-disk format
+//! (`model.json` + `model.params.bin`), so anything `wino-adder`
+//! can save is publishable and anything fetched is loadable by the
+//! standard path. The manifest is rewritten atomically (temp file +
+//! rename) on every publish.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use super::{validate_model_name, Checkpoint, Store};
+use crate::nn::model::{self, ModelSpec, ModelWeights};
+use crate::util::error::{anyhow, Context, Result};
+use crate::util::json::Json;
+
+/// Marker value of the manifest's `store` key; a manifest claiming a
+/// different format is rejected rather than misread.
+const STORE_FORMAT: &str = "wino-adder-checkpoints-v1";
+
+/// One manifest row.
+#[derive(Debug, Clone)]
+struct ManifestEntry {
+    model: String,
+    version: u64,
+    /// architecture descriptor (`ModelSpec::name`), informational
+    spec: String,
+    /// checkpoint directory, relative to the store root
+    weights: String,
+}
+
+/// A checkpoint store rooted at a local directory. Safe to share
+/// behind an `Arc`: publishes serialize on an internal lock, and
+/// fetches read immutable, already-published files.
+pub struct LocalDir {
+    root: PathBuf,
+    /// serializes read-modify-write cycles on the manifest
+    publish_lock: Mutex<()>,
+}
+
+impl LocalDir {
+    /// Open (or lazily create on first publish) a store at `root`.
+    pub fn new(root: impl Into<PathBuf>) -> LocalDir {
+        LocalDir { root: root.into(), publish_lock: Mutex::new(()) }
+    }
+
+    /// The store's root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn manifest_path(&self) -> PathBuf {
+        self.root.join("manifest.json")
+    }
+
+    /// Parse the manifest; a missing file is an empty store, but a
+    /// present-and-malformed one is an error (a corrupt index must
+    /// never read as "no checkpoints").
+    fn read_manifest(&self) -> Result<Vec<ManifestEntry>> {
+        let path = self.manifest_path();
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(Vec::new());
+            }
+            Err(e) => {
+                return Err(anyhow!("reading {}: {e}", path.display()));
+            }
+        };
+        let j = Json::parse(&text).map_err(|e| {
+            anyhow!("corrupt manifest {}: {e}", path.display())
+        })?;
+        let format = j.get("store").and_then(Json::as_str);
+        if format != Some(STORE_FORMAT) {
+            return Err(anyhow!(
+                "corrupt manifest {}: store format {:?}, expected \
+                 {STORE_FORMAT:?}",
+                path.display(), format.unwrap_or("<missing>")));
+        }
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| {
+                anyhow!("corrupt manifest {}: missing `entries` list",
+                        path.display())
+            })?;
+        let mut out = Vec::with_capacity(entries.len());
+        for (i, e) in entries.iter().enumerate() {
+            let field = |k: &str| {
+                e.get(k).and_then(Json::as_str).map(str::to_string)
+            };
+            let model = field("model").ok_or_else(|| {
+                anyhow!("corrupt manifest entry {i}: missing `model`")
+            })?;
+            let weights = field("weights").ok_or_else(|| {
+                anyhow!("corrupt manifest entry {i}: missing \
+                         `weights`")
+            })?;
+            let version = e
+                .get("version")
+                .and_then(Json::as_f64)
+                .filter(|v| v.fract() == 0.0 && *v >= 1.0)
+                .ok_or_else(|| {
+                    anyhow!("corrupt manifest entry {i}: `version` \
+                             must be a positive integer")
+                })? as u64;
+            out.push(ManifestEntry {
+                model,
+                version,
+                spec: field("spec").unwrap_or_default(),
+                weights,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Serialize and atomically replace the manifest.
+    fn write_manifest(&self, entries: &[ManifestEntry]) -> Result<()> {
+        let rows = entries
+            .iter()
+            .map(|e| {
+                let mut o = BTreeMap::new();
+                o.insert("model".to_string(),
+                         Json::Str(e.model.clone()));
+                o.insert("version".to_string(),
+                         Json::Num(e.version as f64));
+                o.insert("spec".to_string(),
+                         Json::Str(e.spec.clone()));
+                o.insert("weights".to_string(),
+                         Json::Str(e.weights.clone()));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("store".to_string(),
+                   Json::Str(STORE_FORMAT.to_string()));
+        top.insert("entries".to_string(), Json::Arr(rows));
+        let text = Json::Obj(top).dump();
+        let path = self.manifest_path();
+        let tmp = self.root.join("manifest.json.tmp");
+        std::fs::write(&tmp, text)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).with_context(|| {
+            format!("renaming manifest into {}", path.display())
+        })
+    }
+}
+
+impl Store for LocalDir {
+    fn publish(&self, model: &str, spec: &ModelSpec,
+               weights: &ModelWeights) -> Result<u64> {
+        validate_model_name(model)?;
+        // a poisoned lock means a prior publish died mid-write;
+        // surface it as an error rather than compounding the damage
+        let _guard = self.publish_lock.lock().map_err(|_| {
+            anyhow!("checkpoint store lock poisoned")
+        })?;
+        let mut entries = self.read_manifest()?;
+        let version = entries
+            .iter()
+            .filter(|e| e.model == model)
+            .map(|e| e.version)
+            .max()
+            .unwrap_or(0)
+            + 1;
+        let rel = format!("{model}/v{version}");
+        let dir = self.root.join(&rel);
+        std::fs::create_dir_all(&dir).with_context(|| {
+            format!("creating checkpoint dir {}", dir.display())
+        })?;
+        model::save(&dir, spec, weights).with_context(|| {
+            format!("publishing {model} v{version}")
+        })?;
+        entries.push(ManifestEntry {
+            model: model.to_string(),
+            version,
+            spec: spec.name.clone(),
+            weights: rel,
+        });
+        self.write_manifest(&entries)?;
+        Ok(version)
+    }
+
+    fn fetch(&self, model: &str, version: Option<u64>)
+             -> Result<Checkpoint> {
+        validate_model_name(model)?;
+        let entries = self.read_manifest()?;
+        let mut mine: Vec<&ManifestEntry> =
+            entries.iter().filter(|e| e.model == model).collect();
+        mine.sort_by_key(|e| e.version);
+        let entry = match version {
+            Some(v) => mine.iter().find(|e| e.version == v).copied(),
+            None => mine.last().copied(),
+        }
+        .ok_or_else(|| match version {
+            Some(v) => anyhow!(
+                "model {model:?} has no version {v} in the store \
+                 (published: {:?})",
+                mine.iter().map(|e| e.version).collect::<Vec<_>>()),
+            None => anyhow!("model {model:?} is not in the store"),
+        })?;
+        let dir = self.root.join(&entry.weights);
+        let (spec, weights) = model::load(&dir).with_context(|| {
+            format!("loading checkpoint {model} v{}", entry.version)
+        })?;
+        Ok(Checkpoint {
+            model: model.to_string(),
+            version: entry.version,
+            spec,
+            weights,
+        })
+    }
+
+    fn versions(&self, model: &str) -> Result<Vec<u64>> {
+        validate_model_name(model)?;
+        let mut v: Vec<u64> = self
+            .read_manifest()?
+            .iter()
+            .filter(|e| e.model == model)
+            .map(|e| e.version)
+            .collect();
+        v.sort_unstable();
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::matrices::Variant;
+
+    fn tmp_store(tag: &str) -> LocalDir {
+        let dir = std::env::temp_dir()
+            .join(format!("wino_adder_store_{tag}_{}",
+                          std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        LocalDir::new(dir)
+    }
+
+    fn tiny_spec() -> (ModelSpec, ModelWeights) {
+        let spec =
+            ModelSpec::single_layer(2, 3, 8, Variant::Balanced(0));
+        let weights = ModelWeights::init(&spec, 7);
+        (spec, weights)
+    }
+
+    #[test]
+    fn publish_fetch_round_trip() {
+        let store = tmp_store("roundtrip");
+        let (spec, weights) = tiny_spec();
+        assert_eq!(store.publish("m", &spec, &weights).unwrap(), 1);
+        let w2 = ModelWeights::init(&spec, 99);
+        assert_eq!(store.publish("m", &spec, &w2).unwrap(), 2);
+        assert_eq!(store.versions("m").unwrap(), vec![1, 2]);
+
+        // explicit version: the original weights, bit-exact
+        let v1 = store.fetch("m", Some(1)).unwrap();
+        assert_eq!(v1.version, 1);
+        assert_eq!(v1.spec.name, spec.name);
+        // latest: version 2's weights, not version 1's
+        let latest = store.fetch("m", None).unwrap();
+        assert_eq!(latest.version, 2);
+        let flat = |w: &ModelWeights| -> Vec<f32> {
+            w.params.iter().flat_map(|p| p.data.clone()).collect()
+        };
+        assert_eq!(flat(&latest.weights), flat(&w2));
+        assert_ne!(flat(&latest.weights), flat(&v1.weights));
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn missing_model_and_version_are_errors() {
+        let store = tmp_store("missing");
+        let (spec, weights) = tiny_spec();
+        // empty store (no manifest yet) is empty, not an error
+        assert_eq!(store.versions("m").unwrap(), Vec::<u64>::new());
+        assert!(store.fetch("m", None).is_err());
+        store.publish("m", &spec, &weights).unwrap();
+        let err = store.fetch("m", Some(9)).unwrap_err();
+        assert!(format!("{err}").contains("no version 9"), "{err}");
+        assert!(store.fetch("other", None).is_err());
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn hostile_model_names_are_rejected() {
+        let store = tmp_store("names");
+        let (spec, weights) = tiny_spec();
+        for bad in ["../escape", "a/b", "", ".hidden"] {
+            assert!(store.publish(bad, &spec, &weights).is_err(),
+                    "{bad:?} must be rejected");
+            assert!(store.fetch(bad, None).is_err());
+        }
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn corrupt_manifest_is_rejected_not_empty() {
+        let store = tmp_store("corrupt");
+        let (spec, weights) = tiny_spec();
+        store.publish("m", &spec, &weights).unwrap();
+        let manifest = store.root().join("manifest.json");
+
+        // truncated JSON
+        std::fs::write(&manifest, "{\"store\": \"wino").unwrap();
+        let err = store.fetch("m", None).unwrap_err();
+        assert!(format!("{err}").contains("corrupt manifest"),
+                "{err}");
+        // publish must refuse too: versions could be reassigned
+        assert!(store.publish("m", &spec, &weights).is_err());
+
+        // valid JSON, wrong format marker
+        std::fs::write(&manifest,
+                       "{\"store\": \"other\", \"entries\": []}")
+            .unwrap();
+        assert!(store.fetch("m", None).is_err());
+
+        // valid JSON, missing entries
+        std::fs::write(&manifest,
+                       format!("{{\"store\": {STORE_FORMAT:?}}}"))
+            .unwrap();
+        assert!(store.fetch("m", None).is_err());
+
+        // entry with a non-integer version
+        std::fs::write(
+            &manifest,
+            format!("{{\"store\": {STORE_FORMAT:?}, \"entries\": \
+                     [{{\"model\": \"m\", \"version\": 1.5, \
+                     \"weights\": \"m/v1\"}}]}}"))
+            .unwrap();
+        let err = store.fetch("m", None).unwrap_err();
+        assert!(format!("{err}").contains("version"), "{err}");
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn manifest_survives_reopen() {
+        let store = tmp_store("reopen");
+        let (spec, weights) = tiny_spec();
+        store.publish("m", &spec, &weights).unwrap();
+        let reopened = LocalDir::new(store.root().to_path_buf());
+        assert_eq!(reopened.versions("m").unwrap(), vec![1]);
+        assert_eq!(reopened.fetch("m", None).unwrap().version, 1);
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+}

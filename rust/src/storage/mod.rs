@@ -1,0 +1,105 @@
+//! Versioned checkpoint storage: the publish -> serve path.
+//!
+//! A [`Store`] holds immutable, versioned checkpoints of named
+//! models. Training (or an offline converter) **publishes** a
+//! `(spec, weights)` pair and receives a monotonically increasing
+//! version number; the serving side **fetches** a checkpoint by
+//! `(model, version)` — or the latest — and hot-swaps it into the
+//! running engine ([`crate::engine::Engine::swap_model`]) without
+//! dropping a request.
+//!
+//! The trait is deliberately S3-shaped (publish / fetch / list by
+//! key, no partial updates, no in-place mutation) so an object-store
+//! backend can slot in later; today's backend is [`LocalDir`], a
+//! plain directory tree:
+//!
+//! ```text
+//! <root>/manifest.json             # index of every checkpoint
+//! <root>/<model>/v<N>/model.json   # spec (nn::model::save format)
+//! <root>/<model>/v<N>/model.params.bin
+//! ```
+//!
+//! The manifest is the source of truth: a checkpoint directory that
+//! is not listed does not exist, and a corrupt manifest is a typed
+//! load error, never a partial read.
+
+mod local;
+
+pub use local::LocalDir;
+
+use crate::nn::model::{ModelSpec, ModelWeights};
+use crate::util::error::{anyhow, Result};
+
+/// One fetched checkpoint: the model's registry name, its version in
+/// the store, and the deserialized spec + weights.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// registry name the checkpoint was published under
+    pub model: String,
+    /// store version (1-based, monotonically increasing per model)
+    pub version: u64,
+    /// architecture, exactly as published
+    pub spec: ModelSpec,
+    /// parameters, validated against `spec` at load time
+    pub weights: ModelWeights,
+}
+
+/// A versioned checkpoint store. Implementations are shared across
+/// threads (the engine facade keeps one behind an `Arc` so swap
+/// requests can fetch from any thread).
+pub trait Store: Send + Sync {
+    /// Publish `spec` + `weights` as the next version of `model`;
+    /// returns the version number assigned (1 for a new model).
+    fn publish(&self, model: &str, spec: &ModelSpec,
+               weights: &ModelWeights) -> Result<u64>;
+
+    /// Fetch a checkpoint of `model`: a specific `version`, or the
+    /// latest when `None`. Unknown models/versions are errors.
+    fn fetch(&self, model: &str, version: Option<u64>)
+             -> Result<Checkpoint>;
+
+    /// All published versions of `model`, ascending (empty when the
+    /// model is unknown).
+    fn versions(&self, model: &str) -> Result<Vec<u64>>;
+}
+
+/// Model names become path components (`<root>/<model>/v<N>`), so
+/// the charset is locked down: ASCII alphanumerics plus `-_.`, no
+/// leading dot, non-empty. Rejects traversal (`..`), separators, and
+/// anything an object-store key would mangle.
+pub fn validate_model_name(name: &str) -> Result<()> {
+    if name.is_empty() {
+        return Err(anyhow!("model name must be non-empty"));
+    }
+    if name.starts_with('.') {
+        return Err(anyhow!(
+            "model name {name:?} must not start with '.'"));
+    }
+    let ok = name.chars().all(|c| {
+        c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.')
+    });
+    if !ok {
+        return Err(anyhow!(
+            "model name {name:?} may only contain ASCII \
+             alphanumerics, '-', '_', and '.'"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_name_charset() {
+        assert!(validate_model_name("resnet20-v2_a.1").is_ok());
+        assert!(validate_model_name("default").is_ok());
+        assert!(validate_model_name("").is_err());
+        assert!(validate_model_name("..").is_err());
+        assert!(validate_model_name(".hidden").is_err());
+        assert!(validate_model_name("a/b").is_err());
+        assert!(validate_model_name("a\\b").is_err());
+        assert!(validate_model_name("a b").is_err());
+        assert!(validate_model_name("naïve").is_err());
+    }
+}

@@ -1,6 +1,8 @@
 //! Tiny flag parser for the `wino-adder` binary (offline clap stand-in).
 //!
-//! Grammar: `wino-adder <subcommand> [--flag value | --switch] ...`.
+//! Grammar: `wino-adder <subcommand> [verb] [--flag value |
+//! --switch] ...` — the optional bare `verb` serves two-level
+//! commands like `engine publish` / `engine swap`.
 //!
 //! Backend selection convention (shared by `serve`, `tsne`, and the
 //! scaling bench): `--backend scalar|parallel|parallel-int8` plus
@@ -21,10 +23,15 @@
 
 use std::collections::BTreeMap;
 
-/// Parsed command line: subcommand + `--key value` flags + bare switches.
+/// Parsed command line: subcommand + optional verb + `--key value`
+/// flags + bare switches.
 #[derive(Debug, Default)]
 pub struct Args {
     pub subcommand: Option<String>,
+    /// Second bare token, for two-level subcommands
+    /// (`engine publish`, `engine swap`). Must come right after the
+    /// subcommand, before any `--flag`.
+    pub verb: Option<String>,
     pub flags: BTreeMap<String, String>,
     pub switches: Vec<String>,
 }
@@ -37,6 +44,11 @@ impl Args {
         if let Some(first) = it.peek() {
             if !first.starts_with("--") {
                 out.subcommand = it.next();
+                if let Some(second) = it.peek() {
+                    if !second.starts_with("--") {
+                        out.verb = it.next();
+                    }
+                }
             }
         }
         while let Some(a) = it.next() {
@@ -113,6 +125,21 @@ mod tests {
     fn no_subcommand() {
         let a = parse("--help");
         assert_eq!(a.subcommand, None);
+        assert_eq!(a.verb, None);
         assert!(a.has("help"));
+    }
+
+    #[test]
+    fn two_level_subcommand() {
+        let a = parse("engine swap --model tiny --version 2");
+        assert_eq!(a.subcommand.as_deref(), Some("engine"));
+        assert_eq!(a.verb.as_deref(), Some("swap"));
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.get("version"), Some("2"));
+        // single-level commands keep verb empty even with flags
+        let b = parse("serve --model lenet");
+        assert_eq!(b.subcommand.as_deref(), Some("serve"));
+        assert_eq!(b.verb, None);
+        assert_eq!(b.get("model"), Some("lenet"));
     }
 }

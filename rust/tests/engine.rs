@@ -133,9 +133,14 @@ fn request_validation_is_typed_and_pre_enqueue() {
         .unwrap();
     assert_eq!((yb.model.as_str(), yb.data.len()), ("b", 16 * 8 * 8));
     let stats = engine.stop().unwrap();
-    assert_eq!(stats.served, 2,
+    assert_eq!(stats.server.served, 2,
                "rejected requests must never be enqueued");
-    assert_eq!(stats.per_model_requests,
+    let per_model: Vec<(String, u64)> = stats
+        .per_model
+        .iter()
+        .map(|m| (m.model.clone(), m.requests))
+        .collect();
+    assert_eq!(per_model,
                vec![("a".to_string(), 1), ("b".to_string(), 1)]);
 }
 
@@ -254,7 +259,8 @@ fn v2_hello_rejections_and_session_rules() {
 
     net.stop();
     let stats = engine.stop().unwrap();
-    assert_eq!(stats.served, 1, "only the well-formed request ran");
+    assert_eq!(stats.server.served, 1,
+               "only the well-formed request ran");
 }
 
 /// Acceptance: two-model routing returns bit-identical results to two
@@ -305,7 +311,12 @@ fn two_model_engine_matches_two_single_model_engines() {
                    "model b diverged between multi and single");
     }
     let stats = both.stop().unwrap();
-    assert_eq!(stats.per_model_requests,
+    let per_model: Vec<(String, u64)> = stats
+        .per_model
+        .iter()
+        .map(|m| (m.model.clone(), m.requests))
+        .collect();
+    assert_eq!(per_model,
                vec![("a".to_string(), 4), ("b".to_string(), 4)]);
     only_a.stop().unwrap();
     only_b.stop().unwrap();

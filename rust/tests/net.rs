@@ -66,7 +66,8 @@ fn net_path_matches_in_process_bit_for_bit() {
 
     let mut stats = engine.stop().unwrap();
     stats.net = Some(summary);
-    assert_eq!(stats.served, 10); // 5 in-process + 5 over the wire
+    // 5 in-process + 5 over the wire
+    assert_eq!(stats.server.served, 10);
     assert_eq!(stats.net.as_ref().unwrap().responses, 5);
 }
 
@@ -259,5 +260,5 @@ fn serves_concurrent_connections() {
     assert_eq!(summary.responses, 24);
     assert_eq!(summary.requests, 24);
     let stats = engine.stop().unwrap();
-    assert_eq!(stats.served, 24);
+    assert_eq!(stats.server.served, 24);
 }

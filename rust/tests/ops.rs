@@ -1,0 +1,274 @@
+//! Ops-plane integration tests: zero-downtime hot-swap under live
+//! network traffic, and the HTTP sidecar driving the same swap path
+//! end to end over real sockets.
+//!
+//! The swap-under-load test is the tentpole's acceptance gate: client
+//! threads hammer the TCP front-end with `NetClientV2` while
+//! `Engine::swap_model` replaces the default model's weights from the
+//! checkpoint store. Every reply must be well-formed and bit-exact
+//! against exactly one of the two weight generations (Scalar backend
+//! -> deterministic outputs), nothing may error, and every request
+//! submitted after the swap returns must match the new weights.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use wino_adder::coordinator::batcher::BatchPolicy;
+use wino_adder::coordinator::net::NetClientV2;
+use wino_adder::engine::{Dtype, Engine, EngineError, InferRequest};
+use wino_adder::nn::backend::{BackendKind, KernelKind};
+use wino_adder::nn::matrices::Variant;
+use wino_adder::nn::model::{ModelSpec, ModelWeights};
+use wino_adder::nn::plan::ModelPlan;
+use wino_adder::storage::{LocalDir, Store};
+use wino_adder::util::rng::Rng;
+
+const SHAPE: [usize; 3] = [2, 8, 8];
+const SAMPLE: usize = 2 * 8 * 8;
+
+fn spec() -> ModelSpec {
+    ModelSpec::single_layer(2, 3, 8, Variant::Balanced(0))
+}
+
+/// Fresh per-test store directory under the OS temp dir.
+fn store_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("wino_adder_ops_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Ground truth for one input under `weights`: a freshly compiled
+/// single-sample plan on the same Scalar backend the engine serves
+/// with (deterministic -> bit-exact comparisons are valid).
+fn expected(spec: &ModelSpec, weights: &ModelWeights, x: &[f32])
+            -> Vec<f32> {
+    let backend = BackendKind::Scalar
+        .build_with(1, KernelKind::default());
+    let mut plan = ModelPlan::compile(spec, weights, 1).unwrap();
+    plan.forward(&*backend, x).to_vec()
+}
+
+/// Publish v1 (the boot weights, seed 7) and v2 (retrained stand-in,
+/// seed 1234) of `model` into a fresh store at `dir`.
+fn publish_two_versions(dir: &Path, model: &str)
+                        -> (ModelWeights, ModelWeights) {
+    let spec = spec();
+    let w1 = ModelWeights::init(&spec, 7);
+    let w2 = ModelWeights::init(&spec, 1234);
+    let store = LocalDir::new(dir.to_path_buf());
+    assert_eq!(store.publish(model, &spec, &w1).unwrap(), 1);
+    assert_eq!(store.publish(model, &spec, &w2).unwrap(), 2);
+    (w1, w2)
+}
+
+fn ops_engine(dir: &Path, http: bool) -> Engine {
+    let mut b = Engine::builder()
+        .model("default", spec())
+        .backend(BackendKind::Scalar)
+        .threads(1)
+        .seed(7)
+        .batch(BatchPolicy { buckets: vec![1], max_wait_us: 0 })
+        .store(dir);
+    if http {
+        b = b.http("127.0.0.1:0");
+    }
+    b.build().unwrap()
+}
+
+/// One raw HTTP/1.0 exchange; returns (status, body).
+fn http(addr: SocketAddr, request: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(request.as_bytes()).unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    let status: u16 = raw
+        .strip_prefix("HTTP/1.0 ")
+        .and_then(|rest| rest.split_whitespace().next())
+        .and_then(|code| code.parse().ok())
+        .expect("malformed status line");
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+#[test]
+fn swap_under_load_drops_nothing_and_lands_bit_exact() {
+    let dir = store_dir("load");
+    let (w1, w2) = publish_two_versions(&dir, "default");
+    let spec = spec();
+    let x = Rng::new(42).normal_vec(SAMPLE);
+    let y1 = expected(&spec, &w1, &x);
+    let y2 = expected(&spec, &w2, &x);
+    assert_ne!(y1, y2, "the two weight generations must differ");
+
+    // boot serves seed-7 weights == store v1
+    let engine = ops_engine(&dir, false);
+    let net = engine.listen("127.0.0.1:0", 64).unwrap();
+    let addr = net.local_addr().to_string();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut clients = Vec::new();
+    for c in 0..3 {
+        let addr = addr.clone();
+        let stop = Arc::clone(&stop);
+        let (x, y1, y2) = (x.clone(), y1.clone(), y2.clone());
+        clients.push(thread::spawn(move || -> (u64, u64) {
+            let mut client =
+                NetClientV2::connect(&addr, "default", SHAPE,
+                                     Dtype::F32)
+                    .unwrap();
+            let (mut old, mut new) = (0u64, 0u64);
+            while !stop.load(Ordering::SeqCst) {
+                let y = client.infer(&x).expect("infer during swap");
+                if y == y1 {
+                    old += 1;
+                } else if y == y2 {
+                    new += 1;
+                } else {
+                    panic!("client {c}: torn response (matches \
+                            neither weight generation)");
+                }
+            }
+            (old, new)
+        }));
+    }
+
+    // let traffic flow on the old weights, swap mid-stream, then let
+    // it flow on the new ones
+    thread::sleep(Duration::from_millis(100));
+    assert_eq!(engine.swap_model("default", Some(2)).unwrap(), 2);
+    // swap_model returning means the install is in: the very next
+    // submitted request must run the new weights
+    let y = engine
+        .infer(InferRequest::f32("default", SHAPE, x.clone()))
+        .unwrap();
+    assert_eq!(y.data, y2, "post-swap request served stale weights");
+    thread::sleep(Duration::from_millis(100));
+    stop.store(true, Ordering::SeqCst);
+
+    let (mut total_old, mut total_new) = (0u64, 0u64);
+    for c in clients {
+        let (old, new) = c.join().expect("client thread panicked");
+        total_old += old;
+        total_new += new;
+    }
+    assert!(total_old > 0, "no traffic observed the old weights");
+    assert!(total_new > 0, "no traffic observed the new weights");
+
+    let summary = net.stop();
+    assert_eq!(summary.errors, 0, "swap produced error replies");
+    assert_eq!(summary.busy, 0, "swap shed load");
+    assert_eq!(summary.responses, total_old + total_new,
+               "a reply went missing during the swap");
+
+    let stats = engine.stop().unwrap();
+    assert_eq!(stats.server.swaps, 1);
+    assert_eq!(stats.per_model.first().and_then(|m| m.version),
+               Some(2));
+    assert_eq!(stats.server.served, total_old + total_new + 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn swap_rejects_bad_requests_and_keeps_serving() {
+    let dir = store_dir("reject");
+    let (w1, _) = publish_two_versions(&dir, "default");
+    let spec = spec();
+    let x = Rng::new(5).normal_vec(SAMPLE);
+    let y1 = expected(&spec, &w1, &x);
+
+    let engine = ops_engine(&dir, false);
+    // unknown model and unknown version are typed errors
+    assert!(matches!(engine.swap_model("ghost", None),
+                     Err(EngineError::UnknownModel(_))));
+    assert!(matches!(engine.swap_model("default", Some(9)),
+                     Err(EngineError::Swap { .. })));
+    // both rejections left the boot weights serving
+    let y = engine
+        .infer(InferRequest::f32("default", SHAPE, x))
+        .unwrap();
+    assert_eq!(y.data, y1);
+    let stats = engine.stop().unwrap();
+    assert_eq!(stats.server.swaps, 0);
+    assert_eq!(stats.per_model.first().and_then(|m| m.version), None);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn http_sidecar_swaps_and_reports_end_to_end() {
+    let dir = store_dir("http");
+    let (w1, w2) = publish_two_versions(&dir, "default");
+    let spec = spec();
+    let x = Rng::new(42).normal_vec(SAMPLE);
+    let y1 = expected(&spec, &w1, &x);
+    let y2 = expected(&spec, &w2, &x);
+
+    let engine = ops_engine(&dir, true);
+    let ops = engine.http_addr().expect("sidecar enabled");
+
+    let (status, body) = http(ops, "GET /healthz HTTP/1.0\r\n\r\n");
+    assert_eq!((status, body.as_str()), (200, "ok\n"));
+
+    // one request on the boot weights, visible in /metrics
+    let y = engine
+        .infer(InferRequest::f32("default", SHAPE, x.clone()))
+        .unwrap();
+    assert_eq!(y.data, y1);
+    let (status, body) = http(ops, "GET /metrics HTTP/1.0\r\n\r\n");
+    assert_eq!(status, 200);
+    assert!(body.contains("wino_requests_served_total 1\n"), "{body}");
+    assert!(body.contains("wino_model_version{model=\"default\"} 0"),
+            "boot weights must report version 0:\n{body}");
+
+    // swap to v2 over the wire; the JSON ack echoes the version
+    let (status, body) = http(
+        ops,
+        "POST /swap?model=default&version=2 HTTP/1.0\r\n\r\n");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"version\":2"), "{body}");
+    let y = engine
+        .infer(InferRequest::f32("default", SHAPE, x.clone()))
+        .unwrap();
+    assert_eq!(y.data, y2, "POST /swap did not install v2");
+
+    // ... and /swap back to v1, exercising explicit versions both ways
+    let (status, _) = http(
+        ops,
+        "POST /swap?model=default&version=1 HTTP/1.0\r\n\r\n");
+    assert_eq!(status, 200);
+    let y = engine
+        .infer(InferRequest::f32("default", SHAPE, x))
+        .unwrap();
+    assert_eq!(y.data, y1, "POST /swap did not roll back to v1");
+
+    // failures are status-coded, not panics: unknown model -> 500
+    // with the hook's message; missing model param -> 400
+    let (status, body) =
+        http(ops, "POST /swap?model=ghost HTTP/1.0\r\n\r\n");
+    assert_eq!(status, 500);
+    assert!(body.contains("ghost"), "{body}");
+    let (status, _) = http(ops, "POST /swap HTTP/1.0\r\n\r\n");
+    assert_eq!(status, 400);
+
+    // the final snapshot agrees with what the wire drove
+    let (status, body) = http(ops, "GET /metrics HTTP/1.0\r\n\r\n");
+    assert_eq!(status, 200);
+    assert!(body.contains("wino_model_swaps_total 2\n"), "{body}");
+    assert!(body.contains("wino_model_version{model=\"default\"} 1"),
+            "{body}");
+    let stats = engine.stats().unwrap();
+    assert_eq!(stats.server.swaps, 2);
+    assert_eq!(stats.per_model.first().and_then(|m| m.version),
+               Some(1));
+
+    engine.stop().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
