@@ -12,7 +12,11 @@
 //! |----------------------|-------------------------------------------|
 //! | no-alloc-hot-path    | designated hot-path modules               |
 //! | no-panic-serving     | `src/coordinator/`, `src/engine/`, and    |
-//! |                      | `src/storage/`                            |
+//! |                      | `src/storage/` — including the fault-     |
+//! |                      | injection plane (`coordinator/faults.rs`, |
+//! |                      | `coordinator/supervisor.rs`): injected    |
+//! |                      | chaos must surface as typed errors, never |
+//! |                      | as panics                                 |
 //! | unsafe-hygiene       | every file                                |
 //! | msrv-guard           | every file (tests included — they compile |
 //! |                      | under the pinned MSRV too)                |

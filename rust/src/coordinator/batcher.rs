@@ -7,8 +7,18 @@
 //! (then the largest bucket <= queue length fires, padding never
 //! happens: bucket 1 always exists).
 //!
+//! Requests may carry a **deadline budget** (`budget_us`, 0 = none).
+//! Budgets bend the schedule two ways: [`Batcher::next_batch_size`]
+//! closes the batch window early once the oldest request's budget is
+//! half spent (waiting longer would leave no time to execute), and
+//! [`Batcher::take_expired_into`] culls already-expired requests so
+//! the serve loop can answer them with a typed error instead of
+//! wasting a backend forward on a reply nobody is waiting for.
+//!
 //! Invariants (property-tested):
-//! * conservation — every submitted request is dispatched exactly once;
+//! * conservation — every submitted request is dispatched exactly once
+//!   (or culled exactly once via `take_expired_into`, tracked in
+//!   `expired`);
 //! * FIFO — requests dispatch in arrival order;
 //! * bucket validity — every dispatched batch size is a bucket;
 //! * no starvation — any request dispatches within `max_wait_us` of the
@@ -60,6 +70,8 @@ pub struct Request<T> {
     pub payload: T,
     /// arrival timestamp in microseconds (caller-supplied clock)
     pub arrived_us: u64,
+    /// deadline budget in microseconds from arrival; 0 = no deadline
+    pub budget_us: u64,
 }
 
 /// The batcher core: a deterministic, clock-explicit state machine
@@ -71,6 +83,9 @@ pub struct Batcher<T> {
     next_id: u64,
     pub submitted: u64,
     pub dispatched: u64,
+    /// requests culled by [`Batcher::take_expired_into`] — conservation
+    /// is `submitted == dispatched + expired`
+    pub expired: u64,
 }
 
 impl<T> Batcher<T> {
@@ -84,15 +99,23 @@ impl<T> Batcher<T> {
             .all(|(a, b)| a < b);
         assert!(ascending, "buckets must be ascending");
         Batcher { policy, queue: VecDeque::new(), next_id: 0,
-                  submitted: 0, dispatched: 0 }
+                  submitted: 0, dispatched: 0, expired: 0 }
     }
 
-    /// Enqueue a request; returns its id.
+    /// Enqueue a request with no deadline; returns its id.
     pub fn submit(&mut self, payload: T, now_us: u64) -> u64 {
+        self.submit_with_budget(payload, now_us, 0)
+    }
+
+    /// Enqueue a request carrying a deadline budget (microseconds of
+    /// remaining time at arrival; 0 = no deadline); returns its id.
+    pub fn submit_with_budget(&mut self, payload: T, now_us: u64,
+                              budget_us: u64) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
         self.submitted += 1;
-        self.queue.push_back(Request { id, payload, arrived_us: now_us });
+        self.queue.push_back(Request { id, payload,
+                                       arrived_us: now_us, budget_us });
         id
     }
 
@@ -103,12 +126,52 @@ impl<T> Batcher<T> {
     /// Batch size the policy would dispatch right now, if any.
     /// Allocation-free: pairs with [`Batcher::take_into`] on the serve
     /// loop's steady-state path.
+    ///
+    /// Deadline-aware early close: when the oldest queued request
+    /// carries a budget and half of it is already spent waiting, the
+    /// window closes now with the largest fitting bucket — holding out
+    /// for a fuller batch would leave the request no time to execute.
     pub fn next_batch_size(&self, now_us: u64) -> Option<usize> {
-        let oldest_wait = self
-            .queue
-            .front()
-            .map(|r| now_us.saturating_sub(r.arrived_us))?;
-        self.policy.decide(self.queue.len(), oldest_wait)
+        let front = self.queue.front()?;
+        let oldest_wait = now_us.saturating_sub(front.arrived_us);
+        if let Some(size) =
+            self.policy.decide(self.queue.len(), oldest_wait)
+        {
+            return Some(size);
+        }
+        if front.budget_us > 0
+            && oldest_wait.saturating_mul(2) >= front.budget_us
+        {
+            return self.policy.largest_fitting(self.queue.len());
+        }
+        None
+    }
+
+    /// Cull expired requests (budget fully spent waiting) into `out`,
+    /// clearing it first; queue order is preserved for the survivors.
+    /// The serve loop answers the culled requests with a typed
+    /// deadline error — they never reach the backend, and bucket
+    /// accounting stays exact because they leave the queue before
+    /// [`Batcher::next_batch_size`] counts it.
+    pub fn take_expired_into(&mut self, now_us: u64,
+                             out: &mut Vec<Request<T>>) {
+        out.clear();
+        for _ in 0..self.queue.len() {
+            match self.queue.pop_front() {
+                Some(r) => {
+                    let expired = r.budget_us > 0
+                        && now_us.saturating_sub(r.arrived_us)
+                            >= r.budget_us;
+                    if expired {
+                        self.expired += 1;
+                        out.push(r);
+                    } else {
+                        self.queue.push_back(r);
+                    }
+                }
+                None => break,
+            }
+        }
     }
 
     /// Size of the next shutdown-drain batch: the largest bucket that
@@ -199,6 +262,60 @@ mod tests {
         let total: usize = batches.iter().map(|x| x.len()).sum();
         assert_eq!(total, 7);
         assert!(batches.iter().all(|x| [1, 4, 16].contains(&x.len())));
+    }
+
+    #[test]
+    fn half_spent_budget_closes_the_window_early() {
+        let policy = BatchPolicy { buckets: vec![1, 4, 16],
+                                   max_wait_us: 2_000 };
+        let mut b = Batcher::new(policy);
+        // 100us budget: the window must close at 50us waited, well
+        // before max_wait_us — with the largest fitting bucket
+        b.submit_with_budget(0, 0, 100);
+        b.submit(1, 10);
+        assert!(b.poll(49).is_none(), "budget not half spent yet");
+        let batch = b.poll(50).expect("half-spent budget fires");
+        assert_eq!(batch.len(), 1, "largest bucket <= 2 is 1");
+        assert_eq!(batch.first().map(|r| r.id), Some(0));
+        // the budget-less survivor still waits its full window
+        assert!(b.poll(2_009).is_none(), "no budget: full max_wait");
+        let batch = b.poll(2_010).expect("max_wait fires");
+        assert_eq!(batch.first().map(|r| r.id), Some(1));
+    }
+
+    #[test]
+    fn take_expired_culls_in_place_and_preserves_order() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        let a = b.submit_with_budget("a", 0, 1_000); // lives
+        let x = b.submit_with_budget("x", 0, 10); // expires
+        let c = b.submit("c", 5); // no deadline: never expires
+        let y = b.submit_with_budget("y", 5, 20); // expires
+        let mut culled = Vec::new();
+        b.take_expired_into(9, &mut culled);
+        assert!(culled.is_empty(), "nothing expired at t=9");
+        b.take_expired_into(500, &mut culled);
+        assert_eq!(culled.iter().map(|r| r.id).collect::<Vec<_>>(),
+                   vec![x, y]);
+        assert_eq!(b.expired, 2);
+        assert_eq!(b.queue_len(), 2);
+        // survivors dispatch in original FIFO order
+        let ids: Vec<u64> = b
+            .flush()
+            .iter()
+            .flat_map(|batch| batch.iter().map(|r| r.id))
+            .collect();
+        assert_eq!(ids, vec![a, c]);
+        assert_eq!(b.submitted, b.dispatched + b.expired);
+    }
+
+    #[test]
+    fn expired_budget_zero_means_no_deadline() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        b.submit_with_budget((), 0, 0);
+        let mut culled = Vec::new();
+        b.take_expired_into(u64::MAX, &mut culled);
+        assert!(culled.is_empty(), "budget 0 must mean no deadline");
+        assert_eq!(b.queue_len(), 1);
     }
 
     #[test]

@@ -1,0 +1,484 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is parsed from a `--faults` spec such as
+//!
+//! ```text
+//! accept.drop=0.01,read.stall_ms=50@0.05,store.err=0.1,engine.panic=1e-4
+//! ```
+//!
+//! and threaded (as an `Option<Arc<FaultPlan>>`) through the listener
+//! accept/read/write paths, the serve-loop admission and execution
+//! steps, and the checkpoint store (via [`FaultStore`]). Every hook
+//! is an `#[inline]` probability check that returns immediately when
+//! the plan is absent or the rate is zero, so the unfaulted hot path
+//! pays nothing.
+//!
+//! Sampling is **deterministic and lock-free**: each check draws one
+//! value from a SplitMix64 stream keyed by `(seed, sequence)`, where
+//! the sequence number is a relaxed atomic counter. Two runs with the
+//! same seed, spec, and request interleaving fire the same faults,
+//! which is what makes the chaos suite (`rust/tests/faults.rs`)
+//! reproducible.
+//!
+//! Every fired fault increments one counter in [`FaultCounters`];
+//! the snapshot ([`FaultSummary`]) renders into
+//! [`crate::coordinator::metrics::MetricsSnapshot`] and from there
+//! into `/stats` and `/metrics`
+//! (`wino_fault_injected_total{kind=...}`).
+//!
+//! This file is serving code: the `no-panic-serving` lint applies in
+//! full. Faults *simulate* failures (typed errors, severed sockets,
+//! `engine.panic` -> typed batch error or supervised-child exit);
+//! they never call `panic!` themselves.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::storage::{Checkpoint, Store};
+use crate::util::error::{anyhow, Result};
+use crate::util::json::Json;
+
+/// Every fault key the spec grammar accepts, for error messages.
+const KEYS: &str = "accept.drop|read.stall_ms|write.drop|admit.err|\
+                    store.err|engine.panic";
+
+/// A parsed, seeded fault-injection plan. Construct with
+/// [`FaultPlan::parse`]; share behind an `Arc` and query through the
+/// `#[inline]` hook methods.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    seq: AtomicU64,
+    accept_drop: f64,
+    /// `(stall duration, rate)` for the read path.
+    read_stall: Option<(Duration, f64)>,
+    write_drop: f64,
+    admit_err: f64,
+    store_err: f64,
+    engine_panic: f64,
+    /// When set (supervised child mode), a fired `engine.panic`
+    /// terminates the process with exit code 101 after replying to
+    /// the batch — the supervisor's restart path is what's under
+    /// test. Default: the batch gets typed errors and serving
+    /// continues.
+    pub abort_on_engine_panic: bool,
+    counters: FaultCounters,
+}
+
+/// One relaxed counter per fault kind; incremented exactly when the
+/// corresponding fault fires.
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    /// accepted connections dropped before the session started
+    pub accept_drop: AtomicU64,
+    /// reader iterations stalled
+    pub read_stall: AtomicU64,
+    /// replies severed on the write path
+    pub write_drop: AtomicU64,
+    /// admissions failed with a typed error
+    pub admit_err: AtomicU64,
+    /// store operations failed with a typed error
+    pub store_err: AtomicU64,
+    /// simulated engine crashes
+    pub engine_panic: AtomicU64,
+}
+
+/// Plain-value snapshot of [`FaultCounters`] for reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultSummary {
+    /// fired `accept.drop` faults
+    pub accept_drop: u64,
+    /// fired `read.stall_ms` faults
+    pub read_stall: u64,
+    /// fired `write.drop` faults
+    pub write_drop: u64,
+    /// fired `admit.err` faults
+    pub admit_err: u64,
+    /// fired `store.err` faults
+    pub store_err: u64,
+    /// fired `engine.panic` faults
+    pub engine_panic: u64,
+}
+
+impl FaultSummary {
+    /// `(kind, count)` pairs in stable render order.
+    pub fn kinds(&self) -> [(&'static str, u64); 6] {
+        [("accept_drop", self.accept_drop),
+         ("read_stall", self.read_stall),
+         ("write_drop", self.write_drop),
+         ("admit_err", self.admit_err),
+         ("store_err", self.store_err),
+         ("engine_panic", self.engine_panic)]
+    }
+
+    /// Total fired faults across all kinds.
+    pub fn total(&self) -> u64 {
+        self.kinds().iter().map(|(_, n)| n).sum()
+    }
+
+    /// JSON object, one key per fault kind.
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        for (kind, n) in self.kinds() {
+            obj.insert(kind.to_string(), Json::Num(n as f64));
+        }
+        Json::Obj(obj)
+    }
+}
+
+impl FaultCounters {
+    /// Plain-value snapshot (relaxed loads).
+    pub fn snapshot(&self) -> FaultSummary {
+        FaultSummary {
+            accept_drop: self.accept_drop.load(Ordering::Relaxed),
+            read_stall: self.read_stall.load(Ordering::Relaxed),
+            write_drop: self.write_drop.load(Ordering::Relaxed),
+            admit_err: self.admit_err.load(Ordering::Relaxed),
+            store_err: self.store_err.load(Ordering::Relaxed),
+            engine_panic: self.engine_panic.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// SplitMix64 finalizer: maps a key to a well-mixed u64.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// A plan with every rate zero (all hooks no-ops).
+    pub fn disabled(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            seq: AtomicU64::new(0),
+            accept_drop: 0.0,
+            read_stall: None,
+            write_drop: 0.0,
+            admit_err: 0.0,
+            store_err: 0.0,
+            engine_panic: 0.0,
+            abort_on_engine_panic: false,
+            counters: FaultCounters::default(),
+        }
+    }
+
+    /// Parse a comma-separated `key=rate` spec. Rates are `f64` in
+    /// `[0, 1]` (scientific notation accepted); `read.stall_ms` takes
+    /// `MS@RATE` (rate defaults to 1 when omitted). Unknown keys and
+    /// out-of-range rates are errors — the caller maps them onto its
+    /// own typed error.
+    pub fn parse(spec: &str, seed: u64)
+                 -> std::result::Result<FaultPlan, String> {
+        let mut plan = FaultPlan::disabled(seed);
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let (key, value) = tok.split_once('=').ok_or_else(|| {
+                format!("fault {tok:?} is not key=value ({KEYS})")
+            })?;
+            match key {
+                "accept.drop" => plan.accept_drop = rate(key, value)?,
+                "write.drop" => plan.write_drop = rate(key, value)?,
+                "admit.err" => plan.admit_err = rate(key, value)?,
+                "store.err" => plan.store_err = rate(key, value)?,
+                "engine.panic" => {
+                    plan.engine_panic = rate(key, value)?;
+                }
+                "read.stall_ms" => {
+                    let (ms, r) = match value.split_once('@') {
+                        Some((ms, r)) => (ms, rate(key, r)?),
+                        None => (value, 1.0),
+                    };
+                    let ms: u64 = ms.parse().map_err(|_| {
+                        format!("fault {key}: stall millis must be \
+                                 an unsigned integer, got {ms:?}")
+                    })?;
+                    plan.read_stall =
+                        Some((Duration::from_millis(ms), r));
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault key {other:?} ({KEYS})"));
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The plan's seed (the engine seed by construction).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// True when at least one rate is non-zero.
+    pub fn is_active(&self) -> bool {
+        self.accept_drop > 0.0
+            || self.read_stall.is_some()
+            || self.write_drop > 0.0
+            || self.admit_err > 0.0
+            || self.store_err > 0.0
+            || self.engine_panic > 0.0
+    }
+
+    /// True when the plan injects store faults (the builder wraps the
+    /// checkpoint store in a [`FaultStore`] exactly then).
+    pub fn injects_store(&self) -> bool {
+        self.store_err > 0.0
+    }
+
+    /// The live counters (for wiring into snapshots).
+    pub fn counters(&self) -> &FaultCounters {
+        &self.counters
+    }
+
+    /// Snapshot of every fault counter.
+    pub fn summary(&self) -> FaultSummary {
+        self.counters.snapshot()
+    }
+
+    /// One deterministic draw in `[0, 1)`: SplitMix64 over
+    /// `seed ^ mix(sequence)`, sequence from a relaxed atomic.
+    fn sample(&self) -> f64 {
+        let n = self.seq.fetch_add(1, Ordering::Relaxed);
+        let z = mix64(self.seed ^ mix64(n));
+        // 53 top bits -> uniform double in [0, 1)
+        (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    fn fire(&self, rate: f64, counter: &AtomicU64) -> bool {
+        if rate <= 0.0 {
+            return false;
+        }
+        if self.sample() < rate {
+            counter.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    /// Accept path: true -> drop the freshly accepted connection.
+    #[inline]
+    pub fn drop_accept(&self) -> bool {
+        self.fire(self.accept_drop, &self.counters.accept_drop)
+    }
+
+    /// Read path: `Some(stall)` -> sleep that long before reading.
+    #[inline]
+    pub fn stall_read(&self) -> Option<Duration> {
+        match self.read_stall {
+            Some((d, r))
+                if self.fire(r, &self.counters.read_stall) =>
+            {
+                Some(d)
+            }
+            _ => None,
+        }
+    }
+
+    /// Write path: true -> sever the connection instead of replying.
+    #[inline]
+    pub fn drop_write(&self) -> bool {
+        self.fire(self.write_drop, &self.counters.write_drop)
+    }
+
+    /// Admission: true -> reject with a typed error before enqueue.
+    #[inline]
+    pub fn fail_admit(&self) -> bool {
+        self.fire(self.admit_err, &self.counters.admit_err)
+    }
+
+    /// Store ops: true -> fail the fetch/publish with a typed error.
+    #[inline]
+    pub fn fail_store(&self) -> bool {
+        self.fire(self.store_err, &self.counters.store_err)
+    }
+
+    /// Plan execution: true -> simulate an engine crash for the
+    /// current batch (typed errors; process exit when
+    /// [`FaultPlan::abort_on_engine_panic`] is set — decided by the
+    /// caller, which owns the replies).
+    #[inline]
+    pub fn crash_engine(&self) -> bool {
+        self.fire(self.engine_panic, &self.counters.engine_panic)
+    }
+}
+
+fn rate(key: &str, value: &str)
+        -> std::result::Result<f64, String> {
+    let r: f64 = value.parse().map_err(|_| {
+        format!("fault {key}: rate must be a number in [0,1], \
+                 got {value:?}")
+    })?;
+    if !r.is_finite() || !(0.0..=1.0).contains(&r) {
+        return Err(format!(
+            "fault {key}: rate {value:?} is outside [0,1]"));
+    }
+    Ok(r)
+}
+
+/// A [`Store`] decorator that injects `store.err` faults on `fetch`
+/// and `publish` (listing stays reliable: `versions` is a read-only
+/// control-plane call the chaos suite wants dependable).
+pub struct FaultStore {
+    inner: Arc<dyn Store>,
+    plan: Arc<FaultPlan>,
+}
+
+impl FaultStore {
+    /// Wrap `inner` so fetch/publish consult `plan` first.
+    pub fn new(inner: Arc<dyn Store>, plan: Arc<FaultPlan>)
+               -> FaultStore {
+        FaultStore { inner, plan }
+    }
+}
+
+impl Store for FaultStore {
+    fn publish(&self, model: &str,
+               spec: &crate::nn::model::ModelSpec,
+               weights: &crate::nn::model::ModelWeights)
+               -> Result<u64> {
+        if self.plan.fail_store() {
+            return Err(anyhow!(
+                "injected fault: store.err (publish {model})"));
+        }
+        self.inner.publish(model, spec, weights)
+    }
+
+    fn fetch(&self, model: &str, version: Option<u64>)
+             -> Result<Checkpoint> {
+        if self.plan.fail_store() {
+            return Err(anyhow!(
+                "injected fault: store.err (fetch {model})"));
+        }
+        self.inner.fetch(model, version)
+    }
+
+    fn versions(&self, model: &str) -> Result<Vec<u64>> {
+        self.inner.versions(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p = FaultPlan::parse(
+            "accept.drop=0.01,read.stall_ms=50@0.05,store.err=0.1,\
+             engine.panic=1e-4,write.drop=0.2,admit.err=0.3",
+            7)
+            .unwrap();
+        assert!(p.is_active());
+        assert!(p.injects_store());
+        assert_eq!(p.accept_drop, 0.01);
+        assert_eq!(p.read_stall,
+                   Some((Duration::from_millis(50), 0.05)));
+        assert_eq!(p.store_err, 0.1);
+        assert_eq!(p.engine_panic, 1e-4);
+        assert_eq!(p.write_drop, 0.2);
+        assert_eq!(p.admit_err, 0.3);
+        assert!(!p.abort_on_engine_panic);
+    }
+
+    #[test]
+    fn stall_rate_defaults_to_one_and_empty_spec_is_inert() {
+        let p = FaultPlan::parse("read.stall_ms=5", 7).unwrap();
+        assert_eq!(p.read_stall,
+                   Some((Duration::from_millis(5), 1.0)));
+        assert!(p.stall_read().is_some());
+        let p = FaultPlan::parse("", 7).unwrap();
+        assert!(!p.is_active());
+        assert!(!p.drop_accept());
+        assert!(!p.crash_engine());
+        assert_eq!(p.summary().total(), 0);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        for bad in ["accept.drop", "accept.drop=x", "nope=0.1",
+                    "accept.drop=1.5", "accept.drop=-0.1",
+                    "accept.drop=nan", "read.stall_ms=a@0.5",
+                    "read.stall_ms=5@2"] {
+            assert!(FaultPlan::parse(bad, 7).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_roughly_calibrated() {
+        let a = FaultPlan::parse("admit.err=0.25", 42).unwrap();
+        let b = FaultPlan::parse("admit.err=0.25", 42).unwrap();
+        let fires_a: Vec<bool> =
+            (0..4000).map(|_| a.fail_admit()).collect();
+        let fires_b: Vec<bool> =
+            (0..4000).map(|_| b.fail_admit()).collect();
+        assert_eq!(fires_a, fires_b, "same seed must fire the same");
+        let n = a.summary().admit_err;
+        assert!((800..=1200).contains(&n),
+                "rate 0.25 over 4000 draws fired {n} times");
+        // a different seed fires a different schedule
+        let c = FaultPlan::parse("admit.err=0.25", 43).unwrap();
+        let fires_c: Vec<bool> =
+            (0..4000).map(|_| c.fail_admit()).collect();
+        assert_ne!(fires_a, fires_c);
+    }
+
+    #[test]
+    fn counters_track_each_kind_separately() {
+        let p = FaultPlan::parse(
+            "accept.drop=1,write.drop=1,read.stall_ms=1@1", 7)
+            .unwrap();
+        assert!(p.drop_accept());
+        assert!(p.drop_write());
+        assert!(p.stall_read().is_some());
+        let s = p.summary();
+        assert_eq!((s.accept_drop, s.write_drop, s.read_stall),
+                   (1, 1, 1));
+        assert_eq!((s.admit_err, s.store_err, s.engine_panic),
+                   (0, 0, 0));
+        assert_eq!(s.total(), 3);
+        let json = s.to_json().dump();
+        assert!(json.contains("\"accept_drop\":1"), "{json}");
+    }
+
+    #[test]
+    fn fault_store_injects_typed_errors() {
+        use crate::nn::matrices::Variant;
+        use crate::nn::model::{ModelSpec, ModelWeights};
+        use crate::storage::LocalDir;
+        let dir = std::env::temp_dir().join(format!(
+            "wino_adder_faultstore_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spec = ModelSpec::single_layer(2, 3, 8,
+                                           Variant::Balanced(0));
+        let w = ModelWeights::init(&spec, 7);
+        let inner: Arc<dyn Store> =
+            Arc::new(LocalDir::new(dir.clone()));
+        // rate 1: every fetch/publish fails, typed; versions stays up
+        let plan = Arc::new(
+            FaultPlan::parse("store.err=1", 7).unwrap());
+        let faulty = FaultStore::new(Arc::clone(&inner),
+                                     Arc::clone(&plan));
+        let err = faulty.publish("m", &spec, &w).unwrap_err();
+        assert!(format!("{err}").contains("injected fault: store.err"),
+                "{err}");
+        inner.publish("m", &spec, &w).unwrap();
+        let err = faulty.fetch("m", None).unwrap_err();
+        assert!(format!("{err}").contains("store.err"), "{err}");
+        assert_eq!(faulty.versions("m").unwrap(), vec![1]);
+        assert_eq!(plan.summary().store_err, 2);
+        // rate 0: transparent passthrough
+        let clean = FaultStore::new(
+            inner,
+            Arc::new(FaultPlan::parse("", 7).unwrap()));
+        assert_eq!(clean.fetch("m", None).unwrap().version, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

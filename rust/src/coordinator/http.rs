@@ -8,7 +8,9 @@
 //!
 //! | Endpoint        | Method | Body                                 |
 //! |-----------------|--------|--------------------------------------|
-//! | `/healthz`      | GET    | `ok` while the engine answers        |
+//! | `/healthz`      | GET    | `ok` while serving; `503` + state    |
+//! |                 |        | JSON while draining/swapping/        |
+//! |                 |        | restoring ([`HealthState`])          |
 //! | `/stats`        | GET    | [`MetricsSnapshot::to_json`]         |
 //! | `/metrics`      | GET    | [`MetricsSnapshot::to_prometheus`]   |
 //! | `/swap`         | POST   | `?model=NAME[&version=N]` hot-swap   |
@@ -32,7 +34,7 @@
 use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
 
@@ -57,24 +59,87 @@ pub type SwapHook = Box<dyn Fn(&str, Option<u64>)
                         + Send
                         + Sync>;
 
+/// What the serving process is doing right now, as reported by
+/// `/healthz`. Anything other than [`HealthState::Ok`] answers `503`
+/// with a one-field JSON body (`{"status": "<state>"}`) so load
+/// balancers stop routing during planned unavailability.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum HealthState {
+    /// serving normally — `/healthz` answers `200 ok`
+    Ok = 0,
+    /// draining for shutdown (set first thing in `Engine::stop`)
+    Draining = 1,
+    /// installing hot-swapped weights
+    Swapping = 2,
+    /// restoring the last-published checkpoint after a crash restart
+    Restoring = 3,
+}
+
+impl HealthState {
+    /// The lowercase wire name (`"ok"`, `"draining"`, ...).
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthState::Ok => "ok",
+            HealthState::Draining => "draining",
+            HealthState::Swapping => "swapping",
+            HealthState::Restoring => "restoring",
+        }
+    }
+}
+
+/// Lock-free health gauge shared between the engine (which sets it
+/// around drains, swaps and restores) and the sidecar's `/healthz`
+/// handler (which reads it on every probe).
+pub struct Health(AtomicU8);
+
+impl Health {
+    fn new() -> Health {
+        Health(AtomicU8::new(HealthState::Ok as u8))
+    }
+
+    /// Publish the current state.
+    pub fn set(&self, state: HealthState) {
+        self.0.store(state as u8, Ordering::Relaxed);
+    }
+
+    /// The current state.
+    pub fn get(&self) -> HealthState {
+        match self.0.load(Ordering::Relaxed) {
+            1 => HealthState::Draining,
+            2 => HealthState::Swapping,
+            3 => HealthState::Restoring,
+            _ => HealthState::Ok,
+        }
+    }
+}
+
 /// Everything a request handler can reach: the serving handle (for
 /// live snapshots), the TCP front-end counters once a listener is
-/// attached, and the optional swap hook. Shared `Arc`-style between
-/// the engine (which wires the net counters in) and the sidecar's
-/// worker threads.
+/// attached, the health gauge, and the optional swap hook. Shared
+/// `Arc`-style between the engine (which wires the net counters in)
+/// and the sidecar's worker threads.
 pub struct OpsState {
     handle: ServerHandle,
     /// live TCP front-end counters; `None` until
     /// [`OpsState::set_net`] (no listener attached yet)
     net: Mutex<Option<Arc<NetCounters>>>,
     swap: Option<SwapHook>,
+    health: Health,
 }
 
 impl OpsState {
-    /// State over a serving handle, with an optional swap hook.
+    /// State over a serving handle, with an optional swap hook. The
+    /// health gauge starts at [`HealthState::Ok`].
     pub fn new(handle: ServerHandle, swap: Option<SwapHook>)
                -> OpsState {
-        OpsState { handle, net: Mutex::new(None), swap }
+        OpsState { handle, net: Mutex::new(None), swap,
+                   health: Health::new() }
+    }
+
+    /// The health gauge `/healthz` reports.
+    pub fn health(&self) -> &Health {
+        &self.health
     }
 
     /// Attach the TCP front-end's live counters; from now on
@@ -175,7 +240,18 @@ fn respond(state: &OpsState, method: &str, target: &str)
         None => (target, ""),
     };
     match (method, path) {
-        ("GET", "/healthz") => Response::text(200, "ok\n".into()),
+        // the healthy body is pinned to exactly "ok\n" (CI greps it);
+        // every other state is a 503 so probes fail fast during
+        // planned unavailability
+        ("GET", "/healthz") => match state.health.get() {
+            HealthState::Ok => Response::text(200, "ok\n".into()),
+            other => {
+                let mut o = BTreeMap::new();
+                o.insert("status".to_string(),
+                         Json::Str(other.name().to_string()));
+                Response::json(503, Json::Obj(o))
+            }
+        },
         ("GET", "/stats") => match state.snapshot() {
             Ok(s) => Response::json(200, s.to_json()),
             Err(e) => Response::error(503, &format!("{e}")),
@@ -214,7 +290,12 @@ fn respond_swap(state: &OpsState, query: &str) -> Response {
             }
         },
     };
-    match hook(model, version) {
+    // probes see "swapping" while the (potentially slow: compile +
+    // autotune) hook runs; serving itself continues on the old plans
+    state.health.set(HealthState::Swapping);
+    let res = hook(model, version);
+    state.health.set(HealthState::Ok);
+    match res {
         Ok(v) => {
             let mut o = BTreeMap::new();
             o.insert("model".to_string(),
@@ -490,6 +571,41 @@ mod tests {
         assert_eq!(respond(&state, "POST", "/swap?model=tiny")
                        .status,
                    501);
+        teardown(handle, join);
+    }
+
+    #[test]
+    fn healthz_reflects_the_health_gauge() {
+        let (state, handle, join) = ops_fixture(None);
+        // healthy body pinned bit-exactly: CI's smoke greps for "ok"
+        let ok = respond(&state, "GET", "/healthz");
+        assert_eq!((ok.status, ok.body.as_str()), (200, "ok\n"));
+        for (s, name) in [(HealthState::Draining, "draining"),
+                          (HealthState::Swapping, "swapping"),
+                          (HealthState::Restoring, "restoring")] {
+            state.health().set(s);
+            assert_eq!(state.health().get(), s);
+            let r = respond(&state, "GET", "/healthz");
+            assert_eq!(r.status, 503, "{name}");
+            assert_eq!(r.content_type, "application/json");
+            let parsed = Json::parse(&r.body).unwrap();
+            assert_eq!(parsed.get("status"),
+                       Some(&Json::Str(name.to_string())));
+        }
+        state.health().set(HealthState::Ok);
+        let back = respond(&state, "GET", "/healthz");
+        assert_eq!((back.status, back.body.as_str()), (200, "ok\n"));
+        teardown(handle, join);
+    }
+
+    #[test]
+    fn swap_resets_health_to_ok() {
+        let hook: SwapHook = Box::new(|_, _| Err("boom".into()));
+        let (state, handle, join) = ops_fixture(Some(hook));
+        // even a failed swap must not leave the gauge stuck
+        assert_eq!(respond(&state, "POST", "/swap?model=x").status,
+                   500);
+        assert_eq!(state.health().get(), HealthState::Ok);
         teardown(handle, join);
     }
 

@@ -15,6 +15,7 @@ use std::fmt::{self, Write as _};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
+use crate::coordinator::faults::FaultSummary;
 use crate::util::json::Json;
 
 /// Latency recorder with percentile queries.
@@ -144,6 +145,12 @@ pub struct NetCounters {
     pub bytes_in: AtomicU64,
     /// wire bytes written to clients (headers + payloads)
     pub bytes_out: AtomicU64,
+    /// requests rejected at admission because their deadline had
+    /// already expired
+    pub deadline_exceeded: AtomicU64,
+    /// requests re-sent on a connection after a `Busy` shed (the
+    /// server-observable signature of a client retry)
+    pub retries: AtomicU64,
 }
 
 impl NetCounters {
@@ -160,6 +167,10 @@ impl NetCounters {
             errors: self.errors.load(Ordering::Relaxed),
             bytes_in: self.bytes_in.load(Ordering::Relaxed),
             bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            deadline_exceeded: self
+                .deadline_exceeded
+                .load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
         }
     }
 }
@@ -176,6 +187,10 @@ pub struct NetSummary {
     pub errors: u64,
     pub bytes_in: u64,
     pub bytes_out: u64,
+    /// admission-time deadline rejections
+    pub deadline_exceeded: u64,
+    /// post-`Busy` re-sends observed per connection
+    pub retries: u64,
 }
 
 impl NetSummary {
@@ -194,6 +209,8 @@ impl NetSummary {
             ("errors", self.errors),
             ("bytes_in", self.bytes_in),
             ("bytes_out", self.bytes_out),
+            ("deadline_exceeded", self.deadline_exceeded),
+            ("retries", self.retries),
         ];
         for (k, v) in pairs {
             o.insert(k.to_string(), Json::Num(v as f64));
@@ -222,6 +239,9 @@ pub struct EngineSummary {
     pub batches: u64,
     /// hot-swaps applied since start
     pub swaps: u64,
+    /// requests culled from the queue with a typed DeadlineExceeded
+    /// error before any backend forward ran
+    pub deadline_exceeded: u64,
 }
 
 /// Per-model request totals plus the checkpoint version currently
@@ -261,6 +281,9 @@ pub struct MetricsSnapshot {
     pub per_model: Vec<ModelStat>,
     /// per-bucket router lane totals
     pub per_bucket: Vec<BucketStat>,
+    /// fired fault-injection counters, when a `--faults` plan is
+    /// configured (all-zero until something fires)
+    pub faults: Option<FaultSummary>,
 }
 
 impl MetricsSnapshot {
@@ -279,6 +302,10 @@ impl MetricsSnapshot {
         server.insert(
             "swaps".to_string(),
             Json::Num(self.server.swaps as f64),
+        );
+        server.insert(
+            "deadline_exceeded".to_string(),
+            Json::Num(self.server.deadline_exceeded as f64),
         );
         o.insert("server".to_string(), Json::Obj(server));
         o.insert(
@@ -334,6 +361,13 @@ impl MetricsSnapshot {
             })
             .collect();
         o.insert("per_bucket".to_string(), Json::Arr(buckets));
+        o.insert(
+            "faults".to_string(),
+            match &self.faults {
+                Some(f) => f.to_json(),
+                None => Json::Null,
+            },
+        );
         Json::Obj(o)
     }
 
@@ -424,6 +458,40 @@ impl MetricsSnapshot {
                 b.bucket, b.requests
             );
         }
+        let _ = writeln!(
+            out,
+            "# HELP wino_deadline_exceeded_total Requests answered \
+             with a typed DeadlineExceeded error, by stage."
+        );
+        let _ =
+            writeln!(out, "# TYPE wino_deadline_exceeded_total counter");
+        let _ = writeln!(
+            out,
+            "wino_deadline_exceeded_total{{stage=\"engine\"}} {}",
+            self.server.deadline_exceeded
+        );
+        if let Some(n) = &self.net {
+            let _ = writeln!(
+                out,
+                "wino_deadline_exceeded_total{{stage=\"admission\"}} {}",
+                n.deadline_exceeded
+            );
+        }
+        if let Some(f) = &self.faults {
+            let _ = writeln!(
+                out,
+                "# HELP wino_fault_injected_total Injected faults \
+                 fired, by kind."
+            );
+            let _ =
+                writeln!(out, "# TYPE wino_fault_injected_total counter");
+            for (kind, v) in f.kinds() {
+                let _ = writeln!(
+                    out,
+                    "wino_fault_injected_total{{kind=\"{kind}\"}} {v}"
+                );
+            }
+        }
         if let Some(n) = &self.net {
             let _ = writeln!(
                 out,
@@ -467,6 +535,14 @@ impl MetricsSnapshot {
                     "wino_net_bytes_total{{direction=\"{dir}\"}} {v}"
                 );
             }
+            let _ = writeln!(
+                out,
+                "# HELP wino_net_retries_total Requests re-sent on a \
+                 connection after a Busy shed."
+            );
+            let _ = writeln!(out, "# TYPE wino_net_retries_total counter");
+            let _ =
+                writeln!(out, "wino_net_retries_total {}", n.retries);
         }
         out
     }
@@ -637,7 +713,12 @@ mod tests {
 
     fn sample_snapshot() -> MetricsSnapshot {
         MetricsSnapshot {
-            server: EngineSummary { served: 12, batches: 4, swaps: 1 },
+            server: EngineSummary {
+                served: 12,
+                batches: 4,
+                swaps: 1,
+                deadline_exceeded: 2,
+            },
             net: Some(NetSummary {
                 connections: 2,
                 requests: 12,
@@ -646,6 +727,8 @@ mod tests {
                 errors: 0,
                 bytes_in: 640,
                 bytes_out: 320,
+                deadline_exceeded: 1,
+                retries: 1,
             }),
             latency: LatencySummary {
                 count: 12,
@@ -664,6 +747,7 @@ mod tests {
                 requests: 12,
                 batches: 4,
             }],
+            faults: None,
         }
     }
 
@@ -715,6 +799,34 @@ mod tests {
         let b0 = buckets.and_then(|b| b.first()).unwrap();
         assert_eq!(b0.get("bucket"), Some(&Json::Num(1.0)));
         assert_eq!(b0.get("batches"), Some(&Json::Num(4.0)));
+        assert_eq!(
+            back.get("server").and_then(|s| s.get("deadline_exceeded")),
+            Some(&Json::Num(2.0))
+        );
+        assert_eq!(
+            back.get("net").and_then(|n| n.get("retries")),
+            Some(&Json::Num(1.0))
+        );
+        // no fault plan configured -> explicit null, not a missing key
+        assert_eq!(back.get("faults"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn snapshot_json_renders_fault_counters_when_present() {
+        let mut snap = sample_snapshot();
+        let mut f = FaultSummary::default();
+        f.accept_drop = 3;
+        f.engine_panic = 1;
+        snap.faults = Some(f);
+        let back = Json::parse(&snap.to_json().dump()).unwrap();
+        assert_eq!(
+            back.get("faults").and_then(|f| f.get("accept_drop")),
+            Some(&Json::Num(3.0))
+        );
+        assert_eq!(
+            back.get("faults").and_then(|f| f.get("engine_panic")),
+            Some(&Json::Num(1.0))
+        );
     }
 
     #[test]
@@ -738,6 +850,8 @@ mod tests {
             "wino_net_connections_total",
             "wino_net_requests_total",
             "wino_net_bytes_total",
+            "wino_deadline_exceeded_total",
+            "wino_net_retries_total",
         ] {
             assert!(
                 text.contains(&format!("# TYPE {family}")),
@@ -751,6 +865,14 @@ mod tests {
         assert!(text
             .contains("wino_request_latency_us{quantile=\"0.99\"} 150"));
         assert!(text.contains("wino_net_requests_total{outcome=\"busy\"} 1"));
+        assert!(text
+            .contains("wino_deadline_exceeded_total{stage=\"engine\"} 2"));
+        assert!(text.contains(
+            "wino_deadline_exceeded_total{stage=\"admission\"} 1"
+        ));
+        assert!(text.contains("wino_net_retries_total 1\n"));
+        // no fault plan -> the fault family is absent entirely
+        assert!(!text.contains("wino_fault_injected_total"), "{text}");
         // every non-comment line is `name{...} value` or `name value`
         for line in text.lines() {
             if line.starts_with('#') || line.is_empty() {
@@ -772,6 +894,40 @@ mod tests {
         let text = snap.to_prometheus();
         assert!(!text.contains("wino_net_"), "{text}");
         assert!(text.contains("wino_requests_served_total"));
+        // the engine-stage deadline sample renders even without a
+        // front-end; the admission-stage sample does not
+        assert!(text
+            .contains("wino_deadline_exceeded_total{stage=\"engine\"} 2"));
+        assert!(!text.contains("stage=\"admission\""), "{text}");
+    }
+
+    #[test]
+    fn prometheus_renders_all_fault_kinds_when_plan_is_set() {
+        let mut snap = sample_snapshot();
+        let mut f = FaultSummary::default();
+        f.read_stall = 5;
+        snap.faults = Some(f);
+        let text = snap.to_prometheus();
+        assert!(text.contains("# TYPE wino_fault_injected_total counter"));
+        // every kind gets a sample, zeros included, so dashboards see
+        // a stable label set
+        for kind in [
+            "accept_drop",
+            "read_stall",
+            "write_drop",
+            "admit_err",
+            "store_err",
+            "engine_panic",
+        ] {
+            assert!(
+                text.contains(&format!(
+                    "wino_fault_injected_total{{kind=\"{kind}\"}}"
+                )),
+                "missing kind {kind}:\n{text}"
+            );
+        }
+        assert!(text
+            .contains("wino_fault_injected_total{kind=\"read_stall\"} 5"));
     }
 
     #[test]

@@ -16,19 +16,30 @@
 //! * [`net`] — the TCP front-end: framed wire protocol, bounded
 //!   admission with load-shedding `Busy` replies, and the blocking
 //!   [`net::NetClient`] the load generator drives.
-//! * [`http`] — the ops-plane HTTP sidecar: `/healthz`, `/stats`,
-//!   `/metrics` (Prometheus text), and `POST /swap` hot-swap.
+//! * [`http`] — the ops-plane HTTP sidecar: `/healthz` (state-aware:
+//!   503 while draining/swapping/restoring), `/stats`, `/metrics`
+//!   (Prometheus text), and `POST /swap` hot-swap.
 //! * [`metrics`] — latency/throughput instrumentation, the network
 //!   front-end counters, and the unified [`metrics::MetricsSnapshot`]
 //!   every surface renders from.
+//! * [`faults`] — deterministic fault injection: a seeded
+//!   [`faults::FaultPlan`] parsed from `--faults` specs, consulted at
+//!   fixed hook points (accept/read/write/admission/store/engine)
+//!   and compiled down to no-ops when absent.
+//! * [`supervisor`] — daemon plumbing: pidfile acquisition with
+//!   stale-PID recovery, atomically-written serve state, and the
+//!   crash-restarting [`supervisor::supervise`] loop with jittered
+//!   exponential [`supervisor::Backoff`].
 
 pub mod batcher;
+pub mod faults;
 pub mod http;
 pub mod metrics;
 pub mod net;
 pub mod p_schedule;
 pub mod router;
 pub mod server;
+pub mod supervisor;
 pub mod train_driver;
 
 pub use batcher::{BatchPolicy, Batcher};

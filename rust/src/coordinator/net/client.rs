@@ -14,11 +14,28 @@
 //! [`NetClient::pipeline`] — write a whole window of requests, then
 //! read the whole window of replies (the server answers each
 //! connection's requests in order).
+//!
+//! **Retries** are governed by one [`RetryPolicy`] per client. The
+//! default policy reproduces the historical behavior bit for bit:
+//! exactly one transparent re-dial after a transport error on a
+//! pooled connection, and `Busy` sheds surfaced to the caller
+//! untouched. Load generators opt into [`RetryPolicy::busy_aware`],
+//! which additionally re-sends shed requests under seeded jittered
+//! exponential backoff.
+//!
+//! **Deadlines**: [`NetClientV2::set_deadline`] arms every subsequent
+//! call with a per-attempt time budget, shipped on the wire via the
+//! deadline-carrying v2 frames (`InferDl`/`InferI8Dl`). The server
+//! rejects the request with a typed `deadline exceeded` error — before
+//! it ever reaches the engine — once the budget runs out.
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
+use std::thread;
+use std::time::Duration;
 
 use super::proto::{self, Frame};
+use crate::coordinator::supervisor::Backoff;
 use crate::engine::Dtype;
 use crate::util::error::{anyhow, bail, ensure, Context, Result};
 
@@ -33,6 +50,83 @@ pub enum NetReply {
     Error(String),
 }
 
+/// How many attempts a single logical call may spend, and how long to
+/// sleep between them. One policy is owned per client ([`NetClient`],
+/// [`NetClientV2`]); every `call` draws a fresh budget from it, so
+/// retries never leak across calls.
+///
+/// * **transport retries** — re-dial (and for v2, re-negotiate) after
+///   a transport error on a *pooled* connection. A failed first dial
+///   is never retried: the server being down should fail fast.
+/// * **busy retries** — re-send after the server shed the request
+///   with `Busy`. Off by default so sheds stay visible to callers
+///   (and to tests that count them).
+/// * **backoff** — a seeded, jittered exponential [`Backoff`] slept
+///   before each retry; the default policy uses a zero base, i.e. it
+///   never sleeps.
+pub struct RetryPolicy {
+    transport_retries: u32,
+    busy_retries: u32,
+    backoff: Backoff,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy::transport_once()
+    }
+}
+
+impl RetryPolicy {
+    /// The historical client behavior: exactly one transparent
+    /// re-dial after a pooled-connection transport error, no `Busy`
+    /// retries, no sleeping.
+    pub fn transport_once() -> RetryPolicy {
+        RetryPolicy {
+            transport_retries: 1,
+            busy_retries: 0,
+            backoff: Backoff::new(Duration::ZERO, Duration::ZERO, 0),
+        }
+    }
+
+    /// Busy-aware policy for load generators: up to `busy_retries`
+    /// re-sends after `Busy` sheds (plus the one transport re-dial),
+    /// sleeping `base * 2^attempt` — capped at `cap`, jittered by
+    /// `seed` — before every retry.
+    pub fn busy_aware(busy_retries: u32, base: Duration,
+                      cap: Duration, seed: u64) -> RetryPolicy {
+        RetryPolicy {
+            transport_retries: 1,
+            busy_retries,
+            backoff: Backoff::new(base, cap, seed),
+        }
+    }
+
+    /// Start one logical call: reset the backoff ladder and hand out
+    /// this call's budget of attempts.
+    fn begin(&mut self) -> RetryBudget {
+        self.backoff.reset();
+        RetryBudget {
+            transport_left: self.transport_retries,
+            busy_left: self.busy_retries,
+        }
+    }
+
+    /// Sleep this attempt's backoff delay (a no-op for the default
+    /// zero-base policy).
+    fn pause(&mut self) {
+        let d = self.backoff.next_delay();
+        if !d.is_zero() {
+            thread::sleep(d);
+        }
+    }
+}
+
+/// One call's remaining attempts, drawn from a [`RetryPolicy`].
+struct RetryBudget {
+    transport_left: u32,
+    busy_left: u32,
+}
+
 struct Conn {
     r: BufReader<TcpStream>,
     w: BufWriter<TcpStream>,
@@ -43,8 +137,11 @@ pub struct NetClient {
     addr: String,
     conn: Option<Conn>,
     next_id: u64,
+    policy: RetryPolicy,
     /// times a stale connection was re-dialed (transport-error retries)
     pub reconnects: u64,
+    /// total retry attempts made (transport re-dials + `Busy` resends)
+    pub retries: u64,
 }
 
 impl NetClient {
@@ -55,10 +152,18 @@ impl NetClient {
             addr: addr.to_string(),
             conn: None,
             next_id: 1,
+            policy: RetryPolicy::default(),
             reconnects: 0,
+            retries: 0,
         };
         c.ensure_conn()?;
         Ok(c)
+    }
+
+    /// Replace the default [`RetryPolicy`] (one transport re-dial,
+    /// no `Busy` retries).
+    pub fn set_retry_policy(&mut self, policy: RetryPolicy) {
+        self.policy = policy;
     }
 
     fn ensure_conn(&mut self) -> Result<&mut Conn> {
@@ -114,23 +219,41 @@ impl NetClient {
         res
     }
 
-    /// Single blocking request. Retries exactly once over a fresh
-    /// connection if a *pooled* connection failed at the transport
-    /// level (stale keep-alive); never retries server-reported
-    /// `Busy`/`Error` replies, and never retries when the first dial
-    /// itself fails.
+    /// Single blocking request, governed by the client's
+    /// [`RetryPolicy`]. The default policy retries exactly once over
+    /// a fresh connection if a *pooled* connection failed at the
+    /// transport level (stale keep-alive); it never retries
+    /// server-reported `Busy`/`Error` replies, and never retries when
+    /// the first dial itself fails. A [`RetryPolicy::busy_aware`]
+    /// policy additionally re-sends after `Busy` sheds, sleeping its
+    /// backoff between attempts.
     pub fn call(&mut self, x: &[f32]) -> Result<NetReply> {
-        let id = self.fresh_id();
-        let had_conn = self.conn.is_some();
-        let frame = match self.round_trip_infer(id, x) {
-            Ok(f) => f,
-            Err(_) if had_conn => {
-                self.reconnects += 1;
-                self.round_trip_infer(id, x)?
+        let mut budget = self.policy.begin();
+        loop {
+            let id = self.fresh_id();
+            let had_conn = self.conn.is_some();
+            let frame = match self.round_trip_infer(id, x) {
+                Ok(f) => f,
+                Err(e) => {
+                    if had_conn && budget.transport_left > 0 {
+                        budget.transport_left -= 1;
+                        self.reconnects += 1;
+                        self.retries += 1;
+                        self.policy.pause();
+                        continue;
+                    }
+                    return Err(e);
+                }
+            };
+            let reply = self.reply_for(id, frame)?;
+            if matches!(reply, NetReply::Busy) && budget.busy_left > 0 {
+                budget.busy_left -= 1;
+                self.retries += 1;
+                self.policy.pause();
+                continue;
             }
-            Err(e) => return Err(e),
-        };
-        self.reply_for(id, frame)
+            return Ok(reply);
+        }
     }
 
     /// Blocking inference; `Busy` and server errors surface as `Err`.
@@ -203,8 +326,12 @@ pub struct NetClientV2 {
     conn: Option<Conn>,
     out_shape: [usize; 3],
     next_id: u64,
+    policy: RetryPolicy,
+    deadline: Option<Duration>,
     /// times a stale connection was re-dialed (transport-error retries)
     pub reconnects: u64,
+    /// total retry attempts made (transport re-dials + `Busy` resends)
+    pub retries: u64,
 }
 
 impl NetClientV2 {
@@ -222,10 +349,29 @@ impl NetClientV2 {
             conn: None,
             out_shape: [0; 3],
             next_id: 1,
+            policy: RetryPolicy::default(),
+            deadline: None,
             reconnects: 0,
+            retries: 0,
         };
         c.ensure_conn()?;
         Ok(c)
+    }
+
+    /// Replace the default [`RetryPolicy`] (one transport re-dial,
+    /// no `Busy` retries).
+    pub fn set_retry_policy(&mut self, policy: RetryPolicy) {
+        self.policy = policy;
+    }
+
+    /// Arm (or with `None`, disarm) a per-request time budget. Armed
+    /// calls ship the deadline-carrying v2 frames; the server answers
+    /// a typed `deadline exceeded` error — without running the engine
+    /// — once the budget is spent, whether at admission or waiting in
+    /// the batch queue. The budget is per *attempt*: a retry re-arms
+    /// the full budget.
+    pub fn set_deadline(&mut self, budget: Option<Duration>) {
+        self.deadline = budget;
     }
 
     /// The negotiated per-sample output shape from the server's
@@ -274,9 +420,9 @@ impl NetClientV2 {
 
     /// One request/reply exchange; transport failures poison the
     /// pooled (negotiated) connection.
-    fn round_trip_with<F>(&mut self, write: F) -> Result<Frame>
+    fn round_trip_with<F>(&mut self, id: u64, write: F) -> Result<Frame>
     where
-        F: Fn(&mut Conn) -> Result<()>,
+        F: Fn(&mut Conn, u64) -> Result<()>,
     {
         self.ensure_conn()?;
         let conn = self
@@ -284,67 +430,104 @@ impl NetClientV2 {
             .as_mut()
             .ok_or_else(|| anyhow!("session vanished after \
                                     negotiation"))?;
-        let res = exchange_with(conn, &write);
+        let res = exchange_with(conn, id, &write);
         if res.is_err() {
             self.conn = None;
         }
         res
     }
 
-    /// Retry-once wrapper mirroring [`NetClient::call`]: a transport
-    /// error on a *pooled* session re-dials (and re-negotiates) a
-    /// fresh one; server-reported replies are never retried.
-    fn call_with<F>(&mut self, id: u64, write: F) -> Result<NetReply>
+    /// Policy-governed wrapper mirroring [`NetClient::call`]: a
+    /// transport error on a *pooled* session re-dials (and
+    /// re-negotiates) a fresh one within the call's retry budget; a
+    /// busy-aware policy also re-sends after `Busy` sheds. `Error`
+    /// replies are never retried.
+    fn call_with<F>(&mut self, write: F) -> Result<NetReply>
     where
-        F: Fn(&mut Conn) -> Result<()>,
+        F: Fn(&mut Conn, u64) -> Result<()>,
     {
-        let had_conn = self.conn.is_some();
-        let frame = match self.round_trip_with(&write) {
-            Ok(f) => f,
-            Err(_) if had_conn => {
-                self.reconnects += 1;
-                self.round_trip_with(&write)?
-            }
-            Err(e) => return Err(e),
-        };
-        if frame.id() != id {
-            self.conn = None;
-            bail!("response id {} does not match request id {id}",
-                  frame.id());
-        }
-        match frame {
-            Frame::Output { y, .. } => Ok(NetReply::Output(y)),
-            Frame::Busy { .. } => Ok(NetReply::Busy),
-            Frame::Error { msg, .. } => Ok(NetReply::Error(msg)),
-            other => {
+        let mut budget = self.policy.begin();
+        loop {
+            let id = self.fresh_id();
+            let had_conn = self.conn.is_some();
+            let frame = match self.round_trip_with(id, &write) {
+                Ok(f) => f,
+                Err(e) => {
+                    if had_conn && budget.transport_left > 0 {
+                        budget.transport_left -= 1;
+                        self.reconnects += 1;
+                        self.retries += 1;
+                        self.policy.pause();
+                        continue;
+                    }
+                    return Err(e);
+                }
+            };
+            if frame.id() != id {
                 self.conn = None;
-                Err(anyhow!("unexpected {} frame from server",
-                            other.kind_name()))
+                bail!("response id {} does not match request id {id}",
+                      frame.id());
             }
+            let reply = match frame {
+                Frame::Output { y, .. } => NetReply::Output(y),
+                Frame::Busy { .. } => NetReply::Busy,
+                Frame::Error { msg, .. } => NetReply::Error(msg),
+                other => {
+                    self.conn = None;
+                    return Err(anyhow!("unexpected {} frame from \
+                                        server", other.kind_name()));
+                }
+            };
+            if matches!(reply, NetReply::Busy) && budget.busy_left > 0 {
+                budget.busy_left -= 1;
+                self.retries += 1;
+                self.policy.pause();
+                continue;
+            }
+            return Ok(reply);
         }
     }
 
     /// Single blocking f32 request on the negotiated model. The
     /// payload is encoded straight off the borrowed slice (no copy),
-    /// like the v1 client's hot path.
+    /// like the v1 client's hot path. With a deadline armed
+    /// ([`set_deadline`](NetClientV2::set_deadline)) the request
+    /// ships as a deadline-carrying `InferDl` frame.
     pub fn call(&mut self, x: &[f32]) -> Result<NetReply> {
-        let id = self.fresh_id();
-        self.call_with(id,
-                       |conn| proto::write_infer(&mut conn.w, id, x))
+        match self.deadline {
+            Some(budget) => {
+                let us = budget.as_micros() as u64;
+                self.call_with(|conn, id| {
+                    proto::write_infer_dl(&mut conn.w, id, us, x)
+                })
+            }
+            None => self.call_with(|conn, id| {
+                proto::write_infer(&mut conn.w, id, x)
+            }),
+        }
     }
 
     /// Single blocking int8 request (`x ≈ q * scale`); requires a
     /// session negotiated with [`Dtype::Int8`]. Payload encoded off
-    /// the borrowed slice, like [`call`](NetClientV2::call).
+    /// the borrowed slice, like [`call`](NetClientV2::call). With a
+    /// deadline armed the request ships as `InferI8Dl`.
     pub fn call_i8(&mut self, q: &[i8], scale: f32)
                    -> Result<NetReply> {
         ensure!(self.dtype == Dtype::Int8,
                 "session was negotiated as {}, not int8",
                 self.dtype.name());
-        let id = self.fresh_id();
-        self.call_with(id, |conn| {
-            proto::write_infer_i8(&mut conn.w, id, scale, q)
-        })
+        match self.deadline {
+            Some(budget) => {
+                let us = budget.as_micros() as u64;
+                self.call_with(|conn, id| {
+                    proto::write_infer_i8_dl(&mut conn.w, id, us,
+                                             scale, q)
+                })
+            }
+            None => self.call_with(|conn, id| {
+                proto::write_infer_i8(&mut conn.w, id, scale, q)
+            }),
+        }
     }
 
     /// Blocking f32 inference; `Busy` and server errors surface as
@@ -382,11 +565,12 @@ fn reply_to_result(reply: NetReply) -> Result<Vec<f32>> {
 /// The transport half of one v2 exchange: run the caller's frame
 /// writer, flush, read the reply (kept out of `NetClientV2` so the
 /// borrow of `conn` ends before the poisoning check).
-fn exchange_with<F>(conn: &mut Conn, write: &F) -> Result<Frame>
+fn exchange_with<F>(conn: &mut Conn, id: u64, write: &F)
+                    -> Result<Frame>
 where
-    F: Fn(&mut Conn) -> Result<()>,
+    F: Fn(&mut Conn, u64) -> Result<()>,
 {
-    write(conn)?;
+    write(conn, id)?;
     conn.w.flush()?;
     proto::read_frame(&mut conn.r)?
         .ok_or_else(|| anyhow!("server closed the connection"))

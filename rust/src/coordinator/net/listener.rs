@@ -43,10 +43,13 @@ use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
+use std::time::{Duration, Instant};
 
 use super::proto::{self, Frame};
+use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::metrics::{NetCounters, NetSummary};
-use crate::coordinator::server::{PendingInfer, ServerHandle};
+use crate::coordinator::server::{PendingInfer, ServerHandle,
+                                 DEADLINE_MSG};
 use crate::engine::{Dtype, Payload};
 use crate::util::error::{anyhow, Context, Result};
 
@@ -99,6 +102,20 @@ impl NetServer {
     /// across all connections; `0` sheds everything (useful in tests).
     pub fn start(handle: ServerHandle, addr: &str,
                  max_in_flight: usize) -> Result<NetServer> {
+        NetServer::start_with(handle, addr, max_in_flight, None)
+    }
+
+    /// [`NetServer::start`] with a deterministic fault-injection plan
+    /// threaded through the accept/read/write paths: `accept.drop`
+    /// closes a just-accepted connection before it is registered,
+    /// `read.stall_ms` sleeps the reader before decoding a frame (a
+    /// slow client), and `write.drop` severs a connection from the
+    /// writer side mid-stream. `None` is the production path — no
+    /// hook is consulted.
+    pub fn start_with(handle: ServerHandle, addr: &str,
+                      max_in_flight: usize,
+                      faults: Option<Arc<FaultPlan>>)
+                      -> Result<NetServer> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr().context("local_addr")?;
@@ -132,11 +149,22 @@ impl NetServer {
                                 continue;
                             }
                         };
+                        // accept.drop: hang up before the connection
+                        // is counted or registered — to the client it
+                        // looks like a flaky network, and its retry
+                        // policy reconnects
+                        if faults
+                            .as_deref()
+                            .is_some_and(FaultPlan::drop_accept)
+                        {
+                            drop(stream);
+                            continue;
+                        }
                         counters.connections
                             .fetch_add(1, Ordering::Relaxed);
                         spawn_connection(stream, handle.clone(), &conns,
                                          &counters, &in_flight,
-                                         max_in_flight);
+                                         max_in_flight, faults.clone());
                     }
                 })
                 .map_err(|e| anyhow!("spawning acceptor: {e}"))?
@@ -215,7 +243,8 @@ impl NetServer {
 fn spawn_connection(stream: TcpStream, handle: ServerHandle,
                     conns: &Arc<Mutex<Registry>>,
                     counters: &Arc<NetCounters>,
-                    in_flight: &Arc<AtomicUsize>, cap: usize) {
+                    in_flight: &Arc<AtomicUsize>, cap: usize,
+                    faults: Option<Arc<FaultPlan>>) {
     stream.set_nodelay(true).ok();
     stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT)).ok();
     let Ok(read_half) = stream.try_clone() else { return };
@@ -236,8 +265,10 @@ fn spawn_connection(stream: TcpStream, handle: ServerHandle,
     let writer = {
         let counters = Arc::clone(counters);
         let in_flight = Arc::clone(in_flight);
+        let faults = faults.clone();
         thread::spawn(move || {
-            writer_loop(stream, reply_rx, &counters, &in_flight);
+            writer_loop(stream, reply_rx, &counters, &in_flight,
+                        faults.as_deref());
         })
     };
     let reader = {
@@ -246,7 +277,7 @@ fn spawn_connection(stream: TcpStream, handle: ServerHandle,
         let conns = Arc::clone(conns);
         thread::spawn(move || {
             reader_loop(read_half, &handle, &reply_tx, &counters,
-                        &in_flight, cap);
+                        &in_flight, cap, faults.as_deref());
             drop(reply_tx); // lets the writer drain and exit
             // lint:allow(no-panic-serving) poisoned registry: this
             // reader thread is exiting anyway, propagating is fine
@@ -282,14 +313,28 @@ struct Gate<'a> {
 }
 
 /// Bounded admission + engine submit for one decoded inference
-/// payload: take an in-flight slot or shed with `Busy`, then validate
-/// against the session's model via
-/// [`ServerHandle::infer_async_for`] (rejections surface as `Error`
-/// frames and release the slot).
+/// payload: reject an already-expired deadline with a typed `Error`
+/// frame (before a slot is taken — a dead request must not occupy
+/// capacity), take an in-flight slot or shed with `Busy`, then
+/// validate against the session's model via
+/// [`ServerHandle::infer_async_deadline_for`] (rejections surface as
+/// `Error` frames and release the slot). Returns `true` when the
+/// request was shed with `Busy` — the reader uses that to recognize
+/// the client's next attempt as a retry.
 fn admit_and_submit(gate: &Gate<'_>, handle: &ServerHandle,
                     reply: &mpsc::SyncSender<Reply>, id: u64,
-                    model: usize, x: Vec<f32>) {
+                    model: usize, x: Vec<f32>,
+                    deadline: Option<Instant>) -> bool {
     gate.counters.requests.fetch_add(1, Ordering::Relaxed);
+    if deadline.is_some_and(|d| d <= Instant::now()) {
+        gate.counters.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+        gate.counters.errors.fetch_add(1, Ordering::Relaxed);
+        let _ = reply.send(Reply::Ready(Frame::Error {
+            id,
+            msg: format!("{DEADLINE_MSG} before admission"),
+        }));
+        return false;
+    }
     let admitted = gate.in_flight
         .fetch_update(Ordering::SeqCst, Ordering::SeqCst,
                       |n| (n < gate.cap).then_some(n + 1))
@@ -297,9 +342,9 @@ fn admit_and_submit(gate: &Gate<'_>, handle: &ServerHandle,
     if !admitted {
         gate.counters.busy.fetch_add(1, Ordering::Relaxed);
         let _ = reply.send(Reply::Ready(Frame::Busy { id }));
-        return;
+        return true;
     }
-    match handle.infer_async_for(model, x) {
+    match handle.infer_async_deadline_for(model, x, deadline) {
         Ok(pending) => {
             let _ = reply.send(Reply::Pending { id, pending });
         }
@@ -312,16 +357,25 @@ fn admit_and_submit(gate: &Gate<'_>, handle: &ServerHandle,
             }));
         }
     }
+    false
 }
 
 fn reader_loop(stream: TcpStream, handle: &ServerHandle,
                reply: &mpsc::SyncSender<Reply>, counters: &NetCounters,
-               in_flight: &AtomicUsize, cap: usize) {
+               in_flight: &AtomicUsize, cap: usize,
+               faults: Option<&FaultPlan>) {
     let mut r = BufReader::new(stream);
     let gate = Gate { counters, in_flight, cap };
     // v1-compatible default binding until a Hello renegotiates
     let mut session = Session { model: 0, dtype: Dtype::F32 };
+    // set when this connection was last shed with Busy: the next
+    // inference frame on the same connection is, by construction, the
+    // client retrying — counted server-side as `retries`
+    let mut saw_busy = false;
     loop {
+        if let Some(d) = faults.and_then(FaultPlan::stall_read) {
+            thread::sleep(d);
+        }
         let frame = match proto::read_frame(&mut r) {
             Ok(Some(f)) => f,
             // clean close, or the drain path shutting down read halves
@@ -373,8 +427,11 @@ fn reader_loop(stream: TcpStream, handle: &ServerHandle,
                 }
             }
             Frame::Infer { id, x } => {
-                admit_and_submit(&gate, handle, reply, id,
-                                 session.model, x);
+                if saw_busy {
+                    counters.retries.fetch_add(1, Ordering::Relaxed);
+                }
+                saw_busy = admit_and_submit(&gate, handle, reply, id,
+                                            session.model, x, None);
             }
             Frame::InferI8 { id, scale, data } => {
                 if session.dtype != Dtype::Int8 {
@@ -391,11 +448,48 @@ fn reader_loop(stream: TcpStream, handle: &ServerHandle,
                     }));
                     continue;
                 }
+                if saw_busy {
+                    counters.retries.fetch_add(1, Ordering::Relaxed);
+                }
                 // the one admission-time dequant lives in the typed
                 // payload, shared with in-process int8 requests
                 let x = Payload::Int8 { data, scale }.into_f32();
-                admit_and_submit(&gate, handle, reply, id,
-                                 session.model, x);
+                saw_busy = admit_and_submit(&gate, handle, reply, id,
+                                            session.model, x, None);
+            }
+            Frame::InferDl { id, deadline_us, x } => {
+                if saw_busy {
+                    counters.retries.fetch_add(1, Ordering::Relaxed);
+                }
+                // the wire carries the *remaining* budget; pin it to
+                // an absolute instant the moment the frame is decoded
+                let deadline = Instant::now()
+                    + Duration::from_micros(deadline_us);
+                saw_busy = admit_and_submit(&gate, handle, reply, id,
+                                            session.model, x,
+                                            Some(deadline));
+            }
+            Frame::InferI8Dl { id, deadline_us, scale, data } => {
+                if session.dtype != Dtype::Int8 {
+                    counters.requests.fetch_add(1, Ordering::Relaxed);
+                    counters.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = reply.send(Reply::Ready(Frame::Error {
+                        id,
+                        msg: "int8 payloads need an int8 session \
+                              (send Hello with dtype int8 first)"
+                            .into(),
+                    }));
+                    continue;
+                }
+                if saw_busy {
+                    counters.retries.fetch_add(1, Ordering::Relaxed);
+                }
+                let deadline = Instant::now()
+                    + Duration::from_micros(deadline_us);
+                let x = Payload::Int8 { data, scale }.into_f32();
+                saw_busy = admit_and_submit(&gate, handle, reply, id,
+                                            session.model, x,
+                                            Some(deadline));
             }
             other => {
                 // clients may only send Infer, InferI8, Hello, Ping
@@ -412,13 +506,25 @@ fn reader_loop(stream: TcpStream, handle: &ServerHandle,
 }
 
 fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<Reply>,
-               counters: &NetCounters, in_flight: &AtomicUsize) {
+               counters: &NetCounters, in_flight: &AtomicUsize,
+               faults: Option<&FaultPlan>) {
     let mut w = BufWriter::new(stream);
     let mut broken = false;
     'serve: while let Ok(first) = rx.recv() {
         // write everything already queued, then flush once
         let mut next = Some(first);
         while let Some(reply) = next {
+            // write.drop severs the connection mid-reply, exercising
+            // the same broken-path cleanup a real peer reset would
+            if faults.is_some_and(FaultPlan::drop_write) {
+                // the reply being dropped may own an in-flight slot
+                if let Reply::Pending { pending, .. } = reply {
+                    let _ = pending.wait();
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                }
+                broken = true;
+                break 'serve;
+            }
             if write_reply(&mut w, reply, counters, in_flight).is_err() {
                 broken = true;
                 break 'serve;

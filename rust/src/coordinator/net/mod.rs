@@ -12,8 +12,11 @@
 //! * [`client`] — [`NetClient`]: the blocking v1 (f32, default-model)
 //!   client with transparent reconnect and explicit pipelining; and
 //!   [`NetClientV2`]: the session client that negotiates
-//!   `Hello`/`HelloAck` (model name, shape, dtype) and can ship int8
-//!   payloads.
+//!   `Hello`/`HelloAck` (model name, shape, dtype), can ship int8
+//!   payloads, and can arm per-request deadlines. Both clients retry
+//!   under a configurable [`RetryPolicy`] (transparent re-dial by
+//!   default; opt-in `Busy` re-send with jittered exponential
+//!   backoff).
 //!
 //! Wired through `wino-adder serve --listen ADDR` (server side) and
 //! `wino-adder bench-serve` (server + closed-loop load generator over
@@ -28,5 +31,5 @@ pub mod client;
 pub mod listener;
 pub mod proto;
 
-pub use client::{NetClient, NetClientV2, NetReply};
+pub use client::{NetClient, NetClientV2, NetReply, RetryPolicy};
 pub use listener::NetServer;

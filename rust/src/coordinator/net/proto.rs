@@ -27,6 +27,15 @@
 //! **bit-identically**: the server writes the exact same bytes to
 //! both.
 //!
+//! **Deadline-carrying kinds** (also v2): `10` InferDl and `11`
+//! InferI8Dl prefix the matching non-deadline payload with a
+//! `deadline_us` u64 — the request's **remaining budget in
+//! microseconds at send time** (relative, not a wall-clock timestamp,
+//! so skewed clocks cannot poison it; `0` means already expired). A
+//! client that never sends a deadline emits the exact same bytes it
+//! always did — kinds 1-9 are untouched, which is the deadline
+//! feature's own bit-compatibility guarantee.
+//!
 //! Decoding is **version-dispatched** and strict: the version field
 //! selects which kinds are legal (v1 headers may only carry kinds
 //! 1-6, v2 headers only 7-9); wrong magic, unknown version/kind,
@@ -86,6 +95,10 @@ pub const KIND_HELLO: u8 = 7;
 pub const KIND_HELLO_ACK: u8 = 8;
 /// v2 client→server: int8 inference request.
 pub const KIND_INFER_I8: u8 = 9;
+/// v2 client→server: f32 inference request with a deadline budget.
+pub const KIND_INFER_DL: u8 = 10;
+/// v2 client→server: int8 inference request with a deadline budget.
+pub const KIND_INFER_I8_DL: u8 = 11;
 
 /// One decoded wire frame.
 #[derive(Debug, Clone, PartialEq)]
@@ -112,6 +125,12 @@ pub enum Frame {
     /// client→server (v2): run inference on a symmetric-quantized
     /// int8 sample (`x ≈ q * scale`)
     InferI8 { id: u64, scale: f32, data: Vec<i8> },
+    /// client→server (v2): [`Frame::Infer`] plus a deadline —
+    /// `deadline_us` is the remaining budget in microseconds at send
+    /// time (0 = already expired)
+    InferDl { id: u64, deadline_us: u64, x: Vec<f32> },
+    /// client→server (v2): [`Frame::InferI8`] plus a deadline budget
+    InferI8Dl { id: u64, deadline_us: u64, scale: f32, data: Vec<i8> },
 }
 
 impl Frame {
@@ -126,7 +145,9 @@ impl Frame {
             | Frame::Pong { id }
             | Frame::Hello { id, .. }
             | Frame::HelloAck { id, .. }
-            | Frame::InferI8 { id, .. } => *id,
+            | Frame::InferI8 { id, .. }
+            | Frame::InferDl { id, .. }
+            | Frame::InferI8Dl { id, .. } => *id,
         }
     }
 
@@ -142,6 +163,8 @@ impl Frame {
             Frame::Hello { .. } => KIND_HELLO,
             Frame::HelloAck { .. } => KIND_HELLO_ACK,
             Frame::InferI8 { .. } => KIND_INFER_I8,
+            Frame::InferDl { .. } => KIND_INFER_DL,
+            Frame::InferI8Dl { .. } => KIND_INFER_I8_DL,
         }
     }
 
@@ -166,6 +189,8 @@ impl Frame {
             Frame::Hello { .. } => "hello",
             Frame::HelloAck { .. } => "hello-ack",
             Frame::InferI8 { .. } => "infer-i8",
+            Frame::InferDl { .. } => "infer-dl",
+            Frame::InferI8Dl { .. } => "infer-i8-dl",
         }
     }
 
@@ -179,6 +204,8 @@ impl Frame {
             Frame::Hello { model, .. } => HELLO_FIXED + model.len(),
             Frame::HelloAck { .. } => HELLO_FIXED,
             Frame::InferI8 { data, .. } => 4 + data.len(),
+            Frame::InferDl { x, .. } => 8 + x.len() * 4,
+            Frame::InferI8Dl { data, .. } => 8 + 4 + data.len(),
         }
     }
 
@@ -251,6 +278,15 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
             w.write_all(&scale.to_le_bytes())?;
             write_i8s(w, data)?;
         }
+        Frame::InferDl { deadline_us, x, .. } => {
+            w.write_all(&deadline_us.to_le_bytes())?;
+            write_f32s(w, x)?;
+        }
+        Frame::InferI8Dl { deadline_us, scale, data, .. } => {
+            w.write_all(&deadline_us.to_le_bytes())?;
+            w.write_all(&scale.to_le_bytes())?;
+            write_i8s(w, data)?;
+        }
     }
     Ok(())
 }
@@ -270,6 +306,28 @@ pub fn write_infer<W: Write>(w: &mut W, id: u64, x: &[f32])
 pub fn write_infer_i8<W: Write>(w: &mut W, id: u64, scale: f32,
                                 data: &[i8]) -> Result<()> {
     write_header(w, V2, KIND_INFER_I8, id, 4 + data.len())?;
+    w.write_all(&scale.to_le_bytes())?;
+    write_i8s(w, data)
+}
+
+/// Encode an `InferDl` frame straight from a borrowed payload (the
+/// deadline-carrying f32 hot path). Wire-identical to
+/// `write_frame(&Frame::InferDl { id, deadline_us, x })`.
+pub fn write_infer_dl<W: Write>(w: &mut W, id: u64, deadline_us: u64,
+                                x: &[f32]) -> Result<()> {
+    write_header(w, V2, KIND_INFER_DL, id, 8 + x.len() * 4)?;
+    w.write_all(&deadline_us.to_le_bytes())?;
+    write_f32s(w, x)
+}
+
+/// Encode an `InferI8Dl` frame straight from a borrowed payload (the
+/// deadline-carrying int8 hot path). Wire-identical to
+/// `write_frame(&Frame::InferI8Dl { id, deadline_us, scale, data })`.
+pub fn write_infer_i8_dl<W: Write>(w: &mut W, id: u64, deadline_us: u64,
+                                   scale: f32, data: &[i8])
+                                   -> Result<()> {
+    write_header(w, V2, KIND_INFER_I8_DL, id, 8 + 4 + data.len())?;
+    w.write_all(&deadline_us.to_le_bytes())?;
     w.write_all(&scale.to_le_bytes())?;
     write_i8s(w, data)
 }
@@ -380,6 +438,27 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
             let scale = f32::from_le_bytes(sbuf);
             let data = read_i8s(r, plen - 4)?;
             Ok(Some(Frame::InferI8 { id, scale, data }))
+        }
+        (V2, KIND_INFER_DL) => {
+            ensure!(plen >= 8,
+                    "infer-dl payload too short: {plen} bytes");
+            let mut dbuf = [0u8; 8];
+            r.read_exact(&mut dbuf)?;
+            let deadline_us = u64::from_le_bytes(dbuf);
+            let x = read_f32_payload(r, plen - 8)?;
+            Ok(Some(Frame::InferDl { id, deadline_us, x }))
+        }
+        (V2, KIND_INFER_I8_DL) => {
+            ensure!(plen >= 12,
+                    "infer-i8-dl payload too short: {plen} bytes");
+            let mut dbuf = [0u8; 8];
+            r.read_exact(&mut dbuf)?;
+            let deadline_us = u64::from_le_bytes(dbuf);
+            let mut sbuf = [0u8; 4];
+            r.read_exact(&mut sbuf)?;
+            let scale = f32::from_le_bytes(sbuf);
+            let data = read_i8s(r, plen - 12)?;
+            Ok(Some(Frame::InferI8Dl { id, deadline_us, scale, data }))
         }
         (v, k) => bail!("unknown frame kind {k} for version {v}"),
     }
@@ -495,6 +574,30 @@ mod tests {
         roundtrip(&Frame::InferI8 { id: 12, scale: 0.03125,
                                     data: vec![-128, -1, 0, 1, 127] });
         roundtrip(&Frame::InferI8 { id: 13, scale: 1.0, data: vec![] });
+        roundtrip(&Frame::InferDl { id: 14, deadline_us: 50_000,
+                                    x: vec![1.0, -2.5] });
+        roundtrip(&Frame::InferI8Dl { id: 15, deadline_us: 1,
+                                      scale: 0.5, data: vec![-1, 7] });
+    }
+
+    #[test]
+    fn deadline_frames_roundtrip_zero_expired_and_far_future() {
+        // 0 = already expired at send time — still a legal frame; the
+        // server answers it with a typed error, not a decode failure
+        roundtrip(&Frame::InferDl { id: 1, deadline_us: 0,
+                                    x: vec![1.0] });
+        roundtrip(&Frame::InferI8Dl { id: 2, deadline_us: 0,
+                                      scale: 1.0, data: vec![3] });
+        // far-future budgets must survive the full u64 range
+        roundtrip(&Frame::InferDl { id: 3, deadline_us: u64::MAX,
+                                    x: vec![] });
+        roundtrip(&Frame::InferI8Dl { id: 4, deadline_us: u64::MAX,
+                                      scale: 0.25, data: vec![] });
+        // the budget is bit-exact on the wire, not re-quantized
+        let bytes = encode(&Frame::InferDl {
+            id: 5, deadline_us: 0x0123_4567_89ab_cdef, x: vec![] });
+        assert_eq!(&bytes[HEADER_LEN..HEADER_LEN + 8],
+                   &0x0123_4567_89ab_cdefu64.to_le_bytes());
     }
 
     #[test]
@@ -518,11 +621,42 @@ mod tests {
                   Frame::HelloAck { id: 8, shape: [1, 2, 2],
                                     dtype: Dtype::Int8 },
                   Frame::InferI8 { id: 9, scale: 0.5,
-                                   data: vec![1, 2] }] {
+                                   data: vec![1, 2] },
+                  Frame::InferDl { id: 10, deadline_us: 9,
+                                   x: vec![1.0] },
+                  Frame::InferI8Dl { id: 11, deadline_us: 9,
+                                     scale: 0.5, data: vec![1] }] {
             let bytes = encode(&f);
             assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), V2,
                        "{} must be v2", f.kind_name());
         }
+    }
+
+    #[test]
+    fn deadline_less_frames_keep_their_exact_bytes() {
+        // the deadline feature's compatibility contract: a client that
+        // sends no deadline produces the exact bytes it did before
+        // kinds 10/11 existed — same header, same payload
+        let x = vec![1.0f32, -2.0];
+        let plain = encode(&Frame::Infer { id: 7, x: x.clone() });
+        let mut direct = Vec::new();
+        write_infer(&mut direct, 7, &x).unwrap();
+        assert_eq!(plain, direct);
+        assert_eq!(plain[6], KIND_INFER);
+        let q: Vec<i8> = vec![4, -5];
+        let plain8 = encode(&Frame::InferI8 {
+            id: 8, scale: 0.5, data: q.clone() });
+        let mut direct8 = Vec::new();
+        write_infer_i8(&mut direct8, 8, 0.5, &q).unwrap();
+        assert_eq!(plain8, direct8);
+        assert_eq!(plain8[6], KIND_INFER_I8);
+        // and a deadline frame differs from its plain twin only by
+        // kind byte + the 8-byte budget prefix
+        let dl = encode(&Frame::InferDl {
+            id: 7, deadline_us: 0x11, x: x.clone() });
+        assert_eq!(dl.len(), plain.len() + 8);
+        assert_eq!(dl[6], KIND_INFER_DL);
+        assert_eq!(&dl[HEADER_LEN + 8..], &plain[HEADER_LEN..]);
     }
 
     #[test]
@@ -573,6 +707,75 @@ mod tests {
         no_scale[16..20].copy_from_slice(&2u32.to_le_bytes());
         no_scale.extend_from_slice(&[0, 0]);
         assert!(read_frame(&mut &no_scale[..]).is_err());
+    }
+
+    #[test]
+    fn malformed_deadline_frames_are_rejected() {
+        // payload shorter than the 8-byte budget prefix
+        let mut short = encode(&Frame::InferDl {
+            id: 1, deadline_us: 1, x: vec![] });
+        short[16..20].copy_from_slice(&4u32.to_le_bytes());
+        short.truncate(HEADER_LEN + 4);
+        assert!(read_frame(&mut &short[..]).is_err());
+
+        // f32 body after the prefix must be a multiple of 4
+        let mut ragged = encode(&Frame::InferDl {
+            id: 1, deadline_us: 1, x: vec![1.0] });
+        ragged[16..20].copy_from_slice(&11u32.to_le_bytes());
+        ragged.truncate(HEADER_LEN + 11);
+        assert!(read_frame(&mut &ragged[..]).is_err());
+
+        // i8-dl shorter than budget + scale
+        let mut no_scale = encode(&Frame::InferI8Dl {
+            id: 1, deadline_us: 1, scale: 1.0, data: vec![] });
+        no_scale[16..20].copy_from_slice(&10u32.to_le_bytes());
+        no_scale.truncate(HEADER_LEN + 10);
+        assert!(read_frame(&mut &no_scale[..]).is_err());
+
+        // deadline kinds under a v1 header are a framing error
+        let mut v1_header = encode(&Frame::InferDl {
+            id: 1, deadline_us: 1, x: vec![1.0] });
+        v1_header[4..6].copy_from_slice(&V1.to_le_bytes());
+        assert!(read_frame(&mut &v1_header[..]).is_err());
+
+        // truncated mid-budget is an error, not a hang or a panic
+        let whole = encode(&Frame::InferI8Dl {
+            id: 1, deadline_us: 7, scale: 1.0, data: vec![1, 2] });
+        for cut in HEADER_LEN..whole.len() {
+            assert!(read_frame(&mut &whole[..cut]).is_err(),
+                    "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn write_infer_dl_is_wire_identical_to_write_frame() {
+        let x = vec![0.5f32, -1.5];
+        let mut direct = Vec::new();
+        write_infer_dl(&mut direct, 44, 123_456, &x).unwrap();
+        assert_eq!(direct, encode(&Frame::InferDl {
+            id: 44, deadline_us: 123_456, x }));
+        let q: Vec<i8> = vec![9, -9, 0];
+        let mut direct8 = Vec::new();
+        write_infer_i8_dl(&mut direct8, 45, 77, 0.125, &q).unwrap();
+        assert_eq!(direct8, encode(&Frame::InferI8Dl {
+            id: 45, deadline_us: 77, scale: 0.125, data: q }));
+    }
+
+    /// Bit-flip fuzzing over a deadline frame: decoding must never
+    /// panic, and whatever decodes must re-encode cleanly.
+    #[test]
+    fn corrupted_deadline_frames_never_panic() {
+        let mut rng = Rng::new(0xdead1);
+        let good = encode(&Frame::InferDl {
+            id: 6, deadline_us: 42_000, x: vec![1.0, 2.0] });
+        for _ in 0..300 {
+            let mut mutated = good.clone();
+            let at = rng.below(mutated.len());
+            mutated[at] ^= 1 << rng.below(8);
+            if let Ok(Some(f)) = read_frame(&mut &mutated[..]) {
+                roundtrip(&f);
+            }
+        }
     }
 
     #[test]

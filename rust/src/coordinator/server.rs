@@ -33,6 +33,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, Batcher, Request};
+use super::faults::FaultPlan;
 use super::metrics::{BucketStat, EngineSummary, LatencyStats,
                      MetricsSnapshot, ModelStat};
 use super::router::Router;
@@ -49,6 +50,11 @@ use crate::util::io;
 #[cfg(feature = "pjrt")]
 use std::path::PathBuf;
 
+/// The one reply string for a deadline miss, shared by the admission
+/// check and the in-queue cull — the engine facade and the TCP
+/// front-end both match on it to surface a typed error.
+pub const DEADLINE_MSG: &str = "deadline exceeded";
+
 /// One inference request: a single image (C*H*W flat, already
 /// validated and dequantized) in, logits-like feature map out.
 struct InferMsg {
@@ -57,6 +63,8 @@ struct InferMsg {
     x: Vec<f32>,
     resp: mpsc::Sender<Result<Vec<f32>, String>>,
     submitted: Instant,
+    /// absolute completion deadline; `None` = no deadline
+    deadline: Option<Instant>,
 }
 
 enum Msg {
@@ -139,6 +147,18 @@ impl ServerHandle {
     /// see well-formed work.
     pub fn infer_async_for(&self, model: usize, x: Vec<f32>)
                            -> Result<PendingInfer> {
+        self.infer_async_deadline_for(model, x, None)
+    }
+
+    /// [`infer_async_for`](ServerHandle::infer_async_for) with an
+    /// optional absolute completion deadline. An expired request is
+    /// culled from the queue and answered with a typed
+    /// [`DEADLINE_MSG`] error **before** it reaches the backend;
+    /// the batcher also closes its window early once the deadline
+    /// budget is half spent waiting.
+    pub fn infer_async_deadline_for(&self, model: usize, x: Vec<f32>,
+                                    deadline: Option<Instant>)
+                                    -> Result<PendingInfer> {
         let info = self.models.get(model).ok_or_else(|| {
             anyhow!("model index {model} out of range ({} hosted)",
                     self.models.len())
@@ -154,6 +174,7 @@ impl ServerHandle {
                 x,
                 resp: resp_tx,
                 submitted: Instant::now(),
+                deadline,
             }))
             .map_err(|_| anyhow!("server stopped"))?;
         Ok(PendingInfer { rx: resp_rx })
@@ -254,6 +275,25 @@ impl Server {
                         tune: TuneMode, policy: BatchPolicy)
                         -> Result<(ServerHandle,
                                    thread::JoinHandle<()>)> {
+        Server::start_hosted_with_faults(models, backend, threads,
+                                         kernel, tune, policy, None)
+    }
+
+    /// [`Server::start_hosted`] with a deterministic fault-injection
+    /// plan. When `faults` is `Some`, the engine thread consults the
+    /// plan at two points: `admit.err` answers an arriving request
+    /// with a typed error instead of enqueuing it, and `engine.panic`
+    /// fails a whole batch with a typed error (or exits the process
+    /// when the plan's `abort_on_engine_panic` is set — the supervised
+    /// child's crash mode). `None` is the production path: the hooks
+    /// are never consulted.
+    pub fn start_hosted_with_faults(models: Vec<HostedModel>,
+                                    backend: BackendKind,
+                                    threads: usize, kernel: KernelKind,
+                                    tune: TuneMode, policy: BatchPolicy,
+                                    faults: Option<Arc<FaultPlan>>)
+                                    -> Result<(ServerHandle,
+                                               thread::JoinHandle<()>)> {
         if models.is_empty() {
             return Err(anyhow!("no models to host"));
         }
@@ -283,7 +323,8 @@ impl Server {
             .name("wino-adder-native-engine".into())
             .spawn(move || {
                 let exec = PlannedExec { backend, models: compiled };
-                if let Err(e) = serve_loop(policy, rx, exec, models_arc)
+                if let Err(e) = serve_loop(policy, rx, exec, models_arc,
+                                           faults)
                 {
                     eprintln!("engine thread error: {e:?}");
                 }
@@ -325,7 +366,7 @@ impl Server {
                     }
                     serve_loop(policy, rx,
                                PjrtExec { lanes, w, out: Vec::new() },
-                               models_arc)
+                               models_arc, None)
                 };
                 if let Err(e) = run() {
                     eprintln!("engine thread error: {e:?}");
@@ -474,21 +515,43 @@ impl BatchExec for PjrtExec {
     }
 }
 
-/// Enqueue one request on its model's batcher, or reply with an error
-/// if the model index is out of range. The typed engine facade
-/// validates indices before they reach the channel, so the miss arm is
-/// a defensive reply path, not a panic.
+/// Enqueue one request on its model's batcher, or reply without
+/// enqueuing: out-of-range model indices get an error (the typed
+/// engine facade validates before the channel, so that arm is a
+/// defensive reply path, not a panic), already-expired deadlines get
+/// [`DEADLINE_MSG`], and a firing `admit.err` fault gets its typed
+/// injection message. Returns `true` if the reply was a deadline
+/// miss (the caller counts those).
 fn submit_or_reject(batchers: &mut [Batcher<InferMsg>], m: InferMsg,
-                    now_us: u64) {
+                    now_us: u64, faults: Option<&FaultPlan>) -> bool {
+    if faults.is_some_and(FaultPlan::fail_admit) {
+        let _ = m.resp.send(Err("injected fault: admit.err".into()));
+        return false;
+    }
     match batchers.get_mut(m.model) {
         Some(b) => {
-            b.submit(m, now_us);
+            let budget_us = match m.deadline {
+                Some(d) => {
+                    let remaining = d
+                        .saturating_duration_since(Instant::now())
+                        .as_micros() as u64;
+                    if remaining == 0 {
+                        let _ =
+                            m.resp.send(Err(DEADLINE_MSG.to_string()));
+                        return true;
+                    }
+                    remaining
+                }
+                None => 0,
+            };
+            b.submit_with_budget(m, now_us, budget_us);
         }
         None => {
             let msg = format!("unknown model index {}", m.model);
             let _ = m.resp.send(Err(msg));
         }
     }
+    false
 }
 
 /// Assemble the [`MetricsSnapshot`] from the serving loop's running
@@ -497,7 +560,9 @@ fn submit_or_reject(batchers: &mut [Batcher<InferMsg>], m: InferMsg,
 fn build_snapshot(models: &[ModelInfo], router: &Router,
                   batchers: &[Batcher<InferMsg>],
                   latency: &LatencyStats, batches: u64, swaps: u64,
-                  versions: &[Option<u64>]) -> MetricsSnapshot {
+                  versions: &[Option<u64>],
+                  deadline_exceeded: u64,
+                  faults: Option<&FaultPlan>) -> MetricsSnapshot {
     let bucket_batches = super::router::per_bucket_completed(router);
     let per_bucket: Vec<BucketStat> =
         super::router::per_bucket_samples(router)
@@ -526,11 +591,13 @@ fn build_snapshot(models: &[ModelInfo], router: &Router,
             served: batchers.iter().map(|b| b.dispatched).sum(),
             batches,
             swaps,
+            deadline_exceeded,
         },
         net: None,
         latency: latency.summarize(),
         per_model,
         per_bucket,
+        faults: faults.map(FaultPlan::summary),
     }
 }
 
@@ -559,7 +626,8 @@ fn apply_swap<E: BatchExec>(exec: &mut E, sw: SwapMsg,
 /// answer live stats/swap control messages between batches, and
 /// report the final snapshot on stop.
 fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
-                            mut exec: E, models: Arc<Vec<ModelInfo>>)
+                            mut exec: E, models: Arc<Vec<ModelInfo>>,
+                            faults: Option<Arc<FaultPlan>>)
                             -> Result<()> {
     // one lane per (model, bucket) pair
     let mut router = Router::new();
@@ -582,28 +650,39 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
     // replaces the boot-time weights
     let mut versions: Vec<Option<u64>> = vec![None; models.len()];
     let mut stop_reply: Option<mpsc::Sender<MetricsSnapshot>> = None;
+    // requests answered with DEADLINE_MSG before reaching the backend
+    let mut deadline_exceeded = 0u64;
+    let plan = faults.as_deref();
     // batch staging buffers, reused across batches (grown once):
-    // `batch` holds the drained requests, `xbuf` their packed inputs
+    // `batch` holds the drained requests, `xbuf` their packed inputs,
+    // `expired` the deadline-culled requests of one sweep
     let mut batch: Vec<Request<InferMsg>> = Vec::new();
     let mut xbuf: Vec<f32> = Vec::new();
+    let mut expired: Vec<Request<InferMsg>> = Vec::new();
 
     'outer: loop {
         // drain or wait for messages
         let timeout = Duration::from_micros(200);
         match rx.recv_timeout(timeout) {
             Ok(Msg::Infer(m)) => {
-                submit_or_reject(&mut batchers, m, now_us(&start));
+                if submit_or_reject(&mut batchers, m, now_us(&start),
+                                    plan) {
+                    deadline_exceeded += 1;
+                }
                 // opportunistically drain without blocking
                 while let Ok(msg) = rx.try_recv() {
                     match msg {
                         Msg::Infer(m) => {
-                            submit_or_reject(&mut batchers, m,
-                                             now_us(&start));
+                            if submit_or_reject(&mut batchers, m,
+                                                now_us(&start), plan) {
+                                deadline_exceeded += 1;
+                            }
                         }
                         Msg::Stats(s) => {
                             let _ = s.send(build_snapshot(
                                 &models, &router, &batchers, &latency,
-                                batches, swaps, &versions));
+                                batches, swaps, &versions,
+                                deadline_exceeded, plan));
                         }
                         Msg::Swap(sw) => {
                             apply_swap(&mut exec, sw, &mut swaps,
@@ -619,7 +698,7 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
             Ok(Msg::Stats(s)) => {
                 let _ = s.send(build_snapshot(
                     &models, &router, &batchers, &latency, batches,
-                    swaps, &versions));
+                    swaps, &versions, deadline_exceeded, plan));
             }
             Ok(Msg::Swap(sw)) => {
                 apply_swap(&mut exec, sw, &mut swaps, &mut versions);
@@ -629,6 +708,18 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => break 'outer,
+        }
+
+        // cull deadline-expired requests before sizing any batch:
+        // they are answered with a typed error here and never reach
+        // the backend, and removing them first keeps bucket sizing
+        // exact (a batch never wastes a slot on a dead request)
+        for batcher in batchers.iter_mut() {
+            batcher.take_expired_into(now_us(&start), &mut expired);
+            for r in expired.drain(..) {
+                deadline_exceeded += 1;
+                let _ = r.payload.resp.send(Err(DEADLINE_MSG.to_string()));
+            }
         }
 
         // dispatch ready batches per model; on stop, flush every
@@ -654,7 +745,23 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
                     xbuf.extend_from_slice(&r.payload.x);
                 }
                 let per_sample = exec.per_sample_out(midx, size);
-                let result = exec.run(midx, size, &xbuf);
+                // engine.panic: the injected crash. In-process it is a
+                // typed whole-batch error; a supervised child escalates
+                // to a real process exit so the supervisor's restart
+                // path is exercised (a typed exit, never a panic)
+                let crash = plan
+                    .is_some_and(FaultPlan::crash_engine);
+                if crash && plan.is_some_and(|p| p.abort_on_engine_panic)
+                {
+                    eprintln!("injected fault: engine.panic \
+                               (abort mode): exiting");
+                    std::process::exit(101);
+                }
+                let result = if crash {
+                    Err(anyhow!("injected fault: engine.panic"))
+                } else {
+                    exec.run(midx, size, &xbuf)
+                };
                 router.complete(lane_id);
                 batches += 1;
                 match result {
@@ -695,7 +802,8 @@ fn serve_loop<E: BatchExec>(policy: BatchPolicy, rx: mpsc::Receiver<Msg>,
         if let Some(s) = stop_reply.take() {
             let _ = s.send(build_snapshot(&models, &router, &batchers,
                                           &latency, batches, swaps,
-                                          &versions));
+                                          &versions, deadline_exceeded,
+                                          plan));
             break 'outer;
         }
     }
@@ -1053,6 +1161,79 @@ mod tests {
         assert_eq!(stats.server.swaps, 1);
         assert_eq!(stats.per_model.first().and_then(|m| m.version),
                    Some(2));
+    }
+
+    #[test]
+    fn expired_deadline_is_rejected_before_the_backend() {
+        let (handle, join) = start_tiny(
+            BackendKind::Scalar,
+            BatchPolicy { buckets: vec![1], max_wait_us: 0 });
+        let mut rng = Rng::new(21);
+        let x = rng.normal_vec(2 * 8 * 8);
+        // a deadline already in the past at admission
+        let past = Instant::now() - Duration::from_millis(5);
+        let err = handle
+            .infer_async_deadline_for(0, x.clone(), Some(past))
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert!(format!("{err}").contains(DEADLINE_MSG), "{err}");
+        // a generous deadline serves normally
+        let far = Instant::now() + Duration::from_secs(30);
+        let y = handle
+            .infer_async_deadline_for(0, x, Some(far))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(y.len(), 3 * 8 * 8);
+        let stats = handle.stop().unwrap();
+        join.join().unwrap();
+        assert_eq!(stats.server.served, 1,
+                   "the expired request must never dispatch");
+        assert_eq!(stats.server.deadline_exceeded, 1);
+    }
+
+    fn start_tiny_with_faults(spec_str: &str)
+                              -> (ServerHandle,
+                                  thread::JoinHandle<()>) {
+        let plan = Arc::new(
+            super::super::faults::FaultPlan::parse(spec_str, 7)
+                .unwrap());
+        Server::start_hosted_with_faults(
+            vec![tiny_model()], BackendKind::Scalar, 1,
+            KernelKind::default(), TuneMode::Off,
+            BatchPolicy { buckets: vec![1], max_wait_us: 0 },
+            Some(plan))
+            .unwrap()
+    }
+
+    #[test]
+    fn injected_engine_panic_is_a_typed_batch_error() {
+        let (handle, join) =
+            start_tiny_with_faults("engine.panic=1");
+        let mut rng = Rng::new(22);
+        let err =
+            handle.infer(rng.normal_vec(2 * 8 * 8)).unwrap_err();
+        assert!(format!("{err}").contains("engine.panic"), "{err}");
+        // the loop keeps serving (and keeps injecting) — no hang
+        assert!(handle.infer(rng.normal_vec(2 * 8 * 8)).is_err());
+        let stats = handle.stop().unwrap();
+        join.join().unwrap();
+        assert_eq!(stats.faults.map(|f| f.engine_panic >= 2),
+                   Some(true));
+    }
+
+    #[test]
+    fn injected_admit_err_replies_without_enqueuing() {
+        let (handle, join) = start_tiny_with_faults("admit.err=1");
+        let mut rng = Rng::new(23);
+        let err =
+            handle.infer(rng.normal_vec(2 * 8 * 8)).unwrap_err();
+        assert!(format!("{err}").contains("admit.err"), "{err}");
+        let stats = handle.stop().unwrap();
+        join.join().unwrap();
+        assert_eq!(stats.server.served, 0);
+        assert_eq!(stats.faults.map(|f| f.admit_err), Some(1));
     }
 
     #[test]

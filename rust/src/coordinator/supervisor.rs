@@ -1,0 +1,489 @@
+//! Daemonization and crash supervision for `wino-adder serve`.
+//!
+//! The ROADMAP's ops-plane remainder: `serve` used to die with its
+//! terminal. This module is the library half of the fix (the CLI
+//! wiring lives in `main.rs`):
+//!
+//! * [`DaemonPaths`] — the run-dir layout: `serve.pid`, `state.json`,
+//!   `serve.log` under one `--run-dir` (default `.wino-serve`).
+//! * [`PidFile`] — exclusive-owner pidfile with **stale-PID
+//!   recovery**: a pidfile whose process is gone is reclaimed, a live
+//!   one is a typed error. Released (best-effort) on drop.
+//! * [`ServeState`] — the `state.json` contents: pid, bound serving
+//!   address, model, start time, supervision generation, child pid.
+//!   Written atomically (tmp + rename); parsed back with the in-tree
+//!   JSON parser so tests and tooling can read it.
+//! * [`Backoff`] — capped exponential backoff with seeded jitter,
+//!   shared with the net clients' retry policy.
+//! * [`supervise`] — the restart loop behind `serve --supervise`:
+//!   spawn the child, wait, exit cleanly when it does, otherwise back
+//!   off and respawn with a bumped generation.
+//!
+//! Everything here is serving-adjacent control-plane code: the
+//! `no-panic-serving` lint applies, so every failure is a typed
+//! error, never a panic.
+
+use std::path::{Path, PathBuf};
+use std::process::Child;
+use std::time::Duration;
+
+use crate::util::error::{anyhow, Context, Result};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// The run-dir layout used by `serve --daemon` / `serve --supervise`.
+#[derive(Debug, Clone)]
+pub struct DaemonPaths {
+    /// the run directory (`--run-dir`, default `.wino-serve`)
+    pub dir: PathBuf,
+}
+
+impl DaemonPaths {
+    /// Layout rooted at `dir`.
+    pub fn new(dir: impl Into<PathBuf>) -> DaemonPaths {
+        DaemonPaths { dir: dir.into() }
+    }
+
+    /// `<dir>/serve.pid` — the owner's pid, plain text.
+    pub fn pidfile(&self) -> PathBuf {
+        self.dir.join("serve.pid")
+    }
+
+    /// `<dir>/state.json` — the [`ServeState`] document.
+    pub fn state_file(&self) -> PathBuf {
+        self.dir.join("state.json")
+    }
+
+    /// `<dir>/serve.log` — stdout+stderr of detached children.
+    pub fn log_file(&self) -> PathBuf {
+        self.dir.join("serve.log")
+    }
+
+    /// Create the run directory (and parents).
+    pub fn ensure_dir(&self) -> Result<()> {
+        std::fs::create_dir_all(&self.dir).with_context(|| {
+            format!("creating run dir {}", self.dir.display())
+        })
+    }
+}
+
+/// Is `pid` a live process? Linux: `/proc/<pid>` exists. Other unix:
+/// `kill -0` probes it. Anywhere else the probe errs toward *stale*
+/// so a crashed daemon can always be recovered (the failure mode is a
+/// second instance, caught at bind time by the address collision).
+pub fn pid_alive(pid: u32) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        Path::new(&format!("/proc/{pid}")).exists()
+    }
+    #[cfg(all(unix, not(target_os = "linux")))]
+    {
+        std::process::Command::new("kill")
+            .args(["-0", &pid.to_string()])
+            .status()
+            .map(|s| s.success())
+            .unwrap_or(false)
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = pid;
+        false
+    }
+}
+
+/// An acquired pidfile. Removing it on drop is best-effort (a
+/// SIGKILL leaves it behind — that's exactly the stale case
+/// [`PidFile::acquire`] recovers from).
+#[derive(Debug)]
+pub struct PidFile {
+    path: PathBuf,
+    /// true when acquisition reclaimed a stale file
+    pub reclaimed_stale: bool,
+}
+
+impl PidFile {
+    /// Acquire `path` for `pid`. A pidfile naming a live process is a
+    /// typed error; a stale one (dead pid or unparseable contents) is
+    /// reclaimed.
+    pub fn acquire(path: impl Into<PathBuf>, pid: u32)
+                   -> Result<PidFile> {
+        let path = path.into();
+        let mut reclaimed_stale = false;
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            match text.trim().parse::<u32>() {
+                Ok(old) if pid_alive(old) => {
+                    return Err(anyhow!(
+                        "already running: {} names live pid {old} \
+                         (stop it first, or point --run-dir \
+                         elsewhere)",
+                        path.display()));
+                }
+                _ => {
+                    // dead pid or garbage: stale, reclaim it
+                    reclaimed_stale = true;
+                    let _ = std::fs::remove_file(&path);
+                }
+            }
+        }
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).with_context(|| {
+                    format!("creating {}", parent.display())
+                })?;
+            }
+        }
+        std::fs::write(&path, format!("{pid}\n")).with_context(
+            || format!("writing pidfile {}", path.display()))?;
+        Ok(PidFile { path, reclaimed_stale })
+    }
+
+    /// The pidfile's path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for PidFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// The `state.json` document: what a daemonized/supervised `serve`
+/// publishes about itself for tooling (and the chaos suite).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeState {
+    /// pid of the state-file owner (daemon child or supervisor)
+    pub pid: u32,
+    /// bound serving address, once known (`--listen` resolves port 0)
+    pub addr: Option<String>,
+    /// primary model name being served
+    pub model: String,
+    /// unix seconds when the owner started
+    pub started_unix: u64,
+    /// supervision generation: 1 on first spawn, bumped per restart
+    pub generation: u64,
+    /// pid of the supervised serving child, when supervising
+    pub child_pid: Option<u32>,
+}
+
+impl ServeState {
+    /// The JSON document (stable keys, compact).
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("pid".into(), Json::Num(self.pid as f64));
+        obj.insert("addr".into(), match &self.addr {
+            Some(a) => Json::Str(a.clone()),
+            None => Json::Null,
+        });
+        obj.insert("model".into(), Json::Str(self.model.clone()));
+        obj.insert("started_unix".into(),
+                   Json::Num(self.started_unix as f64));
+        obj.insert("generation".into(),
+                   Json::Num(self.generation as f64));
+        obj.insert("child_pid".into(), match self.child_pid {
+            Some(p) => Json::Num(p as f64),
+            None => Json::Null,
+        });
+        Json::Obj(obj)
+    }
+
+    /// Write atomically (`.tmp` + rename) so readers never observe a
+    /// torn document.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json().dump())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path).with_context(|| {
+            format!("renaming into {}", path.display())
+        })
+    }
+
+    /// Parse a `state.json` back (inverse of [`ServeState::write`]).
+    pub fn load(path: &Path) -> Result<ServeState> {
+        let text = std::fs::read_to_string(path).with_context(
+            || format!("reading {}", path.display()))?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let num = |key: &str| -> u64 {
+            v.get(key).and_then(|j| j.as_f64()).unwrap_or(0.0) as u64
+        };
+        Ok(ServeState {
+            pid: num("pid") as u32,
+            addr: v.get("addr")
+                .and_then(|j| j.as_str())
+                .map(|s| s.to_string()),
+            model: v.get("model")
+                .and_then(|j| j.as_str())
+                .unwrap_or("")
+                .to_string(),
+            started_unix: num("started_unix"),
+            generation: num("generation"),
+            child_pid: v.get("child_pid")
+                .and_then(|j| j.as_f64())
+                .map(|p| p as u32),
+        })
+    }
+}
+
+/// Unix seconds now (0 if the clock is before the epoch).
+pub fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Capped exponential backoff with seeded jitter. Deterministic in
+/// its seed; shared by the supervisor restart loop and the net
+/// clients' [`crate::coordinator::net::RetryPolicy`].
+#[derive(Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// `base * 2^attempt`, capped at `cap`, plus up to 50% jitter.
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Backoff {
+        Backoff { base, cap, attempt: 0, rng: Rng::new(seed) }
+    }
+
+    /// The next delay (advances the attempt counter).
+    pub fn next_delay(&mut self) -> Duration {
+        let base_us = self.base.as_micros() as u64;
+        let cap_us = self.cap.as_micros() as u64;
+        let mult = 1u64 << self.attempt.min(20);
+        let us = base_us.saturating_mul(mult).min(cap_us);
+        let jitter = self.rng.below(us / 2 + 1);
+        self.attempt = self.attempt.saturating_add(1);
+        Duration::from_micros(us.saturating_add(jitter).min(cap_us))
+    }
+
+    /// Back to attempt 0 (call after a success).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+
+    /// Attempts consumed since the last reset.
+    pub fn attempt(&self) -> u32 {
+        self.attempt
+    }
+}
+
+/// Supervision knobs for [`supervise`].
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// first restart delay
+    pub backoff_base: Duration,
+    /// restart delay ceiling
+    pub backoff_cap: Duration,
+    /// give up after this many restarts (`None` = never)
+    pub max_restarts: Option<u32>,
+    /// jitter seed (the engine seed, for reproducible chaos runs)
+    pub seed: u64,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> SupervisorConfig {
+        SupervisorConfig {
+            backoff_base: Duration::from_millis(100),
+            backoff_cap: Duration::from_secs(10),
+            max_restarts: None,
+            seed: 7,
+        }
+    }
+}
+
+/// Outcome of a [`supervise`] run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SupervisedExit {
+    /// restarts performed (0 = the first child exited cleanly)
+    pub restarts: u32,
+    /// the final child's exit code (0 on clean shutdown)
+    pub final_status: i32,
+}
+
+/// The restart loop: `spawn(generation)` starts a child,
+/// `observe(generation, child_pid)` lets the caller publish
+/// `state.json`, and a non-zero child exit triggers backoff + respawn
+/// with a bumped generation. Returns when a child exits cleanly, the
+/// restart budget is exhausted, or spawning itself fails.
+pub fn supervise<S, O>(cfg: &SupervisorConfig, mut spawn: S,
+                       mut observe: O) -> Result<SupervisedExit>
+where
+    S: FnMut(u64) -> Result<Child>,
+    O: FnMut(u64, u32),
+{
+    let mut backoff =
+        Backoff::new(cfg.backoff_base, cfg.backoff_cap, cfg.seed);
+    let mut generation = 1u64;
+    let mut restarts = 0u32;
+    loop {
+        let mut child = spawn(generation)?;
+        observe(generation, child.id());
+        let status = child
+            .wait()
+            .with_context(|| {
+                format!("waiting on generation {generation}")
+            })?;
+        if status.success() {
+            return Ok(SupervisedExit { restarts, final_status: 0 });
+        }
+        let code = status.code().unwrap_or(-1);
+        if let Some(max) = cfg.max_restarts {
+            if restarts >= max {
+                return Ok(SupervisedExit { restarts,
+                                           final_status: code });
+            }
+        }
+        restarts = restarts.saturating_add(1);
+        generation = generation.saturating_add(1);
+        std::thread::sleep(backoff.next_delay());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "wino_adder_supervisor_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn pidfile_excludes_live_and_reclaims_stale() {
+        let dir = tmp("pid");
+        let _ = std::fs::remove_dir_all(&dir);
+        let paths = DaemonPaths::new(&dir);
+        let me = std::process::id();
+        let lock = PidFile::acquire(paths.pidfile(), me).unwrap();
+        assert!(!lock.reclaimed_stale);
+        // a second acquisition against our own live pid must fail
+        let err =
+            PidFile::acquire(paths.pidfile(), me).unwrap_err();
+        assert!(format!("{err}").contains("already running"),
+                "{err}");
+        drop(lock);
+        assert!(!paths.pidfile().exists(), "drop must release");
+        // a stale pidfile (dead pid) is reclaimed
+        std::fs::write(paths.pidfile(), "999999999\n").unwrap();
+        let lock = PidFile::acquire(paths.pidfile(), me).unwrap();
+        assert!(lock.reclaimed_stale);
+        drop(lock);
+        // garbage contents count as stale too
+        std::fs::write(paths.pidfile(), "not a pid").unwrap();
+        assert!(PidFile::acquire(paths.pidfile(), me)
+                    .unwrap()
+                    .reclaimed_stale);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_state_roundtrips_through_disk() {
+        let dir = tmp("state");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.json");
+        let state = ServeState {
+            pid: 1234,
+            addr: Some("127.0.0.1:9000".into()),
+            model: "default".into(),
+            started_unix: unix_now(),
+            generation: 3,
+            child_pid: Some(5678),
+        };
+        state.write(&path).unwrap();
+        assert_eq!(ServeState::load(&path).unwrap(), state);
+        // Nones serialize as nulls and load back as Nones
+        let bare = ServeState { addr: None, child_pid: None,
+                                ..state };
+        bare.write(&path).unwrap();
+        assert_eq!(ServeState::load(&path).unwrap(), bare);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn backoff_grows_caps_and_is_seeded() {
+        let mk = |seed| Backoff::new(Duration::from_millis(10),
+                                     Duration::from_millis(80),
+                                     seed);
+        let (mut a, mut b) = (mk(1), mk(1));
+        let da: Vec<Duration> =
+            (0..6).map(|_| a.next_delay()).collect();
+        let db: Vec<Duration> =
+            (0..6).map(|_| b.next_delay()).collect();
+        assert_eq!(da, db, "same seed, same schedule");
+        assert!(da[0] >= Duration::from_millis(10));
+        // every delay respects the cap (jitter included)
+        assert!(da.iter().all(|d| *d <= Duration::from_millis(80)),
+                "{da:?}");
+        // the uncapped prefix grows
+        assert!(da[1] > da[0] || da[1] >= Duration::from_millis(20));
+        a.reset();
+        assert_eq!(a.attempt(), 0);
+    }
+
+    #[test]
+    fn supervise_restarts_until_clean_exit() {
+        use std::process::Command;
+        use std::sync::{Arc, Mutex};
+        let cfg = SupervisorConfig {
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(5),
+            max_restarts: None,
+            seed: 7,
+        };
+        let seen: Arc<Mutex<Vec<u64>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let seen2 = Arc::clone(&seen);
+        // generations 1 and 2 crash with exit 7; generation 3 is clean
+        let out = supervise(
+            &cfg,
+            |generation| {
+                let script = if generation < 3 {
+                    "exit 7"
+                } else {
+                    "exit 0"
+                };
+                Command::new("sh")
+                    .args(["-c", script])
+                    .spawn()
+                    .map_err(|e| anyhow!("spawn: {e}"))
+            },
+            |generation, pid| {
+                assert!(pid > 0);
+                seen2.lock().unwrap().push(generation);
+            })
+            .unwrap();
+        assert_eq!(out, SupervisedExit { restarts: 2,
+                                         final_status: 0 });
+        assert_eq!(*seen.lock().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn supervise_honors_the_restart_budget() {
+        use std::process::Command;
+        let cfg = SupervisorConfig {
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(2),
+            max_restarts: Some(2),
+            seed: 7,
+        };
+        let out = supervise(
+            &cfg,
+            |_| {
+                Command::new("sh")
+                    .args(["-c", "exit 9"])
+                    .spawn()
+                    .map_err(|e| anyhow!("spawn: {e}"))
+            },
+            |_, _| {})
+            .unwrap();
+        assert_eq!(out.restarts, 2);
+        assert_eq!(out.final_status, 9);
+    }
+}

@@ -13,6 +13,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::faults::{FaultPlan, FaultStore};
 use crate::coordinator::http::{HttpServer, OpsState};
 use crate::coordinator::server::{HostedModel, Server};
 use crate::nn::backend::{BackendKind, KernelKind};
@@ -32,6 +33,7 @@ pub struct EngineBuilder {
     models: Vec<(String, ModelSpec, Option<ModelWeights>)>,
     options: EngineOptions,
     policy: BatchPolicy,
+    fault_crash_exits: bool,
 }
 
 impl EngineBuilder {
@@ -44,9 +46,9 @@ impl EngineBuilder {
     }
 
     /// Read the engine flags (`--backend`, `--threads`, `--kernel`,
-    /// `--tile`, `--tune`, `--seed`, `--http`, `--store`) into a
-    /// builder via [`EngineOptions::from_args`] — the one CLI parser
-    /// for engine options.
+    /// `--tile`, `--tune`, `--seed`, `--http`, `--store`,
+    /// `--faults`) into a builder via [`EngineOptions::from_args`] —
+    /// the one CLI parser for engine options.
     pub fn from_args(args: &Args) -> Result<EngineBuilder, EngineError> {
         Ok(EngineBuilder::new()
             .options(EngineOptions::from_args(args)?))
@@ -138,6 +140,25 @@ impl EngineBuilder {
         self
     }
 
+    /// Arm deterministic fault injection from a `--faults` spec (e.g.
+    /// `accept.drop=0.01,read.stall_ms=50@0.05,engine.panic=1e-4`),
+    /// seeded with the builder's seed. Default: no plan — every hook
+    /// compiles to a no-op and the serving path is untouched. A bad
+    /// spec is a typed build error.
+    pub fn faults(mut self, spec: impl Into<String>) -> EngineBuilder {
+        self.options.faults = Some(spec.into());
+        self
+    }
+
+    /// Make an injected `engine.panic` fault abort the process (exit
+    /// 101) instead of surfacing as a typed batch error — the
+    /// supervised-child mode, where the crash is the point and the
+    /// supervisor's restart-with-restore loop is under test.
+    pub fn fault_crash_exits(mut self) -> EngineBuilder {
+        self.fault_crash_exits = true;
+        self
+    }
+
     /// The full option set.
     pub fn engine_options(&self) -> &EngineOptions {
         &self.options
@@ -224,15 +245,43 @@ impl EngineBuilder {
             hosted.push(HostedModel { name, spec, weights });
         }
         let buckets = self.policy.buckets.clone();
+        // the fault plan shares the weight seed: one `--seed` pins the
+        // whole chaos run, weights and faults alike
+        let faults: Option<Arc<FaultPlan>> = match &o.faults {
+            Some(spec) => {
+                let mut plan = FaultPlan::parse(spec, o.seed)
+                    .map_err(|_| EngineError::BadOption {
+                        option: "faults".into(),
+                        value: spec.clone(),
+                    })?;
+                plan.abort_on_engine_panic = self.fault_crash_exits;
+                Some(Arc::new(plan))
+            }
+            None => None,
+        };
         let (handle, join) =
-            Server::start_hosted(hosted, o.backend, o.threads,
-                                 o.kernel, o.tune, self.policy)
+            Server::start_hosted_with_faults(hosted, o.backend,
+                                             o.threads, o.kernel,
+                                             o.tune, self.policy,
+                                             faults.clone())
                 .map_err(|e| EngineError::Internal(format!("{e}")))?;
         let store: Option<Arc<dyn Store>> = o
             .store
             .as_ref()
             .map(|dir| {
-                Arc::new(LocalDir::new(dir.clone())) as Arc<dyn Store>
+                let base = Arc::new(LocalDir::new(dir.clone()))
+                    as Arc<dyn Store>;
+                match &faults {
+                    // only interpose when store.err can actually fire,
+                    // so the plain-store path stays allocation- and
+                    // indirection-identical
+                    Some(plan) if plan.injects_store() => {
+                        Arc::new(FaultStore::new(base,
+                                                 Arc::clone(plan)))
+                            as Arc<dyn Store>
+                    }
+                    _ => base,
+                }
             });
         let swap = Arc::new(SwapCtx {
             handle: handle.clone(),
@@ -262,7 +311,7 @@ impl EngineBuilder {
             }
             None => (None, None),
         };
-        Ok(Engine::from_parts(handle, join, swap, ops, http))
+        Ok(Engine::from_parts(handle, join, swap, ops, http, faults))
     }
 }
 
@@ -369,7 +418,8 @@ mod tests {
             .threads(2)
             .seed(11)
             .http("127.0.0.1:0")
-            .store("ckpts");
+            .store("ckpts")
+            .faults("accept.drop=0.5");
         let o = b.engine_options();
         assert_eq!(o.backend, BackendKind::Scalar);
         assert_eq!(o.kernel, KernelKind::Legacy);
@@ -379,6 +429,22 @@ mod tests {
         assert_eq!(o.http.as_deref(), Some("127.0.0.1:0"));
         assert_eq!(o.store.as_deref(),
                    Some(std::path::Path::new("ckpts")));
+        assert_eq!(o.faults.as_deref(), Some("accept.drop=0.5"));
+    }
+
+    #[test]
+    fn bad_fault_spec_is_a_typed_build_error() {
+        use crate::nn::model::ModelSpec;
+        let err = EngineBuilder::new()
+            .model("m", ModelSpec::single_layer(
+                1, 1, 6, Variant::Balanced(0)))
+            .faults("engine.panic=not-a-rate")
+            .build()
+            .unwrap_err();
+        assert_eq!(err, EngineError::BadOption {
+            option: "faults".into(),
+            value: "engine.panic=not-a-rate".into(),
+        });
     }
 
     #[test]

@@ -65,6 +65,10 @@ pub enum EngineError {
         /// what went wrong (store/compile/install message)
         reason: String,
     },
+    /// The request's deadline expired before the engine ran it —
+    /// rejected at network admission or culled from the batch queue,
+    /// never forwarded to the backend.
+    DeadlineExceeded,
     /// The engine thread has stopped; no further requests are served.
     Stopped,
     /// An engine-side failure that is not a caller error (propagated
@@ -107,6 +111,12 @@ impl fmt::Display for EngineError {
                          127.0.0.1:9100)"
                     }
                     "store" => " (expects a directory path)",
+                    "faults" => {
+                        " (comma list of kind=rate, e.g. \
+                         accept.drop=0.01,read.stall_ms=50@0.05)"
+                    }
+                    "deadline-ms" => " (expects a number of \
+                                      milliseconds)",
                     _ => "",
                 };
                 write!(f,
@@ -126,6 +136,10 @@ impl fmt::Display for EngineError {
             EngineError::Swap { model, reason } => {
                 write!(f, "hot-swap of model {model:?} failed \
                            (still serving the old weights): {reason}")
+            }
+            EngineError::DeadlineExceeded => {
+                write!(f, "deadline exceeded (request expired before \
+                           the engine ran it)")
             }
             EngineError::Stopped => write!(f, "engine stopped"),
             EngineError::Internal(msg) => {
@@ -166,6 +180,10 @@ mod tests {
             (EngineError::Swap { model: "f".into(),
                                  reason: "no version 3".into() },
              "no version 3"),
+            (EngineError::BadOption { option: "faults".into(),
+                                      value: "oops".into() },
+             "kind=rate"),
+            (EngineError::DeadlineExceeded, "deadline exceeded"),
             (EngineError::Stopped, "stopped"),
             (EngineError::Internal("boom".into()), "boom"),
         ];

@@ -56,6 +56,20 @@
 //! configuration, then installed atomically between batches. Live
 //! metrics come from [`Engine::stats`] as a typed
 //! [`MetricsSnapshot`].
+//!
+//! ## Fault tolerance
+//!
+//! [`EngineBuilder::faults`] arms deterministic fault injection
+//! ([`crate::coordinator::faults`]): a seeded plan consulted at fixed
+//! hook points across the accept/read/write/admission/store/engine
+//! paths, compiled to no-ops when absent. Requests may carry
+//! deadlines (the v2 wire frames, or the batcher's budget tracking
+//! in-process); an expired request is rejected with the typed
+//! [`EngineError::DeadlineExceeded`] **before** the backend ever runs
+//! it. The `serve --daemon`/`--supervise` CLI modes build on
+//! [`crate::coordinator::supervisor`] to restart a crashed serving
+//! child under jittered exponential backoff, restoring the
+//! last-published checkpoint from the store.
 
 #![deny(missing_docs)]
 
@@ -74,11 +88,12 @@ use std::net::SocketAddr;
 use std::sync::Arc;
 use std::thread;
 
-use crate::coordinator::http::HttpServer;
-use crate::coordinator::http::OpsState;
+use crate::coordinator::faults::FaultPlan;
+use crate::coordinator::http::{HealthState, HttpServer, OpsState};
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::net::NetServer;
-use crate::coordinator::server::{PendingInfer, ServerHandle};
+use crate::coordinator::server::{PendingInfer, ServerHandle,
+                                 DEADLINE_MSG};
 use crate::nn::backend::{BackendKind, KernelKind};
 use crate::nn::plan::{ModelPlan, TuneMode};
 use crate::storage::Store;
@@ -175,6 +190,10 @@ pub struct Engine {
     /// sidecar request state; present iff the sidecar is enabled
     ops: Option<Arc<OpsState>>,
     http: Option<HttpServer>,
+    /// the armed fault plan; threaded into every [`Engine::listen`]
+    /// front-end so the accept/read/write hooks share the engine's
+    /// seed and counters
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl Engine {
@@ -187,8 +206,10 @@ impl Engine {
                              join: thread::JoinHandle<()>,
                              swap: Arc<SwapCtx>,
                              ops: Option<Arc<OpsState>>,
-                             http: Option<HttpServer>) -> Engine {
-        Engine { handle, join: Some(join), swap, ops, http }
+                             http: Option<HttpServer>,
+                             faults: Option<Arc<FaultPlan>>)
+                             -> Engine {
+        Engine { handle, join: Some(join), swap, ops, http, faults }
     }
 
     /// The hosted models, in registration order (index 0 is the
@@ -261,9 +282,10 @@ impl Engine {
     /// `/stats` and `/metrics`.
     pub fn listen(&self, addr: &str, max_in_flight: usize)
                   -> Result<NetServer, EngineError> {
-        let net =
-            NetServer::start(self.handle.clone(), addr, max_in_flight)
-                .map_err(|e| EngineError::Internal(format!("{e}")))?;
+        let net = NetServer::start_with(self.handle.clone(), addr,
+                                        max_in_flight,
+                                        self.faults.clone())
+            .map_err(|e| EngineError::Internal(format!("{e}")))?;
         if let Some(ops) = &self.ops {
             ops.set_net(net.counters_shared());
         }
@@ -299,7 +321,27 @@ impl Engine {
     /// serving.
     pub fn swap_model(&self, name: &str, version: Option<u64>)
                       -> Result<u64, EngineError> {
-        self.swap.swap(name, version)
+        if let Some(ops) = &self.ops {
+            ops.health().set(HealthState::Swapping);
+        }
+        let res = self.swap.swap(name, version);
+        if let Some(ops) = &self.ops {
+            ops.health().set(HealthState::Ok);
+        }
+        res
+    }
+
+    /// Set the ops-plane health gauge (a no-op without the sidecar).
+    /// `/healthz` answers `503` with a JSON body for any state other
+    /// than [`HealthState::Ok`] — load balancers stop routing while
+    /// the engine drains, swaps, or restores. [`Engine::stop`] and
+    /// [`Engine::swap_model`] set it themselves; the daemon's
+    /// checkpoint-restore path sets [`HealthState::Restoring`]
+    /// explicitly.
+    pub fn set_health(&self, state: HealthState) {
+        if let Some(ops) = &self.ops {
+            ops.health().set(state);
+        }
     }
 
     /// The HTTP sidecar's bound address, when enabled (useful with
@@ -312,6 +354,11 @@ impl Engine {
     /// ops requests can race the teardown), then stop the engine
     /// thread and collect the final [`MetricsSnapshot`].
     pub fn stop(mut self) -> Result<MetricsSnapshot, EngineError> {
+        // flip /healthz to draining first, so a probing load balancer
+        // stops routing before the sidecar itself goes away
+        if let Some(ops) = &self.ops {
+            ops.health().set(HealthState::Draining);
+        }
         if let Some(http) = self.http.take() {
             http.stop();
         }
@@ -339,12 +386,19 @@ pub struct PendingResponse {
 }
 
 impl PendingResponse {
-    /// Block until the engine replies.
+    /// Block until the engine replies. A request whose deadline
+    /// expired in the batch queue resolves to the typed
+    /// [`EngineError::DeadlineExceeded`], not an opaque internal
+    /// error.
     pub fn wait(self) -> Result<InferResponse, EngineError> {
-        let data = self
-            .inner
-            .wait()
-            .map_err(|e| EngineError::Internal(format!("{e}")))?;
+        let data = self.inner.wait().map_err(|e| {
+            let msg = format!("{e}");
+            if msg == DEADLINE_MSG {
+                EngineError::DeadlineExceeded
+            } else {
+                EngineError::Internal(msg)
+            }
+        })?;
         Ok(InferResponse { model: self.model, shape: self.shape,
                            data })
     }

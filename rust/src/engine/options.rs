@@ -37,6 +37,10 @@ pub struct EngineOptions {
     /// checkpoint store root (`--store DIR`); `None` disables
     /// hot-swap
     pub store: Option<PathBuf>,
+    /// deterministic fault-injection spec (`--faults SPEC`, e.g.
+    /// `accept.drop=0.01,read.stall_ms=50@0.05`); `None` (the
+    /// default) compiles every hook to a no-op
+    pub faults: Option<String>,
 }
 
 impl Default for EngineOptions {
@@ -50,6 +54,7 @@ impl Default for EngineOptions {
             seed: 7,
             http: None,
             store: None,
+            faults: None,
         }
     }
 }
@@ -63,8 +68,8 @@ impl EngineOptions {
     }
 
     /// Parse `--backend`, `--threads`, `--kernel`, `--tile`,
-    /// `--tune`, `--seed`, `--http`, and `--store` from `args`.
-    /// Unknown values and numeric typos are typed
+    /// `--tune`, `--seed`, `--http`, `--store`, and `--faults` from
+    /// `args`. Unknown values and numeric typos are typed
     /// [`EngineError::BadOption`]s, never silent defaults.
     pub fn from_args(args: &Args) -> Result<EngineOptions, EngineError> {
         let mut o = EngineOptions::new();
@@ -122,6 +127,20 @@ impl EngineOptions {
             }
             o.store = Some(PathBuf::from(s));
         }
+        if let Some(s) = args.get("faults") {
+            // validate the grammar eagerly (the seed does not affect
+            // parsing) so a typo is a boot-time error, not a silently
+            // inert chaos run
+            if crate::coordinator::faults::FaultPlan::parse(s, 0)
+                .is_err()
+            {
+                return Err(EngineError::BadOption {
+                    option: "faults".into(),
+                    value: s.into(),
+                });
+            }
+            o.faults = Some(s.to_string());
+        }
         Ok(o)
     }
 }
@@ -142,6 +161,7 @@ mod tests {
         assert_eq!(o.seed, 7);
         assert_eq!(o.http, None);
         assert_eq!(o.store, None);
+        assert_eq!(o.faults, None);
     }
 
     #[test]
@@ -151,7 +171,9 @@ mod tests {
             ["serve", "--backend", "scalar", "--threads", "3",
              "--kernel", "legacy", "--tile", "f4", "--tune", "on",
              "--seed", "9", "--http", "127.0.0.1:9100",
-             "--store", "ckpts"].map(String::from));
+             "--store", "ckpts",
+             "--faults", "accept.drop=0.5,engine.panic=1e-4"]
+                .map(String::from));
         let o = EngineOptions::from_args(&args).unwrap();
         assert_eq!((o.backend, o.threads, o.kernel, o.seed),
                    (BackendKind::Scalar, 3, KernelKind::Legacy, 9));
@@ -159,6 +181,8 @@ mod tests {
         assert_eq!(o.tune, TuneMode::On);
         assert_eq!(o.http.as_deref(), Some("127.0.0.1:9100"));
         assert_eq!(o.store, Some(PathBuf::from("ckpts")));
+        assert_eq!(o.faults.as_deref(),
+                   Some("accept.drop=0.5,engine.panic=1e-4"));
     }
 
     #[test]
@@ -170,6 +194,9 @@ mod tests {
             ["serve", "--tune", "yes"],
             ["serve", "--threads", "abc"],
             ["serve", "--seed", "1x"],
+            ["serve", "--faults", "accept.drop"],
+            ["serve", "--faults", "warp.core=0.1"],
+            ["serve", "--faults", "accept.drop=nope"],
         ] {
             let args = Args::parse(bad.map(String::from));
             assert!(matches!(EngineOptions::from_args(&args),

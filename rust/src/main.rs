@@ -5,10 +5,15 @@
 //!   serve     batched Winograd-adder inference server demo; runs on
 //!             the rust-native nn::backend CPU backends by default,
 //!             or on PJRT artifacts with --backend pjrt (pjrt build);
-//!             --listen ADDR exposes it over TCP (framed protocol)
+//!             --listen ADDR exposes it over TCP (framed protocol);
+//!             --daemon/--supervise run it under a run-dir pidfile
+//!             with state.json and a crash-restarting supervisor;
+//!             --faults SPEC injects deterministic chaos
 //!   bench-serve  TCP serving benchmark: spawns the server plus N
 //!             closed-loop NetClient threads over localhost and writes
-//!             req/s + p50/p99 to BENCH_net.json (--smoke for CI)
+//!             req/s + p50/p99 to BENCH_net.json (--smoke for CI);
+//!             --faults/--deadline-ms turn it into the chaos harness
+//!             (bit-exact reply verification against a reference)
 //!   engine    ops-plane verbs against the checkpoint store and a
 //!             running server's HTTP sidecar: `engine publish` writes
 //!             a versioned checkpoint, `engine swap` hot-swaps a
@@ -27,14 +32,19 @@
 //!             findings — the CI `lint-invariants` job runs this
 
 use std::path::PathBuf;
-use std::time::Duration;
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
 
 use wino_adder::coordinator::batcher::BatchPolicy;
+use wino_adder::coordinator::http::HealthState;
 use wino_adder::coordinator::metrics::{LatencyStats,
                                        MetricsSnapshot};
 use wino_adder::coordinator::net::{proto, NetClient, NetClientV2,
-                                   NetReply};
-use wino_adder::coordinator::server::ServerHandle;
+                                   NetReply, RetryPolicy};
+use wino_adder::coordinator::server::{ServerHandle, DEADLINE_MSG};
+use wino_adder::coordinator::supervisor::{self, Backoff, DaemonPaths,
+                                          PidFile, ServeState,
+                                          SupervisorConfig};
 use wino_adder::data::Preset;
 use wino_adder::energy::{figure1, paper_figure1, EnergyTable};
 use wino_adder::engine::{parse_model_spec, Dtype, Engine,
@@ -93,6 +103,20 @@ fn print_help() {
          \x20          [--listen ADDR] [--max-in-flight N] [--duration-s N]\n\
          \x20          [--http ADDR  ops sidecar: /healthz /stats\n\
          \x20           /metrics POST /swap] [--store DIR] [--seed N]\n\
+         \x20          [--faults SPEC  deterministic fault injection:\n\
+         \x20           comma list of kind=rate, e.g. accept.drop=0.01,\n\
+         \x20           read.stall_ms=50@0.05,store.err=0.1,\n\
+         \x20           engine.panic=1e-4]\n\
+         \x20          [--daemon  own a pidfile + state.json under\n\
+         \x20           --run-dir (default .wino-serve); stale pidfiles\n\
+         \x20           from crashed runs are reclaimed]\n\
+         \x20          [--supervise  restart a crashed serving child\n\
+         \x20           with capped backoff; child restores the last\n\
+         \x20           published checkpoint from --store]\n\
+         \x20          [--restore  reload each model's newest published\n\
+         \x20           checkpoint from --store before serving]\n\
+         \x20          [--run-dir DIR] [--max-restarts N]\n\
+         \x20          [--restart-base-ms N]\n\
          \x20 bench-serve [--smoke] [--clients N] [--requests N]\n\
          \x20          [--pipeline D] [--max-in-flight N] [--out PATH]\n\
          \x20          [--proto v1|v2] [--dtype f32|int8]\n\
@@ -100,6 +124,10 @@ fn print_help() {
          \x20          [--tile auto|f2|f4] [--tune on|off]\n\
          \x20          [--model ...] [--cin N] [--cout N] [--hw N]\n\
          \x20          [--max-wait-us N] [--http ADDR] [--store DIR]\n\
+         \x20          [--faults SPEC  chaos run: replies are verified\n\
+         \x20           bit-exact against an in-process reference]\n\
+         \x20          [--deadline-ms N  per-request budget, shipped on\n\
+         \x20           the wire; implies --proto v2]\n\
          \x20 engine   publish --store DIR [--name NAME] [--seed N]\n\
          \x20           [--model ...] [--cin N] [--cout N] [--hw N]\n\
          \x20           [--variant ...]   write a versioned checkpoint\n\
@@ -241,6 +269,9 @@ fn engine_from_args(args: &Args, builder: EngineBuilder,
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.has("supervise") {
+        return serve_supervise(args);
+    }
     let n = args.get_usize("requests", 256);
     let policy = BatchPolicy {
         buckets: vec![1, 4, 16],
@@ -249,12 +280,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.get("backend") == Some("pjrt") {
         return serve_pjrt(args, n, policy);
     }
+    // --daemon: become the exclusive run-dir owner before any other
+    // work so a double-start fails fast. The supervised child skips
+    // this — its parent owns the pidfile.
+    let daemon = if args.has("daemon") {
+        Some(daemon_acquire(args)?)
+    } else {
+        None
+    };
     let variant = matrices::Variant::parse(args.get_or("variant", "A0"))
         .ok_or_else(|| anyhow!("bad --variant (std|A0..A3)"))?;
     let cin = args.get_usize("cin", 16);
     let cout = args.get_usize("cout", 16);
     let hw = args.get_usize("hw", 28);
-    let builder = EngineBuilder::from_args(args)?;
+    let mut builder = EngineBuilder::from_args(args)?;
+    if args.has("_supervised-child") {
+        // an injected engine.panic must become a non-zero process
+        // exit so the supervisor observes the crash and restarts us
+        builder = builder.fault_crash_exits();
+    }
     println!("native serving: backend {} x{} threads ({} kernels, \
               tile {}, tune {})",
              builder.backend_kind().name(), builder.thread_count(),
@@ -271,9 +315,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("  ops sidecar on http://{ops}/ (/healthz /stats \
                   /metrics, POST /swap)");
     }
+    if args.has("restore") {
+        restore_latest(&engine);
+    }
     if let Some(listen) = args.get("listen") {
         let listen = listen.to_string();
-        return serve_listen(engine, &listen, args);
+        return serve_listen(engine, &listen, args, daemon);
+    }
+    if let Some((_lock, paths)) = &daemon {
+        write_serve_state(paths, args, None)?;
     }
     let sample = engine.models()[0].sample_len();
     let elapsed = send_load(engine.handle(), n, sample)?;
@@ -282,10 +332,171 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve --daemon`: exclusive ownership of the `--run-dir` pidfile
+/// (default `.wino-serve`), with stale-PID recovery — a pidfile left
+/// by a crashed run is reclaimed, a live one is a typed error.
+fn daemon_acquire(args: &Args) -> Result<(PidFile, DaemonPaths)> {
+    let paths = DaemonPaths::new(args.get_or("run-dir", ".wino-serve"));
+    paths.ensure_dir()?;
+    let lock = PidFile::acquire(paths.pidfile(), std::process::id())?;
+    if lock.reclaimed_stale {
+        println!("daemon: reclaimed a stale pidfile (the previous \
+                  serve died without cleanup)");
+    }
+    println!("daemon: pid {} owns {}", std::process::id(),
+             paths.pidfile().display());
+    Ok((lock, paths))
+}
+
+/// Publish `state.json` for tooling (and the chaos suite): who is
+/// serving, where, since when, and at which supervision generation.
+fn write_serve_state(paths: &DaemonPaths, args: &Args,
+                     addr: Option<String>) -> Result<()> {
+    let state = ServeState {
+        pid: std::process::id(),
+        addr,
+        model: args.get_or("model", "default").to_string(),
+        started_unix: supervisor::unix_now(),
+        generation: args.get_u64("_generation", 1),
+        child_pid: None,
+    };
+    state.write(&paths.state_file())
+}
+
+/// `serve --restore`: best-effort re-install of each model's newest
+/// published checkpoint before accepting traffic. The supervised
+/// child runs this on every (re)start so a crash resumes the last
+/// *published* weights, not the boot seed; without a `--store` (or
+/// with nothing published yet) it logs and serves the seeded weights.
+fn restore_latest(engine: &Engine) {
+    engine.set_health(HealthState::Restoring);
+    for m in engine.models() {
+        match engine.swap_model(&m.name, None) {
+            Ok(v) => println!("restore: model {:?} at checkpoint v{v}",
+                              m.name),
+            Err(e) => println!("restore: model {:?} keeps its boot \
+                                weights ({e})", m.name),
+        }
+    }
+    engine.set_health(HealthState::Ok);
+}
+
+/// `serve --supervise`: keep a serving child alive. The parent owns
+/// the run-dir pidfile and `state.json`; the child is this same
+/// binary re-executed with an internal `--_supervised-child` marker
+/// plus `--restore`, so a restart resumes from the last checkpoint
+/// published to `--store` instead of the boot seed. A non-zero child
+/// exit triggers a capped, seeded-jitter backoff and a respawn with a
+/// bumped generation; a clean child exit ends supervision.
+fn serve_supervise(args: &Args) -> Result<()> {
+    let paths = DaemonPaths::new(args.get_or("run-dir", ".wino-serve"));
+    paths.ensure_dir()?;
+    let lock = PidFile::acquire(paths.pidfile(), std::process::id())?;
+    if lock.reclaimed_stale {
+        println!("supervisor: reclaimed a stale pidfile (the \
+                  previous run died without cleanup)");
+    }
+    let exe = std::env::current_exe()
+        .map_err(|e| anyhow!("resolving current exe: {e}"))?;
+    let forwarded = forwarded_child_args();
+    let cfg = SupervisorConfig {
+        backoff_base:
+            Duration::from_millis(args.get_u64("restart-base-ms", 100)),
+        backoff_cap: Duration::from_secs(10),
+        max_restarts: match args.get("max-restarts") {
+            Some(raw) => Some(raw.parse().map_err(|_| {
+                anyhow!("--max-restarts must be a number, got {raw:?}")
+            })?),
+            None => None,
+        },
+        seed: args.get_u64("seed", 7),
+    };
+    let model = args.get_or("model", "default").to_string();
+    let listen = args.get("listen").map(|s| s.to_string());
+    let started = supervisor::unix_now();
+    println!("supervisor: pid {} (pidfile {}); children log to {}",
+             std::process::id(), paths.pidfile().display(),
+             paths.log_file().display());
+    let exit = supervisor::supervise(
+        &cfg,
+        |generation| {
+            let log = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(paths.log_file())
+                .map_err(|e| anyhow!("opening child log: {e}"))?;
+            let err = log.try_clone()
+                .map_err(|e| anyhow!("cloning child log: {e}"))?;
+            let mut cmd = Command::new(&exe);
+            cmd.arg("serve")
+                .arg("--_supervised-child")
+                .arg("--restore")
+                .args(&forwarded)
+                .arg("--_generation")
+                .arg(generation.to_string())
+                .stdout(Stdio::from(log))
+                .stderr(Stdio::from(err));
+            cmd.spawn().map_err(|e| {
+                anyhow!("spawning serving child (generation \
+                         {generation}): {e}")
+            })
+        },
+        |generation, child_pid| {
+            let state = ServeState {
+                pid: std::process::id(),
+                addr: listen.clone(),
+                model: model.clone(),
+                started_unix: started,
+                generation,
+                child_pid: Some(child_pid),
+            };
+            if let Err(e) = state.write(&paths.state_file()) {
+                eprintln!("supervisor: writing state.json: {e}");
+            }
+            if generation > 1 {
+                println!("supervisor: restarted serving child \
+                          (generation {generation}, pid {child_pid})");
+            }
+        },
+    )?;
+    drop(lock);
+    if exit.final_status != 0 {
+        return Err(anyhow!(
+            "supervised child kept failing (exit {}, {} restarts) — \
+             giving up", exit.final_status, exit.restarts));
+    }
+    println!("supervisor: child exited cleanly after {} restart(s)",
+             exit.restarts);
+    Ok(())
+}
+
+/// Our own argv minus the supervision flags, for re-execing the
+/// serving child. `--run-dir` is forwarded on purpose: the child
+/// publishes its bound address there (`<run-dir>/addr`).
+fn forwarded_child_args() -> Vec<String> {
+    let mut out = Vec::new();
+    let mut argv = std::env::args().skip(1);
+    while let Some(a) = argv.next() {
+        match a.as_str() {
+            "serve" if out.is_empty() => {}
+            "--supervise" | "--daemon" => {}
+            "--max-restarts" | "--restart-base-ms" => {
+                argv.next();
+            }
+            _ => out.push(a),
+        }
+    }
+    out
+}
+
 /// `serve --listen ADDR`: expose the engine over TCP instead of
 /// driving it with in-process demo clients. Runs until killed, or for
-/// `--duration-s N` seconds (then drains and reports stats).
-fn serve_listen(engine: Engine, listen: &str, args: &Args)
+/// `--duration-s N` seconds (then drains and reports stats). In
+/// daemon mode the bound address lands in `state.json`; a supervised
+/// child publishes it to `<run-dir>/addr` instead (the parent owns
+/// `state.json`).
+fn serve_listen(engine: Engine, listen: &str, args: &Args,
+                daemon: Option<(PidFile, DaemonPaths)>)
                 -> Result<()> {
     let max_in_flight = args.get_usize("max-in-flight", 256);
     let net = engine.listen(listen, max_in_flight)?;
@@ -294,6 +505,21 @@ fn serve_listen(engine: Engine, listen: &str, args: &Args)
               {} in-flight; connect with coordinator::net clients or \
               `wino-adder bench-serve`)",
              net.local_addr(), proto::VERSION, max_in_flight);
+    if let Some((_lock, paths)) = &daemon {
+        write_serve_state(paths, args,
+                          Some(net.local_addr().to_string()))?;
+        println!("daemon: state at {}",
+                 paths.state_file().display());
+    }
+    if args.has("_supervised-child") {
+        let dir = PathBuf::from(args.get_or("run-dir", ".wino-serve"));
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| anyhow!("creating {}: {e}", dir.display()))?;
+        let addr_file = dir.join("addr");
+        std::fs::write(&addr_file, format!("{}\n", net.local_addr()))
+            .map_err(|e| anyhow!("writing {}: {e}",
+                                 addr_file.display()))?;
+    }
     let secs = args.get_usize("duration-s", 0);
     if secs == 0 {
         println!("serving until killed (pass --duration-s N for a \
@@ -324,7 +550,6 @@ fn serve_listen(engine: Engine, listen: &str, args: &Args)
 /// shrinks the model and request count so CI can run it end-to-end.
 fn cmd_bench_serve(args: &Args) -> Result<()> {
     use std::collections::BTreeMap;
-    use std::time::Instant;
     use wino_adder::util::json::Json;
 
     let smoke = args.has("smoke");
@@ -335,11 +560,25 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let max_in_flight = args.get_usize("max-in-flight", 4 * clients);
     let dtype = Dtype::parse(args.get_or("dtype", "f32"))
         .ok_or_else(|| anyhow!("bad --dtype (f32|int8)"))?;
+    let deadline_ms: u64 = match args.get("deadline-ms") {
+        Some(raw) => raw.parse().map_err(|_| {
+            anyhow!("--deadline-ms must be a number of milliseconds, \
+                     got {raw:?}")
+        })?,
+        None => 0,
+    };
     let proto_v2 = match args.get_or("proto", "v1") {
-        "v1" => dtype == Dtype::Int8, // int8 implies the v2 protocol
+        // int8 payloads and deadline frames both ride the v2 protocol
+        "v1" => dtype == Dtype::Int8 || deadline_ms > 0,
         "v2" => true,
         other => return Err(anyhow!("bad --proto {other:?} (v1|v2)")),
     };
+    let faults_spec = args.get("faults").map(|s| s.to_string());
+    let chaos = faults_spec.is_some() || deadline_ms > 0;
+    // chaos runs verify every reply bit-for-bit against an in-process
+    // reference answer; int8 replies are quantization-dependent, so
+    // verification covers the f32 path only
+    let verify = chaos && dtype == Dtype::F32;
     // the v2 session client is strictly one-request-at-a-time, so the
     // recorded window must say 1 or the JSON misdescribes the run
     let window = if proto_v2 {
@@ -396,6 +635,17 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
               {model_name} ({model_layers} layers), max \
               {max_in_flight} in-flight",
              kind.name(), kernel.name());
+    if let Some(spec) = &faults_spec {
+        println!("  injected faults: {spec}");
+    }
+    if deadline_ms > 0 {
+        println!("  per-request deadline {deadline_ms}ms (v2 \
+                  deadline frames)");
+    }
+    if verify {
+        println!("  chaos verification on: fixed per-client input, \
+                  bit-exact reply check vs in-process reference");
+    }
 
     let t0 = Instant::now();
     let mut workers = Vec::new();
@@ -410,15 +660,30 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         let addr = addr.to_string();
         let in_shape = info.in_shape;
         let mut crng = Rng::new(0xbec0 + c as u64);
-        let xs: Vec<Vec<f32>> = (0..per_client)
-            .map(|_| crng.normal_vec(sample))
-            .collect();
+        // a verified chaos client repeats one fixed input so every
+        // reply can be checked against a single reference output
+        let xs: Vec<Vec<f32>> = if verify {
+            vec![crng.normal_vec(sample); per_client]
+        } else {
+            (0..per_client)
+                .map(|_| crng.normal_vec(sample))
+                .collect()
+        };
+        let expected = if verify {
+            Some(reference_output(engine.handle(), &xs[0])?)
+        } else {
+            None
+        };
+        let seed = 0xba5e ^ c as u64;
         workers.push(std::thread::spawn(
-            move || -> Result<(LatencyStats, u64, u64)> {
+            move || -> Result<BenchWorker> {
                 if proto_v2 {
-                    bench_client_v2(&addr, in_shape, dtype, &xs)
+                    bench_client_v2(&addr, in_shape, dtype, &xs,
+                                    deadline_ms, seed,
+                                    expected.as_deref())
                 } else {
-                    bench_client_v1(&addr, window, &xs)
+                    bench_client_v1(&addr, window, &xs, seed,
+                                    expected.as_deref())
                 }
             },
         ));
@@ -426,13 +691,19 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let mut lat = LatencyStats::new();
     let mut busy_total = 0u64;
     let mut reconnects = 0u64;
+    let mut retries = 0u64;
+    let mut deadline_misses = 0u64;
+    let mut fault_errors = 0u64;
     for w in workers {
-        let (l, b, r) = w
+        let r = w
             .join()
             .map_err(|_| anyhow!("client thread panicked"))??;
-        lat.merge(&l);
-        busy_total += b;
-        reconnects += r;
+        lat.merge(&r.lat);
+        busy_total += r.busy;
+        reconnects += r.reconnects;
+        retries += r.retries;
+        deadline_misses += r.deadline_exceeded;
+        fault_errors += r.fault_errors;
     }
     let elapsed = t0.elapsed().as_secs_f64();
     let net_summary = net.stop();
@@ -446,7 +717,13 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
               ({rps:.0} req/s), {} engine batches",
              stats.server.batches);
     println!("client latency: {}", lat.summary());
-    println!("shed (busy) {busy_total}, reconnects {reconnects}");
+    println!("shed (busy) {busy_total}, reconnects {reconnects}, \
+              retries {retries}, deadline misses {deadline_misses}, \
+              injected-fault errors {fault_errors}");
+    if verify {
+        println!("chaos verification: every reply matched the \
+                  reference output bit-for-bit");
+    }
     println!("net: {}", net_summary.summary());
 
     let mut shape = BTreeMap::new();
@@ -488,6 +765,17 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
                 }));
     root.insert("busy".into(), Json::Num(busy_total as f64));
     root.insert("reconnects".into(), Json::Num(reconnects as f64));
+    root.insert("retries".into(), Json::Num(retries as f64));
+    root.insert("deadline_exceeded".into(),
+                Json::Num(deadline_misses as f64));
+    root.insert("fault_errors".into(),
+                Json::Num(fault_errors as f64));
+    root.insert("deadline_ms".into(), Json::Num(deadline_ms as f64));
+    root.insert("faults".into(), match &faults_spec {
+        Some(spec) => Json::Str(spec.clone()),
+        None => Json::Null,
+    });
+    root.insert("verified".into(), Json::Bool(verify));
     // the engine's own unified MetricsSnapshot — identical to what
     // the HTTP sidecar's /stats endpoint serves
     root.insert("engine".into(), stats.to_json());
@@ -499,94 +787,222 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// One v1 closed-loop bench client: pipelined windows with bounded
-/// Busy-retry.
-fn bench_client_v1(addr: &str, window: usize, xs: &[Vec<f32>])
-                   -> Result<(LatencyStats, u64, u64)> {
-    use std::time::Instant;
-    let mut client = NetClient::connect(addr)?;
-    let mut lat = LatencyStats::new();
-    let mut busy = 0u64;
-    for chunk in xs.chunks(window) {
-        let t = Instant::now();
-        let mut left: Vec<Vec<f32>> = chunk.to_vec();
-        // closed loop with bounded retry: shed requests back off
-        // briefly and go again
-        let mut tries = 0;
-        while !left.is_empty() {
-            tries += 1;
-            if tries > 10_000 {
-                return Err(anyhow!("server persistently busy: retry \
-                                    budget exhausted"));
-            }
-            let replies = client.pipeline(&left)?;
-            let mut retry = Vec::new();
-            for (x, reply) in left.into_iter().zip(replies) {
-                match reply {
-                    NetReply::Output(_) => {
-                        lat.record(t.elapsed());
-                    }
-                    NetReply::Busy => {
-                        busy += 1;
-                        retry.push(x);
-                    }
-                    NetReply::Error(e) => {
-                        return Err(anyhow!(e));
-                    }
-                }
-            }
-            left = retry;
-            if !left.is_empty() {
-                std::thread::sleep(Duration::from_micros(200));
+/// One bench worker's report, merged across clients into the JSON.
+struct BenchWorker {
+    lat: LatencyStats,
+    /// `Busy` sheds observed (each one was retried)
+    busy: u64,
+    /// transparent re-dials after transport errors
+    reconnects: u64,
+    /// total retry attempts (re-dials + `Busy` resends)
+    retries: u64,
+    /// replies rejected with the typed `deadline exceeded` error
+    deadline_exceeded: u64,
+    /// replies rejected with an injected-fault error (chaos runs)
+    fault_errors: u64,
+}
+
+impl BenchWorker {
+    fn new() -> BenchWorker {
+        BenchWorker {
+            lat: LatencyStats::new(),
+            busy: 0,
+            reconnects: 0,
+            retries: 0,
+            deadline_exceeded: 0,
+            fault_errors: 0,
+        }
+    }
+}
+
+/// The bench clients' retry schedule: effectively unbounded `Busy`
+/// resends (the historical `tries > 10_000` bound) under a seeded
+/// 200µs..50ms exponential backoff.
+fn bench_retry_policy(seed: u64) -> RetryPolicy {
+    RetryPolicy::busy_aware(10_000, Duration::from_micros(200),
+                            Duration::from_millis(50), seed)
+}
+
+/// Connect with a few retries: `accept.drop` chaos can sever the
+/// TCP handshake (or the v2 hello) before a session exists.
+fn with_connect_retries<T>(seed: u64,
+                           mut connect: impl FnMut() -> Result<T>)
+                           -> Result<T> {
+    let mut backoff = Backoff::new(Duration::from_micros(200),
+                                   Duration::from_millis(20), seed);
+    let mut last = None;
+    for _ in 0..32 {
+        match connect() {
+            Ok(c) => return Ok(c),
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(backoff.next_delay());
             }
         }
     }
-    Ok((lat, busy, client.reconnects))
+    Err(last.unwrap_or_else(|| anyhow!("connect failed")))
+}
+
+/// Bit-exact chaos verification: any divergence from the in-process
+/// reference output fails the bench (and the CI chaos-smoke job).
+fn check_payload(y: &[f32], expected: Option<&[f32]>) -> Result<()> {
+    let Some(exp) = expected else { return Ok(()) };
+    let same = y.len() == exp.len()
+        && y.iter().zip(exp).all(|(a, b)| a.to_bits() == b.to_bits());
+    if same {
+        Ok(())
+    } else {
+        Err(anyhow!("chaos verification failed: reply diverged from \
+                     the reference output ({} vs {} values)",
+                    y.len(), exp.len()))
+    }
+}
+
+/// Fold a server error reply into the worker's counters: deadline
+/// misses and injected faults are expected under chaos and counted;
+/// anything else fails the bench.
+fn classify_error(e: String, r: &mut BenchWorker) -> Result<()> {
+    if e.contains(DEADLINE_MSG) {
+        r.deadline_exceeded += 1;
+        Ok(())
+    } else if e.contains("injected fault") {
+        r.fault_errors += 1;
+        Ok(())
+    } else {
+        Err(anyhow!(e))
+    }
+}
+
+/// The in-process reference answer for a chaos client's fixed input.
+/// Retried because injected `admit.err`/`engine.panic` faults can hit
+/// the reference run too.
+fn reference_output(handle: &ServerHandle, x: &[f32])
+                    -> Result<Vec<f32>> {
+    let mut last = anyhow!("no attempt ran");
+    for _ in 0..64 {
+        match handle.infer(x.to_vec()) {
+            Ok(y) => return Ok(y),
+            Err(e) => last = e,
+        }
+    }
+    Err(anyhow!("computing the chaos reference output: {last}"))
+}
+
+/// One v1 closed-loop bench client. Unpipelined runs ride the
+/// client's own [`RetryPolicy`]; pipelined windows retry shed
+/// requests with the same seeded backoff schedule.
+fn bench_client_v1(addr: &str, window: usize, xs: &[Vec<f32>],
+                   seed: u64, expected: Option<&[f32]>)
+                   -> Result<BenchWorker> {
+    let mut client = with_connect_retries(seed.wrapping_add(1), || {
+        NetClient::connect(addr)
+    })?;
+    client.set_retry_policy(bench_retry_policy(seed));
+    let mut r = BenchWorker::new();
+    if window <= 1 {
+        for x in xs {
+            let t = Instant::now();
+            match client.call(x)? {
+                NetReply::Output(y) => {
+                    check_payload(&y, expected)?;
+                    r.lat.record(t.elapsed());
+                }
+                NetReply::Busy => {
+                    return Err(anyhow!("server persistently busy: \
+                                        retry budget exhausted"));
+                }
+                NetReply::Error(e) => classify_error(e, &mut r)?,
+            }
+        }
+    } else {
+        let mut backoff = Backoff::new(Duration::from_micros(200),
+                                       Duration::from_millis(50),
+                                       seed);
+        for chunk in xs.chunks(window) {
+            let t = Instant::now();
+            let mut left: Vec<Vec<f32>> = chunk.to_vec();
+            backoff.reset();
+            while !left.is_empty() {
+                if backoff.attempt() > 10_000 {
+                    return Err(anyhow!("server persistently busy: \
+                                        retry budget exhausted"));
+                }
+                let replies = client.pipeline(&left)?;
+                let mut retry = Vec::new();
+                for (x, reply) in left.into_iter().zip(replies) {
+                    match reply {
+                        NetReply::Output(y) => {
+                            check_payload(&y, expected)?;
+                            r.lat.record(t.elapsed());
+                        }
+                        NetReply::Busy => {
+                            r.busy += 1;
+                            r.retries += 1;
+                            retry.push(x);
+                        }
+                        NetReply::Error(e) => {
+                            classify_error(e, &mut r)?;
+                        }
+                    }
+                }
+                left = retry;
+                if !left.is_empty() {
+                    std::thread::sleep(backoff.next_delay());
+                }
+            }
+        }
+    }
+    // the client's own counters cover the policy-governed retries
+    r.busy += client.retries.saturating_sub(client.reconnects);
+    r.retries += client.retries;
+    r.reconnects = client.reconnects;
+    Ok(r)
 }
 
 /// One v2 closed-loop bench client: negotiated session against the
-/// default model; int8 sessions quantize client-side and ship 1-byte
-/// payloads.
+/// default model, `Busy` absorbed by the client's [`RetryPolicy`];
+/// int8 sessions quantize client-side and ship 1-byte payloads. With
+/// `deadline_ms > 0` every request carries a deadline frame and typed
+/// deadline misses are counted instead of failing the run.
 fn bench_client_v2(addr: &str, in_shape: [usize; 3], dtype: Dtype,
-                   xs: &[Vec<f32>]) -> Result<(LatencyStats, u64, u64)> {
-    use std::time::Instant;
+                   xs: &[Vec<f32>], deadline_ms: u64, seed: u64,
+                   expected: Option<&[f32]>) -> Result<BenchWorker> {
     use wino_adder::nn::quant::QParams;
-    let mut client =
-        NetClientV2::connect(addr, "default", in_shape, dtype)?;
-    let mut lat = LatencyStats::new();
-    let mut busy = 0u64;
+    let mut client = with_connect_retries(seed.wrapping_add(1), || {
+        NetClientV2::connect(addr, "default", in_shape, dtype)
+    })?;
+    client.set_retry_policy(bench_retry_policy(seed));
+    if deadline_ms > 0 {
+        client.set_deadline(Some(Duration::from_millis(deadline_ms)));
+    }
+    let mut r = BenchWorker::new();
     for x in xs {
         let t = Instant::now();
-        let mut tries = 0;
-        loop {
-            tries += 1;
-            if tries > 10_000 {
+        let reply = match dtype {
+            Dtype::F32 => client.call(x)?,
+            Dtype::Int8 => {
+                let qp = QParams::fit(x);
+                let q: Vec<i8> =
+                    x.iter().map(|&v| qp.quantize(v)).collect();
+                client.call_i8(&q, qp.scale)?
+            }
+        };
+        match reply {
+            NetReply::Output(y) => {
+                check_payload(&y, expected)?;
+                r.lat.record(t.elapsed());
+            }
+            NetReply::Busy => {
                 return Err(anyhow!("server persistently busy: retry \
                                     budget exhausted"));
             }
-            let reply = match dtype {
-                Dtype::F32 => client.call(x)?,
-                Dtype::Int8 => {
-                    let qp = QParams::fit(x);
-                    let q: Vec<i8> =
-                        x.iter().map(|&v| qp.quantize(v)).collect();
-                    client.call_i8(&q, qp.scale)?
-                }
-            };
-            match reply {
-                NetReply::Output(_) => {
-                    lat.record(t.elapsed());
-                    break;
-                }
-                NetReply::Busy => {
-                    busy += 1;
-                    std::thread::sleep(Duration::from_micros(200));
-                }
-                NetReply::Error(e) => return Err(anyhow!(e)),
-            }
+            NetReply::Error(e) => classify_error(e, &mut r)?,
         }
     }
-    Ok((lat, busy, client.reconnects))
+    r.busy = client.retries.saturating_sub(client.reconnects);
+    r.retries = client.retries;
+    r.reconnects = client.reconnects;
+    Ok(r)
 }
 
 /// `engine <verb>` — ops-plane client verbs. `publish` writes a

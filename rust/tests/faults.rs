@@ -1,0 +1,442 @@
+//! Fault-tolerance chaos suite: deterministic fault injection under
+//! live TCP load, typed deadline rejections, and the supervised /
+//! daemonized serving binary.
+//!
+//! Acceptance gates (ISSUE PR 9):
+//! * replies stay bit-exact under injected accept/read faults + load
+//! * injected store and engine faults surface as *typed* errors and
+//!   the serving loop keeps going
+//! * expired requests never reach the backend — rejected at admission
+//!   or culled from the batch queue
+//! * `serve --supervise` restarts a crashed child and the restart
+//!   resumes the last *published* checkpoint, proven end to end with
+//!   an `engine.panic` crash loop against the real binary
+//! * `serve --daemon` pidfiles exclude a second instance and reclaim
+//!   stale files after a SIGKILL
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use wino_adder::coordinator::batcher::BatchPolicy;
+use wino_adder::coordinator::net::{NetClient, NetClientV2, NetReply};
+use wino_adder::coordinator::server::DEADLINE_MSG;
+use wino_adder::coordinator::supervisor::ServeState;
+use wino_adder::engine::{Dtype, Engine, EngineError, InferRequest};
+use wino_adder::nn::backend::{BackendKind, KernelKind};
+use wino_adder::nn::matrices::Variant;
+use wino_adder::nn::model::{ModelSpec, ModelWeights};
+use wino_adder::nn::plan::ModelPlan;
+use wino_adder::storage::{LocalDir, Store};
+use wino_adder::util::rng::Rng;
+
+const SHAPE: [usize; 3] = [2, 8, 8];
+const SAMPLE: usize = 2 * 8 * 8;
+
+fn spec() -> ModelSpec {
+    ModelSpec::single_layer(2, 3, 8, Variant::Balanced(0))
+}
+
+/// Fresh per-test directory under the OS temp dir.
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "wino_adder_faults_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Ground truth for one input under `weights` (same idiom as the ops
+/// suite: Scalar backend -> bit-exact comparisons are valid).
+fn expected(spec: &ModelSpec, weights: &ModelWeights, x: &[f32])
+            -> Vec<f32> {
+    let backend = BackendKind::Scalar
+        .build_with(1, KernelKind::default());
+    let mut plan = ModelPlan::compile(spec, weights, 1).unwrap();
+    plan.forward(&*backend, x).to_vec()
+}
+
+/// Poll `f` until it yields `Some` or `timeout` passes.
+fn wait_for<T>(timeout: Duration, mut f: impl FnMut() -> Option<T>)
+               -> Option<T> {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        if let Some(v) = f() {
+            return Some(v);
+        }
+        thread::sleep(Duration::from_millis(20));
+    }
+    None
+}
+
+/// Kill a spawned binary if the test bails early (best-effort).
+struct KillOnDrop(Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+#[test]
+fn chaos_load_stays_bit_exact_under_injected_faults() {
+    // accept.drop severs fresh connections, read.stall delays the
+    // reader loop — neither may corrupt a payload that does arrive
+    let engine = Engine::builder()
+        .model("default", spec())
+        .backend(BackendKind::Scalar)
+        .threads(1)
+        .seed(7)
+        .batch(BatchPolicy { buckets: vec![1, 4], max_wait_us: 200 })
+        .faults("accept.drop=0.1,read.stall_ms=1@0.5")
+        .build()
+        .unwrap();
+    let handle = engine.handle().clone();
+    let x = Rng::new(42).normal_vec(SAMPLE);
+    let want = handle.infer(x.clone()).unwrap();
+
+    let net = engine.listen("127.0.0.1:0", 64).unwrap();
+    let addr = net.local_addr().to_string();
+    let mut workers = Vec::new();
+    for c in 0..3u64 {
+        let (addr, x, want) = (addr.clone(), x.clone(), want.clone());
+        workers.push(thread::spawn(move || {
+            // sessions may take a few attempts through accept.drop
+            let mut client = None;
+            for _ in 0..200 {
+                match NetClientV2::connect(&addr, "default", SHAPE,
+                                           Dtype::F32) {
+                    Ok(c) => {
+                        client = Some(c);
+                        break;
+                    }
+                    Err(_) => thread::sleep(Duration::from_millis(2)),
+                }
+            }
+            let mut client = client
+                .expect("no session through accept.drop chaos");
+            let (mut ok, mut errs) = (0u64, 0u64);
+            while ok < 20 {
+                match client.infer(&x) {
+                    Ok(y) => {
+                        assert_eq!(y, want,
+                                   "client {c}: corrupt payload \
+                                    under chaos");
+                        ok += 1;
+                    }
+                    Err(_) => {
+                        // transport losses are fine; hangs/corruption
+                        // are not
+                        errs += 1;
+                        assert!(errs < 1000,
+                                "client {c}: chaos starved all \
+                                 progress");
+                    }
+                }
+            }
+        }));
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+    net.stop();
+    let stats = engine.stop().unwrap();
+    let faults = stats.faults.expect("fault summary must be exported");
+    assert!(faults.read_stall > 0,
+            "read.stall at rate 0.5 never fired: {faults:?}");
+    assert!(faults.total() > 0);
+}
+
+#[test]
+fn injected_store_fault_is_a_typed_swap_error() {
+    let dir = tmp_dir("store");
+    let store = LocalDir::new(dir.clone());
+    assert_eq!(
+        store.publish("default", &spec(),
+                      &ModelWeights::init(&spec(), 1234)).unwrap(),
+        1);
+
+    let engine = Engine::builder()
+        .model("default", spec())
+        .backend(BackendKind::Scalar)
+        .threads(1)
+        .seed(7)
+        .batch(BatchPolicy { buckets: vec![1], max_wait_us: 0 })
+        .store(&dir)
+        .faults("store.err=1")
+        .build()
+        .unwrap();
+    // every store access fails by injection: the swap is a typed
+    // error, not a panic, and the old weights keep serving
+    let err = engine.swap_model("default", None).unwrap_err();
+    assert!(matches!(err, EngineError::Swap { .. }), "{err:?}");
+    assert!(format!("{err}").contains("injected fault"), "{err}");
+    let x = Rng::new(5).normal_vec(SAMPLE);
+    assert!(engine.handle().infer(x).is_ok(),
+            "serving must survive an injected store fault");
+    let stats = engine.stop().unwrap();
+    assert!(stats.faults.unwrap().store_err >= 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn injected_engine_panic_is_typed_and_the_loop_survives() {
+    let engine = Engine::builder()
+        .model("default", spec())
+        .backend(BackendKind::Scalar)
+        .threads(1)
+        .seed(7)
+        .batch(BatchPolicy { buckets: vec![1], max_wait_us: 0 })
+        .faults("engine.panic=1")
+        .build()
+        .unwrap();
+    let x = Rng::new(6).normal_vec(SAMPLE);
+    // rate 1: every batch crashes — as a *typed* error per request,
+    // with the serving loop alive for the next one
+    for _ in 0..3 {
+        let err = engine
+            .infer(InferRequest::f32("default", SHAPE, x.clone()))
+            .unwrap_err();
+        match err {
+            EngineError::Internal(msg) => {
+                assert!(msg.contains("injected fault"), "{msg}");
+            }
+            other => panic!("want Internal(injected fault), got \
+                             {other:?}"),
+        }
+    }
+    let stats = engine.stop().unwrap();
+    assert!(stats.faults.unwrap().engine_panic >= 3);
+}
+
+#[test]
+fn zero_deadline_is_rejected_before_admission() {
+    let engine = Engine::builder()
+        .model("default", spec())
+        .backend(BackendKind::Scalar)
+        .threads(1)
+        .seed(7)
+        .batch(BatchPolicy { buckets: vec![1], max_wait_us: 0 })
+        .build()
+        .unwrap();
+    let net = engine.listen("127.0.0.1:0", 8).unwrap();
+    let mut client = NetClientV2::connect(
+        &net.local_addr().to_string(), "default", SHAPE, Dtype::F32)
+        .unwrap();
+    client.set_deadline(Some(Duration::ZERO));
+    let x = Rng::new(7).normal_vec(SAMPLE);
+    for _ in 0..3 {
+        match client.call(&x).unwrap() {
+            NetReply::Error(msg) => {
+                assert!(msg.contains(DEADLINE_MSG), "{msg}");
+                assert!(msg.contains("before admission"), "{msg}");
+            }
+            other => panic!("want a deadline error, got {other:?}"),
+        }
+    }
+    // disarming the deadline serves normally on the same session
+    client.set_deadline(None);
+    assert!(client.infer(&x).is_ok());
+
+    let summary = net.stop();
+    assert_eq!(summary.deadline_exceeded, 3);
+    let stats = engine.stop().unwrap();
+    assert_eq!(stats.server.served, 1,
+               "an expired request reached the backend");
+}
+
+#[test]
+fn queued_requests_past_deadline_are_culled_not_served() {
+    // a no-deadline request parks in the batcher for the full 100ms
+    // window; the deadline request queued behind it expires at +5ms
+    // and must be culled before any batch forms around it
+    let engine = Engine::builder()
+        .model("default", spec())
+        .backend(BackendKind::Scalar)
+        .threads(1)
+        .seed(7)
+        .batch(BatchPolicy { buckets: vec![1, 16],
+                             max_wait_us: 100_000 })
+        .build()
+        .unwrap();
+    let handle = engine.handle().clone();
+    let x = Rng::new(8).normal_vec(SAMPLE);
+    let p1 = handle.infer_async(x.clone()).unwrap();
+    thread::sleep(Duration::from_millis(10));
+    let p2 = handle
+        .infer_async_deadline_for(
+            0, x.clone(),
+            Some(Instant::now() + Duration::from_millis(5)))
+        .unwrap();
+    let err = p2.wait().unwrap_err();
+    assert!(format!("{err}").contains(DEADLINE_MSG), "{err}");
+    assert!(p1.wait().is_ok(),
+            "the deadline-less request must still be served");
+    let stats = engine.stop().unwrap();
+    assert_eq!(stats.server.deadline_exceeded, 1);
+    assert_eq!(stats.server.served, 1,
+               "the culled request reached the backend");
+}
+
+/// Bound serving address a supervised child advertises in its run
+/// dir (rewritten by every generation).
+fn read_addr(run: &Path) -> Option<String> {
+    let s = std::fs::read_to_string(run.join("addr")).ok()?;
+    let s = s.trim();
+    if s.is_empty() {
+        None
+    } else {
+        Some(s.to_string())
+    }
+}
+
+#[test]
+fn supervise_restarts_crashed_child_and_restores_checkpoint() {
+    let run = tmp_dir("sup_run");
+    let store_dir = tmp_dir("sup_store");
+    std::fs::create_dir_all(&run).unwrap();
+
+    // publish a checkpoint that differs from the boot weights
+    // (seed 1234 vs the serve default 7): restores are observable
+    let w2 = ModelWeights::init(&spec(), 1234);
+    let store = LocalDir::new(store_dir.clone());
+    assert_eq!(store.publish("default", &spec(), &w2).unwrap(), 1);
+    let x = Rng::new(42).normal_vec(SAMPLE);
+    let y2 = expected(&spec(), &w2, &x);
+
+    let sup = Command::new(env!("CARGO_BIN_EXE_wino-adder"))
+        .args(["serve", "--supervise",
+               "--listen", "127.0.0.1:0",
+               "--backend", "scalar", "--threads", "1", "--seed", "7",
+               "--cin", "2", "--cout", "3", "--hw", "8",
+               "--max-wait-us", "0",
+               "--faults", "engine.panic=0.3",
+               "--restart-base-ms", "5",
+               "--max-restarts", "50",
+               "--duration-s", "6"])
+        .arg("--run-dir").arg(&run)
+        .arg("--store").arg(&store_dir)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning the supervisor");
+    let mut sup = KillOnDrop(sup);
+
+    // phase 1: hammer the child until engine.panic kills it and the
+    // supervisor respawns generation >= 2
+    let state_path = run.join("state.json");
+    let restarted = wait_for(Duration::from_secs(30), || {
+        let addr = read_addr(&run)?;
+        if let Ok(mut c) = NetClient::connect(&addr) {
+            for _ in 0..50 {
+                let _ = c.infer(&x); // crashes sever the transport
+                if let Ok(st) = ServeState::load(&state_path) {
+                    if st.generation >= 2 {
+                        return Some(st);
+                    }
+                }
+            }
+        }
+        None
+    });
+    let st = restarted.expect("no supervised restart within 30s");
+    assert!(st.generation >= 2);
+    assert!(st.child_pid.is_some(), "state.json lost the child pid");
+
+    // phase 2: the restarted generation must serve the *published*
+    // checkpoint (--restore), not the seed-7 boot weights
+    let served = wait_for(Duration::from_secs(20), || {
+        let addr = read_addr(&run)?;
+        let mut c = NetClient::connect(&addr).ok()?;
+        for _ in 0..20 {
+            if let Ok(y) = c.infer(&x) {
+                return Some(y);
+            }
+        }
+        None
+    });
+    let y = served.expect("no successful reply after the restart");
+    assert_eq!(y, y2,
+               "restarted child is not serving the last published \
+                checkpoint");
+
+    // phase 3: with traffic (and thus crashes) stopped, the child
+    // exits cleanly at --duration-s and the supervisor follows
+    let exit = wait_for(Duration::from_secs(30), || {
+        sup.0.try_wait().ok().flatten()
+    });
+    let exit = exit.expect("supervisor did not exit after a clean \
+                            child shutdown");
+    assert!(exit.success(), "supervisor exit: {exit:?}");
+    assert!(!run.join("serve.pid").exists(),
+            "pidfile must be released on clean exit");
+    let _ = std::fs::remove_dir_all(&run);
+    let _ = std::fs::remove_dir_all(&store_dir);
+}
+
+#[test]
+fn daemon_pidfile_excludes_and_recovers_after_sigkill() {
+    let run = tmp_dir("daemon_run");
+    std::fs::create_dir_all(&run).unwrap();
+
+    // a long-running daemon owning the run dir
+    let daemon = Command::new(env!("CARGO_BIN_EXE_wino-adder"))
+        .args(["serve", "--daemon",
+               "--listen", "127.0.0.1:0",
+               "--backend", "scalar", "--threads", "1",
+               "--cin", "2", "--cout", "3", "--hw", "8",
+               "--max-wait-us", "0",
+               "--duration-s", "60"])
+        .arg("--run-dir").arg(&run)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning the daemon");
+    let mut daemon = KillOnDrop(daemon);
+    let state_path = run.join("state.json");
+    let state = wait_for(Duration::from_secs(20), || {
+        let st = ServeState::load(&state_path).ok()?;
+        st.addr.clone().map(|_| st)
+    });
+    let state = state.expect("daemon never published state.json");
+    assert_eq!(state.pid, daemon.0.id());
+    assert_eq!(state.generation, 1);
+
+    // a second daemon on the same run dir must refuse to start
+    let second = Command::new(env!("CARGO_BIN_EXE_wino-adder"))
+        .args(["serve", "--daemon", "--requests", "4",
+               "--backend", "scalar", "--threads", "1",
+               "--cin", "2", "--cout", "3", "--hw", "8",
+               "--max-wait-us", "0"])
+        .arg("--run-dir").arg(&run)
+        .output()
+        .expect("running the second daemon");
+    assert!(!second.status.success(),
+            "two daemons owned one run dir");
+    let stderr = String::from_utf8_lossy(&second.stderr);
+    assert!(stderr.contains("already running"), "{stderr}");
+
+    // SIGKILL the daemon: the pidfile is left behind naming a dead
+    // pid, and the next start must reclaim it
+    daemon.0.kill().unwrap();
+    daemon.0.wait().unwrap();
+    assert!(run.join("serve.pid").exists(),
+            "SIGKILL should leave the pidfile behind");
+    let third = Command::new(env!("CARGO_BIN_EXE_wino-adder"))
+        .args(["serve", "--daemon", "--requests", "4",
+               "--backend", "scalar", "--threads", "1",
+               "--cin", "2", "--cout", "3", "--hw", "8",
+               "--max-wait-us", "0"])
+        .arg("--run-dir").arg(&run)
+        .output()
+        .expect("running the recovering daemon");
+    let stdout = String::from_utf8_lossy(&third.stdout);
+    assert!(third.status.success(),
+            "stale-pid recovery failed: {stdout}\n{}",
+            String::from_utf8_lossy(&third.stderr));
+    assert!(stdout.contains("reclaimed a stale pidfile"), "{stdout}");
+    assert!(!run.join("serve.pid").exists(),
+            "pidfile must be released on clean exit");
+    let _ = std::fs::remove_dir_all(&run);
+}
