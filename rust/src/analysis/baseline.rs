@@ -1,0 +1,244 @@
+//! Findings baseline + ratchet, and SARIF rendering.
+//!
+//! The committed `analysis/baseline.json` records the findings the
+//! tree is *known* to carry, each with a mandatory reasoned
+//! justification (same spirit as in-source waivers). `lint --baseline`
+//! then fails only on:
+//!
+//! - **new** findings not in the baseline (the tree got worse),
+//! - **stale** entries matching nothing (the tree got better — the
+//!   baseline must be refreshed with `--write-baseline` so the count
+//!   only ratchets down), and
+//! - entries whose reason is missing or still the `UNJUSTIFIED`
+//!   placeholder `--write-baseline` emits.
+//!
+//! Fingerprints are `rule|path|symbol` — deliberately line- and
+//! message-free so routine edits that move a function don't churn the
+//! baseline, while renames and moves (which change what the entry is
+//! vouching for) correctly invalidate it.
+
+use std::collections::BTreeMap;
+
+use super::Finding;
+use crate::util::json::Json;
+
+/// One baselined finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Entry {
+    pub rule: String,
+    pub path: String,
+    pub symbol: String,
+    pub reason: String,
+}
+
+impl Entry {
+    pub fn key(&self) -> String {
+        format!("{}|{}|{}", self.rule, self.path, self.symbol)
+    }
+}
+
+/// Findings are keyed the same way; `symbol` is empty for local rules
+/// (which are expected to be fixed or waived in-source, not
+/// baselined).
+pub fn finding_key(f: &Finding) -> String {
+    format!(
+        "{}|{}|{}",
+        f.rule,
+        normalize_path(&f.path),
+        f.symbol.as_deref().unwrap_or("")
+    )
+}
+
+/// Baseline paths are repo-root-relative (`src/...`); findings from a
+/// `lint <dir>` run rooted at the crate carry the same shape, but a
+/// repo-root run prefixes `rust/`. Strip it so both agree.
+pub fn normalize_path(path: &str) -> String {
+    path.strip_prefix("rust/").unwrap_or(path).to_string()
+}
+
+/// Outcome of checking findings against a baseline.
+#[derive(Debug, Default)]
+pub struct Ratchet {
+    /// Findings not in the baseline — the tree got worse.
+    pub fresh: Vec<Finding>,
+    /// Baseline entries matching no finding — refresh required.
+    pub stale: Vec<Entry>,
+    /// Entries without a real reason.
+    pub unjustified: Vec<Entry>,
+    /// Findings suppressed by a justified entry.
+    pub matched: usize,
+}
+
+impl Ratchet {
+    pub fn clean(&self) -> bool {
+        self.fresh.is_empty() && self.stale.is_empty()
+            && self.unjustified.is_empty()
+    }
+}
+
+/// Parse `analysis/baseline.json`. Returns `Err` with a human-readable
+/// message on malformed documents — CI treats that as a failure, not
+/// an empty baseline.
+pub fn parse(text: &str) -> Result<Vec<Entry>, String> {
+    let doc = Json::parse(text)
+        .map_err(|e| format!("baseline is not valid JSON: {}", e.msg))?;
+    let entries = doc
+        .get("entries")
+        .and_then(|e| e.as_arr())
+        .ok_or("baseline has no `entries` array")?;
+    let mut out = Vec::new();
+    for (i, e) in entries.iter().enumerate() {
+        let field = |k: &str| -> Result<String, String> {
+            e.get(k)
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .ok_or(format!("baseline entry {i} missing `{k}`"))
+        };
+        out.push(Entry {
+            rule: field("rule")?,
+            path: field("path")?,
+            symbol: field("symbol")?,
+            reason: e
+                .get("reason")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+        });
+    }
+    Ok(out)
+}
+
+/// Check `findings` against the baseline.
+pub fn apply(findings: &[Finding], baseline: &[Entry]) -> Ratchet {
+    let mut by_key: BTreeMap<String, (&Entry, bool)> = BTreeMap::new();
+    for e in baseline {
+        by_key.entry(e.key()).or_insert((e, false));
+    }
+    let mut r = Ratchet::default();
+    for f in findings {
+        match by_key.get_mut(&finding_key(f)) {
+            Some(slot) => {
+                slot.1 = true;
+                r.matched += 1;
+            }
+            None => r.fresh.push(f.clone()),
+        }
+    }
+    for (e, hit) in by_key.values() {
+        if !hit {
+            r.stale.push((*e).clone());
+        } else if e.reason.trim().is_empty()
+            || e.reason.starts_with("UNJUSTIFIED")
+        {
+            r.unjustified.push((*e).clone());
+        }
+    }
+    r
+}
+
+/// Render a fresh baseline document from `findings`, carrying
+/// reasons over from `prior` by fingerprint; entries with no prior
+/// reason get an `UNJUSTIFIED` placeholder that `apply` will reject
+/// until a human writes the justification. One entry per line,
+/// sorted by fingerprint — reviewable and `diff`-stable.
+pub fn write(findings: &[Finding], prior: &[Entry]) -> String {
+    let reasons: BTreeMap<String, &str> = prior
+        .iter()
+        .map(|e| (e.key(), e.reason.as_str()))
+        .collect();
+    let mut seen: BTreeMap<String, Entry> = BTreeMap::new();
+    for f in findings {
+        let key = finding_key(f);
+        let reason = reasons
+            .get(&key)
+            .copied()
+            .filter(|r| !r.trim().is_empty())
+            .unwrap_or("UNJUSTIFIED: replace with a reasoned \
+                        justification or fix the finding");
+        seen.entry(key).or_insert_with(|| Entry {
+            rule: f.rule.to_string(),
+            path: normalize_path(&f.path),
+            symbol: f.symbol.clone().unwrap_or_default(),
+            reason: reason.to_string(),
+        });
+    }
+    let mut out = String::from("{\n  \"version\": 1,\n  \
+                                \"entries\": [");
+    for (i, e) in seen.values().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("\n    {\"rule\": ");
+        out.push_str(&Json::Str(e.rule.clone()).dump());
+        out.push_str(", \"path\": ");
+        out.push_str(&Json::Str(e.path.clone()).dump());
+        out.push_str(", \"symbol\": ");
+        out.push_str(&Json::Str(e.symbol.clone()).dump());
+        out.push_str(",\n     \"reason\": ");
+        out.push_str(&Json::Str(e.reason.clone()).dump());
+        out.push('}');
+    }
+    if seen.is_empty() {
+        out.push(']');
+    } else {
+        out.push_str("\n  ]");
+    }
+    out.push_str("\n}\n");
+    out
+}
+
+/// Minimal SARIF 2.1.0 document — enough for GitHub code-scanning
+/// upload and PR annotation.
+pub fn to_sarif(findings: &[Finding]) -> Json {
+    let rules: Vec<Json> = super::RULE_IDS
+        .iter()
+        .map(|id| {
+            let mut m = BTreeMap::new();
+            m.insert("id".into(), Json::Str(id.to_string()));
+            Json::Obj(m)
+        })
+        .collect();
+    let results: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            let mut msg = BTreeMap::new();
+            msg.insert("text".into(), Json::Str(f.message.clone()));
+            let mut art = BTreeMap::new();
+            art.insert("uri".into(),
+                       Json::Str(normalize_path(&f.path)));
+            let mut region = BTreeMap::new();
+            region.insert("startLine".into(),
+                          Json::Num(f.line.max(1) as f64));
+            let mut phys = BTreeMap::new();
+            phys.insert("artifactLocation".into(), Json::Obj(art));
+            phys.insert("region".into(), Json::Obj(region));
+            let mut loc = BTreeMap::new();
+            loc.insert("physicalLocation".into(), Json::Obj(phys));
+            let mut res = BTreeMap::new();
+            res.insert("ruleId".into(),
+                       Json::Str(f.rule.to_string()));
+            res.insert("level".into(), Json::Str("error".into()));
+            res.insert("message".into(), Json::Obj(msg));
+            res.insert("locations".into(),
+                       Json::Arr(vec![Json::Obj(loc)]));
+            Json::Obj(res)
+        })
+        .collect();
+    let mut driver = BTreeMap::new();
+    driver.insert("name".into(), Json::Str("addernet-lint".into()));
+    driver.insert("rules".into(), Json::Arr(rules));
+    let mut tool = BTreeMap::new();
+    tool.insert("driver".into(), Json::Obj(driver));
+    let mut run = BTreeMap::new();
+    run.insert("tool".into(), Json::Obj(tool));
+    run.insert("results".into(), Json::Arr(results));
+    let mut top = BTreeMap::new();
+    top.insert(
+        "$schema".into(),
+        Json::Str("https://json.schemastore.org/sarif-2.1.0.json"
+                  .into()),
+    );
+    top.insert("version".into(), Json::Str("2.1.0".into()));
+    top.insert("runs".into(), Json::Arr(vec![Json::Obj(run)]));
+    Json::Obj(top)
+}

@@ -1,0 +1,325 @@
+//! Intra-crate call graph over the fn items from [`super::items`].
+//!
+//! Resolution is heuristic, tuned to over-approximate *within* the
+//! crate while staying silent about std/external calls:
+//!
+//! - `self.m()` resolves to the current impl type's method, falling
+//!   back to default methods of traits the type implements.
+//! - Other method calls fan out to every in-crate method of that name
+//!   whose receiver type (or, for dyn/generic dispatch, trait name)
+//!   is *visible* — i.e. the identifier appears somewhere in the
+//!   calling file. The visibility filter is what keeps `.run()` on a
+//!   generic executor from reaching every unrelated `run` in the
+//!   crate.
+//! - Trait-qualified and trait-object calls fan out to all in-crate
+//!   implementors.
+//! - `a::b::f()` matches free fns by file stem; bare `f()` prefers a
+//!   same-file free fn.
+//!
+//! Call sites that match nothing in the crate are counted as
+//! `unresolved`, never silently dropped — the count is reported so a
+//! resolution regression is visible.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
+
+use super::items::{Call, CallKind, FnItem};
+
+pub struct CallGraph {
+    pub fns: Vec<FnItem>,
+    /// Per-file identifier sets — the visibility filter.
+    file_idents: HashMap<String, HashSet<String>>,
+    by_name_free: HashMap<String, Vec<usize>>,
+    by_file_free: HashMap<(String, String), Vec<usize>>,
+    methods_by_ty: HashMap<(String, String), usize>,
+    methods_by_name: HashMap<String, Vec<usize>>,
+    impls_of_trait: HashMap<String, BTreeSet<String>>,
+    traits_of_ty: HashMap<String, BTreeSet<String>>,
+    trait_method_names: HashMap<String, HashSet<String>>,
+    pub edges: HashMap<usize, BTreeSet<usize>>,
+    pub resolved_edges: usize,
+    pub unresolved: usize,
+}
+
+fn file_stem(path: &str) -> String {
+    let base = path.rsplit('/').next().unwrap_or(path);
+    base.strip_suffix(".rs").unwrap_or(base).to_string()
+}
+
+impl CallGraph {
+    pub fn new(fns: Vec<FnItem>,
+               file_idents: HashMap<String, HashSet<String>>) -> Self {
+        let mut g = CallGraph {
+            fns,
+            file_idents,
+            by_name_free: HashMap::new(),
+            by_file_free: HashMap::new(),
+            methods_by_ty: HashMap::new(),
+            methods_by_name: HashMap::new(),
+            impls_of_trait: HashMap::new(),
+            traits_of_ty: HashMap::new(),
+            trait_method_names: HashMap::new(),
+            edges: HashMap::new(),
+            resolved_edges: 0,
+            unresolved: 0,
+        };
+        for i in 0..g.fns.len() {
+            let f = &g.fns[i];
+            if f.is_test {
+                continue;
+            }
+            let stem = file_stem(&f.path);
+            let name = f.name.clone();
+            match f.impl_ty.clone() {
+                None => {
+                    g.by_name_free.entry(name.clone()).or_default()
+                        .push(i);
+                    g.by_file_free.entry((stem, name)).or_default()
+                        .push(i);
+                }
+                Some(ty) => {
+                    if f.in_trait {
+                        g.trait_method_names.entry(ty.clone())
+                            .or_default().insert(name.clone());
+                    } else if let Some(tr) = f.trait_name.clone() {
+                        g.impls_of_trait.entry(tr.clone()).or_default()
+                            .insert(ty.clone());
+                        g.traits_of_ty.entry(ty.clone()).or_default()
+                            .insert(tr.clone());
+                        g.trait_method_names.entry(tr).or_default()
+                            .insert(name.clone());
+                    }
+                    g.methods_by_ty.insert((ty, name.clone()), i);
+                    g.methods_by_name.entry(name).or_default().push(i);
+                }
+            }
+        }
+        for i in 0..g.fns.len() {
+            if g.fns[i].is_test || !g.fns[i].has_body {
+                continue;
+            }
+            let calls = g.fns[i].calls.clone();
+            for call in &calls {
+                let targets = g.resolve(i, call);
+                if targets.is_empty() {
+                    g.unresolved += 1;
+                } else {
+                    for tg in targets {
+                        if !g.fns[tg].is_test
+                            && g.edges.entry(i).or_default().insert(tg)
+                        {
+                            g.resolved_edges += 1;
+                        }
+                    }
+                }
+            }
+        }
+        g
+    }
+
+    /// Candidate targets for one call site in `fns[caller]`.
+    pub fn resolve(&self, caller: usize, call: &Call) -> Vec<usize> {
+        let f = &self.fns[caller];
+        match &call.kind {
+            CallKind::Method { recv } => {
+                if recv.as_deref() == Some("self") {
+                    if let Some(ty) = &f.impl_ty {
+                        if let Some(&hit) = self
+                            .methods_by_ty
+                            .get(&(ty.clone(), call.name.clone()))
+                        {
+                            return vec![hit];
+                        }
+                        let mut hits = Vec::new();
+                        if let Some(trs) = self.traits_of_ty.get(ty) {
+                            for tr in trs {
+                                if let Some(&hit) =
+                                    self.methods_by_ty.get(&(
+                                        tr.clone(),
+                                        call.name.clone(),
+                                    ))
+                                {
+                                    if self.fns[hit].has_body {
+                                        hits.push(hit);
+                                    }
+                                }
+                            }
+                        }
+                        if !hits.is_empty() {
+                            return hits;
+                        }
+                    }
+                }
+                let empty = HashSet::new();
+                let vis = self
+                    .file_idents
+                    .get(&f.path)
+                    .unwrap_or(&empty);
+                let mut hits: BTreeSet<usize> = BTreeSet::new();
+                if let Some(cands) = self.methods_by_name.get(&call.name)
+                {
+                    for &i in cands {
+                        let g = &self.fns[i];
+                        if !g.has_body {
+                            continue;
+                        }
+                        let ty_vis = g
+                            .impl_ty
+                            .as_ref()
+                            .is_some_and(|ty| vis.contains(ty));
+                        let tr_vis = g
+                            .trait_name
+                            .as_ref()
+                            .is_some_and(|tr| vis.contains(tr));
+                        if g.path == f.path || ty_vis || tr_vis {
+                            hits.insert(i);
+                        }
+                    }
+                }
+                // dyn/generic dispatch through a visible trait
+                for (tr, names) in &self.trait_method_names {
+                    if names.contains(&call.name) && vis.contains(tr) {
+                        if let Some(tys) = self.impls_of_trait.get(tr) {
+                            for ty in tys {
+                                if let Some(&hit) =
+                                    self.methods_by_ty.get(&(
+                                        ty.clone(),
+                                        call.name.clone(),
+                                    ))
+                                {
+                                    if self.fns[hit].has_body {
+                                        hits.insert(hit);
+                                    }
+                                }
+                            }
+                        }
+                        if let Some(&d) = self.methods_by_ty.get(&(
+                            tr.clone(),
+                            call.name.clone(),
+                        )) {
+                            if self.fns[d].has_body {
+                                hits.insert(d);
+                            }
+                        }
+                    }
+                }
+                hits.into_iter().collect()
+            }
+            CallKind::Path { quals } => {
+                if quals.is_empty() {
+                    let cands = match self.by_name_free.get(&call.name)
+                    {
+                        Some(c) => c,
+                        None => return Vec::new(),
+                    };
+                    let same: Vec<usize> = cands
+                        .iter()
+                        .copied()
+                        .filter(|&i| self.fns[i].path == f.path)
+                        .collect();
+                    if !same.is_empty() {
+                        return same;
+                    }
+                    return cands.clone();
+                }
+                let mut last = quals[quals.len() - 1].clone();
+                if last == "Self" {
+                    if let Some(ty) = &f.impl_ty {
+                        last = ty.clone();
+                    }
+                }
+                if let Some(&hit) = self
+                    .methods_by_ty
+                    .get(&(last.clone(), call.name.clone()))
+                {
+                    if self.fns[hit].has_body {
+                        return vec![hit];
+                    }
+                    // trait decl without a body: all implementors
+                    return self.impl_hits(&last, &call.name);
+                }
+                if self.impls_of_trait.contains_key(&last) {
+                    return self.impl_hits(&last, &call.name);
+                }
+                // module-qualified free fn, matched by file stem
+                if let Some(hits) = self
+                    .by_file_free
+                    .get(&(last, call.name.clone()))
+                {
+                    return hits.clone();
+                }
+                for s in quals {
+                    if let Some(hits) = self
+                        .by_file_free
+                        .get(&(s.clone(), call.name.clone()))
+                    {
+                        return hits.clone();
+                    }
+                }
+                Vec::new()
+            }
+        }
+    }
+
+    fn impl_hits(&self, tr: &str, name: &str) -> Vec<usize> {
+        let mut out = Vec::new();
+        if let Some(tys) = self.impls_of_trait.get(tr) {
+            for ty in tys {
+                if let Some(&hit) = self
+                    .methods_by_ty
+                    .get(&(ty.clone(), name.to_string()))
+                {
+                    out.push(hit);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Breadth-first reachability with parent pointers, for chain
+/// reconstruction. Seeds map to `usize::MAX` (no parent).
+pub fn reach(graph: &CallGraph, seeds: &[usize])
+             -> BTreeMap<usize, usize> {
+    let mut parent: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    for &s in seeds {
+        if !parent.contains_key(&s) {
+            parent.insert(s, usize::MAX);
+            queue.push_back(s);
+        }
+    }
+    while let Some(cur) = queue.pop_front() {
+        if let Some(nexts) = graph.edges.get(&cur) {
+            for &nxt in nexts {
+                parent.entry(nxt).or_insert_with(|| {
+                    queue.push_back(nxt);
+                    cur
+                });
+            }
+        }
+    }
+    parent
+}
+
+/// `seed -> ... -> sink` chain for a finding message, elided in the
+/// middle past `cap` hops.
+pub fn chain(graph: &CallGraph, parent: &BTreeMap<usize, usize>,
+             sink: usize, cap: usize) -> String {
+    let mut names: Vec<String> = Vec::new();
+    let mut cur = sink;
+    loop {
+        names.push(graph.fns[cur].qname());
+        match parent.get(&cur) {
+            Some(&p) if p != usize::MAX => cur = p,
+            _ => break,
+        }
+    }
+    names.reverse();
+    if names.len() > cap && cap >= 4 {
+        let tail = names.split_off(names.len() - (cap - 3));
+        names.truncate(2);
+        names.push("...".to_string());
+        names.extend(tail);
+    }
+    names.join(" -> ")
+}

@@ -1,0 +1,492 @@
+//! Wave-2 whole-crate analyses over the call graph: transitive
+//! no-alloc-hot-path, transitive no-panic-serving, lock-order
+//! consistency, and the cross-file half of `proto-exhaustiveness`
+//! (client decode dispatch coverage).
+//!
+//! Findings here are anchored at the *sink* function's declaration
+//! line and carry the full seed -> sink call chain in the message, so
+//! a waiver placed directly above the sink fn reaches them and a
+//! reviewer can see why the sink is considered reachable.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+use super::callgraph::{chain, reach, CallGraph};
+use super::items::Event;
+use super::lexer::{Tok, TokKind};
+use super::rules::HOT_PATH_FILES;
+use super::Finding;
+
+/// Max hops printed in a chain before the middle is elided.
+const CHAIN_CAP: usize = 6;
+
+fn hot_file(path: &str) -> bool {
+    HOT_PATH_FILES.iter().any(|f| path.ends_with(f))
+}
+
+fn serving_file(path: &str) -> bool {
+    path.contains("src/coordinator/")
+        || path.contains("src/engine/")
+        || path.contains("src/storage/")
+}
+
+/// Transitive no-alloc-hot-path: seed at functions with code inside a
+/// hot region (designated file, outside `lint:hot-path` off-markers),
+/// walk the call graph, and flag every reachable function that
+/// allocates. Allocations *inside* a hot region are skipped here —
+/// the local `no-alloc-hot-path` rule already owns those lines.
+pub fn deep_alloc(
+    graph: &CallGraph,
+    hot_masks: &HashMap<String, Vec<bool>>,
+    findings: &mut Vec<Finding>,
+) {
+    let mut seeds = Vec::new();
+    for (i, f) in graph.fns.iter().enumerate() {
+        if f.is_test || !f.has_body || !hot_file(&f.path) {
+            continue;
+        }
+        let mask = match hot_masks.get(&f.path) {
+            Some(m) => m,
+            None => continue,
+        };
+        let hot = |l: usize| mask.get(l).copied().unwrap_or(false);
+        let seeded = hot(f.line)
+            || f.calls.iter().any(|c| hot(c.line))
+            || f.allocs.iter().any(|&(_, l, _)| hot(l))
+            || f.panics.iter().any(|&(_, l)| hot(l));
+        if seeded {
+            seeds.push(i);
+        }
+    }
+    let parent = reach(graph, &seeds);
+    for (&idx, _) in &parent {
+        let f = &graph.fns[idx];
+        let bad: Vec<(&str, usize)> = f
+            .allocs
+            .iter()
+            .filter(|&&(_, _, on_hot)| !(hot_file(&f.path) && on_hot))
+            .map(|&(what, line, _)| (what, line))
+            .collect();
+        if bad.is_empty() {
+            continue;
+        }
+        let whats: BTreeSet<&str> =
+            bad.iter().map(|&(w, _)| w).collect();
+        let lines: BTreeSet<usize> =
+            bad.iter().map(|&(_, l)| l).collect();
+        findings.push(Finding {
+            path: f.path.clone(),
+            line: f.line,
+            rule: "no-alloc-transitive",
+            symbol: Some(f.qname()),
+            message: format!(
+                "`{}` is reachable from the hot path ({}) and \
+                 allocates ({} at line(s) {})",
+                f.qname(),
+                chain(graph, &parent, idx, CHAIN_CAP),
+                join(&whats, ", "),
+                join_nums(&lines, 8),
+            ),
+        });
+    }
+}
+
+/// Transitive no-panic-serving: seed at public entry points of the
+/// serving tier (`coordinator/`, `engine/`, `storage/`) and flag
+/// every reachable function *outside* those directories that can
+/// panic. Sinks inside the serving tier are already covered line-by-
+/// line by the local `no-panic-serving` rule (or its waivers).
+pub fn deep_panic(graph: &CallGraph, findings: &mut Vec<Finding>) {
+    let seeds: Vec<usize> = graph
+        .fns
+        .iter()
+        .enumerate()
+        .filter(|(_, f)| {
+            !f.is_test && f.is_pub && f.has_body
+                && serving_file(&f.path)
+        })
+        .map(|(i, _)| i)
+        .collect();
+    let parent = reach(graph, &seeds);
+    for (&idx, _) in &parent {
+        let f = &graph.fns[idx];
+        if serving_file(&f.path) || f.panics.is_empty() {
+            continue;
+        }
+        let whats: BTreeSet<&str> =
+            f.panics.iter().map(|&(w, _)| w).collect();
+        let lines: BTreeSet<usize> =
+            f.panics.iter().map(|&(_, l)| l).collect();
+        findings.push(Finding {
+            path: f.path.clone(),
+            line: f.line,
+            rule: "no-panic-transitive",
+            symbol: Some(f.qname()),
+            message: format!(
+                "`{}` is reachable from the serving tier ({}) and can \
+                 panic ({} at line(s) {})",
+                f.qname(),
+                chain(graph, &parent, idx, CHAIN_CAP),
+                join(&whats, ", "),
+                join_nums(&lines, 6),
+            ),
+        });
+    }
+}
+
+/// Lock-order consistency. Replays each function's ordered event
+/// stream tracking which guards are live (let-bound guards die at
+/// their scope's closing brace or an explicit `drop(guard)`;
+/// temporaries die at the `;`), builds the inter-lock order graph —
+/// including locks acquired transitively through calls made while a
+/// lock is held — and reports: ordering cycles (potential deadlock),
+/// re-acquisition of a held lock (guaranteed self-deadlock), and
+/// blocking calls made under a lock.
+pub fn deep_locks(graph: &CallGraph, findings: &mut Vec<Finding>) {
+    // fixpoint: the set of locks a call into each fn may acquire
+    let n = graph.fns.len();
+    let mut acq: Vec<BTreeSet<String>> = (0..n)
+        .map(|i| {
+            graph.fns[i]
+                .locks
+                .iter()
+                .map(|(name, _)| name.clone())
+                .collect()
+        })
+        .collect();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for i in 0..n {
+            let Some(nexts) = graph.edges.get(&i) else { continue };
+            let mut extra: Vec<String> = Vec::new();
+            for &j in nexts {
+                for l in &acq[j] {
+                    if !acq[i].contains(l) {
+                        extra.push(l.clone());
+                    }
+                }
+            }
+            if !extra.is_empty() {
+                changed = true;
+                acq[i].extend(extra);
+            }
+        }
+    }
+
+    // order: lock A -> locks acquired while A is held, with one
+    // witness site per edge
+    let mut order: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    let mut why: BTreeMap<(String, String), (String, String, usize)> =
+        BTreeMap::new();
+    let edge = |a: &str, b: &str, f: &super::items::FnItem,
+                    line: usize,
+                    order: &mut BTreeMap<String, BTreeSet<String>>,
+                    why: &mut BTreeMap<(String, String),
+                                       (String, String, usize)>| {
+        order.entry(a.to_string()).or_default().insert(b.to_string());
+        why.entry((a.to_string(), b.to_string()))
+            .or_insert_with(|| (f.qname(), f.path.clone(), line));
+    };
+
+    for (fi, f) in graph.fns.iter().enumerate() {
+        if f.is_test || !f.has_body {
+            continue;
+        }
+        // live guards: (lock name, guard ident, brace depth, line)
+        let mut held: Vec<(String, Option<String>, usize, usize)> =
+            Vec::new();
+        for e in &f.events {
+            match e {
+                Event::Lock { name, guard, depth, line } => {
+                    for (hname, _, _, hline) in &held {
+                        if hname != name {
+                            edge(hname, name, f, *line, &mut order,
+                                 &mut why);
+                        } else {
+                            findings.push(Finding {
+                                path: f.path.clone(),
+                                line: *line,
+                                rule: "lock-order",
+                                symbol: Some(f.qname()),
+                                message: format!(
+                                    "`{}` re-acquires lock `{name}` \
+                                     at line {line} while already \
+                                     holding it (acquired line \
+                                     {hline}): guaranteed \
+                                     self-deadlock",
+                                    f.qname(),
+                                ),
+                            });
+                        }
+                    }
+                    held.push((name.clone(), guard.clone(), *depth,
+                               *line));
+                }
+                Event::StmtEnd => {
+                    held.retain(|h| h.1.is_some());
+                }
+                Event::ScopeEnd { depth } => {
+                    held.retain(|h| h.2 < *depth);
+                }
+                Event::DropGuard { guard } => {
+                    held.retain(|h| h.1.as_deref() != Some(guard));
+                }
+                Event::Blocking { what, line } => {
+                    for (hname, _, _, hline) in &held {
+                        findings.push(Finding {
+                            path: f.path.clone(),
+                            line: *line,
+                            rule: "lock-order",
+                            symbol: Some(f.qname()),
+                            message: format!(
+                                "`{}` calls blocking `{what}` at line \
+                                 {line} while holding lock `{hname}` \
+                                 (acquired line {hline}); release the \
+                                 lock before blocking",
+                                f.qname(),
+                            ),
+                        });
+                    }
+                }
+                Event::Call(call) => {
+                    if held.is_empty() {
+                        continue;
+                    }
+                    for tg in graph.resolve(fi, call) {
+                        for lname in &acq[tg] {
+                            for (hname, _, _, _) in &held {
+                                if hname != lname {
+                                    edge(hname, lname, f, call.line,
+                                         &mut order, &mut why);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // cycle detection (DFS with path recovery); one report per run
+    if let Some(cyc) = find_cycle(&order) {
+        let (a, b) = (cyc[0].clone(),
+                      cyc.get(1).cloned()
+                          .unwrap_or_else(|| cyc[0].clone()));
+        let w = why.get(&(a.clone(), b.clone()))
+            .or_else(|| why.get(&(b, a)));
+        let cyc_str = cyc.join(" -> ");
+        let (path, line, site) = match w {
+            Some((q, p, l)) =>
+                (p.clone(), *l, format!("{p}:{l} in `{q}`")),
+            None => ("src/lib.rs".to_string(), 1, "?".to_string()),
+        };
+        findings.push(Finding {
+            path,
+            line,
+            rule: "lock-order",
+            symbol: Some(cyc_str.clone()),
+            message: format!(
+                "lock-order cycle {cyc_str} (potential deadlock); \
+                 one edge acquired at {site}"
+            ),
+        });
+    }
+}
+
+/// DFS over the lock-order graph; returns one cycle as
+/// `[a, b, ..., a]` if any exists.
+fn find_cycle(order: &BTreeMap<String, BTreeSet<String>>)
+              -> Option<Vec<String>> {
+    let mut nodes: BTreeSet<&String> = order.keys().collect();
+    for s in order.values() {
+        nodes.extend(s.iter());
+    }
+    // 0 = white, 1 = on stack, 2 = done
+    let mut color: BTreeMap<&String, u8> = BTreeMap::new();
+    for start in &nodes {
+        if color.get(*start).copied().unwrap_or(0) != 0 {
+            continue;
+        }
+        // explicit stack: (node, neighbors already tried)
+        let mut path: Vec<&String> = vec![start];
+        let mut iters: Vec<Vec<&String>> = vec![neighbors(order, start)];
+        color.insert(start, 1);
+        while let Some(cands) = iters.last_mut() {
+            match cands.pop() {
+                Some(v) => match color.get(v).copied().unwrap_or(0) {
+                    0 => {
+                        color.insert(v, 1);
+                        path.push(v);
+                        iters.push(neighbors(order, v));
+                    }
+                    1 => {
+                        let at = path.iter()
+                            .position(|&u| u == v)
+                            .unwrap_or(0);
+                        let mut cyc: Vec<String> = path[at..]
+                            .iter()
+                            .map(|s| s.to_string())
+                            .collect();
+                        cyc.push(v.clone());
+                        return Some(cyc);
+                    }
+                    _ => {}
+                },
+                None => {
+                    if let Some(u) = path.pop() {
+                        color.insert(u, 2);
+                    }
+                    iters.pop();
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Successors of `u`, reversed so the DFS (which pops from the back)
+/// visits them in ascending order — keeps the reported cycle
+/// deterministic.
+fn neighbors<'a>(order: &'a BTreeMap<String, BTreeSet<String>>,
+                 u: &String) -> Vec<&'a String> {
+    order.get(u).map(|s| s.iter().rev().collect())
+        .unwrap_or_default()
+}
+
+/// Cross-file half of `proto-exhaustiveness`: every server->client
+/// frame kind must be decodable by the client — i.e. the `Frame`
+/// variant that `kind()` maps to the `KIND_*` const must be matched
+/// somewhere in `net/client.rs`. Direction comes from the const's doc
+/// comment (the `server→client` / `server->client` convention).
+pub fn proto_client_dispatch(
+    files: &[(String, Vec<Tok>)],
+    findings: &mut Vec<Finding>,
+) {
+    let proto = files.iter()
+        .find(|(p, _)| p.ends_with("net/proto.rs"));
+    let client = files.iter()
+        .find(|(p, _)| p.ends_with("net/client.rs"));
+    let (Some((proto_path, ptoks)), Some((_, ctoks))) =
+        (proto, client)
+    else {
+        return;
+    };
+
+    // server->client KIND consts, by doc comment direction
+    let mut s2c: Vec<(String, usize)> = Vec::new();
+    let code: Vec<&Tok> =
+        ptoks.iter().filter(|t| !t.is_comment()).collect();
+    for w in code.windows(2) {
+        if w[0].kind == TokKind::Ident && w[0].text == "const"
+            && w[1].kind == TokKind::Ident
+            && w[1].text.starts_with("KIND_")
+        {
+            let doc_is_s2c = ptoks.iter().any(|t| {
+                t.is_comment()
+                    && t.text.starts_with("///")
+                    && t.line < w[1].line
+                    && w[1].line - t.line <= 2
+                    && (t.text.contains("server\u{2192}client")
+                        || t.text.contains("server->client"))
+            });
+            if doc_is_s2c {
+                s2c.push((w[1].text.clone(), w[1].line));
+            }
+        }
+    }
+
+    // kind() mapping: `Frame :: Variant ... => KIND_X`
+    let mut variant_of: HashMap<String, String> = HashMap::new();
+    let mut i = 0;
+    while i + 3 < code.len() {
+        if code[i].kind == TokKind::Ident && code[i].text == "Frame"
+            && code[i + 1].text == ":" && code[i + 2].text == ":"
+            && code[i + 3].kind == TokKind::Ident
+        {
+            let variant = code[i + 3].text.clone();
+            // scan forward a short window for `=> KIND_X`
+            for j in i + 4..(i + 16).min(code.len() - 1) {
+                if code[j].text == "=" && code[j + 1].text == ">" {
+                    if let Some(t) = code.get(j + 2) {
+                        if t.kind == TokKind::Ident
+                            && t.text.starts_with("KIND_")
+                        {
+                            variant_of
+                                .entry(t.text.clone())
+                                .or_insert(variant);
+                        }
+                    }
+                    break;
+                }
+                if code[j].text == "," {
+                    break;
+                }
+            }
+        }
+        i += 1;
+    }
+
+    // variants the client matches: `Frame :: Variant` in client.rs
+    let ccode: Vec<&Tok> =
+        ctoks.iter().filter(|t| !t.is_comment()).collect();
+    let mut client_variants: BTreeSet<String> = BTreeSet::new();
+    let mut i = 0;
+    while i + 3 < ccode.len() {
+        if ccode[i].kind == TokKind::Ident && ccode[i].text == "Frame"
+            && ccode[i + 1].text == ":" && ccode[i + 2].text == ":"
+            && ccode[i + 3].kind == TokKind::Ident
+        {
+            client_variants.insert(ccode[i + 3].text.clone());
+        }
+        i += 1;
+    }
+    if client_variants.is_empty() {
+        // no Frame dispatch in the client at all — the local rule on
+        // proto.rs still guards read_frame; don't guess here
+        return;
+    }
+
+    for (kind, line) in &s2c {
+        let Some(variant) = variant_of.get(kind) else {
+            findings.push(Finding {
+                path: proto_path.clone(),
+                line: *line,
+                rule: "proto-exhaustiveness",
+                symbol: None,
+                message: format!(
+                    "server->client frame kind `{kind}` has no \
+                     `Frame::<Variant> => {kind}` arm in `kind()`; \
+                     the client cannot name what it receives"
+                ),
+            });
+            continue;
+        };
+        if !client_variants.contains(variant) {
+            findings.push(Finding {
+                path: proto_path.clone(),
+                line: *line,
+                rule: "proto-exhaustiveness",
+                symbol: None,
+                message: format!(
+                    "server->client frame kind `{kind}` maps to \
+                     `Frame::{variant}`, but net/client.rs never \
+                     matches `Frame::{variant}` — the client would \
+                     drop or mis-handle this reply"
+                ),
+            });
+        }
+    }
+}
+
+fn join(set: &BTreeSet<&str>, sep: &str) -> String {
+    set.iter().copied().collect::<Vec<_>>().join(sep)
+}
+
+fn join_nums(set: &BTreeSet<usize>, cap: usize) -> String {
+    let mut v: Vec<String> =
+        set.iter().take(cap).map(|l| l.to_string()).collect();
+    if set.len() > cap {
+        v.push("...".to_string());
+    }
+    v.join(", ")
+}

@@ -1,0 +1,791 @@
+//! Item-level parsing for the call-graph analyses: `fn` items, `impl`
+//! and `trait` blocks, method receivers, and the ordered body events
+//! (calls, allocations, panic sites, lock acquisitions) the deep rules
+//! replay.
+//!
+//! This is deliberately NOT a Rust AST. It is a brace-tree walk over
+//! the token stream from [`super::lexer`]: `impl`/`trait` blocks are
+//! found first so each `fn` knows its receiver type, then every fn
+//! body is scanned once, emitting events in token order. Anything the
+//! walk cannot classify is skipped (and call resolution later counts
+//! what it cannot resolve) — the analyses over-approximate reachability
+//! rather than pretend to soundness a token-level parser cannot offer.
+
+use super::lexer::{Tok, TokKind};
+use super::rules::{self, KEYWORDS};
+
+/// Methods whose *empty-argument* call is a lock acquisition. The
+/// empty-parens requirement keeps `io::Read::read(&mut buf)` and
+/// `io::Write::write(&buf)` from masquerading as `RwLock` ops.
+const LOCK_METHODS: [&str; 3] = ["lock", "read", "write"];
+
+/// Blocking calls that must not run under a held lock — these three
+/// only with empty parens (`Path::join`/`str::join`/`Iterator` args
+/// collide otherwise) ...
+const BLOCKING_EMPTY: [&str; 3] = ["join", "recv", "accept"];
+
+/// ... and these two match with arguments (no std collision).
+const BLOCKING_ARGS: [&str; 2] = ["read_exact", "write_all"];
+
+/// A call site inside a fn body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Call {
+    /// `x.name(...)`: receiver ident if syntactically simple
+    /// (`self`, a local, a field); `None` for chained/temporary
+    /// receivers. `Path` carries the `a::b::` qualifier segments
+    /// (empty for a bare `name(...)` call).
+    pub kind: CallKind,
+    pub name: String,
+    pub line: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CallKind {
+    Method { recv: Option<String> },
+    Path { quals: Vec<String> },
+}
+
+/// Ordered body events for the lock-order replay.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Event {
+    /// `.lock()`/`.read()`/`.write()` with empty parens. `guard` is
+    /// the let-binding the returned guard lands in, if any — `None`
+    /// means a temporary that dies at the end of the statement.
+    /// `depth` is the brace depth inside the body where it happened.
+    Lock {
+        name: String,
+        guard: Option<String>,
+        depth: usize,
+        line: usize,
+    },
+    /// `drop(guard)` — the explicit early release.
+    DropGuard { guard: String },
+    /// `;` — temporaries die here.
+    StmtEnd,
+    /// `}` closing brace depth `depth` — guards bound at that depth
+    /// (or deeper) die here.
+    ScopeEnd { depth: usize },
+    /// A blocking call (`.join()`, `.recv()`, `.accept()`,
+    /// `.read_exact(..)`, `.write_all(..)`).
+    Blocking { what: &'static str, line: usize },
+    /// Any other call, for pulling in locks the callee acquires.
+    Call(Call),
+}
+
+/// One `fn` item with everything the deep analyses need.
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    /// Path label of the file this fn lives in.
+    pub path: String,
+    pub name: String,
+    /// Receiver type when inside an `impl` block; for fns declared in
+    /// a `trait` block this is the *trait* name.
+    pub impl_ty: Option<String>,
+    /// `Some(trait)` when inside `impl Trait for Ty`.
+    pub trait_name: Option<String>,
+    /// Declared inside a `trait { ... }` block (decl or default body).
+    pub in_trait: bool,
+    pub has_receiver: bool,
+    /// `pub` / `pub(crate)` / trait-item (part of the trait's API).
+    pub is_pub: bool,
+    /// Line of the fn name in its declaration — findings anchor here
+    /// so a `lint:allow` directly above the fn reaches them.
+    pub line: usize,
+    pub has_body: bool,
+    /// Inside a `#[cfg(test)]` region.
+    pub is_test: bool,
+    pub calls: Vec<Call>,
+    /// (what, line, on-a-hot-line) — hot only meaningful when the
+    /// file is a designated hot-path module.
+    pub allocs: Vec<(&'static str, usize, bool)>,
+    pub panics: Vec<(&'static str, usize)>,
+    /// Lock names acquired anywhere in the body (order-insensitive
+    /// summary; the ordered story is in `events`).
+    pub locks: Vec<(String, usize)>,
+    pub events: Vec<Event>,
+}
+
+impl FnItem {
+    /// `Ty::name` for methods, bare `name` for free fns.
+    pub fn qname(&self) -> String {
+        match &self.impl_ty {
+            Some(ty) => format!("{ty}::{}", self.name),
+            None => self.name.clone(),
+        }
+    }
+}
+
+/// Everything extracted from one file.
+pub struct FileItems {
+    pub fns: Vec<FnItem>,
+    /// Hot-line mask when the file is a designated hot-path module.
+    pub hot_mask: Option<Vec<bool>>,
+    /// Every identifier the file mentions — the call-resolution
+    /// visibility filter (a `.run()` here can only dispatch to
+    /// receiver types this file names).
+    pub idents: Vec<String>,
+}
+
+struct P<'a> {
+    toks: &'a [Tok],
+    code: Vec<usize>,
+}
+
+impl<'a> P<'a> {
+    fn tok(&self, ci: usize) -> Option<&'a Tok> {
+        self.code.get(ci).map(|&i| &self.toks[i])
+    }
+
+    fn is_p(&self, ci: usize, p: &str) -> bool {
+        self.tok(ci)
+            .is_some_and(|t| t.kind == TokKind::Punct && t.text == p)
+    }
+
+    fn is_id(&self, ci: usize, name: &str) -> bool {
+        self.tok(ci)
+            .is_some_and(|t| t.kind == TokKind::Ident && t.text == name)
+    }
+
+    fn is_any_id(&self, ci: usize) -> bool {
+        self.tok(ci).is_some_and(|t| t.kind == TokKind::Ident)
+    }
+
+    /// ci at `<` -> position after the matching `>`; bails (returning
+    /// ci unchanged-ish) on `{`/`;` so malformed generics can't run
+    /// away.
+    fn skip_generics(&self, mut ci: usize) -> usize {
+        let mut depth = 0usize;
+        while ci < self.code.len() {
+            if self.is_p(ci, "<") {
+                depth += 1;
+            } else if self.is_p(ci, ">") {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    return ci + 1;
+                }
+            } else if self.is_p(ci, ";") || self.is_p(ci, "{") {
+                return ci;
+            }
+            ci += 1;
+        }
+        ci
+    }
+
+    /// Parse a type path at ci, returning its LAST segment (the type
+    /// name resolution keys on) and the position after it.
+    fn type_name(&self, mut ci: usize) -> (Option<String>, usize) {
+        let mut name = None;
+        loop {
+            if self.is_any_id(ci) {
+                let t = match self.tok(ci) {
+                    Some(t) => t,
+                    None => break,
+                };
+                if KEYWORDS.contains(&t.text.as_str())
+                    && t.text != "crate"
+                {
+                    break;
+                }
+                name = Some(t.text.clone());
+                ci += 1;
+                if self.is_p(ci, "<") {
+                    ci = self.skip_generics(ci);
+                }
+                if self.is_p(ci, ":") && self.is_p(ci + 1, ":") {
+                    ci += 2;
+                    continue;
+                }
+            }
+            break;
+        }
+        (name, ci)
+    }
+
+    /// From the code-position of a block-opening `{`, the matching
+    /// close position (code index, not line).
+    fn matching_close(&self, open_ci: usize) -> usize {
+        let mut depth = 0usize;
+        let mut k = open_ci;
+        while k < self.code.len() {
+            if self.is_p(k, "{") {
+                depth += 1;
+            } else if self.is_p(k, "}") {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    return k;
+                }
+            }
+            k += 1;
+        }
+        k.saturating_sub(1)
+    }
+}
+
+/// `impl`/`trait` block spans, found before the fn pass so every fn
+/// knows its receiver context.
+struct Block {
+    lo: usize,
+    hi: usize,
+    /// Receiver type for impls; the trait's own name for trait blocks.
+    ty: Option<String>,
+    /// `impl Trait for Ty` only.
+    trait_name: Option<String>,
+    is_trait: bool,
+}
+
+/// Parse one file into fn items. `n_lines` sizes the line masks.
+pub fn parse_items(path: &str, toks: &[Tok], n_lines: usize)
+                   -> FileItems {
+    let p = P {
+        toks,
+        code: toks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| !t.is_comment())
+            .map(|(i, _)| i)
+            .collect(),
+    };
+    let n = n_lines + 2;
+    let test_mask = rules::cfg_test_lines(toks, &p.code, n);
+    let hot_mask = rules::hot_path_lines(path, toks, n);
+    let in_test = |line: usize| -> bool {
+        test_mask.get(line).copied().unwrap_or(false)
+    };
+    let in_hot = |line: usize| -> bool {
+        hot_mask
+            .as_ref()
+            .and_then(|m| m.get(line))
+            .copied()
+            .unwrap_or(false)
+    };
+
+    // pass 1: impl / trait blocks
+    let mut blocks: Vec<Block> = Vec::new();
+    let mut ci = 0usize;
+    while ci < p.code.len() {
+        if p.is_id(ci, "impl") {
+            let mut j = ci + 1;
+            if p.is_p(j, "<") {
+                j = p.skip_generics(j);
+            }
+            let (first, j2) = p.type_name(j);
+            j = j2;
+            let mut trait_name = None;
+            let mut impl_ty = first.clone();
+            if p.is_id(j, "for") {
+                trait_name = first;
+                j += 1;
+                if p.is_p(j, "&") {
+                    j += 1;
+                }
+                let (ty, j3) = p.type_name(j);
+                impl_ty = ty;
+                j = j3;
+            }
+            while j < p.code.len() && !p.is_p(j, "{") && !p.is_p(j, ";")
+            {
+                j += 1;
+            }
+            if p.is_p(j, "{") {
+                let k = p.matching_close(j);
+                blocks.push(Block {
+                    lo: j,
+                    hi: k,
+                    ty: impl_ty,
+                    trait_name,
+                    is_trait: false,
+                });
+                ci = j + 1;
+                continue;
+            }
+        } else if p.is_id(ci, "trait") && p.is_any_id(ci + 1) {
+            let tname = p.tok(ci + 1).map(|t| t.text.clone());
+            let mut j = ci + 2;
+            while j < p.code.len() && !p.is_p(j, "{") && !p.is_p(j, ";")
+            {
+                j += 1;
+            }
+            if p.is_p(j, "{") {
+                let k = p.matching_close(j);
+                blocks.push(Block {
+                    lo: j,
+                    hi: k,
+                    ty: tname,
+                    trait_name: None,
+                    is_trait: true,
+                });
+                ci = j + 1;
+                continue;
+            }
+        }
+        ci += 1;
+    }
+
+    let enclosing = |ci: usize| -> Option<&Block> {
+        blocks
+            .iter()
+            .filter(|b| b.lo < ci && ci < b.hi)
+            .max_by_key(|b| b.lo)
+    };
+
+    // pass 2: fn items
+    let mut fns: Vec<FnItem> = Vec::new();
+    let mut ci = 0usize;
+    while ci < p.code.len() {
+        if !p.is_id(ci, "fn") || !p.is_any_id(ci + 1) {
+            ci += 1;
+            continue;
+        }
+        let (name, decl_line) = match p.tok(ci + 1) {
+            Some(t) => (t.text.clone(), t.line),
+            None => break,
+        };
+        let blk = enclosing(ci);
+        let impl_ty = blk.and_then(|b| b.ty.clone());
+        let trait_name = blk.and_then(|b| b.trait_name.clone());
+        let in_trait = blk.is_some_and(|b| b.is_trait);
+        let is_pub = in_trait || is_pub_before(&p, ci);
+        // signature: generics, then the parameter list
+        let mut j = ci + 2;
+        if p.is_p(j, "<") {
+            j = p.skip_generics(j);
+        }
+        let mut has_receiver = false;
+        if p.is_p(j, "(") {
+            let mut m = j + 1;
+            while let Some(t) = p.tok(m) {
+                match (t.kind, t.text.as_str()) {
+                    (TokKind::Punct, "&") => m += 1,
+                    (TokKind::Lifetime, _) => m += 1,
+                    (TokKind::Ident, "mut") => m += 1,
+                    _ => break,
+                }
+            }
+            if p.is_id(m, "self") {
+                has_receiver = true;
+            }
+            // skip the balanced parameter list
+            let mut depth = 0usize;
+            let mut k = j;
+            while k < p.code.len() {
+                if p.is_p(k, "(") {
+                    depth += 1;
+                } else if p.is_p(k, ")") {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                k += 1;
+            }
+            j = k + 1;
+        }
+        // body: first `{` or `;` (past return type / where clause)
+        while j < p.code.len() && !p.is_p(j, "{") && !p.is_p(j, ";") {
+            if p.is_p(j, "<") {
+                j = p.skip_generics(j);
+                continue;
+            }
+            j += 1;
+        }
+        let mut item = FnItem {
+            path: path.to_string(),
+            name,
+            impl_ty,
+            trait_name,
+            in_trait,
+            has_receiver,
+            is_pub,
+            line: decl_line,
+            has_body: false,
+            is_test: in_test(decl_line),
+            calls: Vec::new(),
+            allocs: Vec::new(),
+            panics: Vec::new(),
+            locks: Vec::new(),
+            events: Vec::new(),
+        };
+        if !p.is_p(j, "{") {
+            // trait method declaration without a body
+            fns.push(item);
+            ci = j + 1;
+            continue;
+        }
+        let close = p.matching_close(j);
+        item.has_body = true;
+        extract_events(&mut item, &p, j, close, &in_test, &in_hot);
+        fns.push(item);
+        ci = close + 1;
+    }
+
+    let mut idents: Vec<String> = toks
+        .iter()
+        .filter(|t| t.kind == TokKind::Ident)
+        .map(|t| t.text.clone())
+        .collect();
+    idents.sort();
+    idents.dedup();
+    FileItems { fns, hot_mask, idents }
+}
+
+/// Scan back from a `fn` keyword over its qualifiers for `pub`.
+fn is_pub_before(p: &P, fn_ci: usize) -> bool {
+    let mut k = fn_ci;
+    let mut steps = 0usize;
+    while k > 0 && steps < 8 {
+        k -= 1;
+        steps += 1;
+        let t = match p.tok(k) {
+            Some(t) => t,
+            None => return false,
+        };
+        match (t.kind, t.text.as_str()) {
+            (TokKind::Ident, "unsafe" | "const" | "async" | "extern") => {}
+            (TokKind::Str, _) => {} // extern "C"
+            (TokKind::Punct, ")") => {
+                // pub(crate) / pub(in ...) — rewind to the `(`
+                while k > 0 && !p.is_p(k, "(") {
+                    k -= 1;
+                }
+                if k > 0 {
+                    k -= 1;
+                }
+                if p.is_id(k, "pub") {
+                    return true;
+                }
+                return false;
+            }
+            (TokKind::Ident, "pub") => return true,
+            _ => return false,
+        }
+    }
+    false
+}
+
+/// One pass over a fn body, emitting events in token order.
+fn extract_events(
+    item: &mut FnItem,
+    p: &P,
+    lo: usize,
+    hi: usize,
+    in_test: &dyn Fn(usize) -> bool,
+    in_hot: &dyn Fn(usize) -> bool,
+) {
+    let mut depth = 0usize;
+    // let-binding state, for naming the guard a lock lands in
+    let mut saw_let = false;
+    let mut saw_eq = false;
+    let mut let_ident: Option<String> = None;
+
+    let mut ci = lo;
+    while ci <= hi {
+        let t = match p.tok(ci) {
+            Some(t) => t,
+            None => break,
+        };
+        let line = t.line;
+        match (t.kind, t.text.as_str()) {
+            (TokKind::Punct, "{") => {
+                depth += 1;
+                saw_let = false;
+                saw_eq = false;
+                let_ident = None;
+            }
+            (TokKind::Punct, "}") => {
+                item.events.push(Event::ScopeEnd { depth });
+                depth = depth.saturating_sub(1);
+                saw_let = false;
+                saw_eq = false;
+                let_ident = None;
+            }
+            (TokKind::Punct, ";") => {
+                item.events.push(Event::StmtEnd);
+                saw_let = false;
+                saw_eq = false;
+                let_ident = None;
+            }
+            (TokKind::Punct, "=") => {
+                if saw_let {
+                    saw_eq = true;
+                }
+            }
+            (TokKind::Punct, "[") => {
+                if !in_test(line) {
+                    let idx = ci
+                        .checked_sub(1)
+                        .and_then(|k| p.tok(k))
+                        .is_some_and(rules::index_expr_prev);
+                    if idx {
+                        item.panics.push(("[idx] indexing", line));
+                    }
+                }
+            }
+            (TokKind::Ident, "let") => {
+                saw_let = true;
+                saw_eq = false;
+                let_ident = None;
+            }
+            (TokKind::Ident, name) => {
+                if saw_let
+                    && !saw_eq
+                    && !KEYWORDS.contains(&name)
+                {
+                    let_ident = Some(name.to_string());
+                }
+            }
+            _ => {}
+        }
+
+        // pattern matches anchored at ci
+        if p.is_id(ci, "Vec") && p.is_p(ci + 1, ":")
+            && p.is_p(ci + 2, ":") && p.is_id(ci + 3, "new")
+        {
+            if !in_test(line) {
+                item.allocs.push(("Vec::new", line, in_hot(line)));
+            }
+        } else if p.is_id(ci, "Box") && p.is_p(ci + 1, ":")
+            && p.is_p(ci + 2, ":") && p.is_id(ci + 3, "new")
+        {
+            if !in_test(line) {
+                item.allocs.push(("Box::new", line, in_hot(line)));
+            }
+        } else if p.is_id(ci, "vec") && p.is_p(ci + 1, "!") {
+            if !in_test(line) {
+                item.allocs.push(("vec!", line, in_hot(line)));
+            }
+        } else if (p.is_id(ci, "panic") || p.is_id(ci, "unreachable"))
+            && p.is_p(ci + 1, "!")
+        {
+            if !in_test(line) {
+                let what = if p.is_id(ci, "panic") {
+                    "panic!"
+                } else {
+                    "unreachable!"
+                };
+                item.panics.push((what, line));
+            }
+        } else if p.is_p(ci, ".") && p.is_any_id(ci + 1)
+            && p.is_p(ci + 2, "(")
+        {
+            let (mname, mline) = match p.tok(ci + 1) {
+                Some(t) => (t.text.clone(), t.line),
+                None => break,
+            };
+            if in_test(mline) {
+                ci += 1;
+                continue;
+            }
+            let empty = p.is_p(ci + 3, ")");
+            match mname.as_str() {
+                "to_vec" => item.allocs.push((".to_vec()", mline,
+                                              in_hot(mline))),
+                "clone" => item.allocs.push((".clone()", mline,
+                                             in_hot(mline))),
+                "collect" => item.allocs.push((".collect()", mline,
+                                               in_hot(mline))),
+                _ => {}
+            }
+            match mname.as_str() {
+                "unwrap" => item.panics.push((".unwrap(", mline)),
+                "expect" => item.panics.push((".expect(", mline)),
+                _ => {}
+            }
+            if LOCK_METHODS.contains(&mname.as_str()) && empty {
+                let lname = lock_name(item, p, ci);
+                let guard = if saw_let && saw_eq {
+                    let_ident.clone()
+                } else {
+                    None
+                };
+                item.locks.push((lname.clone(), mline));
+                item.events.push(Event::Lock {
+                    name: lname,
+                    guard,
+                    depth,
+                    line: mline,
+                });
+            } else if (BLOCKING_EMPTY.contains(&mname.as_str())
+                       && empty)
+                || BLOCKING_ARGS.contains(&mname.as_str())
+            {
+                let what: &'static str = match mname.as_str() {
+                    "join" => ".join()",
+                    "recv" => ".recv()",
+                    "accept" => ".accept()",
+                    "read_exact" => ".read_exact(..)",
+                    _ => ".write_all(..)",
+                };
+                item.events.push(Event::Blocking { what, line: mline });
+            } else {
+                let recv = ci
+                    .checked_sub(1)
+                    .and_then(|k| p.tok(k))
+                    .filter(|t| t.kind == TokKind::Ident)
+                    .map(|t| t.text.clone());
+                let call = Call {
+                    kind: CallKind::Method { recv },
+                    name: mname,
+                    line: mline,
+                };
+                item.calls.push(call.clone());
+                item.events.push(Event::Call(call));
+            }
+        } else if p.is_id(ci, "drop") && p.is_p(ci + 1, "(")
+            && p.is_any_id(ci + 2) && p.is_p(ci + 3, ")")
+        {
+            if let Some(g) = p.tok(ci + 2) {
+                item.events.push(Event::DropGuard {
+                    guard: g.text.clone(),
+                });
+            }
+        } else if p.is_p(ci, "(") {
+            if let Some((quals, cname, cline)) = call_path(p, ci) {
+                if !in_test(cline) {
+                    let call = Call {
+                        kind: CallKind::Path { quals },
+                        name: cname,
+                        line: cline,
+                    };
+                    item.calls.push(call.clone());
+                    item.events.push(Event::Call(call));
+                }
+            }
+        }
+        ci += 1;
+    }
+}
+
+/// Name the lock receiver: `self.field.lock()` becomes `Ty.field`,
+/// anything else keeps the last receiver-chain ident;
+/// `expr().lock()` digs out the method name before the call parens.
+fn lock_name(item: &FnItem, p: &P, dot_ci: usize) -> String {
+    let prev = dot_ci.checked_sub(1).and_then(|k| p.tok(k));
+    let mut field: Option<String> = None;
+    let mut via_self = false;
+    match prev {
+        Some(t) if t.kind == TokKind::Ident
+            && !KEYWORDS.contains(&t.text.as_str()) =>
+        {
+            field = Some(t.text.clone());
+            let q1 = dot_ci.checked_sub(2).and_then(|k| p.tok(k));
+            let q2 = dot_ci.checked_sub(3).and_then(|k| p.tok(k));
+            if q1.is_some_and(|t| t.kind == TokKind::Punct
+                              && t.text == ".")
+                && q2.is_some_and(|t| t.kind == TokKind::Ident
+                                  && t.text == "self")
+            {
+                via_self = true;
+            }
+        }
+        Some(t) if t.kind == TokKind::Punct && t.text == ")" => {
+            let mut depth = 0usize;
+            let mut k = dot_ci - 1;
+            loop {
+                match p.tok(k) {
+                    Some(t) if t.kind == TokKind::Punct
+                        && t.text == ")" => depth += 1,
+                    Some(t) if t.kind == TokKind::Punct
+                        && t.text == "(" =>
+                    {
+                        depth = depth.saturating_sub(1);
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    Some(_) => {}
+                    None => break,
+                }
+                if k == 0 {
+                    break;
+                }
+                k -= 1;
+            }
+            if let Some(t) = k.checked_sub(1).and_then(|k| p.tok(k)) {
+                if t.kind == TokKind::Ident {
+                    field = Some(t.text.clone());
+                }
+            }
+        }
+        _ => {}
+    }
+    match field {
+        Some(f) if via_self => match &item.impl_ty {
+            Some(ty) => format!("{ty}.{f}"),
+            None => f,
+        },
+        Some(f) => f,
+        None => "?".to_string(),
+    }
+}
+
+/// Look back from a `(` for a `quals::name` call path. Returns `None`
+/// for method calls (handled at the `.`), macro invocations, fn
+/// declarations, and Capitalized names (tuple-struct / enum-variant
+/// constructors).
+fn call_path(p: &P, open_ci: usize)
+             -> Option<(Vec<String>, String, usize)> {
+    let mut k = open_ci.checked_sub(1)?;
+    let mut t = p.tok(k)?;
+    // turbofish: name::<...>(
+    if t.kind == TokKind::Punct && t.text == ">" {
+        let mut depth = 0usize;
+        loop {
+            let t2 = p.tok(k)?;
+            if t2.kind == TokKind::Punct && t2.text == ">" {
+                depth += 1;
+            } else if t2.kind == TokKind::Punct && t2.text == "<" {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    break;
+                }
+            }
+            k = k.checked_sub(1)?;
+        }
+        if !(p.is_p(k.checked_sub(1)?, ":")
+             && p.is_p(k.checked_sub(2)?, ":"))
+        {
+            return None;
+        }
+        k = k.checked_sub(3)?;
+        t = p.tok(k)?;
+    }
+    if t.kind != TokKind::Ident || KEYWORDS.contains(&t.text.as_str())
+    {
+        return None;
+    }
+    let name = t.text.clone();
+    let line = t.line;
+    let first = name.chars().next()?;
+    if !(first.is_lowercase() || first == '_') {
+        return None;
+    }
+    match k.checked_sub(1).and_then(|i| p.tok(i)) {
+        Some(prev) if prev.kind == TokKind::Punct
+            && (prev.text == "." || prev.text == "!") => return None,
+        Some(prev) if prev.kind == TokKind::Ident
+            && prev.text == "fn" => return None,
+        _ => {}
+    }
+    // collect the `ident ::` qualifier chain backwards
+    let mut quals: Vec<String> = Vec::new();
+    loop {
+        let c1 = k.checked_sub(1).and_then(|i| p.tok(i));
+        let c2 = k.checked_sub(2).and_then(|i| p.tok(i));
+        let q = k.checked_sub(3).and_then(|i| p.tok(i));
+        let is_sep = c1.is_some_and(|t| t.kind == TokKind::Punct
+                                    && t.text == ":")
+            && c2.is_some_and(|t| t.kind == TokKind::Punct
+                              && t.text == ":");
+        if !is_sep {
+            break;
+        }
+        match q {
+            Some(t) if t.kind == TokKind::Ident => {
+                quals.insert(0, t.text.clone());
+                k -= 3;
+            }
+            _ => break,
+        }
+    }
+    Some((quals, name, line))
+}

@@ -83,10 +83,15 @@ impl Lexer<'_> {
                 b'/' if self.peek(1) == Some(b'*') => self.block_comment(),
                 b'"' => self.string(),
                 b'r' | b'b' => {
-                    // raw/byte string prefix, or just an identifier
-                    // that happens to start with r/b
+                    // raw/byte string prefix, raw identifier
+                    // (`r#match`), or just an identifier that happens
+                    // to start with r/b
                     if !self.raw_or_byte_string() {
-                        self.ident();
+                        if c == b'r' && self.peek(1) == Some(b'#') {
+                            self.raw_ident();
+                        } else {
+                            self.ident();
+                        }
                     }
                 }
                 b'\'' => self.char_or_lifetime(),
@@ -280,6 +285,34 @@ impl Lexer<'_> {
         self.push_at(TokKind::Char, text, line);
     }
 
+    /// `r#ident` raw identifiers lex as ONE Ident token, `r#` prefix
+    /// kept: `r#match` is an ordinary value identifier, never the
+    /// `match` keyword, and the kept prefix is what encodes that for
+    /// the sequence rules (`r#match[i]` must read as an index
+    /// expression). Only reached when `raw_or_byte_string` declined
+    /// (no `"` after the hashes), so `r#"…"#` raw strings are
+    /// unaffected; `r#` with no identifier after it falls back to a
+    /// plain `r` ident plus a `#` punct.
+    fn raw_ident(&mut self) {
+        let after = self.peek(2);
+        if !after.is_some_and(|c| c == b'_' || c.is_ascii_alphabetic())
+        {
+            self.ident();
+            return;
+        }
+        let start = self.i;
+        self.i += 2; // past r#
+        while self
+            .peek(0)
+            .is_some_and(|c| c == b'_' || c.is_ascii_alphanumeric())
+        {
+            self.i += 1;
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i])
+            .into_owned();
+        self.push_at(TokKind::Ident, text, self.line);
+    }
+
     fn ident(&mut self) {
         let start = self.i;
         while self
@@ -357,6 +390,24 @@ mod tests {
         assert!(toks.contains(&(TokKind::Lifetime, "a".into())));
         assert!(toks.contains(&(TokKind::Lifetime, "static".into())));
         assert!(toks.iter().all(|(k, _)| *k != TokKind::Char));
+    }
+
+    #[test]
+    fn raw_identifiers_are_one_token() {
+        // r#match used to desync into Ident(r) + '#' + Ident(match)
+        let toks = kinds("let r#match = r#type.clone();");
+        assert!(toks.contains(&(TokKind::Ident, "r#match".into())));
+        assert!(toks.contains(&(TokKind::Ident, "r#type".into())));
+        assert!(toks.iter().all(|(k, t)| !(*k == TokKind::Punct
+                                           && t == "#")));
+        // raw strings with hashes still lex as strings
+        let toks = kinds(r##"let s = r#"raw"#;"##);
+        assert!(toks.contains(&(TokKind::Str, "raw".into())));
+        // bare `r#` with nothing identifier-ish after it degrades to
+        // ident + punct instead of being swallowed
+        let toks = kinds("r#");
+        assert_eq!(toks[0], (TokKind::Ident, "r".into()));
+        assert_eq!(toks[1], (TokKind::Punct, "#".into()));
     }
 
     #[test]

@@ -29,17 +29,42 @@
 //! Waivers must be plain `//` comments — doc comments (`///`, `//!`)
 //! are treated as documentation and never waive.
 //!
+//! # Wave 2: whole-crate analyses
+//!
+//! On top of the local rules, [`items`] parses fn items / impl blocks
+//! (brace-tree, no full AST), [`callgraph`] builds an intra-crate
+//! call graph with heuristic resolution, and [`deep`] runs three
+//! transitive analyses over it: `no-alloc-transitive` (anything
+//! reachable from the hot path that allocates), `no-panic-transitive`
+//! (anything reachable from serving-tier entry points that can
+//! panic), and `lock-order` (inter-lock ordering cycles, guaranteed
+//! self-deadlocks, and blocking calls under a held lock). Transitive
+//! findings anchor at the *sink* function and carry the full
+//! `seed -> ... -> sink` call chain in the message; a `lint:allow`
+//! above the sink fn waives them like any local finding.
+//!
+//! Known findings live in a committed, reasoned baseline
+//! ([`baseline`], `analysis/baseline.json`): `lint --baseline` fails
+//! only on *new* findings and on stale entries, so the count only
+//! ratchets down.
+//!
 //! # Entry points
 //!
 //! [`lint_source`] lints one in-memory file (fixture-testable with
-//! any path label); [`lint_tree`] walks a directory of `.rs` files.
-//! The `lint` subcommand in `main.rs` wraps `lint_tree` and exits
-//! non-zero when findings remain.
+//! any path label); [`lint_sources`] lints a set of in-memory files
+//! as one crate (the call-graph analyses see all of them);
+//! [`lint_tree`] walks a directory of `.rs` files. The `lint`
+//! subcommand in `main.rs` wraps `lint_tree` and exits non-zero when
+//! findings remain.
 
+pub mod baseline;
+pub mod callgraph;
+pub mod deep;
+pub mod items;
 pub mod lexer;
 pub mod rules;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::fmt;
 use std::fs;
 use std::io;
@@ -49,12 +74,15 @@ use crate::util::json::Json;
 use lexer::Tok;
 pub use rules::RULE_IDS;
 
-/// One lint violation, anchored to `path:line`.
+/// One lint violation, anchored to `path:line`. Transitive findings
+/// also carry the sink `symbol` (`Type::method` / free-fn name) —
+/// the stable half of their baseline fingerprint.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Finding {
     pub path: String,
     pub line: usize,
     pub rule: &'static str,
+    pub symbol: Option<String>,
     pub message: String,
 }
 
@@ -109,6 +137,7 @@ fn parse_waivers(path: &str, toks: &[Tok]) -> Waivers {
                 path: path.to_string(),
                 line: t.line,
                 rule: "waiver-syntax",
+                symbol: None,
                 message: msg,
             });
         };
@@ -179,31 +208,83 @@ impl Waivers {
 
 /// Lint one file's source text. `path_label` decides rule scope (see
 /// [`rules`]) and is echoed in findings — fixtures can pass any label.
+/// The call-graph analyses run over this one file alone.
 pub fn lint_source(path_label: &str, src: &str) -> Vec<Finding> {
-    let toks = lexer::lex(src);
-    let ctx = rules::Ctx::new(path_label, src, &toks);
-    let mut raw = Vec::new();
-    rules::run_all(&ctx, &mut raw);
-    let waivers = parse_waivers(path_label, &toks);
-    let mut out: Vec<Finding> = raw
-        .into_iter()
-        .filter(|f| !waivers.suppresses(f))
-        .collect();
-    out.extend(waivers.problems);
+    lint_sources(&[(path_label.to_string(), src.to_string())])
+}
+
+/// Lint a set of files as one crate: local rules per file, then the
+/// call-graph analyses over every file whose path contains `src/`
+/// (fixtures with other labels stay local-only). Waivers suppress
+/// transitive findings at the *sink* — a `lint:allow` above the
+/// flagged function.
+pub fn lint_sources(files: &[(String, String)]) -> Vec<Finding> {
+    let mut out: Vec<Finding> = Vec::new();
+    let mut waivers_by_path: HashMap<String, Waivers> = HashMap::new();
+    let mut fns: Vec<items::FnItem> = Vec::new();
+    let mut hot_masks: HashMap<String, Vec<bool>> = HashMap::new();
+    let mut file_idents: HashMap<String, HashSet<String>> =
+        HashMap::new();
+    let mut deep_inputs: Vec<(String, Vec<Tok>)> = Vec::new();
+
+    for (path, src) in files {
+        let toks = lexer::lex(src);
+        let ctx = rules::Ctx::new(path, src, &toks);
+        let mut raw = Vec::new();
+        rules::run_all(&ctx, &mut raw);
+        let waivers = parse_waivers(path, &toks);
+        out.extend(
+            raw.into_iter().filter(|f| !waivers.suppresses(f)),
+        );
+        out.extend(waivers.problems.iter().cloned());
+        waivers_by_path.insert(path.clone(), waivers);
+
+        // only crate sources join the call graph — test fixtures and
+        // `tests/` trees would otherwise pollute resolution
+        if path.contains("src/") {
+            let n_lines = src.lines().count();
+            let fi = items::parse_items(path, &toks, n_lines);
+            if let Some(mask) = fi.hot_mask {
+                hot_masks.insert(path.clone(), mask);
+            }
+            file_idents.insert(
+                path.clone(),
+                fi.idents.into_iter().collect(),
+            );
+            fns.extend(fi.fns);
+            deep_inputs.push((path.clone(), toks));
+        }
+    }
+
+    if !fns.is_empty() {
+        let graph = callgraph::CallGraph::new(fns, file_idents);
+        let mut deep_raw = Vec::new();
+        deep::deep_alloc(&graph, &hot_masks, &mut deep_raw);
+        deep::deep_panic(&graph, &mut deep_raw);
+        deep::deep_locks(&graph, &mut deep_raw);
+        deep::proto_client_dispatch(&deep_inputs, &mut deep_raw);
+        out.extend(deep_raw.into_iter().filter(|f| {
+            !waivers_by_path
+                .get(&f.path)
+                .is_some_and(|w| w.suppresses(f))
+        }));
+    }
+
     out.sort_by(|a, b| {
-        (a.line, a.rule, &a.message).cmp(&(b.line, b.rule, &b.message))
+        (&a.path, a.line, a.rule, &a.message)
+            .cmp(&(&b.path, b.line, b.rule, &b.message))
     });
     out
 }
 
 /// Walk `root` for `.rs` files (skipping `target/`, `.git/`, and
-/// `vendor/`) and lint each one. Paths in findings are relative to
-/// `root`, with `/` separators.
+/// `vendor/`) and lint them as one crate. Paths in findings are
+/// relative to `root`, with `/` separators.
 pub fn lint_tree(root: &Path) -> io::Result<Vec<Finding>> {
     let mut files = Vec::new();
     collect_rs_files(root, &mut files)?;
     files.sort();
-    let mut out = Vec::new();
+    let mut sources = Vec::new();
     for file in &files {
         let src = fs::read_to_string(file)?;
         let rel = file
@@ -213,9 +294,9 @@ pub fn lint_tree(root: &Path) -> io::Result<Vec<Finding>> {
             .map(|c| c.as_os_str().to_string_lossy())
             .collect::<Vec<_>>()
             .join("/");
-        out.extend(lint_source(&rel, &src));
+        sources.push((rel, src));
     }
-    Ok(out)
+    Ok(lint_sources(&sources))
 }
 
 fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>)
@@ -247,6 +328,10 @@ pub fn findings_to_json(findings: &[Finding]) -> Json {
             m.insert("line".to_string(), Json::Num(f.line as f64));
             m.insert("rule".to_string(),
                      Json::Str(f.rule.to_string()));
+            if let Some(sym) = &f.symbol {
+                m.insert("symbol".to_string(),
+                         Json::Str(sym.clone()));
+            }
             m.insert("message".to_string(),
                      Json::Str(f.message.clone()));
             Json::Obj(m)

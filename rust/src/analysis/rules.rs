@@ -20,18 +20,29 @@
 //! | unsafe-hygiene       | every file                                |
 //! | msrv-guard           | every file (tests included — they compile |
 //! |                      | under the pinned MSRV too)                |
-//! | proto-exhaustiveness | `coordinator/net/proto.rs`                |
+//! | proto-exhaustiveness | `coordinator/net/proto.rs` (decoder       |
+//! |                      | coverage + kind-value uniqueness here;    |
+//! |                      | the cross-file client-dispatch half lives |
+//! |                      | in [`super::deep`])                       |
+//!
+//! Three more rule ids — `no-alloc-transitive`, `no-panic-transitive`,
+//! and `lock-order` — are whole-crate analyses over the call graph;
+//! they live in [`super::deep`] but share this waiver namespace.
 
 use super::lexer::{Tok, TokKind};
 use super::Finding;
 
-/// Rule ids a `// lint:allow(...)` waiver may target.
-pub const RULE_IDS: [&str; 5] = [
+/// Rule ids a `// lint:allow(...)` waiver may target. The last three
+/// are the call-graph analyses in [`super::deep`].
+pub const RULE_IDS: [&str; 8] = [
     "no-alloc-hot-path",
     "no-panic-serving",
     "unsafe-hygiene",
     "msrv-guard",
     "proto-exhaustiveness",
+    "no-alloc-transitive",
+    "no-panic-transitive",
+    "lock-order",
 ];
 
 /// Modules whose steady-state paths must not allocate. `nn/plan.rs`,
@@ -39,7 +50,7 @@ pub const RULE_IDS: [&str; 5] = [
 /// convenience (alloc-heavy) code with forward-path kernels, so they
 /// scope the rule with `// lint:hot-path(begin)` / `(end)` markers;
 /// a listed file without markers is hot in its entirety.
-const HOT_PATH_FILES: [&str; 7] = [
+pub const HOT_PATH_FILES: [&str; 7] = [
     "nn/backend/kernel.rs",
     "nn/backend/simd.rs",
     "nn/plan.rs",
@@ -82,7 +93,7 @@ const MSRV_DENY_PATHS: [(&str, &str, &str); 1] =
 
 /// Keywords that, before a `[`, mean the bracket is a pattern or type,
 /// not an index expression.
-const KEYWORDS: [&str; 30] = [
+pub const KEYWORDS: [&str; 30] = [
     "as", "async", "await", "box", "break", "const", "continue",
     "crate", "dyn", "else", "enum", "fn", "for", "if", "impl", "in",
     "let", "loop", "match", "mod", "move", "mut", "pub", "ref",
@@ -150,7 +161,8 @@ impl<'a> Ctx<'a> {
 }
 
 /// Mark lines inside `#[cfg(test)] <item> { ... }` bodies.
-fn cfg_test_lines(toks: &[Tok], code: &[usize], n: usize) -> Vec<bool> {
+pub(crate) fn cfg_test_lines(toks: &[Tok], code: &[usize], n: usize)
+                             -> Vec<bool> {
     let mut mask = vec![false; n];
     let tok = |ci: usize| -> Option<&Tok> {
         code.get(ci).map(|&i| &toks[i])
@@ -198,8 +210,8 @@ fn cfg_test_lines(toks: &[Tok], code: &[usize], n: usize) -> Vec<bool> {
 
 /// Given the code-position of a `{`, return (line of `{`, line of the
 /// matching `}`); unbalanced input closes at the last token.
-fn brace_span(toks: &[Tok], code: &[usize], open_ci: usize)
-              -> (usize, usize) {
+pub(crate) fn brace_span(toks: &[Tok], code: &[usize], open_ci: usize)
+                         -> (usize, usize) {
     let tok = |ci: usize| -> Option<&Tok> {
         code.get(ci).map(|&i| &toks[i])
     };
@@ -226,8 +238,8 @@ fn brace_span(toks: &[Tok], code: &[usize], open_ci: usize)
 
 /// Alloc-rule line mask for a designated hot-path file: whole file,
 /// unless `// lint:hot-path(begin)` / `(end)` markers carve regions.
-fn hot_path_lines(path: &str, toks: &[Tok], n: usize)
-                  -> Option<Vec<bool>> {
+pub(crate) fn hot_path_lines(path: &str, toks: &[Tok], n: usize)
+                             -> Option<Vec<bool>> {
     if !HOT_PATH_FILES.iter().any(|f| path.ends_with(f)) {
         return None;
     }
@@ -263,6 +275,7 @@ fn push(out: &mut Vec<Finding>, ctx: &Ctx, line: usize,
         path: ctx.path.to_string(),
         line,
         rule,
+        symbol: None,
         message,
     });
 }
@@ -393,10 +406,15 @@ fn no_panic_serving(ctx: &Ctx, out: &mut Vec<Finding>) {
 /// (prev `#`), `vec![` (prev `!`), slice patterns (prev `let`/`,`),
 /// and type positions (prev `:`/`&`/`<`/`(`/`=`/`>`) all miss.
 fn is_index_expr(ctx: &Ctx, ci: usize) -> bool {
-    let prev = match ci.checked_sub(1).and_then(|p| ctx.ct(p)) {
-        Some(t) => t,
-        None => return false,
-    };
+    match ci.checked_sub(1).and_then(|p| ctx.ct(p)) {
+        Some(prev) => index_expr_prev(prev),
+        None => false,
+    }
+}
+
+/// Shared with [`super::items`]: does a token ending a value
+/// expression precede this `[`?
+pub(crate) fn index_expr_prev(prev: &Tok) -> bool {
     match prev.kind {
         TokKind::Ident => {
             !KEYWORDS.contains(&prev.text.as_str())
@@ -580,13 +598,17 @@ fn msrv_guard(ctx: &Ctx, out: &mut Vec<Finding>) {
 /// Rule 5: every `KIND_*` frame constant declared in
 /// `coordinator/net/proto.rs` must appear inside the `read_frame`
 /// decoder body — a new frame kind cannot be added without teaching
-/// the decoder about it.
+/// the decoder about it — and no two kinds may share a wire value
+/// (a collision would make the decoder misroute one of them).
+/// The third leg — every server→client kind must be decodable by the
+/// client — needs the client's file too and lives in [`super::deep`].
 fn proto_exhaustiveness(ctx: &Ctx, out: &mut Vec<Finding>) {
     if !ctx.path.ends_with("coordinator/net/proto.rs") {
         return;
     }
-    // collect `const KIND_X: u8 = ...` declarations
+    // collect `const KIND_X: u8 = <value>` declarations
     let mut kinds: Vec<(String, usize)> = Vec::new();
+    let mut values: Vec<(String, String, usize)> = Vec::new();
     for ci in 0..ctx.code.len() {
         if ctx.is_ident(ci, "const") {
             if let Some(t) = ctx.ct(ci + 1) {
@@ -594,8 +616,36 @@ fn proto_exhaustiveness(ctx: &Ctx, out: &mut Vec<Finding>) {
                     && t.text.starts_with("KIND_")
                 {
                     kinds.push((t.text.to_string(), t.line));
+                    // the value is the first Num token before `;`
+                    let name = t.text.to_string();
+                    let line = t.line;
+                    let mut j = ci + 2;
+                    while let Some(v) = ctx.ct(j) {
+                        if v.kind == TokKind::Punct && v.text == ";" {
+                            break;
+                        }
+                        if v.kind == TokKind::Num {
+                            values.push((name.clone(),
+                                         v.text.to_string(), line));
+                            break;
+                        }
+                        j += 1;
+                    }
                 }
             }
+        }
+    }
+    // wire-value uniqueness: a duplicated value silently shadows the
+    // other kind in every `match` on the header byte
+    for (i, (name, value, line)) in values.iter().enumerate() {
+        if let Some((prev, _, prev_line)) = values[..i]
+            .iter()
+            .find(|(_, v, _)| v == value)
+        {
+            push(out, ctx, *line, "proto-exhaustiveness",
+                 format!("frame kind `{name}` reuses wire value \
+                          {value} already taken by `{prev}` (line \
+                          {prev_line}); kind values must be unique"));
         }
     }
     if kinds.is_empty() {

@@ -59,6 +59,47 @@ impl DaemonPaths {
         self.dir.join("serve.log")
     }
 
+    /// `<dir>/serve.log.<n>` — rotated generations (1 = newest).
+    pub fn rotated_log(&self, n: u32) -> PathBuf {
+        self.dir.join(format!("serve.log.{n}"))
+    }
+
+    /// Size-rotate `serve.log` before (re)opening it: when the live
+    /// log has reached [`LOG_ROTATE_BYTES`], shift
+    /// `serve.log.2 -> serve.log.3`, `serve.log.1 -> serve.log.2`,
+    /// `serve.log -> serve.log.1` ([`LOG_KEEP_GENERATIONS`] kept, the
+    /// oldest dropped). Returns whether a rotation happened. A
+    /// missing log is simply "nothing to rotate", never an error.
+    pub fn rotate_log(&self) -> Result<bool> {
+        self.rotate_log_over(LOG_ROTATE_BYTES)
+    }
+
+    /// [`DaemonPaths::rotate_log`] with an explicit threshold
+    /// (tests use a small one; `0` forces rotation of any
+    /// existing log).
+    pub fn rotate_log_over(&self, max_bytes: u64) -> Result<bool> {
+        let live = self.log_file();
+        let len = match std::fs::metadata(&live) {
+            Ok(m) => m.len(),
+            Err(_) => return Ok(false),
+        };
+        if len < max_bytes {
+            return Ok(false);
+        }
+        // oldest generation falls off; missing intermediates are fine
+        let _ = std::fs::remove_file(
+            self.rotated_log(LOG_KEEP_GENERATIONS));
+        let mut n = LOG_KEEP_GENERATIONS;
+        while n > 1 {
+            let _ = std::fs::rename(self.rotated_log(n - 1),
+                                    self.rotated_log(n));
+            n -= 1;
+        }
+        std::fs::rename(&live, self.rotated_log(1)).with_context(
+            || format!("rotating {}", live.display()))?;
+        Ok(true)
+    }
+
     /// Create the run directory (and parents).
     pub fn ensure_dir(&self) -> Result<()> {
         std::fs::create_dir_all(&self.dir).with_context(|| {
@@ -66,6 +107,12 @@ impl DaemonPaths {
         })
     }
 }
+
+/// Rotate `serve.log` once it reaches 10 MB.
+pub const LOG_ROTATE_BYTES: u64 = 10 << 20;
+
+/// Rotated generations kept on disk (`serve.log.1..=.3`).
+pub const LOG_KEEP_GENERATIONS: u32 = 3;
 
 /// Is `pid` a live process? Linux: `/proc/<pid>` exists. Other unix:
 /// `kill -0` probes it. Anywhere else the probe errs toward *stale*
@@ -403,6 +450,49 @@ mod tests {
                                 ..state };
         bare.write(&path).unwrap();
         assert_eq!(ServeState::load(&path).unwrap(), bare);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn log_rotation_keeps_three_generations() {
+        let dir = tmp("rotate");
+        let _ = std::fs::remove_dir_all(&dir);
+        let paths = DaemonPaths::new(&dir);
+        paths.ensure_dir().unwrap();
+        // no log at all: nothing to rotate, no error
+        assert!(!paths.rotate_log_over(0).unwrap());
+        // under the threshold: untouched
+        std::fs::write(paths.log_file(), "gen-a").unwrap();
+        assert!(!paths.rotate_log_over(1024).unwrap());
+        assert!(paths.log_file().exists());
+        // at/over the threshold: shifted to .1
+        assert!(paths.rotate_log_over(5).unwrap());
+        assert!(!paths.log_file().exists());
+        assert_eq!(std::fs::read_to_string(paths.rotated_log(1))
+                       .unwrap(),
+                   "gen-a");
+        // two more rotations push the oldest down the chain
+        std::fs::write(paths.log_file(), "gen-b").unwrap();
+        assert!(paths.rotate_log_over(0).unwrap());
+        std::fs::write(paths.log_file(), "gen-c").unwrap();
+        assert!(paths.rotate_log_over(0).unwrap());
+        assert_eq!(std::fs::read_to_string(paths.rotated_log(1))
+                       .unwrap(),
+                   "gen-c");
+        assert_eq!(std::fs::read_to_string(paths.rotated_log(2))
+                       .unwrap(),
+                   "gen-b");
+        assert_eq!(std::fs::read_to_string(paths.rotated_log(3))
+                       .unwrap(),
+                   "gen-a");
+        // a fourth rotation drops the oldest generation
+        std::fs::write(paths.log_file(), "gen-d").unwrap();
+        assert!(paths.rotate_log_over(0).unwrap());
+        assert_eq!(std::fs::read_to_string(paths.rotated_log(3))
+                       .unwrap(),
+                   "gen-b");
+        assert!(!paths.rotated_log(4).exists(),
+                "only three generations are kept");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

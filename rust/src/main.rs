@@ -28,8 +28,12 @@
 //!             (needs --features pjrt)
 //!   lint      in-tree invariant linter (analysis::lint_tree): panic-
 //!             free serving, zero-alloc hot path, unsafe hygiene,
-//!             MSRV guard, protocol exhaustiveness; non-zero exit on
-//!             findings — the CI `lint-invariants` job runs this
+//!             MSRV guard, protocol exhaustiveness, plus call-graph
+//!             analyses (transitive alloc/panic reachability, lock-
+//!             order deadlock detection) ratcheted against the
+//!             committed analysis/baseline.json — the CI
+//!             `lint-invariants` job runs this with --baseline and
+//!             --format sarif
 
 use std::path::PathBuf;
 use std::process::{Command, Stdio};
@@ -139,8 +143,10 @@ fn print_help() {
          \x20 tsne     [--backend ...] [--features N] [--csv PATH]\n\
          \x20 heatmap  [--hw N --cin N]\n\
          \x20 golden                                                 (pjrt)\n\
-         \x20 lint     [--path DIR] [--json] [--out FILE]  invariant \
-         linter\n\n\
+         \x20 lint     [--path DIR] [--format text|json|sarif] \
+         [--out FILE]\n\
+         \x20          [--baseline FILE] [--write-baseline FILE]  \
+         invariant linter\n\n\
          Common: --artifacts DIR (default ./artifacts)\n\
          Default build serves on the rust-native CPU backends; build \
          with --features pjrt for the AOT artifact runtime."
@@ -420,6 +426,11 @@ fn serve_supervise(args: &Args) -> Result<()> {
     let exit = supervisor::supervise(
         &cfg,
         |generation| {
+            // size-rotate before each (re)spawn so a crash-looping
+            // child can't grow serve.log without bound
+            if let Err(e) = paths.rotate_log() {
+                eprintln!("supervisor: log rotation failed: {e}");
+            }
             let log = std::fs::OpenOptions::new()
                 .create(true)
                 .append(true)
@@ -1402,32 +1413,124 @@ fn cmd_golden(_args: &Args) -> Result<()> {
     Err(pjrt_unavailable("golden"))
 }
 
-/// `lint [--path DIR] [--json] [--out FILE]` — run the in-tree
+/// `lint [--path DIR] [--format text|json|sarif] [--out FILE]
+/// [--baseline FILE] [--write-baseline FILE]` — run the in-tree
 /// invariant linter (`analysis::lint_tree`) and exit non-zero when
-/// findings remain. `--json` prints the machine-readable report to
-/// stdout; `--out FILE` writes the same report to disk regardless
-/// (the CI `lint-invariants` job uploads it as an artifact while the
-/// exit code stays blocking).
+/// findings remain. `--json` is an alias for `--format json`;
+/// `--out FILE` writes the selected report to disk regardless (the
+/// CI `lint-invariants` job uploads `lint.sarif` as an artifact
+/// while the exit code stays blocking).
+///
+/// With `--baseline FILE` the exit code ratchets instead: only *new*
+/// findings (not fingerprinted in the baseline), *stale* entries
+/// (matching nothing — the tree improved, refresh the file), or
+/// entries without a real reason fail. `--write-baseline FILE`
+/// regenerates the baseline from the current findings, carrying
+/// existing reasons over and stamping new entries `UNJUSTIFIED` so
+/// they cannot land without a human-written justification.
 fn cmd_lint(args: &Args) -> Result<()> {
+    use wino_adder::analysis::baseline;
     let root = PathBuf::from(args.get_or("path", "."));
     let findings = wino_adder::analysis::lint_tree(&root)
         .map_err(|e| anyhow!("lint walk of {} failed: {e}",
                              root.display()))?;
-    let report = wino_adder::analysis::findings_to_json(&findings)
-        .dump();
+    let format = if args.has("json") {
+        "json"
+    } else {
+        args.get_or("format", "text")
+    };
+    let report = match format {
+        "json" => Some(
+            wino_adder::analysis::findings_to_json(&findings).dump(),
+        ),
+        "sarif" => Some(baseline::to_sarif(&findings).dump()),
+        "text" => None,
+        other => {
+            return Err(anyhow!(
+                "lint: unknown --format `{other}` \
+                 (expected text, json, or sarif)"
+            ))
+        }
+    };
     if let Some(out) = args.get("out") {
-        std::fs::write(out, &report)
+        let text = report.clone().unwrap_or_else(|| {
+            wino_adder::analysis::findings_to_json(&findings).dump()
+        });
+        std::fs::write(out, &text)
             .map_err(|e| anyhow!("writing {out}: {e}"))?;
     }
-    if args.has("json") {
-        println!("{report}");
-    } else {
-        for f in &findings {
-            println!("{f}");
+    match &report {
+        Some(r) => println!("{r}"),
+        None => {
+            for f in &findings {
+                println!("{f}");
+            }
         }
     }
+
+    if let Some(path) = args.get("write-baseline") {
+        // carry reasons over from the file being rewritten (or from
+        // --baseline when writing to a fresh location)
+        let prior_text = std::fs::read_to_string(path).ok().or_else(
+            || args.get("baseline")
+                .and_then(|b| std::fs::read_to_string(b).ok()),
+        );
+        let prior = prior_text
+            .as_deref()
+            .and_then(|t| baseline::parse(t).ok())
+            .unwrap_or_default();
+        let doc = baseline::write(&findings, &prior);
+        std::fs::write(path, doc)
+            .map_err(|e| anyhow!("writing {path}: {e}"))?;
+        eprintln!(
+            "lint: baseline written to {path} ({} finding(s))",
+            findings.len()
+        );
+        return Ok(());
+    }
+
+    if let Some(bpath) = args.get("baseline") {
+        let text = std::fs::read_to_string(bpath)
+            .map_err(|e| anyhow!("reading baseline {bpath}: {e}"))?;
+        let entries =
+            baseline::parse(&text).map_err(|e| anyhow!("lint: {e}"))?;
+        let r = baseline::apply(&findings, &entries);
+        for f in &r.fresh {
+            eprintln!("lint: NEW {f}");
+        }
+        for e in &r.stale {
+            eprintln!(
+                "lint: STALE baseline entry `{}` matches nothing — \
+                 the tree improved; refresh with \
+                 --write-baseline {bpath}",
+                e.key()
+            );
+        }
+        for e in &r.unjustified {
+            eprintln!(
+                "lint: UNJUSTIFIED baseline entry `{}` — replace the \
+                 placeholder with a reasoned justification",
+                e.key()
+            );
+        }
+        if r.clean() {
+            eprintln!(
+                "lint: clean vs baseline ({} baselined, 0 new)",
+                r.matched
+            );
+            return Ok(());
+        }
+        return Err(anyhow!(
+            "lint: {} new, {} stale, {} unjustified vs baseline \
+             {bpath}",
+            r.fresh.len(),
+            r.stale.len(),
+            r.unjustified.len()
+        ));
+    }
+
     if findings.is_empty() {
-        if !args.has("json") {
+        if format == "text" {
             println!("lint: clean ({} ok)", root.display());
         }
         Ok(())

@@ -55,7 +55,9 @@ impl Args {
             if let Some(name) = a.strip_prefix("--") {
                 match it.peek() {
                     Some(v) if !v.starts_with("--") => {
-                        out.flags.insert(name.to_string(), it.next().unwrap());
+                        if let Some(v) = it.next() {
+                            out.flags.insert(name.to_string(), v);
+                        }
                     }
                     _ => out.switches.push(name.to_string()),
                 }

@@ -1,0 +1,379 @@
+//! Fixture tests for the call-graph analyses (`analysis/items`,
+//! `analysis/callgraph`, `analysis/deep`) and the findings baseline
+//! ratchet (`analysis/baseline`).
+//!
+//! Multi-file fixtures go through [`lint_sources`] with synthetic
+//! path labels, since both seeding (hot-path files, serving dirs) and
+//! sink exemptions are decided by path shape. Graph-shape assertions
+//! (edges, unresolved counts) use [`parse_items`] + [`CallGraph`]
+//! directly.
+
+use std::collections::{HashMap, HashSet};
+
+use wino_adder::analysis::callgraph::CallGraph;
+use wino_adder::analysis::items::parse_items;
+use wino_adder::analysis::lexer::lex;
+use wino_adder::analysis::{baseline, lint_sources, Finding};
+
+fn run(files: &[(&str, &str)]) -> Vec<Finding> {
+    let owned: Vec<(String, String)> = files
+        .iter()
+        .map(|(p, s)| (p.to_string(), s.to_string()))
+        .collect();
+    lint_sources(&owned)
+}
+
+// ------------------------------------------------------- call graph
+
+/// Direct resolution and unresolved accounting, on the graph itself:
+/// `f` calls in-crate `g` (one resolved edge) and `mystery_external`
+/// (counted unresolved, not silently dropped).
+#[test]
+fn callgraph_resolves_direct_calls_and_counts_unresolved() {
+    let src = "pub fn f() -> u32 { mystery_external(); g() }\n\
+               pub fn g() -> u32 { 7 }\n";
+    let toks = lex(src);
+    let items = parse_items("src/nn/x.rs", &toks, src.lines().count());
+    assert_eq!(items.fns.len(), 2);
+    assert_eq!(items.fns[0].name, "f");
+    let mut idents = HashMap::new();
+    idents.insert(
+        "src/nn/x.rs".to_string(),
+        items.idents.iter().cloned().collect::<HashSet<_>>(),
+    );
+    let g = CallGraph::new(items.fns, idents);
+    assert_eq!(g.resolved_edges, 1, "exactly f -> g");
+    assert!(g.edges.get(&0).is_some_and(|s| s.contains(&1)));
+    assert_eq!(g.unresolved, 1, "mystery_external is counted");
+}
+
+// ------------------------------------------- transitive alloc / panic
+
+/// An allocation two files away from a hot-path module is reported at
+/// the sink, with the call chain in the message.
+#[test]
+fn transitive_alloc_reachable_from_hot_path_fires() {
+    let f = run(&[
+        ("src/nn/plan.rs",
+         "pub fn forward() -> usize { helper_scratch() }\n"),
+        ("src/nn/scratch.rs",
+         "pub fn helper_scratch() -> usize {\n    \
+              let v: Vec<f32> = Vec::new();\n    v.len()\n}\n"),
+    ]);
+    assert_eq!(f.len(), 1, "findings: {f:?}");
+    assert_eq!(f[0].rule, "no-alloc-transitive");
+    assert_eq!(f[0].path, "src/nn/scratch.rs");
+    assert_eq!(f[0].symbol.as_deref(), Some("helper_scratch"));
+    assert!(f[0].message.contains("forward -> helper_scratch"));
+    assert!(f[0].message.contains("Vec::new"));
+}
+
+/// A panic sink outside the serving dirs, reached from a serving
+/// entry point, is reported transitively — the local rule never sees
+/// it, the call-graph rule must.
+#[test]
+fn transitive_panic_crosses_files_from_serving_entry() {
+    let f = run(&[
+        ("src/coordinator/fake_srv.rs",
+         "pub fn serve_entry(o: Option<u32>) -> u32 {\n    \
+              helper_unwrap(o)\n}\n"),
+        ("src/nn/helper_fix.rs",
+         "pub fn helper_unwrap(o: Option<u32>) -> u32 {\n    \
+              o.unwrap()\n}\n"),
+    ]);
+    assert_eq!(f.len(), 1, "findings: {f:?}");
+    assert_eq!(f[0].rule, "no-panic-transitive");
+    assert_eq!(f[0].path, "src/nn/helper_fix.rs");
+    assert_eq!(f[0].symbol.as_deref(), Some("helper_unwrap"));
+    assert!(f[0].message.contains("serve_entry -> helper_unwrap"));
+}
+
+/// Trait-object dispatch fans out to in-crate impls: the panic is
+/// reached only through `dyn VisTrait` -> `VisImpl::vis_run`.
+#[test]
+fn trait_dispatch_fans_out_to_visible_impls() {
+    let f = run(&[
+        ("src/engine/disp.rs",
+         "pub trait VisTrait {\n    fn vis_run(&self) -> u32;\n}\n\
+          pub struct VisImpl;\n\
+          impl VisTrait for VisImpl {\n    \
+              fn vis_run(&self) -> u32 { helper_boom(None) }\n}\n\
+          pub fn entry(b: &dyn VisTrait) -> u32 { b.vis_run() }\n"),
+        ("src/nn/boom.rs",
+         "pub fn helper_boom(o: Option<u32>) -> u32 {\n    \
+              o.unwrap()\n}\n"),
+    ]);
+    assert_eq!(f.len(), 1, "findings: {f:?}");
+    assert_eq!(f[0].rule, "no-panic-transitive");
+    assert_eq!(f[0].symbol.as_deref(), Some("helper_boom"));
+    assert!(f[0].message.contains("VisImpl::vis_run"));
+}
+
+/// The visibility filter: a method call can only dispatch to impls
+/// whose type or trait the calling file names. Here the caller never
+/// mentions `VisImpl`/`VisTrait`, so the panic stays unreachable.
+#[test]
+fn method_dispatch_is_filtered_by_visible_types() {
+    let f = run(&[
+        ("src/engine/no_vis.rs",
+         "pub fn entry2(h: u32) -> u32 { h.vis_run() }\n"),
+        ("src/nn/impls2.rs",
+         "pub trait VisTrait {\n    fn vis_run(&self) -> u32;\n}\n\
+          pub struct VisImpl;\n\
+          impl VisTrait for VisImpl {\n    \
+              fn vis_run(&self) -> u32 { helper_boom2(None) }\n}\n\
+          pub fn helper_boom2(o: Option<u32>) -> u32 {\n    \
+              o.unwrap()\n}\n"),
+    ]);
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+// ------------------------------------------------------- lock order
+
+/// Two functions taking the same pair of locks in opposite orders is
+/// the classic AB/BA deadlock; the cycle is reported once.
+#[test]
+fn lock_order_cycle_fires_on_ab_ba() {
+    let f = run(&[(
+        "src/nn/locks_fix.rs",
+        "use std::sync::Mutex;\n\
+         pub fn first(a: &Mutex<u32>, b: &Mutex<u32>) {\n    \
+             let ga = a.lock();\n    let gb = b.lock();\n    \
+             drop(gb);\n    drop(ga);\n}\n\
+         pub fn second(a: &Mutex<u32>, b: &Mutex<u32>) {\n    \
+             let gb = b.lock();\n    let ga = a.lock();\n    \
+             drop(ga);\n    drop(gb);\n}\n",
+    )]);
+    assert_eq!(f.len(), 1, "findings: {f:?}");
+    assert_eq!(f[0].rule, "lock-order");
+    assert_eq!(f[0].symbol.as_deref(), Some("a -> b -> a"));
+    assert!(f[0].message.contains("lock-order cycle a -> b -> a"));
+}
+
+/// Same locks, same order in both functions: an order edge exists but
+/// no cycle — the analysis stays silent.
+#[test]
+fn lock_order_consistent_acquisition_is_silent() {
+    let f = run(&[(
+        "src/nn/locks_ok.rs",
+        "use std::sync::Mutex;\n\
+         pub fn first(a: &Mutex<u32>, b: &Mutex<u32>) {\n    \
+             let ga = a.lock();\n    let gb = b.lock();\n    \
+             drop(gb);\n    drop(ga);\n}\n\
+         pub fn second(a: &Mutex<u32>, b: &Mutex<u32>) {\n    \
+             let ga = a.lock();\n    let gb = b.lock();\n    \
+             drop(gb);\n    drop(ga);\n}\n",
+    )]);
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+/// `.join()` while a guard is live blocks the whole lock.
+#[test]
+fn blocking_call_under_held_lock_fires() {
+    let f = run(&[(
+        "src/nn/lock_join.rs",
+        "use std::sync::Mutex;\nuse std::thread::JoinHandle;\n\
+         pub fn waiter(m: &Mutex<u32>, t: JoinHandle<()>) {\n    \
+             let g = m.lock();\n    let _ = t.join();\n    \
+             drop(g);\n}\n",
+    )]);
+    assert_eq!(f.len(), 1, "findings: {f:?}");
+    assert_eq!(f[0].rule, "lock-order");
+    assert!(f[0].message.contains("blocking `.join()`"));
+    assert!(f[0].message.contains("holding lock `m`"));
+}
+
+/// The same join is fine once the guard's scope has closed — guard
+/// lifetimes follow braces, not just explicit `drop`.
+#[test]
+fn blocking_after_guard_scope_closes_is_silent() {
+    let f = run(&[(
+        "src/nn/lock_scope.rs",
+        "use std::sync::Mutex;\nuse std::thread::JoinHandle;\n\
+         pub fn waiter2(m: &Mutex<u32>, t: JoinHandle<()>) {\n    \
+             {\n        let g = m.lock();\n    }\n    \
+             let _ = t.join();\n}\n",
+    )]);
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+/// Re-acquiring a lock already held in the same body is a guaranteed
+/// self-deadlock, reported even without any cycle.
+#[test]
+fn self_deadlock_reacquire_fires() {
+    let f = run(&[(
+        "src/nn/lock_self.rs",
+        "use std::sync::Mutex;\n\
+         pub fn again(m: &Mutex<u32>) {\n    \
+             let g1 = m.lock();\n    let g2 = m.lock();\n    \
+             drop(g2);\n    drop(g1);\n}\n",
+    )]);
+    assert_eq!(f.len(), 1, "findings: {f:?}");
+    assert_eq!(f[0].rule, "lock-order");
+    assert!(f[0].message.contains("guaranteed self-deadlock"));
+}
+
+// --------------------------------------------- client-side dispatch
+
+const PROTO_SRC: &str = "\
+/// server->client reply frame.\n\
+pub const KIND_OK: u8 = 1;\n\
+/// server->client error frame.\n\
+pub const KIND_ERR: u8 = 2;\n\
+pub enum Frame {\n    Ok,\n    Err,\n}\n\
+impl Frame {\n    pub fn kind(&self) -> u8 {\n        \
+match self {\n            Frame::Ok => KIND_OK,\n            \
+Frame::Err => KIND_ERR,\n        }\n    }\n}\n";
+
+/// A server->client frame kind whose variant the client never
+/// matches is a reply the client would drop on the floor.
+#[test]
+fn proto_client_missing_dispatch_arm_fires() {
+    let f = run(&[
+        ("src/net/proto.rs", PROTO_SRC),
+        ("src/net/client.rs",
+         "pub fn handle(f: &Frame) -> bool {\n    \
+              match f {\n        Frame::Ok => true,\n        \
+              _ => false,\n    }\n}\n"),
+    ]);
+    assert_eq!(f.len(), 1, "findings: {f:?}");
+    assert_eq!(f[0].rule, "proto-exhaustiveness");
+    assert_eq!(f[0].path, "src/net/proto.rs");
+    assert!(f[0].message.contains("never matches `Frame::Err`"));
+}
+
+/// Both server->client variants matched: silent.
+#[test]
+fn proto_client_full_dispatch_is_silent() {
+    let f = run(&[
+        ("src/net/proto.rs", PROTO_SRC),
+        ("src/net/client.rs",
+         "pub fn handle(f: &Frame) -> bool {\n    \
+              match f {\n        Frame::Ok => true,\n        \
+              Frame::Err => false,\n    }\n}\n"),
+    ]);
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+// --------------------------------------------------------- baseline
+
+fn finding(rule: &'static str, path: &str, symbol: &str) -> Finding {
+    Finding {
+        path: path.to_string(),
+        line: 5,
+        rule,
+        symbol: Some(symbol.to_string()),
+        message: format!("`{symbol}` test finding"),
+    }
+}
+
+fn entry(rule: &str, path: &str, symbol: &str, reason: &str)
+         -> baseline::Entry {
+    baseline::Entry {
+        rule: rule.to_string(),
+        path: path.to_string(),
+        symbol: symbol.to_string(),
+        reason: reason.to_string(),
+    }
+}
+
+/// A justified baseline entry absorbs its finding; fingerprints
+/// ignore the `rust/` path prefix difference between a repo-root run
+/// and a crate-root run.
+#[test]
+fn baseline_matches_justified_entries() {
+    let fs = [finding("no-panic-transitive", "rust/src/nn/a.rs",
+                      "X::y")];
+    let es = [entry("no-panic-transitive", "src/nn/a.rs", "X::y",
+                    "bounds pinned by plan geometry")];
+    let r = baseline::apply(&fs, &es);
+    assert!(r.clean(), "{:?}", r);
+    assert_eq!(r.matched, 1);
+}
+
+/// A finding missing from the baseline is fresh (the tree got worse);
+/// an entry matching nothing is stale (the baseline must shrink).
+/// Either one fails the ratchet.
+#[test]
+fn baseline_ratchets_on_fresh_and_stale() {
+    let fs = [finding("no-panic-transitive", "src/nn/a.rs", "X::y")];
+    let r = baseline::apply(&fs, &[]);
+    assert!(!r.clean());
+    assert_eq!(r.fresh.len(), 1);
+
+    let es = [entry("no-panic-transitive", "src/nn/gone.rs",
+                    "Old::fixed", "was real once")];
+    let r = baseline::apply(&[], &es);
+    assert!(!r.clean());
+    assert_eq!(r.stale.len(), 1);
+    assert_eq!(r.stale[0].symbol, "Old::fixed");
+}
+
+/// The `UNJUSTIFIED` placeholder `--write-baseline` emits (and an
+/// empty reason) are rejected until a human writes the justification.
+#[test]
+fn baseline_rejects_unjustified_reasons() {
+    let fs = [
+        finding("no-panic-transitive", "src/nn/a.rs", "X::y"),
+        finding("no-alloc-transitive", "src/nn/b.rs", "Z::w"),
+    ];
+    let es = [
+        entry("no-panic-transitive", "src/nn/a.rs", "X::y",
+              "UNJUSTIFIED: replace me"),
+        entry("no-alloc-transitive", "src/nn/b.rs", "Z::w", "  "),
+    ];
+    let r = baseline::apply(&fs, &es);
+    assert_eq!(r.matched, 2);
+    assert_eq!(r.unjustified.len(), 2);
+    assert!(!r.clean());
+}
+
+/// `write` -> `parse` round-trips; reasons carry over from the prior
+/// baseline by fingerprint, and a reasoned regeneration applies
+/// clean.
+#[test]
+fn baseline_write_round_trips_and_carries_reasons() {
+    let fs = [finding("no-panic-transitive", "rust/src/nn/a.rs",
+                      "X::y")];
+    // no prior: the placeholder is emitted and then rejected
+    let doc = baseline::write(&fs, &[]);
+    assert!(doc.starts_with("{\n  \"version\": 1,\n  \"entries\": ["));
+    let es = baseline::parse(&doc).expect("round-trip parse");
+    assert_eq!(es.len(), 1);
+    assert_eq!(es[0].path, "src/nn/a.rs", "path is normalized");
+    assert!(es[0].reason.starts_with("UNJUSTIFIED"));
+    assert!(!baseline::apply(&fs, &es).clean());
+
+    // a prior reason survives regeneration and applies clean
+    let prior = [entry("no-panic-transitive", "src/nn/a.rs", "X::y",
+                       "bounds pinned by plan geometry")];
+    let doc2 = baseline::write(&fs, &prior);
+    let es2 = baseline::parse(&doc2).expect("round-trip parse");
+    assert_eq!(es2[0].reason, "bounds pinned by plan geometry");
+    assert!(baseline::apply(&fs, &es2).clean());
+}
+
+/// Malformed baselines are a hard error, not an empty baseline —
+/// otherwise every finding would look fresh and CI noise would hide
+/// the real cause.
+#[test]
+fn baseline_parse_rejects_malformed_documents() {
+    assert!(baseline::parse("not json").is_err());
+    assert!(baseline::parse("{\"version\": 1}").is_err());
+    assert!(baseline::parse(
+        "{\"entries\": [{\"rule\": \"x\", \"path\": \"y\"}]}"
+    )
+    .is_err(), "entry missing `symbol` must be rejected");
+}
+
+/// SARIF rendering carries rule id, normalized path, and line.
+#[test]
+fn sarif_document_shape() {
+    let fs = [finding("no-panic-transitive", "rust/src/nn/a.rs",
+                      "X::y")];
+    let doc = baseline::to_sarif(&fs).dump();
+    assert!(doc.contains("\"version\":\"2.1.0\""));
+    assert!(doc.contains("\"ruleId\":\"no-panic-transitive\""));
+    assert!(doc.contains("\"uri\":\"src/nn/a.rs\""));
+    assert!(doc.contains("\"startLine\":5"));
+}
